@@ -1,0 +1,103 @@
+//! End-to-end serving driver (the required full-system example).
+//!
+//! Exercises all layers on a real small workload: plans N=256 and N=1024
+//! transforms with the context-aware search, starts the coordinator with
+//! dynamic batching, pushes a mixed open-loop workload of thousands of
+//! requests through the *PJRT artifact backend* when available (falling
+//! back to the native backend), validates a sample of responses against
+//! the reference DFT, and reports latency percentiles + throughput.
+//!
+//!     make artifacts && cargo run --release --example fft_service
+
+use std::time::Instant;
+
+use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use spfft::cost::SimCost;
+use spfft::fft::{reference::fft_ref, SplitComplex};
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let sizes = [256usize, 1024];
+
+    // 1. Plan each size with the context-aware search (plans are cached
+    //    by the service; planning happens once, here).
+    let mut plans = Vec::new();
+    for &n in &sizes {
+        let mut cost = SimCost::m1(n);
+        let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+        println!("planned n={n}: {} ({:.0} ns simulated)", ca.plan, ca.true_ns);
+        plans.push((n, ca.plan));
+    }
+
+    // 2. Pick the backend: PJRT artifacts if present, else native.
+    let dir = spfft::runtime::artifacts_dir();
+    let (backend, backend_name) = if dir.join("manifest.json").exists() {
+        (Backend::Pjrt { artifacts_dir: dir }, "pjrt")
+    } else {
+        (Backend::Native, "native (run `make artifacts` for the PJRT path)")
+    };
+    println!("backend: {backend_name}");
+
+    let svc = FftService::start(ServiceConfig {
+        plans: plans.clone(),
+        backend,
+        batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_micros(200) },
+        workers: 1,
+        queue_depth: 256,
+    })?;
+
+    // 3. Mixed workload: random sizes, occasional validation.
+    let requests = if std::env::var("SPFFT_QUICK").is_ok() { 300 } else { 3_000 };
+    let mut rng = Rng::new(2026);
+    let t0 = Instant::now();
+    let mut pending: Vec<(usize, u64, std::sync::mpsc::Receiver<anyhow::Result<SplitComplex>>)> =
+        Vec::new();
+    let mut validated = 0usize;
+    let mut drain = |pending: &mut Vec<(usize, u64, std::sync::mpsc::Receiver<anyhow::Result<SplitComplex>>)>,
+                     validated: &mut usize| {
+        for (n, seed, rx) in pending.drain(..) {
+            let out = rx.recv().expect("worker alive").expect("transform ok");
+            // validate ~2% of responses against the reference DFT
+            if seed % 50 == 0 {
+                let input = SplitComplex::random(n, seed);
+                let want = fft_ref(&input);
+                let rel = out.max_abs_diff(&want) / want.max_abs().max(1.0);
+                assert!(rel < 1e-4, "n={n} seed={seed}: rel err {rel}");
+                *validated += 1;
+            }
+        }
+    };
+    for i in 0..requests {
+        let n = sizes[rng.range(0, sizes.len())];
+        let seed = i as u64;
+        match svc.submit(SplitComplex::random(n, seed)) {
+            Ok(rx) => pending.push((n, seed, rx)),
+            Err(_) => { /* backpressure drop; metrics count it */ }
+        }
+        if pending.len() >= 64 {
+            drain(&mut pending, &mut validated);
+        }
+    }
+    drain(&mut pending, &mut validated);
+    let wall = t0.elapsed();
+
+    // 4. Report.
+    let snap = svc.shutdown();
+    println!("\n=== serving report ===");
+    println!("requests submitted : {}", snap.submitted);
+    println!("completed          : {}", snap.completed);
+    println!("rejected (backpressure): {}", snap.failed);
+    println!("validated against reference DFT: {validated}");
+    println!("wall time          : {:.3} s", wall.as_secs_f64());
+    println!("throughput         : {:.0} transforms/s", snap.throughput(wall));
+    println!("mean batch size    : {:.2}", snap.mean_batch_size);
+    println!(
+        "latency p50/p95/p99: {:?} / {:?} / {:?}",
+        snap.latency_p50, snap.latency_p95, snap.latency_p99
+    );
+    assert!(snap.completed > 0);
+    assert!(validated > 0);
+    println!("\nfft_service OK");
+    Ok(())
+}

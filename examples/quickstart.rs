@@ -1,0 +1,48 @@
+//! Quickstart: plan an FFT with both searches, execute the winner on the
+//! native path and (if `make artifacts` has run) on the PJRT artifact
+//! path, and verify the numerics against the reference DFT.
+//!
+//!     cargo run --release --example quickstart
+
+use spfft::cost::SimCost;
+use spfft::fft::{reference::fft_ref, Executor, SplitComplex};
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::stats::gflops;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024;
+
+    // 1. Plan: context-free vs context-aware Dijkstra on the M1 model.
+    let mut cost = SimCost::m1(n);
+    let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
+    let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+    println!("context-free  search: {}  (predicted {:.0} ns, actual-in-context {:.0} ns)", cf.plan, cf.believed_ns, cf.true_ns);
+    println!("context-aware search: {}  (predicted {:.0} ns = {:.1} GFLOPS on simulated M1)", ca.plan, ca.true_ns, gflops(n, ca.true_ns));
+    println!("context-aware improvement: {:.0}%\n", 100.0 * (1.0 - ca.true_ns / cf.true_ns));
+
+    // 2. Execute the discovered plan natively and check the numerics.
+    let input = SplitComplex::random(n, 42);
+    let want = fft_ref(&input);
+    let mut ex = Executor::new();
+    let compiled = ex.compile(&ca.plan, n, true);
+    let got = compiled.run_on(&input);
+    let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+    println!("native execution of {}: rel err vs reference DFT = {rel:.2e}", ca.plan);
+    assert!(rel < 1e-4);
+
+    // 3. Execute the same plan through the AOT PJRT artifacts (Layer 1+2).
+    let dir = spfft::runtime::artifacts_dir();
+    match spfft::runtime::Registry::load(&dir) {
+        Ok(mut reg) => {
+            let got = reg.execute_plan(n, &ca.plan, &input)?;
+            let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+            println!("PJRT execution of {} (chained artifacts): rel err = {rel:.2e}", ca.plan);
+            assert!(rel < 1e-4);
+        }
+        Err(e) => {
+            println!("(skipping PJRT path: {e}; run `make artifacts` first)");
+        }
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

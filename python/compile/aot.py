@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per N (default 1024 plus 256 for the quickstart):
+
+- one artifact per valid (edge, stage) pair — the graph's edges, used by
+  the Rust `PjrtMeasured` cost provider and by the coordinator to execute
+  arbitrary discovered plans by chaining;
+- one artifact per named Table-3 arrangement (full FFT incl. bit-reversal);
+- `manifest.json` describing every artifact (kind, plan, shapes, flops).
+
+Python runs only here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(fn, n: int) -> str:
+    """Lower fn(re, im) over f32[n] to HLO text (return_tuple=True)."""
+    spec = jax.ShapeDtypeStruct((n,), jax.numpy.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: without it the text printer elides big
+    # twiddle tables as "{...}", which the Rust-side parser turns into
+    # garbage — caught by `spfft selfcheck` / integration_runtime.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit(out_dir: pathlib.Path, sizes: list[int], verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "inputs": ["re", "im"], "artifacts": []}
+
+    def write(name: str, fn, n: int, extra: dict):
+        t0 = time.time()
+        text = to_hlo_text(fn, n)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        entry = {"name": name, "file": path.name, "n": n, "flops": model.flops(n), **extra}
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  {name}: {len(text)} chars ({time.time() - t0:.2f}s)")
+
+    for n in sizes:
+        l = ref.log2i(n)
+        # Per-edge artifacts (no bit-reversal): the graph's edges.
+        for edge, stage in model.valid_edges(n):
+            write(
+                f"edge_{edge.lower()}_s{stage}_n{n}",
+                model.build_edge_fn(edge, stage, n),
+                n,
+                {"kind": "edge", "edge": edge, "stage": stage, "bitrev": False},
+            )
+        # Bit-reversal permutation as its own artifact (plan chaining epilogue).
+        write(
+            f"bitrev_n{n}",
+            lambda re, im: ref.bitrev(re, im),
+            n,
+            {"kind": "bitrev", "bitrev": True},
+        )
+        # Full named arrangements (with bit-reversal).
+        named = {**model.default_plans(l), **model.ARRANGEMENTS}
+        for name, plan in named.items():
+            if not ref.is_valid_plan(plan, l):
+                continue
+            write(
+                f"full_{name}_n{n}",
+                model.build_plan_fn(plan, n, bitrev=True),
+                n,
+                {"kind": "full", "arrangement": name, "plan": plan, "bitrev": True},
+            )
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--sizes", default="1024,256", help="comma-separated FFT sizes to emit"
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    for n in sizes:
+        ref.log2i(n)  # validate powers of two early
+    out_dir = pathlib.Path(args.out)
+    if args.out.endswith(".hlo.txt"):
+        # Makefile convention: target is artifacts/model.hlo.txt; emit the
+        # whole artifact set into its directory, then write the sentinel.
+        out_dir = pathlib.Path(args.out).parent
+        emit(out_dir, sizes)
+        (pathlib.Path(args.out)).write_text(
+            (out_dir / f"full_dijkstra_ca_m1_n{sizes[0]}.hlo.txt").read_text()
+        )
+    else:
+        emit(out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

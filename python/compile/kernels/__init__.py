@@ -1,0 +1,33 @@
+"""Layer-1 Pallas kernels for the Shortest-Path FFT.
+
+Edge types (paper Table 1):
+  R2 / R4 / R8  — radix passes (memory -> butterflies -> memory), passes.py
+  F8 / F16 / F32 — fused register blocks (in-register networks), fused.py
+  ref            — pure-jnp oracle all kernels are tested against, ref.py
+"""
+
+from . import ref
+from .passes import radix2_pass, radix4_pass, radix8_pass
+from .fused import fused_block, fused8, fused16, fused32
+
+#: edge name -> callable(re, im, *, stage) applying that edge.
+EDGE_KERNELS = {
+    "R2": radix2_pass,
+    "R4": radix4_pass,
+    "R8": radix8_pass,
+    "F8": fused8,
+    "F16": fused16,
+    "F32": fused32,
+}
+
+__all__ = [
+    "ref",
+    "radix2_pass",
+    "radix4_pass",
+    "radix8_pass",
+    "fused_block",
+    "fused8",
+    "fused16",
+    "fused32",
+    "EDGE_KERNELS",
+]

@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernels: fused register blocks (paper §3.2, Table 2).
+
+A fused block of size B advances log2(B) DIF stages in a *single*
+`pallas_call`: the B-point groups are gathered once, the whole log2(B)-stage
+butterfly network runs on values that never leave the kernel, and results
+are scattered once. This is the Pallas/VMEM analogue of the paper's NEON
+register blocks (FFT-8 uses 4 vector registers, FFT-16 uses 8, FFT-32 uses
+all 16 data registers) — "in-register; zero memory traffic" between the
+fused stages.
+
+Group structure: at stage s with block size m = n >> s, the B elements
+{ base + j + k*(m/B) : k in [0,B) } are closed under the next log2(B) DIF
+stages. Sub-stage r pairs lanes k and k + B>>(r+1); its twiddle factors
+separate into a j-vector W_m^{2^r * j} shared by all lanes times a constant
+W_{B >> r}^{k'} per lane. The lane constants for B <= 32 are exactly the
+W_8/W_16/W_32 roots the paper's NEON code bakes into immediates.
+
+At the terminal position (s = L - log2 B) the gather stride is 1 and the
+block is a contiguous B-point sub-FFT — the common case in Table 3's best
+plans. Mid-path placements are legal too (the context-free optimum
+R4 -> F8 -> F32 in Fig. 3 uses one) and simply gather with stride m/B.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fused_twiddles(n: int, stage: int, b: int):
+    """Per-sub-stage combined (lane, j) twiddle tables, computed at trace time.
+
+    Sub-stage r's factor separates as W_m^{2^r j} (j-vector, shared across
+    lanes) times W_{B>>r}^{k'} (lane constant). We pre-combine them into a
+    (half_r, e) table per sub-stage and pass the tables as kernel operands;
+    under jit they fold into HLO constants.
+    """
+    lb = ref.log2i(b)
+    m = n >> stage
+    e = m // b
+    tables = []
+    for r in range(lb):
+        lanes = b >> r
+        half = lanes // 2
+        wjr, wji = ref.twiddle(m, e, 1 << r)
+        wkr, wki = ref.twiddle(lanes, half)
+        wr = wjr[None, :] * wkr[:, None] - wji[None, :] * wki[:, None]
+        wi = wjr[None, :] * wki[:, None] + wji[None, :] * wkr[:, None]
+        tables.extend([wr, wi])
+    return tables
+
+
+def _fused_kernel(re_ref, im_ref, *refs, n: int, stage: int, b: int):
+    lb = ref.log2i(b)
+    m = n >> stage
+    e = m // b  # gather stride / j-vector length
+    nb = n // m
+    tw_refs, (ore_ref, oim_ref) = refs[: 2 * lb], refs[2 * lb :]
+    # Registers: shape (nb, B, e) — axis 1 is the "lane" (register) axis.
+    re = re_ref[...].reshape(nb, b, e)
+    im = im_ref[...].reshape(nb, b, e)
+    for r in range(lb):
+        lanes = b >> r  # live lanes per independent sub-group
+        half = lanes // 2
+        groups = b // lanes  # independent sub-groups along the lane axis
+        wr = tw_refs[2 * r][...]
+        wi = tw_refs[2 * r + 1][...]
+        re4 = re.reshape(nb, groups, lanes, e)
+        im4 = im.reshape(nb, groups, lanes, e)
+        tr, ti = re4[:, :, :half], im4[:, :, :half]
+        br, bi = re4[:, :, half:], im4[:, :, half:]
+        sr, si = tr + br, ti + bi
+        dr, di = tr - br, ti - bi
+        pr = dr * wr - di * wi
+        pi = dr * wi + di * wr
+        re = jnp.concatenate([sr, pr], axis=2).reshape(nb, b, e)
+        im = jnp.concatenate([si, pi], axis=2).reshape(nb, b, e)
+    ore_ref[...] = re.reshape(n)
+    oim_ref[...] = im.reshape(n)
+
+
+def fused_block(re, im, *, stage: int, b: int):
+    """Fused FFT-`b` register block at `stage` (advances log2(b) stages)."""
+    if b not in (8, 16, 32):
+        raise ValueError(f"unsupported fused block size {b}")
+    n = re.shape[-1]
+    lb = ref.log2i(b)
+    if (n >> (stage + lb)) < 1:
+        raise ValueError(f"F{b} at stage {stage} invalid for n={n}")
+    kern = functools.partial(_fused_kernel, n=n, stage=stage, b=b)
+    out_shape = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    tw = _fused_twiddles(n, stage, b)
+    return pl.pallas_call(kern, out_shape=out_shape, interpret=True)(re, im, *tw)
+
+
+def fused8(re, im, *, stage: int):
+    """FFT-8 fused block: 3 stages, 4 NEON registers (paper Table 2: 33.5 GF)."""
+    return fused_block(re, im, stage=stage, b=8)
+
+
+def fused16(re, im, *, stage: int):
+    """FFT-16 fused block: 4 stages, 8 NEON registers (30.7 GF)."""
+    return fused_block(re, im, stage=stage, b=16)
+
+
+def fused32(re, im, *, stage: int):
+    """FFT-32 fused block: 5 stages, 16 NEON registers — novel on NEON,
+    impossible on AVX2's 16-register file; loses to FFT-8/16 from register
+    pressure (20.5 GF), a tradeoff the graph search discovers automatically."""
+    return fused_block(re, im, stage=stage, b=32)

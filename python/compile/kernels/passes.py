@@ -1,0 +1,216 @@
+"""Layer-1 Pallas kernels: the radix-2 / radix-4 / radix-8 DIF passes.
+
+Each pass is one `pallas_call`: load the split-complex arrays from "memory"
+(HBM in the TPU mental model), compute all butterflies of the pass, store
+back. The pass-per-call structure deliberately forces the memory round trip
+between stages — that is exactly the cost structure the paper's radix passes
+have on NEON, and it is what makes the fused blocks in `fused.py` a distinct
+(memory-traffic-free) edge type.
+
+Instruction tricks from the paper (Table 1):
+
+- radix-4 exploits W_4^1 = -j as a swap + negate (no multiply);
+- radix-8 additionally exploits W_8^{1,3} = (1 ∓ j)/sqrt(2): one scale by
+  1/sqrt(2) plus add/sub instead of a full complex multiply.
+
+All kernels are stage-parametric at *trace time* (stage / n are Python
+ints), so each (edge, stage, n) pair lowers to its own specialized HLO —
+mirroring the paper's per-edge codelets. Twiddle tables are computed with
+jnp in the wrapper (trace time) and handed to the kernel as operands;
+under `jax.jit` they fold into HLO constants, so the AOT artifacts take
+only (re, im) as runtime inputs.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_INV_SQRT2 = 0.7071067811865476
+
+
+def _out_shape(n: int):
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def _cmul(ar, ai, br, bi):
+    """(ar + i*ai) * (br + i*bi) -> (re, im); 4 mul + 2 add (paper's FMA pair)."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+# ---------------------------------------------------------------------------
+# Radix-2 pass
+# ---------------------------------------------------------------------------
+
+
+def _radix2_kernel(re_ref, im_ref, wr_ref, wi_ref, ore_ref, oim_ref, *, n: int, stage: int):
+    m = n >> stage
+    half = m // 2
+    nb = n // m
+    wr, wi = wr_ref[...], wi_ref[...]
+    re = re_ref[...].reshape(nb, 2, half)
+    im = im_ref[...].reshape(nb, 2, half)
+    tr, ti = re[:, 0, :], im[:, 0, :]
+    br, bi = re[:, 1, :], im[:, 1, :]
+    sr, si = tr + br, ti + bi
+    dr, di = tr - br, ti - bi
+    pr, pi = _cmul(dr, di, wr, wi)
+    ore_ref[...] = jnp.stack([sr, pr], axis=1).reshape(n)
+    oim_ref[...] = jnp.stack([si, pi], axis=1).reshape(n)
+
+
+def radix2_pass(re, im, *, stage: int):
+    """One radix-2 DIF pass at `stage` (memory -> butterflies -> memory)."""
+    n = re.shape[-1]
+    m = n >> stage
+    if m < 2:
+        raise ValueError(f"R2 at stage {stage} invalid for n={n}")
+    wr, wi = ref.twiddle(m, m // 2)
+    kern = functools.partial(_radix2_kernel, n=n, stage=stage)
+    return pl.pallas_call(kern, out_shape=_out_shape(n), interpret=True)(re, im, wr, wi)
+
+
+# ---------------------------------------------------------------------------
+# Radix-4 pass
+# ---------------------------------------------------------------------------
+
+
+def _radix4_kernel(
+    re_ref, im_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref, w3r_ref, w3i_ref,
+    ore_ref, oim_ref, *, n: int, stage: int,
+):
+    m = n >> stage
+    q = m // 4
+    nb = n // m
+    w1r, w1i = w1r_ref[...], w1i_ref[...]
+    w2r, w2i = w2r_ref[...], w2i_ref[...]
+    w3r, w3i = w3r_ref[...], w3i_ref[...]
+    re = re_ref[...].reshape(nb, 4, q)
+    im = im_ref[...].reshape(nb, 4, q)
+    ar, ai = re[:, 0], im[:, 0]
+    br, bi = re[:, 1], im[:, 1]
+    cr, ci = re[:, 2], im[:, 2]
+    dr, di = re[:, 3], im[:, 3]
+    t0r, t0i = ar + cr, ai + ci
+    t1r, t1i = ar - cr, ai - ci
+    t2r, t2i = br + dr, bi + di
+    # t3 = -j * (b - d): swap + negate, zero multiplies (W_4^1 trick).
+    t3r, t3i = bi - di, -(br - dr)
+    y0r, y0i = t0r + t2r, t0i + t2i
+    y1r, y1i = _cmul(t0r - t2r, t0i - t2i, w2r, w2i)
+    y2r, y2i = _cmul(t1r + t3r, t1i + t3i, w1r, w1i)
+    y3r, y3i = _cmul(t1r - t3r, t1i - t3i, w3r, w3i)
+    ore_ref[...] = jnp.stack([y0r, y1r, y2r, y3r], axis=1).reshape(n)
+    oim_ref[...] = jnp.stack([y0i, y1i, y2i, y3i], axis=1).reshape(n)
+
+
+def radix4_pass(re, im, *, stage: int):
+    """One radix-4 DIF pass (advances 2 stages) at `stage`.
+
+    Equivalent to radix-2 at `stage` then `stage+1`, fused so the W_4^1 = -j
+    rotation costs a swap+negate instead of a complex multiply.
+    """
+    n = re.shape[-1]
+    m = n >> stage
+    if (n >> (stage + 2)) < 1:
+        raise ValueError(f"R4 at stage {stage} invalid for n={n}")
+    q = m // 4
+    tw = []
+    for k in (1, 2, 3):
+        tw.extend(ref.twiddle(m, q, k))
+    kern = functools.partial(_radix4_kernel, n=n, stage=stage)
+    return pl.pallas_call(kern, out_shape=_out_shape(n), interpret=True)(re, im, *tw)
+
+
+# ---------------------------------------------------------------------------
+# Radix-8 pass
+# ---------------------------------------------------------------------------
+
+
+def _radix8_kernel(
+    re_ref, im_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref, w4r_ref, w4i_ref,
+    ore_ref, oim_ref, *, n: int, stage: int,
+):
+    m = n >> stage
+    e = m // 8
+    nb = n // m
+    w1r, w1i = w1r_ref[...], w1i_ref[...]  # W_m^j
+    w2r, w2i = w2r_ref[...], w2i_ref[...]  # W_m^2j
+    w4r, w4i = w4r_ref[...], w4i_ref[...]  # W_m^4j
+    re = re_ref[...].reshape(nb, 8, e)
+    im = im_ref[...].reshape(nb, 8, e)
+    x = [(re[:, k], im[:, k]) for k in range(8)]
+
+    def w8(xr, xi, k):
+        """Multiply by W_8^k using only 1/sqrt(2) scaling + add/sub (paper trick)."""
+        if k == 0:
+            return xr, xi
+        if k == 1:  # (1 - j)/sqrt(2)
+            return (xr + xi) * _INV_SQRT2, (xi - xr) * _INV_SQRT2
+        if k == 2:  # -j
+            return xi, -xr
+        if k == 3:  # -(1 + j)/sqrt(2)
+            return (xi - xr) * _INV_SQRT2, -(xr + xi) * _INV_SQRT2
+        raise ValueError(k)
+
+    # Stage A: pairs (k, k+4); twiddle W_m^{j} * W_8^k on the low halves.
+    y = [None] * 8
+    for k in range(4):
+        ar, ai = x[k]
+        br, bi = x[k + 4]
+        y[k] = (ar + br, ai + bi)
+        dr, di = ar - br, ai - bi
+        pr, pi = _cmul(dr, di, w1r, w1i)
+        y[k + 4] = w8(pr, pi, k)
+    # Stage B: pairs (k, k+2) within each half; twiddle W_m^{2j} * W_4^{k mod 2}.
+    z = [None] * 8
+    for base in (0, 4):
+        for k in range(2):
+            ar, ai = y[base + k]
+            br, bi = y[base + k + 2]
+            z[base + k] = (ar + br, ai + bi)
+            dr, di = ar - br, ai - bi
+            pr, pi = _cmul(dr, di, w2r, w2i)
+            if k == 1:  # W_4^1 = -j: swap + negate
+                pr, pi = pi, -pr
+            z[base + k + 2] = (pr, pi)
+    # Stage C: adjacent pairs; twiddle W_m^{4j}.
+    o = [None] * 8
+    for k in (0, 2, 4, 6):
+        ar, ai = z[k]
+        br, bi = z[k + 1]
+        o[k] = (ar + br, ai + bi)
+        dr, di = ar - br, ai - bi
+        o[k + 1] = _cmul(dr, di, w4r, w4i)
+
+    ore_ref[...] = jnp.stack([v[0] for v in o], axis=1).reshape(n)
+    oim_ref[...] = jnp.stack([v[1] for v in o], axis=1).reshape(n)
+
+
+def radix8_pass(re, im, *, stage: int):
+    """One radix-8 DIF pass (advances 3 stages) at `stage`.
+
+    Equivalent to three radix-2 stages, fused; W_8^{1,3} rotations use the
+    1/sqrt(2)-scale trick, W_8^2 = -j uses swap+negate.
+    """
+    n = re.shape[-1]
+    m = n >> stage
+    if (n >> (stage + 3)) < 1:
+        raise ValueError(f"R8 at stage {stage} invalid for n={n}")
+    e = m // 8
+    tw = []
+    for k in (1, 2, 4):
+        tw.extend(ref.twiddle(m, e, k))
+    kern = functools.partial(_radix8_kernel, n=n, stage=stage)
+    return pl.pallas_call(kern, out_shape=_out_shape(n), interpret=True)(re, im, *tw)

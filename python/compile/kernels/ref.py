@@ -1,0 +1,143 @@
+"""Pure-jnp correctness oracle for the Shortest-Path FFT kernels.
+
+Everything in this file is deliberately *unoptimized* reference math:
+
+- one canonical radix-2 DIF stage (`radix2_stage`);
+- every other edge type (R4/R8 passes, fused F8/F16/F32 blocks) is defined
+  as the composition of radix-2 stages, which is its mathematical meaning;
+- a full-plan reference (`apply_plan`) and a full-FFT reference (`fft`)
+  cross-checked against `jnp.fft.fft` in the test-suite.
+
+The Pallas kernels in `passes.py` / `fused.py` implement the *same*
+transforms with the paper's instruction tricks (W4^1 = -j swap+negate,
+W8^{1,3} = (1 ∓ j)/sqrt(2) scale, in-register fused networks) and must match
+this oracle to float32 tolerance.
+
+Data layout is split-complex float32 throughout (paper §3.1): separate
+`re[]` / `im[]` arrays, unit stride.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Edge catalog (paper Table 1). `stages` is the DIF-stage advance k of the
+# edge; fused blocks additionally record their block size B = 2**stages.
+EDGE_STAGES = {"R2": 1, "R4": 2, "R8": 3, "F8": 3, "F16": 4, "F32": 5}
+EDGE_TYPES = tuple(EDGE_STAGES)
+FUSED_BLOCK = {"F8": 8, "F16": 16, "F32": 32}
+
+
+def log2i(n: int) -> int:
+    """Exact integer log2; raises for non-powers-of-two."""
+    l = int(n).bit_length() - 1
+    if n <= 0 or (1 << l) != n:
+        raise ValueError(f"{n} is not a positive power of two")
+    return l
+
+
+def is_valid_plan(plan: list[str], l: int) -> bool:
+    """A plan is valid iff its edges advance exactly `l` stages in total.
+
+    Any edge type may appear at any stage (fused blocks gather strided
+    groups mid-path; see DESIGN.md) as long as it fits before stage `l`.
+    """
+    s = 0
+    for e in plan:
+        if e not in EDGE_STAGES:
+            return False
+        s += EDGE_STAGES[e]
+    return s == l
+
+
+def twiddle(m: int, count: int, k: int = 1, dtype=jnp.float32):
+    """(cos, sin) of W_m^{k*j} = exp(-2*pi*i*k*j/m) for j in [0, count)."""
+    ang = -2.0 * np.pi * k * np.arange(count, dtype=np.float64) / m
+    return (jnp.asarray(np.cos(ang), dtype), jnp.asarray(np.sin(ang), dtype))
+
+
+def radix2_stage(re, im, stage: int):
+    """One radix-2 DIF stage at `stage` (0-indexed) over length-n arrays.
+
+    Block size m = n >> stage; within each block, for j in [0, m/2):
+        top' = top + bot
+        bot' = (top - bot) * W_m^j
+    Output of the final stage is in bit-reversed order.
+    """
+    n = re.shape[-1]
+    m = n >> stage
+    if m < 2:
+        raise ValueError(f"stage {stage} invalid for n={n}")
+    half = m // 2
+    nb = n // m
+    wr, wi = twiddle(m, half, dtype=re.dtype)
+    r = re.reshape(nb, 2, half)
+    i = im.reshape(nb, 2, half)
+    tr, ti_ = r[:, 0, :], i[:, 0, :]
+    br, bi = r[:, 1, :], i[:, 1, :]
+    sr, si = tr + br, ti_ + bi
+    dr, di = tr - br, ti_ - bi
+    # (dr + i*di) * (wr + i*wi)
+    or_ = dr * wr - di * wi
+    oi_ = dr * wi + di * wr
+    re_out = jnp.stack([sr, or_], axis=1).reshape(n)
+    im_out = jnp.stack([si, oi_], axis=1).reshape(n)
+    return re_out, im_out
+
+
+def apply_edge(re, im, edge: str, stage: int):
+    """Reference semantics of one edge = composition of radix-2 stages."""
+    k = EDGE_STAGES[edge]
+    n = re.shape[-1]
+    if (n >> (stage + k)) < 1:
+        raise ValueError(f"edge {edge} at stage {stage} overruns n={n}")
+    for r in range(k):
+        re, im = radix2_stage(re, im, stage + r)
+    return re, im
+
+
+def apply_plan(re, im, plan: list[str]):
+    """Apply a full plan (no final bit-reversal)."""
+    n = re.shape[-1]
+    l = log2i(n)
+    if not is_valid_plan(plan, l):
+        raise ValueError(f"invalid plan {plan} for n={n}")
+    s = 0
+    for e in plan:
+        re, im = apply_edge(re, im, e, s)
+        s += EDGE_STAGES[e]
+    return re, im
+
+
+def bitrev_indices(n: int) -> np.ndarray:
+    """Bit-reversal permutation for length n (power of two)."""
+    l = log2i(n)
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(l):
+        rev |= ((idx >> b) & 1) << (l - 1 - b)
+    return rev
+
+
+def bitrev(re, im):
+    idx = jnp.asarray(bitrev_indices(re.shape[-1]))
+    return jnp.take(re, idx, axis=-1), jnp.take(im, idx, axis=-1)
+
+
+def fft(re, im, plan: list[str] | None = None):
+    """Full forward FFT: plan (default all-R2) + bit-reversal.
+
+    Equals jnp.fft.fft(re + 1j*im) up to float32 rounding.
+    """
+    n = re.shape[-1]
+    if plan is None:
+        plan = ["R2"] * log2i(n)
+    re, im = apply_plan(re, im, plan)
+    return bitrev(re, im)
+
+
+def fft_numpy(re: np.ndarray, im: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """float64 numpy ground truth for error measurement."""
+    out = np.fft.fft(re.astype(np.float64) + 1j * im.astype(np.float64))
+    return out.real, out.imag

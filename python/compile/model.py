@@ -1,0 +1,106 @@
+"""Layer-2 JAX model: compose Layer-1 Pallas edges into complete FFTs.
+
+A *plan* is a list of edge names (["R4", "R2", "R4", "R4", "F8"]) whose
+stage-advances sum to L = log2(N). `build_plan_fn` turns a plan into a
+jittable (re, im) -> (re, im) function by calling the Pallas kernel of each
+edge at its cumulative stage, then applying the final bit-reversal
+permutation. This is the computation graph that `aot.py` lowers to HLO text
+for the Rust runtime.
+
+The named arrangements below are the rows of paper Table 3 (the two
+Dijkstra rows use the plans the paper reports as discovered on M1; the Rust
+planner re-discovers plans at run time and can execute *any* plan by
+chaining per-edge artifacts).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import EDGE_KERNELS, ref
+
+#: Paper Table 3 arrangements (name -> plan), N = 1024, L = 10.
+ARRANGEMENTS: dict[str, list[str]] = {
+    # pure / heuristic radix baselines
+    "r2x10": ["R2"] * 10,
+    "r4x5": ["R4"] * 5,
+    "r8x3_r2": ["R2", "R8", "R8", "R8"],      # "R8×3 + R2" (pure radix-8)
+    "max_radix": ["R8", "R8", "R8", "R2"],     # "maximize radix" heuristic
+    "r8r8r4r4": ["R8", "R8", "R4", "R4"],
+    "haswell_opt": ["R4", "R8", "R8", "R4"],   # optimal on Haswell AVX2 (2015)
+    # fused-block baselines
+    "r2x5_f32": ["R2"] * 5 + ["F32"],
+    "r4x3_f16": ["R4", "R4", "R4", "F16"],
+    # plans the paper reports discovered by the two searches on M1
+    "dijkstra_cf_m1": ["R4", "F8", "F32"],           # 22.1 GFLOPS, 74%
+    "dijkstra_ca_m1": ["R4", "R2", "R4", "R4", "F8"],  # 29.8 GFLOPS, 100%
+}
+
+
+def default_plans(l: int) -> dict[str, list[str]]:
+    """Size-generic arrangements for any L (used for non-1024 artifact sets)."""
+    plans = {"r2all": ["R2"] * l}
+    if l >= 3:
+        # greedy radix-4 body with a terminal fused-8 block
+        body, s = [], 0
+        while l - s - 3 >= 2:
+            body.append("R4")
+            s += 2
+        while l - s > 3:
+            body.append("R2")
+            s += 1
+        plans["r4body_f8"] = body + ["F8"]
+    return plans
+
+
+def plan_stages(plan: list[str]) -> list[int]:
+    """Cumulative starting stage of each edge in the plan."""
+    out, s = [], 0
+    for e in plan:
+        out.append(s)
+        s += ref.EDGE_STAGES[e]
+    return out
+
+
+def build_plan_fn(plan: list[str], n: int, bitrev: bool = True):
+    """Return fn(re, im) -> (re, im) applying `plan` to length-n arrays."""
+    l = ref.log2i(n)
+    if not ref.is_valid_plan(plan, l):
+        raise ValueError(f"invalid plan {plan} for n={n}")
+    stages = plan_stages(plan)
+    rev = jnp.asarray(ref.bitrev_indices(n)) if bitrev else None
+
+    def fn(re, im):
+        for edge, s in zip(plan, stages):
+            re, im = EDGE_KERNELS[edge](re, im, stage=s)
+        if bitrev:
+            return jnp.take(re, rev), jnp.take(im, rev)
+        return re, im
+
+    return fn
+
+
+def build_edge_fn(edge: str, stage: int, n: int):
+    """Return fn(re, im) -> (re, im) applying a single edge (no bit-reversal)."""
+    kern = EDGE_KERNELS[edge]
+
+    def fn(re, im):
+        return kern(re, im, stage=stage)
+
+    return fn
+
+
+def flops(n: int) -> int:
+    """Paper's FLOP convention: 5 * N * log2(N)."""
+    return 5 * n * ref.log2i(n)
+
+
+def valid_edges(n: int):
+    """All (edge, stage) pairs valid for an N-point FFT — the graph's edges."""
+    l = ref.log2i(n)
+    out = []
+    for s in range(l):
+        for e, k in ref.EDGE_STAGES.items():
+            if s + k <= l:
+                out.append((e, s))
+    return out

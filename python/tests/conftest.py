@@ -1,0 +1,7 @@
+"""Make the test-suite runnable from the repo root (`pytest python/tests/`)
+as well as from `python/` (the Makefile's `cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

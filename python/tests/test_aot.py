@@ -1,0 +1,62 @@
+"""AOT emission tests: HLO text artifacts + manifest structure."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_to_hlo_text_shape():
+    text = aot.to_hlo_text(model.build_edge_fn("R2", 0, 32), 32)
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root is a tuple of the two f32[32] outputs
+    assert "f32[32]" in text
+
+
+def test_to_hlo_text_is_deterministic():
+    fn = model.build_edge_fn("R4", 1, 64)
+    assert aot.to_hlo_text(fn, 64) == aot.to_hlo_text(fn, 64)
+
+
+@pytest.fixture(scope="module")
+def small_emit(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.emit(out, [32], verbose=False)
+    return out, manifest
+
+
+def test_emit_writes_manifest(small_emit):
+    out, manifest = small_emit
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert on_disk["format"] == "hlo-text"
+    assert on_disk["inputs"] == ["re", "im"]
+
+
+def test_emit_edge_coverage(small_emit):
+    """Every valid (edge, stage) pair for n=32 gets an artifact."""
+    _, manifest = small_emit
+    edges = {(a["edge"], a["stage"]) for a in manifest["artifacts"] if a["kind"] == "edge"}
+    assert edges == set(model.valid_edges(32))
+
+
+def test_emit_full_and_bitrev(small_emit):
+    out, manifest = small_emit
+    kinds = [a["kind"] for a in manifest["artifacts"]]
+    assert "bitrev" in kinds
+    fulls = [a for a in manifest["artifacts"] if a["kind"] == "full"]
+    assert fulls, "expected at least one full arrangement for n=32"
+    for a in fulls:
+        assert ref.is_valid_plan(a["plan"], 5)
+        assert (out / a["file"]).exists()
+    for a in manifest["artifacts"]:
+        assert a["flops"] == 5 * 32 * 5
+        text = (out / a["file"]).read_text()
+        assert "ENTRY" in text
+
+
+def test_emit_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        ref.log2i(24)

@@ -1,0 +1,126 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+Every edge kernel (R2/R4/R8 passes, F8/F16/F32 fused blocks) must equal the
+composition-of-radix-2-stages reference at every valid stage, for multiple
+sizes, dtypes of input distribution, and under hypothesis-driven sweeps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import EDGE_KERNELS, ref
+
+SIZES = [32, 64, 256, 1024]
+
+
+def _rand(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(scale * rng.standard_normal(n), jnp.float32),
+        jnp.asarray(scale * rng.standard_normal(n), jnp.float32),
+    )
+
+
+def _assert_edge_matches(edge, n, stage, seed=0, scale=1.0, atol=None):
+    re, im = _rand(n, seed, scale)
+    kr, ki = EDGE_KERNELS[edge](re, im, stage=stage)
+    rr, ri = ref.apply_edge(re, im, edge, stage)
+    tol = atol if atol is not None else 2e-5 * max(1.0, scale) * np.sqrt(2 ** ref.EDGE_STAGES[edge])
+    np.testing.assert_allclose(np.asarray(kr), np.asarray(rr), atol=tol, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ki), np.asarray(ri), atol=tol, rtol=1e-4)
+
+
+def _valid_stages(edge, n):
+    l = ref.log2i(n)
+    k = ref.EDGE_STAGES[edge]
+    return range(l - k + 1)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("edge", list(EDGE_KERNELS))
+def test_edge_kernel_all_stages(edge, n):
+    """Exhaustive: every (edge, stage, n) combination vs the oracle."""
+    for stage in _valid_stages(edge, n):
+        _assert_edge_matches(edge, n, stage)
+
+
+@pytest.mark.parametrize("edge", list(EDGE_KERNELS))
+def test_edge_kernel_zero_input(edge):
+    n = 64
+    z = jnp.zeros(n, jnp.float32)
+    kr, ki = EDGE_KERNELS[edge](z, z, stage=0)
+    assert np.all(np.asarray(kr) == 0) and np.all(np.asarray(ki) == 0)
+
+
+@pytest.mark.parametrize("edge", list(EDGE_KERNELS))
+def test_edge_kernel_linearity(edge):
+    """FFT stages are linear: edge(a*x) == a*edge(x)."""
+    n = 128
+    re, im = _rand(n, seed=7)
+    kr1, ki1 = EDGE_KERNELS[edge](re, im, stage=0)
+    kr2, ki2 = EDGE_KERNELS[edge](3.0 * re, 3.0 * im, stage=0)
+    np.testing.assert_allclose(np.asarray(kr2), 3.0 * np.asarray(kr1), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ki2), 3.0 * np.asarray(ki1), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("edge", list(EDGE_KERNELS))
+def test_edge_kernel_invalid_stage_raises(edge):
+    re, im = _rand(32)  # l = 5
+    k = ref.EDGE_STAGES[edge]
+    with pytest.raises(ValueError):
+        EDGE_KERNELS[edge](re, im, stage=5 - k + 1)
+
+
+def test_fused_block_rejects_bad_size():
+    from compile.kernels import fused_block
+
+    re, im = _rand(64)
+    with pytest.raises(ValueError):
+        fused_block(re, im, stage=0, b=4)
+
+
+def test_r8_equals_f8_math():
+    """Radix-8 pass and fused-8 block are the same transform (different
+    instruction strategy) — paper Table 1."""
+    n = 512
+    re, im = _rand(n, seed=11)
+    ar, ai = EDGE_KERNELS["R8"](re, im, stage=2)
+    br, bi = EDGE_KERNELS["F8"](re, im, stage=2)
+    np.testing.assert_allclose(np.asarray(ar), np.asarray(br), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ai), np.asarray(bi), atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    edge=st.sampled_from(list(EDGE_KERNELS)),
+    logn=st.integers(min_value=5, max_value=11),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_edge_kernel_hypothesis(edge, logn, seed, scale):
+    """Property sweep: random stage/size/seed/scale, kernel == oracle."""
+    n = 1 << logn
+    k = ref.EDGE_STAGES[edge]
+    if k > logn:
+        return
+    rng = np.random.default_rng(seed)
+    stage = int(rng.integers(0, logn - k + 1))
+    _assert_edge_matches(edge, n, stage, seed=seed, scale=scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_full_r2_chain_matches_numpy(seed):
+    """Chaining R2 kernels through all stages + bitrev == numpy FFT."""
+    n = 256
+    re, im = _rand(n, seed)
+    r, i = re, im
+    for s in range(ref.log2i(n)):
+        r, i = EDGE_KERNELS["R2"](r, i, stage=s)
+    r, i = ref.bitrev(r, i)
+    gr, gi = ref.fft_numpy(np.asarray(re), np.asarray(im))
+    scale = max(1.0, float(np.max(np.abs(gr))), float(np.max(np.abs(gi))))
+    assert np.max(np.abs(np.asarray(r) - gr)) / scale < 1e-5
+    assert np.max(np.abs(np.asarray(i) - gi)) / scale < 1e-5

@@ -1,0 +1,85 @@
+"""Layer-2 tests: arrangements compose to correct full FFTs."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.standard_normal(n), jnp.float32),
+        jnp.asarray(rng.standard_normal(n), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("name", list(model.ARRANGEMENTS))
+def test_arrangement_matches_numpy_fft(name):
+    """Every Table-3 arrangement is the same mathematical FFT."""
+    n = 1024
+    plan = model.ARRANGEMENTS[name]
+    re, im = _rand(n, seed=hash(name) % 1000)
+    fr, fi = model.build_plan_fn(plan, n)(re, im)
+    gr, gi = ref.fft_numpy(np.asarray(re), np.asarray(im))
+    scale = max(1.0, float(np.max(np.abs(gr))), float(np.max(np.abs(gi))))
+    assert np.max(np.abs(np.asarray(fr) - gr)) / scale < 2e-5
+    assert np.max(np.abs(np.asarray(fi) - gi)) / scale < 2e-5
+
+
+def test_all_arrangements_are_valid_l10():
+    for name, plan in model.ARRANGEMENTS.items():
+        assert ref.is_valid_plan(plan, 10), name
+
+
+def test_paper_plans_verbatim():
+    # The two Dijkstra-discovered plans reported by the paper (§4.2, Fig. 3).
+    assert model.ARRANGEMENTS["dijkstra_ca_m1"] == ["R4", "R2", "R4", "R4", "F8"]
+    assert model.ARRANGEMENTS["dijkstra_cf_m1"] == ["R4", "F8", "F32"]
+    assert model.ARRANGEMENTS["haswell_opt"] == ["R4", "R8", "R8", "R4"]
+
+
+@pytest.mark.parametrize("l", range(1, 12))
+def test_default_plans_valid(l):
+    for name, plan in model.default_plans(l).items():
+        assert ref.is_valid_plan(plan, l), (l, name, plan)
+
+
+def test_plan_stages():
+    assert model.plan_stages(["R4", "R2", "R4", "R4", "F8"]) == [0, 2, 3, 5, 7]
+    assert model.plan_stages(["R4", "F8", "F32"]) == [0, 2, 5]
+
+
+def test_build_plan_fn_rejects_invalid():
+    with pytest.raises(ValueError):
+        model.build_plan_fn(["R2"] * 3, 1024)
+
+
+def test_valid_edges_count_l10():
+    """Edge counts per type for L=10: R2:10 R4:9 R8:8 F8:8 F16:7 F32:6 = 48."""
+    edges = model.valid_edges(1024)
+    by_type = {}
+    for e, s in edges:
+        by_type.setdefault(e, []).append(s)
+    assert {k: len(v) for k, v in by_type.items()} == {
+        "R2": 10, "R4": 9, "R8": 8, "F8": 8, "F16": 7, "F32": 6,
+    }
+    assert len(edges) == 48
+
+
+def test_flops_convention():
+    assert model.flops(1024) == 5 * 1024 * 10  # 51200, paper §4.1
+
+
+def test_plan_without_bitrev_composes():
+    """build_plan_fn(bitrev=False) then explicit bitrev == full fn."""
+    n = 256
+    plan = model.default_plans(8)["r4body_f8"]
+    re, im = _rand(n, seed=5)
+    ar, ai = model.build_plan_fn(plan, n, bitrev=False)(re, im)
+    ar, ai = ref.bitrev(ar, ai)
+    br, bi = model.build_plan_fn(plan, n, bitrev=True)(re, im)
+    np.testing.assert_allclose(np.asarray(ar), np.asarray(br), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ai), np.asarray(bi), atol=1e-6)

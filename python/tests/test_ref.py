@@ -1,0 +1,104 @@
+"""Oracle self-consistency: ref.py vs numpy's FFT and structural invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+def _rand(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.standard_normal(n), jnp.float32),
+        jnp.asarray(rng.standard_normal(n), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 256, 1024, 2048])
+def test_fft_matches_numpy(n):
+    re, im = _rand(n)
+    fr, fi = ref.fft(re, im)
+    gr, gi = ref.fft_numpy(np.asarray(re), np.asarray(im))
+    scale = max(1.0, float(np.max(np.abs(gr))), float(np.max(np.abs(gi))))
+    assert np.max(np.abs(np.asarray(fr) - gr)) / scale < 1e-5
+    assert np.max(np.abs(np.asarray(fi) - gi)) / scale < 1e-5
+
+
+@pytest.mark.parametrize("n", [8, 32, 1024])
+def test_bitrev_is_involution(n):
+    idx = ref.bitrev_indices(n)
+    assert np.array_equal(idx[idx], np.arange(n))
+    assert sorted(idx) == list(range(n))
+
+
+def test_log2i():
+    assert ref.log2i(1) == 0
+    assert ref.log2i(1024) == 10
+    for bad in (0, -4, 3, 12, 1000):
+        with pytest.raises(ValueError):
+            ref.log2i(bad)
+
+
+def test_twiddle_unit_circle():
+    wr, wi = ref.twiddle(64, 32)
+    mag = np.asarray(wr) ** 2 + np.asarray(wi) ** 2
+    assert np.allclose(mag, 1.0, atol=1e-6)
+    # W_m^0 = 1
+    assert float(wr[0]) == pytest.approx(1.0)
+    assert float(wi[0]) == pytest.approx(0.0)
+    # W_4^1 = -j at j = m/4
+    wr4, wi4 = ref.twiddle(4, 2)
+    assert float(wr4[1]) == pytest.approx(0.0, abs=1e-7)
+    assert float(wi4[1]) == pytest.approx(-1.0)
+
+
+@pytest.mark.parametrize(
+    "plan,l,ok",
+    [
+        (["R2"] * 10, 10, True),
+        (["R4", "R2", "R4", "R4", "F8"], 10, True),
+        (["R4", "F8", "F32"], 10, True),
+        (["R8", "R8", "R8", "R2"], 10, True),
+        (["R2"] * 9, 10, False),
+        (["R2"] * 11, 10, False),
+        (["F32", "F32"], 10, True),
+        (["XX"], 1, False),
+        ([], 0, True),
+    ],
+)
+def test_is_valid_plan(plan, l, ok):
+    assert ref.is_valid_plan(plan, l) is ok
+
+
+@pytest.mark.parametrize("edge", list(ref.EDGE_STAGES))
+def test_apply_edge_equals_radix2_composition(edge):
+    n = 256
+    re, im = _rand(n, seed=3)
+    k = ref.EDGE_STAGES[edge]
+    er, ei = ref.apply_edge(re, im, edge, 1)
+    rr, ri = re, im
+    for r in range(k):
+        rr, ri = ref.radix2_stage(rr, ri, 1 + r)
+    assert np.allclose(np.asarray(er), np.asarray(rr), atol=1e-5)
+    assert np.allclose(np.asarray(ei), np.asarray(ri), atol=1e-5)
+
+
+def test_apply_edge_out_of_range_raises():
+    re, im = _rand(16)  # l = 4
+    with pytest.raises(ValueError):
+        ref.apply_edge(re, im, "F32", 0)
+    with pytest.raises(ValueError):
+        ref.apply_edge(re, im, "R2", 4)
+
+
+def test_apply_plan_rejects_invalid():
+    re, im = _rand(16)
+    with pytest.raises(ValueError):
+        ref.apply_plan(re, im, ["R2"] * 3)
+
+
+def test_edge_catalog_matches_paper_table1():
+    # Table 1: stage advances and fused block sizes.
+    assert ref.EDGE_STAGES == {"R2": 1, "R4": 2, "R8": 3, "F8": 3, "F16": 4, "F32": 5}
+    assert ref.FUSED_BLOCK == {"F8": 8, "F16": 16, "F32": 32}

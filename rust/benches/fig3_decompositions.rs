@@ -1,0 +1,35 @@
+//! Bench: paper Figure 3 — the three compared decompositions (pure
+//! radix-2, context-free choice, context-aware choice), with per-edge
+//! contextual costs and native end-to-end times for each.
+
+use spfft::cost::SimCost;
+use spfft::edge::EdgeType;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::report;
+use spfft::util::bench::{black_box, Bench};
+
+fn main() {
+    let n = 1024;
+    let mut cost = SimCost::m1(n);
+    println!("{}", report::figure3(&mut cost));
+
+    let mut bench = Bench::from_env("fig3_decompositions");
+    let pure = Plan::new(vec![EdgeType::R2; 10]);
+    let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree).plan;
+    let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let mut ex = Executor::new();
+    for (name, plan) in [("pure-radix2", &pure), ("context-free", &cf), ("context-aware", &ca)] {
+        let cp = ex.compile(plan, n, true);
+        let input = SplitComplex::random(n, 9);
+        let mut buf = input.clone();
+        bench.bench(format!("native/{name} [{plan}]"), move || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            cp.run(&mut buf.re, &mut buf.im);
+            black_box(&buf);
+        });
+    }
+    bench.run();
+}

@@ -1,0 +1,53 @@
+//! Bench: native FFT hot path across sizes — the §Perf optimization
+//! target for Layer 3's compute substrate (plan execution must be the
+//! dominant cost, not coordination).
+
+use spfft::fft::{Executor, SplitComplex};
+use spfft::plan::Plan;
+use spfft::util::bench::{black_box, Bench};
+use spfft::util::stats::gflops;
+
+fn best_native_plan(l: usize) -> Plan {
+    // greedy R4 body + terminal F8 (a strong generic arrangement)
+    let mut edges = Vec::new();
+    let mut s = 0;
+    while l - s > 3 && l - s - 3 >= 2 {
+        edges.push(spfft::edge::EdgeType::R4);
+        s += 2;
+    }
+    while l - s > 3 {
+        edges.push(spfft::edge::EdgeType::R2);
+        s += 1;
+    }
+    edges.push(spfft::edge::EdgeType::F8);
+    Plan::new(edges)
+}
+
+fn main() {
+    let mut bench = Bench::from_env("native_fft");
+    let mut ex = Executor::new();
+    let sizes = [64usize, 256, 1024, 4096, 16384];
+    for n in sizes {
+        let l = spfft::fft::log2i(n);
+        for (name, plan) in [
+            ("r2-chain", Plan::new(vec![spfft::edge::EdgeType::R2; l])),
+            ("planned", best_native_plan(l)),
+        ] {
+            let cp = ex.compile(&plan, n, true);
+            let input = SplitComplex::random(n, 1);
+            let mut buf = input.clone();
+            bench.bench(format!("fft{n}/{name}"), move || {
+                buf.re.copy_from_slice(&input.re);
+                buf.im.copy_from_slice(&input.im);
+                cp.run(&mut buf.re, &mut buf.im);
+                black_box(&buf);
+            });
+        }
+    }
+    let results = bench.run();
+    println!("\nGFLOPS by size:");
+    for r in &results {
+        let n: usize = r.name[3..].split('/').next().unwrap().parse().unwrap();
+        println!("  {:<24} {:>7.2} GFLOPS", r.name, gflops(n, r.summary.median));
+    }
+}

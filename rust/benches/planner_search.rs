@@ -1,0 +1,53 @@
+//! Bench: planner scalability — search latency vs problem size and
+//! context order (the paper's "orders of magnitude faster than FFTW's
+//! planner" claim, §2.5), plus the ablation over beam widths.
+
+use spfft::cost::SimCost;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::from_env("planner_search");
+    for l in [8usize, 10, 14, 16] {
+        let n = 1usize << l;
+        bench.bench(format!("cf/L{l}"), move || {
+            let mut c = SimCost::m1(n);
+            black_box(run_plan(&mut c, &Strategy::DijkstraContextFree));
+        });
+        bench.bench(format!("ca-k1/L{l}"), move || {
+            let mut c = SimCost::m1(n);
+            black_box(run_plan(&mut c, &Strategy::DijkstraContextAware { k: 1 }));
+        });
+        bench.bench(format!("ca-k2/L{l}"), move || {
+            let mut c = SimCost::m1(n);
+            black_box(run_plan(&mut c, &Strategy::DijkstraContextAware { k: 2 }));
+        });
+    }
+    // ablation: SPIRAL-style beam widths at L = 10
+    for w in [1usize, 2, 4, 16] {
+        bench.bench(format!("beam-w{w}/L10"), move || {
+            let mut c = SimCost::m1(1024);
+            black_box(run_plan(&mut c, &Strategy::SpiralBeam { width: w }));
+        });
+    }
+    bench.bench("exhaustive/L10", || {
+        let mut c = SimCost::m1(1024);
+        black_box(run_plan(&mut c, &Strategy::Exhaustive));
+    });
+    bench.run();
+
+    // quality-vs-width ablation table (DESIGN.md ablation item)
+    println!("\nbeam-width quality ablation (true ns of chosen plan, L=10 M1):");
+    let mut c = SimCost::m1(1024);
+    let best = run_plan(&mut c, &Strategy::Exhaustive).true_ns;
+    for w in [1usize, 2, 3, 4, 8, 16, 64] {
+        let out = run_plan(&mut c, &Strategy::SpiralBeam { width: w });
+        println!(
+            "  width {:<3} -> {:<28} {:>8.1} ns  (+{:.1}% vs optimal)",
+            w,
+            out.plan.to_string(),
+            out.true_ns,
+            100.0 * (out.true_ns / best - 1.0)
+        );
+    }
+}

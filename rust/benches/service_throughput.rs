@@ -1,0 +1,65 @@
+//! Bench: coordinator serving throughput/latency — batching policy sweep.
+//!
+//! Measures end-to-end service behavior (plan cache -> batcher -> native
+//! backend) under a closed-loop synthetic workload, sweeping batch sizes —
+//! the L3 §Perf target: coordination overhead must stay small relative to
+//! kernel time.
+
+use std::time::{Duration, Instant};
+
+use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use spfft::fft::SplitComplex;
+use spfft::plan::Plan;
+
+fn main() {
+    let n = 1024;
+    let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("SPFFT_BENCH_QUICK").is_ok();
+    let requests = if quick { 2_000 } else { 20_000 };
+    println!("== bench suite: service_throughput ({requests} requests/case) ==");
+    for (label, batch) in [
+        ("batch1", BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }),
+        ("batch8", BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) }),
+        ("batch32", BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(200) }),
+    ] {
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(n, plan.clone())],
+            backend: Backend::Native,
+            batch,
+            workers: 1,
+            queue_depth: 512,
+        })
+        .expect("service");
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(64);
+        let mut submitted = 0usize;
+        for i in 0..requests {
+            match svc.submit(SplitComplex::random(n, i as u64)) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    submitted += 1;
+                }
+                Err(_) => {}
+            }
+            if pending.len() >= 64 {
+                for rx in pending.drain(..) {
+                    let _ = rx.recv();
+                }
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        let wall = t0.elapsed();
+        let snap = svc.shutdown();
+        println!(
+            "{label:<8} {:>8.0} req/s  submitted {submitted}  completed {}  mean batch {:>5.2}  p50 {:?}  p95 {:?}  p99 {:?}",
+            snap.throughput(wall),
+            snap.completed,
+            snap.mean_batch_size,
+            snap.latency_p50,
+            snap.latency_p95,
+            snap.latency_p99,
+        );
+    }
+}

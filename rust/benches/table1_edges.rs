@@ -1,0 +1,30 @@
+//! Bench: paper Table 1 — the edge catalog, with a native timing sanity
+//! pass over one representative placement of each edge type.
+
+use spfft::edge::ALL_EDGES;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::report;
+use spfft::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::table1());
+    let n = 1024;
+    let l = 10;
+    let mut bench = Bench::from_env("table1_edges");
+    let mut ex = Executor::new();
+    for e in ALL_EDGES {
+        // representative placements: first valid stage and terminal stage
+        for stage in [0usize, l - e.stages()] {
+            let step = ex.compile_edge(n, e, stage);
+            let mut buf = SplitComplex::random(n, 3);
+            bench.bench(format!("edge/{}@{}", e.name(), stage), move || {
+                spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+                black_box(&buf);
+            });
+            if e.stages() == l {
+                break;
+            }
+        }
+    }
+    bench.run();
+}

@@ -1,0 +1,40 @@
+//! Bench: paper Table 2 — fused register blocks and the register-pressure
+//! inversion (FFT-8 > FFT-16 > FFT-32 despite fusing fewer passes).
+//!
+//! Prints the simulated table and measures the native fused kernels at
+//! their terminal positions on this host.
+
+use spfft::cost::SimCost;
+use spfft::edge::EdgeType;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::report;
+use spfft::util::bench::{black_box, Bench};
+use spfft::util::stats::gflops;
+
+fn main() {
+    let n = 1024;
+    let l = 10;
+    let mut cost = SimCost::m1(n);
+    println!("{}", report::table2(&mut cost));
+
+    let mut bench = Bench::from_env("table2_fused");
+    let mut ex = Executor::new();
+    for e in [EdgeType::F8, EdgeType::F16, EdgeType::F32] {
+        let stage = l - e.stages();
+        let step = ex.compile_edge(n, e, stage);
+        let mut buf = SplitComplex::random(n, 5);
+        bench.bench(format!("native/fused{}@terminal", e.block_size().unwrap()), move || {
+            spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+            black_box(&buf);
+        });
+    }
+    let results = bench.run();
+    println!("\nnative per-block GFLOPS (5*N*stages / t):");
+    for r in &results {
+        let b: usize = r.name.trim_start_matches("native/fused").split('@').next().unwrap().parse().unwrap();
+        let stages = b.trailing_zeros() as f64;
+        let gf = 5.0 * n as f64 * stages / r.summary.median;
+        println!("  FFT-{:<3} {:>7.2} GFLOPS", b, gf);
+        let _ = gflops(n, r.summary.median); // convention helper exercised
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: paper Table 3 — the ten arrangements on the simulated M1.
+//!
+//! Regenerates the paper's central table (simulated contextual times) and
+//! measures the *native* execution time of every arrangement on this host
+//! as the "this testbed" column, plus the end-to-end planner latencies.
+
+use spfft::cost::SimCost;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::report;
+use spfft::util::bench::{black_box, Bench};
+use spfft::util::stats::gflops;
+
+fn main() {
+    let n = 1024;
+    let mut bench = Bench::from_env("table3_algorithms");
+
+    // --- regenerate the paper table from the simulator ---
+    let mut cost = SimCost::m1(n);
+    println!("{}", report::table3(&mut cost));
+
+    // --- native-host measurement of the same arrangements ---
+    println!("native execution on this host (same arrangements):");
+    let mut ex = Executor::new();
+    let rows = report::table3_rows(&mut cost);
+    let mut compiled = Vec::new();
+    for row in &rows {
+        compiled.push((row.label.clone(), ex.compile(&row.plan, n, true)));
+    }
+    for (label, cp) in compiled {
+        let input = SplitComplex::random(n, 7);
+        let mut buf = input.clone();
+        bench.bench(format!("native/{label}"), move || {
+            buf.re.copy_from_slice(&input.re);
+            buf.im.copy_from_slice(&input.im);
+            cp.run(&mut buf.re, &mut buf.im);
+            black_box(&buf);
+        });
+    }
+
+    // --- planner latency (the "completes in seconds" claim, §2.5) ---
+    bench.bench("planner/dijkstra-context-free", move || {
+        let mut c = SimCost::m1(1024);
+        black_box(run_plan(&mut c, &Strategy::DijkstraContextFree));
+    });
+    bench.bench("planner/dijkstra-context-aware", move || {
+        let mut c = SimCost::m1(1024);
+        black_box(run_plan(&mut c, &Strategy::DijkstraContextAware { k: 1 }));
+    });
+    bench.bench("planner/exhaustive-640-plans", move || {
+        let mut c = SimCost::m1(1024);
+        black_box(run_plan(&mut c, &Strategy::Exhaustive));
+    });
+
+    let results = bench.run();
+    // print a GFLOPS summary for the native rows
+    println!("\nnative GFLOPS summary (5*N*log2 N convention):");
+    for r in &results {
+        if let Some(name) = r.name.strip_prefix("native/") {
+            println!("  {:<44} {:>7.2} GFLOPS", name, gflops(n, r.summary.median));
+        }
+    }
+}

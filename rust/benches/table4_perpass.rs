@@ -1,0 +1,47 @@
+//! Bench: paper Table 4 — per-pass profile of individual radix-2 passes.
+//!
+//! Prints the simulated isolation profile (the U-curve whose right side
+//! motivates fused blocks) and measures each native radix-2 pass on this
+//! host with the paper's isolation protocol.
+
+use spfft::cost::SimCost;
+use spfft::edge::EdgeType;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::report;
+use spfft::util::bench::{black_box, Bench};
+
+fn main() {
+    let n = 1024;
+    let l = 10;
+    let mut cost = SimCost::m1(n);
+    println!("{}", report::table4(&mut cost));
+
+    let mut bench = Bench::from_env("table4_perpass");
+    let mut ex = Executor::new();
+    for stage in 0..l {
+        let step = ex.compile_edge(n, EdgeType::R2, stage);
+        let mut buf = SplitComplex::random(n, 11);
+        bench.bench(
+            format!("native/r2-pass{:02}-stride{}", stage + 1, (n >> stage) / 2),
+            move || {
+                spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+                black_box(&buf);
+            },
+        );
+    }
+    for e in [EdgeType::F8, EdgeType::F16] {
+        let step = ex.compile_edge(n, e, l - e.stages());
+        let mut buf = SplitComplex::random(n, 12);
+        bench.bench(format!("native/fused{}", e.block_size().unwrap()), move || {
+            spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+            black_box(&buf);
+        });
+    }
+    let results = bench.run();
+    println!("\nper-pass GFLOPS on this host (5N per radix-2 pass):");
+    for r in &results {
+        if r.name.contains("r2-pass") {
+            println!("  {:<36} {:>7.2}", r.name, 5.0 * n as f64 / r.summary.median);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Calibration inspector: prints everything the simulator predicts for the
+//! paper's experiments so the M1/Haswell parameter sets can be tuned
+//! against the published shape (see DESIGN.md §2 and EXPERIMENTS.md).
+//!
+//! Usage: cargo run --bin calibrate [--release]
+
+use spfft::cost::{CostModel, SimCost};
+use spfft::edge::{Context, EdgeType};
+use spfft::plan::{table3_arrangements, Plan};
+use spfft::planner::{plan, rank_all_plans, Strategy};
+use spfft::util::stats::gflops;
+
+fn main() {
+    let n = 1024;
+    let l = 10;
+
+    println!("=== Table 4: per-pass radix-2 profile (M1 sim) ===");
+    let mut cost = SimCost::m1(n);
+    for s in 0..l {
+        let iso = cost.edge_ns(EdgeType::R2, s, Context::Start);
+        let warm = cost.edge_ns(EdgeType::R2, s, Context::After(EdgeType::R2));
+        let g = 5.0 * n as f64 / iso;
+        println!(
+            "  pass {:>2} (stage {s}, stride {:>4}): iso {:>8.0} ns ({:>5.1} GF/pass-stage)  warm {:>8.0} ns",
+            s + 1,
+            512 >> s,
+            iso,
+            g,
+            warm
+        );
+    }
+    for (e, s) in [(EdgeType::F8, 7usize), (EdgeType::F16, 6), (EdgeType::F32, 5)] {
+        let iso = cost.edge_ns(e, s, Context::Start);
+        let warm = cost.edge_ns(e, s, Context::After(EdgeType::R4));
+        let g = 5.0 * n as f64 * e.stages() as f64 / iso;
+        println!(
+            "  {:<4} terminal: iso {:>8.0} ns ({:>5.1} GF)  warm-after-R4 {:>8.0} ns ({:>5.1} GF)",
+            e.name(),
+            iso,
+            g,
+            warm,
+            5.0 * n as f64 * e.stages() as f64 / warm
+        );
+    }
+
+    println!("\n=== Table 3: arrangements (M1 sim, steady-state contextual) ===");
+    let mut rows: Vec<(String, Plan)> = table3_arrangements()
+        .into_iter()
+        .map(|r| (r.label.to_string(), r.plan))
+        .collect();
+    // replace the two Dijkstra rows with what the searches actually find
+    let cf = plan(&mut cost, &Strategy::DijkstraContextFree);
+    let ca = plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+    rows[8] = (format!("Dijkstra CF -> {}", cf.plan), cf.plan.clone());
+    rows[9] = (format!("Dijkstra CA -> {}", ca.plan), ca.plan.clone());
+    let best = rows
+        .iter()
+        .map(|(_, p)| cost.plan_ns(p))
+        .fold(f64::MAX, f64::min);
+    for (label, p) in &rows {
+        let t = cost.plan_ns(p);
+        println!(
+            "  {:<44} {:>8.0} ns  {:>5.1} GF  {:>4.0}%",
+            label,
+            t,
+            gflops(n, t),
+            100.0 * best / t
+        );
+    }
+
+    println!("\n=== search agreement ===");
+    let ex = plan(&mut cost, &Strategy::Exhaustive);
+    println!("  CF  plan: {}  believed {:.0} true {:.0}", cf.plan, cf.believed_ns, cf.true_ns);
+    println!("  CA  plan: {}  believed {:.0} true {:.0}", ca.plan, ca.believed_ns, ca.true_ns);
+    println!("  EXH plan: {}  true {:.0}", ex.plan, ex.true_ns);
+    println!("  targets : CF = R4->F8->F32 | CA = EXH = R4->R2->R4->R4->F8");
+    println!("  CA vs CF true improvement: {:.0}%", 100.0 * (1.0 - ca.true_ns / cf.true_ns));
+
+    println!("\n=== top-10 plans by true time (M1 sim) ===");
+    for (p, t) in rank_all_plans(&mut cost, l).into_iter().take(10) {
+        println!("  {:<36} {:>8.0} ns {:>5.1} GF", p.to_string(), t, gflops(n, t));
+    }
+
+    println!("\n=== Haswell ===");
+    let mut hw = SimCost::haswell(n);
+    let cf_h = plan(&mut hw, &Strategy::DijkstraContextFree);
+    let ca_h = plan(&mut hw, &Strategy::DijkstraContextAware { k: 1 });
+    let ex_h = plan(&mut hw, &Strategy::Exhaustive);
+    println!("  CF  plan: {}", cf_h.plan);
+    println!("  CA  plan: {}  (target R4->R8->R8->R4)", ca_h.plan);
+    println!("  EXH plan: {}  true {:.0}", ex_h.plan, ex_h.true_ns);
+    println!("\n=== top-10 plans (Haswell sim) ===");
+    for (p, t) in rank_all_plans(&mut hw, l).into_iter().take(10) {
+        println!("  {:<36} {:>8.0} ns {:>5.1} GF", p.to_string(), t, gflops(n, t));
+    }
+}

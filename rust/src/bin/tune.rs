@@ -1,0 +1,306 @@
+//! Automated calibration fitter for the simulator parameter sets.
+//!
+//! Searches the MachineParams space for values that reproduce the paper's
+//! *categorical* results (which plans the searches discover, who beats
+//! whom) and minimize log-error against the published anchor numbers
+//! (Tables 2–4). The winning vector is printed in `params.rs` syntax and
+//! baked into `MachineParams::m1()` / `::haswell()`.
+//!
+//! Usage: cargo run --release --bin tune [-- m1|haswell] [evals]
+
+use spfft::cost::{CostModel, SimCost};
+use spfft::edge::{Context, EdgeType};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::sim::{Machine, MachineParams};
+use spfft::util::rng::Rng;
+
+const N: usize = 1024;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    names: Vec<&'static str>,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+fn spec() -> Spec {
+    let rows: Vec<(&'static str, f64, f64)> = vec![
+        ("bf_r2", 2.0, 9.0),
+        ("bf_r4", 4.0, 18.0),
+        ("bf_r8", 10.0, 90.0),
+        ("fused_pps", 0.08, 0.7),
+        ("scalar_penalty", 2.0, 8.0),
+        ("blk_overhead", 2.0, 24.0),
+        ("transpose", 0.5, 12.0),
+        ("gather", 1.0, 24.0),
+        ("spill", 2.0, 24.0),
+        ("twl_stream", 2.0, 40.0),
+        ("depth_gamma", 0.0, 0.9),
+        ("k_bank", 0.2, 3.5),
+        ("pressure_start", 0.05, 0.7),
+        ("aff_half", 0.25, 0.95),
+        ("aff_same", 0.5, 1.0),
+        ("after_fused", 1.0, 1.8),
+        ("start_mem", 1.0, 2.2),
+        ("l1_bw", 16.0, 96.0),
+        ("iso_fused_mem", 0.4, 1.0),
+    ];
+    Spec {
+        names: rows.iter().map(|r| r.0).collect(),
+        lo: rows.iter().map(|r| r.1).collect(),
+        hi: rows.iter().map(|r| r.2).collect(),
+    }
+}
+
+fn to_params(base: &MachineParams, x: &[f64]) -> MachineParams {
+    let mut p = base.clone();
+    p.bf.r2 = x[0];
+    p.bf.r4 = x[1];
+    p.bf.r8 = x[2];
+    p.bf.fused_per_point_stage = x[3];
+    p.scalar_penalty = x[4];
+    p.blk_overhead_cyc = x[5];
+    p.fused_transpose_cyc = x[6];
+    p.fused_gather_cyc = x[7];
+    p.spill_cyc_per_vreg = x[8];
+    p.fused_twiddle_stream_cyc = x[9];
+    p.fused_depth_gamma = x[10];
+    p.k_bank = x[11];
+    p.pressure_start_mult = x[12];
+    p.affinity_half_stride = x[13];
+    p.affinity_same_stride = x[14];
+    p.after_fused_mem = x[15];
+    p.start_mem = x[16];
+    p.l1_bw_bytes_cyc = x[17];
+    p.iso_fused_mem = x[18];
+    p
+}
+
+fn log_err(got: f64, want: f64) -> f64 {
+    let e = (got.max(1.0) / want).ln();
+    e * e
+}
+
+/// Loss for the M1 target set.
+fn loss_m1(params: &MachineParams) -> f64 {
+    let machine = Machine::new(params.clone());
+    let mut cost = SimCost::new(machine.clone(), N);
+    let mut loss = 0.0;
+
+    let p = |s: &str| Plan::parse(s).unwrap();
+    let target_cf = p("R4,F8,F32");
+    let target_ca = p("R4,R2,R4,R4,F8");
+
+    // --- searches ---
+    let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
+    let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+    let ex = run_plan(&mut cost, &Strategy::Exhaustive);
+    if cf.plan != target_cf {
+        // Qualitative fallback: the paper's CF story needs a fused-heavy,
+        // F32-tailed plan distinct from the CA optimum.
+        let has_f32 = cf.plan.edges().contains(&EdgeType::F32);
+        loss += if has_f32 && cf.plan != target_ca { 8.0 } else { 40.0 };
+    }
+    if ca.plan != target_ca {
+        loss += 60.0;
+    }
+    if ex.plan != target_ca {
+        loss += 60.0;
+    }
+
+    // --- Table 3 anchors (steady-state contextual ns) ---
+    let anchors = [
+        ("R2,R2,R2,R2,R2,R2,R2,R2,R2,R2", 9014.0, 1.0),
+        ("R4,R4,R4,R4,R4", 6903.0, 1.0),
+        ("R2,R8,R8,R8", 6792.0, 1.0),
+        ("R8,R8,R8,R2", 6889.0, 1.0),
+        ("R8,R8,R4,R4", 6861.0, 1.0),
+        ("R4,R8,R8,R4", 6889.0, 1.0),
+        ("R2,R2,R2,R2,R2,F32", 2569.0, 1.0),
+        ("R4,R4,R4,F16", 1764.0, 2.0),
+        ("R4,F8,F32", 2320.0, 2.0),
+        ("R4,R2,R4,R4,F8", 1722.0, 3.0),
+    ];
+    for (s, want, w) in anchors {
+        loss += w * log_err(cost.plan_ns(&p(s)), want);
+    }
+
+    // --- Table 2 anchors, read as in-context (warm after-R4) values:
+    // the only reading consistent with Table 3's arrangement sums.
+    let warm = [
+        (EdgeType::F8, 7usize, 458.0, 3.0),   // 33.5 GF over 3 stages
+        (EdgeType::F16, 6, 667.0, 3.0),       // 30.7 GF over 4 stages
+        (EdgeType::F32, 5, 1249.0, 3.0),      // 20.5 GF over 5 stages
+    ];
+    for (e, s, want, w) in warm {
+        loss += w * log_err(cost.edge_ns(e, s, Context::After(EdgeType::R4)), want);
+    }
+
+    // --- Table 4 shape (scale-free ratios; the absolute left side is an
+    // isolation artifact our L1-resident model does not chase) ---
+    let r2 = |cost: &mut SimCost, s: usize| cost.edge_ns(EdgeType::R2, s, Context::Start);
+    let (p1, p4, p7, p10) = (r2(&mut cost, 0), r2(&mut cost, 3), r2(&mut cost, 6), r2(&mut cost, 9));
+    loss += 0.5 * log_err(p10 / p7, 4250.0 / 380.0); // right-side collapse
+    loss += 0.3 * log_err(p1 / p4, 3580.0 / 750.0);  // left-side stride cost
+    if p10 < p1 {
+        loss += 2.0; // pass 10 is the slowest in the paper
+    }
+
+    // --- CF plan's true (contextual) time anchor: the 26% gap ---
+    if cf.plan.edges().contains(&EdgeType::F32) {
+        loss += 3.0 * log_err(cf.true_ns, 2320.0);
+    }
+
+    // ordering sanity: CA true <= every Table-3 row
+    let ca_t = cost.plan_ns(&target_ca);
+    for (s, _, _) in anchors {
+        if cost.plan_ns(&p(s)) < ca_t - 1e-6 {
+            loss += 10.0;
+        }
+    }
+    loss
+}
+
+/// Loss for the Haswell target set (categorical only: the 2015 optimum,
+/// no fused blocks in the optimum, F32 absent by construction).
+fn loss_haswell(params: &MachineParams) -> f64 {
+    // Context effects are weak on Haswell (shallower cache hierarchy in
+    // the 2015 study): pin the context parameters near 1 so the searches
+    // and ground truth agree, and tune only the compute side.
+    let mut params = params.clone();
+    params.affinity_half_stride = 0.95;
+    params.affinity_same_stride = 0.98;
+    params.after_fused_mem = 1.05;
+    params.iso_fused_mem = 0.95;
+    params.start_mem = 1.10;
+    let machine = Machine::new(params.clone());
+    let mut cost = SimCost::new(machine, N);
+    let mut loss = 0.0;
+    let target = Plan::parse("R4,R8,R8,R4").unwrap();
+    let ex = run_plan(&mut cost, &Strategy::Exhaustive);
+    let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+    let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
+    if ex.plan != target {
+        loss += 60.0;
+    }
+    if ca.plan != target {
+        loss += 40.0;
+    }
+    if cf.plan != target {
+        loss += 20.0;
+    }
+    // Keep magnitudes sane: pure-radix plans land in a few microseconds.
+    loss += log_err(cost.plan_ns(&target), 4000.0);
+    // Fused-tailed plans should lose clearly but not absurdly.
+    let f16 = cost.plan_ns(&Plan::parse("R4,R4,R4,F16").unwrap());
+    if f16 < cost.plan_ns(&target) {
+        loss += 20.0;
+    }
+    loss += 0.3 * log_err(f16, 6000.0);
+    loss
+}
+
+fn clampv(spec: &Spec, x: &mut [f64]) {
+    for i in 0..x.len() {
+        x[i] = x[i].clamp(spec.lo[i], spec.hi[i]);
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.first().map(|s| s.as_str()).unwrap_or("m1");
+    let evals: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40_000);
+    let base = MachineParams::by_name(which).expect("m1|haswell");
+    let loss_fn: fn(&MachineParams) -> f64 = match which {
+        "m1" => loss_m1,
+        _ => loss_haswell,
+    };
+    let sp = spec();
+    // start from the current baked values
+    let mut x: Vec<f64> = vec![
+        base.bf.r2,
+        base.bf.r4,
+        base.bf.r8,
+        base.bf.fused_per_point_stage,
+        base.scalar_penalty,
+        base.blk_overhead_cyc,
+        base.fused_transpose_cyc,
+        base.fused_gather_cyc,
+        base.spill_cyc_per_vreg,
+        base.fused_twiddle_stream_cyc,
+        base.fused_depth_gamma,
+        base.k_bank,
+        base.pressure_start_mult,
+        base.affinity_half_stride,
+        base.affinity_same_stride,
+        base.after_fused_mem,
+        base.start_mem,
+        base.l1_bw_bytes_cyc,
+        base.iso_fused_mem,
+    ];
+    clampv(&sp, &mut x);
+    let mut best = loss_fn(&to_params(&base, &x));
+    let mut rng = Rng::new(0xCA11B007);
+    println!("initial loss: {best:.3}");
+    let mut used = 0usize;
+    let mut restarts = 0;
+    let mut cur = x.clone();
+    let mut cur_loss = best;
+    let mut best_x = x.clone();
+    while used < evals {
+        // propose: perturb 1-4 random coordinates multiplicatively
+        let k = 1 + (rng.next_below(4) as usize);
+        let mut cand = cur.clone();
+        for _ in 0..k {
+            let i = rng.range(0, cand.len());
+            let scale = (rng.next_f64() - 0.5) * 0.6; // +-30%
+            cand[i] *= (1.0f64 + scale).max(0.2);
+            if rng.next_below(12) == 0 {
+                // occasional jump anywhere in range
+                cand[i] = sp.lo[i] + rng.next_f64() * (sp.hi[i] - sp.lo[i]);
+            }
+        }
+        clampv(&sp, &mut cand);
+        let l = loss_fn(&to_params(&base, &cand));
+        used += 1;
+        // simulated-annealing-ish acceptance
+        if l < cur_loss || rng.next_f64() < 0.02 {
+            cur = cand;
+            cur_loss = l;
+        }
+        if l < best {
+            best = l;
+            best_x = cur.clone();
+            println!("eval {used}: loss {best:.3}");
+        }
+        // restart if stuck
+        if used % 6000 == 0 {
+            restarts += 1;
+            cur = best_x.clone();
+            cur_loss = best;
+            if restarts % 2 == 0 {
+                for i in 0..cur.len() {
+                    if rng.next_below(3) == 0 {
+                        cur[i] = sp.lo[i] + rng.next_f64() * (sp.hi[i] - sp.lo[i]);
+                    }
+                }
+                clampv(&sp, &mut cur);
+                cur_loss = loss_fn(&to_params(&base, &cur));
+            }
+        }
+    }
+    println!("\nfinal loss: {best:.3}");
+    for (name, v) in sp.names.iter().zip(&best_x) {
+        println!("  {name}: {v:.4},");
+    }
+    // categorical report
+    let p = to_params(&base, &best_x);
+    let mut cost = SimCost::new(Machine::new(p), N);
+    let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
+    let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+    let ex = run_plan(&mut cost, &Strategy::Exhaustive);
+    println!("CF: {}  (true {:.0} ns)", cf.plan, cf.true_ns);
+    println!("CA: {}  (true {:.0} ns)", ca.plan, ca.true_ns);
+    println!("EX: {}  (true {:.0} ns)", ex.plan, ex.true_ns);
+}

@@ -1,0 +1,113 @@
+//! Dynamic batching: collect requests until a size or deadline trigger.
+//!
+//! The classic serving tradeoff (small batches = low latency, large
+//! batches = high throughput) applied to FFT requests: the first request
+//! of a batch starts a deadline window; the batch closes when either
+//! `max_batch` requests have arrived or the window expires.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close a batch at this many requests.
+    pub max_batch: usize,
+    /// ... or this long after the first request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Pulls batches off an mpsc receiver according to a policy.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained (service shutdown).
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block for the first item.
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) });
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn items_arriving_during_window_join_batch() {
+        let (tx, rx) = channel();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(100) });
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+            tx.send(3).unwrap();
+            // drop tx: batch should close on disconnect, not hang
+        });
+        let batch = b.next_batch().unwrap();
+        sender.join().unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+    }
+}

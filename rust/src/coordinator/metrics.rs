@@ -1,0 +1,175 @@
+//! Service metrics: counters + a log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency buckets (1 ns .. ~1.15 s).
+const BUCKETS: usize = 31;
+
+/// Thread-safe metrics sink (lock-free atomics; share via `Arc`).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    busy_ns: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+}
+
+/// Point-in-time snapshot with derived statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    /// Mean requests per executed batch.
+    pub mean_batch_size: f64,
+    /// Total worker busy time.
+    pub busy: Duration,
+    pub latency_p50: Duration,
+    pub latency_p95: Duration,
+    pub latency_p99: Duration,
+    pub latency_max: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let ns = latency.as_nanos().max(1) as u64;
+        let bucket = (63 - ns.leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize, busy: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn percentile(&self, counts: &[u64; BUCKETS], total: u64, p: f64) -> Duration {
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // upper edge of the bucket
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        Duration::from_nanos(1u64 << BUCKETS)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        let mut total = 0;
+        let mut max_bucket = None;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            counts[i] = c;
+            total += c;
+            if c > 0 {
+                max_bucket = Some(i);
+            }
+        }
+        let batches = self.batches.load(Ordering::Relaxed);
+        let breq = self.batched_requests.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 { 0.0 } else { breq as f64 / batches as f64 },
+            busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
+            latency_p50: self.percentile(&counts, total, 0.50),
+            latency_p95: self.percentile(&counts, total, 0.95),
+            latency_p99: self.percentile(&counts, total, 0.99),
+            latency_max: Duration::from_nanos(
+                max_bucket.map(|i| 1u64 << (i + 1).min(63)).unwrap_or(0),
+            ),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Requests per second over a wall-clock window.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.completed as f64 / wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(Duration::from_micros(3));
+        m.on_failure();
+        m.on_batch(2, Duration::from_micros(5));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert_eq!(s.busy, Duration::from_micros(5));
+    }
+
+    #[test]
+    fn percentiles_bracket_latencies() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.on_complete(Duration::from_nanos(1_000)); // bucket ~2^10
+        }
+        for _ in 0..10 {
+            m.on_complete(Duration::from_micros(100)); // bucket ~2^17
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50 >= Duration::from_nanos(1_000));
+        assert!(s.latency_p50 <= Duration::from_nanos(4_096));
+        assert!(s.latency_p99 >= Duration::from_micros(100));
+        assert!(s.latency_max >= s.latency_p99);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency_p50, Duration::ZERO);
+        assert_eq!(s.throughput(Duration::from_secs(1)), 0.0);
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.on_complete(Duration::from_nanos(10));
+        }
+        let s = m.snapshot();
+        assert!((s.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+}

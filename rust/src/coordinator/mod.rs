@@ -1,0 +1,27 @@
+//! The serving coordinator: plan-cached, batched FFT execution.
+//!
+//! This is the Layer-3 "system" wrapper that turns the paper's planner
+//! into a deployable service: clients submit split-complex transforms;
+//! the coordinator plans (once, cached) with the configured search
+//! strategy, batches compatible requests, executes on a backend (native
+//! kernels or the AOT PJRT artifacts — Python never runs here), and
+//! tracks latency/throughput metrics.
+//!
+//! Built on std threads + channels (this environment has no async
+//! runtime in its offline crate set; an FFT service is CPU-bound anyway,
+//! so a worker-per-core pool with bounded queues is the right shape).
+//!
+//! * [`metrics`] — counters + log-bucketed latency histogram;
+//! * [`plancache`] — (n, strategy) -> plan memoization;
+//! * [`batcher`] — size/deadline dynamic batching;
+//! * [`service`] — the request loop, worker pool, and typed handles.
+
+pub mod batcher;
+pub mod metrics;
+pub mod plancache;
+pub mod service;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use plancache::PlanCache;
+pub use service::{Backend, FftService, ServiceConfig};

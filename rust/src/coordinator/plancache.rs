@@ -1,0 +1,123 @@
+//! Plan cache: memoize planner results per (n, strategy, cost-source).
+//!
+//! Planning costs measurements (or simulator sweeps); serving must not
+//! re-plan per request. Keys carry the cost-source label so plans from
+//! different machines/providers don't cross-contaminate.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::plan::Plan;
+
+/// Cache key: FFT size + strategy name + cost-source label.
+pub type PlanKey = (usize, String, String);
+
+/// Thread-safe plan cache.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Plan>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or compute the plan for a key.
+    pub fn get_or_plan(
+        &self,
+        n: usize,
+        strategy: &str,
+        source: &str,
+        compute: impl FnOnce() -> Plan,
+    ) -> Plan {
+        let key = (n, strategy.to_string(), source.to_string());
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return p.clone();
+        }
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Compute outside the lock (planning may be slow).
+        let plan = compute();
+        self.map.lock().unwrap().insert(key, plan.clone());
+        plan
+    }
+
+    /// Insert a pre-computed plan.
+    pub fn insert(&self, n: usize, strategy: &str, source: &str, plan: Plan) {
+        self.map
+            .lock()
+            .unwrap()
+            .insert((n, strategy.to_string(), source.to_string()), plan);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+
+    #[test]
+    fn caches_by_key() {
+        let cache = PlanCache::new();
+        let mut calls = 0;
+        let p1 = cache.get_or_plan(1024, "ca", "m1", || {
+            calls += 1;
+            Plan::parse("R4,R2,R4,R4,F8").unwrap()
+        });
+        let p2 = cache.get_or_plan(1024, "ca", "m1", || {
+            calls += 1;
+            unreachable!()
+        });
+        assert_eq!(p1, p2);
+        assert_eq!(calls, 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = PlanCache::new();
+        cache.insert(1024, "ca", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        cache.insert(1024, "ca", "haswell", Plan::parse("R4,R8,R8,R4").unwrap());
+        cache.insert(256, "ca", "m1", Plan::parse("R4,R4,R2,F8").unwrap());
+        assert_eq!(cache.len(), 3);
+        let p = cache.get_or_plan(1024, "ca", "haswell", || unreachable!());
+        assert_eq!(p, Plan::parse("R4,R8,R8,R4").unwrap());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let cache = Arc::new(PlanCache::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                c.get_or_plan(64, "cf", "m1", || Plan::parse("R2,R2,R2,R2,R2,R2").unwrap())
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().total_stages(), 6);
+        }
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,375 @@
+//! The FFT service: plan once, batch, execute, measure.
+//!
+//! Request path (Python-free): client calls [`FftService::submit`] with a
+//! split-complex buffer → the request queues to a worker → the worker's
+//! [`Batcher`] drains a batch → each request executes on the worker's
+//! backend under the cached plan → the result posts back on the request's
+//! channel. Latency/throughput metrics stream to a shared [`Metrics`].
+//!
+//! Backends:
+//! * [`Backend::Native`] — the in-crate kernels (`fft::exec`), fastest on
+//!   this host, used by the serving example and benches;
+//! * [`Backend::Pjrt`] — the AOT artifacts via PJRT; the registry is
+//!   created inside the worker thread (the `xla` client is not `Send`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fft::{Executor, SplitComplex};
+use crate::plan::Plan;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::plancache::PlanCache;
+
+/// Execution backend for the workers.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Native in-crate kernels.
+    Native,
+    /// PJRT over AOT artifacts from this directory. Plans are executed by
+    /// chaining per-edge executables + the bit-reversal epilogue.
+    Pjrt { artifacts_dir: std::path::PathBuf },
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// FFT sizes the service accepts; a plan is fixed per size at startup.
+    pub plans: Vec<(usize, Plan)>,
+    pub backend: Backend,
+    pub batch: BatchPolicy,
+    /// Worker threads (keep 1 for the PJRT backend on 1-core hosts).
+    pub workers: usize,
+    /// Bounded queue depth; submits beyond it fail fast (backpressure).
+    pub queue_depth: usize,
+}
+
+struct Request {
+    n: usize,
+    input: SplitComplex,
+    enqueued: Instant,
+    reply: SyncSender<Result<SplitComplex>>,
+}
+
+/// Handle to a running service.
+pub struct FftService {
+    tx: Option<SyncSender<Request>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    accepting: Arc<AtomicBool>,
+    sizes: Vec<usize>,
+}
+
+impl FftService {
+    /// Start workers and return the handle.
+    pub fn start(config: ServiceConfig) -> Result<FftService> {
+        if config.plans.is_empty() {
+            bail!("service needs at least one (n, plan)");
+        }
+        for (n, plan) in &config.plans {
+            let l = crate::fft::log2i(*n);
+            if !plan.is_valid_for(l) {
+                bail!("plan {plan} invalid for n={n}");
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let accepting = Arc::new(AtomicBool::new(true));
+        let (tx, rx) = sync_channel::<Request>(config.queue_depth);
+        // Single shared receiver guarded by a mutex: workers steal batches.
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let mut workers = Vec::new();
+        for worker_id in 0..config.workers.max(1) {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let config2 = config.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("spfft-worker-{worker_id}"))
+                    .spawn(move || worker_loop(worker_id, rx, config2, metrics))
+                    .map_err(|e| anyhow!("spawn: {e}"))?,
+            );
+        }
+        Ok(FftService {
+            tx: Some(tx),
+            workers,
+            metrics,
+            accepting,
+            sizes: config.plans.iter().map(|(n, _)| *n).collect(),
+        })
+    }
+
+    /// Submit a transform; returns a receiver for the result.
+    /// Fails fast when the queue is full (backpressure) or shutting down.
+    pub fn submit(&self, input: SplitComplex) -> Result<Receiver<Result<SplitComplex>>> {
+        if !self.accepting.load(Ordering::Relaxed) {
+            bail!("service is shutting down");
+        }
+        let n = input.len();
+        if !self.sizes.contains(&n) {
+            bail!("unsupported FFT size {n} (configured: {:?})", self.sizes);
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request { n, input, enqueued: Instant::now(), reply: reply_tx };
+        match self.tx.as_ref().unwrap().try_send(req) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.on_failure();
+                bail!("queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn transform(&self, input: SplitComplex) -> Result<SplitComplex> {
+        self.submit(input)?
+            .recv()
+            .map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop accepting, drain, and join workers.
+    pub fn shutdown(mut self) -> super::metrics::MetricsSnapshot {
+        self.accepting.store(false, Ordering::Relaxed);
+        drop(self.tx.take()); // close the queue; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for FftService {
+    fn drop(&mut self) {
+        self.accepting.store(false, Ordering::Relaxed);
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+enum WorkerBackend {
+    Native(Vec<(usize, crate::fft::CompiledPlan)>),
+    Pjrt {
+        registry: crate::runtime::Registry,
+        plans: Vec<(usize, Plan)>,
+    },
+}
+
+impl WorkerBackend {
+    fn execute(&mut self, n: usize, input: &SplitComplex) -> Result<SplitComplex> {
+        match self {
+            WorkerBackend::Native(compiled) => {
+                let cp = compiled
+                    .iter()
+                    .find(|(cn, _)| *cn == n)
+                    .map(|(_, cp)| cp)
+                    .ok_or_else(|| anyhow!("no plan for n={n}"))?;
+                Ok(cp.run_on(input))
+            }
+            WorkerBackend::Pjrt { registry, plans } => {
+                let plan = plans
+                    .iter()
+                    .find(|(pn, _)| *pn == n)
+                    .map(|(_, p)| p.clone())
+                    .ok_or_else(|| anyhow!("no plan for n={n}"))?;
+                registry.execute_plan(n, &plan, input)
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    _id: usize,
+    rx: Arc<std::sync::Mutex<Receiver<Request>>>,
+    config: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    // Build the backend inside the thread (PJRT clients are not Send).
+    let mut backend = match &config.backend {
+        Backend::Native => {
+            let mut ex = Executor::new();
+            WorkerBackend::Native(
+                config
+                    .plans
+                    .iter()
+                    .map(|(n, p)| (*n, ex.compile(p, *n, true)))
+                    .collect(),
+            )
+        }
+        Backend::Pjrt { artifacts_dir } => match crate::runtime::Registry::load(artifacts_dir) {
+            Ok(registry) => WorkerBackend::Pjrt { registry, plans: config.plans.clone() },
+            Err(e) => {
+                eprintln!("spfft worker: failed to load artifacts: {e}");
+                return;
+            }
+        },
+    };
+    loop {
+        // Take the receiver lock only to pull one batch.
+        let batch = {
+            let guard = rx.lock().unwrap();
+            let batcher = Batcher::new_ref(&guard, config.batch);
+            batcher.next_batch_ref()
+        };
+        let Some(batch) = batch else { return };
+        let t0 = Instant::now();
+        let size = batch.len();
+        for req in batch {
+            let result = backend.execute(req.n, &req.input);
+            match &result {
+                Ok(_) => metrics.on_complete(req.enqueued.elapsed()),
+                Err(_) => metrics.on_failure(),
+            }
+            let _ = req.reply.send(result);
+        }
+        metrics.on_batch(size, t0.elapsed());
+    }
+}
+
+// Extension used by the worker loop: batch off a borrowed receiver (the
+// receiver lives in a Mutex shared by workers).
+impl<T> Batcher<T> {
+    fn new_ref(rx: &Receiver<T>, policy: BatchPolicy) -> BorrowedBatcher<'_, T> {
+        BorrowedBatcher { rx, policy }
+    }
+}
+
+struct BorrowedBatcher<'a, T> {
+    rx: &'a Receiver<T>,
+    policy: BatchPolicy,
+}
+
+impl<T> BorrowedBatcher<'_, T> {
+    fn next_batch_ref(&self) -> Option<Vec<T>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::fft_ref;
+
+    fn native_service(n: usize, plan: &str, workers: usize) -> FftService {
+        FftService::start(ServiceConfig {
+            plans: vec![(n, Plan::parse(plan).unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(100) },
+            workers,
+            queue_depth: 64,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_correct_ffts() {
+        let svc = native_service(256, "R4,R4,R2,F8", 1);
+        let input = SplitComplex::random(256, 42);
+        let got = svc.transform(input.clone()).unwrap();
+        let want = fft_ref(&input);
+        assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn rejects_unknown_size() {
+        let svc = native_service(256, "R4,R4,R2,F8", 1);
+        assert!(svc.submit(SplitComplex::random(128, 1)).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_plan_at_startup() {
+        let bad = FftService::start(ServiceConfig {
+            plans: vec![(256, Plan::parse("R2,R2").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy::default(),
+            workers: 1,
+            queue_depth: 4,
+        });
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let svc = native_service(256, "R4,R4,R4,R2,R2", 2);
+        let inputs: Vec<SplitComplex> = (0..50).map(|i| SplitComplex::random(256, i)).collect();
+        let want0 = fft_ref(&inputs[0]);
+        let rxs: Vec<_> = inputs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        let results: Vec<SplitComplex> = rxs.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        assert!(results[0].max_abs_diff(&want0) / want0.max_abs().max(1.0) < 1e-4);
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 50);
+        assert!(snap.batches >= 1);
+        assert!(snap.mean_batch_size >= 1.0);
+    }
+
+    #[test]
+    fn backpressure_fails_fast() {
+        // queue_depth 1 and a worker stalled behind a batch window: the
+        // third-plus submits must see "queue full" rather than blocking.
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(1024, Plan::parse("R2,R2,R2,R2,R2,R2,R2,R2,R2,R2").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 1, max_wait: std::time::Duration::ZERO },
+            workers: 1,
+            queue_depth: 1,
+        })
+        .unwrap();
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..200 {
+            match svc.submit(SplitComplex::random(1024, i)) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed + snap.failed, 200);
+        assert_eq!(snap.failed as usize, rejected);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_work() {
+        let svc = native_service(256, "F8,F8,R2,R2", 1);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| svc.submit(SplitComplex::random(256, i)).unwrap())
+            .collect();
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 10);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+}

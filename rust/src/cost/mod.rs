@@ -1,0 +1,210 @@
+//! Edge-weight providers — the measurement side of the framework.
+//!
+//! The searches consume one interface: *time of `edge` at `stage` in
+//! context `ctx`*, for a fixed FFT size. Three providers:
+//!
+//! * [`SimCost`] — the calibrated machine model (DESIGN.md §2): the
+//!   default, deterministic, used for all paper-table regeneration;
+//! * [`NativeCost`] — live measurement of the native Rust kernels on this
+//!   host with the paper's protocol (execute the predecessor untimed, then
+//!   time the edge; median of 50, 5 warmup);
+//! * `PjrtCost` (in [`crate::runtime`]) — same protocol over the
+//!   AOT-compiled HLO executables.
+//!
+//! [`MemoCost`] caches cells and counts distinct measurements, verifying
+//! the paper's §2.5 budget (≈30 context-free vs ≈180 context-aware cells
+//! for N = 1024).
+
+use std::collections::HashMap;
+
+use crate::edge::{Context, EdgeType};
+use crate::plan::Plan;
+
+pub mod native;
+pub mod wisdom;
+pub use native::NativeCost;
+pub use wisdom::Wisdom;
+
+/// A provider of conditional edge weights for a fixed FFT size.
+pub trait CostModel {
+    /// FFT size this model measures.
+    fn n(&self) -> usize;
+
+    /// Edge types available (machines without 32 vregs lack F32).
+    fn available_edges(&self) -> Vec<EdgeType>;
+
+    /// Time (ns) of `edge` at `stage` given predecessor context.
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64;
+
+    /// Steady-state time of a full plan: every edge costed in its true
+    /// context, the first edge in the context of the plan's last edge
+    /// (back-to-back benchmark loop). This is the "measured arrangement
+    /// time" of paper Table 3.
+    fn plan_ns(&mut self, plan: &Plan) -> f64 {
+        assert!(!plan.is_empty());
+        let mut ctx = Context::After(*plan.edges().last().unwrap());
+        let mut total = 0.0;
+        for (edge, stage) in plan.steps() {
+            total += self.edge_ns(edge, stage, ctx);
+            ctx = Context::After(edge);
+        }
+        total
+    }
+}
+
+// Allow `&mut dyn CostModel` (and `&mut C`) wherever a CostModel is
+// expected — the CLI dispatches over trait objects.
+impl<C: CostModel + ?Sized> CostModel for &mut C {
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        (**self).available_edges()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        (**self).edge_ns(edge, stage, ctx)
+    }
+}
+
+/// The simulator-backed provider.
+pub struct SimCost {
+    machine: crate::sim::Machine,
+    n: usize,
+}
+
+impl SimCost {
+    pub fn new(machine: crate::sim::Machine, n: usize) -> SimCost {
+        crate::fft::log2i(n); // validate
+        SimCost { machine, n }
+    }
+
+    pub fn m1(n: usize) -> SimCost {
+        SimCost::new(crate::sim::Machine::m1(), n)
+    }
+
+    pub fn haswell(n: usize) -> SimCost {
+        SimCost::new(crate::sim::Machine::haswell(), n)
+    }
+
+    pub fn machine(&self) -> &crate::sim::Machine {
+        &self.machine
+    }
+}
+
+impl CostModel for SimCost {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.machine.available_edges()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        self.machine.edge_ns(self.n, edge, stage, ctx)
+    }
+}
+
+/// Memoizing wrapper: caches cells, counts distinct measurements.
+pub struct MemoCost<C: CostModel> {
+    inner: C,
+    cache: HashMap<(EdgeType, usize, Context), f64>,
+}
+
+impl<C: CostModel> MemoCost<C> {
+    pub fn new(inner: C) -> Self {
+        MemoCost { inner, cache: HashMap::new() }
+    }
+
+    /// Number of distinct (edge, stage, context) cells measured so far.
+    pub fn measurements(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+}
+
+impl<C: CostModel> CostModel for MemoCost<C> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.inner.available_edges()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        if let Some(&v) = self.cache.get(&(edge, stage, ctx)) {
+            return v;
+        }
+        let v = self.inner.edge_ns(edge, stage, ctx);
+        self.cache.insert((edge, stage, ctx), v);
+        v
+    }
+}
+
+/// A fixed-table cost model (used by tests and for replaying saved
+/// measurement databases).
+pub struct TableCost {
+    pub n: usize,
+    pub edges: Vec<EdgeType>,
+    pub cells: HashMap<(EdgeType, usize, Context), f64>,
+}
+
+impl CostModel for TableCost {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.edges.clone()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        *self
+            .cells
+            .get(&(edge, stage, ctx))
+            .unwrap_or_else(|| panic!("no cell for {edge}@{stage} {ctx}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::Context::Start;
+
+    #[test]
+    fn sim_cost_matches_machine() {
+        let mut c = SimCost::m1(1024);
+        let direct = crate::sim::Machine::m1().edge_ns(1024, EdgeType::R4, 0, Start);
+        assert_eq!(c.edge_ns(EdgeType::R4, 0, Start), direct);
+    }
+
+    #[test]
+    fn memo_counts_distinct_cells() {
+        let mut m = MemoCost::new(SimCost::m1(1024));
+        m.edge_ns(EdgeType::R2, 0, Start);
+        m.edge_ns(EdgeType::R2, 0, Start);
+        m.edge_ns(EdgeType::R2, 1, Start);
+        assert_eq!(m.measurements(), 2);
+    }
+
+    #[test]
+    fn plan_ns_is_contextual_sum() {
+        let mut c = SimCost::m1(1024);
+        let plan = Plan::parse("R4,R4,R4,F16").unwrap();
+        let got = c.plan_ns(&plan);
+        let want = crate::sim::Machine::m1().plan_ns(1024, &plan);
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn haswell_cost_lacks_f32() {
+        let c = SimCost::haswell(1024);
+        assert!(!c.available_edges().contains(&EdgeType::F32));
+    }
+}

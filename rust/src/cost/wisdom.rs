@@ -1,0 +1,201 @@
+//! Wisdom: persistent measurement databases (the FFTW-wisdom analogue).
+//!
+//! Measuring edge weights on real hardware costs milliseconds per cell
+//! (50 trials × 3 runs each); a deployment measures once and reuses. A
+//! [`Wisdom`] file stores every (edge, stage, context) cell for one
+//! (source, n) pair as JSON; [`Wisdom::to_cost`] replays it as a
+//! [`TableCost`] so the planner runs without touching the hardware again —
+//! and so measurement databases can be shipped across machines, exactly
+//! the paper's "re-measure on new hardware, re-run Dijkstra" workflow
+//! with the re-measuring amortized.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::edge::{Context, EdgeType};
+use crate::util::json::{self, Json};
+
+use super::{CostModel, TableCost};
+
+/// A saved measurement database.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wisdom {
+    /// FFT size the cells were measured for.
+    pub n: usize,
+    /// Where the weights came from ("m1", "haswell", "native:<host>", ...).
+    pub source: String,
+    /// (edge, stage, context) -> ns.
+    pub cells: Vec<(EdgeType, usize, Context, f64)>,
+}
+
+impl Wisdom {
+    /// Harvest every graph cell from a cost model (all contexts, all
+    /// positional placements) — the full context-aware database.
+    pub fn harvest<C: CostModel>(cost: &mut C, source: &str) -> Wisdom {
+        let n = cost.n();
+        let l = crate::fft::log2i(n);
+        let mut cells = Vec::new();
+        for e in cost.available_edges() {
+            for s in 0..l {
+                if !crate::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                for ctx in Context::all() {
+                    cells.push((e, s, ctx, cost.edge_ns(e, s, ctx)));
+                }
+            }
+        }
+        Wisdom { n, source: source.to_string(), cells }
+    }
+
+    /// Replayable cost model over the saved cells.
+    pub fn to_cost(&self) -> TableCost {
+        let mut edges: Vec<EdgeType> = self.cells.iter().map(|c| c.0).collect();
+        edges.sort();
+        edges.dedup();
+        TableCost {
+            n: self.n,
+            edges,
+            cells: self
+                .cells
+                .iter()
+                .map(|&(e, s, ctx, ns)| ((e, s, ctx), ns))
+                .collect(),
+        }
+    }
+
+    /// Serialize to the wisdom JSON format.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("format".to_string(), Json::Str("spfft-wisdom-v1".into()));
+        root.insert("n".to_string(), Json::Num(self.n as f64));
+        root.insert("source".to_string(), Json::Str(self.source.clone()));
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|(e, s, ctx, ns)| {
+                let mut o = BTreeMap::new();
+                o.insert("edge".into(), Json::Str(e.name().into()));
+                o.insert("stage".into(), Json::Num(*s as f64));
+                o.insert("ctx".into(), Json::Num(ctx.index() as f64));
+                o.insert("ns".into(), Json::Num(*ns));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("cells".to_string(), Json::Arr(cells));
+        json::to_string(&Json::Obj(root))
+    }
+
+    /// Parse the wisdom JSON format.
+    pub fn from_json(text: &str) -> Result<Wisdom> {
+        let root = json::parse(text).map_err(|e| anyhow!("wisdom: {e}"))?;
+        if root.get("format").as_str() != Some("spfft-wisdom-v1") {
+            bail!("not a spfft wisdom file (format {:?})", root.get("format"));
+        }
+        let n = root.get("n").as_usize().ok_or_else(|| anyhow!("wisdom: bad n"))?;
+        if n < 2 || !n.is_power_of_two() {
+            bail!("wisdom: n = {n} is not a power of two >= 2");
+        }
+        let source = root
+            .get("source")
+            .as_str()
+            .ok_or_else(|| anyhow!("wisdom: missing source"))?
+            .to_string();
+        let mut cells = Vec::new();
+        for c in root.get("cells").as_arr().ok_or_else(|| anyhow!("wisdom: missing cells"))? {
+            let e = c
+                .get("edge")
+                .as_str()
+                .and_then(EdgeType::parse)
+                .ok_or_else(|| anyhow!("wisdom: bad edge {:?}", c.get("edge")))?;
+            let s = c.get("stage").as_usize().ok_or_else(|| anyhow!("wisdom: bad stage"))?;
+            let ctx = c
+                .get("ctx")
+                .as_usize()
+                .and_then(Context::from_index)
+                .ok_or_else(|| anyhow!("wisdom: bad ctx"))?;
+            let ns = c.get("ns").as_f64().ok_or_else(|| anyhow!("wisdom: bad ns"))?;
+            if !ns.is_finite() || ns <= 0.0 {
+                bail!("wisdom: non-positive cell {e}@{s}");
+            }
+            cells.push((e, s, ctx, ns));
+        }
+        if cells.is_empty() {
+            bail!("wisdom: empty cell set");
+        }
+        Ok(Wisdom { n, source, cells })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json()).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Wisdom> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Wisdom::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::SimCost;
+    use crate::plan::Plan;
+    use crate::planner::{plan as run_plan, Strategy};
+
+    #[test]
+    fn harvest_roundtrip_preserves_planning() {
+        let mut cost = SimCost::m1(1024);
+        let w = Wisdom::harvest(&mut cost, "m1");
+        let text = w.to_json();
+        let back = Wisdom::from_json(&text).unwrap();
+        assert_eq!(back, w);
+        // planning over the replayed table matches planning over the model
+        let mut replay = back.to_cost();
+        let ca = run_plan(&mut replay, &Strategy::DijkstraContextAware { k: 1 });
+        assert_eq!(ca.plan, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+    }
+
+    #[test]
+    fn harvest_covers_the_positional_catalog() {
+        let mut cost = SimCost::m1(1024);
+        let w = Wisdom::harvest(&mut cost, "m1");
+        // 37 positional (edge, stage) pairs x 7 contexts
+        assert_eq!(w.cells.len(), 37 * 7);
+        let mut hw = SimCost::haswell(1024);
+        let wh = Wisdom::harvest(&mut hw, "haswell");
+        // radix-only catalog: (10 + 9 + 8) pairs x 7 contexts
+        assert_eq!(wh.cells.len(), 27 * 7);
+    }
+
+    #[test]
+    fn rejects_malformed_wisdom() {
+        assert!(Wisdom::from_json("{}").is_err());
+        assert!(Wisdom::from_json(r#"{"format":"spfft-wisdom-v1","n":7,"source":"x","cells":[]}"#).is_err());
+        assert!(Wisdom::from_json(
+            r#"{"format":"spfft-wisdom-v1","n":8,"source":"x","cells":[]}"#
+        )
+        .is_err());
+        assert!(Wisdom::from_json(
+            r#"{"format":"spfft-wisdom-v1","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"ns":-5}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("spfft-wisdom-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m1.wisdom.json");
+        let mut cost = SimCost::m1(256);
+        let w = Wisdom::harvest(&mut cost, "m1");
+        w.save(&path).unwrap();
+        let back = Wisdom::load(&path).unwrap();
+        assert_eq!(back, w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

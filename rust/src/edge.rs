@@ -1,0 +1,241 @@
+//! The edge catalog of the decomposition graph (paper Table 1).
+//!
+//! | Edge | Stages | NEON regs | Instruction advantage                    |
+//! |------|--------|-----------|------------------------------------------|
+//! | R2   | 1      | 0         | simplest; best for large strides         |
+//! | R4   | 2      | 0         | W_4^1 = -j: swap+negate (free)           |
+//! | R8   | 3      | 0         | W_8^{1,3}: multiply by 1/sqrt(2) only    |
+//! | F8   | 3      | 4         | in-register; zero memory traffic         |
+//! | F16  | 4      | 8         | in-register; NEON 4x4 transpose          |
+//! | F32  | 5      | 16        | in-register; novel (needs 32 registers)  |
+
+use std::fmt;
+
+/// One edge type of the decomposition graph: a radix pass or a fused
+/// register block (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EdgeType {
+    /// Radix-2 pass: 1 stage, memory round trip per pass.
+    R2,
+    /// Radix-4 pass: 2 stages; exploits W_4^1 = -j (swap+negate).
+    R4,
+    /// Radix-8 pass: 3 stages; exploits W_8^{1,3} (scale by 1/sqrt(2)).
+    R8,
+    /// Fused FFT-8 block: 3 stages in 4 vector registers.
+    F8,
+    /// Fused FFT-16 block: 4 stages in 8 vector registers.
+    F16,
+    /// Fused FFT-32 block: 5 stages in 16 vector registers (novel on NEON;
+    /// impossible on AVX2's 16-register file).
+    F32,
+}
+
+/// All edge types in catalog order (matches `T` in paper Eq. 1, minus
+/// the synthetic `start` context).
+pub const ALL_EDGES: [EdgeType; 6] = [
+    EdgeType::R2,
+    EdgeType::R4,
+    EdgeType::R8,
+    EdgeType::F8,
+    EdgeType::F16,
+    EdgeType::F32,
+];
+
+impl EdgeType {
+    /// DIF stage advance of this edge (k in "edge (s, s+k)").
+    pub fn stages(self) -> usize {
+        match self {
+            EdgeType::R2 => 1,
+            EdgeType::R4 => 2,
+            EdgeType::R8 | EdgeType::F8 => 3,
+            EdgeType::F16 => 4,
+            EdgeType::F32 => 5,
+        }
+    }
+
+    /// Whether this edge is a fused register block.
+    pub fn is_fused(self) -> bool {
+        matches!(self, EdgeType::F8 | EdgeType::F16 | EdgeType::F32)
+    }
+
+    /// Block size B of a fused edge (number of points kept in registers).
+    pub fn block_size(self) -> Option<usize> {
+        self.is_fused().then(|| 1usize << self.stages())
+    }
+
+    /// 128-bit NEON vector registers holding live data across the edge's
+    /// internal stages (paper Table 1; radix passes hold none across
+    /// butterflies). Split-complex: B points = 2*B/4 vectors.
+    pub fn neon_data_regs(self) -> usize {
+        match self {
+            EdgeType::R2 | EdgeType::R4 | EdgeType::R8 => 0,
+            EdgeType::F8 => 4,
+            EdgeType::F16 => 8,
+            EdgeType::F32 => 16,
+        }
+    }
+
+    /// Short instruction-advantage description (paper Table 1 column 4).
+    pub fn advantage(self) -> &'static str {
+        match self {
+            EdgeType::R2 => "Simplest; best for large strides",
+            EdgeType::R4 => "W_4^1 = -j: swap+negate (free)",
+            EdgeType::R8 => "W_8^{1,3}: mul by 1/sqrt(2) only",
+            EdgeType::F8 => "In-register; zero memory traffic",
+            EdgeType::F16 => "In-register; NEON 4x4 transpose",
+            EdgeType::F32 => "In-register; novel (needs 32 regs)",
+        }
+    }
+
+    /// Canonical name used across the stack (matches the Python side and
+    /// the artifact manifest): "R2", "R4", "R8", "F8", "F16", "F32".
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeType::R2 => "R2",
+            EdgeType::R4 => "R4",
+            EdgeType::R8 => "R8",
+            EdgeType::F8 => "F8",
+            EdgeType::F16 => "F16",
+            EdgeType::F32 => "F32",
+        }
+    }
+
+    /// Parse a canonical name.
+    pub fn parse(s: &str) -> Option<EdgeType> {
+        ALL_EDGES.iter().copied().find(|e| e.name() == s)
+    }
+
+    /// Compact index in [0, 6) — used to index context tables.
+    pub fn index(self) -> usize {
+        match self {
+            EdgeType::R2 => 0,
+            EdgeType::R4 => 1,
+            EdgeType::R8 => 2,
+            EdgeType::F8 => 3,
+            EdgeType::F16 => 4,
+            EdgeType::F32 => 5,
+        }
+    }
+
+    /// Inverse of [`EdgeType::index`].
+    pub fn from_index(i: usize) -> Option<EdgeType> {
+        ALL_EDGES.get(i).copied()
+    }
+}
+
+impl fmt::Display for EdgeType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Predecessor context of an edge measurement: either the start of the
+/// transform (cold caches / fresh input) or the edge type that ran
+/// immediately before (paper Eq. 1: t_prev in T = {start} ∪ edges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Context {
+    /// No preceding operation (node (s=0, start) in the expanded graph).
+    Start,
+    /// Immediately preceded by an edge of this type.
+    After(EdgeType),
+}
+
+/// Number of distinct contexts: start + 6 edge types (|T| = 7, paper §2.3).
+pub const NUM_CONTEXTS: usize = 7;
+
+impl Context {
+    /// Compact index in [0, 7): 0 = start, 1.. = edge index + 1.
+    pub fn index(self) -> usize {
+        match self {
+            Context::Start => 0,
+            Context::After(e) => e.index() + 1,
+        }
+    }
+
+    /// Inverse of [`Context::index`].
+    pub fn from_index(i: usize) -> Option<Context> {
+        match i {
+            0 => Some(Context::Start),
+            _ => EdgeType::from_index(i - 1).map(Context::After),
+        }
+    }
+
+    /// All contexts, start first.
+    pub fn all() -> impl Iterator<Item = Context> {
+        (0..NUM_CONTEXTS).map(|i| Context::from_index(i).unwrap())
+    }
+}
+
+impl fmt::Display for Context {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Context::Start => f.write_str("start"),
+            Context::After(e) => write!(f, "after-{e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_advances_match_table1() {
+        let expect = [("R2", 1), ("R4", 2), ("R8", 3), ("F8", 3), ("F16", 4), ("F32", 5)];
+        for (name, k) in expect {
+            assert_eq!(EdgeType::parse(name).unwrap().stages(), k);
+        }
+    }
+
+    #[test]
+    fn block_sizes() {
+        assert_eq!(EdgeType::F8.block_size(), Some(8));
+        assert_eq!(EdgeType::F16.block_size(), Some(16));
+        assert_eq!(EdgeType::F32.block_size(), Some(32));
+        assert_eq!(EdgeType::R8.block_size(), None);
+    }
+
+    #[test]
+    fn neon_regs_match_table1() {
+        assert_eq!(EdgeType::F8.neon_data_regs(), 4);
+        assert_eq!(EdgeType::F16.neon_data_regs(), 8);
+        assert_eq!(EdgeType::F32.neon_data_regs(), 16);
+        assert_eq!(EdgeType::R4.neon_data_regs(), 0);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for e in ALL_EDGES {
+            assert_eq!(EdgeType::parse(e.name()), Some(e));
+        }
+        assert_eq!(EdgeType::parse("R16"), None);
+        assert_eq!(EdgeType::parse(""), None);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, e) in ALL_EDGES.iter().enumerate() {
+            assert_eq!(e.index(), i);
+            assert_eq!(EdgeType::from_index(i), Some(*e));
+        }
+        assert_eq!(EdgeType::from_index(6), None);
+    }
+
+    #[test]
+    fn context_index_roundtrip() {
+        let all: Vec<Context> = Context::all().collect();
+        assert_eq!(all.len(), NUM_CONTEXTS);
+        for (i, c) in all.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(Context::from_index(i), Some(*c));
+        }
+        assert_eq!(Context::from_index(7), None);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(EdgeType::F16.to_string(), "F16");
+        assert_eq!(Context::Start.to_string(), "start");
+        assert_eq!(Context::After(EdgeType::R4).to_string(), "after-R4");
+    }
+}

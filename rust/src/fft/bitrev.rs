@@ -1,0 +1,83 @@
+//! Bit-reversal permutation (final reordering after DIF stages).
+//!
+//! Excluded from the paper's FLOP count (5·N·log2 N counts butterfly work
+//! only); included in the full-arrangement executables so outputs match
+//! the natural-order DFT.
+
+use super::log2i;
+
+/// Bit-reversed index table for length n (power of two).
+pub fn bit_reverse_indices(n: usize) -> Vec<usize> {
+    let l = log2i(n);
+    let mut rev = vec![0usize; n];
+    for (i, r) in rev.iter_mut().enumerate() {
+        *r = if l == 0 { 0 } else { i.reverse_bits() >> (usize::BITS as usize - l) };
+    }
+    rev
+}
+
+/// In-place bit-reversal permutation of a split-complex buffer.
+pub fn bit_reverse_permute(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    let l = log2i(n);
+    if l == 0 {
+        return;
+    }
+    let shift = usize::BITS as usize - l;
+    for i in 0..n {
+        let j = i.reverse_bits() >> shift;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_involutive_permutation() {
+        for n in [1usize, 2, 8, 64, 1024] {
+            let idx = bit_reverse_indices(n);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+            for i in 0..n {
+                assert_eq!(idx[idx[i]], i);
+            }
+        }
+    }
+
+    #[test]
+    fn known_small_case() {
+        assert_eq!(bit_reverse_indices(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn permute_matches_indices() {
+        let n = 64;
+        let idx = bit_reverse_indices(n);
+        let mut re: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut im: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        bit_reverse_permute(&mut re, &mut im);
+        for i in 0..n {
+            assert_eq!(re[i], idx[i] as f32);
+            assert_eq!(im[i], -(idx[i] as f32));
+        }
+    }
+
+    #[test]
+    fn double_permute_is_identity() {
+        let n = 128;
+        let orig: Vec<f32> = (0..n).map(|i| (i * 3) as f32).collect();
+        let mut re = orig.clone();
+        let mut im = orig.clone();
+        bit_reverse_permute(&mut re, &mut im);
+        bit_reverse_permute(&mut re, &mut im);
+        assert_eq!(re, orig);
+        assert_eq!(im, orig);
+    }
+}

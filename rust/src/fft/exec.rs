@@ -1,0 +1,213 @@
+//! Plan executor: compile a [`Plan`] against a twiddle cache, then run it
+//! repeatedly over split-complex buffers (the native-path hot loop).
+//!
+//! Compilation resolves every edge's twiddle vectors once; execution is
+//! allocation-free. This is what the `NativeCost` provider times and what
+//! the coordinator's native backend serves requests with.
+
+use std::sync::Arc;
+
+use super::fused::{fused16, fused32, fused8, fused_twiddles};
+use super::passes::{radix2, radix4, radix8};
+use super::twiddle::{TwiddleCache, TwiddleVec};
+use super::{log2i, SplitComplex};
+use crate::edge::EdgeType;
+use crate::plan::Plan;
+
+/// One compiled step: edge + stage + resolved twiddles.
+#[derive(Debug, Clone)]
+pub struct CompiledStep {
+    pub edge: EdgeType,
+    pub stage: usize,
+    tw: Vec<Arc<TwiddleVec>>,
+}
+
+/// A plan compiled for a fixed n: ready-to-run steps + optional bitrev.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    pub n: usize,
+    pub plan: Plan,
+    pub bitrev: bool,
+    steps: Vec<CompiledStep>,
+}
+
+/// Compile a single edge at (n, stage) — shared by plan compilation and
+/// the per-edge measurement path.
+pub fn compile_step(
+    cache: &mut TwiddleCache,
+    n: usize,
+    edge: EdgeType,
+    stage: usize,
+) -> CompiledStep {
+    let m = n >> stage;
+    assert!(
+        m >= (1 << edge.stages()),
+        "{edge} at stage {stage} invalid for n={n}"
+    );
+    let tw = match edge {
+        EdgeType::R2 => vec![cache.vector(m, m / 2, 1)],
+        EdgeType::R4 => vec![
+            cache.vector(m, m / 4, 1),
+            cache.vector(m, m / 4, 2),
+            cache.vector(m, m / 4, 3),
+        ],
+        EdgeType::R8 => vec![
+            cache.vector(m, m / 8, 1),
+            cache.vector(m, m / 8, 2),
+            cache.vector(m, m / 8, 4),
+        ],
+        EdgeType::F8 => fused_twiddles(cache, n, stage, 8),
+        EdgeType::F16 => fused_twiddles(cache, n, stage, 16),
+        EdgeType::F32 => fused_twiddles(cache, n, stage, 32),
+    };
+    CompiledStep { edge, stage, tw }
+}
+
+/// Run one compiled step in place.
+pub fn run_step(step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
+    match step.edge {
+        EdgeType::R2 => radix2(re, im, step.stage, &step.tw[0]),
+        EdgeType::R4 => radix4(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
+        EdgeType::R8 => radix8(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
+        EdgeType::F8 => fused8(re, im, step.stage, &step.tw),
+        EdgeType::F16 => fused16(re, im, step.stage, &step.tw),
+        EdgeType::F32 => fused32(re, im, step.stage, &step.tw),
+    }
+}
+
+impl CompiledPlan {
+    /// Steps in execution order.
+    pub fn steps(&self) -> &[CompiledStep] {
+        &self.steps
+    }
+
+    /// Execute in place (bitrev applied last if compiled with it).
+    pub fn run(&self, re: &mut [f32], im: &mut [f32]) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        for step in &self.steps {
+            run_step(step, re, im);
+        }
+        if self.bitrev {
+            super::bitrev::bit_reverse_permute(re, im);
+        }
+    }
+
+    /// Convenience: run on a copy.
+    pub fn run_on(&self, input: &SplitComplex) -> SplitComplex {
+        let mut out = input.clone();
+        self.run(&mut out.re, &mut out.im);
+        out
+    }
+}
+
+/// Executor: owns the twiddle cache, compiles plans and single edges.
+#[derive(Debug, Default)]
+pub struct Executor {
+    cache: TwiddleCache,
+}
+
+impl Executor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compile `plan` for n-point transforms (panics on invalid plans —
+    /// validity is the planner's contract; see `Plan::is_valid_for`).
+    pub fn compile(&mut self, plan: &Plan, n: usize, bitrev: bool) -> CompiledPlan {
+        let l = log2i(n);
+        assert!(plan.is_valid_for(l), "plan {plan} invalid for n={n}");
+        let steps = plan
+            .steps()
+            .into_iter()
+            .map(|(edge, stage)| compile_step(&mut self.cache, n, edge, stage))
+            .collect();
+        CompiledPlan { n, plan: plan.clone(), bitrev, steps }
+    }
+
+    /// Compile a single edge (for per-edge measurement).
+    pub fn compile_edge(&mut self, n: usize, edge: EdgeType, stage: usize) -> CompiledStep {
+        compile_step(&mut self.cache, n, edge, stage)
+    }
+
+    pub fn twiddle_cache(&mut self) -> &mut TwiddleCache {
+        &mut self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::{dft_naive, fft_ref};
+    use crate::plan::table3_arrangements;
+
+    #[test]
+    fn all_table3_plans_compute_the_same_fft() {
+        let n = 1024;
+        let input = SplitComplex::random(n, 2024);
+        let want = fft_ref(&input);
+        let scale = want.max_abs().max(1.0);
+        let mut ex = Executor::new();
+        for row in table3_arrangements() {
+            let cp = ex.compile(&row.plan, n, true);
+            let got = cp.run_on(&input);
+            let err = got.max_abs_diff(&want) / scale;
+            assert!(err < 5e-5, "{}: rel err {err}", row.key);
+        }
+    }
+
+    #[test]
+    fn compiled_plan_matches_naive_dft_small() {
+        let n = 64;
+        let input = SplitComplex::random(n, 7);
+        let want = dft_naive(&input);
+        let scale = want.max_abs().max(1.0);
+        let mut ex = Executor::new();
+        for plan_str in ["R2,R2,R2,R2,R2,R2", "R4,R4,R2,R2", "R8,F8", "R2,F32", "F8,F8"] {
+            let plan = Plan::parse(plan_str).unwrap();
+            let cp = ex.compile(&plan, n, true);
+            let got = cp.run_on(&input);
+            let err = got.max_abs_diff(&want) / scale;
+            assert!(err < 1e-4, "{plan_str}: rel err {err}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid")]
+    fn invalid_plan_rejected() {
+        let mut ex = Executor::new();
+        ex.compile(&Plan::parse("R2,R2").unwrap(), 1024, true);
+    }
+
+    #[test]
+    fn without_bitrev_output_is_bit_reversed() {
+        let n = 32;
+        let input = SplitComplex::random(n, 3);
+        let mut ex = Executor::new();
+        let plan = Plan::parse("R2,R2,R2,R2,R2").unwrap();
+        let a = ex.compile(&plan, n, false).run_on(&input);
+        let mut b = ex.compile(&plan, n, true).run_on(&input);
+        super::super::bitrev::bit_reverse_permute(&mut b.re, &mut b.im);
+        // bitrev is involutive, so un-reversing the bitrev'd output matches.
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn twiddles_shared_across_plans() {
+        let mut ex = Executor::new();
+        let p1 = Plan::parse("R2,R2,R2,R2,R2,R2,R2,R2,R2,R2").unwrap();
+        ex.compile(&p1, 1024, true);
+        let before = ex.twiddle_cache().entries();
+        ex.compile(&p1, 1024, true); // recompile: all cache hits
+        assert_eq!(ex.twiddle_cache().entries(), before);
+    }
+
+    #[test]
+    fn run_is_deterministic() {
+        let n = 256;
+        let input = SplitComplex::random(n, 55);
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R4,R2,R2").unwrap(), n, true);
+        assert_eq!(cp.run_on(&input), cp.run_on(&input));
+    }
+}

@@ -1,0 +1,367 @@
+//! Fused register blocks FFT-8 / FFT-16 / FFT-32 (paper §3.2, Table 2).
+//!
+//! A fused block of size B gathers the B-point group
+//! { base + j + k·(m/B) : k ∈ [0,B) } into locals ("registers"), runs the
+//! whole log2(B)-stage butterfly network on them, and scatters once — one
+//! memory round trip for log2(B) stages instead of log2(B) round trips.
+//!
+//! Sub-stage r pairs lanes k and k + B>>(r+1); its twiddle separates into
+//! W_m^{2^r j} (j-vector) × W_{B>>r}^{k'} (lane constant). Both factors
+//! are **pre-combined at plan-compile time** into one (half_r × e) table
+//! per sub-stage (`fused_twiddles`) — the exact analogue of the Pallas
+//! kernels' trace-time tables, and of the immediates the paper's NEON
+//! code bakes into registers. (§Perf log: an earlier version computed the
+//! lane constants with `cos`/`sin` per butterfly at run time, making
+//! fused blocks 5–10× slower than radix chains and inverting the paper's
+//! premise on the native path.)
+//!
+//! The FFT-32 block mirrors the paper's novel NEON contribution; on real
+//! NEON it spills (working set > 32 registers), which the timing
+//! simulator charges (sim/compute.rs) and the graph search therefore
+//! avoids, reproducing the paper's FFT-8 > FFT-32 inversion.
+
+use std::sync::Arc;
+
+use super::twiddle::TwiddleVec;
+
+#[inline(always)]
+fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+    (ar * br - ai * bi, ar * bi + ai * br)
+}
+
+/// Tile width: groups processed together so the butterfly arithmetic
+/// vectorizes across them (the scalar-code analogue of the paper's
+/// process-4-butterflies-per-NEON-instruction structure).
+const TILE: usize = 8;
+
+/// Generic fused block over B complex locals. `wt[r]` must be the
+/// combined sub-stage table from [`fused_twiddles`]: entry `k*e + j` is
+/// W_m^{2^r j} · W_{B>>r}^{k} for k ∈ [0, (B>>r)/2), j ∈ [0, e).
+///
+/// §Perf: groups are processed in tiles of [`TILE`] — consecutive j
+/// mid-path, consecutive blocks at the terminal position (where every
+/// group shares the j = 0 twiddles) — so the inner butterflies vectorize
+/// across the tile instead of running one scalar network per group.
+fn fused_generic<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let n = re.len();
+    let m = n >> stage;
+    let lb = B.trailing_zeros() as usize;
+    debug_assert!(m >= B, "F{B} at stage {stage} invalid for n={n}");
+    debug_assert_eq!(wt.len(), lb);
+    let e = m / B;
+    if e == 1 {
+        // Terminal: every group is a contiguous B-point block with j = 0.
+        // Tile across blocks; the twiddle is constant per (r, k).
+        let mut base = 0;
+        while base + TILE * B <= n {
+            fused_tile_terminal::<B>(re, im, base, wt);
+            base += TILE * B;
+        }
+        while base < n {
+            fused_group_scalar::<B>(re, im, base, 0, 1, wt);
+            base += B;
+        }
+        return;
+    }
+    let mut base = 0;
+    while base < n {
+        let mut j = 0;
+        while j + TILE <= e {
+            fused_tile_mid::<B>(re, im, base, j, e, wt);
+            j += TILE;
+        }
+        while j < e {
+            fused_group_scalar::<B>(re, im, base, j, e, wt);
+            j += 1;
+        }
+        base += m;
+    }
+}
+
+/// One group, scalar (remainder path).
+#[inline(always)]
+fn fused_group_scalar<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    base: usize,
+    j: usize,
+    e: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [0f32; B];
+    let mut xi = [0f32; B];
+    for k in 0..B {
+        xr[k] = re[base + j + k * e];
+        xi[k] = im[base + j + k * e];
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let wr = w.re[k * e + j];
+                let wi = w.im[k * e + j];
+                let (a, b) = (off + k, off + k + half);
+                let (tr, ti) = (xr[a] + xr[b], xi[a] + xi[b]);
+                let (dr, di) = (xr[a] - xr[b], xi[a] - xi[b]);
+                let (pr, pi) = cmul(dr, di, wr, wi);
+                xr[a] = tr;
+                xi[a] = ti;
+                xr[b] = pr;
+                xi[b] = pi;
+            }
+        }
+    }
+    for k in 0..B {
+        re[base + j + k * e] = xr[k];
+        im[base + j + k * e] = xi[k];
+    }
+}
+
+/// TILE consecutive-j groups of one block, vectorized across j.
+#[inline(always)]
+fn fused_tile_mid<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    base: usize,
+    j0: usize,
+    e: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [[0f32; TILE]; B];
+    let mut xi = [[0f32; TILE]; B];
+    for k in 0..B {
+        let s = base + j0 + k * e;
+        xr[k].copy_from_slice(&re[s..s + TILE]);
+        xi[k].copy_from_slice(&im[s..s + TILE]);
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let wrow = k * e + j0;
+                let wr = &w.re[wrow..wrow + TILE];
+                let wi = &w.im[wrow..wrow + TILE];
+                let (a, b) = (off + k, off + k + half);
+                // split_at_mut dance to hold two lanes mutably
+                let (ra, rb) = lane_pair(&mut xr, a, b);
+                let (ia, ib) = lane_pair(&mut xi, a, b);
+                for t in 0..TILE {
+                    let (tr, ti) = (ra[t] + rb[t], ia[t] + ib[t]);
+                    let (dr, di) = (ra[t] - rb[t], ia[t] - ib[t]);
+                    let (pr, pi) = cmul(dr, di, wr[t], wi[t]);
+                    ra[t] = tr;
+                    ia[t] = ti;
+                    rb[t] = pr;
+                    ib[t] = pi;
+                }
+            }
+        }
+    }
+    for k in 0..B {
+        let s = base + j0 + k * e;
+        re[s..s + TILE].copy_from_slice(&xr[k]);
+        im[s..s + TILE].copy_from_slice(&xi[k]);
+    }
+}
+
+/// TILE consecutive terminal blocks, vectorized across blocks (the
+/// "in-register transpose" trick: point k of block t sits at t*B + k).
+#[inline(always)]
+fn fused_tile_terminal<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    base: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [[0f32; TILE]; B];
+    let mut xi = [[0f32; TILE]; B];
+    for t in 0..TILE {
+        for k in 0..B {
+            xr[k][t] = re[base + t * B + k];
+            xi[k][t] = im[base + t * B + k];
+        }
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let wr = w.re[k]; // e == 1: one entry per k
+                let wi = w.im[k];
+                let (a, b) = (off + k, off + k + half);
+                let (ra, rb) = lane_pair(&mut xr, a, b);
+                let (ia, ib) = lane_pair(&mut xi, a, b);
+                for t in 0..TILE {
+                    let (tr, ti) = (ra[t] + rb[t], ia[t] + ib[t]);
+                    let (dr, di) = (ra[t] - rb[t], ia[t] - ib[t]);
+                    let (pr, pi) = cmul(dr, di, wr, wi);
+                    ra[t] = tr;
+                    ia[t] = ti;
+                    rb[t] = pr;
+                    ib[t] = pi;
+                }
+            }
+        }
+    }
+    for t in 0..TILE {
+        for k in 0..B {
+            re[base + t * B + k] = xr[k][t];
+            im[base + t * B + k] = xi[k][t];
+        }
+    }
+}
+
+/// Disjoint mutable refs to two lanes of the tile array (a < b).
+#[inline(always)]
+fn lane_pair<const B: usize>(
+    x: &mut [[f32; TILE]; B],
+    a: usize,
+    b: usize,
+) -> (&mut [f32; TILE], &mut [f32; TILE]) {
+    debug_assert!(a < b);
+    let (lo, hi) = x.split_at_mut(b);
+    (&mut lo[a], &mut hi[0])
+}
+
+/// Fused FFT-8 block (3 stages, 4 NEON data registers).
+pub fn fused8(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    fused_generic::<8>(re, im, stage, wt);
+}
+
+/// Fused FFT-16 block (4 stages, 8 NEON data registers).
+pub fn fused16(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    fused_generic::<16>(re, im, stage, wt);
+}
+
+/// Fused FFT-32 block (5 stages, 16 NEON data registers — novel; loses to
+/// FFT-8 on real NEON from twiddle spills, paper Table 2).
+pub fn fused32(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    fused_generic::<32>(re, im, stage, wt);
+}
+
+/// Combined per-sub-stage twiddle tables for a fused-B block at (n, stage):
+/// table r holds W_m^{2^r j} · W_{B>>r}^{k} at index `k*e + j`
+/// (k < (B>>r)/2, j < e = m/B). Computed once, cached, shared by plans.
+pub fn fused_twiddles(
+    cache: &mut super::TwiddleCache,
+    n: usize,
+    stage: usize,
+    b: usize,
+) -> Vec<Arc<TwiddleVec>> {
+    let m = n >> stage;
+    let lb = b.trailing_zeros() as usize;
+    let e = m / b;
+    (0..lb)
+        .map(|r| cache.fused_table(m, e, b >> r, 1 << r))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::apply_radix2_stages_ref;
+    use crate::fft::{SplitComplex, TwiddleCache};
+
+    fn check(b: usize, n: usize, stage: usize, seed: u64) {
+        let input = SplitComplex::random(n, seed);
+        let mut got = input.clone();
+        let mut cache = TwiddleCache::new();
+        let wt = fused_twiddles(&mut cache, n, stage, b);
+        match b {
+            8 => fused8(&mut got.re, &mut got.im, stage, &wt),
+            16 => fused16(&mut got.re, &mut got.im, stage, &wt),
+            32 => fused32(&mut got.re, &mut got.im, stage, &wt),
+            _ => unreachable!(),
+        }
+        let lb = b.trailing_zeros() as usize;
+        let want = apply_radix2_stages_ref(&input, stage, lb);
+        let scale = want.max_abs().max(1.0);
+        let err = got.max_abs_diff(&want) / scale;
+        assert!(err < 2e-5, "F{b} n={n} stage={stage}: rel err {err}");
+    }
+
+    #[test]
+    fn fused8_matches_reference_all_stages() {
+        for n in [8usize, 64, 1024] {
+            for stage in 0..=(crate::fft::log2i(n).saturating_sub(3)) {
+                if n >> (stage + 3) >= 1 {
+                    check(8, n, stage, 31 + stage as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused16_matches_reference_all_stages() {
+        for n in [16usize, 256, 1024] {
+            for stage in 0..=(crate::fft::log2i(n).saturating_sub(4)) {
+                check(16, n, stage, 77 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn fused32_matches_reference_all_stages() {
+        for n in [32usize, 256, 1024] {
+            for stage in 0..=(crate::fft::log2i(n).saturating_sub(5)) {
+                check(32, n, stage, 123 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn fused8_equals_radix8_pass() {
+        // Same transform, different instruction strategy (paper Table 1).
+        let n = 512;
+        let stage = 2;
+        let input = SplitComplex::random(n, 8);
+        let mut cache = TwiddleCache::new();
+
+        let mut a = input.clone();
+        let wt = fused_twiddles(&mut cache, n, stage, 8);
+        fused8(&mut a.re, &mut a.im, stage, &wt);
+
+        let mut b = input.clone();
+        let m = n >> stage;
+        let (w1, w2, w4) = (
+            cache.vector(m, m / 8, 1),
+            cache.vector(m, m / 8, 2),
+            cache.vector(m, m / 8, 4),
+        );
+        crate::fft::passes::radix8(&mut b.re, &mut b.im, stage, &w1, &w2, &w4);
+        assert!(a.max_abs_diff(&b) / b.max_abs().max(1.0) < 1e-5);
+    }
+
+    #[test]
+    fn terminal_block_is_contiguous() {
+        // At the terminal stage, e = 1 and the block covers contiguous points.
+        let n = 64;
+        let stage = 3; // remaining stages = 3 => F8 terminal
+        check(8, n, stage, 4);
+    }
+
+    #[test]
+    fn combined_tables_have_expected_shapes() {
+        let mut cache = TwiddleCache::new();
+        let wt = fused_twiddles(&mut cache, 1024, 2, 8); // m=256, e=32
+        assert_eq!(wt.len(), 3);
+        assert_eq!(wt[0].len(), 4 * 32); // half=4 lanes x e=32
+        assert_eq!(wt[1].len(), 2 * 32);
+        assert_eq!(wt[2].len(), 32);
+        // entry (k=0, j=0) is W^0 = 1 for every sub-stage
+        for w in &wt {
+            assert!((w.re[0] - 1.0).abs() < 1e-7);
+            assert!(w.im[0].abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Native split-complex FFT substrate.
+//!
+//! Implements every edge type of the decomposition graph (paper Table 1) as
+//! real, runnable Rust code over split-complex `f32` buffers — the same
+//! butterfly algebra as the Layer-1 Pallas kernels:
+//!
+//! * [`passes`] — radix-2/4/8 DIF passes (memory → butterflies → memory);
+//! * [`fused`] — fused FFT-8/16/32 register blocks (gather once, run
+//!   log2(B) stages in locals, scatter once);
+//! * [`twiddle`] — cached twiddle-factor tables;
+//! * [`bitrev`] — bit-reversal permutation;
+//! * [`exec`] — the plan executor (compiled plans over a twiddle cache);
+//! * [`reference`] — O(n²) f64 DFT used as ground truth in tests.
+//!
+//! Three roles in the system: correctness cross-check for the PJRT
+//! artifacts, the *live-measured* edge-weight source for
+//! [`crate::cost::NativeCost`] (the paper's protocol on this host), and the
+//! per-pass profile of Table 4.
+
+pub mod bitrev;
+pub mod exec;
+pub mod fused;
+pub mod passes;
+pub mod reference;
+pub mod twiddle;
+
+pub use bitrev::{bit_reverse_indices, bit_reverse_permute};
+pub use exec::{CompiledPlan, Executor};
+pub use twiddle::TwiddleCache;
+
+/// Split-complex buffer: separate re/im arrays (paper §3.1: enables
+/// unit-stride vector loads).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitComplex {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl SplitComplex {
+    pub fn zeros(n: usize) -> Self {
+        SplitComplex { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    pub fn from_parts(re: Vec<f32>, im: Vec<f32>) -> Self {
+        assert_eq!(re.len(), im.len());
+        SplitComplex { re, im }
+    }
+
+    /// Deterministic standard-normal test vector.
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut v = SplitComplex::zeros(n);
+        rng.fill_normal_f32(&mut v.re);
+        rng.fill_normal_f32(&mut v.im);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Max absolute difference against another buffer. NaN anywhere in
+    /// either buffer yields infinity (NaN must never pass a tolerance
+    /// check — a disagreeing-NaN bug once slipped through `f32::max`'s
+    /// NaN-ignoring semantics).
+    pub fn max_abs_diff(&self, other: &SplitComplex) -> f32 {
+        assert_eq!(self.len(), other.len());
+        let mut m = 0f32;
+        for i in 0..self.len() {
+            let dr = (self.re[i] - other.re[i]).abs();
+            let di = (self.im[i] - other.im[i]).abs();
+            if dr.is_nan() || di.is_nan() {
+                return f32::INFINITY;
+            }
+            m = m.max(dr).max(di);
+        }
+        m
+    }
+
+    /// L-inf norm of the buffer (for relative-error scaling).
+    pub fn max_abs(&self) -> f32 {
+        let mut m = 0f32;
+        for i in 0..self.len() {
+            m = m.max(self.re[i].abs()).max(self.im[i].abs());
+        }
+        m
+    }
+}
+
+/// Exact integer log2; panics on non-powers-of-two.
+pub fn log2i(n: usize) -> usize {
+    assert!(n.is_power_of_two() && n > 0, "{n} is not a positive power of two");
+    n.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_complex_roundtrip() {
+        let v = SplitComplex::random(64, 1);
+        assert_eq!(v.len(), 64);
+        assert_eq!(v.max_abs_diff(&v), 0.0);
+        assert!(v.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn log2i_powers() {
+        assert_eq!(log2i(1), 0);
+        assert_eq!(log2i(1024), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2i_rejects_non_power() {
+        log2i(48);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        assert_eq!(SplitComplex::random(32, 7), SplitComplex::random(32, 7));
+        assert_ne!(SplitComplex::random(32, 7), SplitComplex::random(32, 8));
+    }
+}

@@ -1,0 +1,308 @@
+//! Radix-2 / radix-4 / radix-8 DIF passes over split-complex buffers.
+//!
+//! Same butterfly algebra as the Pallas kernels (python/compile/kernels/
+//! passes.py), with the paper's instruction tricks:
+//!
+//! * radix-4: W_4^1 = -j as swap+negate;
+//! * radix-8: W_8^{1,3} = (1∓j)/√2 as one 1/√2 scale plus add/sub.
+//!
+//! Each pass reads the whole array and writes it back — the memory round
+//! trip per pass is the defining cost of non-fused edges (paper Table 1).
+
+use super::twiddle::TwiddleVec;
+
+pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+#[inline(always)]
+fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+    (ar * br - ai * bi, ar * bi + ai * br)
+}
+
+/// Radix-2 DIF pass at `stage`: block size m = n >> stage.
+///
+/// `w1` must be W_m^j for j in [0, m/2).
+pub fn radix2(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 2, "R2 at stage {stage} invalid for n={n}");
+    let half = m / 2;
+    debug_assert_eq!(w1.len(), half);
+    let mut base = 0;
+    while base < n {
+        let (top, rest) = re[base..base + m].split_at_mut(half);
+        let bot = rest;
+        let (topi, resti) = im[base..base + m].split_at_mut(half);
+        let boti = resti;
+        for j in 0..half {
+            let (tr, ti) = (top[j], topi[j]);
+            let (br, bi) = (bot[j], boti[j]);
+            let (sr, si) = (tr + br, ti + bi);
+            let (dr, di) = (tr - br, ti - bi);
+            let (pr, pi) = cmul(dr, di, w1.re[j], w1.im[j]);
+            top[j] = sr;
+            topi[j] = si;
+            bot[j] = pr;
+            boti[j] = pi;
+        }
+        base += m;
+    }
+}
+
+/// Radix-4 DIF pass at `stage` (advances 2 stages).
+///
+/// `w1`/`w2`/`w3` must be W_m^{j}, W_m^{2j}, W_m^{3j} for j in [0, m/4).
+pub fn radix4(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 4, "R4 at stage {stage} invalid for n={n}");
+    let q = m / 4;
+    debug_assert_eq!(w1.len(), q);
+    // §Perf: quarter-slice views give the compiler exact lengths, eliding
+    // bounds checks and auto-vectorizing the j loop.
+    let (w1r, w1i) = (&w1.re[..q], &w1.im[..q]);
+    let (w2r, w2i) = (&w2.re[..q], &w2.im[..q]);
+    let (w3r, w3i) = (&w3.re[..q], &w3.im[..q]);
+    let mut base = 0;
+    while base < n {
+        let (q0r, rest) = re[base..base + m].split_at_mut(q);
+        let (q1r, rest) = rest.split_at_mut(q);
+        let (q2r, q3r) = rest.split_at_mut(q);
+        let (q0i, rest) = im[base..base + m].split_at_mut(q);
+        let (q1i, rest) = rest.split_at_mut(q);
+        let (q2i, q3i) = rest.split_at_mut(q);
+        for j in 0..q {
+            let (ar, ai) = (q0r[j], q0i[j]);
+            let (br, bi) = (q1r[j], q1i[j]);
+            let (cr, ci) = (q2r[j], q2i[j]);
+            let (dr, di) = (q3r[j], q3i[j]);
+            let (t0r, t0i) = (ar + cr, ai + ci);
+            let (t1r, t1i) = (ar - cr, ai - ci);
+            let (t2r, t2i) = (br + dr, bi + di);
+            // t3 = -j*(b - d): swap + negate (W_4^1 trick, zero multiplies)
+            let (t3r, t3i) = (bi - di, -(br - dr));
+            q0r[j] = t0r + t2r;
+            q0i[j] = t0i + t2i;
+            let (y1r, y1i) = cmul(t0r - t2r, t0i - t2i, w2r[j], w2i[j]);
+            q1r[j] = y1r;
+            q1i[j] = y1i;
+            let (y2r, y2i) = cmul(t1r + t3r, t1i + t3i, w1r[j], w1i[j]);
+            q2r[j] = y2r;
+            q2i[j] = y2i;
+            let (y3r, y3i) = cmul(t1r - t3r, t1i - t3i, w3r[j], w3i[j]);
+            q3r[j] = y3r;
+            q3i[j] = y3i;
+        }
+        base += m;
+    }
+}
+
+/// Multiply by W_8^k using only 1/√2 scaling + add/sub (paper trick).
+#[inline(always)]
+fn w8_rotate(xr: f32, xi: f32, k: usize) -> (f32, f32) {
+    match k {
+        0 => (xr, xi),
+        1 => ((xr + xi) * INV_SQRT2, (xi - xr) * INV_SQRT2), // (1-j)/√2
+        2 => (xi, -xr),                                      // -j
+        3 => ((xi - xr) * INV_SQRT2, -(xr + xi) * INV_SQRT2), // -(1+j)/√2
+        _ => unreachable!(),
+    }
+}
+
+/// Radix-8 DIF pass at `stage` (advances 3 stages).
+///
+/// `w1`/`w2`/`w4` must be W_m^{j}, W_m^{2j}, W_m^{4j} for j in [0, m/8).
+pub fn radix8(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 8, "R8 at stage {stage} invalid for n={n}");
+    let e = m / 8;
+    debug_assert_eq!(w1.len(), e);
+    // §Perf: eighth-slice views elide bounds checks; the j loop then
+    // auto-vectorizes (same treatment as radix4).
+    let (w1r, w1i) = (&w1.re[..e], &w1.im[..e]);
+    let (w2r, w2i) = (&w2.re[..e], &w2.im[..e]);
+    let (w4r, w4i) = (&w4.re[..e], &w4.im[..e]);
+    let mut base = 0;
+    while base < n {
+        let mut rs: [&mut [f32]; 8] = split8(&mut re[base..base + m], e);
+        let mut is_: [&mut [f32]; 8] = split8(&mut im[base..base + m], e);
+        for j in 0..e {
+            // Load the 8-point group — the paper's finding 2: this working
+            // set (8 complex = 16 NEON vectors with temporaries) is what
+            // creates register pressure on 128-bit NEON.
+            let mut xr = [0f32; 8];
+            let mut xi = [0f32; 8];
+            for k in 0..8 {
+                xr[k] = rs[k][j];
+                xi[k] = is_[k][j];
+            }
+            // Stage A: pairs (k, k+4); twiddle W_m^j * W_8^k on low halves.
+            let mut yr = [0f32; 8];
+            let mut yi = [0f32; 8];
+            for k in 0..4 {
+                yr[k] = xr[k] + xr[k + 4];
+                yi[k] = xi[k] + xi[k + 4];
+                let (dr, di) = (xr[k] - xr[k + 4], xi[k] - xi[k + 4]);
+                let (pr, pi) = cmul(dr, di, w1r[j], w1i[j]);
+                let (rr, ri) = w8_rotate(pr, pi, k);
+                yr[k + 4] = rr;
+                yi[k + 4] = ri;
+            }
+            // Stage B: pairs (k, k+2) within halves; W_m^{2j} * W_4^{k mod 2}.
+            let mut zr = [0f32; 8];
+            let mut zi = [0f32; 8];
+            for half in [0usize, 4] {
+                for k in 0..2 {
+                    let a = half + k;
+                    let b = half + k + 2;
+                    zr[a] = yr[a] + yr[b];
+                    zi[a] = yi[a] + yi[b];
+                    let (dr, di) = (yr[a] - yr[b], yi[a] - yi[b]);
+                    let (mut pr, mut pi) = cmul(dr, di, w2r[j], w2i[j]);
+                    if k == 1 {
+                        // W_4^1 = -j: swap + negate
+                        let t = pr;
+                        pr = pi;
+                        pi = -t;
+                    }
+                    zr[b] = pr;
+                    zi[b] = pi;
+                }
+            }
+            // Stage C: adjacent pairs; twiddle W_m^{4j}.
+            for k in [0usize, 2, 4, 6] {
+                let (ar, ai) = (zr[k], zi[k]);
+                let (br, bi) = (zr[k + 1], zi[k + 1]);
+                rs[k][j] = ar + br;
+                is_[k][j] = ai + bi;
+                let (pr, pi) = cmul(ar - br, ai - bi, w4r[j], w4i[j]);
+                rs[k + 1][j] = pr;
+                is_[k + 1][j] = pi;
+            }
+        }
+        base += m;
+    }
+}
+
+/// Split a block of length 8·e into eight e-length mutable slices.
+#[inline(always)]
+fn split8(block: &mut [f32], e: usize) -> [&mut [f32]; 8] {
+    let (s0, rest) = block.split_at_mut(e);
+    let (s1, rest) = rest.split_at_mut(e);
+    let (s2, rest) = rest.split_at_mut(e);
+    let (s3, rest) = rest.split_at_mut(e);
+    let (s4, rest) = rest.split_at_mut(e);
+    let (s5, rest) = rest.split_at_mut(e);
+    let (s6, s7) = rest.split_at_mut(e);
+    [s0, s1, s2, s3, s4, s5, s6, s7]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::apply_radix2_stages_ref;
+    use crate::fft::{SplitComplex, TwiddleCache};
+
+    fn run_pass(edge: &str, v: &mut SplitComplex, stage: usize) {
+        let n = v.len();
+        let m = n >> stage;
+        let mut c = TwiddleCache::new();
+        match edge {
+            "R2" => {
+                let w1 = c.vector(m, m / 2, 1);
+                radix2(&mut v.re, &mut v.im, stage, &w1);
+            }
+            "R4" => {
+                let (w1, w2, w3) = (c.vector(m, m / 4, 1), c.vector(m, m / 4, 2), c.vector(m, m / 4, 3));
+                radix4(&mut v.re, &mut v.im, stage, &w1, &w2, &w3);
+            }
+            "R8" => {
+                let (w1, w2, w4) = (c.vector(m, m / 8, 1), c.vector(m, m / 8, 2), c.vector(m, m / 8, 4));
+                radix8(&mut v.re, &mut v.im, stage, &w1, &w2, &w4);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn check_vs_ref(edge: &str, k: usize, n: usize, stage: usize, seed: u64) {
+        let input = SplitComplex::random(n, seed);
+        let mut got = input.clone();
+        run_pass(edge, &mut got, stage);
+        let want = apply_radix2_stages_ref(&input, stage, k);
+        let scale = want.max_abs().max(1.0);
+        let err = got.max_abs_diff(&want) / scale;
+        assert!(err < 1e-5, "{edge} n={n} stage={stage}: rel err {err}");
+    }
+
+    #[test]
+    fn radix2_matches_reference_all_stages() {
+        for n in [8usize, 64, 1024] {
+            for stage in 0..crate::fft::log2i(n) {
+                check_vs_ref("R2", 1, n, stage, 42 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn radix4_matches_reference_all_stages() {
+        for n in [16usize, 64, 1024] {
+            for stage in 0..=(crate::fft::log2i(n) - 2) {
+                check_vs_ref("R4", 2, n, stage, 17 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn radix8_matches_reference_all_stages() {
+        for n in [8usize, 64, 1024] {
+            for stage in 0..=(crate::fft::log2i(n) - 3) {
+                check_vs_ref("R8", 3, n, stage, 9 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn w8_rotate_matches_complex_multiply() {
+        for k in 0..4usize {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / 8.0;
+            let (wr, wi) = (ang.cos() as f32, ang.sin() as f32);
+            let (xr, xi) = (0.6f32, -1.3f32);
+            let (er, ei) = cmul(xr, xi, wr, wi);
+            let (gr, gi) = w8_rotate(xr, xi, k);
+            assert!((er - gr).abs() < 1e-6 && (ei - gi).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn passes_are_linear() {
+        let n = 256;
+        let a = SplitComplex::random(n, 5);
+        for edge in ["R2", "R4", "R8"] {
+            let mut x1 = a.clone();
+            run_pass(edge, &mut x1, 1);
+            let mut x2 = SplitComplex::from_parts(
+                a.re.iter().map(|v| 2.0 * v).collect(),
+                a.im.iter().map(|v| 2.0 * v).collect(),
+            );
+            run_pass(edge, &mut x2, 1);
+            for i in 0..n {
+                assert!((x2.re[i] - 2.0 * x1.re[i]).abs() < 1e-4);
+                assert!((x2.im[i] - 2.0 * x1.im[i]).abs() < 1e-4);
+            }
+        }
+    }
+}

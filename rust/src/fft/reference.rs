@@ -1,0 +1,126 @@
+//! Ground-truth reference transforms (f64, unoptimized).
+
+use super::{log2i, SplitComplex};
+
+/// O(n²) naive DFT in f64 — the ultimate correctness oracle.
+pub fn dft_naive(input: &SplitComplex) -> SplitComplex {
+    let n = input.len();
+    let mut out = SplitComplex::zeros(n);
+    for k in 0..n {
+        let (mut sr, mut si) = (0f64, 0f64);
+        for t in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k as f64) * (t as f64) / (n as f64);
+            let (c, s) = (ang.cos(), ang.sin());
+            let (xr, xi) = (input.re[t] as f64, input.im[t] as f64);
+            sr += xr * c - xi * s;
+            si += xr * s + xi * c;
+        }
+        out.re[k] = sr as f32;
+        out.im[k] = si as f32;
+    }
+    out
+}
+
+/// One radix-2 DIF stage in f64 (reference semantics; matches ref.py).
+pub fn radix2_stage_ref(v: &SplitComplex, stage: usize) -> SplitComplex {
+    let n = v.len();
+    let m = n >> stage;
+    assert!(m >= 2, "stage {stage} invalid for n={n}");
+    let half = m / 2;
+    let mut out = SplitComplex::zeros(n);
+    let mut base = 0;
+    while base < n {
+        for j in 0..half {
+            let i0 = base + j;
+            let i1 = base + j + half;
+            let (tr, ti) = (v.re[i0] as f64, v.im[i0] as f64);
+            let (br, bi) = (v.re[i1] as f64, v.im[i1] as f64);
+            let ang = -2.0 * std::f64::consts::PI * (j as f64) / (m as f64);
+            let (wr, wi) = (ang.cos(), ang.sin());
+            out.re[i0] = (tr + br) as f32;
+            out.im[i0] = (ti + bi) as f32;
+            let (dr, di) = (tr - br, ti - bi);
+            out.re[i1] = (dr * wr - di * wi) as f32;
+            out.im[i1] = (dr * wi + di * wr) as f32;
+        }
+        base += m;
+    }
+    out
+}
+
+/// Apply `k` consecutive reference radix-2 stages starting at `stage`.
+pub fn apply_radix2_stages_ref(v: &SplitComplex, stage: usize, k: usize) -> SplitComplex {
+    let mut cur = v.clone();
+    for r in 0..k {
+        cur = radix2_stage_ref(&cur, stage + r);
+    }
+    cur
+}
+
+/// Full reference FFT: all radix-2 stages + bit-reversal.
+pub fn fft_ref(v: &SplitComplex) -> SplitComplex {
+    let l = log2i(v.len());
+    let mut cur = apply_radix2_stages_ref(v, 0, l);
+    super::bitrev::bit_reverse_permute(&mut cur.re, &mut cur.im);
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_ref_matches_naive_dft() {
+        for n in [2usize, 8, 32, 128] {
+            let input = SplitComplex::random(n, n as u64);
+            let a = fft_ref(&input);
+            let b = dft_naive(&input);
+            let scale = b.max_abs().max(1.0);
+            assert!(a.max_abs_diff(&b) / scale < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dft_of_impulse_is_ones() {
+        let n = 16;
+        let mut input = SplitComplex::zeros(n);
+        input.re[0] = 1.0;
+        let out = dft_naive(&input);
+        for k in 0..n {
+            assert!((out.re[k] - 1.0).abs() < 1e-6);
+            assert!(out.im[k].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dft_of_complex_exponential_is_delta() {
+        // x[t] = exp(2*pi*i*3t/16) -> X[k] = 16 * delta(k-3)
+        let n = 16;
+        let mut input = SplitComplex::zeros(n);
+        for t in 0..n {
+            let ang = 2.0 * std::f64::consts::PI * 3.0 * t as f64 / n as f64;
+            input.re[t] = ang.cos() as f32;
+            input.im[t] = ang.sin() as f32;
+        }
+        let out = dft_naive(&input);
+        for k in 0..n {
+            let expect = if k == 3 { n as f32 } else { 0.0 };
+            assert!((out.re[k] - expect).abs() < 1e-4, "k={k}");
+            assert!(out.im[k].abs() < 1e-4, "k={k}");
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let n = 64;
+        let input = SplitComplex::random(n, 99);
+        let out = fft_ref(&input);
+        let ein: f64 = (0..n)
+            .map(|i| (input.re[i] as f64).powi(2) + (input.im[i] as f64).powi(2))
+            .sum();
+        let eout: f64 = (0..n)
+            .map(|i| (out.re[i] as f64).powi(2) + (out.im[i] as f64).powi(2))
+            .sum();
+        assert!((eout / (n as f64) / ein - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,145 @@
+//! Cached twiddle-factor tables.
+//!
+//! `vector(m, count, k)` returns W_m^{k·j} = exp(-2πi·k·j/m) for
+//! j ∈ [0, count), computed once in f64 and cached as split f32 arrays.
+//! All passes of all plans share one [`TwiddleCache`] — the paper's "same
+//! twiddle table" discipline (§4.1) — so arrangement comparisons measure
+//! instruction scheduling, not table-construction differences.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One twiddle vector: split re/im, unit stride.
+#[derive(Debug)]
+pub struct TwiddleVec {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl TwiddleVec {
+    fn compute(m: usize, count: usize, k: usize) -> TwiddleVec {
+        let mut re = Vec::with_capacity(count);
+        let mut im = Vec::with_capacity(count);
+        for j in 0..count {
+            let ang = -2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / (m as f64);
+            re.push(ang.cos() as f32);
+            im.push(ang.sin() as f32);
+        }
+        TwiddleVec { re, im }
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+}
+
+/// Process-wide twiddle cache keyed by (m, count, k), plus combined
+/// fused-block sub-stage tables keyed by (m, e, lanes, step).
+#[derive(Debug, Default)]
+pub struct TwiddleCache {
+    map: HashMap<(usize, usize, usize), Arc<TwiddleVec>>,
+    fused: HashMap<(usize, usize, usize, usize), Arc<TwiddleVec>>,
+}
+
+impl TwiddleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// W_m^{k·j} for j in [0, count). Cached.
+    pub fn vector(&mut self, m: usize, count: usize, k: usize) -> Arc<TwiddleVec> {
+        self.map
+            .entry((m, count, k))
+            .or_insert_with(|| Arc::new(TwiddleVec::compute(m, count, k)))
+            .clone()
+    }
+
+    /// Combined fused-block sub-stage table: entry `k*e + j` is
+    /// W_m^{step·j} · W_lanes^{k} for k ∈ [0, lanes/2), j ∈ [0, e).
+    /// Cached under a disjoint key space (lanes ≥ 2 disambiguates).
+    pub fn fused_table(&mut self, m: usize, e: usize, lanes: usize, step: usize) -> Arc<TwiddleVec> {
+        self.fused
+            .entry((m, e, lanes, step))
+            .or_insert_with(|| {
+                let half = lanes / 2;
+                let mut re = Vec::with_capacity(half * e);
+                let mut im = Vec::with_capacity(half * e);
+                for k in 0..half {
+                    for j in 0..e {
+                        let ang = -2.0 * std::f64::consts::PI
+                            * ((step * j) as f64 / m as f64 + k as f64 / lanes as f64);
+                        re.push(ang.cos() as f32);
+                        im.push(ang.sin() as f32);
+                    }
+                }
+                Arc::new(TwiddleVec { re, im })
+            })
+            .clone()
+    }
+
+    /// Number of distinct cached vectors (for tests / memory accounting).
+    pub fn entries(&self) -> usize {
+        self.map.len() + self.fused.len()
+    }
+
+    /// Total cached f32 elements across both components.
+    pub fn total_elems(&self) -> usize {
+        self.map.values().chain(self.fused.values()).map(|v| 2 * v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_circle_and_identities() {
+        let mut c = TwiddleCache::new();
+        let w = c.vector(64, 32, 1);
+        for j in 0..32 {
+            let mag = w.re[j] * w.re[j] + w.im[j] * w.im[j];
+            assert!((mag - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(w.re[0], 1.0);
+        assert_eq!(w.im[0], 0.0);
+        // W_4^1 = -j
+        let w4 = c.vector(4, 2, 1);
+        assert!(w4.re[1].abs() < 1e-7);
+        assert!((w4.im[1] + 1.0).abs() < 1e-7);
+        // W_8^1 = (1-j)/sqrt(2)
+        let w8 = c.vector(8, 2, 1);
+        let inv = std::f32::consts::FRAC_1_SQRT_2;
+        assert!((w8.re[1] - inv).abs() < 1e-7);
+        assert!((w8.im[1] + inv).abs() < 1e-7);
+    }
+
+    #[test]
+    fn k_scaling_matches_composition() {
+        let mut c = TwiddleCache::new();
+        let w1 = c.vector(128, 32, 1);
+        let w2 = c.vector(128, 32, 2);
+        for j in 0..32 {
+            // W^2j == (W^j)^2
+            let rr = w1.re[j] * w1.re[j] - w1.im[j] * w1.im[j];
+            let ii = 2.0 * w1.re[j] * w1.im[j];
+            assert!((rr - w2.re[j]).abs() < 1e-5);
+            assert!((ii - w2.im[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cache_hits() {
+        let mut c = TwiddleCache::new();
+        let a = c.vector(64, 32, 1);
+        let b = c.vector(64, 32, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.entries(), 1);
+        c.vector(64, 32, 3);
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.total_elems(), 2 * 32 * 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Graphviz DOT exporters for the paper's figures.
+//!
+//! * [`context_free_dot`] — Figure 1: nodes 0..L, one edge per
+//!   (edge type, stage), colored by type, weighted by isolation cost.
+//! * [`context_aware_dot`] — Figure 2: expanded nodes (s, t_prev); the
+//!   optimal path is highlighted in red.
+//! * [`decomposition_dot`] — Figure 3: a set of plans as stage-interval
+//!   chains for side-by-side comparison.
+
+use crate::cost::CostModel;
+use crate::edge::{Context, EdgeType};
+use crate::plan::Plan;
+
+fn color(e: EdgeType) -> &'static str {
+    match e {
+        EdgeType::R2 => "blue",
+        EdgeType::R4 => "orange",
+        EdgeType::R8 => "red",
+        EdgeType::F8 | EdgeType::F16 | EdgeType::F32 => "green",
+    }
+}
+
+/// Figure 1: the context-free computation graph for L stages.
+pub fn context_free_dot<C: CostModel>(cost: &mut C, l: usize) -> String {
+    let mut s = String::from("digraph contextfree {\n  rankdir=LR;\n  node [shape=circle];\n");
+    for stage in 0..=l {
+        s.push_str(&format!("  s{stage} [label=\"{stage}\"];\n"));
+    }
+    for stage in 0..l {
+        for e in cost.available_edges() {
+            let k = e.stages();
+            if !super::edge_allowed(e, stage, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, stage, Context::Start);
+            s.push_str(&format!(
+                "  s{stage} -> s{} [label=\"{} {:.0}ns\", color={}];\n",
+                stage + k,
+                e.name(),
+                w,
+                color(e)
+            ));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Figure 2: the context-aware expanded graph; `highlight` (if given) is
+/// drawn in red with penwidth 3 (the paper highlights the optimal path).
+pub fn context_aware_dot<C: CostModel>(cost: &mut C, l: usize, highlight: Option<&Plan>) -> String {
+    let mut s =
+        String::from("digraph contextaware {\n  rankdir=LR;\n  node [shape=box, fontsize=10];\n");
+    let node_id = |stage: usize, ctx: Context| format!("n{}_{}", stage, ctx.index());
+    // Highlighted transitions (stage, ctx, edge).
+    let mut hot: std::collections::HashSet<(usize, usize, EdgeType)> = Default::default();
+    if let Some(plan) = highlight {
+        let mut ctx = Context::Start;
+        for (e, st) in plan.steps() {
+            hot.insert((st, ctx.index(), e));
+            ctx = Context::After(e);
+        }
+    }
+    // Reachable expansion from (0, start).
+    let mut seen = std::collections::HashSet::new();
+    let mut frontier = vec![(0usize, Context::Start)];
+    seen.insert((0, Context::Start.index()));
+    s.push_str(&format!("  {} [label=\"(0, start)\"];\n", node_id(0, Context::Start)));
+    while let Some((stage, ctx)) = frontier.pop() {
+        for e in cost.available_edges() {
+            let k = e.stages();
+            if !super::edge_allowed(e, stage, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, stage, ctx);
+            let next = (stage + k, Context::After(e));
+            if seen.insert((next.0, next.1.index())) {
+                s.push_str(&format!(
+                    "  {} [label=\"({}, {})\"];\n",
+                    node_id(next.0, next.1),
+                    next.0,
+                    e.name()
+                ));
+                if next.0 < l {
+                    frontier.push(next);
+                }
+            }
+            let is_hot = hot.contains(&(stage, ctx.index(), e));
+            s.push_str(&format!(
+                "  {} -> {} [label=\"{:.0}ns\", color={}, penwidth={}];\n",
+                node_id(stage, ctx),
+                node_id(next.0, next.1),
+                w,
+                if is_hot { "red" } else { color(e) },
+                if is_hot { 3 } else { 1 },
+            ));
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Figure 3: decomposition chains (one subgraph per named plan).
+pub fn decomposition_dot(plans: &[(&str, &Plan)]) -> String {
+    let mut s = String::from("digraph decompositions {\n  rankdir=LR;\n  node [shape=box];\n");
+    for (i, (name, plan)) in plans.iter().enumerate() {
+        s.push_str(&format!("  subgraph cluster_{i} {{\n    label=\"{name}\";\n"));
+        let mut prev = format!("p{i}_start");
+        s.push_str(&format!("    {prev} [label=\"0\", shape=circle];\n"));
+        for (j, (e, st)) in plan.steps().into_iter().enumerate() {
+            let node = format!("p{i}_{j}");
+            s.push_str(&format!(
+                "    {node} [label=\"{} @{}\", color={}];\n",
+                e.name(),
+                st,
+                color(e)
+            ));
+            s.push_str(&format!("    {prev} -> {node};\n"));
+            prev = node;
+        }
+        let end = format!("p{i}_end");
+        s.push_str(&format!("    {end} [label=\"done\", shape=circle];\n"));
+        s.push_str(&format!("    {prev} -> {end};\n  }}\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::SimCost;
+
+    #[test]
+    fn context_free_dot_has_all_edges() {
+        let mut cost = SimCost::m1(1024);
+        let dot = context_free_dot(&mut cost, 10);
+        assert!(dot.starts_with("digraph"));
+        assert_eq!(dot.matches("->").count(), 37); // positional catalog size
+        for name in ["R2", "R4", "R8", "F8", "F16", "F32"] {
+            assert!(dot.contains(name), "{name}");
+        }
+    }
+
+    #[test]
+    fn context_aware_dot_highlights_plan() {
+        let mut cost = SimCost::m1(1024);
+        let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        let dot = context_aware_dot(&mut cost, 10, Some(&plan));
+        assert!(dot.matches("color=red, penwidth=3").count() == 5, "{}", dot);
+    }
+
+    #[test]
+    fn decomposition_dot_one_cluster_per_plan() {
+        let p1 = Plan::parse("R2,R2,R2,R2,R2,R2,R2,R2,R2,R2").unwrap();
+        let p2 = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        let dot = decomposition_dot(&[("pure radix-2", &p1), ("context-aware", &p2)]);
+        assert_eq!(dot.matches("subgraph").count(), 2);
+        assert!(dot.contains("pure radix-2"));
+    }
+}

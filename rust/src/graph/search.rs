@@ -1,0 +1,237 @@
+//! Shortest-path searches over the decomposition graphs.
+//!
+//! Both graphs are DAGs (edges only advance the stage counter), so
+//! Dijkstra reduces to a forward relaxation in topological (stage) order —
+//! we keep the paper's "Dijkstra" name for the algorithmic idea while
+//! exploiting the DAG structure (identical result, no priority queue).
+//!
+//! * [`shortest_path_context_free`] — nodes {0..L} (paper §2.1, Fig. 1);
+//!   weights are *isolation* measurements (`Context::Start`).
+//! * [`shortest_path_context_aware`] — nodes {(s, t_prev)} (paper §2.3,
+//!   Fig. 2, Eq. 1-2); weights conditional on the predecessor type.
+//! * [`shortest_path_context_aware_k`] — §5.1's higher-order extension:
+//!   context = last k edge types; node space (L+1) x |T|^k.
+
+use crate::cost::CostModel;
+use crate::edge::{Context, EdgeType};
+use crate::plan::Plan;
+
+/// Result of a search: the plan, its predicted cost under the search's own
+/// weights, and how many weight cells were queried.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub plan: Plan,
+    /// Path cost under the weights the search used (ns). For the
+    /// context-free search this is a *prediction* that the true
+    /// (contextual) execution time will generally exceed — that gap is
+    /// the paper's point.
+    pub cost_ns: f64,
+    /// Distinct weight cells queried (paper §2.5 measurement budget).
+    pub cells: usize,
+}
+
+/// Context-free shortest path: weights w(edge, stage) measured in
+/// isolation, independent of predecessor (paper §2.1).
+pub fn shortest_path_context_free<C: CostModel>(cost: &mut C, l: usize) -> SearchResult {
+    let edges = cost.available_edges();
+    let mut dist = vec![f64::INFINITY; l + 1];
+    let mut pred: Vec<Option<(usize, EdgeType)>> = vec![None; l + 1];
+    let mut cells = 0;
+    dist[0] = 0.0;
+    for s in 0..l {
+        if dist[s].is_infinite() {
+            continue;
+        }
+        for &e in &edges {
+            let k = e.stages();
+            if !crate::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, s, Context::Start);
+            cells += 1;
+            if dist[s] + w < dist[s + k] {
+                dist[s + k] = dist[s] + w;
+                pred[s + k] = Some((s, e));
+            }
+        }
+    }
+    let mut rev = Vec::new();
+    let mut s = l;
+    while s > 0 {
+        let (ps, e) = pred[s].expect("unreachable node");
+        rev.push(e);
+        s = ps;
+    }
+    rev.reverse();
+    SearchResult { plan: Plan::new(rev), cost_ns: dist[l], cells }
+}
+
+/// Context-aware shortest path over the expanded node space
+/// {(stage, t_prev)} (paper Eq. 1); start node (0, start).
+pub fn shortest_path_context_aware<C: CostModel>(cost: &mut C, l: usize) -> SearchResult {
+    shortest_path_context_aware_k(cost, l, 1)
+}
+
+/// Higher-order context-aware search: context = last `k` edge types
+/// (paper §5.1). With the first-order cost models in this crate, k > 1
+/// explores a larger node space but reproduces the k = 1 optimum; the
+/// interface exists for higher-order cost models (and measures the node
+/// growth the paper quotes: 77 nodes at k=1, 539 at k=2 for L=10).
+pub fn shortest_path_context_aware_k<C: CostModel>(cost: &mut C, l: usize, k: usize) -> SearchResult {
+    assert!(k >= 1, "context order must be >= 1");
+    use std::collections::HashMap;
+    type Hist = Vec<EdgeType>; // last <= k edges, most recent last
+    let edges = cost.available_edges();
+    // dist keyed by (stage, history)
+    let mut dist: HashMap<(usize, Hist), f64> = HashMap::new();
+    let mut pred: HashMap<(usize, Hist), (usize, Hist, EdgeType)> = HashMap::new();
+    let mut cell_set: std::collections::HashSet<(EdgeType, usize, Context)> =
+        std::collections::HashSet::new();
+    dist.insert((0, Vec::new()), 0.0);
+    // Relax in stage order (DAG topological order).
+    for s in 0..l {
+        // Snapshot states at stage s (sorted for determinism).
+        let mut states: Vec<(Hist, f64)> = dist
+            .iter()
+            .filter(|((st, _), _)| *st == s)
+            .map(|((_, h), d)| (h.clone(), *d))
+            .collect();
+        states.sort_by(|a, b| a.0.cmp(&b.0));
+        for (hist, d) in states {
+            if d.is_infinite() {
+                continue;
+            }
+            let ctx = match hist.last() {
+                None => Context::Start,
+                Some(&e) => Context::After(e),
+            };
+            for &e in &edges {
+                let adv = e.stages();
+                if !crate::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                let w = cost.edge_ns(e, s, ctx);
+                cell_set.insert((e, s, ctx));
+                let mut nh = hist.clone();
+                nh.push(e);
+                if nh.len() > k {
+                    nh.remove(0);
+                }
+                let key = (s + adv, nh.clone());
+                if d + w < *dist.get(&key).unwrap_or(&f64::INFINITY) {
+                    dist.insert(key.clone(), d + w);
+                    pred.insert(key, (s, hist.clone(), e));
+                }
+            }
+        }
+    }
+    // Best terminal state.
+    let (best_key, best_d) = dist
+        .iter()
+        .filter(|((s, _), _)| *s == l)
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0 .1.cmp(&b.0 .1)))
+        .map(|(k2, d)| (k2.clone(), *d))
+        .expect("no path to L");
+    // Backtrack.
+    let mut rev = Vec::new();
+    let mut key = best_key;
+    while key.0 > 0 {
+        let (ps, ph, e) = pred.get(&key).expect("pred chain broken").clone();
+        rev.push(e);
+        key = (ps, ph);
+    }
+    rev.reverse();
+    SearchResult { plan: Plan::new(rev), cost_ns: best_d, cells: cell_set.len() }
+}
+
+/// Number of nodes in the k-order expanded graph for L stages and |T|
+/// contexts (paper §2.3 / §5.1: 77 for k=1, 539 for k=2 at L=10).
+pub fn expanded_node_count(l: usize, num_contexts: usize, k: usize) -> usize {
+    (l + 1) * num_contexts.pow(k as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, SimCost};
+    use crate::graph::enumerate::enumerate_plans;
+
+    #[test]
+    fn context_free_beats_or_equals_every_plan_under_its_weights() {
+        let mut cost = SimCost::m1(256);
+        let res = shortest_path_context_free(&mut cost, 8);
+        assert!(res.plan.is_valid_for(8));
+        // isolation-weight sum of every enumerated plan >= search result
+        for p in enumerate_plans(8, &cost.available_edges()) {
+            let sum: f64 = p
+                .steps()
+                .into_iter()
+                .map(|(e, s)| cost.edge_ns(e, s, Context::Start))
+                .sum();
+            assert!(sum + 1e-6 >= res.cost_ns, "{p}: {sum} < {}", res.cost_ns);
+        }
+    }
+
+    #[test]
+    fn context_aware_beats_or_equals_every_plan_under_true_weights() {
+        let mut cost = SimCost::m1(256);
+        let res = shortest_path_context_aware(&mut cost, 8);
+        assert!(res.plan.is_valid_for(8));
+        for p in enumerate_plans(8, &cost.available_edges()) {
+            // from-start contextual sum (the search's objective)
+            let mut ctx = Context::Start;
+            let mut sum = 0.0;
+            for (e, s) in p.steps() {
+                sum += cost.edge_ns(e, s, ctx);
+                ctx = Context::After(e);
+            }
+            assert!(sum + 1e-6 >= res.cost_ns, "{p}");
+        }
+    }
+
+    #[test]
+    fn context_aware_never_worse_than_context_free_on_true_weights() {
+        let mut cost = SimCost::m1(1024);
+        let cf = shortest_path_context_free(&mut cost, 10);
+        let ca = shortest_path_context_aware(&mut cost, 10);
+        // Evaluate both on true contextual timing.
+        let t_cf = cost.plan_ns(&cf.plan);
+        let t_ca = cost.plan_ns(&ca.plan);
+        assert!(t_ca <= t_cf + 1e-6, "ca {t_ca} vs cf {t_cf}");
+    }
+
+    #[test]
+    fn k2_matches_k1_for_first_order_models() {
+        let mut cost = SimCost::m1(256);
+        let k1 = shortest_path_context_aware_k(&mut cost, 8, 1);
+        let k2 = shortest_path_context_aware_k(&mut cost, 8, 2);
+        assert_eq!(k1.plan, k2.plan);
+        assert!((k1.cost_ns - k2.cost_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn node_counts_match_paper() {
+        assert_eq!(expanded_node_count(10, 7, 1), 77);
+        assert_eq!(expanded_node_count(10, 7, 2), 539);
+    }
+
+    #[test]
+    fn measurement_budget_matches_paper_scale() {
+        // §2.5: ~30 context-free vs ~180 context-aware measurements.
+        let mut cost = SimCost::m1(1024);
+        let cf = shortest_path_context_free(&mut cost, 10);
+        assert_eq!(cf.cells, 37); // R2:10 R4:9 R8:8 F8:8 F16@6 F32@5 (~30 in the paper)
+        let ca = shortest_path_context_aware(&mut cost, 10);
+        assert!(ca.cells > 100 && ca.cells < 300, "cells = {}", ca.cells);
+    }
+
+    #[test]
+    fn haswell_search_never_uses_f32() {
+        let mut cost = SimCost::haswell(1024);
+        let cf = shortest_path_context_free(&mut cost, 10);
+        let ca = shortest_path_context_aware(&mut cost, 10);
+        for p in [&cf.plan, &ca.plan] {
+            assert!(!p.edges().contains(&EdgeType::F32), "{p}");
+        }
+    }
+}

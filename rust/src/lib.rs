@@ -1,0 +1,39 @@
+//! # spfft — Shortest-Path FFT
+//!
+//! Production reproduction of *"Shortest-Path FFT: Optimal SIMD Instruction
+//! Scheduling via Graph Search"* (Bergach, 2026) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! An N-point FFT (N = 2^L) admits many valid arrangements of radix-2/4/8
+//! passes and fused register blocks. This crate models the choice as a
+//! shortest-path problem on a DAG:
+//!
+//! * [`edge`] / [`plan`] — the edge catalog (paper Table 1) and plan type;
+//! * [`graph`] — context-free and context-aware decomposition graphs,
+//!   Dijkstra, exhaustive enumeration, DOT export (paper Figs. 1–2);
+//! * [`sim`] — the Apple-M1 / Haswell micro-architecture timing simulator
+//!   substituting for the paper's hardware testbed (see DESIGN.md §2);
+//! * [`cost`] — edge-weight providers: simulated, natively measured on this
+//!   host, or measured over AOT-compiled PJRT executables;
+//! * [`planner`] — the searches (context-free/context-aware Dijkstra) and
+//!   every baseline the paper compares against (FFTW-style DP, SPIRAL-style
+//!   beam, fixed arrangements);
+//! * [`fft`] — a native split-complex FFT substrate implementing every edge
+//!   type, used for correctness cross-checks and live measurements;
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt` produced
+//!   by `make artifacts` (Python never runs on the request path);
+//! * [`coordinator`] — the serving layer: plan cache, dynamic batcher,
+//!   worker pool, metrics;
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod coordinator;
+pub mod cost;
+pub mod edge;
+pub mod fft;
+pub mod graph;
+pub mod plan;
+pub mod planner;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,416 @@
+//! `spfft` — the Shortest-Path FFT CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands:
+//!   search    run the planners and report discovered plans
+//!   table     regenerate a paper table (--id 1..4)
+//!   figure    regenerate a paper figure (--id 1..3, DOT/text)
+//!   paths     count/enumerate valid decompositions
+//!   plan      cost one explicit plan under a cost model
+//!   profile   per-edge cost profile dump
+//!   serve     run the batched FFT service on a synthetic workload
+//!   selfcheck verify artifacts against the native reference
+
+use std::process::ExitCode;
+
+use spfft::cost::{CostModel, NativeCost, SimCost};
+use spfft::edge::Context;
+use spfft::fft::{reference::fft_ref, SplitComplex};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, rank_all_plans, Strategy};
+use spfft::report;
+use spfft::util::cli::{Args, CliError, Command};
+use spfft::util::stats::gflops;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, rest)) = argv.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match sub.as_str() {
+        "search" => cmd_search(rest),
+        "table" => cmd_table(rest),
+        "figure" => cmd_figure(rest),
+        "paths" => cmd_paths(rest),
+        "plan" => cmd_plan(rest),
+        "profile" => cmd_profile(rest),
+        "serve" => cmd_serve(rest),
+        "selfcheck" => cmd_selfcheck(rest),
+        "wisdom" => cmd_wisdom(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(CliError(format!("unknown subcommand '{other}'"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "spfft — Shortest-Path FFT (paper reproduction)\n\n\
+         usage: spfft <subcommand> [options]\n\n\
+         subcommands:\n\
+           search     run CF/CA Dijkstra + baselines, show discovered plans\n\
+           table      regenerate a paper table   (--id 1|2|3|4)\n\
+           figure     regenerate a paper figure  (--id 1|2|3)\n\
+           paths      count valid decompositions (--l <stages>)\n\
+           plan       cost an explicit plan      (--plan R4,R2,R4,R4,F8)\n\
+           profile    dump the per-edge cost profile\n\
+           serve      run the batched FFT service on a synthetic workload\n\
+           selfcheck  verify PJRT artifacts vs the native reference\n\
+           wisdom     export/plan-from measurement databases (FFTW-wisdom analogue)\n\n\
+         common options: --n <size> --machine m1|haswell --cost sim|native\n\
+         run 'spfft <subcommand> --help' for details"
+    );
+}
+
+/// Build the cost model selected by --cost/--machine/--n.
+enum AnyCost {
+    Sim(SimCost),
+    Native(NativeCost),
+}
+
+impl AnyCost {
+    fn as_dyn(&mut self) -> &mut dyn CostModel {
+        match self {
+            AnyCost::Sim(c) => c,
+            AnyCost::Native(c) => c,
+        }
+    }
+}
+
+fn make_cost(args: &Args) -> Result<AnyCost, CliError> {
+    let n = args.get_usize("n")?;
+    if !n.is_power_of_two() || n < 2 {
+        return Err(CliError(format!("--n must be a power of two >= 2, got {n}")));
+    }
+    match args.get("cost") {
+        "sim" => {
+            let machine = spfft::sim::Machine::by_name(args.get("machine"))
+                .ok_or_else(|| CliError(format!("unknown machine '{}'", args.get("machine"))))?;
+            Ok(AnyCost::Sim(SimCost::new(machine, n)))
+        }
+        "native" => Ok(AnyCost::Native(if args.flag("quick") {
+            NativeCost::quick(n)
+        } else {
+            NativeCost::paper(n)
+        })),
+        other => Err(CliError(format!("--cost must be sim|native, got '{other}'"))),
+    }
+}
+
+fn common(cmd: Command) -> Command {
+    cmd.opt("n", "1024", "FFT size (power of two)")
+        .opt("machine", "m1", "simulated machine (m1|haswell)")
+        .opt("cost", "sim", "cost model (sim|native)")
+        .flag("quick", "fast measurement protocol for --cost native")
+}
+
+fn parse_or_help(cmd: &Command, argv: &[String]) -> Result<Option<Args>, CliError> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("{}", cmd.usage());
+        return Ok(None);
+    }
+    cmd.parse(argv).map(Some)
+}
+
+fn cmd_search(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("search", "run the searches and baselines"))
+        .opt("k", "1", "context order for the context-aware search")
+        .flag("all", "also rank every valid plan (exhaustive dump)");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let k = args.get_usize("k")?;
+    let mut cost = make_cost(&args)?;
+    let mut cost = cost.as_dyn();
+    println!("n = {n}, cost = {}/{}", args.get("cost"), args.get("machine"));
+    for strat in [
+        Strategy::DijkstraContextFree,
+        Strategy::DijkstraContextAware { k },
+        Strategy::FftwDp,
+        Strategy::SpiralBeam { width: 3 },
+        Strategy::Exhaustive,
+    ] {
+        let out = run_plan(&mut cost, &strat);
+        println!(
+            "  {:<18} {}  believed {:>9.1} ns  true {:>9.1} ns  ({:.1} GFLOPS, {} cells)",
+            out.strategy,
+            out.plan,
+            out.believed_ns,
+            out.true_ns,
+            gflops(n, out.true_ns),
+            out.cells
+        );
+    }
+    if args.flag("all") {
+        let l = spfft::fft::log2i(n);
+        for (p, t) in rank_all_plans(&mut cost, l) {
+            println!("  {:<40} {:>9.1} ns {:>6.1} GF", p.to_string(), t, gflops(n, t));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("table", "regenerate a paper table")).opt("id", "3", "table number (1-4)");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let id = args.get_usize("id")?;
+    let mut cost = make_cost(&args)?;
+    let mut cost = cost.as_dyn();
+    let out = match id {
+        1 => report::table1(),
+        2 => report::table2(&mut cost),
+        3 => report::table3(&mut cost),
+        4 => report::table4(&mut cost),
+        _ => return Err(CliError(format!("no table {id} in the paper (1-4)"))),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_figure(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("figure", "regenerate a paper figure"))
+        .opt("id", "3", "figure number (1-3)")
+        .opt("out", "-", "write to file ('-' = stdout)");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let id = args.get_usize("id")?;
+    let mut cost = make_cost(&args)?;
+    let mut cost = cost.as_dyn();
+    let out = match id {
+        1 => report::figure1(&mut cost),
+        2 => report::figure2(&mut cost),
+        3 => report::figure3(&mut cost),
+        _ => return Err(CliError(format!("no figure {id} in the paper (1-3)"))),
+    };
+    let path = args.get("out");
+    if path == "-" {
+        println!("{out}");
+    } else {
+        std::fs::write(path, out).map_err(|e| CliError(format!("writing {path}: {e}")))?;
+        println!("wrote figure {id} to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_paths(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("paths", "count valid decompositions")).opt("l", "10", "stages (log2 n)");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let l = args.get_usize("l")?;
+    let mut cost = make_cost(&args)?;
+    let edges = cost.as_dyn().available_edges();
+    let count = spfft::graph::count_plans(l, &edges);
+    let names: Vec<&str> = edges.iter().map(|e| e.name()).collect();
+    println!("L = {l}, catalog = [{}]", names.join(", "));
+    println!("valid decompositions: {count}");
+    println!(
+        "expanded node counts: k=1: {}, k=2: {}",
+        spfft::graph::search::expanded_node_count(l, spfft::edge::NUM_CONTEXTS, 1),
+        spfft::graph::search::expanded_node_count(l, spfft::edge::NUM_CONTEXTS, 2),
+    );
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("plan", "cost one explicit plan"))
+        .req("plan", "comma/arrow plan, e.g. R4,R2,R4,R4,F8");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let plan = Plan::parse(args.get("plan"))
+        .ok_or_else(|| CliError(format!("unparseable plan '{}'", args.get("plan"))))?;
+    let l = spfft::fft::log2i(n);
+    if !plan.is_valid_for(l) {
+        return Err(CliError(format!(
+            "plan {plan} covers {} stages; n={n} needs {l}",
+            plan.total_stages()
+        )));
+    }
+    let mut cost = make_cost(&args)?;
+    let cost = cost.as_dyn();
+    let t = cost.plan_ns(&plan);
+    println!("{plan}: {t:.1} ns steady-state ({:.1} GFLOPS)", gflops(n, t));
+    let mut ctx = Context::After(*plan.edges().last().unwrap());
+    for (e, s) in plan.steps() {
+        let w = cost.edge_ns(e, s, ctx);
+        println!("  {:<4} @ stage {:<2} [{}]: {:>8.1} ns", e.name(), s, ctx, w);
+        ctx = Context::After(e);
+    }
+    Ok(())
+}
+
+fn cmd_profile(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("profile", "dump the per-edge cost profile"));
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let l = spfft::fft::log2i(n);
+    let mut cost = make_cost(&args)?;
+    let cost = cost.as_dyn();
+    println!("per-edge costs, n={n} (isolation | after-R2 | after-R4 | after-R8):");
+    for e in cost.available_edges() {
+        for s in 0..l {
+            if !spfft::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            let iso = cost.edge_ns(e, s, Context::Start);
+            let r2 = cost.edge_ns(e, s, Context::After(spfft::edge::EdgeType::R2));
+            let r4 = cost.edge_ns(e, s, Context::After(spfft::edge::EdgeType::R4));
+            let r8 = cost.edge_ns(e, s, Context::After(spfft::edge::EdgeType::R8));
+            println!(
+                "  {:<4} @ {:<2} {:>9.1} | {:>9.1} | {:>9.1} | {:>9.1}",
+                e.name(),
+                s,
+                iso,
+                r2,
+                r4,
+                r8
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("serve", "run the batched FFT service on a synthetic workload"))
+        .opt("requests", "2000", "number of requests")
+        .opt("backend", "native", "execution backend (native|pjrt)")
+        .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
+        .opt("batch", "16", "max batch size")
+        .opt("workers", "1", "worker threads");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let requests = args.get_usize("requests")?;
+    let mut cost = make_cost(&args)?;
+    let ca = run_plan(&mut cost.as_dyn(), &Strategy::DijkstraContextAware { k: 1 });
+    println!(
+        "planned {} for n={n} ({:.1} GFLOPS predicted)",
+        ca.plan,
+        gflops(n, ca.true_ns)
+    );
+    let backend = match args.get("backend") {
+        "native" => spfft::coordinator::Backend::Native,
+        "pjrt" => spfft::coordinator::Backend::Pjrt { artifacts_dir: args.get("artifacts").into() },
+        other => return Err(CliError(format!("--backend must be native|pjrt, got '{other}'"))),
+    };
+    let svc = spfft::coordinator::FftService::start(spfft::coordinator::ServiceConfig {
+        plans: vec![(n, ca.plan.clone())],
+        backend,
+        batch: spfft::coordinator::BatchPolicy {
+            max_batch: args.get_usize("batch")?,
+            max_wait: std::time::Duration::from_micros(200),
+        },
+        workers: args.get_usize("workers")?,
+        queue_depth: 1024,
+    })
+    .map_err(|e| CliError(format!("service: {e}")))?;
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let input = SplitComplex::random(n, i as u64);
+        match svc.submit(input) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => { /* backpressure: drop */ }
+        }
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let snap = svc.shutdown();
+    println!(
+        "served {}/{} requests in {:.3}s: {:.0} req/s, mean batch {:.1}, p50 {:?} p95 {:?} p99 {:?}",
+        snap.completed,
+        requests,
+        wall.as_secs_f64(),
+        snap.throughput(wall),
+        snap.mean_batch_size,
+        snap.latency_p50,
+        snap.latency_p95,
+        snap.latency_p99,
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("selfcheck", "verify PJRT artifacts vs the native reference"))
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let dir = std::path::PathBuf::from(args.get("artifacts"));
+    let mut reg = spfft::runtime::Registry::load(&dir).map_err(|e| CliError(format!("{e}")))?;
+    let input = SplitComplex::random(n, 7);
+    let want = fft_ref(&input);
+    let scale = want.max_abs().max(1.0);
+    let mut checked = 0;
+    let fulls: Vec<String> = reg
+        .manifest
+        .for_n(n)
+        .iter()
+        .filter(|a| matches!(a.kind, spfft::runtime::ArtifactKind::Full { .. }))
+        .map(|a| a.name.clone())
+        .collect();
+    for name in &fulls {
+        let got = reg.execute(name, &input).map_err(|e| CliError(format!("{e}")))?;
+        let err = got.max_abs_diff(&want) / scale;
+        if err > 1e-4 {
+            return Err(CliError(format!("{name}: rel err {err}")));
+        }
+        println!("  {name}: ok (rel err {err:.2e})");
+        checked += 1;
+    }
+    // also chain a discovered plan through per-edge artifacts
+    if spfft::fft::log2i(n) == 10 {
+        let ca = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        let got = reg.execute_plan(n, &ca, &input).map_err(|e| CliError(format!("{e}")))?;
+        let err = got.max_abs_diff(&want) / scale;
+        if err > 1e-4 {
+            return Err(CliError(format!("chained {ca}: rel err {err}")));
+        }
+        println!("  chained {ca}: ok (rel err {err:.2e})");
+        checked += 1;
+    }
+    println!("selfcheck: {checked} executables verified against the native reference");
+    Ok(())
+}
+
+fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new("wisdom", "export / replay measurement databases"))
+        .opt("export", "", "harvest all cells from --cost/--machine into this file")
+        .opt("plan-from", "", "load a wisdom file and run the searches over it");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let export = args.get("export");
+    let plan_from = args.get("plan-from");
+    if !export.is_empty() {
+        let mut cost = make_cost(&args)?;
+        let source = format!("{}:{}", args.get("cost"), args.get("machine"));
+        let w = spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source);
+        w.save(std::path::Path::new(export)).map_err(|e| CliError(format!("{e}")))?;
+        println!("exported {} cells (n={}, source {source}) to {export}", w.cells.len(), w.n);
+    }
+    if !plan_from.is_empty() {
+        let w = spfft::cost::Wisdom::load(std::path::Path::new(plan_from))
+            .map_err(|e| CliError(format!("{e}")))?;
+        println!("loaded wisdom: n={}, source={}, {} cells", w.n, w.source, w.cells.len());
+        let mut cost = w.to_cost();
+        let l = spfft::fft::log2i(w.n);
+        let _ = l;
+        let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
+        let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+        println!("  context-free : {}  true {:.0} ns", cf.plan, cf.true_ns);
+        println!("  context-aware: {}  true {:.0} ns", ca.plan, ca.true_ns);
+    }
+    if export.is_empty() && plan_from.is_empty() {
+        return Err(CliError("wisdom: pass --export <file> and/or --plan-from <file>".into()));
+    }
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Plans: ordered sequences of edges forming a complete FFT arrangement.
+//!
+//! A plan for an N = 2^L point FFT is valid iff its edges' stage advances
+//! sum to exactly L (a path 0 → L in the decomposition graph). The named
+//! plans below are the rows of paper Table 3.
+
+use std::fmt;
+
+use crate::edge::EdgeType;
+
+/// An ordered arrangement of edges; a path through the decomposition graph.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Plan {
+    edges: Vec<EdgeType>,
+}
+
+impl Plan {
+    /// Build a plan from edges (no validity check — see [`Plan::is_valid_for`]).
+    pub fn new(edges: Vec<EdgeType>) -> Self {
+        Plan { edges }
+    }
+
+    /// Parse a comma/arrow-separated plan string: `"R4,R2,R4,R4,F8"` or
+    /// `"R4->R2->R4->R4->F8"`.
+    pub fn parse(s: &str) -> Option<Plan> {
+        let cleaned = s.replace("->", ",");
+        let mut edges = Vec::new();
+        for tok in cleaned.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            edges.push(EdgeType::parse(tok)?);
+        }
+        Some(Plan::new(edges))
+    }
+
+    pub fn edges(&self) -> &[EdgeType] {
+        &self.edges
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Total DIF stages advanced by the plan.
+    pub fn total_stages(&self) -> usize {
+        self.edges.iter().map(|e| e.stages()).sum()
+    }
+
+    /// True iff the plan is a complete arrangement for a 2^l-point FFT.
+    pub fn is_valid_for(&self, l: usize) -> bool {
+        self.total_stages() == l
+    }
+
+    /// Starting stage of each edge (cumulative prefix of stage advances).
+    pub fn stages(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.edges.len());
+        let mut s = 0;
+        for e in &self.edges {
+            out.push(s);
+            s += e.stages();
+        }
+        out
+    }
+
+    /// (edge, starting stage) pairs.
+    pub fn steps(&self) -> Vec<(EdgeType, usize)> {
+        self.stages().into_iter().zip(&self.edges).map(|(s, &e)| (e, s)).collect()
+    }
+}
+
+impl fmt::Display for Plan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<&str> = self.edges.iter().map(|e| e.name()).collect();
+        f.write_str(&names.join("->"))
+    }
+}
+
+impl FromIterator<EdgeType> for Plan {
+    fn from_iter<I: IntoIterator<Item = EdgeType>>(iter: I) -> Self {
+        Plan::new(iter.into_iter().collect())
+    }
+}
+
+/// A named arrangement: one row of paper Table 3.
+#[derive(Debug, Clone)]
+pub struct NamedPlan {
+    /// Machine-friendly key (matches the artifact manifest, e.g. "r4x5").
+    pub key: &'static str,
+    /// Human label as printed in the paper's table.
+    pub label: &'static str,
+    pub plan: Plan,
+}
+
+/// The ten arrangements of paper Table 3 for N = 1024 (L = 10), in table
+/// order. The two Dijkstra rows carry the plans the paper reports as
+/// discovered on M1; the planner re-discovers them from edge weights.
+pub fn table3_arrangements() -> Vec<NamedPlan> {
+    use EdgeType::*;
+    let mk = |key, label, edges: &[EdgeType]| NamedPlan {
+        key,
+        label,
+        plan: Plan::new(edges.to_vec()),
+    };
+    vec![
+        mk("r2x10", "R2 x 10 (pure radix-2)", &[R2; 10]),
+        mk("r4x5", "R4 x 5 (pure radix-4)", &[R4; 5]),
+        mk("r8x3_r2", "R8 x 3 + R2 (pure radix-8)", &[R2, R8, R8, R8]),
+        mk("max_radix", "R8,R8,R8,R2 (\"max radix\")", &[R8, R8, R8, R2]),
+        mk("r8r8r4r4", "R8,R8,R4,R4", &[R8, R8, R4, R4]),
+        mk("haswell_opt", "R4,R8,R8,R4 (Haswell optimal)", &[R4, R8, R8, R4]),
+        mk("r2x5_f32", "R2 x 5 + Fused-32", &[R2, R2, R2, R2, R2, F32]),
+        mk("r4x3_f16", "R4 x 3 + Fused-16", &[R4, R4, R4, F16]),
+        mk("dijkstra_cf_m1", "Dijkstra (context-free)", &[R4, F8, F32]),
+        mk("dijkstra_ca_m1", "Dijkstra (context-aware)", &[R4, R2, R4, R4, F8]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::EdgeType::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["R4->R2->R4->R4->F8", "R2", "R8,R8,R4,R4"] {
+            let p = Plan::parse(s).unwrap();
+            let q = Plan::parse(&p.to_string()).unwrap();
+            assert_eq!(p, q);
+        }
+        assert_eq!(Plan::parse("R4->R2").unwrap(), Plan::new(vec![R4, R2]));
+        assert!(Plan::parse("R4->XX").is_none());
+    }
+
+    #[test]
+    fn parse_empty_is_empty_plan() {
+        assert!(Plan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn total_stages_and_validity() {
+        let p = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        assert_eq!(p.total_stages(), 10);
+        assert!(p.is_valid_for(10));
+        assert!(!p.is_valid_for(9));
+    }
+
+    #[test]
+    fn stages_prefix() {
+        let p = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        assert_eq!(p.stages(), vec![0, 2, 3, 5, 7]);
+        assert_eq!(p.steps(), vec![(R4, 0), (R2, 2), (R4, 3), (R4, 5), (F8, 7)]);
+    }
+
+    #[test]
+    fn table3_all_valid_for_l10() {
+        let rows = table3_arrangements();
+        assert_eq!(rows.len(), 10);
+        for row in &rows {
+            assert!(row.plan.is_valid_for(10), "{}: {}", row.key, row.plan);
+        }
+    }
+
+    #[test]
+    fn table3_paper_plans_verbatim() {
+        let rows = table3_arrangements();
+        let by_key = |k: &str| rows.iter().find(|r| r.key == k).unwrap().plan.clone();
+        assert_eq!(by_key("dijkstra_ca_m1"), Plan::new(vec![R4, R2, R4, R4, F8]));
+        assert_eq!(by_key("dijkstra_cf_m1"), Plan::new(vec![R4, F8, F32]));
+        assert_eq!(by_key("haswell_opt"), Plan::new(vec![R4, R8, R8, R4]));
+    }
+}

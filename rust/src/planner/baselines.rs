@@ -1,0 +1,153 @@
+//! Baseline planners the paper compares against (§5.1).
+
+use crate::cost::CostModel;
+use crate::edge::{Context, EdgeType};
+use crate::graph::enumerate::enumerate_plans;
+use crate::plan::Plan;
+
+/// Exhaustive ground truth: evaluate the steady-state contextual time of
+/// every valid plan. Returns (best plan, its time, cells queried).
+pub fn exhaustive_best<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
+    let mut cells = std::collections::HashSet::new();
+    let mut best: Option<(Plan, f64)> = None;
+    for p in enumerate_plans(l, &cost.available_edges()) {
+        if p.is_empty() {
+            continue;
+        }
+        let mut ctx = Context::After(*p.edges().last().unwrap());
+        let mut t = 0.0;
+        for (e, s) in p.steps() {
+            cells.insert((e, s, ctx));
+            t += cost.edge_ns(e, s, ctx);
+            ctx = Context::After(e);
+        }
+        if best.as_ref().is_none_or(|(_, bt)| t < *bt) {
+            best = Some((p, t));
+        }
+    }
+    let (plan, t) = best.expect("no plans");
+    (plan, t, cells.len())
+}
+
+/// FFTW-style dynamic programming (paper §1/§5.1): assumes optimal
+/// substructure — the best way to finish from stage s is independent of
+/// how stage s was reached — and costs codelets in isolation. On a DAG
+/// this is exactly backward DP over isolation weights; it reproduces the
+/// context-free Dijkstra result (the paper's point: the *assumption*, not
+/// the algorithm, is what context-awareness fixes).
+pub fn fftw_dp<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
+    let edges = cost.available_edges();
+    let mut cells = 0usize;
+    // best[s] = minimal isolation cost to go from stage s to L
+    let mut best = vec![f64::INFINITY; l + 1];
+    let mut choice: Vec<Option<EdgeType>> = vec![None; l + 1];
+    best[l] = 0.0;
+    for s in (0..l).rev() {
+        for &e in &edges {
+            let k = e.stages();
+            if !crate::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, s, Context::Start);
+            cells += 1;
+            if w + best[s + k] < best[s] {
+                best[s] = w + best[s + k];
+                choice[s] = Some(e);
+            }
+        }
+    }
+    let mut plan = Vec::new();
+    let mut s = 0;
+    while s < l {
+        let e = choice[s].expect("unreachable");
+        plan.push(e);
+        s += e.stages();
+    }
+    (Plan::new(plan), best[0], cells)
+}
+
+/// SPIRAL-style beam search (paper §5.1: "keep the n-best candidates at
+/// each level"). Prefixes are extended stage by stage under *true*
+/// contextual weights, but only the `width` cheapest prefixes per stage
+/// survive — so the global optimum can be pruned when a locally-worse
+/// prefix would have paid off later (narrow beams reproduce SPIRAL's
+/// position-dependence problem; wide beams converge to exhaustive).
+pub fn beam_search<C: CostModel>(cost: &mut C, l: usize, width: usize) -> (Plan, f64, usize) {
+    assert!(width >= 1);
+    let edges = cost.available_edges();
+    let mut cells = std::collections::HashSet::new();
+    // frontier per stage: (cost so far, plan so far, ctx)
+    let mut frontiers: Vec<Vec<(f64, Vec<EdgeType>, Context)>> = vec![Vec::new(); l + 1];
+    frontiers[0].push((0.0, Vec::new(), Context::Start));
+    for s in 0..l {
+        // prune to beam width
+        frontiers[s].sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        frontiers[s].truncate(width);
+        let snapshot = frontiers[s].clone();
+        for (c, prefix, ctx) in snapshot {
+            for &e in &edges {
+                let k = e.stages();
+                if !crate::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                cells.insert((e, s, ctx));
+                let w = cost.edge_ns(e, s, ctx);
+                let mut np = prefix.clone();
+                np.push(e);
+                frontiers[s + k].push((c + w, np, Context::After(e)));
+            }
+        }
+    }
+    let (c, plan, _) = frontiers[l]
+        .iter()
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .cloned()
+        .expect("no complete plan");
+    (Plan::new(plan), c, cells.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, SimCost};
+
+    #[test]
+    fn exhaustive_small_is_sane() {
+        let mut cost = SimCost::m1(32);
+        let (plan, t, cells) = exhaustive_best(&mut cost, 5);
+        assert!(plan.is_valid_for(5));
+        assert!(t > 0.0);
+        assert!(cells > 0);
+    }
+
+    #[test]
+    fn dp_plan_is_valid_and_minimal_under_isolation() {
+        let mut cost = SimCost::m1(1024);
+        let (plan, t, _) = fftw_dp(&mut cost, 10);
+        assert!(plan.is_valid_for(10));
+        // isolation sum of the DP plan equals its claimed cost
+        let sum: f64 = plan
+            .steps()
+            .into_iter()
+            .map(|(e, s)| cost.edge_ns(e, s, Context::Start))
+            .sum();
+        assert!((sum - t).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beam_width_one_is_greedy_and_valid() {
+        let mut cost = SimCost::m1(1024);
+        let (plan, _, _) = beam_search(&mut cost, 10, 1);
+        assert!(plan.is_valid_for(10));
+    }
+
+    #[test]
+    fn beam_improves_with_width() {
+        let mut cost = SimCost::m1(1024);
+        let (_, t1, _) = beam_search(&mut cost, 10, 1);
+        let (_, t8, _) = beam_search(&mut cost, 10, 8);
+        let (_, t64, _) = beam_search(&mut cost, 10, 64);
+        assert!(t8 <= t1 + 1e-9);
+        assert!(t64 <= t8 + 1e-9);
+    }
+}

@@ -1,0 +1,199 @@
+//! The planner: every search strategy the paper runs or compares against.
+//!
+//! * [`Strategy::DijkstraContextFree`] — paper §2.1 (isolation weights);
+//! * [`Strategy::DijkstraContextAware`] — paper §2.3 (conditional weights,
+//!   the paper's contribution);
+//! * [`Strategy::Exhaustive`] — ground truth: evaluate every valid plan's
+//!   steady-state contextual time (846 plans at L = 10, §2.5);
+//! * [`Strategy::FftwDp`] — FFTW-style dynamic programming with the
+//!   optimal-substructure assumption (§5.1): best sub-plan per stage
+//!   suffix, costed in isolation — equivalent to context-free DP;
+//! * [`Strategy::SpiralBeam`] — SPIRAL-style beam search (§5.1): keep the
+//!   w best prefixes per stage under *true* contextual weights — an
+//!   in-between baseline that fixes some context errors but can drop the
+//!   global optimum when the beam is narrow;
+//! * [`Strategy::Fixed`] — a named fixed arrangement (Table 3 baselines).
+
+pub mod baselines;
+
+use crate::cost::CostModel;
+use crate::edge::Context;
+use crate::graph::enumerate::enumerate_plans;
+use crate::graph::search::{
+    shortest_path_context_aware_k, shortest_path_context_free, SearchResult,
+};
+use crate::plan::Plan;
+
+pub use baselines::{beam_search, exhaustive_best, fftw_dp};
+
+/// Planning strategy selector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Strategy {
+    DijkstraContextFree,
+    /// Context order k (1 = the paper's model, 2 = §5.1 extension).
+    DijkstraContextAware { k: usize },
+    Exhaustive,
+    FftwDp,
+    /// SPIRAL-style beam with the given width.
+    SpiralBeam { width: usize },
+    Fixed(Plan),
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::DijkstraContextFree => "dijkstra-cf".into(),
+            Strategy::DijkstraContextAware { k } => format!("dijkstra-ca(k={k})"),
+            Strategy::Exhaustive => "exhaustive".into(),
+            Strategy::FftwDp => "fftw-dp".into(),
+            Strategy::SpiralBeam { width } => format!("spiral-beam({width})"),
+            Strategy::Fixed(p) => format!("fixed[{p}]"),
+        }
+    }
+}
+
+/// Outcome of planning: the plan, the cost the strategy *believed*, and
+/// the true steady-state contextual time.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub strategy: String,
+    pub plan: Plan,
+    /// Cost under the strategy's own objective (ns).
+    pub believed_ns: f64,
+    /// True steady-state contextual time (ns).
+    pub true_ns: f64,
+    /// Distinct weight cells queried.
+    pub cells: usize,
+}
+
+/// Run a strategy against a cost model for an n-point FFT.
+pub fn plan<C: CostModel>(cost: &mut C, strategy: &Strategy) -> PlanOutcome {
+    let l = crate::fft::log2i(cost.n());
+    let (plan, believed, cells) = match strategy {
+        Strategy::DijkstraContextFree => {
+            let SearchResult { plan, cost_ns, cells } = shortest_path_context_free(cost, l);
+            (plan, cost_ns, cells)
+        }
+        Strategy::DijkstraContextAware { k } => {
+            let SearchResult { plan, cost_ns, cells } = shortest_path_context_aware_k(cost, l, *k);
+            (plan, cost_ns, cells)
+        }
+        Strategy::Exhaustive => {
+            let (plan, ns, cells) = exhaustive_best(cost, l);
+            (plan, ns, cells)
+        }
+        Strategy::FftwDp => {
+            let (plan, ns, cells) = fftw_dp(cost, l);
+            (plan, ns, cells)
+        }
+        Strategy::SpiralBeam { width } => {
+            let (plan, ns, cells) = beam_search(cost, l, *width);
+            (plan, ns, cells)
+        }
+        Strategy::Fixed(p) => {
+            assert!(p.is_valid_for(l), "fixed plan {p} invalid for l={l}");
+            (p.clone(), f64::NAN, 0)
+        }
+    };
+    let true_ns = cost.plan_ns(&plan);
+    PlanOutcome {
+        strategy: strategy.name(),
+        plan,
+        believed_ns: believed,
+        true_ns,
+        cells,
+    }
+}
+
+/// From-start contextual cost of a plan (the CA search objective).
+pub fn plan_cost_from_start<C: CostModel>(cost: &mut C, plan: &Plan) -> f64 {
+    let mut ctx = Context::Start;
+    let mut total = 0.0;
+    for (e, s) in plan.steps() {
+        total += cost.edge_ns(e, s, ctx);
+        ctx = Context::After(e);
+    }
+    total
+}
+
+/// Every valid plan with its true steady-state time, sorted fastest-first.
+pub fn rank_all_plans<C: CostModel>(cost: &mut C, l: usize) -> Vec<(Plan, f64)> {
+    let mut rows: Vec<(Plan, f64)> = enumerate_plans(l, &cost.available_edges())
+        .into_iter()
+        .map(|p| {
+            let t = cost.plan_ns(&p);
+            (p, t)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::SimCost;
+
+    #[test]
+    fn all_strategies_produce_valid_plans() {
+        let mut cost = SimCost::m1(256);
+        for strat in [
+            Strategy::DijkstraContextFree,
+            Strategy::DijkstraContextAware { k: 1 },
+            Strategy::Exhaustive,
+            Strategy::FftwDp,
+            Strategy::SpiralBeam { width: 3 },
+            Strategy::Fixed(Plan::parse("R4,R4,R4,R2,R2").unwrap()),
+        ] {
+            let out = plan(&mut cost, &strat);
+            assert!(out.plan.is_valid_for(8), "{}: {}", out.strategy, out.plan);
+            assert!(out.true_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn exhaustive_is_global_minimum() {
+        let mut cost = SimCost::m1(256);
+        let ex = plan(&mut cost, &Strategy::Exhaustive);
+        for (_, t) in rank_all_plans(&mut cost, 8) {
+            assert!(ex.true_ns <= t + 1e-6);
+        }
+    }
+
+    #[test]
+    fn context_aware_matches_exhaustive_on_m1() {
+        // The CA search optimizes from-start cost; with the first edge's
+        // steady-state context differing only mildly, it should find the
+        // exhaustive optimum (calibration keeps these consistent).
+        let mut cost = SimCost::m1(1024);
+        let ca = plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
+        let ex = plan(&mut cost, &Strategy::Exhaustive);
+        assert_eq!(ca.plan, ex.plan, "ca {} vs ex {}", ca.plan, ex.plan);
+    }
+
+    #[test]
+    fn fftw_dp_equals_context_free_dijkstra_objective() {
+        // Both assume optimal substructure over isolation weights; on a
+        // DAG they find the same minimum.
+        let mut cost = SimCost::m1(1024);
+        let dp = plan(&mut cost, &Strategy::FftwDp);
+        let cf = plan(&mut cost, &Strategy::DijkstraContextFree);
+        assert!((dp.believed_ns - cf.believed_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wide_beam_recovers_optimum() {
+        let mut cost = SimCost::m1(256);
+        let beam = plan(&mut cost, &Strategy::SpiralBeam { width: 4096 });
+        let ex = plan(&mut cost, &Strategy::Exhaustive);
+        assert!((beam.true_ns - ex.true_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fixed_strategy_reports_nan_belief() {
+        let mut cost = SimCost::m1(256);
+        let out = plan(&mut cost, &Strategy::Fixed(Plan::parse("R8,F8,R2,R2").unwrap()));
+        assert!(out.believed_ns.is_nan());
+        assert!(out.true_ns > 0.0);
+    }
+}

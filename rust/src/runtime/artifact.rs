@@ -1,0 +1,336 @@
+//! Artifact manifest + the PJRT executable registry.
+//!
+//! `make artifacts` emits `artifacts/manifest.json` (see
+//! python/compile/aot.py) describing per-edge HLO files, per-arrangement
+//! full-FFT files, and the bit-reversal epilogue. [`Registry`] parses the
+//! manifest (with the in-tree JSON parser), compiles executables lazily on
+//! its own PJRT CPU client, and executes them on split-complex buffers.
+//!
+//! The `xla` crate's client is not `Sync` (it wraps an `Rc`), so a
+//! `Registry` is single-threaded by construction; the coordinator owns one
+//! per worker thread.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::edge::EdgeType;
+use crate::fft::SplitComplex;
+use crate::plan::Plan;
+use crate::util::json::{self, Json};
+
+/// Kind of an artifact (mirrors `kind` in the manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One graph edge: `edge` at `stage` (no bit-reversal).
+    Edge { edge: EdgeType, stage: usize },
+    /// A full named arrangement (with bit-reversal).
+    Full { arrangement: String, plan: Plan },
+    /// The bit-reversal permutation alone.
+    Bitrev,
+}
+
+/// One artifact description from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub flops: u64,
+    pub kind: ArtifactKind,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.json` content.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if root.get("format").as_str() != Some("hlo-text") {
+            bail!("unsupported manifest format {:?}", root.get("format"));
+        }
+        let arts = root
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
+            );
+            let n = a
+                .get("n")
+                .as_usize()
+                .ok_or_else(|| anyhow!("artifact {name}: missing n"))?;
+            let flops = a.get("flops").as_f64().unwrap_or(0.0) as u64;
+            let kind = match a.get("kind").as_str() {
+                Some("edge") => {
+                    let edge = a
+                        .get("edge")
+                        .as_str()
+                        .and_then(EdgeType::parse)
+                        .ok_or_else(|| anyhow!("artifact {name}: bad edge"))?;
+                    let stage = a
+                        .get("stage")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("artifact {name}: bad stage"))?;
+                    ArtifactKind::Edge { edge, stage }
+                }
+                Some("full") => {
+                    let arrangement = a
+                        .get("arrangement")
+                        .as_str()
+                        .unwrap_or(&name)
+                        .to_string();
+                    let edges = a
+                        .get("plan")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("artifact {name}: missing plan"))?
+                        .iter()
+                        .map(|v| {
+                            v.as_str()
+                                .and_then(EdgeType::parse)
+                                .ok_or_else(|| anyhow!("artifact {name}: bad plan edge {v:?}"))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    ArtifactKind::Full { arrangement, plan: Plan::new(edges) }
+                }
+                Some("bitrev") => ArtifactKind::Bitrev,
+                other => bail!("artifact {name}: unknown kind {other:?}"),
+            };
+            artifacts.push(ArtifactSpec { name, file, n, flops, kind });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Specs filtered to one FFT size.
+    pub fn for_n(&self, n: usize) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.n == n).collect()
+    }
+
+    /// Find the edge artifact for (n, edge, stage).
+    pub fn edge(&self, n: usize, edge: EdgeType, stage: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(
+            |a| a.n == n && matches!(&a.kind, ArtifactKind::Edge { edge: e, stage: s } if *e == edge && *s == stage),
+        )
+    }
+
+    /// Find a full arrangement by key (e.g. "dijkstra_ca_m1").
+    pub fn full(&self, n: usize, arrangement: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(
+            |a| a.n == n && matches!(&a.kind, ArtifactKind::Full { arrangement: k, .. } if k == arrangement),
+        )
+    }
+
+    /// The bitrev artifact for n.
+    pub fn bitrev(&self, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.n == n && a.kind == ArtifactKind::Bitrev)
+    }
+}
+
+/// Compiled-executable registry over one PJRT CPU client.
+pub struct Registry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Registry {
+    /// Load the manifest from `dir` and create the PJRT client. HLO is
+    /// compiled lazily per artifact on first execution.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        Ok(Registry { manifest, client, compiled: HashMap::new() })
+    }
+
+    /// Number of compiled executables so far.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Compile (or fetch) the executable for an artifact name.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact on a split-complex buffer (out of place).
+    pub fn execute(&mut self, name: &str, input: &SplitComplex) -> Result<SplitComplex> {
+        let exe = self.executable(name)?;
+        let re = xla::Literal::vec1(&input.re);
+        let im = xla::Literal::vec1(&input.im);
+        let result = exe
+            .execute::<xla::Literal>(&[re, im])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: (re, im).
+        let (re_out, im_out) = lit.to_tuple2().map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        Ok(SplitComplex::from_parts(
+            re_out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            im_out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Execute an arbitrary plan by chaining per-edge artifacts, then the
+    /// bit-reversal epilogue. This is how the coordinator serves plans the
+    /// planner discovered at run time without re-running Python.
+    pub fn execute_plan(&mut self, n: usize, plan: &Plan, input: &SplitComplex) -> Result<SplitComplex> {
+        let mut cur = input.clone();
+        for (edge, stage) in plan.steps() {
+            let name = self
+                .manifest
+                .edge(n, edge, stage)
+                .ok_or_else(|| anyhow!("no artifact for {edge}@{stage} n={n}"))?
+                .name
+                .clone();
+            cur = self.execute(&name, &cur)?;
+        }
+        let bitrev = self
+            .manifest
+            .bitrev(n)
+            .ok_or_else(|| anyhow!("no bitrev artifact for n={n}"))?
+            .name
+            .clone();
+        self.execute(&bitrev, &cur)
+    }
+}
+
+/// Serialize a manifest back to JSON (used by tests and tooling).
+pub fn manifest_to_json(m: &Manifest) -> Json {
+    use std::collections::BTreeMap;
+    let arts: Vec<Json> = m
+        .artifacts
+        .iter()
+        .map(|a| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(a.name.clone()));
+            o.insert(
+                "file".into(),
+                Json::Str(a.file.file_name().unwrap().to_string_lossy().into_owned()),
+            );
+            o.insert("n".into(), Json::Num(a.n as f64));
+            o.insert("flops".into(), Json::Num(a.flops as f64));
+            match &a.kind {
+                ArtifactKind::Edge { edge, stage } => {
+                    o.insert("kind".into(), Json::Str("edge".into()));
+                    o.insert("edge".into(), Json::Str(edge.name().into()));
+                    o.insert("stage".into(), Json::Num(*stage as f64));
+                }
+                ArtifactKind::Full { arrangement, plan } => {
+                    o.insert("kind".into(), Json::Str("full".into()));
+                    o.insert("arrangement".into(), Json::Str(arrangement.clone()));
+                    o.insert(
+                        "plan".into(),
+                        Json::Arr(plan.edges().iter().map(|e| Json::Str(e.name().into())).collect()),
+                    );
+                }
+                ArtifactKind::Bitrev => {
+                    o.insert("kind".into(), Json::Str("bitrev".into()));
+                }
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("format".into(), Json::Str("hlo-text".into()));
+    root.insert("artifacts".into(), Json::Arr(arts));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "inputs": ["re", "im"],
+      "artifacts": [
+        {"name": "edge_r2_s0_n32", "file": "edge_r2_s0_n32.hlo.txt", "n": 32,
+         "flops": 800, "kind": "edge", "edge": "R2", "stage": 0, "bitrev": false},
+        {"name": "bitrev_n32", "file": "bitrev_n32.hlo.txt", "n": 32,
+         "flops": 800, "kind": "bitrev", "bitrev": true},
+        {"name": "full_r2all_n32", "file": "full_r2all_n32.hlo.txt", "n": 32,
+         "flops": 800, "kind": "full", "arrangement": "r2all",
+         "plan": ["R2","R2","R2","R2","R2"], "bitrev": true}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let e = m.edge(32, EdgeType::R2, 0).unwrap();
+        assert_eq!(e.name, "edge_r2_s0_n32");
+        assert_eq!(e.file, PathBuf::from("/tmp/a/edge_r2_s0_n32.hlo.txt"));
+        assert!(m.edge(32, EdgeType::R2, 1).is_none());
+        assert!(m.edge(64, EdgeType::R2, 0).is_none());
+        let f = m.full(32, "r2all").unwrap();
+        match &f.kind {
+            ArtifactKind::Full { plan, .. } => assert_eq!(plan.len(), 5),
+            _ => panic!(),
+        }
+        assert!(m.bitrev(32).is_some());
+        assert_eq!(m.for_n(32).len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"format":"protobuf","artifacts":[]}"#, Path::new(".")).is_err());
+        let bad_edge = SAMPLE.replace("\"R2\", \"stage\": 0", "\"R99\", \"stage\": 0");
+        assert!(Manifest::parse(&bad_edge, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let j = manifest_to_json(&m);
+        let text = crate::util::json::to_string(&j);
+        let m2 = Manifest::parse(&text, Path::new(".")).unwrap();
+        assert_eq!(m2.artifacts.len(), m.artifacts.len());
+        for (a, b) in m.artifacts.iter().zip(&m2.artifacts) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! Python/JAX runs only at build time; this module is the request-path
+//! bridge: HLO **text** artifacts (see python/compile/aot.py — text, not
+//! serialized protos, because jax >= 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) are parsed, compiled once per executable
+//! on the PJRT CPU client, and executed on split-complex buffers.
+//!
+//! * [`artifact`] — manifest parsing + the executable registry;
+//! * [`pjrt_cost`] — a [`crate::cost::CostModel`] that measures the
+//!   compiled per-edge executables with the paper's context protocol.
+
+pub mod artifact;
+pub mod pjrt_cost;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, Registry};
+pub use pjrt_cost::PjrtCost;
+
+/// Default artifacts directory: `$SPFFT_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SPFFT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

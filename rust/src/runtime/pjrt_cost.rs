@@ -1,0 +1,125 @@
+//! Edge weights measured over the AOT-compiled PJRT executables.
+//!
+//! Same protocol as [`crate::cost::NativeCost`] (paper §2.3: run the
+//! predecessor untimed, then time the edge), but the timed operation is
+//! the HLO executable produced by the Pallas/JAX build path — so the
+//! planner can optimize for the actual artifact stack it will serve with.
+//!
+//! Note: PJRT CPU execution carries per-call dispatch overhead that the
+//! native path doesn't have; weights from this provider are *self-
+//! consistent* (valid for ranking plans executed via PJRT) but not
+//! comparable in absolute terms to the simulated-M1 numbers.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::cost::CostModel;
+use crate::edge::{Context, EdgeType, ALL_EDGES};
+use crate::fft::SplitComplex;
+use crate::util::stats::{measure, MeasureSpec};
+
+use super::artifact::Registry;
+
+/// Live measurement provider over PJRT executables.
+pub struct PjrtCost {
+    registry: Registry,
+    n: usize,
+    spec: MeasureSpec,
+    buf: SplitComplex,
+    cache: HashMap<(EdgeType, usize, Context), f64>,
+}
+
+impl PjrtCost {
+    pub fn new(registry: Registry, n: usize, spec: MeasureSpec) -> PjrtCost {
+        crate::fft::log2i(n);
+        PjrtCost {
+            registry,
+            n,
+            spec,
+            buf: SplitComplex::random(n, 0xBEEF),
+            cache: HashMap::new(),
+        }
+    }
+
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    pub fn into_registry(self) -> Registry {
+        self.registry
+    }
+
+    fn edge_artifact(&self, edge: EdgeType, stage: usize) -> Result<String> {
+        Ok(self
+            .registry
+            .manifest
+            .edge(self.n, edge, stage)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {edge}@{stage} n={}", self.n))?
+            .name
+            .clone())
+    }
+
+    fn measure_cell(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> Result<f64> {
+        let timed = self.edge_artifact(edge, stage)?;
+        let prefix = match ctx {
+            Context::Start => None,
+            Context::After(prev) if stage >= prev.stages() => {
+                Some(self.edge_artifact(prev, stage - prev.stages())?)
+            }
+            Context::After(_) => None,
+        };
+        // Pre-compile both executables outside the timed region.
+        self.registry.executable(&timed)?;
+        if let Some(p) = &prefix {
+            self.registry.executable(p)?;
+        }
+        // PJRT execution is out-of-place: the input buffer never mutates,
+        // so both closures can share the registry through a RefCell.
+        let spec = self.spec;
+        let buf = self.buf.clone();
+        let reg_cell = std::cell::RefCell::new(&mut self.registry);
+        let mut timed_fn = || {
+            let _ = reg_cell.borrow_mut().execute(&timed, &buf).expect("pjrt exec");
+        };
+        let m = match prefix {
+            None => measure(spec, None, &mut timed_fn),
+            Some(pfx) => {
+                let mut pre_fn = || {
+                    let _ = reg_cell.borrow_mut().execute(&pfx, &buf).expect("pjrt exec");
+                };
+                measure(spec, Some(&mut pre_fn), &mut timed_fn)
+            }
+        };
+        Ok(m.ns)
+    }
+}
+
+impl CostModel for PjrtCost {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        // Only edges with artifacts in the manifest.
+        ALL_EDGES
+            .iter()
+            .copied()
+            .filter(|e| {
+                (0..=crate::fft::log2i(self.n) - e.stages())
+                    .any(|s| self.registry.manifest.edge(self.n, *e, s).is_some())
+            })
+            .collect()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        if let Some(&v) = self.cache.get(&(edge, stage, ctx)) {
+            return v;
+        }
+        let v = self
+            .measure_cell(edge, stage, ctx)
+            .unwrap_or_else(|e| panic!("pjrt measurement failed: {e}"));
+        self.cache.insert((edge, stage, ctx), v);
+        v
+    }
+}

@@ -1,0 +1,216 @@
+//! Compute-side cost: instruction-schedule estimate per edge.
+//!
+//! Two components, kept separate because they respond to context
+//! differently (see [`super::machine`]):
+//!
+//! * [`base_compute_ns`] — context-independent issue cost: butterfly
+//!   vector groups through the FMA pipes, SIMD collapse when the
+//!   vectorized j-range falls below the vector width (the stride-1/2
+//!   decay of paper Table 4), per-block loop overhead, fused-block
+//!   transpose/gather layout work.
+//! * [`pressure_ns`] — register-pressure cost: spill/reload traffic for
+//!   working sets beyond the register file plus mid-path twiddle reloads.
+//!   In an *isolation* benchmark loop the spill slots and twiddles stay
+//!   L1-hot and mostly forwarded, so this cost is largely hidden; inside a
+//!   real arrangement the neighbouring passes keep the LSU busy and evict
+//!   the spill lines, exposing it. This is precisely the effect that makes
+//!   context-free (isolation-measured) weights over-value FFT-32 (paper
+//!   §5.2 + finding 3) — the model charges it at a context-dependent
+//!   multiplier.
+
+use crate::edge::EdgeType;
+
+use super::params::MachineParams;
+
+/// Vectorized butterfly groups the edge issues for an n-point FFT.
+/// (Number of `lanes`-wide issue groups across the whole array.)
+pub fn vector_groups(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) -> f64 {
+    let m = n >> stage;
+    if edge.is_fused() {
+        let b = edge.block_size().unwrap();
+        ((n / b) as f64 / p.lanes as f64).ceil()
+    } else {
+        let r = 1usize << edge.stages();
+        let j_range = m / r;
+        let blocks = (n / m) as f64;
+        blocks * j_range.div_ceil(p.lanes) as f64
+    }
+}
+
+/// Context-independent issue cost, in ns.
+pub fn base_compute_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) -> f64 {
+    let m = n >> stage;
+    assert!(
+        m >= (1 << edge.stages()),
+        "{edge} at stage {stage} invalid for n={n}"
+    );
+    let groups = vector_groups(p, n, edge, stage);
+    let blocks = (n / m) as f64;
+    let cycles = if edge.is_fused() {
+        let b = edge.block_size().unwrap();
+        let lb = edge.stages();
+        let e = m / b;
+        // Work per vector group: B points x log2(B) stages, lanes points
+        // per instruction; deeper in-register networks schedule less
+        // cleanly (longer dependence chains), hence the depth factor.
+        let depth = 1.0 + p.fused_depth_gamma * ((b / 8) as f64 - 1.0);
+        let work = (b * lb * p.lanes) as f64 * p.bf.fused_per_point_stage * depth;
+        // Layout work scales with the number of vectors shuffled per group.
+        let vecs_per_group = (b as f64) / (p.lanes as f64) * 2.0;
+        let layout = if e < p.lanes {
+            // Terminal/contiguous: in-register transposes, and the
+            // j-twiddles degenerate to lane constants (j = 0) — the
+            // register counts of paper Table 1 are these terminal counts.
+            p.fused_transpose_cyc * vecs_per_group
+        } else {
+            // Mid-path: strided gather/scatter of the B-point groups.
+            p.fused_gather_cyc * vecs_per_group
+        };
+        // Mid-path blocks additionally stream a j-twiddle vector pair per
+        // sub-stage per group (terminal blocks need none: j = 0).
+        let twiddle = if e >= p.lanes {
+            lb as f64 * p.fused_twiddle_stream_cyc
+        } else {
+            0.0
+        };
+        // Fused blocks iterate groups in a flat unrolled loop — overhead
+        // amortizes per vector group, not per FFT block.
+        groups * (work + layout + twiddle + p.blk_overhead_cyc)
+    } else {
+        let r = 1usize << edge.stages();
+        let j_range = m / r;
+        let per_group = match edge {
+            EdgeType::R2 => p.bf.r2,
+            EdgeType::R4 => p.bf.r4,
+            EdgeType::R8 => p.bf.r8,
+            _ => unreachable!(),
+        };
+        // SIMD collapse: with j_range < lanes, butterflies mix within a
+        // register; charge the unused-lane fraction at the scalar penalty.
+        // Higher radices amortize the scalar fallback over more work per
+        // butterfly, so the penalty scales with 1/stages.
+        let eff = (j_range.min(p.lanes) as f64) / (p.lanes as f64);
+        let collapse = if j_range < p.lanes {
+            let amortize = if p.collapse_amortized { edge.stages() as f64 } else { 1.0 };
+            1.0 + (1.0 - eff) * p.scalar_penalty / amortize
+        } else {
+            1.0
+        };
+        blocks * ((j_range.div_ceil(p.lanes) as f64) * per_group * collapse)
+            + blocks * p.blk_overhead_cyc
+    };
+    cycles * p.ns_per_cyc()
+}
+
+/// Register working set of `edge` at (n, stage), in vector registers.
+/// Terminal fused blocks need no j-twiddles (j = 0 ⇒ W^0 = 1), so their
+/// working set shrinks to data + lane constants + temps.
+pub fn working_set(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) -> usize {
+    let m = n >> stage;
+    if edge.is_fused() {
+        let b = edge.block_size().unwrap();
+        let e = m / b;
+        let data = 2 * b / p.lanes.max(1); // split-complex points in vregs
+        let lane_consts = b / 4; // W_B roots kept as vector immediates
+        let temps = b / 4 + 4; // double-buffered halves of the network
+        if e < p.lanes {
+            // terminal: lane constants only
+            data + lane_consts + temps
+        } else {
+            // mid-path: + log2(B) j-twiddle vector pairs
+            data + lane_consts + temps + 2 * edge.stages()
+        }
+    } else {
+        p.working_set_vregs(edge)
+    }
+}
+
+/// Register-pressure cost, in ns, at its *full* (in-arrangement) price.
+/// The machine model scales this by a context multiplier.
+pub fn pressure_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) -> f64 {
+    let ws = working_set(p, n, edge, stage);
+    let cap = p.usable_vregs();
+    let spilled = ws.saturating_sub(cap) as f64;
+    let groups = vector_groups(p, n, edge, stage);
+    // (the paper's "twiddle-factor spills", §5.2)
+    // Spilled registers are re-touched on every internal sub-stage.
+    let touches = edge.stages() as f64;
+    let cyc = spilled * p.spill_cyc_per_vreg * touches * groups;
+    cyc * p.ns_per_cyc()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::ALL_EDGES;
+
+    fn m1() -> MachineParams {
+        MachineParams::m1()
+    }
+
+    #[test]
+    fn all_edges_positive_cost() {
+        let p = m1();
+        for e in ALL_EDGES {
+            for s in 0..=(10 - e.stages()) {
+                assert!(base_compute_ns(&p, 1024, e, s) > 0.0, "{e} at {s}");
+                assert!(pressure_ns(&p, 1024, e, s) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_collapse_raises_late_r2_cost() {
+        // Paper Table 4: stride-1 radix-2 decays toward scalar.
+        let p = m1();
+        let mid = base_compute_ns(&p, 1024, EdgeType::R2, 5);
+        let last = base_compute_ns(&p, 1024, EdgeType::R2, 9);
+        assert!(last > 2.0 * mid, "mid={mid} last={last}");
+    }
+
+    #[test]
+    fn terminal_fused_working_set_matches_paper_table1_scale() {
+        let p = m1();
+        // F8 terminal: small; F32 terminal: exceeds even NEON's file once
+        // lane constants and temps are counted (the paper's spill story).
+        let f8 = working_set(&p, 1024, EdgeType::F8, 7);
+        let f16 = working_set(&p, 1024, EdgeType::F16, 6);
+        let f32t = working_set(&p, 1024, EdgeType::F32, 5);
+        assert!(f8 < f16 && f16 < f32t);
+        assert!(f8 <= p.usable_vregs());
+        assert!(f32t > p.usable_vregs(), "f32 terminal ws {f32t}");
+    }
+
+    #[test]
+    fn fft32_pressure_dominates_fft8() {
+        let p = m1();
+        let f8 = pressure_ns(&p, 1024, EdgeType::F8, 7);
+        let f32p = pressure_ns(&p, 1024, EdgeType::F32, 5);
+        assert!(f32p > f8, "f8={f8} f32={f32p}");
+    }
+
+    #[test]
+    fn radix8_pressure_on_m1_not_haswell() {
+        // Finding 2 (M1/NEON): R8 spills on the load-store ISA. On AVX2,
+        // memory-operand folding lets R8 fit 16 registers (finding 5).
+        let m1p = MachineParams::m1();
+        let hw = MachineParams::haswell();
+        assert!(pressure_ns(&m1p, 1024, EdgeType::R8, 3) > 0.0);
+        assert_eq!(pressure_ns(&hw, 1024, EdgeType::R8, 3), 0.0);
+    }
+
+    #[test]
+    fn compute_scales_roughly_linearly_in_n() {
+        let p = m1();
+        let c256 = base_compute_ns(&p, 256, EdgeType::R4, 0);
+        let c1024 = base_compute_ns(&p, 1024, EdgeType::R4, 0);
+        let ratio = c1024 / c256;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid")]
+    fn invalid_stage_panics() {
+        base_compute_ns(&m1(), 1024, EdgeType::F32, 6);
+    }
+}

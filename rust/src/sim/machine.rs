@@ -1,0 +1,172 @@
+//! The combined machine model: per-edge conditional costs and plan timing.
+//!
+//! `edge_ns(n, edge, stage, ctx)` is the simulated equivalent of one cell
+//! of the paper's measurement database: "time of `edge` at `stage`
+//! immediately after `ctx`" (Eq. 2). The three components:
+//!
+//! ```text
+//! cost = base_compute + pressure x pmult(ctx) + mem x bank x ctx_factor
+//! ```
+//!
+//! * isolation (`Context::Start`) *hides* register-pressure cost
+//!   (`pressure_start_mult` < 1): a benchmark loop running one edge keeps
+//!   its spill slots and twiddles L1-hot. This is how context-free search
+//!   gets fooled into the FFT-32 plan (paper finding 3);
+//! * warm contexts apply the cache-residual affinity of
+//!   [`super::memory::context_factor`] — the sandwiched-R2 mechanism.
+
+use crate::edge::{Context, EdgeType, ALL_EDGES};
+use crate::plan::Plan;
+
+use super::compute::{base_compute_ns, pressure_ns};
+use super::memory::mem_ns;
+use super::params::MachineParams;
+
+/// A simulated machine: parameters + cost queries.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub params: MachineParams,
+}
+
+impl Machine {
+    pub fn new(params: MachineParams) -> Machine {
+        Machine { params }
+    }
+
+    pub fn m1() -> Machine {
+        Machine::new(MachineParams::m1())
+    }
+
+    pub fn haswell() -> Machine {
+        Machine::new(MachineParams::haswell())
+    }
+
+    pub fn by_name(name: &str) -> Option<Machine> {
+        MachineParams::by_name(name).map(Machine::new)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.params.name
+    }
+
+    /// Whether `edge` exists on this machine (F32 needs 32 vregs).
+    pub fn edge_available(&self, edge: EdgeType) -> bool {
+        self.params.edge_available(edge)
+    }
+
+    /// Edge types available on this machine.
+    pub fn available_edges(&self) -> Vec<EdgeType> {
+        ALL_EDGES.iter().copied().filter(|e| self.edge_available(*e)).collect()
+    }
+
+    /// Simulated time of `edge` at `stage` for an n-point FFT, conditioned
+    /// on the predecessor context — one cell of the measurement database.
+    pub fn edge_ns(&self, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        assert!(self.edge_available(edge), "{edge} unavailable on {}", self.name());
+        let p = &self.params;
+        let pmult = match ctx {
+            Context::Start => p.pressure_start_mult,
+            Context::After(_) => 1.0,
+        };
+        base_compute_ns(p, n, edge, stage)
+            + pressure_ns(p, n, edge, stage) * pmult
+            + mem_ns(p, n, edge, stage, ctx)
+    }
+
+    /// Steady-state time of a full plan: every edge is costed in its true
+    /// context; the first edge's context is the *last* edge of the plan
+    /// (benchmark loops run the arrangement back-to-back, so in steady
+    /// state the first pass sees the final pass's cache residual).
+    pub fn plan_ns(&self, n: usize, plan: &Plan) -> f64 {
+        assert!(!plan.is_empty(), "empty plan");
+        let steps = plan.steps();
+        let mut ctx = Context::After(*plan.edges().last().unwrap());
+        let mut total = 0.0;
+        for &(edge, stage) in &steps {
+            total += self.edge_ns(n, edge, stage, ctx);
+            ctx = Context::After(edge);
+        }
+        total
+    }
+
+    /// One-shot (cold-ish) plan time: first edge from `Context::Start`.
+    pub fn plan_ns_from_start(&self, n: usize, plan: &Plan) -> f64 {
+        assert!(!plan.is_empty(), "empty plan");
+        let mut ctx = Context::Start;
+        let mut total = 0.0;
+        for (edge, stage) in plan.steps() {
+            total += self.edge_ns(n, edge, stage, ctx);
+            ctx = Context::After(edge);
+        }
+        total
+    }
+
+    /// GFLOPS of a plan under the paper's 5·N·log2(N) convention.
+    pub fn plan_gflops(&self, n: usize, plan: &Plan) -> f64 {
+        crate::util::stats::gflops(n, self.plan_ns(n, plan))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::Context::{After, Start};
+    use crate::plan::table3_arrangements;
+
+    #[test]
+    fn edge_costs_positive_and_finite() {
+        let m = Machine::m1();
+        for e in ALL_EDGES {
+            for s in 0..=(10 - e.stages()) {
+                for ctx in Context::all() {
+                    let c = m.edge_ns(1024, e, s, ctx);
+                    assert!(c.is_finite() && c > 0.0, "{e}@{s} {ctx}: {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_time_is_sum_of_contextual_edges() {
+        let m = Machine::m1();
+        let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        let manual = m.edge_ns(1024, EdgeType::R4, 0, After(EdgeType::F8))
+            + m.edge_ns(1024, EdgeType::R2, 2, After(EdgeType::R4))
+            + m.edge_ns(1024, EdgeType::R4, 3, After(EdgeType::R2))
+            + m.edge_ns(1024, EdgeType::R4, 5, After(EdgeType::R4))
+            + m.edge_ns(1024, EdgeType::F8, 7, After(EdgeType::R4));
+        assert!((m.plan_ns(1024, &plan) - manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn start_context_differs_from_warm() {
+        let m = Machine::m1();
+        let warm = m.edge_ns(1024, EdgeType::R2, 2, After(EdgeType::R4));
+        let cold = m.edge_ns(1024, EdgeType::R2, 2, Start);
+        assert!(cold > warm);
+    }
+
+    #[test]
+    #[should_panic(expected = "unavailable")]
+    fn f32_panics_on_haswell() {
+        Machine::haswell().edge_ns(1024, EdgeType::F32, 5, Start);
+    }
+
+    #[test]
+    fn all_table3_plans_have_finite_times() {
+        let m = Machine::m1();
+        for row in table3_arrangements() {
+            let t = m.plan_ns(1024, &row.plan);
+            assert!(t.is_finite() && t > 0.0, "{}", row.key);
+        }
+    }
+
+    #[test]
+    fn fused_plans_beat_pure_radix() {
+        // Paper finding 1: fused blocks dominate radix choice (4x gap).
+        let m = Machine::m1();
+        let pure = m.plan_ns(1024, &Plan::parse("R4,R4,R4,R4,R4").unwrap());
+        let fused = m.plan_ns(1024, &Plan::parse("R4,R4,R4,F16").unwrap());
+        assert!(pure > 1.5 * fused, "pure={pure} fused={fused}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Memory-side cost and the context (cache-residual) model.
+//!
+//! Every edge moves the whole split-complex array through the LSU exactly
+//! once (radix passes per pass; fused blocks once per log2 B stages —
+//! their defining advantage, paper Table 1). The round-trip cost is:
+//!
+//! ```text
+//! mem_ns = bytes / L1_bandwidth x bank(edge, stage) x ctx(prev -> edge)
+//! ```
+//!
+//! * `bank` — widely-strided butterfly streams conflict in the L1 banks /
+//!   TLB: a mild linear penalty in the read stride (drives the slow
+//!   large-stride passes on the left of paper Table 4).
+//! * `ctx`  — the paper's context effect (Eq. 2). The predecessor's final
+//!   write stride determines which line residuals are hot:
+//!   - a radix pass ending at stage s writes its outputs at stride
+//!     (n >> s) / r · r-grouped, i.e. leaves *stride n>>s residuals*;
+//!     a following radix-2 pass reads pairs at distance (n>>s)/2 — exactly
+//!     half the residual stride, so its two load streams split one hot
+//!     residual stream (store-forward friendly): `affinity_half_stride`.
+//!     This is the paper's sandwiched-R2 mechanism (finding 4: "the
+//!     preceding R4 leaves stride-64 lines hot, and a single R2 at
+//!     stride-128 reuses them"). Only effective while the stride exceeds
+//!     a cache line — at small strides everything is line-local anyway.
+//!   - repeating the same pass type re-reads its own write pattern:
+//!     `affinity_same_stride` (better than a random predecessor, worse
+//!     than the half-stride split).
+//!   - a *fused* predecessor scatters B-strided groups across the whole
+//!     array, leaving a residual that next pass's streams cannot ride:
+//!     `after_fused_mem` (> 1).
+//!   - `Context::Start` (isolation measurement): `start_mem` (> 1), no
+//!     residual help at all.
+
+use crate::edge::{Context, EdgeType};
+
+use super::params::MachineParams;
+
+/// Bytes moved by one edge round trip (read + write of both f32 arrays).
+pub fn round_trip_bytes(n: usize) -> f64 {
+    (16 * n) as f64
+}
+
+/// Read stride of `edge` at `stage`, in elements: the distance between the
+/// points a butterfly (or fused gather) combines.
+pub fn read_stride_elems(n: usize, edge: EdgeType, stage: usize) -> usize {
+    let m = n >> stage;
+    if edge.is_fused() {
+        m / edge.block_size().unwrap()
+    } else {
+        m / (1 << edge.stages())
+    }
+}
+
+/// Final write stride an edge leaves behind, in elements. Every edge
+/// (radix or fused) covering stages [s, s+k) leaves its last sub-stage's
+/// outputs at stride n >> (s+k).
+pub fn write_residual_elems(n: usize, edge: EdgeType, start_stage: usize) -> usize {
+    n >> (start_stage + edge.stages())
+}
+
+/// Bank/TLB inefficiency of the access pattern (applies in all contexts).
+///
+/// Every edge at stage s spreads its butterfly streams across the current
+/// block span m = n >> s: a radix-r pass runs r streams at stride m/r, a
+/// fused-B block B streams at stride m/B — stream count x stride = span
+/// either way, and it is the span that determines how many L1 banks / TLB
+/// entries the pass touches concurrently. Hence one factor per stage,
+/// identical across edge types (verified: this is what makes the early
+/// passes of Table 4 slow regardless of radix).
+pub fn bank_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) -> f64 {
+    let _ = edge;
+    let span_bytes = ((n >> stage) * 4) as f64;
+    1.0 + p.k_bank * (span_bytes / 256.0) / 2.0
+}
+
+/// Context multiplier for `edge` at `stage` given predecessor `ctx`.
+/// `lanes`-agnostic; purely a cache-residual story.
+pub fn context_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+    match ctx {
+        Context::Start => {
+            if edge.is_fused() {
+                p.iso_fused_mem
+            } else {
+                p.start_mem
+            }
+        }
+        Context::After(prev) => {
+            if prev.is_fused() {
+                return p.after_fused_mem;
+            }
+            // Predecessor ended at `stage`, so it started `prev.stages()`
+            // earlier; its residual stride is n >> stage.
+            let residual = n >> stage;
+            let read = read_stride_elems(n, edge, stage);
+            let line_elems = 16; // 64-byte line of f32
+            if read < line_elems {
+                return 1.0; // line-local: residual stride irrelevant
+            }
+            if 2 * read == residual {
+                p.affinity_half_stride
+            } else if read == residual {
+                p.affinity_same_stride
+            } else {
+                1.0
+            }
+        }
+    }
+}
+
+/// Memory component of the edge cost, in ns.
+pub fn mem_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+    let base_cyc = round_trip_bytes(n) / p.l1_bw_bytes_cyc;
+    base_cyc * p.ns_per_cyc() * bank_factor(p, n, edge, stage) * context_factor(p, n, edge, stage, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::Context::{After, Start};
+
+    fn m1() -> MachineParams {
+        MachineParams::m1()
+    }
+
+    #[test]
+    fn strides() {
+        assert_eq!(read_stride_elems(1024, EdgeType::R2, 0), 512);
+        assert_eq!(read_stride_elems(1024, EdgeType::R4, 2), 64);
+        assert_eq!(read_stride_elems(1024, EdgeType::F8, 2), 32);
+        assert_eq!(read_stride_elems(1024, EdgeType::F32, 5), 1);
+        assert_eq!(write_residual_elems(1024, EdgeType::R4, 0), 256);
+        assert_eq!(write_residual_elems(1024, EdgeType::F8, 7), 1);
+    }
+
+    #[test]
+    fn r2_after_radix_gets_half_stride_bonus_at_large_strides() {
+        // The paper's sandwiched-R2 effect: R2 at stage 2 after R4 (which
+        // ended at stage 2, residual stride 256) reads at 128 = 256/2.
+        let p = m1();
+        let bonus = context_factor(&p, 1024, EdgeType::R2, 2, After(EdgeType::R4));
+        assert_eq!(bonus, p.affinity_half_stride);
+        // R4 at the same point reads 64 != 128: no bonus.
+        let none = context_factor(&p, 1024, EdgeType::R4, 2, After(EdgeType::R4));
+        assert_eq!(none, 1.0);
+    }
+
+    #[test]
+    fn no_bonus_at_line_local_strides() {
+        // R2 at stage 9 reads stride 1 — residuals are line-local anyway.
+        let p = m1();
+        assert_eq!(context_factor(&p, 1024, EdgeType::R2, 9, After(EdgeType::R4)), 1.0);
+    }
+
+    #[test]
+    fn start_and_after_fused_are_penalties_for_radix() {
+        let p = m1();
+        assert!(context_factor(&p, 1024, EdgeType::R4, 0, Start) > 1.0);
+        // after-fused is a (calibrated) non-bonus: never below 1.
+        assert!(context_factor(&p, 1024, EdgeType::R4, 5, After(EdgeType::F8)) >= 1.0);
+    }
+
+    #[test]
+    fn isolation_flatters_fused_blocks() {
+        // The context-free trap: an isolated fused-block loop re-gathers
+        // its own scatter pattern (self-aligned residual).
+        let p = m1();
+        assert!(context_factor(&p, 1024, EdgeType::F32, 5, Start) < 1.0);
+        assert!(context_factor(&p, 1024, EdgeType::F32, 5, After(EdgeType::R4)) >= 1.0);
+    }
+
+    #[test]
+    fn bank_factor_grows_with_span() {
+        let p = m1();
+        let early = bank_factor(&p, 1024, EdgeType::R2, 0); // span 4 KiB
+        let late = bank_factor(&p, 1024, EdgeType::R2, 8); // span 16 B
+        assert!(early > 2.0, "{early}");
+        assert!(late < 1.1, "{late}");
+    }
+
+    #[test]
+    fn bank_factor_is_edge_type_invariant_per_stage() {
+        // stream count x stride = span: all edges at a stage pay alike.
+        let p = m1();
+        for s in 0..5 {
+            let r2 = bank_factor(&p, 1024, EdgeType::R2, s);
+            let f32f = bank_factor(&p, 1024, EdgeType::F32, s);
+            assert_eq!(r2, f32f);
+        }
+    }
+
+    #[test]
+    fn mem_scales_linearly_in_n() {
+        let p = m1();
+        let a = mem_ns(&p, 256, EdgeType::R4, 2, Start);
+        let b = mem_ns(&p, 1024, EdgeType::R4, 4, Start); // same m = 64
+        assert!((b / a - 4.0).abs() < 0.2, "{}", b / a);
+    }
+}

@@ -1,0 +1,38 @@
+//! Micro-architecture timing simulator — the testbed substitute.
+//!
+//! The paper measures edge weights on an Apple M1 P-core (NEON) and, for
+//! the architecture-portability claim, cites Intel Haswell (AVX2). Neither
+//! is available in this environment (see DESIGN.md §2), so this module
+//! provides the closest synthetic equivalent: a parametric timing model
+//! that produces **edge costs conditioned on the predecessor edge type** —
+//! exactly the interface the paper's measurement harness exposes to the
+//! graph search.
+//!
+//! Structure (all parameters named and documented in [`params`]):
+//!
+//! * [`compute`] — instruction-schedule estimate per edge: vector-group
+//!   counts, lane efficiency (SIMD collapse at small strides, paper
+//!   Table 4), register working sets and spill penalties (paper §5.2:
+//!   FFT-32's twiddle spills), per-block loop overhead.
+//! * [`memory`] — memory round-trip cost per edge: every non-fused pass
+//!   moves the whole split-complex array through the LSU once; fused
+//!   blocks move it once per log2(B) stages. Context multiplies the
+//!   memory component: the predecessor's write-stride residual determines
+//!   how efficiently the current pass's loads hit (store-forwarding /
+//!   line-residual affinity, paper §4.3 finding 4).
+//! * [`machine`] — [`Machine`]: combines both into
+//!   `edge_ns(n, edge, stage, ctx)` and steady-state plan timing.
+//!
+//! Calibration: the M1 parameter values are fitted so the *shape* of the
+//! paper's results holds (Table 2 inversion, Table 3 ranking and ratios,
+//! Table 4 U-curve, both searches' discovered plans). Absolute nanoseconds
+//! are model outputs, not hardware measurements; EXPERIMENTS.md reports
+//! paper-vs-simulated side by side.
+
+pub mod compute;
+pub mod machine;
+pub mod memory;
+pub mod params;
+
+pub use machine::Machine;
+pub use params::MachineParams;

@@ -1,0 +1,281 @@
+//! Machine parameter sets (the simulator's "hardware manuals").
+//!
+//! Every field is a physically-meaningful quantity; the M1 values are
+//! calibrated against the paper's published aggregates (Tables 2–4) since
+//! the actual silicon is unavailable in this environment. The Haswell set
+//! reproduces the 2015-thesis finding the paper cites: optimum
+//! R4,R8,R8,R4 with no fused blocks (finding 5).
+
+use crate::edge::EdgeType;
+
+/// Per-radix butterfly issue costs, in cycles per vector group (one group =
+/// `lanes` butterflies issued through the FMA pipes).
+#[derive(Debug, Clone, Copy)]
+pub struct ButterflyCosts {
+    /// Radix-2 group: ld/ld/cmul/add/sub/st/st ≈ limited by 2 FMA pipes.
+    pub r2: f64,
+    /// Radix-4 group: 4-point network, W_4^1 free (swap+negate).
+    pub r4: f64,
+    /// Radix-8 group: 8-point network, W_8^{1,3} as 1/sqrt(2) scale.
+    pub r8: f64,
+    /// Fused blocks: cycles per *point* per *stage* while data stays in
+    /// registers (no loads/stores between sub-stages).
+    pub fused_per_point_stage: f64,
+}
+
+/// One simulated machine.
+#[derive(Debug, Clone)]
+pub struct MachineParams {
+    pub name: &'static str,
+    /// Core clock in GHz (M1 Firestorm: 3.2).
+    pub freq_ghz: f64,
+    /// f32 lanes per vector register (NEON 128-bit: 4; AVX2 256-bit: 8).
+    pub lanes: usize,
+    /// Architectural vector registers (NEON: 32; AVX2: 16).
+    pub vregs: usize,
+    /// Sustained L1 load+store bandwidth, bytes per cycle (both LSU pipes).
+    pub l1_bw_bytes_cyc: f64,
+    /// Fixed per-block loop overhead, cycles (address setup, branch).
+    pub blk_overhead_cyc: f64,
+    /// Butterfly issue costs.
+    pub bf: ButterflyCosts,
+    /// Multiplier on compute when the vectorized j-range collapses below
+    /// `lanes` (SIMD across butterflies breaks; paper Table 4 passes 9-10).
+    pub scalar_penalty: f64,
+    /// Whether the collapse penalty amortizes over a radix pass's internal
+    /// stages (penalty / stages). True on NEON (the wider butterfly keeps
+    /// more scalar work in registers); false on AVX2, where the scalar
+    /// fallback costs the same per stage regardless of radix.
+    pub collapse_amortized: bool,
+    /// Extra cycles per vector group for in-register transposes when a
+    /// fused block runs at its terminal (contiguous) position (NEON 4x4
+    /// transpose trick, paper Table 1).
+    pub fused_transpose_cyc: f64,
+    /// Extra cycles per vector group when a fused block gathers mid-path
+    /// with a non-unit stride (strided vld1 splitting).
+    pub fused_gather_cyc: f64,
+    /// Spill cost: cycles per spilled vector register per vector group
+    /// (paper §5.2: FFT-32's twiddle spills negate its saved traffic).
+    pub spill_cyc_per_vreg: f64,
+    /// Cycles per sub-stage per vector group for streaming j-twiddle
+    /// vectors in *mid-path* fused blocks (terminal blocks need none:
+    /// j = 0 degenerates all j-twiddles to 1).
+    pub fused_twiddle_stream_cyc: f64,
+    /// Scheduling inefficiency growth per doubling of fused-block size
+    /// (deeper in-register networks have longer dependence chains):
+    /// work multiplier = 1 + gamma * (B/8 - 1).
+    pub fused_depth_gamma: f64,
+    /// Context multiplier on the pressure component in `Context::Start`
+    /// (isolation loops keep spill slots / twiddles L1-hot, hiding most of
+    /// the cost — the effect that fools context-free search, finding 3).
+    pub pressure_start_mult: f64,
+    /// Memory inefficiency per 256 B of read stride (bank/TLB pressure of
+    /// widely-strided butterfly streams; drives Table 4's slow pass 1).
+    pub k_bank: f64,
+    /// Registers reserved by the ABI/compiler (stack ptr shadowing, etc.);
+    /// usable vregs = vregs - reserved.
+    pub reserved_vregs: usize,
+    /// Whether fused register blocks exist in this machine's catalog.
+    /// The paper's fused blocks (§3.2) are its NEON contribution; the
+    /// Haswell numbers it cites come from the 2015 framework, which
+    /// predates them — so the Haswell model searches the 2015 radix-only
+    /// catalog (and F32 would not fit 16 registers regardless, Table 2).
+    pub fused_available: bool,
+    /// Radix-pass working sets in vector registers, [R2, R4, R8].
+    /// ISA-dependent: NEON is load-store (every operand needs a register);
+    /// AVX2 folds memory operands into FMAs, roughly halving pressure —
+    /// which is why the 2015 thesis' Haswell optimum leans on radix-8
+    /// while the M1 search avoids it (paper finding 2 / finding 5).
+    pub ws_radix: [usize; 3],
+    /// Context affinity: multiplier on the memory component when the
+    /// current pass reads at exactly half the predecessor's write stride
+    /// (the predecessor's line residuals align with this pass's load
+    /// pairs — the effect behind the paper's sandwiched R2, finding 4).
+    /// Applies only while strides exceed a cache line.
+    pub affinity_half_stride: f64,
+    /// Affinity when strides match exactly (same-type repetition).
+    pub affinity_same_stride: f64,
+    /// Memory multiplier for a pass immediately after a *fused* block
+    /// (fused blocks scatter across the whole array, leaving a less
+    /// load-friendly residual than a plain pass).
+    pub after_fused_mem: f64,
+    /// Memory multiplier for *radix* passes in `Context::Start` (isolation
+    /// measurement: no helpful residual from a matching predecessor).
+    pub start_mem: f64,
+    /// Memory multiplier for *fused* blocks in `Context::Start`: an
+    /// isolated fused-block loop re-gathers exactly the groups it just
+    /// scattered — a self-aligned residual that flatters the block. This
+    /// is the second half of the context-free trap (finding 3): isolation
+    /// makes fused blocks look better than any real arrangement delivers.
+    pub iso_fused_mem: f64,
+}
+
+impl MachineParams {
+    /// Apple M1 Firestorm P-core, 128-bit NEON (calibrated; see module doc).
+    pub fn m1() -> MachineParams {
+        MachineParams {
+            name: "m1",
+            freq_ghz: 3.2,
+            lanes: 4,
+            vregs: 32,
+            // Firestorm sustains ~3 loads + 2 stores of 16B per cycle; use
+            // an effective blended 48 B/cyc for the streaming round trip.
+            l1_bw_bytes_cyc: 84.89,
+            blk_overhead_cyc: 3.5228,
+            bf: ButterflyCosts { r2: 2.9689, r4: 8.0664, r8: 24.3582, fused_per_point_stage: 0.4752 },
+            scalar_penalty: 8.0,
+            collapse_amortized: true,
+            fused_transpose_cyc: 0.9311,
+            fused_gather_cyc: 1.0,
+            spill_cyc_per_vreg: 3.7634,
+            fused_twiddle_stream_cyc: 6.7615,
+            fused_depth_gamma: 0.0,
+            pressure_start_mult: 0.209,
+            k_bank: 0.5279,
+            reserved_vregs: 2,
+            fused_available: true,
+            // NEON load-store working sets: data + twiddles + temps.
+            ws_radix: [8, 18, 36],
+            affinity_half_stride: 0.15,
+            affinity_same_stride: 0.50,
+            after_fused_mem: 1.0,
+            start_mem: 2.2,
+            iso_fused_mem: 0.9268,
+        }
+    }
+
+    /// Intel Haswell, 256-bit AVX2 (16 vregs). Tuned to reproduce the
+    /// 2015-thesis optimum R4,R8,R8,R4 (no fused blocks, no F32 at all).
+    pub fn haswell() -> MachineParams {
+        MachineParams {
+            name: "haswell",
+            freq_ghz: 3.4,
+            lanes: 8,
+            vregs: 16,
+            l1_bw_bytes_cyc: 64.0,
+            blk_overhead_cyc: 16.0,
+            // AVX2 has 2 FMA ports but higher-latency shuffles; the wider
+            // lanes make radix-8 groups relatively cheaper per stage.
+            bf: ButterflyCosts { r2: 6.0, r4: 4.0, r8: 13.3, fused_per_point_stage: 1.0 },
+            scalar_penalty: 5.5,
+            // x86 scalar fallback pays per stage (no NEON-style wide
+            // in-register amortization) — this is what prices radix-8 out
+            // of the last stages and R2 out of stage 10.
+            collapse_amortized: false,
+            // Cross-lane (8x8) transposes on AVX2 are port-5-bound shuffle
+            // chains — terminal fused blocks lose to plain radix tails,
+            // matching the fused-free 2015 Haswell optimum.
+            fused_transpose_cyc: 250.0,
+            fused_gather_cyc: 50.0,
+            spill_cyc_per_vreg: 4.0,
+            fused_twiddle_stream_cyc: 10.0,
+            fused_depth_gamma: 0.30,
+            pressure_start_mult: 0.20,
+            k_bank: 0.02,
+            reserved_vregs: 1,
+            fused_available: false,
+            // AVX2 memory-operand folding halves the live-register needs:
+            // radix-8 fits the 16-register file (unlike on NEON), which is
+            // why the thesis' Haswell optimum leans on it (finding 5).
+            ws_radix: [6, 10, 15],
+            affinity_half_stride: 0.95,
+            affinity_same_stride: 0.98,
+            after_fused_mem: 1.05,
+            start_mem: 1.10,
+            iso_fused_mem: 0.95,
+        }
+    }
+
+    /// Parse a machine name ("m1" | "haswell").
+    pub fn by_name(name: &str) -> Option<MachineParams> {
+        match name {
+            "m1" => Some(Self::m1()),
+            "haswell" => Some(Self::haswell()),
+            _ => None,
+        }
+    }
+
+    /// Usable vector registers.
+    pub fn usable_vregs(&self) -> usize {
+        self.vregs - self.reserved_vregs
+    }
+
+    /// ns per cycle.
+    pub fn ns_per_cyc(&self) -> f64 {
+        1.0 / self.freq_ghz
+    }
+
+    /// Whether `edge` is implementable on this machine at all.
+    /// F32 requires a 32-register file (paper Table 2: "On AVX2? No").
+    pub fn edge_available(&self, edge: EdgeType) -> bool {
+        match edge {
+            EdgeType::F32 => self.fused_available && self.vregs >= 32,
+            e if e.is_fused() => self.fused_available,
+            _ => true,
+        }
+    }
+
+    /// Vector-register working set of one *radix-pass* butterfly group
+    /// (split-complex data + twiddles + temporaries), used by the spill
+    /// model. Paper §4.3 finding 2: radix-8's 16-data-vector working set
+    /// creates pressure on 128-bit NEON. Fused-block working sets are
+    /// position-dependent and computed in `compute::working_set`.
+    pub fn working_set_vregs(&self, edge: EdgeType) -> usize {
+        match edge {
+            EdgeType::R2 => self.ws_radix[0],
+            EdgeType::R4 => self.ws_radix[1],
+            EdgeType::R8 => self.ws_radix[2],
+            _ => panic!("fused working sets are position-dependent; use compute::working_set"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(MachineParams::by_name("m1").unwrap().name, "m1");
+        assert_eq!(MachineParams::by_name("haswell").unwrap().name, "haswell");
+        assert!(MachineParams::by_name("zen4").is_none());
+    }
+
+    #[test]
+    fn edge_catalogs_by_machine() {
+        // M1: the full six-edge catalog. Haswell: the 2015 radix-only
+        // catalog (fused blocks are this paper's NEON contribution; F32
+        // additionally would not fit 16 registers, Table 2).
+        let m1 = MachineParams::m1();
+        let hw = MachineParams::haswell();
+        for e in crate::edge::ALL_EDGES {
+            assert!(m1.edge_available(e), "{e} on m1");
+            assert_eq!(hw.edge_available(e), !e.is_fused(), "{e} on haswell");
+        }
+    }
+
+    #[test]
+    fn radix8_register_pressure_is_m1_specific() {
+        // Paper finding 2 is about NEON: "the radix-8 butterfly's
+        // 16-vector working set creates register pressure on 128-bit
+        // NEON" — a load-store ISA needs every operand in a register.
+        // AVX2 folds memory operands into FMAs, so radix-8 *fits* its
+        // 16-register file — which is why the 2015 Haswell optimum leans
+        // on radix-8 (finding 5) while the M1 search avoids it.
+        let m1 = MachineParams::m1();
+        assert!(m1.working_set_vregs(EdgeType::R8) > m1.usable_vregs());
+        let hw = MachineParams::haswell();
+        assert!(hw.working_set_vregs(EdgeType::R8) <= hw.usable_vregs());
+    }
+
+    #[test]
+    fn sane_physical_values() {
+        for m in [MachineParams::m1(), MachineParams::haswell()] {
+            assert!(m.freq_ghz > 1.0 && m.freq_ghz < 6.0);
+            assert!(m.lanes == 4 || m.lanes == 8);
+            assert!(m.ns_per_cyc() > 0.0);
+            assert!(m.affinity_half_stride < 1.0);
+            assert!(m.start_mem >= 1.0);
+        }
+    }
+}

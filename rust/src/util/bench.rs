@@ -1,0 +1,172 @@
+//! Criterion-style benchmark harness (no `criterion` in the offline set).
+//!
+//! Benches under `rust/benches/` are `harness = false` binaries that build a
+//! [`Bench`] and register closures; the harness times each with adaptive
+//! iteration counts, reports median/mean/stddev, and honors the standard
+//! `cargo bench -- <filter>` argument so individual benchmarks can be run.
+//! Also supports "table mode": paper-table regenerators print their rows
+//! after the timing block (see `rust/benches/table3_algorithms.rs`).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One registered benchmark.
+struct Case {
+    name: String,
+    f: Box<dyn FnMut()>,
+}
+
+/// Harness configuration.
+pub struct Bench {
+    cases: Vec<Case>,
+    /// Target wall time per case for the measurement phase.
+    pub target: Duration,
+    /// Samples to collect per case.
+    pub samples: usize,
+    filter: Option<String>,
+    quick: bool,
+}
+
+/// Result row for a completed case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub summary: Summary,
+}
+
+impl Bench {
+    /// Build from `std::env::args` (supports `-- <filter>` and `--quick`).
+    pub fn from_env(suite: &str) -> Bench {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        // cargo bench passes `--bench` (and sometimes other flags); any
+        // non-flag token is treated as a name filter.
+        let filter = argv.iter().find(|a| !a.starts_with('-')).cloned();
+        let quick = argv.iter().any(|a| a == "--quick") || std::env::var("SPFFT_BENCH_QUICK").is_ok();
+        eprintln!("== bench suite: {suite}{} ==", if quick { " (quick)" } else { "" });
+        Bench {
+            cases: Vec::new(),
+            target: if quick { Duration::from_millis(50) } else { Duration::from_millis(400) },
+            samples: if quick { 11 } else { 31 },
+            filter,
+            quick,
+        }
+    }
+
+    /// Whether `--quick` mode is on (benches may shrink their workloads).
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Register a benchmark closure.
+    pub fn bench(&mut self, name: impl Into<String>, f: impl FnMut() + 'static) {
+        let name = name.into();
+        if let Some(fil) = &self.filter {
+            if !name.contains(fil.as_str()) {
+                return;
+            }
+        }
+        self.cases.push(Case { name, f: Box::new(f) });
+    }
+
+    /// Run all registered cases and print a report; returns the results.
+    pub fn run(mut self) -> Vec<BenchResult> {
+        let mut out = Vec::new();
+        for case in &mut self.cases {
+            let res = run_case(case, self.target, self.samples);
+            println!(
+                "{:<44} median {:>12}  mean {:>12}  sd {:>6.1}%  ({} it/sample)",
+                res.name,
+                fmt_ns(res.summary.median),
+                fmt_ns(res.summary.mean),
+                100.0 * res.summary.stddev / res.summary.mean.max(1e-9),
+                res.iters_per_sample,
+            );
+            out.push(res);
+        }
+        out
+    }
+}
+
+fn run_case(case: &mut Case, target: Duration, samples: usize) -> BenchResult {
+    // Warmup & calibration: find iters such that one sample ~ target/samples.
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            (case.f)();
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(2) || iters >= 1 << 24 {
+            let per_iter = dt.as_nanos() as f64 / iters as f64;
+            let per_sample_ns = (target.as_nanos() as f64 / samples as f64).max(1.0);
+            iters = ((per_sample_ns / per_iter.max(0.1)).ceil() as u64).clamp(1, 1 << 24);
+            break;
+        }
+        iters *= 4;
+    }
+    let mut sample_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            (case.f)();
+        }
+        sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    BenchResult {
+        name: case.name.clone(),
+        iters_per_sample: iters,
+        summary: Summary::from_samples(&sample_ns),
+    }
+}
+
+/// Human format for nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+
+    #[test]
+    fn run_case_produces_sane_numbers() {
+        let mut c = Case {
+            name: "spin".into(),
+            f: Box::new(|| {
+                let mut s = 0u64;
+                for i in 0..100 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            }),
+        };
+        let r = run_case(&mut c, Duration::from_millis(20), 5);
+        assert!(r.summary.median > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert_eq!(r.summary.n, 5);
+    }
+}

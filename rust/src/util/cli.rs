@@ -1,0 +1,259 @@
+//! Minimal declarative CLI argument parser (no `clap` in the offline set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (handled by the caller via [`Args::positional`]), and
+//! auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(default) => value option.
+    pub default: Option<&'static str>,
+    /// Must be provided explicitly (empty value rejected).
+    pub required: bool,
+}
+
+/// Parse error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Value of `--name` (or its default).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    /// Value parsed as usize.
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer, got '{}'", self.get(name))))
+    }
+
+    /// Value parsed as f64.
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects a number, got '{}'", self.get(name))))
+    }
+
+    /// Whether boolean `--name` was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A declarative command parser.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default (empty default = optional,
+    /// callers check for emptiness).
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), required: false });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(""), required: true });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: false });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            match o.default {
+                None => s.push_str(&format!("  --{:<18} {}\n", o.name, o.help)),
+                Some(_) if o.required => {
+                    s.push_str(&format!("  --{:<18} {} (required)\n", format!("{} <v>", o.name), o.help))
+                }
+                Some(d) => s.push_str(&format!(
+                    "  --{:<18} {}{}\n",
+                    format!("{} <v>", o.name),
+                    o.help,
+                    if d.is_empty() { String::new() } else { format!(" [default: {d}]") }
+                )),
+            }
+        }
+        s
+    }
+
+    /// Parse a raw token stream (excluding the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<&'static str, String> = BTreeMap::new();
+        let mut flags: BTreeMap<&'static str, bool> = BTreeMap::new();
+        for o in &self.opts {
+            match o.default {
+                None => {
+                    flags.insert(o.name, false);
+                }
+                Some(d) => {
+                    values.insert(o.name, d.to_string());
+                }
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                match spec.default {
+                    None => {
+                        if inline_val.is_some() {
+                            return Err(CliError(format!("--{key} is a flag, not a value option")));
+                        }
+                        flags.insert(spec.name, true);
+                    }
+                    Some(_) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} expects a value")))?
+                            }
+                        };
+                        values.insert(spec.name, val);
+                    }
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && values.get(o.name).is_none_or(|v| v.is_empty()) {
+                return Err(CliError(format!("--{} is required\n\n{}", o.name, self.usage())));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("n", "1024", "FFT size")
+            .opt("machine", "m1", "machine model")
+            .req("out", "output path")
+            .flag("verbose", "print more")
+    }
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--out", "x"])).unwrap();
+        assert_eq!(a.get("n"), "1024");
+        assert_eq!(a.get_usize("n").unwrap(), 1024);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--n=256", "--verbose", "--machine", "haswell", "--out", "y", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("n"), "256");
+        assert_eq!(a.get("machine"), "haswell");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn required_enforced() {
+        assert!(cmd().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let err = cmd().parse(&argv(&["--nope", "--out", "x"])).unwrap_err();
+        assert!(err.0.contains("unknown option"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--verbose=1", "--out", "x"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn bad_int() {
+        let a = cmd().parse(&argv(&["--n", "abc", "--out", "x"])).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--machine"));
+        assert!(u.contains("required"));
+    }
+}

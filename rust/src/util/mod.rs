@@ -1,0 +1,23 @@
+//! In-tree utility substrates.
+//!
+//! This environment is fully offline (only `xla` + `anyhow` from the
+//! vendored set), so the pieces a production crate would pull from the
+//! ecosystem are implemented here:
+//!
+//! * [`rng`] — deterministic SplitMix64 / Xoshiro256** PRNG (no `rand`);
+//! * [`stats`] — the paper's measurement protocol (§4.1: median of 50
+//!   trials, 5 warmup) plus robust summary statistics;
+//! * [`json`] — a small JSON parser/serializer for the artifact manifest
+//!   (no `serde_json`);
+//! * [`cli`] — a minimal declarative argument parser (no `clap`);
+//! * [`bench`] — a criterion-style benchmark harness used by
+//!   `rust/benches/*` (no `criterion`);
+//! * [`prop`] — a property-testing driver with shrinking-by-reseed used by
+//!   `rust/tests/prop_invariants.rs` (no `proptest`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

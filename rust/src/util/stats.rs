@@ -1,0 +1,203 @@
+//! Measurement protocol and summary statistics.
+//!
+//! The paper's protocol (§4.1): median of 50 trials with 5 warmup
+//! iterations, averaged over 3 independent runs. [`MeasureSpec`] encodes
+//! exactly that and [`measure`] executes it against any closure; the
+//! simulator-backed cost providers reuse the same shape so simulated and
+//! live measurements are directly comparable.
+
+use std::time::Instant;
+
+/// Summary of a sample of measurements (nanoseconds or any unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// Relative spread (max-min)/median — the paper reports "range < 8%".
+    pub fn rel_range(&self) -> f64 {
+        if self.median == 0.0 {
+            0.0
+        } else {
+            (self.max - self.min) / self.median
+        }
+    }
+}
+
+/// Percentile (linear interpolation) over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted slice.
+pub fn median(samples: &[f64]) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, 50.0)
+}
+
+/// The paper's measurement protocol parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasureSpec {
+    /// Timed trials per run (paper: 50).
+    pub trials: usize,
+    /// Untimed warmup iterations per run (paper: 5).
+    pub warmup: usize,
+    /// Independent runs whose medians are averaged (paper: 3).
+    pub runs: usize,
+}
+
+impl MeasureSpec {
+    /// Paper §4.1: median of 50 trials, 5 warmup, averaged over 3 runs.
+    pub const PAPER: MeasureSpec = MeasureSpec { trials: 50, warmup: 5, runs: 3 };
+
+    /// Cheap variant for tests / smoke runs.
+    pub const QUICK: MeasureSpec = MeasureSpec { trials: 9, warmup: 2, runs: 1 };
+}
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Average over runs of the per-run median, in nanoseconds.
+    pub ns: f64,
+    /// Relative range across the run medians ((max-min)/median).
+    pub run_spread: f64,
+}
+
+/// Execute `f` under the measurement protocol and return wall-clock ns.
+///
+/// `f` is the *timed* operation; `prefix` (if any) runs immediately before
+/// each timed trial **untimed** — this is the paper's context-aware
+/// measurement: "execute the predecessor (untimed), then immediately time
+/// the current operation" (§2.3, Fig. 2).
+pub fn measure(spec: MeasureSpec, mut prefix: Option<&mut dyn FnMut()>, f: &mut dyn FnMut()) -> Measurement {
+    let mut run_medians = Vec::with_capacity(spec.runs);
+    for _ in 0..spec.runs {
+        for _ in 0..spec.warmup {
+            if let Some(p) = prefix.as_deref_mut() {
+                p();
+            }
+            f();
+        }
+        let mut samples = Vec::with_capacity(spec.trials);
+        for _ in 0..spec.trials {
+            if let Some(p) = prefix.as_deref_mut() {
+                p();
+            }
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        run_medians.push(median(&samples));
+    }
+    let mean = run_medians.iter().sum::<f64>() / run_medians.len() as f64;
+    let max = run_medians.iter().cloned().fold(f64::MIN, f64::max);
+    let min = run_medians.iter().cloned().fold(f64::MAX, f64::min);
+    let med = median(&run_medians);
+    Measurement {
+        ns: mean,
+        run_spread: if med > 0.0 { (max - min) / med } else { 0.0 },
+    }
+}
+
+/// GFLOPS under the paper's FLOP convention (5·N·log2 N) for a time in ns.
+pub fn gflops(n: usize, time_ns: f64) -> f64 {
+    let l = (usize::BITS - 1 - n.leading_zeros()) as f64;
+    5.0 * n as f64 * l / time_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert!((s.stddev - 2.0_f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 40.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 25.0);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        Summary::from_samples(&[]);
+    }
+
+    #[test]
+    fn measure_counts_calls() {
+        let spec = MeasureSpec { trials: 10, warmup: 2, runs: 2 };
+        let mut timed = 0usize;
+        let mut prefixed = 0usize;
+        let mut pre = || prefixed += 1;
+        let m = measure(spec, Some(&mut pre), &mut || timed += 1);
+        // (warmup + trials) per run, prefix before every call
+        assert_eq!(timed, 2 * (10 + 2));
+        assert_eq!(prefixed, timed);
+        assert!(m.ns >= 0.0);
+    }
+
+    #[test]
+    fn gflops_convention() {
+        // 51200 flops in 1722 ns -> 29.7 GFLOPS (paper Table 3 best row).
+        let g = gflops(1024, 1722.0);
+        assert!((g - 29.7).abs() < 0.1, "{g}");
+    }
+
+    #[test]
+    fn rel_range() {
+        let s = Summary::from_samples(&[95.0, 100.0, 105.0]);
+        assert!((s.rel_range() - 0.1).abs() < 1e-12);
+    }
+}

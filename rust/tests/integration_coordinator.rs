@@ -1,0 +1,142 @@
+//! Integration: the serving coordinator end-to-end (plan -> batch ->
+//! execute -> verify), on both backends.
+
+use std::time::Duration;
+
+use spfft::coordinator::{Backend, BatchPolicy, FftService, PlanCache, ServiceConfig};
+use spfft::cost::SimCost;
+use spfft::fft::reference::fft_ref;
+use spfft::fft::SplitComplex;
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+
+fn planned(n: usize) -> Plan {
+    let mut cost = SimCost::m1(n);
+    run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 }).plan
+}
+
+#[test]
+fn native_service_end_to_end_with_planner() {
+    let sizes = [256usize, 1024];
+    let cache = PlanCache::new();
+    let plans: Vec<(usize, Plan)> = sizes
+        .iter()
+        .map(|&n| (n, cache.get_or_plan(n, "ca", "m1", || planned(n))))
+        .collect();
+    let svc = FftService::start(ServiceConfig {
+        plans,
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+        workers: 2,
+        queue_depth: 128,
+    })
+    .unwrap();
+    // mixed workload, validate every response
+    let mut pending = Vec::new();
+    for i in 0..60u64 {
+        let n = sizes[(i % 2) as usize];
+        let input = SplitComplex::random(n, i);
+        pending.push((input.clone(), svc.submit(input).unwrap()));
+    }
+    for (input, rx) in pending {
+        let got = rx.recv().unwrap().unwrap();
+        let want = fft_ref(&input);
+        let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+        assert!(rel < 1e-4, "rel err {rel}");
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, 60);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.latency_p99 >= snap.latency_p50);
+    assert_eq!(cache.misses(), 2);
+}
+
+#[test]
+fn pjrt_service_end_to_end() {
+    let dir = spfft::runtime::artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let n = 256;
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, planned(n))],
+        backend: Backend::Pjrt { artifacts_dir: dir },
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+        workers: 1,
+        queue_depth: 32,
+    })
+    .unwrap();
+    for i in 0..8u64 {
+        let input = SplitComplex::random(n, i);
+        let got = svc.transform(input.clone()).unwrap();
+        let want = fft_ref(&input);
+        let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+        assert!(rel < 1e-4, "rel err {rel}");
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, 8);
+}
+
+#[test]
+fn service_metrics_track_batches() {
+    let n = 256;
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, planned(n))],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+        workers: 1,
+        queue_depth: 256,
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..40u64)
+        .map(|i| svc.submit(SplitComplex::random(n, i)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, 40);
+    // with a 5 ms window and fast kernels, far fewer batches than requests
+    assert!(snap.batches < 40, "batches = {}", snap.batches);
+    assert!(snap.mean_batch_size > 1.0);
+    assert!(!snap.busy.is_zero());
+}
+
+#[test]
+fn failure_injection_worker_rejects_bad_size_gracefully() {
+    // Submitting a size the service knows is rejected up front; the
+    // service keeps serving afterwards (failure isolation).
+    let n = 256;
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, planned(n))],
+        backend: Backend::Native,
+        batch: BatchPolicy::default(),
+        workers: 1,
+        queue_depth: 16,
+    })
+    .unwrap();
+    assert!(svc.submit(SplitComplex::random(64, 0)).is_err());
+    assert!(svc.submit(SplitComplex::random(512, 0)).is_err());
+    let ok = svc.transform(SplitComplex::random(n, 1)).unwrap();
+    assert_eq!(ok.len(), n);
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn plan_cache_survives_concurrent_planning() {
+    let cache = std::sync::Arc::new(PlanCache::new());
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let c = cache.clone();
+        handles.push(std::thread::spawn(move || {
+            c.get_or_plan(1024, "ca", "m1", || planned(1024))
+        }));
+    }
+    let plans: Vec<Plan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for p in &plans {
+        assert_eq!(*p, plans[0]);
+    }
+    assert_eq!(cache.len(), 1);
+}

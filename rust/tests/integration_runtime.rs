@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime over real artifacts from `make artifacts`.
+//!
+//! These tests need `artifacts/manifest.json`; the Makefile's `test`
+//! target builds it first. Without artifacts they fail with a clear
+//! message rather than silently passing.
+
+use spfft::edge::EdgeType;
+use spfft::fft::reference::{apply_radix2_stages_ref, fft_ref};
+use spfft::fft::SplitComplex;
+use spfft::plan::{table3_arrangements, Plan};
+use spfft::runtime::{ArtifactKind, Registry};
+
+fn registry() -> Registry {
+    let dir = spfft::runtime::artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test` \
+         (looked in {})",
+        dir.display()
+    );
+    Registry::load(&dir).expect("loading artifact registry")
+}
+
+#[test]
+fn manifest_covers_every_graph_edge_for_n1024() {
+    let reg = registry();
+    let l = 10;
+    for e in spfft::edge::ALL_EDGES {
+        for s in 0..=(l - e.stages()) {
+            assert!(
+                reg.manifest.edge(1024, e, s).is_some(),
+                "missing artifact for {e}@{s}"
+            );
+        }
+    }
+    assert!(reg.manifest.bitrev(1024).is_some());
+}
+
+#[test]
+fn every_edge_artifact_matches_the_native_reference() {
+    // The cross-layer correctness gate: Pallas (L1) -> HLO (L2) -> PJRT
+    // executable (L3) equals the reference radix-2 composition, for every
+    // edge at every stage. (n = 256 keeps runtime modest.)
+    let mut reg = registry();
+    let n = 256;
+    let l = 8;
+    let input = SplitComplex::random(n, 99);
+    let mut checked = 0;
+    for e in spfft::edge::ALL_EDGES {
+        for s in 0..=(l - e.stages()) {
+            let Some(spec) = reg.manifest.edge(n, e, s) else {
+                continue;
+            };
+            let name = spec.name.clone();
+            let got = reg.execute(&name, &input).expect("exec");
+            let want = apply_radix2_stages_ref(&input, s, e.stages());
+            let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+            assert!(rel < 1e-4, "{name}: rel err {rel}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 20, "only {checked} edge artifacts checked");
+}
+
+#[test]
+fn full_arrangement_artifacts_compute_the_fft() {
+    let mut reg = registry();
+    let n = 1024;
+    let input = SplitComplex::random(n, 123);
+    let want = fft_ref(&input);
+    let scale = want.max_abs().max(1.0);
+    let fulls: Vec<String> = reg
+        .manifest
+        .for_n(n)
+        .iter()
+        .filter(|a| matches!(a.kind, ArtifactKind::Full { .. }))
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(fulls.len() >= 10, "expected all Table-3 arrangements, got {}", fulls.len());
+    for name in fulls {
+        let got = reg.execute(&name, &input).expect("exec");
+        let rel = got.max_abs_diff(&want) / scale;
+        assert!(rel < 1e-4, "{name}: rel err {rel}");
+    }
+}
+
+#[test]
+fn chained_per_edge_execution_equals_full_artifact() {
+    let mut reg = registry();
+    let n = 1024;
+    let input = SplitComplex::random(n, 5);
+    for named in table3_arrangements().into_iter().take(4) {
+        let chained = reg.execute_plan(n, &named.plan, &input).expect("chained");
+        let full_name = format!("full_{}_n{n}", named.key);
+        let full = reg.execute(&full_name, &input).expect("full");
+        let rel = chained.max_abs_diff(&full) / full.max_abs().max(1.0);
+        assert!(rel < 1e-4, "{}: chained vs full rel err {rel}", named.key);
+    }
+}
+
+#[test]
+fn discovered_plan_can_be_served_without_python() {
+    // A plan the planner discovers at run time (not among the named
+    // arrangements) executes by chaining per-edge artifacts.
+    let mut reg = registry();
+    let n = 1024;
+    let plan = Plan::parse("R2,R4,F8,R2,R2,R2,R2").unwrap(); // 1+2+3+1+1+1+1 = 10
+    assert!(plan.is_valid_for(10));
+    let input = SplitComplex::random(n, 31);
+    let got = reg.execute_plan(n, &plan, &input).expect("chained");
+    let want = fft_ref(&input);
+    let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+    assert!(rel < 1e-4, "rel err {rel}");
+}
+
+#[test]
+fn registry_compiles_lazily_and_caches() {
+    let mut reg = registry();
+    assert_eq!(reg.compiled_count(), 0);
+    let input = SplitComplex::random(1024, 1);
+    let name = reg.manifest.edge(1024, EdgeType::R2, 0).unwrap().name.clone();
+    reg.execute(&name, &input).unwrap();
+    assert_eq!(reg.compiled_count(), 1);
+    reg.execute(&name, &input).unwrap();
+    assert_eq!(reg.compiled_count(), 1);
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let mut reg = registry();
+    let input = SplitComplex::random(1024, 1);
+    assert!(reg.execute("no_such_artifact", &input).is_err());
+}

@@ -1,0 +1,268 @@
+//! Property-based invariants (in-tree driver, `spfft::util::prop`).
+//!
+//! Each property runs across dozens of deterministic seeds; failures
+//! report a replay seed (`SPFFT_PROP_SEED=<seed>`).
+
+use spfft::cost::{CostModel, SimCost};
+use spfft::edge::{Context, EdgeType, ALL_EDGES};
+use spfft::fft::reference::{dft_naive, fft_ref};
+use spfft::fft::{Executor, SplitComplex};
+use spfft::graph::enumerate::enumerate_plans;
+use spfft::graph::search::{shortest_path_context_aware, shortest_path_context_free};
+use spfft::plan::Plan;
+use spfft::prop_assert;
+use spfft::util::prop::{check, Config};
+use spfft::util::rng::Rng;
+
+/// Sample a random valid plan for `l` stages (rejection-free random walk).
+fn random_plan(rng: &mut Rng, l: usize) -> Plan {
+    let mut edges = Vec::new();
+    let mut s = 0;
+    while s < l {
+        let candidates: Vec<EdgeType> = ALL_EDGES
+            .iter()
+            .copied()
+            .filter(|e| spfft::graph::edge_allowed(*e, s, l))
+            .collect();
+        let e = *rng.choose(&candidates);
+        edges.push(e);
+        s += e.stages();
+    }
+    Plan::new(edges)
+}
+
+#[test]
+fn prop_random_plans_compute_the_dft() {
+    // Any valid plan, any size, any input: executor == naive DFT.
+    let mut ex = Executor::new();
+    check("plan-computes-dft", Config { cases: 48, ..Default::default() }, |rng| {
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let plan = random_plan(rng, l);
+        let input = SplitComplex::random(n, rng.next_u64());
+        let got = ex.compile(&plan, n, true).run_on(&input);
+        let want = dft_naive(&input);
+        let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+        prop_assert!(rel < 5e-4, "{plan} n={n}: rel err {rel}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_order_of_radix_passes_is_immaterial_to_math() {
+    // Different valid plans on the same input agree with each other.
+    let mut ex = Executor::new();
+    check("plans-agree", Config { cases: 32, ..Default::default() }, |rng| {
+        let l = rng.range(4, 10);
+        let n = 1usize << l;
+        let p1 = random_plan(rng, l);
+        let p2 = random_plan(rng, l);
+        let input = SplitComplex::random(n, rng.next_u64());
+        let a = ex.compile(&p1, n, true).run_on(&input);
+        let b = ex.compile(&p2, n, true).run_on(&input);
+        let rel = a.max_abs_diff(&b) / b.max_abs().max(1.0);
+        prop_assert!(rel < 1e-3, "{p1} vs {p2} (n={n}): rel err {rel}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_context_free_search_is_optimal_under_its_weights() {
+    check("cf-optimal", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let mut cost = SimCost::m1(n);
+        let res = shortest_path_context_free(&mut cost, l);
+        // random plans can't beat the shortest path under isolation sums
+        for _ in 0..20 {
+            let p = random_plan(rng, l);
+            let sum: f64 = p
+                .steps()
+                .into_iter()
+                .map(|(e, s)| cost.edge_ns(e, s, Context::Start))
+                .sum();
+            prop_assert!(sum + 1e-6 >= res.cost_ns, "{p} beats CF: {sum} < {}", res.cost_ns);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_context_aware_search_is_optimal_under_contextual_weights() {
+    check("ca-optimal", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let mut cost = SimCost::m1(n);
+        let res = shortest_path_context_aware(&mut cost, l);
+        for _ in 0..20 {
+            let p = random_plan(rng, l);
+            let mut ctx = Context::Start;
+            let mut sum = 0.0;
+            for (e, s) in p.steps() {
+                sum += cost.edge_ns(e, s, ctx);
+                ctx = Context::After(e);
+            }
+            prop_assert!(sum + 1e-6 >= res.cost_ns, "{p} beats CA");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_enumeration_contains_every_random_plan() {
+    check("enumeration-complete", Config { cases: 16, ..Default::default() }, |rng| {
+        let l = rng.range(2, 9);
+        let plans = enumerate_plans(l, &ALL_EDGES);
+        let set: std::collections::HashSet<String> = plans.iter().map(|p| p.to_string()).collect();
+        prop_assert!(set.len() == plans.len(), "duplicates at l={l}");
+        for _ in 0..10 {
+            let p = random_plan(rng, l);
+            prop_assert!(set.contains(&p.to_string()), "missing {p} at l={l}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parseval_energy_preserved_by_all_plans() {
+    let mut ex = Executor::new();
+    check("parseval", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let plan = random_plan(rng, l);
+        let input = SplitComplex::random(n, rng.next_u64());
+        let out = ex.compile(&plan, n, true).run_on(&input);
+        let ein: f64 = (0..n)
+            .map(|i| (input.re[i] as f64).powi(2) + (input.im[i] as f64).powi(2))
+            .sum();
+        let eout: f64 = (0..n)
+            .map(|i| (out.re[i] as f64).powi(2) + (out.im[i] as f64).powi(2))
+            .sum();
+        let ratio = eout / (n as f64 * ein.max(1e-12));
+        prop_assert!((ratio - 1.0).abs() < 1e-3, "{plan}: parseval ratio {ratio}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linearity_of_plans() {
+    let mut ex = Executor::new();
+    check("linearity", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(3, 8);
+        let n = 1usize << l;
+        let plan = random_plan(rng, l);
+        let cp = ex.compile(&plan, n, true);
+        let a = SplitComplex::random(n, rng.next_u64());
+        let b = SplitComplex::random(n, rng.next_u64());
+        let sum = SplitComplex::from_parts(
+            a.re.iter().zip(&b.re).map(|(x, y)| x + y).collect(),
+            a.im.iter().zip(&b.im).map(|(x, y)| x + y).collect(),
+        );
+        let fa = cp.run_on(&a);
+        let fb = cp.run_on(&b);
+        let fsum = cp.run_on(&sum);
+        for i in 0..n {
+            let er = (fsum.re[i] - fa.re[i] - fb.re[i]).abs();
+            let ei = (fsum.im[i] - fa.im[i] - fb.im[i]).abs();
+            let scale = fsum.max_abs().max(1.0);
+            prop_assert!(er / scale < 1e-4 && ei / scale < 1e-4, "{plan}: non-linear at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_costs_positive_finite_and_context_bounded() {
+    check("sim-costs-sane", Config { cases: 32, ..Default::default() }, |rng| {
+        let l = rng.range(3, 13);
+        let n = 1usize << l;
+        let mut cost = SimCost::m1(n);
+        for e in ALL_EDGES {
+            if e.stages() > l {
+                continue;
+            }
+            let s = rng.range(0, l - e.stages() + 1);
+            for ctx in Context::all() {
+                let c = cost.edge_ns(e, s, ctx);
+                prop_assert!(c.is_finite() && c > 0.0, "{e}@{s} {ctx} n={n}: {c}");
+                // context changes the memory component only; total swing
+                // stays within ~20x (isolation penalty x affinity bonus
+                // on a memory-dominated early stage is the worst case)
+                let base = cost.edge_ns(e, s, Context::After(EdgeType::R2));
+                prop_assert!(c / base < 20.0 && base / c < 20.0, "{e}@{s}: wild context swing");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft_ref_matches_naive_dft() {
+    check("ref-vs-naive", Config { cases: 16, ..Default::default() }, |rng| {
+        let l = rng.range(1, 8);
+        let n = 1usize << l;
+        let input = SplitComplex::random(n, rng.next_u64());
+        let a = fft_ref(&input);
+        let b = dft_naive(&input);
+        let rel = a.max_abs_diff(&b) / b.max_abs().max(1.0);
+        prop_assert!(rel < 5e-4, "n={n}: {rel}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use spfft::util::json::{parse, to_string, Json};
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => Json::Num((rng.next_below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.range(0, 12);
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(rng.range(32, 0x250) as u32).unwrap_or('x'))
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", Config { cases: 64, ..Default::default() }, |rng| {
+        let v = random_json(rng, 3);
+        let text = to_string(&v);
+        let back = parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_items_in_order() {
+    use spfft::coordinator::{BatchPolicy, Batcher};
+    check("batcher-conservation", Config { cases: 24, ..Default::default() }, |rng| {
+        let count = rng.range(1, 200);
+        let max_batch = rng.range(1, 33);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..count {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch, max_wait: std::time::Duration::from_micros(50) },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            prop_assert!(batch.len() <= max_batch, "oversized batch");
+            seen.extend(batch);
+        }
+        prop_assert!(seen == (0..count).collect::<Vec<_>>(), "loss or reorder");
+        Ok(())
+    });
+}
