@@ -1,0 +1,151 @@
+//! Online autotuning demo: watch the service detect drift and hot-swap.
+//!
+//! Runs entirely on the simulator cost model (no hardware assumptions):
+//! the service starts on the paper's M1 context-aware optimum, serves
+//! traffic with every request trace-sampled through a simulator oracle,
+//! then the oracle inflates every Fused-8 contextual weight 25x — the
+//! kind of shift a co-tenant stealing register-file bandwidth would
+//! cause. The autotuner detects the drift, re-runs the context-aware
+//! search in the background, and hot-swaps the plan while requests keep
+//! flowing; every response is validated against the reference DFT.
+//!
+//!     cargo run --release --example autotune_demo
+//!     SPFFT_QUICK=1 cargo run --release --example autotune_demo   # CI smoke
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spfft::autotune::{AutotuneConfig, SampleMode};
+use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use spfft::cost::{SimCost, Wisdom};
+use spfft::edge::EdgeType;
+use spfft::fft::reference::fft_ref;
+use spfft::fft::SplitComplex;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::stats::gflops;
+
+const INFLATION: f64 = 25.0;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024;
+    let quick = std::env::var("SPFFT_QUICK").is_ok();
+    let machine = spfft::sim::Machine::m1();
+    let prior = Wisdom::harvest(&mut SimCost::m1(n), "sim:m1");
+    let initial = run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    println!(
+        "startup plan : {initial}  ({:.1} GFLOPS on calm weights)",
+        gflops(n, machine.plan_ns(n, &initial))
+    );
+
+    // Simulator oracle: exact machine-model weights; flipping `drifted`
+    // inflates every Fused-8 cell 25x.
+    let drifted = Arc::new(AtomicBool::new(false));
+    let oracle_machine = machine.clone();
+    let oracle_switch = drifted.clone();
+    let mode = SampleMode::Oracle(Arc::new(move |e, s, ctx| {
+        let base = oracle_machine.edge_ns(n, e, s, ctx);
+        if e == EdgeType::F8 && oracle_switch.load(Ordering::Relaxed) {
+            base * INFLATION
+        } else {
+            base
+        }
+    }));
+
+    let mut at = AutotuneConfig::new(prior);
+    at.sample_period = 1;
+    at.check_every = 8;
+    at.drift_min_samples = 4;
+    at.ewma_alpha = 1.0;
+    at.blend_samples = 1.0;
+    at.mode = mode;
+
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, initial.clone())],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
+        workers: 2,
+        queue_depth: 128,
+        autotune: Some(at),
+    })?;
+
+    // Phase 1: calm traffic.
+    let calm = if quick { 100 } else { 400 };
+    for i in 0..calm {
+        let input = SplitComplex::random(n, i);
+        let got = svc.transform(input.clone())?;
+        if i % 25 == 0 {
+            let want = fft_ref(&input);
+            let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+            assert!(rel < 1e-4, "calm-phase corruption: {rel}");
+        }
+    }
+    let s = svc.autotune_status().expect("autotune on");
+    println!(
+        "calm phase   : {} requests, {} sampled batches, {} drift checks, 0 swaps (v{})",
+        calm, s.batches_ingested, s.drift_checks, s.plan_version
+    );
+    assert_eq!(s.swaps, 0, "spurious swap on calm weights");
+
+    // Phase 2: drift hits.
+    println!("drift event  : Fused-8 contextual weights x{INFLATION}");
+    drifted.store(true, Ordering::Relaxed);
+    let budget: u64 = if quick { 10_000 } else { 30_000 };
+    let t0 = Instant::now();
+    let mut last_version = 1;
+    let mut converged = false;
+    for i in 0..budget {
+        let input = SplitComplex::random(n, 1_000_000 + i);
+        let got = svc.transform(input.clone())?;
+        if i % 64 == 0 {
+            let want = fft_ref(&input);
+            let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+            assert!(rel < 1e-4, "corruption during swap window: {rel}");
+        }
+        let status = svc.autotune_status().expect("autotune on");
+        if status.plan_version != last_version {
+            println!(
+                "  swap v{} -> v{} after {} requests: {} (search {:.1} µs)",
+                last_version,
+                status.plan_version,
+                i + 1,
+                status.active_plan,
+                status.last_swap_latency_ns as f64 / 1e3,
+            );
+            last_version = status.plan_version;
+        }
+        if !status.active_plan.edges().contains(&EdgeType::F8) && status.swaps >= 1 {
+            converged = true;
+            println!(
+                "converged    : {} after {} post-drift requests in {:.2} s",
+                status.active_plan,
+                i + 1,
+                t0.elapsed().as_secs_f64()
+            );
+            break;
+        }
+    }
+    assert!(converged, "autotuner failed to converge within {budget} requests");
+
+    // Phase 3: verify the swapped plan serves correctly.
+    let settle = if quick { 50 } else { 200 };
+    for i in 0..settle {
+        let input = SplitComplex::random(n, 2_000_000 + i);
+        let got = svc.transform(input.clone())?;
+        let want = fft_ref(&input);
+        let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+        assert!(rel < 1e-4, "post-swap corruption: {rel}");
+    }
+
+    let status = svc.autotune_status().expect("autotune on");
+    let final_plan = status.active_plan.clone();
+    let snap = svc.shutdown();
+    assert_eq!(snap.failed, 0, "requests failed during autotuning");
+    println!("final plan   : {final_plan} (v{})", status.plan_version);
+    println!(
+        "served       : {} requests, 0 failed, {} swaps, {} drift events",
+        snap.completed, status.swaps, status.drift_events
+    );
+    println!("\nautotune_demo OK");
+    Ok(())
+}

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_micros(200) },
         workers: 1,
         queue_depth: 256,
+        autotune: None,
     })?;
 
     // 3. Mixed workload: random sizes, occasional validation.

@@ -1,0 +1,234 @@
+//! Bench: autotune hot-path overhead + the drift→swap trajectory.
+//!
+//! Two claims are measured and written to `BENCH_autotune.json`:
+//!
+//! 1. **Sampling overhead < 2%** — the native execute loop with 1-in-64
+//!    trace sampling (the production default) vs sampling disabled. The
+//!    untraced path pays one relaxed atomic increment; traced requests
+//!    (1/64 of them) pay per-edge `Instant` reads and one bounded
+//!    `try_send`.
+//! 2. **Drift trajectory** — a live service on the simulator oracle:
+//!    steady-state GFLOPS before a 25x Fused-8 drift event, the degraded
+//!    GFLOPS the frozen plan would serve, the recovered GFLOPS after the
+//!    autotuner's hot swap, the swap latency, and how many requests
+//!    convergence took.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spfft::autotune::{trace_request, AutotuneConfig, SampleMode, TraceSampler};
+use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use spfft::cost::{CostModel, SimCost, TableCost, Wisdom};
+use spfft::edge::EdgeType;
+use spfft::fft::{Executor, SplitComplex};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::bench::{black_box, fmt_ns};
+use spfft::util::json::{to_string as json_to_string, Json};
+use spfft::util::stats::gflops;
+
+const N: usize = 1024;
+const SAMPLE_PERIOD: u64 = 64;
+const INFLATION: f64 = 25.0;
+
+/// Median ns/request of `iters` executions of `f`, over `reps` samples.
+fn median_ns_per_iter(reps: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    spfft::util::stats::median(&samples)
+}
+
+fn overhead_section(quick: bool) -> (f64, f64, f64) {
+    let plan = run_plan(&mut SimCost::m1(N), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let mut ex = Executor::new();
+    let cp = ex.compile(&plan, N, true);
+    let input = SplitComplex::random(N, 7);
+    let (reps, iters) = if quick { (9, 400) } else { (21, 2_000) };
+
+    // Baseline: sampling disabled entirely.
+    let base = median_ns_per_iter(reps, iters, || {
+        black_box(cp.run_on(black_box(&input)));
+    });
+
+    // Production shape: sampler gate on every request, 1-in-64 traced;
+    // a drainer thread plays the autotuner so try_send stays non-full.
+    let (sampler, rx) = TraceSampler::new(SAMPLE_PERIOD, 1024);
+    let sampler = Arc::new(sampler);
+    let drainer = std::thread::spawn(move || while rx.recv().is_ok() {});
+    let mode = SampleMode::Wallclock;
+    let sampled = median_ns_per_iter(reps, iters, || {
+        if sampler.should_sample() {
+            let mut samples = Vec::with_capacity(cp.steps().len());
+            let out = trace_request(&cp, black_box(&input), &mode, &mut samples);
+            sampler.submit(samples);
+            black_box(out);
+        } else {
+            black_box(cp.run_on(black_box(&input)));
+        }
+    });
+    // Dropping the sampler closes the channel; the drainer then exits.
+    drop(sampler);
+    let _ = drainer.join();
+
+    let pct = (sampled - base) / base * 100.0;
+    (base, sampled, pct)
+}
+
+struct Trajectory {
+    gflops_before: f64,
+    gflops_drifted_frozen: f64,
+    gflops_after_swap: f64,
+    swap_latency_ns: u64,
+    requests_to_converge: u64,
+    swaps: u64,
+    plan_before: Plan,
+    plan_after: Plan,
+}
+
+fn trajectory_section(quick: bool) -> Trajectory {
+    let machine = spfft::sim::Machine::m1();
+    let prior = Wisdom::harvest(&mut SimCost::m1(N), "sim:m1");
+    let initial = run_plan(&mut SimCost::m1(N), &Strategy::DijkstraContextAware { k: 1 }).plan;
+
+    // True post-drift weights: every F8 cell inflated.
+    let mut inflated = TableCost {
+        n: N,
+        edges: prior.cells.iter().map(|c| c.0).collect::<std::collections::BTreeSet<_>>().into_iter().collect(),
+        cells: prior
+            .cells
+            .iter()
+            .map(|&(e, s, ctx, ns)| ((e, s, ctx), if e == EdgeType::F8 { ns * INFLATION } else { ns }))
+            .collect(),
+    };
+
+    let drifted = Arc::new(AtomicBool::new(false));
+    let oracle_switch = drifted.clone();
+    let oracle_machine = machine.clone();
+    let mode = SampleMode::Oracle(Arc::new(move |e, s, ctx| {
+        let base = oracle_machine.edge_ns(N, e, s, ctx);
+        if e == EdgeType::F8 && oracle_switch.load(Ordering::Relaxed) {
+            base * INFLATION
+        } else {
+            base
+        }
+    }));
+
+    let mut at = AutotuneConfig::new(prior.clone());
+    at.sample_period = 1;
+    at.check_every = 8;
+    at.drift_min_samples = 4;
+    at.ewma_alpha = 1.0;
+    at.blend_samples = 1.0;
+    at.mode = mode;
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(N, initial.clone())],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
+        workers: 2,
+        queue_depth: 128,
+        autotune: Some(at),
+    })
+    .expect("service");
+
+    let warm = if quick { 50 } else { 200 };
+    for i in 0..warm {
+        let _ = svc.transform(SplitComplex::random(N, i));
+    }
+    drifted.store(true, Ordering::Relaxed);
+    let budget: u64 = if quick { 10_000 } else { 30_000 };
+    let mut requests_to_converge = budget;
+    let expected = run_plan(&mut inflated, &Strategy::DijkstraContextAware { k: 1 }).plan;
+    for i in 0..budget {
+        let _ = svc.transform(SplitComplex::random(N, 1_000_000 + i));
+        let status = svc.autotune_status().expect("status");
+        if status.active_plan == expected {
+            requests_to_converge = i + 1;
+            break;
+        }
+    }
+    let status = svc.autotune_status().expect("status");
+    let final_plan = status.active_plan.clone();
+    svc.shutdown();
+
+    Trajectory {
+        gflops_before: gflops(N, machine.plan_ns(N, &initial)),
+        gflops_drifted_frozen: gflops(N, inflated.plan_ns(&initial)),
+        gflops_after_swap: gflops(N, inflated.plan_ns(&final_plan)),
+        swap_latency_ns: status.last_swap_latency_ns,
+        requests_to_converge,
+        swaps: status.swaps,
+        plan_before: initial,
+        plan_after: final_plan,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("SPFFT_BENCH_QUICK").is_ok();
+    println!("== bench suite: autotune_overhead{} ==", if quick { " (quick)" } else { "" });
+
+    let (base_ns, sampled_ns, pct) = overhead_section(quick);
+    println!(
+        "hot path, sampling off : {:>12} /request",
+        fmt_ns(base_ns)
+    );
+    println!(
+        "hot path, 1/{} sampled : {:>12} /request",
+        SAMPLE_PERIOD,
+        fmt_ns(sampled_ns)
+    );
+    println!(
+        "sampling overhead      : {pct:+.2}%  (budget < 2%) {}",
+        if pct < 2.0 { "PASS" } else { "WARN: over budget on this host" }
+    );
+
+    let t = trajectory_section(quick);
+    println!(
+        "steady-state before drift : {:>6.1} GFLOPS ({})",
+        t.gflops_before, t.plan_before
+    );
+    println!(
+        "frozen plan after drift   : {:>6.1} GFLOPS (no autotuning)",
+        t.gflops_drifted_frozen
+    );
+    println!(
+        "after hot swap            : {:>6.1} GFLOPS ({})",
+        t.gflops_after_swap, t.plan_after
+    );
+    println!(
+        "swap latency {}  convergence {} requests  swaps {}",
+        fmt_ns(t.swap_latency_ns as f64),
+        t.requests_to_converge,
+        t.swaps
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("autotune".into()));
+    root.insert("n".to_string(), Json::Num(N as f64));
+    root.insert("sample_period".to_string(), Json::Num(SAMPLE_PERIOD as f64));
+    root.insert("hot_path_ns_sampling_off".to_string(), Json::Num(base_ns));
+    root.insert("hot_path_ns_sampling_on".to_string(), Json::Num(sampled_ns));
+    root.insert("sampling_overhead_pct".to_string(), Json::Num(pct));
+    root.insert("sampling_overhead_budget_pct".to_string(), Json::Num(2.0));
+    root.insert("gflops_steady_before_drift".to_string(), Json::Num(t.gflops_before));
+    root.insert("gflops_frozen_after_drift".to_string(), Json::Num(t.gflops_drifted_frozen));
+    root.insert("gflops_after_hot_swap".to_string(), Json::Num(t.gflops_after_swap));
+    root.insert("swap_latency_ns".to_string(), Json::Num(t.swap_latency_ns as f64));
+    root.insert(
+        "requests_to_converge".to_string(),
+        Json::Num(t.requests_to_converge as f64),
+    );
+    root.insert("swaps".to_string(), Json::Num(t.swaps as f64));
+    root.insert("plan_before".to_string(), Json::Str(t.plan_before.to_string()));
+    root.insert("plan_after".to_string(), Json::Str(t.plan_after.to_string()));
+    let out = json_to_string(&Json::Obj(root));
+    std::fs::write("BENCH_autotune.json", &out).expect("writing BENCH_autotune.json");
+    println!("wrote BENCH_autotune.json");
+}

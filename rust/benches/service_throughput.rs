@@ -28,6 +28,7 @@ fn main() {
             batch,
             workers: 1,
             queue_depth: 512,
+            autotune: None,
         })
         .expect("service");
         let t0 = Instant::now();

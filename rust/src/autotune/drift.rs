@@ -1,0 +1,187 @@
+//! Drift detection: is the world still the one the active plan was
+//! searched under?
+//!
+//! The detector keeps a *reference* weight per cell — the value the
+//! active plan's search consumed. Each check compares the live EWMA of
+//! every sufficiently-sampled cell against its reference; a cell whose
+//! relative deviation exceeds the threshold is drifted, and enough
+//! drifted cells flag the model. After a re-plan the detector is rebased
+//! to the weights that search consumed, so detection always measures
+//! movement *since the active plan was chosen*, not since process start.
+//!
+//! Detection uses the raw live means (fast to react); the re-planner's
+//! search uses the prior-damped blend (slow to overreact) — the classic
+//! fast-detector/slow-actor split.
+
+use std::collections::HashMap;
+
+use crate::cost::Wisdom;
+use crate::edge::{Context, EdgeType};
+
+use super::model::{Cell, OnlineCost};
+
+/// Outcome of one drift check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    pub drifted: bool,
+    /// Cells with enough samples to participate.
+    pub cells_checked: usize,
+    /// Participating cells beyond the threshold.
+    pub cells_over: usize,
+    /// Largest relative deviation seen.
+    pub max_rel_dev: f64,
+    /// The cell behind `max_rel_dev`.
+    pub worst: Option<(EdgeType, usize, Context)>,
+}
+
+/// Compares live observations against the searched-under reference.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    reference: HashMap<Cell, f64>,
+    threshold: f64,
+    min_samples: u64,
+    min_cells: usize,
+}
+
+impl DriftDetector {
+    pub fn new(
+        reference: HashMap<Cell, f64>,
+        threshold: f64,
+        min_samples: u64,
+        min_cells: usize,
+    ) -> DriftDetector {
+        assert!(threshold > 0.0, "drift threshold must be positive");
+        DriftDetector {
+            reference,
+            threshold,
+            min_samples: min_samples.max(1),
+            min_cells: min_cells.max(1),
+        }
+    }
+
+    /// Reference = the offline prior (the initial plan's search weights).
+    pub fn from_wisdom(
+        prior: &Wisdom,
+        threshold: f64,
+        min_samples: u64,
+        min_cells: usize,
+    ) -> DriftDetector {
+        DriftDetector::new(
+            prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
+            threshold,
+            min_samples,
+            min_cells,
+        )
+    }
+
+    /// Compare live means against the reference.
+    pub fn check(&self, model: &OnlineCost) -> DriftReport {
+        let mut report = DriftReport {
+            drifted: false,
+            cells_checked: 0,
+            cells_over: 0,
+            max_rel_dev: 0.0,
+            worst: None,
+        };
+        for (cell, est) in model.observed_cells() {
+            if est.count < self.min_samples {
+                continue;
+            }
+            let Some(&reference) = self.reference.get(&cell) else {
+                continue;
+            };
+            report.cells_checked += 1;
+            let rel = (est.mean - reference).abs() / reference.max(1e-9);
+            if rel > report.max_rel_dev {
+                report.max_rel_dev = rel;
+                report.worst = Some(cell);
+            }
+            if rel > self.threshold {
+                report.cells_over += 1;
+            }
+        }
+        report.drifted = report.cells_over >= self.min_cells;
+        report
+    }
+
+    /// Rebase every reference cell to the model's current (blended)
+    /// estimate — called after a re-plan so the next check measures
+    /// movement relative to the weights that search consumed.
+    pub fn rebase(&mut self, model: &OnlineCost) {
+        let keys: Vec<Cell> = self.reference.keys().copied().collect();
+        for key in keys {
+            self.reference.insert(key, model.estimate(key));
+        }
+    }
+
+    /// The reference weight for a cell (tests / introspection).
+    pub fn reference(&self, cell: Cell) -> Option<f64> {
+        self.reference.get(&cell).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::sampler::EdgeSample;
+    use crate::cost::SimCost;
+
+    fn setup(n: usize) -> (OnlineCost, DriftDetector, Wisdom) {
+        let w = Wisdom::harvest(&mut SimCost::m1(n), "m1");
+        let model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        let det = DriftDetector::from_wisdom(&w, 0.25, 3, 1);
+        (model, det, w)
+    }
+
+    fn feed(model: &mut OnlineCost, cell: Cell, ns: f64, times: usize) {
+        for _ in 0..times {
+            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, ns });
+        }
+    }
+
+    #[test]
+    fn no_observations_no_drift() {
+        let (model, det, _) = setup(256);
+        let r = det.check(&model);
+        assert!(!r.drifted);
+        assert_eq!(r.cells_checked, 0);
+    }
+
+    #[test]
+    fn on_reference_observations_do_not_drift() {
+        let (mut model, det, w) = setup(256);
+        for &(e, s, ctx, ns) in w.cells.iter().take(10) {
+            feed(&mut model, (e, s, ctx), ns, 5);
+        }
+        let r = det.check(&model);
+        assert_eq!(r.cells_checked, 10);
+        assert!(!r.drifted, "max dev {}", r.max_rel_dev);
+    }
+
+    #[test]
+    fn inflated_cell_trips_after_min_samples() {
+        let (mut model, det, w) = setup(256);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed(&mut model, (e, s, ctx), ns * 3.0, 2);
+        assert!(!det.check(&model).drifted, "tripped below min_samples");
+        feed(&mut model, (e, s, ctx), ns * 3.0, 2);
+        let r = det.check(&model);
+        assert!(r.drifted);
+        assert_eq!(r.cells_over, 1);
+        assert_eq!(r.worst, Some((e, s, ctx)));
+        assert!((r.max_rel_dev - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rebase_silences_accepted_drift() {
+        let (mut model, mut det, w) = setup(256);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed(&mut model, (e, s, ctx), ns * 3.0, 20);
+        assert!(det.check(&model).drifted);
+        det.rebase(&model);
+        let r = det.check(&model);
+        // reference is now the blended estimate; the live mean sits within
+        // threshold of it (blend weight 20/24 leaves a small gap)
+        assert!(!r.drifted, "still drifted after rebase: dev {}", r.max_rel_dev);
+    }
+}

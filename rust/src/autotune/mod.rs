@@ -1,0 +1,141 @@
+//! Online autotuning: close the measure → search → swap loop at run time.
+//!
+//! The paper's central claim is that edge costs are *contextual* — the
+//! cost of operation B depends on which operation A ran immediately
+//! before. The offline pipeline (`bin/calibrate`, `cost::Wisdom`) measures
+//! those conditional weights once and freezes a plan at startup. But
+//! contextual weights drift in production: co-tenant cache pressure,
+//! frequency scaling, and batch-size mix all move exactly the
+//! memory-affinity terms the context-aware search exploits. This
+//! subsystem re-learns the weights from the live request path and
+//! re-plans without downtime:
+//!
+//! ```text
+//!            every 1/P requests                  EWMA merge over prior
+//!  workers ───────────────────────▶ [sampler] ─────▶ [online cost model]
+//!     ▲      per-edge, per-context timings                 │
+//!     │                                                    ▼
+//!  [plan slot] ◀── hot swap (versioned; in-flight   [drift detector]
+//!     ▲            batches finish on old plan)             │ observed vs
+//!     │                                                    │ searched-under
+//!  [re-planner] ◀──── drift + hysteresis gate ─────────────┘ weights
+//!     (background shortest_path_context_aware)
+//! ```
+//!
+//! * [`sampler`] — low-overhead trace sampling on the serving hot path;
+//! * [`model`] — [`OnlineCost`]: a [`crate::cost::CostModel`] blending
+//!   exponentially-weighted live estimates over the offline wisdom prior;
+//! * [`drift`] — flags divergence between observed contextual weights and
+//!   the weights the active plan was searched under;
+//! * [`replanner`] — the background thread running the drift → search →
+//!   swap state machine (see DESIGN.md §autotune);
+//! * [`swap`] — [`PlanSlot`]: versioned, atomic plan publication;
+//! * [`wisdom2`] — persistence of learned contextual weights across
+//!   restarts (wisdom v2 file format).
+//!
+//! Wire-up lives in [`crate::coordinator::service`]: pass
+//! [`AutotuneConfig`] in `ServiceConfig::autotune` and the service spawns
+//! the re-planner and instruments its workers.
+
+pub mod drift;
+pub mod model;
+pub mod replanner;
+pub mod sampler;
+pub mod swap;
+pub mod wisdom2;
+
+pub use drift::{DriftDetector, DriftReport};
+pub use model::{CellEstimate, OnlineCost};
+pub use replanner::{Autotuner, AutotuneStatus};
+pub use sampler::{trace_request, EdgeSample, SampleMode, TraceSampler};
+pub use swap::{PlanSlot, VersionedPlan};
+pub use wisdom2::WisdomV2;
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::plancache::PlanCache;
+use crate::cost::Wisdom;
+
+/// Configuration of the online autotuning loop.
+///
+/// Defaults (via [`AutotuneConfig::new`]) are tuned for a serving process:
+/// sample 1 in 64 requests, require sustained 25% deviation on measured
+/// cells, and only swap for a predicted ≥5% improvement.
+#[derive(Clone)]
+pub struct AutotuneConfig {
+    /// Offline measurement prior (the weights the initial plan was
+    /// searched under). Autotuning applies to FFTs of size `prior.n`.
+    pub prior: Wisdom,
+    /// Sample one request in `sample_period` (1 = every request).
+    pub sample_period: u64,
+    /// Relative deviation |observed − reference| / reference that marks a
+    /// cell as drifted.
+    pub drift_threshold: f64,
+    /// Samples a cell needs before it participates in drift detection.
+    pub drift_min_samples: u64,
+    /// Drifted cells required to declare model drift.
+    pub drift_min_cells: usize,
+    /// Sampled requests between drift checks.
+    pub check_every: u64,
+    /// Required predicted improvement before a hot swap ((old − new)/old).
+    pub hysteresis: f64,
+    /// EWMA smoothing factor for live cell estimates (0 < α ≤ 1).
+    pub ewma_alpha: f64,
+    /// Confidence scale: a cell with `s` samples is trusted with weight
+    /// `s / (s + blend_samples)` against the prior.
+    pub blend_samples: f64,
+    /// Where per-edge sample values come from (wall clock or an oracle —
+    /// the latter drives simulator-backed tests and demos).
+    pub mode: SampleMode,
+    /// Persist learned weights here on shutdown (wisdom v2); seeded from
+    /// this file at startup when it exists.
+    pub wisdom_path: Option<PathBuf>,
+    /// When set, hot swaps are also published into this plan cache under
+    /// the `"autotune"` strategy key (versioned).
+    pub cache: Option<Arc<PlanCache>>,
+    /// Bound on in-flight sample batches (hot path drops beyond it).
+    pub sample_queue_depth: usize,
+}
+
+impl AutotuneConfig {
+    /// Production-leaning defaults over an offline prior.
+    pub fn new(prior: Wisdom) -> AutotuneConfig {
+        AutotuneConfig {
+            prior,
+            sample_period: 64,
+            drift_threshold: 0.25,
+            drift_min_samples: 8,
+            drift_min_cells: 1,
+            check_every: 16,
+            hysteresis: 0.05,
+            ewma_alpha: 0.2,
+            blend_samples: 8.0,
+            mode: SampleMode::Wallclock,
+            wisdom_path: None,
+            cache: None,
+            sample_queue_depth: 256,
+        }
+    }
+}
+
+impl fmt::Debug for AutotuneConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AutotuneConfig")
+            .field("n", &self.prior.n)
+            .field("source", &self.prior.source)
+            .field("sample_period", &self.sample_period)
+            .field("drift_threshold", &self.drift_threshold)
+            .field("drift_min_samples", &self.drift_min_samples)
+            .field("drift_min_cells", &self.drift_min_cells)
+            .field("check_every", &self.check_every)
+            .field("hysteresis", &self.hysteresis)
+            .field("ewma_alpha", &self.ewma_alpha)
+            .field("blend_samples", &self.blend_samples)
+            .field("mode", &self.mode)
+            .field("wisdom_path", &self.wisdom_path)
+            .field("sample_queue_depth", &self.sample_queue_depth)
+            .finish()
+    }
+}

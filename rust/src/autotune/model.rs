@@ -1,0 +1,215 @@
+//! The online cost model: live EWMA estimates blended over a wisdom prior.
+//!
+//! Every sampled edge execution updates an exponentially-weighted running
+//! mean for its (edge, stage, context) cell. Planning queries return a
+//! confidence-weighted blend of the live estimate and the offline prior:
+//! a cell with `s` samples trusts the live mean with weight
+//! `s / (s + blend_samples)`. Cells the active plan never executes keep
+//! their prior — which is exactly what makes online re-planning sound:
+//! the search compares freshly-observed cells of the running plan against
+//! prior-valued alternatives, the same tradeoff FFTW's wisdom makes
+//! offline, now maintained continuously.
+
+use std::collections::HashMap;
+
+use crate::cost::{CostModel, Wisdom};
+use crate::edge::{Context, EdgeType};
+
+use super::sampler::EdgeSample;
+
+/// A cell key: (edge, stage, predecessor context).
+pub type Cell = (EdgeType, usize, Context);
+
+/// Live estimate for one cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellEstimate {
+    /// EWMA of observed nanoseconds.
+    pub mean: f64,
+    /// Samples folded into the mean.
+    pub count: u64,
+}
+
+/// [`CostModel`] over prior + live observations.
+pub struct OnlineCost {
+    n: usize,
+    edges: Vec<EdgeType>,
+    alpha: f64,
+    blend_samples: f64,
+    prior: HashMap<Cell, f64>,
+    obs: HashMap<Cell, CellEstimate>,
+}
+
+impl OnlineCost {
+    /// Build from an offline wisdom database (the prior).
+    pub fn from_wisdom(prior: &Wisdom, alpha: f64, blend_samples: f64) -> OnlineCost {
+        assert!(alpha > 0.0 && alpha <= 1.0, "ewma alpha must be in (0, 1]");
+        assert!(blend_samples >= 0.0, "blend_samples must be >= 0");
+        let mut edges: Vec<EdgeType> = prior.cells.iter().map(|c| c.0).collect();
+        edges.sort();
+        edges.dedup();
+        OnlineCost {
+            n: prior.n,
+            edges,
+            alpha,
+            blend_samples,
+            prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
+            obs: HashMap::new(),
+        }
+    }
+
+    /// Fold one live sample into its cell. Non-finite or non-positive
+    /// values (timer glitches) are discarded.
+    pub fn observe(&mut self, sample: &EdgeSample) {
+        if !sample.ns.is_finite() || sample.ns <= 0.0 {
+            return;
+        }
+        let key = (sample.edge, sample.stage, sample.ctx);
+        match self.obs.get_mut(&key) {
+            Some(est) => {
+                est.mean = self.alpha * sample.ns + (1.0 - self.alpha) * est.mean;
+                est.count += 1;
+            }
+            None => {
+                self.obs.insert(key, CellEstimate { mean: sample.ns, count: 1 });
+            }
+        }
+    }
+
+    /// Seed a cell's live estimate directly (wisdom v2 restore).
+    pub fn seed(&mut self, cell: Cell, mean: f64, count: u64) {
+        if mean.is_finite() && mean > 0.0 && count > 0 {
+            self.obs.insert(cell, CellEstimate { mean, count });
+        }
+    }
+
+    /// The blended estimate a planning query returns for `cell`.
+    pub fn estimate(&self, cell: Cell) -> f64 {
+        let prior = self.prior.get(&cell).copied();
+        let obs = self.obs.get(&cell).copied();
+        match (prior, obs) {
+            (Some(p), Some(o)) => {
+                let c = o.count as f64 / (o.count as f64 + self.blend_samples);
+                p * (1.0 - c) + o.mean * c
+            }
+            (Some(p), None) => p,
+            (None, Some(o)) => o.mean,
+            (None, None) => panic!(
+                "online cost: no prior or observation for {}@{} {}",
+                cell.0, cell.1, cell.2
+            ),
+        }
+    }
+
+    /// Raw live estimate (undamped by the prior); `None` until sampled.
+    pub fn observation(&self, cell: Cell) -> Option<CellEstimate> {
+        self.obs.get(&cell).copied()
+    }
+
+    /// All cells with live observations.
+    pub fn observed_cells(&self) -> Vec<(Cell, CellEstimate)> {
+        let mut v: Vec<(Cell, CellEstimate)> =
+            self.obs.iter().map(|(k, v)| (*k, *v)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Every prior cell with its prior value and live estimate, sorted
+    /// (the wisdom v2 export view).
+    pub fn export_cells(&self) -> Vec<(Cell, f64, Option<CellEstimate>)> {
+        let mut v: Vec<(Cell, f64, Option<CellEstimate>)> = self
+            .prior
+            .iter()
+            .map(|(k, &p)| (*k, p, self.obs.get(k).copied()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Total live samples folded in.
+    pub fn total_samples(&self) -> u64 {
+        self.obs.values().map(|e| e.count).sum()
+    }
+}
+
+impl CostModel for OnlineCost {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.edges.clone()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        self.estimate((edge, stage, ctx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::SimCost;
+    use crate::plan::Plan;
+    use crate::planner::{plan as run_plan, Strategy};
+
+    fn m1_model(n: usize) -> OnlineCost {
+        let w = Wisdom::harvest(&mut SimCost::m1(n), "m1");
+        OnlineCost::from_wisdom(&w, 0.5, 4.0)
+    }
+
+    fn sample(edge: EdgeType, stage: usize, ctx: Context, ns: f64) -> EdgeSample {
+        EdgeSample { edge, stage, ctx, ns }
+    }
+
+    #[test]
+    fn unobserved_model_reproduces_the_prior_plan() {
+        let mut model = m1_model(1024);
+        let out = run_plan(&mut model, &Strategy::DijkstraContextAware { k: 1 });
+        assert_eq!(out.plan, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+    }
+
+    #[test]
+    fn estimates_converge_to_observations() {
+        let mut model = m1_model(1024);
+        let cell = (EdgeType::F8, 7, Context::After(EdgeType::R4));
+        let prior = model.estimate(cell);
+        for _ in 0..200 {
+            model.observe(&sample(cell.0, cell.1, cell.2, prior * 10.0));
+        }
+        let est = model.estimate(cell);
+        assert!(est > prior * 9.0, "blended {est} vs prior {prior}");
+        assert_eq!(model.observation(cell).unwrap().count, 200);
+    }
+
+    #[test]
+    fn few_samples_stay_close_to_prior() {
+        let mut model = m1_model(1024);
+        let cell = (EdgeType::R4, 0, Context::Start);
+        let prior = model.estimate(cell);
+        model.observe(&sample(cell.0, cell.1, cell.2, prior * 100.0));
+        // one sample against blend_samples = 4 → weight 0.2
+        let est = model.estimate(cell);
+        assert!(est < prior * 25.0, "single outlier dominated: {est}");
+        assert!(est > prior, "observation ignored entirely");
+    }
+
+    #[test]
+    fn garbage_samples_are_discarded() {
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R2, 0, Context::Start);
+        let prior = model.estimate(cell);
+        model.observe(&sample(cell.0, cell.1, cell.2, f64::NAN));
+        model.observe(&sample(cell.0, cell.1, cell.2, -1.0));
+        model.observe(&sample(cell.0, cell.1, cell.2, 0.0));
+        assert_eq!(model.observation(cell), None);
+        assert_eq!(model.estimate(cell), prior);
+    }
+
+    #[test]
+    fn export_covers_every_prior_cell() {
+        let model = m1_model(1024);
+        // 37 positional (edge, stage) pairs x 7 contexts (wisdom tests)
+        assert_eq!(model.export_cells().len(), 37 * 7);
+        assert_eq!(model.total_samples(), 0);
+    }
+}

@@ -1,0 +1,384 @@
+//! The background re-planner: drain samples → update the model → detect
+//! drift → re-search → hot-swap (with hysteresis).
+//!
+//! One thread per autotuned FFT size, entirely off the request path.
+//! State machine per sample batch (see DESIGN.md §autotune):
+//!
+//! ```text
+//! SAMPLE  — fold the batch into the online model (EWMA per cell)
+//! DRIFT   — every `check_every` batches, compare observed means against
+//!           the weights the active plan was searched under
+//! SEARCH  — on drift: run shortest_path_context_aware over the blended
+//!           model (milliseconds; the paper's point is that this search
+//!           is cheap enough to re-run whenever weights change)
+//! SWAP    — if predicted improvement clears `hysteresis`: publish the
+//!           new plan into the PlanSlot (and the PlanCache, versioned);
+//!           in-flight batches finish on their old snapshot
+//! REBASE  — reference ← current blended weights, so the next check
+//!           measures movement since *this* decision
+//! ```
+//!
+//! On shutdown the learned weights persist as wisdom v2 when
+//! `wisdom_path` is configured.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::graph::search::shortest_path_context_aware;
+use crate::plan::Plan;
+use crate::planner::plan_cost_from_start;
+
+use super::drift::DriftDetector;
+use super::model::OnlineCost;
+use super::sampler::{EdgeSample, SampleMode, TraceSampler};
+use super::swap::PlanSlot;
+use super::wisdom2::WisdomV2;
+use super::AutotuneConfig;
+
+/// Point-in-time view of the autotuning loop.
+#[derive(Debug, Clone)]
+pub struct AutotuneStatus {
+    /// Sample batches folded into the model.
+    pub batches_ingested: u64,
+    /// Individual edge samples folded in.
+    pub samples_ingested: u64,
+    /// Sample batches dropped on the hot path (queue full).
+    pub batches_dropped: u64,
+    pub drift_checks: u64,
+    /// Checks that flagged drift.
+    pub drift_events: u64,
+    /// Background searches run.
+    pub replans: u64,
+    /// Plans actually published.
+    pub swaps: u64,
+    /// Active plan version (1 = startup plan).
+    pub plan_version: u64,
+    /// Drift-decision → publication latency of the last swap (ns).
+    pub last_swap_latency_ns: u64,
+    pub active_plan: Plan,
+    /// Predicted from-start cost of the active plan (ns).
+    pub predicted_ns: f64,
+}
+
+#[derive(Default)]
+struct Counters {
+    stop: AtomicBool,
+    batches: AtomicU64,
+    samples: AtomicU64,
+    drift_checks: AtomicU64,
+    drift_events: AtomicU64,
+    replans: AtomicU64,
+    swaps: AtomicU64,
+    last_swap_latency_ns: AtomicU64,
+}
+
+/// Handle to a running autotuning loop.
+pub struct Autotuner {
+    n: usize,
+    slot: Arc<PlanSlot>,
+    sampler: Arc<TraceSampler>,
+    mode: SampleMode,
+    counters: Arc<Counters>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Autotuner {
+    /// Start the loop for `config.prior.n`-point FFTs with the given
+    /// startup plan (version 1). Panics if the plan is invalid for that
+    /// size.
+    pub fn start(config: AutotuneConfig, initial_plan: Plan) -> Autotuner {
+        let n = config.prior.n;
+        let l = crate::fft::log2i(n);
+        assert!(initial_plan.is_valid_for(l), "plan {initial_plan} invalid for n={n}");
+
+        let mut model =
+            OnlineCost::from_wisdom(&config.prior, config.ewma_alpha, config.blend_samples);
+        if let Some(path) = &config.wisdom_path {
+            if path.exists() {
+                match WisdomV2::load(path) {
+                    // Estimates are only meaningful against the prior they
+                    // were learned over: same size AND same cost source
+                    // (simulator-ns seeded into a native-ns model would mix
+                    // units through every blend and drift comparison).
+                    Ok(w2) if w2.n == n && w2.source == config.prior.source => {
+                        w2.seed_model(&mut model)
+                    }
+                    Ok(w2) => eprintln!(
+                        "autotune: ignoring {} (n={} source={:?} vs prior n={n} source={:?})",
+                        path.display(),
+                        w2.n,
+                        w2.source,
+                        config.prior.source
+                    ),
+                    Err(e) => eprintln!("autotune: ignoring {}: {e}", path.display()),
+                }
+            }
+        }
+        let detector = DriftDetector::from_wisdom(
+            &config.prior,
+            config.drift_threshold,
+            config.drift_min_samples,
+            config.drift_min_cells,
+        );
+        let predicted = plan_cost_from_start(&mut model, &initial_plan);
+        let slot = Arc::new(PlanSlot::new(initial_plan, predicted));
+        let (sampler, rx) = TraceSampler::new(config.sample_period, config.sample_queue_depth);
+        let sampler = Arc::new(sampler);
+        let counters = Arc::new(Counters::default());
+
+        let mode = config.mode.clone();
+        let handle = {
+            let slot = slot.clone();
+            let counters = counters.clone();
+            std::thread::Builder::new()
+                .name(format!("spfft-autotune-{n}"))
+                .spawn(move || run_loop(config, l, model, detector, rx, slot, counters))
+                .expect("spawning autotune thread")
+        };
+
+        Autotuner { n, slot, sampler, mode, counters, handle: Mutex::new(Some(handle)) }
+    }
+
+    /// FFT size this autotuner drives.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The versioned plan slot workers read.
+    pub fn slot(&self) -> &Arc<PlanSlot> {
+        &self.slot
+    }
+
+    /// The hot-path sampler workers consult.
+    pub fn sampler(&self) -> &TraceSampler {
+        &self.sampler
+    }
+
+    /// How sampled values are produced.
+    pub fn mode(&self) -> &SampleMode {
+        &self.mode
+    }
+
+    /// Current status snapshot.
+    pub fn status(&self) -> AutotuneStatus {
+        let cur = self.slot.current();
+        AutotuneStatus {
+            batches_ingested: self.counters.batches.load(Ordering::Relaxed),
+            samples_ingested: self.counters.samples.load(Ordering::Relaxed),
+            batches_dropped: self.sampler.dropped(),
+            drift_checks: self.counters.drift_checks.load(Ordering::Relaxed),
+            drift_events: self.counters.drift_events.load(Ordering::Relaxed),
+            replans: self.counters.replans.load(Ordering::Relaxed),
+            swaps: self.counters.swaps.load(Ordering::Relaxed),
+            plan_version: cur.version,
+            last_swap_latency_ns: self.counters.last_swap_latency_ns.load(Ordering::Relaxed),
+            active_plan: cur.plan.clone(),
+            predicted_ns: cur.predicted_ns,
+        }
+    }
+
+    /// Stop the loop and join the thread (idempotent). Learned weights
+    /// persist to `wisdom_path` here when configured.
+    pub fn stop(&self) {
+        self.counters.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autotuner {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn run_loop(
+    config: AutotuneConfig,
+    l: usize,
+    mut model: OnlineCost,
+    mut detector: DriftDetector,
+    rx: Receiver<Vec<EdgeSample>>,
+    slot: Arc<PlanSlot>,
+    counters: Arc<Counters>,
+) {
+    let n = config.prior.n;
+    let mut since_check = 0u64;
+    loop {
+        if counters.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let batch = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(batch) => batch,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.samples.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for sample in &batch {
+            model.observe(sample);
+        }
+        since_check += 1;
+        if since_check < config.check_every {
+            continue;
+        }
+        since_check = 0;
+        counters.drift_checks.fetch_add(1, Ordering::Relaxed);
+        let report = detector.check(&model);
+        if !report.drifted {
+            continue;
+        }
+        counters.drift_events.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let result = shortest_path_context_aware(&mut model, l);
+        counters.replans.fetch_add(1, Ordering::Relaxed);
+        let current = slot.current();
+        let current_cost = plan_cost_from_start(&mut model, &current.plan);
+        if result.plan != current.plan
+            && result.cost_ns < current_cost * (1.0 - config.hysteresis)
+        {
+            slot.swap(result.plan.clone(), result.cost_ns);
+            counters
+                .last_swap_latency_ns
+                .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            counters.swaps.fetch_add(1, Ordering::Relaxed);
+            if let Some(cache) = &config.cache {
+                cache.swap(n, "autotune", &config.prior.source, result.plan.clone());
+            }
+        }
+        // Either we swapped (reference = weights the new plan was searched
+        // under) or we declined (accept the new weights as the operating
+        // point); both rebase so the next check measures fresh movement.
+        detector.rebase(&model);
+    }
+    if let Some(path) = &config.wisdom_path {
+        let w2 = WisdomV2::from_model(&model, &config.prior.source);
+        if let Err(e) = w2.save(path) {
+            eprintln!("autotune: persisting wisdom failed: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{SimCost, Wisdom};
+    use crate::edge::Context;
+    use crate::planner::{plan as run_plan, Strategy};
+
+    fn tight_config(n: usize) -> AutotuneConfig {
+        let prior = Wisdom::harvest(&mut SimCost::m1(n), "m1");
+        let mut cfg = AutotuneConfig::new(prior);
+        cfg.sample_period = 1;
+        cfg.check_every = 2;
+        cfg.drift_min_samples = 2;
+        cfg.drift_threshold = 0.5;
+        cfg.hysteresis = 0.02;
+        cfg.ewma_alpha = 1.0;
+        cfg.blend_samples = 0.5;
+        cfg
+    }
+
+    fn initial_plan(n: usize) -> Plan {
+        run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan
+    }
+
+    /// Samples for one simulated execution of `plan`, with every cell's
+    /// value scaled by `factor`.
+    fn plan_samples(prior: &Wisdom, plan: &Plan, factor: f64) -> Vec<EdgeSample> {
+        let lookup = |e, s, ctx| {
+            prior
+                .cells
+                .iter()
+                .find(|&&(pe, ps, pc, _)| pe == e && ps == s && pc == ctx)
+                .map(|&(_, _, _, ns)| ns)
+                .expect("cell in prior")
+        };
+        let mut ctx = Context::Start;
+        plan.steps()
+            .into_iter()
+            .map(|(e, s)| {
+                let ns = lookup(e, s, ctx) * factor;
+                let sample = EdgeSample { edge: e, stage: s, ctx, ns };
+                ctx = Context::After(e);
+                sample
+            })
+            .collect()
+    }
+
+    fn wait_for(mut done: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if done() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        false
+    }
+
+    #[test]
+    fn stable_weights_never_swap() {
+        let n = 256;
+        let cfg = tight_config(n);
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let plan = tuner.slot().current().plan.clone();
+        for _ in 0..20 {
+            tuner.sampler().submit(plan_samples(&prior, &plan, 1.0));
+        }
+        assert!(wait_for(|| tuner.status().drift_checks >= 3));
+        let status = tuner.status();
+        assert_eq!(status.swaps, 0);
+        assert_eq!(status.drift_events, 0);
+        assert_eq!(status.plan_version, 1);
+        tuner.stop();
+    }
+
+    #[test]
+    fn inflated_active_plan_triggers_replan_and_swap() {
+        let n = 256;
+        let cfg = tight_config(n);
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let old = tuner.slot().current().plan.clone();
+        for _ in 0..50 {
+            tuner.sampler().submit(plan_samples(&prior, &old, 10.0));
+            std::thread::sleep(Duration::from_millis(1));
+            if tuner.status().swaps >= 1 {
+                break;
+            }
+        }
+        assert!(wait_for(|| tuner.status().swaps >= 1), "no swap happened");
+        let status = tuner.status();
+        assert!(status.plan_version >= 2);
+        assert_ne!(status.active_plan, old);
+        assert!(status.active_plan.is_valid_for(8));
+        assert!(status.replans >= 1);
+        tuner.stop();
+    }
+
+    #[test]
+    fn learned_weights_persist_as_wisdom_v2() {
+        let n = 256;
+        let dir = std::env::temp_dir().join(format!("spfft-autotune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("learned.wisdom2.json");
+        let mut cfg = tight_config(n);
+        cfg.wisdom_path = Some(path.clone());
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let plan = tuner.slot().current().plan.clone();
+        for _ in 0..5 {
+            tuner.sampler().submit(plan_samples(&prior, &plan, 1.0));
+        }
+        assert!(wait_for(|| tuner.status().batches_ingested >= 5));
+        tuner.stop();
+        let w2 = WisdomV2::load(&path).expect("persisted wisdom");
+        assert_eq!(w2.n, n);
+        assert!(w2.cells.iter().any(|c| c.count > 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

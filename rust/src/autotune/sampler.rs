@@ -1,0 +1,196 @@
+//! Trace sampling: per-edge, per-context timings off the serving hot path.
+//!
+//! Workers decide per request (one atomic increment) whether to trace it;
+//! traced requests run through [`crate::fft::CompiledPlan::run_on_traced`]
+//! and the resulting per-edge samples are handed to the re-planner over a
+//! bounded channel with `try_send` — the hot path never blocks on the
+//! autotuner, it drops samples when the queue is full. Untraced requests
+//! pay exactly one relaxed atomic increment (the `<2%` overhead budget is
+//! checked by `benches/autotune_overhead.rs`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use crate::edge::{Context, EdgeType};
+use crate::fft::{CompiledPlan, SplitComplex};
+
+/// One observed edge execution in its live context.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeSample {
+    pub edge: EdgeType,
+    pub stage: usize,
+    pub ctx: Context,
+    /// Observed time in nanoseconds.
+    pub ns: f64,
+}
+
+/// Where sample values come from.
+///
+/// `Wallclock` reports measured per-edge execution time — the production
+/// mode. `Oracle` replaces the measured value with a caller-supplied
+/// function of (edge, stage, context); simulator-backed tests and demos
+/// use it to inject deterministic weights (including mid-run drift)
+/// through the *entire* live pipeline.
+#[derive(Clone)]
+pub enum SampleMode {
+    Wallclock,
+    Oracle(Arc<dyn Fn(EdgeType, usize, Context) -> f64 + Send + Sync>),
+}
+
+impl fmt::Debug for SampleMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SampleMode::Wallclock => f.write_str("Wallclock"),
+            SampleMode::Oracle(_) => f.write_str("Oracle(..)"),
+        }
+    }
+}
+
+/// Sampling decision + bounded hand-off to the re-planner thread.
+pub struct TraceSampler {
+    period: u64,
+    counter: AtomicU64,
+    sampled: AtomicU64,
+    dropped: AtomicU64,
+    tx: SyncSender<Vec<EdgeSample>>,
+}
+
+impl TraceSampler {
+    /// Create a sampler tracing 1 in `period` requests, with a bounded
+    /// queue of `depth` sample batches. Returns the receiver the
+    /// re-planner drains.
+    pub fn new(period: u64, depth: usize) -> (TraceSampler, Receiver<Vec<EdgeSample>>) {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let sampler = TraceSampler {
+            period: period.max(1),
+            counter: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            tx,
+        };
+        (sampler, rx)
+    }
+
+    /// Whether the current request should be traced. One relaxed atomic
+    /// increment; this is the entire untraced-request overhead.
+    pub fn should_sample(&self) -> bool {
+        self.counter.fetch_add(1, Ordering::Relaxed) % self.period == 0
+    }
+
+    /// Hand a traced request's samples to the re-planner; drops (and
+    /// counts the drop) when the queue is full or the re-planner is gone.
+    pub fn submit(&self, samples: Vec<EdgeSample>) {
+        match self.tx.try_send(samples) {
+            Ok(()) => {
+                self.sampled.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Requests seen by the sampling decision.
+    pub fn requests_seen(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+
+    /// Sample batches successfully queued.
+    pub fn sampled(&self) -> u64 {
+        self.sampled.load(Ordering::Relaxed)
+    }
+
+    /// Sample batches dropped under backpressure.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Execute a compiled plan while collecting one [`EdgeSample`] per edge,
+/// with contexts chained exactly as the expanded search graph defines
+/// them (first edge from `Context::Start`, then `After(prev)`).
+pub fn trace_request(
+    cp: &CompiledPlan,
+    input: &SplitComplex,
+    mode: &SampleMode,
+    out: &mut Vec<EdgeSample>,
+) -> SplitComplex {
+    let mut ctx = Context::Start;
+    cp.run_on_traced(input, &mut |edge, stage, measured_ns| {
+        let ns = match mode {
+            SampleMode::Wallclock => measured_ns,
+            SampleMode::Oracle(f) => f(edge, stage, ctx),
+        };
+        out.push(EdgeSample { edge, stage, ctx, ns });
+        ctx = Context::After(edge);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::Executor;
+    use crate::plan::Plan;
+
+    #[test]
+    fn period_one_samples_everything() {
+        let (s, _rx) = TraceSampler::new(1, 4);
+        for _ in 0..10 {
+            assert!(s.should_sample());
+        }
+    }
+
+    #[test]
+    fn period_n_samples_one_in_n() {
+        let (s, _rx) = TraceSampler::new(4, 4);
+        let hits = (0..100).filter(|_| s.should_sample()).count();
+        assert_eq!(hits, 25);
+        assert_eq!(s.requests_seen(), 100);
+    }
+
+    #[test]
+    fn submit_is_bounded_and_never_blocks() {
+        let (s, rx) = TraceSampler::new(1, 2);
+        for _ in 0..5 {
+            s.submit(Vec::new());
+        }
+        assert_eq!(s.sampled(), 2);
+        assert_eq!(s.dropped(), 3);
+        drop(rx);
+        s.submit(Vec::new());
+        assert_eq!(s.dropped(), 4);
+    }
+
+    #[test]
+    fn trace_request_matches_untraced_output_bitwise() {
+        let n = 256;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R2,F8").unwrap(), n, true);
+        let input = SplitComplex::random(n, 9);
+        let mut samples = Vec::new();
+        let traced = trace_request(&cp, &input, &SampleMode::Wallclock, &mut samples);
+        assert_eq!(traced, cp.run_on(&input));
+        assert_eq!(samples.len(), 4);
+        // context chain: start, then after each preceding edge
+        assert_eq!(samples[0].ctx, Context::Start);
+        assert_eq!(samples[1].ctx, Context::After(EdgeType::R4));
+        assert_eq!(samples[3].ctx, Context::After(EdgeType::R2));
+        assert!(samples.iter().all(|s| s.ns >= 0.0));
+    }
+
+    #[test]
+    fn oracle_mode_reports_oracle_values() {
+        let n = 64;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R2").unwrap(), n, true);
+        let mode = SampleMode::Oracle(Arc::new(|e: EdgeType, s: usize, _ctx| {
+            (e.index() * 100 + s) as f64 + 1.0
+        }));
+        let mut samples = Vec::new();
+        trace_request(&cp, &SplitComplex::random(n, 1), &mode, &mut samples);
+        assert_eq!(samples[0].ns, (EdgeType::R4.index() * 100) as f64 + 1.0);
+        assert_eq!(samples[2].ns, (EdgeType::R2.index() * 100 + 4) as f64 + 1.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Wisdom v2: persist *learned* contextual weights across restarts.
+//!
+//! Wisdom v1 (`cost::wisdom`) stores one measured value per cell. The
+//! autotuner knows more: the offline prior **and** the live EWMA with its
+//! sample count. Wisdom v2 stores all three per cell so a restarted
+//! service resumes with its learned confidence instead of re-learning
+//! from scratch:
+//!
+//! ```json
+//! {"format": "spfft-wisdom-v2", "n": 1024, "source": "sim:m1",
+//!  "cells": [{"edge": "F8", "stage": 7, "ctx": 2,
+//!             "prior_ns": 458.0, "obs_ns": 4580.0, "count": 137}, ...]}
+//! ```
+//!
+//! `ctx` is [`Context::index`] (0 = start, 1.. = edge index + 1); cells
+//! with `count == 0` carry no live estimate (`obs_ns` is ignored).
+//! [`WisdomV2::load`] also accepts v1 files, promoting each v1 cell to a
+//! prior with zero live samples — upgrades are transparent.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cost::{CostModel, Wisdom};
+use crate::edge::{Context, EdgeType};
+use crate::util::json::{self, Json};
+
+use super::model::OnlineCost;
+
+/// One persisted cell: prior plus live estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    pub edge: EdgeType,
+    pub stage: usize,
+    pub ctx: Context,
+    /// Offline prior (ns).
+    pub prior_ns: f64,
+    /// Live EWMA (ns); meaningful only when `count > 0`.
+    pub obs_ns: f64,
+    /// Live samples folded into `obs_ns`.
+    pub count: u64,
+}
+
+/// A persisted learned-weight database.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WisdomV2 {
+    pub n: usize,
+    pub source: String,
+    pub cells: Vec<CellRecord>,
+}
+
+impl WisdomV2 {
+    /// Snapshot an online model (prior + observations) for persistence.
+    pub fn from_model(model: &OnlineCost, source: &str) -> WisdomV2 {
+        let cells = model
+            .export_cells()
+            .into_iter()
+            .map(|((edge, stage, ctx), prior_ns, obs)| CellRecord {
+                edge,
+                stage,
+                ctx,
+                prior_ns,
+                obs_ns: obs.map(|o| o.mean).unwrap_or(0.0),
+                count: obs.map(|o| o.count).unwrap_or(0),
+            })
+            .collect();
+        WisdomV2 { n: model.n(), source: source.to_string(), cells }
+    }
+
+    /// Promote a v1 database: priors only, no live samples.
+    pub fn from_v1(w: &Wisdom) -> WisdomV2 {
+        WisdomV2 {
+            n: w.n,
+            source: w.source.clone(),
+            cells: w
+                .cells
+                .iter()
+                .map(|&(edge, stage, ctx, ns)| CellRecord {
+                    edge,
+                    stage,
+                    ctx,
+                    prior_ns: ns,
+                    obs_ns: 0.0,
+                    count: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore live estimates into a freshly-built model. Every cell with
+    /// samples is applied verbatim; callers must gate on compatibility
+    /// first (same `n` *and* same cost `source` — see
+    /// `Autotuner::start`), since estimates only mean anything against
+    /// the prior they were learned over.
+    pub fn seed_model(&self, model: &mut OnlineCost) {
+        for c in &self.cells {
+            if c.count > 0 {
+                model.seed((c.edge, c.stage, c.ctx), c.obs_ns, c.count);
+            }
+        }
+    }
+
+    /// Collapse to a v1 database of the *blended* weights (what the
+    /// planner would consume right now) — for offline tooling that only
+    /// speaks v1.
+    pub fn to_blended_v1(&self, blend_samples: f64) -> Wisdom {
+        Wisdom {
+            n: self.n,
+            source: format!("{}+online", self.source),
+            cells: self
+                .cells
+                .iter()
+                .map(|c| {
+                    let ns = if c.count == 0 {
+                        c.prior_ns
+                    } else {
+                        let w = c.count as f64 / (c.count as f64 + blend_samples);
+                        c.prior_ns * (1.0 - w) + c.obs_ns * w
+                    };
+                    (c.edge, c.stage, c.ctx, ns)
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize to the wisdom v2 JSON format.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("format".to_string(), Json::Str("spfft-wisdom-v2".into()));
+        root.insert("n".to_string(), Json::Num(self.n as f64));
+        root.insert("source".to_string(), Json::Str(self.source.clone()));
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("edge".into(), Json::Str(c.edge.name().into()));
+                o.insert("stage".into(), Json::Num(c.stage as f64));
+                o.insert("ctx".into(), Json::Num(c.ctx.index() as f64));
+                o.insert("prior_ns".into(), Json::Num(c.prior_ns));
+                o.insert("obs_ns".into(), Json::Num(c.obs_ns));
+                o.insert("count".into(), Json::Num(c.count as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("cells".to_string(), Json::Arr(cells));
+        json::to_string(&Json::Obj(root))
+    }
+
+    /// Parse the v2 format; v1 input is promoted via [`WisdomV2::from_v1`].
+    pub fn from_json(text: &str) -> Result<WisdomV2> {
+        let root = json::parse(text).map_err(|e| anyhow!("wisdom2: {e}"))?;
+        match root.get("format").as_str() {
+            Some("spfft-wisdom-v2") => {}
+            Some("spfft-wisdom-v1") => return Ok(WisdomV2::from_v1(&Wisdom::from_json(text)?)),
+            other => bail!("not a spfft wisdom file (format {other:?})"),
+        }
+        let n = root.get("n").as_usize().ok_or_else(|| anyhow!("wisdom2: bad n"))?;
+        if n < 2 || !n.is_power_of_two() {
+            bail!("wisdom2: n = {n} is not a power of two >= 2");
+        }
+        let source = root
+            .get("source")
+            .as_str()
+            .ok_or_else(|| anyhow!("wisdom2: missing source"))?
+            .to_string();
+        let mut cells = Vec::new();
+        for c in root.get("cells").as_arr().ok_or_else(|| anyhow!("wisdom2: missing cells"))? {
+            let edge = c
+                .get("edge")
+                .as_str()
+                .and_then(EdgeType::parse)
+                .ok_or_else(|| anyhow!("wisdom2: bad edge {:?}", c.get("edge")))?;
+            let stage = c.get("stage").as_usize().ok_or_else(|| anyhow!("wisdom2: bad stage"))?;
+            let ctx = c
+                .get("ctx")
+                .as_usize()
+                .and_then(Context::from_index)
+                .ok_or_else(|| anyhow!("wisdom2: bad ctx"))?;
+            let prior_ns = c.get("prior_ns").as_f64().ok_or_else(|| anyhow!("wisdom2: bad prior_ns"))?;
+            if !prior_ns.is_finite() || prior_ns <= 0.0 {
+                bail!("wisdom2: non-positive prior for {edge}@{stage}");
+            }
+            let obs_ns = c.get("obs_ns").as_f64().unwrap_or(0.0);
+            let count = c.get("count").as_usize().unwrap_or(0) as u64;
+            if count > 0 && (!obs_ns.is_finite() || obs_ns <= 0.0) {
+                bail!("wisdom2: non-positive observation for {edge}@{stage}");
+            }
+            cells.push(CellRecord { edge, stage, ctx, prior_ns, obs_ns, count });
+        }
+        if cells.is_empty() {
+            bail!("wisdom2: empty cell set");
+        }
+        Ok(WisdomV2 { n, source, cells })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json()).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<WisdomV2> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        WisdomV2::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::sampler::EdgeSample;
+    use crate::cost::SimCost;
+
+    fn model_with_samples(n: usize) -> (OnlineCost, Wisdom) {
+        let w = Wisdom::harvest(&mut SimCost::m1(n), "m1");
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        for &(e, s, ctx, ns) in w.cells.iter().take(5) {
+            for _ in 0..7 {
+                model.observe(&EdgeSample { edge: e, stage: s, ctx, ns: ns * 2.0 });
+            }
+        }
+        (model, w)
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (model, _) = model_with_samples(256);
+        let w2 = WisdomV2::from_model(&model, "m1");
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back, w2);
+        assert_eq!(back.cells.iter().filter(|c| c.count > 0).count(), 5);
+    }
+
+    #[test]
+    fn seed_model_restores_learned_estimates() {
+        let (model, w) = model_with_samples(256);
+        let w2 = WisdomV2::from_model(&model, "m1");
+        let mut fresh = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        assert_eq!(fresh.total_samples(), 0);
+        w2.seed_model(&mut fresh);
+        assert_eq!(fresh.total_samples(), model.total_samples());
+        let (e, s, ctx, _) = w.cells[0];
+        assert_eq!(fresh.observation((e, s, ctx)), model.observation((e, s, ctx)));
+    }
+
+    #[test]
+    fn v1_files_are_promoted() {
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w2 = WisdomV2::from_json(&w.to_json()).unwrap();
+        assert_eq!(w2.n, 256);
+        assert_eq!(w2.cells.len(), w.cells.len());
+        assert!(w2.cells.iter().all(|c| c.count == 0));
+        // blended v1 of an unobserved v2 equals the original weights
+        let blended = w2.to_blended_v1(8.0);
+        for (a, b) in w.cells.iter().zip(&blended.cells) {
+            assert_eq!(a.0, b.0);
+            assert!((a.3 - b.3).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(WisdomV2::from_json("{}").is_err());
+        assert!(WisdomV2::from_json(r#"{"format":"spfft-wisdom-v2","n":8,"source":"x","cells":[]}"#).is_err());
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"prior_ns":5.0,"obs_ns":-1.0,"count":3}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("spfft-wisdom2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m1.wisdom2.json");
+        let (model, _) = model_with_samples(256);
+        let w2 = WisdomV2::from_model(&model, "m1");
+        w2.save(&path).unwrap();
+        assert_eq!(WisdomV2::load(&path).unwrap(), w2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

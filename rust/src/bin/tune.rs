@@ -6,13 +6,26 @@
 //! (Tables 2–4). The winning vector is printed in `params.rs` syntax and
 //! baked into `MachineParams::m1()` / `::haswell()`.
 //!
-//! Usage: cargo run --release --bin tune [-- m1|haswell] [evals]
+//! Usage: cargo run --release --bin tune -- [options]
+//!
+//!   --machine m1|haswell   target parameter set        [default: m1]
+//!   --evals N              optimizer evaluation budget [default: 40000]
+//!   --seed S               optimizer RNG seed
+//!   --prior-out FILE       after fitting, harvest the fitted machine's
+//!                          full contextual cell catalog and write it as a
+//!                          wisdom v2 file — the autotuner's offline prior
+//!                          (`spfft serve --autotune`, DESIGN.md §autotune)
+//!   --prior-n N            FFT size for --prior-out    [default: 1024]
+//!
+//! Bare positionals (`tune m1 40000`) keep working for older scripts.
 
-use spfft::cost::{CostModel, SimCost};
+use spfft::autotune::WisdomV2;
+use spfft::cost::{CostModel, SimCost, Wisdom};
 use spfft::edge::{Context, EdgeType};
 use spfft::plan::Plan;
 use spfft::planner::{plan as run_plan, Strategy};
 use spfft::sim::{Machine, MachineParams};
+use spfft::util::cli::Command;
 use spfft::util::rng::Rng;
 
 const N: usize = 1024;
@@ -208,9 +221,48 @@ fn clampv(spec: &Spec, x: &mut [f64]) {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let which = args.first().map(|s| s.as_str()).unwrap_or("m1");
-    let evals: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40_000);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("tune", "fit simulator parameters to the paper's shape")
+        .opt("machine", "m1", "target parameter set (m1|haswell)")
+        .opt("evals", "40000", "optimizer evaluation budget")
+        .opt("seed", "", "optimizer RNG seed (default: the baked-in seed)")
+        .opt("prior-out", "", "write the fitted machine's contextual cells as wisdom v2")
+        .opt("prior-n", "1024", "FFT size for --prior-out");
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("{}", cmd.usage());
+        return;
+    }
+    let args = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    // Back-compat: bare positionals override the flag defaults.
+    let positional = args.positional().to_vec();
+    let which_owned = positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.get("machine").to_string());
+    let which = which_owned.as_str();
+    let evals: usize = match positional.get(1) {
+        Some(s) => s.parse().unwrap_or_else(|_| {
+            eprintln!("error: evals expects an integer, got '{s}'");
+            std::process::exit(2);
+        }),
+        None => args.get_usize("evals").unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }),
+    };
+    let seed: u64 = match args.get("seed") {
+        "" => 0xCA11B007,
+        s => s.parse().unwrap_or_else(|_| {
+            eprintln!("error: --seed expects a u64, got '{s}'");
+            std::process::exit(2);
+        }),
+    };
     let base = MachineParams::by_name(which).expect("m1|haswell");
     let loss_fn: fn(&MachineParams) -> f64 = match which {
         "m1" => loss_m1,
@@ -241,7 +293,7 @@ fn main() {
     ];
     clampv(&sp, &mut x);
     let mut best = loss_fn(&to_params(&base, &x));
-    let mut rng = Rng::new(0xCA11B007);
+    let mut rng = Rng::new(seed);
     println!("initial loss: {best:.3}");
     let mut used = 0usize;
     let mut restarts = 0;
@@ -296,11 +348,31 @@ fn main() {
     }
     // categorical report
     let p = to_params(&base, &best_x);
-    let mut cost = SimCost::new(Machine::new(p), N);
+    let mut cost = SimCost::new(Machine::new(p.clone()), N);
     let cf = run_plan(&mut cost, &Strategy::DijkstraContextFree);
     let ca = run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 });
     let ex = run_plan(&mut cost, &Strategy::Exhaustive);
     println!("CF: {}  (true {:.0} ns)", cf.plan, cf.true_ns);
     println!("CA: {}  (true {:.0} ns)", ca.plan, ca.true_ns);
     println!("EX: {}  (true {:.0} ns)", ex.plan, ex.true_ns);
+
+    // Optional: export the fitted machine's full contextual cell catalog
+    // as a wisdom v2 prior for the online autotuner.
+    let prior_out = args.get("prior-out");
+    if !prior_out.is_empty() {
+        let prior_n = args.get_usize("prior-n").unwrap_or(N);
+        let mut prior_cost = SimCost::new(Machine::new(p), prior_n);
+        let v1 = Wisdom::harvest(&mut prior_cost, &format!("sim:{which}:tuned"));
+        let w2 = WisdomV2::from_v1(&v1);
+        match w2.save(std::path::Path::new(prior_out)) {
+            Ok(()) => println!(
+                "wrote autotune prior: {} cells (n={prior_n}) to {prior_out}",
+                w2.cells.len()
+            ),
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

@@ -1,9 +1,18 @@
 //! Service metrics: counters + a log-bucketed latency histogram.
+//!
+//! Bucket `i` covers latencies in `[2^i, 2^(i+1))` ns; the last bucket
+//! saturates (everything at or above 2^30 ns ≈ 1.07 s lands there).
+//! Percentiles report a bucket's upper edge *clamped to the true observed
+//! maximum* — without the clamp, a fleet of sub-microsecond native
+//! executions reads up to 2x slower than reality, and a single saturated
+//! outlier reads as exactly 2^31 ns no matter how slow it really was
+//! (both bugs existed here once; `sub_microsecond_percentiles_are_tight`
+//! and `saturating_latencies_report_the_true_max` pin the fixes).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Number of log2 latency buckets (1 ns .. ~1.15 s).
+/// Number of log2 latency buckets (1 ns .. the 2^30 ns saturation bucket).
 const BUCKETS: usize = 31;
 
 /// Thread-safe metrics sink (lock-free atomics; share via `Arc`).
@@ -16,6 +25,10 @@ pub struct Metrics {
     batched_requests: AtomicU64,
     busy_ns: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
+    /// Exact maximum latency seen (ns) — the histogram alone cannot
+    /// recover it (upper edges overstate; the saturation bucket is
+    /// unbounded).
+    max_latency_ns: AtomicU64,
 }
 
 /// Point-in-time snapshot with derived statistics.
@@ -46,9 +59,13 @@ impl Metrics {
 
     pub fn on_complete(&self, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let ns = latency.as_nanos().max(1) as u64;
+        // Clamp into [1, u64::MAX]: a zero-duration latency (timer
+        // granularity on sub-microsecond executions) lands in bucket 0
+        // instead of underflowing the bucket index.
+        let ns = latency.as_nanos().clamp(1, u64::MAX as u128) as u64;
         let bucket = (63 - ns.leading_zeros() as usize).min(BUCKETS - 1);
         self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.max_latency_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
     pub fn on_failure(&self) {
@@ -61,7 +78,7 @@ impl Metrics {
         self.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
     }
 
-    fn percentile(&self, counts: &[u64; BUCKETS], total: u64, p: f64) -> Duration {
+    fn percentile(&self, counts: &[u64; BUCKETS], total: u64, max_ns: u64, p: f64) -> Duration {
         if total == 0 {
             return Duration::ZERO;
         }
@@ -70,25 +87,30 @@ impl Metrics {
         for (i, c) in counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                // upper edge of the bucket
-                return Duration::from_nanos(1u64 << (i + 1).min(63));
+                // Upper edge of the bucket, clamped to the true maximum
+                // (the edge overstates tight sub-microsecond populations
+                // by up to 2x). The last bucket has no upper edge — its
+                // only honest value is the true maximum.
+                let ns = if i == BUCKETS - 1 {
+                    max_ns.max(1)
+                } else {
+                    (1u64 << (i + 1).min(63)).min(max_ns.max(1))
+                };
+                return Duration::from_nanos(ns);
             }
         }
-        Duration::from_nanos(1u64 << BUCKETS)
+        Duration::from_nanos(max_ns.max(1))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut counts = [0u64; BUCKETS];
         let mut total = 0;
-        let mut max_bucket = None;
         for (i, b) in self.latency_buckets.iter().enumerate() {
             let c = b.load(Ordering::Relaxed);
             counts[i] = c;
             total += c;
-            if c > 0 {
-                max_bucket = Some(i);
-            }
         }
+        let max_ns = self.max_latency_ns.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let breq = self.batched_requests.load(Ordering::Relaxed);
         MetricsSnapshot {
@@ -98,12 +120,10 @@ impl Metrics {
             batches,
             mean_batch_size: if batches == 0 { 0.0 } else { breq as f64 / batches as f64 },
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
-            latency_p50: self.percentile(&counts, total, 0.50),
-            latency_p95: self.percentile(&counts, total, 0.95),
-            latency_p99: self.percentile(&counts, total, 0.99),
-            latency_max: Duration::from_nanos(
-                max_bucket.map(|i| 1u64 << (i + 1).min(63)).unwrap_or(0),
-            ),
+            latency_p50: self.percentile(&counts, total, max_ns, 0.50),
+            latency_p95: self.percentile(&counts, total, max_ns, 0.95),
+            latency_p99: self.percentile(&counts, total, max_ns, 0.99),
+            latency_max: Duration::from_nanos(max_ns),
         }
     }
 }
@@ -153,6 +173,58 @@ mod tests {
         assert!(s.latency_p50 <= Duration::from_nanos(4_096));
         assert!(s.latency_p99 >= Duration::from_micros(100));
         assert!(s.latency_max >= s.latency_p99);
+    }
+
+    #[test]
+    fn sub_microsecond_percentiles_are_tight() {
+        // Native n=256 executions run a few hundred ns; reporting the
+        // bucket's upper edge overstated them by up to 2x. With the
+        // true-max clamp a uniform population reads exactly right.
+        let m = Metrics::new();
+        for _ in 0..1000 {
+            m.on_complete(Duration::from_nanos(300)); // bucket [256, 512)
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50, Duration::from_nanos(300));
+        assert_eq!(s.latency_p99, Duration::from_nanos(300));
+        assert_eq!(s.latency_max, Duration::from_nanos(300));
+    }
+
+    #[test]
+    fn zero_duration_latency_lands_in_the_first_bucket() {
+        // Instant granularity can hand the histogram Duration::ZERO for
+        // sub-microsecond work; that must neither panic (bucket-index
+        // underflow) nor vanish.
+        let m = Metrics::new();
+        m.on_complete(Duration::ZERO);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1);
+        assert!(s.latency_p50 >= Duration::from_nanos(1));
+        assert!(s.latency_p50 <= Duration::from_nanos(2));
+    }
+
+    #[test]
+    fn saturating_latencies_report_the_true_max() {
+        // Beyond the last bucket (>= 2^30 ns) the histogram saturates;
+        // the reported max/percentile must not cap at the bucket edge.
+        let m = Metrics::new();
+        m.on_complete(Duration::from_secs(5));
+        let s = m.snapshot();
+        assert_eq!(s.latency_max, Duration::from_secs(5));
+        assert_eq!(s.latency_p99, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn max_never_below_any_percentile() {
+        let m = Metrics::new();
+        for ns in [1u64, 77, 300, 1_000, 65_000, 2_000_000, 3_000_000_000] {
+            m.on_complete(Duration::from_nanos(ns));
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50 <= s.latency_p95);
+        assert!(s.latency_p95 <= s.latency_p99);
+        assert!(s.latency_p99 <= s.latency_max);
+        assert_eq!(s.latency_max, Duration::from_nanos(3_000_000_000));
     }
 
     #[test]

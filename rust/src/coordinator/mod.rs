@@ -12,9 +12,11 @@
 //! so a worker-per-core pool with bounded queues is the right shape).
 //!
 //! * [`metrics`] — counters + log-bucketed latency histogram;
-//! * [`plancache`] — (n, strategy) -> plan memoization;
+//! * [`plancache`] — versioned (n, strategy) -> plan memoization (the
+//!   autotuner hot-swaps re-planned arrangements through it);
 //! * [`batcher`] — size/deadline dynamic batching;
-//! * [`service`] — the request loop, worker pool, and typed handles.
+//! * [`service`] — the request loop, worker pool, and typed handles;
+//!   wires in [`crate::autotune`] when `ServiceConfig::autotune` is set.
 
 pub mod batcher;
 pub mod metrics;

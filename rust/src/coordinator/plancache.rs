@@ -3,6 +3,12 @@
 //! Planning costs measurements (or simulator sweeps); serving must not
 //! re-plan per request. Keys carry the cost-source label so plans from
 //! different machines/providers don't cross-contaminate.
+//!
+//! Entries are **versioned**: the online autotuner publishes re-planned
+//! arrangements through [`PlanCache::swap`], which atomically replaces
+//! the entry and bumps its version. Readers holding a previously fetched
+//! `Plan` are unaffected (plans are owned clones); the version lets
+//! observers detect publication without comparing plan contents.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -12,10 +18,10 @@ use crate::plan::Plan;
 /// Cache key: FFT size + strategy name + cost-source label.
 pub type PlanKey = (usize, String, String);
 
-/// Thread-safe plan cache.
+/// Thread-safe, versioned plan cache.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    map: Mutex<HashMap<PlanKey, Plan>>,
+    map: Mutex<HashMap<PlanKey, (Plan, u64)>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
 }
@@ -34,23 +40,50 @@ impl PlanCache {
         compute: impl FnOnce() -> Plan,
     ) -> Plan {
         let key = (n, strategy.to_string(), source.to_string());
-        if let Some(p) = self.map.lock().unwrap().get(&key) {
+        if let Some((p, _)) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             return p.clone();
         }
         self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        // Compute outside the lock (planning may be slow).
+        // Compute outside the lock (planning may be slow). If another
+        // writer (a concurrent planner, or the autotuner's swap) published
+        // an entry meanwhile, keep theirs — overwriting would clobber a
+        // hot-swapped plan with a stale one and bump the version for a
+        // publication that never happened.
         let plan = compute();
-        self.map.lock().unwrap().insert(key, plan.clone());
-        plan
+        let mut map = self.map.lock().unwrap();
+        let (cached, _) = map.entry(key).or_insert_with(|| (plan, 1));
+        cached.clone()
     }
 
-    /// Insert a pre-computed plan.
+    /// Insert a pre-computed plan (bumps the version when overwriting).
     pub fn insert(&self, n: usize, strategy: &str, source: &str, plan: Plan) {
-        self.map
-            .lock()
-            .unwrap()
-            .insert((n, strategy.to_string(), source.to_string()), plan);
+        self.swap(n, strategy, source, plan);
+    }
+
+    /// Atomically publish `plan` for a key; returns the new version
+    /// (1 when the key is fresh). This is the autotuner's hot-swap entry
+    /// point: the replacement happens under one lock acquisition, so a
+    /// concurrent reader sees either the old or the new plan, never a
+    /// torn mix.
+    pub fn swap(&self, n: usize, strategy: &str, source: &str, plan: Plan) -> u64 {
+        let key = (n, strategy.to_string(), source.to_string());
+        let mut map = self.map.lock().unwrap();
+        let version = map.get(&key).map(|(_, v)| *v).unwrap_or(0) + 1;
+        map.insert(key, (plan, version));
+        version
+    }
+
+    /// Current plan for a key, if cached.
+    pub fn get(&self, n: usize, strategy: &str, source: &str) -> Option<Plan> {
+        let key = (n, strategy.to_string(), source.to_string());
+        self.map.lock().unwrap().get(&key).map(|(p, _)| p.clone())
+    }
+
+    /// Current version for a key (None when absent, 1 = first insert).
+    pub fn version(&self, n: usize, strategy: &str, source: &str) -> Option<u64> {
+        let key = (n, strategy.to_string(), source.to_string());
+        self.map.lock().unwrap().get(&key).map(|(_, v)| *v)
     }
 
     pub fn len(&self) -> usize {
@@ -119,5 +152,29 @@ mod tests {
             assert_eq!(h.join().unwrap().total_stages(), 6);
         }
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn swap_bumps_versions_and_replaces_the_plan() {
+        let cache = PlanCache::new();
+        assert_eq!(cache.version(1024, "autotune", "m1"), None);
+        let v1 = cache.swap(1024, "autotune", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        assert_eq!(v1, 1);
+        let v2 = cache.swap(1024, "autotune", "m1", Plan::parse("R4,R4,R4,F16").unwrap());
+        assert_eq!(v2, 2);
+        assert_eq!(cache.version(1024, "autotune", "m1"), Some(2));
+        assert_eq!(cache.get(1024, "autotune", "m1"), Plan::parse("R4,R4,R4,F16"));
+        // unrelated keys keep their own version streams
+        cache.insert(256, "ca", "m1", Plan::parse("R4,R4,R2,F8").unwrap());
+        assert_eq!(cache.version(256, "ca", "m1"), Some(1));
+    }
+
+    #[test]
+    fn swapped_key_still_hits_through_get_or_plan() {
+        let cache = PlanCache::new();
+        cache.swap(1024, "ca", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        let p = cache.get_or_plan(1024, "ca", "m1", || unreachable!());
+        assert_eq!(p, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        assert_eq!(cache.hits(), 1);
     }
 }

@@ -1,4 +1,5 @@
-//! The FFT service: plan once, batch, execute, measure.
+//! The FFT service: plan once, batch, execute, measure — and, when
+//! autotuning is on, keep re-planning from live samples.
 //!
 //! Request path (Python-free): client calls [`FftService::submit`] with a
 //! split-complex buffer → the request queues to a worker → the worker's
@@ -11,6 +12,14 @@
 //!   this host, used by the serving example and benches;
 //! * [`Backend::Pjrt`] — the AOT artifacts via PJRT; the registry is
 //!   created inside the worker thread (the `xla` client is not `Send`).
+//!
+//! Autotuning (native backend): when `ServiceConfig::autotune` is set,
+//! the service starts an [`Autotuner`] for the configured size. Workers
+//! trace 1 in `sample_period` requests through the per-edge timing hook
+//! and refresh their compiled plan from the versioned [`PlanSlot`]
+//! *between* batches — a batch that started under version `v` finishes
+//! under version `v`, so a hot swap can never corrupt an in-flight
+//! request.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -19,12 +28,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::autotune::{trace_request, Autotuner, AutotuneConfig, AutotuneStatus};
 use crate::fft::{Executor, SplitComplex};
 use crate::plan::Plan;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::plancache::PlanCache;
 
 /// Execution backend for the workers.
 #[derive(Debug, Clone)]
@@ -39,7 +48,7 @@ pub enum Backend {
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// FFT sizes the service accepts; a plan is fixed per size at startup.
+    /// FFT sizes the service accepts, with each size's startup plan.
     pub plans: Vec<(usize, Plan)>,
     pub backend: Backend,
     pub batch: BatchPolicy,
@@ -47,6 +56,9 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Bounded queue depth; submits beyond it fail fast (backpressure).
     pub queue_depth: usize,
+    /// Online autotuning for the size matching `autotune.prior.n`
+    /// (native backend only); `None` serves the startup plans forever.
+    pub autotune: Option<AutotuneConfig>,
 }
 
 struct Request {
@@ -63,10 +75,12 @@ pub struct FftService {
     metrics: Arc<Metrics>,
     accepting: Arc<AtomicBool>,
     sizes: Vec<usize>,
+    autotuner: Option<Arc<Autotuner>>,
 }
 
 impl FftService {
-    /// Start workers and return the handle.
+    /// Start workers (and the autotuner, when configured) and return the
+    /// handle.
     pub fn start(config: ServiceConfig) -> Result<FftService> {
         if config.plans.is_empty() {
             bail!("service needs at least one (n, plan)");
@@ -77,6 +91,23 @@ impl FftService {
                 bail!("plan {plan} invalid for n={n}");
             }
         }
+        let autotuner = match &config.autotune {
+            None => None,
+            Some(at) => {
+                if !matches!(config.backend, Backend::Native) {
+                    bail!("autotune requires the native backend");
+                }
+                let initial = config
+                    .plans
+                    .iter()
+                    .find(|(n, _)| *n == at.prior.n)
+                    .map(|(_, p)| p.clone())
+                    .ok_or_else(|| {
+                        anyhow!("autotune prior is for n={}, which has no configured plan", at.prior.n)
+                    })?;
+                Some(Arc::new(Autotuner::start(at.clone(), initial)))
+            }
+        };
         let metrics = Arc::new(Metrics::new());
         let accepting = Arc::new(AtomicBool::new(true));
         let (tx, rx) = sync_channel::<Request>(config.queue_depth);
@@ -87,10 +118,11 @@ impl FftService {
             let rx = rx.clone();
             let metrics = metrics.clone();
             let config2 = config.clone();
+            let tuner = autotuner.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("spfft-worker-{worker_id}"))
-                    .spawn(move || worker_loop(worker_id, rx, config2, metrics))
+                    .spawn(move || worker_loop(worker_id, rx, config2, metrics, tuner))
                     .map_err(|e| anyhow!("spawn: {e}"))?,
             );
         }
@@ -100,6 +132,7 @@ impl FftService {
             metrics,
             accepting,
             sizes: config.plans.iter().map(|(n, _)| *n).collect(),
+            autotuner,
         })
     }
 
@@ -139,12 +172,21 @@ impl FftService {
         self.metrics.clone()
     }
 
-    /// Stop accepting, drain, and join workers.
+    /// Autotuning status, when autotuning is configured.
+    pub fn autotune_status(&self) -> Option<AutotuneStatus> {
+        self.autotuner.as_ref().map(|t| t.status())
+    }
+
+    /// Stop accepting, drain, and join workers (then the autotuner, so
+    /// its learned wisdom persists after the last sample).
     pub fn shutdown(mut self) -> super::metrics::MetricsSnapshot {
         self.accepting.store(false, Ordering::Relaxed);
         drop(self.tx.take()); // close the queue; workers drain and exit
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(t) = &self.autotuner {
+            t.stop();
         }
         self.metrics.snapshot()
     }
@@ -157,11 +199,18 @@ impl Drop for FftService {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        if let Some(t) = &self.autotuner {
+            t.stop();
+        }
     }
 }
 
 enum WorkerBackend {
-    Native(Vec<(usize, crate::fft::CompiledPlan)>),
+    Native {
+        ex: Executor,
+        /// (n, compiled plan, plan version executing under).
+        compiled: Vec<(usize, crate::fft::CompiledPlan, u64)>,
+    },
     Pjrt {
         registry: crate::runtime::Registry,
         plans: Vec<(usize, Plan)>,
@@ -169,14 +218,40 @@ enum WorkerBackend {
 }
 
 impl WorkerBackend {
-    fn execute(&mut self, n: usize, input: &SplitComplex) -> Result<SplitComplex> {
+    /// Recompile any entry whose published plan version moved. Called
+    /// between batches only — never while a batch is executing.
+    fn refresh(&mut self, tuner: &Autotuner) {
+        let WorkerBackend::Native { ex, compiled } = self else { return };
+        let current = tuner.slot().current();
+        if let Some(entry) = compiled.iter_mut().find(|(n, _, _)| *n == tuner.n()) {
+            if entry.2 != current.version {
+                entry.1 = ex.compile(&current.plan, entry.0, true);
+                entry.2 = current.version;
+            }
+        }
+    }
+
+    fn execute(
+        &mut self,
+        n: usize,
+        input: &SplitComplex,
+        tuner: Option<&Autotuner>,
+    ) -> Result<SplitComplex> {
         match self {
-            WorkerBackend::Native(compiled) => {
+            WorkerBackend::Native { compiled, .. } => {
                 let cp = compiled
                     .iter()
-                    .find(|(cn, _)| *cn == n)
-                    .map(|(_, cp)| cp)
+                    .find(|(cn, _, _)| *cn == n)
+                    .map(|(_, cp, _)| cp)
                     .ok_or_else(|| anyhow!("no plan for n={n}"))?;
+                if let Some(tuner) = tuner {
+                    if n == tuner.n() && tuner.sampler().should_sample() {
+                        let mut samples = Vec::with_capacity(cp.steps().len());
+                        let out = trace_request(cp, input, tuner.mode(), &mut samples);
+                        tuner.sampler().submit(samples);
+                        return Ok(out);
+                    }
+                }
                 Ok(cp.run_on(input))
             }
             WorkerBackend::Pjrt { registry, plans } => {
@@ -196,18 +271,18 @@ fn worker_loop(
     rx: Arc<std::sync::Mutex<Receiver<Request>>>,
     config: ServiceConfig,
     metrics: Arc<Metrics>,
+    tuner: Option<Arc<Autotuner>>,
 ) {
     // Build the backend inside the thread (PJRT clients are not Send).
     let mut backend = match &config.backend {
         Backend::Native => {
             let mut ex = Executor::new();
-            WorkerBackend::Native(
-                config
-                    .plans
-                    .iter()
-                    .map(|(n, p)| (*n, ex.compile(p, *n, true)))
-                    .collect(),
-            )
+            let compiled = config
+                .plans
+                .iter()
+                .map(|(n, p)| (*n, ex.compile(p, *n, true), 1u64))
+                .collect();
+            WorkerBackend::Native { ex, compiled }
         }
         Backend::Pjrt { artifacts_dir } => match crate::runtime::Registry::load(artifacts_dir) {
             Ok(registry) => WorkerBackend::Pjrt { registry, plans: config.plans.clone() },
@@ -225,10 +300,15 @@ fn worker_loop(
             batcher.next_batch_ref()
         };
         let Some(batch) = batch else { return };
+        // Pick up hot-swapped plans between batches: everything in the
+        // batch we just pulled executes under one plan version.
+        if let Some(t) = &tuner {
+            backend.refresh(t);
+        }
         let t0 = Instant::now();
         let size = batch.len();
         for req in batch {
-            let result = backend.execute(req.n, &req.input);
+            let result = backend.execute(req.n, &req.input, tuner.as_deref());
             match &result {
                 Ok(_) => metrics.on_complete(req.enqueued.elapsed()),
                 Err(_) => metrics.on_failure(),
@@ -284,6 +364,7 @@ mod tests {
             batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(100) },
             workers,
             queue_depth: 64,
+            autotune: None,
         })
         .unwrap()
     }
@@ -314,8 +395,76 @@ mod tests {
             batch: BatchPolicy::default(),
             workers: 1,
             queue_depth: 4,
+            autotune: None,
         });
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn rejects_autotune_without_matching_plan() {
+        let prior = crate::cost::Wisdom::harvest(&mut crate::cost::SimCost::m1(1024), "m1");
+        let bad = FftService::start(ServiceConfig {
+            plans: vec![(256, Plan::parse("R4,R4,R2,F8").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy::default(),
+            workers: 1,
+            queue_depth: 4,
+            autotune: Some(AutotuneConfig::new(prior)),
+        });
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn rejects_autotune_on_pjrt_backend() {
+        let prior = crate::cost::Wisdom::harvest(&mut crate::cost::SimCost::m1(256), "m1");
+        let bad = FftService::start(ServiceConfig {
+            plans: vec![(256, Plan::parse("R4,R4,R2,F8").unwrap())],
+            backend: Backend::Pjrt { artifacts_dir: "artifacts".into() },
+            batch: BatchPolicy::default(),
+            workers: 1,
+            queue_depth: 4,
+            autotune: Some(AutotuneConfig::new(prior)),
+        });
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn autotuned_service_samples_and_serves_correctly() {
+        let n = 256;
+        let prior = crate::cost::Wisdom::harvest(&mut crate::cost::SimCost::m1(n), "m1");
+        let mut at = AutotuneConfig::new(prior);
+        at.sample_period = 2;
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(n, Plan::parse("R4,R4,R2,F8").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(50) },
+            workers: 2,
+            queue_depth: 64,
+            autotune: Some(at),
+        })
+        .unwrap();
+        for i in 0..40u64 {
+            let input = SplitComplex::random(n, i);
+            let got = svc.transform(input.clone()).unwrap();
+            let want = fft_ref(&input);
+            assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        }
+        // the autotuner drains asynchronously; wait for proof of sampling
+        let deadline = Instant::now() + std::time::Duration::from_secs(2);
+        let sampled = loop {
+            let status = svc.autotune_status().expect("autotune status");
+            if status.batches_ingested + status.batches_dropped >= 1 {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert!(sampled, "sampling never reached the autotuner");
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.failed, 0);
     }
 
     #[test]
@@ -342,6 +491,7 @@ mod tests {
             batch: BatchPolicy { max_batch: 1, max_wait: std::time::Duration::ZERO },
             workers: 1,
             queue_depth: 1,
+            autotune: None,
         })
         .unwrap();
         let mut rejected = 0;

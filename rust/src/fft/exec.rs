@@ -99,6 +99,39 @@ impl CompiledPlan {
         self.run(&mut out.re, &mut out.im);
         out
     }
+
+    /// Execute in place, reporting each step's wall-clock nanoseconds to
+    /// `on_step(edge, stage, ns)` — the autotune trace-sampling hook. The
+    /// arithmetic is identical to [`CompiledPlan::run`] (same steps, same
+    /// order), so traced and untraced executions are bit-identical.
+    pub fn run_traced(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        on_step: &mut dyn FnMut(EdgeType, usize, f64),
+    ) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        for step in &self.steps {
+            let t0 = std::time::Instant::now();
+            run_step(step, re, im);
+            on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+        }
+        if self.bitrev {
+            super::bitrev::bit_reverse_permute(re, im);
+        }
+    }
+
+    /// Convenience: traced run on a copy.
+    pub fn run_on_traced(
+        &self,
+        input: &SplitComplex,
+        on_step: &mut dyn FnMut(EdgeType, usize, f64),
+    ) -> SplitComplex {
+        let mut out = input.clone();
+        self.run_traced(&mut out.re, &mut out.im, on_step);
+        out
+    }
 }
 
 /// Executor: owns the twiddle cache, compiles plans and single edges.
@@ -200,6 +233,22 @@ mod tests {
         let before = ex.twiddle_cache().entries();
         ex.compile(&p1, 1024, true); // recompile: all cache hits
         assert_eq!(ex.twiddle_cache().entries(), before);
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_reports_every_step() {
+        let n = 512;
+        let input = SplitComplex::random(n, 77);
+        let mut ex = Executor::new();
+        let plan = Plan::parse("R4,R2,R4,R2,F8").unwrap();
+        let cp = ex.compile(&plan, n, true);
+        let mut seen = Vec::new();
+        let traced = cp.run_on_traced(&input, &mut |edge, stage, ns| {
+            seen.push((edge, stage));
+            assert!(ns >= 0.0);
+        });
+        assert_eq!(traced, cp.run_on(&input));
+        assert_eq!(seen, plan.steps());
     }
 
     #[test]

@@ -24,8 +24,13 @@
 //!   by `make artifacts` (Python never runs on the request path);
 //! * [`coordinator`] — the serving layer: plan cache, dynamic batcher,
 //!   worker pool, metrics;
+//! * [`autotune`] — online autotuning: live contextual cost sampling on
+//!   the request path, drift detection against the weights the active
+//!   plan was searched under, background re-planning, versioned hot plan
+//!   swap, and wisdom-v2 persistence (DESIGN.md §autotune);
 //! * [`report`] — regenerates every table and figure of the paper.
 
+pub mod autotune;
 pub mod coordinator;
 pub mod cost;
 pub mod edge;

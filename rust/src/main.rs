@@ -281,7 +281,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("backend", "native", "execution backend (native|pjrt)")
         .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
         .opt("batch", "16", "max batch size")
-        .opt("workers", "1", "worker threads");
+        .opt("workers", "1", "worker threads")
+        .flag("autotune", "online autotuning (prior harvested from --cost/--machine)")
+        .opt("wisdom", "", "wisdom v2 file for --autotune persistence across runs");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
     let requests = args.get_usize("requests")?;
@@ -297,6 +299,18 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         "pjrt" => spfft::coordinator::Backend::Pjrt { artifacts_dir: args.get("artifacts").into() },
         other => return Err(CliError(format!("--backend must be native|pjrt, got '{other}'"))),
     };
+    let autotune = if args.flag("autotune") {
+        let source = format!("{}:{}", args.get("cost"), args.get("machine"));
+        let prior = spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source);
+        let mut at = spfft::autotune::AutotuneConfig::new(prior);
+        let wisdom = args.get("wisdom");
+        if !wisdom.is_empty() {
+            at.wisdom_path = Some(wisdom.into());
+        }
+        Some(at)
+    } else {
+        None
+    };
     let svc = spfft::coordinator::FftService::start(spfft::coordinator::ServiceConfig {
         plans: vec![(n, ca.plan.clone())],
         backend,
@@ -306,6 +320,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         },
         workers: args.get_usize("workers")?,
         queue_depth: 1024,
+        autotune,
     })
     .map_err(|e| CliError(format!("service: {e}")))?;
     let t0 = std::time::Instant::now();
@@ -326,6 +341,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         let _ = rx.recv();
     }
     let wall = t0.elapsed();
+    if let Some(status) = svc.autotune_status() {
+        println!(
+            "autotune: plan v{} ({}), {} samples, {} drift checks, {} drift events, {} swaps",
+            status.plan_version,
+            status.active_plan,
+            status.samples_ingested,
+            status.drift_checks,
+            status.drift_events,
+            status.swaps,
+        );
+    }
     let snap = svc.shutdown();
     println!(
         "served {}/{} requests in {:.3}s: {:.0} req/s, mean batch {:.1}, p50 {:?} p95 {:?} p99 {:?}",

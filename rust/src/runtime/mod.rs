@@ -22,3 +22,11 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
+
+/// Whether a PJRT client can be created in this build/environment.
+///
+/// `false` under the vendored `xla` stub (offline builds) — PJRT tests,
+/// benches, and backends check this and skip/fall back instead of failing.
+pub fn pjrt_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}

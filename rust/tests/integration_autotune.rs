@@ -1,0 +1,238 @@
+//! Integration: the online autotuning loop end-to-end, under the `sim`
+//! cost model with an injected mid-run drift event.
+//!
+//! Scenario (the acceptance criterion of the autotune subsystem): the
+//! service starts on the paper's M1 context-aware optimum
+//! (`R4,R2,R4,R4,F8`), serves live traffic with 1-in-1 trace sampling
+//! driven by a *simulator oracle* (deterministic weights through the real
+//! sampler → model → detector → re-planner → hot-swap pipeline), and mid
+//! run every Fused-8 contextual weight inflates 25x. The service must
+//! detect the drift and converge — possibly through several
+//! poison-one-cell-per-round swaps, since only executed cells are ever
+//! observed — to the plan the context-aware search finds over the fully
+//! inflated weight table, with **zero failed or corrupted requests**
+//! throughout.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spfft::autotune::{AutotuneConfig, SampleMode};
+use spfft::coordinator::{Backend, BatchPolicy, FftService, PlanCache, ServiceConfig};
+use spfft::cost::{SimCost, TableCost, Wisdom};
+use spfft::edge::EdgeType;
+use spfft::fft::reference::fft_ref;
+use spfft::fft::SplitComplex;
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+
+const INFLATION: f64 = 25.0;
+
+/// The context-aware optimum over the prior with every F8 cell inflated —
+/// the fixed point the online loop must converge to.
+fn expected_after_drift(prior: &Wisdom) -> Plan {
+    let mut cost = TableCost {
+        n: prior.n,
+        edges: {
+            let mut e: Vec<EdgeType> = prior.cells.iter().map(|c| c.0).collect();
+            e.sort();
+            e.dedup();
+            e
+        },
+        cells: prior
+            .cells
+            .iter()
+            .map(|&(e, s, ctx, ns)| {
+                let ns = if e == EdgeType::F8 { ns * INFLATION } else { ns };
+                ((e, s, ctx), ns)
+            })
+            .collect(),
+    };
+    run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 }).plan
+}
+
+#[test]
+fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
+    let n = 1024;
+    let machine = spfft::sim::Machine::m1();
+    let prior = Wisdom::harvest(&mut SimCost::m1(n), "sim:m1");
+    let initial = run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    assert!(
+        initial.edges().contains(&EdgeType::F8),
+        "premise: the M1 optimum uses a Fused-8 tail ({initial})"
+    );
+    let expected = expected_after_drift(&prior);
+    assert_ne!(expected, initial, "inflation must move the optimum");
+    assert!(
+        !expected.edges().contains(&EdgeType::F8),
+        "25x-inflated F8 must lose everywhere ({expected})"
+    );
+
+    // Deterministic sample oracle: exact simulator weights, with every
+    // F8 cell inflated once the drift switch flips.
+    let drifted = Arc::new(AtomicBool::new(false));
+    let oracle_machine = machine.clone();
+    let oracle_switch = drifted.clone();
+    let mode = SampleMode::Oracle(Arc::new(move |e, s, ctx| {
+        let base = oracle_machine.edge_ns(n, e, s, ctx);
+        if e == EdgeType::F8 && oracle_switch.load(Ordering::Relaxed) {
+            base * INFLATION
+        } else {
+            base
+        }
+    }));
+
+    let cache = Arc::new(PlanCache::new());
+    let mut at = AutotuneConfig::new(prior.clone());
+    at.sample_period = 1; // trace every request: fastest deterministic loop
+    at.check_every = 8;
+    at.drift_min_samples = 4;
+    at.drift_threshold = 0.5;
+    at.drift_min_cells = 1;
+    at.hysteresis = 0.02;
+    at.ewma_alpha = 1.0; // oracle values are exact; no smoothing needed
+    at.blend_samples = 1.0;
+    at.mode = mode;
+    at.cache = Some(cache.clone());
+
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, initial.clone())],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
+        workers: 2,
+        queue_depth: 128,
+        autotune: Some(at),
+    })
+    .unwrap();
+
+    // Phase 1: steady state. No drift, no swaps.
+    for i in 0..200u64 {
+        let input = SplitComplex::random(n, i);
+        let got = svc.transform(input.clone()).unwrap();
+        let want = fft_ref(&input);
+        assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+    }
+    let steady = svc.autotune_status().unwrap();
+    assert_eq!(steady.swaps, 0, "spurious swap in steady state");
+    assert_eq!(steady.plan_version, 1);
+
+    // Phase 2: inject the drift and keep serving. Every response is
+    // validated against the reference DFT — a torn swap would surface
+    // here as corruption, a planner/executor mismatch as a failure.
+    drifted.store(true, Ordering::Relaxed);
+    let budget = 30_000u64; // bounded number of sampled executions
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut converged_at = None;
+    for i in 0..budget {
+        let input = SplitComplex::random(n, 1_000_000 + i);
+        let got = svc.transform(input.clone()).unwrap();
+        if i % 16 == 0 {
+            let want = fft_ref(&input);
+            assert!(
+                got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4,
+                "corrupted response during swap window (request {i})"
+            );
+        }
+        let status = svc.autotune_status().unwrap();
+        if status.active_plan == expected {
+            converged_at = Some(i);
+            break;
+        }
+        assert!(Instant::now() < deadline, "no convergence after {i} requests");
+    }
+    let converged_at = converged_at.unwrap_or_else(|| {
+        let status = svc.autotune_status().unwrap();
+        panic!(
+            "did not converge within {budget} requests: active {} (v{}), expected {expected}",
+            status.active_plan, status.plan_version
+        )
+    });
+
+    // Phase 3: the swapped-in plan keeps serving correct results.
+    for i in 0..100u64 {
+        let input = SplitComplex::random(n, 2_000_000 + i);
+        let got = svc.transform(input.clone()).unwrap();
+        let want = fft_ref(&input);
+        assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+    }
+
+    let status = svc.autotune_status().unwrap();
+    assert!(status.swaps >= 1, "convergence without a recorded swap");
+    assert!(status.drift_events >= 1);
+    assert_eq!(status.active_plan, expected);
+    assert!(status.plan_version >= 2);
+    // the hot swap also published into the plan cache, versioned
+    assert_eq!(cache.get(n, "autotune", "sim:m1"), Some(expected.clone()));
+    assert!(cache.version(n, "autotune", "sim:m1").unwrap_or(0) >= 1);
+
+    let snap = svc.shutdown();
+    assert_eq!(snap.failed, 0, "requests failed during the swap window");
+    assert_eq!(snap.completed, 200 + (converged_at + 1) + 100);
+    println!(
+        "converged to {expected} after {} post-drift requests, {} swaps, {} drift events",
+        converged_at + 1,
+        status.swaps,
+        status.drift_events
+    );
+}
+
+#[test]
+fn learned_wisdom_survives_restart_and_preplans_the_drifted_optimum() {
+    // Restart continuity: a service that learned inflated F8 weights
+    // persists wisdom v2; a fresh autotuner seeded from that file starts
+    // with the learned estimates instead of re-learning from scratch.
+    let n = 256;
+    let dir = std::env::temp_dir().join(format!("spfft-autotune-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("learned.wisdom2.json");
+
+    let prior = Wisdom::harvest(&mut SimCost::m1(n), "sim:m1");
+    let initial = run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let machine = spfft::sim::Machine::m1();
+    let mode = SampleMode::Oracle(Arc::new(move |e, s, ctx| {
+        let base = machine.edge_ns(n, e, s, ctx);
+        if e == EdgeType::F8 {
+            base * INFLATION
+        } else {
+            base
+        }
+    }));
+    let mut at = AutotuneConfig::new(prior.clone());
+    at.sample_period = 1;
+    at.check_every = 4;
+    at.drift_min_samples = 2;
+    at.ewma_alpha = 1.0;
+    at.blend_samples = 1.0;
+    at.mode = mode;
+    at.wisdom_path = Some(path.clone());
+
+    let svc = FftService::start(ServiceConfig {
+        plans: vec![(n, initial)],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(50) },
+        workers: 1,
+        queue_depth: 64,
+        autotune: Some(at),
+    })
+    .unwrap();
+    for i in 0..300u64 {
+        svc.transform(SplitComplex::random(n, i)).unwrap();
+    }
+    let snap = svc.shutdown(); // persists wisdom v2
+    assert_eq!(snap.failed, 0);
+
+    let w2 = spfft::autotune::WisdomV2::load(&path).expect("persisted wisdom");
+    assert_eq!(w2.n, n);
+    let learned: Vec<_> = w2.cells.iter().filter(|c| c.count > 0).collect();
+    assert!(!learned.is_empty(), "nothing learned");
+    // any learned F8 cell carries the inflated estimate
+    for c in learned.iter().filter(|c| c.edge == EdgeType::F8) {
+        assert!(
+            c.obs_ns > c.prior_ns * (INFLATION * 0.9),
+            "learned F8 cell not inflated: {} vs {}",
+            c.obs_ns,
+            c.prior_ns
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -109,6 +109,81 @@ fn prop_context_aware_search_is_optimal_under_contextual_weights() {
 }
 
 #[test]
+fn prop_context_aware_never_worse_than_context_free_any_cost_model() {
+    // For *any* positive weight table — not just the calibrated machines —
+    // the context-aware search's plan, costed from start with contextual
+    // weights, is never worse than the context-free plan costed the same
+    // way: CA optimizes exactly that objective and the CF plan is one of
+    // its candidates.
+    use spfft::cost::TableCost;
+    use spfft::planner::plan_cost_from_start;
+    check("ca-never-worse-than-cf", Config { cases: 32, ..Default::default() }, |rng| {
+        let l = rng.range(3, 11);
+        let n = 1usize << l;
+        let mut cells = std::collections::HashMap::new();
+        for e in ALL_EDGES {
+            for s in 0..l {
+                if !spfft::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                for ctx in Context::all() {
+                    // uniform positive weights across three decades
+                    let ns = 1.0 + rng.next_f64() * 999.0;
+                    cells.insert((e, s, ctx), ns);
+                }
+            }
+        }
+        let mut cost = TableCost { n, edges: ALL_EDGES.to_vec(), cells };
+        let cf = shortest_path_context_free(&mut cost, l);
+        let ca = shortest_path_context_aware(&mut cost, l);
+        prop_assert!(ca.plan.is_valid_for(l), "invalid CA plan {}", ca.plan);
+        let t_ca = plan_cost_from_start(&mut cost, &ca.plan);
+        let t_cf = plan_cost_from_start(&mut cost, &cf.plan);
+        prop_assert!(
+            t_ca <= t_cf + 1e-6,
+            "CA {} ({t_ca}) worse than CF {} ({t_cf}) at l={l}",
+            ca.plan,
+            cf.plan
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hot_swapped_plan_output_is_bit_identical() {
+    // The hot-swap machinery must never perturb numerics: a worker's
+    // in-flight snapshot keeps producing the old plan's bits after a
+    // swap, the new snapshot reproduces the new plan's bits exactly, and
+    // both plans agree with the reference DFT.
+    use spfft::autotune::PlanSlot;
+    let mut ex = Executor::new();
+    check("hot-swap-bit-identical", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let old = random_plan(rng, l);
+        let new = random_plan(rng, l);
+        let input = SplitComplex::random(n, rng.next_u64());
+        let want_old = ex.compile(&old, n, true).run_on(&input);
+        let want_new = ex.compile(&new, n, true).run_on(&input);
+        let slot = PlanSlot::new(old.clone(), 1.0);
+        let in_flight = slot.current(); // a worker mid-batch
+        slot.swap(new.clone(), 1.0);
+        let got_old = ex.compile(&in_flight.plan, n, true).run_on(&input);
+        prop_assert!(got_old == want_old, "in-flight output changed across swap ({old})");
+        let current = slot.current();
+        prop_assert!(current.plan == new && current.version == 2, "swap not visible");
+        let got_new = ex.compile(&current.plan, n, true).run_on(&input);
+        prop_assert!(got_new == want_new, "swapped-in output not bit-identical ({new})");
+        let want = fft_ref(&input);
+        let scale = want.max_abs().max(1.0);
+        let rel_old = got_old.max_abs_diff(&want) / scale;
+        let rel_new = got_new.max_abs_diff(&want) / scale;
+        prop_assert!(rel_old < 5e-4 && rel_new < 5e-4, "swap broke correctness: {rel_old} {rel_new}");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_enumeration_contains_every_random_plan() {
     check("enumeration-complete", Config { cases: 16, ..Default::default() }, |rng| {
         let l = rng.range(2, 9);

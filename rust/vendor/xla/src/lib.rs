@@ -1,0 +1,136 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! This build environment has no crates.io access and no XLA shared
+//! library, so the PJRT runtime cannot exist here. This crate provides the
+//! exact API surface `spfft::runtime` consumes, with [`PjRtClient::cpu`]
+//! returning an error — the one honest behavior a stub can have. Every
+//! caller already handles client-creation failure, so the PJRT backend
+//! degrades to "unavailable" (`spfft::runtime::pjrt_available()` reports
+//! `false`, PJRT tests and benches skip, the serving examples fall back to
+//! the native backend).
+//!
+//! To run the real PJRT path, repoint the `xla` dependency in
+//! `rust/Cargo.toml` at the actual bindings; no spfft source changes are
+//! required. Types mirror the real crate's shapes — including
+//! [`PjRtClient`] being `!Send`/`!Sync` (it wraps an `Rc`), so code that
+//! compiles against the stub keeps the same thread-safety obligations.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Error type; displayed with `{:?}` at every call site.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error("xla stub: PJRT is unavailable in this offline build (vendor/xla)".to_string())
+}
+
+/// Stub PJRT client. `!Send + !Sync` like the real one.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT CPU plugin here.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// A host literal; the only stub type that actually holds data, so the
+/// argument-marshalling call sites stay fully type-checked.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal { data: values.to_vec() }
+    }
+
+    /// Split a tuple literal into its two elements.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.5]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.5]);
+    }
+}
