@@ -1,13 +1,25 @@
 //! Drift detection: is the world still the one the active plan was
 //! searched under?
 //!
-//! The detector keeps a *reference* weight per cell — the value the
-//! active plan's search consumed. Each check compares the live EWMA of
-//! every sufficiently-sampled cell against its reference; a cell whose
-//! relative deviation exceeds the threshold is drifted, and enough
-//! drifted cells flag the model. After a re-plan the detector is rebased
-//! to the weights that search consumed, so detection always measures
-//! movement *since the active plan was chosen*, not since process start.
+//! The detector keeps a *reference* weight per (cell, batch class) — the
+//! value the active plan's search consumed. Each check compares the live
+//! per-transform EWMA of every sufficiently-sampled (cell, class)
+//! against its reference; a cell whose relative deviation exceeds the
+//! threshold is drifted, and enough drifted cells flag the model. After
+//! a re-plan the detector is rebased to the weights that search
+//! consumed, so detection always measures movement *since the active
+//! plan was chosen*, not since process start.
+//!
+//! The offline prior only knows the unbatched regime, so batched
+//! observations initially compare against the class-0 reference: a
+//! serving mix that shifts *into* heavy batching reads as drift (the
+//! amortized per-transform costs diverge from the unbatched prior),
+//! triggers a re-plan at the new regime's batch class, and the rebase
+//! then installs per-class references. A shift back *out* of batching
+//! leaves per-class weights stable, so it is not drift — the re-planner
+//! separately watches the modal batch class and re-searches on a regime
+//! shift (see `replanner::run_loop`) — exactly the "optimal plan
+//! legitimately differs with B" behavior the batched engine needs.
 //!
 //! Detection uses the raw live means (fast to react); the re-planner's
 //! search uses the prior-damped blend (slow to overreact) — the classic
@@ -37,7 +49,9 @@ pub struct DriftReport {
 /// Compares live observations against the searched-under reference.
 #[derive(Debug, Clone)]
 pub struct DriftDetector {
-    reference: HashMap<Cell, f64>,
+    /// (cell, batch class) → per-transform reference ns. Class 0 is
+    /// seeded from the prior; other classes appear on rebase.
+    reference: HashMap<(Cell, usize), f64>,
     threshold: f64,
     min_samples: u64,
     min_cells: usize,
@@ -45,7 +59,7 @@ pub struct DriftDetector {
 
 impl DriftDetector {
     pub fn new(
-        reference: HashMap<Cell, f64>,
+        reference: HashMap<(Cell, usize), f64>,
         threshold: f64,
         min_samples: u64,
         min_cells: usize,
@@ -59,7 +73,8 @@ impl DriftDetector {
         }
     }
 
-    /// Reference = the offline prior (the initial plan's search weights).
+    /// Reference = the offline prior (the initial plan's search weights),
+    /// which only knows the unbatched class.
     pub fn from_wisdom(
         prior: &Wisdom,
         threshold: f64,
@@ -67,14 +82,16 @@ impl DriftDetector {
         min_cells: usize,
     ) -> DriftDetector {
         DriftDetector::new(
-            prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
+            prior.cells.iter().map(|&(e, s, ctx, ns)| (((e, s, ctx), 0), ns)).collect(),
             threshold,
             min_samples,
             min_cells,
         )
     }
 
-    /// Compare live means against the reference.
+    /// Compare live per-transform means against the reference. A class
+    /// without its own reference falls back to the class-0 (unbatched)
+    /// reference, so newly-batched traffic is judged against the prior.
     pub fn check(&self, model: &OnlineCost) -> DriftReport {
         let mut report = DriftReport {
             drifted: false,
@@ -83,11 +100,15 @@ impl DriftDetector {
             max_rel_dev: 0.0,
             worst: None,
         };
-        for (cell, est) in model.observed_cells() {
+        for ((cell, class), est) in model.observed_cells() {
             if est.count < self.min_samples {
                 continue;
             }
-            let Some(&reference) = self.reference.get(&cell) else {
+            let Some(&reference) = self
+                .reference
+                .get(&(cell, class))
+                .or_else(|| self.reference.get(&(cell, 0)))
+            else {
                 continue;
             };
             report.cells_checked += 1;
@@ -106,17 +127,23 @@ impl DriftDetector {
 
     /// Rebase every reference cell to the model's current (blended)
     /// estimate — called after a re-plan so the next check measures
-    /// movement relative to the weights that search consumed.
+    /// movement relative to the weights that search consumed. Observed
+    /// (cell, class) pairs without a reference yet gain one here.
     pub fn rebase(&mut self, model: &OnlineCost) {
-        let keys: Vec<Cell> = self.reference.keys().copied().collect();
-        for key in keys {
-            self.reference.insert(key, model.estimate(key));
+        let keys: Vec<(Cell, usize)> = self.reference.keys().copied().collect();
+        for (cell, class) in keys {
+            self.reference.insert((cell, class), model.estimate_at(cell, class));
+        }
+        for ((cell, class), _) in model.observed_cells() {
+            self.reference
+                .entry((cell, class))
+                .or_insert_with(|| model.estimate_at(cell, class));
         }
     }
 
-    /// The reference weight for a cell (tests / introspection).
-    pub fn reference(&self, cell: Cell) -> Option<f64> {
-        self.reference.get(&cell).copied()
+    /// The reference weight for a (cell, class) (tests / introspection).
+    pub fn reference(&self, cell: Cell, class: usize) -> Option<f64> {
+        self.reference.get(&(cell, class)).copied()
     }
 }
 
@@ -135,7 +162,13 @@ mod tests {
 
     fn feed(model: &mut OnlineCost, cell: Cell, ns: f64, times: usize) {
         for _ in 0..times {
-            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, ns });
+            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, batch: 1, ns });
+        }
+    }
+
+    fn feed_b(model: &mut OnlineCost, cell: Cell, batch: usize, ns: f64, times: usize) {
+        for _ in 0..times {
+            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, batch, ns });
         }
     }
 
@@ -170,6 +203,32 @@ mod tests {
         assert_eq!(r.cells_over, 1);
         assert_eq!(r.worst, Some((e, s, ctx)));
         assert!((r.max_rel_dev - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_observations_compare_against_class0_prior() {
+        // Heavily-batched traffic whose per-transform cost halves (real
+        // amortization) must read as drift against the unbatched prior —
+        // that is the trigger for re-planning at the new batch regime.
+        let (mut model, det, w) = setup(256);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed_b(&mut model, (e, s, ctx), 16, 16.0 * ns * 0.5, 10);
+        let r = det.check(&model);
+        assert!(r.drifted, "amortized batched cost not flagged: {r:?}");
+        assert!((r.max_rel_dev - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rebase_installs_per_class_references() {
+        let (mut model, mut det, w) = setup(256);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed_b(&mut model, (e, s, ctx), 16, 16.0 * ns * 0.5, 20);
+        assert!(det.check(&model).drifted);
+        assert_eq!(det.reference((e, s, ctx), crate::autotune::model::batch_class(16)), None);
+        det.rebase(&model);
+        assert!(det.reference((e, s, ctx), crate::autotune::model::batch_class(16)).is_some());
+        let r = det.check(&model);
+        assert!(!r.drifted, "still drifted after rebase: dev {}", r.max_rel_dev);
     }
 
     #[test]

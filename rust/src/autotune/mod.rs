@@ -22,9 +22,14 @@
 //!     (background shortest_path_context_aware)
 //! ```
 //!
-//! * [`sampler`] — low-overhead trace sampling on the serving hot path;
+//! * [`sampler`] — low-overhead trace sampling on the serving hot path
+//!   (single requests *and* whole batched groups, which report their
+//!   batch size with each sample);
 //! * [`model`] — [`OnlineCost`]: a [`crate::cost::CostModel`] blending
-//!   exponentially-weighted live estimates over the offline wisdom prior;
+//!   exponentially-weighted live estimates over the offline wisdom
+//!   prior, per **batch class** — batched execution amortizes the
+//!   per-pass round trip, so per-transform edge costs (and therefore
+//!   the optimal plan) legitimately differ with the batch size;
 //! * [`drift`] — flags divergence between observed contextual weights and
 //!   the weights the active plan was searched under;
 //! * [`replanner`] — the background thread running the drift → search →
@@ -45,9 +50,9 @@ pub mod swap;
 pub mod wisdom2;
 
 pub use drift::{DriftDetector, DriftReport};
-pub use model::{CellEstimate, OnlineCost};
+pub use model::{batch_class, class_batch, CellEstimate, OnlineCost, BATCH_CLASSES};
 pub use replanner::{Autotuner, AutotuneStatus};
-pub use sampler::{trace_request, EdgeSample, SampleMode, TraceSampler};
+pub use sampler::{trace_batch, trace_request, EdgeSample, SampleMode, TraceSampler};
 pub use swap::{PlanSlot, VersionedPlan};
 pub use wisdom2::WisdomV2;
 

@@ -1,14 +1,23 @@
 //! The online cost model: live EWMA estimates blended over a wisdom prior.
 //!
 //! Every sampled edge execution updates an exponentially-weighted running
-//! mean for its (edge, stage, context) cell. Planning queries return a
-//! confidence-weighted blend of the live estimate and the offline prior:
-//! a cell with `s` samples trusts the live mean with weight
-//! `s / (s + blend_samples)`. Cells the active plan never executes keep
-//! their prior — which is exactly what makes online re-planning sound:
-//! the search compares freshly-observed cells of the running plan against
-//! prior-valued alternatives, the same tradeoff FFTW's wisdom makes
-//! offline, now maintained continuously.
+//! mean for its (edge, stage, context) cell **per batch class**: batched
+//! execution amortizes the per-pass twiddle load and memory round trip
+//! across the group, so the per-transform cost of an edge is a genuine
+//! function of the batch size it ran under, and the optimal plan can
+//! legitimately differ with B (a memory-bound R2 chain shrinks relative
+//! to fused blocks as the round trip amortizes). Samples are normalized
+//! per transform (`ns / batch`) and bucketed by [`batch_class`] (log2).
+//!
+//! Planning queries return a confidence-weighted blend of the live
+//! estimate *at the model's focus batch class* and the offline prior: a
+//! cell with `s` samples trusts the live mean with weight
+//! `s / (s + blend_samples)`. Cells the active plan never executes at
+//! that class keep their prior — which is exactly what makes online
+//! re-planning sound: the search compares freshly-observed cells of the
+//! running plan against prior-valued alternatives, the same tradeoff
+//! FFTW's wisdom makes offline, now maintained continuously and
+//! per batch size.
 
 use std::collections::HashMap;
 
@@ -20,10 +29,25 @@ use super::sampler::EdgeSample;
 /// A cell key: (edge, stage, predecessor context).
 pub type Cell = (EdgeType, usize, Context);
 
-/// Live estimate for one cell.
+/// Number of batch-size classes (log2 buckets): class 0 = B=1, class 1 =
+/// B=2, class 2 = B in (2,4], ... the last class saturates (B >= 128).
+pub const BATCH_CLASSES: usize = 8;
+
+/// Batch class of a batch size: log2 of the next power of two, capped.
+pub fn batch_class(b: usize) -> usize {
+    (b.max(1).next_power_of_two().trailing_zeros() as usize).min(BATCH_CLASSES - 1)
+}
+
+/// Representative batch size of a class (inverse of [`batch_class`] on
+/// powers of two).
+pub fn class_batch(class: usize) -> usize {
+    1 << class.min(BATCH_CLASSES - 1)
+}
+
+/// Live estimate for one (cell, batch class).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CellEstimate {
-    /// EWMA of observed nanoseconds.
+    /// EWMA of observed per-transform nanoseconds.
     pub mean: f64,
     /// Samples folded into the mean.
     pub count: u64,
@@ -35,12 +59,16 @@ pub struct OnlineCost {
     edges: Vec<EdgeType>,
     alpha: f64,
     blend_samples: f64,
+    /// Batch class planning queries read (what B the next search plans
+    /// for); class 0 = unbatched, the prior's own regime.
+    focus: usize,
     prior: HashMap<Cell, f64>,
-    obs: HashMap<Cell, CellEstimate>,
+    obs: HashMap<(Cell, usize), CellEstimate>,
 }
 
 impl OnlineCost {
-    /// Build from an offline wisdom database (the prior).
+    /// Build from an offline wisdom database (the prior). The prior is
+    /// per-transform and batch-agnostic (wisdom v1 measures B=1).
     pub fn from_wisdom(prior: &Wisdom, alpha: f64, blend_samples: f64) -> OnlineCost {
         assert!(alpha > 0.0 && alpha <= 1.0, "ewma alpha must be in (0, 1]");
         assert!(blend_samples >= 0.0, "blend_samples must be >= 0");
@@ -52,40 +80,60 @@ impl OnlineCost {
             edges,
             alpha,
             blend_samples,
+            focus: 0,
             prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
             obs: HashMap::new(),
         }
     }
 
-    /// Fold one live sample into its cell. Non-finite or non-positive
-    /// values (timer glitches) are discarded.
+    /// Fold one live sample into its (cell, batch class), normalized per
+    /// transform. Non-finite or non-positive values (timer glitches) and
+    /// zero batch sizes are discarded.
     pub fn observe(&mut self, sample: &EdgeSample) {
-        if !sample.ns.is_finite() || sample.ns <= 0.0 {
+        if !sample.ns.is_finite() || sample.ns <= 0.0 || sample.batch == 0 {
             return;
         }
-        let key = (sample.edge, sample.stage, sample.ctx);
+        let per_tx = sample.ns / sample.batch as f64;
+        let key = ((sample.edge, sample.stage, sample.ctx), batch_class(sample.batch));
         match self.obs.get_mut(&key) {
             Some(est) => {
-                est.mean = self.alpha * sample.ns + (1.0 - self.alpha) * est.mean;
+                est.mean = self.alpha * per_tx + (1.0 - self.alpha) * est.mean;
                 est.count += 1;
             }
             None => {
-                self.obs.insert(key, CellEstimate { mean: sample.ns, count: 1 });
+                self.obs.insert(key, CellEstimate { mean: per_tx, count: 1 });
             }
         }
     }
 
-    /// Seed a cell's live estimate directly (wisdom v2 restore).
-    pub fn seed(&mut self, cell: Cell, mean: f64, count: u64) {
-        if mean.is_finite() && mean > 0.0 && count > 0 {
-            self.obs.insert(cell, CellEstimate { mean, count });
+    /// Seed a (cell, class) live estimate directly (wisdom v2 restore).
+    pub fn seed_at(&mut self, cell: Cell, class: usize, mean: f64, count: u64) {
+        if mean.is_finite() && mean > 0.0 && count > 0 && class < BATCH_CLASSES {
+            self.obs.insert((cell, class), CellEstimate { mean, count });
         }
     }
 
-    /// The blended estimate a planning query returns for `cell`.
-    pub fn estimate(&self, cell: Cell) -> f64 {
+    /// Seed the unbatched (class 0) estimate.
+    pub fn seed(&mut self, cell: Cell, mean: f64, count: u64) {
+        self.seed_at(cell, 0, mean, count);
+    }
+
+    /// Batch class planning queries are answered for.
+    pub fn focus_class(&self) -> usize {
+        self.focus
+    }
+
+    /// Point planning queries at a batch class (what B the next search
+    /// optimizes for).
+    pub fn set_focus_class(&mut self, class: usize) {
+        self.focus = class.min(BATCH_CLASSES - 1);
+    }
+
+    /// The blended per-transform estimate for `cell` at a batch class.
+    /// Cells without observations at that class answer from the prior.
+    pub fn estimate_at(&self, cell: Cell, class: usize) -> f64 {
         let prior = self.prior.get(&cell).copied();
-        let obs = self.obs.get(&cell).copied();
+        let obs = self.obs.get(&(cell, class)).copied();
         match (prior, obs) {
             (Some(p), Some(o)) => {
                 let c = o.count as f64 / (o.count as f64 + self.blend_samples);
@@ -94,38 +142,55 @@ impl OnlineCost {
             (Some(p), None) => p,
             (None, Some(o)) => o.mean,
             (None, None) => panic!(
-                "online cost: no prior or observation for {}@{} {}",
+                "online cost: no prior or observation for {}@{} {} (class {class})",
                 cell.0, cell.1, cell.2
             ),
         }
     }
 
-    /// Raw live estimate (undamped by the prior); `None` until sampled.
-    pub fn observation(&self, cell: Cell) -> Option<CellEstimate> {
-        self.obs.get(&cell).copied()
+    /// The blended estimate at the unbatched class (B = 1).
+    pub fn estimate(&self, cell: Cell) -> f64 {
+        self.estimate_at(cell, 0)
     }
 
-    /// All cells with live observations.
-    pub fn observed_cells(&self) -> Vec<(Cell, CellEstimate)> {
-        let mut v: Vec<(Cell, CellEstimate)> =
+    /// Raw live estimate at a batch class; `None` until sampled there.
+    pub fn observation_at(&self, cell: Cell, class: usize) -> Option<CellEstimate> {
+        self.obs.get(&(cell, class)).copied()
+    }
+
+    /// Raw unbatched live estimate.
+    pub fn observation(&self, cell: Cell) -> Option<CellEstimate> {
+        self.observation_at(cell, 0)
+    }
+
+    /// All (cell, batch class) pairs with live observations, sorted.
+    pub fn observed_cells(&self) -> Vec<((Cell, usize), CellEstimate)> {
+        let mut v: Vec<((Cell, usize), CellEstimate)> =
             self.obs.iter().map(|(k, v)| (*k, *v)).collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
-    /// Every prior cell with its prior value and live estimate, sorted
-    /// (the wisdom v2 export view).
-    pub fn export_cells(&self) -> Vec<(Cell, f64, Option<CellEstimate>)> {
-        let mut v: Vec<(Cell, f64, Option<CellEstimate>)> = self
+    /// Every prior cell with its prior value and per-class live
+    /// estimates (classes sorted), sorted — the wisdom v2 export view.
+    #[allow(clippy::type_complexity)]
+    pub fn export_cells(&self) -> Vec<(Cell, f64, Vec<(usize, CellEstimate)>)> {
+        let mut v: Vec<(Cell, f64, Vec<(usize, CellEstimate)>)> = self
             .prior
             .iter()
-            .map(|(k, &p)| (*k, p, self.obs.get(k).copied()))
+            .map(|(cell, &p)| {
+                let mut per_class: Vec<(usize, CellEstimate)> = (0..BATCH_CLASSES)
+                    .filter_map(|c| self.obs.get(&(*cell, c)).map(|e| (c, *e)))
+                    .collect();
+                per_class.sort_by_key(|&(c, _)| c);
+                (*cell, p, per_class)
+            })
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
-    /// Total live samples folded in.
+    /// Total live samples folded in (all classes).
     pub fn total_samples(&self) -> u64 {
         self.obs.values().map(|e| e.count).sum()
     }
@@ -140,8 +205,14 @@ impl CostModel for OnlineCost {
         self.edges.clone()
     }
 
+    /// Per-transform cost at the focus batch class — so the same search
+    /// that plans for B=1 plans for any batch regime the service serves.
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
-        self.estimate((edge, stage, ctx))
+        self.estimate_at((edge, stage, ctx), self.focus)
+    }
+
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        b as f64 * self.estimate_at((edge, stage, ctx), batch_class(b))
     }
 }
 
@@ -158,7 +229,25 @@ mod tests {
     }
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, ns }
+        EdgeSample { edge, stage, ctx, batch: 1, ns }
+    }
+
+    fn sample_b(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
+        EdgeSample { edge, stage, ctx, batch, ns }
+    }
+
+    #[test]
+    fn batch_class_is_log2_and_saturates() {
+        assert_eq!(batch_class(1), 0);
+        assert_eq!(batch_class(2), 1);
+        assert_eq!(batch_class(3), 2);
+        assert_eq!(batch_class(4), 2);
+        assert_eq!(batch_class(16), 4);
+        assert_eq!(batch_class(64), 6);
+        assert_eq!(batch_class(1 << 20), BATCH_CLASSES - 1);
+        for c in 0..BATCH_CLASSES {
+            assert_eq!(batch_class(class_batch(c)), c);
+        }
     }
 
     #[test]
@@ -201,8 +290,46 @@ mod tests {
         model.observe(&sample(cell.0, cell.1, cell.2, f64::NAN));
         model.observe(&sample(cell.0, cell.1, cell.2, -1.0));
         model.observe(&sample(cell.0, cell.1, cell.2, 0.0));
+        model.observe(&sample_b(cell.0, cell.1, cell.2, 0, 5.0));
         assert_eq!(model.observation(cell), None);
         assert_eq!(model.estimate(cell), prior);
+    }
+
+    #[test]
+    fn batched_samples_land_in_their_class_normalized_per_transform() {
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R2, 0, Context::Start);
+        let prior = model.estimate(cell);
+        // a batch of 16 took 16 * prior / 2 ns: per-transform cost halved
+        for _ in 0..100 {
+            model.observe(&sample_b(cell.0, cell.1, cell.2, 16, 16.0 * prior / 2.0));
+        }
+        // class 0 untouched; class 4 learned the amortized cost
+        assert_eq!(model.observation(cell), None);
+        assert_eq!(model.estimate(cell), prior);
+        let est16 = model.estimate_at(cell, batch_class(16));
+        assert!(
+            (est16 - prior / 2.0).abs() / prior < 0.05,
+            "batched estimate {est16} vs expected {}",
+            prior / 2.0
+        );
+    }
+
+    #[test]
+    fn focus_class_steers_planning_queries() {
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R2, 0, Context::Start);
+        let prior = model.estimate(cell);
+        for _ in 0..100 {
+            model.observe(&sample_b(cell.0, cell.1, cell.2, 16, 16.0 * prior * 3.0));
+        }
+        assert_eq!(model.edge_ns(cell.0, cell.1, cell.2), prior);
+        model.set_focus_class(batch_class(16));
+        let focused = model.edge_ns(cell.0, cell.1, cell.2);
+        assert!(focused > prior * 2.0, "focus ignored: {focused} vs prior {prior}");
+        // whole-batch query at B=16 = 16 x the focused per-transform cost
+        let whole = model.edge_ns_batched(cell.0, cell.1, cell.2, 16);
+        assert!((whole - 16.0 * focused).abs() < 1e-9);
     }
 
     #[test]

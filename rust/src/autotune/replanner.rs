@@ -31,7 +31,7 @@ use crate::plan::Plan;
 use crate::planner::plan_cost_from_start;
 
 use super::drift::DriftDetector;
-use super::model::OnlineCost;
+use super::model::{batch_class, class_batch, OnlineCost, BATCH_CLASSES};
 use super::sampler::{EdgeSample, SampleMode, TraceSampler};
 use super::swap::PlanSlot;
 use super::wisdom2::WisdomV2;
@@ -60,6 +60,9 @@ pub struct AutotuneStatus {
     pub active_plan: Plan,
     /// Predicted from-start cost of the active plan (ns).
     pub predicted_ns: f64,
+    /// Representative batch size re-planning currently optimizes for
+    /// (the modal batch class of recent samples; 1 = unbatched).
+    pub plan_batch: usize,
 }
 
 #[derive(Default)]
@@ -72,6 +75,8 @@ struct Counters {
     replans: AtomicU64,
     swaps: AtomicU64,
     last_swap_latency_ns: AtomicU64,
+    /// Batch class the last drift check planned under.
+    focus_class: AtomicU64,
 }
 
 /// Handle to a running autotuning loop.
@@ -176,6 +181,7 @@ impl Autotuner {
             last_swap_latency_ns: self.counters.last_swap_latency_ns.load(Ordering::Relaxed),
             active_plan: cur.plan.clone(),
             predicted_ns: cur.predicted_ns,
+            plan_batch: class_batch(self.counters.focus_class.load(Ordering::Relaxed) as usize),
         }
     }
 
@@ -206,6 +212,12 @@ fn run_loop(
 ) {
     let n = config.prior.n;
     let mut since_check = 0u64;
+    // Samples per batch class since the last drift check (reset each
+    // check, so the modal class reflects the *current* traffic mix, not
+    // process history): re-planning targets the modal class, so a
+    // service that mostly executes 16-wide groups searches under the
+    // amortized 16-wide weights, not the unbatched prior.
+    let mut class_counts = [0u64; BATCH_CLASSES];
     loop {
         if counters.stop.load(Ordering::Relaxed) {
             break;
@@ -218,6 +230,10 @@ fn run_loop(
         counters.batches.fetch_add(1, Ordering::Relaxed);
         counters.samples.fetch_add(batch.len() as u64, Ordering::Relaxed);
         for sample in &batch {
+            // Weight by transforms, not sampled executions: 30 groups of
+            // 16 outvote 60 singletons, matching how the traffic is
+            // actually served.
+            class_counts[batch_class(sample.batch.max(1))] += sample.batch.max(1) as u64;
             model.observe(sample);
         }
         since_check += 1;
@@ -226,11 +242,31 @@ fn run_loop(
         }
         since_check = 0;
         counters.drift_checks.fetch_add(1, Ordering::Relaxed);
+        // First max wins: ties (and an observation-free window) resolve
+        // to the smallest class, i.e. toward the unbatched prior.
+        let mut modal = 0;
+        for (i, &c) in class_counts.iter().enumerate() {
+            if c > class_counts[modal] {
+                modal = i;
+            }
+        }
+        class_counts = [0u64; BATCH_CLASSES];
         let report = detector.check(&model);
-        if !report.drifted {
+        // Re-plan on weight drift OR on a batch-regime shift: when the
+        // traffic's modal class moves away from the class the active
+        // plan was searched under, per-class weights can all be stable
+        // (no drift) while the active plan is optimized for the wrong B
+        // — e.g. batched traffic turning into singletons. The swap
+        // hysteresis still gates whether the re-search publishes.
+        let regime_shift = modal != model.focus_class();
+        if !report.drifted && !regime_shift {
             continue;
         }
-        counters.drift_events.fetch_add(1, Ordering::Relaxed);
+        if report.drifted {
+            counters.drift_events.fetch_add(1, Ordering::Relaxed);
+        }
+        model.set_focus_class(modal);
+        counters.focus_class.store(modal as u64, Ordering::Relaxed);
         let t0 = Instant::now();
         let result = shortest_path_context_aware(&mut model, l);
         counters.replans.fetch_add(1, Ordering::Relaxed);
@@ -301,10 +337,19 @@ mod tests {
             .into_iter()
             .map(|(e, s)| {
                 let ns = lookup(e, s, ctx) * factor;
-                let sample = EdgeSample { edge: e, stage: s, ctx, ns };
+                let sample = EdgeSample { edge: e, stage: s, ctx, batch: 1, ns };
                 ctx = Context::After(e);
                 sample
             })
+            .collect()
+    }
+
+    /// Batched variant: one simulated batched execution of `plan` with
+    /// every per-transform cell value scaled by `factor` (whole-batch ns).
+    fn plan_samples_b(prior: &Wisdom, plan: &Plan, batch: usize, factor: f64) -> Vec<EdgeSample> {
+        plan_samples(prior, plan, factor)
+            .into_iter()
+            .map(|s| EdgeSample { batch, ns: s.ns * batch as f64, ..s })
             .collect()
     }
 
@@ -357,6 +402,61 @@ mod tests {
         assert_ne!(status.active_plan, old);
         assert!(status.active_plan.is_valid_for(8));
         assert!(status.replans >= 1);
+        tuner.stop();
+    }
+
+    #[test]
+    fn batched_drift_replans_at_the_modal_batch_class() {
+        // Feed only 16-wide batched samples with inflated costs: the
+        // re-planner must flag drift, plan under the batch-16 class, and
+        // report that class in its status.
+        let n = 256;
+        let cfg = tight_config(n);
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let plan = tuner.slot().current().plan.clone();
+        for _ in 0..50 {
+            tuner.sampler().submit(plan_samples_b(&prior, &plan, 16, 10.0));
+            std::thread::sleep(Duration::from_millis(1));
+            if tuner.status().swaps >= 1 {
+                break;
+            }
+        }
+        assert!(wait_for(|| tuner.status().swaps >= 1), "no swap happened");
+        let status = tuner.status();
+        assert_eq!(status.plan_batch, 16, "re-plan did not target the modal batch class");
+        assert!(status.plan_version >= 2);
+        tuner.stop();
+    }
+
+    #[test]
+    fn regime_shift_replans_without_weight_drift() {
+        // Per-class weights stay exactly on the prior (no drift), but
+        // the traffic's modal batch class moves: the re-planner must
+        // re-search at the new class (and report it) without swapping,
+        // since the stable weights produce the same optimal plan.
+        let n = 256;
+        let cfg = tight_config(n);
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let plan = tuner.slot().current().plan.clone();
+        for _ in 0..6 {
+            tuner.sampler().submit(plan_samples_b(&prior, &plan, 16, 1.0));
+        }
+        assert!(wait_for(|| tuner.status().replans >= 1), "no regime-shift re-plan");
+        let status = tuner.status();
+        assert_eq!(status.drift_events, 0);
+        assert_eq!(status.swaps, 0, "stable weights must not swap");
+        assert_eq!(status.plan_batch, 16);
+        // ... and back out of batching: singleton traffic shifts the
+        // modal class to 0 again.
+        for _ in 0..6 {
+            tuner.sampler().submit(plan_samples(&prior, &plan, 1.0));
+        }
+        assert!(wait_for(|| tuner.status().replans >= 2), "no re-plan on shift back");
+        let status = tuner.status();
+        assert_eq!(status.plan_batch, 1);
+        assert_eq!(status.swaps, 0);
         tuner.stop();
     }
 

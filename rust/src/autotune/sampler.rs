@@ -22,7 +22,10 @@ pub struct EdgeSample {
     pub edge: EdgeType,
     pub stage: usize,
     pub ctx: Context,
-    /// Observed time in nanoseconds.
+    /// Transforms executed together in this step (1 = unbatched). `ns`
+    /// covers the whole batch; consumers normalize per transform.
+    pub batch: usize,
+    /// Observed time in nanoseconds (for the whole batch).
     pub ns: f64,
 }
 
@@ -123,9 +126,34 @@ pub fn trace_request(
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx),
         };
-        out.push(EdgeSample { edge, stage, ctx, ns });
+        out.push(EdgeSample { edge, stage, ctx, batch: 1, ns });
         ctx = Context::After(edge);
     })
+}
+
+/// Batched analogue of [`trace_request`]: execute a gathered batch via
+/// [`CompiledPlan::run_batch_traced`], collecting one [`EdgeSample`] per
+/// step with `batch` set to the group's live size — whole-batch `ns`, so
+/// the cost model can learn the per-transform amortization at that batch
+/// size. In `Oracle` mode the per-transform oracle value is scaled by
+/// the batch size (the oracle has no amortization model; it keeps
+/// simulator-driven tests deterministic).
+pub fn trace_batch(
+    cp: &CompiledPlan,
+    buf: &mut crate::fft::BatchBuffer,
+    mode: &SampleMode,
+    out: &mut Vec<EdgeSample>,
+) {
+    let b = buf.batch();
+    let mut ctx = Context::Start;
+    cp.run_batch_traced(buf, &mut |edge, stage, measured_ns| {
+        let ns = match mode {
+            SampleMode::Wallclock => measured_ns,
+            SampleMode::Oracle(f) => f(edge, stage, ctx) * b as f64,
+        };
+        out.push(EdgeSample { edge, stage, ctx, batch: b, ns });
+        ctx = Context::After(edge);
+    });
 }
 
 #[cfg(test)]
@@ -178,6 +206,41 @@ mod tests {
         assert_eq!(samples[1].ctx, Context::After(EdgeType::R4));
         assert_eq!(samples[3].ctx, Context::After(EdgeType::R2));
         assert!(samples.iter().all(|s| s.ns >= 0.0));
+        assert!(samples.iter().all(|s| s.batch == 1));
+    }
+
+    #[test]
+    fn trace_batch_matches_run_batch_and_records_batch_size() {
+        let n = 256;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R2,F8").unwrap(), n, true);
+        let inputs: Vec<SplitComplex> = (0..5).map(|i| SplitComplex::random(n, i)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut traced = crate::fft::BatchBuffer::new(n, 5);
+        traced.gather(&refs);
+        let mut plain = traced.clone();
+        let mut samples = Vec::new();
+        trace_batch(&cp, &mut traced, &SampleMode::Wallclock, &mut samples);
+        cp.run_batch(&mut plain);
+        assert_eq!(traced, plain);
+        assert_eq!(samples.len(), 4);
+        assert_eq!(samples[0].ctx, Context::Start);
+        assert!(samples.iter().all(|s| s.batch == 5));
+    }
+
+    #[test]
+    fn trace_batch_oracle_scales_by_batch_size() {
+        let n = 64;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R2").unwrap(), n, true);
+        let mode = SampleMode::Oracle(Arc::new(|_, _, _| 10.0));
+        let inputs: Vec<SplitComplex> = (0..3).map(|i| SplitComplex::random(n, i)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = crate::fft::BatchBuffer::new(n, 3);
+        buf.gather(&refs);
+        let mut samples = Vec::new();
+        trace_batch(&cp, &mut buf, &mode, &mut samples);
+        assert!(samples.iter().all(|s| s.ns == 30.0 && s.batch == 3));
     }
 
     #[test]

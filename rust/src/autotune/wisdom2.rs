@@ -8,14 +8,22 @@
 //!
 //! ```json
 //! {"format": "spfft-wisdom-v2", "n": 1024, "source": "sim:m1",
-//!  "cells": [{"edge": "F8", "stage": 7, "ctx": 2,
-//!             "prior_ns": 458.0, "obs_ns": 4580.0, "count": 137}, ...]}
+//!  "cells": [{"edge": "F8", "stage": 7, "ctx": 2, "batch": 1,
+//!             "prior_ns": 458.0, "obs_ns": 4580.0, "count": 137},
+//!            {"edge": "F8", "stage": 7, "ctx": 2, "batch": 16,
+//!             "prior_ns": 458.0, "obs_ns": 1100.0, "count": 64}, ...]}
 //! ```
 //!
 //! `ctx` is [`Context::index`] (0 = start, 1.. = edge index + 1); cells
 //! with `count == 0` carry no live estimate (`obs_ns` is ignored).
-//! [`WisdomV2::load`] also accepts v1 files, promoting each v1 cell to a
-//! prior with zero live samples — upgrades are transparent.
+//! `batch` is the representative batch size of the observation's batch
+//! class ([`crate::autotune::model::batch_class`]); `obs_ns` is the
+//! per-transform EWMA learned at that class. Every prior cell appears
+//! exactly once with `batch == 1`; batched observations add further
+//! records for the same (edge, stage, ctx). Records without a `batch`
+//! field (files written before the batched execution engine) default to
+//! 1, and [`WisdomV2::load`] also accepts v1 files, promoting each v1
+//! cell to a prior with zero live samples — upgrades are transparent.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -28,15 +36,18 @@ use crate::util::json::{self, Json};
 
 use super::model::OnlineCost;
 
-/// One persisted cell: prior plus live estimate.
+/// One persisted cell: prior plus live estimate at one batch class.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellRecord {
     pub edge: EdgeType,
     pub stage: usize,
     pub ctx: Context,
-    /// Offline prior (ns).
+    /// Representative batch size of the observation's batch class
+    /// (1 = unbatched; the prior's own regime).
+    pub batch: usize,
+    /// Offline prior (per-transform ns, batch-agnostic).
     pub prior_ns: f64,
-    /// Live EWMA (ns); meaningful only when `count > 0`.
+    /// Live per-transform EWMA (ns); meaningful only when `count > 0`.
     pub obs_ns: f64,
     /// Live samples folded into `obs_ns`.
     pub count: u64,
@@ -51,20 +62,35 @@ pub struct WisdomV2 {
 }
 
 impl WisdomV2 {
-    /// Snapshot an online model (prior + observations) for persistence.
+    /// Snapshot an online model (prior + per-batch-class observations)
+    /// for persistence. Every prior cell yields one `batch == 1` record
+    /// (carrying the class-0 observation when present); observations at
+    /// higher batch classes add one record each.
     pub fn from_model(model: &OnlineCost, source: &str) -> WisdomV2 {
-        let cells = model
-            .export_cells()
-            .into_iter()
-            .map(|((edge, stage, ctx), prior_ns, obs)| CellRecord {
+        let mut cells = Vec::new();
+        for ((edge, stage, ctx), prior_ns, per_class) in model.export_cells() {
+            let class0 = per_class.iter().find(|&&(c, _)| c == 0).map(|&(_, e)| e);
+            cells.push(CellRecord {
                 edge,
                 stage,
                 ctx,
+                batch: 1,
                 prior_ns,
-                obs_ns: obs.map(|o| o.mean).unwrap_or(0.0),
-                count: obs.map(|o| o.count).unwrap_or(0),
-            })
-            .collect();
+                obs_ns: class0.map(|o| o.mean).unwrap_or(0.0),
+                count: class0.map(|o| o.count).unwrap_or(0),
+            });
+            for (class, est) in per_class.into_iter().filter(|&(c, _)| c > 0) {
+                cells.push(CellRecord {
+                    edge,
+                    stage,
+                    ctx,
+                    batch: crate::autotune::model::class_batch(class),
+                    prior_ns,
+                    obs_ns: est.mean,
+                    count: est.count,
+                });
+            }
+        }
         WisdomV2 { n: model.n(), source: source.to_string(), cells }
     }
 
@@ -80,6 +106,7 @@ impl WisdomV2 {
                     edge,
                     stage,
                     ctx,
+                    batch: 1,
                     prior_ns: ns,
                     obs_ns: 0.0,
                     count: 0,
@@ -88,22 +115,28 @@ impl WisdomV2 {
         }
     }
 
-    /// Restore live estimates into a freshly-built model. Every cell with
-    /// samples is applied verbatim; callers must gate on compatibility
-    /// first (same `n` *and* same cost `source` — see
-    /// `Autotuner::start`), since estimates only mean anything against
-    /// the prior they were learned over.
+    /// Restore live estimates into a freshly-built model, each at its
+    /// record's batch class. Callers must gate on compatibility first
+    /// (same `n` *and* same cost `source` — see `Autotuner::start`),
+    /// since estimates only mean anything against the prior they were
+    /// learned over.
     pub fn seed_model(&self, model: &mut OnlineCost) {
         for c in &self.cells {
             if c.count > 0 {
-                model.seed((c.edge, c.stage, c.ctx), c.obs_ns, c.count);
+                model.seed_at(
+                    (c.edge, c.stage, c.ctx),
+                    crate::autotune::model::batch_class(c.batch),
+                    c.obs_ns,
+                    c.count,
+                );
             }
         }
     }
 
-    /// Collapse to a v1 database of the *blended* weights (what the
-    /// planner would consume right now) — for offline tooling that only
-    /// speaks v1.
+    /// Collapse to a v1 database of the *blended* unbatched weights
+    /// (what a B=1 planning query would consume right now) — for offline
+    /// tooling that only speaks v1. Batched records (`batch > 1`) are
+    /// skipped; v1 has no batch axis.
     pub fn to_blended_v1(&self, blend_samples: f64) -> Wisdom {
         Wisdom {
             n: self.n,
@@ -111,6 +144,7 @@ impl WisdomV2 {
             cells: self
                 .cells
                 .iter()
+                .filter(|c| c.batch <= 1)
                 .map(|c| {
                     let ns = if c.count == 0 {
                         c.prior_ns
@@ -138,6 +172,7 @@ impl WisdomV2 {
                 o.insert("edge".into(), Json::Str(c.edge.name().into()));
                 o.insert("stage".into(), Json::Num(c.stage as f64));
                 o.insert("ctx".into(), Json::Num(c.ctx.index() as f64));
+                o.insert("batch".into(), Json::Num(c.batch as f64));
                 o.insert("prior_ns".into(), Json::Num(c.prior_ns));
                 o.insert("obs_ns".into(), Json::Num(c.obs_ns));
                 o.insert("count".into(), Json::Num(c.count as f64));
@@ -178,6 +213,12 @@ impl WisdomV2 {
                 .as_usize()
                 .and_then(Context::from_index)
                 .ok_or_else(|| anyhow!("wisdom2: bad ctx"))?;
+            // Absent in pre-batched-engine files: those records are all
+            // unbatched observations.
+            let batch = match c.get("batch") {
+                Json::Null => 1,
+                v => v.as_usize().filter(|&b| b >= 1).ok_or_else(|| anyhow!("wisdom2: bad batch"))?,
+            };
             let prior_ns = c.get("prior_ns").as_f64().ok_or_else(|| anyhow!("wisdom2: bad prior_ns"))?;
             if !prior_ns.is_finite() || prior_ns <= 0.0 {
                 bail!("wisdom2: non-positive prior for {edge}@{stage}");
@@ -187,7 +228,7 @@ impl WisdomV2 {
             if count > 0 && (!obs_ns.is_finite() || obs_ns <= 0.0) {
                 bail!("wisdom2: non-positive observation for {edge}@{stage}");
             }
-            cells.push(CellRecord { edge, stage, ctx, prior_ns, obs_ns, count });
+            cells.push(CellRecord { edge, stage, ctx, batch, prior_ns, obs_ns, count });
         }
         if cells.is_empty() {
             bail!("wisdom2: empty cell set");
@@ -217,7 +258,7 @@ mod tests {
         let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
         for &(e, s, ctx, ns) in w.cells.iter().take(5) {
             for _ in 0..7 {
-                model.observe(&EdgeSample { edge: e, stage: s, ctx, ns: ns * 2.0 });
+                model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 1, ns: ns * 2.0 });
             }
         }
         (model, w)
@@ -230,6 +271,53 @@ mod tests {
         let back = WisdomV2::from_json(&w2.to_json()).unwrap();
         assert_eq!(back, w2);
         assert_eq!(back.cells.iter().filter(|c| c.count > 0).count(), 5);
+        assert!(back.cells.iter().all(|c| c.batch == 1));
+    }
+
+    #[test]
+    fn batched_observations_roundtrip_with_their_class() {
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        let (e, s, ctx, ns) = w.cells[0];
+        for _ in 0..9 {
+            // whole-batch sample at B=16: per-transform cost halved
+            model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 16, ns: 16.0 * ns * 0.5 });
+        }
+        let w2 = WisdomV2::from_model(&model, "m1");
+        // one batch=1 record per prior cell, plus one batch=16 record
+        assert_eq!(w2.cells.len(), w.cells.len() + 1);
+        let rec = w2.cells.iter().find(|c| c.batch == 16).expect("batched record");
+        assert_eq!((rec.edge, rec.stage, rec.ctx), (e, s, ctx));
+        assert_eq!(rec.count, 9);
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back, w2);
+        // seeding a fresh model restores the estimate at the right class
+        let mut fresh = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        back.seed_model(&mut fresh);
+        let class = crate::autotune::model::batch_class(16);
+        assert_eq!(
+            fresh.observation_at((e, s, ctx), class),
+            model.observation_at((e, s, ctx), class)
+        );
+        assert_eq!(fresh.observation((e, s, ctx)), None);
+        // blended v1 ignores batched records (no batch axis in v1)
+        assert_eq!(back.to_blended_v1(4.0).cells.len(), w.cells.len());
+    }
+
+    #[test]
+    fn records_without_batch_field_default_to_unbatched() {
+        // Files written before the batched engine have no "batch" key.
+        let w2 = WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"prior_ns":5.0,"obs_ns":6.0,"count":3}]}"#,
+        )
+        .unwrap();
+        assert_eq!(w2.cells[0].batch, 1);
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"batch":0,"prior_ns":5.0}]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -360,7 +360,10 @@ fn main() {
     // as a wisdom v2 prior for the online autotuner.
     let prior_out = args.get("prior-out");
     if !prior_out.is_empty() {
-        let prior_n = args.get_usize("prior-n").unwrap_or(N);
+        let prior_n = args.get_usize("prior-n").unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
         let mut prior_cost = SimCost::new(Machine::new(p), prior_n);
         let v1 = Wisdom::harvest(&mut prior_cost, &format!("sim:{which}:tuned"));
         let w2 = WisdomV2::from_v1(&v1);

@@ -4,7 +4,15 @@
 //! batches = high throughput) applied to FFT requests: the first request
 //! of a batch starts a deadline window; the batch closes when either
 //! `max_batch` requests have arrived or the window expires.
+//!
+//! [`collect_batch`] is the one implementation of that deadline loop; the
+//! owning [`Batcher`] and the service workers (which share one receiver
+//! behind a mutex) both call it. [`group_by_key`] then splits a pulled
+//! batch into jointly-executable groups — the service groups by FFT size
+//! so each group can run through one batched `CompiledPlan::run_batch`.
 
+use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -38,23 +46,51 @@ impl<T> Batcher<T> {
     /// Block for the next batch. Returns `None` when the channel is
     /// closed and drained (service shutdown).
     pub fn next_batch(&self) -> Option<Vec<T>> {
-        // Block for the first item.
-        let first = self.rx.recv().ok()?;
-        let mut batch = vec![first];
-        let deadline = Instant::now() + self.policy.max_wait;
-        while batch.len() < self.policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(item) => batch.push(item),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        Some(batch)
+        collect_batch(&self.rx, self.policy)
     }
+}
+
+/// Pull one batch off `rx` under `policy`: block for the first item,
+/// then collect until `max_batch` items or `max_wait` after the first.
+/// Returns `None` when the channel is closed and drained. This is the
+/// single batching deadline loop, shared by [`Batcher`] and the service
+/// workers (which hold the receiver behind a mutex).
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Split a batch into groups sharing a key, preserving arrival order
+/// both across groups (first-seen order) and within each group.
+pub fn group_by_key<T, K: Eq + Hash + Copy>(
+    items: Vec<T>,
+    key: impl Fn(&T) -> K,
+) -> Vec<(K, Vec<T>)> {
+    let mut order: Vec<K> = Vec::new();
+    let mut map: HashMap<K, Vec<T>> = HashMap::new();
+    for item in items {
+        let k = key(&item);
+        match map.entry(k) {
+            std::collections::hash_map::Entry::Vacant(e) => {
+                order.push(k);
+                e.insert(vec![item]);
+            }
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().push(item),
+        }
+    }
+    order.into_iter().map(|k| (k, map.remove(&k).unwrap())).collect()
 }
 
 #[cfg(test)]
@@ -93,6 +129,41 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn collect_batch_matches_batcher_semantics() {
+        // Both entry points share one implementation; exercise the free
+        // function directly off a raw receiver.
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(20) };
+        assert_eq!(collect_batch(&rx, policy).unwrap(), vec![0, 1, 2]);
+        assert_eq!(collect_batch(&rx, policy).unwrap(), vec![3, 4]);
+        drop(tx);
+        assert!(collect_batch(&rx, policy).is_none());
+    }
+
+    #[test]
+    fn group_by_key_preserves_order() {
+        let items = vec![(256, 'a'), (1024, 'b'), (256, 'c'), (64, 'd'), (1024, 'e')];
+        let groups = group_by_key(items, |&(n, _)| n);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, 256);
+        assert_eq!(groups[0].1, vec![(256, 'a'), (256, 'c')]);
+        assert_eq!(groups[1].0, 1024);
+        assert_eq!(groups[1].1, vec![(1024, 'b'), (1024, 'e')]);
+        assert_eq!(groups[2].0, 64);
+        assert_eq!(groups[2].1, vec![(64, 'd')]);
+    }
+
+    #[test]
+    fn group_by_key_on_uniform_batch_is_one_group() {
+        let groups = group_by_key(vec![1, 2, 3], |_| 256usize);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].1, vec![1, 2, 3]);
     }
 
     #[test]

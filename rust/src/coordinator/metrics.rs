@@ -15,6 +15,12 @@ use std::time::Duration;
 /// Number of log2 latency buckets (1 ns .. the 2^30 ns saturation bucket).
 const BUCKETS: usize = 31;
 
+/// Buckets for the effective-batch-size histogram — one per autotune
+/// batch class ([`crate::autotune::batch_class`], ceil-log2), so the
+/// histogram, the learned per-class costs, and wisdom-v2 `batch`
+/// records all bucket a group size identically.
+pub const GROUP_BUCKETS: usize = crate::autotune::BATCH_CLASSES;
+
 /// Thread-safe metrics sink (lock-free atomics; share via `Arc`).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -23,6 +29,11 @@ pub struct Metrics {
     failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    /// Jointly-executed groups (same-n runs through one batched kernel
+    /// pass). A pulled batch splits into >= 1 groups.
+    groups: AtomicU64,
+    grouped_requests: AtomicU64,
+    group_buckets: [AtomicU64; GROUP_BUCKETS],
     busy_ns: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     /// Exact maximum latency seen (ns) — the histogram alone cannot
@@ -40,6 +51,16 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Mean requests per executed batch.
     pub mean_batch_size: f64,
+    /// Same-n groups executed (singletons and PJRT groups included).
+    pub groups: u64,
+    /// Mean requests per same-n group — the *effective* batch size the
+    /// grouping step produces (groups of >= 2 on the native backend run
+    /// through the batched kernels; singletons run scalar).
+    pub mean_group_size: f64,
+    /// Histogram of group sizes by autotune batch class
+    /// ([`crate::autotune::batch_class`]: ceil-log2; bucket 0 = size 1,
+    /// bucket 2 = sizes 3..=4, last bucket saturates).
+    pub group_size_hist: [u64; GROUP_BUCKETS],
     /// Total worker busy time.
     pub busy: Duration,
     pub latency_p50: Duration,
@@ -78,6 +99,19 @@ impl Metrics {
         self.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// Record one same-n group of `size` requests. Every group is
+    /// recorded regardless of execution path — singleton groups (scalar
+    /// path) and PJRT groups included — so the histogram reads as the
+    /// batching opportunity the traffic offers, not only what the
+    /// batched kernels consumed.
+    pub fn on_group(&self, size: usize) {
+        let size = size.max(1);
+        self.groups.fetch_add(1, Ordering::Relaxed);
+        self.grouped_requests.fetch_add(size as u64, Ordering::Relaxed);
+        let bucket = crate::autotune::batch_class(size);
+        self.group_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
     fn percentile(&self, counts: &[u64; BUCKETS], total: u64, max_ns: u64, p: f64) -> Duration {
         if total == 0 {
             return Duration::ZERO;
@@ -113,12 +147,21 @@ impl Metrics {
         let max_ns = self.max_latency_ns.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let breq = self.batched_requests.load(Ordering::Relaxed);
+        let groups = self.groups.load(Ordering::Relaxed);
+        let greq = self.grouped_requests.load(Ordering::Relaxed);
+        let mut group_size_hist = [0u64; GROUP_BUCKETS];
+        for (slot, b) in group_size_hist.iter_mut().zip(&self.group_buckets) {
+            *slot = b.load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches == 0 { 0.0 } else { breq as f64 / batches as f64 },
+            groups,
+            mean_group_size: if groups == 0 { 0.0 } else { greq as f64 / groups as f64 },
+            group_size_hist,
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
             latency_p50: self.percentile(&counts, total, max_ns, 0.50),
             latency_p95: self.percentile(&counts, total, max_ns, 0.95),
@@ -157,6 +200,31 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch_size, 2.0);
         assert_eq!(s.busy, Duration::from_micros(5));
+    }
+
+    #[test]
+    fn group_histogram_buckets_match_autotune_batch_classes() {
+        let m = Metrics::new();
+        m.on_group(1); // class 0
+        m.on_group(2); // class 1
+        m.on_group(3); // class 2 (ceil-log2, same as the cost model)
+        m.on_group(16); // class 4
+        m.on_group(1000); // saturates in the last class
+        let s = m.snapshot();
+        assert_eq!(s.groups, 5);
+        assert_eq!(s.group_size_hist[0], 1);
+        assert_eq!(s.group_size_hist[1], 1);
+        assert_eq!(s.group_size_hist[2], 1);
+        assert_eq!(s.group_size_hist[4], 1);
+        assert_eq!(s.group_size_hist[GROUP_BUCKETS - 1], 1);
+        for (bucket, &count) in s.group_size_hist.iter().enumerate() {
+            let want = [1usize, 2, 3, 16, 1000]
+                .iter()
+                .filter(|&&sz| crate::autotune::batch_class(sz) == bucket)
+                .count() as u64;
+            assert_eq!(count, want, "bucket {bucket}");
+        }
+        assert!((s.mean_group_size - (1.0 + 2.0 + 3.0 + 16.0 + 1000.0) / 5.0).abs() < 1e-9);
     }
 
     #[test]

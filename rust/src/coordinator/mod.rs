@@ -14,7 +14,11 @@
 //! * [`metrics`] — counters + log-bucketed latency histogram;
 //! * [`plancache`] — versioned (n, strategy) -> plan memoization (the
 //!   autotuner hot-swaps re-planned arrangements through it);
-//! * [`batcher`] — size/deadline dynamic batching;
+//! * [`batcher`] — size/deadline dynamic batching plus same-key
+//!   grouping: workers split each pulled batch into same-n groups and
+//!   execute every group jointly through the lane-blocked batched
+//!   kernels (`crate::fft::batch`), amortizing per-pass twiddle loads
+//!   and memory round trips across the group;
 //! * [`service`] — the request loop, worker pool, and typed handles;
 //!   wires in [`crate::autotune`] when `ServiceConfig::autotune` is set.
 
@@ -23,7 +27,7 @@ pub mod metrics;
 pub mod plancache;
 pub mod service;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{collect_batch, group_by_key, BatchPolicy, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plancache::PlanCache;
 pub use service::{Backend, FftService, ServiceConfig};

@@ -36,6 +36,17 @@ pub trait CostModel {
     /// Time (ns) of `edge` at `stage` given predecessor context.
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64;
 
+    /// Time (ns) of `edge` at `stage` in `ctx` executed over a batch of
+    /// `b` transforms together (the lane-blocked batched kernels). The
+    /// default assumes no amortization — `b` independent executions —
+    /// which providers with a real batched path override:
+    /// [`NativeCost`] measures the batched kernels directly, and the
+    /// autotuner's online model learns per-batch-class estimates from
+    /// live traffic.
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        b.max(1) as f64 * self.edge_ns(edge, stage, ctx)
+    }
+
     /// Steady-state time of a full plan: every edge costed in its true
     /// context, the first edge in the context of the plan's last edge
     /// (back-to-back benchmark loop). This is the "measured arrangement
@@ -65,6 +76,10 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
 
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
         (**self).edge_ns(edge, stage, ctx)
+    }
+
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        (**self).edge_ns_batched(edge, stage, ctx, b)
     }
 }
 
@@ -206,5 +221,13 @@ mod tests {
     fn haswell_cost_lacks_f32() {
         let c = SimCost::haswell(1024);
         assert!(!c.available_edges().contains(&EdgeType::F32));
+    }
+
+    #[test]
+    fn default_batched_cost_is_linear_in_b() {
+        let mut c = SimCost::m1(1024);
+        let one = c.edge_ns(EdgeType::R4, 0, Start);
+        assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 1), one);
+        assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 16), 16.0 * one);
     }
 }

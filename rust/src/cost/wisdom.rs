@@ -34,6 +34,18 @@ impl Wisdom {
     /// Harvest every graph cell from a cost model (all contexts, all
     /// positional placements) — the full context-aware database.
     pub fn harvest<C: CostModel>(cost: &mut C, source: &str) -> Wisdom {
+        Wisdom::harvest_batched(cost, source, 1)
+    }
+
+    /// Harvest every graph cell measured over batches of `b` transforms
+    /// executed jointly (the lane-blocked batched kernels), normalized
+    /// **per transform** — the batched prior: planning over it optimizes
+    /// the plan for a service whose groups are `b` wide. With `b = 1`
+    /// this is exactly [`Wisdom::harvest`]; providers without a real
+    /// batched path (the default `edge_ns_batched`) yield the same
+    /// per-transform values at any `b`.
+    pub fn harvest_batched<C: CostModel>(cost: &mut C, source: &str, b: usize) -> Wisdom {
+        let b = b.max(1);
         let n = cost.n();
         let l = crate::fft::log2i(n);
         let mut cells = Vec::new();
@@ -43,7 +55,15 @@ impl Wisdom {
                     continue;
                 }
                 for ctx in Context::all() {
-                    cells.push((e, s, ctx, cost.edge_ns(e, s, ctx)));
+                    // b == 1 uses edge_ns directly so providers whose
+                    // unbatched query has extra semantics (OnlineCost's
+                    // focus class) keep them under plain harvest.
+                    let ns = if b == 1 {
+                        cost.edge_ns(e, s, ctx)
+                    } else {
+                        cost.edge_ns_batched(e, s, ctx, b) / b as f64
+                    };
+                    cells.push((e, s, ctx, ns));
                 }
             }
         }
@@ -169,6 +189,19 @@ mod tests {
         let wh = Wisdom::harvest(&mut hw, "haswell");
         // radix-only catalog: (10 + 9 + 8) pairs x 7 contexts
         assert_eq!(wh.cells.len(), 27 * 7);
+    }
+
+    #[test]
+    fn harvest_batched_over_linear_provider_matches_unbatched() {
+        // SimCost uses the default (no-amortization) batched cost, so
+        // per-transform cells are identical at any batch size.
+        let w1 = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w4 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 4);
+        assert_eq!(w1.cells.len(), w4.cells.len());
+        for (a, b) in w1.cells.iter().zip(&w4.cells) {
+            assert_eq!((a.0, a.1, a.2), (b.0, b.1, b.2));
+            assert!((a.3 - b.3).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Lane-blocked batch buffers: run B transforms as the vector lanes.
+//!
+//! The serving layer collects batches, but per-request execution throws
+//! the batch away: every pass re-loads its twiddles and re-walks memory
+//! once *per transform* — exactly the per-pass round-trip cost paper
+//! Table 1 identifies as dominant. A [`BatchBuffer`] transposes a batch
+//! of B same-size transforms into split-complex **[n][B] SoA panels**:
+//! element `i` of every transform sits in one contiguous run of
+//! `lanes()` floats (`B` rounded up to [`LANE`]), so a batched kernel
+//! loads each twiddle element once and applies it to the whole batch
+//! with unit-stride vector arithmetic — the batch dimension becomes the
+//! SIMD lanes (the "Beating vDSP" batch-blocking structure, and FFTW's
+//! howmany-loop amortization, on the native path).
+//!
+//! Padding lanes (between `batch()` and `lanes()`) are zero-filled by
+//! [`BatchBuffer::gather`]; FFT passes are linear, so zeros stay finite
+//! and never perturb the live lanes. [`BatchBufferPool`] recycles the
+//! backing allocations so a worker's steady-state hot loop is
+//! allocation-free.
+
+use super::SplitComplex;
+
+/// Lane width batches are padded to: 4 × f32 = one 128-bit NEON/SSE
+/// vector, the narrowest unit the batched kernels vectorize over.
+pub const LANE: usize = 4;
+
+/// Round a batch size up to a multiple of [`LANE`].
+pub fn padded_lanes(b: usize) -> usize {
+    assert!(b >= 1, "batch must be non-empty");
+    b.div_ceil(LANE) * LANE
+}
+
+/// A batch of `b` n-point transforms in lane-blocked split-complex
+/// layout: `re[i * lanes + l]` is element `i` of transform `l`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchBuffer {
+    n: usize,
+    b: usize,
+    lanes: usize,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl BatchBuffer {
+    /// Freshly-allocated zeroed buffer for `b` n-point transforms.
+    pub fn new(n: usize, b: usize) -> BatchBuffer {
+        crate::fft::log2i(n); // validate power of two
+        let lanes = padded_lanes(b);
+        BatchBuffer { n, b, lanes, re: vec![0.0; n * lanes], im: vec![0.0; n * lanes] }
+    }
+
+    /// Transform size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Logical batch size (live lanes).
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Physical lane count (`batch()` rounded up to [`LANE`]).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Transpose per-request buffers into the lane-blocked panels.
+    /// Padding lanes are zeroed; every live lane is fully overwritten.
+    pub fn gather(&mut self, inputs: &[&SplitComplex]) {
+        assert_eq!(inputs.len(), self.b, "gather: wrong batch size");
+        for x in inputs {
+            assert_eq!(x.len(), self.n, "gather: wrong transform size");
+        }
+        for i in 0..self.n {
+            let row = i * self.lanes;
+            for (l, x) in inputs.iter().enumerate() {
+                self.re[row + l] = x.re[i];
+                self.im[row + l] = x.im[i];
+            }
+            for l in inputs.len()..self.lanes {
+                self.re[row + l] = 0.0;
+                self.im[row + l] = 0.0;
+            }
+        }
+    }
+
+    /// Transpose one live lane back out into an existing buffer
+    /// (allocation-free scatter for callers that recycle outputs).
+    pub fn scatter_lane_into(&self, l: usize, out: &mut SplitComplex) {
+        assert!(l < self.b, "lane {l} out of range (batch {})", self.b);
+        assert_eq!(out.len(), self.n, "scatter into wrong-size buffer");
+        for i in 0..self.n {
+            out.re[i] = self.re[i * self.lanes + l];
+            out.im[i] = self.im[i * self.lanes + l];
+        }
+    }
+
+    /// Transpose one live lane back out as a per-request buffer.
+    pub fn scatter_lane(&self, l: usize) -> SplitComplex {
+        let mut out = SplitComplex::zeros(self.n);
+        self.scatter_lane_into(l, &mut out);
+        out
+    }
+
+    /// Transpose every live lane into existing buffers (batch order).
+    pub fn scatter_into(&self, outs: &mut [SplitComplex]) {
+        assert_eq!(outs.len(), self.b, "scatter into wrong batch size");
+        for (l, out) in outs.iter_mut().enumerate() {
+            self.scatter_lane_into(l, out);
+        }
+    }
+
+    /// All live lanes, in batch order.
+    pub fn scatter(&self) -> Vec<SplitComplex> {
+        (0..self.b).map(|l| self.scatter_lane(l)).collect()
+    }
+}
+
+/// Worker-owned pool of batch-buffer allocations. `acquire` reuses a
+/// retired allocation when one exists (growing it only if the new shape
+/// needs more capacity), so a steady-state worker executes batches
+/// without touching the allocator.
+#[derive(Debug, Default)]
+pub struct BatchBufferPool {
+    free: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Retired allocations kept per pool; beyond this, `release` drops.
+const POOL_DEPTH: usize = 4;
+
+impl BatchBufferPool {
+    pub fn new() -> BatchBufferPool {
+        BatchBufferPool::default()
+    }
+
+    /// A buffer for `b` n-point transforms, recycling a retired
+    /// allocation when available. Contents are unspecified — callers
+    /// must `gather` before running (gather overwrites every lane).
+    pub fn acquire(&mut self, n: usize, b: usize) -> BatchBuffer {
+        crate::fft::log2i(n);
+        let lanes = padded_lanes(b);
+        let len = n * lanes;
+        // Best fit: prefer a retired pair that already has the capacity.
+        let pick = self
+            .free
+            .iter()
+            .position(|(re, _)| re.capacity() >= len)
+            .unwrap_or(0);
+        let (mut re, mut im) = if self.free.is_empty() {
+            (Vec::new(), Vec::new())
+        } else {
+            self.free.swap_remove(pick)
+        };
+        re.resize(len, 0.0);
+        im.resize(len, 0.0);
+        BatchBuffer { n, b, lanes, re, im }
+    }
+
+    /// Return a buffer's allocation to the pool.
+    pub fn release(&mut self, buf: BatchBuffer) {
+        if self.free.len() < POOL_DEPTH {
+            self.free.push((buf.re, buf.im));
+        }
+    }
+
+    /// Retired allocations currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_rounds_up_to_lane() {
+        assert_eq!(padded_lanes(1), LANE);
+        assert_eq!(padded_lanes(LANE), LANE);
+        assert_eq!(padded_lanes(LANE + 1), 2 * LANE);
+        assert_eq!(padded_lanes(16), 16);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let n = 64;
+        for b in [1usize, 2, LANE, 5, 16] {
+            let inputs: Vec<SplitComplex> =
+                (0..b).map(|i| SplitComplex::random(n, i as u64)).collect();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            let mut buf = BatchBuffer::new(n, b);
+            buf.gather(&refs);
+            for (l, want) in inputs.iter().enumerate() {
+                assert_eq!(&buf.scatter_lane(l), want, "lane {l} of batch {b}");
+            }
+            assert_eq!(buf.scatter(), inputs);
+        }
+    }
+
+    #[test]
+    fn padding_lanes_are_zero() {
+        let n = 8;
+        let b = 3; // pads to LANE
+        let inputs: Vec<SplitComplex> = (0..b).map(|i| SplitComplex::random(n, i as u64)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = BatchBuffer::new(n, b);
+        // poison, then gather: pads must be re-zeroed
+        buf.re.iter_mut().for_each(|v| *v = f32::NAN);
+        buf.im.iter_mut().for_each(|v| *v = f32::NAN);
+        buf.gather(&refs);
+        for i in 0..n {
+            for l in b..buf.lanes() {
+                assert_eq!(buf.re[i * buf.lanes() + l], 0.0);
+                assert_eq!(buf.im[i * buf.lanes() + l], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn layout_is_element_major() {
+        let n = 8;
+        let inputs: Vec<SplitComplex> = (0..2).map(|i| SplitComplex::random(n, i)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = BatchBuffer::new(n, 2);
+        buf.gather(&refs);
+        for i in 0..n {
+            assert_eq!(buf.re[i * buf.lanes()], inputs[0].re[i]);
+            assert_eq!(buf.re[i * buf.lanes() + 1], inputs[1].re[i]);
+        }
+    }
+
+    #[test]
+    fn pool_recycles_allocations() {
+        let mut pool = BatchBufferPool::new();
+        let buf = pool.acquire(256, 16);
+        let cap = buf.re.capacity();
+        let ptr = buf.re.as_ptr();
+        pool.release(buf);
+        assert_eq!(pool.pooled(), 1);
+        // Same shape: the exact allocation comes back, no realloc.
+        let again = pool.acquire(256, 16);
+        assert_eq!(again.re.as_ptr(), ptr);
+        assert_eq!(again.re.capacity(), cap);
+        pool.release(again);
+        // Smaller shape still reuses (capacity is sufficient).
+        let small = pool.acquire(64, 4);
+        assert_eq!(small.re.capacity(), cap);
+        assert_eq!(small.re.len(), 64 * LANE);
+    }
+
+    #[test]
+    fn pool_bounds_retired_allocations() {
+        let mut pool = BatchBufferPool::new();
+        let bufs: Vec<BatchBuffer> = (0..8).map(|_| pool.acquire(64, 4)).collect();
+        for b in bufs {
+            pool.release(b);
+        }
+        assert!(pool.pooled() <= POOL_DEPTH);
+    }
+}

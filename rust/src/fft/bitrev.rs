@@ -34,6 +34,28 @@ pub fn bit_reverse_permute(re: &mut [f32], im: &mut [f32]) {
     }
 }
 
+/// In-place bit-reversal of a lane-blocked batch buffer: permute the
+/// element rows (each `lanes` floats wide), leaving lane order intact.
+pub fn bit_reverse_permute_b(re: &mut [f32], im: &mut [f32], lanes: usize) {
+    assert_eq!(re.len(), im.len());
+    assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let l = log2i(n);
+    if l == 0 {
+        return;
+    }
+    let shift = usize::BITS as usize - l;
+    for i in 0..n {
+        let j = i.reverse_bits() >> shift;
+        if j > i {
+            for t in 0..lanes {
+                re.swap(i * lanes + t, j * lanes + t);
+                im.swap(i * lanes + t, j * lanes + t);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,6 +88,25 @@ mod tests {
         for i in 0..n {
             assert_eq!(re[i], idx[i] as f32);
             assert_eq!(im[i], -(idx[i] as f32));
+        }
+    }
+
+    #[test]
+    fn batched_permute_matches_per_lane_permute() {
+        let n = 64;
+        for b in [1usize, 3, 4, 6] {
+            let inputs: Vec<crate::fft::SplitComplex> =
+                (0..b).map(|i| crate::fft::SplitComplex::random(n, i as u64)).collect();
+            let refs: Vec<&crate::fft::SplitComplex> = inputs.iter().collect();
+            let mut buf = crate::fft::BatchBuffer::new(n, b);
+            buf.gather(&refs);
+            let lanes = buf.lanes();
+            bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+            for (l, input) in inputs.iter().enumerate() {
+                let mut want = input.clone();
+                bit_reverse_permute(&mut want.re, &mut want.im);
+                assert_eq!(buf.scatter_lane(l), want, "lane {l} of batch {b}");
+            }
         }
     }
 

@@ -7,8 +7,9 @@
 
 use std::sync::Arc;
 
-use super::fused::{fused16, fused32, fused8, fused_twiddles};
-use super::passes::{radix2, radix4, radix8};
+use super::batch::BatchBuffer;
+use super::fused::{fused16, fused16_b, fused32, fused32_b, fused8, fused8_b, fused_twiddles};
+use super::passes::{radix2, radix2_b, radix4, radix4_b, radix8, radix8_b};
 use super::twiddle::{TwiddleCache, TwiddleVec};
 use super::{log2i, SplitComplex};
 use crate::edge::EdgeType;
@@ -75,6 +76,22 @@ pub fn run_step(step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
     }
 }
 
+/// Run one compiled step over a lane-blocked batch buffer in place.
+pub fn run_step_b(step: &CompiledStep, re: &mut [f32], im: &mut [f32], lanes: usize) {
+    match step.edge {
+        EdgeType::R2 => radix2_b(re, im, step.stage, &step.tw[0], lanes),
+        EdgeType::R4 => {
+            radix4_b(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
+        }
+        EdgeType::R8 => {
+            radix8_b(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
+        }
+        EdgeType::F8 => fused8_b(re, im, step.stage, &step.tw, lanes),
+        EdgeType::F16 => fused16_b(re, im, step.stage, &step.tw, lanes),
+        EdgeType::F32 => fused32_b(re, im, step.stage, &step.tw, lanes),
+    }
+}
+
 impl CompiledPlan {
     /// Steps in execution order.
     pub fn steps(&self) -> &[CompiledStep] {
@@ -119,6 +136,45 @@ impl CompiledPlan {
         }
         if self.bitrev {
             super::bitrev::bit_reverse_permute(re, im);
+        }
+    }
+
+    /// Execute all transforms of a gathered batch in place, one step at
+    /// a time across the whole batch: each step's twiddles are loaded
+    /// once and applied to every lane, amortizing the per-pass memory
+    /// round trip over the batch. Per-lane outputs are bit-identical to
+    /// [`CompiledPlan::run`] on that lane alone (the batched kernels run
+    /// the same butterfly algebra per lane; padding lanes are zeros and
+    /// never feed live lanes).
+    pub fn run_batch(&self, buf: &mut BatchBuffer) {
+        assert_eq!(buf.n(), self.n, "batch buffer is for n={}, plan for n={}", buf.n(), self.n);
+        let lanes = buf.lanes();
+        for step in &self.steps {
+            run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+        }
+        if self.bitrev {
+            super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+        }
+    }
+
+    /// Batched execution reporting each step's whole-batch wall-clock
+    /// nanoseconds to `on_step(edge, stage, ns)` — the autotune sampling
+    /// hook for batched serving. Arithmetic is identical to
+    /// [`CompiledPlan::run_batch`].
+    pub fn run_batch_traced(
+        &self,
+        buf: &mut BatchBuffer,
+        on_step: &mut dyn FnMut(EdgeType, usize, f64),
+    ) {
+        assert_eq!(buf.n(), self.n, "batch buffer is for n={}, plan for n={}", buf.n(), self.n);
+        let lanes = buf.lanes();
+        for step in &self.steps {
+            let t0 = std::time::Instant::now();
+            run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+            on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+        }
+        if self.bitrev {
+            super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
         }
     }
 
@@ -249,6 +305,78 @@ mod tests {
         });
         assert_eq!(traced, cp.run_on(&input));
         assert_eq!(seen, plan.steps());
+    }
+
+    #[test]
+    fn run_batch_is_bit_identical_to_sequential_runs() {
+        // The batched-execution contract: every lane of a batch matches a
+        // lone CompiledPlan::run bit-for-bit, including B=1 and batch
+        // sizes that are not lane multiples.
+        let n = 256;
+        let mut ex = Executor::new();
+        for plan_str in ["R4,R4,R2,F8", "R2,R2,R2,R2,R2,R2,R2,R2", "F8,F8,R2,R2", "R8,F32"] {
+            let cp = ex.compile(&Plan::parse(plan_str).unwrap(), n, true);
+            for b in [1usize, 2, 5, 8, 16] {
+                let inputs: Vec<SplitComplex> =
+                    (0..b).map(|i| SplitComplex::random(n, 900 + i as u64)).collect();
+                let refs: Vec<&SplitComplex> = inputs.iter().collect();
+                let mut buf = crate::fft::BatchBuffer::new(n, b);
+                buf.gather(&refs);
+                cp.run_batch(&mut buf);
+                for (l, input) in inputs.iter().enumerate() {
+                    assert_eq!(
+                        buf.scatter_lane(l),
+                        cp.run_on(input),
+                        "{plan_str}: lane {l} of batch {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_without_bitrev_matches_too() {
+        let n = 128;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R2,F16").unwrap(), n, false);
+        let inputs: Vec<SplitComplex> = (0..3).map(|i| SplitComplex::random(n, i)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = crate::fft::BatchBuffer::new(n, 3);
+        buf.gather(&refs);
+        cp.run_batch(&mut buf);
+        for (l, input) in inputs.iter().enumerate() {
+            assert_eq!(buf.scatter_lane(l), cp.run_on(input), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn traced_batch_is_bit_identical_and_reports_every_step() {
+        let n = 512;
+        let mut ex = Executor::new();
+        let plan = Plan::parse("R4,R2,R4,R2,F8").unwrap();
+        let cp = ex.compile(&plan, n, true);
+        let inputs: Vec<SplitComplex> = (0..6).map(|i| SplitComplex::random(n, 40 + i)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut traced = crate::fft::BatchBuffer::new(n, 6);
+        traced.gather(&refs);
+        let mut plain = traced.clone();
+        let mut seen = Vec::new();
+        cp.run_batch_traced(&mut traced, &mut |edge, stage, ns| {
+            seen.push((edge, stage));
+            assert!(ns >= 0.0);
+        });
+        cp.run_batch(&mut plain);
+        assert_eq!(traced, plain);
+        assert_eq!(seen, plan.steps());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch buffer is for n=")]
+    fn run_batch_rejects_wrong_size_buffer() {
+        let mut ex = Executor::new();
+        let cp = ex.compile(&Plan::parse("R4,R4,R2,F8").unwrap(), 256, true);
+        let mut buf = crate::fft::BatchBuffer::new(128, 4);
+        cp.run_batch(&mut buf);
     }
 
     #[test]

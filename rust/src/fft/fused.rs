@@ -221,6 +221,124 @@ fn fused_tile_terminal<const B: usize>(
     }
 }
 
+/// Batched fused block over a lane-blocked buffer (`lanes` floats per
+/// element, a multiple of [`super::batch::LANE`]). Where the scalar path
+/// tiles across consecutive j (or consecutive terminal blocks), the
+/// batched path tiles across the **batch lanes** of one (base, j) group:
+/// each sub-stage twiddle `w[k*e + j]` is loaded once per group and
+/// applied to [`super::batch::LANE`] transforms at a time. Per-lane
+/// arithmetic is the same butterfly network as [`fused_group_scalar`],
+/// so outputs are bit-identical to the unbatched block.
+fn fused_generic_b<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    wt: &[Arc<TwiddleVec>],
+    lanes: usize,
+) {
+    const BL: usize = super::batch::LANE;
+    debug_assert!(lanes >= 1 && lanes % BL == 0 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    let lb = B.trailing_zeros() as usize;
+    debug_assert!(m >= B, "F{B} at stage {stage} invalid for n={n}");
+    debug_assert_eq!(wt.len(), lb);
+    let e = m / B;
+    let estride = e * lanes;
+    let mut base = 0;
+    while base < n {
+        for j in 0..e {
+            let flat = (base + j) * lanes;
+            let mut c = 0;
+            while c < lanes {
+                fused_lane_tile::<B>(re, im, flat + c, estride, j, e, wt);
+                c += BL;
+            }
+        }
+        base += m;
+    }
+}
+
+/// One [`super::batch::LANE`]-wide lane chunk of one fused group: point k
+/// of the group starts at `flat0 + k * estride` in the flat buffer.
+#[inline(always)]
+fn fused_lane_tile<const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    flat0: usize,
+    estride: usize,
+    j: usize,
+    e: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    const BL: usize = super::batch::LANE;
+    let mut xr = [[0f32; BL]; B];
+    let mut xi = [[0f32; BL]; B];
+    for k in 0..B {
+        let s = flat0 + k * estride;
+        xr[k].copy_from_slice(&re[s..s + BL]);
+        xi[k].copy_from_slice(&im[s..s + BL]);
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let wr = w.re[k * e + j];
+                let wi = w.im[k * e + j];
+                let (a, b) = (off + k, off + k + half);
+                let (ra, rb) = lane_pair_b(&mut xr, a, b);
+                let (ia, ib) = lane_pair_b(&mut xi, a, b);
+                for t in 0..BL {
+                    let (tr, ti) = (ra[t] + rb[t], ia[t] + ib[t]);
+                    let (dr, di) = (ra[t] - rb[t], ia[t] - ib[t]);
+                    let (pr, pi) = cmul(dr, di, wr, wi);
+                    ra[t] = tr;
+                    ia[t] = ti;
+                    rb[t] = pr;
+                    ib[t] = pi;
+                }
+            }
+        }
+    }
+    for k in 0..B {
+        let s = flat0 + k * estride;
+        re[s..s + BL].copy_from_slice(&xr[k]);
+        im[s..s + BL].copy_from_slice(&xi[k]);
+    }
+}
+
+/// Disjoint mutable refs to two batch-lane rows of the tile (a < b).
+#[inline(always)]
+fn lane_pair_b<const B: usize>(
+    x: &mut [[f32; super::batch::LANE]; B],
+    a: usize,
+    b: usize,
+) -> (
+    &mut [f32; super::batch::LANE],
+    &mut [f32; super::batch::LANE],
+) {
+    debug_assert!(a < b);
+    let (lo, hi) = x.split_at_mut(b);
+    (&mut lo[a], &mut hi[0])
+}
+
+/// Batched fused FFT-8 block over a lane-blocked buffer.
+pub fn fused8_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    fused_generic_b::<8>(re, im, stage, wt, lanes);
+}
+
+/// Batched fused FFT-16 block over a lane-blocked buffer.
+pub fn fused16_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    fused_generic_b::<16>(re, im, stage, wt, lanes);
+}
+
+/// Batched fused FFT-32 block over a lane-blocked buffer.
+pub fn fused32_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    fused_generic_b::<32>(re, im, stage, wt, lanes);
+}
+
 /// Disjoint mutable refs to two lanes of the tile array (a < b).
 #[inline(always)]
 fn lane_pair<const B: usize>(
@@ -315,6 +433,42 @@ mod tests {
         for n in [32usize, 256, 1024] {
             for stage in 0..=(crate::fft::log2i(n).saturating_sub(5)) {
                 check(32, n, stage, 123 + stage as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fused_is_bit_identical_to_scalar() {
+        for (b, n, stage) in [(8usize, 64usize, 0usize), (16, 256, 2), (32, 256, 0), (8, 64, 3)] {
+            for batch in [1usize, 3, 4, 9] {
+                let inputs: Vec<SplitComplex> =
+                    (0..batch).map(|i| SplitComplex::random(n, 500 + i as u64)).collect();
+                let refs: Vec<&SplitComplex> = inputs.iter().collect();
+                let mut cache = TwiddleCache::new();
+                let wt = fused_twiddles(&mut cache, n, stage, b);
+                let mut buf = crate::fft::BatchBuffer::new(n, batch);
+                buf.gather(&refs);
+                let lanes = buf.lanes();
+                match b {
+                    8 => fused8_b(&mut buf.re, &mut buf.im, stage, &wt, lanes),
+                    16 => fused16_b(&mut buf.re, &mut buf.im, stage, &wt, lanes),
+                    32 => fused32_b(&mut buf.re, &mut buf.im, stage, &wt, lanes),
+                    _ => unreachable!(),
+                }
+                for (l, input) in inputs.iter().enumerate() {
+                    let mut want = input.clone();
+                    match b {
+                        8 => fused8(&mut want.re, &mut want.im, stage, &wt),
+                        16 => fused16(&mut want.re, &mut want.im, stage, &wt),
+                        32 => fused32(&mut want.re, &mut want.im, stage, &wt),
+                        _ => unreachable!(),
+                    }
+                    assert_eq!(
+                        buf.scatter_lane(l),
+                        want,
+                        "F{b} n={n} stage={stage} lane {l} of batch {batch}"
+                    );
+                }
             }
         }
     }

@@ -7,6 +7,9 @@
 //! * [`passes`] — radix-2/4/8 DIF passes (memory → butterflies → memory);
 //! * [`fused`] — fused FFT-8/16/32 register blocks (gather once, run
 //!   log2(B) stages in locals, scatter once);
+//! * [`batch`] — lane-blocked batch buffers: B transforms as SIMD lanes,
+//!   executed together by the `*_b` kernel variants (one twiddle load
+//!   per batch instead of per transform);
 //! * [`twiddle`] — cached twiddle-factor tables;
 //! * [`bitrev`] — bit-reversal permutation;
 //! * [`exec`] — the plan executor (compiled plans over a twiddle cache);
@@ -17,6 +20,7 @@
 //! [`crate::cost::NativeCost`] (the paper's protocol on this host), and the
 //! per-pass profile of Table 4.
 
+pub mod batch;
 pub mod bitrev;
 pub mod exec;
 pub mod fused;
@@ -24,6 +28,7 @@ pub mod passes;
 pub mod reference;
 pub mod twiddle;
 
+pub use batch::{BatchBuffer, BatchBufferPool, LANE};
 pub use bitrev::{bit_reverse_indices, bit_reverse_permute};
 pub use exec::{CompiledPlan, Executor};
 pub use twiddle::TwiddleCache;

@@ -198,6 +198,178 @@ pub fn radix8(
     }
 }
 
+/// Batched radix-2 DIF pass over a lane-blocked buffer (`lanes` floats
+/// per element — see [`super::batch::BatchBuffer`]). Identical butterfly
+/// algebra to [`radix2`], applied to every lane of each element pair, so
+/// each twiddle element is loaded once for the whole batch and per-lane
+/// outputs are bit-identical to the unbatched pass.
+pub fn radix2_b(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, lanes: usize) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 2, "R2 at stage {stage} invalid for n={n}");
+    let half = m / 2;
+    debug_assert_eq!(w1.len(), half);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let (top, bot) = re[s..s + m * lanes].split_at_mut(half * lanes);
+        let (topi, boti) = im[s..s + m * lanes].split_at_mut(half * lanes);
+        for j in 0..half {
+            let (wr, wi) = (w1.re[j], w1.im[j]);
+            let row = j * lanes;
+            for l in row..row + lanes {
+                let (tr, ti) = (top[l], topi[l]);
+                let (br, bi) = (bot[l], boti[l]);
+                top[l] = tr + br;
+                topi[l] = ti + bi;
+                let (pr, pi) = cmul(tr - br, ti - bi, wr, wi);
+                bot[l] = pr;
+                boti[l] = pi;
+            }
+        }
+        base += m;
+    }
+}
+
+/// Batched radix-4 DIF pass (lane-blocked analogue of [`radix4`]).
+pub fn radix4_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 4, "R4 at stage {stage} invalid for n={n}");
+    let q = m / 4;
+    debug_assert_eq!(w1.len(), q);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let (q0r, rest) = re[s..s + m * lanes].split_at_mut(q * lanes);
+        let (q1r, rest) = rest.split_at_mut(q * lanes);
+        let (q2r, q3r) = rest.split_at_mut(q * lanes);
+        let (q0i, rest) = im[s..s + m * lanes].split_at_mut(q * lanes);
+        let (q1i, rest) = rest.split_at_mut(q * lanes);
+        let (q2i, q3i) = rest.split_at_mut(q * lanes);
+        for j in 0..q {
+            let (w1r, w1i) = (w1.re[j], w1.im[j]);
+            let (w2r, w2i) = (w2.re[j], w2.im[j]);
+            let (w3r, w3i) = (w3.re[j], w3.im[j]);
+            let row = j * lanes;
+            for l in row..row + lanes {
+                let (ar, ai) = (q0r[l], q0i[l]);
+                let (br, bi) = (q1r[l], q1i[l]);
+                let (cr, ci) = (q2r[l], q2i[l]);
+                let (dr, di) = (q3r[l], q3i[l]);
+                let (t0r, t0i) = (ar + cr, ai + ci);
+                let (t1r, t1i) = (ar - cr, ai - ci);
+                let (t2r, t2i) = (br + dr, bi + di);
+                // t3 = -j*(b - d): swap + negate (same trick as radix4)
+                let (t3r, t3i) = (bi - di, -(br - dr));
+                q0r[l] = t0r + t2r;
+                q0i[l] = t0i + t2i;
+                let (y1r, y1i) = cmul(t0r - t2r, t0i - t2i, w2r, w2i);
+                q1r[l] = y1r;
+                q1i[l] = y1i;
+                let (y2r, y2i) = cmul(t1r + t3r, t1i + t3i, w1r, w1i);
+                q2r[l] = y2r;
+                q2i[l] = y2i;
+                let (y3r, y3i) = cmul(t1r - t3r, t1i - t3i, w3r, w3i);
+                q3r[l] = y3r;
+                q3i[l] = y3i;
+            }
+        }
+        base += m;
+    }
+}
+
+/// Batched radix-8 DIF pass (lane-blocked analogue of [`radix8`]).
+pub fn radix8_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 8, "R8 at stage {stage} invalid for n={n}");
+    let e = m / 8;
+    debug_assert_eq!(w1.len(), e);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let mut rs: [&mut [f32]; 8] = split8(&mut re[s..s + m * lanes], e * lanes);
+        let mut is_: [&mut [f32]; 8] = split8(&mut im[s..s + m * lanes], e * lanes);
+        for j in 0..e {
+            let (w1r, w1i) = (w1.re[j], w1.im[j]);
+            let (w2r, w2i) = (w2.re[j], w2.im[j]);
+            let (w4r, w4i) = (w4.re[j], w4.im[j]);
+            let row = j * lanes;
+            for l in row..row + lanes {
+                let mut xr = [0f32; 8];
+                let mut xi = [0f32; 8];
+                for k in 0..8 {
+                    xr[k] = rs[k][l];
+                    xi[k] = is_[k][l];
+                }
+                // Stage A: pairs (k, k+4); twiddle W_m^j * W_8^k.
+                let mut yr = [0f32; 8];
+                let mut yi = [0f32; 8];
+                for k in 0..4 {
+                    yr[k] = xr[k] + xr[k + 4];
+                    yi[k] = xi[k] + xi[k + 4];
+                    let (dr, di) = (xr[k] - xr[k + 4], xi[k] - xi[k + 4]);
+                    let (pr, pi) = cmul(dr, di, w1r, w1i);
+                    let (rr, ri) = w8_rotate(pr, pi, k);
+                    yr[k + 4] = rr;
+                    yi[k + 4] = ri;
+                }
+                // Stage B: pairs (k, k+2) within halves.
+                let mut zr = [0f32; 8];
+                let mut zi = [0f32; 8];
+                for half in [0usize, 4] {
+                    for k in 0..2 {
+                        let a = half + k;
+                        let b = half + k + 2;
+                        zr[a] = yr[a] + yr[b];
+                        zi[a] = yi[a] + yi[b];
+                        let (dr, di) = (yr[a] - yr[b], yi[a] - yi[b]);
+                        let (mut pr, mut pi) = cmul(dr, di, w2r, w2i);
+                        if k == 1 {
+                            let t = pr;
+                            pr = pi;
+                            pi = -t;
+                        }
+                        zr[b] = pr;
+                        zi[b] = pi;
+                    }
+                }
+                // Stage C: adjacent pairs; twiddle W_m^{4j}.
+                for k in [0usize, 2, 4, 6] {
+                    let (ar, ai) = (zr[k], zi[k]);
+                    let (br, bi) = (zr[k + 1], zi[k + 1]);
+                    rs[k][l] = ar + br;
+                    is_[k][l] = ai + bi;
+                    let (pr, pi) = cmul(ar - br, ai - bi, w4r, w4i);
+                    rs[k + 1][l] = pr;
+                    is_[k + 1][l] = pi;
+                }
+            }
+        }
+        base += m;
+    }
+}
+
 /// Split a block of length 8·e into eight e-length mutable slices.
 #[inline(always)]
 fn split8(block: &mut [f32], e: usize) -> [&mut [f32]; 8] {
@@ -284,6 +456,54 @@ mod tests {
             let (er, ei) = cmul(xr, xi, wr, wi);
             let (gr, gi) = w8_rotate(xr, xi, k);
             assert!((er - gr).abs() < 1e-6 && (ei - gi).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    fn run_pass_b(edge: &str, buf: &mut crate::fft::BatchBuffer, stage: usize) {
+        let n = buf.n();
+        let m = n >> stage;
+        let lanes = buf.lanes();
+        let mut c = TwiddleCache::new();
+        match edge {
+            "R2" => {
+                let w1 = c.vector(m, m / 2, 1);
+                radix2_b(&mut buf.re, &mut buf.im, stage, &w1, lanes);
+            }
+            "R4" => {
+                let (w1, w2, w3) = (c.vector(m, m / 4, 1), c.vector(m, m / 4, 2), c.vector(m, m / 4, 3));
+                radix4_b(&mut buf.re, &mut buf.im, stage, &w1, &w2, &w3, lanes);
+            }
+            "R8" => {
+                let (w1, w2, w4) = (c.vector(m, m / 8, 1), c.vector(m, m / 8, 2), c.vector(m, m / 8, 4));
+                radix8_b(&mut buf.re, &mut buf.im, stage, &w1, &w2, &w4, lanes);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn batched_passes_are_bit_identical_to_scalar() {
+        let n = 256;
+        for b in [1usize, 3, 4, 7] {
+            let inputs: Vec<SplitComplex> =
+                (0..b).map(|i| SplitComplex::random(n, 100 + i as u64)).collect();
+            for edge in ["R2", "R4", "R8"] {
+                for stage in [0usize, 2] {
+                    let refs: Vec<&SplitComplex> = inputs.iter().collect();
+                    let mut buf = crate::fft::BatchBuffer::new(n, b);
+                    buf.gather(&refs);
+                    run_pass_b(edge, &mut buf, stage);
+                    for (l, input) in inputs.iter().enumerate() {
+                        let mut want = input.clone();
+                        run_pass(edge, &mut want, stage);
+                        assert_eq!(
+                            buf.scatter_lane(l),
+                            want,
+                            "{edge} stage {stage} lane {l} of batch {b}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -19,11 +19,14 @@
 //!   every baseline the paper compares against (FFTW-style DP, SPIRAL-style
 //!   beam, fixed arrangements);
 //! * [`fft`] — a native split-complex FFT substrate implementing every edge
-//!   type, used for correctness cross-checks and live measurements;
+//!   type (plus lane-blocked batched variants that run B transforms as
+//!   the SIMD lanes), used for correctness cross-checks, live
+//!   measurements, and batched serving;
 //! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt` produced
 //!   by `make artifacts` (Python never runs on the request path);
-//! * [`coordinator`] — the serving layer: plan cache, dynamic batcher,
-//!   worker pool, metrics;
+//! * [`coordinator`] — the serving layer: plan cache, dynamic batcher
+//!   with same-n grouping and jointly-batched execution, worker pool,
+//!   metrics;
 //! * [`autotune`] — online autotuning: live contextual cost sampling on
 //!   the request path, drift detection against the weights the active
 //!   plan was searched under, background re-planning, versioned hot plan

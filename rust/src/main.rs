@@ -412,14 +412,26 @@ fn cmd_selfcheck(argv: &[String]) -> Result<(), CliError> {
 fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
     let cmd = common(Command::new("wisdom", "export / replay measurement databases"))
         .opt("export", "", "harvest all cells from --cost/--machine into this file")
+        .opt("batch", "1", "harvest per-transform cells measured over batches this wide (batched kernels; meaningful with --cost native)")
         .opt("plan-from", "", "load a wisdom file and run the searches over it");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let export = args.get("export");
     let plan_from = args.get("plan-from");
     if !export.is_empty() {
+        let batch = args.get_usize("batch")?;
+        if batch < 1 {
+            return Err(CliError("--batch must be >= 1".into()));
+        }
         let mut cost = make_cost(&args)?;
-        let source = format!("{}:{}", args.get("cost"), args.get("machine"));
-        let w = spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source);
+        let mut source = format!("{}:{}", args.get("cost"), args.get("machine"));
+        if batch > 1 {
+            source.push_str(&format!(":b{batch}"));
+        }
+        let w = if batch > 1 {
+            spfft::cost::Wisdom::harvest_batched(&mut cost.as_dyn(), &source, batch)
+        } else {
+            spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source)
+        };
         w.save(std::path::Path::new(export)).map_err(|e| CliError(format!("{e}")))?;
         println!("exported {} cells (n={}, source {source}) to {export}", w.cells.len(), w.n);
     }

@@ -1,0 +1,141 @@
+//! Integration: the batched execution engine end-to-end.
+//!
+//! A mixed-n request stream submitted in bursts must be pulled as
+//! batches, split into same-n groups, executed jointly through the
+//! lane-blocked batched kernels, and every reply must be the correct
+//! transform of its own input — plus the direct-API guarantee that a
+//! batched run is bit-identical to per-request runs.
+
+use std::time::Duration;
+
+use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use spfft::cost::SimCost;
+use spfft::fft::reference::fft_ref;
+use spfft::fft::{BatchBuffer, BatchBufferPool, Executor, SplitComplex};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+
+fn planned(n: usize) -> Plan {
+    run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan
+}
+
+#[test]
+fn mixed_n_stream_is_grouped_and_answered_correctly() {
+    let sizes = [64usize, 256, 1024];
+    let svc = FftService::start(ServiceConfig {
+        plans: sizes.iter().map(|&n| (n, planned(n))).collect(),
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
+        workers: 2,
+        queue_depth: 256,
+        autotune: None,
+    })
+    .unwrap();
+
+    // Burst-submit an interleaved stream so pulled batches mix sizes.
+    let mut pending = Vec::new();
+    for i in 0..120u64 {
+        let n = sizes[(i % 3) as usize];
+        let input = SplitComplex::random(n, i);
+        pending.push((input.clone(), svc.submit(input).unwrap()));
+    }
+    for (input, rx) in pending {
+        let got = rx.recv().unwrap().unwrap();
+        let want = fft_ref(&input);
+        let rel = got.max_abs_diff(&want) / want.max_abs().max(1.0);
+        assert!(rel < 1e-4, "n={}: rel err {rel}", input.len());
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, 120);
+    assert_eq!(snap.failed, 0);
+    // Group accounting: every request belongs to exactly one group, and
+    // the log2 histogram covers all groups.
+    assert!(snap.groups >= 3, "too few groups: {}", snap.groups);
+    assert_eq!(snap.group_size_hist.iter().sum::<u64>(), snap.groups);
+    let grouped = (snap.mean_group_size * snap.groups as f64).round() as u64;
+    assert_eq!(grouped, snap.completed);
+}
+
+#[test]
+fn batched_service_replies_match_sequential_service_bitwise() {
+    // Same plan, same inputs: a service forced into joint execution
+    // (burst + one worker) and per-request execution (max_batch 1) must
+    // produce byte-identical replies — the serving-layer restatement of
+    // the run_batch bit-identity contract.
+    let n = 256;
+    let plan = planned(n);
+    let inputs: Vec<SplitComplex> = (0..24).map(|i| SplitComplex::random(n, i)).collect();
+
+    let batched = FftService::start(ServiceConfig {
+        plans: vec![(n, plan.clone())],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 24, max_wait: Duration::from_millis(5) },
+        workers: 1,
+        queue_depth: 64,
+        autotune: None,
+    })
+    .unwrap();
+    let rxs: Vec<_> = inputs.iter().map(|x| batched.submit(x.clone()).unwrap()).collect();
+    let got_batched: Vec<SplitComplex> =
+        rxs.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+    batched.shutdown();
+
+    let sequential = FftService::start(ServiceConfig {
+        plans: vec![(n, plan)],
+        backend: Backend::Native,
+        batch: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+        workers: 1,
+        queue_depth: 64,
+        autotune: None,
+    })
+    .unwrap();
+    for (input, want_eq) in inputs.iter().zip(&got_batched) {
+        let got = sequential.transform(input.clone()).unwrap();
+        assert_eq!(&got, want_eq, "batched and sequential replies diverge");
+    }
+    sequential.shutdown();
+}
+
+#[test]
+fn pooled_buffers_run_many_mixed_batches() {
+    // Direct-API smoke of the worker hot loop: one pool serving
+    // alternating shapes stays correct across reuse.
+    let mut ex = Executor::new();
+    let mut pool = BatchBufferPool::new();
+    let shapes = [(64usize, 7usize), (256, 3), (64, 16), (256, 1)];
+    for (round, &(n, b)) in shapes.iter().cycle().take(12).enumerate() {
+        let cp = ex.compile(&planned(n), n, true);
+        let inputs: Vec<SplitComplex> =
+            (0..b).map(|i| SplitComplex::random(n, (round * 100 + i) as u64)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = pool.acquire(n, b);
+        buf.gather(&refs);
+        cp.run_batch(&mut buf);
+        for (lane, input) in inputs.iter().enumerate() {
+            assert_eq!(buf.scatter_lane(lane), cp.run_on(input), "round {round} lane {lane}");
+        }
+        pool.release(buf);
+    }
+}
+
+#[test]
+fn fresh_and_pooled_buffers_agree() {
+    let n = 128;
+    let mut ex = Executor::new();
+    let cp = ex.compile(&planned(n), n, true);
+    let inputs: Vec<SplitComplex> = (0..5).map(|i| SplitComplex::random(n, i)).collect();
+    let refs: Vec<&SplitComplex> = inputs.iter().collect();
+    let mut fresh = BatchBuffer::new(n, 5);
+    fresh.gather(&refs);
+    cp.run_batch(&mut fresh);
+    let mut pool = BatchBufferPool::new();
+    // dirty the pooled allocation first
+    let mut scratch = pool.acquire(n, 8);
+    scratch.re.iter_mut().for_each(|v| *v = 123.0);
+    scratch.im.iter_mut().for_each(|v| *v = -9.0);
+    pool.release(scratch);
+    let mut pooled = pool.acquire(n, 5);
+    pooled.gather(&refs);
+    cp.run_batch(&mut pooled);
+    assert_eq!(fresh, pooled);
+}

@@ -59,10 +59,11 @@ fn pjrt_service_end_to_end() {
         return;
     }
     let dir = spfft::runtime::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts missing — run `make artifacts` for PJRT coverage");
-        return;
-    }
+    // PJRT available but no artifacts = broken setup; fail, don't skip.
+    assert!(
+        dir.join("manifest.json").exists(),
+        "PJRT is available but artifacts are missing — run `make artifacts`"
+    );
     let n = 256;
     let svc = FftService::start(ServiceConfig {
         plans: vec![(n, planned(n))],

@@ -49,6 +49,38 @@ fn prop_random_plans_compute_the_dft() {
 }
 
 #[test]
+fn prop_run_batch_is_bit_identical_to_sequential_runs() {
+    // The batched engine's contract: for any valid plan and any batch of
+    // random inputs (including B=1 and non-lane-multiple sizes), every
+    // lane of run_batch equals a lone CompiledPlan::run bit-for-bit.
+    let mut ex = Executor::new();
+    check("run-batch-bit-identical", Config { cases: 40, ..Default::default() }, |rng| {
+        let l = rng.range(3, 10);
+        let n = 1usize << l;
+        let plan = random_plan(rng, l);
+        let b = rng.range(1, 20);
+        let bitrev = rng.next_below(2) == 0;
+        let cp = ex.compile(&plan, n, bitrev);
+        let inputs: Vec<SplitComplex> =
+            (0..b).map(|_| SplitComplex::random(n, rng.next_u64())).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = spfft::fft::BatchBuffer::new(n, b);
+        buf.gather(&refs);
+        cp.run_batch(&mut buf);
+        for (lane, input) in inputs.iter().enumerate() {
+            let want = cp.run_on(input);
+            let got = buf.scatter_lane(lane);
+            prop_assert!(
+                got == want,
+                "{plan} n={n} b={b} bitrev={bitrev}: lane {lane} diverges (max diff {})",
+                got.max_abs_diff(&want)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_plan_order_of_radix_passes_is_immaterial_to_math() {
     // Different valid plans on the same input agree with each other.
     let mut ex = Executor::new();
