@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
         workers: 2,
+        coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
     })?;

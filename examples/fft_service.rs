@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         backend,
         batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_micros(200) },
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
     })?;

@@ -133,6 +133,7 @@ fn trajectory_section(quick: bool) -> Trajectory {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
         workers: 2,
+        coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
     })

@@ -27,6 +27,7 @@ fn main() {
             backend: Backend::Native,
             batch,
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 512,
             autotune: None,
         })

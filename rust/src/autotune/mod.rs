@@ -73,6 +73,13 @@ pub struct AutotuneConfig {
     /// Offline measurement prior (the weights the initial plan was
     /// searched under). Autotuning applies to FFTs of size `prior.n`.
     pub prior: Wisdom,
+    /// Offline *batched* priors: per-transform databases harvested over
+    /// batches of each listed width (`Wisdom::harvest_batched` over a
+    /// provider with a native batched path, or `bin/calibrate
+    /// --prior-out`). Installed as per-class priors in the online model,
+    /// so a re-plan at a batched regime starts from the amortized cost
+    /// surface instead of the unbatched prior. Each must share `prior.n`.
+    pub batched_priors: Vec<(usize, Wisdom)>,
     /// Sample one request in `sample_period` (1 = every request).
     pub sample_period: u64,
     /// Relative deviation |observed − reference| / reference that marks a
@@ -109,6 +116,7 @@ impl AutotuneConfig {
     pub fn new(prior: Wisdom) -> AutotuneConfig {
         AutotuneConfig {
             prior,
+            batched_priors: Vec::new(),
             sample_period: 64,
             drift_threshold: 0.25,
             drift_min_samples: 8,
@@ -130,6 +138,10 @@ impl fmt::Debug for AutotuneConfig {
         f.debug_struct("AutotuneConfig")
             .field("n", &self.prior.n)
             .field("source", &self.prior.source)
+            .field(
+                "batched_priors",
+                &self.batched_priors.iter().map(|(b, _)| *b).collect::<Vec<_>>(),
+            )
             .field("sample_period", &self.sample_period)
             .field("drift_threshold", &self.drift_threshold)
             .field("drift_min_samples", &self.drift_min_samples)

@@ -63,6 +63,11 @@ pub struct OnlineCost {
     /// for); class 0 = unbatched, the prior's own regime.
     focus: usize,
     prior: HashMap<Cell, f64>,
+    /// Per-batch-class priors (class >= 1): the amortized per-transform
+    /// surface harvested offline from a provider with a native batched
+    /// path (`SimCost`, `NativeCost`). A class without one falls back to
+    /// the unbatched prior — the pre-batched-model behavior.
+    class_priors: HashMap<(Cell, usize), f64>,
     obs: HashMap<(Cell, usize), CellEstimate>,
 }
 
@@ -82,8 +87,53 @@ impl OnlineCost {
             blend_samples,
             focus: 0,
             prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
+            class_priors: HashMap::new(),
             obs: HashMap::new(),
         }
+    }
+
+    /// Install a per-class prior: the offline per-transform estimate for
+    /// `cell` when executed in groups of the class's batch width. Until
+    /// live samples arrive at that class, planning there starts from
+    /// this amortized surface instead of the unbatched prior.
+    pub fn set_class_prior(&mut self, cell: Cell, class: usize, ns: f64) {
+        if ns.is_finite() && ns > 0.0 && class >= 1 && class < BATCH_CLASSES {
+            self.class_priors.insert((cell, class), ns);
+        }
+    }
+
+    /// Install a whole batched prior database (per-transform cells
+    /// harvested over batches of `b`, e.g. `Wisdom::harvest_batched`)
+    /// at `b`'s batch class.
+    pub fn set_batched_prior(&mut self, b: usize, prior: &Wisdom) {
+        let class = batch_class(b);
+        for &(e, s, ctx, ns) in &prior.cells {
+            self.set_class_prior((e, s, ctx), class, ns);
+        }
+    }
+
+    /// Classes (>= 1) with an installed batched prior for `cell`,
+    /// sorted — the persistence view of the class-prior surface.
+    pub fn prior_classes(&self, cell: Cell) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .class_priors
+            .keys()
+            .filter(|(c, _)| *c == cell)
+            .map(|(_, class)| *class)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The prior consulted at `class`: its own batched prior when
+    /// installed, the unbatched prior otherwise.
+    pub fn prior_at(&self, cell: Cell, class: usize) -> Option<f64> {
+        if class > 0 {
+            if let Some(&p) = self.class_priors.get(&(cell, class)) {
+                return Some(p);
+            }
+        }
+        self.prior.get(&cell).copied()
     }
 
     /// Fold one live sample into its (cell, batch class), normalized per
@@ -130,9 +180,10 @@ impl OnlineCost {
     }
 
     /// The blended per-transform estimate for `cell` at a batch class.
-    /// Cells without observations at that class answer from the prior.
+    /// Cells without observations at that class answer from the prior
+    /// (the class's own batched prior when one is installed).
     pub fn estimate_at(&self, cell: Cell, class: usize) -> f64 {
-        let prior = self.prior.get(&cell).copied();
+        let prior = self.prior_at(cell, class);
         let obs = self.obs.get(&(cell, class)).copied();
         match (prior, obs) {
             (Some(p), Some(o)) => {
@@ -330,6 +381,60 @@ mod tests {
         // whole-batch query at B=16 = 16 x the focused per-transform cost
         let whole = model.edge_ns_batched(cell.0, cell.1, cell.2, 16);
         assert!((whole - 16.0 * focused).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_priors_answer_unobserved_batched_queries() {
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 16);
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        let cell = (w.cells[0].0, w.cells[0].1, w.cells[0].2);
+        let base = model.estimate(cell);
+        // without a class prior, class 4 falls back to the unbatched prior
+        assert_eq!(model.estimate_at(cell, batch_class(16)), base);
+        model.set_batched_prior(16, &w16);
+        let amortized = w16.cells[0].3;
+        assert_eq!(model.estimate_at(cell, batch_class(16)), amortized);
+        // class 0 and other classes are untouched
+        assert_eq!(model.estimate(cell), base);
+        assert_eq!(model.estimate_at(cell, batch_class(2)), base);
+        // live samples still blend over the class prior
+        for _ in 0..100 {
+            model.observe(&sample_b(cell.0, cell.1, cell.2, 16, 16.0 * amortized * 2.0));
+        }
+        let est = model.estimate_at(cell, batch_class(16));
+        assert!(est > amortized * 1.8, "class prior ignored the samples: {est}");
+    }
+
+    #[test]
+    fn batched_priors_steer_the_search_at_a_batched_focus_class() {
+        // With the amortized B=16 surface installed as a class prior and
+        // the focus pointed at that class, the same context-aware search
+        // legitimately picks a different arrangement than the unbatched
+        // prior — with zero live samples. This is the offline half of
+        // "the planner sees the batch axis".
+        let w = Wisdom::harvest(&mut SimCost::m1(1024), "m1");
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(1024), "m1", 16);
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        model.set_batched_prior(16, &w16);
+        let p0 = run_plan(&mut model, &Strategy::DijkstraContextAware { k: 1 }).plan;
+        assert_eq!(p0, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        model.set_focus_class(batch_class(16));
+        let p16 = run_plan(&mut model, &Strategy::DijkstraContextAware { k: 1 }).plan;
+        assert_ne!(p16, p0, "batched focus class reproduced the unbatched plan");
+    }
+
+    #[test]
+    fn invalid_class_priors_are_rejected() {
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R2, 0, Context::Start);
+        let base = model.estimate(cell);
+        model.set_class_prior(cell, 0, 123.0); // class 0 is the v1 prior's own regime
+        model.set_class_prior(cell, 3, f64::NAN);
+        model.set_class_prior(cell, 3, -1.0);
+        model.set_class_prior(cell, BATCH_CLASSES, 55.0);
+        assert_eq!(model.estimate(cell), base);
+        assert_eq!(model.estimate_at(cell, 3), base);
     }
 
     #[test]

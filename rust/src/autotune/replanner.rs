@@ -100,6 +100,22 @@ impl Autotuner {
 
         let mut model =
             OnlineCost::from_wisdom(&config.prior, config.ewma_alpha, config.blend_samples);
+        // Install offline batched priors first: planning at a batched
+        // class starts from the amortized surface the batched kernels
+        // actually run ("the same cost surface", DESIGN.md §batch).
+        // Learned estimates seeded from wisdom_path below still win
+        // their blend against these priors.
+        for (b, w) in &config.batched_priors {
+            if *b < 2 {
+                // batch_class(b < 2) is class 0 — the unbatched prior's
+                // own regime — so this would vanish without a trace
+                eprintln!("autotune: ignoring batched prior with batch {b} (must be >= 2)");
+            } else if w.n == n {
+                model.set_batched_prior(*b, w);
+            } else {
+                eprintln!("autotune: ignoring batched prior (n={} vs {n})", w.n);
+            }
+        }
         if let Some(path) = &config.wisdom_path {
             if path.exists() {
                 match WisdomV2::load(path) {

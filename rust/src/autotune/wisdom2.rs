@@ -18,11 +18,16 @@
 //! with `count == 0` carry no live estimate (`obs_ns` is ignored).
 //! `batch` is the representative batch size of the observation's batch
 //! class ([`crate::autotune::model::batch_class`]); `obs_ns` is the
-//! per-transform EWMA learned at that class. Every prior cell appears
-//! exactly once with `batch == 1`; batched observations add further
-//! records for the same (edge, stage, ctx). Records without a `batch`
-//! field (files written before the batched execution engine) default to
-//! 1, and [`WisdomV2::load`] also accepts v1 files, promoting each v1
+//! per-transform EWMA learned at that class, and a batched record's
+//! `prior_ns` is the *class's own* offline prior — the amortized
+//! per-transform surface. `bin/calibrate --prior-out` writes pure
+//! batched priors this way (`count == 0`, via
+//! [`WisdomV2::from_batched_priors`]), which seed [`OnlineCost`] class
+//! priors on load. Every prior cell appears exactly once with
+//! `batch == 1`; batched priors and observations add further records
+//! for the same (edge, stage, ctx). Records without a `batch` field
+//! (files written before the batched execution engine) default to 1,
+//! and [`WisdomV2::load`] also accepts v1 files, promoting each v1
 //! cell to a prior with zero live samples — upgrades are transparent.
 
 use std::collections::BTreeMap;
@@ -64,11 +69,16 @@ pub struct WisdomV2 {
 impl WisdomV2 {
     /// Snapshot an online model (prior + per-batch-class observations)
     /// for persistence. Every prior cell yields one `batch == 1` record
-    /// (carrying the class-0 observation when present); observations at
-    /// higher batch classes add one record each.
+    /// (carrying the class-0 observation when present); each *installed
+    /// batched class prior* adds a pure-prior record (`count == 0`, even
+    /// with no traffic at that class — an operator's calibrated surface
+    /// must survive the shutdown save); each observed batched class adds
+    /// an observation record. A class with both gets both records, so
+    /// save → load is lossless.
     pub fn from_model(model: &OnlineCost, source: &str) -> WisdomV2 {
         let mut cells = Vec::new();
         for ((edge, stage, ctx), prior_ns, per_class) in model.export_cells() {
+            let cell = (edge, stage, ctx);
             let class0 = per_class.iter().find(|&&(c, _)| c == 0).map(|&(_, e)| e);
             cells.push(CellRecord {
                 edge,
@@ -79,19 +89,70 @@ impl WisdomV2 {
                 obs_ns: class0.map(|o| o.mean).unwrap_or(0.0),
                 count: class0.map(|o| o.count).unwrap_or(0),
             });
+            for class in model.prior_classes(cell) {
+                cells.push(CellRecord {
+                    edge,
+                    stage,
+                    ctx,
+                    batch: crate::autotune::model::class_batch(class),
+                    prior_ns: model.prior_at(cell, class).unwrap_or(prior_ns),
+                    obs_ns: 0.0,
+                    count: 0,
+                });
+            }
             for (class, est) in per_class.into_iter().filter(|&(c, _)| c > 0) {
                 cells.push(CellRecord {
                     edge,
                     stage,
                     ctx,
                     batch: crate::autotune::model::class_batch(class),
-                    prior_ns,
+                    // the class's own (possibly batched) prior, so the
+                    // record blends the same way after a reload
+                    prior_ns: model.prior_at(cell, class).unwrap_or(prior_ns),
                     obs_ns: est.mean,
                     count: est.count,
                 });
             }
         }
         WisdomV2 { n: model.n(), source: source.to_string(), cells }
+    }
+
+    /// Build a batched-prior database: the unbatched prior plus, for
+    /// each `(b, wisdom)` pair, one zero-count record per cell carrying
+    /// the per-transform prior harvested over batches of `b` (the
+    /// `bin/calibrate --prior-out` path over `Wisdom::harvest_batched`).
+    /// Loading such a file seeds [`OnlineCost`] *class priors*: planning
+    /// at a batched regime starts from the amortized surface instead of
+    /// the unbatched prior, with no fake live confidence attached.
+    /// Batch sizes are canonicalized to their class representative, and
+    /// every batched database must be for the same FFT size.
+    pub fn from_batched_priors(prior: &Wisdom, batched: &[(usize, Wisdom)]) -> Result<WisdomV2> {
+        let mut out = WisdomV2::from_v1(prior);
+        let mut seen_classes = std::collections::HashSet::new();
+        for (b, w) in batched {
+            if w.n != prior.n {
+                bail!("batched prior for n={} does not match base prior n={}", w.n, prior.n);
+            }
+            if *b < 2 {
+                bail!("batched prior batch must be >= 2, got {b}");
+            }
+            let batch = crate::autotune::model::class_batch(crate::autotune::model::batch_class(*b));
+            if !seen_classes.insert(batch) {
+                // e.g. b=3 and b=4 both canonicalize to class 2: the
+                // loader would install whichever came last, silently
+                bail!("batched priors for b={b} collide on batch class {batch}");
+            }
+            out.cells.extend(w.cells.iter().map(|&(edge, stage, ctx, ns)| CellRecord {
+                edge,
+                stage,
+                ctx,
+                batch,
+                prior_ns: ns,
+                obs_ns: 0.0,
+                count: 0,
+            }));
+        }
+        Ok(out)
     }
 
     /// Promote a v1 database: priors only, no live samples.
@@ -116,19 +177,25 @@ impl WisdomV2 {
     }
 
     /// Restore live estimates into a freshly-built model, each at its
-    /// record's batch class. Callers must gate on compatibility first
-    /// (same `n` *and* same cost `source` — see `Autotuner::start`),
-    /// since estimates only mean anything against the prior they were
-    /// learned over.
+    /// record's batch class, and install *pure-prior* batched records
+    /// (`count == 0`, the calibrate / shutdown-save format) as per-class
+    /// priors. Observation-carrying batched records deliberately do NOT
+    /// install their `prior_ns` as a class prior: files written before
+    /// the batched-prior format carry the class-0 prior there, and
+    /// letting them overwrite a freshly-harvested amortized surface
+    /// (installed from `AutotuneConfig::batched_priors` before seeding)
+    /// would regress planning to the unbatched prior. Callers must gate
+    /// on compatibility first (same `n` *and* same cost `source` — see
+    /// `Autotuner::start`), since estimates only mean anything against
+    /// the prior they were learned over.
     pub fn seed_model(&self, model: &mut OnlineCost) {
         for c in &self.cells {
+            let class = crate::autotune::model::batch_class(c.batch);
+            if c.batch > 1 && c.count == 0 {
+                model.set_class_prior((c.edge, c.stage, c.ctx), class, c.prior_ns);
+            }
             if c.count > 0 {
-                model.seed_at(
-                    (c.edge, c.stage, c.ctx),
-                    crate::autotune::model::batch_class(c.batch),
-                    c.obs_ns,
-                    c.count,
-                );
+                model.seed_at((c.edge, c.stage, c.ctx), class, c.obs_ns, c.count);
             }
         }
     }
@@ -302,6 +369,105 @@ mod tests {
         assert_eq!(fresh.observation((e, s, ctx)), None);
         // blended v1 ignores batched records (no batch axis in v1)
         assert_eq!(back.to_blended_v1(4.0).cells.len(), w.cells.len());
+    }
+
+    #[test]
+    fn batched_priors_roundtrip_and_seed_class_priors() {
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w4 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 4);
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 16);
+        let w2 =
+            WisdomV2::from_batched_priors(&w, &[(4, w4.clone()), (16, w16.clone())]).unwrap();
+        assert_eq!(w2.cells.len(), 3 * w.cells.len());
+        assert!(w2.cells.iter().all(|c| c.count == 0));
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back, w2);
+        // seeding installs the amortized surfaces as class priors
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        back.seed_model(&mut model);
+        assert_eq!(model.total_samples(), 0, "pure priors must carry no live confidence");
+        let (e, s, ctx, base) = w.cells[0];
+        assert_eq!(model.estimate((e, s, ctx)), base);
+        assert_eq!(
+            model.estimate_at((e, s, ctx), crate::autotune::model::batch_class(16)),
+            w16.cells[0].3
+        );
+        assert_eq!(
+            model.estimate_at((e, s, ctx), crate::autotune::model::batch_class(4)),
+            w4.cells[0].3
+        );
+        // a class without its own prior still falls back to class 0
+        assert_eq!(model.estimate_at((e, s, ctx), crate::autotune::model::batch_class(2)), base);
+    }
+
+    #[test]
+    fn shutdown_save_preserves_unobserved_class_priors() {
+        // The serve flow: calibrate-harvested class priors installed at
+        // startup, only unbatched traffic observed, model saved on
+        // shutdown. The save must carry the amortized surface as
+        // pure-prior records, and reloading must restore it — without
+        // the observation records' prior_ns clobbering anything.
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 16);
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        model.set_batched_prior(16, &w16);
+        let (e, s, ctx, ns) = w.cells[0];
+        for _ in 0..5 {
+            model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 1, ns });
+        }
+        let saved = WisdomV2::from_model(&model, "m1");
+        // one pure-prior batched record per cell, none lost
+        assert_eq!(
+            saved.cells.iter().filter(|c| c.batch == 16 && c.count == 0).count(),
+            w.cells.len()
+        );
+        let back = WisdomV2::from_json(&saved.to_json()).unwrap();
+        assert_eq!(back, saved);
+        let mut fresh = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        back.seed_model(&mut fresh);
+        let class = crate::autotune::model::batch_class(16);
+        assert_eq!(fresh.prior_at((e, s, ctx), class), Some(w16.cells[0].3));
+        assert_eq!(fresh.observation((e, s, ctx)).unwrap().count, 5);
+    }
+
+    #[test]
+    fn legacy_batched_observations_do_not_clobber_installed_class_priors() {
+        // A pre-batched-prior wisdom file stores the class-0 prior in
+        // its observation records; loading it over freshly-harvested
+        // class priors must keep the amortized surface while still
+        // seeding the observations.
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 16);
+        let (e, s, ctx, base) = w.cells[0];
+        let legacy = WisdomV2 {
+            n: 256,
+            source: "m1".into(),
+            cells: vec![CellRecord {
+                edge: e,
+                stage: s,
+                ctx,
+                batch: 16,
+                prior_ns: base, // legacy files carry the class-0 prior here
+                obs_ns: base * 0.5,
+                count: 12,
+            }],
+        };
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        model.set_batched_prior(16, &w16);
+        legacy.seed_model(&mut model);
+        let class = crate::autotune::model::batch_class(16);
+        assert_eq!(model.prior_at((e, s, ctx), class), Some(w16.cells[0].3));
+        assert_eq!(model.observation_at((e, s, ctx), class).unwrap().count, 12);
+    }
+
+    #[test]
+    fn from_batched_priors_rejects_mismatched_or_unbatched_inputs() {
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let other = Wisdom::harvest(&mut SimCost::m1(1024), "m1");
+        assert!(WisdomV2::from_batched_priors(&w, &[(4, other)]).is_err());
+        assert!(WisdomV2::from_batched_priors(&w, &[(1, w.clone())]).is_err());
+        // b=3 and b=4 canonicalize to the same batch class: ambiguous
+        assert!(WisdomV2::from_batched_priors(&w, &[(3, w.clone()), (4, w.clone())]).is_err());
     }
 
     #[test]

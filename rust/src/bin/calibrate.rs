@@ -1,16 +1,111 @@
-//! Calibration inspector: prints everything the simulator predicts for the
-//! paper's experiments so the M1/Haswell parameter sets can be tuned
-//! against the published shape (see DESIGN.md §2 and EXPERIMENTS.md).
+//! Calibration inspector + batched-prior harvester.
 //!
-//! Usage: cargo run --bin calibrate [--release]
+//! Default: prints everything the simulator predicts for the paper's
+//! experiments so the M1/Haswell parameter sets can be tuned against the
+//! published shape (see DESIGN.md §2 and EXPERIMENTS.md).
+//!
+//! With `--prior-out FILE`: harvests the full contextual database from
+//! the selected machine's `edge_ns_batched` at every `--batches` width
+//! and writes unbatched + batched wisdom-v2 priors
+//! (`WisdomV2::from_batched_priors`) — the file `spfft serve --autotune
+//! --wisdom` and `AutotuneConfig::batched_priors` consume so re-planning
+//! at a batched regime starts from the amortized cost surface. (`spfft
+//! wisdom --export --batch B` covers the one-width v1 CLI path; this is
+//! the multi-class v2 harvest.)
+//!
+//! Usage: cargo run --bin calibrate [--release] -- [--n N] [--machine M]
+//!        [--prior-out FILE [--batches 4,16,64]] [--report]
 
-use spfft::cost::{CostModel, SimCost};
+use spfft::autotune::WisdomV2;
+use spfft::cost::{CostModel, SimCost, Wisdom};
 use spfft::edge::{Context, EdgeType};
 use spfft::plan::{table3_arrangements, Plan};
 use spfft::planner::{plan, rank_all_plans, Strategy};
+use spfft::util::cli::{CliError, Command};
 use spfft::util::stats::gflops;
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("calibrate", "simulator calibration report / batched-prior harvest")
+        .opt("n", "1024", "FFT size for --prior-out harvesting")
+        .opt("machine", "m1", "simulated machine (m1|haswell)")
+        .opt("prior-out", "", "write unbatched + batched wisdom v2 priors to this file")
+        .opt("batches", "4,16,64", "comma-separated batch widths for --prior-out")
+        .flag("report", "also print the calibration report when harvesting");
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("{}", cmd.usage());
+        return;
+    }
+    let args = match cmd.parse(&argv) {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let prior_out = args.get("prior-out").to_string();
+    if !prior_out.is_empty() {
+        if let Err(e) = harvest_priors(&args, &prior_out) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+    if prior_out.is_empty() || args.flag("report") {
+        report();
+    }
+}
+
+/// Harvest `edge_ns_batched` at every requested width into batched
+/// wisdom-v2 priors.
+fn harvest_priors(args: &spfft::util::cli::Args, out: &str) -> Result<(), CliError> {
+    let n = args.get_usize("n")?;
+    if !n.is_power_of_two() || n < 2 {
+        return Err(CliError(format!("--n must be a power of two >= 2, got {n}")));
+    }
+    let machine = spfft::sim::Machine::by_name(args.get("machine"))
+        .ok_or_else(|| CliError(format!("unknown machine '{}'", args.get("machine"))))?;
+    let mut batches: Vec<usize> = Vec::new();
+    for part in args.get("batches").split(',') {
+        let b: usize = part
+            .trim()
+            .parse()
+            .map_err(|_| CliError(format!("bad --batches entry '{part}'")))?;
+        if b < 2 {
+            return Err(CliError(format!("--batches entries must be >= 2, got {b}")));
+        }
+        batches.push(b);
+    }
+    let source = format!("sim:{}", machine.name());
+    let mut cost = SimCost::new(machine, n);
+    let prior = Wisdom::harvest(&mut cost, &source);
+    let harvested: Vec<(usize, Wisdom)> = batches
+        .iter()
+        .map(|&b| (b, Wisdom::harvest_batched(&mut cost, &source, b)))
+        .collect();
+    // visibility: how much the model thinks each width amortizes
+    for (b, w) in &harvested {
+        let ratio: f64 = w
+            .cells
+            .iter()
+            .zip(&prior.cells)
+            .map(|(bc, uc)| bc.3 / uc.3)
+            .sum::<f64>()
+            / w.cells.len() as f64;
+        println!("  B={b}: mean per-transform cost {:.1}% of unbatched", 100.0 * ratio);
+    }
+    let w2 = WisdomV2::from_batched_priors(&prior, &harvested)
+        .map_err(|e| CliError(format!("{e}")))?;
+    w2.save(std::path::Path::new(out)).map_err(|e| CliError(format!("{e}")))?;
+    println!(
+        "wrote {} cells ({} unbatched + {} batched classes, n={n}, source {source}) to {out}",
+        w2.cells.len(),
+        prior.cells.len(),
+        harvested.len(),
+    );
+    Ok(())
+}
+
+fn report() {
     let n = 1024;
     let l = 10;
 

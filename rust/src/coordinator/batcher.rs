@@ -10,10 +10,20 @@
 //! behind a mutex) both call it. [`group_by_key`] then splits a pulled
 //! batch into jointly-executable groups — the service groups by FFT size
 //! so each group can run through one batched `CompiledPlan::run_batch`.
+//!
+//! [`CoalesceState`] adds the cross-batch layer on top: an under-filled
+//! same-key group can stay *open across pull windows* when the queue is
+//! deep, merging with later arrivals of the same key until it fills, its
+//! hold budget runs out, or a member approaches its latency deadline —
+//! and leftover singletons enter a second-level queue that pairs them
+//! with future same-key traffic instead of letting them bypass batching
+//! entirely. All timing decisions take the caller's `Instant`, so the
+//! whole state machine is drivable from an injected virtual clock (the
+//! deterministic coordinator harness in `tests/harness/`).
 
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -56,9 +66,47 @@ impl<T> Batcher<T> {
 /// single batching deadline loop, shared by [`Batcher`] and the service
 /// workers (which hold the receiver behind a mutex).
 pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
+    collect_batch_until(rx, policy, None)
+}
+
+/// [`collect_batch`] with an optional wake deadline for the *first* item:
+/// a worker holding coalesced groups must not block indefinitely waiting
+/// for fresh traffic while a held request's latency budget burns. When
+/// `wake` passes before anything arrives, the call returns an **empty**
+/// batch so the caller can age and flush its held state; `None` still
+/// means the channel is closed and drained.
+pub fn collect_batch_until<T>(
+    rx: &Receiver<T>,
+    policy: BatchPolicy,
+    wake: Option<Instant>,
+) -> Option<Vec<T>> {
+    let first = match wake {
+        None => rx.recv().ok()?,
+        Some(w) => {
+            let now = Instant::now();
+            if now >= w {
+                match rx.try_recv() {
+                    Ok(item) => item,
+                    Err(TryRecvError::Empty) => return Some(Vec::new()),
+                    Err(TryRecvError::Disconnected) => return None,
+                }
+            } else {
+                match rx.recv_timeout(w - now) {
+                    Ok(item) => item,
+                    Err(RecvTimeoutError::Timeout) => return Some(Vec::new()),
+                    Err(RecvTimeoutError::Disconnected) => return None,
+                }
+            }
+        }
+    };
     let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
+    let mut deadline = Instant::now() + policy.max_wait;
+    if let Some(w) = wake {
+        // The collection window must not eat the held work's reserved
+        // flush slack: a first item arriving just before the wake would
+        // otherwise extend the pull a full extra window past it.
+        deadline = deadline.min(w);
+    }
     while batch.len() < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
@@ -91,6 +139,327 @@ pub fn group_by_key<T, K: Eq + Hash + Copy>(
         }
     }
     order.into_iter().map(|k| (k, map.remove(&k).unwrap())).collect()
+}
+
+/// Cross-batch coalescing policy.
+///
+/// Holding trades latency for effective group size: an under-filled
+/// same-key group costs one more pull window of latency per hold but
+/// amortizes twiddle loads and memory round trips over more transforms
+/// when it finally runs. Three bounds keep latency SLOs intact: the
+/// per-group hold budget (`max_hold_windows`), the per-request deadline
+/// (`deadline`, checked against each member's enqueue time with one
+/// pull window of slack reserved for the flush itself), and the
+/// backlog gate (`min_backlog` — groups only *start* holding when the
+/// pull that produced them saw a deep queue; traffic that trickles in
+/// runs straight through).
+#[derive(Debug, Clone, Copy)]
+pub struct CoalescePolicy {
+    /// Pull windows an under-filled group may stay open (0 = coalescing
+    /// disabled; every group executes in its own pull).
+    pub max_hold_windows: u32,
+    /// Stop holding once a group reaches this many requests.
+    pub target_group: usize,
+    /// Only start holding when the pull carried at least this many
+    /// requests (the queue-is-deep gate). Singletons are exempt: the
+    /// second-level queue pairs them within the deadline budget
+    /// regardless of backlog.
+    pub min_backlog: usize,
+    /// Per-request end-to-end latency budget; a held request flushes
+    /// early enough to leave one pull window for execution. The bound
+    /// is exact for a single worker admitting at its wake deadlines
+    /// (the property test pins it); with a worker pool, handoff of the
+    /// shared receiver lock can delay a wake by up to ~two further pull
+    /// windows plus the sibling's execution time — size `deadline`
+    /// with that slop in mind.
+    pub deadline: Duration,
+}
+
+impl Default for CoalescePolicy {
+    /// Disabled: identical serving behavior to the pre-coalescing loop.
+    fn default() -> Self {
+        CoalescePolicy {
+            max_hold_windows: 0,
+            target_group: 4,
+            min_backlog: 4,
+            deadline: Duration::from_millis(5),
+        }
+    }
+}
+
+impl CoalescePolicy {
+    /// Enabled policy: hold up to `windows` pulls, aiming for groups of
+    /// `target`, within a per-request `deadline`.
+    pub fn hold(windows: u32, target: usize, deadline: Duration) -> CoalescePolicy {
+        CoalescePolicy {
+            max_hold_windows: windows,
+            target_group: target.max(2),
+            min_backlog: 2,
+            deadline,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_hold_windows > 0
+    }
+}
+
+/// Why a group left the coalescer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Coalescing disabled or not applicable — executed in its own pull.
+    Direct,
+    /// Reached `target_group`.
+    Filled,
+    /// A member's latency budget forced the flush.
+    Deadline,
+    /// The hold budget (`max_hold_windows`) ran out.
+    HoldExpired,
+    /// The pull saw a shallow queue; holding wasn't worth it.
+    ShallowQueue,
+    /// Service shutdown drained the state.
+    Shutdown,
+}
+
+/// A group ready to execute now, with its coalescing provenance.
+#[derive(Debug)]
+pub struct ReadyGroup<K, T> {
+    pub key: K,
+    /// Members in arrival order (held members precede later arrivals).
+    pub items: Vec<T>,
+    /// Pull windows the group stayed held (0 = ran straight through).
+    pub held_windows: u32,
+    /// Wall age of the hold at flush time (zero when not held).
+    pub held_age: Duration,
+    /// Members that joined while the group was held open.
+    pub gained: usize,
+    /// Whether this group exists because a leftover singleton was paired
+    /// with later same-key traffic by the second-level queue.
+    pub paired_singletons: bool,
+    pub reason: FlushReason,
+}
+
+struct Held<K, T> {
+    key: K,
+    items: Vec<T>,
+    /// Pull windows survived so far.
+    windows: u32,
+    /// When the group was first held.
+    since: Instant,
+    /// Members merged in after the first hold decision.
+    gained: usize,
+    /// Started life as a leftover singleton.
+    was_singleton: bool,
+}
+
+impl<K: Copy, T> Held<K, T> {
+    fn into_ready(self, now: Instant, reason: FlushReason) -> ReadyGroup<K, T> {
+        ReadyGroup {
+            key: self.key,
+            paired_singletons: self.was_singleton && self.items.len() >= 2,
+            held_windows: self.windows,
+            held_age: if self.windows > 0 {
+                now.saturating_duration_since(self.since)
+            } else {
+                Duration::ZERO
+            },
+            gained: self.gained,
+            items: self.items,
+            reason,
+        }
+    }
+}
+
+/// The cross-batch coalescing state machine (see module doc and
+/// DESIGN.md §coalesce). One per worker; **every** timing decision takes
+/// the caller's `now`, so tests drive it with a virtual clock and the
+/// service drives it with `Instant::now()`.
+pub struct CoalesceState<K: Eq + Hash + Copy, T> {
+    policy: CoalescePolicy,
+    /// Hold budget per member: `deadline` minus one pull window (the
+    /// batcher's `max_wait`), reserved as flush slack. Computed once so
+    /// every flush path shares the same due-time formula.
+    slack: Duration,
+    /// Under-filled groups of >= 2 held open across pulls.
+    held: Vec<Held<K, T>>,
+    /// Second-level queue: leftover singletons awaiting a same-key
+    /// partner. At most one entry per key (same-key singletons merge).
+    singles: Vec<Held<K, T>>,
+}
+
+impl<K: Eq + Hash + Copy, T> CoalesceState<K, T> {
+    pub fn new(policy: CoalescePolicy, window: Duration) -> CoalesceState<K, T> {
+        CoalesceState {
+            policy,
+            slack: policy.deadline.saturating_sub(window),
+            held: Vec::new(),
+            singles: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &CoalescePolicy {
+        &self.policy
+    }
+
+    /// Held under-filled groups (size >= 2).
+    pub fn held_groups(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Singletons waiting in the second-level queue.
+    pub fn held_singletons(&self) -> usize {
+        self.singles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.held.is_empty() && self.singles.is_empty()
+    }
+
+    /// Latest instant a member enqueued at `enq` may still be held:
+    /// one pull window before its deadline expires.
+    fn due(&self, enq: Instant) -> Instant {
+        enq + self.slack
+    }
+
+    /// Earliest instant by which some held member must flush — the
+    /// worker's wake deadline for its next pull. `None` when nothing is
+    /// held.
+    pub fn next_flush_due(&self, enqueued: impl Fn(&T) -> Instant) -> Option<Instant> {
+        self.held
+            .iter()
+            .chain(self.singles.iter())
+            .flat_map(|h| h.items.iter().map(&enqueued))
+            .min()
+            .map(|enq| self.due(enq))
+    }
+
+    /// Feed one pulled batch (possibly empty — a wake-deadline pull) and
+    /// get back every group that must execute now. Held groups merge
+    /// with same-key arrivals (held members first: FIFO per key is
+    /// preserved), under-filled groups are held or flushed per policy,
+    /// and everything else ages one window.
+    pub fn admit(
+        &mut self,
+        batch: Vec<T>,
+        now: Instant,
+        key: impl Fn(&T) -> K,
+        enqueued: impl Fn(&T) -> Instant,
+    ) -> Vec<ReadyGroup<K, T>> {
+        let backlog = batch.len();
+        let groups = group_by_key(batch, &key);
+        if !self.policy.enabled() {
+            return groups
+                .into_iter()
+                .map(|(k, items)| ReadyGroup {
+                    key: k,
+                    items,
+                    held_windows: 0,
+                    held_age: Duration::ZERO,
+                    gained: 0,
+                    paired_singletons: false,
+                    reason: FlushReason::Direct,
+                })
+                .collect();
+        }
+        let mut ready = Vec::new();
+        let touched: Vec<K> = groups.iter().map(|(k, _)| *k).collect();
+        // Age (and flush) overdue held work *before* executing this
+        // pull's groups: a deadline-driven flush must not queue behind
+        // fresh traffic's execution time.
+        self.age_untouched(now, &touched, &enqueued, &mut ready);
+        for (k, mut items) in groups {
+            let entry = if let Some(pos) = self.held.iter().position(|h| h.key == k) {
+                let mut h = self.held.swap_remove(pos);
+                h.gained += items.len();
+                h.items.append(&mut items);
+                h
+            } else if let Some(pos) = self.singles.iter().position(|h| h.key == k) {
+                let mut h = self.singles.swap_remove(pos);
+                h.gained += items.len();
+                h.items.append(&mut items);
+                h
+            } else {
+                Held { key: k, items, windows: 0, since: now, gained: 0, was_singleton: false }
+            };
+            self.decide(entry, now, backlog, &enqueued, &mut ready);
+        }
+        ready
+    }
+
+    /// Route one (possibly merged) entry: execute now or keep holding.
+    fn decide(
+        &mut self,
+        mut entry: Held<K, T>,
+        now: Instant,
+        backlog: usize,
+        enqueued: &impl Fn(&T) -> Instant,
+        ready: &mut Vec<ReadyGroup<K, T>>,
+    ) {
+        let size = entry.items.len();
+        let deadline_hit = entry.items.iter().any(|t| now >= self.due(enqueued(t)));
+        if size >= self.policy.target_group {
+            ready.push(entry.into_ready(now, FlushReason::Filled));
+        } else if deadline_hit {
+            ready.push(entry.into_ready(now, FlushReason::Deadline));
+        } else if entry.windows >= self.policy.max_hold_windows {
+            ready.push(entry.into_ready(now, FlushReason::HoldExpired));
+        } else if size >= 2 && backlog < self.policy.min_backlog && entry.windows == 0 {
+            // Queue too shallow to justify opening a hold. (Singletons
+            // are exempt: pairing them is the second-level queue's job.)
+            ready.push(entry.into_ready(now, FlushReason::ShallowQueue));
+        } else {
+            entry.windows += 1;
+            if size == 1 {
+                entry.was_singleton = true;
+                self.singles.push(entry);
+            } else {
+                self.held.push(entry);
+            }
+        }
+    }
+
+    fn age_untouched(
+        &mut self,
+        now: Instant,
+        touched: &[K],
+        enqueued: &impl Fn(&T) -> Instant,
+        ready: &mut Vec<ReadyGroup<K, T>>,
+    ) {
+        // `due()` inlined via the shared `slack` (calling the method in
+        // the closure would borrow all of self against the live list).
+        let slack = self.slack;
+        let max_hold = self.policy.max_hold_windows;
+        for list in [&mut self.held, &mut self.singles] {
+            let mut i = 0;
+            while i < list.len() {
+                if touched.contains(&list[i].key) {
+                    i += 1;
+                    continue;
+                }
+                list[i].windows += 1;
+                let deadline_hit =
+                    list[i].items.iter().any(|t| now >= enqueued(t) + slack);
+                if deadline_hit {
+                    let h = list.swap_remove(i);
+                    ready.push(h.into_ready(now, FlushReason::Deadline));
+                } else if list[i].windows > max_hold {
+                    let h = list.swap_remove(i);
+                    ready.push(h.into_ready(now, FlushReason::HoldExpired));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Flush everything (service shutdown / channel drained).
+    pub fn flush_all(&mut self, now: Instant) -> Vec<ReadyGroup<K, T>> {
+        self.held
+            .drain(..)
+            .chain(self.singles.drain(..))
+            .map(|h| h.into_ready(now, FlushReason::Shutdown))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +533,184 @@ mod tests {
         let groups = group_by_key(vec![1, 2, 3], |_| 256usize);
         assert_eq!(groups.len(), 1);
         assert_eq!(groups[0].1, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn collect_batch_until_wakes_empty_on_deadline() {
+        let (tx, rx) = channel::<u32>();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(10) };
+        // wake already passed, nothing queued: empty batch, not a hang
+        let past = Instant::now();
+        assert_eq!(collect_batch_until(&rx, policy, Some(past)).unwrap(), Vec::<u32>::new());
+        // an item beats the wake deadline
+        tx.send(7).unwrap();
+        let soon = Instant::now() + Duration::from_millis(50);
+        assert_eq!(collect_batch_until(&rx, policy, Some(soon)).unwrap(), vec![7]);
+        // disconnect still reads as end-of-service
+        drop(tx);
+        assert!(collect_batch_until(&rx, policy, Some(Instant::now())).is_none());
+        let (tx2, rx2) = channel::<u32>();
+        drop(tx2);
+        assert!(collect_batch_until(&rx2, policy, Some(Instant::now() + Duration::from_millis(5))).is_none());
+    }
+
+    #[test]
+    fn collect_batch_until_caps_the_window_at_wake() {
+        // An item arriving before the wake must not extend the
+        // collection window past it — that window is the held work's
+        // reserved flush slack.
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(5) };
+        let wake = Instant::now() + Duration::from_millis(5);
+        let t0 = Instant::now();
+        let batch = collect_batch_until(&rx, policy, Some(wake)).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "window not capped at wake");
+        drop(tx);
+    }
+
+    // --- CoalesceState: driven entirely by fabricated instants (a base
+    // Instant plus virtual offsets) — no sleeps, no wall-clock flakes.
+
+    /// (key, seq, enqueued) test item.
+    type Item = (usize, usize, Instant);
+
+    fn coalescer(
+        windows: u32,
+        target: usize,
+        deadline_ms: u64,
+    ) -> CoalesceState<usize, Item> {
+        CoalesceState::new(
+            CoalescePolicy { min_backlog: 2, ..CoalescePolicy::hold(windows, target, Duration::from_millis(deadline_ms)) },
+            Duration::from_micros(200),
+        )
+    }
+
+    fn admit(
+        c: &mut CoalesceState<usize, Item>,
+        batch: Vec<Item>,
+        now: Instant,
+    ) -> Vec<ReadyGroup<usize, Item>> {
+        c.admit(batch, now, |i| i.0, |i| i.2)
+    }
+
+    #[test]
+    fn disabled_policy_passes_groups_straight_through() {
+        let base = Instant::now();
+        let mut c: CoalesceState<usize, Item> =
+            CoalesceState::new(CoalescePolicy::default(), Duration::from_micros(200));
+        let batch = vec![(64, 0, base), (256, 1, base), (64, 2, base)];
+        let ready = admit(&mut c, batch, base);
+        assert_eq!(ready.len(), 2);
+        assert!(ready.iter().all(|g| g.reason == FlushReason::Direct && g.held_windows == 0));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn underfilled_group_is_held_then_filled_by_later_arrivals() {
+        let base = Instant::now();
+        let mut c = coalescer(3, 4, 50);
+        // deep pull (backlog 2) with an under-filled pair: held open
+        let ready = admit(&mut c, vec![(64, 0, base), (64, 1, base)], base);
+        assert!(ready.is_empty());
+        assert_eq!(c.held_groups(), 1);
+        // next pull brings two more of the same key: group fills
+        let t1 = base + Duration::from_micros(300);
+        let ready = admit(&mut c, vec![(64, 2, t1), (64, 3, t1)], t1);
+        assert_eq!(ready.len(), 1);
+        let g = &ready[0];
+        assert_eq!(g.reason, FlushReason::Filled);
+        assert_eq!(g.held_windows, 1);
+        assert_eq!(g.gained, 2);
+        assert!(g.held_age >= Duration::from_micros(300));
+        // FIFO: held members precede the new arrivals
+        let seqs: Vec<usize> = g.items.iter().map(|i| i.1).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn hold_budget_bounds_the_wait() {
+        let base = Instant::now();
+        let mut c = coalescer(2, 8, 50);
+        assert!(admit(&mut c, vec![(64, 0, base), (64, 1, base)], base).is_empty());
+        // two empty pulls age the group past its budget
+        let t1 = base + Duration::from_micros(300);
+        assert!(admit(&mut c, vec![], t1).is_empty());
+        let t2 = base + Duration::from_micros(600);
+        let ready = admit(&mut c, vec![], t2);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].reason, FlushReason::HoldExpired);
+        assert_eq!(ready[0].items.len(), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_before_budget_exhaustion() {
+        let base = Instant::now();
+        let mut c = coalescer(100, 8, 1); // 1 ms deadline, huge hold budget
+        assert!(admit(&mut c, vec![(64, 0, base), (64, 1, base)], base).is_empty());
+        let due = c.next_flush_due(|i| i.2).expect("held work has a due time");
+        // due = enqueue + deadline - window
+        assert_eq!(due, base + Duration::from_millis(1) - Duration::from_micros(200));
+        let ready = admit(&mut c, vec![], due);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].reason, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn shallow_queue_does_not_open_a_hold() {
+        let base = Instant::now();
+        let c = coalescer(3, 4, 50);
+        // with min_backlog raised to 3, a 2-deep pull is too shallow to
+        // open a hold for its under-filled pair
+        let mut c3: CoalesceState<usize, Item> = CoalesceState::new(
+            CoalescePolicy { min_backlog: 3, ..*c.policy() },
+            Duration::from_micros(200),
+        );
+        let ready = admit(&mut c3, vec![(64, 0, base), (64, 1, base)], base);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].reason, FlushReason::ShallowQueue);
+        assert!(c3.is_empty());
+    }
+
+    #[test]
+    fn singletons_pair_across_pulls() {
+        let base = Instant::now();
+        let mut c = coalescer(3, 4, 50);
+        // a lone request waits in the second-level queue even though the
+        // pull was shallow
+        assert!(admit(&mut c, vec![(64, 0, base)], base).is_empty());
+        assert_eq!(c.held_singletons(), 1);
+        // a later lone request of the same key pairs with it; still
+        // under target, so the pair keeps its remaining hold budget
+        let t1 = base + Duration::from_micros(300);
+        assert!(admit(&mut c, vec![(64, 1, t1)], t1).is_empty());
+        assert_eq!(c.held_singletons(), 0);
+        assert_eq!(c.held_groups(), 1);
+        // budget exhaustion flushes the pair as one batched group
+        let t2 = base + Duration::from_micros(600);
+        let t3 = base + Duration::from_micros(900);
+        let mut ready = admit(&mut c, vec![], t2);
+        ready.extend(admit(&mut c, vec![], t3));
+        assert_eq!(ready.len(), 1);
+        let g = &ready[0];
+        assert!(g.paired_singletons);
+        assert_eq!(g.items.iter().map(|i| i.1).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let base = Instant::now();
+        let mut c = coalescer(5, 8, 50);
+        admit(&mut c, vec![(64, 0, base), (64, 1, base), (256, 2, base)], base);
+        assert_eq!(c.held_groups() + c.held_singletons(), 2);
+        let ready = c.flush_all(base + Duration::from_micros(100));
+        assert_eq!(ready.len(), 2);
+        assert!(ready.iter().all(|g| g.reason == FlushReason::Shutdown));
+        assert!(c.is_empty());
     }
 
     #[test]

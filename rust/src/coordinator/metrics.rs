@@ -34,6 +34,18 @@ pub struct Metrics {
     groups: AtomicU64,
     grouped_requests: AtomicU64,
     group_buckets: [AtomicU64; GROUP_BUCKETS],
+    /// Held (coalesced) groups flushed — groups that stayed open across
+    /// at least one pull window before executing.
+    coalesced_flushes: AtomicU64,
+    /// Held groups that gained at least one member while open (the
+    /// coalescer's hit rate numerator).
+    coalesce_hits: AtomicU64,
+    /// Held groups formed by pairing a leftover singleton with later
+    /// same-key traffic (second-level queue successes).
+    singleton_pairings: AtomicU64,
+    /// Summed / maximum wall age of held groups at flush (ns).
+    held_age_ns_total: AtomicU64,
+    held_age_ns_max: AtomicU64,
     busy_ns: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     /// Exact maximum latency seen (ns) — the histogram alone cannot
@@ -61,6 +73,18 @@ pub struct MetricsSnapshot {
     /// ([`crate::autotune::batch_class`]: ceil-log2; bucket 0 = size 1,
     /// bucket 2 = sizes 3..=4, last bucket saturates).
     pub group_size_hist: [u64; GROUP_BUCKETS],
+    /// Groups that were held open across pull windows before executing.
+    pub coalesced_flushes: u64,
+    /// Held groups that gained members while open.
+    pub coalesce_hits: u64,
+    /// `coalesce_hits / coalesced_flushes` (0 when nothing was held) —
+    /// how often holding a group actually bought a bigger batch.
+    pub coalesce_hit_rate: f64,
+    /// Leftover singletons successfully paired by the second-level queue.
+    pub singleton_pairings: u64,
+    /// Mean / maximum wall age of held groups at flush.
+    pub mean_held_age: Duration,
+    pub max_held_age: Duration,
     /// Total worker busy time.
     pub busy: Duration,
     pub latency_p50: Duration,
@@ -96,6 +120,13 @@ impl Metrics {
     pub fn on_batch(&self, size: usize, busy: Duration) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.on_busy(busy);
+    }
+
+    /// Record worker execution time that is not attached to a pulled
+    /// batch — e.g. coalesced groups flushed on an empty wake-deadline
+    /// pull (counting those as batches would skew `mean_batch_size`).
+    pub fn on_busy(&self, busy: Duration) {
         self.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
     }
 
@@ -110,6 +141,22 @@ impl Metrics {
         self.grouped_requests.fetch_add(size as u64, Ordering::Relaxed);
         let bucket = crate::autotune::batch_class(size);
         self.group_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the flush of a group that was held open across pull
+    /// windows: its wall age at flush, whether holding gained members,
+    /// and whether it exists because a leftover singleton was paired.
+    pub fn on_coalesce_flush(&self, held_age: Duration, gained: bool, paired_singleton: bool) {
+        self.coalesced_flushes.fetch_add(1, Ordering::Relaxed);
+        if gained {
+            self.coalesce_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if paired_singleton {
+            self.singleton_pairings.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = held_age.as_nanos().min(u64::MAX as u128) as u64;
+        self.held_age_ns_total.fetch_add(ns, Ordering::Relaxed);
+        self.held_age_ns_max.fetch_max(ns, Ordering::Relaxed);
     }
 
     fn percentile(&self, counts: &[u64; BUCKETS], total: u64, max_ns: u64, p: f64) -> Duration {
@@ -153,6 +200,9 @@ impl Metrics {
         for (slot, b) in group_size_hist.iter_mut().zip(&self.group_buckets) {
             *slot = b.load(Ordering::Relaxed);
         }
+        let coalesced_flushes = self.coalesced_flushes.load(Ordering::Relaxed);
+        let coalesce_hits = self.coalesce_hits.load(Ordering::Relaxed);
+        let held_total_ns = self.held_age_ns_total.load(Ordering::Relaxed);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -162,6 +212,20 @@ impl Metrics {
             groups,
             mean_group_size: if groups == 0 { 0.0 } else { greq as f64 / groups as f64 },
             group_size_hist,
+            coalesced_flushes,
+            coalesce_hits,
+            coalesce_hit_rate: if coalesced_flushes == 0 {
+                0.0
+            } else {
+                coalesce_hits as f64 / coalesced_flushes as f64
+            },
+            singleton_pairings: self.singleton_pairings.load(Ordering::Relaxed),
+            mean_held_age: if coalesced_flushes == 0 {
+                Duration::ZERO
+            } else {
+                Duration::from_nanos(held_total_ns / coalesced_flushes)
+            },
+            max_held_age: Duration::from_nanos(self.held_age_ns_max.load(Ordering::Relaxed)),
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
             latency_p50: self.percentile(&counts, total, max_ns, 0.50),
             latency_p95: self.percentile(&counts, total, max_ns, 0.95),
@@ -225,6 +289,25 @@ mod tests {
             assert_eq!(count, want, "bucket {bucket}");
         }
         assert!((s.mean_group_size - (1.0 + 2.0 + 3.0 + 16.0 + 1000.0) / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coalesce_counters_and_hit_rate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.coalesced_flushes, 0);
+        assert_eq!(s.coalesce_hit_rate, 0.0);
+        assert_eq!(s.mean_held_age, Duration::ZERO);
+        m.on_coalesce_flush(Duration::from_micros(400), true, false);
+        m.on_coalesce_flush(Duration::from_micros(200), false, false);
+        m.on_coalesce_flush(Duration::from_micros(600), true, true);
+        let s = m.snapshot();
+        assert_eq!(s.coalesced_flushes, 3);
+        assert_eq!(s.coalesce_hits, 2);
+        assert!((s.coalesce_hit_rate - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.singleton_pairings, 1);
+        assert_eq!(s.mean_held_age, Duration::from_micros(400));
+        assert_eq!(s.max_held_age, Duration::from_micros(600));
     }
 
     #[test]

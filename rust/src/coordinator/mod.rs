@@ -18,7 +18,10 @@
 //!   grouping: workers split each pulled batch into same-n groups and
 //!   execute every group jointly through the lane-blocked batched
 //!   kernels (`crate::fft::batch`), amortizing per-pass twiddle loads
-//!   and memory round trips across the group;
+//!   and memory round trips across the group — and, when a
+//!   [`CoalescePolicy`] enables it, hold under-filled groups open
+//!   *across* pulls and pair leftover singletons (deadline-bounded
+//!   cross-batch coalescing, DESIGN.md §coalesce);
 //! * [`service`] — the request loop, worker pool, and typed handles;
 //!   wires in [`crate::autotune`] when `ServiceConfig::autotune` is set.
 
@@ -27,7 +30,10 @@ pub mod metrics;
 pub mod plancache;
 pub mod service;
 
-pub use batcher::{collect_batch, group_by_key, BatchPolicy, Batcher};
+pub use batcher::{
+    collect_batch, collect_batch_until, group_by_key, BatchPolicy, Batcher, CoalescePolicy,
+    CoalesceState, FlushReason, ReadyGroup,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plancache::PlanCache;
 pub use service::{Backend, FftService, ServiceConfig};

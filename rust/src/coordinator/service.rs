@@ -9,8 +9,12 @@
 //! [`crate::fft::CompiledPlan::run_batch`] — every plan step loads its
 //! twiddles once for the whole group instead of once per request —
 //! then scatters per-request replies. Singleton groups take the scalar
-//! path (lane padding would waste arithmetic). Latency/throughput and
-//! effective-group-size metrics stream to a shared [`Metrics`].
+//! path (lane padding would waste arithmetic). With coalescing enabled
+//! (`ServiceConfig::coalesce`), under-filled groups stay open across
+//! pulls and leftover singletons pair across pulls — each worker runs a
+//! [`CoalesceState`] and caps its pull wait at the held work's earliest
+//! deadline. Latency/throughput, effective-group-size, and coalescing
+//! metrics stream to a shared [`Metrics`].
 //!
 //! Backends:
 //! * [`Backend::Native`] — the in-crate kernels (`fft::exec`), fastest on
@@ -37,7 +41,7 @@ use crate::autotune::{trace_batch, trace_request, Autotuner, AutotuneConfig, Aut
 use crate::fft::{BatchBufferPool, Executor, SplitComplex};
 use crate::plan::Plan;
 
-use super::batcher::{collect_batch, group_by_key, BatchPolicy};
+use super::batcher::{collect_batch_until, BatchPolicy, CoalescePolicy, CoalesceState, ReadyGroup};
 use super::metrics::Metrics;
 
 /// Execution backend for the workers.
@@ -57,6 +61,12 @@ pub struct ServiceConfig {
     pub plans: Vec<(usize, Plan)>,
     pub backend: Backend,
     pub batch: BatchPolicy,
+    /// Cross-batch group coalescing: hold under-filled same-n groups
+    /// open across pull windows (and pair leftover singletons) when the
+    /// queue is deep. The default policy is disabled — identical
+    /// serving behavior to per-pull grouping. Per worker: each worker
+    /// coalesces the traffic it pulls.
+    pub coalesce: CoalescePolicy,
     /// Worker threads (keep 1 for the PJRT backend on 1-core hosts).
     pub workers: usize,
     /// Bounded queue depth; submits beyond it fail fast (backpressure).
@@ -312,6 +322,20 @@ impl WorkerBackend {
     }
 }
 
+/// Execute one ready (possibly coalesced) group and record its metrics.
+fn run_group(
+    backend: &mut WorkerBackend,
+    group: ReadyGroup<usize, Request>,
+    tuner: Option<&Autotuner>,
+    metrics: &Metrics,
+) {
+    metrics.on_group(group.items.len());
+    if group.held_windows > 0 {
+        metrics.on_coalesce_flush(group.held_age, group.gained > 0, group.paired_singletons);
+    }
+    backend.execute_group(group.key, group.items, tuner, metrics);
+}
+
 fn worker_loop(
     _id: usize,
     rx: Arc<std::sync::Mutex<Receiver<Request>>>,
@@ -338,14 +362,38 @@ fn worker_loop(
             }
         },
     };
+    let mut coalesce: CoalesceState<usize, Request> =
+        CoalesceState::new(config.coalesce, config.batch.max_wait);
     loop {
         // Take the receiver lock only to pull one batch (the batching
-        // deadline loop itself is shared with the owning Batcher).
+        // deadline loop itself is shared with the owning Batcher). When
+        // coalesced groups are held, cap the wait at their earliest due
+        // time so no held request outlives its deadline budget — and
+        // with coalescing enabled at all, never block unboundedly even
+        // when *this* worker holds nothing: a sibling worker's held
+        // groups need the shared receiver lock to cycle within a window,
+        // or its deadline flushes would starve behind our blocking recv.
+        // (Deliberate cost: an idle coalescing-enabled service wakes
+        // each worker once per max_wait. A "block when no worker holds
+        // anything" shared counter cannot fix that safely — a sibling
+        // can start holding after we read zero and commit to an
+        // unbounded recv with the lock, recreating the starvation.)
+        let wake = coalesce
+            .next_flush_due(|r: &Request| r.enqueued)
+            .or_else(|| {
+                config.coalesce.enabled().then(|| Instant::now() + config.batch.max_wait)
+            });
         let batch = {
             let guard = rx.lock().unwrap();
-            collect_batch(&*guard, config.batch)
+            collect_batch_until(&*guard, config.batch, wake)
         };
-        let Some(batch) = batch else { return };
+        let Some(batch) = batch else {
+            // Channel closed and drained: flush held work, then exit.
+            for group in coalesce.flush_all(Instant::now()) {
+                run_group(&mut backend, group, tuner.as_deref(), &metrics);
+            }
+            return;
+        };
         // Pick up hot-swapped plans between batches: everything in the
         // batch we just pulled executes under one plan version.
         if let Some(t) = &tuner {
@@ -353,12 +401,21 @@ fn worker_loop(
         }
         let t0 = Instant::now();
         let size = batch.len();
-        // Same-n requests execute jointly; group order preserves arrival.
-        for (n, group) in group_by_key(batch, |r: &Request| r.n) {
-            metrics.on_group(group.len());
-            backend.execute_group(n, group, tuner.as_deref(), &metrics);
+        // Same-n requests execute jointly; group order preserves arrival,
+        // and under-filled groups may coalesce across pulls (an empty
+        // wake-deadline pull just ages and flushes the held state).
+        let ready = coalesce.admit(batch, Instant::now(), |r| r.n, |r| r.enqueued);
+        let did_work = !ready.is_empty();
+        for group in ready {
+            run_group(&mut backend, group, tuner.as_deref(), &metrics);
         }
-        metrics.on_batch(size, t0.elapsed());
+        if size > 0 {
+            metrics.on_batch(size, t0.elapsed());
+        } else if did_work {
+            // deadline/budget flushes on an empty wake pull still cost
+            // execution time — busy accounting must see them
+            metrics.on_busy(t0.elapsed());
+        }
     }
 }
 
@@ -372,6 +429,7 @@ mod tests {
             plans: vec![(n, Plan::parse(plan).unwrap())],
             backend: Backend::Native,
             batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(100) },
+            coalesce: Default::default(),
             workers,
             queue_depth: 64,
             autotune: None,
@@ -404,6 +462,7 @@ mod tests {
             backend: Backend::Native,
             batch: BatchPolicy::default(),
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 4,
             autotune: None,
         });
@@ -418,6 +477,7 @@ mod tests {
             backend: Backend::Native,
             batch: BatchPolicy::default(),
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
         });
@@ -432,6 +492,7 @@ mod tests {
             backend: Backend::Pjrt { artifacts_dir: "artifacts".into() },
             batch: BatchPolicy::default(),
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
         });
@@ -449,6 +510,7 @@ mod tests {
             backend: Backend::Native,
             batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(50) },
             workers: 2,
+            coalesce: Default::default(),
             queue_depth: 64,
             autotune: Some(at),
         })
@@ -506,6 +568,7 @@ mod tests {
             backend: Backend::Native,
             batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(2) },
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 128,
             autotune: None,
         })
@@ -533,6 +596,38 @@ mod tests {
     }
 
     #[test]
+    fn coalescing_service_merges_underfilled_groups_and_stays_correct() {
+        // One worker, pulls capped at 2, coalescing toward groups of 4
+        // with a generous deadline: under-filled pulls must be held and
+        // merged rather than executed alone, and every reply must still
+        // be the right transform. (Exact hold/flush timing is covered by
+        // the deterministic harness; this exercises the live wiring.)
+        let n = 256;
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(n, Plan::parse("R4,R4,R2,F8").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 2, max_wait: std::time::Duration::from_millis(5) },
+            coalesce: CoalescePolicy::hold(8, 4, std::time::Duration::from_millis(100)),
+            workers: 1,
+            queue_depth: 64,
+            autotune: None,
+        })
+        .unwrap();
+        let inputs: Vec<SplitComplex> = (0..8).map(|i| SplitComplex::random(n, i)).collect();
+        let rxs: Vec<_> = inputs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (input, rx) in inputs.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = fft_ref(input);
+            assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 8);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.coalesced_flushes >= 1, "nothing was ever held: {snap:?}");
+        assert!(snap.max_held_age > std::time::Duration::ZERO);
+    }
+
+    #[test]
     fn backpressure_fails_fast() {
         // queue_depth 1 and a worker stalled behind a batch window: the
         // third-plus submits must see "queue full" rather than blocking.
@@ -541,6 +636,7 @@ mod tests {
             backend: Backend::Native,
             batch: BatchPolicy { max_batch: 1, max_wait: std::time::Duration::ZERO },
             workers: 1,
+            coalesce: Default::default(),
             queue_depth: 1,
             autotune: None,
         })

@@ -40,6 +40,8 @@ pub trait CostModel {
     /// `b` transforms together (the lane-blocked batched kernels). The
     /// default assumes no amortization — `b` independent executions —
     /// which providers with a real batched path override:
+    /// [`SimCost`] models the lane-blocked kernels analytically
+    /// (twiddle amortization, no SIMD collapse, cache-bound thrash),
     /// [`NativeCost`] measures the batched kernels directly, and the
     /// autotuner's online model learns per-batch-class estimates from
     /// live traffic.
@@ -120,17 +122,74 @@ impl CostModel for SimCost {
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
         self.machine.edge_ns(self.n, edge, stage, ctx)
     }
+
+    /// Native batched model (see [`crate::sim::Machine::edge_ns_batched`]):
+    /// twiddle amortization, no SIMD collapse, panel-scaled affinity, and
+    /// a cache-capacity thrash bound — not linear extrapolation. Offline
+    /// planning over this surface (via [`BatchedCost`] or
+    /// [`Wisdom::harvest_batched`]) sees the batch axis the batched
+    /// kernels actually execute.
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        self.machine.edge_ns_batched(self.n, edge, stage, ctx, b)
+    }
+}
+
+/// Fixed-batch per-transform view of another cost model: `edge_ns`
+/// answers `edge_ns_batched(·, B) / B`, so any unmodified planner
+/// searching this model optimizes the arrangement for a service whose
+/// same-n groups are `B` wide. `B = 1` is a transparent passthrough.
+pub struct BatchedCost<C: CostModel> {
+    inner: C,
+    b: usize,
+}
+
+impl<C: CostModel> BatchedCost<C> {
+    pub fn new(inner: C, b: usize) -> BatchedCost<C> {
+        assert!(b >= 1, "batch must be >= 1");
+        BatchedCost { inner, b }
+    }
+
+    /// The batch width planning queries are answered for.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+}
+
+impl<C: CostModel> CostModel for BatchedCost<C> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.inner.available_edges()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        self.inner.edge_ns_batched(edge, stage, ctx, self.b) / self.b as f64
+    }
+
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        self.inner.edge_ns_batched(edge, stage, ctx, b)
+    }
 }
 
 /// Memoizing wrapper: caches cells, counts distinct measurements.
+/// Batched queries forward to the inner model (memoized separately, not
+/// counted in [`MemoCost::measurements`], which tracks the paper's §2.5
+/// unbatched measurement budget).
 pub struct MemoCost<C: CostModel> {
     inner: C,
     cache: HashMap<(EdgeType, usize, Context), f64>,
+    cache_b: HashMap<(EdgeType, usize, Context, usize), f64>,
 }
 
 impl<C: CostModel> MemoCost<C> {
     pub fn new(inner: C) -> Self {
-        MemoCost { inner, cache: HashMap::new() }
+        MemoCost { inner, cache: HashMap::new(), cache_b: HashMap::new() }
     }
 
     /// Number of distinct (edge, stage, context) cells measured so far.
@@ -158,6 +217,15 @@ impl<C: CostModel> CostModel for MemoCost<C> {
         }
         let v = self.inner.edge_ns(edge, stage, ctx);
         self.cache.insert((edge, stage, ctx), v);
+        v
+    }
+
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        if let Some(&v) = self.cache_b.get(&(edge, stage, ctx, b)) {
+            return v;
+        }
+        let v = self.inner.edge_ns_batched(edge, stage, ctx, b);
+        self.cache_b.insert((edge, stage, ctx, b), v);
         v
     }
 }
@@ -225,9 +293,45 @@ mod tests {
 
     #[test]
     fn default_batched_cost_is_linear_in_b() {
-        let mut c = SimCost::m1(1024);
+        // Providers without a real batched path (replayed v1 wisdom
+        // tables) extrapolate linearly — the pre-batched-model behavior.
+        let mut c = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
         let one = c.edge_ns(EdgeType::R4, 0, Start);
         assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 1), one);
         assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 16), 16.0 * one);
+    }
+
+    #[test]
+    fn sim_batched_cost_is_native_not_linear() {
+        let mut c = SimCost::m1(1024);
+        let one = c.edge_ns(EdgeType::R4, 0, Start);
+        assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 1), one);
+        let direct = crate::sim::Machine::m1().edge_ns_batched(1024, EdgeType::R4, 0, Start, 16);
+        assert_eq!(c.edge_ns_batched(EdgeType::R4, 0, Start, 16), direct);
+        assert!(c.edge_ns_batched(EdgeType::R4, 0, Start, 16) < 16.0 * one);
+    }
+
+    #[test]
+    fn batched_cost_adapter_exposes_the_per_transform_surface() {
+        let mut plain = SimCost::m1(1024);
+        let mut bc = BatchedCost::new(SimCost::m1(1024), 16);
+        assert_eq!(bc.n(), 1024);
+        assert_eq!(bc.batch(), 16);
+        let whole = plain.edge_ns_batched(EdgeType::R2, 9, Context::After(EdgeType::R4), 16);
+        let per_tx = bc.edge_ns(EdgeType::R2, 9, Context::After(EdgeType::R4));
+        assert!((per_tx - whole / 16.0).abs() < 1e-12);
+        // B = 1 is a transparent passthrough
+        let mut b1 = BatchedCost::new(SimCost::m1(1024), 1);
+        assert_eq!(b1.edge_ns(EdgeType::R4, 0, Start), plain.edge_ns(EdgeType::R4, 0, Start));
+    }
+
+    #[test]
+    fn memo_forwards_batched_queries_to_the_inner_model() {
+        let mut m = MemoCost::new(SimCost::m1(1024));
+        let direct = crate::sim::Machine::m1().edge_ns_batched(1024, EdgeType::R2, 9, Start, 16);
+        assert_eq!(m.edge_ns_batched(EdgeType::R2, 9, Start, 16), direct);
+        assert_eq!(m.edge_ns_batched(EdgeType::R2, 9, Start, 16), direct);
+        // batched queries do not count against the unbatched budget
+        assert_eq!(m.measurements(), 0);
     }
 }

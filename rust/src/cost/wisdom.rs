@@ -193,15 +193,36 @@ mod tests {
 
     #[test]
     fn harvest_batched_over_linear_provider_matches_unbatched() {
-        // SimCost uses the default (no-amortization) batched cost, so
-        // per-transform cells are identical at any batch size.
+        // A replayed v1 table has no batched path (default linear
+        // extrapolation), so per-transform cells are identical at any
+        // batch size.
         let w1 = Wisdom::harvest(&mut SimCost::m1(256), "m1");
-        let w4 = Wisdom::harvest_batched(&mut SimCost::m1(256), "m1", 4);
+        let mut table = w1.to_cost();
+        let w4 = Wisdom::harvest_batched(&mut table, "m1", 4);
         assert_eq!(w1.cells.len(), w4.cells.len());
         for (a, b) in w1.cells.iter().zip(&w4.cells) {
             assert_eq!((a.0, a.1, a.2), (b.0, b.1, b.2));
             assert!((a.3 - b.3).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn harvest_batched_over_sim_reflects_amortization() {
+        // SimCost models the batched kernels natively: within the
+        // amortization bound every per-transform cell is at most its
+        // unbatched value, and twiddle-bound cells are strictly below.
+        let w1 = Wisdom::harvest(&mut SimCost::m1(1024), "m1");
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(1024), "m1", 16);
+        assert_eq!(w1.cells.len(), w16.cells.len());
+        let mut strictly_below = 0;
+        for (a, b) in w1.cells.iter().zip(&w16.cells) {
+            assert_eq!((a.0, a.1, a.2), (b.0, b.1, b.2));
+            assert!(b.3 <= a.3 * (1.0 + 1e-12), "{}@{} {}: {} > {}", a.0, a.1, a.2, b.3, a.3);
+            if b.3 < a.3 * 0.99 {
+                strictly_below += 1;
+            }
+        }
+        assert!(strictly_below > 50, "only {strictly_below} cells amortized");
     }
 
     #[test]

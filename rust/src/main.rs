@@ -282,6 +282,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
         .opt("batch", "16", "max batch size")
         .opt("workers", "1", "worker threads")
+        .opt("coalesce", "0", "hold under-filled same-n groups across up to this many pull windows (0 = off)")
+        .opt("coalesce-deadline-us", "5000", "per-request latency budget while coalescing, in microseconds")
         .flag("autotune", "online autotuning (prior harvested from --cost/--machine)")
         .opt("wisdom", "", "wisdom v2 file for --autotune persistence across runs");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
@@ -303,6 +305,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         let source = format!("{}:{}", args.get("cost"), args.get("machine"));
         let prior = spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source);
         let mut at = spfft::autotune::AutotuneConfig::new(prior);
+        // The simulator has a native batched model — seed per-class
+        // priors so re-planning at a batched regime starts from the
+        // amortized surface instead of the unbatched prior. (The native
+        // cost model measures per cell; harvesting three extra full
+        // databases up front would stall startup, so live samples carry
+        // the batch axis there.)
+        if args.get("cost") == "sim" {
+            at.batched_priors = [4usize, 16, 64]
+                .iter()
+                .map(|&b| {
+                    (b, spfft::cost::Wisdom::harvest_batched(&mut cost.as_dyn(), &source, b))
+                })
+                .collect();
+        }
         let wisdom = args.get("wisdom");
         if !wisdom.is_empty() {
             at.wisdom_path = Some(wisdom.into());
@@ -310,6 +326,16 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         Some(at)
     } else {
         None
+    };
+    let coalesce_windows = args.get_usize("coalesce")?;
+    let coalesce = if coalesce_windows > 0 {
+        spfft::coordinator::CoalescePolicy::hold(
+            coalesce_windows as u32,
+            args.get_usize("batch")?.max(2),
+            std::time::Duration::from_micros(args.get_usize("coalesce-deadline-us")? as u64),
+        )
+    } else {
+        Default::default()
     };
     let svc = spfft::coordinator::FftService::start(spfft::coordinator::ServiceConfig {
         plans: vec![(n, ca.plan.clone())],
@@ -319,6 +345,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
             max_wait: std::time::Duration::from_micros(200),
         },
         workers: args.get_usize("workers")?,
+        coalesce,
         queue_depth: 1024,
         autotune,
     })
@@ -364,6 +391,16 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         snap.latency_p95,
         snap.latency_p99,
     );
+    if coalesce_windows > 0 {
+        println!(
+            "coalesce: {} held flushes, hit rate {:.0}%, {} singleton pairings, mean held age {:?} (max {:?})",
+            snap.coalesced_flushes,
+            100.0 * snap.coalesce_hit_rate,
+            snap.singleton_pairings,
+            snap.mean_held_age,
+            snap.max_held_age,
+        );
+    }
     Ok(())
 }
 

@@ -102,6 +102,76 @@ pub fn base_compute_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize
     cycles * p.ns_per_cyc()
 }
 
+/// *Per-transform* issue cost of `edge` executed over a lane-blocked
+/// batch of `b` transforms (`b >= 2`; `b = 1` is the scalar path of
+/// [`base_compute_ns`]). The batched kernels vectorize across the batch
+/// lanes, which changes the schedule in three ways:
+///
+/// * **No SIMD collapse.** The vector dimension is the batch, so the
+///   j-range never falls below the lane width — the stride-1/2 decay of
+///   paper Table 4 does not exist in batched mode. (Sub-lane batches pay
+///   instead through the padding waste `B_padded / B`.)
+/// * **Twiddle amortization.** One twiddle load + broadcast per
+///   butterfly position serves the whole batch, so the
+///   `twiddle_issue_frac` share of the issue cost (and the j-twiddle
+///   streams of mid-path fused blocks) scales as 1/B.
+/// * **Lane-major layout.** Terminal fused blocks need no in-register
+///   transposes (the batch lanes are already the vector lanes), and loop
+///   overhead is shared across the batch.
+pub fn base_compute_ns_batched(
+    p: &MachineParams,
+    n: usize,
+    edge: EdgeType,
+    stage: usize,
+    b: usize,
+) -> f64 {
+    let m = n >> stage;
+    assert!(
+        m >= (1 << edge.stages()),
+        "{edge} at stage {stage} invalid for n={n}"
+    );
+    let bp = p.padded_batch(b);
+    let waste = bp as f64 / b as f64;
+    let bf = b as f64;
+    let cycles = if edge.is_fused() {
+        let bsize = edge.block_size().unwrap();
+        let lb = edge.stages();
+        let e = m / bsize;
+        let depth = 1.0 + p.fused_depth_gamma * ((bsize / 8) as f64 - 1.0);
+        // Arithmetic: the same per-point network, batch lanes always full.
+        let work = (n * lb) as f64 * p.bf.fused_per_point_stage * depth * waste;
+        let vecs_per_group = (bsize as f64) / (p.lanes as f64) * 2.0;
+        let groups_tx = (n / bsize) as f64 * waste / p.lanes as f64;
+        // Mid-path gathers stride over panel runs as in the scalar
+        // kernel; terminal blocks need no transposes at all (lane-major).
+        let layout = if e < p.lanes { 0.0 } else { groups_tx * p.fused_gather_cyc * vecs_per_group };
+        // One j-twiddle stream per group of B instead of per transform.
+        let twiddle = if e >= p.lanes {
+            (n / bsize) as f64 / p.lanes as f64 * lb as f64 * p.fused_twiddle_stream_cyc / bf
+        } else {
+            0.0
+        };
+        let overhead = groups_tx * p.blk_overhead_cyc;
+        work + layout + twiddle + overhead
+    } else {
+        let r = 1usize << edge.stages();
+        let j_range = m / r;
+        let blocks = (n / m) as f64;
+        let per_group = match edge {
+            EdgeType::R2 => p.bf.r2,
+            EdgeType::R4 => p.bf.r4,
+            EdgeType::R8 => p.bf.r8,
+            _ => unreachable!(),
+        };
+        let positions = blocks * j_range as f64;
+        let arith = positions * waste / p.lanes as f64 * per_group * (1.0 - p.twiddle_issue_frac);
+        let twiddle = positions * per_group * p.twiddle_issue_frac / bf;
+        let overhead = blocks * p.blk_overhead_cyc / bf;
+        arith + twiddle + overhead
+    };
+    cycles * p.ns_per_cyc()
+}
+
 /// Register working set of `edge` at (n, stage), in vector registers.
 /// Terminal fused blocks need no j-twiddles (j = 0 ⇒ W^0 = 1), so their
 /// working set shrinks to data + lane constants + temps.
@@ -137,6 +207,15 @@ pub fn pressure_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) ->
     let touches = edge.stages() as f64;
     let cyc = spilled * p.spill_cyc_per_vreg * touches * groups;
     cyc * p.ns_per_cyc()
+}
+
+/// *Per-transform* register-pressure cost of a batched pass: the same
+/// spill traffic per vector group as the scalar kernel (a vector
+/// register still holds `lanes` floats — now batch lanes — so the live
+/// working set is unchanged), scaled by the padding waste.
+pub fn pressure_ns_batched(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, b: usize) -> f64 {
+    let bp = p.padded_batch(b);
+    pressure_ns(p, n, edge, stage) * (bp as f64 / b as f64)
 }
 
 #[cfg(test)]
@@ -212,5 +291,48 @@ mod tests {
     #[should_panic(expected = "invalid")]
     fn invalid_stage_panics() {
         base_compute_ns(&m1(), 1024, EdgeType::F32, 6);
+    }
+
+    #[test]
+    fn batched_compute_never_collapses() {
+        // The scalar late-stage R2 pays the SIMD-collapse penalty; the
+        // batched kernel vectorizes across the batch and does not.
+        let p = m1();
+        let scalar = base_compute_ns(&p, 1024, EdgeType::R2, 9);
+        let batched = base_compute_ns_batched(&p, 1024, EdgeType::R2, 9, 16);
+        assert!(batched < scalar / 4.0, "scalar {scalar} batched {batched}");
+    }
+
+    #[test]
+    fn batched_twiddle_share_amortizes_with_b() {
+        // At lane multiples the arithmetic share is constant per
+        // transform; only the 1/B terms shrink — strictly decreasing.
+        let p = m1();
+        for e in ALL_EDGES {
+            let s = if e.is_fused() { 1 } else { 0 };
+            let c4 = base_compute_ns_batched(&p, 1024, e, s, 4);
+            let c16 = base_compute_ns_batched(&p, 1024, e, s, 16);
+            let c64 = base_compute_ns_batched(&p, 1024, e, s, 64);
+            assert!(c16 < c4 && c64 < c16, "{e}: {c4} {c16} {c64}");
+        }
+    }
+
+    #[test]
+    fn batched_terminal_fused_blocks_skip_the_transpose() {
+        // Terminal F8 at n=1024 stage 7: the scalar kernel pays the 4x4
+        // transpose trick; the lane-major batched panel needs none.
+        let p = m1();
+        let scalar = base_compute_ns(&p, 1024, EdgeType::F8, 7);
+        let batched = base_compute_ns_batched(&p, 1024, EdgeType::F8, 7, 4);
+        assert!(batched < scalar, "scalar {scalar} batched {batched}");
+    }
+
+    #[test]
+    fn batched_pressure_scales_with_padding_waste() {
+        let p = m1();
+        let base = pressure_ns(&p, 1024, EdgeType::R8, 3);
+        assert!(base > 0.0);
+        assert_eq!(pressure_ns_batched(&p, 1024, EdgeType::R8, 3, 4), base);
+        assert_eq!(pressure_ns_batched(&p, 1024, EdgeType::R8, 3, 2), 2.0 * base);
     }
 }

@@ -18,8 +18,8 @@
 use crate::edge::{Context, EdgeType, ALL_EDGES};
 use crate::plan::Plan;
 
-use super::compute::{base_compute_ns, pressure_ns};
-use super::memory::mem_ns;
+use super::compute::{base_compute_ns, base_compute_ns_batched, pressure_ns, pressure_ns_batched};
+use super::memory::{mem_ns, mem_ns_batched};
 use super::params::MachineParams;
 
 /// A simulated machine: parameters + cost queries.
@@ -71,6 +71,39 @@ impl Machine {
         base_compute_ns(p, n, edge, stage)
             + pressure_ns(p, n, edge, stage) * pmult
             + mem_ns(p, n, edge, stage, ctx)
+    }
+
+    /// Simulated time of `edge` at `stage` executed over a lane-blocked
+    /// batch of `b` transforms together (whole-batch nanoseconds). The
+    /// batched kernels vectorize across the batch lanes: twiddle loads
+    /// amortize as 1/B, SIMD collapse disappears, panel-scaled strides
+    /// keep residual affinity alive at late stages, and a thrash term
+    /// bounds it all once the panel outgrows the cache — the native
+    /// model of what `CompiledPlan::run_batch` actually runs, rather
+    /// than `b` independent executions. `b = 1` is exactly [`Machine::edge_ns`]
+    /// (the service runs singleton groups through the scalar kernels).
+    pub fn edge_ns_batched(
+        &self,
+        n: usize,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        b: usize,
+    ) -> f64 {
+        let b = b.max(1);
+        if b == 1 {
+            return self.edge_ns(n, edge, stage, ctx);
+        }
+        assert!(self.edge_available(edge), "{edge} unavailable on {}", self.name());
+        let p = &self.params;
+        let pmult = match ctx {
+            Context::Start => p.pressure_start_mult,
+            Context::After(_) => 1.0,
+        };
+        let per_tx = base_compute_ns_batched(p, n, edge, stage, b)
+            + pressure_ns_batched(p, n, edge, stage, b) * pmult
+            + mem_ns_batched(p, n, edge, stage, ctx, b);
+        b as f64 * per_tx
     }
 
     /// Steady-state time of a full plan: every edge is costed in its true
@@ -158,6 +191,35 @@ mod tests {
         for row in table3_arrangements() {
             let t = m.plan_ns(1024, &row.plan);
             assert!(t.is_finite() && t > 0.0, "{}", row.key);
+        }
+    }
+
+    #[test]
+    fn batched_edge_at_b1_is_exactly_the_scalar_edge() {
+        let m = Machine::m1();
+        for e in ALL_EDGES {
+            for s in 0..=(10 - e.stages()) {
+                for ctx in Context::all() {
+                    assert_eq!(m.edge_ns_batched(1024, e, s, ctx, 1), m.edge_ns(1024, e, s, ctx));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_edges_are_sublinear_within_the_amortization_bound() {
+        // Whole-batch time at a lane-multiple B within capacity never
+        // exceeds B independent executions (no collapse, amortized
+        // twiddles, panel-scaled affinity — all gains, padding-free).
+        let m = Machine::m1();
+        for e in ALL_EDGES {
+            for s in 0..=(10 - e.stages()) {
+                for ctx in Context::all() {
+                    let one = m.edge_ns(1024, e, s, ctx);
+                    let whole = m.edge_ns_batched(1024, e, s, ctx, 16);
+                    assert!(whole <= 16.0 * one * (1.0 + 1e-12), "{e}@{s} {ctx}: {whole} vs {}", 16.0 * one);
+                }
+            }
         }
     }
 

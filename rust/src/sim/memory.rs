@@ -30,6 +30,14 @@
 //!     `after_fused_mem` (> 1).
 //!   - `Context::Start` (isolation measurement): `start_mem` (> 1), no
 //!     residual help at all.
+//!
+//! The batch axis ([`mem_ns_batched`]): a lane-blocked panel of B
+//! transforms widens every logical element to a `B_padded`-float run.
+//! Per transform the round trip costs the same (plus padding waste), the
+//! context affinity applies at panel-scaled strides (late passes regain
+//! residual effects the scalar layout loses to line-locality), and a
+//! thrash term ([`thrash_factor`]) bounds the amortization once the
+//! resident panel outgrows `batch_cap_bytes`.
 
 use crate::edge::{Context, EdgeType};
 
@@ -73,9 +81,22 @@ pub fn bank_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize) ->
     1.0 + p.k_bank * (span_bytes / 256.0) / 2.0
 }
 
-/// Context multiplier for `edge` at `stage` given predecessor `ctx`.
-/// `lanes`-agnostic; purely a cache-residual story.
-pub fn context_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+/// Context multiplier for `edge` at `stage` given predecessor `ctx`,
+/// with every stride scaled by `scale` f32 elements. The scalar layout
+/// is `scale == 1`; a lane-blocked batch panel widens each logical
+/// element to a `B_padded`-float run, scaling read and residual strides
+/// alike — the affinity *ratios* are preserved, but the line-local
+/// cutoff moves: strides that were within one cache line unbatched
+/// spread across lines in a panel, so late-stage passes regain the
+/// residual-affinity effects the scalar layout loses.
+fn context_factor_scaled(
+    p: &MachineParams,
+    n: usize,
+    edge: EdgeType,
+    stage: usize,
+    ctx: Context,
+    scale: usize,
+) -> f64 {
     match ctx {
         Context::Start => {
             if edge.is_fused() {
@@ -90,8 +111,8 @@ pub fn context_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize,
             }
             // Predecessor ended at `stage`, so it started `prev.stages()`
             // earlier; its residual stride is n >> stage.
-            let residual = n >> stage;
-            let read = read_stride_elems(n, edge, stage);
+            let residual = (n >> stage) * scale;
+            let read = read_stride_elems(n, edge, stage) * scale;
             let line_elems = 16; // 64-byte line of f32
             if read < line_elems {
                 return 1.0; // line-local: residual stride irrelevant
@@ -107,10 +128,69 @@ pub fn context_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize,
     }
 }
 
+/// Context multiplier for `edge` at `stage` given predecessor `ctx`.
+/// `lanes`-agnostic; purely a cache-residual story.
+pub fn context_factor(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+    context_factor_scaled(p, n, edge, stage, ctx, 1)
+}
+
+/// Context multiplier for a lane-blocked batched pass whose panels hold
+/// `bp` (padded) lanes per logical element.
+pub fn context_factor_batched(
+    p: &MachineParams,
+    n: usize,
+    edge: EdgeType,
+    stage: usize,
+    ctx: Context,
+    bp: usize,
+) -> f64 {
+    context_factor_scaled(p, n, edge, stage, ctx, bp.max(1))
+}
+
+/// Cache-thrash factor of streaming a lane-blocked panel of `bp` lanes:
+/// unity while the resident panel (`8 · n · bp` bytes, split-complex
+/// f32) fits `batch_cap_bytes`, then growing linearly in the overflow.
+/// This is what bounds batched amortization: past
+/// [`MachineParams::batch_amort_bound`] the panel no longer streams.
+pub fn thrash_factor(p: &MachineParams, n: usize, bp: usize) -> f64 {
+    let panel_bytes = (8 * n * bp) as f64;
+    if panel_bytes <= p.batch_cap_bytes {
+        1.0
+    } else {
+        1.0 + p.batch_thrash * (panel_bytes / p.batch_cap_bytes - 1.0)
+    }
+}
+
 /// Memory component of the edge cost, in ns.
 pub fn mem_ns(p: &MachineParams, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
     let base_cyc = round_trip_bytes(n) / p.l1_bw_bytes_cyc;
     base_cyc * p.ns_per_cyc() * bank_factor(p, n, edge, stage) * context_factor(p, n, edge, stage, ctx)
+}
+
+/// *Per-transform* memory cost of one lane-blocked batched pass over `b`
+/// transforms (`b >= 2`; `b = 1` is the scalar path). The whole padded
+/// panel moves once per pass, so per transform the round trip picks up
+/// the padding waste `B_padded / B`; the bank factor is unchanged (the
+/// panel runs the same *logical* streams, each now a contiguous
+/// `B_padded`-float run — no extra bank/TLB pressure per byte); the
+/// context factor sees the panel-scaled strides; and the thrash factor
+/// bounds the amortization once the panel outgrows the cache.
+pub fn mem_ns_batched(
+    p: &MachineParams,
+    n: usize,
+    edge: EdgeType,
+    stage: usize,
+    ctx: Context,
+    b: usize,
+) -> f64 {
+    let bp = p.padded_batch(b);
+    let waste = bp as f64 / b as f64;
+    let base_cyc = round_trip_bytes(n) * waste / p.l1_bw_bytes_cyc;
+    base_cyc
+        * p.ns_per_cyc()
+        * bank_factor(p, n, edge, stage)
+        * context_factor_batched(p, n, edge, stage, ctx, bp)
+        * thrash_factor(p, n, bp)
 }
 
 #[cfg(test)]
@@ -186,6 +266,55 @@ mod tests {
             let f32f = bank_factor(&p, 1024, EdgeType::F32, s);
             assert_eq!(r2, f32f);
         }
+    }
+
+    #[test]
+    fn batched_panels_recover_affinity_at_line_local_strides() {
+        // R2 at stage 9 reads stride 1: line-local unbatched (no bonus),
+        // but a 16-lane panel widens that to a 16-float run — the
+        // half-stride residual affinity applies again.
+        let p = m1();
+        assert_eq!(context_factor(&p, 1024, EdgeType::R2, 9, After(EdgeType::R4)), 1.0);
+        let b = context_factor_batched(&p, 1024, EdgeType::R2, 9, After(EdgeType::R4), 16);
+        assert_eq!(b, p.affinity_half_stride);
+        // scaling preserves ratios where the scalar bonus already applied
+        let scalar = context_factor(&p, 1024, EdgeType::R2, 2, After(EdgeType::R4));
+        let batched = context_factor_batched(&p, 1024, EdgeType::R2, 2, After(EdgeType::R4), 16);
+        assert_eq!(scalar, batched);
+    }
+
+    #[test]
+    fn thrash_kicks_in_past_the_panel_capacity() {
+        let p = m1();
+        // n=1024: 8 KiB per lane; 16 lanes = 128 KiB = exactly capacity.
+        assert_eq!(thrash_factor(&p, 1024, 16), 1.0);
+        assert!(thrash_factor(&p, 1024, 32) > 1.0);
+        let hw = MachineParams::haswell();
+        assert!(thrash_factor(&hw, 1024, 8) > 1.0, "32 KiB L1d holds no 64 KiB panel");
+    }
+
+    #[test]
+    fn batched_mem_per_transform_is_never_worse_within_capacity() {
+        // At a lane-multiple batch within capacity the padded round trip
+        // equals the scalar one; only the panel-scaled context factor can
+        // move per-transform memory cost, and only downward.
+        let p = m1();
+        for s in 0..9 {
+            for ctx in Context::all() {
+                let scalar = mem_ns(&p, 1024, EdgeType::R4, s, ctx);
+                let batched = mem_ns_batched(&p, 1024, EdgeType::R4, s, ctx, 16);
+                assert!(batched <= scalar * (1.0 + 1e-12), "stage {s} {ctx}: {batched} > {scalar}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_waste_shows_up_below_a_full_lane_group() {
+        // B=2 pads to 4 lanes: the panel moves twice the live data.
+        let p = m1();
+        let b2 = mem_ns_batched(&p, 1024, EdgeType::R4, 0, Start, 2);
+        let b4 = mem_ns_batched(&p, 1024, EdgeType::R4, 0, Start, 4);
+        assert!((b2 - 2.0 * b4).abs() < 1e-9, "b2={b2} b4={b4}");
     }
 
     #[test]

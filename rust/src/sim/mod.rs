@@ -21,7 +21,12 @@
 //!   how efficiently the current pass's loads hit (store-forwarding /
 //!   line-residual affinity, paper §4.3 finding 4).
 //! * [`machine`] — [`Machine`]: combines both into
-//!   `edge_ns(n, edge, stage, ctx)` and steady-state plan timing.
+//!   `edge_ns(n, edge, stage, ctx)` and steady-state plan timing, plus
+//!   the batch axis `edge_ns_batched(n, edge, stage, ctx, B)`: a native
+//!   model of the lane-blocked batched kernels (twiddle loads amortized
+//!   1/B, no SIMD collapse, panel-scaled residual affinity, cache-bound
+//!   thrash) instead of linear extrapolation — so offline planning sees
+//!   the same cost surface the batched engine runs on.
 //!
 //! Calibration: the M1 parameter values are fitted so the *shape* of the
 //! paper's results holds (Table 2 inversion, Table 3 ranking and ratios,

@@ -108,6 +108,24 @@ pub struct MachineParams {
     /// is the second half of the context-free trap (finding 3): isolation
     /// makes fused blocks look better than any real arrangement delivers.
     pub iso_fused_mem: f64,
+    /// Fraction of a radix pass's per-group issue cost spent loading and
+    /// broadcasting twiddle vectors. The scalar kernels pay it once per
+    /// vector group *per transform*; the lane-blocked batched kernels
+    /// load each twiddle element once per group of B and broadcast it
+    /// across the batch lanes, so this fraction amortizes as 1/B — the
+    /// term that makes `edge_ns_batched` sublinear for twiddle-bound
+    /// edges (FFTW's howmany-loop amortization).
+    pub twiddle_issue_frac: f64,
+    /// Streaming-panel capacity in bytes (≈ L1d). A lane-blocked batch
+    /// panel holds `8 · n · B_padded` resident bytes; while it fits, the
+    /// per-transform memory cost of a batched pass matches the scalar
+    /// round trip, and the amortization terms win. Beyond it the panel
+    /// thrashes (see `memory::thrash_factor`) — this is the model's
+    /// batched-amortization bound.
+    pub batch_cap_bytes: f64,
+    /// Memory-cost growth per multiple of `batch_cap_bytes` the resident
+    /// panel overflows by (cache thrash of oversized batch panels).
+    pub batch_thrash: f64,
 }
 
 impl MachineParams {
@@ -141,6 +159,10 @@ impl MachineParams {
             after_fused_mem: 1.0,
             start_mem: 2.2,
             iso_fused_mem: 0.9268,
+            twiddle_issue_frac: 0.25,
+            // Firestorm L1d: 128 KiB of streaming panel before thrash.
+            batch_cap_bytes: 131072.0,
+            batch_thrash: 0.5,
         }
     }
 
@@ -183,6 +205,13 @@ impl MachineParams {
             after_fused_mem: 1.05,
             start_mem: 1.10,
             iso_fused_mem: 0.95,
+            // AVX2 twiddles fold into memory operands less often than the
+            // arithmetic does, so a larger slice of issue is twiddle work.
+            twiddle_issue_frac: 0.30,
+            // Haswell L1d: 32 KiB — batched panels outgrow it quickly,
+            // which is why its amortization bound sits far below the M1's.
+            batch_cap_bytes: 32768.0,
+            batch_thrash: 0.8,
         }
     }
 
@@ -203,6 +232,25 @@ impl MachineParams {
     /// ns per cycle.
     pub fn ns_per_cyc(&self) -> f64 {
         1.0 / self.freq_ghz
+    }
+
+    /// Round a batch size up to a whole number of vector lanes (the
+    /// lane-blocked panel padding of `fft::batch`).
+    pub fn padded_batch(&self, b: usize) -> usize {
+        b.max(1).div_ceil(self.lanes) * self.lanes
+    }
+
+    /// The modeled batched-amortization bound for n-point transforms:
+    /// the largest lane-multiple batch whose resident panel
+    /// (`8 · n · B` bytes) still fits `batch_cap_bytes`. Per-transform
+    /// batched cost is monotonically non-increasing in B (over lane
+    /// multiples) up to this bound; past it the thrash term takes over.
+    /// Zero means even one lane group of panels overflows the capacity —
+    /// no amortization range exists at this size.
+    pub fn batch_amort_bound(&self, n: usize) -> usize {
+        let per_tx_bytes = 8 * n;
+        let max_b = (self.batch_cap_bytes / per_tx_bytes as f64).floor() as usize;
+        max_b / self.lanes * self.lanes
     }
 
     /// Whether `edge` is implementable on this machine at all.
@@ -276,6 +324,31 @@ mod tests {
             assert!(m.ns_per_cyc() > 0.0);
             assert!(m.affinity_half_stride < 1.0);
             assert!(m.start_mem >= 1.0);
+            assert!(m.twiddle_issue_frac > 0.0 && m.twiddle_issue_frac < 1.0);
+            assert!(m.batch_cap_bytes > 0.0);
+            assert!(m.batch_thrash > 0.0);
         }
+    }
+
+    #[test]
+    fn padded_batch_rounds_to_lanes() {
+        let m = MachineParams::m1();
+        assert_eq!(m.padded_batch(1), 4);
+        assert_eq!(m.padded_batch(4), 4);
+        assert_eq!(m.padded_batch(5), 8);
+        assert_eq!(MachineParams::haswell().padded_batch(9), 16);
+    }
+
+    #[test]
+    fn amortization_bounds_follow_panel_capacity() {
+        // M1 (128 KiB): 16 KiB panels per transform at n=1024 → 16;
+        // 2 KiB at n=256 → 64. Haswell (32 KiB): no lane-multiple of
+        // n=1024 panels fits at all — no amortization range.
+        let m1 = MachineParams::m1();
+        assert_eq!(m1.batch_amort_bound(1024), 16);
+        assert_eq!(m1.batch_amort_bound(256), 64);
+        let hw = MachineParams::haswell();
+        assert_eq!(hw.batch_amort_bound(1024), 0);
+        assert_eq!(hw.batch_amort_bound(256), 16);
     }
 }

@@ -1,0 +1,307 @@
+//! Deterministic coordinator test harness: an injected virtual clock +
+//! scripted arrival traces, so batching / grouping / coalescing /
+//! deadline behavior is testable with **zero sleeps and zero wall-clock
+//! dependence**. Every timestamp handed to the production components is
+//! fabricated from one base `Instant` plus a virtual offset, and the
+//! pull-window semantics of `collect_batch` are replayed deterministically
+//! over the trace.
+//!
+//! What is real: `group_by_key` / `CoalesceState` (the production
+//! decision machinery, driven through the same `admit`/`flush_all` calls
+//! the worker loop makes), `Metrics`, and the actual kernels
+//! (`Executor::compile`, `BatchBuffer` gather → `run_batch` → scatter,
+//! the same path `WorkerBackend::execute_group` takes). What is
+//! simulated: the mpsc channel and its timeouts — replaced by the
+//! scripted trace so a test run is a pure function of its inputs.
+//!
+//! Shared by `integration_coordinator.rs` and `integration_batched.rs`
+//! via `#[path = "harness/mod.rs"] mod harness;` (the coalescing
+//! property tests drive `CoalesceState` directly with the same
+//! fabricated-instant technique).
+
+#![allow(dead_code)] // each test binary uses a subset of the harness
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spfft::coordinator::{BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics};
+use spfft::fft::{BatchBufferPool, CompiledPlan, Executor, SplitComplex};
+use spfft::plan::Plan;
+
+/// A monotonically-advancing virtual clock. `now()` is a real `Instant`
+/// (base + virtual offset), so production code consuming `Instant`s works
+/// unmodified; tests control time exclusively through `advance`/`set`.
+pub struct VirtualClock {
+    base: Instant,
+    offset_ns: AtomicU64,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { base: Instant::now(), offset_ns: AtomicU64::new(0) }
+    }
+
+    /// The current virtual instant.
+    pub fn now(&self) -> Instant {
+        self.base + Duration::from_nanos(self.offset_ns.load(Ordering::Relaxed))
+    }
+
+    /// The virtual time elapsed since the clock's origin.
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_nanos(self.offset_ns.load(Ordering::Relaxed))
+    }
+
+    /// Fabricate the instant at virtual offset `at` (past or future).
+    pub fn at(&self, at: Duration) -> Instant {
+        self.base + at
+    }
+
+    /// The clock's origin (virtual offset zero).
+    pub fn origin(&self) -> Instant {
+        self.base
+    }
+
+    /// The virtual offset of an instant fabricated from this clock.
+    pub fn offset_of(&self, t: Instant) -> Duration {
+        t.saturating_duration_since(self.base)
+    }
+
+    /// Advance by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.offset_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Jump to virtual offset `at`; the clock never moves backwards.
+    pub fn set(&self, at: Duration) {
+        self.offset_ns.fetch_max(at.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Jump to a fabricated instant previously derived from this clock.
+    pub fn set_instant(&self, t: Instant) {
+        self.set(t.saturating_duration_since(self.base));
+    }
+}
+
+/// One scripted request arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Virtual arrival offset.
+    pub at: Duration,
+    /// FFT size (the grouping key).
+    pub n: usize,
+    /// Seed for the request's input (`SplitComplex::random(n, seed)`).
+    pub seed: u64,
+}
+
+/// Build a trace from `(offset_us, n, seed)` triples.
+pub fn trace(specs: &[(u64, usize, u64)]) -> Vec<Arrival> {
+    specs
+        .iter()
+        .map(|&(us, n, seed)| Arrival { at: Duration::from_micros(us), n, seed })
+        .collect()
+}
+
+/// A request inside the harness: scripted input + virtual enqueue time.
+pub struct TraceReq {
+    pub n: usize,
+    pub seed: u64,
+    /// Global arrival index (FIFO assertions).
+    pub seq: usize,
+    pub enqueued: Instant,
+    pub input: SplitComplex,
+}
+
+/// One completed request, with full provenance for assertions.
+pub struct Completion {
+    pub n: usize,
+    pub seed: u64,
+    pub seq: usize,
+    /// Virtual offsets of enqueue and completion.
+    pub enqueued_at: Duration,
+    pub completed_at: Duration,
+    /// Size of the group this request executed in.
+    pub group_size: usize,
+    /// Coalescing provenance of the group.
+    pub held_windows: u32,
+    pub reason: FlushReason,
+    pub paired_singletons: bool,
+    /// The transform output (bit-comparable against `run_on`).
+    pub out: SplitComplex,
+}
+
+impl Completion {
+    pub fn latency(&self) -> Duration {
+        self.completed_at.saturating_sub(self.enqueued_at)
+    }
+}
+
+/// Drives the production batching + grouping + coalescing + execution
+/// pipeline over a scripted trace on a virtual clock.
+pub struct Driver {
+    pub clock: VirtualClock,
+    pub policy: BatchPolicy,
+    pub metrics: Arc<Metrics>,
+    coalesce: CoalesceState<usize, TraceReq>,
+    ex: Executor,
+    compiled: Vec<(usize, CompiledPlan)>,
+    pool: BatchBufferPool,
+    /// Pulled batch sizes, in pull order (empty wake-ups excluded) —
+    /// the deterministic equivalent of the service's batch accounting.
+    pub pulls: Vec<usize>,
+}
+
+impl Driver {
+    pub fn new(plans: &[(usize, Plan)], policy: BatchPolicy, coalesce: CoalescePolicy) -> Driver {
+        let mut ex = Executor::new();
+        let compiled = plans.iter().map(|(n, p)| (*n, ex.compile(p, *n, true))).collect();
+        Driver {
+            clock: VirtualClock::new(),
+            policy,
+            metrics: Arc::new(Metrics::new()),
+            coalesce: CoalesceState::new(coalesce, policy.max_wait),
+            ex,
+            compiled,
+            pool: BatchBufferPool::new(),
+            pulls: Vec::new(),
+        }
+    }
+
+    /// Run the whole trace to completion (including the final drain of
+    /// held coalesced work) and return every completion in execution
+    /// order. Pull windows replay `collect_batch` semantics: a window
+    /// opens at the first pending arrival, admits arrivals for
+    /// `max_wait` or until `max_batch`, and the worker wakes early
+    /// whenever held work hits its flush deadline.
+    pub fn run(&mut self, mut arrivals: Vec<Arrival>) -> Vec<Completion> {
+        arrivals.sort_by_key(|a| a.at);
+        let mut completions = Vec::new();
+        let mut i = 0;
+        loop {
+            let wake = self.coalesce.next_flush_due(|r: &TraceReq| r.enqueued);
+            if i >= arrivals.len() {
+                // No more traffic: serve wake deadlines until drained.
+                match wake {
+                    None => break,
+                    Some(w) => {
+                        self.clock.set_instant(w);
+                        let now = self.clock.now();
+                        let ready = self.coalesce.admit(Vec::new(), now, |r| r.n, |r| r.enqueued);
+                        self.execute(ready, &mut completions);
+                        continue;
+                    }
+                }
+            }
+            let open_at = self.clock.at(arrivals[i].at).max(self.clock.now());
+            if let Some(w) = wake {
+                if w < open_at {
+                    // Held work comes due before the next arrival.
+                    self.clock.set_instant(w);
+                    let now = self.clock.now();
+                    let ready = self.coalesce.admit(Vec::new(), now, |r| r.n, |r| r.enqueued);
+                    self.execute(ready, &mut completions);
+                    continue;
+                }
+            }
+            // Open a pull window at the first pending arrival; like
+            // `collect_batch_until`, the window never extends past a
+            // held group's wake deadline.
+            let mut window_deadline = open_at + self.policy.max_wait;
+            if let Some(w) = wake {
+                window_deadline = window_deadline.min(w);
+            }
+            let mut batch = Vec::new();
+            let mut close_at = window_deadline;
+            while i < arrivals.len()
+                && batch.len() < self.policy.max_batch
+                && self.clock.at(arrivals[i].at) <= window_deadline
+            {
+                let a = arrivals[i];
+                i += 1;
+                batch.push(TraceReq {
+                    n: a.n,
+                    seed: a.seed,
+                    seq: i - 1,
+                    enqueued: self.clock.at(a.at),
+                    input: SplitComplex::random(a.n, a.seed),
+                });
+                if batch.len() == self.policy.max_batch {
+                    // a full batch closes the window immediately
+                    close_at = self.clock.at(a.at).max(open_at);
+                }
+            }
+            self.clock.set_instant(close_at);
+            self.pulls.push(batch.len());
+            let now = self.clock.now();
+            self.metrics.on_batch(batch.len(), Duration::ZERO);
+            let ready = self.coalesce.admit(batch, now, |r| r.n, |r| r.enqueued);
+            self.execute(ready, &mut completions);
+        }
+        // Shutdown drain (channel closed in the real worker loop).
+        let now = self.clock.now();
+        let ready = self.coalesce.flush_all(now);
+        self.execute(ready, &mut completions);
+        completions
+    }
+
+    /// Execute ready groups exactly like `WorkerBackend::execute_group`'s
+    /// native path: singletons scalar, groups of >= 2 through a pooled
+    /// lane-blocked batch buffer.
+    fn execute(
+        &mut self,
+        ready: Vec<spfft::coordinator::ReadyGroup<usize, TraceReq>>,
+        completions: &mut Vec<Completion>,
+    ) {
+        let now_off = self.clock.elapsed();
+        for group in ready {
+            self.metrics.on_group(group.items.len());
+            if group.held_windows > 0 {
+                self.metrics.on_coalesce_flush(
+                    group.held_age,
+                    group.gained > 0,
+                    group.paired_singletons,
+                );
+            }
+            let cp = self
+                .compiled
+                .iter()
+                .find(|(n, _)| *n == group.key)
+                .map(|(_, cp)| cp)
+                .unwrap_or_else(|| panic!("no plan for n={}", group.key));
+            let size = group.items.len();
+            let outs: Vec<SplitComplex> = if size == 1 {
+                vec![cp.run_on(&group.items[0].input)]
+            } else {
+                let mut buf = self.pool.acquire(group.key, size);
+                let inputs: Vec<&SplitComplex> = group.items.iter().map(|r| &r.input).collect();
+                buf.gather(&inputs);
+                cp.run_batch(&mut buf);
+                let outs = (0..size).map(|lane| buf.scatter_lane(lane)).collect();
+                self.pool.release(buf);
+                outs
+            };
+            for (req, out) in group.items.into_iter().zip(outs) {
+                let enq_off = self.clock.offset_of(req.enqueued);
+                self.metrics.on_complete(now_off.saturating_sub(enq_off));
+                completions.push(Completion {
+                    n: req.n,
+                    seed: req.seed,
+                    seq: req.seq,
+                    enqueued_at: enq_off,
+                    completed_at: now_off,
+                    group_size: size,
+                    held_windows: group.held_windows,
+                    reason: group.reason,
+                    paired_singletons: group.paired_singletons,
+                    out,
+                });
+            }
+        }
+    }
+}

@@ -100,6 +100,7 @@ fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
         workers: 2,
+        coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
     })
@@ -211,6 +212,7 @@ fn learned_wisdom_survives_restart_and_preplans_the_drifted_optimum() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(50) },
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 64,
         autotune: Some(at),
     })

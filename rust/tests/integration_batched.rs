@@ -4,11 +4,17 @@
 //! batches, split into same-n groups, executed jointly through the
 //! lane-blocked batched kernels, and every reply must be the correct
 //! transform of its own input — plus the direct-API guarantee that a
-//! batched run is bit-identical to per-request runs.
+//! batched run is bit-identical to per-request runs. Grouping and
+//! coalescing *timing* behavior is pinned exactly on the injected-clock
+//! harness; the threaded tests assert timing-independent facts only.
+
+#[path = "harness/mod.rs"]
+mod harness;
 
 use std::time::Duration;
 
-use spfft::coordinator::{Backend, BatchPolicy, FftService, ServiceConfig};
+use harness::{trace, Driver};
+use spfft::coordinator::{Backend, BatchPolicy, CoalescePolicy, FftService, ServiceConfig};
 use spfft::cost::SimCost;
 use spfft::fft::reference::fft_ref;
 use spfft::fft::{BatchBuffer, BatchBufferPool, Executor, SplitComplex};
@@ -27,6 +33,7 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) },
         workers: 2,
+        coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
     })
@@ -57,6 +64,84 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
 }
 
 #[test]
+fn mixed_n_grouping_histogram_is_exact_on_the_harness() {
+    // 12 interleaved arrivals of three sizes inside one pull window:
+    // exactly one pull of 12, split into three same-n groups of 4, each
+    // executed through the batched kernels bit-identically to scalar.
+    let sizes = [64usize, 256, 1024];
+    let plans: Vec<(usize, Plan)> = sizes.iter().map(|&n| (n, planned(n))).collect();
+    let mut driver = Driver::new(
+        &plans,
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
+        CoalescePolicy::default(),
+    );
+    let arrivals = trace(
+        &(0..12u64)
+            .map(|i| (i * 5, sizes[(i % 3) as usize], i))
+            .collect::<Vec<_>>(),
+    );
+    let completions = driver.run(arrivals);
+    assert_eq!(driver.pulls, vec![12]);
+    assert_eq!(completions.len(), 12);
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.groups, 3);
+    assert_eq!(snap.mean_group_size, 4.0);
+    // all 12 requests land in the size-4 bucket (batch class 2)
+    let class4 = spfft::autotune::batch_class(4);
+    for (bucket, &count) in snap.group_size_hist.iter().enumerate() {
+        assert_eq!(count, if bucket == class4 { 3 } else { 0 }, "bucket {bucket}");
+    }
+    let mut ex = Executor::new();
+    for c in &completions {
+        assert_eq!(c.group_size, 4);
+        let cp = ex.compile(&planned(c.n), c.n, true);
+        assert_eq!(c.out, cp.run_on(&SplitComplex::random(c.n, c.seed)));
+    }
+    // group order preserves first-seen arrival order: 64 first, then
+    // 256, then 1024, each FIFO internally
+    let order: Vec<usize> = completions.iter().map(|c| c.n).collect();
+    assert_eq!(order[..4], [64, 64, 64, 64]);
+    assert_eq!(order[4..8], [256, 256, 256, 256]);
+    assert_eq!(order[8..], [1024, 1024, 1024, 1024]);
+    for chunk in completions.chunks(4) {
+        let seqs: Vec<usize> = chunk.iter().map(|c| c.seq).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "FIFO broken within a group");
+    }
+}
+
+#[test]
+fn cross_size_coalescing_keeps_groups_separate_on_the_harness() {
+    // Coalescing merges only same-n groups: two under-filled pulls of
+    // *different* sizes must produce two independent held groups that
+    // each flush on their own terms — never a mixed batch.
+    let plans: Vec<(usize, Plan)> = [64usize, 256].iter().map(|&n| (n, planned(n))).collect();
+    let mut driver = Driver::new(
+        &plans,
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) },
+        CoalescePolicy::hold(3, 4, Duration::from_millis(5)),
+    );
+    let completions = driver.run(trace(&[
+        (0, 64, 1),
+        (10, 64, 2),
+        (1000, 256, 3),
+        (1010, 256, 4),
+    ]));
+    assert_eq!(completions.len(), 4);
+    for c in &completions {
+        assert_eq!(c.group_size, 2, "sizes must not mix");
+        assert!(c.latency() <= Duration::from_millis(5));
+    }
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.groups, 2);
+    assert_eq!(snap.coalesced_flushes, 2);
+    // neither hold gained members (no same-n traffic followed)
+    assert_eq!(snap.coalesce_hits, 0);
+    assert_eq!(snap.coalesce_hit_rate, 0.0);
+}
+
+#[test]
 fn batched_service_replies_match_sequential_service_bitwise() {
     // Same plan, same inputs: a service forced into joint execution
     // (burst + one worker) and per-request execution (max_batch 1) must
@@ -71,6 +156,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 24, max_wait: Duration::from_millis(5) },
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
     })
@@ -85,6 +171,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
     })

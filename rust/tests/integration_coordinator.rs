@@ -1,12 +1,21 @@
 //! Integration: the serving coordinator end-to-end (plan -> batch ->
-//! execute -> verify), on both backends.
+//! execute -> verify), on both backends — with every *timing-sensitive*
+//! behavior (window batching, cross-batch coalescing, deadlines) driven
+//! through the deterministic injected-clock harness instead of wall
+//! time. The threaded tests below assert only timing-independent facts.
+
+#[path = "harness/mod.rs"]
+mod harness;
 
 use std::time::Duration;
 
-use spfft::coordinator::{Backend, BatchPolicy, FftService, PlanCache, ServiceConfig};
+use harness::{trace, Driver};
+use spfft::coordinator::{
+    Backend, BatchPolicy, CoalescePolicy, FftService, FlushReason, PlanCache, ServiceConfig,
+};
 use spfft::cost::SimCost;
 use spfft::fft::reference::fft_ref;
-use spfft::fft::SplitComplex;
+use spfft::fft::{Executor, SplitComplex};
 use spfft::plan::Plan;
 use spfft::planner::{plan as run_plan, Strategy};
 
@@ -28,6 +37,7 @@ fn native_service_end_to_end_with_planner() {
         backend: Backend::Native,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
         workers: 2,
+        coalesce: Default::default(),
         queue_depth: 128,
         autotune: None,
     })
@@ -70,6 +80,7 @@ fn pjrt_service_end_to_end() {
         backend: Backend::Pjrt { artifacts_dir: dir },
         batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 32,
         autotune: None,
     })
@@ -86,29 +97,147 @@ fn pjrt_service_end_to_end() {
 }
 
 #[test]
-fn service_metrics_track_batches() {
+fn windows_batch_deterministically_on_the_harness() {
+    // The old threaded version of this test could only assert
+    // "batches < requests" because the pull count depended on wall-clock
+    // scheduling. On the injected clock it is exact: 40 arrivals inside
+    // one 5 ms window with max_batch 64 are a single pull of 40.
     let n = 256;
-    let svc = FftService::start(ServiceConfig {
-        plans: vec![(n, planned(n))],
-        backend: Backend::Native,
-        batch: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
-        workers: 1,
-        queue_depth: 256,
-        autotune: None,
-    })
-    .unwrap();
-    let rxs: Vec<_> = (0..40u64)
-        .map(|i| svc.submit(SplitComplex::random(n, i)).unwrap())
-        .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
-    }
-    let snap = svc.shutdown();
+    let plan = planned(n);
+    let mut driver = Driver::new(
+        &[(n, plan.clone())],
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+        CoalescePolicy::default(),
+    );
+    let arrivals = trace(
+        &(0..40u64).map(|i| (i * 10, n, i)).collect::<Vec<_>>(), // every 10 us
+    );
+    let completions = driver.run(arrivals);
+    assert_eq!(driver.pulls, vec![40]);
+    assert_eq!(completions.len(), 40);
+    let snap = driver.metrics.snapshot();
     assert_eq!(snap.completed, 40);
-    // with a 5 ms window and fast kernels, far fewer batches than requests
-    assert!(snap.batches < 40, "batches = {}", snap.batches);
-    assert!(snap.mean_batch_size > 1.0);
-    assert!(!snap.busy.is_zero());
+    assert_eq!(snap.batches, 1);
+    assert_eq!(snap.mean_batch_size, 40.0);
+    // one same-n group of 40, executed through the batched kernels
+    assert_eq!(snap.groups, 1);
+    assert_eq!(snap.mean_group_size, 40.0);
+    // all replies bit-identical to a scalar run of the same plan
+    let mut ex = Executor::new();
+    let cp = ex.compile(&plan, n, true);
+    for c in &completions {
+        assert_eq!(c.group_size, 40);
+        assert_eq!(c.out, cp.run_on(&SplitComplex::random(n, c.seed)));
+    }
+}
+
+#[test]
+fn max_batch_splits_pulls_exactly_on_the_harness() {
+    let n = 64;
+    let mut driver = Driver::new(
+        &[(n, planned(n))],
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+        CoalescePolicy::default(),
+    );
+    let arrivals = trace(&(0..20u64).map(|i| (i, n, i)).collect::<Vec<_>>());
+    let completions = driver.run(arrivals);
+    assert_eq!(driver.pulls, vec![8, 8, 4]);
+    assert_eq!(completions.len(), 20);
+    // FIFO preserved end to end
+    let seqs: Vec<usize> = completions.iter().map(|c| c.seq).collect();
+    assert_eq!(seqs, (0..20).collect::<Vec<_>>());
+}
+
+#[test]
+fn coalescing_holds_and_fills_across_windows_on_the_harness() {
+    // Two under-filled pulls of the same size coalesce into one filled
+    // group; the held pair waits exactly one window and every reply is
+    // bit-identical to scalar execution.
+    let n = 256;
+    let plan = planned(n);
+    let mut driver = Driver::new(
+        &[(n, plan.clone())],
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) },
+        CoalescePolicy::hold(4, 4, Duration::from_millis(10)),
+    );
+    // two pulls: (0, 10us) then (2000, 2010us)
+    let completions = driver.run(trace(&[
+        (0, n, 1),
+        (10, n, 2),
+        (2000, n, 3),
+        (2010, n, 4),
+    ]));
+    assert_eq!(driver.pulls, vec![2, 2]);
+    assert_eq!(completions.len(), 4);
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.groups, 1, "the two pulls must merge into one group");
+    assert_eq!(snap.mean_group_size, 4.0);
+    assert_eq!(snap.coalesced_flushes, 1);
+    assert_eq!(snap.coalesce_hits, 1);
+    assert_eq!(snap.coalesce_hit_rate, 1.0);
+    let mut ex = Executor::new();
+    let cp = ex.compile(&plan, n, true);
+    for c in &completions {
+        assert_eq!(c.reason, FlushReason::Filled);
+        assert_eq!(c.held_windows, 1);
+        assert_eq!(c.group_size, 4);
+        assert_eq!(c.out, cp.run_on(&SplitComplex::random(n, c.seed)));
+        // held members completed when the second pull filled the group
+        assert!(c.completed_at >= Duration::from_micros(2000));
+        assert!(c.latency() <= Duration::from_millis(10), "deadline violated");
+    }
+}
+
+#[test]
+fn coalescing_deadline_flushes_a_lonely_singleton_on_the_harness() {
+    // A singleton with no partner must still flush within its latency
+    // budget — exactly at (enqueue + deadline - window), scalar path.
+    let n = 64;
+    let window = Duration::from_micros(200);
+    let deadline = Duration::from_millis(2);
+    let mut driver = Driver::new(
+        &[(n, planned(n))],
+        BatchPolicy { max_batch: 8, max_wait: window },
+        CoalescePolicy::hold(100, 4, deadline),
+    );
+    let completions = driver.run(trace(&[(0, n, 7)]));
+    assert_eq!(completions.len(), 1);
+    let c = &completions[0];
+    assert_eq!(c.group_size, 1);
+    assert_eq!(c.reason, FlushReason::Deadline);
+    assert!(c.held_windows >= 1);
+    assert_eq!(c.completed_at, deadline - window); // enqueue(0) + due slack
+    assert!(c.latency() <= deadline);
+}
+
+#[test]
+fn coalescing_pairs_singletons_across_pulls_on_the_harness() {
+    // Two lonely same-n requests in different pulls pair through the
+    // second-level queue and execute as one batched group of 2.
+    let n = 128;
+    let plan = planned(n);
+    let mut driver = Driver::new(
+        &[(n, plan.clone())],
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        CoalescePolicy::hold(2, 4, Duration::from_millis(10)),
+    );
+    let completions = driver.run(trace(&[(0, n, 11), (1000, n, 12)]));
+    assert_eq!(completions.len(), 2);
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.groups, 1, "singletons must pair, not run alone");
+    assert_eq!(snap.mean_group_size, 2.0);
+    assert_eq!(snap.singleton_pairings, 1);
+    let mut ex = Executor::new();
+    let cp = ex.compile(&plan, n, true);
+    for c in &completions {
+        assert!(c.paired_singletons);
+        assert_eq!(c.group_size, 2);
+        assert_eq!(c.out, cp.run_on(&SplitComplex::random(n, c.seed)));
+        assert!(c.latency() <= Duration::from_millis(10));
+    }
+    // FIFO within the pair
+    assert_eq!(completions[0].seq, 0);
+    assert_eq!(completions[1].seq, 1);
 }
 
 #[test]
@@ -121,6 +250,7 @@ fn failure_injection_worker_rejects_bad_size_gracefully() {
         backend: Backend::Native,
         batch: BatchPolicy::default(),
         workers: 1,
+        coalesce: Default::default(),
         queue_depth: 16,
         autotune: None,
     })

@@ -349,6 +349,185 @@ fn prop_json_roundtrip_fuzz() {
     });
 }
 
+/// Simulated pull loop for coalescing properties: random arrival trace,
+/// random pull partitioning, virtual time stepped at pull boundaries —
+/// with the production rule that a worker holding coalesced work wakes
+/// at its earliest flush due time. Returns every flushed group as
+/// (flush_offset, ReadyGroup).
+#[allow(clippy::type_complexity)]
+fn run_coalesce_sim(
+    rng: &mut Rng,
+    policy: spfft::coordinator::CoalescePolicy,
+    window: std::time::Duration,
+    arrivals: Vec<(usize, usize, std::time::Duration)>, // (key, seq, enqueue offset)
+) -> Vec<(std::time::Duration, spfft::coordinator::ReadyGroup<usize, (usize, usize, std::time::Instant)>)> {
+    use std::time::{Duration, Instant};
+    let base = Instant::now();
+    let mut state: spfft::coordinator::CoalesceState<usize, (usize, usize, Instant)> =
+        spfft::coordinator::CoalesceState::new(policy, window);
+    let mut flushed = Vec::new();
+    let mut i = 0;
+    let mut now = Duration::ZERO;
+    while i < arrivals.len() || !state.is_empty() {
+        // the worker wakes at the earliest held due time, or pulls the
+        // next chunk of arrivals, whichever comes first
+        let wake = state
+            .next_flush_due(|t: &(usize, usize, Instant)| t.2)
+            .map(|w| w.saturating_duration_since(base));
+        let next_arrival = arrivals.get(i).map(|a| a.2);
+        let (at, batch) = match (next_arrival, wake) {
+            (Some(a), Some(w)) if w < a => (w, Vec::new()),
+            (Some(a), _) => {
+                // pull a random-size chunk of arrivals that share this
+                // window (arrival times within `window` of the first)
+                let mut chunk = Vec::new();
+                let take = rng.range(1, 9);
+                while i < arrivals.len() && chunk.len() < take && arrivals[i].2 <= a + window {
+                    let (k, seq, off) = arrivals[i];
+                    chunk.push((k, seq, base + off));
+                    i += 1;
+                }
+                // the pull closes at its last arrival — always within
+                // one window of the first, so deadline slack holds
+                (arrivals[i - 1].2, chunk)
+            }
+            (None, Some(w)) => (w, Vec::new()),
+            (None, None) => break,
+        };
+        now = now.max(at);
+        let ready = state.admit(batch, base + now, |t| t.0, |t| t.2);
+        for g in ready {
+            flushed.push((now, g));
+        }
+    }
+    flushed
+}
+
+#[test]
+fn prop_coalescing_never_holds_a_request_past_its_deadline() {
+    // For any policy and any arrival trace, every request flushes by
+    // (enqueue + deadline), as long as the worker honors the wake rule —
+    // and every request flushes exactly once (conservation).
+    check("coalesce-deadline", Config { cases: 32, ..Default::default() }, |rng| {
+        use std::time::Duration;
+        let window = Duration::from_micros(rng.range(50, 500) as u64);
+        let policy = spfft::coordinator::CoalescePolicy {
+            max_hold_windows: rng.range(1, 6) as u32,
+            target_group: rng.range(2, 9),
+            min_backlog: rng.range(0, 4),
+            deadline: window * rng.range(2, 40) as u32,
+        };
+        let count = rng.range(1, 60);
+        let mut t = 0u64;
+        let arrivals: Vec<(usize, usize, Duration)> = (0..count)
+            .map(|seq| {
+                t += rng.range(0, 400) as u64;
+                (rng.range(1, 4), seq, Duration::from_micros(t))
+            })
+            .collect();
+        let flushed = run_coalesce_sim(rng, policy, window, arrivals.clone());
+        let mut seen = vec![false; count];
+        for (at, g) in &flushed {
+            for &(_, seq, _) in &g.items {
+                prop_assert!(!seen[seq], "request {seq} flushed twice");
+                seen[seq] = true;
+                let enq_off = arrivals[seq].2;
+                prop_assert!(
+                    *at <= enq_off + policy.deadline,
+                    "request {seq} held past deadline: flushed {at:?}, enq {enq_off:?} + {:?}",
+                    policy.deadline
+                );
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s), "requests lost in the coalescer");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalescing_preserves_fifo_per_key() {
+    // Within a key, requests leave the coalescer in arrival order — both
+    // inside one group and across successively flushed groups.
+    check("coalesce-fifo", Config { cases: 32, ..Default::default() }, |rng| {
+        use std::time::Duration;
+        let window = Duration::from_micros(200);
+        let policy = spfft::coordinator::CoalescePolicy {
+            max_hold_windows: rng.range(1, 5) as u32,
+            target_group: rng.range(2, 7),
+            min_backlog: rng.range(0, 3),
+            deadline: Duration::from_micros(rng.range(500, 5000) as u64),
+        };
+        let count = rng.range(2, 80);
+        let mut t = 0u64;
+        let arrivals: Vec<(usize, usize, Duration)> = (0..count)
+            .map(|seq| {
+                t += rng.range(0, 300) as u64;
+                (rng.range(1, 3), seq, Duration::from_micros(t))
+            })
+            .collect();
+        let flushed = run_coalesce_sim(rng, policy, window, arrivals);
+        let mut last_seq: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        for (_, g) in &flushed {
+            for &(key, seq, _) in &g.items {
+                if let Some(&prev) = last_seq.get(&key) {
+                    prop_assert!(seq > prev, "key {key}: seq {seq} after {prev}");
+                }
+                last_seq.insert(key, seq);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalesced_groups_execute_bit_identically_to_sequential() {
+    // Whatever groups the coalescer forms, executing each through the
+    // batched kernels equals running its members one by one — the
+    // coalescing layer can never perturb numerics.
+    let mut ex = Executor::new();
+    check("coalesce-bit-identical", Config { cases: 16, ..Default::default() }, |rng| {
+        use std::time::Duration;
+        let l = rng.range(3, 9);
+        let n = 1usize << l;
+        let plan = random_plan(rng, l);
+        let cp = ex.compile(&plan, n, true);
+        let window = Duration::from_micros(200);
+        let policy = spfft::coordinator::CoalescePolicy {
+            max_hold_windows: rng.range(1, 4) as u32,
+            target_group: rng.range(2, 6),
+            min_backlog: 0,
+            deadline: Duration::from_micros(2000),
+        };
+        let count = rng.range(2, 24);
+        let inputs: Vec<SplitComplex> =
+            (0..count).map(|_| SplitComplex::random(n, rng.next_u64())).collect();
+        let mut t = 0u64;
+        let arrivals: Vec<(usize, usize, Duration)> = (0..count)
+            .map(|seq| {
+                t += rng.range(0, 300) as u64;
+                (n, seq, Duration::from_micros(t))
+            })
+            .collect();
+        let flushed = run_coalesce_sim(rng, policy, window, arrivals);
+        for (_, g) in &flushed {
+            if g.items.len() == 1 {
+                continue; // scalar path by definition
+            }
+            let group_inputs: Vec<&SplitComplex> =
+                g.items.iter().map(|&(_, seq, _)| &inputs[seq]).collect();
+            let mut buf = spfft::fft::BatchBuffer::new(n, group_inputs.len());
+            buf.gather(&group_inputs);
+            cp.run_batch(&mut buf);
+            for (lane, &(_, seq, _)) in g.items.iter().enumerate() {
+                let got = buf.scatter_lane(lane);
+                let want = cp.run_on(&inputs[seq]);
+                prop_assert!(got == want, "{plan} n={n}: coalesced lane {lane} diverges");
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_batcher_conserves_items_in_order() {
     use spfft::coordinator::{BatchPolicy, Batcher};

@@ -1,0 +1,249 @@
+//! Regression tests for the simulator's batch axis (`edge_ns_batched`).
+//!
+//! Three layers of lock-down:
+//! * identities and shape properties (B=1 exactness, monotone
+//!   amortization up to the modeled bound, sublinearity for
+//!   twiddle-bound edges);
+//! * a golden-value table pinning the modal-class cost surface, so any
+//!   future parameter or formula edit shows up as a visible diff here;
+//! * the planning consequence: context-aware search over the batched
+//!   surface legitimately selects a *different* arrangement than the
+//!   unbatched search — the batch axis is visible to offline planning.
+
+use spfft::cost::{BatchedCost, SimCost};
+use spfft::edge::{Context, EdgeType, ALL_EDGES};
+use spfft::graph::edge_allowed;
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::sim::{Machine, MachineParams};
+
+fn contexts(machine: &Machine) -> Vec<Context> {
+    Context::all()
+        .filter(|c| match c {
+            Context::Start => true,
+            Context::After(e) => machine.edge_available(*e),
+        })
+        .collect()
+}
+
+#[test]
+fn batched_at_b1_equals_edge_ns_exactly() {
+    // The acceptance identity: edge_ns_batched(B=1) == edge_ns, bitwise,
+    // for every cell of both machines (singleton groups run scalar).
+    for machine in [Machine::m1(), Machine::haswell()] {
+        for n in [256usize, 1024] {
+            let l = spfft::fft::log2i(n);
+            for e in ALL_EDGES {
+                if !machine.edge_available(e) {
+                    continue;
+                }
+                for s in 0..l {
+                    if !edge_allowed(e, s, l) {
+                        continue;
+                    }
+                    for ctx in contexts(&machine) {
+                        assert_eq!(
+                            machine.edge_ns_batched(n, e, s, ctx, 1),
+                            machine.edge_ns(n, e, s, ctx),
+                            "{} {e}@{s} {ctx} n={n}",
+                            machine.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_transform_cost_is_monotone_up_to_the_amortization_bound() {
+    // Over lane multiples up to `batch_amort_bound`, per-transform
+    // batched cost never increases — and the first lane multiple is
+    // already no worse than scalar. (Below a full lane group the padding
+    // waste legitimately costs more; past the bound the thrash term
+    // takes over — both excluded by construction.)
+    for machine in [Machine::m1(), Machine::haswell()] {
+        let lanes = machine.params.lanes;
+        for n in [256usize, 1024] {
+            let bound = machine.params.batch_amort_bound(n);
+            if bound < 2 * lanes {
+                continue; // no amortization range at this size (e.g. haswell n=1024)
+            }
+            let l = spfft::fft::log2i(n);
+            for e in ALL_EDGES {
+                if !machine.edge_available(e) {
+                    continue;
+                }
+                for s in 0..l {
+                    if !edge_allowed(e, s, l) {
+                        continue;
+                    }
+                    for ctx in contexts(&machine) {
+                        let mut prev = machine.edge_ns(n, e, s, ctx);
+                        let mut b = lanes;
+                        while b <= bound {
+                            let per_tx = machine.edge_ns_batched(n, e, s, ctx, b) / b as f64;
+                            assert!(
+                                per_tx <= prev * (1.0 + 1e-9),
+                                "{} {e}@{s} {ctx} n={n} B={b}: {per_tx} > {prev}",
+                                machine.name()
+                            );
+                            prev = per_tx;
+                            b *= 2;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn twiddle_bound_edges_are_strongly_sublinear() {
+    // The headline amortizations: a late-stage R2 (SIMD collapse +
+    // per-transform twiddle reloads in scalar mode) and a mid-path F8
+    // (j-twiddle streaming) gain far more than the flat memory share.
+    let m = Machine::m1();
+    let late_r2 = Context::After(EdgeType::R4);
+    let one = m.edge_ns(1024, EdgeType::R2, 9, late_r2);
+    let whole = m.edge_ns_batched(1024, EdgeType::R2, 9, late_r2, 16);
+    assert!(whole < 0.2 * 16.0 * one, "late R2: {whole} vs {}", 16.0 * one);
+    let one = m.edge_ns(1024, EdgeType::F8, 2, late_r2);
+    let whole = m.edge_ns_batched(1024, EdgeType::F8, 2, late_r2, 16);
+    assert!(whole < 0.85 * 16.0 * one, "mid F8: {whole} vs {}", 16.0 * one);
+}
+
+#[test]
+fn thrash_bounds_amortization_past_the_panel_capacity() {
+    // Past the bound the panel no longer streams: per-transform cost
+    // turns back up (haswell n=1024 has no amortization range at all).
+    let m = Machine::m1();
+    let ctx = Context::After(EdgeType::R4);
+    let bound = m.params.batch_amort_bound(1024);
+    assert_eq!(bound, 16);
+    let at_bound = m.edge_ns_batched(1024, EdgeType::R4, 2, ctx, bound) / bound as f64;
+    let past = m.edge_ns_batched(1024, EdgeType::R4, 2, ctx, 4 * bound) / (4 * bound) as f64;
+    assert!(past > at_bound, "thrash never engaged: {past} <= {at_bound}");
+    assert_eq!(MachineParams::haswell().batch_amort_bound(1024), 0);
+}
+
+/// Golden values for the modal-class cost table (m1, n=1024): whole-batch
+/// nanoseconds of `edge_ns_batched` at B ∈ {1, 2, 4, 16} — batch classes
+/// 0, 1, 2, 4. Generated from the reference implementation of the model;
+/// any parameter or formula change must update these deliberately.
+#[test]
+fn golden_modal_class_cost_table_m1_n1024() {
+    use Context::{After, Start};
+    let m = Machine::m1();
+    let golden: &[(EdgeType, usize, Context, usize, f64)] = &[
+        (EdgeType::R2, 0, Start, 1, 812.919954279067),
+        (EdgeType::R2, 0, Start, 2, 3248.3771921162684),
+        (EdgeType::R2, 0, Start, 4, 3248.3771921162684),
+        (EdgeType::R2, 0, Start, 16, 12633.938143465073),
+        (EdgeType::R2, 9, After(EdgeType::R4), 1, 3949.626837554482),
+        (EdgeType::R2, 9, After(EdgeType::R4), 2, 1281.915350217929),
+        (EdgeType::R2, 9, After(EdgeType::R4), 4, 1281.915350217929),
+        (EdgeType::R2, 9, After(EdgeType::R4), 16, 2253.4220101307574),
+        (EdgeType::R4, 0, Start, 1, 855.491954279067),
+        (EdgeType::R4, 0, Start, 2, 3418.6651921162684),
+        (EdgeType::R4, 0, Start, 4, 3418.6651921162684),
+        (EdgeType::R4, 0, Start, 16, 13187.374143465073),
+        (EdgeType::R4, 2, After(EdgeType::R4), 1, 289.7236781128519),
+        (EdgeType::R4, 2, After(EdgeType::R4), 2, 1145.6842124514076),
+        (EdgeType::R4, 2, After(EdgeType::R4), 4, 1145.6842124514076),
+        (EdgeType::R4, 2, After(EdgeType::R4), 16, 4085.5423498056307),
+        (EdgeType::R8, 3, After(EdgeType::R2), 1, 1021.9537623983979),
+        (EdgeType::R8, 3, After(EdgeType::R2), 2, 4061.3940495935913),
+        (EdgeType::R8, 3, After(EdgeType::R2), 4, 4061.3940495935913),
+        (EdgeType::R8, 3, After(EdgeType::R2), 16, 15488.409198374366),
+        (EdgeType::F8, 7, After(EdgeType::R4), 1, 590.9673101660973),
+        (EdgeType::F8, 7, After(EdgeType::R4), 2, 2214.893240664389),
+        (EdgeType::F8, 7, After(EdgeType::R4), 4, 2214.893240664389),
+        (EdgeType::F8, 7, After(EdgeType::R4), 16, 8859.572962657556),
+        (EdgeType::F8, 2, After(EdgeType::R4), 1, 858.257178112852),
+        (EdgeType::F8, 2, After(EdgeType::R4), 2, 2824.4937124514076),
+        (EdgeType::F8, 2, After(EdgeType::R4), 4, 2824.4937124514076),
+        (EdgeType::F8, 2, After(EdgeType::R4), 16, 10689.439849805629),
+        (EdgeType::F16, 6, After(EdgeType::R4), 1, 727.4072736482506),
+        (EdgeType::F16, 6, After(EdgeType::R4), 2, 2760.6530945930026),
+        (EdgeType::F16, 6, After(EdgeType::R4), 4, 2760.6530945930026),
+        (EdgeType::F16, 6, After(EdgeType::R4), 16, 11042.61237837201),
+        (EdgeType::F32, 5, Start, 1, 928.6378973277183),
+        (EdgeType::F32, 5, Start, 2, 3565.5755893108726),
+        (EdgeType::F32, 5, Start, 4, 3565.5755893108726),
+        (EdgeType::F32, 5, Start, 16, 14262.30235724349),
+    ];
+    for &(e, s, ctx, b, want) in golden {
+        let got = m.edge_ns_batched(1024, e, s, ctx, b);
+        let rel = (got - want).abs() / want;
+        assert!(rel < 1e-6, "{e}@{s} {ctx} B={b}: got {got}, golden {want} (rel {rel:e})");
+    }
+}
+
+#[test]
+fn batch_padding_makes_b2_and_b4_whole_batch_identical() {
+    // B=2 pads to a full lane group: the panel and the instruction
+    // stream are those of B=4 with two dead lanes — whole-batch time is
+    // identical, per-transform cost doubles. (Why the engine keeps
+    // singletons scalar and the coalescer aims for >= a lane group.)
+    let m = Machine::m1();
+    for (e, s) in [(EdgeType::R4, 0usize), (EdgeType::F8, 7)] {
+        let ctx = Context::After(EdgeType::R4);
+        let b2 = m.edge_ns_batched(1024, e, s, ctx, 2);
+        let b4 = m.edge_ns_batched(1024, e, s, ctx, 4);
+        assert!((b2 - b4).abs() < 1e-9, "{e}@{s}: b2={b2} b4={b4}");
+    }
+}
+
+#[test]
+fn planning_under_a_batch_class_selects_a_different_plan() {
+    // The acceptance criterion: the same context-aware Dijkstra over the
+    // batched per-transform surface (BatchedCost) picks a different
+    // arrangement than over the unbatched surface, at n=1024 and n=256.
+    //
+    // n=1024: the scalar optimum ends in a terminal F8 (transpose trick,
+    // no twiddle stream); under B=16 the lane-major layout voids the
+    // terminal advantage and panel-scaled affinity makes the late radix
+    // tail cheap, so the fused block migrates to the front.
+    let scalar = run_plan(&mut SimCost::m1(1024), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    assert_eq!(scalar, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+    let batched = run_plan(
+        &mut BatchedCost::new(SimCost::m1(1024), 16),
+        &Strategy::DijkstraContextAware { k: 1 },
+    )
+    .plan;
+    assert_ne!(batched, scalar, "batch axis invisible to planning at n=1024");
+    assert_eq!(batched.edges()[0], EdgeType::F8, "expected a leading fused block, got {batched}");
+
+    // n=256: scalar ends in a terminal F16; the batched surface drops
+    // fused blocks entirely (radix passes amortize their round trips).
+    let scalar = run_plan(&mut SimCost::m1(256), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    assert_eq!(scalar, Plan::parse("R4,R4,F16").unwrap());
+    let batched = run_plan(
+        &mut BatchedCost::new(SimCost::m1(256), 16),
+        &Strategy::DijkstraContextAware { k: 1 },
+    )
+    .plan;
+    assert_ne!(batched, scalar, "batch axis invisible to planning at n=256");
+    assert!(
+        batched.edges().iter().all(|e| !e.is_fused()),
+        "expected a radix-only batched plan, got {batched}"
+    );
+}
+
+#[test]
+fn batched_wisdom_tables_reproduce_the_batched_plan() {
+    // Harvesting the batched surface into a v1 table and planning over
+    // the replay gives the same arrangement as planning over the live
+    // surface — the offline-prior path (`calibrate`, `wisdom --export
+    // --batch B`) carries the batch axis faithfully.
+    let live = run_plan(
+        &mut BatchedCost::new(SimCost::m1(1024), 16),
+        &Strategy::DijkstraContextAware { k: 1 },
+    )
+    .plan;
+    let w16 = spfft::cost::Wisdom::harvest_batched(&mut SimCost::m1(1024), "m1", 16);
+    let replayed =
+        run_plan(&mut w16.to_cost(), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    assert_eq!(replayed, live);
+}

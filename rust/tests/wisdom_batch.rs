@@ -1,0 +1,97 @@
+//! Golden-file tests for wisdom v2's batch axis: batched-prior records
+//! written by the `bin/calibrate --prior-out` path must round-trip
+//! through disk, legacy files without a `"batch"` field must parse as
+//! batch = 1, and a loaded database must seed the online model's class
+//! priors and live estimates at the right classes.
+
+use spfft::autotune::{batch_class, OnlineCost, WisdomV2};
+use spfft::cost::{SimCost, Wisdom};
+use spfft::edge::{Context, EdgeType};
+
+/// Checked-in fixture written before the batched engine existed: no
+/// `"batch"` fields anywhere.
+const LEGACY_NOBATCH: &str = include_str!("data/wisdom2_legacy_nobatch.json");
+
+/// Checked-in fixture in the current format: unbatched records plus
+/// pure batched priors (count = 0) and one batched observation.
+const BATCHED_GOLDEN: &str = include_str!("data/wisdom2_batched_golden.json");
+
+#[test]
+fn legacy_nobatch_fixture_parses_as_batch_one() {
+    let w2 = WisdomV2::from_json(LEGACY_NOBATCH).expect("legacy fixture must parse");
+    assert_eq!(w2.n, 256);
+    assert_eq!(w2.source, "sim:m1");
+    assert_eq!(w2.cells.len(), 3);
+    assert!(w2.cells.iter().all(|c| c.batch == 1), "legacy records must default to batch=1");
+    let r2 = &w2.cells[0];
+    assert_eq!((r2.edge, r2.stage, r2.ctx), (EdgeType::R2, 0, Context::Start));
+    assert_eq!((r2.prior_ns, r2.obs_ns, r2.count), (812.5, 900.25, 12));
+    // re-serializing writes the modern format; it must round-trip
+    let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+    assert_eq!(back, w2);
+    assert!(w2.to_json().contains("\"batch\":1"), "modern serialization is explicit");
+}
+
+#[test]
+fn batched_golden_fixture_roundtrips_and_seeds_classes() {
+    let w2 = WisdomV2::from_json(BATCHED_GOLDEN).expect("batched fixture must parse");
+    assert_eq!(w2.cells.len(), 5);
+    let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+    assert_eq!(back, w2);
+
+    // Seed a fresh model over a matching prior shape and verify every
+    // record landed where its class says.
+    let prior = Wisdom {
+        n: 256,
+        source: "sim:m1".into(),
+        cells: vec![
+            (EdgeType::R2, 0, Context::Start, 812.5),
+            (EdgeType::F8, 5, Context::After(EdgeType::R2), 145.5),
+        ],
+    };
+    let mut model = OnlineCost::from_wisdom(&prior, 0.5, 4.0);
+    w2.seed_model(&mut model);
+    let r2 = (EdgeType::R2, 0, Context::Start);
+    let f8 = (EdgeType::F8, 5, Context::After(EdgeType::R2));
+    // pure batched priors answer planning queries at their class
+    assert_eq!(model.prior_at(r2, batch_class(4)), Some(603.25));
+    assert_eq!(model.estimate_at(f8, batch_class(16)), 96.75);
+    // the batched observation carries its count and blends at class 4
+    let obs = model.observation_at(r2, batch_class(16)).expect("seeded observation");
+    assert_eq!((obs.mean, obs.count), (455.5, 37));
+    // class 0 stays on the unbatched surface
+    assert_eq!(model.prior_at(r2, 0), Some(812.5));
+    // a class no record mentions falls back to the unbatched prior
+    assert_eq!(model.estimate_at(r2, batch_class(64)), 812.5);
+}
+
+#[test]
+fn calibrate_path_roundtrips_batched_priors_through_disk() {
+    // The exact pipeline `bin/calibrate --prior-out` runs: harvest the
+    // sim's batched surfaces, assemble a v2 database, save, reload.
+    let n = 256;
+    let source = "sim:m1";
+    let prior = Wisdom::harvest(&mut SimCost::m1(n), source);
+    let batched: Vec<(usize, Wisdom)> = [4usize, 16]
+        .iter()
+        .map(|&b| (b, Wisdom::harvest_batched(&mut SimCost::m1(n), source, b)))
+        .collect();
+    let w2 = WisdomV2::from_batched_priors(&prior, &batched).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("spfft-wisdom-batch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("batched.wisdom2.json");
+    w2.save(&path).unwrap();
+    let back = WisdomV2::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(back, w2);
+
+    // loaded priors steer batched planning queries on a fresh model
+    let mut model = OnlineCost::from_wisdom(&prior, 0.5, 4.0);
+    back.seed_model(&mut model);
+    let (e, s, ctx, base) = prior.cells[0];
+    let amortized = batched[1].1.cells[0].3;
+    assert_eq!(model.estimate_at((e, s, ctx), batch_class(16)), amortized);
+    assert!(amortized <= base);
+    assert_eq!(model.total_samples(), 0);
+}
