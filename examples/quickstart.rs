@@ -1,11 +1,14 @@
 //! Quickstart: plan an FFT with both searches, execute the winner on the
 //! native path and (if `make artifacts` has run) on the PJRT artifact
-//! path, and verify the numerics against the reference DFT.
+//! path, verify the numerics against the reference DFT, then demo the
+//! transform-kind axis: a forward → inverse round trip and a real-input
+//! (R2C) spectrum.
 //!
 //!     cargo run --release --example quickstart
 
 use spfft::cost::SimCost;
 use spfft::fft::{reference::fft_ref, Executor, SplitComplex};
+use spfft::kind::TransformKind;
 use spfft::planner::{plan as run_plan, Strategy};
 use spfft::util::stats::gflops;
 
@@ -30,7 +33,40 @@ fn main() -> anyhow::Result<()> {
     println!("native execution of {}: rel err vs reference DFT = {rel:.2e}", ca.plan);
     assert!(rel < 1e-4);
 
-    // 3. Execute the same plan through the AOT PJRT artifacts (Layer 1+2).
+    // 3. The kind axis: the same plan compiles for the inverse transform
+    // (identical kernels, boundary conjugation + folded 1/n scale), so
+    // inverse(forward(x)) ≈ x.
+    let inverse = ex.compile_kind(&ca.plan, n, true, TransformKind::Inverse);
+    let back = inverse.run_on(&got);
+    let round_trip = back.max_abs_diff(&input) / input.max_abs().max(1.0);
+    println!("inverse(forward(x)) round trip: rel err = {round_trip:.2e}");
+    assert!(round_trip < 1e-4);
+
+    // 4. A real-input (R2C) transform: the n-point real signal packs
+    // into an n/2-point c2c (planned on the half-size surface) plus the
+    // split/unpack step; the output is the full Hermitian spectrum.
+    let mut half_cost = SimCost::m1(n / 2);
+    let real_plan =
+        run_plan(&mut spfft::cost::KindCost::new(&mut half_cost, TransformKind::RealForward),
+                 &Strategy::DijkstraContextAware { k: 1 });
+    let r2c = ex.compile_kind(&real_plan.plan, n, true, TransformKind::RealForward);
+    let mut signal = SplitComplex::random(n, 7);
+    signal.im.iter_mut().for_each(|v| *v = 0.0);
+    let spectrum = r2c.run_on(&signal);
+    let want_spectrum = fft_ref(&signal);
+    let rel_r = spectrum.max_abs_diff(&want_spectrum) / want_spectrum.max_abs().max(1.0);
+    println!(
+        "real-input spectrum via {} + unpack: rel err = {rel_r:.2e} (DC bin {:.2})",
+        real_plan.plan, spectrum.re[0]
+    );
+    assert!(rel_r < 1e-4);
+    // ... and C2R inverts it back to the signal
+    let c2r = ex.compile_kind(&real_plan.plan, n, true, TransformKind::RealInverse);
+    let recovered = c2r.run_on(&spectrum);
+    assert!(recovered.max_abs_diff(&signal) / signal.max_abs().max(1.0) < 1e-4);
+    println!("real round trip (c2r(r2c(x)) ≈ x) OK");
+
+    // 5. Execute the same plan through the AOT PJRT artifacts (Layer 1+2).
     let dir = spfft::runtime::artifacts_dir();
     match spfft::runtime::Registry::load(&dir) {
         Ok(mut reg) => {

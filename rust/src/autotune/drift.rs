@@ -47,6 +47,10 @@ pub struct DriftReport {
 }
 
 /// Compares live observations against the searched-under reference.
+/// Kind-aware implicitly: [`OnlineCost::observed_cells`] returns the
+/// *focus kind's* observation slots, so a detector over a model tuned
+/// for an inverse (or split-calibrated) workload measures that
+/// workload's movement.
 #[derive(Debug, Clone)]
 pub struct DriftDetector {
     /// (cell, batch class) → per-transform reference ns. Class 0 is
@@ -162,13 +166,27 @@ mod tests {
 
     fn feed(model: &mut OnlineCost, cell: Cell, ns: f64, times: usize) {
         for _ in 0..times {
-            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, batch: 1, ns });
+            model.observe(&EdgeSample {
+                edge: cell.0,
+                stage: cell.1,
+                ctx: cell.2,
+                kind: crate::kind::TransformKind::Forward,
+                batch: 1,
+                ns,
+            });
         }
     }
 
     fn feed_b(model: &mut OnlineCost, cell: Cell, batch: usize, ns: f64, times: usize) {
         for _ in 0..times {
-            model.observe(&EdgeSample { edge: cell.0, stage: cell.1, ctx: cell.2, batch, ns });
+            model.observe(&EdgeSample {
+                edge: cell.0,
+                stage: cell.1,
+                ctx: cell.2,
+                kind: crate::kind::TransformKind::Forward,
+                batch,
+                ns,
+            });
         }
     }
 

@@ -62,6 +62,7 @@ use std::sync::Arc;
 
 use crate::coordinator::plancache::PlanCache;
 use crate::cost::Wisdom;
+use crate::kind::TransformKind;
 
 /// Configuration of the online autotuning loop.
 ///
@@ -73,6 +74,16 @@ pub struct AutotuneConfig {
     /// Offline measurement prior (the weights the initial plan was
     /// searched under). Autotuning applies to FFTs of size `prior.n`.
     pub prior: Wisdom,
+    /// Transform kind of the tuned c2c workload (`Forward` or
+    /// `Inverse`; real kinds are rejected at [`Autotuner::start`] —
+    /// real serving reuses the tuned half-size c2c surface, and real
+    /// groups are not sampled). Inverse samples fold onto the forward
+    /// tables unless `split_kinds` is set.
+    pub kind: TransformKind,
+    /// Calibration split: keep per-kind observation cells instead of
+    /// folding inverse kinds onto the forward tables (see
+    /// [`model::OnlineCost::set_split_kinds`]).
+    pub split_kinds: bool,
     /// Offline *batched* priors: per-transform databases harvested over
     /// batches of each listed width (`Wisdom::harvest_batched` over a
     /// provider with a native batched path, or `bin/calibrate
@@ -116,6 +127,8 @@ impl AutotuneConfig {
     pub fn new(prior: Wisdom) -> AutotuneConfig {
         AutotuneConfig {
             prior,
+            kind: TransformKind::Forward,
+            split_kinds: false,
             batched_priors: Vec::new(),
             sample_period: 64,
             drift_threshold: 0.25,
@@ -138,6 +151,8 @@ impl fmt::Debug for AutotuneConfig {
         f.debug_struct("AutotuneConfig")
             .field("n", &self.prior.n)
             .field("source", &self.prior.source)
+            .field("kind", &self.kind)
+            .field("split_kinds", &self.split_kinds)
             .field(
                 "batched_priors",
                 &self.batched_priors.iter().map(|(b, _)| *b).collect::<Vec<_>>(),

@@ -23,10 +23,13 @@ use std::collections::HashMap;
 
 use crate::cost::{CostModel, Wisdom};
 use crate::edge::{Context, EdgeType};
+use crate::kind::TransformKind;
 
 use super::sampler::EdgeSample;
 
-/// A cell key: (edge, stage, predecessor context).
+/// A cell key: (edge, stage, predecessor context). Observations carry a
+/// third axis — the transform kind — so the full observation key is
+/// (kind, cell, batch class); see [`OnlineCost::observe`].
 pub type Cell = (EdgeType, usize, Context);
 
 /// Number of batch-size classes (log2 buckets): class 0 = B=1, class 1 =
@@ -62,13 +65,23 @@ pub struct OnlineCost {
     /// Batch class planning queries read (what B the next search plans
     /// for); class 0 = unbatched, the prior's own regime.
     focus: usize,
+    /// Transform kind planning queries read (what workload the next
+    /// search optimizes). Folded through [`OnlineCost::kind_slot`].
+    focus_kind: TransformKind,
+    /// Calibration split: when false (default), inverse kinds fold onto
+    /// the forward tables ([`TransformKind::measured_alias`] — the c2c
+    /// kernels are literally shared); when true, every kind keeps its
+    /// own observation cells so an operator can verify the symmetry.
+    split_kinds: bool,
     prior: HashMap<Cell, f64>,
     /// Per-batch-class priors (class >= 1): the amortized per-transform
     /// surface harvested offline from a provider with a native batched
     /// path (`SimCost`, `NativeCost`). A class without one falls back to
-    /// the unbatched prior — the pre-batched-model behavior.
+    /// the unbatched prior — the pre-batched-model behavior. Kind-less:
+    /// kinds share the batched c2c surface.
     class_priors: HashMap<(Cell, usize), f64>,
-    obs: HashMap<(Cell, usize), CellEstimate>,
+    /// (cell, batch class, kind slot) → live estimate.
+    obs: HashMap<(Cell, usize, TransformKind), CellEstimate>,
 }
 
 impl OnlineCost {
@@ -86,10 +99,35 @@ impl OnlineCost {
             alpha,
             blend_samples,
             focus: 0,
+            focus_kind: TransformKind::Forward,
+            split_kinds: false,
             prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
             class_priors: HashMap::new(),
             obs: HashMap::new(),
         }
+    }
+
+    /// The observation slot a kind's samples land in: the kind itself
+    /// under the calibration split, its [`TransformKind::measured_alias`]
+    /// otherwise.
+    fn kind_slot(&self, kind: TransformKind) -> TransformKind {
+        if self.split_kinds {
+            kind
+        } else {
+            kind.measured_alias()
+        }
+    }
+
+    /// Enable/disable the calibration split (see `split_kinds` field).
+    /// Flip before feeding samples: existing folded observations are not
+    /// re-keyed.
+    pub fn set_split_kinds(&mut self, split: bool) {
+        self.split_kinds = split;
+    }
+
+    /// Whether the calibration split is on.
+    pub fn split_kinds(&self) -> bool {
+        self.split_kinds
     }
 
     /// Install a per-class prior: the offline per-transform estimate for
@@ -136,15 +174,21 @@ impl OnlineCost {
         self.prior.get(&cell).copied()
     }
 
-    /// Fold one live sample into its (cell, batch class), normalized per
-    /// transform. Non-finite or non-positive values (timer glitches) and
-    /// zero batch sizes are discarded.
+    /// Fold one live sample into its (kind, cell, batch class),
+    /// normalized per transform (inverse kinds fold onto the forward
+    /// slot unless the calibration split is on). Non-finite or
+    /// non-positive values (timer glitches) and zero batch sizes are
+    /// discarded.
     pub fn observe(&mut self, sample: &EdgeSample) {
         if !sample.ns.is_finite() || sample.ns <= 0.0 || sample.batch == 0 {
             return;
         }
         let per_tx = sample.ns / sample.batch as f64;
-        let key = ((sample.edge, sample.stage, sample.ctx), batch_class(sample.batch));
+        let key = (
+            (sample.edge, sample.stage, sample.ctx),
+            batch_class(sample.batch),
+            self.kind_slot(sample.kind),
+        );
         match self.obs.get_mut(&key) {
             Some(est) => {
                 est.mean = self.alpha * per_tx + (1.0 - self.alpha) * est.mean;
@@ -156,14 +200,28 @@ impl OnlineCost {
         }
     }
 
-    /// Seed a (cell, class) live estimate directly (wisdom v2 restore).
-    pub fn seed_at(&mut self, cell: Cell, class: usize, mean: f64, count: u64) {
+    /// Seed a (kind, cell, class) live estimate directly (wisdom v2
+    /// restore). The kind folds through the same slot as live samples.
+    pub fn seed_kind_at(
+        &mut self,
+        cell: Cell,
+        class: usize,
+        kind: TransformKind,
+        mean: f64,
+        count: u64,
+    ) {
         if mean.is_finite() && mean > 0.0 && count > 0 && class < BATCH_CLASSES {
-            self.obs.insert((cell, class), CellEstimate { mean, count });
+            let slot = self.kind_slot(kind);
+            self.obs.insert((cell, class, slot), CellEstimate { mean, count });
         }
     }
 
-    /// Seed the unbatched (class 0) estimate.
+    /// Seed a forward (cell, class) live estimate.
+    pub fn seed_at(&mut self, cell: Cell, class: usize, mean: f64, count: u64) {
+        self.seed_kind_at(cell, class, TransformKind::Forward, mean, count);
+    }
+
+    /// Seed the unbatched (class 0) forward estimate.
     pub fn seed(&mut self, cell: Cell, mean: f64, count: u64) {
         self.seed_at(cell, 0, mean, count);
     }
@@ -179,12 +237,25 @@ impl OnlineCost {
         self.focus = class.min(BATCH_CLASSES - 1);
     }
 
-    /// The blended per-transform estimate for `cell` at a batch class.
-    /// Cells without observations at that class answer from the prior
-    /// (the class's own batched prior when one is installed).
-    pub fn estimate_at(&self, cell: Cell, class: usize) -> f64 {
+    /// Transform kind planning queries are answered for.
+    pub fn focus_kind(&self) -> TransformKind {
+        self.focus_kind
+    }
+
+    /// Point planning queries at a transform kind (what workload the
+    /// next search optimizes for).
+    pub fn set_focus_kind(&mut self, kind: TransformKind) {
+        self.focus_kind = kind;
+    }
+
+    /// The blended per-transform estimate for `cell` at a batch class
+    /// and kind. Cells without observations at that (class, kind slot)
+    /// answer from the prior (the class's own batched prior when one is
+    /// installed; the prior itself is kind-less — inverse reuses the
+    /// forward tables until live splits say otherwise).
+    pub fn estimate_kind_at(&self, cell: Cell, class: usize, kind: TransformKind) -> f64 {
         let prior = self.prior_at(cell, class);
-        let obs = self.obs.get(&(cell, class)).copied();
+        let obs = self.obs.get(&(cell, class, self.kind_slot(kind))).copied();
         match (prior, obs) {
             (Some(p), Some(o)) => {
                 let c = o.count as f64 / (o.count as f64 + self.blend_samples);
@@ -193,48 +264,75 @@ impl OnlineCost {
             (Some(p), None) => p,
             (None, Some(o)) => o.mean,
             (None, None) => panic!(
-                "online cost: no prior or observation for {}@{} {} (class {class})",
+                "online cost: no prior or observation for {}@{} {} (class {class}, {kind})",
                 cell.0, cell.1, cell.2
             ),
         }
     }
 
-    /// The blended estimate at the unbatched class (B = 1).
+    /// The blended forward estimate at a batch class.
+    pub fn estimate_at(&self, cell: Cell, class: usize) -> f64 {
+        self.estimate_kind_at(cell, class, TransformKind::Forward)
+    }
+
+    /// The blended forward estimate at the unbatched class (B = 1).
     pub fn estimate(&self, cell: Cell) -> f64 {
         self.estimate_at(cell, 0)
     }
 
-    /// Raw live estimate at a batch class; `None` until sampled there.
-    pub fn observation_at(&self, cell: Cell, class: usize) -> Option<CellEstimate> {
-        self.obs.get(&(cell, class)).copied()
+    /// Raw live estimate at a (batch class, kind); `None` until sampled
+    /// there.
+    pub fn observation_kind_at(
+        &self,
+        cell: Cell,
+        class: usize,
+        kind: TransformKind,
+    ) -> Option<CellEstimate> {
+        self.obs.get(&(cell, class, self.kind_slot(kind))).copied()
     }
 
-    /// Raw unbatched live estimate.
+    /// Raw forward live estimate at a batch class.
+    pub fn observation_at(&self, cell: Cell, class: usize) -> Option<CellEstimate> {
+        self.observation_kind_at(cell, class, TransformKind::Forward)
+    }
+
+    /// Raw unbatched forward live estimate.
     pub fn observation(&self, cell: Cell) -> Option<CellEstimate> {
         self.observation_at(cell, 0)
     }
 
-    /// All (cell, batch class) pairs with live observations, sorted.
+    /// All (cell, batch class) pairs with live observations *at the
+    /// focus kind's slot*, sorted — the drift detector's view: detection
+    /// measures movement of the workload the active plan serves.
     pub fn observed_cells(&self) -> Vec<((Cell, usize), CellEstimate)> {
-        let mut v: Vec<((Cell, usize), CellEstimate)> =
-            self.obs.iter().map(|(k, v)| (*k, *v)).collect();
+        let slot = self.kind_slot(self.focus_kind);
+        let mut v: Vec<((Cell, usize), CellEstimate)> = self
+            .obs
+            .iter()
+            .filter(|((_, _, k), _)| *k == slot)
+            .map(|((cell, class, _), v)| ((*cell, *class), *v))
+            .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
-    /// Every prior cell with its prior value and per-class live
-    /// estimates (classes sorted), sorted — the wisdom v2 export view.
+    /// Every prior cell with its prior value and per-(class, kind) live
+    /// estimates (sorted by class then kind index), sorted — the wisdom
+    /// v2 export view.
     #[allow(clippy::type_complexity)]
-    pub fn export_cells(&self) -> Vec<(Cell, f64, Vec<(usize, CellEstimate)>)> {
-        let mut v: Vec<(Cell, f64, Vec<(usize, CellEstimate)>)> = self
+    pub fn export_cells(&self) -> Vec<(Cell, f64, Vec<(usize, TransformKind, CellEstimate)>)> {
+        let mut v: Vec<(Cell, f64, Vec<(usize, TransformKind, CellEstimate)>)> = self
             .prior
             .iter()
             .map(|(cell, &p)| {
-                let mut per_class: Vec<(usize, CellEstimate)> = (0..BATCH_CLASSES)
-                    .filter_map(|c| self.obs.get(&(*cell, c)).map(|e| (c, *e)))
+                let mut per: Vec<(usize, TransformKind, CellEstimate)> = self
+                    .obs
+                    .iter()
+                    .filter(|((c, _, _), _)| c == cell)
+                    .map(|((_, class, kind), e)| (*class, *kind, *e))
                     .collect();
-                per_class.sort_by_key(|&(c, _)| c);
-                (*cell, p, per_class)
+                per.sort_by_key(|&(c, k, _)| (c, k.index()));
+                (*cell, p, per)
             })
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
@@ -256,14 +354,28 @@ impl CostModel for OnlineCost {
         self.edges.clone()
     }
 
-    /// Per-transform cost at the focus batch class — so the same search
-    /// that plans for B=1 plans for any batch regime the service serves.
+    /// Per-transform cost at the focus batch class and focus kind — so
+    /// the same search that plans for B=1 forward traffic plans for any
+    /// (batch, kind) regime the service serves.
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
-        self.estimate_at((edge, stage, ctx), self.focus)
+        self.estimate_kind_at((edge, stage, ctx), self.focus, self.focus_kind)
+    }
+
+    fn edge_ns_kind(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        kind: TransformKind,
+    ) -> f64 {
+        if edge == EdgeType::RU {
+            return self.unpack_ns(ctx);
+        }
+        self.estimate_kind_at((edge, stage, ctx), self.focus, kind)
     }
 
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
-        b as f64 * self.estimate_at((edge, stage, ctx), batch_class(b))
+        b as f64 * self.estimate_kind_at((edge, stage, ctx), batch_class(b), self.focus_kind)
     }
 }
 
@@ -280,11 +392,15 @@ mod tests {
     }
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, batch: 1, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, ns }
     }
 
     fn sample_b(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, batch, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, ns }
+    }
+
+    fn sample_k(edge: EdgeType, stage: usize, ctx: Context, kind: TransformKind, ns: f64) -> EdgeSample {
+        EdgeSample { edge, stage, ctx, kind, batch: 1, ns }
     }
 
     #[test]
@@ -443,5 +559,68 @@ mod tests {
         // 37 positional (edge, stage) pairs x 7 contexts (wisdom tests)
         assert_eq!(model.export_cells().len(), 37 * 7);
         assert_eq!(model.total_samples(), 0);
+    }
+
+    #[test]
+    fn inverse_samples_fold_onto_forward_cells_by_default() {
+        // Inverse c2c passes run the identical forward kernels, so
+        // without the calibration split their samples sharpen the same
+        // cells forward planning reads.
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R4, 0, Context::Start);
+        let prior = model.estimate(cell);
+        for _ in 0..100 {
+            model.observe(&sample_k(cell.0, cell.1, cell.2, TransformKind::Inverse, prior * 3.0));
+        }
+        let fwd = model.observation(cell).expect("folded onto forward");
+        assert_eq!(fwd.count, 100);
+        assert!(model.estimate(cell) > prior * 2.0);
+        // the kind-aware read sees the same slot
+        assert_eq!(
+            model.observation_kind_at(cell, 0, TransformKind::Inverse),
+            model.observation(cell)
+        );
+    }
+
+    #[test]
+    fn calibration_split_keeps_kinds_apart() {
+        let mut model = m1_model(256);
+        model.set_split_kinds(true);
+        assert!(model.split_kinds());
+        let cell = (EdgeType::R4, 0, Context::Start);
+        let prior = model.estimate(cell);
+        for _ in 0..100 {
+            model.observe(&sample_k(cell.0, cell.1, cell.2, TransformKind::Inverse, prior * 3.0));
+        }
+        // forward untouched; the inverse slot learned the asymmetry
+        assert_eq!(model.observation(cell), None);
+        assert_eq!(model.estimate(cell), prior);
+        let inv = model.observation_kind_at(cell, 0, TransformKind::Inverse).unwrap();
+        assert_eq!(inv.count, 100);
+        let est = model.estimate_kind_at(cell, 0, TransformKind::Inverse);
+        assert!(est > prior * 2.0, "split estimate ignored samples: {est}");
+        // planning at the inverse focus kind consumes the split surface
+        model.set_focus_kind(TransformKind::Inverse);
+        assert_eq!(model.focus_kind(), TransformKind::Inverse);
+        assert!(model.edge_ns(cell.0, cell.1, cell.2) > prior * 2.0);
+        // drift's view follows the focus kind
+        assert_eq!(model.observed_cells().len(), 1);
+        model.set_focus_kind(TransformKind::Forward);
+        assert!(model.observed_cells().is_empty());
+    }
+
+    #[test]
+    fn export_carries_the_kind_axis() {
+        let mut model = m1_model(256);
+        model.set_split_kinds(true);
+        let cell = (EdgeType::R2, 0, Context::Start);
+        let prior = model.estimate(cell);
+        model.observe(&sample_k(cell.0, cell.1, cell.2, TransformKind::Forward, prior));
+        model.observe(&sample_k(cell.0, cell.1, cell.2, TransformKind::Inverse, prior * 2.0));
+        let exported = model.export_cells();
+        let (_, _, per) = exported.iter().find(|(c, _, _)| *c == cell).unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!((per[0].0, per[0].1), (0, TransformKind::Forward));
+        assert_eq!((per[1].0, per[1].1), (0, TransformKind::Inverse));
     }
 }

@@ -63,6 +63,8 @@ pub struct AutotuneStatus {
     /// Representative batch size re-planning currently optimizes for
     /// (the modal batch class of recent samples; 1 = unbatched).
     pub plan_batch: usize,
+    /// Transform kind the loop tunes (from `AutotuneConfig::kind`).
+    pub kind: crate::kind::TransformKind,
 }
 
 #[derive(Default)]
@@ -82,6 +84,7 @@ struct Counters {
 /// Handle to a running autotuning loop.
 pub struct Autotuner {
     n: usize,
+    kind: crate::kind::TransformKind,
     slot: Arc<PlanSlot>,
     sampler: Arc<TraceSampler>,
     mode: SampleMode,
@@ -97,9 +100,16 @@ impl Autotuner {
         let n = config.prior.n;
         let l = crate::fft::log2i(n);
         assert!(initial_plan.is_valid_for(l), "plan {initial_plan} invalid for n={n}");
+        assert!(
+            !config.kind.is_real(),
+            "autotune tunes c2c workloads (forward/inverse); real-input serving \
+             reuses the tuned half-size c2c surface"
+        );
 
         let mut model =
             OnlineCost::from_wisdom(&config.prior, config.ewma_alpha, config.blend_samples);
+        model.set_split_kinds(config.split_kinds);
+        model.set_focus_kind(config.kind);
         // Install offline batched priors first: planning at a batched
         // class starts from the amortized surface the batched kernels
         // actually run ("the same cost surface", DESIGN.md §batch).
@@ -150,6 +160,7 @@ impl Autotuner {
         let counters = Arc::new(Counters::default());
 
         let mode = config.mode.clone();
+        let kind = config.kind;
         let handle = {
             let slot = slot.clone();
             let counters = counters.clone();
@@ -159,12 +170,17 @@ impl Autotuner {
                 .expect("spawning autotune thread")
         };
 
-        Autotuner { n, slot, sampler, mode, counters, handle: Mutex::new(Some(handle)) }
+        Autotuner { n, kind, slot, sampler, mode, counters, handle: Mutex::new(Some(handle)) }
     }
 
     /// FFT size this autotuner drives.
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Transform kind of the tuned workload.
+    pub fn kind(&self) -> crate::kind::TransformKind {
+        self.kind
     }
 
     /// The versioned plan slot workers read.
@@ -198,6 +214,7 @@ impl Autotuner {
             active_plan: cur.plan.clone(),
             predicted_ns: cur.predicted_ns,
             plan_batch: class_batch(self.counters.focus_class.load(Ordering::Relaxed) as usize),
+            kind: self.kind,
         }
     }
 
@@ -353,7 +370,14 @@ mod tests {
             .into_iter()
             .map(|(e, s)| {
                 let ns = lookup(e, s, ctx) * factor;
-                let sample = EdgeSample { edge: e, stage: s, ctx, batch: 1, ns };
+                let sample = EdgeSample {
+                    edge: e,
+                    stage: s,
+                    ctx,
+                    kind: crate::kind::TransformKind::Forward,
+                    batch: 1,
+                    ns,
+                };
                 ctx = Context::After(e);
                 sample
             })

@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::edge::{Context, EdgeType};
 use crate::fft::{CompiledPlan, SplitComplex};
+use crate::kind::TransformKind;
 
 /// One observed edge execution in its live context.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,6 +23,11 @@ pub struct EdgeSample {
     pub edge: EdgeType,
     pub stage: usize,
     pub ctx: Context,
+    /// Transform kind of the traced execution — the online model keys
+    /// observations by (kind, cell, batch class). Inverse kinds fold
+    /// onto the forward tables unless the calibration split is on
+    /// ([`TransformKind::measured_alias`]).
+    pub kind: TransformKind,
     /// Transforms executed together in this step (1 = unbatched). `ns`
     /// covers the whole batch; consumers normalize per transform.
     pub batch: usize,
@@ -111,22 +117,25 @@ impl TraceSampler {
     }
 }
 
-/// Execute a compiled plan while collecting one [`EdgeSample`] per edge,
-/// with contexts chained exactly as the expanded search graph defines
-/// them (first edge from `Context::Start`, then `After(prev)`).
+/// Execute a compiled plan while collecting one [`EdgeSample`] per step
+/// (RU boundary steps of real kinds included), with contexts chained
+/// exactly as the expanded search graph defines them (first step from
+/// `Context::Start`, then `After(prev)`), and the plan's kind recorded
+/// on every sample.
 pub fn trace_request(
     cp: &CompiledPlan,
     input: &SplitComplex,
     mode: &SampleMode,
     out: &mut Vec<EdgeSample>,
 ) -> SplitComplex {
+    let kind = cp.kind;
     let mut ctx = Context::Start;
     cp.run_on_traced(input, &mut |edge, stage, measured_ns| {
         let ns = match mode {
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx),
         };
-        out.push(EdgeSample { edge, stage, ctx, batch: 1, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, ns });
         ctx = Context::After(edge);
     })
 }
@@ -145,13 +154,14 @@ pub fn trace_batch(
     out: &mut Vec<EdgeSample>,
 ) {
     let b = buf.batch();
+    let kind = cp.kind;
     let mut ctx = Context::Start;
     cp.run_batch_traced(buf, &mut |edge, stage, measured_ns| {
         let ns = match mode {
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx) * b as f64,
         };
-        out.push(EdgeSample { edge, stage, ctx, batch: b, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: b, ns });
         ctx = Context::After(edge);
     });
 }
@@ -207,6 +217,34 @@ mod tests {
         assert_eq!(samples[3].ctx, Context::After(EdgeType::R2));
         assert!(samples.iter().all(|s| s.ns >= 0.0));
         assert!(samples.iter().all(|s| s.batch == 1));
+        assert!(samples.iter().all(|s| s.kind == TransformKind::Forward));
+    }
+
+    #[test]
+    fn traced_real_transform_samples_the_ru_step_with_its_context() {
+        // The RU boundary step is a real CompiledStep: it gets an
+        // EdgeSample in the context of the final c2c edge (R2C) or at
+        // Start feeding After(RU) into the first c2c edge (C2R) — the
+        // context-dependent cost the paper's thesis says no
+        // context-free model can price.
+        let n = 128;
+        let mut ex = Executor::new();
+        let half = Plan::parse("R4,R2,F8").unwrap(); // 6 levels for h = 64
+        let r2c = ex.compile_kind(&half, n, true, TransformKind::RealForward);
+        let mut samples = Vec::new();
+        trace_request(&r2c, &SplitComplex::random(n, 1), &SampleMode::Wallclock, &mut samples);
+        assert_eq!(samples.len(), 4);
+        let ru = samples.last().unwrap();
+        assert_eq!(ru.edge, EdgeType::RU);
+        assert_eq!(ru.ctx, Context::After(EdgeType::F8));
+        assert!(samples.iter().all(|s| s.kind == TransformKind::RealForward));
+        let c2r = ex.compile_kind(&half, n, true, TransformKind::RealInverse);
+        samples.clear();
+        trace_request(&c2r, &SplitComplex::random(n, 2), &SampleMode::Wallclock, &mut samples);
+        assert_eq!(samples[0].edge, EdgeType::RU);
+        assert_eq!(samples[0].ctx, Context::Start);
+        assert_eq!(samples[1].ctx, Context::After(EdgeType::RU));
+        assert!(samples.iter().all(|s| s.kind == TransformKind::RealInverse));
     }
 
     #[test]

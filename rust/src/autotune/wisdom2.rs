@@ -8,10 +8,10 @@
 //!
 //! ```json
 //! {"format": "spfft-wisdom-v2", "n": 1024, "source": "sim:m1",
-//!  "cells": [{"edge": "F8", "stage": 7, "ctx": 2, "batch": 1,
-//!             "prior_ns": 458.0, "obs_ns": 4580.0, "count": 137},
-//!            {"edge": "F8", "stage": 7, "ctx": 2, "batch": 16,
-//!             "prior_ns": 458.0, "obs_ns": 1100.0, "count": 64}, ...]}
+//!  "cells": [{"edge": "F8", "stage": 7, "ctx": 2, "kind": "forward",
+//!             "batch": 1, "prior_ns": 458.0, "obs_ns": 4580.0, "count": 137},
+//!            {"edge": "F8", "stage": 7, "ctx": 2, "kind": "inverse",
+//!             "batch": 16, "prior_ns": 458.0, "obs_ns": 1100.0, "count": 64}, ...]}
 //! ```
 //!
 //! `ctx` is [`Context::index`] (0 = start, 1.. = edge index + 1); cells
@@ -25,8 +25,12 @@
 //! [`WisdomV2::from_batched_priors`]), which seed [`OnlineCost`] class
 //! priors on load. Every prior cell appears exactly once with
 //! `batch == 1`; batched priors and observations add further records
-//! for the same (edge, stage, ctx). Records without a `batch` field
-//! (files written before the batched execution engine) default to 1,
+//! for the same (edge, stage, ctx). `kind` is the transform kind the
+//! observation was traced under (non-forward observations exist only
+//! when the calibration split is on — folded samples persist as
+//! forward). Records without a `batch` field (files written before the
+//! batched execution engine) default to 1, records without a `kind`
+//! field (files written before the kind axis) load as **forward-only**,
 //! and [`WisdomV2::load`] also accepts v1 files, promoting each v1
 //! cell to a prior with zero live samples — upgrades are transparent.
 
@@ -37,16 +41,22 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cost::{CostModel, Wisdom};
 use crate::edge::{Context, EdgeType};
+use crate::kind::TransformKind;
 use crate::util::json::{self, Json};
 
 use super::model::OnlineCost;
 
-/// One persisted cell: prior plus live estimate at one batch class.
+/// One persisted cell: prior plus live estimate at one batch class and
+/// transform kind.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellRecord {
     pub edge: EdgeType,
     pub stage: usize,
     pub ctx: Context,
+    /// Transform kind the observation was traced under. Files written
+    /// before the kind axis carry no `"kind"` field and load as
+    /// forward-only (mirroring the `"batch"` migration).
+    pub kind: TransformKind,
     /// Representative batch size of the observation's batch class
     /// (1 = unbatched; the prior's own regime).
     pub batch: usize,
@@ -77,34 +87,43 @@ impl WisdomV2 {
     /// save → load is lossless.
     pub fn from_model(model: &OnlineCost, source: &str) -> WisdomV2 {
         let mut cells = Vec::new();
-        for ((edge, stage, ctx), prior_ns, per_class) in model.export_cells() {
+        for ((edge, stage, ctx), prior_ns, per) in model.export_cells() {
             let cell = (edge, stage, ctx);
-            let class0 = per_class.iter().find(|&&(c, _)| c == 0).map(|&(_, e)| e);
+            let class0_fwd = per
+                .iter()
+                .find(|&&(c, k, _)| c == 0 && k == TransformKind::Forward)
+                .map(|&(_, _, e)| e);
             cells.push(CellRecord {
                 edge,
                 stage,
                 ctx,
+                kind: TransformKind::Forward,
                 batch: 1,
                 prior_ns,
-                obs_ns: class0.map(|o| o.mean).unwrap_or(0.0),
-                count: class0.map(|o| o.count).unwrap_or(0),
+                obs_ns: class0_fwd.map(|o| o.mean).unwrap_or(0.0),
+                count: class0_fwd.map(|o| o.count).unwrap_or(0),
             });
             for class in model.prior_classes(cell) {
                 cells.push(CellRecord {
                     edge,
                     stage,
                     ctx,
+                    kind: TransformKind::Forward,
                     batch: crate::autotune::model::class_batch(class),
                     prior_ns: model.prior_at(cell, class).unwrap_or(prior_ns),
                     obs_ns: 0.0,
                     count: 0,
                 });
             }
-            for (class, est) in per_class.into_iter().filter(|&(c, _)| c > 0) {
+            for (class, kind, est) in per
+                .into_iter()
+                .filter(|&(c, k, _)| !(c == 0 && k == TransformKind::Forward))
+            {
                 cells.push(CellRecord {
                     edge,
                     stage,
                     ctx,
+                    kind,
                     batch: crate::autotune::model::class_batch(class),
                     // the class's own (possibly batched) prior, so the
                     // record blends the same way after a reload
@@ -146,6 +165,7 @@ impl WisdomV2 {
                 edge,
                 stage,
                 ctx,
+                kind: TransformKind::Forward,
                 batch,
                 prior_ns: ns,
                 obs_ns: 0.0,
@@ -167,6 +187,7 @@ impl WisdomV2 {
                     edge,
                     stage,
                     ctx,
+                    kind: TransformKind::Forward,
                     batch: 1,
                     prior_ns: ns,
                     obs_ns: 0.0,
@@ -191,11 +212,18 @@ impl WisdomV2 {
     pub fn seed_model(&self, model: &mut OnlineCost) {
         for c in &self.cells {
             let class = crate::autotune::model::batch_class(c.batch);
-            if c.batch > 1 && c.count == 0 {
+            if c.batch > 1 && c.count == 0 && c.kind == TransformKind::Forward {
                 model.set_class_prior((c.edge, c.stage, c.ctx), class, c.prior_ns);
             }
-            if c.count > 0 {
-                model.seed_at((c.edge, c.stage, c.ctx), class, c.obs_ns, c.count);
+            // Non-forward observation records exist only in files written
+            // under the calibration split. Loading one into a *folded*
+            // model would route it through `kind_slot` onto the forward
+            // slot — and, records being written forward-first, silently
+            // clobber the forward estimate with the inverse one. Folded
+            // models therefore restore forward records only; the split
+            // observations wait for a `--split-kinds` restart.
+            if c.count > 0 && (model.split_kinds() || c.kind == TransformKind::Forward) {
+                model.seed_kind_at((c.edge, c.stage, c.ctx), class, c.kind, c.obs_ns, c.count);
             }
         }
     }
@@ -239,6 +267,7 @@ impl WisdomV2 {
                 o.insert("edge".into(), Json::Str(c.edge.name().into()));
                 o.insert("stage".into(), Json::Num(c.stage as f64));
                 o.insert("ctx".into(), Json::Num(c.ctx.index() as f64));
+                o.insert("kind".into(), Json::Str(c.kind.name().into()));
                 o.insert("batch".into(), Json::Num(c.batch as f64));
                 o.insert("prior_ns".into(), Json::Num(c.prior_ns));
                 o.insert("obs_ns".into(), Json::Num(c.obs_ns));
@@ -286,6 +315,15 @@ impl WisdomV2 {
                 Json::Null => 1,
                 v => v.as_usize().filter(|&b| b >= 1).ok_or_else(|| anyhow!("wisdom2: bad batch"))?,
             };
+            // Absent in pre-kind-axis files: those records are all
+            // forward observations (the only kind that existed).
+            let kind = match c.get("kind") {
+                Json::Null => TransformKind::Forward,
+                v => v
+                    .as_str()
+                    .and_then(TransformKind::parse)
+                    .ok_or_else(|| anyhow!("wisdom2: bad kind {:?}", c.get("kind")))?,
+            };
             let prior_ns = c.get("prior_ns").as_f64().ok_or_else(|| anyhow!("wisdom2: bad prior_ns"))?;
             if !prior_ns.is_finite() || prior_ns <= 0.0 {
                 bail!("wisdom2: non-positive prior for {edge}@{stage}");
@@ -295,7 +333,7 @@ impl WisdomV2 {
             if count > 0 && (!obs_ns.is_finite() || obs_ns <= 0.0) {
                 bail!("wisdom2: non-positive observation for {edge}@{stage}");
             }
-            cells.push(CellRecord { edge, stage, ctx, batch, prior_ns, obs_ns, count });
+            cells.push(CellRecord { edge, stage, ctx, kind, batch, prior_ns, obs_ns, count });
         }
         if cells.is_empty() {
             bail!("wisdom2: empty cell set");
@@ -325,7 +363,14 @@ mod tests {
         let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
         for &(e, s, ctx, ns) in w.cells.iter().take(5) {
             for _ in 0..7 {
-                model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 1, ns: ns * 2.0 });
+                model.observe(&EdgeSample {
+                    edge: e,
+                    stage: s,
+                    ctx,
+                    kind: TransformKind::Forward,
+                    batch: 1,
+                    ns: ns * 2.0,
+                });
             }
         }
         (model, w)
@@ -339,6 +384,7 @@ mod tests {
         assert_eq!(back, w2);
         assert_eq!(back.cells.iter().filter(|c| c.count > 0).count(), 5);
         assert!(back.cells.iter().all(|c| c.batch == 1));
+        assert!(back.cells.iter().all(|c| c.kind == TransformKind::Forward));
     }
 
     #[test]
@@ -348,7 +394,14 @@ mod tests {
         let (e, s, ctx, ns) = w.cells[0];
         for _ in 0..9 {
             // whole-batch sample at B=16: per-transform cost halved
-            model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 16, ns: 16.0 * ns * 0.5 });
+            model.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Forward,
+                batch: 16,
+                ns: 16.0 * ns * 0.5,
+            });
         }
         let w2 = WisdomV2::from_model(&model, "m1");
         // one batch=1 record per prior cell, plus one batch=16 record
@@ -413,7 +466,14 @@ mod tests {
         model.set_batched_prior(16, &w16);
         let (e, s, ctx, ns) = w.cells[0];
         for _ in 0..5 {
-            model.observe(&EdgeSample { edge: e, stage: s, ctx, batch: 1, ns });
+            model.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Forward,
+                batch: 1,
+                ns,
+            });
         }
         let saved = WisdomV2::from_model(&model, "m1");
         // one pure-prior batched record per cell, none lost
@@ -446,6 +506,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                kind: TransformKind::Forward,
                 batch: 16,
                 prior_ns: base, // legacy files carry the class-0 prior here
                 obs_ns: base * 0.5,
@@ -484,6 +545,122 @@ mod tests {
                 "cells":[{"edge":"R2","stage":0,"ctx":0,"batch":0,"prior_ns":5.0}]}"#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn records_without_kind_field_default_to_forward() {
+        // Files written before the kind axis have no "kind" key: they
+        // load as forward-only (mirroring the "batch" migration).
+        let w2 = WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"batch":1,"prior_ns":5.0,"obs_ns":6.0,"count":3}]}"#,
+        )
+        .unwrap();
+        assert_eq!(w2.cells[0].kind, TransformKind::Forward);
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"kind":"sideways","prior_ns":5.0}]}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn split_kind_observations_roundtrip_and_reseed_at_their_kind() {
+        // With the calibration split on, inverse observations persist
+        // as "kind":"inverse" records and reseed the inverse slot.
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        model.set_split_kinds(true);
+        let (e, s, ctx, ns) = w.cells[0];
+        for _ in 0..6 {
+            model.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Inverse,
+                batch: 1,
+                ns: ns * 2.0,
+            });
+        }
+        let w2 = WisdomV2::from_model(&model, "m1");
+        let rec = w2.cells.iter().find(|c| c.kind == TransformKind::Inverse).expect("inverse record");
+        assert_eq!((rec.edge, rec.stage, rec.ctx, rec.count), (e, s, ctx, 6));
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back, w2);
+        let mut fresh = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        fresh.set_split_kinds(true);
+        back.seed_model(&mut fresh);
+        assert_eq!(
+            fresh.observation_kind_at((e, s, ctx), 0, TransformKind::Inverse),
+            model.observation_kind_at((e, s, ctx), 0, TransformKind::Inverse)
+        );
+        // the forward slot stays clean under the split
+        assert_eq!(fresh.observation((e, s, ctx)), None);
+    }
+
+    #[test]
+    fn split_written_files_do_not_clobber_forward_slots_on_folded_reload() {
+        // A wisdom file written under --split-kinds carries both forward
+        // and inverse class-0 records for a cell. Reloading it into a
+        // model WITHOUT the split must keep the forward estimate and
+        // drop the inverse record (folding it through kind_slot would
+        // overwrite forward with inverse, records being forward-first).
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let mut split = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        split.set_split_kinds(true);
+        let (e, s, ctx, ns) = w.cells[0];
+        for _ in 0..4 {
+            split.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Forward,
+                batch: 1,
+                ns,
+            });
+            split.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Inverse,
+                batch: 1,
+                ns: ns * 9.0,
+            });
+        }
+        let saved = WisdomV2::from_model(&split, "m1");
+        let mut folded = OnlineCost::from_wisdom(&w, 0.5, 4.0); // split off
+        saved.seed_model(&mut folded);
+        let fwd = folded.observation((e, s, ctx)).expect("forward record restored");
+        assert_eq!(fwd.count, 4);
+        assert!(
+            (fwd.mean - ns).abs() < 1e-9,
+            "forward slot clobbered by the inverse record: {}",
+            fwd.mean
+        );
+        // a split reload restores both at their own kinds
+        let mut resplit = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        resplit.set_split_kinds(true);
+        saved.seed_model(&mut resplit);
+        assert!(resplit.observation_kind_at((e, s, ctx), 0, TransformKind::Inverse).is_some());
+    }
+
+    #[test]
+    fn ru_context_cells_roundtrip_via_index7() {
+        // A record whose ctx is After(RU) (index 7: the first c2c pass
+        // of a real-inverse transform) must serialize and parse.
+        let rec = CellRecord {
+            edge: crate::edge::EdgeType::R4,
+            stage: 0,
+            ctx: crate::edge::Context::After(crate::edge::EdgeType::RU),
+            kind: TransformKind::RealInverse,
+            batch: 1,
+            prior_ns: 10.0,
+            obs_ns: 12.0,
+            count: 4,
+        };
+        let w2 = WisdomV2 { n: 8, source: "x".into(), cells: vec![rec.clone()] };
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back.cells[0], rec);
     }
 
     #[test]

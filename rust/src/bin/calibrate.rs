@@ -17,8 +17,9 @@
 //!        [--prior-out FILE [--batches 4,16,64]] [--report]
 
 use spfft::autotune::WisdomV2;
-use spfft::cost::{CostModel, SimCost, Wisdom};
+use spfft::cost::{CostModel, KindCost, SimCost, Wisdom};
 use spfft::edge::{Context, EdgeType};
+use spfft::kind::TransformKind;
 use spfft::plan::{table3_arrangements, Plan};
 use spfft::planner::{plan, rank_all_plans, Strategy};
 use spfft::util::cli::{CliError, Command};
@@ -31,6 +32,7 @@ fn main() {
         .opt("machine", "m1", "simulated machine (m1|haswell)")
         .opt("prior-out", "", "write unbatched + batched wisdom v2 priors to this file")
         .opt("batches", "4,16,64", "comma-separated batch widths for --prior-out")
+        .opt("kind", "forward", "transform kind whose planning surface --prior-out harvests (real kinds: --n is the c2c half size)")
         .flag("report", "also print the calibration report when harvesting");
     if argv.iter().any(|a| a == "--help" || a == "-h") {
         eprintln!("{}", cmd.usage());
@@ -63,7 +65,14 @@ fn harvest_priors(args: &spfft::util::cli::Args, out: &str) -> Result<(), CliErr
         return Err(CliError(format!("--n must be a power of two >= 2, got {n}")));
     }
     let machine = spfft::sim::Machine::by_name(args.get("machine"))
-        .ok_or_else(|| CliError(format!("unknown machine '{}'", args.get("machine"))))?;
+        .ok_or_else(|| CliError(format!("--machine must be m1|haswell, got '{}'", args.get("machine"))))?;
+    let kind = TransformKind::parse(args.get("kind")).ok_or_else(|| {
+        CliError(format!(
+            "--kind must be {}, got '{}'",
+            TransformKind::valid_names(),
+            args.get("kind")
+        ))
+    })?;
     let mut batches: Vec<usize> = Vec::new();
     for part in args.get("batches").split(',') {
         let b: usize = part
@@ -75,8 +84,11 @@ fn harvest_priors(args: &spfft::util::cli::Args, out: &str) -> Result<(), CliErr
         }
         batches.push(b);
     }
-    let source = format!("sim:{}", machine.name());
-    let mut cost = SimCost::new(machine, n);
+    let mut source = format!("sim:{}", machine.name());
+    if kind != TransformKind::Forward {
+        source.push_str(&format!(":{kind}"));
+    }
+    let mut cost = KindCost::new(SimCost::new(machine, n), kind);
     let prior = Wisdom::harvest(&mut cost, &source);
     let harvested: Vec<(usize, Wisdom)> = batches
         .iter()

@@ -227,7 +227,8 @@ fn main() {
         .opt("evals", "40000", "optimizer evaluation budget")
         .opt("seed", "", "optimizer RNG seed (default: the baked-in seed)")
         .opt("prior-out", "", "write the fitted machine's contextual cells as wisdom v2")
-        .opt("prior-n", "1024", "FFT size for --prior-out");
+        .opt("prior-n", "1024", "FFT size for --prior-out")
+        .opt("kind", "forward", "transform kind whose planning surface --prior-out harvests");
     if argv.iter().any(|a| a == "--help" || a == "-h") {
         eprintln!("{}", cmd.usage());
         return;
@@ -263,7 +264,21 @@ fn main() {
             std::process::exit(2);
         }),
     };
-    let base = MachineParams::by_name(which).expect("m1|haswell");
+    // Reject unknown values with the valid-option list (consistent with
+    // the --prior-n hardening): a typo'd machine or kind must not fall
+    // through to a default fit.
+    let base = MachineParams::by_name(which).unwrap_or_else(|| {
+        eprintln!("error: --machine must be m1|haswell, got '{which}'");
+        std::process::exit(2);
+    });
+    let kind = spfft::kind::TransformKind::parse(args.get("kind")).unwrap_or_else(|| {
+        eprintln!(
+            "error: --kind must be {}, got '{}'",
+            spfft::kind::TransformKind::valid_names(),
+            args.get("kind")
+        );
+        std::process::exit(2);
+    });
     let loss_fn: fn(&MachineParams) -> f64 = match which {
         "m1" => loss_m1,
         _ => loss_haswell,
@@ -364,8 +379,13 @@ fn main() {
             eprintln!("error: {e}");
             std::process::exit(2);
         });
-        let mut prior_cost = SimCost::new(Machine::new(p), prior_n);
-        let v1 = Wisdom::harvest(&mut prior_cost, &format!("sim:{which}:tuned"));
+        let mut source = format!("sim:{which}:tuned");
+        if kind != spfft::kind::TransformKind::Forward {
+            source.push_str(&format!(":{kind}"));
+        }
+        let mut prior_cost =
+            spfft::cost::KindCost::new(SimCost::new(Machine::new(p), prior_n), kind);
+        let v1 = Wisdom::harvest(&mut prior_cost, &source);
         let w2 = WisdomV2::from_v1(&v1);
         match w2.save(std::path::Path::new(prior_out)) {
             Ok(()) => println!(

@@ -12,6 +12,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::kind::{TransformKind, KINDS};
+
 /// Number of log2 latency buckets (1 ns .. the 2^30 ns saturation bucket).
 const BUCKETS: usize = 31;
 
@@ -26,6 +28,9 @@ pub const GROUP_BUCKETS: usize = crate::autotune::BATCH_CLASSES;
 pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
+    /// Completions per transform kind ([`TransformKind::index`] order);
+    /// sums to `completed`.
+    completed_by_kind: [AtomicU64; KINDS],
     failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
@@ -59,6 +64,9 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    /// Completions per transform kind ([`TransformKind::index`] order:
+    /// forward, inverse, real, real-inverse); sums to `completed`.
+    pub completed_by_kind: [u64; KINDS],
     pub failed: u64,
     pub batches: u64,
     /// Mean requests per executed batch.
@@ -102,8 +110,17 @@ impl Metrics {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a completion of unspecified kind (counted as forward —
+    /// the pre-kind-axis behavior; the service reports through
+    /// [`Metrics::on_complete_kind`]).
     pub fn on_complete(&self, latency: Duration) {
+        self.on_complete_kind(TransformKind::Forward, latency);
+    }
+
+    /// Record a completion of a `kind` transform.
+    pub fn on_complete_kind(&self, kind: TransformKind, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.completed_by_kind[kind.index()].fetch_add(1, Ordering::Relaxed);
         // Clamp into [1, u64::MAX]: a zero-duration latency (timer
         // granularity on sub-microsecond executions) lands in bucket 0
         // instead of underflowing the bucket index.
@@ -203,9 +220,14 @@ impl Metrics {
         let coalesced_flushes = self.coalesced_flushes.load(Ordering::Relaxed);
         let coalesce_hits = self.coalesce_hits.load(Ordering::Relaxed);
         let held_total_ns = self.held_age_ns_total.load(Ordering::Relaxed);
+        let mut completed_by_kind = [0u64; KINDS];
+        for (slot, b) in completed_by_kind.iter_mut().zip(&self.completed_by_kind) {
+            *slot = b.load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            completed_by_kind,
             failed: self.failed.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches == 0 { 0.0 } else { breq as f64 / batches as f64 },
@@ -260,6 +282,8 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.completed, 1);
+        // kind-less completions count as forward
+        assert_eq!(s.completed_by_kind, [1, 0, 0, 0]);
         assert_eq!(s.failed, 1);
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch_size, 2.0);
@@ -308,6 +332,19 @@ mod tests {
         assert_eq!(s.singleton_pairings, 1);
         assert_eq!(s.mean_held_age, Duration::from_micros(400));
         assert_eq!(s.max_held_age, Duration::from_micros(600));
+    }
+
+    #[test]
+    fn per_kind_completions_sum_to_completed() {
+        let m = Metrics::new();
+        m.on_complete_kind(TransformKind::Forward, Duration::from_nanos(100));
+        m.on_complete_kind(TransformKind::Inverse, Duration::from_nanos(100));
+        m.on_complete_kind(TransformKind::Inverse, Duration::from_nanos(100));
+        m.on_complete_kind(TransformKind::RealForward, Duration::from_nanos(100));
+        m.on_complete_kind(TransformKind::RealInverse, Duration::from_nanos(100));
+        let s = m.snapshot();
+        assert_eq!(s.completed_by_kind, [1, 2, 1, 1]);
+        assert_eq!(s.completed_by_kind.iter().sum::<u64>(), s.completed);
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! The FFT service: plan once, batch, execute *as a batch*, measure —
 //! and, when autotuning is on, keep re-planning from live samples.
 //!
-//! Request path (Python-free): client calls [`FftService::submit`] with a
-//! split-complex buffer → the request queues to a worker → the worker
+//! Request path (Python-free): client calls [`FftService::submit`] (or
+//! [`FftService::submit_kind`] for inverse / real-input transforms) with
+//! a split-complex buffer → the request queues to a worker → the worker
 //! drains a batch ([`super::batcher::collect_batch`]) and splits it into
-//! same-n groups → each group of two or more requests gathers into a
+//! same-(kind, n) groups → each group of two or more requests gathers into a
 //! pooled lane-blocked [`crate::fft::BatchBuffer`] and runs through
 //! [`crate::fft::CompiledPlan::run_batch`] — every plan step loads its
 //! twiddles once for the whole group instead of once per request —
@@ -39,6 +40,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::autotune::{trace_batch, trace_request, Autotuner, AutotuneConfig, AutotuneStatus};
 use crate::fft::{BatchBufferPool, Executor, SplitComplex};
+use crate::kind::TransformKind;
 use crate::plan::Plan;
 
 use super::batcher::{collect_batch_until, BatchPolicy, CoalescePolicy, CoalesceState, ReadyGroup};
@@ -58,6 +60,11 @@ pub enum Backend {
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// FFT sizes the service accepts, with each size's startup plan.
+    /// Each entry `(n, plan)` serves **four workloads**: forward and
+    /// inverse c2c transforms of size n (same plan — the inverse runs
+    /// the identical kernels with boundary conjugation), and
+    /// real-input / real-output transforms of size 2n (whose internal
+    /// c2c is exactly this n-point plan, plus the split/unpack step).
     pub plans: Vec<(usize, Plan)>,
     pub backend: Backend,
     pub batch: BatchPolicy,
@@ -78,6 +85,7 @@ pub struct ServiceConfig {
 
 struct Request {
     n: usize,
+    kind: TransformKind,
     input: SplitComplex,
     enqueued: Instant,
     reply: SyncSender<Result<SplitComplex>>,
@@ -151,18 +159,38 @@ impl FftService {
         })
     }
 
-    /// Submit a transform; returns a receiver for the result.
+    /// Submit a forward transform; returns a receiver for the result.
     /// Fails fast when the queue is full (backpressure) or shutting down.
     pub fn submit(&self, input: SplitComplex) -> Result<Receiver<Result<SplitComplex>>> {
+        self.submit_kind(input, TransformKind::Forward)
+    }
+
+    /// Submit a transform of `kind`. C2c kinds accept the configured
+    /// sizes; real kinds accept **twice** a configured size (the real
+    /// transform's internal c2c is the configured half-size plan).
+    pub fn submit_kind(
+        &self,
+        input: SplitComplex,
+        kind: TransformKind,
+    ) -> Result<Receiver<Result<SplitComplex>>> {
         if !self.accepting.load(Ordering::Relaxed) {
             bail!("service is shutting down");
         }
         let n = input.len();
-        if !self.sizes.contains(&n) {
-            bail!("unsupported FFT size {n} (configured: {:?})", self.sizes);
+        let accepted = if kind.is_real() {
+            n >= 4 && n % 2 == 0 && self.sizes.contains(&(n / 2))
+        } else {
+            self.sizes.contains(&n)
+        };
+        if !accepted {
+            bail!(
+                "unsupported {kind} FFT size {n} (configured c2c sizes: {:?}; \
+                 real kinds serve 2x a configured size)",
+                self.sizes
+            );
         }
         let (reply_tx, reply_rx) = sync_channel(1);
-        let req = Request { n, input, enqueued: Instant::now(), reply: reply_tx };
+        let req = Request { n, kind, input, enqueued: Instant::now(), reply: reply_tx };
         match self.tx.as_ref().unwrap().try_send(req) {
             Ok(()) => {
                 self.metrics.on_submit();
@@ -176,9 +204,14 @@ impl FftService {
         }
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit a forward transform and wait.
     pub fn transform(&self, input: SplitComplex) -> Result<SplitComplex> {
-        self.submit(input)?
+        self.transform_kind(input, TransformKind::Forward)
+    }
+
+    /// Convenience: submit a `kind` transform and wait.
+    pub fn transform_kind(&self, input: SplitComplex, kind: TransformKind) -> Result<SplitComplex> {
+        self.submit_kind(input, kind)?
             .recv()
             .map_err(|_| anyhow!("worker dropped the request"))?
     }
@@ -220,11 +253,21 @@ impl Drop for FftService {
     }
 }
 
+/// One compiled serving entry: request-buffer size + kind + the
+/// compiled plan + the plan version it compiled under.
+struct CompiledEntry {
+    n: usize,
+    kind: TransformKind,
+    cp: crate::fft::CompiledPlan,
+    version: u64,
+}
+
 enum WorkerBackend {
     Native {
         ex: Executor,
-        /// (n, compiled plan, plan version executing under).
-        compiled: Vec<(usize, crate::fft::CompiledPlan, u64)>,
+        /// One entry per (n, kind) workload each configured plan serves
+        /// (forward + inverse at n, real kinds at 2n).
+        compiled: Vec<CompiledEntry>,
         /// Recycled batch-buffer allocations (worker-owned; the group
         /// hot loop is allocation-free once warm).
         pool: BatchBufferPool,
@@ -237,40 +280,58 @@ enum WorkerBackend {
 
 impl WorkerBackend {
     /// Recompile any entry whose published plan version moved. Called
-    /// between batches only — never while a batch is executing.
+    /// between batches only — never while a batch is executing. All
+    /// four kinds derived from the tuned size's plan refresh together
+    /// (c2c entries at the tuned n, real entries at 2n — they share the
+    /// swapped c2c arrangement).
     fn refresh(&mut self, tuner: &Autotuner) {
         let WorkerBackend::Native { ex, compiled, .. } = self else { return };
         let current = tuner.slot().current();
-        if let Some(entry) = compiled.iter_mut().find(|(n, _, _)| *n == tuner.n()) {
-            if entry.2 != current.version {
-                entry.1 = ex.compile(&current.plan, entry.0, true);
-                entry.2 = current.version;
+        for entry in compiled.iter_mut() {
+            let derived = if entry.kind.is_real() {
+                entry.n == 2 * tuner.n()
+            } else {
+                entry.n == tuner.n()
+            };
+            if derived && entry.version != current.version {
+                entry.cp = ex.compile_kind(&current.plan, entry.n, true, entry.kind);
+                entry.version = current.version;
             }
         }
     }
 
-    /// Execute one same-n group and reply to every request in it.
-    /// Groups of >= 2 requests on the native backend run jointly through
-    /// `run_batch`; singletons (and the PJRT backend) run per request.
+    /// Execute one same-(kind, n) group and reply to every request in
+    /// it. Groups of >= 2 requests on the native backend run jointly
+    /// through `run_batch`; singletons (and the PJRT backend) run per
+    /// request. Grouping never crosses kinds — the group key is the
+    /// full (kind, n) pair.
     fn execute_group(
         &mut self,
-        n: usize,
+        key: (TransformKind, usize),
         group: Vec<Request>,
         tuner: Option<&Autotuner>,
         metrics: &Metrics,
     ) {
+        let (kind, n) = key;
         match self {
             WorkerBackend::Native { compiled, pool, .. } => {
-                let Some(cp) = compiled.iter().find(|(cn, _, _)| *cn == n).map(|(_, cp, _)| cp)
+                let Some(cp) = compiled
+                    .iter()
+                    .find(|e| e.n == n && e.kind == kind)
+                    .map(|e| &e.cp)
                 else {
                     for req in group {
                         metrics.on_failure();
-                        let _ = req.reply.send(Err(anyhow!("no plan for n={n}")));
+                        let _ = req.reply.send(Err(anyhow!("no plan for {kind} n={n}")));
                     }
                     return;
                 };
+                // Sample c2c groups of the tuned size only: real-kind
+                // cells live on the half-size surface and would pollute
+                // the tuned model's cells (inverse folds onto forward
+                // unless the calibration split is on).
                 let sampling = tuner
-                    .filter(|t| n == t.n() && t.sampler().should_sample());
+                    .filter(|t| n == t.n() && !kind.is_real() && t.sampler().should_sample());
                 if group.len() == 1 {
                     let req = group.into_iter().next().unwrap();
                     let out = match sampling {
@@ -282,7 +343,7 @@ impl WorkerBackend {
                         }
                         None => cp.run_on(&req.input),
                     };
-                    metrics.on_complete(req.enqueued.elapsed());
+                    metrics.on_complete_kind(kind, req.enqueued.elapsed());
                     let _ = req.reply.send(Ok(out));
                     return;
                 }
@@ -299,12 +360,21 @@ impl WorkerBackend {
                 }
                 for (lane, req) in group.into_iter().enumerate() {
                     let out = buf.scatter_lane(lane);
-                    metrics.on_complete(req.enqueued.elapsed());
+                    metrics.on_complete_kind(kind, req.enqueued.elapsed());
                     let _ = req.reply.send(Ok(out));
                 }
                 pool.release(buf);
             }
             WorkerBackend::Pjrt { registry, plans } => {
+                if kind != TransformKind::Forward {
+                    for req in group {
+                        metrics.on_failure();
+                        let _ = req.reply.send(Err(anyhow!(
+                            "the PJRT backend serves forward transforms only (got {kind})"
+                        )));
+                    }
+                    return;
+                }
                 let plan = plans.iter().find(|(pn, _)| *pn == n).map(|(_, p)| p.clone());
                 for req in group {
                     let result = match &plan {
@@ -312,7 +382,7 @@ impl WorkerBackend {
                         None => Err(anyhow!("no plan for n={n}")),
                     };
                     match &result {
-                        Ok(_) => metrics.on_complete(req.enqueued.elapsed()),
+                        Ok(_) => metrics.on_complete_kind(kind, req.enqueued.elapsed()),
                         Err(_) => metrics.on_failure(),
                     }
                     let _ = req.reply.send(result);
@@ -325,7 +395,7 @@ impl WorkerBackend {
 /// Execute one ready (possibly coalesced) group and record its metrics.
 fn run_group(
     backend: &mut WorkerBackend,
-    group: ReadyGroup<usize, Request>,
+    group: ReadyGroup<(TransformKind, usize), Request>,
     tuner: Option<&Autotuner>,
     metrics: &Metrics,
 ) {
@@ -347,11 +417,27 @@ fn worker_loop(
     let mut backend = match &config.backend {
         Backend::Native => {
             let mut ex = Executor::new();
-            let compiled = config
-                .plans
-                .iter()
-                .map(|(n, p)| (*n, ex.compile(p, *n, true), 1u64))
-                .collect();
+            let mut compiled = Vec::new();
+            for (n, p) in &config.plans {
+                // Every configured (n, plan) serves four workloads: the
+                // c2c pair at n and the real pair at 2n (same c2c core).
+                for kind in [TransformKind::Forward, TransformKind::Inverse] {
+                    compiled.push(CompiledEntry {
+                        n: *n,
+                        kind,
+                        cp: ex.compile_kind(p, *n, true, kind),
+                        version: 1,
+                    });
+                }
+                for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
+                    compiled.push(CompiledEntry {
+                        n: 2 * *n,
+                        kind,
+                        cp: ex.compile_kind(p, 2 * *n, true, kind),
+                        version: 1,
+                    });
+                }
+            }
             WorkerBackend::Native { ex, compiled, pool: BatchBufferPool::new() }
         }
         Backend::Pjrt { artifacts_dir } => match crate::runtime::Registry::load(artifacts_dir) {
@@ -362,7 +448,10 @@ fn worker_loop(
             }
         },
     };
-    let mut coalesce: CoalesceState<usize, Request> =
+    // The grouping / coalescing key is the full (kind, n) pair: a
+    // forward group never merges with inverse or real traffic (their
+    // compiled plans differ), and FIFO holds per key.
+    let mut coalesce: CoalesceState<(TransformKind, usize), Request> =
         CoalesceState::new(config.coalesce, config.batch.max_wait);
     loop {
         // Take the receiver lock only to pull one batch (the batching
@@ -404,7 +493,7 @@ fn worker_loop(
         // Same-n requests execute jointly; group order preserves arrival,
         // and under-filled groups may coalesce across pulls (an empty
         // wake-deadline pull just ages and flushes the held state).
-        let ready = coalesce.admit(batch, Instant::now(), |r| r.n, |r| r.enqueued);
+        let ready = coalesce.admit(batch, Instant::now(), |r| (r.kind, r.n), |r| r.enqueued);
         let did_work = !ready.is_empty();
         for group in ready {
             run_group(&mut backend, group, tuner.as_deref(), &metrics);
@@ -593,6 +682,43 @@ mod tests {
         // Every completed request went through exactly one group.
         let grouped = (snap.mean_group_size * snap.groups as f64).round() as u64;
         assert_eq!(grouped, snap.completed);
+    }
+
+    #[test]
+    fn serves_every_kind_correctly() {
+        // One configured (n, plan) entry serves forward/inverse at n and
+        // the real pair at 2n.
+        let n = 128;
+        let svc = native_service(n, "R4,R2,F16", 1);
+        let input = SplitComplex::random(n, 5);
+        let fwd = svc.transform_kind(input.clone(), TransformKind::Forward).unwrap();
+        let want = fft_ref(&input);
+        assert!(fwd.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        let back = svc.transform_kind(fwd, TransformKind::Inverse).unwrap();
+        assert!(back.max_abs_diff(&input) / input.max_abs().max(1.0) < 1e-4);
+        let mut real = SplitComplex::random(2 * n, 6);
+        real.im.iter_mut().for_each(|v| *v = 0.0);
+        let spectrum = svc.transform_kind(real.clone(), TransformKind::RealForward).unwrap();
+        let want_r = fft_ref(&real);
+        assert!(spectrum.max_abs_diff(&want_r) / want_r.max_abs().max(1.0) < 1e-4);
+        let signal = svc.transform_kind(spectrum, TransformKind::RealInverse).unwrap();
+        assert!(signal.max_abs_diff(&real) / real.max_abs().max(1.0) < 1e-4);
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.completed_by_kind, [1, 1, 1, 1]);
+        assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn rejects_real_kind_at_unserved_size() {
+        let svc = native_service(256, "R4,R4,R2,F8", 1);
+        // real kinds serve 2x a configured size: 512 works, 256 does not
+        assert!(svc
+            .submit_kind(SplitComplex::random(256, 1), TransformKind::RealForward)
+            .is_err());
+        assert!(svc
+            .submit_kind(SplitComplex::random(512, 1), TransformKind::RealForward)
+            .is_ok());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use std::collections::HashMap;
 
 use crate::edge::{Context, EdgeType};
+use crate::kind::TransformKind;
 use crate::plan::Plan;
 
 pub mod native;
@@ -35,6 +36,40 @@ pub trait CostModel {
 
     /// Time (ns) of `edge` at `stage` given predecessor context.
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64;
+
+    /// Time (ns) of `edge` at `stage` in `ctx` executed as part of a
+    /// `kind` transform. The c2c passes of every kind run the *same*
+    /// kernels (the inverse conjugation lives at the buffer boundary —
+    /// see `fft::real`), so the default reuses the forward tables;
+    /// providers that measure a real asymmetry can override (the
+    /// calibration split). [`EdgeType::RU`] — the real transforms'
+    /// split/unpack boundary pass — routes to [`CostModel::unpack_ns`].
+    fn edge_ns_kind(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        kind: TransformKind,
+    ) -> f64 {
+        let _ = kind;
+        if edge == EdgeType::RU {
+            return self.unpack_ns(ctx);
+        }
+        self.edge_ns(edge, stage, ctx)
+    }
+
+    /// Time (ns) of the real-transform split/unpack pass
+    /// ([`EdgeType::RU`]) over the full 2·n() buffer, given predecessor
+    /// context. The pass is one symmetric walk over the whole array
+    /// with a twiddle multiply per conjugate pair — roughly a stage-0
+    /// radix-2 pass, which is the (context-dependent) default proxy.
+    /// [`SimCost`] models it natively: nearly free after a fused
+    /// register block, a full memory round trip after a strided radix
+    /// pass — the paper's context thesis applied to the unpack pass (no
+    /// context-free model prices it correctly).
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        self.edge_ns(EdgeType::R2, 0, ctx)
+    }
 
     /// Time (ns) of `edge` at `stage` in `ctx` executed over a batch of
     /// `b` transforms together (the lane-blocked batched kernels). The
@@ -78,6 +113,20 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
 
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
         (**self).edge_ns(edge, stage, ctx)
+    }
+
+    fn edge_ns_kind(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        kind: TransformKind,
+    ) -> f64 {
+        (**self).edge_ns_kind(edge, stage, ctx, kind)
+    }
+
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        (**self).unpack_ns(ctx)
     }
 
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
@@ -131,6 +180,95 @@ impl CostModel for SimCost {
     /// kernels actually execute.
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
         self.machine.edge_ns_batched(self.n, edge, stage, ctx, b)
+    }
+
+    /// Native model of the real-transform split/unpack pass (see
+    /// [`crate::sim::Machine::unpack_ns`]): memory-bound, with the
+    /// predecessor deciding whether the walk streams from residuals
+    /// (fused predecessor: nearly free) or pays the round trip (strided
+    /// radix predecessor / isolation).
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        self.machine.unpack_ns(self.n, ctx)
+    }
+}
+
+/// Transform-kind view of another cost model: `edge_ns` answers
+/// `edge_ns_kind(·, kind)`, so any unmodified planner searching this
+/// model optimizes the arrangement for that kind's workload. For real
+/// kinds the inner model is the *half-size* c2c surface (`n() = n/2`
+/// under an n-point request buffer), the searches naturally run over
+/// l − 1 levels, and [`CostModel::plan_ns`] adds the RU (split/unpack)
+/// edge in the context of the plan's last edge — the steady-state loop
+/// a real transform actually executes. `Forward` is a transparent
+/// passthrough.
+pub struct KindCost<C: CostModel> {
+    inner: C,
+    kind: TransformKind,
+}
+
+impl<C: CostModel> KindCost<C> {
+    pub fn new(inner: C, kind: TransformKind) -> KindCost<C> {
+        KindCost { inner, kind }
+    }
+
+    /// The kind planning queries are answered for.
+    pub fn kind(&self) -> TransformKind {
+        self.kind
+    }
+
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+}
+
+impl<C: CostModel> CostModel for KindCost<C> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn available_edges(&self) -> Vec<EdgeType> {
+        self.inner.available_edges()
+    }
+
+    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        self.inner.edge_ns_kind(edge, stage, ctx, self.kind)
+    }
+
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        self.inner.unpack_ns(ctx)
+    }
+
+    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
+        // kinds share the batched c2c surface (same kernels)
+        self.inner.edge_ns_batched(edge, stage, ctx, b)
+    }
+
+    /// Steady-state time of a full `kind` transform. For c2c kinds this
+    /// is the usual contextual loop; for real kinds the loop is
+    /// [c2c steps…, RU] (R2C) or [RU, c2c steps…] (C2R) — either way one
+    /// RU pass per transform, priced in the context of the plan's last
+    /// c2c edge, with the first c2c edge priced after the RU boundary.
+    /// RU's residual footprint is a full-array strided walk; until RU
+    /// contexts are calibrated cells, the closest catalog proxy is
+    /// after-R2 (a plain strided pass residual).
+    fn plan_ns(&mut self, plan: &Plan) -> f64 {
+        assert!(!plan.is_empty());
+        if !self.kind.is_real() {
+            let mut ctx = Context::After(*plan.edges().last().unwrap());
+            let mut total = 0.0;
+            for (edge, stage) in plan.steps() {
+                total += self.inner.edge_ns_kind(edge, stage, ctx, self.kind);
+                ctx = Context::After(edge);
+            }
+            return total;
+        }
+        let mut ctx = Context::After(EdgeType::R2); // after-RU proxy
+        let mut total = 0.0;
+        for (edge, stage) in plan.steps() {
+            total += self.inner.edge_ns_kind(edge, stage, ctx, self.kind);
+            ctx = Context::After(edge);
+        }
+        total + self.inner.unpack_ns(Context::After(*plan.edges().last().unwrap()))
     }
 }
 
@@ -323,6 +461,81 @@ mod tests {
         // B = 1 is a transparent passthrough
         let mut b1 = BatchedCost::new(SimCost::m1(1024), 1);
         assert_eq!(b1.edge_ns(EdgeType::R4, 0, Start), plain.edge_ns(EdgeType::R4, 0, Start));
+    }
+
+    #[test]
+    fn kind_cost_forward_is_passthrough_and_inverse_reuses_forward_tables() {
+        let mut plain = SimCost::m1(1024);
+        let mut fwd = KindCost::new(SimCost::m1(1024), TransformKind::Forward);
+        let mut inv = KindCost::new(SimCost::m1(1024), TransformKind::Inverse);
+        assert_eq!(fwd.kind(), TransformKind::Forward);
+        for e in [EdgeType::R2, EdgeType::F8] {
+            let s = if e.is_fused() { 7 } else { 0 };
+            let want = plain.edge_ns(e, s, Start);
+            assert_eq!(fwd.edge_ns(e, s, Start), want);
+            // inverse kinds run the identical forward kernels (boundary
+            // conjugation), so the default tables coincide
+            assert_eq!(inv.edge_ns(e, s, Start), want);
+        }
+        let p = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        assert_eq!(inv.plan_ns(&p), plain.plan_ns(&p));
+    }
+
+    #[test]
+    fn real_plan_ns_adds_the_unpack_edge_in_the_last_edge_context() {
+        // Real plans: l−1 c2c levels + the RU edge, whose cost depends
+        // on the plan's final edge (the paper's thesis in miniature).
+        let mut inner = SimCost::m1(512); // c2c half of a 1024-point real transform
+        let mut rc = KindCost::new(SimCost::m1(512), TransformKind::RealForward);
+        // n = 512 → 9 c2c levels
+        let ends_fused = Plan::parse("R4,R4,R2,R2,F8").unwrap();
+        let ends_radix = Plan::parse("R4,R4,R2,F8,R2").unwrap();
+        let base_fused: f64 = {
+            let mut ctx = Context::After(EdgeType::R2);
+            let mut t = 0.0;
+            for (e, s) in ends_fused.steps() {
+                t += inner.edge_ns(e, s, ctx);
+                ctx = Context::After(e);
+            }
+            t
+        };
+        let got = rc.plan_ns(&ends_fused);
+        let unpack_after_fused = inner.unpack_ns(Context::After(EdgeType::F8));
+        assert!((got - (base_fused + unpack_after_fused)).abs() < 1e-9);
+        // ending on a fused block makes the unpack cheaper than ending
+        // on a strided radix pass
+        let after_fused = inner.unpack_ns(Context::After(EdgeType::F8));
+        let after_radix = inner.unpack_ns(Context::After(EdgeType::R2));
+        assert!(after_fused < after_radix, "{after_fused} vs {after_radix}");
+        let radix_tail = rc.plan_ns(&ends_radix);
+        assert!(radix_tail.is_finite() && radix_tail > 0.0);
+    }
+
+    #[test]
+    fn sim_unpack_is_context_dependent() {
+        let mut c = SimCost::m1(512);
+        let iso = c.unpack_ns(Start);
+        let after_fused = c.unpack_ns(Context::After(EdgeType::F16));
+        let after_radix = c.unpack_ns(Context::After(EdgeType::R4));
+        assert!(after_fused > 0.0 && after_fused.is_finite());
+        // nearly free after a fused block; a memory round trip after a
+        // strided radix pass; worst from isolation
+        assert!(after_fused < after_radix, "{after_fused} vs {after_radix}");
+        assert!(after_radix < iso, "{after_radix} vs {iso}");
+    }
+
+    #[test]
+    fn default_unpack_is_the_stage0_r2_proxy() {
+        // Providers without a native unpack model (replayed tables) fall
+        // back to the stage-0 R2 proxy — still context-dependent.
+        let mut table = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
+        let want = table.edge_ns(EdgeType::R2, 0, Context::After(EdgeType::R4));
+        assert_eq!(table.unpack_ns(Context::After(EdgeType::R4)), want);
+        // ... and edge_ns_kind routes RU there
+        assert_eq!(
+            table.edge_ns_kind(EdgeType::RU, 9, Context::After(EdgeType::R4), TransformKind::RealForward),
+            want
+        );
     }
 
     #[test]

@@ -28,10 +28,21 @@ pub enum EdgeType {
     /// Fused FFT-32 block: 5 stages in 16 vector registers (novel on NEON;
     /// impossible on AVX2's 16-register file).
     F32,
+    /// Real-transform split/unpack pass (R2C unpack / C2R spectrum
+    /// pack): one symmetric walk over the full buffer with a twiddle
+    /// multiply per conjugate pair. NOT part of the decomposition-graph
+    /// catalog ([`ALL_EDGES`]) — it advances no DIF stages and never
+    /// appears inside a [`crate::plan::Plan`]; it exists so the real
+    /// transforms' boundary pass is a first-class `CompiledStep` that
+    /// shows up in traces, gets an `EdgeSample`, and carries its own
+    /// context-dependent cost (nearly free after a fused register
+    /// block, a full memory round trip after a strided radix pass).
+    RU,
 }
 
-/// All edge types in catalog order (matches `T` in paper Eq. 1, minus
-/// the synthetic `start` context).
+/// All *decomposition-graph* edge types in catalog order (matches `T` in
+/// paper Eq. 1, minus the synthetic `start` context). [`EdgeType::RU`]
+/// is deliberately excluded: it is a boundary pass, not a graph edge.
 pub const ALL_EDGES: [EdgeType; 6] = [
     EdgeType::R2,
     EdgeType::R4,
@@ -42,7 +53,9 @@ pub const ALL_EDGES: [EdgeType; 6] = [
 ];
 
 impl EdgeType {
-    /// DIF stage advance of this edge (k in "edge (s, s+k)").
+    /// DIF stage advance of this edge (k in "edge (s, s+k)"). The real
+    /// split/unpack pass advances none — it is a boundary pass outside
+    /// the decomposition.
     pub fn stages(self) -> usize {
         match self {
             EdgeType::R2 => 1,
@@ -50,6 +63,7 @@ impl EdgeType {
             EdgeType::R8 | EdgeType::F8 => 3,
             EdgeType::F16 => 4,
             EdgeType::F32 => 5,
+            EdgeType::RU => 0,
         }
     }
 
@@ -68,7 +82,7 @@ impl EdgeType {
     /// butterflies). Split-complex: B points = 2*B/4 vectors.
     pub fn neon_data_regs(self) -> usize {
         match self {
-            EdgeType::R2 | EdgeType::R4 | EdgeType::R8 => 0,
+            EdgeType::R2 | EdgeType::R4 | EdgeType::R8 | EdgeType::RU => 0,
             EdgeType::F8 => 4,
             EdgeType::F16 => 8,
             EdgeType::F32 => 16,
@@ -84,6 +98,7 @@ impl EdgeType {
             EdgeType::F8 => "In-register; zero memory traffic",
             EdgeType::F16 => "In-register; NEON 4x4 transpose",
             EdgeType::F32 => "In-register; novel (needs 32 regs)",
+            EdgeType::RU => "Real split/unpack; predecessor decides cost",
         }
     }
 
@@ -97,15 +112,20 @@ impl EdgeType {
             EdgeType::F8 => "F8",
             EdgeType::F16 => "F16",
             EdgeType::F32 => "F32",
+            EdgeType::RU => "RU",
         }
     }
 
     /// Parse a canonical name.
     pub fn parse(s: &str) -> Option<EdgeType> {
+        if s == "RU" {
+            return Some(EdgeType::RU);
+        }
         ALL_EDGES.iter().copied().find(|e| e.name() == s)
     }
 
-    /// Compact index in [0, 6) — used to index context tables.
+    /// Compact index in [0, 7) — used to index context tables. The
+    /// graph-catalog edges occupy [0, 6); RU sits past them at 6.
     pub fn index(self) -> usize {
         match self {
             EdgeType::R2 => 0,
@@ -114,11 +134,15 @@ impl EdgeType {
             EdgeType::F8 => 3,
             EdgeType::F16 => 4,
             EdgeType::F32 => 5,
+            EdgeType::RU => 6,
         }
     }
 
     /// Inverse of [`EdgeType::index`].
     pub fn from_index(i: usize) -> Option<EdgeType> {
+        if i == 6 {
+            return Some(EdgeType::RU);
+        }
         ALL_EDGES.get(i).copied()
     }
 }
@@ -140,11 +164,16 @@ pub enum Context {
     After(EdgeType),
 }
 
-/// Number of distinct contexts: start + 6 edge types (|T| = 7, paper §2.3).
+/// Number of distinct *measured-catalog* contexts: start + the 6 graph
+/// edge types (|T| = 7, paper §2.3). [`Context::After`]`(`[`EdgeType::RU`]`)`
+/// additionally exists at index 7 for traces and persistence (the first
+/// c2c pass of a real-inverse transform runs after the spectrum-pack
+/// step), but it is not part of the harvested catalog [`Context::all`]
+/// iterates.
 pub const NUM_CONTEXTS: usize = 7;
 
 impl Context {
-    /// Compact index in [0, 7): 0 = start, 1.. = edge index + 1.
+    /// Compact index: 0 = start, 1.. = edge index + 1 (7 = after-RU).
     pub fn index(self) -> usize {
         match self {
             Context::Start => 0,
@@ -160,7 +189,8 @@ impl Context {
         }
     }
 
-    /// All contexts, start first.
+    /// All *measured-catalog* contexts, start first (after-RU excluded:
+    /// harvest loops measure the graph catalog only).
     pub fn all() -> impl Iterator<Item = Context> {
         (0..NUM_CONTEXTS).map(|i| Context::from_index(i).unwrap())
     }
@@ -208,6 +238,7 @@ mod tests {
         for e in ALL_EDGES {
             assert_eq!(EdgeType::parse(e.name()), Some(e));
         }
+        assert_eq!(EdgeType::parse("RU"), Some(EdgeType::RU));
         assert_eq!(EdgeType::parse("R16"), None);
         assert_eq!(EdgeType::parse(""), None);
     }
@@ -218,7 +249,17 @@ mod tests {
             assert_eq!(e.index(), i);
             assert_eq!(EdgeType::from_index(i), Some(*e));
         }
-        assert_eq!(EdgeType::from_index(6), None);
+        assert_eq!(EdgeType::from_index(6), Some(EdgeType::RU));
+        assert_eq!(EdgeType::RU.index(), 6);
+        assert_eq!(EdgeType::from_index(7), None);
+    }
+
+    #[test]
+    fn ru_is_not_a_graph_edge() {
+        assert!(!ALL_EDGES.contains(&EdgeType::RU));
+        assert_eq!(EdgeType::RU.stages(), 0);
+        assert!(!EdgeType::RU.is_fused());
+        assert_eq!(EdgeType::RU.block_size(), None);
     }
 
     #[test]
@@ -229,7 +270,12 @@ mod tests {
             assert_eq!(c.index(), i);
             assert_eq!(Context::from_index(i), Some(*c));
         }
-        assert_eq!(Context::from_index(7), None);
+        // after-RU exists past the measured catalog (trace/persistence
+        // only) and roundtrips; nothing exists beyond it.
+        assert_eq!(Context::from_index(7), Some(Context::After(EdgeType::RU)));
+        assert_eq!(Context::After(EdgeType::RU).index(), 7);
+        assert!(!Context::all().any(|c| c == Context::After(EdgeType::RU)));
+        assert_eq!(Context::from_index(8), None);
     }
 
     #[test]

@@ -4,15 +4,32 @@
 //! Compilation resolves every edge's twiddle vectors once; execution is
 //! allocation-free. This is what the `NativeCost` provider times and what
 //! the coordinator's native backend serves requests with.
+//!
+//! Every plan compiles for a [`TransformKind`]:
+//!
+//! * **Forward** — the historical path, unchanged.
+//! * **Inverse** — the same forward kernels with the conjugation pushed
+//!   to the buffer boundary (`IDFT = conj ∘ DFT ∘ conj / n`): one sign
+//!   pass over `im` on entry, and the conjugation + 1/n scale folded
+//!   into the final pass on exit ([`real::conj_scale`]).
+//! * **RealForward / RealInverse** — the standard pack-into-n/2-c2c
+//!   factorization. The split/unpack boundary pass is a *real*
+//!   [`CompiledStep`] with edge [`EdgeType::RU`] (appended after the
+//!   c2c steps for R2C, prepended before them for C2R), so it appears
+//!   in traces, gets an `EdgeSample`, and its context-dependent cost is
+//!   visible to the search. Real kinds always compile with bit-reversal
+//!   (the unpack algebra needs the half-spectrum in natural order).
 
 use std::sync::Arc;
 
 use super::batch::BatchBuffer;
 use super::fused::{fused16, fused16_b, fused32, fused32_b, fused8, fused8_b, fused_twiddles};
 use super::passes::{radix2, radix2_b, radix4, radix4_b, radix8, radix8_b};
+use super::real;
 use super::twiddle::{TwiddleCache, TwiddleVec};
 use super::{log2i, SplitComplex};
 use crate::edge::EdgeType;
+use crate::kind::TransformKind;
 use crate::plan::Plan;
 
 /// One compiled step: edge + stage + resolved twiddles.
@@ -23,23 +40,34 @@ pub struct CompiledStep {
     tw: Vec<Arc<TwiddleVec>>,
 }
 
-/// A plan compiled for a fixed n: ready-to-run steps + optional bitrev.
+/// A plan compiled for a fixed n and transform kind: ready-to-run steps
+/// + optional bitrev + the folded final-pass scale.
 #[derive(Debug, Clone)]
 pub struct CompiledPlan {
+    /// Request-buffer length (for real kinds the internal c2c runs at
+    /// n/2; see [`TransformKind::complex_len`]).
     pub n: usize,
+    pub kind: TransformKind,
     pub plan: Plan,
     pub bitrev: bool,
+    /// Scale folded into the final pass (1/n_c2c for inverse kinds).
+    scale: f32,
     steps: Vec<CompiledStep>,
 }
 
 /// Compile a single edge at (n, stage) — shared by plan compilation and
-/// the per-edge measurement path.
+/// the per-edge measurement path. `n` is the c2c length the step runs
+/// over; for [`EdgeType::RU`] it is the *half* length h (the pass walks
+/// the full 2h buffer with the W_{2h} twiddles).
 pub fn compile_step(
     cache: &mut TwiddleCache,
     n: usize,
     edge: EdgeType,
     stage: usize,
 ) -> CompiledStep {
+    if edge == EdgeType::RU {
+        return CompiledStep { edge, stage, tw: vec![real::real_twiddles(cache, n)] };
+    }
     let m = n >> stage;
     assert!(
         m >= (1 << edge.stages()),
@@ -60,11 +88,13 @@ pub fn compile_step(
         EdgeType::F8 => fused_twiddles(cache, n, stage, 8),
         EdgeType::F16 => fused_twiddles(cache, n, stage, 16),
         EdgeType::F32 => fused_twiddles(cache, n, stage, 32),
+        EdgeType::RU => unreachable!(),
     };
     CompiledStep { edge, stage, tw }
 }
 
-/// Run one compiled step in place.
+/// Run one compiled c2c step in place. RU steps are boundary passes run
+/// by the kind dispatch in [`CompiledPlan::run`], never through here.
 pub fn run_step(step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
     match step.edge {
         EdgeType::R2 => radix2(re, im, step.stage, &step.tw[0]),
@@ -73,10 +103,11 @@ pub fn run_step(step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
         EdgeType::F8 => fused8(re, im, step.stage, &step.tw),
         EdgeType::F16 => fused16(re, im, step.stage, &step.tw),
         EdgeType::F32 => fused32(re, im, step.stage, &step.tw),
+        EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
     }
 }
 
-/// Run one compiled step over a lane-blocked batch buffer in place.
+/// Run one compiled c2c step over a lane-blocked batch buffer in place.
 pub fn run_step_b(step: &CompiledStep, re: &mut [f32], im: &mut [f32], lanes: usize) {
     match step.edge {
         EdgeType::R2 => radix2_b(re, im, step.stage, &step.tw[0], lanes),
@@ -89,24 +120,65 @@ pub fn run_step_b(step: &CompiledStep, re: &mut [f32], im: &mut [f32], lanes: us
         EdgeType::F8 => fused8_b(re, im, step.stage, &step.tw, lanes),
         EdgeType::F16 => fused16_b(re, im, step.stage, &step.tw, lanes),
         EdgeType::F32 => fused32_b(re, im, step.stage, &step.tw, lanes),
+        EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
     }
 }
 
 impl CompiledPlan {
-    /// Steps in execution order.
+    /// Steps in execution order (for real kinds this includes the RU
+    /// boundary step: last for R2C, first for C2R).
     pub fn steps(&self) -> &[CompiledStep] {
         &self.steps
     }
 
-    /// Execute in place (bitrev applied last if compiled with it).
+    /// Length of the internal c2c transform.
+    fn cn(&self) -> usize {
+        self.kind.complex_len(self.n)
+    }
+
+    /// Execute in place (bitrev applied last if compiled with it; kind
+    /// boundary passes around the c2c core as documented on [`Executor::compile_kind`]).
     pub fn run(&self, re: &mut [f32], im: &mut [f32]) {
         debug_assert_eq!(re.len(), self.n);
         debug_assert_eq!(im.len(), self.n);
-        for step in &self.steps {
-            run_step(step, re, im);
-        }
-        if self.bitrev {
-            super::bitrev::bit_reverse_permute(re, im);
+        match self.kind {
+            TransformKind::Forward => {
+                for step in &self.steps {
+                    run_step(step, re, im);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute(re, im);
+                }
+            }
+            TransformKind::Inverse => {
+                real::negate(im);
+                for step in &self.steps {
+                    run_step(step, re, im);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute(re, im);
+                }
+                real::conj_scale(re, im, self.scale);
+            }
+            TransformKind::RealForward => {
+                let h = self.cn();
+                real::pack_even_odd(re, im, h);
+                let last = self.steps.len() - 1;
+                for step in &self.steps[..last] {
+                    run_step(step, &mut re[..h], &mut im[..h]);
+                }
+                super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
+                real::unpack_r2c(re, im, &self.steps[last].tw[0]);
+            }
+            TransformKind::RealInverse => {
+                let h = self.cn();
+                real::pack_c2r(re, im, &self.steps[0].tw[0]);
+                for step in &self.steps[1..] {
+                    run_step(step, &mut re[..h], &mut im[..h]);
+                }
+                super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
+                real::interleave_scale(re, im, self.scale);
+            }
         }
     }
 
@@ -120,7 +192,10 @@ impl CompiledPlan {
     /// Execute in place, reporting each step's wall-clock nanoseconds to
     /// `on_step(edge, stage, ns)` — the autotune trace-sampling hook. The
     /// arithmetic is identical to [`CompiledPlan::run`] (same steps, same
-    /// order), so traced and untraced executions are bit-identical.
+    /// order), so traced and untraced executions are bit-identical. RU
+    /// boundary steps are timed like any other step; the permutation
+    /// prologue/epilogue passes (pack, bitrev, interleave, conj-scale)
+    /// are untimed, exactly as bitrev always was.
     pub fn run_traced(
         &self,
         re: &mut [f32],
@@ -129,13 +204,52 @@ impl CompiledPlan {
     ) {
         debug_assert_eq!(re.len(), self.n);
         debug_assert_eq!(im.len(), self.n);
-        for step in &self.steps {
-            let t0 = std::time::Instant::now();
-            run_step(step, re, im);
-            on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
-        }
-        if self.bitrev {
-            super::bitrev::bit_reverse_permute(re, im);
+        match self.kind {
+            TransformKind::Forward | TransformKind::Inverse => {
+                if self.kind == TransformKind::Inverse {
+                    real::negate(im);
+                }
+                for step in &self.steps {
+                    let t0 = std::time::Instant::now();
+                    run_step(step, re, im);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute(re, im);
+                }
+                if self.kind == TransformKind::Inverse {
+                    real::conj_scale(re, im, self.scale);
+                }
+            }
+            TransformKind::RealForward => {
+                let h = self.cn();
+                real::pack_even_odd(re, im, h);
+                let last = self.steps.len() - 1;
+                for step in &self.steps[..last] {
+                    let t0 = std::time::Instant::now();
+                    run_step(step, &mut re[..h], &mut im[..h]);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
+                let ru = &self.steps[last];
+                let t0 = std::time::Instant::now();
+                real::unpack_r2c(re, im, &ru.tw[0]);
+                on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
+            }
+            TransformKind::RealInverse => {
+                let h = self.cn();
+                let ru = &self.steps[0];
+                let t0 = std::time::Instant::now();
+                real::pack_c2r(re, im, &ru.tw[0]);
+                on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
+                for step in &self.steps[1..] {
+                    let t0 = std::time::Instant::now();
+                    run_step(step, &mut re[..h], &mut im[..h]);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
+                real::interleave_scale(re, im, self.scale);
+            }
         }
     }
 
@@ -143,17 +257,51 @@ impl CompiledPlan {
     /// a time across the whole batch: each step's twiddles are loaded
     /// once and applied to every lane, amortizing the per-pass memory
     /// round trip over the batch. Per-lane outputs are bit-identical to
-    /// [`CompiledPlan::run`] on that lane alone (the batched kernels run
-    /// the same butterfly algebra per lane; padding lanes are zeros and
-    /// never feed live lanes).
+    /// [`CompiledPlan::run`] on that lane alone *for every kind* (the
+    /// batched kernels — boundary passes included — run the same
+    /// per-lane algebra; padding lanes are zeros and never feed live
+    /// lanes).
     pub fn run_batch(&self, buf: &mut BatchBuffer) {
         assert_eq!(buf.n(), self.n, "batch buffer is for n={}, plan for n={}", buf.n(), self.n);
         let lanes = buf.lanes();
-        for step in &self.steps {
-            run_step_b(step, &mut buf.re, &mut buf.im, lanes);
-        }
-        if self.bitrev {
-            super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+        match self.kind {
+            TransformKind::Forward => {
+                for step in &self.steps {
+                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+                }
+            }
+            TransformKind::Inverse => {
+                real::negate(&mut buf.im);
+                for step in &self.steps {
+                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+                }
+                real::conj_scale(&mut buf.re, &mut buf.im, self.scale);
+            }
+            TransformKind::RealForward => {
+                let half = self.cn() * lanes;
+                real::pack_even_odd_b(&mut buf.re, &mut buf.im, self.cn(), lanes);
+                let last = self.steps.len() - 1;
+                for step in &self.steps[..last] {
+                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                }
+                super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
+                real::unpack_r2c_b(&mut buf.re, &mut buf.im, &self.steps[last].tw[0], lanes);
+            }
+            TransformKind::RealInverse => {
+                let half = self.cn() * lanes;
+                real::pack_c2r_b(&mut buf.re, &mut buf.im, &self.steps[0].tw[0], lanes);
+                for step in &self.steps[1..] {
+                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                }
+                super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
+                real::interleave_scale_b(&mut buf.re, &mut buf.im, self.scale, lanes);
+            }
         }
     }
 
@@ -168,13 +316,52 @@ impl CompiledPlan {
     ) {
         assert_eq!(buf.n(), self.n, "batch buffer is for n={}, plan for n={}", buf.n(), self.n);
         let lanes = buf.lanes();
-        for step in &self.steps {
-            let t0 = std::time::Instant::now();
-            run_step_b(step, &mut buf.re, &mut buf.im, lanes);
-            on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
-        }
-        if self.bitrev {
-            super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+        match self.kind {
+            TransformKind::Forward | TransformKind::Inverse => {
+                if self.kind == TransformKind::Inverse {
+                    real::negate(&mut buf.im);
+                }
+                for step in &self.steps {
+                    let t0 = std::time::Instant::now();
+                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                if self.bitrev {
+                    super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
+                }
+                if self.kind == TransformKind::Inverse {
+                    real::conj_scale(&mut buf.re, &mut buf.im, self.scale);
+                }
+            }
+            TransformKind::RealForward => {
+                let half = self.cn() * lanes;
+                real::pack_even_odd_b(&mut buf.re, &mut buf.im, self.cn(), lanes);
+                let last = self.steps.len() - 1;
+                for step in &self.steps[..last] {
+                    let t0 = std::time::Instant::now();
+                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
+                let ru = &self.steps[last];
+                let t0 = std::time::Instant::now();
+                real::unpack_r2c_b(&mut buf.re, &mut buf.im, &ru.tw[0], lanes);
+                on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
+            }
+            TransformKind::RealInverse => {
+                let half = self.cn() * lanes;
+                let ru = &self.steps[0];
+                let t0 = std::time::Instant::now();
+                real::pack_c2r_b(&mut buf.re, &mut buf.im, &ru.tw[0], lanes);
+                on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
+                for step in &self.steps[1..] {
+                    let t0 = std::time::Instant::now();
+                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
+                }
+                super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
+                real::interleave_scale_b(&mut buf.re, &mut buf.im, self.scale, lanes);
+            }
         }
     }
 
@@ -201,17 +388,51 @@ impl Executor {
         Self::default()
     }
 
-    /// Compile `plan` for n-point transforms (panics on invalid plans —
-    /// validity is the planner's contract; see `Plan::is_valid_for`).
+    /// Compile `plan` for forward n-point transforms (the historical
+    /// entry point; see [`Executor::compile_kind`]).
     pub fn compile(&mut self, plan: &Plan, n: usize, bitrev: bool) -> CompiledPlan {
-        let l = log2i(n);
-        assert!(plan.is_valid_for(l), "plan {plan} invalid for n={n}");
-        let steps = plan
+        self.compile_kind(plan, n, bitrev, TransformKind::Forward)
+    }
+
+    /// Compile `plan` for n-point transforms of `kind` (panics on
+    /// invalid plans — validity is the planner's contract). For c2c
+    /// kinds the plan must be valid for log2(n); for real kinds `n` is
+    /// the request-buffer length, the internal c2c runs at n/2, the
+    /// plan must be valid for log2(n) − 1, and bit-reversal is forced
+    /// on (the split/unpack algebra needs natural order).
+    pub fn compile_kind(
+        &mut self,
+        plan: &Plan,
+        n: usize,
+        bitrev: bool,
+        kind: TransformKind,
+    ) -> CompiledPlan {
+        if kind.is_real() {
+            assert!(
+                n >= 4 && n.is_power_of_two(),
+                "real transforms need a power-of-two n >= 4, got {n}"
+            );
+        }
+        let cn = kind.complex_len(n);
+        let l = log2i(cn);
+        assert!(plan.is_valid_for(l), "plan {plan} invalid for {kind} n={n} (c2c levels {l})");
+        let bitrev = bitrev || kind.is_real();
+        let mut steps: Vec<CompiledStep> = plan
             .steps()
             .into_iter()
-            .map(|(edge, stage)| compile_step(&mut self.cache, n, edge, stage))
+            .map(|(edge, stage)| compile_step(&mut self.cache, cn, edge, stage))
             .collect();
-        CompiledPlan { n, plan: plan.clone(), bitrev, steps }
+        match kind {
+            TransformKind::RealForward => {
+                steps.push(compile_step(&mut self.cache, cn, EdgeType::RU, l));
+            }
+            TransformKind::RealInverse => {
+                steps.insert(0, compile_step(&mut self.cache, cn, EdgeType::RU, 0));
+            }
+            _ => {}
+        }
+        let scale = if kind.is_inverse() { 1.0 / cn as f32 } else { 1.0 };
+        CompiledPlan { n, kind, plan: plan.clone(), bitrev, scale, steps }
     }
 
     /// Compile a single edge (for per-edge measurement).
@@ -262,10 +483,111 @@ mod tests {
     }
 
     #[test]
+    fn inverse_of_forward_is_identity() {
+        // inverse(forward(x)) ≈ x across plan shapes — the kind axis's
+        // basic contract (both directions share the forward kernels).
+        let n = 256;
+        let input = SplitComplex::random(n, 31);
+        let scale = input.max_abs().max(1.0);
+        let mut ex = Executor::new();
+        for plan_str in ["R4,R4,R2,F8", "R2,R2,R2,R2,R2,R2,R2,R2", "R8,F32", "F8,F8,R2,R2"] {
+            let plan = Plan::parse(plan_str).unwrap();
+            let fwd = ex.compile_kind(&plan, n, true, TransformKind::Forward);
+            let inv = ex.compile_kind(&plan, n, true, TransformKind::Inverse);
+            let back = inv.run_on(&fwd.run_on(&input));
+            let err = back.max_abs_diff(&input) / scale;
+            assert!(err < 1e-4, "{plan_str}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn inverse_matches_scaled_conjugate_dft() {
+        // The inverse kind is the true IDFT: applying it to the naive
+        // DFT of x recovers x.
+        let n = 64;
+        let input = SplitComplex::random(n, 77);
+        let spectrum = dft_naive(&input);
+        let mut ex = Executor::new();
+        let inv = ex.compile_kind(&Plan::parse("R4,R4,R2,R2").unwrap(), n, true, TransformKind::Inverse);
+        let back = inv.run_on(&spectrum);
+        let err = back.max_abs_diff(&input) / input.max_abs().max(1.0);
+        assert!(err < 1e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn real_forward_matches_complex_dft_of_real_signal() {
+        // r2c must match the reference complex DFT of the real signal —
+        // on the first n/2+1 bins by construction, and on all n bins via
+        // the Hermitian mirror the unpack writes.
+        let mut ex = Executor::new();
+        for (n, plan_str) in [(8usize, "R2,R2"), (64, "R4,R2,R2,R2"), (512, "R4,R4,R2,F8")] {
+            let mut input = SplitComplex::random(n, n as u64);
+            input.im.iter_mut().for_each(|v| *v = 0.0);
+            let want = dft_naive(&input);
+            let cp = ex.compile_kind(&Plan::parse(plan_str).unwrap(), n, true, TransformKind::RealForward);
+            let got = cp.run_on(&input);
+            let scale = want.max_abs().max(1.0);
+            let err = got.max_abs_diff(&want) / scale;
+            assert!(err < 1e-4, "n={n} {plan_str}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn real_forward_ignores_imaginary_input() {
+        let n = 128;
+        let mut ex = Executor::new();
+        let cp = ex.compile_kind(&Plan::parse("R4,R4,R2,R2").unwrap(), n, true, TransformKind::RealForward);
+        let mut a = SplitComplex::random(n, 5);
+        let mut b = a.clone();
+        a.im.iter_mut().for_each(|v| *v = 0.0);
+        b.im.iter_mut().for_each(|v| *v = 123.0);
+        assert_eq!(cp.run_on(&a), cp.run_on(&b));
+    }
+
+    #[test]
+    fn real_inverse_of_real_forward_is_identity() {
+        let n = 256;
+        let mut ex = Executor::new();
+        let plan = Plan::parse("R4,R2,F16").unwrap(); // 7 levels for h = 128
+        let fwd = ex.compile_kind(&plan, n, true, TransformKind::RealForward);
+        let inv = ex.compile_kind(&plan, n, true, TransformKind::RealInverse);
+        let mut input = SplitComplex::random(n, 404);
+        input.im.iter_mut().for_each(|v| *v = 0.0);
+        let back = inv.run_on(&fwd.run_on(&input));
+        let err = back.max_abs_diff(&input) / input.max_abs().max(1.0);
+        assert!(err < 1e-4, "rel err {err}");
+        // the real-inverse output is purely real
+        assert!(back.im.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn real_kinds_place_the_ru_step_at_the_boundary() {
+        let n = 64;
+        let mut ex = Executor::new();
+        let plan = Plan::parse("R4,R2,R2,R2").unwrap();
+        let r2c = ex.compile_kind(&plan, n, true, TransformKind::RealForward);
+        assert_eq!(r2c.steps().last().unwrap().edge, EdgeType::RU);
+        assert_eq!(r2c.steps().last().unwrap().stage, 5); // one past the c2c levels
+        assert_eq!(r2c.steps().len(), plan.len() + 1);
+        let c2r = ex.compile_kind(&plan, n, true, TransformKind::RealInverse);
+        assert_eq!(c2r.steps().first().unwrap().edge, EdgeType::RU);
+        assert_eq!(c2r.steps().first().unwrap().stage, 0);
+    }
+
+    #[test]
     #[should_panic(expected = "invalid")]
     fn invalid_plan_rejected() {
         let mut ex = Executor::new();
         ex.compile(&Plan::parse("R2,R2").unwrap(), 1024, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid")]
+    fn real_kind_rejects_full_length_plan() {
+        // A real transform's c2c runs at n/2: an l-level plan is one
+        // level too long.
+        let mut ex = Executor::new();
+        ex.compile_kind(&Plan::parse("R4,R4,R2,F8").unwrap(), 256, true, TransformKind::RealForward);
     }
 
     #[test]
@@ -289,6 +611,9 @@ mod tests {
         let before = ex.twiddle_cache().entries();
         ex.compile(&p1, 1024, true); // recompile: all cache hits
         assert_eq!(ex.twiddle_cache().entries(), before);
+        // inverse kinds share the same (forward) tables: zero new entries
+        ex.compile_kind(&p1, 1024, true, TransformKind::Inverse);
+        assert_eq!(ex.twiddle_cache().entries(), before);
     }
 
     #[test]
@@ -305,6 +630,25 @@ mod tests {
         });
         assert_eq!(traced, cp.run_on(&input));
         assert_eq!(seen, plan.steps());
+    }
+
+    #[test]
+    fn traced_runs_are_bit_identical_for_every_kind() {
+        let n = 256;
+        let mut ex = Executor::new();
+        let c2c = Plan::parse("R4,R4,R2,F8").unwrap();
+        let half = Plan::parse("R4,R2,R2,F8").unwrap(); // 7 levels for h = 128
+        for kind in crate::kind::ALL_KINDS {
+            let plan = if kind.is_real() { &half } else { &c2c };
+            let cp = ex.compile_kind(plan, n, true, kind);
+            let input = SplitComplex::random(n, 9 + kind.index() as u64);
+            let mut seen = Vec::new();
+            let traced = cp.run_on_traced(&input, &mut |edge, stage, _| seen.push((edge, stage)));
+            assert_eq!(traced, cp.run_on(&input), "{kind}");
+            let want: Vec<(EdgeType, usize)> =
+                cp.steps().iter().map(|s| (s.edge, s.stage)).collect();
+            assert_eq!(seen, want, "{kind}: every step (RU included) reports");
+        }
     }
 
     #[test]
@@ -328,6 +672,33 @@ mod tests {
                         buf.scatter_lane(l),
                         cp.run_on(input),
                         "{plan_str}: lane {l} of batch {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_is_bit_identical_to_scalar_for_every_kind() {
+        let n = 128;
+        let mut ex = Executor::new();
+        let c2c = Plan::parse("R4,R2,R2,F8").unwrap();
+        let half = Plan::parse("R4,R2,F8").unwrap(); // 6 levels for h = 64
+        for kind in crate::kind::ALL_KINDS {
+            let plan = if kind.is_real() { &half } else { &c2c };
+            let cp = ex.compile_kind(plan, n, true, kind);
+            for b in [1usize, 3, 4, 6] {
+                let inputs: Vec<SplitComplex> =
+                    (0..b).map(|i| SplitComplex::random(n, 700 + i as u64)).collect();
+                let refs: Vec<&SplitComplex> = inputs.iter().collect();
+                let mut buf = crate::fft::BatchBuffer::new(n, b);
+                buf.gather(&refs);
+                cp.run_batch(&mut buf);
+                for (l, input) in inputs.iter().enumerate() {
+                    assert_eq!(
+                        buf.scatter_lane(l),
+                        cp.run_on(input),
+                        "{kind}: lane {l} of batch {b}"
                     );
                 }
             }
@@ -368,6 +739,28 @@ mod tests {
         cp.run_batch(&mut plain);
         assert_eq!(traced, plain);
         assert_eq!(seen, plan.steps());
+    }
+
+    #[test]
+    fn traced_batch_matches_plain_batch_for_real_kinds() {
+        let n = 64;
+        let mut ex = Executor::new();
+        let half = Plan::parse("R4,R2,R2,R2").unwrap(); // 5 levels for h = 32
+        for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
+            let cp = ex.compile_kind(&half, n, true, kind);
+            let inputs: Vec<SplitComplex> = (0..3).map(|i| SplitComplex::random(n, 60 + i)).collect();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            let mut traced = crate::fft::BatchBuffer::new(n, 3);
+            traced.gather(&refs);
+            let mut plain = traced.clone();
+            let mut seen = Vec::new();
+            cp.run_batch_traced(&mut traced, &mut |edge, stage, _| seen.push((edge, stage)));
+            cp.run_batch(&mut plain);
+            assert_eq!(traced, plain, "{kind}");
+            let want: Vec<(EdgeType, usize)> =
+                cp.steps().iter().map(|s| (s.edge, s.stage)).collect();
+            assert_eq!(seen, want, "{kind}");
+        }
     }
 
     #[test]

@@ -11,8 +11,12 @@
 //!   executed together by the `*_b` kernel variants (one twiddle load
 //!   per batch instead of per transform);
 //! * [`twiddle`] — cached twiddle-factor tables;
+//! * [`real`] — the kind-specific boundary passes: real-input pack /
+//!   split-unpack (the RU step), inverse boundary conjugation, and the
+//!   folded final-pass scales — the c2c core is kind-agnostic;
 //! * [`bitrev`] — bit-reversal permutation;
-//! * [`exec`] — the plan executor (compiled plans over a twiddle cache);
+//! * [`exec`] — the plan executor (compiled plans over a twiddle cache),
+//!   parameterized by [`crate::kind::TransformKind`];
 //! * [`reference`] — O(n²) f64 DFT used as ground truth in tests.
 //!
 //! Three roles in the system: correctness cross-check for the PJRT
@@ -25,6 +29,7 @@ pub mod bitrev;
 pub mod exec;
 pub mod fused;
 pub mod passes;
+pub mod real;
 pub mod reference;
 pub mod twiddle;
 

@@ -1,0 +1,435 @@
+//! Real-transform and inverse-transform boundary kernels.
+//!
+//! The c2c passes of every transform kind run the *same* forward kernels
+//! ([`super::passes`] / [`super::fused`]); everything kind-specific lives
+//! at the buffer boundary, in the passes of this module:
+//!
+//! * **Inverse (C2C-I)** uses the identity `IDFT = conj ∘ DFT ∘ conj / n`.
+//!   Conjugating every twiddle table *and* every hardcoded kernel
+//!   constant (the −j of radix-4, the (1−j)/√2 of radix-8, the fused
+//!   blocks' internal rotations) would mean twelve hand-written kernel
+//!   variants; pushing the conjugation to the buffer boundary is the
+//!   same operator with two sign passes — [`negate`] on the way in, and
+//!   the output conjugation **folded into the final scale pass**
+//!   ([`conj_scale`]: `re *= s, im *= −s`), so the inverse pays exactly
+//!   one extra sweep over `im`.
+//! * **Real-input (R2C)** packs the n-point real signal into an
+//!   n/2-point complex buffer ([`pack_even_odd`]), runs any forward c2c
+//!   plan over the half, and then the split/unpack pass
+//!   ([`unpack_r2c`]) — the RU step — reconstructs the full Hermitian
+//!   spectrum via `X[k] = E[k] + W_n^k·O[k]`, `X[n−k] = conj(X[k])`.
+//! * **Real-output (C2R)** inverts that factorization: the RU step
+//!   ([`pack_c2r`]) merges the Hermitian spectrum into the half-size
+//!   `Z` (with the inverse conjugation folded in, so the plain forward
+//!   kernels follow), and [`interleave_scale`] unpacks the real signal
+//!   with the 1/(n/2) scale folded into the final interleave pass.
+//!
+//! Every kernel has a lane-blocked `_b` variant executing the identical
+//! per-lane arithmetic over a [`super::batch::BatchBuffer`] panel, so
+//! batched outputs stay bit-identical to scalar runs for every kind.
+//! The permutation passes (pack/interleave) are in-place-safe: reads of
+//! iteration k land at indices no earlier iteration has written (the
+//! loops are ordered to guarantee it; see each function's comment).
+
+use std::sync::Arc;
+
+use super::twiddle::{TwiddleCache, TwiddleVec};
+
+/// The RU-pass twiddles for a c2c size of `h` (buffer size n = 2h):
+/// W_n^k = exp(−2πik/n) for k in 0..=h/2, shared through the one
+/// process-wide cache like every other pass's tables.
+pub fn real_twiddles(cache: &mut TwiddleCache, h: usize) -> Arc<TwiddleVec> {
+    cache.vector(2 * h, h / 2 + 1, 1)
+}
+
+/// Negate a buffer in place — the conjugation prologue of the inverse
+/// kinds (applied to `im`). Works on scalar buffers and lane-blocked
+/// panels alike (the operation is element-wise).
+pub fn negate(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = -*x;
+    }
+}
+
+/// Conjugate-and-scale epilogue of the inverse transform: `re *= s`,
+/// `im *= −s` — the output conjugation and the 1/n scale folded into
+/// one final pass. Element-wise, so panels reuse it unchanged.
+pub fn conj_scale(re: &mut [f32], im: &mut [f32], s: f32) {
+    for x in re.iter_mut() {
+        *x *= s;
+    }
+    for x in im.iter_mut() {
+        *x = -*x * s;
+    }
+}
+
+/// R2C prologue: pack the real signal (read from `re`; `im` is input-
+/// ignored) into the half-length complex buffer z[k] = x[2k] + i·x[2k+1]
+/// occupying the first h slots. In-place safe ascending: iteration k
+/// reads re[2k], re[2k+1] (indices ≥ 2k > any slot written so far) and
+/// writes re[k], im[k].
+pub fn pack_even_odd(re: &mut [f32], im: &mut [f32], h: usize) {
+    debug_assert_eq!(re.len(), 2 * h);
+    for k in 0..h {
+        let a = re[2 * k];
+        let b = re[2 * k + 1];
+        re[k] = a;
+        im[k] = b;
+    }
+}
+
+/// Lane-blocked [`pack_even_odd`]: identical per-lane arithmetic over an
+/// element-major panel (`lanes` floats per logical element).
+pub fn pack_even_odd_b(re: &mut [f32], im: &mut [f32], h: usize, lanes: usize) {
+    debug_assert_eq!(re.len(), 2 * h * lanes);
+    for k in 0..h {
+        for l in 0..lanes {
+            let a = re[(2 * k) * lanes + l];
+            let b = re[(2 * k + 1) * lanes + l];
+            re[k * lanes + l] = a;
+            im[k * lanes + l] = b;
+        }
+    }
+}
+
+/// The R2C split/unpack pass (the RU step): given Z = DFT_h of the
+/// packed signal in the first h slots (natural order), produce the full
+/// n = 2h-point spectrum in place:
+///
+/// ```text
+/// E[k] = (Z[k] + conj(Z[h−k])) / 2      (even-sample spectrum)
+/// O[k] = (Z[k] − conj(Z[h−k])) / 2i     (odd-sample spectrum)
+/// X[k]     = E[k] + W_n^k · O[k]        k = 0..=h/2
+/// X[h−k]   = conj(E[k] − W_n^k · O[k])
+/// X[n−k]   = conj(X[k])                 (Hermitian mirror)
+/// ```
+///
+/// Bins 0..=h are computed directly and the upper half is mirrored, so
+/// the output equals the full complex DFT of the real signal. In-place
+/// safe: each iteration reads Z[k], Z[h−k] into locals before writing
+/// slots {k, h−k, h+k, n−k}, and later iterations never read a slot an
+/// earlier one wrote.
+pub fn unpack_r2c(re: &mut [f32], im: &mut [f32], tw: &TwiddleVec) {
+    let n = re.len();
+    let h = n / 2;
+    debug_assert!(h >= 2 && tw.len() >= h / 2 + 1);
+    // k = 0: X[0] and X[h] are real (Z[h] ≡ Z[0]).
+    let (ar, ai) = (re[0], im[0]);
+    re[0] = ar + ai;
+    im[0] = 0.0;
+    re[h] = ar - ai;
+    im[h] = 0.0;
+    for k in 1..=(h / 2) {
+        let j = h - k;
+        let (ar, ai) = (re[k], im[k]);
+        let (br, bi) = (re[j], im[j]);
+        let er = 0.5 * (ar + br);
+        let ei = 0.5 * (ai - bi);
+        let or_ = 0.5 * (ai + bi);
+        let oi = -0.5 * (ar - br);
+        let (wr, wi) = (tw.re[k], tw.im[k]);
+        let pr = wr * or_ - wi * oi;
+        let pi = wr * oi + wi * or_;
+        re[k] = er + pr;
+        im[k] = ei + pi;
+        re[j] = er - pr;
+        im[j] = -ei + pi;
+        // Hermitian mirrors: X[n−k] = conj(X[k]), X[h+k] = conj(X[h−k]).
+        re[n - k] = er + pr;
+        im[n - k] = -(ei + pi);
+        re[h + k] = er - pr;
+        im[h + k] = -(-ei + pi);
+    }
+}
+
+/// Lane-blocked [`unpack_r2c`]: identical per-lane arithmetic.
+pub fn unpack_r2c_b(re: &mut [f32], im: &mut [f32], tw: &TwiddleVec, lanes: usize) {
+    let n = re.len() / lanes;
+    let h = n / 2;
+    debug_assert!(h >= 2 && tw.len() >= h / 2 + 1);
+    for l in 0..lanes {
+        let (ar, ai) = (re[l], im[l]);
+        re[l] = ar + ai;
+        im[l] = 0.0;
+        re[h * lanes + l] = ar - ai;
+        im[h * lanes + l] = 0.0;
+    }
+    for k in 1..=(h / 2) {
+        let j = h - k;
+        let (wr, wi) = (tw.re[k], tw.im[k]);
+        for l in 0..lanes {
+            let (ar, ai) = (re[k * lanes + l], im[k * lanes + l]);
+            let (br, bi) = (re[j * lanes + l], im[j * lanes + l]);
+            let er = 0.5 * (ar + br);
+            let ei = 0.5 * (ai - bi);
+            let or_ = 0.5 * (ai + bi);
+            let oi = -0.5 * (ar - br);
+            let pr = wr * or_ - wi * oi;
+            let pi = wr * oi + wi * or_;
+            re[k * lanes + l] = er + pr;
+            im[k * lanes + l] = ei + pi;
+            re[j * lanes + l] = er - pr;
+            im[j * lanes + l] = -ei + pi;
+            re[(n - k) * lanes + l] = er + pr;
+            im[(n - k) * lanes + l] = -(ei + pi);
+            re[(h + k) * lanes + l] = er - pr;
+            im[(h + k) * lanes + l] = -(-ei + pi);
+        }
+    }
+}
+
+/// The C2R spectrum-merge pass (the RU step of the real-output inverse):
+/// given a Hermitian spectrum X in the full buffer (bins 0..=h read, the
+/// upper half ignored), pack **conj(Z[k])** into the first h slots,
+/// where Z is the half-size spectrum whose inverse DFT interleaves the
+/// real output:
+///
+/// ```text
+/// E[k] = (X[k] + conj(X[h−k])) / 2
+/// O[k] = conj(W_n^k) · (X[k] − conj(X[h−k])) / 2
+/// Z[k] = E[k] + i·O[k]
+/// ```
+///
+/// The inverse conjugation (`IDFT = conj ∘ DFT ∘ conj / h`) is folded
+/// into this pass — it stores conj(Z) — so the plain *forward* c2c
+/// kernels follow, and [`interleave_scale`] finishes the conj + 1/h.
+/// In-place safe: iteration k reads slots {k, h−k} and writes the same
+/// two (k = 0 reads slot h but writes only slot 0).
+pub fn pack_c2r(re: &mut [f32], im: &mut [f32], tw: &TwiddleVec) {
+    let n = re.len();
+    let h = n / 2;
+    debug_assert!(h >= 2 && tw.len() >= h / 2 + 1);
+    for k in 0..=(h / 2) {
+        let j = h - k;
+        let (ar, ai) = (re[k], im[k]);
+        let (br, bi) = (re[j], im[j]);
+        let er = 0.5 * (ar + br);
+        let ei = 0.5 * (ai - bi);
+        let dr = 0.5 * (ar - br);
+        let di = 0.5 * (ai + bi);
+        let (wr, wi) = (tw.re[k], tw.im[k]);
+        // O = conj(W^k) · D
+        let or_ = wr * dr + wi * di;
+        let oi = wr * di - wi * dr;
+        // Z[k] = (Er − Oi, Ei + Or), stored conjugated.
+        re[k] = er - oi;
+        im[k] = -(ei + or_);
+        if k != 0 && j != k {
+            // Z[h−k] = (Er + Oi, −Ei + Or), conjugated.
+            re[j] = er + oi;
+            im[j] = -(-ei + or_);
+        }
+    }
+}
+
+/// Lane-blocked [`pack_c2r`]: identical per-lane arithmetic.
+pub fn pack_c2r_b(re: &mut [f32], im: &mut [f32], tw: &TwiddleVec, lanes: usize) {
+    let n = re.len() / lanes;
+    let h = n / 2;
+    debug_assert!(h >= 2 && tw.len() >= h / 2 + 1);
+    for k in 0..=(h / 2) {
+        let j = h - k;
+        let (wr, wi) = (tw.re[k], tw.im[k]);
+        for l in 0..lanes {
+            let (ar, ai) = (re[k * lanes + l], im[k * lanes + l]);
+            let (br, bi) = (re[j * lanes + l], im[j * lanes + l]);
+            let er = 0.5 * (ar + br);
+            let ei = 0.5 * (ai - bi);
+            let dr = 0.5 * (ar - br);
+            let di = 0.5 * (ai + bi);
+            let or_ = wr * dr + wi * di;
+            let oi = wr * di - wi * dr;
+            re[k * lanes + l] = er - oi;
+            im[k * lanes + l] = -(ei + or_);
+            if k != 0 && j != k {
+                re[j * lanes + l] = er + oi;
+                im[j * lanes + l] = -(-ei + or_);
+            }
+        }
+    }
+}
+
+/// C2R epilogue: the first h slots hold conj(z[k]) (the forward kernels
+/// ran over the conjugated buffer); interleave the real output
+/// `x[2k] = s·re[k]`, `x[2k+1] = −s·im[k]` — the output conjugation and
+/// the 1/h scale folded into the final interleave pass — and zero `im`.
+/// In-place safe descending: iteration k reads slots k (indices prior
+/// iterations' writes at ≥ 2k+2 never touched) and writes 2k, 2k+1.
+pub fn interleave_scale(re: &mut [f32], im: &mut [f32], s: f32) {
+    let h = re.len() / 2;
+    for k in (0..h).rev() {
+        let a = re[k] * s;
+        let b = -im[k] * s;
+        re[2 * k] = a;
+        re[2 * k + 1] = b;
+        im[2 * k] = 0.0;
+        im[2 * k + 1] = 0.0;
+    }
+}
+
+/// Lane-blocked [`interleave_scale`]: identical per-lane arithmetic.
+pub fn interleave_scale_b(re: &mut [f32], im: &mut [f32], s: f32, lanes: usize) {
+    let h = re.len() / lanes / 2;
+    for k in (0..h).rev() {
+        for l in 0..lanes {
+            let a = re[k * lanes + l] * s;
+            let b = -im[k * lanes + l] * s;
+            re[(2 * k) * lanes + l] = a;
+            re[(2 * k + 1) * lanes + l] = b;
+            im[(2 * k) * lanes + l] = 0.0;
+            im[(2 * k + 1) * lanes + l] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::reference::{dft_naive, fft_ref};
+    use crate::fft::{bitrev::bit_reverse_permute, SplitComplex};
+
+    /// Reference R2C via the c2c oracle: DFT of the real signal.
+    fn dft_of_real(x: &[f32]) -> SplitComplex {
+        let v = SplitComplex::from_parts(x.to_vec(), vec![0.0; x.len()]);
+        dft_naive(&v)
+    }
+
+    /// Run the scalar R2C path by hand: pack → fft_ref on the half →
+    /// unpack; compares against the full DFT of the real signal.
+    #[test]
+    fn pack_fft_unpack_matches_full_dft() {
+        for n in [4usize, 8, 32, 128] {
+            let h = n / 2;
+            let signal: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+            let mut re = signal.clone();
+            let mut im = vec![0.0f32; n];
+            pack_even_odd(&mut re, &mut im, h);
+            let z = SplitComplex::from_parts(re[..h].to_vec(), im[..h].to_vec());
+            let zf = fft_ref(&z);
+            re[..h].copy_from_slice(&zf.re);
+            im[..h].copy_from_slice(&zf.im);
+            let mut cache = crate::fft::TwiddleCache::new();
+            let tw = real_twiddles(&mut cache, h);
+            unpack_r2c(&mut re, &mut im, &tw);
+            let want = dft_of_real(&signal);
+            let got = SplitComplex::from_parts(re, im);
+            let scale = want.max_abs().max(1.0);
+            assert!(got.max_abs_diff(&want) / scale < 1e-4, "n={n}");
+        }
+    }
+
+    /// pack_c2r is the exact inverse of unpack_r2c's boundary algebra:
+    /// unpack(Z) then pack recovers conj(Z) on the first h slots.
+    #[test]
+    fn c2r_pack_inverts_r2c_unpack() {
+        let n = 64;
+        let h = n / 2;
+        // A spectrum that actually came from a real signal.
+        let signal: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut re = signal.clone();
+        let mut im = vec![0.0f32; n];
+        pack_even_odd(&mut re, &mut im, h);
+        let z = SplitComplex::from_parts(re[..h].to_vec(), im[..h].to_vec());
+        let zf = fft_ref(&z);
+        re[..h].copy_from_slice(&zf.re);
+        im[..h].copy_from_slice(&zf.im);
+        let mut cache = crate::fft::TwiddleCache::new();
+        let tw = real_twiddles(&mut cache, h);
+        unpack_r2c(&mut re, &mut im, &tw);
+        pack_c2r(&mut re, &mut im, &tw);
+        for k in 0..h {
+            assert!((re[k] - zf.re[k]).abs() < 1e-4, "re[{k}]");
+            assert!((im[k] + zf.im[k]).abs() < 1e-4, "im[{k}] (conjugated)");
+        }
+    }
+
+    #[test]
+    fn batched_boundary_kernels_are_bit_identical_to_scalar() {
+        let n = 32;
+        let h = n / 2;
+        let lanes = 4;
+        let mut cache = crate::fft::TwiddleCache::new();
+        let tw = real_twiddles(&mut cache, h);
+        let scalars: Vec<SplitComplex> =
+            (0..lanes as u64).map(|i| SplitComplex::random(n, 100 + i)).collect();
+        // gather into a panel by hand
+        let mut pre = vec![0.0f32; n * lanes];
+        let mut pim = vec![0.0f32; n * lanes];
+        for (l, s) in scalars.iter().enumerate() {
+            for i in 0..n {
+                pre[i * lanes + l] = s.re[i];
+                pim[i * lanes + l] = s.im[i];
+            }
+        }
+        for which in 0..5 {
+            let mut panel_re = pre.clone();
+            let mut panel_im = pim.clone();
+            let mut wants: Vec<SplitComplex> = scalars.clone();
+            for w in wants.iter_mut() {
+                match which {
+                    0 => pack_even_odd(&mut w.re, &mut w.im, h),
+                    1 => unpack_r2c(&mut w.re, &mut w.im, &tw),
+                    2 => pack_c2r(&mut w.re, &mut w.im, &tw),
+                    3 => interleave_scale(&mut w.re, &mut w.im, 0.125),
+                    _ => conj_scale(&mut w.re, &mut w.im, 0.25),
+                }
+            }
+            match which {
+                0 => pack_even_odd_b(&mut panel_re, &mut panel_im, h, lanes),
+                1 => unpack_r2c_b(&mut panel_re, &mut panel_im, &tw, lanes),
+                2 => pack_c2r_b(&mut panel_re, &mut panel_im, &tw, lanes),
+                3 => interleave_scale_b(&mut panel_re, &mut panel_im, 0.125, lanes),
+                _ => conj_scale(&mut panel_re, &mut panel_im, 0.25),
+            }
+            for (l, want) in wants.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(panel_re[i * lanes + l], want.re[i], "kernel {which} re[{i}] lane {l}");
+                    assert_eq!(panel_im[i * lanes + l], want.im[i], "kernel {which} im[{i}] lane {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_inverse_identity_via_boundary_conjugation() {
+        // conj-in → forward reference FFT → conj-and-scale-out is the
+        // exact inverse of the forward reference FFT.
+        let n = 64;
+        let input = SplitComplex::random(n, 9);
+        let spectrum = fft_ref(&input);
+        let mut re = spectrum.re.clone();
+        let mut im = spectrum.im.clone();
+        negate(&mut im);
+        let y = fft_ref(&SplitComplex::from_parts(re.clone(), im.clone()));
+        re.copy_from_slice(&y.re);
+        im.copy_from_slice(&y.im);
+        conj_scale(&mut re, &mut im, 1.0 / n as f32);
+        let got = SplitComplex::from_parts(re, im);
+        let scale = input.max_abs().max(1.0);
+        assert!(got.max_abs_diff(&input) / scale < 1e-4);
+    }
+
+    #[test]
+    fn unpack_handles_min_size() {
+        // n = 4 (h = 2): the smallest real transform; loop degenerates
+        // to the k = 0 specials plus the self-paired k = h/2 = 1.
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut re = x.to_vec();
+        let mut im = vec![0.0f32; 4];
+        pack_even_odd(&mut re, &mut im, 2);
+        // DFT_2 of z = [(1,2), (3,4)]: Z = [(4,6), (-2,-2)]
+        let (z0r, z0i) = (re[0] + re[1], im[0] + im[1]);
+        let (z1r, z1i) = (re[0] - re[1], im[0] - im[1]);
+        re[0] = z0r;
+        im[0] = z0i;
+        re[1] = z1r;
+        im[1] = z1i;
+        let mut cache = crate::fft::TwiddleCache::new();
+        let tw = real_twiddles(&mut cache, 2);
+        unpack_r2c(&mut re, &mut im, &tw);
+        let want = dft_of_real(&x);
+        let got = SplitComplex::from_parts(re, im);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+        let _ = bit_reverse_permute; // (h = 2 bitrev is the identity)
+    }
+}

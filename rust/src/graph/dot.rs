@@ -17,6 +17,8 @@ fn color(e: EdgeType) -> &'static str {
         EdgeType::R4 => "orange",
         EdgeType::R8 => "red",
         EdgeType::F8 | EdgeType::F16 | EdgeType::F32 => "green",
+        // never drawn: RU is a boundary pass, not a graph edge
+        EdgeType::RU => "purple",
     }
 }
 

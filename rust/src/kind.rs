@@ -1,0 +1,194 @@
+//! Transform kinds: the transform-type axis of the whole stack.
+//!
+//! Every layer used to assume one transform — forward complex-to-complex.
+//! Real deployments are dominated by inverse and real-input transforms
+//! (Frigo & Johnson, *Implementing FFTs in Practice*, devote a full
+//! section to real-data FFTs for exactly this reason), so the kind is an
+//! explicit parameter everywhere a transform is planned, compiled,
+//! costed, grouped, or counted:
+//!
+//! * [`crate::fft::exec`] — `Executor::compile_kind` compiles a plan for
+//!   a kind; inverse kinds run the *same* forward kernels with the
+//!   conjugation algebraically pushed to the buffer boundary (one sign
+//!   pass in, conjugate-and-scale folded into the final pass out), and
+//!   real kinds run the standard pack-into-n/2-c2c factorization plus a
+//!   split/unpack step that is a real `CompiledStep`
+//!   ([`crate::edge::EdgeType::RU`]) — it appears in traces and its
+//!   context-dependent cost is visible to the search;
+//! * [`crate::cost`] — `CostModel::edge_ns_kind` / `unpack_ns` and the
+//!   [`crate::cost::KindCost`] planning adapter (real plans search over
+//!   l − 1 levels plus the unpack edge);
+//! * [`crate::coordinator`] — requests carry a kind, the grouping /
+//!   coalescing key is `(kind, n)` (no cross-kind grouping, FIFO per
+//!   key), and metrics count completions per kind;
+//! * [`crate::autotune`] — samples carry their kind and the online model
+//!   keys observations by (kind, cell, batch class), with
+//!   [`TransformKind::measured_alias`] folding inverse kinds onto the
+//!   forward tables until a calibration split is requested.
+
+use std::fmt;
+
+/// The kind of transform a request/plan/measurement is for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TransformKind {
+    /// Forward complex-to-complex (the historical implicit default).
+    Forward,
+    /// Inverse complex-to-complex: conjugate transform + 1/n scale.
+    Inverse,
+    /// Real-input forward (R2C): an n-point real signal in `re` yields
+    /// the full n-point Hermitian spectrum (bins 0..=n/2 computed, the
+    /// upper half mirrored by conjugate symmetry).
+    RealForward,
+    /// Real-output inverse (C2R): an n-point Hermitian spectrum (bins
+    /// 0..=n/2 read) yields the n-point real signal in `re` (`im` = 0).
+    RealInverse,
+}
+
+/// Number of transform kinds (sizes per-kind counter arrays).
+pub const KINDS: usize = 4;
+
+/// All kinds, in [`TransformKind::index`] order.
+pub const ALL_KINDS: [TransformKind; KINDS] = [
+    TransformKind::Forward,
+    TransformKind::Inverse,
+    TransformKind::RealForward,
+    TransformKind::RealInverse,
+];
+
+impl TransformKind {
+    /// Canonical CLI / persistence name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::Forward => "forward",
+            TransformKind::Inverse => "inverse",
+            TransformKind::RealForward => "real",
+            TransformKind::RealInverse => "real-inverse",
+        }
+    }
+
+    /// Parse a canonical name (plus the common r2c/c2r aliases).
+    pub fn parse(s: &str) -> Option<TransformKind> {
+        match s {
+            "forward" | "c2c" => Some(TransformKind::Forward),
+            "inverse" | "c2c-inverse" => Some(TransformKind::Inverse),
+            "real" | "r2c" => Some(TransformKind::RealForward),
+            "real-inverse" | "c2r" => Some(TransformKind::RealInverse),
+            _ => None,
+        }
+    }
+
+    /// The valid-option list CLI parse errors print.
+    pub fn valid_names() -> &'static str {
+        "forward|inverse|real|real-inverse"
+    }
+
+    /// Compact index in [0, [`KINDS`]).
+    pub fn index(self) -> usize {
+        match self {
+            TransformKind::Forward => 0,
+            TransformKind::Inverse => 1,
+            TransformKind::RealForward => 2,
+            TransformKind::RealInverse => 3,
+        }
+    }
+
+    /// Inverse of [`TransformKind::index`].
+    pub fn from_index(i: usize) -> Option<TransformKind> {
+        ALL_KINDS.get(i).copied()
+    }
+
+    /// Whether this kind packs a real signal into a half-size c2c.
+    pub fn is_real(self) -> bool {
+        matches!(self, TransformKind::RealForward | TransformKind::RealInverse)
+    }
+
+    /// Whether this kind applies the inverse (conjugate + 1/n) operator.
+    pub fn is_inverse(self) -> bool {
+        matches!(self, TransformKind::Inverse | TransformKind::RealInverse)
+    }
+
+    /// Length of the internal c2c transform under an n-point request
+    /// buffer: n for c2c kinds, n/2 for real kinds (the standard
+    /// pack-into-half factorization).
+    pub fn complex_len(self, n: usize) -> usize {
+        if self.is_real() {
+            n / 2
+        } else {
+            n
+        }
+    }
+
+    /// The kind whose measured edge cells this kind's c2c passes share.
+    /// Inverse kinds execute the *identical* forward kernels (the
+    /// conjugation lives at the buffer boundary), so their measurements
+    /// fold onto the forward tables by default; a calibration split
+    /// (`OnlineCost::set_split_kinds`) disables the folding when an
+    /// operator wants to verify the symmetry empirically.
+    pub fn measured_alias(self) -> TransformKind {
+        match self {
+            TransformKind::Inverse => TransformKind::Forward,
+            TransformKind::RealInverse => TransformKind::RealForward,
+            k => k,
+        }
+    }
+}
+
+impl fmt::Display for TransformKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for k in ALL_KINDS {
+            assert_eq!(TransformKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TransformKind::parse("r2c"), Some(TransformKind::RealForward));
+        assert_eq!(TransformKind::parse("c2r"), Some(TransformKind::RealInverse));
+        assert_eq!(TransformKind::parse("backward"), None);
+        assert_eq!(TransformKind::parse(""), None);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert_eq!(TransformKind::from_index(i), Some(*k));
+        }
+        assert_eq!(TransformKind::from_index(KINDS), None);
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(!TransformKind::Forward.is_real() && !TransformKind::Forward.is_inverse());
+        assert!(TransformKind::Inverse.is_inverse() && !TransformKind::Inverse.is_real());
+        assert!(TransformKind::RealForward.is_real() && !TransformKind::RealForward.is_inverse());
+        assert!(TransformKind::RealInverse.is_real() && TransformKind::RealInverse.is_inverse());
+    }
+
+    #[test]
+    fn complex_len_halves_real_kinds() {
+        assert_eq!(TransformKind::Forward.complex_len(1024), 1024);
+        assert_eq!(TransformKind::Inverse.complex_len(1024), 1024);
+        assert_eq!(TransformKind::RealForward.complex_len(1024), 512);
+        assert_eq!(TransformKind::RealInverse.complex_len(1024), 512);
+    }
+
+    #[test]
+    fn measured_alias_folds_inverse_onto_forward() {
+        assert_eq!(TransformKind::Inverse.measured_alias(), TransformKind::Forward);
+        assert_eq!(TransformKind::RealInverse.measured_alias(), TransformKind::RealForward);
+        assert_eq!(TransformKind::Forward.measured_alias(), TransformKind::Forward);
+        assert_eq!(TransformKind::RealForward.measured_alias(), TransformKind::RealForward);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(TransformKind::RealInverse.to_string(), "real-inverse");
+    }
+}

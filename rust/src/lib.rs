@@ -9,6 +9,9 @@
 //! shortest-path problem on a DAG:
 //!
 //! * [`edge`] / [`plan`] — the edge catalog (paper Table 1) and plan type;
+//! * [`kind`] — the transform-kind axis (forward / inverse / real-input /
+//!   real-output), threaded from plan compilation through cost models,
+//!   grouping keys, autotune cells, and serving metrics;
 //! * [`graph`] — context-free and context-aware decomposition graphs,
 //!   Dijkstra, exhaustive enumeration, DOT export (paper Figs. 1–2);
 //! * [`sim`] — the Apple-M1 / Haswell micro-architecture timing simulator
@@ -39,6 +42,7 @@ pub mod cost;
 pub mod edge;
 pub mod fft;
 pub mod graph;
+pub mod kind;
 pub mod plan;
 pub mod planner;
 pub mod report;

@@ -12,9 +12,10 @@
 
 use std::process::ExitCode;
 
-use spfft::cost::{CostModel, NativeCost, SimCost};
+use spfft::cost::{CostModel, KindCost, NativeCost, SimCost};
 use spfft::edge::Context;
 use spfft::fft::{reference::fft_ref, SplitComplex};
+use spfft::kind::TransformKind;
 use spfft::plan::Plan;
 use spfft::planner::{plan as run_plan, rank_all_plans, Strategy};
 use spfft::report;
@@ -86,8 +87,21 @@ impl AnyCost {
     }
 }
 
+/// Parse a `--kind` value, listing the valid options on failure
+/// (consistent with the `--cost`/`--backend` error style).
+fn parse_kind(s: &str) -> Result<TransformKind, CliError> {
+    TransformKind::parse(s).ok_or_else(|| {
+        CliError(format!("--kind must be {}, got '{s}'", TransformKind::valid_names()))
+    })
+}
+
 fn make_cost(args: &Args) -> Result<AnyCost, CliError> {
-    let n = args.get_usize("n")?;
+    make_cost_n(args, args.get_usize("n")?)
+}
+
+/// [`make_cost`] at an explicit size (the real kinds plan their
+/// half-size c2c surface, not the request size).
+fn make_cost_n(args: &Args, n: usize) -> Result<AnyCost, CliError> {
     if !n.is_power_of_two() || n < 2 {
         return Err(CliError(format!("--n must be a power of two >= 2, got {n}")));
     }
@@ -275,6 +289,27 @@ fn cmd_profile(argv: &[String]) -> Result<(), CliError> {
     Ok(())
 }
 
+/// Synthetic request payload for a kind: random complex for c2c kinds,
+/// a real signal (`im` = 0) for r2c, and a Hermitian spectrum (so the
+/// output is a genuine real signal) for c2r.
+fn synthetic_input(n: usize, kind: TransformKind, seed: u64) -> SplitComplex {
+    let mut v = SplitComplex::random(n, seed);
+    match kind {
+        TransformKind::RealForward => v.im.iter_mut().for_each(|x| *x = 0.0),
+        TransformKind::RealInverse => {
+            let h = n / 2;
+            v.im[0] = 0.0;
+            v.im[h] = 0.0;
+            for k in 1..h {
+                v.re[n - k] = v.re[k];
+                v.im[n - k] = -v.im[k];
+            }
+        }
+        _ => {}
+    }
+    v
+}
+
 fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     let cmd = common(Command::new("serve", "run the batched FFT service on a synthetic workload"))
         .opt("requests", "2000", "number of requests")
@@ -282,19 +317,31 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
         .opt("batch", "16", "max batch size")
         .opt("workers", "1", "worker threads")
-        .opt("coalesce", "0", "hold under-filled same-n groups across up to this many pull windows (0 = off)")
+        .opt("kind", "forward", "transform kind of the workload (forward|inverse|real|real-inverse)")
+        .opt("coalesce", "0", "hold under-filled same-(kind, n) groups across up to this many pull windows (0 = off)")
         .opt("coalesce-deadline-us", "5000", "per-request latency budget while coalescing, in microseconds")
         .flag("autotune", "online autotuning (prior harvested from --cost/--machine)")
+        .flag("split-kinds", "calibration split: keep per-kind autotune cells instead of folding inverse onto forward")
         .opt("wisdom", "", "wisdom v2 file for --autotune persistence across runs");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
+    let kind = parse_kind(args.get("kind"))?;
+    if kind.is_real() && n < 4 {
+        return Err(CliError(format!("real kinds need --n >= 4, got {n}")));
+    }
     let requests = args.get_usize("requests")?;
-    let mut cost = make_cost(&args)?;
-    let ca = run_plan(&mut cost.as_dyn(), &Strategy::DijkstraContextAware { k: 1 });
+    // Real kinds plan (and configure the service with) the half-size
+    // c2c surface; the request buffers stay n long.
+    let cn = kind.complex_len(n);
+    let mut cost = make_cost_n(&args, cn)?;
+    let ca = {
+        let mut kc = KindCost::new(cost.as_dyn(), kind);
+        run_plan(&mut kc, &Strategy::DijkstraContextAware { k: 1 })
+    };
     println!(
-        "planned {} for n={n} ({:.1} GFLOPS predicted)",
+        "planned {} for {kind} n={n} (c2c n={cn}; {:.1} GFLOPS predicted over the c2c core)",
         ca.plan,
-        gflops(n, ca.true_ns)
+        gflops(cn, ca.true_ns)
     );
     let backend = match args.get("backend") {
         "native" => spfft::coordinator::Backend::Native,
@@ -305,6 +352,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         let source = format!("{}:{}", args.get("cost"), args.get("machine"));
         let prior = spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source);
         let mut at = spfft::autotune::AutotuneConfig::new(prior);
+        // Real serving tunes the half-size c2c surface (real groups are
+        // not sampled); c2c kinds tune their own workload.
+        at.kind = if kind.is_real() { TransformKind::Forward } else { kind };
+        at.split_kinds = args.flag("split-kinds");
         // The simulator has a native batched model — seed per-class
         // priors so re-planning at a batched regime starts from the
         // amortized surface instead of the unbatched prior. (The native
@@ -338,7 +389,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         Default::default()
     };
     let svc = spfft::coordinator::FftService::start(spfft::coordinator::ServiceConfig {
-        plans: vec![(n, ca.plan.clone())],
+        plans: vec![(cn, ca.plan.clone())],
         backend,
         batch: spfft::coordinator::BatchPolicy {
             max_batch: args.get_usize("batch")?,
@@ -353,8 +404,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
-        let input = SplitComplex::random(n, i as u64);
-        match svc.submit(input) {
+        let input = synthetic_input(n, kind, i as u64);
+        match svc.submit_kind(input, kind) {
             Ok(rx) => pending.push(rx),
             Err(_) => { /* backpressure: drop */ }
         }
@@ -381,8 +432,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     }
     let snap = svc.shutdown();
     println!(
-        "served {}/{} requests in {:.3}s: {:.0} req/s, mean batch {:.1}, p50 {:?} p95 {:?} p99 {:?}",
-        snap.completed,
+        "served {}/{} {kind} requests in {:.3}s: {:.0} req/s, mean batch {:.1}, p50 {:?} p95 {:?} p99 {:?}",
+        snap.completed_by_kind[kind.index()],
         requests,
         wall.as_secs_f64(),
         snap.throughput(wall),
@@ -450,6 +501,7 @@ fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
     let cmd = common(Command::new("wisdom", "export / replay measurement databases"))
         .opt("export", "", "harvest all cells from --cost/--machine into this file")
         .opt("batch", "1", "harvest per-transform cells measured over batches this wide (batched kernels; meaningful with --cost native)")
+        .opt("kind", "forward", "harvest the surface this kind's planner consumes (real kinds: --n is the c2c half size)")
         .opt("plan-from", "", "load a wisdom file and run the searches over it");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let export = args.get("export");
@@ -459,15 +511,20 @@ fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
         if batch < 1 {
             return Err(CliError("--batch must be >= 1".into()));
         }
+        let kind = parse_kind(args.get("kind"))?;
         let mut cost = make_cost(&args)?;
+        let mut kind_cost = KindCost::new(cost.as_dyn(), kind);
         let mut source = format!("{}:{}", args.get("cost"), args.get("machine"));
         if batch > 1 {
             source.push_str(&format!(":b{batch}"));
         }
+        if kind != TransformKind::Forward {
+            source.push_str(&format!(":{kind}"));
+        }
         let w = if batch > 1 {
-            spfft::cost::Wisdom::harvest_batched(&mut cost.as_dyn(), &source, batch)
+            spfft::cost::Wisdom::harvest_batched(&mut kind_cost, &source, batch)
         } else {
-            spfft::cost::Wisdom::harvest(&mut cost.as_dyn(), &source)
+            spfft::cost::Wisdom::harvest(&mut kind_cost, &source)
         };
         w.save(std::path::Path::new(export)).map_err(|e| CliError(format!("{e}")))?;
         println!("exported {} cells (n={}, source {source}) to {export}", w.cells.len(), w.n);

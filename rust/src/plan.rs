@@ -21,7 +21,11 @@ impl Plan {
     }
 
     /// Parse a comma/arrow-separated plan string: `"R4,R2,R4,R4,F8"` or
-    /// `"R4->R2->R4->R4->F8"`.
+    /// `"R4->R2->R4->R4->F8"`. Only decomposition-graph edges are
+    /// accepted: `RU` (the real-transform boundary pass) advances zero
+    /// stages and is inserted by `Executor::compile_kind`, never written
+    /// in a plan — a plan string containing it is rejected here rather
+    /// than slipping through stage-sum validation into the kernels.
     pub fn parse(s: &str) -> Option<Plan> {
         let cleaned = s.replace("->", ",");
         let mut edges = Vec::new();
@@ -30,7 +34,11 @@ impl Plan {
             if tok.is_empty() {
                 continue;
             }
-            edges.push(EdgeType::parse(tok)?);
+            let e = EdgeType::parse(tok)?;
+            if e == EdgeType::RU {
+                return None;
+            }
+            edges.push(e);
         }
         Some(Plan::new(edges))
     }
@@ -135,6 +143,16 @@ mod tests {
         }
         assert_eq!(Plan::parse("R4->R2").unwrap(), Plan::new(vec![R4, R2]));
         assert!(Plan::parse("R4->XX").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_the_ru_boundary_pass() {
+        // RU advances zero stages: accepting it would pass stage-sum
+        // validation and panic inside the kernels instead of erroring
+        // at the CLI boundary.
+        assert!(Plan::parse("RU").is_none());
+        assert!(Plan::parse("RU,R2,R2,R2,R2,R2,R2,R2,R2,R2,R2").is_none());
+        assert!(Plan::parse("R4,RU,F8").is_none());
     }
 
     #[test]

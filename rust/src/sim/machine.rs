@@ -106,6 +106,40 @@ impl Machine {
         b as f64 * per_tx
     }
 
+    /// Simulated time of the real-transform split/unpack pass (the RU
+    /// boundary step of R2C/C2R) for an n-point *c2c half* — the pass
+    /// walks the full 2n-point split-complex buffer once, symmetrically
+    /// (slots k and n−k per iteration), with one twiddle multiply per
+    /// conjugate pair. Memory-bound; the predecessor decides whether
+    /// the walk streams from cache residuals:
+    ///
+    /// * after a fused register block, the half-spectrum was just
+    ///   scattered register-resident in natural order — the unpack
+    ///   rides it nearly free (`unpack_after_fused` < 1);
+    /// * after a strided radix pass, the residuals are strided lines
+    ///   the symmetric walk cannot ride — most of a fresh round trip;
+    /// * from `Context::Start` (isolation), the full `start_mem`
+    ///   penalty applies.
+    ///
+    /// This is the context-dependence the real-transform plan search
+    /// consumes via `CostModel::unpack_ns` — a context-free model would
+    /// price the pass identically after every predecessor and miss the
+    /// fused-tail advantage entirely.
+    pub fn unpack_ns(&self, n: usize, ctx: Context) -> f64 {
+        let p = &self.params;
+        // one round trip over the full 2n-point buffer
+        let mem_cyc = super::memory::round_trip_bytes(2 * n) / p.l1_bw_bytes_cyc;
+        // one complex multiply + adds per conjugate pair, lanes-wide
+        // issue groups: comparable to radix-2 butterfly groups
+        let compute_cyc = (n as f64 / p.lanes as f64) * p.bf.r2;
+        let ctx_mult = match ctx {
+            Context::Start => p.start_mem,
+            Context::After(prev) if prev.is_fused() => p.unpack_after_fused,
+            Context::After(_) => 1.0 + (p.start_mem - 1.0) * 0.5,
+        };
+        (mem_cyc * ctx_mult + compute_cyc) * p.ns_per_cyc()
+    }
+
     /// Steady-state time of a full plan: every edge is costed in its true
     /// context; the first edge's context is the *last* edge of the plan
     /// (benchmark loops run the arrangement back-to-back, so in steady
@@ -221,6 +255,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn unpack_pass_is_cheap_after_fused_expensive_after_radix() {
+        // The real-transform split/unpack pass: nearly free riding a
+        // fused block's natural-order residual, most of a round trip
+        // after a strided radix pass, worst from isolation.
+        let m = Machine::m1();
+        let fused = m.unpack_ns(512, After(EdgeType::F8));
+        let radix = m.unpack_ns(512, After(EdgeType::R4));
+        let iso = m.unpack_ns(512, Start);
+        assert!(fused > 0.0 && fused.is_finite());
+        assert!(fused < radix, "fused {fused} vs radix {radix}");
+        assert!(radix < iso, "radix {radix} vs iso {iso}");
     }
 
     #[test]

@@ -126,6 +126,14 @@ pub struct MachineParams {
     /// Memory-cost growth per multiple of `batch_cap_bytes` the resident
     /// panel overflows by (cache thrash of oversized batch panels).
     pub batch_thrash: f64,
+    /// Memory multiplier on the real-transform split/unpack pass (the
+    /// RU boundary step) when it immediately follows a fused register
+    /// block: the block just scattered the half-spectrum register-
+    /// resident in natural order, exactly the layout the unpack walks —
+    /// the pass streams nearly free. After a strided radix pass (or
+    /// from isolation) the unpack pays the round trip instead; see
+    /// `Machine::unpack_ns`.
+    pub unpack_after_fused: f64,
 }
 
 impl MachineParams {
@@ -163,6 +171,9 @@ impl MachineParams {
             // Firestorm L1d: 128 KiB of streaming panel before thrash.
             batch_cap_bytes: 131072.0,
             batch_thrash: 0.5,
+            // A terminal fused block leaves the half-spectrum hot in
+            // natural order; the unpack rides it.
+            unpack_after_fused: 0.35,
         }
     }
 
@@ -212,6 +223,8 @@ impl MachineParams {
             // which is why its amortization bound sits far below the M1's.
             batch_cap_bytes: 32768.0,
             batch_thrash: 0.8,
+            // Weak context effects on the 2015-era Haswell model.
+            unpack_after_fused: 0.9,
         }
     }
 
@@ -327,6 +340,7 @@ mod tests {
             assert!(m.twiddle_issue_frac > 0.0 && m.twiddle_issue_frac < 1.0);
             assert!(m.batch_cap_bytes > 0.0);
             assert!(m.batch_thrash > 0.0);
+            assert!(m.unpack_after_fused > 0.0 && m.unpack_after_fused < 1.0);
         }
     }
 

@@ -14,10 +14,13 @@
 //! simulated: the mpsc channel and its timeouts — replaced by the
 //! scripted trace so a test run is a pure function of its inputs.
 //!
-//! Shared by `integration_coordinator.rs` and `integration_batched.rs`
-//! via `#[path = "harness/mod.rs"] mod harness;` (the coalescing
-//! property tests drive `CoalesceState` directly with the same
-//! fabricated-instant technique).
+//! Shared by `integration_coordinator.rs`, `integration_batched.rs`,
+//! and `integration_kinds.rs` via `#[path = "harness/mod.rs"] mod
+//! harness;` (the coalescing property tests drive `CoalesceState`
+//! directly with the same fabricated-instant technique). Traces carry a
+//! [`TransformKind`] per arrival ([`trace_kinds`]); the driver groups
+//! by the service's widened `(kind, n)` key and compiles, per
+//! configured `(n, plan)`, the same four workloads the service serves.
 
 #![allow(dead_code)] // each test binary uses a subset of the harness
 
@@ -27,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use spfft::coordinator::{BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics};
 use spfft::fft::{BatchBufferPool, CompiledPlan, Executor, SplitComplex};
+use spfft::kind::TransformKind;
 use spfft::plan::Plan;
 
 /// A monotonically-advancing virtual clock. `now()` is a real `Instant`
@@ -94,23 +98,39 @@ impl VirtualClock {
 pub struct Arrival {
     /// Virtual arrival offset.
     pub at: Duration,
-    /// FFT size (the grouping key).
+    /// FFT size (half of the grouping key).
     pub n: usize,
+    /// Transform kind (the other half of the `(kind, n)` grouping key).
+    pub kind: TransformKind,
     /// Seed for the request's input (`SplitComplex::random(n, seed)`).
     pub seed: u64,
 }
 
-/// Build a trace from `(offset_us, n, seed)` triples.
+/// Build a forward-only trace from `(offset_us, n, seed)` triples.
 pub fn trace(specs: &[(u64, usize, u64)]) -> Vec<Arrival> {
     specs
         .iter()
-        .map(|&(us, n, seed)| Arrival { at: Duration::from_micros(us), n, seed })
+        .map(|&(us, n, seed)| Arrival {
+            at: Duration::from_micros(us),
+            n,
+            kind: TransformKind::Forward,
+            seed,
+        })
+        .collect()
+}
+
+/// Build a mixed-kind trace from `(offset_us, kind, n, seed)` tuples.
+pub fn trace_kinds(specs: &[(u64, TransformKind, usize, u64)]) -> Vec<Arrival> {
+    specs
+        .iter()
+        .map(|&(us, kind, n, seed)| Arrival { at: Duration::from_micros(us), n, kind, seed })
         .collect()
 }
 
 /// A request inside the harness: scripted input + virtual enqueue time.
 pub struct TraceReq {
     pub n: usize,
+    pub kind: TransformKind,
     pub seed: u64,
     /// Global arrival index (FIFO assertions).
     pub seq: usize,
@@ -121,6 +141,7 @@ pub struct TraceReq {
 /// One completed request, with full provenance for assertions.
 pub struct Completion {
     pub n: usize,
+    pub kind: TransformKind,
     pub seed: u64,
     pub seq: usize,
     /// Virtual offsets of enqueue and completion.
@@ -148,9 +169,9 @@ pub struct Driver {
     pub clock: VirtualClock,
     pub policy: BatchPolicy,
     pub metrics: Arc<Metrics>,
-    coalesce: CoalesceState<usize, TraceReq>,
+    coalesce: CoalesceState<(TransformKind, usize), TraceReq>,
     ex: Executor,
-    compiled: Vec<(usize, CompiledPlan)>,
+    compiled: Vec<((TransformKind, usize), CompiledPlan)>,
     pool: BatchBufferPool,
     /// Pulled batch sizes, in pull order (empty wake-ups excluded) —
     /// the deterministic equivalent of the service's batch accounting.
@@ -158,9 +179,19 @@ pub struct Driver {
 }
 
 impl Driver {
+    /// Like the service, each `(n, plan)` entry serves four workloads:
+    /// forward/inverse at n and the real pair at 2n (same c2c core).
     pub fn new(plans: &[(usize, Plan)], policy: BatchPolicy, coalesce: CoalescePolicy) -> Driver {
         let mut ex = Executor::new();
-        let compiled = plans.iter().map(|(n, p)| (*n, ex.compile(p, *n, true))).collect();
+        let mut compiled = Vec::new();
+        for (n, p) in plans {
+            for kind in [TransformKind::Forward, TransformKind::Inverse] {
+                compiled.push(((kind, *n), ex.compile_kind(p, *n, true, kind)));
+            }
+            for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
+                compiled.push(((kind, 2 * *n), ex.compile_kind(p, 2 * *n, true, kind)));
+            }
+        }
         Driver {
             clock: VirtualClock::new(),
             policy,
@@ -192,7 +223,8 @@ impl Driver {
                     Some(w) => {
                         self.clock.set_instant(w);
                         let now = self.clock.now();
-                        let ready = self.coalesce.admit(Vec::new(), now, |r| r.n, |r| r.enqueued);
+                        let ready =
+                            self.coalesce.admit(Vec::new(), now, |r| (r.kind, r.n), |r| r.enqueued);
                         self.execute(ready, &mut completions);
                         continue;
                     }
@@ -204,7 +236,8 @@ impl Driver {
                     // Held work comes due before the next arrival.
                     self.clock.set_instant(w);
                     let now = self.clock.now();
-                    let ready = self.coalesce.admit(Vec::new(), now, |r| r.n, |r| r.enqueued);
+                    let ready =
+                        self.coalesce.admit(Vec::new(), now, |r| (r.kind, r.n), |r| r.enqueued);
                     self.execute(ready, &mut completions);
                     continue;
                 }
@@ -226,6 +259,7 @@ impl Driver {
                 i += 1;
                 batch.push(TraceReq {
                     n: a.n,
+                    kind: a.kind,
                     seed: a.seed,
                     seq: i - 1,
                     enqueued: self.clock.at(a.at),
@@ -240,7 +274,7 @@ impl Driver {
             self.pulls.push(batch.len());
             let now = self.clock.now();
             self.metrics.on_batch(batch.len(), Duration::ZERO);
-            let ready = self.coalesce.admit(batch, now, |r| r.n, |r| r.enqueued);
+            let ready = self.coalesce.admit(batch, now, |r| (r.kind, r.n), |r| r.enqueued);
             self.execute(ready, &mut completions);
         }
         // Shutdown drain (channel closed in the real worker loop).
@@ -255,7 +289,7 @@ impl Driver {
     /// lane-blocked batch buffer.
     fn execute(
         &mut self,
-        ready: Vec<spfft::coordinator::ReadyGroup<usize, TraceReq>>,
+        ready: Vec<spfft::coordinator::ReadyGroup<(TransformKind, usize), TraceReq>>,
         completions: &mut Vec<Completion>,
     ) {
         let now_off = self.clock.elapsed();
@@ -268,17 +302,18 @@ impl Driver {
                     group.paired_singletons,
                 );
             }
+            let (kind, n) = group.key;
             let cp = self
                 .compiled
                 .iter()
-                .find(|(n, _)| *n == group.key)
+                .find(|(key, _)| *key == group.key)
                 .map(|(_, cp)| cp)
-                .unwrap_or_else(|| panic!("no plan for n={}", group.key));
+                .unwrap_or_else(|| panic!("no plan for {kind} n={n}"));
             let size = group.items.len();
             let outs: Vec<SplitComplex> = if size == 1 {
                 vec![cp.run_on(&group.items[0].input)]
             } else {
-                let mut buf = self.pool.acquire(group.key, size);
+                let mut buf = self.pool.acquire(n, size);
                 let inputs: Vec<&SplitComplex> = group.items.iter().map(|r| &r.input).collect();
                 buf.gather(&inputs);
                 cp.run_batch(&mut buf);
@@ -288,9 +323,10 @@ impl Driver {
             };
             for (req, out) in group.items.into_iter().zip(outs) {
                 let enq_off = self.clock.offset_of(req.enqueued);
-                self.metrics.on_complete(now_off.saturating_sub(enq_off));
+                self.metrics.on_complete_kind(req.kind, now_off.saturating_sub(enq_off));
                 completions.push(Completion {
                     n: req.n,
+                    kind: req.kind,
                     seed: req.seed,
                     seq: req.seq,
                     enqueued_at: enq_off,

@@ -353,17 +353,19 @@ fn prop_json_roundtrip_fuzz() {
 /// random pull partitioning, virtual time stepped at pull boundaries —
 /// with the production rule that a worker holding coalesced work wakes
 /// at its earliest flush due time. Returns every flushed group as
-/// (flush_offset, ReadyGroup).
+/// (flush_offset, ReadyGroup). Generic over the grouping key: the
+/// service's key widened from `n` to `(kind, n)`, and every property
+/// must hold unchanged over the wider key.
 #[allow(clippy::type_complexity)]
-fn run_coalesce_sim(
+fn run_coalesce_sim<K: Eq + std::hash::Hash + Copy>(
     rng: &mut Rng,
     policy: spfft::coordinator::CoalescePolicy,
     window: std::time::Duration,
-    arrivals: Vec<(usize, usize, std::time::Duration)>, // (key, seq, enqueue offset)
-) -> Vec<(std::time::Duration, spfft::coordinator::ReadyGroup<usize, (usize, usize, std::time::Instant)>)> {
+    arrivals: Vec<(K, usize, std::time::Duration)>, // (key, seq, enqueue offset)
+) -> Vec<(std::time::Duration, spfft::coordinator::ReadyGroup<K, (K, usize, std::time::Instant)>)> {
     use std::time::{Duration, Instant};
     let base = Instant::now();
-    let mut state: spfft::coordinator::CoalesceState<usize, (usize, usize, Instant)> =
+    let mut state: spfft::coordinator::CoalesceState<K, (K, usize, Instant)> =
         spfft::coordinator::CoalesceState::new(policy, window);
     let mut flushed = Vec::new();
     let mut i = 0;
@@ -372,7 +374,7 @@ fn run_coalesce_sim(
         // the worker wakes at the earliest held due time, or pulls the
         // next chunk of arrivals, whichever comes first
         let wake = state
-            .next_flush_due(|t: &(usize, usize, Instant)| t.2)
+            .next_flush_due(|t: &(K, usize, Instant)| t.2)
             .map(|w| w.saturating_duration_since(base));
         let next_arrival = arrivals.get(i).map(|a| a.2);
         let (at, batch) = match (next_arrival, wake) {
@@ -524,6 +526,169 @@ fn prop_coalesced_groups_execute_bit_identically_to_sequential() {
                 prop_assert!(got == want, "{plan} n={n}: coalesced lane {lane} diverges");
             }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inverse_of_forward_is_identity_for_random_plans_and_batches() {
+    // The kind axis's core contract: inverse(forward(x)) ≈ x within
+    // 1e-4 for random signals, across all plan shapes and batch sizes
+    // (forward and inverse may even use *different* plans — any valid
+    // decomposition computes the same operator).
+    use spfft::kind::TransformKind;
+    let mut ex = Executor::new();
+    check("inverse-identity", Config { cases: 32, ..Default::default() }, |rng| {
+        let l = rng.range(3, 10);
+        let n = 1usize << l;
+        let fwd_plan = random_plan(rng, l);
+        let inv_plan = random_plan(rng, l);
+        let fwd = ex.compile_kind(&fwd_plan, n, true, TransformKind::Forward);
+        let inv = ex.compile_kind(&inv_plan, n, true, TransformKind::Inverse);
+        let b = rng.range(1, 10);
+        let inputs: Vec<SplitComplex> =
+            (0..b).map(|_| SplitComplex::random(n, rng.next_u64())).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = spfft::fft::BatchBuffer::new(n, b);
+        buf.gather(&refs);
+        fwd.run_batch(&mut buf);
+        let spectra = buf.scatter();
+        let spectra_refs: Vec<&SplitComplex> = spectra.iter().collect();
+        buf.gather(&spectra_refs);
+        inv.run_batch(&mut buf);
+        for (lane, input) in inputs.iter().enumerate() {
+            let back = buf.scatter_lane(lane);
+            let rel = back.max_abs_diff(input) / input.max_abs().max(1.0);
+            prop_assert!(
+                rel < 1e-4,
+                "{fwd_plan} then inv {inv_plan} (n={n}, b={b}): lane {lane} rel err {rel}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_r2c_matches_reference_dft_of_the_real_signal() {
+    // r2c == the complex DFT of the real signal on the first n/2+1 bins
+    // (and, via the Hermitian mirror, on all n bins), for random plans.
+    use spfft::kind::TransformKind;
+    let mut ex = Executor::new();
+    check("r2c-vs-reference", Config { cases: 24, ..Default::default() }, |rng| {
+        let l = rng.range(2, 8); // c2c levels; buffer n = 2^(l+1)
+        let n = 1usize << (l + 1);
+        let plan = random_plan(rng, l);
+        let cp = ex.compile_kind(&plan, n, true, TransformKind::RealForward);
+        let mut input = SplitComplex::random(n, rng.next_u64());
+        input.im.iter_mut().for_each(|v| *v = 0.0);
+        let got = cp.run_on(&input);
+        let want = dft_naive(&input);
+        let scale = want.max_abs().max(1.0);
+        for k in 0..=(n / 2) {
+            let dr = (got.re[k] - want.re[k]).abs() / scale;
+            let di = (got.im[k] - want.im[k]).abs() / scale;
+            prop_assert!(dr < 1e-4 && di < 1e-4, "{plan} n={n}: bin {k} off by ({dr}, {di})");
+        }
+        let rel = got.max_abs_diff(&want) / scale;
+        prop_assert!(rel < 1e-4, "{plan} n={n}: mirror bins off ({rel})");
+        // ... and c2r inverts it back to the signal
+        let inv = ex.compile_kind(&plan, n, true, TransformKind::RealInverse);
+        let back = inv.run_on(&got);
+        let rel = back.max_abs_diff(&input) / input.max_abs().max(1.0);
+        prop_assert!(rel < 1e-4, "{plan} n={n}: real round trip rel err {rel}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_run_batch_is_bit_identical_to_scalar_for_every_kind() {
+    // The batched per-lane outputs equal the scalar runs bit-for-bit
+    // for every kind, random plans and batch sizes included.
+    use spfft::kind::{ALL_KINDS, TransformKind};
+    let mut ex = Executor::new();
+    check("batch-bit-identical-kinds", Config { cases: 24, ..Default::default() }, |rng| {
+        let kind = ALL_KINDS[rng.range(0, 4)];
+        let l = rng.range(3, 9); // c2c levels
+        let n = if kind.is_real() { 1usize << (l + 1) } else { 1usize << l };
+        let plan = random_plan(rng, l);
+        let cp = ex.compile_kind(&plan, n, true, kind);
+        let b = rng.range(1, 12);
+        let inputs: Vec<SplitComplex> = (0..b)
+            .map(|_| {
+                let mut v = SplitComplex::random(n, rng.next_u64());
+                if kind == TransformKind::RealForward {
+                    v.im.iter_mut().for_each(|x| *x = 0.0);
+                }
+                v
+            })
+            .collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let mut buf = spfft::fft::BatchBuffer::new(n, b);
+        buf.gather(&refs);
+        cp.run_batch(&mut buf);
+        for (lane, input) in inputs.iter().enumerate() {
+            let want = cp.run_on(input);
+            let got = buf.scatter_lane(lane);
+            prop_assert!(
+                got == want,
+                "{kind} {plan} n={n} b={b}: lane {lane} diverges (max diff {})",
+                got.max_abs_diff(&want)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalescing_invariants_hold_over_the_widened_kind_n_key() {
+    // The service's grouping key widened from n to (kind, n): FIFO per
+    // key, the per-request deadline bound, conservation, and — the
+    // kind axis's new obligation — **no cross-kind grouping** must all
+    // hold over the wider key.
+    use spfft::kind::{TransformKind, ALL_KINDS};
+    check("coalesce-kind-n-key", Config { cases: 32, ..Default::default() }, |rng| {
+        use std::time::Duration;
+        let window = Duration::from_micros(rng.range(50, 400) as u64);
+        let policy = spfft::coordinator::CoalescePolicy {
+            max_hold_windows: rng.range(1, 5) as u32,
+            target_group: rng.range(2, 8),
+            min_backlog: rng.range(0, 4),
+            deadline: window * rng.range(2, 30) as u32,
+        };
+        let count = rng.range(2, 70);
+        let mut t = 0u64;
+        let arrivals: Vec<((TransformKind, usize), usize, Duration)> = (0..count)
+            .map(|seq| {
+                t += rng.range(0, 350) as u64;
+                let kind = ALL_KINDS[rng.range(0, 4)];
+                let n = 1usize << rng.range(6, 9);
+                ((kind, n), seq, Duration::from_micros(t))
+            })
+            .collect();
+        let flushed = run_coalesce_sim(rng, policy, window, arrivals.clone());
+        let mut seen = vec![false; count];
+        let mut last_seq: std::collections::HashMap<(TransformKind, usize), usize> =
+            std::collections::HashMap::new();
+        for (at, g) in &flushed {
+            for &(key, seq, _) in &g.items {
+                // no cross-kind (or cross-size) grouping, ever
+                prop_assert!(key == g.key, "request {seq} grouped under foreign key");
+                prop_assert!(!seen[seq], "request {seq} flushed twice");
+                seen[seq] = true;
+                // FIFO per (kind, n)
+                if let Some(&prev) = last_seq.get(&key) {
+                    prop_assert!(seq > prev, "key {key:?}: seq {seq} after {prev}");
+                }
+                last_seq.insert(key, seq);
+                // deadline bound unchanged over the wider key
+                let enq_off = arrivals[seq].2;
+                prop_assert!(
+                    *at <= enq_off + policy.deadline,
+                    "request {seq} held past deadline over (kind, n) key"
+                );
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s), "requests lost over the widened key");
         Ok(())
     });
 }
