@@ -44,11 +44,14 @@ fn main() -> anyhow::Result<()> {
 
     // 4. A real-input (R2C) transform: the n-point real signal packs
     // into an n/2-point c2c (planned on the half-size surface) plus the
-    // split/unpack step; the output is the full Hermitian spectrum.
+    // split/unpack step; the RU-aware boundary search prices that step
+    // inside the argmin, and the output is the full Hermitian spectrum.
     let mut half_cost = SimCost::m1(n / 2);
-    let real_plan =
-        run_plan(&mut spfft::cost::KindCost::new(&mut half_cost, TransformKind::RealForward),
-                 &Strategy::DijkstraContextAware { k: 1 });
+    let real_plan = spfft::planner::plan_surface(
+        &mut half_cost,
+        &Strategy::DijkstraContextAware { k: 1 },
+        spfft::cost::PlanningSurface::for_kind(TransformKind::RealForward),
+    );
     let r2c = ex.compile_kind(&real_plan.plan, n, true, TransformKind::RealForward);
     let mut signal = SplitComplex::random(n, 7);
     signal.im.iter_mut().for_each(|v| *v = 0.0);

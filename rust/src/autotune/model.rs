@@ -21,7 +21,7 @@
 
 use std::collections::HashMap;
 
-use crate::cost::{CostModel, Wisdom};
+use crate::cost::{CostModel, PlanningSurface, Wisdom};
 use crate::edge::{Context, EdgeType};
 use crate::kind::TransformKind;
 
@@ -32,20 +32,10 @@ use super::sampler::EdgeSample;
 /// (kind, cell, batch class); see [`OnlineCost::observe`].
 pub type Cell = (EdgeType, usize, Context);
 
-/// Number of batch-size classes (log2 buckets): class 0 = B=1, class 1 =
-/// B=2, class 2 = B in (2,4], ... the last class saturates (B >= 128).
-pub const BATCH_CLASSES: usize = 8;
-
-/// Batch class of a batch size: log2 of the next power of two, capped.
-pub fn batch_class(b: usize) -> usize {
-    (b.max(1).next_power_of_two().trailing_zeros() as usize).min(BATCH_CLASSES - 1)
-}
-
-/// Representative batch size of a class (inverse of [`batch_class`] on
-/// powers of two).
-pub fn class_batch(class: usize) -> usize {
-    1 << class.min(BATCH_CLASSES - 1)
-}
+// The batch-class bucketing lives in `crate::cost` now (one axis, one
+// bucketing, shared with `PlanningSurface`); re-exported here for the
+// historical import paths.
+pub use crate::cost::{batch_class, class_batch, BATCH_CLASSES};
 
 /// Live estimate for one (cell, batch class).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -377,6 +367,40 @@ impl CostModel for OnlineCost {
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
         b as f64 * self.estimate_kind_at((edge, stage, ctx), batch_class(b), self.focus_kind)
     }
+
+    /// Surface queries answer from the per-(kind, cell, batch-class)
+    /// store *directly* — no adapter stacking, no focus indirection: the
+    /// re-planner names the regime it searches (the modal batch class,
+    /// the tuned kind) in the [`PlanningSurface`] it passes down. The
+    /// focus fields remain the view of the legacy [`CostModel::edge_ns`]
+    /// path and of drift detection. The RU boundary edge answers from
+    /// its *own* live observations when the real traced path has fed
+    /// any (RU cells have no offline prior), falling back to the
+    /// stage-0-R2 proxy — at the surface's own (class, kind), never the
+    /// focus, so a boundary search stays class-consistent end to end.
+    fn surface_edge_ns(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        surface: PlanningSurface,
+    ) -> f64 {
+        if edge == EdgeType::RU {
+            let cell = (EdgeType::RU, stage, ctx);
+            if self
+                .observation_kind_at(cell, surface.batch_class, surface.kind)
+                .is_some()
+            {
+                return self.estimate_kind_at(cell, surface.batch_class, surface.kind);
+            }
+            return self.estimate_kind_at(
+                (EdgeType::R2, 0, ctx),
+                surface.batch_class,
+                surface.kind,
+            );
+        }
+        self.estimate_kind_at((edge, stage, ctx), surface.batch_class, surface.kind)
+    }
 }
 
 #[cfg(test)]
@@ -523,21 +547,31 @@ mod tests {
     }
 
     #[test]
-    fn batched_priors_steer_the_search_at_a_batched_focus_class() {
+    fn batched_priors_steer_the_search_at_a_batched_surface() {
         // With the amortized B=16 surface installed as a class prior and
-        // the focus pointed at that class, the same context-aware search
-        // legitimately picks a different arrangement than the unbatched
-        // prior — with zero live samples. This is the offline half of
-        // "the planner sees the batch axis".
+        // the search pointed at that class through its PlanningSurface,
+        // the same context-aware search legitimately picks a different
+        // arrangement than the unbatched prior — with zero live samples.
+        // This is the offline half of "the planner sees the batch axis".
+        use crate::cost::PlanningSurface;
+        use crate::planner::plan_surface;
         let w = Wisdom::harvest(&mut SimCost::m1(1024), "m1");
         let w16 = Wisdom::harvest_batched(&mut SimCost::m1(1024), "m1", 16);
         let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
         model.set_batched_prior(16, &w16);
         let p0 = run_plan(&mut model, &Strategy::DijkstraContextAware { k: 1 }).plan;
         assert_eq!(p0, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        let ca = Strategy::DijkstraContextAware { k: 1 };
+        let p16 =
+            plan_surface(&mut model, &ca, PlanningSurface::forward().with_batch(16)).plan;
+        assert_ne!(p16, p0, "batched surface reproduced the unbatched plan");
+        // the legacy edge_ns path still answers at the focus class
+        let cell = w.cells[0];
         model.set_focus_class(batch_class(16));
-        let p16 = run_plan(&mut model, &Strategy::DijkstraContextAware { k: 1 }).plan;
-        assert_ne!(p16, p0, "batched focus class reproduced the unbatched plan");
+        assert_eq!(
+            model.edge_ns(cell.0, cell.1, cell.2),
+            model.estimate_at((cell.0, cell.1, cell.2), batch_class(16))
+        );
     }
 
     #[test]
@@ -607,6 +641,30 @@ mod tests {
         assert_eq!(model.observed_cells().len(), 1);
         model.set_focus_kind(TransformKind::Forward);
         assert!(model.observed_cells().is_empty());
+    }
+
+    #[test]
+    fn surface_ru_query_prefers_live_ru_observations_over_the_proxy() {
+        use crate::cost::PlanningSurface;
+        let mut model = m1_model(256);
+        let surface = PlanningSurface::for_kind(TransformKind::RealForward);
+        let ctx = Context::After(EdgeType::F8);
+        // without RU samples: the stage-0-R2 proxy at the surface's class/kind
+        let proxy = model.estimate_kind_at((EdgeType::R2, 0, ctx), 0, surface.kind);
+        assert_eq!(model.surface_edge_ns(EdgeType::RU, 8, ctx, surface), proxy);
+        // real traced RU samples take over once folded in
+        for _ in 0..50 {
+            model.observe(&sample_k(EdgeType::RU, 8, ctx, TransformKind::RealForward, 42.0));
+        }
+        let est = model.surface_edge_ns(EdgeType::RU, 8, ctx, surface);
+        assert!((est - 42.0).abs() < 1e-9, "live RU observation ignored: {est}");
+        // ...and stays class-consistent: an unobserved batched class
+        // falls back to the proxy at that class
+        let b16 = surface.with_batch(16);
+        assert_eq!(
+            model.surface_edge_ns(EdgeType::RU, 8, ctx, b16),
+            model.estimate_kind_at((EdgeType::R2, 0, ctx), b16.batch_class, b16.kind)
+        );
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! SAMPLE  — fold the batch into the online model (EWMA per cell)
 //! DRIFT   — every `check_every` batches, compare observed means against
 //!           the weights the active plan was searched under
-//! SEARCH  — on drift: run shortest_path_context_aware over the blended
-//!           model (milliseconds; the paper's point is that this search
-//!           is cheap enough to re-run whenever weights change)
+//! SEARCH  — on drift: run the PlanningGraph context-aware walk over the
+//!           blended model at the (tuned kind, modal batch class)
+//!           PlanningSurface (milliseconds; the paper's point is that
+//!           this search is cheap enough to re-run whenever weights
+//!           change)
 //! SWAP    — if predicted improvement clears `hysteresis`: publish the
 //!           new plan into the PlanSlot (and the PlanCache, versioned);
 //!           in-flight batches finish on their old snapshot
@@ -26,9 +28,9 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::graph::search::shortest_path_context_aware;
+use crate::cost::PlanningSurface;
+use crate::graph::PlanningGraph;
 use crate::plan::Plan;
-use crate::planner::plan_cost_from_start;
 
 use super::drift::DriftDetector;
 use super::model::{batch_class, class_batch, OnlineCost, BATCH_CLASSES};
@@ -153,7 +155,8 @@ impl Autotuner {
             config.drift_min_samples,
             config.drift_min_cells,
         );
-        let predicted = plan_cost_from_start(&mut model, &initial_plan);
+        let predicted = PlanningSurface::for_kind(config.kind)
+            .plan_objective_ns(&mut model, &initial_plan);
         let slot = Arc::new(PlanSlot::new(initial_plan, predicted));
         let (sampler, rx) = TraceSampler::new(config.sample_period, config.sample_queue_depth);
         let sampler = Arc::new(sampler);
@@ -301,10 +304,16 @@ fn run_loop(
         model.set_focus_class(modal);
         counters.focus_class.store(modal as u64, Ordering::Relaxed);
         let t0 = Instant::now();
-        let result = shortest_path_context_aware(&mut model, l);
+        // The search names its regime explicitly: the tuned kind and the
+        // traffic's modal batch class, as one PlanningSurface — the
+        // online model answers from the matching (kind, cell, class)
+        // estimates directly.
+        let surface = PlanningSurface::for_kind(config.kind).with_batch_class(modal);
+        let graph = PlanningGraph::new(l, surface, model.available_edges());
+        let result = graph.shortest_path(&mut model);
         counters.replans.fetch_add(1, Ordering::Relaxed);
         let current = slot.current();
-        let current_cost = plan_cost_from_start(&mut model, &current.plan);
+        let current_cost = graph.plan_objective_ns(&mut model, &current.plan);
         if result.plan != current.plan
             && result.cost_ns < current_cost * (1.0 - config.hysteresis)
         {

@@ -17,7 +17,7 @@
 //!        [--prior-out FILE [--batches 4,16,64]] [--report]
 
 use spfft::autotune::WisdomV2;
-use spfft::cost::{CostModel, KindCost, SimCost, Wisdom};
+use spfft::cost::{CostModel, PlanningSurface, SimCost, Wisdom};
 use spfft::edge::{Context, EdgeType};
 use spfft::kind::TransformKind;
 use spfft::plan::{table3_arrangements, Plan};
@@ -88,8 +88,8 @@ fn harvest_priors(args: &spfft::util::cli::Args, out: &str) -> Result<(), CliErr
     if kind != TransformKind::Forward {
         source.push_str(&format!(":{kind}"));
     }
-    let mut cost = KindCost::new(SimCost::new(machine, n), kind);
-    let prior = Wisdom::harvest(&mut cost, &source);
+    let mut cost = SimCost::new(machine, n);
+    let prior = Wisdom::harvest_surface(&mut cost, &source, PlanningSurface::for_kind(kind));
     let harvested: Vec<(usize, Wisdom)> = batches
         .iter()
         .map(|&b| (b, Wisdom::harvest_batched(&mut cost, &source, b)))

@@ -20,7 +20,7 @@
 //! Bare positionals (`tune m1 40000`) keep working for older scripts.
 
 use spfft::autotune::WisdomV2;
-use spfft::cost::{CostModel, SimCost, Wisdom};
+use spfft::cost::{CostModel, PlanningSurface, SimCost, Wisdom};
 use spfft::edge::{Context, EdgeType};
 use spfft::plan::Plan;
 use spfft::planner::{plan as run_plan, Strategy};
@@ -383,9 +383,9 @@ fn main() {
         if kind != spfft::kind::TransformKind::Forward {
             source.push_str(&format!(":{kind}"));
         }
-        let mut prior_cost =
-            spfft::cost::KindCost::new(SimCost::new(Machine::new(p), prior_n), kind);
-        let v1 = Wisdom::harvest(&mut prior_cost, &source);
+        let mut prior_cost = SimCost::new(Machine::new(p), prior_n);
+        let v1 =
+            Wisdom::harvest_surface(&mut prior_cost, &source, PlanningSurface::for_kind(kind));
         let w2 = WisdomV2::from_v1(&v1);
         match w2.save(std::path::Path::new(prior_out)) {
             Ok(()) => println!(

@@ -366,11 +366,19 @@ impl WorkerBackend {
                 pool.release(buf);
             }
             WorkerBackend::Pjrt { registry, plans } => {
-                if kind != TransformKind::Forward {
+                // C2c kinds both run the same AOT forward executables:
+                // the inverse is served via the boundary-conjugation
+                // identity (IDFT = conj ∘ DFT ∘ conj / n) — one sign
+                // pass over `im` going in, conjugate-and-scale coming
+                // out — exactly the native path's algebra, around the
+                // unchanged PJRT artifacts. Real kinds keep the typed
+                // error: their RU boundary pass has no compiled artifact.
+                if kind.is_real() {
                     for req in group {
                         metrics.on_failure();
                         let _ = req.reply.send(Err(anyhow!(
-                            "the PJRT backend serves forward transforms only (got {kind})"
+                            "the PJRT backend serves c2c transforms only (got {kind}; \
+                             real kinds need the native backend's split/unpack pass)"
                         )));
                     }
                     return;
@@ -378,6 +386,18 @@ impl WorkerBackend {
                 let plan = plans.iter().find(|(pn, _)| *pn == n).map(|(_, p)| p.clone());
                 for req in group {
                     let result = match &plan {
+                        Some(p) if kind == TransformKind::Inverse => {
+                            let mut input = req.input.clone();
+                            crate::fft::real::negate(&mut input.im);
+                            registry.execute_plan(n, p, &input).map(|mut out| {
+                                crate::fft::real::conj_scale(
+                                    &mut out.re,
+                                    &mut out.im,
+                                    1.0 / n as f32,
+                                );
+                                out
+                            })
+                        }
                         Some(p) => registry.execute_plan(n, p, &req.input),
                         None => Err(anyhow!("no plan for n={n}")),
                     };

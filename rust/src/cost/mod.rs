@@ -11,6 +11,15 @@
 //! * `PjrtCost` (in [`crate::runtime`]) — same protocol over the
 //!   AOT-compiled HLO executables.
 //!
+//! What workload a query prices is a [`PlanningSurface`] — the
+//! (transform kind, batch class, context order) triple every planner
+//! walk passes down through [`CostModel::surface_edge_ns`]. The surface
+//! replaced the old `KindCost`/`BatchedCost` adapter stacking: instead
+//! of wrapping a model per axis, one query struct names the axis values
+//! and the provider answers for exactly that regime (the autotuner's
+//! `OnlineCost` answers from its per-(kind, cell, batch-class) live
+//! estimates directly).
+//!
 //! [`MemoCost`] caches cells and counts distinct measurements, verifying
 //! the paper's §2.5 budget (≈30 context-free vs ≈180 context-aware cells
 //! for N = 1024).
@@ -25,6 +34,166 @@ pub mod native;
 pub mod wisdom;
 pub use native::NativeCost;
 pub use wisdom::Wisdom;
+
+/// Number of batch-size classes (log2 buckets): class 0 = B=1, class 1 =
+/// B=2, class 2 = B in (2,4], ... the last class saturates (B >= 128).
+/// Shared by [`PlanningSurface`], the autotuner's online model, and the
+/// wisdom v2 persistence (one axis, one bucketing).
+pub const BATCH_CLASSES: usize = 8;
+
+/// Batch class of a batch size: log2 of the next power of two, capped.
+pub fn batch_class(b: usize) -> usize {
+    (b.max(1).next_power_of_two().trailing_zeros() as usize).min(BATCH_CLASSES - 1)
+}
+
+/// Representative batch size of a class (inverse of [`batch_class`] on
+/// powers of two).
+pub fn class_batch(class: usize) -> usize {
+    1 << class.min(BATCH_CLASSES - 1)
+}
+
+/// The planning surface: *which workload* a planner walk prices. One
+/// query struct threaded from the strategies through
+/// [`CostModel::surface_edge_ns`], replacing the former
+/// `KindCost`/`BatchedCost` adapter stacking:
+///
+/// * `kind` — the transform kind the plan will serve. Real kinds plan
+///   the half-size c2c surface and add the RU (split/unpack) boundary
+///   edge; the expanded planning graph models that edge natively (see
+///   [`crate::graph::PlanningGraph`]).
+/// * `batch_class` — the batch regime (log2 bucket, [`batch_class`]);
+///   0 = unbatched. Queries at class c >= 1 answer the per-transform
+///   amortized cost of groups [`class_batch`]`(c)` wide.
+/// * `k` — context order of the expanded graph (1 = the paper's model,
+///   2 = §5.1). A strategy carrying its own order
+///   (`Strategy::DijkstraContextAware { k }`) overrides this default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanningSurface {
+    pub kind: TransformKind,
+    pub batch_class: usize,
+    pub k: usize,
+}
+
+impl Default for PlanningSurface {
+    fn default() -> Self {
+        PlanningSurface::forward()
+    }
+}
+
+impl PlanningSurface {
+    /// The historical implicit surface: unbatched forward c2c, k = 1.
+    pub fn forward() -> PlanningSurface {
+        PlanningSurface { kind: TransformKind::Forward, batch_class: 0, k: 1 }
+    }
+
+    /// Unbatched surface for a kind (real kinds: the caller's cost model
+    /// is the half-size c2c surface, exactly as the service plans it).
+    pub fn for_kind(kind: TransformKind) -> PlanningSurface {
+        PlanningSurface { kind, ..PlanningSurface::forward() }
+    }
+
+    pub fn with_k(self, k: usize) -> PlanningSurface {
+        assert!(k >= 1, "context order must be >= 1");
+        PlanningSurface { k, ..self }
+    }
+
+    /// Point the surface at the batch class of groups `b` wide.
+    pub fn with_batch(self, b: usize) -> PlanningSurface {
+        self.with_batch_class(if b <= 1 { 0 } else { batch_class(b) })
+    }
+
+    pub fn with_batch_class(self, class: usize) -> PlanningSurface {
+        assert!(class < BATCH_CLASSES, "batch class {class} out of range");
+        PlanningSurface { batch_class: class, ..self }
+    }
+
+    /// Representative batch width of the surface's class (1 = unbatched).
+    pub fn batch_width(&self) -> usize {
+        if self.batch_class == 0 {
+            1
+        } else {
+            class_batch(self.batch_class)
+        }
+    }
+
+    /// Whether plans on this surface traverse the RU boundary edge (real
+    /// kinds: the split/unpack pass, one per transform).
+    pub fn has_boundary(&self) -> bool {
+        self.kind.is_real()
+    }
+
+    /// Start context of an expanded-graph walk on this surface. C2c
+    /// kinds start cold ([`Context::Start`]); real kinds start *after
+    /// the RU boundary pass* — the steady-state loop is [RU, c2c…] (C2R)
+    /// or [c2c…, RU] (R2C), so the first c2c edge always runs after the
+    /// full-buffer split/unpack walk. Until RU contexts are calibrated
+    /// cells, the closest catalog proxy is after-R2 (a plain strided
+    /// pass residual) — the same proxy the executor's traces map
+    /// `After(RU)` onto.
+    pub fn start_context(&self) -> Context {
+        if self.has_boundary() {
+            Context::After(EdgeType::R2)
+        } else {
+            Context::Start
+        }
+    }
+
+    /// Per-transform weight of `edge` at `stage` in `ctx` on this
+    /// surface (routes through [`CostModel::surface_edge_ns`]).
+    pub fn edge_ns<C: CostModel + ?Sized>(
+        &self,
+        cost: &mut C,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+    ) -> f64 {
+        cost.surface_edge_ns(edge, stage, ctx, *self)
+    }
+
+    /// True steady-state per-transform time of `plan` on this surface —
+    /// the "measured arrangement time" every strategy is judged by. C2c
+    /// kinds: every edge in its true context, the first edge in the
+    /// context of the plan's last edge (back-to-back benchmark loop).
+    /// Real kinds: the loop is [c2c steps…, RU] (one boundary pass per
+    /// transform), so the first c2c edge runs in the after-RU proxy
+    /// context and the RU edge is priced in the last c2c edge's context
+    /// at stage l (one past the c2c levels, matching the executor).
+    pub fn plan_ns<C: CostModel + ?Sized>(&self, cost: &mut C, plan: &Plan) -> f64 {
+        assert!(!plan.is_empty());
+        let mut ctx = if self.has_boundary() {
+            self.start_context()
+        } else {
+            Context::After(*plan.edges().last().unwrap())
+        };
+        let mut total = 0.0;
+        for (edge, stage) in plan.steps() {
+            total += self.edge_ns(cost, edge, stage, ctx);
+            ctx = Context::After(edge);
+        }
+        if self.has_boundary() {
+            total += self.edge_ns(cost, EdgeType::RU, plan.total_stages(), ctx);
+        }
+        total
+    }
+
+    /// The believed cost of `plan` under the context-aware search's own
+    /// objective on this surface: the from-start contextual sum for c2c
+    /// kinds, the full boundary loop (== [`PlanningSurface::plan_ns`])
+    /// for real kinds — whose searches optimize the true steady-state
+    /// loop exactly.
+    pub fn plan_objective_ns<C: CostModel + ?Sized>(&self, cost: &mut C, plan: &Plan) -> f64 {
+        if self.has_boundary() {
+            return self.plan_ns(cost, plan);
+        }
+        let mut ctx = Context::Start;
+        let mut total = 0.0;
+        for (edge, stage) in plan.steps() {
+            total += self.edge_ns(cost, edge, stage, ctx);
+            ctx = Context::After(edge);
+        }
+        total
+    }
+}
 
 /// A provider of conditional edge weights for a fixed FFT size.
 pub trait CostModel {
@@ -84,6 +253,39 @@ pub trait CostModel {
         b.max(1) as f64 * self.edge_ns(edge, stage, ctx)
     }
 
+    /// Per-transform weight of `edge` at `stage` in `ctx` on a
+    /// [`PlanningSurface`] — the one query every planner walk makes. The
+    /// default composes the per-axis methods:
+    ///
+    /// * [`EdgeType::RU`] (the real transforms' boundary pass) routes to
+    ///   [`CostModel::unpack_ns`] — per transform regardless of batch
+    ///   class (the pass has no batched cost model yet; its `_b` kernel
+    ///   exists but is unmeasured);
+    /// * batched classes answer
+    ///   `edge_ns_batched(·, batch_width) / batch_width` — kinds share
+    ///   the batched c2c surface (the kernels are literally shared);
+    /// * the unbatched class answers [`CostModel::edge_ns_kind`].
+    ///
+    /// Providers with a genuinely multi-axis store override this in one
+    /// place (the autotuner's `OnlineCost` answers from its
+    /// per-(kind, cell, batch-class) live estimates).
+    fn surface_edge_ns(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        surface: PlanningSurface,
+    ) -> f64 {
+        if edge == EdgeType::RU {
+            return self.unpack_ns(ctx);
+        }
+        if surface.batch_class > 0 {
+            let b = surface.batch_width();
+            return self.edge_ns_batched(edge, stage, ctx, b) / b as f64;
+        }
+        self.edge_ns_kind(edge, stage, ctx, surface.kind)
+    }
+
     /// Steady-state time of a full plan: every edge costed in its true
     /// context, the first edge in the context of the plan's last edge
     /// (back-to-back benchmark loop). This is the "measured arrangement
@@ -132,6 +334,16 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
         (**self).edge_ns_batched(edge, stage, ctx, b)
     }
+
+    fn surface_edge_ns(
+        &mut self,
+        edge: EdgeType,
+        stage: usize,
+        ctx: Context,
+        surface: PlanningSurface,
+    ) -> f64 {
+        (**self).surface_edge_ns(edge, stage, ctx, surface)
+    }
 }
 
 /// The simulator-backed provider.
@@ -175,7 +387,8 @@ impl CostModel for SimCost {
     /// Native batched model (see [`crate::sim::Machine::edge_ns_batched`]):
     /// twiddle amortization, no SIMD collapse, panel-scaled affinity, and
     /// a cache-capacity thrash bound — not linear extrapolation. Offline
-    /// planning over this surface (via [`BatchedCost`] or
+    /// planning over this surface (via a batch-classed
+    /// [`PlanningSurface`] or
     /// [`Wisdom::harvest_batched`]) sees the batch axis the batched
     /// kernels actually execute.
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
@@ -192,142 +405,27 @@ impl CostModel for SimCost {
     }
 }
 
-/// Transform-kind view of another cost model: `edge_ns` answers
-/// `edge_ns_kind(·, kind)`, so any unmodified planner searching this
-/// model optimizes the arrangement for that kind's workload. For real
-/// kinds the inner model is the *half-size* c2c surface (`n() = n/2`
-/// under an n-point request buffer), the searches naturally run over
-/// l − 1 levels, and [`CostModel::plan_ns`] adds the RU (split/unpack)
-/// edge in the context of the plan's last edge — the steady-state loop
-/// a real transform actually executes. `Forward` is a transparent
-/// passthrough.
-pub struct KindCost<C: CostModel> {
-    inner: C,
-    kind: TransformKind,
-}
-
-impl<C: CostModel> KindCost<C> {
-    pub fn new(inner: C, kind: TransformKind) -> KindCost<C> {
-        KindCost { inner, kind }
-    }
-
-    /// The kind planning queries are answered for.
-    pub fn kind(&self) -> TransformKind {
-        self.kind
-    }
-
-    pub fn into_inner(self) -> C {
-        self.inner
-    }
-}
-
-impl<C: CostModel> CostModel for KindCost<C> {
-    fn n(&self) -> usize {
-        self.inner.n()
-    }
-
-    fn available_edges(&self) -> Vec<EdgeType> {
-        self.inner.available_edges()
-    }
-
-    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
-        self.inner.edge_ns_kind(edge, stage, ctx, self.kind)
-    }
-
-    fn unpack_ns(&mut self, ctx: Context) -> f64 {
-        self.inner.unpack_ns(ctx)
-    }
-
-    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
-        // kinds share the batched c2c surface (same kernels)
-        self.inner.edge_ns_batched(edge, stage, ctx, b)
-    }
-
-    /// Steady-state time of a full `kind` transform. For c2c kinds this
-    /// is the usual contextual loop; for real kinds the loop is
-    /// [c2c steps…, RU] (R2C) or [RU, c2c steps…] (C2R) — either way one
-    /// RU pass per transform, priced in the context of the plan's last
-    /// c2c edge, with the first c2c edge priced after the RU boundary.
-    /// RU's residual footprint is a full-array strided walk; until RU
-    /// contexts are calibrated cells, the closest catalog proxy is
-    /// after-R2 (a plain strided pass residual).
-    fn plan_ns(&mut self, plan: &Plan) -> f64 {
-        assert!(!plan.is_empty());
-        if !self.kind.is_real() {
-            let mut ctx = Context::After(*plan.edges().last().unwrap());
-            let mut total = 0.0;
-            for (edge, stage) in plan.steps() {
-                total += self.inner.edge_ns_kind(edge, stage, ctx, self.kind);
-                ctx = Context::After(edge);
-            }
-            return total;
-        }
-        let mut ctx = Context::After(EdgeType::R2); // after-RU proxy
-        let mut total = 0.0;
-        for (edge, stage) in plan.steps() {
-            total += self.inner.edge_ns_kind(edge, stage, ctx, self.kind);
-            ctx = Context::After(edge);
-        }
-        total + self.inner.unpack_ns(Context::After(*plan.edges().last().unwrap()))
-    }
-}
-
-/// Fixed-batch per-transform view of another cost model: `edge_ns`
-/// answers `edge_ns_batched(·, B) / B`, so any unmodified planner
-/// searching this model optimizes the arrangement for a service whose
-/// same-n groups are `B` wide. `B = 1` is a transparent passthrough.
-pub struct BatchedCost<C: CostModel> {
-    inner: C,
-    b: usize,
-}
-
-impl<C: CostModel> BatchedCost<C> {
-    pub fn new(inner: C, b: usize) -> BatchedCost<C> {
-        assert!(b >= 1, "batch must be >= 1");
-        BatchedCost { inner, b }
-    }
-
-    /// The batch width planning queries are answered for.
-    pub fn batch(&self) -> usize {
-        self.b
-    }
-
-    pub fn into_inner(self) -> C {
-        self.inner
-    }
-}
-
-impl<C: CostModel> CostModel for BatchedCost<C> {
-    fn n(&self) -> usize {
-        self.inner.n()
-    }
-
-    fn available_edges(&self) -> Vec<EdgeType> {
-        self.inner.available_edges()
-    }
-
-    fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
-        self.inner.edge_ns_batched(edge, stage, ctx, self.b) / self.b as f64
-    }
-
-    fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
-        self.inner.edge_ns_batched(edge, stage, ctx, b)
-    }
-}
-
 /// Memoizing wrapper: caches cells, counts distinct measurements.
-/// Batched queries forward to the inner model (memoized separately, not
-/// counted in [`MemoCost::measurements`], which tracks the paper's §2.5
-/// unbatched measurement budget).
+/// Batched and unpack (RU) queries forward to the inner model (memoized
+/// separately, not counted in [`MemoCost::measurements`], which tracks
+/// the paper's §2.5 unbatched measurement budget) — so a boundary-graph
+/// walk through a memoized [`SimCost`]/[`NativeCost`] still sees the
+/// inner model's native RU asymmetry, not the trait's R2 proxy.
 pub struct MemoCost<C: CostModel> {
     inner: C,
     cache: HashMap<(EdgeType, usize, Context), f64>,
     cache_b: HashMap<(EdgeType, usize, Context, usize), f64>,
+    cache_u: HashMap<Context, f64>,
 }
 
 impl<C: CostModel> MemoCost<C> {
     pub fn new(inner: C) -> Self {
-        MemoCost { inner, cache: HashMap::new(), cache_b: HashMap::new() }
+        MemoCost {
+            inner,
+            cache: HashMap::new(),
+            cache_b: HashMap::new(),
+            cache_u: HashMap::new(),
+        }
     }
 
     /// Number of distinct (edge, stage, context) cells measured so far.
@@ -364,6 +462,15 @@ impl<C: CostModel> CostModel for MemoCost<C> {
         }
         let v = self.inner.edge_ns_batched(edge, stage, ctx, b);
         self.cache_b.insert((edge, stage, ctx, b), v);
+        v
+    }
+
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        if let Some(&v) = self.cache_u.get(&ctx) {
+            return v;
+        }
+        let v = self.inner.unpack_ns(ctx);
+        self.cache_u.insert(ctx, v);
         v
     }
 }
@@ -450,43 +557,52 @@ mod tests {
     }
 
     #[test]
-    fn batched_cost_adapter_exposes_the_per_transform_surface() {
+    fn batched_surface_exposes_the_per_transform_amortized_weights() {
         let mut plain = SimCost::m1(1024);
-        let mut bc = BatchedCost::new(SimCost::m1(1024), 16);
-        assert_eq!(bc.n(), 1024);
-        assert_eq!(bc.batch(), 16);
+        let mut cost = SimCost::m1(1024);
+        let b16 = PlanningSurface::forward().with_batch(16);
+        assert_eq!(b16.batch_width(), 16);
         let whole = plain.edge_ns_batched(EdgeType::R2, 9, Context::After(EdgeType::R4), 16);
-        let per_tx = bc.edge_ns(EdgeType::R2, 9, Context::After(EdgeType::R4));
+        let per_tx = b16.edge_ns(&mut cost, EdgeType::R2, 9, Context::After(EdgeType::R4));
         assert!((per_tx - whole / 16.0).abs() < 1e-12);
-        // B = 1 is a transparent passthrough
-        let mut b1 = BatchedCost::new(SimCost::m1(1024), 1);
-        assert_eq!(b1.edge_ns(EdgeType::R4, 0, Start), plain.edge_ns(EdgeType::R4, 0, Start));
+        // batch 1 is the unbatched class — a transparent passthrough
+        let b1 = PlanningSurface::forward().with_batch(1);
+        assert_eq!(b1.batch_class, 0);
+        assert_eq!(
+            b1.edge_ns(&mut cost, EdgeType::R4, 0, Start),
+            plain.edge_ns(EdgeType::R4, 0, Start)
+        );
     }
 
     #[test]
-    fn kind_cost_forward_is_passthrough_and_inverse_reuses_forward_tables() {
+    fn forward_surface_is_passthrough_and_inverse_reuses_forward_tables() {
         let mut plain = SimCost::m1(1024);
-        let mut fwd = KindCost::new(SimCost::m1(1024), TransformKind::Forward);
-        let mut inv = KindCost::new(SimCost::m1(1024), TransformKind::Inverse);
-        assert_eq!(fwd.kind(), TransformKind::Forward);
+        let mut cost = SimCost::m1(1024);
+        let fwd = PlanningSurface::forward();
+        let inv = PlanningSurface::for_kind(TransformKind::Inverse);
+        assert!(!inv.has_boundary());
         for e in [EdgeType::R2, EdgeType::F8] {
             let s = if e.is_fused() { 7 } else { 0 };
             let want = plain.edge_ns(e, s, Start);
-            assert_eq!(fwd.edge_ns(e, s, Start), want);
+            assert_eq!(fwd.edge_ns(&mut cost, e, s, Start), want);
             // inverse kinds run the identical forward kernels (boundary
             // conjugation), so the default tables coincide
-            assert_eq!(inv.edge_ns(e, s, Start), want);
+            assert_eq!(inv.edge_ns(&mut cost, e, s, Start), want);
         }
         let p = Plan::parse("R4,R2,R4,R4,F8").unwrap();
-        assert_eq!(inv.plan_ns(&p), plain.plan_ns(&p));
+        assert_eq!(inv.plan_ns(&mut cost, &p), plain.plan_ns(&p));
+        assert_eq!(fwd.plan_ns(&mut cost, &p), plain.plan_ns(&p));
     }
 
     #[test]
-    fn real_plan_ns_adds_the_unpack_edge_in_the_last_edge_context() {
+    fn real_surface_plan_ns_adds_the_unpack_edge_in_the_last_edge_context() {
         // Real plans: l−1 c2c levels + the RU edge, whose cost depends
         // on the plan's final edge (the paper's thesis in miniature).
         let mut inner = SimCost::m1(512); // c2c half of a 1024-point real transform
-        let mut rc = KindCost::new(SimCost::m1(512), TransformKind::RealForward);
+        let mut cost = SimCost::m1(512);
+        let rf = PlanningSurface::for_kind(TransformKind::RealForward);
+        assert!(rf.has_boundary());
+        assert_eq!(rf.start_context(), Context::After(EdgeType::R2));
         // n = 512 → 9 c2c levels
         let ends_fused = Plan::parse("R4,R4,R2,R2,F8").unwrap();
         let ends_radix = Plan::parse("R4,R4,R2,F8,R2").unwrap();
@@ -499,16 +615,35 @@ mod tests {
             }
             t
         };
-        let got = rc.plan_ns(&ends_fused);
+        let got = rf.plan_ns(&mut cost, &ends_fused);
         let unpack_after_fused = inner.unpack_ns(Context::After(EdgeType::F8));
         assert!((got - (base_fused + unpack_after_fused)).abs() < 1e-9);
+        // the real search objective IS the steady-state loop
+        assert_eq!(rf.plan_objective_ns(&mut cost, &ends_fused), got);
         // ending on a fused block makes the unpack cheaper than ending
         // on a strided radix pass
         let after_fused = inner.unpack_ns(Context::After(EdgeType::F8));
         let after_radix = inner.unpack_ns(Context::After(EdgeType::R2));
         assert!(after_fused < after_radix, "{after_fused} vs {after_radix}");
-        let radix_tail = rc.plan_ns(&ends_radix);
+        let radix_tail = rf.plan_ns(&mut cost, &ends_radix);
         assert!(radix_tail.is_finite() && radix_tail > 0.0);
+    }
+
+    #[test]
+    fn surface_batch_class_roundtrip_and_ru_routing() {
+        assert_eq!(batch_class(1), 0);
+        assert_eq!(batch_class(16), 4);
+        for c in 0..BATCH_CLASSES {
+            assert_eq!(batch_class(class_batch(c)), c);
+        }
+        let s = PlanningSurface::forward().with_batch(3);
+        assert_eq!(s.batch_class, 2); // next power of two
+        // RU routes to unpack_ns regardless of batch class (the boundary
+        // pass has no batched cost model)
+        let mut cost = SimCost::m1(512);
+        let want = SimCost::m1(512).unpack_ns(Context::After(EdgeType::R4));
+        let b16 = PlanningSurface::for_kind(TransformKind::RealForward).with_batch(16);
+        assert_eq!(b16.edge_ns(&mut cost, EdgeType::RU, 9, Context::After(EdgeType::R4)), want);
     }
 
     #[test]
@@ -536,6 +671,21 @@ mod tests {
             table.edge_ns_kind(EdgeType::RU, 9, Context::After(EdgeType::R4), TransformKind::RealForward),
             want
         );
+    }
+
+    #[test]
+    fn memo_forwards_unpack_to_the_inner_model() {
+        // A memoized SimCost must keep the native RU asymmetry (fused
+        // tail nearly free), not fall back to the trait's R2 proxy —
+        // and unpack queries stay outside the §2.5 budget.
+        let mut m = MemoCost::new(SimCost::m1(512));
+        let want = SimCost::m1(512).unpack_ns(Context::After(EdgeType::F8));
+        assert_eq!(m.unpack_ns(Context::After(EdgeType::F8)), want);
+        assert_eq!(m.unpack_ns(Context::After(EdgeType::F8)), want);
+        let proxy = m.edge_ns(EdgeType::R2, 0, Context::After(EdgeType::F8));
+        assert_ne!(want, proxy, "memoized unpack degraded to the R2 proxy");
+        // one R2 cell measured above; the unpack queries added none
+        assert_eq!(m.measurements(), 1);
     }
 
     #[test]

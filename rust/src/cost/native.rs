@@ -12,7 +12,7 @@
 use crate::edge::{Context, EdgeType, ALL_EDGES};
 use crate::fft::batch::BatchBuffer;
 use crate::fft::exec::{run_step, run_step_b, CompiledStep, Executor};
-use crate::fft::SplitComplex;
+use crate::fft::{real, SplitComplex};
 use crate::util::stats::{measure, MeasureSpec};
 
 use super::CostModel;
@@ -23,6 +23,11 @@ pub struct NativeCost {
     spec: MeasureSpec,
     ex: Executor,
     buf: std::cell::RefCell<SplitComplex>,
+    /// Full 2n-point buffer for the RU (split/unpack) pass measurement —
+    /// the pass walks the whole real buffer; the c2c predecessor runs on
+    /// its first-half slots, exactly as `CompiledPlan::run` executes an
+    /// R2C transform.
+    buf_ru: std::cell::RefCell<Option<SplitComplex>>,
     /// Lane-blocked buffers for batched measurement, one per batch size.
     bufs_b: std::cell::RefCell<std::collections::HashMap<usize, BatchBuffer>>,
     steps: std::collections::HashMap<(EdgeType, usize), CompiledStep>,
@@ -36,6 +41,7 @@ impl NativeCost {
             spec,
             ex: Executor::new(),
             buf: std::cell::RefCell::new(SplitComplex::random(n, 0xF00D)),
+            buf_ru: std::cell::RefCell::new(None),
             bufs_b: std::cell::RefCell::new(std::collections::HashMap::new()),
             steps: std::collections::HashMap::new(),
         }
@@ -126,6 +132,50 @@ impl CostModel for NativeCost {
         }
     }
 
+    /// Measure the real-transform split/unpack pass itself, with the
+    /// paper's context protocol: execute the predecessor c2c pass
+    /// untimed over the half buffer, then time `unpack_r2c` over the
+    /// full 2·n() buffer — so the RU-aware search runs on *measured*
+    /// unpack weights (fused-tail residual vs strided-pass residual),
+    /// not the stage-0-R2 proxy the trait defaults to. The predecessor
+    /// is the context edge *ending at the last c2c stage* (where a
+    /// plan's final pass actually leaves its residual); contexts with no
+    /// such placement (and `Start`) measure the bare pass.
+    fn unpack_ns(&mut self, ctx: Context) -> f64 {
+        let h = self.n;
+        let l = crate::fft::log2i(h);
+        let tw = real::real_twiddles(self.ex.twiddle_cache(), h);
+        let prefix = match ctx {
+            Context::After(prev) if prev != EdgeType::RU && prev.stages() <= l => {
+                Some(self.step(prev, l - prev.stages()))
+            }
+            _ => None,
+        };
+        {
+            let mut guard = self.buf_ru.borrow_mut();
+            if guard.is_none() {
+                *guard = Some(SplitComplex::random(2 * h, 0x2F00D));
+            }
+        }
+        let buf = &self.buf_ru;
+        let mut timed_fn = || {
+            let mut guard = buf.borrow_mut();
+            let b = guard.as_mut().unwrap();
+            real::unpack_r2c(&mut b.re, &mut b.im, &tw);
+        };
+        match prefix {
+            None => measure(self.spec, None, &mut timed_fn).ns,
+            Some(pre) => {
+                let mut pre_fn = || {
+                    let mut guard = buf.borrow_mut();
+                    let b = guard.as_mut().unwrap();
+                    run_step(&pre, &mut b.re[..h], &mut b.im[..h]);
+                };
+                measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
+            }
+        }
+    }
+
     /// Measure the *batched* kernel for this edge: run `run_step_b` over
     /// a lane-blocked buffer of `b` transforms (predecessor executed
     /// batched and untimed, per the same protocol). This is where the
@@ -203,6 +253,24 @@ mod tests {
         // context-aware batched measurement must not panic either
         let warm = c.edge_ns_batched(EdgeType::R2, 2, After(EdgeType::R4), 8);
         assert!(warm > 0.0);
+    }
+
+    #[test]
+    fn unpack_is_measured_not_proxied() {
+        // The RU pass is timed directly (unpack_r2c over the full 2n
+        // buffer, predecessor untimed) — after a fused block, after a
+        // strided radix pass, and bare; all must be positive and finite,
+        // and the measured value is a different quantity from the
+        // stage-0-R2 proxy (no panic, no proxy routing).
+        let mut c = NativeCost::quick(128);
+        for ctx in [Start, After(EdgeType::F8), After(EdgeType::R2), After(EdgeType::F32)] {
+            let t = c.unpack_ns(ctx);
+            assert!(t > 0.0 && t < 1e7, "{ctx}: {t}");
+        }
+        // surface queries route RU to the measured path
+        let s = crate::cost::PlanningSurface::for_kind(crate::kind::TransformKind::RealForward);
+        let t = c.surface_edge_ns(EdgeType::RU, 7, After(EdgeType::R4), s);
+        assert!(t > 0.0 && t.is_finite());
     }
 
     #[test]

@@ -70,6 +70,34 @@ impl Wisdom {
         Wisdom { n, source: source.to_string(), cells }
     }
 
+    /// Harvest the per-transform cells of an explicit
+    /// [`crate::cost::PlanningSurface`] — the database a planner walk on
+    /// that surface consumes (kind-conditional weights at the surface's
+    /// batch class). For real-kind surfaces `cost` is the half-size c2c
+    /// model and the harvested catalog is what the RU-aware search reads
+    /// for its c2c levels (the RU edge itself is priced per query
+    /// through `unpack_ns`, not stored as positional cells).
+    pub fn harvest_surface<C: CostModel>(
+        cost: &mut C,
+        source: &str,
+        surface: crate::cost::PlanningSurface,
+    ) -> Wisdom {
+        let n = cost.n();
+        let l = crate::fft::log2i(n);
+        let mut cells = Vec::new();
+        for e in cost.available_edges() {
+            for s in 0..l {
+                if !crate::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                for ctx in Context::all() {
+                    cells.push((e, s, ctx, cost.surface_edge_ns(e, s, ctx, surface)));
+                }
+            }
+        }
+        Wisdom { n, source: source.to_string(), cells }
+    }
+
     /// Replayable cost model over the saved cells.
     pub fn to_cost(&self) -> TableCost {
         let mut edges: Vec<EdgeType> = self.cells.iter().map(|c| c.0).collect();

@@ -32,17 +32,21 @@ pub enum EdgeType {
     /// pack): one symmetric walk over the full buffer with a twiddle
     /// multiply per conjugate pair. NOT part of the decomposition-graph
     /// catalog ([`ALL_EDGES`]) — it advances no DIF stages and never
-    /// appears inside a [`crate::plan::Plan`]; it exists so the real
-    /// transforms' boundary pass is a first-class `CompiledStep` that
-    /// shows up in traces, gets an `EdgeSample`, and carries its own
-    /// context-dependent cost (nearly free after a fused register
-    /// block, a full memory round trip after a strided radix pass).
+    /// appears inside a [`crate::plan::Plan`]. It *is* a real edge of
+    /// the expanded planning graph on real-kind surfaces: the boundary
+    /// edge from every terminal (L, t_prev) node, weighted by
+    /// `unpack_ns` in that context (nearly free after a fused register
+    /// block, a full memory round trip after a strided radix pass) —
+    /// see [`crate::graph::PlanningGraph`]. At execution time it is a
+    /// first-class `CompiledStep` that shows up in traces and gets an
+    /// `EdgeSample`.
     RU,
 }
 
 /// All *decomposition-graph* edge types in catalog order (matches `T` in
 /// paper Eq. 1, minus the synthetic `start` context). [`EdgeType::RU`]
-/// is deliberately excluded: it is a boundary pass, not a graph edge.
+/// is deliberately excluded: it is the boundary edge of real-kind
+/// expanded graphs, not a stage-advancing catalog entry.
 pub const ALL_EDGES: [EdgeType; 6] = [
     EdgeType::R2,
     EdgeType::R4,

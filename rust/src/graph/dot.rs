@@ -3,11 +3,15 @@
 //! * [`context_free_dot`] — Figure 1: nodes 0..L, one edge per
 //!   (edge type, stage), colored by type, weighted by isolation cost.
 //! * [`context_aware_dot`] — Figure 2: expanded nodes (s, t_prev); the
-//!   optimal path is highlighted in red.
+//!   optimal path is highlighted in red. [`expanded_dot`] is the
+//!   surface-aware variant: on real-kind surfaces it renders the
+//!   boundary-state nodes — the after-RU start node and the terminal
+//!   "done" node every (L, t_prev) reaches via a purple RU edge
+//!   weighted by that context's unpack cost.
 //! * [`decomposition_dot`] — Figure 3: a set of plans as stage-interval
 //!   chains for side-by-side comparison.
 
-use crate::cost::CostModel;
+use crate::cost::{CostModel, PlanningSurface};
 use crate::edge::{Context, EdgeType};
 use crate::plan::Plan;
 
@@ -17,7 +21,7 @@ fn color(e: EdgeType) -> &'static str {
         EdgeType::R4 => "orange",
         EdgeType::R8 => "red",
         EdgeType::F8 | EdgeType::F16 | EdgeType::F32 => "green",
-        // never drawn: RU is a boundary pass, not a graph edge
+        // the boundary edge of real-kind expanded graphs
         EdgeType::RU => "purple",
     }
 }
@@ -51,30 +55,49 @@ pub fn context_free_dot<C: CostModel>(cost: &mut C, l: usize) -> String {
 /// Figure 2: the context-aware expanded graph; `highlight` (if given) is
 /// drawn in red with penwidth 3 (the paper highlights the optimal path).
 pub fn context_aware_dot<C: CostModel>(cost: &mut C, l: usize, highlight: Option<&Plan>) -> String {
+    expanded_dot(cost, l, PlanningSurface::forward(), highlight)
+}
+
+/// The expanded planning graph on an arbitrary surface. On real-kind
+/// (boundary) surfaces the start node is the after-RU boundary state and
+/// every terminal (L, t_prev) node reaches the boundary-done node via a
+/// purple RU edge weighted by `unpack_ns` in that context — the expanded
+/// graph with RU edges exports exactly as the search walks it.
+pub fn expanded_dot<C: CostModel>(
+    cost: &mut C,
+    l: usize,
+    surface: PlanningSurface,
+    highlight: Option<&Plan>,
+) -> String {
     let mut s =
         String::from("digraph contextaware {\n  rankdir=LR;\n  node [shape=box, fontsize=10];\n");
     let node_id = |stage: usize, ctx: Context| format!("n{}_{}", stage, ctx.index());
+    let start_ctx = surface.start_context();
     // Highlighted transitions (stage, ctx, edge).
     let mut hot: std::collections::HashSet<(usize, usize, EdgeType)> = Default::default();
     if let Some(plan) = highlight {
-        let mut ctx = Context::Start;
+        let mut ctx = start_ctx;
         for (e, st) in plan.steps() {
             hot.insert((st, ctx.index(), e));
             ctx = Context::After(e);
         }
     }
-    // Reachable expansion from (0, start).
+    // Reachable expansion from the start node. On boundary surfaces the
+    // start node *is* a boundary state (the transform just crossed the
+    // RU pass), labeled as such rather than as its catalog proxy.
+    let start_label = if surface.has_boundary() { "(0, RU)" } else { "(0, start)" };
     let mut seen = std::collections::HashSet::new();
-    let mut frontier = vec![(0usize, Context::Start)];
-    seen.insert((0, Context::Start.index()));
-    s.push_str(&format!("  {} [label=\"(0, start)\"];\n", node_id(0, Context::Start)));
+    let mut terminals: Vec<Context> = Vec::new();
+    let mut frontier = vec![(0usize, start_ctx)];
+    seen.insert((0, start_ctx.index()));
+    s.push_str(&format!("  {} [label=\"{start_label}\"];\n", node_id(0, start_ctx)));
     while let Some((stage, ctx)) = frontier.pop() {
         for e in cost.available_edges() {
             let k = e.stages();
             if !super::edge_allowed(e, stage, l) {
                 continue;
             }
-            let w = cost.edge_ns(e, stage, ctx);
+            let w = cost.surface_edge_ns(e, stage, ctx, surface);
             let next = (stage + k, Context::After(e));
             if seen.insert((next.0, next.1.index())) {
                 s.push_str(&format!(
@@ -85,6 +108,8 @@ pub fn context_aware_dot<C: CostModel>(cost: &mut C, l: usize, highlight: Option
                 ));
                 if next.0 < l {
                     frontier.push(next);
+                } else if surface.has_boundary() {
+                    terminals.push(next.1);
                 }
             }
             let is_hot = hot.contains(&(stage, ctx.index(), e));
@@ -95,6 +120,22 @@ pub fn context_aware_dot<C: CostModel>(cost: &mut C, l: usize, highlight: Option
                 w,
                 if is_hot { "red" } else { color(e) },
                 if is_hot { 3 } else { 1 },
+            ));
+        }
+    }
+    if surface.has_boundary() {
+        // The boundary-done terminal: every (L, t_prev) node crosses the
+        // RU edge, priced in its own context (the terminal-RU expansion
+        // the search trades against tail speed).
+        s.push_str("  done [label=\"(done, RU)\", shape=doubleoctagon];\n");
+        terminals.sort_by_key(|c| c.index());
+        for ctx in terminals {
+            let w = cost.surface_edge_ns(EdgeType::RU, l, ctx, surface);
+            s.push_str(&format!(
+                "  {} -> done [label=\"RU {:.0}ns\", color={}];\n",
+                node_id(l, ctx),
+                w,
+                color(EdgeType::RU),
             ));
         }
     }
@@ -150,6 +191,24 @@ mod tests {
         let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
         let dot = context_aware_dot(&mut cost, 10, Some(&plan));
         assert!(dot.matches("color=red, penwidth=3").count() == 5, "{}", dot);
+    }
+
+    #[test]
+    fn boundary_surface_dot_renders_ru_edges_and_boundary_nodes() {
+        use crate::cost::PlanningSurface;
+        use crate::kind::TransformKind;
+        let mut cost = SimCost::m1(512); // c2c half of a 1024-point real transform
+        let surface = PlanningSurface::for_kind(TransformKind::RealForward);
+        let dot = expanded_dot(&mut cost, 9, surface, None);
+        // boundary start node + boundary-done terminal
+        assert!(dot.contains("(0, RU)"), "{dot}");
+        assert!(dot.contains("(done, RU)"), "{dot}");
+        // every terminal context crosses a purple RU edge
+        assert!(dot.matches("-> done").count() >= 4, "{dot}");
+        assert!(dot.contains("color=purple"), "{dot}");
+        // forward surfaces render no boundary machinery
+        let fwd = expanded_dot(&mut cost, 9, PlanningSurface::forward(), None);
+        assert!(!fwd.contains("RU"), "{fwd}");
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Enumeration of valid mixed-radix decompositions (paper §2.5).
+//! Enumeration of valid mixed-radix decompositions (paper §2.5) — the
+//! path view of the planning graph ([`super::PlanningGraph::paths`] and
+//! the exhaustive walk enumerate through here).
 //!
 //! A decomposition for L stages is an ordered edge sequence whose stage
 //! advances sum to L, with F16/F32 restricted to the terminal position

@@ -1,18 +1,26 @@
 //! The decomposition graphs (paper §2).
 //!
+//! * [`planning`] — [`PlanningGraph`], the first-class context-expanded
+//!   graph (nodes = (stage, history ≤ k, boundary state), dense-indexed;
+//!   edges include the real transforms' RU boundary pass) that every
+//!   strategy in [`crate::planner`] walks, parameterized by a
+//!   [`crate::cost::PlanningSurface`] (kind, batch class, context order).
 //! * [`enumerate`] — all valid plans (paths 0 → L) for a machine's edge
-//!   catalog; the paper's §2.5 decomposition counting.
-//! * [`search`] — shortest-path searches over the context-free graph
-//!   (nodes = stages, Fig. 1) and the context-aware expansion (nodes =
-//!   (stage, predecessor type), Fig. 2), including the higher-order k = 2
-//!   variant of §5.1.
-//! * [`dot`] — Graphviz DOT exporters regenerating Figures 1 and 2.
+//!   catalog; the paper's §2.5 decomposition counting (also the
+//!   path-enumeration view behind [`PlanningGraph::paths`]).
+//! * [`search`] — the historical shortest-path entry points (context-free
+//!   Fig. 1, context-aware Fig. 2, higher-order k of §5.1), now thin
+//!   wrappers over [`PlanningGraph`] walks on the forward surface.
+//! * [`dot`] — Graphviz DOT exporters regenerating Figures 1 and 2
+//!   (boundary-state nodes and RU edges included on real-kind surfaces).
 
 pub mod dot;
 pub mod enumerate;
+pub mod planning;
 pub mod search;
 
 pub use enumerate::{count_plans, enumerate_plans};
+pub use planning::PlanningGraph;
 pub use search::{shortest_path_context_aware, shortest_path_context_free, SearchResult};
 
 use crate::edge::EdgeType;

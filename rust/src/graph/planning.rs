@@ -1,0 +1,545 @@
+//! The first-class context-expanded planning graph (paper §2.3, Eq. 1–2)
+//! — one graph object every strategy walks.
+//!
+//! The repo used to build this graph implicitly five times: the
+//! context-free and context-aware searches, the FFTW-style DP, the beam
+//! baseline, and the exhaustive evaluator each re-derived node expansion
+//! and edge legality inline, and the real transforms' RU (split/unpack)
+//! boundary pass was invisible to all of them — a real plan trading a
+//! faster tail for a cheaper unpack could never be found, the same
+//! optimal-substructure blind spot FFTW concedes in *Implementing FFTs
+//! in Practice*. [`PlanningGraph`] makes the object explicit:
+//!
+//! * **Nodes** are `(stage, context-history ≤ k, boundary state)`.
+//!   Histories are encoded densely as base-(|T|+1) integers (most
+//!   recent edge in the low digit), so the whole node space is two flat
+//!   arrays instead of the former `HashMap<(usize, Vec<EdgeType>)>`
+//!   with its per-stage full-map scans and history clones — the node
+//!   count is exactly the paper's `(L+1)·|T|^k` (77 at k=1, 539 at k=2
+//!   for L=10, counting the start context).
+//! * **Edges** carry [`EdgeType`] *including* the boundary passes:
+//!   on a real-kind surface the graph has a terminal
+//!   [`EdgeType::RU`] edge from every `(L, history)` node to the
+//!   boundary-done state, weighted by `unpack_ns` *in that history's
+//!   context* — nearly free after a fused register block, a memory
+//!   round trip after a strided radix pass (`Machine::unpack_ns`).
+//!   Walks on a boundary surface also *start* in the after-RU context
+//!   ([`PlanningSurface::start_context`]): the steady-state loop of a
+//!   real transform is `[RU, c2c…]` / `[c2c…, RU]`, so the first c2c
+//!   edge always runs after the boundary pass. Together these make the
+//!   k = 1 context-aware walk **exactly optimal** under the true
+//!   steady-state [`PlanningSurface::plan_ns`] — not an approximation
+//!   whose RU cost is bolted on after the argmin.
+//! * **Weights** come from a [`CostModel`] queried through a
+//!   [`PlanningSurface`] — kind, batch class, and context order are
+//!   graph-level parameters, not adapter wrappers.
+//!
+//! Every strategy in [`crate::planner`] is a walk over this one graph:
+//! [`PlanningGraph::shortest_path`] (CA-k, the paper's contribution),
+//! [`PlanningGraph::isolation_shortest_path`] (CF),
+//! [`PlanningGraph::backward_dp`] (FFTW-style DP),
+//! [`PlanningGraph::beam`] (SPIRAL-style), and
+//! [`PlanningGraph::exhaustive`] (ground truth over
+//! [`PlanningGraph::paths`]).
+
+use std::collections::HashSet;
+
+use crate::cost::{CostModel, PlanningSurface};
+use crate::edge::{Context, EdgeType};
+use crate::plan::Plan;
+
+use super::search::SearchResult;
+
+/// The context-expanded planning graph for one (L, surface) pair.
+#[derive(Debug, Clone)]
+pub struct PlanningGraph {
+    l: usize,
+    surface: PlanningSurface,
+    /// Decomposition-edge catalog, sorted canonically (never contains
+    /// RU — the boundary edge is structural, not a catalog entry).
+    edges: Vec<EdgeType>,
+    /// History digit base: |catalog| + 1 (digit 0 = "no edge yet").
+    base: usize,
+    /// Number of history codes: base^k.
+    codes: usize,
+    /// base^(k-1) — the modulus that drops the oldest digit on push.
+    keep: usize,
+}
+
+impl PlanningGraph {
+    /// Build the graph for `l` decomposition stages over `catalog`.
+    /// The catalog is sorted and deduplicated so walk order (and thus
+    /// tie-breaking) is canonical regardless of provider order.
+    pub fn new(l: usize, surface: PlanningSurface, catalog: Vec<EdgeType>) -> PlanningGraph {
+        assert!(surface.k >= 1, "context order must be >= 1");
+        let mut edges = catalog;
+        edges.sort();
+        edges.dedup();
+        assert!(
+            !edges.contains(&EdgeType::RU),
+            "RU is the boundary edge, not a catalog entry"
+        );
+        let base = edges.len() + 1;
+        let codes = base.checked_pow(surface.k as u32).expect("history space overflow");
+        assert!(
+            (l + 1).saturating_mul(codes) <= 1 << 26,
+            "expanded node space too large (l={l}, k={})",
+            surface.k
+        );
+        let keep = base.pow(surface.k as u32 - 1);
+        PlanningGraph { l, surface, edges, base, codes, keep }
+    }
+
+    /// Graph for a cost model's size and catalog. For real-kind surfaces
+    /// the model is the *half-size* c2c surface (the caller passes it
+    /// that way, exactly as the service plans), so `l` is the c2c level
+    /// count — the RU boundary edge sits one past it.
+    pub fn for_cost<C: CostModel + ?Sized>(cost: &mut C, surface: PlanningSurface) -> PlanningGraph {
+        PlanningGraph::new(crate::fft::log2i(cost.n()), surface, cost.available_edges())
+    }
+
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    pub fn surface(&self) -> PlanningSurface {
+        self.surface
+    }
+
+    /// The decomposition-edge catalog (sorted, RU excluded).
+    pub fn catalog(&self) -> &[EdgeType] {
+        &self.edges
+    }
+
+    /// Expanded node count: `(l+1) · (|catalog|+1)^k` stage/history
+    /// nodes, plus the boundary-done terminal on real-kind surfaces.
+    pub fn node_count(&self) -> usize {
+        (self.l + 1) * self.codes + usize::from(self.surface.has_boundary())
+    }
+
+    /// Slide `edge` (by catalog position) into a history code: the
+    /// oldest digit falls off, the new edge enters the low digit.
+    fn push_code(&self, code: usize, edge_pos: usize) -> usize {
+        (code % self.keep) * self.base + edge_pos + 1
+    }
+
+    /// Context a node's history implies: the most recent edge, or the
+    /// surface's start context for the empty history (node (0, ·)).
+    fn context_of(&self, code: usize) -> Context {
+        match code % self.base {
+            0 => self.surface.start_context(),
+            d => Context::After(self.edges[d - 1]),
+        }
+    }
+
+    /// Decode a history code to edges, oldest first (tie-break order —
+    /// matches the former `Vec<EdgeType>` key comparison).
+    fn decode_hist(&self, code: usize) -> Vec<EdgeType> {
+        let mut digits = Vec::with_capacity(self.surface.k);
+        let mut c = code;
+        for _ in 0..self.surface.k {
+            digits.push(c % self.base);
+            c /= self.base;
+        }
+        digits
+            .into_iter()
+            .rev()
+            .filter(|&d| d != 0)
+            .map(|d| self.edges[d - 1])
+            .collect()
+    }
+
+    /// All valid plans (paths 0 → L honoring positional legality) — the
+    /// path-enumeration view ([`super::enumerate`]).
+    pub fn paths(&self) -> Vec<Plan> {
+        super::enumerate::enumerate_plans(self.l, &self.edges)
+    }
+
+    /// True steady-state per-transform time of `plan` on this graph's
+    /// surface (delegates to [`PlanningSurface::plan_ns`]; boundary
+    /// surfaces include the RU edge in the last edge's context).
+    pub fn plan_true_ns<C: CostModel + ?Sized>(&self, cost: &mut C, plan: &Plan) -> f64 {
+        self.surface.plan_ns(cost, plan)
+    }
+
+    /// Believed cost of `plan` under the context-aware walk's objective
+    /// (delegates to [`PlanningSurface::plan_objective_ns`]).
+    pub fn plan_objective_ns<C: CostModel + ?Sized>(&self, cost: &mut C, plan: &Plan) -> f64 {
+        self.surface.plan_objective_ns(cost, plan)
+    }
+
+    /// The context-aware shortest path (paper Eq. 1–2; §5.1 for k > 1):
+    /// forward relaxation over the dense node arrays in stage order (the
+    /// graph is a DAG — "Dijkstra" names the idea, no priority queue
+    /// needed). On a boundary surface the walk starts in the after-RU
+    /// context and the terminal choice includes each candidate tail's RU
+    /// edge, so the result is the exact optimum of
+    /// [`PlanningSurface::plan_ns`] at k = 1 — the search itself trades
+    /// a faster tail against a cheaper unpack.
+    pub fn shortest_path<C: CostModel + ?Sized>(&self, cost: &mut C) -> SearchResult {
+        let codes = self.codes;
+        let mut dist = vec![f64::INFINITY; (self.l + 1) * codes];
+        let mut pred: Vec<Option<(usize, EdgeType)>> = vec![None; (self.l + 1) * codes];
+        let mut cell_set: HashSet<(EdgeType, usize, Context)> = HashSet::new();
+        dist[0] = 0.0;
+        for s in 0..self.l {
+            for code in 0..codes {
+                let d = dist[s * codes + code];
+                if !d.is_finite() {
+                    continue;
+                }
+                let ctx = self.context_of(code);
+                for (pos, &e) in self.edges.iter().enumerate() {
+                    if !super::edge_allowed(e, s, self.l) {
+                        continue;
+                    }
+                    let w = self.surface.edge_ns(cost, e, s, ctx);
+                    cell_set.insert((e, s, ctx));
+                    let ni = (s + e.stages()) * codes + self.push_code(code, pos);
+                    if d + w < dist[ni] {
+                        dist[ni] = d + w;
+                        pred[ni] = Some((s * codes + code, e));
+                    }
+                }
+            }
+        }
+        // Terminal choice: min (cost, history) — histories compared
+        // oldest-first so ties resolve canonically. Boundary surfaces
+        // add each candidate's RU edge in its own tail context here,
+        // *inside* the argmin.
+        let mut best: Option<(f64, usize, Vec<EdgeType>)> = None;
+        for code in 0..codes {
+            let d = dist[self.l * codes + code];
+            if !d.is_finite() {
+                continue;
+            }
+            let total = if self.surface.has_boundary() {
+                let ctx = self.context_of(code);
+                cell_set.insert((EdgeType::RU, self.l, ctx));
+                d + self.surface.edge_ns(cost, EdgeType::RU, self.l, ctx)
+            } else {
+                d
+            };
+            let hist = self.decode_hist(code);
+            let better = match &best {
+                None => true,
+                Some((bt, _, bh)) => {
+                    total < *bt || (total == *bt && hist < *bh)
+                }
+            };
+            if better {
+                best = Some((total, code, hist));
+            }
+        }
+        let (cost_ns, best_code, _) = best.expect("no path to L");
+        let mut rev = Vec::new();
+        let mut node = self.l * codes + best_code;
+        while let Some((prev, e)) = pred[node] {
+            rev.push(e);
+            node = prev;
+        }
+        rev.reverse();
+        SearchResult { plan: Plan::new(rev), cost_ns, cells: cell_set.len() }
+    }
+
+    /// The context-free shortest path (paper §2.1): stage nodes only,
+    /// isolation weights ([`Context::Start`]). On a boundary surface the
+    /// RU edge is priced in isolation too — a *constant* added to every
+    /// path, so the argmin is exactly as RU-blind as the historical
+    /// search (which is the point of keeping this baseline).
+    pub fn isolation_shortest_path<C: CostModel + ?Sized>(&self, cost: &mut C) -> SearchResult {
+        let mut dist = vec![f64::INFINITY; self.l + 1];
+        let mut pred: Vec<Option<(usize, EdgeType)>> = vec![None; self.l + 1];
+        let mut cells = 0;
+        dist[0] = 0.0;
+        for s in 0..self.l {
+            if dist[s].is_infinite() {
+                continue;
+            }
+            for &e in &self.edges {
+                if !super::edge_allowed(e, s, self.l) {
+                    continue;
+                }
+                let w = self.surface.edge_ns(cost, e, s, Context::Start);
+                cells += 1;
+                let k = e.stages();
+                if dist[s] + w < dist[s + k] {
+                    dist[s + k] = dist[s] + w;
+                    pred[s + k] = Some((s, e));
+                }
+            }
+        }
+        let mut cost_ns = dist[self.l];
+        if self.surface.has_boundary() {
+            cost_ns += self.surface.edge_ns(cost, EdgeType::RU, self.l, Context::Start);
+            cells += 1;
+        }
+        let mut rev = Vec::new();
+        let mut s = self.l;
+        while s > 0 {
+            let (ps, e) = pred[s].expect("unreachable node");
+            rev.push(e);
+            s = ps;
+        }
+        rev.reverse();
+        SearchResult { plan: Plan::new(rev), cost_ns, cells }
+    }
+
+    /// FFTW-style dynamic programming (paper §1/§5.1): best sub-plan per
+    /// stage suffix under isolation weights — the optimal-substructure
+    /// assumption. On a DAG this reproduces the context-free argmin (the
+    /// *assumption*, not the algorithm, is what context-awareness
+    /// fixes); the boundary RU edge is the isolation-priced constant
+    /// base case, keeping the DP equally RU-blind.
+    pub fn backward_dp<C: CostModel + ?Sized>(&self, cost: &mut C) -> SearchResult {
+        let mut best = vec![f64::INFINITY; self.l + 1];
+        let mut choice: Vec<Option<EdgeType>> = vec![None; self.l + 1];
+        let mut cells = 0;
+        best[self.l] = 0.0;
+        if self.surface.has_boundary() {
+            best[self.l] = self.surface.edge_ns(cost, EdgeType::RU, self.l, Context::Start);
+            cells += 1;
+        }
+        for s in (0..self.l).rev() {
+            for &e in &self.edges {
+                if !super::edge_allowed(e, s, self.l) {
+                    continue;
+                }
+                let w = self.surface.edge_ns(cost, e, s, Context::Start);
+                cells += 1;
+                if w + best[s + e.stages()] < best[s] {
+                    best[s] = w + best[s + e.stages()];
+                    choice[s] = Some(e);
+                }
+            }
+        }
+        let mut plan = Vec::new();
+        let mut s = 0;
+        while s < self.l {
+            let e = choice[s].expect("unreachable");
+            plan.push(e);
+            s += e.stages();
+        }
+        SearchResult { plan: Plan::new(plan), cost_ns: best[0], cells }
+    }
+
+    /// SPIRAL-style beam search (paper §5.1): extend prefixes under true
+    /// contextual weights, keep the `width` cheapest per stage. Boundary
+    /// surfaces start in the after-RU context and add each terminal
+    /// candidate's RU edge before the final choice — beam is RU-aware,
+    /// but a narrow beam can still prune the global optimum (the
+    /// position-dependence problem the paper describes).
+    pub fn beam<C: CostModel + ?Sized>(&self, cost: &mut C, width: usize) -> SearchResult {
+        assert!(width >= 1);
+        let mut cell_set: HashSet<(EdgeType, usize, Context)> = HashSet::new();
+        let mut frontiers: Vec<Vec<(f64, Vec<EdgeType>, Context)>> = vec![Vec::new(); self.l + 1];
+        frontiers[0].push((0.0, Vec::new(), self.surface.start_context()));
+        for s in 0..self.l {
+            frontiers[s].sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            frontiers[s].truncate(width);
+            let snapshot = frontiers[s].clone();
+            for (c, prefix, ctx) in snapshot {
+                for &e in &self.edges {
+                    if !super::edge_allowed(e, s, self.l) {
+                        continue;
+                    }
+                    cell_set.insert((e, s, ctx));
+                    let w = self.surface.edge_ns(cost, e, s, ctx);
+                    let mut np = prefix.clone();
+                    np.push(e);
+                    frontiers[s + e.stages()].push((c + w, np, Context::After(e)));
+                }
+            }
+        }
+        let mut best: Option<(f64, Vec<EdgeType>)> = None;
+        for (c, plan, ctx) in &frontiers[self.l] {
+            let total = if self.surface.has_boundary() {
+                cell_set.insert((EdgeType::RU, self.l, *ctx));
+                c + self.surface.edge_ns(cost, EdgeType::RU, self.l, *ctx)
+            } else {
+                *c
+            };
+            if best.as_ref().is_none_or(|(bt, _)| total < *bt) {
+                best = Some((total, plan.clone()));
+            }
+        }
+        let (cost_ns, plan) = best.expect("no complete plan");
+        SearchResult { plan: Plan::new(plan), cost_ns, cells: cell_set.len() }
+    }
+
+    /// Exhaustive ground truth: evaluate the true steady-state time of
+    /// every path ([`PlanningSurface::plan_ns`] — c2c kinds loop
+    /// back-to-back, boundary surfaces cycle through the RU edge).
+    pub fn exhaustive<C: CostModel + ?Sized>(&self, cost: &mut C) -> SearchResult {
+        let mut cell_set: HashSet<(EdgeType, usize, Context)> = HashSet::new();
+        let mut best: Option<(Plan, f64)> = None;
+        for p in self.paths() {
+            if p.is_empty() {
+                continue;
+            }
+            let mut ctx = if self.surface.has_boundary() {
+                self.surface.start_context()
+            } else {
+                Context::After(*p.edges().last().unwrap())
+            };
+            let mut t = 0.0;
+            for (e, s) in p.steps() {
+                cell_set.insert((e, s, ctx));
+                t += self.surface.edge_ns(cost, e, s, ctx);
+                ctx = Context::After(e);
+            }
+            if self.surface.has_boundary() {
+                cell_set.insert((EdgeType::RU, self.l, ctx));
+                t += self.surface.edge_ns(cost, EdgeType::RU, self.l, ctx);
+            }
+            if best.as_ref().is_none_or(|(_, bt)| t < *bt) {
+                best = Some((p, t));
+            }
+        }
+        let (plan, cost_ns) = best.expect("no plans");
+        SearchResult { plan, cost_ns, cells: cell_set.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::SimCost;
+    use crate::kind::TransformKind;
+
+    fn m1_graph(n: usize, surface: PlanningSurface) -> PlanningGraph {
+        PlanningGraph::for_cost(&mut SimCost::m1(n), surface)
+    }
+
+    #[test]
+    fn node_counts_match_the_paper() {
+        // (L+1)·|T|^k with |T| = 7 contexts (start + 6 catalog edges).
+        let g1 = m1_graph(1024, PlanningSurface::forward());
+        assert_eq!(g1.node_count(), 77);
+        let g2 = m1_graph(1024, PlanningSurface::forward().with_k(2));
+        assert_eq!(g2.node_count(), 539);
+        // boundary surfaces add the done-terminal
+        let gr = m1_graph(512, PlanningSurface::for_kind(TransformKind::RealForward));
+        assert_eq!(gr.node_count(), 10 * 7 + 1);
+    }
+
+    #[test]
+    fn history_codes_roundtrip() {
+        let g = m1_graph(1024, PlanningSurface::forward().with_k(2));
+        // push R4 (pos 1) then F8 (pos 3) onto the empty history
+        let c1 = g.push_code(0, 1);
+        let c2 = g.push_code(c1, 3);
+        assert_eq!(g.decode_hist(c2), vec![EdgeType::R4, EdgeType::F8]);
+        assert_eq!(g.context_of(c2), Context::After(EdgeType::F8));
+        // a third push slides the oldest out
+        let c3 = g.push_code(c2, 0);
+        assert_eq!(g.decode_hist(c3), vec![EdgeType::F8, EdgeType::R2]);
+        assert_eq!(g.context_of(0), Context::Start);
+    }
+
+    #[test]
+    fn shortest_path_discovers_the_paper_plan() {
+        let mut cost = SimCost::m1(1024);
+        let g = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward());
+        let res = g.shortest_path(&mut cost);
+        assert_eq!(res.plan, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        assert!(res.cells > 100 && res.cells < 300);
+    }
+
+    #[test]
+    fn k2_matches_k1_for_first_order_models() {
+        let mut cost = SimCost::m1(256);
+        let g1 = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward());
+        let g2 = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward().with_k(2));
+        let r1 = g1.shortest_path(&mut cost);
+        let r2 = g2.shortest_path(&mut cost);
+        assert_eq!(r1.plan, r2.plan);
+        assert!((r1.cost_ns - r2.cost_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn boundary_shortest_path_is_exactly_the_plan_ns_optimum() {
+        // On a boundary surface the k=1 walk optimizes the true
+        // steady-state loop — it must match exhaustive exactly.
+        for lh in [5usize, 8, 9] {
+            let h = 1 << lh;
+            let mut cost = SimCost::m1(h);
+            let surface = PlanningSurface::for_kind(TransformKind::RealForward);
+            let g = PlanningGraph::for_cost(&mut cost, surface);
+            let sp = g.shortest_path(&mut cost);
+            let ex = g.exhaustive(&mut cost);
+            assert!((sp.cost_ns - ex.cost_ns).abs() < 1e-6, "h={h}");
+            assert!((g.plan_true_ns(&mut cost, &sp.plan) - sp.cost_ns).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn boundary_searches_count_ru_cells() {
+        let mut cost = SimCost::m1(256);
+        let fwd = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward());
+        let real = PlanningGraph::for_cost(
+            &mut cost,
+            PlanningSurface::for_kind(TransformKind::RealForward),
+        );
+        let f = fwd.isolation_shortest_path(&mut cost);
+        let r = real.isolation_shortest_path(&mut cost);
+        // same relaxations + the one isolation-priced RU query
+        assert_eq!(r.cells, f.cells + 1);
+        assert!(r.cost_ns > f.cost_ns);
+        assert_eq!(r.plan, f.plan, "isolation RU is a constant: argmin unchanged");
+    }
+
+    #[test]
+    fn dp_reproduces_the_isolation_argmin() {
+        for surface in [
+            PlanningSurface::forward(),
+            PlanningSurface::for_kind(TransformKind::RealForward),
+        ] {
+            let n = if surface.has_boundary() { 512 } else { 1024 };
+            let mut cost = SimCost::m1(n);
+            let g = PlanningGraph::for_cost(&mut cost, surface);
+            let dp = g.backward_dp(&mut cost);
+            let cf = g.isolation_shortest_path(&mut cost);
+            assert!((dp.cost_ns - cf.cost_ns).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn wide_beam_recovers_the_boundary_optimum() {
+        let mut cost = SimCost::m1(256);
+        let g = PlanningGraph::for_cost(
+            &mut cost,
+            PlanningSurface::for_kind(TransformKind::RealForward),
+        );
+        let beam = g.beam(&mut cost, 4096);
+        let ex = g.exhaustive(&mut cost);
+        assert!((beam.cost_ns - ex.cost_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batched_surface_walks_use_the_amortized_weights() {
+        let mut cost = SimCost::m1(1024);
+        let g0 = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward());
+        let g16 = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward().with_batch(16));
+        let p0 = g0.shortest_path(&mut cost);
+        let p16 = g16.shortest_path(&mut cost);
+        // amortized per-transform weights are cheaper across the board
+        assert!(p16.cost_ns < p0.cost_ns);
+    }
+
+    #[test]
+    fn catalog_is_canonicalized() {
+        let g = PlanningGraph::new(
+            8,
+            PlanningSurface::forward(),
+            vec![EdgeType::F8, EdgeType::R2, EdgeType::R2, EdgeType::R4],
+        );
+        assert_eq!(g.catalog(), &[EdgeType::R2, EdgeType::R4, EdgeType::F8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boundary edge")]
+    fn ru_is_rejected_from_the_catalog() {
+        PlanningGraph::new(4, PlanningSurface::forward(), vec![EdgeType::R2, EdgeType::RU]);
+    }
+}

@@ -1,4 +1,6 @@
-//! Shortest-path searches over the decomposition graphs.
+//! Shortest-path searches over the decomposition graphs — thin wrappers
+//! around [`PlanningGraph`](super::PlanningGraph) walks on the default
+//! (unbatched forward) surface.
 //!
 //! Both graphs are DAGs (edges only advance the stage counter), so
 //! Dijkstra reduces to a forward relaxation in topological (stage) order —
@@ -11,10 +13,17 @@
 //!   Fig. 2, Eq. 1-2); weights conditional on the predecessor type.
 //! * [`shortest_path_context_aware_k`] — §5.1's higher-order extension:
 //!   context = last k edge types; node space (L+1) x |T|^k.
+//!
+//! Kind- or batch-specific walks (including the real transforms' RU
+//! boundary edge) construct a [`PlanningGraph`](super::PlanningGraph)
+//! with the wanted [`PlanningSurface`](crate::cost::PlanningSurface)
+//! directly — the wrappers here exist for the historical call sites and
+//! the paper-reproduction tests.
 
-use crate::cost::CostModel;
-use crate::edge::{Context, EdgeType};
+use crate::cost::{CostModel, PlanningSurface};
 use crate::plan::Plan;
+
+use super::planning::PlanningGraph;
 
 /// Result of a search: the plan, its predicted cost under the search's own
 /// weights, and how many weight cells were queried.
@@ -33,37 +42,8 @@ pub struct SearchResult {
 /// Context-free shortest path: weights w(edge, stage) measured in
 /// isolation, independent of predecessor (paper §2.1).
 pub fn shortest_path_context_free<C: CostModel>(cost: &mut C, l: usize) -> SearchResult {
-    let edges = cost.available_edges();
-    let mut dist = vec![f64::INFINITY; l + 1];
-    let mut pred: Vec<Option<(usize, EdgeType)>> = vec![None; l + 1];
-    let mut cells = 0;
-    dist[0] = 0.0;
-    for s in 0..l {
-        if dist[s].is_infinite() {
-            continue;
-        }
-        for &e in &edges {
-            let k = e.stages();
-            if !crate::graph::edge_allowed(e, s, l) {
-                continue;
-            }
-            let w = cost.edge_ns(e, s, Context::Start);
-            cells += 1;
-            if dist[s] + w < dist[s + k] {
-                dist[s + k] = dist[s] + w;
-                pred[s + k] = Some((s, e));
-            }
-        }
-    }
-    let mut rev = Vec::new();
-    let mut s = l;
-    while s > 0 {
-        let (ps, e) = pred[s].expect("unreachable node");
-        rev.push(e);
-        s = ps;
-    }
-    rev.reverse();
-    SearchResult { plan: Plan::new(rev), cost_ns: dist[l], cells }
+    PlanningGraph::new(l, PlanningSurface::forward(), cost.available_edges())
+        .isolation_shortest_path(cost)
 }
 
 /// Context-aware shortest path over the expanded node space
@@ -78,70 +58,8 @@ pub fn shortest_path_context_aware<C: CostModel>(cost: &mut C, l: usize) -> Sear
 /// interface exists for higher-order cost models (and measures the node
 /// growth the paper quotes: 77 nodes at k=1, 539 at k=2 for L=10).
 pub fn shortest_path_context_aware_k<C: CostModel>(cost: &mut C, l: usize, k: usize) -> SearchResult {
-    assert!(k >= 1, "context order must be >= 1");
-    use std::collections::HashMap;
-    type Hist = Vec<EdgeType>; // last <= k edges, most recent last
-    let edges = cost.available_edges();
-    // dist keyed by (stage, history)
-    let mut dist: HashMap<(usize, Hist), f64> = HashMap::new();
-    let mut pred: HashMap<(usize, Hist), (usize, Hist, EdgeType)> = HashMap::new();
-    let mut cell_set: std::collections::HashSet<(EdgeType, usize, Context)> =
-        std::collections::HashSet::new();
-    dist.insert((0, Vec::new()), 0.0);
-    // Relax in stage order (DAG topological order).
-    for s in 0..l {
-        // Snapshot states at stage s (sorted for determinism).
-        let mut states: Vec<(Hist, f64)> = dist
-            .iter()
-            .filter(|((st, _), _)| *st == s)
-            .map(|((_, h), d)| (h.clone(), *d))
-            .collect();
-        states.sort_by(|a, b| a.0.cmp(&b.0));
-        for (hist, d) in states {
-            if d.is_infinite() {
-                continue;
-            }
-            let ctx = match hist.last() {
-                None => Context::Start,
-                Some(&e) => Context::After(e),
-            };
-            for &e in &edges {
-                let adv = e.stages();
-                if !crate::graph::edge_allowed(e, s, l) {
-                    continue;
-                }
-                let w = cost.edge_ns(e, s, ctx);
-                cell_set.insert((e, s, ctx));
-                let mut nh = hist.clone();
-                nh.push(e);
-                if nh.len() > k {
-                    nh.remove(0);
-                }
-                let key = (s + adv, nh.clone());
-                if d + w < *dist.get(&key).unwrap_or(&f64::INFINITY) {
-                    dist.insert(key.clone(), d + w);
-                    pred.insert(key, (s, hist.clone(), e));
-                }
-            }
-        }
-    }
-    // Best terminal state.
-    let (best_key, best_d) = dist
-        .iter()
-        .filter(|((s, _), _)| *s == l)
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0 .1.cmp(&b.0 .1)))
-        .map(|(k2, d)| (k2.clone(), *d))
-        .expect("no path to L");
-    // Backtrack.
-    let mut rev = Vec::new();
-    let mut key = best_key;
-    while key.0 > 0 {
-        let (ps, ph, e) = pred.get(&key).expect("pred chain broken").clone();
-        rev.push(e);
-        key = (ps, ph);
-    }
-    rev.reverse();
-    SearchResult { plan: Plan::new(rev), cost_ns: best_d, cells: cell_set.len() }
+    PlanningGraph::new(l, PlanningSurface::forward().with_k(k), cost.available_edges())
+        .shortest_path(cost)
 }
 
 /// Number of nodes in the k-order expanded graph for L stages and |T|
@@ -154,6 +72,7 @@ pub fn expanded_node_count(l: usize, num_contexts: usize, k: usize) -> usize {
 mod tests {
     use super::*;
     use crate::cost::{CostModel, SimCost};
+    use crate::edge::{Context, EdgeType};
     use crate::graph::enumerate::enumerate_plans;
 
     #[test]

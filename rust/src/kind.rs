@@ -16,8 +16,10 @@
 //!   ([`crate::edge::EdgeType::RU`]) — it appears in traces and its
 //!   context-dependent cost is visible to the search;
 //! * [`crate::cost`] — `CostModel::edge_ns_kind` / `unpack_ns` and the
-//!   [`crate::cost::KindCost`] planning adapter (real plans search over
-//!   l − 1 levels plus the unpack edge);
+//!   kind axis of [`crate::cost::PlanningSurface`]: real-kind surfaces
+//!   plan the half-size c2c levels on a boundary expanded graph whose
+//!   terminal RU edge the context-aware search prices natively
+//!   ([`crate::graph::PlanningGraph`]);
 //! * [`crate::coordinator`] — requests carry a kind, the grouping /
 //!   coalescing key is `(kind, n)` (no cross-kind grouping, FIFO per
 //!   key), and metrics count completions per kind;

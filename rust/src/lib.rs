@@ -12,15 +12,19 @@
 //! * [`kind`] — the transform-kind axis (forward / inverse / real-input /
 //!   real-output), threaded from plan compilation through cost models,
 //!   grouping keys, autotune cells, and serving metrics;
-//! * [`graph`] — context-free and context-aware decomposition graphs,
-//!   Dijkstra, exhaustive enumeration, DOT export (paper Figs. 1–2);
+//! * [`graph`] — the first-class context-expanded planning graph
+//!   ([`graph::PlanningGraph`]: dense (stage, history ≤ k, boundary)
+//!   nodes, RU boundary edges on real-kind surfaces) plus enumeration
+//!   and DOT export (paper Figs. 1–2);
 //! * [`sim`] — the Apple-M1 / Haswell micro-architecture timing simulator
 //!   substituting for the paper's hardware testbed (see DESIGN.md §2);
-//! * [`cost`] — edge-weight providers: simulated, natively measured on this
-//!   host, or measured over AOT-compiled PJRT executables;
+//! * [`cost`] — edge-weight providers (simulated, natively measured on
+//!   this host, or measured over AOT-compiled PJRT executables) and
+//!   [`cost::PlanningSurface`], the (kind, batch class, context order)
+//!   query struct every planner walk threads through them;
 //! * [`planner`] — the searches (context-free/context-aware Dijkstra) and
 //!   every baseline the paper compares against (FFTW-style DP, SPIRAL-style
-//!   beam, fixed arrangements);
+//!   beam, fixed arrangements), all walks over the one planning graph;
 //! * [`fft`] — a native split-complex FFT substrate implementing every edge
 //!   type (plus lane-blocked batched variants that run B transforms as
 //!   the SIMD lanes), used for correctness cross-checks, live

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   search    run the planners and report discovered plans
+//!   tune      per-strategy believed-vs-true cost table (CI golden gate)
 //!   table     regenerate a paper table (--id 1..4)
 //!   figure    regenerate a paper figure (--id 1..3, DOT/text)
 //!   paths     count/enumerate valid decompositions
@@ -12,14 +13,15 @@
 
 use std::process::ExitCode;
 
-use spfft::cost::{CostModel, KindCost, NativeCost, SimCost};
+use spfft::cost::{CostModel, NativeCost, PlanningSurface, SimCost};
 use spfft::edge::Context;
 use spfft::fft::{reference::fft_ref, SplitComplex};
 use spfft::kind::TransformKind;
 use spfft::plan::Plan;
-use spfft::planner::{plan as run_plan, rank_all_plans, Strategy};
+use spfft::planner::{plan as run_plan, plan_surface, Strategy};
 use spfft::report;
 use spfft::util::cli::{Args, CliError, Command};
+use spfft::util::json::Json;
 use spfft::util::stats::gflops;
 
 fn main() -> ExitCode {
@@ -30,6 +32,7 @@ fn main() -> ExitCode {
     };
     let result = match sub.as_str() {
         "search" => cmd_search(rest),
+        "tune" => cmd_tune(rest),
         "table" => cmd_table(rest),
         "figure" => cmd_figure(rest),
         "paths" => cmd_paths(rest),
@@ -59,6 +62,7 @@ fn print_usage() {
          usage: spfft <subcommand> [options]\n\n\
          subcommands:\n\
            search     run CF/CA Dijkstra + baselines, show discovered plans\n\
+           tune       per-strategy believed-vs-true cost table (--strategy all --json)\n\
            table      regenerate a paper table   (--id 1|2|3|4)\n\
            figure     regenerate a paper figure  (--id 1|2|3)\n\
            paths      count valid decompositions (--l <stages>)\n\
@@ -138,13 +142,21 @@ fn parse_or_help(cmd: &Command, argv: &[String]) -> Result<Option<Args>, CliErro
 fn cmd_search(argv: &[String]) -> Result<(), CliError> {
     let cmd = common(Command::new("search", "run the searches and baselines"))
         .opt("k", "1", "context order for the context-aware search")
+        .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
         .flag("all", "also rank every valid plan (exhaustive dump)");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
     let k = args.get_usize("k")?;
-    let mut cost = make_cost(&args)?;
+    let kind = parse_kind(args.get("kind"))?;
+    let cn = kind.complex_len(n);
+    let surface = PlanningSurface::for_kind(kind);
+    let mut cost = make_cost_n(&args, cn)?;
     let mut cost = cost.as_dyn();
-    println!("n = {n}, cost = {}/{}", args.get("cost"), args.get("machine"));
+    println!(
+        "n = {n}, kind = {kind} (c2c n = {cn}), cost = {}/{}",
+        args.get("cost"),
+        args.get("machine")
+    );
     for strat in [
         Strategy::DijkstraContextFree,
         Strategy::DijkstraContextAware { k },
@@ -152,21 +164,115 @@ fn cmd_search(argv: &[String]) -> Result<(), CliError> {
         Strategy::SpiralBeam { width: 3 },
         Strategy::Exhaustive,
     ] {
-        let out = run_plan(&mut cost, &strat);
+        let out = plan_surface(&mut cost, &strat, surface);
         println!(
             "  {:<18} {}  believed {:>9.1} ns  true {:>9.1} ns  ({:.1} GFLOPS, {} cells)",
             out.strategy,
             out.plan,
             out.believed_ns,
             out.true_ns,
-            gflops(n, out.true_ns),
+            gflops(cn, out.true_ns),
             out.cells
         );
     }
     if args.flag("all") {
-        let l = spfft::fft::log2i(n);
-        for (p, t) in rank_all_plans(&mut cost, l) {
-            println!("  {:<40} {:>9.1} ns {:>6.1} GF", p.to_string(), t, gflops(n, t));
+        let l = spfft::fft::log2i(cn);
+        // rank on the same surface the table above used, so real kinds
+        // order by the full boundary loop (RU edge included)
+        for (p, t) in spfft::planner::rank_all_plans_surface(&mut cost, l, surface) {
+            println!("  {:<40} {:>9.1} ns {:>6.1} GF", p.to_string(), t, gflops(cn, t));
+        }
+    }
+    Ok(())
+}
+
+/// The strategy set `tune --strategy all` runs, in report order.
+fn tune_strategies(k: usize) -> Vec<Strategy> {
+    vec![
+        Strategy::DijkstraContextFree,
+        Strategy::DijkstraContextAware { k },
+        Strategy::FftwDp,
+        Strategy::SpiralBeam { width: 3 },
+        Strategy::Exhaustive,
+    ]
+}
+
+fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
+    let cmd = common(Command::new(
+        "tune",
+        "per-strategy believed-vs-true cost table on a planning surface",
+    ))
+    .opt("k", "1", "context order for the context-aware search")
+    .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
+    .opt("batch", "1", "batch width the surface prices (per-transform amortized weights)")
+    .opt("strategy", "all", "strategy to run (all|cf|ca|dp|beam|exhaustive)")
+    .flag("json", "emit the table as JSON (the CI golden-gate format)");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let n = args.get_usize("n")?;
+    let k = args.get_usize("k")?;
+    let kind = parse_kind(args.get("kind"))?;
+    if kind.is_real() && n < 4 {
+        return Err(CliError(format!("real kinds need --n >= 4, got {n}")));
+    }
+    let cn = kind.complex_len(n);
+    let surface = PlanningSurface::for_kind(kind).with_batch(args.get_usize("batch")?.max(1));
+    let strategies = match args.get("strategy") {
+        "all" => tune_strategies(k),
+        "cf" => vec![Strategy::DijkstraContextFree],
+        "ca" => vec![Strategy::DijkstraContextAware { k }],
+        "dp" => vec![Strategy::FftwDp],
+        "beam" => vec![Strategy::SpiralBeam { width: 3 }],
+        "exhaustive" => vec![Strategy::Exhaustive],
+        other => {
+            return Err(CliError(format!(
+                "--strategy must be all|cf|ca|dp|beam|exhaustive, got '{other}'"
+            )))
+        }
+    };
+    let mut cost = make_cost_n(&args, cn)?;
+    let mut cost = cost.as_dyn();
+    let outcomes: Vec<spfft::planner::PlanOutcome> = strategies
+        .iter()
+        .map(|s| plan_surface(&mut cost, s, surface))
+        .collect();
+    if args.flag("json") {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("n".to_string(), Json::Num(n as f64));
+        root.insert("c2c_n".to_string(), Json::Num(cn as f64));
+        root.insert("kind".to_string(), Json::Str(kind.name().into()));
+        root.insert("machine".to_string(), Json::Str(args.get("machine").into()));
+        root.insert("cost".to_string(), Json::Str(args.get("cost").into()));
+        root.insert("batch".to_string(), Json::Num(surface.batch_width() as f64));
+        let rows: Vec<Json> = outcomes
+            .iter()
+            .map(|o| {
+                let mut row = std::collections::BTreeMap::new();
+                row.insert("strategy".to_string(), Json::Str(o.strategy.clone()));
+                row.insert("plan".to_string(), Json::Str(o.plan.to_string()));
+                row.insert("believed_ns".to_string(), Json::Num(o.believed_ns));
+                row.insert("true_ns".to_string(), Json::Num(o.true_ns));
+                row.insert("cells".to_string(), Json::Num(o.cells as f64));
+                Json::Obj(row)
+            })
+            .collect();
+        root.insert("strategies".to_string(), Json::Arr(rows));
+        println!("{}", spfft::util::json::to_string(&Json::Obj(root)));
+    } else {
+        println!(
+            "n = {n}, kind = {kind} (c2c n = {cn}), batch = {}, cost = {}/{}",
+            surface.batch_width(),
+            args.get("cost"),
+            args.get("machine")
+        );
+        for o in &outcomes {
+            println!(
+                "  {:<18} {:<28} believed {:>9.1} ns  true {:>9.1} ns  ({} cells)",
+                o.strategy,
+                o.plan.to_string(),
+                o.believed_ns,
+                o.true_ns,
+                o.cells
+            );
         }
     }
     Ok(())
@@ -334,10 +440,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     // c2c surface; the request buffers stay n long.
     let cn = kind.complex_len(n);
     let mut cost = make_cost_n(&args, cn)?;
-    let ca = {
-        let mut kc = KindCost::new(cost.as_dyn(), kind);
-        run_plan(&mut kc, &Strategy::DijkstraContextAware { k: 1 })
-    };
+    // Real kinds search the boundary (RU-aware) expanded graph: the
+    // walk itself trades a faster c2c tail against a cheaper unpack.
+    let ca = plan_surface(
+        &mut cost.as_dyn(),
+        &Strategy::DijkstraContextAware { k: 1 },
+        PlanningSurface::for_kind(kind),
+    );
     println!(
         "planned {} for {kind} n={n} (c2c n={cn}; {:.1} GFLOPS predicted over the c2c core)",
         ca.plan,
@@ -513,7 +622,6 @@ fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
         }
         let kind = parse_kind(args.get("kind"))?;
         let mut cost = make_cost(&args)?;
-        let mut kind_cost = KindCost::new(cost.as_dyn(), kind);
         let mut source = format!("{}:{}", args.get("cost"), args.get("machine"));
         if batch > 1 {
             source.push_str(&format!(":b{batch}"));
@@ -521,10 +629,17 @@ fn cmd_wisdom(argv: &[String]) -> Result<(), CliError> {
         if kind != TransformKind::Forward {
             source.push_str(&format!(":{kind}"));
         }
+        // Batched harvests keep the exact requested width (kinds share
+        // the batched c2c surface); unbatched harvests price the kind's
+        // surface (inverse folds onto forward for default providers).
         let w = if batch > 1 {
-            spfft::cost::Wisdom::harvest_batched(&mut kind_cost, &source, batch)
+            spfft::cost::Wisdom::harvest_batched(&mut cost.as_dyn(), &source, batch)
         } else {
-            spfft::cost::Wisdom::harvest(&mut kind_cost, &source)
+            spfft::cost::Wisdom::harvest_surface(
+                &mut cost.as_dyn(),
+                &source,
+                PlanningSurface::for_kind(kind),
+            )
         };
         w.save(std::path::Path::new(export)).map_err(|e| CliError(format!("{e}")))?;
         println!("exported {} cells (n={}, source {source}) to {export}", w.cells.len(), w.n);

@@ -23,9 +23,11 @@ impl Plan {
     /// Parse a comma/arrow-separated plan string: `"R4,R2,R4,R4,F8"` or
     /// `"R4->R2->R4->R4->F8"`. Only decomposition-graph edges are
     /// accepted: `RU` (the real-transform boundary pass) advances zero
-    /// stages and is inserted by `Executor::compile_kind`, never written
-    /// in a plan — a plan string containing it is rejected here rather
-    /// than slipping through stage-sum validation into the kernels.
+    /// stages and is structural — the planning graph adds it as the
+    /// boundary edge on real-kind surfaces and `Executor::compile_kind`
+    /// inserts its step, but it is never written in a plan — a plan
+    /// string containing it is rejected here rather than slipping
+    /// through stage-sum validation into the kernels.
     pub fn parse(s: &str) -> Option<Plan> {
         let cleaned = s.replace("->", ",");
         let mut edges = Vec::new();

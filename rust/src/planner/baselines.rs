@@ -1,32 +1,22 @@
-//! Baseline planners the paper compares against (§5.1).
+//! Baseline planners the paper compares against (§5.1) — historical
+//! entry points, now walks over the one [`PlanningGraph`] on the
+//! unbatched forward surface. Kind/batch-aware invocations go through
+//! [`crate::planner::plan_surface`], which passes the wanted
+//! [`PlanningSurface`](crate::cost::PlanningSurface) to the same walks.
 
-use crate::cost::CostModel;
-use crate::edge::{Context, EdgeType};
-use crate::graph::enumerate::enumerate_plans;
+use crate::cost::{CostModel, PlanningSurface};
+use crate::graph::planning::PlanningGraph;
 use crate::plan::Plan;
+
+fn forward_graph<C: CostModel>(cost: &mut C, l: usize) -> PlanningGraph {
+    PlanningGraph::new(l, PlanningSurface::forward(), cost.available_edges())
+}
 
 /// Exhaustive ground truth: evaluate the steady-state contextual time of
 /// every valid plan. Returns (best plan, its time, cells queried).
 pub fn exhaustive_best<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
-    let mut cells = std::collections::HashSet::new();
-    let mut best: Option<(Plan, f64)> = None;
-    for p in enumerate_plans(l, &cost.available_edges()) {
-        if p.is_empty() {
-            continue;
-        }
-        let mut ctx = Context::After(*p.edges().last().unwrap());
-        let mut t = 0.0;
-        for (e, s) in p.steps() {
-            cells.insert((e, s, ctx));
-            t += cost.edge_ns(e, s, ctx);
-            ctx = Context::After(e);
-        }
-        if best.as_ref().is_none_or(|(_, bt)| t < *bt) {
-            best = Some((p, t));
-        }
-    }
-    let (plan, t) = best.expect("no plans");
-    (plan, t, cells.len())
+    let r = forward_graph(cost, l).exhaustive(cost);
+    (r.plan, r.cost_ns, r.cells)
 }
 
 /// FFTW-style dynamic programming (paper §1/§5.1): assumes optimal
@@ -36,34 +26,8 @@ pub fn exhaustive_best<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usiz
 /// context-free Dijkstra result (the paper's point: the *assumption*, not
 /// the algorithm, is what context-awareness fixes).
 pub fn fftw_dp<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
-    let edges = cost.available_edges();
-    let mut cells = 0usize;
-    // best[s] = minimal isolation cost to go from stage s to L
-    let mut best = vec![f64::INFINITY; l + 1];
-    let mut choice: Vec<Option<EdgeType>> = vec![None; l + 1];
-    best[l] = 0.0;
-    for s in (0..l).rev() {
-        for &e in &edges {
-            let k = e.stages();
-            if !crate::graph::edge_allowed(e, s, l) {
-                continue;
-            }
-            let w = cost.edge_ns(e, s, Context::Start);
-            cells += 1;
-            if w + best[s + k] < best[s] {
-                best[s] = w + best[s + k];
-                choice[s] = Some(e);
-            }
-        }
-    }
-    let mut plan = Vec::new();
-    let mut s = 0;
-    while s < l {
-        let e = choice[s].expect("unreachable");
-        plan.push(e);
-        s += e.stages();
-    }
-    (Plan::new(plan), best[0], cells)
+    let r = forward_graph(cost, l).backward_dp(cost);
+    (r.plan, r.cost_ns, r.cells)
 }
 
 /// SPIRAL-style beam search (paper §5.1: "keep the n-best candidates at
@@ -73,43 +37,15 @@ pub fn fftw_dp<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
 /// prefix would have paid off later (narrow beams reproduce SPIRAL's
 /// position-dependence problem; wide beams converge to exhaustive).
 pub fn beam_search<C: CostModel>(cost: &mut C, l: usize, width: usize) -> (Plan, f64, usize) {
-    assert!(width >= 1);
-    let edges = cost.available_edges();
-    let mut cells = std::collections::HashSet::new();
-    // frontier per stage: (cost so far, plan so far, ctx)
-    let mut frontiers: Vec<Vec<(f64, Vec<EdgeType>, Context)>> = vec![Vec::new(); l + 1];
-    frontiers[0].push((0.0, Vec::new(), Context::Start));
-    for s in 0..l {
-        // prune to beam width
-        frontiers[s].sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        frontiers[s].truncate(width);
-        let snapshot = frontiers[s].clone();
-        for (c, prefix, ctx) in snapshot {
-            for &e in &edges {
-                let k = e.stages();
-                if !crate::graph::edge_allowed(e, s, l) {
-                    continue;
-                }
-                cells.insert((e, s, ctx));
-                let w = cost.edge_ns(e, s, ctx);
-                let mut np = prefix.clone();
-                np.push(e);
-                frontiers[s + k].push((c + w, np, Context::After(e)));
-            }
-        }
-    }
-    let (c, plan, _) = frontiers[l]
-        .iter()
-        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
-        .cloned()
-        .expect("no complete plan");
-    (Plan::new(plan), c, cells.len())
+    let r = forward_graph(cost, l).beam(cost, width);
+    (r.plan, r.cost_ns, r.cells)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cost::{CostModel, SimCost};
+    use crate::edge::Context;
 
     #[test]
     fn exhaustive_small_is_sane() {

@@ -1,27 +1,30 @@
-//! The planner: every search strategy the paper runs or compares against.
+//! The planner: every search strategy the paper runs or compares against,
+//! each one a walk over the same [`PlanningGraph`] on a caller-chosen
+//! [`PlanningSurface`] (kind, batch class, context order).
 //!
 //! * [`Strategy::DijkstraContextFree`] — paper §2.1 (isolation weights);
 //! * [`Strategy::DijkstraContextAware`] — paper §2.3 (conditional weights,
-//!   the paper's contribution);
+//!   the paper's contribution). On real-kind surfaces this walk is
+//!   RU-aware: it starts in the after-RU boundary context and the
+//!   terminal choice includes each tail's split/unpack edge, so at k = 1
+//!   it is *exactly* optimal under the true steady-state loop;
 //! * [`Strategy::Exhaustive`] — ground truth: evaluate every valid plan's
-//!   steady-state contextual time (846 plans at L = 10, §2.5);
+//!   steady-state contextual time on the surface (§2.5);
 //! * [`Strategy::FftwDp`] — FFTW-style dynamic programming with the
 //!   optimal-substructure assumption (§5.1): best sub-plan per stage
-//!   suffix, costed in isolation — equivalent to context-free DP;
+//!   suffix, costed in isolation — equivalent to context-free DP, and
+//!   equally RU-blind (the boundary edge enters as an isolation-priced
+//!   constant);
 //! * [`Strategy::SpiralBeam`] — SPIRAL-style beam search (§5.1): keep the
-//!   w best prefixes per stage under *true* contextual weights — an
-//!   in-between baseline that fixes some context errors but can drop the
-//!   global optimum when the beam is narrow;
+//!   w best prefixes per stage under *true* contextual weights — RU-aware
+//!   at the terminal, but a narrow beam can still prune the optimum;
 //! * [`Strategy::Fixed`] — a named fixed arrangement (Table 3 baselines).
 
 pub mod baselines;
 
-use crate::cost::CostModel;
-use crate::edge::Context;
+use crate::cost::{CostModel, PlanningSurface};
 use crate::graph::enumerate::enumerate_plans;
-use crate::graph::search::{
-    shortest_path_context_aware_k, shortest_path_context_free, SearchResult,
-};
+use crate::graph::planning::PlanningGraph;
 use crate::plan::Plan;
 
 pub use baselines::{beam_search, exhaustive_best, fftw_dp};
@@ -60,68 +63,79 @@ pub struct PlanOutcome {
     pub plan: Plan,
     /// Cost under the strategy's own objective (ns).
     pub believed_ns: f64,
-    /// True steady-state contextual time (ns).
+    /// True steady-state contextual time on the planning surface (ns).
     pub true_ns: f64,
     /// Distinct weight cells queried.
     pub cells: usize,
 }
 
-/// Run a strategy against a cost model for an n-point FFT.
+/// Run a strategy against a cost model on the default (unbatched
+/// forward) surface.
 pub fn plan<C: CostModel>(cost: &mut C, strategy: &Strategy) -> PlanOutcome {
-    let l = crate::fft::log2i(cost.n());
-    let (plan, believed, cells) = match strategy {
-        Strategy::DijkstraContextFree => {
-            let SearchResult { plan, cost_ns, cells } = shortest_path_context_free(cost, l);
-            (plan, cost_ns, cells)
-        }
-        Strategy::DijkstraContextAware { k } => {
-            let SearchResult { plan, cost_ns, cells } = shortest_path_context_aware_k(cost, l, *k);
-            (plan, cost_ns, cells)
-        }
-        Strategy::Exhaustive => {
-            let (plan, ns, cells) = exhaustive_best(cost, l);
-            (plan, ns, cells)
-        }
-        Strategy::FftwDp => {
-            let (plan, ns, cells) = fftw_dp(cost, l);
-            (plan, ns, cells)
-        }
-        Strategy::SpiralBeam { width } => {
-            let (plan, ns, cells) = beam_search(cost, l, *width);
-            (plan, ns, cells)
-        }
+    plan_surface(cost, strategy, PlanningSurface::forward())
+}
+
+/// Run a strategy against a cost model on an explicit planning surface.
+/// For real-kind surfaces `cost` is the *half-size* c2c model (exactly
+/// what the service plans); `true_ns` then includes the RU boundary edge
+/// in the last c2c edge's context. A
+/// [`Strategy::DijkstraContextAware`]'s own `k` overrides the surface's
+/// default context order.
+pub fn plan_surface<C: CostModel>(
+    cost: &mut C,
+    strategy: &Strategy,
+    surface: PlanningSurface,
+) -> PlanOutcome {
+    let surface = match strategy {
+        Strategy::DijkstraContextAware { k } => surface.with_k(*k),
+        _ => surface,
+    };
+    let graph = PlanningGraph::for_cost(cost, surface);
+    let result = match strategy {
+        Strategy::DijkstraContextFree => graph.isolation_shortest_path(cost),
+        Strategy::DijkstraContextAware { .. } => graph.shortest_path(cost),
+        Strategy::Exhaustive => graph.exhaustive(cost),
+        Strategy::FftwDp => graph.backward_dp(cost),
+        Strategy::SpiralBeam { width } => graph.beam(cost, *width),
         Strategy::Fixed(p) => {
-            assert!(p.is_valid_for(l), "fixed plan {p} invalid for l={l}");
-            (p.clone(), f64::NAN, 0)
+            assert!(p.is_valid_for(graph.l()), "fixed plan {p} invalid for l={}", graph.l());
+            crate::graph::SearchResult { plan: p.clone(), cost_ns: f64::NAN, cells: 0 }
         }
     };
-    let true_ns = cost.plan_ns(&plan);
+    let true_ns = graph.plan_true_ns(cost, &result.plan);
     PlanOutcome {
         strategy: strategy.name(),
-        plan,
-        believed_ns: believed,
+        plan: result.plan,
+        believed_ns: result.cost_ns,
         true_ns,
-        cells,
+        cells: result.cells,
     }
 }
 
-/// From-start contextual cost of a plan (the CA search objective).
+/// From-start contextual cost of a plan (the CA search objective on the
+/// default forward surface; delegates to
+/// [`PlanningSurface::plan_objective_ns`] — one objective, one place).
 pub fn plan_cost_from_start<C: CostModel>(cost: &mut C, plan: &Plan) -> f64 {
-    let mut ctx = Context::Start;
-    let mut total = 0.0;
-    for (e, s) in plan.steps() {
-        total += cost.edge_ns(e, s, ctx);
-        ctx = Context::After(e);
-    }
-    total
+    PlanningSurface::forward().plan_objective_ns(cost, plan)
 }
 
 /// Every valid plan with its true steady-state time, sorted fastest-first.
 pub fn rank_all_plans<C: CostModel>(cost: &mut C, l: usize) -> Vec<(Plan, f64)> {
+    rank_all_plans_surface(cost, l, PlanningSurface::forward())
+}
+
+/// [`rank_all_plans`] on an explicit surface: real-kind surfaces rank by
+/// the full boundary loop (RU edge in each tail's context, after-RU
+/// start), so the dump agrees with what the RU-aware strategies report.
+pub fn rank_all_plans_surface<C: CostModel>(
+    cost: &mut C,
+    l: usize,
+    surface: PlanningSurface,
+) -> Vec<(Plan, f64)> {
     let mut rows: Vec<(Plan, f64)> = enumerate_plans(l, &cost.available_edges())
         .into_iter()
         .map(|p| {
-            let t = cost.plan_ns(&p);
+            let t = surface.plan_ns(cost, &p);
             (p, t)
         })
         .collect();

@@ -124,7 +124,11 @@ impl Machine {
     /// This is the context-dependence the real-transform plan search
     /// consumes via `CostModel::unpack_ns` — a context-free model would
     /// price the pass identically after every predecessor and miss the
-    /// fused-tail advantage entirely.
+    /// fused-tail advantage entirely. Since the boundary expanded graph
+    /// landed (`graph::PlanningGraph`), the context-aware search prices
+    /// this asymmetry *inside* the argmin: the RU edge out of every
+    /// terminal (L, t_prev) node carries this function's value for that
+    /// context, so a plan may trade a faster tail for a cheaper unpack.
     pub fn unpack_ns(&self, n: usize, ctx: Context) -> f64 {
         let p = &self.params;
         // one round trip over the full 2n-point buffer

@@ -1,0 +1,509 @@
+//! Lock-down for the unified planning graph (PlanningGraph +
+//! PlanningSurface):
+//!
+//! * **Golden bit-identity** — every refactored strategy returns a
+//!   bit-identical plan (and equal believed cost / cell count) to its
+//!   pre-refactor implementation, inlined below verbatim, on the frozen
+//!   m1/haswell sim tables and on random tables.
+//! * **Dense == HashMap** — the dense-indexed CA search matches the old
+//!   `HashMap<(usize, Vec<EdgeType>)>` implementation's cost and cells
+//!   on randomized (l, k) pairs.
+//! * **RU-awareness** — the boundary (real-kind) context-aware search is
+//!   never worse than the PR-4 `KindCost`-adapter path (search the c2c
+//!   levels RU-blind, add the unpack after the argmin) under the true
+//!   steady-state `plan_ns`, on random cost tables and on `SimCost::m1`;
+//!   and strictly better on pinned m1 sizes — the acceptance fixture.
+
+use std::collections::{HashMap, HashSet};
+
+use spfft::cost::{CostModel, PlanningSurface, SimCost, TableCost, Wisdom};
+use spfft::edge::{Context, EdgeType, ALL_EDGES};
+use spfft::graph::{PlanningGraph, SearchResult};
+use spfft::kind::TransformKind;
+use spfft::plan::Plan;
+use spfft::planner::{beam_search, exhaustive_best, fftw_dp, plan_surface, Strategy};
+use spfft::prop_assert;
+use spfft::util::prop::{check, Config};
+use spfft::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Pre-refactor reference implementations (inlined verbatim from the old
+// graph/search.rs and planner/baselines.rs — the golden oracles).
+// ---------------------------------------------------------------------
+
+fn ref_context_free<C: CostModel>(cost: &mut C, l: usize) -> SearchResult {
+    let edges = cost.available_edges();
+    let mut dist = vec![f64::INFINITY; l + 1];
+    let mut pred: Vec<Option<(usize, EdgeType)>> = vec![None; l + 1];
+    let mut cells = 0;
+    dist[0] = 0.0;
+    for s in 0..l {
+        if dist[s].is_infinite() {
+            continue;
+        }
+        for &e in &edges {
+            let k = e.stages();
+            if !spfft::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, s, Context::Start);
+            cells += 1;
+            if dist[s] + w < dist[s + k] {
+                dist[s + k] = dist[s] + w;
+                pred[s + k] = Some((s, e));
+            }
+        }
+    }
+    let mut rev = Vec::new();
+    let mut s = l;
+    while s > 0 {
+        let (ps, e) = pred[s].expect("unreachable node");
+        rev.push(e);
+        s = ps;
+    }
+    rev.reverse();
+    SearchResult { plan: Plan::new(rev), cost_ns: dist[l], cells }
+}
+
+fn ref_context_aware_k<C: CostModel>(cost: &mut C, l: usize, k: usize) -> SearchResult {
+    assert!(k >= 1);
+    type Hist = Vec<EdgeType>;
+    let edges = cost.available_edges();
+    let mut dist: HashMap<(usize, Hist), f64> = HashMap::new();
+    let mut pred: HashMap<(usize, Hist), (usize, Hist, EdgeType)> = HashMap::new();
+    let mut cell_set: HashSet<(EdgeType, usize, Context)> = HashSet::new();
+    dist.insert((0, Vec::new()), 0.0);
+    for s in 0..l {
+        let mut states: Vec<(Hist, f64)> = dist
+            .iter()
+            .filter(|((st, _), _)| *st == s)
+            .map(|((_, h), d)| (h.clone(), *d))
+            .collect();
+        states.sort_by(|a, b| a.0.cmp(&b.0));
+        for (hist, d) in states {
+            if d.is_infinite() {
+                continue;
+            }
+            let ctx = match hist.last() {
+                None => Context::Start,
+                Some(&e) => Context::After(e),
+            };
+            for &e in &edges {
+                let adv = e.stages();
+                if !spfft::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                let w = cost.edge_ns(e, s, ctx);
+                cell_set.insert((e, s, ctx));
+                let mut nh = hist.clone();
+                nh.push(e);
+                if nh.len() > k {
+                    nh.remove(0);
+                }
+                let key = (s + adv, nh.clone());
+                if d + w < *dist.get(&key).unwrap_or(&f64::INFINITY) {
+                    dist.insert(key.clone(), d + w);
+                    pred.insert(key, (s, hist.clone(), e));
+                }
+            }
+        }
+    }
+    let (best_key, best_d) = dist
+        .iter()
+        .filter(|((s, _), _)| *s == l)
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0 .1.cmp(&b.0 .1)))
+        .map(|(k2, d)| (k2.clone(), *d))
+        .expect("no path to L");
+    let mut rev = Vec::new();
+    let mut key = best_key;
+    while key.0 > 0 {
+        let (ps, ph, e) = pred.get(&key).expect("pred chain broken").clone();
+        rev.push(e);
+        key = (ps, ph);
+    }
+    rev.reverse();
+    SearchResult { plan: Plan::new(rev), cost_ns: best_d, cells: cell_set.len() }
+}
+
+fn ref_fftw_dp<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
+    let edges = cost.available_edges();
+    let mut cells = 0usize;
+    let mut best = vec![f64::INFINITY; l + 1];
+    let mut choice: Vec<Option<EdgeType>> = vec![None; l + 1];
+    best[l] = 0.0;
+    for s in (0..l).rev() {
+        for &e in &edges {
+            let k = e.stages();
+            if !spfft::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            let w = cost.edge_ns(e, s, Context::Start);
+            cells += 1;
+            if w + best[s + k] < best[s] {
+                best[s] = w + best[s + k];
+                choice[s] = Some(e);
+            }
+        }
+    }
+    let mut plan = Vec::new();
+    let mut s = 0;
+    while s < l {
+        let e = choice[s].expect("unreachable");
+        plan.push(e);
+        s += e.stages();
+    }
+    (Plan::new(plan), best[0], cells)
+}
+
+fn ref_beam<C: CostModel>(cost: &mut C, l: usize, width: usize) -> (Plan, f64, usize) {
+    assert!(width >= 1);
+    let edges = cost.available_edges();
+    let mut cells = HashSet::new();
+    let mut frontiers: Vec<Vec<(f64, Vec<EdgeType>, Context)>> = vec![Vec::new(); l + 1];
+    frontiers[0].push((0.0, Vec::new(), Context::Start));
+    for s in 0..l {
+        frontiers[s].sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        frontiers[s].truncate(width);
+        let snapshot = frontiers[s].clone();
+        for (c, prefix, ctx) in snapshot {
+            for &e in &edges {
+                let k = e.stages();
+                if !spfft::graph::edge_allowed(e, s, l) {
+                    continue;
+                }
+                cells.insert((e, s, ctx));
+                let w = cost.edge_ns(e, s, ctx);
+                let mut np = prefix.clone();
+                np.push(e);
+                frontiers[s + k].push((c + w, np, Context::After(e)));
+            }
+        }
+    }
+    let (c, plan, _) = frontiers[l]
+        .iter()
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .cloned()
+        .expect("no complete plan");
+    (Plan::new(plan), c, cells.len())
+}
+
+fn ref_exhaustive<C: CostModel>(cost: &mut C, l: usize) -> (Plan, f64, usize) {
+    let mut cells = HashSet::new();
+    let mut best: Option<(Plan, f64)> = None;
+    for p in spfft::graph::enumerate_plans(l, &cost.available_edges()) {
+        if p.is_empty() {
+            continue;
+        }
+        let mut ctx = Context::After(*p.edges().last().unwrap());
+        let mut t = 0.0;
+        for (e, s) in p.steps() {
+            cells.insert((e, s, ctx));
+            t += cost.edge_ns(e, s, ctx);
+            ctx = Context::After(e);
+        }
+        if best.as_ref().is_none_or(|(_, bt)| t < *bt) {
+            best = Some((p, t));
+        }
+    }
+    let (plan, t) = best.expect("no plans");
+    (plan, t, cells.len())
+}
+
+/// The PR-4 `KindCost`-adapter path for a real kind: search the c2c
+/// levels RU-blind from `Context::Start` (the old HashMap CA over the
+/// kind's edge weights), then judge the plan by the true steady-state
+/// loop — the unpack only enters *after* the argmin.
+fn legacy_adapter_real_ca<C: CostModel>(cost: &mut C, l: usize) -> Plan {
+    ref_context_aware_k(cost, l, 1).plan
+}
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+/// A frozen random weight table covering every (edge, stage, context)
+/// cell with positive weights across three decades.
+fn random_table(rng: &mut Rng, l: usize) -> TableCost {
+    let mut cells = HashMap::new();
+    for e in ALL_EDGES {
+        for s in 0..l {
+            if !spfft::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            for ctx in Context::all() {
+                cells.insert((e, s, ctx), 1.0 + rng.next_f64() * 999.0);
+            }
+        }
+    }
+    TableCost { n: 1 << l, edges: ALL_EDGES.to_vec(), cells }
+}
+
+// ---------------------------------------------------------------------
+// (b) Golden bit-identity vs the pre-refactor implementations
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_every_strategy_matches_its_pre_refactor_implementation() {
+    // Frozen m1/haswell tables (Wisdom::harvest freezes the sim cells
+    // into a replayable table) at several sizes.
+    for (machine, ns) in [("m1", vec![256usize, 1024]), ("haswell", vec![1024])] {
+        for n in ns {
+            let mut sim = match machine {
+                "m1" => SimCost::m1(n),
+                _ => SimCost::haswell(n),
+            };
+            let frozen = Wisdom::harvest(&mut sim, machine);
+            let mut cost = frozen.to_cost();
+            let l = spfft::fft::log2i(n);
+            let fwd = PlanningSurface::forward();
+
+            let cf_new = plan_surface(&mut cost, &Strategy::DijkstraContextFree, fwd);
+            let cf_ref = ref_context_free(&mut cost, l);
+            assert_eq!(cf_new.plan, cf_ref.plan, "{machine}/{n} CF");
+            assert!((cf_new.believed_ns - cf_ref.cost_ns).abs() < 1e-9);
+            assert_eq!(cf_new.cells, cf_ref.cells);
+
+            for k in [1usize, 2] {
+                let ca_new = plan_surface(&mut cost, &Strategy::DijkstraContextAware { k }, fwd);
+                let ca_ref = ref_context_aware_k(&mut cost, l, k);
+                assert_eq!(ca_new.plan, ca_ref.plan, "{machine}/{n} CA k={k}");
+                assert!((ca_new.believed_ns - ca_ref.cost_ns).abs() < 1e-9);
+                assert_eq!(ca_new.cells, ca_ref.cells, "{machine}/{n} CA k={k} cells");
+            }
+
+            let dp_new = plan_surface(&mut cost, &Strategy::FftwDp, fwd);
+            let (dp_plan, dp_ns, dp_cells) = ref_fftw_dp(&mut cost, l);
+            assert_eq!(dp_new.plan, dp_plan, "{machine}/{n} DP");
+            assert!((dp_new.believed_ns - dp_ns).abs() < 1e-9);
+            assert_eq!(dp_new.cells, dp_cells);
+
+            for width in [1usize, 3, 64] {
+                let bm_new =
+                    plan_surface(&mut cost, &Strategy::SpiralBeam { width }, fwd);
+                let (bm_plan, bm_ns, bm_cells) = ref_beam(&mut cost, l, width);
+                assert_eq!(bm_new.plan, bm_plan, "{machine}/{n} beam({width})");
+                assert!((bm_new.believed_ns - bm_ns).abs() < 1e-9);
+                assert_eq!(bm_new.cells, bm_cells);
+            }
+
+            let ex_new = plan_surface(&mut cost, &Strategy::Exhaustive, fwd);
+            let (ex_plan, ex_ns, ex_cells) = ref_exhaustive(&mut cost, l);
+            assert_eq!(ex_new.plan, ex_plan, "{machine}/{n} exhaustive");
+            assert!((ex_new.believed_ns - ex_ns).abs() < 1e-9);
+            assert_eq!(ex_new.cells, ex_cells);
+
+            // the public wrappers route through the same walks
+            let (wp, wns, wc) = fftw_dp(&mut cost, l);
+            assert_eq!((wp, wc), (dp_new.plan.clone(), dp_new.cells));
+            assert!((wns - dp_new.believed_ns).abs() < 1e-9);
+            let (bp, _, _) = beam_search(&mut cost, l, 3);
+            assert_eq!(bp, ref_beam(&mut cost, l, 3).0);
+            let (ep, _, _) = exhaustive_best(&mut cost, l);
+            assert_eq!(ep, ex_new.plan);
+        }
+    }
+}
+
+#[test]
+fn golden_m1_paper_plans_survive_the_refactor() {
+    // The pinned categorical results (the paper's findings) through the
+    // unified graph: the CA/exhaustive optimum and the haswell plan are
+    // byte-for-byte the known fixtures.
+    let ca = plan_surface(
+        &mut SimCost::m1(1024),
+        &Strategy::DijkstraContextAware { k: 1 },
+        PlanningSurface::forward(),
+    );
+    assert_eq!(ca.plan, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+    let hw = plan_surface(
+        &mut SimCost::haswell(1024),
+        &Strategy::DijkstraContextAware { k: 1 },
+        PlanningSurface::forward(),
+    );
+    assert_eq!(hw.plan, Plan::parse("R4,R8,R8,R4").unwrap());
+}
+
+// ---------------------------------------------------------------------
+// (c) Dense node arrays == HashMap implementation
+// ---------------------------------------------------------------------
+
+fn compare_dense_vs_hashmap<C: CostModel>(cost: &mut C, l: usize, k: usize) -> Result<(), String> {
+    let dense = spfft::graph::search::shortest_path_context_aware_k(cost, l, k);
+    let reference = ref_context_aware_k(cost, l, k);
+    prop_assert!(
+        (dense.cost_ns - reference.cost_ns).abs() < 1e-9,
+        "l={l} k={k}: dense cost {} vs hashmap {}",
+        dense.cost_ns,
+        reference.cost_ns
+    );
+    prop_assert!(
+        dense.cells == reference.cells,
+        "l={l} k={k}: dense cells {} vs hashmap {}",
+        dense.cells,
+        reference.cells
+    );
+    prop_assert!(dense.plan.is_valid_for(l), "invalid dense plan {} at l={l}", dense.plan);
+    Ok(())
+}
+
+#[test]
+fn prop_dense_ca_matches_hashmap_ca_on_random_l_k() {
+    check("dense-vs-hashmap-ca", Config { cases: 40, ..Default::default() }, |rng| {
+        let l = rng.range(3, 11);
+        let k = rng.range(1, 4);
+        // alternate random tables and the sim surfaces
+        match rng.next_below(3) {
+            0 => compare_dense_vs_hashmap(&mut random_table(rng, l), l, k),
+            1 => compare_dense_vs_hashmap(&mut SimCost::m1(1 << l), l, k),
+            _ => compare_dense_vs_hashmap(&mut SimCost::haswell(1 << l), l, k),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// (a) RU-aware search vs the PR-4 adapter path
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ru_aware_search_never_worse_than_the_adapter_path() {
+    // The boundary walk optimizes the true steady-state loop exactly, so
+    // on ANY positive weight table its plan is at least as good as the
+    // RU-blind adapter plan under `PlanningSurface::plan_ns` — and
+    // exactly matches the exhaustive boundary optimum.
+    check("ru-aware-never-worse", Config { cases: 40, ..Default::default() }, |rng| {
+        let l = rng.range(2, 10);
+        let mut table = random_table(rng, l);
+        let surface = PlanningSurface::for_kind(if rng.next_below(2) == 0 {
+            TransformKind::RealForward
+        } else {
+            TransformKind::RealInverse
+        });
+        let graph = PlanningGraph::new(l, surface, table.available_edges());
+        let aware = graph.shortest_path(&mut table);
+        let legacy = legacy_adapter_real_ca(&mut table, l);
+        let t_aware = surface.plan_ns(&mut table, &aware.plan);
+        let t_legacy = surface.plan_ns(&mut table, &legacy);
+        prop_assert!(
+            t_aware <= t_legacy + 1e-9,
+            "l={l}: aware {} ({t_aware}) worse than adapter {} ({t_legacy})",
+            aware.plan,
+            legacy
+        );
+        let ex = graph.exhaustive(&mut table);
+        prop_assert!(
+            (t_aware - ex.cost_ns).abs() < 1e-6,
+            "l={l}: aware {t_aware} != exhaustive {}",
+            ex.cost_ns
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn ru_aware_search_never_worse_on_the_m1_sim_across_sizes() {
+    for lh in 2..=11usize {
+        let h = 1 << lh;
+        let mut cost = SimCost::m1(h);
+        for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
+            let surface = PlanningSurface::for_kind(kind);
+            let graph = PlanningGraph::for_cost(&mut cost, surface);
+            let aware = graph.shortest_path(&mut cost);
+            let legacy = legacy_adapter_real_ca(&mut cost, lh);
+            let t_aware = surface.plan_ns(&mut cost, &aware.plan);
+            let t_legacy = surface.plan_ns(&mut cost, &legacy);
+            assert!(
+                t_aware <= t_legacy + 1e-9,
+                "h={h} {kind}: aware {t_aware} vs legacy {t_legacy}"
+            );
+        }
+    }
+}
+
+#[test]
+fn acceptance_ru_aware_strictly_beats_the_adapter_on_pinned_m1_sizes() {
+    // The acceptance fixture: for RealForward/RealInverse on the m1 sim
+    // (MachineParams::unpack_after_fused asymmetry), the unified
+    // RU-aware context-aware search finds plans whose true plan_ns is
+    // strictly better than the PR-4 KindCost-adapter search at request
+    // sizes 512, 1024, and 2048 (c2c halves 256, 512, 1024).
+    for h in [256usize, 512, 1024] {
+        let lh = spfft::fft::log2i(h);
+        let mut cost = SimCost::m1(h);
+        for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
+            let surface = PlanningSurface::for_kind(kind);
+            let graph = PlanningGraph::for_cost(&mut cost, surface);
+            let aware = graph.shortest_path(&mut cost);
+            let legacy = legacy_adapter_real_ca(&mut cost, lh);
+            let t_aware = surface.plan_ns(&mut cost, &aware.plan);
+            let t_legacy = surface.plan_ns(&mut cost, &legacy);
+            assert!(
+                t_aware < t_legacy - 1e-9,
+                "request n={} {kind}: aware {} ({t_aware}) not strictly better than \
+                 adapter {} ({t_legacy})",
+                2 * h,
+                aware.plan,
+                legacy
+            );
+        }
+    }
+}
+
+#[test]
+fn ru_terminal_trade_flips_the_tail_on_a_crafted_table() {
+    // A deterministic table where the c2c-cheapest plan ends in a radix
+    // pass but a slightly-dearer fused tail wins once the unpack edge is
+    // priced: the terminal-RU trade in isolation. Catalog {R2, R4, F8},
+    // l = 3. The RU proxy on a replayed table is the stage-0 R2 cell in
+    // the tail's context, so cell(R2, 0, After(F8)) = 5 vs
+    // cell(R2, 0, After(R2)) = 50 encodes "unpack rides the fused
+    // residual".
+    let l = 3;
+    let edges = vec![EdgeType::R2, EdgeType::R4, EdgeType::F8];
+    let mut cells = HashMap::new();
+    for &e in &edges {
+        for s in 0..l {
+            if !spfft::graph::edge_allowed(e, s, l) {
+                continue;
+            }
+            for ctx in Context::all() {
+                cells.insert((e, s, ctx), 1000.0);
+            }
+        }
+    }
+    // plan A = R4,R2: c2c cost 20 both from Start and from the boundary
+    cells.insert((EdgeType::R4, 0, Context::Start), 10.0);
+    cells.insert((EdgeType::R4, 0, Context::After(EdgeType::R2)), 10.0);
+    cells.insert((EdgeType::R2, 2, Context::After(EdgeType::R4)), 10.0);
+    // plan B = F8: c2c cost 21 — loses RU-blind
+    cells.insert((EdgeType::F8, 0, Context::Start), 21.0);
+    cells.insert((EdgeType::F8, 0, Context::After(EdgeType::R2)), 21.0);
+    // the unpack: cheap after the fused tail, dear after the radix tail
+    cells.insert((EdgeType::R2, 0, Context::After(EdgeType::F8)), 5.0);
+    cells.insert((EdgeType::R2, 0, Context::After(EdgeType::R2)), 50.0);
+    let mut table = TableCost { n: 1 << l, edges, cells };
+
+    let legacy = legacy_adapter_real_ca(&mut table, l);
+    assert_eq!(legacy, Plan::parse("R4,R2").unwrap(), "adapter should pick the radix tail");
+    let surface = PlanningSurface::for_kind(TransformKind::RealForward);
+    let graph = PlanningGraph::new(l, surface, table.available_edges());
+    let aware = graph.shortest_path(&mut table);
+    assert_eq!(aware.plan, Plan::parse("F8").unwrap(), "RU edge should flip the tail");
+    let t_aware = surface.plan_ns(&mut table, &aware.plan);
+    let t_legacy = surface.plan_ns(&mut table, &legacy);
+    assert!((t_aware - 26.0).abs() < 1e-9, "{t_aware}");
+    assert!((t_legacy - 70.0).abs() < 1e-9, "{t_legacy}");
+}
+
+// ---------------------------------------------------------------------
+// Surface/infra sanity that spans crates (unit tests cover the rest)
+// ---------------------------------------------------------------------
+
+#[test]
+fn plan_surface_true_ns_matches_the_surface_loop() {
+    let mut cost = SimCost::m1(512);
+    let surface = PlanningSurface::for_kind(TransformKind::RealForward);
+    let out = plan_surface(&mut cost, &Strategy::DijkstraContextAware { k: 1 }, surface);
+    assert!((out.true_ns - surface.plan_ns(&mut cost, &out.plan)).abs() < 1e-9);
+    // the RU-aware CA's belief IS the truth (it optimizes plan_ns)
+    assert!((out.believed_ns - out.true_ns).abs() < 1e-9);
+}

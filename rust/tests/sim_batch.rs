@@ -10,11 +10,11 @@
 //!   surface legitimately selects a *different* arrangement than the
 //!   unbatched search — the batch axis is visible to offline planning.
 
-use spfft::cost::{BatchedCost, SimCost};
+use spfft::cost::{PlanningSurface, SimCost};
 use spfft::edge::{Context, EdgeType, ALL_EDGES};
 use spfft::graph::edge_allowed;
 use spfft::plan::Plan;
-use spfft::planner::{plan as run_plan, Strategy};
+use spfft::planner::{plan as run_plan, plan_surface, Strategy};
 use spfft::sim::{Machine, MachineParams};
 
 fn contexts(machine: &Machine) -> Vec<Context> {
@@ -198,32 +198,27 @@ fn batch_padding_makes_b2_and_b4_whole_batch_identical() {
 #[test]
 fn planning_under_a_batch_class_selects_a_different_plan() {
     // The acceptance criterion: the same context-aware Dijkstra over the
-    // batched per-transform surface (BatchedCost) picks a different
-    // arrangement than over the unbatched surface, at n=1024 and n=256.
+    // batched per-transform surface (a batch-16 PlanningSurface) picks a
+    // different arrangement than over the unbatched surface, at n=1024
+    // and n=256.
     //
     // n=1024: the scalar optimum ends in a terminal F8 (transpose trick,
     // no twiddle stream); under B=16 the lane-major layout voids the
     // terminal advantage and panel-scaled affinity makes the late radix
     // tail cheap, so the fused block migrates to the front.
-    let scalar = run_plan(&mut SimCost::m1(1024), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let ca = Strategy::DijkstraContextAware { k: 1 };
+    let b16 = PlanningSurface::forward().with_batch(16);
+    let scalar = run_plan(&mut SimCost::m1(1024), &ca).plan;
     assert_eq!(scalar, Plan::parse("R4,R2,R4,R4,F8").unwrap());
-    let batched = run_plan(
-        &mut BatchedCost::new(SimCost::m1(1024), 16),
-        &Strategy::DijkstraContextAware { k: 1 },
-    )
-    .plan;
+    let batched = plan_surface(&mut SimCost::m1(1024), &ca, b16).plan;
     assert_ne!(batched, scalar, "batch axis invisible to planning at n=1024");
     assert_eq!(batched.edges()[0], EdgeType::F8, "expected a leading fused block, got {batched}");
 
     // n=256: scalar ends in a terminal F16; the batched surface drops
     // fused blocks entirely (radix passes amortize their round trips).
-    let scalar = run_plan(&mut SimCost::m1(256), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let scalar = run_plan(&mut SimCost::m1(256), &ca).plan;
     assert_eq!(scalar, Plan::parse("R4,R4,F16").unwrap());
-    let batched = run_plan(
-        &mut BatchedCost::new(SimCost::m1(256), 16),
-        &Strategy::DijkstraContextAware { k: 1 },
-    )
-    .plan;
+    let batched = plan_surface(&mut SimCost::m1(256), &ca, b16).plan;
     assert_ne!(batched, scalar, "batch axis invisible to planning at n=256");
     assert!(
         batched.edges().iter().all(|e| !e.is_fused()),
@@ -237,13 +232,10 @@ fn batched_wisdom_tables_reproduce_the_batched_plan() {
     // the replay gives the same arrangement as planning over the live
     // surface — the offline-prior path (`calibrate`, `wisdom --export
     // --batch B`) carries the batch axis faithfully.
-    let live = run_plan(
-        &mut BatchedCost::new(SimCost::m1(1024), 16),
-        &Strategy::DijkstraContextAware { k: 1 },
-    )
-    .plan;
+    let ca = Strategy::DijkstraContextAware { k: 1 };
+    let live =
+        plan_surface(&mut SimCost::m1(1024), &ca, PlanningSurface::forward().with_batch(16)).plan;
     let w16 = spfft::cost::Wisdom::harvest_batched(&mut SimCost::m1(1024), "m1", 16);
-    let replayed =
-        run_plan(&mut w16.to_cost(), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let replayed = run_plan(&mut w16.to_cost(), &ca).plan;
     assert_eq!(replayed, live);
 }
