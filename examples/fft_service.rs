@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
+        observer: None,
     })?;
 
     // 3. Mixed workload: random sizes, occasional validation.

@@ -30,6 +30,7 @@ fn main() {
             coalesce: Default::default(),
             queue_depth: 512,
             autotune: None,
+            observer: None,
         })
         .expect("service");
         let t0 = Instant::now();

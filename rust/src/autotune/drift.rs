@@ -46,6 +46,23 @@ pub struct DriftReport {
     pub worst: Option<(EdgeType, usize, Context)>,
 }
 
+impl DriftReport {
+    /// One-line human summary (`spfft obs` and log lines).
+    pub fn summary(&self) -> String {
+        let worst = match &self.worst {
+            Some((e, s, ctx)) => format!(", worst {e}@{s} in {ctx}"),
+            None => String::new(),
+        };
+        format!(
+            "{}: {}/{} cells over, max dev {:.1}%{worst}",
+            if self.drifted { "drifted" } else { "stable" },
+            self.cells_over,
+            self.cells_checked,
+            100.0 * self.max_rel_dev
+        )
+    }
+}
+
 /// Compares live observations against the searched-under reference.
 /// Kind-aware implicitly: [`OnlineCost::observed_cells`] returns the
 /// *focus kind's* observation slots, so a detector over a model tuned

@@ -120,6 +120,12 @@ pub struct AutotuneConfig {
     pub cache: Option<Arc<PlanCache>>,
     /// Bound on in-flight sample batches (hot path drops beyond it).
     pub sample_queue_depth: usize,
+    /// When set, the re-planner records its decision trail (drift →
+    /// replan → swap/declined, with before/after plans and believed
+    /// costs) into this observer's flight recorder. The service layer
+    /// injects its own observer here when `ServiceConfig::observer` is
+    /// set and this is `None`.
+    pub observer: Option<Arc<crate::obs::Observer>>,
 }
 
 impl AutotuneConfig {
@@ -142,6 +148,7 @@ impl AutotuneConfig {
             wisdom_path: None,
             cache: None,
             sample_queue_depth: 256,
+            observer: None,
         }
     }
 }
@@ -168,6 +175,7 @@ impl fmt::Debug for AutotuneConfig {
             .field("mode", &self.mode)
             .field("wisdom_path", &self.wisdom_path)
             .field("sample_queue_depth", &self.sample_queue_depth)
+            .field("observer", &self.observer.is_some())
             .finish()
     }
 }

@@ -154,14 +154,23 @@ impl OnlineCost {
     }
 
     /// The prior consulted at `class`: its own batched prior when
-    /// installed, the unbatched prior otherwise.
+    /// installed, the unbatched prior otherwise. Boundary-context cells
+    /// (`After(RU)`) missing from the prior — legacy wisdom files
+    /// predate them as stored cells — fall back to the historical
+    /// after-R2 proxy cell.
     pub fn prior_at(&self, cell: Cell, class: usize) -> Option<f64> {
         if class > 0 {
             if let Some(&p) = self.class_priors.get(&(cell, class)) {
                 return Some(p);
             }
         }
-        self.prior.get(&cell).copied()
+        if let Some(&p) = self.prior.get(&cell) {
+            return Some(p);
+        }
+        if cell.2 == Context::After(EdgeType::RU) {
+            return self.prior_at((cell.0, cell.1, Context::After(EdgeType::R2)), class);
+        }
+        None
     }
 
     /// Fold one live sample into its (kind, cell, batch class),
@@ -590,9 +599,36 @@ mod tests {
     #[test]
     fn export_covers_every_prior_cell() {
         let model = m1_model(1024);
-        // 37 positional (edge, stage) pairs x 7 contexts (wisdom tests)
-        assert_eq!(model.export_cells().len(), 37 * 7);
+        // 37 positional (edge, stage) pairs x 8 contexts (wisdom tests)
+        assert_eq!(model.export_cells().len(), 37 * 8);
         assert_eq!(model.total_samples(), 0);
+    }
+
+    #[test]
+    fn legacy_priors_answer_boundary_context_via_the_r2_proxy() {
+        // A prior harvested before the boundary context became a stored
+        // cell (7-context files) must still answer After(RU) queries —
+        // via the historical after-R2 proxy cell, not a panic.
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let legacy = Wisdom {
+            n: w.n,
+            source: w.source.clone(),
+            cells: w
+                .cells
+                .iter()
+                .filter(|c| c.2 != Context::After(EdgeType::RU))
+                .cloned()
+                .collect(),
+        };
+        let model = OnlineCost::from_wisdom(&legacy, 0.5, 4.0);
+        let cell = (EdgeType::R4, 0, Context::After(EdgeType::RU));
+        let proxy = (EdgeType::R4, 0, Context::After(EdgeType::R2));
+        assert_eq!(model.prior_at(cell, 0), model.prior_at(proxy, 0));
+        assert!(model.estimate(cell).is_finite());
+        // a full (8-context) prior answers the boundary cell natively
+        let full = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        let native = SimCost::m1(256).edge_ns(EdgeType::R4, 0, Context::After(EdgeType::RU));
+        assert_eq!(full.prior_at(cell, 0), Some(native));
     }
 
     #[test]

@@ -300,6 +300,15 @@ fn run_loop(
         }
         if report.drifted {
             counters.drift_events.fetch_add(1, Ordering::Relaxed);
+            if let Some(obs) = &config.observer {
+                obs.record_now(crate::obs::EventKind::Drift {
+                    checks: counters.drift_checks.load(Ordering::Relaxed),
+                    cells_checked: report.cells_checked,
+                    cells_over: report.cells_over,
+                    max_rel_dev: report.max_rel_dev,
+                    worst: report.worst,
+                });
+            }
         }
         model.set_focus_class(modal);
         counters.focus_class.store(modal as u64, Ordering::Relaxed);
@@ -312,12 +321,20 @@ fn run_loop(
         let graph = PlanningGraph::new(l, surface, model.available_edges());
         let result = graph.shortest_path(&mut model);
         counters.replans.fetch_add(1, Ordering::Relaxed);
+        if let Some(obs) = &config.observer {
+            obs.record_now(crate::obs::EventKind::Replan {
+                kind: config.kind,
+                class: modal,
+                plan: result.plan.clone(),
+                cost_ns: result.cost_ns,
+            });
+        }
         let current = slot.current();
         let current_cost = graph.plan_objective_ns(&mut model, &current.plan);
         if result.plan != current.plan
             && result.cost_ns < current_cost * (1.0 - config.hysteresis)
         {
-            slot.swap(result.plan.clone(), result.cost_ns);
+            let version = slot.swap(result.plan.clone(), result.cost_ns);
             counters
                 .last_swap_latency_ns
                 .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -325,6 +342,23 @@ fn run_loop(
             if let Some(cache) = &config.cache {
                 cache.swap(n, "autotune", &config.prior.source, result.plan.clone());
             }
+            if let Some(obs) = &config.observer {
+                obs.record_now(crate::obs::EventKind::Swap {
+                    version,
+                    old_plan: current.plan.clone(),
+                    // believed cost of the *outgoing* plan under the same
+                    // model/surface the incoming plan was searched with
+                    old_cost_ns: current_cost,
+                    new_plan: result.plan.clone(),
+                    new_cost_ns: result.cost_ns,
+                });
+            }
+        } else if let Some(obs) = &config.observer {
+            obs.record_now(crate::obs::EventKind::SwapDeclined {
+                plan: result.plan.clone(),
+                cost_ns: result.cost_ns,
+                current_cost_ns: current_cost,
+            });
         }
         // Either we swapped (reference = weights the new plan was searched
         // under) or we declined (accept the new weights as the operating

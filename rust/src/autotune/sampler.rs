@@ -35,6 +35,13 @@ pub struct EdgeSample {
     pub ns: f64,
 }
 
+impl EdgeSample {
+    /// Per-transform nanoseconds (`ns` normalized by the batch width).
+    pub fn per_transform_ns(&self) -> f64 {
+        self.ns / self.batch.max(1) as f64
+    }
+}
+
 /// Where sample values come from.
 ///
 /// `Wallclock` reports measured per-edge execution time — the production

@@ -150,6 +150,19 @@ fn report() {
         );
     }
 
+    println!("\n=== boundary (RU) context cells (M1 sim, c2c half n=512) ===");
+    let mut half = SimCost::m1(n / 2);
+    for (e, s) in [(EdgeType::R2, 0usize), (EdgeType::R4, 0), (EdgeType::F8, 6)] {
+        let after_ru = half.edge_ns(e, s, Context::After(EdgeType::RU));
+        let cold = half.edge_ns(e, s, Context::Start);
+        println!(
+            "  {:<4}@{s}: after-RU {:>8.0} ns  vs isolated {:>8.0} ns",
+            e.name(),
+            after_ru,
+            cold
+        );
+    }
+
     println!("\n=== Table 3: arrangements (M1 sim, steady-state contextual) ===");
     let mut rows: Vec<(String, Plan)> = table3_arrangements()
         .into_iter()

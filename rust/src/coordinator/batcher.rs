@@ -345,6 +345,23 @@ impl<K: Eq + Hash + Copy, T> CoalesceState<K, T> {
         key: impl Fn(&T) -> K,
         enqueued: impl Fn(&T) -> Instant,
     ) -> Vec<ReadyGroup<K, T>> {
+        self.admit_with(batch, now, key, enqueued, |_, _, _| {})
+    }
+
+    /// [`admit`](Self::admit) with a hold observer: `on_hold(key, size,
+    /// windows)` fires each time a group (or singleton) is decided *held*
+    /// for another pull window — `windows` is the hold count including
+    /// this one. Groups that merely age through an empty pull do not
+    /// re-fire; the flight recorder gets one event per hold decision on
+    /// admitted traffic.
+    pub fn admit_with(
+        &mut self,
+        batch: Vec<T>,
+        now: Instant,
+        key: impl Fn(&T) -> K,
+        enqueued: impl Fn(&T) -> Instant,
+        mut on_hold: impl FnMut(&K, usize, u32),
+    ) -> Vec<ReadyGroup<K, T>> {
         let backlog = batch.len();
         let groups = group_by_key(batch, &key);
         if !self.policy.enabled() {
@@ -381,7 +398,7 @@ impl<K: Eq + Hash + Copy, T> CoalesceState<K, T> {
             } else {
                 Held { key: k, items, windows: 0, since: now, gained: 0, was_singleton: false }
             };
-            self.decide(entry, now, backlog, &enqueued, &mut ready);
+            self.decide(entry, now, backlog, &enqueued, &mut on_hold, &mut ready);
         }
         ready
     }
@@ -393,6 +410,7 @@ impl<K: Eq + Hash + Copy, T> CoalesceState<K, T> {
         now: Instant,
         backlog: usize,
         enqueued: &impl Fn(&T) -> Instant,
+        on_hold: &mut impl FnMut(&K, usize, u32),
         ready: &mut Vec<ReadyGroup<K, T>>,
     ) {
         let size = entry.items.len();
@@ -409,6 +427,7 @@ impl<K: Eq + Hash + Copy, T> CoalesceState<K, T> {
             ready.push(entry.into_ready(now, FlushReason::ShallowQueue));
         } else {
             entry.windows += 1;
+            on_hold(&entry.key, size, entry.windows);
             if size == 1 {
                 entry.was_singleton = true;
                 self.singles.push(entry);
@@ -698,6 +717,47 @@ mod tests {
         let g = &ready[0];
         assert!(g.paired_singletons);
         assert_eq!(g.items.iter().map(|i| i.1).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn admit_with_reports_each_hold_decision() {
+        let base = Instant::now();
+        let mut c = coalescer(3, 4, 50);
+        let mut holds: Vec<(usize, usize, u32)> = Vec::new();
+        // deep pull: an under-filled pair is held (hook fires, window 1)
+        let ready = c.admit_with(
+            vec![(64, 0, base), (64, 1, base)],
+            base,
+            |i| i.0,
+            |i| i.2,
+            |k, size, w| holds.push((*k, size, w)),
+        );
+        assert!(ready.is_empty());
+        assert_eq!(holds, vec![(64, 2, 1)]);
+        // an empty pull only ages it: no new hold decision
+        let t1 = base + Duration::from_micros(300);
+        assert!(c
+            .admit_with(vec![], t1, |i| i.0, |i| i.2, |k, size, w| holds.push((*k, size, w)))
+            .is_empty());
+        assert_eq!(holds.len(), 1);
+        // a same-key arrival merges and is re-held: second decision,
+        // merged size, window count including this one
+        let t2 = base + Duration::from_micros(600);
+        let ready = c.admit_with(
+            vec![(64, 2, t2)],
+            t2,
+            |i| i.0,
+            |i| i.2,
+            |k, size, w| holds.push((*k, size, w)),
+        );
+        assert!(ready.is_empty());
+        assert_eq!(holds, vec![(64, 2, 1), (64, 3, 3)]);
+        // plain admit still behaves identically (delegates with a no-op)
+        let t3 = base + Duration::from_micros(900);
+        let ready = admit(&mut c, vec![(64, 3, t3)], t3);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].reason, FlushReason::Filled);
         assert!(c.is_empty());
     }
 

@@ -432,4 +432,62 @@ mod tests {
         let s = m.snapshot();
         assert!((s.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
     }
+
+    #[test]
+    fn concurrent_updates_keep_snapshots_consistent() {
+        // Snapshots taken while writers hammer the sink must stay
+        // internally consistent: counters monotone across successive
+        // snapshots, decompositions never overtaking their totals
+        // (`snapshot` reads the per-kind splits *before* `completed`,
+        // and every writer increments `completed` first), and the final
+        // post-join snapshot exact.
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..2000u64 {
+                        m.on_submit();
+                        let kind = crate::kind::ALL_KINDS[(i % 4) as usize];
+                        m.on_complete_kind(kind, Duration::from_nanos(100 + i));
+                        if i % 3 == 0 {
+                            m.on_group((i % 7 + 1) as usize);
+                        }
+                        if i % 5 == 0 {
+                            m.on_coalesce_flush(Duration::from_nanos(i), i % 2 == 0, false);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut last = m.snapshot();
+        while !writers.iter().all(|h| h.is_finished()) {
+            let s = m.snapshot();
+            assert!(s.submitted >= last.submitted, "submitted went backwards");
+            assert!(s.completed >= last.completed, "completed went backwards");
+            assert!(s.groups >= last.groups, "groups went backwards");
+            assert!(s.coalesced_flushes >= last.coalesced_flushes, "flushes went backwards");
+            assert!(
+                s.completed_by_kind.iter().sum::<u64>() <= s.completed,
+                "per-kind splits overtook the completed total"
+            );
+            assert!(s.latency_p50 <= s.latency_p95);
+            assert!(s.latency_p95 <= s.latency_p99);
+            assert!(s.latency_p99 <= s.latency_max);
+            last = s;
+        }
+        for h in writers {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 8000);
+        assert_eq!(s.completed, 8000);
+        assert_eq!(s.completed_by_kind, [2000, 2000, 2000, 2000]);
+        assert_eq!(s.groups, 4 * 667);
+        assert_eq!(s.coalesced_flushes, 4 * 400);
+        assert_eq!(s.coalesce_hits, 4 * 200);
+        assert_eq!(s.group_size_hist.iter().sum::<u64>(), s.groups);
+        assert_eq!(s.latency_max, Duration::from_nanos(2099));
+    }
 }

@@ -31,16 +31,17 @@
 //! under version `v`, so a hot swap can never corrupt an in-flight
 //! request.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::autotune::{trace_batch, trace_request, Autotuner, AutotuneConfig, AutotuneStatus};
 use crate::fft::{BatchBufferPool, Executor, SplitComplex};
 use crate::kind::TransformKind;
+use crate::obs::{EventKind, Observer, StageTime};
 use crate::plan::Plan;
 
 use super::batcher::{collect_batch_until, BatchPolicy, CoalescePolicy, CoalesceState, ReadyGroup};
@@ -81,9 +82,21 @@ pub struct ServiceConfig {
     /// Online autotuning for the size matching `autotune.prior.n`
     /// (native backend only); `None` serves the startup plans forever.
     pub autotune: Option<AutotuneConfig>,
+    /// Structured observability: when set, every layer records typed
+    /// events into this observer's flight recorder (submit, coalesce
+    /// hold/flush, group formation, per-request latency spans) and
+    /// traced groups feed the per-edge attribution table. The same
+    /// observer is injected into the autotuner (unless
+    /// `AutotuneConfig::observer` is already set) so the drift → replan
+    /// → swap audit trail interleaves with the serving events. `None`
+    /// costs nothing on the request path.
+    pub observer: Option<Arc<Observer>>,
 }
 
 struct Request {
+    /// Submit-order id correlating `Submit` and `RequestDone` events
+    /// (assigned whether or not an observer is configured).
+    id: u64,
     n: usize,
     kind: TransformKind,
     input: SplitComplex,
@@ -99,6 +112,8 @@ pub struct FftService {
     accepting: Arc<AtomicBool>,
     sizes: Vec<usize>,
     autotuner: Option<Arc<Autotuner>>,
+    observer: Option<Arc<Observer>>,
+    next_request: AtomicU64,
 }
 
 impl FftService {
@@ -128,7 +143,14 @@ impl FftService {
                     .ok_or_else(|| {
                         anyhow!("autotune prior is for n={}, which has no configured plan", at.prior.n)
                     })?;
-                Some(Arc::new(Autotuner::start(at.clone(), initial)))
+                let mut at = at.clone();
+                // The service's observer doubles as the autotuner's, so
+                // the drift → replan → swap audit trail lands in the
+                // same flight recorder as the serving events.
+                if at.observer.is_none() {
+                    at.observer = config.observer.clone();
+                }
+                Some(Arc::new(Autotuner::start(at, initial)))
             }
         };
         let metrics = Arc::new(Metrics::new());
@@ -156,6 +178,8 @@ impl FftService {
             accepting,
             sizes: config.plans.iter().map(|(n, _)| *n).collect(),
             autotuner,
+            observer: config.observer.clone(),
+            next_request: AtomicU64::new(0),
         })
     }
 
@@ -190,10 +214,15 @@ impl FftService {
             );
         }
         let (reply_tx, reply_rx) = sync_channel(1);
-        let req = Request { n, kind, input, enqueued: Instant::now(), reply: reply_tx };
+        let id = self.next_request.fetch_add(1, Ordering::Relaxed);
+        let enqueued = Instant::now();
+        let req = Request { id, n, kind, input, enqueued, reply: reply_tx };
         match self.tx.as_ref().unwrap().try_send(req) {
             Ok(()) => {
                 self.metrics.on_submit();
+                if let Some(obs) = &self.observer {
+                    obs.record_at(enqueued, EventKind::Submit { req: id, kind, n });
+                }
                 Ok(reply_rx)
             }
             Err(TrySendError::Full(_)) => {
@@ -218,6 +247,11 @@ impl FftService {
 
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The configured observer, when observability is on.
+    pub fn observer(&self) -> Option<&Arc<Observer>> {
+        self.observer.as_ref()
     }
 
     /// Autotuning status, when autotuning is configured.
@@ -309,10 +343,14 @@ impl WorkerBackend {
         &mut self,
         key: (TransformKind, usize),
         group: Vec<Request>,
+        held_age: Duration,
         tuner: Option<&Autotuner>,
         metrics: &Metrics,
+        obs: Option<&Observer>,
     ) {
         let (kind, n) = key;
+        let group_size = group.len();
+        let exec_start = Instant::now();
         match self {
             WorkerBackend::Native { compiled, pool, .. } => {
                 let Some(cp) = compiled
@@ -334,33 +372,55 @@ impl WorkerBackend {
                     .filter(|t| n == t.n() && !kind.is_real() && t.sampler().should_sample());
                 if group.len() == 1 {
                     let req = group.into_iter().next().unwrap();
+                    let mut stages: Vec<StageTime> = Vec::new();
                     let out = match sampling {
                         Some(t) => {
                             let mut samples = Vec::with_capacity(cp.steps().len());
                             let out = trace_request(cp, &req.input, t.mode(), &mut samples);
+                            if let Some(o) = obs {
+                                o.observe_samples(&samples);
+                                stages = stage_times(&samples);
+                            }
                             t.sampler().submit(samples);
                             out
                         }
                         None => cp.run_on(&req.input),
                     };
-                    metrics.on_complete_kind(kind, req.enqueued.elapsed());
+                    let now = Instant::now();
+                    metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
+                    if let Some(o) = obs {
+                        record_request_done(
+                            o, &req, group_size, held_age, exec_start, now, stages,
+                        );
+                    }
                     let _ = req.reply.send(Ok(out));
                     return;
                 }
                 let mut buf = pool.acquire(n, group.len());
                 let inputs: Vec<&SplitComplex> = group.iter().map(|r| &r.input).collect();
                 buf.gather(&inputs);
+                let mut stages: Vec<StageTime> = Vec::new();
                 match sampling {
                     Some(t) => {
                         let mut samples = Vec::with_capacity(cp.steps().len());
                         trace_batch(cp, &mut buf, t.mode(), &mut samples);
+                        if let Some(o) = obs {
+                            o.observe_samples(&samples);
+                            stages = stage_times(&samples);
+                        }
                         t.sampler().submit(samples);
                     }
                     None => cp.run_batch(&mut buf),
                 }
                 for (lane, req) in group.into_iter().enumerate() {
                     let out = buf.scatter_lane(lane);
-                    metrics.on_complete_kind(kind, req.enqueued.elapsed());
+                    let now = Instant::now();
+                    metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
+                    if let Some(o) = obs {
+                        record_request_done(
+                            o, &req, group_size, held_age, exec_start, now, stages.clone(),
+                        );
+                    }
                     let _ = req.reply.send(Ok(out));
                 }
                 pool.release(buf);
@@ -402,7 +462,16 @@ impl WorkerBackend {
                         None => Err(anyhow!("no plan for n={n}")),
                     };
                     match &result {
-                        Ok(_) => metrics.on_complete_kind(kind, req.enqueued.elapsed()),
+                        Ok(_) => {
+                            let now = Instant::now();
+                            metrics
+                                .on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
+                            if let Some(o) = obs {
+                                record_request_done(
+                                    o, &req, group_size, held_age, exec_start, now, Vec::new(),
+                                );
+                            }
+                        }
                         Err(_) => metrics.on_failure(),
                     }
                     let _ = req.reply.send(result);
@@ -412,18 +481,88 @@ impl WorkerBackend {
     }
 }
 
+/// Per-request share of a traced group's per-stage edge timings: each
+/// whole-batch sample divides evenly across its lanes.
+fn stage_times(samples: &[crate::autotune::EdgeSample]) -> Vec<StageTime> {
+    samples.iter().map(|s| (s.edge, s.stage, s.per_transform_ns())).collect()
+}
+
+/// Record one request's completed latency span. The decomposition is
+/// computed by subtraction from two captured instants, so
+/// `queue + held + exec == total` holds exactly:
+/// exec = reply − execution start (capped at total), held = the group's
+/// coalesce hold age (capped at total − exec), queue = the remainder.
+fn record_request_done(
+    obs: &Observer,
+    req: &Request,
+    group_size: usize,
+    held_age: Duration,
+    exec_start: Instant,
+    now: Instant,
+    stages: Vec<StageTime>,
+) {
+    let total_ns = now.saturating_duration_since(req.enqueued).as_nanos() as u64;
+    let exec_ns = (now.saturating_duration_since(exec_start).as_nanos() as u64).min(total_ns);
+    let held_ns = (held_age.as_nanos() as u64).min(total_ns - exec_ns);
+    let queue_ns = total_ns - exec_ns - held_ns;
+    obs.record_at(
+        now,
+        EventKind::RequestDone {
+            req: req.id,
+            kind: req.kind,
+            n: req.n,
+            group_size,
+            queue_ns,
+            held_ns,
+            exec_ns,
+            total_ns,
+            stages,
+        },
+    );
+}
+
 /// Execute one ready (possibly coalesced) group and record its metrics.
 fn run_group(
     backend: &mut WorkerBackend,
     group: ReadyGroup<(TransformKind, usize), Request>,
     tuner: Option<&Autotuner>,
     metrics: &Metrics,
+    obs: Option<&Observer>,
 ) {
     metrics.on_group(group.items.len());
     if group.held_windows > 0 {
         metrics.on_coalesce_flush(group.held_age, group.gained > 0, group.paired_singletons);
     }
-    backend.execute_group(group.key, group.items, tuner, metrics);
+    if let Some(o) = obs {
+        let now = Instant::now();
+        let (kind, n) = group.key;
+        o.record_at(
+            now,
+            EventKind::GroupFormed {
+                kind,
+                n,
+                size: group.items.len(),
+                held_windows: group.held_windows,
+                paired_singletons: group.paired_singletons,
+            },
+        );
+        if group.held_windows > 0 {
+            o.record_at(
+                now,
+                EventKind::CoalesceFlush {
+                    kind,
+                    n,
+                    size: group.items.len(),
+                    held_windows: group.held_windows,
+                    held_age_ns: group.held_age.as_nanos() as u64,
+                    gained: group.gained,
+                    paired_singletons: group.paired_singletons,
+                    reason: format!("{:?}", group.reason),
+                },
+            );
+        }
+    }
+    backend.execute_group(group.key, group.items, group.held_age, tuner, metrics, obs);
 }
 
 fn worker_loop(
@@ -473,6 +612,7 @@ fn worker_loop(
     // compiled plans differ), and FIFO holds per key.
     let mut coalesce: CoalesceState<(TransformKind, usize), Request> =
         CoalesceState::new(config.coalesce, config.batch.max_wait);
+    let obs = config.observer.clone();
     loop {
         // Take the receiver lock only to pull one batch (the batching
         // deadline loop itself is shared with the owning Batcher). When
@@ -499,7 +639,7 @@ fn worker_loop(
         let Some(batch) = batch else {
             // Channel closed and drained: flush held work, then exit.
             for group in coalesce.flush_all(Instant::now()) {
-                run_group(&mut backend, group, tuner.as_deref(), &metrics);
+                run_group(&mut backend, group, tuner.as_deref(), &metrics, obs.as_deref());
             }
             return;
         };
@@ -513,10 +653,25 @@ fn worker_loop(
         // Same-n requests execute jointly; group order preserves arrival,
         // and under-filled groups may coalesce across pulls (an empty
         // wake-deadline pull just ages and flushes the held state).
-        let ready = coalesce.admit(batch, Instant::now(), |r| (r.kind, r.n), |r| r.enqueued);
+        let ready = coalesce.admit_with(
+            batch,
+            Instant::now(),
+            |r| (r.kind, r.n),
+            |r| r.enqueued,
+            |&(kind, n), group_len, windows| {
+                if let Some(o) = &obs {
+                    o.record_now(EventKind::CoalesceHold {
+                        kind,
+                        n,
+                        size: group_len,
+                        held_windows: windows,
+                    });
+                }
+            },
+        );
         let did_work = !ready.is_empty();
         for group in ready {
-            run_group(&mut backend, group, tuner.as_deref(), &metrics);
+            run_group(&mut backend, group, tuner.as_deref(), &metrics, obs.as_deref());
         }
         if size > 0 {
             metrics.on_batch(size, t0.elapsed());
@@ -542,6 +697,7 @@ mod tests {
             workers,
             queue_depth: 64,
             autotune: None,
+            observer: None,
         })
         .unwrap()
     }
@@ -574,6 +730,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: None,
+            observer: None,
         });
         assert!(bad.is_err());
     }
@@ -589,6 +746,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
+            observer: None,
         });
         assert!(bad.is_err());
     }
@@ -604,6 +762,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
+            observer: None,
         });
         assert!(bad.is_err());
     }
@@ -622,6 +781,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 64,
             autotune: Some(at),
+            observer: None,
         })
         .unwrap();
         for i in 0..40u64 {
@@ -680,6 +840,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 128,
             autotune: None,
+            observer: None,
         })
         .unwrap();
         let mut pending = Vec::new();
@@ -757,6 +918,7 @@ mod tests {
             workers: 1,
             queue_depth: 64,
             autotune: None,
+            observer: None,
         })
         .unwrap();
         let inputs: Vec<SplitComplex> = (0..8).map(|i| SplitComplex::random(n, i)).collect();
@@ -785,6 +947,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 1,
             autotune: None,
+            observer: None,
         })
         .unwrap();
         let mut rejected = 0;

@@ -126,13 +126,14 @@ impl PlanningSurface {
     /// kinds start cold ([`Context::Start`]); real kinds start *after
     /// the RU boundary pass* — the steady-state loop is [RU, c2c…] (C2R)
     /// or [c2c…, RU] (R2C), so the first c2c edge always runs after the
-    /// full-buffer split/unpack walk. Until RU contexts are calibrated
-    /// cells, the closest catalog proxy is after-R2 (a plain strided
-    /// pass residual) — the same proxy the executor's traces map
-    /// `After(RU)` onto.
+    /// full-buffer split/unpack walk. `After(RU)` is a first-class
+    /// catalog cell: the simulator models it (a flat residency bonus —
+    /// see `sim::params::MachineParams::after_boundary_mem`), native
+    /// calibration measures it (predecessor = the real `unpack_r2c`
+    /// walk), and wisdom harvests persist it at context index 7.
     pub fn start_context(&self) -> Context {
         if self.has_boundary() {
-            Context::After(EdgeType::R2)
+            Context::After(EdgeType::RU)
         } else {
             Context::Start
         }
@@ -240,6 +241,18 @@ pub trait CostModel {
         self.edge_ns(EdgeType::R2, 0, ctx)
     }
 
+    /// Time (ns) of the split/unpack pass executed over a batch of `b`
+    /// real transforms together (the lane-blocked `unpack_r2c_b` /
+    /// `pack_c2r_b` kernels), whole-batch ns. The default assumes no
+    /// amortization — `b` independent passes — which providers with a
+    /// real batched path override: [`SimCost`] models the lane-blocked
+    /// walk analytically (padding waste, penalty-context fade, thrash
+    /// bound — see [`crate::sim::Machine::unpack_ns_batched`]) and
+    /// [`NativeCost`] measures the batched kernel directly.
+    fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
+        b.max(1) as f64 * self.unpack_ns(ctx)
+    }
+
     /// Time (ns) of `edge` at `stage` in `ctx` executed over a batch of
     /// `b` transforms together (the lane-blocked batched kernels). The
     /// default assumes no amortization — `b` independent executions —
@@ -258,9 +271,10 @@ pub trait CostModel {
     /// default composes the per-axis methods:
     ///
     /// * [`EdgeType::RU`] (the real transforms' boundary pass) routes to
-    ///   [`CostModel::unpack_ns`] — per transform regardless of batch
-    ///   class (the pass has no batched cost model yet; its `_b` kernel
-    ///   exists but is unmeasured);
+    ///   [`CostModel::unpack_ns`] on the unbatched class and to
+    ///   [`CostModel::unpack_ns_batched`]` / batch_width` on batched
+    ///   classes — the lane-blocked `unpack_r2c_b` kernel amortizes the
+    ///   walk exactly like the batched c2c passes do;
     /// * batched classes answer
     ///   `edge_ns_batched(·, batch_width) / batch_width` — kinds share
     ///   the batched c2c surface (the kernels are literally shared);
@@ -277,6 +291,10 @@ pub trait CostModel {
         surface: PlanningSurface,
     ) -> f64 {
         if edge == EdgeType::RU {
+            if surface.batch_class > 0 {
+                let b = surface.batch_width();
+                return self.unpack_ns_batched(ctx, b) / b as f64;
+            }
             return self.unpack_ns(ctx);
         }
         if surface.batch_class > 0 {
@@ -329,6 +347,10 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
 
     fn unpack_ns(&mut self, ctx: Context) -> f64 {
         (**self).unpack_ns(ctx)
+    }
+
+    fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
+        (**self).unpack_ns_batched(ctx, b)
     }
 
     fn edge_ns_batched(&mut self, edge: EdgeType, stage: usize, ctx: Context, b: usize) -> f64 {
@@ -403,6 +425,15 @@ impl CostModel for SimCost {
     fn unpack_ns(&mut self, ctx: Context) -> f64 {
         self.machine.unpack_ns(self.n, ctx)
     }
+
+    /// Native batched model of the boundary pass (see
+    /// [`crate::sim::Machine::unpack_ns_batched`]): the lane-blocked
+    /// walk pays padding waste, fades the penalty-context excess as the
+    /// panel streams, and hits the cache-capacity thrash bound — not
+    /// linear extrapolation.
+    fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
+        self.machine.unpack_ns_batched(self.n, ctx, b)
+    }
 }
 
 /// Memoizing wrapper: caches cells, counts distinct measurements.
@@ -416,6 +447,7 @@ pub struct MemoCost<C: CostModel> {
     cache: HashMap<(EdgeType, usize, Context), f64>,
     cache_b: HashMap<(EdgeType, usize, Context, usize), f64>,
     cache_u: HashMap<Context, f64>,
+    cache_ub: HashMap<(Context, usize), f64>,
 }
 
 impl<C: CostModel> MemoCost<C> {
@@ -425,6 +457,7 @@ impl<C: CostModel> MemoCost<C> {
             cache: HashMap::new(),
             cache_b: HashMap::new(),
             cache_u: HashMap::new(),
+            cache_ub: HashMap::new(),
         }
     }
 
@@ -473,6 +506,15 @@ impl<C: CostModel> CostModel for MemoCost<C> {
         self.cache_u.insert(ctx, v);
         v
     }
+
+    fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
+        if let Some(&v) = self.cache_ub.get(&(ctx, b)) {
+            return v;
+        }
+        let v = self.inner.unpack_ns_batched(ctx, b);
+        self.cache_ub.insert((ctx, b), v);
+        v
+    }
 }
 
 /// A fixed-table cost model (used by tests and for replaying saved
@@ -493,10 +535,17 @@ impl CostModel for TableCost {
     }
 
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
-        *self
-            .cells
-            .get(&(edge, stage, ctx))
-            .unwrap_or_else(|| panic!("no cell for {edge}@{stage} {ctx}"))
+        if let Some(&v) = self.cells.get(&(edge, stage, ctx)) {
+            return v;
+        }
+        // Legacy wisdom files predate the boundary context as a stored
+        // cell; replay them with the historical after-R2 proxy.
+        if ctx == Context::After(EdgeType::RU) {
+            if let Some(&v) = self.cells.get(&(edge, stage, Context::After(EdgeType::R2))) {
+                return v;
+            }
+        }
+        panic!("no cell for {edge}@{stage} {ctx}")
     }
 }
 
@@ -602,12 +651,12 @@ mod tests {
         let mut cost = SimCost::m1(512);
         let rf = PlanningSurface::for_kind(TransformKind::RealForward);
         assert!(rf.has_boundary());
-        assert_eq!(rf.start_context(), Context::After(EdgeType::R2));
+        assert_eq!(rf.start_context(), Context::After(EdgeType::RU));
         // n = 512 → 9 c2c levels
         let ends_fused = Plan::parse("R4,R4,R2,R2,F8").unwrap();
         let ends_radix = Plan::parse("R4,R4,R2,F8,R2").unwrap();
         let base_fused: f64 = {
-            let mut ctx = Context::After(EdgeType::R2);
+            let mut ctx = Context::After(EdgeType::RU);
             let mut t = 0.0;
             for (e, s) in ends_fused.steps() {
                 t += inner.edge_ns(e, s, ctx);
@@ -638,12 +687,19 @@ mod tests {
         }
         let s = PlanningSurface::forward().with_batch(3);
         assert_eq!(s.batch_class, 2); // next power of two
-        // RU routes to unpack_ns regardless of batch class (the boundary
-        // pass has no batched cost model)
+        // RU routes to the batched unpack path on batched classes (the
+        // lane-blocked unpack_r2c_b kernel), amortized per transform
         let mut cost = SimCost::m1(512);
-        let want = SimCost::m1(512).unpack_ns(Context::After(EdgeType::R4));
+        let whole = SimCost::m1(512).unpack_ns_batched(Context::After(EdgeType::R4), 16);
         let b16 = PlanningSurface::for_kind(TransformKind::RealForward).with_batch(16);
-        assert_eq!(b16.edge_ns(&mut cost, EdgeType::RU, 9, Context::After(EdgeType::R4)), want);
+        let per_tx = b16.edge_ns(&mut cost, EdgeType::RU, 9, Context::After(EdgeType::R4));
+        assert!((per_tx - whole / 16.0).abs() < 1e-12);
+        // amortized batched RU is cheaper than the per-transform price
+        let one = SimCost::m1(512).unpack_ns(Context::After(EdgeType::R4));
+        assert!(per_tx < one, "{per_tx} vs unbatched {one}");
+        // the unbatched class still answers the scalar pass
+        let b1 = PlanningSurface::for_kind(TransformKind::RealForward);
+        assert_eq!(b1.edge_ns(&mut cost, EdgeType::RU, 9, Context::After(EdgeType::R4)), one);
     }
 
     #[test]
@@ -686,6 +742,33 @@ mod tests {
         assert_ne!(want, proxy, "memoized unpack degraded to the R2 proxy");
         // one R2 cell measured above; the unpack queries added none
         assert_eq!(m.measurements(), 1);
+    }
+
+    #[test]
+    fn default_batched_unpack_is_linear_and_sim_amortizes() {
+        // Providers without a lane-blocked unpack model (replayed v1
+        // wisdom tables) extrapolate linearly; the simulator's native
+        // path amortizes the penalty-context excess across the panel.
+        let ctx = Context::After(EdgeType::R4);
+        let mut table = Wisdom::harvest(&mut SimCost::m1(512), "m1").to_cost();
+        let one = table.unpack_ns(ctx);
+        assert_eq!(table.unpack_ns_batched(ctx, 1), one);
+        assert_eq!(table.unpack_ns_batched(ctx, 8), 8.0 * one);
+        let mut sim = SimCost::m1(512);
+        let direct = crate::sim::Machine::m1().unpack_ns_batched(512, ctx, 8);
+        assert_eq!(sim.unpack_ns_batched(ctx, 8), direct);
+        assert!(direct < 8.0 * sim.unpack_ns(ctx));
+    }
+
+    #[test]
+    fn memo_forwards_batched_unpack_to_the_inner_model() {
+        let mut m = MemoCost::new(SimCost::m1(512));
+        let ctx = Context::After(EdgeType::F8);
+        let want = SimCost::m1(512).unpack_ns_batched(ctx, 16);
+        assert_eq!(m.unpack_ns_batched(ctx, 16), want);
+        assert_eq!(m.unpack_ns_batched(ctx, 16), want);
+        // batched unpack queries stay outside the §2.5 unbatched budget
+        assert_eq!(m.measurements(), 0);
     }
 
     #[test]

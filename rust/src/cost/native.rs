@@ -30,6 +30,9 @@ pub struct NativeCost {
     buf_ru: std::cell::RefCell<Option<SplitComplex>>,
     /// Lane-blocked buffers for batched measurement, one per batch size.
     bufs_b: std::cell::RefCell<std::collections::HashMap<usize, BatchBuffer>>,
+    /// Lane-blocked 2n-point buffers for batched boundary (RU)
+    /// measurement — the batched analogue of `buf_ru`.
+    bufs_ru_b: std::cell::RefCell<std::collections::HashMap<usize, BatchBuffer>>,
     steps: std::collections::HashMap<(EdgeType, usize), CompiledStep>,
 }
 
@@ -43,6 +46,7 @@ impl NativeCost {
             buf: std::cell::RefCell::new(SplitComplex::random(n, 0xF00D)),
             buf_ru: std::cell::RefCell::new(None),
             bufs_b: std::cell::RefCell::new(std::collections::HashMap::new()),
+            bufs_ru_b: std::cell::RefCell::new(std::collections::HashMap::new()),
             steps: std::collections::HashMap::new(),
         }
     }
@@ -81,6 +85,9 @@ impl NativeCost {
     }
 
     /// The predecessor step for a context at `stage`, when one exists.
+    /// `After(RU)` never reaches here — the boundary pass has no
+    /// `CompiledStep` executor (callers special-case it onto the real
+    /// `unpack_r2c` walk).
     fn prefix_step(&mut self, ctx: Context, stage: usize) -> Option<CompiledStep> {
         match ctx {
             Context::Start => None,
@@ -92,6 +99,76 @@ impl NativeCost {
                 }
             }
         }
+    }
+
+    fn ensure_ru_buf(&self) {
+        let mut guard = self.buf_ru.borrow_mut();
+        if guard.is_none() {
+            *guard = Some(SplitComplex::random(2 * self.n, 0x2F00D));
+        }
+    }
+
+    /// Ensure a gathered 2n-point batch buffer for the boundary pass.
+    fn ensure_batch_buf_ru(&mut self, b: usize) {
+        let mut bufs = self.bufs_ru_b.borrow_mut();
+        if !bufs.contains_key(&b) {
+            let inputs: Vec<SplitComplex> = (0..b)
+                .map(|i| SplitComplex::random(2 * self.n, 0x2F00D + 1 + i as u64))
+                .collect();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            let mut buf = BatchBuffer::new(2 * self.n, b);
+            buf.gather(&refs);
+            bufs.insert(b, buf);
+        }
+    }
+
+    /// Measure `edge` with the RU boundary walk as its predecessor:
+    /// run `unpack_r2c` untimed over the full 2n buffer, then time the
+    /// c2c edge over its first-half slots — the steady-state position
+    /// of the first c2c pass of a real transform (`After(RU)` as a
+    /// measured catalog cell, not the after-R2 proxy).
+    fn edge_after_boundary_ns(&mut self, edge: EdgeType, stage: usize) -> f64 {
+        let n = self.n;
+        let timed = self.step(edge, stage);
+        let tw = real::real_twiddles(self.ex.twiddle_cache(), n);
+        self.ensure_ru_buf();
+        let buf = &self.buf_ru;
+        let mut pre_fn = || {
+            let mut guard = buf.borrow_mut();
+            let b = guard.as_mut().unwrap();
+            real::unpack_r2c(&mut b.re, &mut b.im, &tw);
+        };
+        let mut timed_fn = || {
+            let mut guard = buf.borrow_mut();
+            let b = guard.as_mut().unwrap();
+            run_step(&timed, &mut b.re[..n], &mut b.im[..n]);
+        };
+        measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
+    }
+
+    /// Batched analogue of [`NativeCost::edge_after_boundary_ns`]: the
+    /// lane-blocked `unpack_r2c_b` walk untimed over the 2n panel, then
+    /// the batched c2c edge timed over its first-half rows.
+    fn edge_after_boundary_ns_batched(&mut self, edge: EdgeType, stage: usize, b: usize) -> f64 {
+        let n = self.n;
+        let timed = self.step(edge, stage);
+        let tw = real::real_twiddles(self.ex.twiddle_cache(), n);
+        self.ensure_batch_buf_ru(b);
+        let buf = std::cell::RefCell::new(self.bufs_ru_b.borrow_mut().remove(&b).unwrap());
+        let lanes = buf.borrow().lanes();
+        let mut pre_fn = || {
+            let mut buf = buf.borrow_mut();
+            let buf = &mut *buf;
+            real::unpack_r2c_b(&mut buf.re, &mut buf.im, &tw, lanes);
+        };
+        let mut timed_fn = || {
+            let mut buf = buf.borrow_mut();
+            let buf = &mut *buf;
+            run_step_b(&timed, &mut buf.re[..n * lanes], &mut buf.im[..n * lanes], lanes);
+        };
+        let ns = measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns;
+        self.bufs_ru_b.borrow_mut().insert(b, buf.into_inner());
+        ns
     }
 }
 
@@ -105,6 +182,11 @@ impl CostModel for NativeCost {
     }
 
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        if ctx == Context::After(EdgeType::RU) {
+            // The boundary pass has no CompiledStep executor; run the
+            // real unpack walk as the untimed predecessor instead.
+            return self.edge_after_boundary_ns(edge, stage);
+        }
         let timed = self.step(edge, stage);
         // Predecessor: an edge of type `prev` that *ends* at `stage` (the
         // expanded-graph semantics) — requires stage >= prev.stages().
@@ -185,6 +267,9 @@ impl CostModel for NativeCost {
         if b <= 1 {
             return self.edge_ns(edge, stage, ctx);
         }
+        if ctx == Context::After(EdgeType::RU) {
+            return self.edge_after_boundary_ns_batched(edge, stage, b);
+        }
         let timed = self.step(edge, stage);
         let prefix = self.prefix_step(ctx, stage);
         self.ensure_batch_buf(b);
@@ -211,6 +296,48 @@ impl CostModel for NativeCost {
             }
         };
         self.bufs_b.borrow_mut().insert(b, buf.into_inner());
+        ns
+    }
+
+    /// Measure the *batched* boundary pass: time `unpack_r2c_b` over a
+    /// lane-blocked 2n panel of `b` real transforms (predecessor c2c
+    /// pass executed batched and untimed over the first-half rows, per
+    /// the same protocol as [`NativeCost::unpack_ns`]). This is the
+    /// measured side of the batched RU cost path — the lane-blocked
+    /// walk's amortization as data, not linear extrapolation.
+    fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
+        if b <= 1 {
+            return self.unpack_ns(ctx);
+        }
+        let h = self.n;
+        let l = crate::fft::log2i(h);
+        let tw = real::real_twiddles(self.ex.twiddle_cache(), h);
+        let prefix = match ctx {
+            Context::After(prev) if prev != EdgeType::RU && prev.stages() <= l => {
+                Some(self.step(prev, l - prev.stages()))
+            }
+            _ => None,
+        };
+        self.ensure_batch_buf_ru(b);
+        let buf = std::cell::RefCell::new(self.bufs_ru_b.borrow_mut().remove(&b).unwrap());
+        let lanes = buf.borrow().lanes();
+        let mut timed_fn = || {
+            let mut buf = buf.borrow_mut();
+            let buf = &mut *buf;
+            real::unpack_r2c_b(&mut buf.re, &mut buf.im, &tw, lanes);
+        };
+        let ns = match prefix {
+            None => measure(self.spec, None, &mut timed_fn).ns,
+            Some(pre) => {
+                let mut pre_fn = || {
+                    let mut buf = buf.borrow_mut();
+                    let buf = &mut *buf;
+                    run_step_b(&pre, &mut buf.re[..h * lanes], &mut buf.im[..h * lanes], lanes);
+                };
+                measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
+            }
+        };
+        self.bufs_ru_b.borrow_mut().insert(b, buf.into_inner());
         ns
     }
 }
@@ -269,6 +396,39 @@ mod tests {
         }
         // surface queries route RU to the measured path
         let s = crate::cost::PlanningSurface::for_kind(crate::kind::TransformKind::RealForward);
+        let t = c.surface_edge_ns(EdgeType::RU, 7, After(EdgeType::R4), s);
+        assert!(t > 0.0 && t.is_finite());
+    }
+
+    #[test]
+    fn after_boundary_context_is_measured_not_proxied() {
+        // After(RU) is a first-class measured cell: the predecessor is
+        // the real unpack_r2c walk over the 2n buffer (run_step would
+        // panic on a compiled RU step), then the c2c edge is timed over
+        // the first-half slots. Scalar and batched paths must both
+        // answer without panicking.
+        let mut c = NativeCost::quick(128);
+        let scalar = c.edge_ns(EdgeType::R4, 0, After(EdgeType::RU));
+        assert!(scalar > 0.0 && scalar < 1e7, "{scalar}");
+        let fused = c.edge_ns(EdgeType::F8, 4, After(EdgeType::RU));
+        assert!(fused > 0.0 && fused.is_finite());
+        let batched = c.edge_ns_batched(EdgeType::R4, 0, After(EdgeType::RU), 8);
+        assert!(batched > 0.0 && batched.is_finite());
+    }
+
+    #[test]
+    fn batched_unpack_is_measured_and_single_lane_delegates() {
+        let mut c = NativeCost::quick(128);
+        let one = c.unpack_ns(After(EdgeType::R2));
+        let delegated = c.unpack_ns_batched(After(EdgeType::R2), 1);
+        assert!(one > 0.0 && delegated > 0.0);
+        for ctx in [Start, After(EdgeType::F8), After(EdgeType::R2)] {
+            let t = c.unpack_ns_batched(ctx, 8);
+            assert!(t > 0.0 && t < 1e8, "{ctx}: {t}");
+        }
+        // surface queries route batched-class RU to the measured path
+        let s = crate::cost::PlanningSurface::for_kind(crate::kind::TransformKind::RealForward)
+            .with_batch(8);
         let t = c.surface_edge_ns(EdgeType::RU, 7, After(EdgeType::R4), s);
         assert!(t > 0.0 && t.is_finite());
     }

@@ -31,8 +31,9 @@ pub struct Wisdom {
 }
 
 impl Wisdom {
-    /// Harvest every graph cell from a cost model (all contexts, all
-    /// positional placements) — the full context-aware database.
+    /// Harvest every graph cell from a cost model (all contexts —
+    /// including the after-RU boundary context — at all positional
+    /// placements) — the full context-aware database.
     pub fn harvest<C: CostModel>(cost: &mut C, source: &str) -> Wisdom {
         Wisdom::harvest_batched(cost, source, 1)
     }
@@ -54,7 +55,7 @@ impl Wisdom {
                 if !crate::graph::edge_allowed(e, s, l) {
                     continue;
                 }
-                for ctx in Context::all() {
+                for ctx in Context::all_with_boundary() {
                     // b == 1 uses edge_ns directly so providers whose
                     // unbatched query has extra semantics (OnlineCost's
                     // focus class) keep them under plain harvest.
@@ -90,7 +91,7 @@ impl Wisdom {
                 if !crate::graph::edge_allowed(e, s, l) {
                     continue;
                 }
-                for ctx in Context::all() {
+                for ctx in Context::all_with_boundary() {
                     cells.push((e, s, ctx, cost.surface_edge_ns(e, s, ctx, surface)));
                 }
             }
@@ -211,12 +212,29 @@ mod tests {
     fn harvest_covers_the_positional_catalog() {
         let mut cost = SimCost::m1(1024);
         let w = Wisdom::harvest(&mut cost, "m1");
-        // 37 positional (edge, stage) pairs x 7 contexts
-        assert_eq!(w.cells.len(), 37 * 7);
+        // 37 positional (edge, stage) pairs x 8 contexts (catalog + the
+        // after-RU boundary context)
+        assert_eq!(w.cells.len(), 37 * 8);
         let mut hw = SimCost::haswell(1024);
         let wh = Wisdom::harvest(&mut hw, "haswell");
-        // radix-only catalog: (10 + 9 + 8) pairs x 7 contexts
-        assert_eq!(wh.cells.len(), 27 * 7);
+        // radix-only catalog: (10 + 9 + 8) pairs x 8 contexts
+        assert_eq!(wh.cells.len(), 27 * 8);
+    }
+
+    #[test]
+    fn harvest_persists_the_boundary_context_cells() {
+        use crate::edge::Context::After;
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let ru_cells: Vec<_> =
+            w.cells.iter().filter(|c| c.2 == After(EdgeType::RU)).collect();
+        assert!(!ru_cells.is_empty());
+        // the boundary context round-trips through JSON (ctx index 7)
+        let back = Wisdom::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        // and the replayed table answers After(RU) directly
+        let mut table = back.to_cost();
+        let direct = SimCost::m1(256).edge_ns(EdgeType::R2, 1, After(EdgeType::RU));
+        assert_eq!(table.edge_ns(EdgeType::R2, 1, After(EdgeType::RU)), direct);
     }
 
     #[test]

@@ -168,13 +168,20 @@ pub enum Context {
     After(EdgeType),
 }
 
-/// Number of distinct *measured-catalog* contexts: start + the 6 graph
+/// Number of distinct *graph-catalog* contexts: start + the 6 graph
 /// edge types (|T| = 7, paper §2.3). [`Context::After`]`(`[`EdgeType::RU`]`)`
-/// additionally exists at index 7 for traces and persistence (the first
-/// c2c pass of a real-inverse transform runs after the spectrum-pack
-/// step), but it is not part of the harvested catalog [`Context::all`]
-/// iterates.
+/// additionally exists at index 7 — the boundary context real-kind
+/// plans start their c2c walk in (the first c2c pass of a real
+/// transform's steady-state loop runs after the split/unpack pass) —
+/// and is measured/persisted as its own cell via
+/// [`Context::all_with_boundary`]; [`Context::all`] iterates the graph
+/// catalog only.
 pub const NUM_CONTEXTS: usize = 7;
+
+/// Catalog contexts plus the after-RU boundary context (|T| + 1 = 8):
+/// the full measured cell space since the boundary context became a
+/// calibrated cell.
+pub const NUM_CONTEXTS_WITH_BOUNDARY: usize = 8;
 
 impl Context {
     /// Compact index: 0 = start, 1.. = edge index + 1 (7 = after-RU).
@@ -193,10 +200,18 @@ impl Context {
         }
     }
 
-    /// All *measured-catalog* contexts, start first (after-RU excluded:
-    /// harvest loops measure the graph catalog only).
+    /// All *graph-catalog* contexts, start first (after-RU excluded:
+    /// the expanded graph's history digits encode catalog edges only).
     pub fn all() -> impl Iterator<Item = Context> {
         (0..NUM_CONTEXTS).map(|i| Context::from_index(i).unwrap())
+    }
+
+    /// Every measured context: the graph catalog plus the after-RU
+    /// boundary context (the context real-kind c2c walks start in).
+    /// Harvest/calibration loops iterate this so the boundary cell is a
+    /// measured quantity, not an after-R2 proxy.
+    pub fn all_with_boundary() -> impl Iterator<Item = Context> {
+        (0..NUM_CONTEXTS_WITH_BOUNDARY).map(|i| Context::from_index(i).unwrap())
     }
 }
 
@@ -274,11 +289,16 @@ mod tests {
             assert_eq!(c.index(), i);
             assert_eq!(Context::from_index(i), Some(*c));
         }
-        // after-RU exists past the measured catalog (trace/persistence
-        // only) and roundtrips; nothing exists beyond it.
+        // after-RU sits past the graph catalog at index 7 — a measured
+        // boundary cell, excluded from the graph-history contexts;
+        // nothing exists beyond it.
         assert_eq!(Context::from_index(7), Some(Context::After(EdgeType::RU)));
         assert_eq!(Context::After(EdgeType::RU).index(), 7);
         assert!(!Context::all().any(|c| c == Context::After(EdgeType::RU)));
+        let full: Vec<Context> = Context::all_with_boundary().collect();
+        assert_eq!(full.len(), NUM_CONTEXTS_WITH_BOUNDARY);
+        assert_eq!(full[..NUM_CONTEXTS], Context::all().collect::<Vec<_>>()[..]);
+        assert_eq!(*full.last().unwrap(), Context::After(EdgeType::RU));
         assert_eq!(Context::from_index(8), None);
     }
 

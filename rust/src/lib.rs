@@ -38,6 +38,12 @@
 //!   the request path, drift detection against the weights the active
 //!   plan was searched under, background re-planning, versioned hot plan
 //!   swap, and wisdom-v2 persistence (DESIGN.md §autotune);
+//! * [`obs`] — structured observability: the flight recorder (typed
+//!   event ring covering submit → coalesce → execute and the autotune
+//!   decision trail), per-request latency spans, the live per-edge
+//!   attribution table (observed vs believed ns per contextual cost
+//!   cell), and the JSON/Prometheus exporters behind `spfft serve
+//!   --metrics-out` and `spfft obs`;
 //! * [`report`] — regenerates every table and figure of the paper.
 
 pub mod autotune;
@@ -47,6 +53,7 @@ pub mod edge;
 pub mod fft;
 pub mod graph;
 pub mod kind;
+pub mod obs;
 pub mod plan;
 pub mod planner;
 pub mod report;

@@ -9,6 +9,8 @@
 //!   plan      cost one explicit plan under a cost model
 //!   profile   per-edge cost profile dump
 //!   serve     run the batched FFT service on a synthetic workload
+//!   obs       replay / validate observability artifacts (flight-recorder
+//!             dumps, metrics snapshots, Prometheus expositions)
 //!   selfcheck verify artifacts against the native reference
 
 use std::process::ExitCode;
@@ -39,6 +41,7 @@ fn main() -> ExitCode {
         "plan" => cmd_plan(rest),
         "profile" => cmd_profile(rest),
         "serve" => cmd_serve(rest),
+        "obs" => cmd_obs(rest),
         "selfcheck" => cmd_selfcheck(rest),
         "wisdom" => cmd_wisdom(rest),
         "help" | "--help" | "-h" => {
@@ -69,6 +72,7 @@ fn print_usage() {
            plan       cost an explicit plan      (--plan R4,R2,R4,R4,F8)\n\
            profile    dump the per-edge cost profile\n\
            serve      run the batched FFT service on a synthetic workload\n\
+           obs        replay/validate observability artifacts (--dump/--check/--check-prom)\n\
            selfcheck  verify PJRT artifacts vs the native reference\n\
            wisdom     export/plan-from measurement databases (FFTW-wisdom analogue)\n\n\
          common options: --n <size> --machine m1|haswell --cost sim|native\n\
@@ -428,7 +432,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("coalesce-deadline-us", "5000", "per-request latency budget while coalescing, in microseconds")
         .flag("autotune", "online autotuning (prior harvested from --cost/--machine)")
         .flag("split-kinds", "calibration split: keep per-kind autotune cells instead of folding inverse onto forward")
-        .opt("wisdom", "", "wisdom v2 file for --autotune persistence across runs");
+        .opt("wisdom", "", "wisdom v2 file for --autotune persistence across runs")
+        .opt("metrics-out", "", "write spfft.metrics.v1 JSON snapshots here (periodic + final)")
+        .opt("metrics-every-ms", "500", "snapshot period for --metrics-out, in milliseconds")
+        .opt("prom-out", "", "write a final Prometheus text exposition here")
+        .opt("obs-out", "", "write the flight-recorder dump (spfft.events.v1 JSON) here at shutdown")
+        .opt("obs-capacity", "4096", "flight-recorder ring capacity, in events");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
     let kind = parse_kind(args.get("kind"))?;
@@ -487,6 +496,18 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     } else {
         None
     };
+    let metrics_out = args.get("metrics-out").to_string();
+    let prom_out = args.get("prom-out").to_string();
+    let obs_out = args.get("obs-out").to_string();
+    // The observer is only wired when a sink asked for it, so a plain
+    // `serve` run keeps its hot path free of event recording.
+    let observer = if !(metrics_out.is_empty() && prom_out.is_empty() && obs_out.is_empty()) {
+        Some(std::sync::Arc::new(spfft::obs::Observer::new(
+            args.get_usize("obs-capacity")?.max(1),
+        )))
+    } else {
+        None
+    };
     let coalesce_windows = args.get_usize("coalesce")?;
     let coalesce = if coalesce_windows > 0 {
         spfft::coordinator::CoalescePolicy::hold(
@@ -508,8 +529,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         coalesce,
         queue_depth: 1024,
         autotune,
+        observer: observer.clone(),
     })
     .map_err(|e| CliError(format!("service: {e}")))?;
+    let live_metrics = svc.metrics();
+    let snap_every =
+        std::time::Duration::from_millis(args.get_usize("metrics-every-ms")?.max(1) as u64);
+    let mut last_snap = std::time::Instant::now();
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
@@ -523,12 +549,25 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
                 let _ = rx.recv();
             }
         }
+        if let Some(obs) = &observer {
+            if !metrics_out.is_empty() && last_snap.elapsed() >= snap_every {
+                last_snap = std::time::Instant::now();
+                write_metrics_snapshot(
+                    &metrics_out,
+                    &live_metrics.snapshot(),
+                    obs,
+                    svc.autotune_status().as_ref(),
+                    cost.as_dyn(),
+                )?;
+            }
+        }
     }
     for rx in pending {
         let _ = rx.recv();
     }
     let wall = t0.elapsed();
-    if let Some(status) = svc.autotune_status() {
+    let status = svc.autotune_status();
+    if let Some(status) = &status {
         println!(
             "autotune: plan v{} ({}), {} samples, {} drift checks, {} drift events, {} swaps",
             status.plan_version,
@@ -540,6 +579,27 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         );
     }
     let snap = svc.shutdown();
+    if let Some(obs) = &observer {
+        if !metrics_out.is_empty() {
+            write_metrics_snapshot(&metrics_out, &snap, obs, status.as_ref(), cost.as_dyn())?;
+            println!("metrics snapshot: {metrics_out}");
+        }
+        if !prom_out.is_empty() {
+            fill_believed_from(obs, cost.as_dyn());
+            let text = spfft::obs::prometheus_text(&snap, &obs.attribution().cells());
+            spfft::obs::schema_check_prometheus(&text).map_err(CliError)?;
+            std::fs::write(&prom_out, text)
+                .map_err(|e| CliError(format!("writing {prom_out}: {e}")))?;
+            println!("prometheus exposition: {prom_out}");
+        }
+        if !obs_out.is_empty() {
+            let events = obs.events();
+            let doc = spfft::obs::events_json(&events);
+            std::fs::write(&obs_out, spfft::util::json::to_string(&doc))
+                .map_err(|e| CliError(format!("writing {obs_out}: {e}")))?;
+            println!("flight recorder: {} events to {obs_out}", events.len());
+        }
+    }
     println!(
         "served {}/{} {kind} requests in {:.3}s: {:.0} req/s, mean batch {:.1}, p50 {:?} p95 {:?} p99 {:?}",
         snap.completed_by_kind[kind.index()],
@@ -560,6 +620,83 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
             snap.mean_held_age,
             snap.max_held_age,
         );
+    }
+    Ok(())
+}
+
+/// Price every attribution cell's believed cost from the serving cost
+/// model: the cell's own (kind, batch-class) planning surface answers,
+/// so residuals compare observed ns against exactly the weights the
+/// planner searched under.
+fn fill_believed_from(obs: &spfft::obs::Observer, cost: &mut dyn CostModel) {
+    obs.attribution().fill_believed(|(kind, class, stage, edge, ctx)| {
+        Some(cost.surface_edge_ns(
+            edge,
+            stage,
+            ctx,
+            PlanningSurface::for_kind(kind).with_batch_class(class),
+        ))
+    });
+}
+
+/// One validated `spfft.metrics.v1` snapshot write (periodic and final
+/// `serve --metrics-out` both come through here).
+fn write_metrics_snapshot(
+    path: &str,
+    snap: &spfft::coordinator::MetricsSnapshot,
+    obs: &spfft::obs::Observer,
+    status: Option<&spfft::autotune::AutotuneStatus>,
+    cost: &mut dyn CostModel,
+) -> Result<(), CliError> {
+    fill_believed_from(obs, cost);
+    let doc = spfft::obs::snapshot_json(snap, &obs.attribution().cells(), status);
+    spfft::obs::schema_check_snapshot(&doc).map_err(CliError)?;
+    std::fs::write(path, spfft::util::json::to_string(&doc))
+        .map_err(|e| CliError(format!("writing {path}: {e}")))
+}
+
+fn cmd_obs(argv: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("obs", "replay / validate observability artifacts")
+        .opt("dump", "", "pretty-print a flight-recorder dump (spfft.events.v1 JSON), incl. the autotune audit trail")
+        .opt("check", "", "validate a metrics snapshot file against the spfft.metrics.v1 schema")
+        .opt("check-prom", "", "validate a Prometheus text exposition file");
+    let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
+    let dump = args.get("dump");
+    let check = args.get("check");
+    let check_prom = args.get("check-prom");
+    if dump.is_empty() && check.is_empty() && check_prom.is_empty() {
+        return Err(CliError("obs: pass --dump <file>, --check <file>, and/or --check-prom <file>".into()));
+    }
+    if !dump.is_empty() {
+        let text = std::fs::read_to_string(dump)
+            .map_err(|e| CliError(format!("reading {dump}: {e}")))?;
+        let doc =
+            spfft::util::json::parse(&text).map_err(|e| CliError(format!("{dump}: {e}")))?;
+        let events = spfft::obs::events_from_json(&doc).map_err(CliError)?;
+        print!("{}", spfft::obs::render_events(&events));
+        let trail = spfft::obs::audit_trail(&events);
+        if !trail.is_empty() {
+            println!("autotune audit trail:");
+            for line in &trail {
+                println!("  {line}");
+            }
+        }
+        println!("{} events replayed from {dump}", events.len());
+    }
+    if !check.is_empty() {
+        let text = std::fs::read_to_string(check)
+            .map_err(|e| CliError(format!("reading {check}: {e}")))?;
+        let doc =
+            spfft::util::json::parse(&text).map_err(|e| CliError(format!("{check}: {e}")))?;
+        spfft::obs::schema_check_snapshot(&doc).map_err(|e| CliError(format!("{check}: {e}")))?;
+        println!("{check}: valid spfft.metrics.v1 snapshot");
+    }
+    if !check_prom.is_empty() {
+        let text = std::fs::read_to_string(check_prom)
+            .map_err(|e| CliError(format!("reading {check_prom}: {e}")))?;
+        spfft::obs::schema_check_prometheus(&text)
+            .map_err(|e| CliError(format!("{check_prom}: {e}")))?;
+        println!("{check_prom}: valid Prometheus exposition");
     }
     Ok(())
 }

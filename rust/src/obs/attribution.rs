@@ -1,0 +1,198 @@
+//! The live per-edge attribution table: observed nanoseconds per
+//! `(kind, batch class, stage, edge, context)` cell, next to the cost
+//! model's believed value for the same cell.
+//!
+//! This is the observability face of the paper's central object — the
+//! contextual cost table. The autotuner already *learns* from traced
+//! samples; this table *accounts* for them: every sampled edge execution
+//! lands in exactly one cell, the cell keeps the raw sum of whole-batch
+//! nanoseconds (plain `+=` in feed order, so a test replaying the same
+//! trace reproduces the sums bit-exactly), and the exporters render the
+//! residual between what the service observed and what the planning
+//! surface believed ([`crate::cost::CostModel::surface_edge_ns`]).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::autotune::EdgeSample;
+use crate::cost::batch_class;
+use crate::edge::{Context, EdgeType};
+use crate::kind::TransformKind;
+
+/// Attribution cell key: (kind, batch class, stage, edge, context).
+pub type AttrKey = (TransformKind, usize, usize, EdgeType, Context);
+
+/// One attribution cell.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AttrCell {
+    /// Raw sum of observed whole-batch nanoseconds, in feed order.
+    pub observed_ns: f64,
+    /// Transforms covered (sum of batch widths across samples).
+    pub transforms: u64,
+    /// Edge samples folded in.
+    pub samples: u64,
+    /// The cost model's believed per-transform nanoseconds for this
+    /// cell's planning surface (filled by [`Attribution::fill_believed`]).
+    pub believed_ns: f64,
+    pub has_believed: bool,
+}
+
+impl AttrCell {
+    /// Observed per-transform nanoseconds (0 when nothing observed).
+    pub fn observed_per_transform(&self) -> f64 {
+        if self.transforms == 0 {
+            0.0
+        } else {
+            self.observed_ns / self.transforms as f64
+        }
+    }
+
+    /// Observed-minus-believed per-transform residual, when a believed
+    /// value has been filled in.
+    pub fn residual_ns(&self) -> Option<f64> {
+        self.has_believed.then(|| self.observed_per_transform() - self.believed_ns)
+    }
+}
+
+/// Thread-safe attribution table (one coarse lock; writes happen only on
+/// the sampled 1-in-P path, never per request).
+#[derive(Debug, Default)]
+pub struct Attribution {
+    cells: Mutex<HashMap<AttrKey, AttrCell>>,
+}
+
+impl Attribution {
+    pub fn new() -> Attribution {
+        Attribution::default()
+    }
+
+    /// The cell key a sample lands in.
+    pub fn key_of(sample: &EdgeSample) -> AttrKey {
+        (sample.kind, batch_class(sample.batch.max(1)), sample.stage, sample.edge, sample.ctx)
+    }
+
+    /// Fold one sample into its cell.
+    pub fn observe(&self, sample: &EdgeSample) {
+        let mut cells = self.cells.lock().unwrap();
+        let cell = cells.entry(Self::key_of(sample)).or_default();
+        cell.observed_ns += sample.ns;
+        cell.transforms += sample.batch.max(1) as u64;
+        cell.samples += 1;
+    }
+
+    /// Fold a traced execution's samples in, preserving their order.
+    pub fn observe_all(&self, samples: &[EdgeSample]) {
+        for s in samples {
+            self.observe(s);
+        }
+    }
+
+    /// Ask `believed` for every observed cell's model value. The
+    /// callback sees the cell key and returns per-transform ns (`None`
+    /// leaves the cell's believed value unset).
+    pub fn fill_believed(&self, mut believed: impl FnMut(AttrKey) -> Option<f64>) {
+        let mut cells = self.cells.lock().unwrap();
+        for (key, cell) in cells.iter_mut() {
+            if let Some(ns) = believed(*key) {
+                cell.believed_ns = ns;
+                cell.has_believed = true;
+            }
+        }
+    }
+
+    /// Snapshot of every cell, sorted by (kind, class, stage, edge, ctx)
+    /// index order — stable across runs for golden tests and exporters.
+    pub fn cells(&self) -> Vec<(AttrKey, AttrCell)> {
+        let mut out: Vec<(AttrKey, AttrCell)> =
+            self.cells.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect();
+        out.sort_by_key(|((kind, class, stage, edge, ctx), _)| {
+            (kind.index(), *class, *stage, edge.index(), ctx.index())
+        });
+        out
+    }
+
+    /// Observed cells count.
+    pub fn len(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, ns }
+    }
+
+    #[test]
+    fn samples_accumulate_bit_exactly_in_feed_order() {
+        let a = Attribution::new();
+        let values = [10.25f64, 3.5, 0.125, 7.75];
+        for &ns in &values {
+            a.observe(&sample(EdgeType::R4, 0, Context::Start, 1, ns));
+        }
+        let cells = a.cells();
+        assert_eq!(cells.len(), 1);
+        let (key, cell) = cells[0];
+        assert_eq!(key, (TransformKind::Forward, 0, 0, EdgeType::R4, Context::Start));
+        // bit-exact: the cell is the plain left-to-right sum
+        let want = values.iter().fold(0.0f64, |acc, &v| acc + v);
+        assert_eq!(cell.observed_ns.to_bits(), want.to_bits());
+        assert_eq!(cell.samples, 4);
+        assert_eq!(cell.transforms, 4);
+    }
+
+    #[test]
+    fn batch_width_maps_to_batch_class_and_per_transform_normalizes() {
+        let a = Attribution::new();
+        // 16-wide batch: class 4, whole-batch 1600 ns → 100 ns/transform
+        a.observe(&sample(EdgeType::F8, 5, Context::After(EdgeType::R4), 16, 1600.0));
+        let (key, cell) = a.cells()[0];
+        assert_eq!(key.1, 4);
+        assert_eq!(cell.transforms, 16);
+        assert_eq!(cell.observed_per_transform(), 100.0);
+    }
+
+    #[test]
+    fn distinct_contexts_and_kinds_are_distinct_cells() {
+        let a = Attribution::new();
+        a.observe(&sample(EdgeType::R2, 0, Context::Start, 1, 5.0));
+        a.observe(&sample(EdgeType::R2, 0, Context::After(EdgeType::R2), 1, 3.0));
+        let mut inv = sample(EdgeType::R2, 0, Context::Start, 1, 4.0);
+        inv.kind = TransformKind::Inverse;
+        a.observe(&inv);
+        assert_eq!(a.len(), 3);
+        // sorted: forward cells first (kind index), then by ctx index
+        let cells = a.cells();
+        assert_eq!(cells[0].0 .4, Context::Start);
+        assert_eq!(cells[1].0 .4, Context::After(EdgeType::R2));
+        assert_eq!(cells[2].0 .0, TransformKind::Inverse);
+    }
+
+    #[test]
+    fn believed_fill_and_residual() {
+        let a = Attribution::new();
+        a.observe(&sample(EdgeType::R4, 2, Context::Start, 1, 120.0));
+        assert_eq!(a.cells()[0].1.residual_ns(), None);
+        a.fill_believed(|(_, _, _, edge, _)| (edge == EdgeType::R4).then_some(100.0));
+        let cell = a.cells()[0].1;
+        assert!(cell.has_believed);
+        assert_eq!(cell.residual_ns(), Some(20.0));
+    }
+
+    #[test]
+    fn ru_boundary_samples_get_their_own_cell() {
+        let a = Attribution::new();
+        let mut s = sample(EdgeType::RU, 0, Context::After(EdgeType::F8), 1, 50.0);
+        s.kind = TransformKind::RealForward;
+        a.observe(&s);
+        let (key, _) = a.cells()[0];
+        assert_eq!(key.3, EdgeType::RU);
+        assert_eq!(key.0, TransformKind::RealForward);
+    }
+}

@@ -1,0 +1,1085 @@
+//! Exporters: JSON metrics snapshots, Prometheus text format, and the
+//! flight-recorder event-stream format (`spfft obs` replays it).
+//!
+//! Formats are versioned by a `schema` tag (`spfft.metrics.v1`,
+//! `spfft.events.v1`); [`schema_check_snapshot`] /
+//! [`schema_check_prometheus`] are the validation CI runs against a live
+//! `spfft serve --metrics-out` capture — a renamed or dropped field
+//! fails the check, not a downstream dashboard.
+
+use std::collections::BTreeMap;
+
+use crate::autotune::AutotuneStatus;
+use crate::coordinator::MetricsSnapshot;
+use crate::edge::{Context, EdgeType};
+use crate::kind::{TransformKind, ALL_KINDS};
+use crate::plan::Plan;
+use crate::util::json::{self, Json};
+
+use super::attribution::{AttrCell, AttrKey};
+use super::recorder::{Event, EventKind};
+
+/// Prometheus-safe context label: `start`, `after_R2`, ... `after_RU`.
+pub fn ctx_label(ctx: Context) -> String {
+    match ctx {
+        Context::Start => "start".to_string(),
+        Context::After(e) => format!("after_{}", e.name()),
+    }
+}
+
+/// Inverse of [`ctx_label`] (also accepts the `after-R2` display form).
+pub fn ctx_from_label(label: &str) -> Option<Context> {
+    if label == "start" {
+        return Some(Context::Start);
+    }
+    let rest = label.strip_prefix("after_").or_else(|| label.strip_prefix("after-"))?;
+    EdgeType::parse(rest).map(Context::After)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn s(text: impl Into<String>) -> Json {
+    Json::Str(text.into())
+}
+
+// ---------------------------------------------------------------------
+// metrics snapshot (spfft.metrics.v1)
+// ---------------------------------------------------------------------
+
+fn attribution_json(cells: &[(AttrKey, AttrCell)]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|((kind, class, stage, edge, ctx), cell)| {
+                obj(vec![
+                    ("kind", s(kind.name())),
+                    ("class", num(*class as f64)),
+                    ("stage", num(*stage as f64)),
+                    ("edge", s(edge.name())),
+                    ("ctx", s(ctx_label(*ctx))),
+                    ("observed_ns", num(cell.observed_ns)),
+                    ("transforms", num(cell.transforms as f64)),
+                    ("samples", num(cell.samples as f64)),
+                    ("observed_per_transform_ns", num(cell.observed_per_transform())),
+                    (
+                        "believed_ns",
+                        if cell.has_believed { num(cell.believed_ns) } else { Json::Null },
+                    ),
+                    ("residual_ns", cell.residual_ns().map(num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn autotune_json(status: &AutotuneStatus) -> Json {
+    obj(vec![
+        ("kind", s(status.kind.name())),
+        ("active_plan", s(status.active_plan.to_string())),
+        ("plan_version", num(status.plan_version as f64)),
+        ("predicted_ns", num(status.predicted_ns)),
+        ("plan_batch", num(status.plan_batch as f64)),
+        ("batches_ingested", num(status.batches_ingested as f64)),
+        ("samples_ingested", num(status.samples_ingested as f64)),
+        ("batches_dropped", num(status.batches_dropped as f64)),
+        ("drift_checks", num(status.drift_checks as f64)),
+        ("drift_events", num(status.drift_events as f64)),
+        ("replans", num(status.replans as f64)),
+        ("swaps", num(status.swaps as f64)),
+        ("last_swap_latency_ns", num(status.last_swap_latency_ns as f64)),
+    ])
+}
+
+/// Render one metrics snapshot (plus the attribution table and, when
+/// autotuning, the tuner status) as the versioned JSON document `spfft
+/// serve --metrics-out` writes.
+pub fn snapshot_json(
+    snap: &MetricsSnapshot,
+    attribution: &[(AttrKey, AttrCell)],
+    autotune: Option<&AutotuneStatus>,
+) -> Json {
+    let by_kind = Json::Obj(
+        ALL_KINDS
+            .iter()
+            .map(|k| (k.name().to_string(), num(snap.completed_by_kind[k.index()] as f64)))
+            .collect::<BTreeMap<_, _>>(),
+    );
+    obj(vec![
+        ("schema", s("spfft.metrics.v1")),
+        (
+            "counters",
+            obj(vec![
+                ("submitted", num(snap.submitted as f64)),
+                ("completed", num(snap.completed as f64)),
+                ("completed_by_kind", by_kind),
+                ("failed", num(snap.failed as f64)),
+                ("batches", num(snap.batches as f64)),
+                ("mean_batch_size", num(snap.mean_batch_size)),
+                ("groups", num(snap.groups as f64)),
+                ("mean_group_size", num(snap.mean_group_size)),
+                ("coalesced_flushes", num(snap.coalesced_flushes as f64)),
+                ("coalesce_hits", num(snap.coalesce_hits as f64)),
+                ("coalesce_hit_rate", num(snap.coalesce_hit_rate)),
+                ("singleton_pairings", num(snap.singleton_pairings as f64)),
+            ]),
+        ),
+        (
+            "group_size_hist",
+            Json::Arr(snap.group_size_hist.iter().map(|&c| num(c as f64)).collect()),
+        ),
+        (
+            "latency_ns",
+            obj(vec![
+                ("p50", num(snap.latency_p50.as_nanos() as f64)),
+                ("p95", num(snap.latency_p95.as_nanos() as f64)),
+                ("p99", num(snap.latency_p99.as_nanos() as f64)),
+                ("max", num(snap.latency_max.as_nanos() as f64)),
+            ]),
+        ),
+        (
+            "held_age_ns",
+            obj(vec![
+                ("mean", num(snap.mean_held_age.as_nanos() as f64)),
+                ("max", num(snap.max_held_age.as_nanos() as f64)),
+            ]),
+        ),
+        ("busy_ns", num(snap.busy.as_nanos() as f64)),
+        ("attribution", attribution_json(attribution)),
+        ("autotune", autotune.map(autotune_json).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Validate a `spfft.metrics.v1` document: schema tag, every counter and
+/// latency field present, every attribution cell fully keyed. Renaming
+/// or dropping a field is a hard error.
+pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
+    if doc.get("schema").as_str() != Some("spfft.metrics.v1") {
+        return Err(format!(
+            "schema tag mismatch: want \"spfft.metrics.v1\", got {}",
+            json::to_string(doc.get("schema"))
+        ));
+    }
+    let counters = doc.get("counters");
+    for field in [
+        "submitted",
+        "completed",
+        "failed",
+        "batches",
+        "mean_batch_size",
+        "groups",
+        "mean_group_size",
+        "coalesced_flushes",
+        "coalesce_hits",
+        "coalesce_hit_rate",
+        "singleton_pairings",
+    ] {
+        if counters.get(field).as_f64().is_none() {
+            return Err(format!("counters.{field} missing or not a number"));
+        }
+    }
+    let by_kind = counters.get("completed_by_kind");
+    for kind in ALL_KINDS {
+        if by_kind.get(kind.name()).as_f64().is_none() {
+            return Err(format!("counters.completed_by_kind.{} missing", kind.name()));
+        }
+    }
+    for field in ["p50", "p95", "p99", "max"] {
+        if doc.get("latency_ns").get(field).as_f64().is_none() {
+            return Err(format!("latency_ns.{field} missing or not a number"));
+        }
+    }
+    for field in ["mean", "max"] {
+        if doc.get("held_age_ns").get(field).as_f64().is_none() {
+            return Err(format!("held_age_ns.{field} missing or not a number"));
+        }
+    }
+    if doc.get("group_size_hist").as_arr().is_none() {
+        return Err("group_size_hist missing or not an array".to_string());
+    }
+    let cells = doc
+        .get("attribution")
+        .as_arr()
+        .ok_or_else(|| "attribution missing or not an array".to_string())?;
+    for (i, cell) in cells.iter().enumerate() {
+        let kind = cell
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| format!("attribution[{i}].kind missing"))?;
+        if TransformKind::parse(kind).is_none() {
+            return Err(format!("attribution[{i}].kind \"{kind}\" unknown"));
+        }
+        let edge =
+            cell.get("edge").as_str().ok_or_else(|| format!("attribution[{i}].edge missing"))?;
+        if EdgeType::parse(edge).is_none() {
+            return Err(format!("attribution[{i}].edge \"{edge}\" unknown"));
+        }
+        let ctx =
+            cell.get("ctx").as_str().ok_or_else(|| format!("attribution[{i}].ctx missing"))?;
+        if ctx_from_label(ctx).is_none() {
+            return Err(format!("attribution[{i}].ctx \"{ctx}\" unknown"));
+        }
+        for field in ["class", "stage", "observed_ns", "transforms", "samples"] {
+            if cell.get(field).as_f64().is_none() {
+                return Err(format!("attribution[{i}].{field} missing or not a number"));
+            }
+        }
+    }
+    // autotune is nullable but, when present, must carry its core fields
+    let at = doc.get("autotune");
+    if !matches!(at, Json::Null) {
+        for field in ["plan_version", "replans", "swaps", "drift_events"] {
+            if at.get(field).as_f64().is_none() {
+                return Err(format!("autotune.{field} missing or not a number"));
+            }
+        }
+        if at.get("active_plan").as_str().and_then(Plan::parse).is_none() {
+            return Err("autotune.active_plan missing or unparseable".to_string());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text format
+// ---------------------------------------------------------------------
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn prom_line(out: &mut String, name: &str, labels: &[(&str, String)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{}\"", prom_escape(v)));
+        }
+        out.push('}');
+    }
+    out.push_str(&format!(" {value}\n"));
+}
+
+fn prom_head(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Render a [`MetricsSnapshot`] plus the attribution table in the
+/// Prometheus text exposition format.
+pub fn prometheus_text(snap: &MetricsSnapshot, attribution: &[(AttrKey, AttrCell)]) -> String {
+    let mut out = String::new();
+    prom_head(&mut out, "spfft_submitted_total", "counter", "Requests accepted into the queue");
+    prom_line(&mut out, "spfft_submitted_total", &[], snap.submitted as f64);
+    prom_head(&mut out, "spfft_completed_total", "counter", "Requests completed, by transform kind");
+    for kind in ALL_KINDS {
+        prom_line(
+            &mut out,
+            "spfft_completed_total",
+            &[("kind", kind.name().to_string())],
+            snap.completed_by_kind[kind.index()] as f64,
+        );
+    }
+    prom_head(&mut out, "spfft_failed_total", "counter", "Requests failed or rejected");
+    prom_line(&mut out, "spfft_failed_total", &[], snap.failed as f64);
+    prom_head(&mut out, "spfft_batches_total", "counter", "Batches pulled by workers");
+    prom_line(&mut out, "spfft_batches_total", &[], snap.batches as f64);
+    prom_head(&mut out, "spfft_groups_total", "counter", "Same-(kind, n) groups executed");
+    prom_line(&mut out, "spfft_groups_total", &[], snap.groups as f64);
+    prom_head(&mut out, "spfft_group_size_hist", "gauge", "Groups per batch class (ceil-log2 size)");
+    for (class, &count) in snap.group_size_hist.iter().enumerate() {
+        prom_line(&mut out, "spfft_group_size_hist", &[("class", class.to_string())], count as f64);
+    }
+    prom_head(&mut out, "spfft_coalesced_flushes_total", "counter", "Held groups flushed");
+    prom_line(&mut out, "spfft_coalesced_flushes_total", &[], snap.coalesced_flushes as f64);
+    prom_head(&mut out, "spfft_coalesce_hits_total", "counter", "Held groups that gained members");
+    prom_line(&mut out, "spfft_coalesce_hits_total", &[], snap.coalesce_hits as f64);
+    prom_head(&mut out, "spfft_singleton_pairings_total", "counter", "Singletons paired across pulls");
+    prom_line(&mut out, "spfft_singleton_pairings_total", &[], snap.singleton_pairings as f64);
+    prom_head(&mut out, "spfft_latency_ns", "gauge", "Request latency percentiles (ns)");
+    for (q, d) in [
+        ("p50", snap.latency_p50),
+        ("p95", snap.latency_p95),
+        ("p99", snap.latency_p99),
+        ("max", snap.latency_max),
+    ] {
+        prom_line(&mut out, "spfft_latency_ns", &[("quantile", q.to_string())], d.as_nanos() as f64);
+    }
+    prom_head(&mut out, "spfft_held_age_ns", "gauge", "Coalesce hold age at flush (ns)");
+    prom_line(&mut out, "spfft_held_age_ns", &[("stat", "mean".into())], snap.mean_held_age.as_nanos() as f64);
+    prom_line(&mut out, "spfft_held_age_ns", &[("stat", "max".into())], snap.max_held_age.as_nanos() as f64);
+    prom_head(&mut out, "spfft_busy_ns_total", "counter", "Total worker busy time (ns)");
+    prom_line(&mut out, "spfft_busy_ns_total", &[], snap.busy.as_nanos() as f64);
+
+    prom_head(
+        &mut out,
+        "spfft_edge_observed_ns_total",
+        "counter",
+        "Observed whole-batch ns per (kind, class, stage, edge, ctx) attribution cell",
+    );
+    let cell_labels = |(kind, class, stage, edge, ctx): &AttrKey| {
+        vec![
+            ("kind", kind.name().to_string()),
+            ("class", class.to_string()),
+            ("stage", stage.to_string()),
+            ("edge", edge.name().to_string()),
+            ("ctx", ctx_label(*ctx)),
+        ]
+    };
+    for (key, cell) in attribution {
+        prom_line(&mut out, "spfft_edge_observed_ns_total", &cell_labels(key), cell.observed_ns);
+    }
+    prom_head(
+        &mut out,
+        "spfft_edge_transforms_total",
+        "counter",
+        "Transforms covered per attribution cell",
+    );
+    for (key, cell) in attribution {
+        prom_line(&mut out, "spfft_edge_transforms_total", &cell_labels(key), cell.transforms as f64);
+    }
+    prom_head(
+        &mut out,
+        "spfft_edge_believed_ns",
+        "gauge",
+        "Cost model's believed per-transform ns for the cell's surface",
+    );
+    prom_head(
+        &mut out,
+        "spfft_edge_residual_ns",
+        "gauge",
+        "Observed-minus-believed per-transform ns",
+    );
+    for (key, cell) in attribution {
+        if cell.has_believed {
+            prom_line(&mut out, "spfft_edge_believed_ns", &cell_labels(key), cell.believed_ns);
+            prom_line(
+                &mut out,
+                "spfft_edge_residual_ns",
+                &cell_labels(key),
+                cell.residual_ns().unwrap_or(0.0),
+            );
+        }
+    }
+    out
+}
+
+/// Validate Prometheus text output: the core metric families must be
+/// present, every sample line must parse as `name[{labels}] value`, and
+/// every attribution sample must carry the full five-label cell key.
+pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
+    let required = [
+        "spfft_submitted_total",
+        "spfft_completed_total",
+        "spfft_failed_total",
+        "spfft_batches_total",
+        "spfft_groups_total",
+        "spfft_latency_ns",
+    ];
+    for name in required {
+        if !text.lines().any(|l| !l.starts_with('#') && l.starts_with(name)) {
+            return Err(format!("required metric family {name} has no samples"));
+        }
+    }
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |what: &str| Err(format!("line {}: {what}: {line}", lineno + 1));
+        let (name_labels, value) = match line.rsplit_once(' ') {
+            Some(parts) => parts,
+            None => return err("no value"),
+        };
+        if value.parse::<f64>().is_err() {
+            return err("value is not a number");
+        }
+        let name = name_labels.split('{').next().unwrap_or("");
+        if name.is_empty() || !name.starts_with("spfft_") {
+            return err("metric name must start with spfft_");
+        }
+        if name_labels.contains('{') && !name_labels.ends_with('}') {
+            return err("unterminated label set");
+        }
+        if name == "spfft_edge_observed_ns_total" {
+            for label in ["kind=", "class=", "stage=", "edge=", "ctx="] {
+                if !name_labels.contains(label) {
+                    return err(&format!("attribution sample missing {label} label"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// event stream (spfft.events.v1)
+// ---------------------------------------------------------------------
+
+fn plan_json(p: &Plan) -> Json {
+    s(p.to_string())
+}
+
+fn worst_json(worst: &Option<(EdgeType, usize, Context)>) -> Json {
+    match worst {
+        None => Json::Null,
+        Some((e, stage, ctx)) => obj(vec![
+            ("edge", s(e.name())),
+            ("stage", num(*stage as f64)),
+            ("ctx", s(ctx_label(*ctx))),
+        ]),
+    }
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut pairs = vec![
+        ("seq", num(e.seq as f64)),
+        ("t_ns", num(e.t_ns as f64)),
+        ("type", s(e.kind.tag())),
+    ];
+    match &e.kind {
+        EventKind::Submit { req, kind, n } => {
+            pairs.push(("req", num(*req as f64)));
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+        }
+        EventKind::CoalesceHold { kind, n, size, held_windows } => {
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+            pairs.push(("size", num(*size as f64)));
+            pairs.push(("held_windows", num(*held_windows as f64)));
+        }
+        EventKind::GroupFormed { kind, n, size, held_windows, paired_singletons } => {
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+            pairs.push(("size", num(*size as f64)));
+            pairs.push(("held_windows", num(*held_windows as f64)));
+            pairs.push(("paired_singletons", Json::Bool(*paired_singletons)));
+        }
+        EventKind::CoalesceFlush {
+            kind,
+            n,
+            size,
+            held_windows,
+            held_age_ns,
+            gained,
+            paired_singletons,
+            reason,
+        } => {
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+            pairs.push(("size", num(*size as f64)));
+            pairs.push(("held_windows", num(*held_windows as f64)));
+            pairs.push(("held_age_ns", num(*held_age_ns as f64)));
+            pairs.push(("gained", num(*gained as f64)));
+            pairs.push(("paired_singletons", Json::Bool(*paired_singletons)));
+            pairs.push(("reason", s(reason.clone())));
+        }
+        EventKind::RequestDone {
+            req,
+            kind,
+            n,
+            group_size,
+            queue_ns,
+            held_ns,
+            exec_ns,
+            total_ns,
+            stages,
+        } => {
+            pairs.push(("req", num(*req as f64)));
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+            pairs.push(("group_size", num(*group_size as f64)));
+            pairs.push(("queue_ns", num(*queue_ns as f64)));
+            pairs.push(("held_ns", num(*held_ns as f64)));
+            pairs.push(("exec_ns", num(*exec_ns as f64)));
+            pairs.push(("total_ns", num(*total_ns as f64)));
+            pairs.push((
+                "stages",
+                Json::Arr(
+                    stages
+                        .iter()
+                        .map(|(e, stage, ns)| {
+                            obj(vec![
+                                ("edge", s(e.name())),
+                                ("stage", num(*stage as f64)),
+                                ("ns", num(*ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        EventKind::Drift { checks, cells_checked, cells_over, max_rel_dev, worst } => {
+            pairs.push(("checks", num(*checks as f64)));
+            pairs.push(("cells_checked", num(*cells_checked as f64)));
+            pairs.push(("cells_over", num(*cells_over as f64)));
+            pairs.push(("max_rel_dev", num(*max_rel_dev)));
+            pairs.push(("worst", worst_json(worst)));
+        }
+        EventKind::Replan { kind, class, plan, cost_ns } => {
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("class", num(*class as f64)));
+            pairs.push(("plan", plan_json(plan)));
+            pairs.push(("cost_ns", num(*cost_ns)));
+        }
+        EventKind::Swap { version, old_plan, old_cost_ns, new_plan, new_cost_ns } => {
+            pairs.push(("version", num(*version as f64)));
+            pairs.push(("old_plan", plan_json(old_plan)));
+            pairs.push(("old_cost_ns", num(*old_cost_ns)));
+            pairs.push(("new_plan", plan_json(new_plan)));
+            pairs.push(("new_cost_ns", num(*new_cost_ns)));
+        }
+        EventKind::SwapDeclined { plan, cost_ns, current_cost_ns } => {
+            pairs.push(("plan", plan_json(plan)));
+            pairs.push(("cost_ns", num(*cost_ns)));
+            pairs.push(("current_cost_ns", num(*current_cost_ns)));
+        }
+    }
+    obj(pairs)
+}
+
+/// Serialize a flight-recorder dump as the versioned event-stream
+/// document (`spfft serve --obs-out` writes it, `spfft obs --dump`
+/// replays it).
+pub fn events_json(events: &[Event]) -> Json {
+    obj(vec![
+        ("schema", s("spfft.events.v1")),
+        ("events", Json::Arr(events.iter().map(event_json).collect())),
+    ])
+}
+
+fn get_u64(v: &Json, field: &str, at: &str) -> Result<u64, String> {
+    v.get(field)
+        .as_f64()
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("{at}: {field} missing or not a number"))
+}
+
+fn get_usize(v: &Json, field: &str, at: &str) -> Result<usize, String> {
+    v.get(field).as_usize().ok_or_else(|| format!("{at}: {field} missing or not a number"))
+}
+
+fn get_f64(v: &Json, field: &str, at: &str) -> Result<f64, String> {
+    v.get(field).as_f64().ok_or_else(|| format!("{at}: {field} missing or not a number"))
+}
+
+fn get_kind(v: &Json, at: &str) -> Result<TransformKind, String> {
+    v.get("kind")
+        .as_str()
+        .and_then(TransformKind::parse)
+        .ok_or_else(|| format!("{at}: kind missing or unknown"))
+}
+
+fn get_plan(v: &Json, field: &str, at: &str) -> Result<Plan, String> {
+    v.get(field)
+        .as_str()
+        .and_then(Plan::parse)
+        .ok_or_else(|| format!("{at}: {field} missing or unparseable"))
+}
+
+/// Parse a `spfft.events.v1` document back into events.
+pub fn events_from_json(doc: &Json) -> Result<Vec<Event>, String> {
+    if doc.get("schema").as_str() != Some("spfft.events.v1") {
+        return Err(format!(
+            "schema tag mismatch: want \"spfft.events.v1\", got {}",
+            json::to_string(doc.get("schema"))
+        ));
+    }
+    let arr = doc.get("events").as_arr().ok_or("events missing or not an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let at = format!("events[{i}]");
+        let tag = v.get("type").as_str().ok_or_else(|| format!("{at}: type missing"))?;
+        let kind = match tag {
+            "submit" => EventKind::Submit {
+                req: get_u64(v, "req", &at)?,
+                kind: get_kind(v, &at)?,
+                n: get_usize(v, "n", &at)?,
+            },
+            "coalesce_hold" => EventKind::CoalesceHold {
+                kind: get_kind(v, &at)?,
+                n: get_usize(v, "n", &at)?,
+                size: get_usize(v, "size", &at)?,
+                held_windows: get_u64(v, "held_windows", &at)? as u32,
+            },
+            "group_formed" => EventKind::GroupFormed {
+                kind: get_kind(v, &at)?,
+                n: get_usize(v, "n", &at)?,
+                size: get_usize(v, "size", &at)?,
+                held_windows: get_u64(v, "held_windows", &at)? as u32,
+                paired_singletons: v.get("paired_singletons").as_bool().unwrap_or(false),
+            },
+            "coalesce_flush" => EventKind::CoalesceFlush {
+                kind: get_kind(v, &at)?,
+                n: get_usize(v, "n", &at)?,
+                size: get_usize(v, "size", &at)?,
+                held_windows: get_u64(v, "held_windows", &at)? as u32,
+                held_age_ns: get_u64(v, "held_age_ns", &at)?,
+                gained: get_usize(v, "gained", &at)?,
+                paired_singletons: v.get("paired_singletons").as_bool().unwrap_or(false),
+                reason: v
+                    .get("reason")
+                    .as_str()
+                    .ok_or_else(|| format!("{at}: reason missing"))?
+                    .to_string(),
+            },
+            "request_done" => {
+                let mut stages = Vec::new();
+                for (j, sv) in v.get("stages").as_arr().unwrap_or(&[]).iter().enumerate() {
+                    let sat = format!("{at}.stages[{j}]");
+                    let edge = sv
+                        .get("edge")
+                        .as_str()
+                        .and_then(EdgeType::parse)
+                        .ok_or_else(|| format!("{sat}: edge missing or unknown"))?;
+                    stages.push((edge, get_usize(sv, "stage", &sat)?, get_f64(sv, "ns", &sat)?));
+                }
+                EventKind::RequestDone {
+                    req: get_u64(v, "req", &at)?,
+                    kind: get_kind(v, &at)?,
+                    n: get_usize(v, "n", &at)?,
+                    group_size: get_usize(v, "group_size", &at)?,
+                    queue_ns: get_u64(v, "queue_ns", &at)?,
+                    held_ns: get_u64(v, "held_ns", &at)?,
+                    exec_ns: get_u64(v, "exec_ns", &at)?,
+                    total_ns: get_u64(v, "total_ns", &at)?,
+                    stages,
+                }
+            }
+            "drift" => {
+                let worst = match v.get("worst") {
+                    Json::Null => None,
+                    w => Some((
+                        w.get("edge")
+                            .as_str()
+                            .and_then(EdgeType::parse)
+                            .ok_or_else(|| format!("{at}: worst.edge missing or unknown"))?,
+                        get_usize(w, "stage", &at)?,
+                        w.get("ctx")
+                            .as_str()
+                            .and_then(ctx_from_label)
+                            .ok_or_else(|| format!("{at}: worst.ctx missing or unknown"))?,
+                    )),
+                };
+                EventKind::Drift {
+                    checks: get_u64(v, "checks", &at)?,
+                    cells_checked: get_usize(v, "cells_checked", &at)?,
+                    cells_over: get_usize(v, "cells_over", &at)?,
+                    max_rel_dev: get_f64(v, "max_rel_dev", &at)?,
+                    worst,
+                }
+            }
+            "replan" => EventKind::Replan {
+                kind: get_kind(v, &at)?,
+                class: get_usize(v, "class", &at)?,
+                plan: get_plan(v, "plan", &at)?,
+                cost_ns: get_f64(v, "cost_ns", &at)?,
+            },
+            "swap" => EventKind::Swap {
+                version: get_u64(v, "version", &at)?,
+                old_plan: get_plan(v, "old_plan", &at)?,
+                old_cost_ns: get_f64(v, "old_cost_ns", &at)?,
+                new_plan: get_plan(v, "new_plan", &at)?,
+                new_cost_ns: get_f64(v, "new_cost_ns", &at)?,
+            },
+            "swap_declined" => EventKind::SwapDeclined {
+                plan: get_plan(v, "plan", &at)?,
+                cost_ns: get_f64(v, "cost_ns", &at)?,
+                current_cost_ns: get_f64(v, "current_cost_ns", &at)?,
+            },
+            other => return Err(format!("{at}: unknown event type \"{other}\"")),
+        };
+        out.push(Event { seq: get_u64(v, "seq", &at)?, t_ns: get_u64(v, "t_ns", &at)?, kind });
+    }
+    Ok(out)
+}
+
+/// Pretty-print an event stream as a timeline, one event per line.
+pub fn render_events(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let t_us = e.t_ns as f64 / 1000.0;
+        let detail = match &e.kind {
+            EventKind::Submit { req, kind, n } => format!("req #{req} {kind} n={n}"),
+            EventKind::CoalesceHold { kind, n, size, held_windows } => {
+                format!("{kind} n={n} size={size} held for window {held_windows}")
+            }
+            EventKind::GroupFormed { kind, n, size, held_windows, paired_singletons } => format!(
+                "{kind} n={n} size={size} held_windows={held_windows}{}",
+                if *paired_singletons { " paired-singleton" } else { "" }
+            ),
+            EventKind::CoalesceFlush { kind, n, size, held_windows, held_age_ns, gained, reason, .. } => {
+                format!(
+                    "{kind} n={n} size={size} after {held_windows} windows \
+                     ({:.1} us held, +{gained} gained): {reason}",
+                    *held_age_ns as f64 / 1000.0
+                )
+            }
+            EventKind::RequestDone { req, kind, n, group_size, queue_ns, held_ns, exec_ns, total_ns, stages } => {
+                let stage_txt = if stages.is_empty() {
+                    String::new()
+                } else {
+                    let parts: Vec<String> = stages
+                        .iter()
+                        .map(|(e, stg, ns)| format!("{e}@{stg}={ns:.0}ns"))
+                        .collect();
+                    format!(" [{}]", parts.join(" "))
+                };
+                format!(
+                    "req #{req} {kind} n={n} group={group_size}: \
+                     {total_ns}ns = queue {queue_ns} + held {held_ns} + exec {exec_ns}{stage_txt}"
+                )
+            }
+            EventKind::Drift { checks, cells_checked, cells_over, max_rel_dev, worst } => {
+                let worst_txt = match worst {
+                    Some((e, stg, ctx)) => format!(" worst {e}@{stg} in {ctx}"),
+                    None => String::new(),
+                };
+                format!(
+                    "check #{checks}: {cells_over}/{cells_checked} cells over, \
+                     max dev {:.1}%{worst_txt}",
+                    100.0 * max_rel_dev
+                )
+            }
+            EventKind::Replan { kind, class, plan, cost_ns } => {
+                format!("{kind} class {class}: found {plan} ({cost_ns:.0} ns)")
+            }
+            EventKind::Swap { version, old_plan, old_cost_ns, new_plan, new_cost_ns } => format!(
+                "v{version}: {old_plan} ({old_cost_ns:.0} ns) -> {new_plan} ({new_cost_ns:.0} ns)"
+            ),
+            EventKind::SwapDeclined { plan, cost_ns, current_cost_ns } => format!(
+                "{plan} ({cost_ns:.0} ns) vs current ({current_cost_ns:.0} ns): under hysteresis"
+            ),
+        };
+        out.push_str(&format!("[{t_us:>12.3} us] #{:<6} {:<14} {detail}\n", e.seq, e.kind.tag()));
+    }
+    out
+}
+
+/// Extract the autotune decision audit: every drift → replan →
+/// swap/declined chain, in event order. Each returned line is one
+/// decision step; a chain renders as consecutive lines.
+pub fn audit_trail(events: &[Event]) -> Vec<String> {
+    let mut out = Vec::new();
+    for e in events {
+        match &e.kind {
+            EventKind::Drift { cells_over, cells_checked, max_rel_dev, .. } => out.push(format!(
+                "drift detected at t={} ns: {cells_over}/{cells_checked} cells over (max {:.1}%)",
+                e.t_ns,
+                100.0 * max_rel_dev
+            )),
+            EventKind::Replan { kind, class, plan, cost_ns } => out.push(format!(
+                "replanned {kind} at batch class {class}: {plan} believed {cost_ns:.0} ns"
+            )),
+            EventKind::Swap { version, old_plan, old_cost_ns, new_plan, new_cost_ns } => {
+                out.push(format!(
+                    "swapped to v{version}: {old_plan} (believed {old_cost_ns:.0} ns) -> \
+                     {new_plan} (believed {new_cost_ns:.0} ns)"
+                ))
+            }
+            EventKind::SwapDeclined { plan, cost_ns, current_cost_ns } => out.push(format!(
+                "declined swap: {plan} ({cost_ns:.0} ns) vs current {current_cost_ns:.0} ns"
+            )),
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: 10,
+            completed: 9,
+            completed_by_kind: [4, 2, 2, 1],
+            failed: 1,
+            batches: 3,
+            mean_batch_size: 3.0,
+            groups: 4,
+            mean_group_size: 2.25,
+            group_size_hist: [2, 1, 1, 0, 0, 0, 0, 0],
+            coalesced_flushes: 2,
+            coalesce_hits: 1,
+            coalesce_hit_rate: 0.5,
+            singleton_pairings: 1,
+            mean_held_age: Duration::from_micros(300),
+            max_held_age: Duration::from_micros(500),
+            busy: Duration::from_micros(900),
+            latency_p50: Duration::from_micros(10),
+            latency_p95: Duration::from_micros(40),
+            latency_p99: Duration::from_micros(80),
+            latency_max: Duration::from_micros(100),
+        }
+    }
+
+    fn sample_cells() -> Vec<(AttrKey, AttrCell)> {
+        vec![
+            (
+                (TransformKind::Forward, 0, 0, EdgeType::R4, Context::Start),
+                AttrCell {
+                    observed_ns: 120.0,
+                    transforms: 2,
+                    samples: 2,
+                    believed_ns: 55.0,
+                    has_believed: true,
+                },
+            ),
+            (
+                (TransformKind::RealForward, 2, 0, EdgeType::RU, Context::After(EdgeType::F8)),
+                AttrCell { observed_ns: 30.0, transforms: 4, samples: 1, ..Default::default() },
+            ),
+        ]
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_through_parse_and_validates() {
+        let doc = snapshot_json(&sample_snapshot(), &sample_cells(), None);
+        let text = json::to_string(&doc);
+        let parsed = json::parse(&text).unwrap();
+        schema_check_snapshot(&parsed).unwrap();
+        assert_eq!(parsed.get("counters").get("submitted").as_usize(), Some(10));
+        assert_eq!(
+            parsed.get("counters").get("completed_by_kind").get("inverse").as_usize(),
+            Some(2)
+        );
+        let cells = parsed.get("attribution").as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].get("edge").as_str(), Some("R4"));
+        assert_eq!(cells[0].get("believed_ns").as_f64(), Some(55.0));
+        assert_eq!(cells[0].get("residual_ns").as_f64(), Some(5.0));
+        assert_eq!(cells[1].get("ctx").as_str(), Some("after_F8"));
+        assert!(matches!(cells[1].get("believed_ns"), Json::Null));
+    }
+
+    #[test]
+    fn schema_check_rejects_missing_fields() {
+        let doc = snapshot_json(&sample_snapshot(), &[], None);
+        let mut text = json::to_string(&doc);
+        schema_check_snapshot(&json::parse(&text).unwrap()).unwrap();
+        // rename a counter: must fail
+        text = text.replace("\"submitted\"", "\"submitted_renamed\"");
+        let err = schema_check_snapshot(&json::parse(&text).unwrap()).unwrap_err();
+        assert!(err.contains("submitted"), "unhelpful error: {err}");
+        // wrong schema tag: must fail
+        let bad = json::parse(&json::to_string(&snapshot_json(&sample_snapshot(), &[], None))
+            .replace("spfft.metrics.v1", "spfft.metrics.v0"))
+        .unwrap();
+        assert!(schema_check_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn prometheus_text_validates_and_carries_cell_labels() {
+        let text = prometheus_text(&sample_snapshot(), &sample_cells());
+        schema_check_prometheus(&text).unwrap();
+        assert!(text.contains("spfft_submitted_total 10"));
+        assert!(text.contains("spfft_completed_total{kind=\"forward\"} 4"));
+        assert!(text.contains(
+            "spfft_edge_observed_ns_total{kind=\"forward\",class=\"0\",stage=\"0\",\
+             edge=\"R4\",ctx=\"start\"} 120"
+        ));
+        assert!(text.contains("spfft_edge_residual_ns"));
+        // the believed-less RU cell exports observed but not believed
+        assert!(text.contains("edge=\"RU\",ctx=\"after_F8\"} 30"));
+        assert!(!text.contains("spfft_edge_believed_ns{kind=\"real\""));
+    }
+
+    #[test]
+    fn prometheus_check_catches_malformed_lines() {
+        assert!(schema_check_prometheus("garbage").is_err());
+        let mut text = prometheus_text(&sample_snapshot(), &sample_cells());
+        schema_check_prometheus(&text).unwrap();
+        text.push_str("spfft_bad_line_no_value\n");
+        assert!(schema_check_prometheus(&text).is_err());
+        let stripped = prometheus_text(&sample_snapshot(), &sample_cells())
+            .replace("kind=\"forward\",class=\"0\",", "");
+        assert!(schema_check_prometheus(&stripped).is_err(), "missing cell labels not caught");
+    }
+
+    #[test]
+    fn event_stream_round_trips_every_variant() {
+        let plan = Plan::parse("R4,R4,R2,F8").unwrap();
+        let plan2 = Plan::parse("R8,F8,R2,R2").unwrap();
+        let events = vec![
+            Event {
+                seq: 0,
+                t_ns: 100,
+                kind: EventKind::Submit { req: 7, kind: TransformKind::RealInverse, n: 512 },
+            },
+            Event {
+                seq: 1,
+                t_ns: 200,
+                kind: EventKind::CoalesceHold {
+                    kind: TransformKind::Forward,
+                    n: 256,
+                    size: 2,
+                    held_windows: 1,
+                },
+            },
+            Event {
+                seq: 2,
+                t_ns: 300,
+                kind: EventKind::GroupFormed {
+                    kind: TransformKind::Forward,
+                    n: 256,
+                    size: 4,
+                    held_windows: 1,
+                    paired_singletons: true,
+                },
+            },
+            Event {
+                seq: 3,
+                t_ns: 300,
+                kind: EventKind::CoalesceFlush {
+                    kind: TransformKind::Forward,
+                    n: 256,
+                    size: 4,
+                    held_windows: 1,
+                    held_age_ns: 1500,
+                    gained: 2,
+                    paired_singletons: false,
+                    reason: "Filled".to_string(),
+                },
+            },
+            Event {
+                seq: 4,
+                t_ns: 400,
+                kind: EventKind::RequestDone {
+                    req: 7,
+                    kind: TransformKind::Forward,
+                    n: 256,
+                    group_size: 4,
+                    queue_ns: 100,
+                    held_ns: 150,
+                    exec_ns: 50,
+                    total_ns: 300,
+                    stages: vec![(EdgeType::R4, 0, 12.5), (EdgeType::F8, 5, 7.25)],
+                },
+            },
+            Event {
+                seq: 5,
+                t_ns: 500,
+                kind: EventKind::Drift {
+                    checks: 3,
+                    cells_checked: 20,
+                    cells_over: 4,
+                    max_rel_dev: 1.75,
+                    worst: Some((EdgeType::R2, 1, Context::After(EdgeType::RU))),
+                },
+            },
+            Event {
+                seq: 6,
+                t_ns: 600,
+                kind: EventKind::Replan {
+                    kind: TransformKind::Forward,
+                    class: 4,
+                    plan: plan2.clone(),
+                    cost_ns: 900.0,
+                },
+            },
+            Event {
+                seq: 7,
+                t_ns: 700,
+                kind: EventKind::Swap {
+                    version: 2,
+                    old_plan: plan.clone(),
+                    old_cost_ns: 1200.0,
+                    new_plan: plan2.clone(),
+                    new_cost_ns: 900.0,
+                },
+            },
+            Event {
+                seq: 8,
+                t_ns: 800,
+                kind: EventKind::SwapDeclined {
+                    plan: plan.clone(),
+                    cost_ns: 1000.0,
+                    current_cost_ns: 1010.0,
+                },
+            },
+        ];
+        let text = json::to_string(&events_json(&events));
+        let parsed = events_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, events);
+    }
+
+    #[test]
+    fn events_from_json_rejects_unknown_schema_and_types() {
+        let doc = json::parse(r#"{"schema":"spfft.events.v2","events":[]}"#).unwrap();
+        assert!(events_from_json(&doc).is_err());
+        let doc = json::parse(
+            r#"{"schema":"spfft.events.v1","events":[{"seq":0,"t_ns":0,"type":"mystery"}]}"#,
+        )
+        .unwrap();
+        assert!(events_from_json(&doc).unwrap_err().contains("mystery"));
+    }
+
+    #[test]
+    fn render_and_audit_trail_order_matches_events() {
+        let plan = Plan::parse("R4,R4,R2,F8").unwrap();
+        let plan2 = Plan::parse("R8,F8,R2,R2").unwrap();
+        let events = vec![
+            Event {
+                seq: 0,
+                t_ns: 100,
+                kind: EventKind::Drift {
+                    checks: 1,
+                    cells_checked: 10,
+                    cells_over: 2,
+                    max_rel_dev: 0.8,
+                    worst: None,
+                },
+            },
+            Event {
+                seq: 1,
+                t_ns: 200,
+                kind: EventKind::Replan {
+                    kind: TransformKind::Forward,
+                    class: 0,
+                    plan: plan2.clone(),
+                    cost_ns: 500.0,
+                },
+            },
+            Event {
+                seq: 2,
+                t_ns: 300,
+                kind: EventKind::Swap {
+                    version: 2,
+                    old_plan: plan,
+                    old_cost_ns: 700.0,
+                    new_plan: plan2,
+                    new_cost_ns: 500.0,
+                },
+            },
+        ];
+        let audit = audit_trail(&events);
+        assert_eq!(audit.len(), 3);
+        assert!(audit[0].starts_with("drift detected"));
+        assert!(audit[1].starts_with("replanned"));
+        assert!(audit[2].starts_with("swapped to v2"));
+        let rendered = render_events(&events);
+        assert_eq!(rendered.lines().count(), 3);
+        assert!(rendered.contains("drift"));
+        assert!(rendered.contains("R8->F8->R2->R2"));
+    }
+
+    #[test]
+    fn ctx_labels_round_trip() {
+        for ctx in Context::all_with_boundary() {
+            assert_eq!(ctx_from_label(&ctx_label(ctx)), Some(ctx));
+        }
+        assert_eq!(ctx_from_label("after-R4"), Some(Context::After(EdgeType::R4)));
+        assert_eq!(ctx_from_label("after_R16"), None);
+        assert_eq!(ctx_from_label(""), None);
+    }
+}

@@ -1,0 +1,178 @@
+//! Structured observability for the serving stack.
+//!
+//! Three pieces, all reachable through one shared [`Observer`]:
+//!
+//! * the **flight recorder** ([`FlightRecorder`]) — a bounded,
+//!   never-blocking ring of typed [`Event`]s covering the whole request
+//!   path (submit → coalesce hold → group formation → flush → per-request
+//!   latency span) and the autotuner's decision trail (drift → replan →
+//!   swap, with before/after plans and the costs the decision believed);
+//! * the **attribution table** ([`Attribution`]) — observed nanoseconds
+//!   per `(kind, batch class, stage, edge, context)` cell, accumulated
+//!   from the same traced samples the autotuner learns from, exposing
+//!   the residual against the cost model's believed `surface_edge_ns`;
+//! * the **exporters** ([`export`]) — versioned JSON snapshots
+//!   (`spfft serve --metrics-out`), a Prometheus text renderer, and the
+//!   event-stream dump `spfft obs` replays.
+//!
+//! The observer is deliberately passive: layers call `record_at` /
+//! `observe_samples` with data they already have; nothing here touches
+//! the hot path unless an observer was configured
+//! (`ServiceConfig::observer` / `AutotuneConfig::observer`). Timestamps
+//! are nanoseconds from the observer's origin [`Instant`], which the
+//! deterministic harness pins to its virtual clock's origin so event
+//! times (and therefore golden event-stream tests) are bit-stable.
+
+pub mod attribution;
+pub mod export;
+pub mod recorder;
+
+pub use attribution::{AttrCell, AttrKey, Attribution};
+pub use export::{
+    audit_trail, ctx_from_label, ctx_label, events_from_json, events_json, prometheus_text,
+    render_events, schema_check_prometheus, schema_check_snapshot, snapshot_json,
+};
+pub use recorder::{Event, EventKind, FlightRecorder, StageTime};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::autotune::EdgeSample;
+
+/// Default flight-recorder capacity when none is configured.
+pub const DEFAULT_RECORDER_CAPACITY: usize = 4096;
+
+/// The shared observability handle: one per service (and cloned into the
+/// autotuner), owning the flight recorder, the attribution table, and
+/// the request-id counter that ties Submit events to RequestDone spans.
+#[derive(Debug)]
+pub struct Observer {
+    origin: Instant,
+    recorder: FlightRecorder,
+    attribution: Attribution,
+    next_request: AtomicU64,
+}
+
+impl Observer {
+    pub fn new(capacity: usize) -> Observer {
+        Observer::with_origin(Instant::now(), capacity)
+    }
+
+    /// An observer whose `t_ns` timestamps are measured from `origin`.
+    /// The deterministic harness passes its virtual clock's origin here
+    /// so recorded times equal virtual-clock offsets exactly.
+    pub fn with_origin(origin: Instant, capacity: usize) -> Observer {
+        Observer {
+            origin,
+            recorder: FlightRecorder::new(capacity),
+            attribution: Attribution::new(),
+            next_request: AtomicU64::new(0),
+        }
+    }
+
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    /// Nanoseconds from the origin to `at` (0 for instants before it).
+    pub fn t_ns(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.origin).as_nanos() as u64
+    }
+
+    /// Allocate the next request id (Submit/RequestDone correlation key).
+    pub fn next_request_id(&self) -> u64 {
+        self.next_request.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record an event stamped at `at`; returns its sequence number.
+    pub fn record_at(&self, at: Instant, kind: EventKind) -> u64 {
+        self.recorder.record(self.t_ns(at), kind)
+    }
+
+    /// Record an event stamped now.
+    pub fn record_now(&self, kind: EventKind) -> u64 {
+        self.record_at(Instant::now(), kind)
+    }
+
+    /// The surviving events, in sequence order.
+    pub fn events(&self) -> Vec<Event> {
+        self.recorder.snapshot()
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    pub fn attribution(&self) -> &Attribution {
+        &self.attribution
+    }
+
+    /// Fold a traced execution's edge samples into the attribution
+    /// table, preserving feed order (bit-exact accumulation).
+    pub fn observe_samples(&self, samples: &[EdgeSample]) {
+        self.attribution.observe_all(samples);
+    }
+}
+
+impl Default for Observer {
+    fn default() -> Observer {
+        Observer::new(DEFAULT_RECORDER_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::{Context, EdgeType};
+    use crate::kind::TransformKind;
+    use std::time::Duration;
+
+    #[test]
+    fn request_ids_are_sequential() {
+        let obs = Observer::new(16);
+        assert_eq!(obs.next_request_id(), 0);
+        assert_eq!(obs.next_request_id(), 1);
+        assert_eq!(obs.next_request_id(), 2);
+    }
+
+    #[test]
+    fn timestamps_are_origin_relative() {
+        let origin = Instant::now();
+        let obs = Observer::with_origin(origin, 16);
+        assert_eq!(obs.t_ns(origin), 0);
+        let later = origin + Duration::from_micros(5);
+        assert_eq!(obs.t_ns(later), 5_000);
+        // instants before the origin clamp to zero rather than panic
+        assert_eq!(obs.t_ns(origin - Duration::from_micros(1)), 0);
+        obs.record_at(later, EventKind::Submit { req: 0, kind: TransformKind::Forward, n: 64 });
+        let events = obs.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].t_ns, 5_000);
+    }
+
+    #[test]
+    fn observe_samples_feeds_the_attribution_table() {
+        let obs = Observer::new(16);
+        obs.observe_samples(&[
+            EdgeSample {
+                edge: EdgeType::R4,
+                stage: 0,
+                ctx: Context::Start,
+                kind: TransformKind::Forward,
+                batch: 4,
+                ns: 400.0,
+            },
+            EdgeSample {
+                edge: EdgeType::F8,
+                stage: 2,
+                ctx: Context::After(EdgeType::R4),
+                kind: TransformKind::Forward,
+                batch: 4,
+                ns: 900.0,
+            },
+        ]);
+        assert_eq!(obs.attribution().len(), 2);
+        let cells = obs.attribution().cells();
+        assert_eq!(cells[0].1.observed_per_transform(), 100.0);
+    }
+}

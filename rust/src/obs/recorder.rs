@@ -1,0 +1,251 @@
+//! The flight recorder: a bounded ring of typed service events.
+//!
+//! Every layer of the serving stack appends [`Event`]s here — request
+//! submission, coalesce hold/flush decisions, group formation,
+//! per-request latency spans, and the autotuner's drift → replan → swap
+//! audit trail. The ring is fixed-capacity and never blocks a writer:
+//! recording claims a slot with one atomic increment and takes only
+//! that slot's lock, so concurrent writers on different slots never
+//! contend and a full ring overwrites the oldest events (flight-recorder
+//! semantics: the recent past is always available, the distant past is
+//! not).
+//!
+//! Timestamps are nanoseconds from the owning
+//! [`Observer`](super::Observer)'s origin instant, so a deterministic
+//! harness driving a virtual clock produces bit-stable `t_ns` values.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::edge::{Context, EdgeType};
+use crate::kind::TransformKind;
+use crate::plan::Plan;
+
+/// Per-stage execution time attributed to one request: (edge, stage,
+/// per-request nanoseconds). Batched groups divide each whole-batch
+/// sample evenly across their lanes.
+pub type StageTime = (EdgeType, usize, f64);
+
+/// What happened. Field units: `*_ns` are nanoseconds; `t_ns` on the
+/// enclosing [`Event`] is the recorder-origin-relative wall offset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A request entered the service queue.
+    Submit { req: u64, kind: TransformKind, n: usize },
+    /// The coalescer decided to hold an under-filled group open for
+    /// (at least) one more pull window.
+    CoalesceHold { kind: TransformKind, n: usize, size: usize, held_windows: u32 },
+    /// A same-(kind, n) group was handed to execution.
+    GroupFormed {
+        kind: TransformKind,
+        n: usize,
+        size: usize,
+        held_windows: u32,
+        paired_singletons: bool,
+    },
+    /// A group that had been held across pull windows flushed.
+    CoalesceFlush {
+        kind: TransformKind,
+        n: usize,
+        size: usize,
+        held_windows: u32,
+        held_age_ns: u64,
+        /// Members gained while held (the hold's payoff).
+        gained: usize,
+        paired_singletons: bool,
+        /// `FlushReason` as text ("Filled", "Deadline", ...).
+        reason: String,
+    },
+    /// A request completed: its end-to-end latency span, decomposed.
+    /// `queue_ns + held_ns + exec_ns == total_ns` exactly (the
+    /// decomposition is computed by subtraction, never re-measured).
+    RequestDone {
+        req: u64,
+        kind: TransformKind,
+        n: usize,
+        group_size: usize,
+        /// Waiting in the submit queue before its group was touched.
+        queue_ns: u64,
+        /// Held open by the coalescer (capped at `total_ns - exec_ns`).
+        held_ns: u64,
+        /// Gather + kernel + scatter for the group it rode in.
+        exec_ns: u64,
+        total_ns: u64,
+        /// Per-stage edge timings when the group was traced (empty for
+        /// untraced groups).
+        stages: Vec<StageTime>,
+    },
+    /// A drift check flagged the model (autotuner audit trail, step 1).
+    Drift {
+        checks: u64,
+        cells_checked: usize,
+        cells_over: usize,
+        max_rel_dev: f64,
+        worst: Option<(EdgeType, usize, Context)>,
+    },
+    /// The re-planner searched and found this plan (audit step 2).
+    Replan { kind: TransformKind, class: usize, plan: Plan, cost_ns: f64 },
+    /// The search result was published (audit step 3): before/after
+    /// plans with the costs the decision believed.
+    Swap {
+        version: u64,
+        old_plan: Plan,
+        /// Believed cost of the outgoing plan under the *current* model.
+        old_cost_ns: f64,
+        new_plan: Plan,
+        new_cost_ns: f64,
+    },
+    /// The search result did not clear the hysteresis gate (audit
+    /// step 3, declined branch).
+    SwapDeclined { plan: Plan, cost_ns: f64, current_cost_ns: f64 },
+}
+
+impl EventKind {
+    /// Stable type tag used by the JSON export and the pretty-printer.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::Submit { .. } => "submit",
+            EventKind::CoalesceHold { .. } => "coalesce_hold",
+            EventKind::GroupFormed { .. } => "group_formed",
+            EventKind::CoalesceFlush { .. } => "coalesce_flush",
+            EventKind::RequestDone { .. } => "request_done",
+            EventKind::Drift { .. } => "drift",
+            EventKind::Replan { .. } => "replan",
+            EventKind::Swap { .. } => "swap",
+            EventKind::SwapDeclined { .. } => "swap_declined",
+        }
+    }
+}
+
+/// One recorded event: a global sequence number (total order across all
+/// writers), a timestamp relative to the observer's origin, and the
+/// typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Fixed-capacity multi-writer event ring.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<Event>>>,
+    cursor: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(1);
+        FlightRecorder {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (including ones the ring has since
+    /// overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Append an event; returns its sequence number. Lock scope is one
+    /// slot; the claim itself is a single atomic increment.
+    pub fn record(&self, t_ns: u64, kind: EventKind) -> u64 {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        let mut guard = slot.lock().unwrap();
+        // A writer lapped by a faster one must not clobber the newer
+        // event: the slot only moves forward in sequence order.
+        if guard.as_ref().map_or(true, |e| e.seq < seq) {
+            *guard = Some(Event { seq, t_ns, kind });
+        }
+        seq
+    }
+
+    /// The surviving events in sequence order.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let mut out: Vec<Event> =
+            self.slots.iter().filter_map(|s| s.lock().unwrap().clone()).collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn submit(req: u64) -> EventKind {
+        EventKind::Submit { req, kind: TransformKind::Forward, n: 256 }
+    }
+
+    #[test]
+    fn records_in_sequence_order() {
+        let r = FlightRecorder::new(8);
+        for i in 0..5 {
+            assert_eq!(r.record(i * 10, submit(i)), i);
+        }
+        let events = r.snapshot();
+        assert_eq!(events.len(), 5);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.t_ns, i as u64 * 10);
+            assert_eq!(e.kind, submit(i as u64));
+        }
+        assert_eq!(r.recorded(), 5);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let r = FlightRecorder::new(4);
+        for i in 0..10 {
+            r.record(i, submit(i));
+        }
+        let events = r.snapshot();
+        assert_eq!(events.len(), 4);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(r.recorded(), 10);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let r = FlightRecorder::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.record(1, submit(0));
+        r.record(2, submit(1));
+        assert_eq!(r.snapshot().len(), 1);
+        assert_eq!(r.snapshot()[0].seq, 1);
+    }
+
+    #[test]
+    fn concurrent_writers_keep_sequence_integrity() {
+        let r = Arc::new(FlightRecorder::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    r.record(t * 1000 + i, submit(t));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.recorded(), 800);
+        let events = r.snapshot();
+        assert_eq!(events.len(), 64);
+        // the ring holds the newest 64 sequence numbers, strictly ordered
+        for w in events.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+        }
+        assert!(events.iter().all(|e| e.seq >= 800 - 64));
+    }
+}

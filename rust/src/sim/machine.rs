@@ -144,6 +144,40 @@ impl Machine {
         (mem_cyc * ctx_mult + compute_cyc) * p.ns_per_cyc()
     }
 
+    /// Simulated *whole-batch* time of the RU split/unpack pass executed
+    /// over a lane-blocked panel of `b` transforms (`unpack_r2c_b` /
+    /// `pack_c2r_b`): the batched model of [`Machine::unpack_ns`]. Per
+    /// transform the panel walk moves the same bytes (plus padding
+    /// waste below a full lane group), but the symmetric two-pointer
+    /// walk becomes a pair of `B_padded`-float contiguous runs per
+    /// logical slot — hardware prefetch streams them, so the *context
+    /// penalty's excess over unity fades as 1/B_padded* (the after-fused
+    /// *bonus* is a natural-order residual the panel walk still rides —
+    /// it is kept, not faded). A thrash term bounds the amortization
+    /// once the full 2n-point panel outgrows the streaming capacity,
+    /// exactly as for the batched c2c passes. `b = 1` is exactly
+    /// [`Machine::unpack_ns`].
+    pub fn unpack_ns_batched(&self, n: usize, ctx: Context, b: usize) -> f64 {
+        let b = b.max(1);
+        if b == 1 {
+            return self.unpack_ns(n, ctx);
+        }
+        let p = &self.params;
+        let bp = p.padded_batch(b);
+        let waste = bp as f64 / b as f64;
+        let mem_cyc = super::memory::round_trip_bytes(2 * n) * waste / p.l1_bw_bytes_cyc;
+        let compute_cyc = (n as f64 / p.lanes as f64) * p.bf.r2;
+        let ctx_mult = match ctx {
+            Context::Start => p.start_mem,
+            Context::After(prev) if prev.is_fused() => p.unpack_after_fused,
+            Context::After(_) => 1.0 + (p.start_mem - 1.0) * 0.5,
+        };
+        let ctx_mult_b =
+            if ctx_mult > 1.0 { 1.0 + (ctx_mult - 1.0) / bp as f64 } else { ctx_mult };
+        let thrash = super::memory::thrash_factor(p, 2 * n, bp);
+        b as f64 * (mem_cyc * ctx_mult_b * thrash + compute_cyc) * p.ns_per_cyc()
+    }
+
     /// Steady-state time of a full plan: every edge is costed in its true
     /// context; the first edge's context is the *last* edge of the plan
     /// (benchmark loops run the arrangement back-to-back, so in steady
@@ -273,6 +307,63 @@ mod tests {
         assert!(fused > 0.0 && fused.is_finite());
         assert!(fused < radix, "fused {fused} vs radix {radix}");
         assert!(radix < iso, "radix {radix} vs iso {iso}");
+    }
+
+    #[test]
+    fn boundary_context_cells_are_measurable_and_warm() {
+        // After(RU) is a first-class cell: finite for every catalog
+        // edge at every placement, and cheaper than the cold start for
+        // spill-free radix passes (isolation hides pressure, so
+        // spill-heavy edges are excluded from the ordering claim).
+        let m = Machine::m1();
+        for e in ALL_EDGES {
+            for s in 0..=(10 - e.stages()) {
+                let warm = m.edge_ns(1024, e, s, After(EdgeType::RU));
+                assert!(warm.is_finite() && warm > 0.0, "{e}@{s}");
+            }
+        }
+        for e in [EdgeType::R2, EdgeType::R4] {
+            for s in 0..=(10 - e.stages()) {
+                let warm = m.edge_ns(1024, e, s, After(EdgeType::RU));
+                let cold = m.edge_ns(1024, e, s, Start);
+                assert!(warm < cold, "{e}@{s}: {warm} vs cold {cold}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_unpack_at_b1_is_exactly_the_scalar_unpack() {
+        let m = Machine::m1();
+        for ctx in Context::all() {
+            assert_eq!(m.unpack_ns_batched(512, ctx, 1), m.unpack_ns(512, ctx));
+        }
+    }
+
+    #[test]
+    fn batched_unpack_amortizes_penalty_contexts_within_capacity() {
+        // A 2n-point panel at n=512, bp=8: 64 KiB — within the M1 cap.
+        let m = Machine::m1();
+        for ctx in [Start, After(EdgeType::R2), After(EdgeType::R4)] {
+            let one = m.unpack_ns(512, ctx);
+            let whole = m.unpack_ns_batched(512, ctx, 8);
+            assert!(whole < 8.0 * one, "{ctx}: {whole} vs {}", 8.0 * one);
+        }
+        // the after-fused bonus is a natural-order residual the panel
+        // walk keeps — per-transform cost never *rises* under batching
+        // at a lane multiple within capacity
+        let fused = m.unpack_ns(512, After(EdgeType::F8));
+        let fused_b = m.unpack_ns_batched(512, After(EdgeType::F8), 8);
+        assert!(fused_b <= 8.0 * fused * (1.0 + 1e-12), "{fused_b} vs {}", 8.0 * fused);
+    }
+
+    #[test]
+    fn batched_unpack_thrashes_past_capacity() {
+        // n=1024 real transform: 2n-point panels, 16 KiB per lane; 32
+        // lanes = 512 KiB — far past the 128 KiB M1 cap.
+        let m = Machine::m1();
+        let per_tx_32 = m.unpack_ns_batched(1024, Start, 32) / 32.0;
+        let per_tx_8 = m.unpack_ns_batched(1024, Start, 8) / 8.0;
+        assert!(per_tx_32 > per_tx_8, "{per_tx_32} vs {per_tx_8}");
     }
 
     #[test]

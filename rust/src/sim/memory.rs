@@ -105,6 +105,14 @@ fn context_factor_scaled(
                 p.start_mem
             }
         }
+        Context::After(EdgeType::RU) => {
+            // The boundary split/unpack pass just walked the full buffer
+            // symmetrically: every line of the c2c half is freshly
+            // resident (natural order), but no stride residual exists
+            // for any stream to ride — a flat residency bonus,
+            // independent of this pass's read stride or the panel scale.
+            p.after_boundary_mem
+        }
         Context::After(prev) => {
             if prev.is_fused() {
                 return p.after_fused_mem;
@@ -229,6 +237,23 @@ mod tests {
         // R2 at stage 9 reads stride 1 — residuals are line-local anyway.
         let p = m1();
         assert_eq!(context_factor(&p, 1024, EdgeType::R2, 9, After(EdgeType::R4)), 1.0);
+    }
+
+    #[test]
+    fn boundary_context_is_a_flat_residency_bonus() {
+        // After the RU walk every line is resident: the factor is the
+        // calibrated after_boundary_mem at every stage and edge type,
+        // never a stride-matched affinity and never the start penalty.
+        let p = m1();
+        for s in [0, 2, 5, 9] {
+            for e in [EdgeType::R2, EdgeType::R4, EdgeType::F8] {
+                let f = context_factor(&p, 1024, e, s, After(EdgeType::RU));
+                assert_eq!(f, p.after_boundary_mem, "{e}@{s}");
+                let fb = context_factor_batched(&p, 1024, e, s, After(EdgeType::RU), 16);
+                assert_eq!(fb, p.after_boundary_mem, "batched {e}@{s}");
+            }
+        }
+        assert!(p.after_boundary_mem < p.start_mem);
     }
 
     #[test]

@@ -134,6 +134,15 @@ pub struct MachineParams {
     /// from isolation) the unpack pays the round trip instead; see
     /// `Machine::unpack_ns`.
     pub unpack_after_fused: f64,
+    /// Memory multiplier for a c2c pass immediately after the RU
+    /// boundary pass (`Context::After(RU)` — the start context of every
+    /// real-kind steady-state loop). The symmetric full-buffer walk
+    /// leaves *every* line of the half-size c2c buffer freshly resident
+    /// in natural order: no stream-aligned stride residual (no
+    /// half-stride bonus), but no cold-start penalty either — a mild
+    /// across-the-board residency bonus, between the affinity bonuses
+    /// and neutral.
+    pub after_boundary_mem: f64,
 }
 
 impl MachineParams {
@@ -174,6 +183,9 @@ impl MachineParams {
             // A terminal fused block leaves the half-spectrum hot in
             // natural order; the unpack rides it.
             unpack_after_fused: 0.35,
+            // The RU walk re-touches the whole buffer: everything is
+            // L1-resident for the next pass, with no stride alignment.
+            after_boundary_mem: 0.90,
         }
     }
 
@@ -225,6 +237,7 @@ impl MachineParams {
             batch_thrash: 0.8,
             // Weak context effects on the 2015-era Haswell model.
             unpack_after_fused: 0.9,
+            after_boundary_mem: 0.98,
         }
     }
 
@@ -341,6 +354,7 @@ mod tests {
             assert!(m.batch_cap_bytes > 0.0);
             assert!(m.batch_thrash > 0.0);
             assert!(m.unpack_after_fused > 0.0 && m.unpack_after_fused < 1.0);
+            assert!(m.after_boundary_mem > 0.0 && m.after_boundary_mem <= 1.0);
         }
     }
 

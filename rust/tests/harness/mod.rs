@@ -28,9 +28,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use spfft::autotune::{trace_batch, trace_request, EdgeSample, SampleMode};
 use spfft::coordinator::{BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics};
 use spfft::fft::{BatchBufferPool, CompiledPlan, Executor, SplitComplex};
 use spfft::kind::TransformKind;
+use spfft::obs::{Event, EventKind, Observer, StageTime};
 use spfft::plan::Plan;
 
 /// A monotonically-advancing virtual clock. `now()` is a real `Instant`
@@ -169,6 +171,16 @@ pub struct Driver {
     pub clock: VirtualClock,
     pub policy: BatchPolicy,
     pub metrics: Arc<Metrics>,
+    /// Flight recorder + attribution, origin-pinned to the virtual
+    /// clock's base so every event timestamp *is* the virtual offset.
+    pub obs: Arc<Observer>,
+    /// When set, executions run through the traced kernel path
+    /// (`trace_request` / `trace_batch`) and per-edge samples flow into
+    /// [`Driver::samples`] and the observer's attribution table.
+    pub trace: Option<SampleMode>,
+    /// Every traced edge sample, in feed order (the exact order the
+    /// attribution table saw them — bit-exact comparison material).
+    pub samples: Vec<EdgeSample>,
     coalesce: CoalesceState<(TransformKind, usize), TraceReq>,
     ex: Executor,
     compiled: Vec<((TransformKind, usize), CompiledPlan)>,
@@ -192,16 +204,29 @@ impl Driver {
                 compiled.push(((kind, 2 * *n), ex.compile_kind(p, 2 * *n, true, kind)));
             }
         }
+        let clock = VirtualClock::new();
+        let obs =
+            Arc::new(Observer::with_origin(clock.origin(), spfft::obs::DEFAULT_RECORDER_CAPACITY));
         Driver {
-            clock: VirtualClock::new(),
+            clock,
             policy,
             metrics: Arc::new(Metrics::new()),
+            obs,
+            trace: None,
+            samples: Vec::new(),
             coalesce: CoalesceState::new(coalesce, policy.max_wait),
             ex,
             compiled,
             pool: BatchBufferPool::new(),
             pulls: Vec::new(),
         }
+    }
+
+    /// Recorded flight-recorder events, in sequence order. Timestamps
+    /// are virtual offsets in nanoseconds (the observer's origin is the
+    /// virtual clock's base).
+    pub fn events(&self) -> Vec<Event> {
+        self.obs.events()
     }
 
     /// Run the whole trace to completion (including the final drain of
@@ -257,12 +282,17 @@ impl Driver {
             {
                 let a = arrivals[i];
                 i += 1;
+                let enqueued = self.clock.at(a.at);
+                self.obs.record_at(
+                    enqueued,
+                    EventKind::Submit { req: (i - 1) as u64, kind: a.kind, n: a.n },
+                );
                 batch.push(TraceReq {
                     n: a.n,
                     kind: a.kind,
                     seed: a.seed,
                     seq: i - 1,
-                    enqueued: self.clock.at(a.at),
+                    enqueued,
                     input: SplitComplex::random(a.n, a.seed),
                 });
                 if batch.len() == self.policy.max_batch {
@@ -274,7 +304,18 @@ impl Driver {
             self.pulls.push(batch.len());
             let now = self.clock.now();
             self.metrics.on_batch(batch.len(), Duration::ZERO);
-            let ready = self.coalesce.admit(batch, now, |r| (r.kind, r.n), |r| r.enqueued);
+            let ready = self.coalesce.admit_with(
+                batch,
+                now,
+                |r| (r.kind, r.n),
+                |r| r.enqueued,
+                |&(kind, n), size, windows| {
+                    self.obs.record_at(
+                        now,
+                        EventKind::CoalesceHold { kind, n, size, held_windows: windows },
+                    );
+                },
+            );
             self.execute(ready, &mut completions);
         }
         // Shutdown drain (channel closed in the real worker loop).
@@ -293,13 +334,37 @@ impl Driver {
         completions: &mut Vec<Completion>,
     ) {
         let now_off = self.clock.elapsed();
+        let now = self.clock.now();
         for group in ready {
             self.metrics.on_group(group.items.len());
+            self.obs.record_at(
+                now,
+                EventKind::GroupFormed {
+                    kind: group.key.0,
+                    n: group.key.1,
+                    size: group.items.len(),
+                    held_windows: group.held_windows,
+                    paired_singletons: group.paired_singletons,
+                },
+            );
             if group.held_windows > 0 {
                 self.metrics.on_coalesce_flush(
                     group.held_age,
                     group.gained > 0,
                     group.paired_singletons,
+                );
+                self.obs.record_at(
+                    now,
+                    EventKind::CoalesceFlush {
+                        kind: group.key.0,
+                        n: group.key.1,
+                        size: group.items.len(),
+                        held_windows: group.held_windows,
+                        held_age_ns: group.held_age.as_nanos() as u64,
+                        gained: group.gained,
+                        paired_singletons: group.paired_singletons,
+                        reason: format!("{:?}", group.reason),
+                    },
                 );
             }
             let (kind, n) = group.key;
@@ -310,20 +375,52 @@ impl Driver {
                 .map(|(_, cp)| cp)
                 .unwrap_or_else(|| panic!("no plan for {kind} n={n}"));
             let size = group.items.len();
+            let mut traced: Vec<EdgeSample> = Vec::new();
             let outs: Vec<SplitComplex> = if size == 1 {
-                vec![cp.run_on(&group.items[0].input)]
+                match &self.trace {
+                    Some(mode) => vec![trace_request(cp, &group.items[0].input, mode, &mut traced)],
+                    None => vec![cp.run_on(&group.items[0].input)],
+                }
             } else {
                 let mut buf = self.pool.acquire(n, size);
                 let inputs: Vec<&SplitComplex> = group.items.iter().map(|r| &r.input).collect();
                 buf.gather(&inputs);
-                cp.run_batch(&mut buf);
+                match &self.trace {
+                    Some(mode) => trace_batch(cp, &mut buf, mode, &mut traced),
+                    None => cp.run_batch(&mut buf),
+                }
                 let outs = (0..size).map(|lane| buf.scatter_lane(lane)).collect();
                 self.pool.release(buf);
                 outs
             };
+            let stages: Vec<StageTime> =
+                traced.iter().map(|s| (s.edge, s.stage, s.per_transform_ns())).collect();
+            if !traced.is_empty() {
+                self.obs.observe_samples(&traced);
+                self.samples.extend(traced.iter().copied());
+            }
             for (req, out) in group.items.into_iter().zip(outs) {
                 let enq_off = self.clock.offset_of(req.enqueued);
-                self.metrics.on_complete_kind(req.kind, now_off.saturating_sub(enq_off));
+                let latency = now_off.saturating_sub(enq_off);
+                self.metrics.on_complete_kind(req.kind, latency);
+                // Harness span decomposition: execution is instantaneous
+                // on the virtual clock, so total = queue + held exactly.
+                let total_ns = latency.as_nanos() as u64;
+                let held_ns = (group.held_age.as_nanos() as u64).min(total_ns);
+                self.obs.record_at(
+                    now,
+                    EventKind::RequestDone {
+                        req: req.seq as u64,
+                        kind: req.kind,
+                        n: req.n,
+                        group_size: size,
+                        queue_ns: total_ns - held_ns,
+                        held_ns,
+                        exec_ns: 0,
+                        total_ns,
+                        stages: stages.clone(),
+                    },
+                );
                 completions.push(Completion {
                     n: req.n,
                     kind: req.kind,

@@ -36,6 +36,7 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
         coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
+        observer: None,
     })
     .unwrap();
 
@@ -159,6 +160,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     let rxs: Vec<_> = inputs.iter().map(|x| batched.submit(x.clone()).unwrap()).collect();
@@ -174,6 +176,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     for (input, want_eq) in inputs.iter().zip(&got_batched) {

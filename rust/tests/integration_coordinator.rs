@@ -40,6 +40,7 @@ fn native_service_end_to_end_with_planner() {
         coalesce: Default::default(),
         queue_depth: 128,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     // mixed workload, validate every response
@@ -83,6 +84,7 @@ fn pjrt_service_end_to_end() {
         coalesce: Default::default(),
         queue_depth: 32,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     for i in 0..8u64 {
@@ -253,6 +255,7 @@ fn failure_injection_worker_rejects_bad_size_gracefully() {
         coalesce: Default::default(),
         queue_depth: 16,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     assert!(svc.submit(SplitComplex::random(64, 0)).is_err());

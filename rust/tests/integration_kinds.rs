@@ -159,6 +159,7 @@ fn coalescing_service_serves_mixed_kind_traffic_correctly() {
         workers: 1,
         queue_depth: 128,
         autotune: None,
+        observer: None,
     })
     .unwrap();
     use TransformKind::*;

@@ -1,0 +1,355 @@
+//! Observability acceptance tests (ISSUE PR-6): the deterministic
+//! harness replays scripted mixed-kind traces on a virtual clock and
+//! asserts, against the flight recorder and attribution table, that
+//!
+//! (a) every per-request span decomposition sums exactly to the
+//!     request's end-to-end virtual-clock latency,
+//! (b) the attribution table's observed nanoseconds per cell match the
+//!     traced kernel timings bit-exactly, and
+//! (c) an induced drift → replan → swap sequence appears in the flight
+//!     recorder as an ordered audit trail carrying before/after plans
+//!     and the believed costs of the decision.
+//!
+//! Plus the event-stream golden test: the exact submit → hold → flush →
+//! execute ordering (tags and virtual timestamps) for a scripted
+//! coalesced trace, and exporter round-trips over a real harness stream.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use harness::{trace_kinds, Driver};
+use spfft::autotune::{AutotuneConfig, Autotuner, EdgeSample, SampleMode};
+use spfft::coordinator::{BatchPolicy, CoalescePolicy};
+use spfft::cost::{SimCost, Wisdom};
+use spfft::edge::{Context, EdgeType};
+use spfft::kind::TransformKind;
+use spfft::obs::{
+    audit_trail, events_from_json, events_json, prometheus_text, schema_check_prometheus,
+    schema_check_snapshot, snapshot_json, AttrKey, Attribution, EventKind, Observer,
+};
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+
+fn policy(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_micros(max_wait_us) }
+}
+
+/// Deterministic per-edge oracle: every (edge, stage, ctx) cell has a
+/// distinct, reproducible "measured" time.
+fn oracle() -> SampleMode {
+    SampleMode::Oracle(Arc::new(|e, s, ctx| {
+        1000.0 + 100.0 * e.index() as f64 + 10.0 * s as f64 + ctx.index() as f64
+    }))
+}
+
+/// A mixed-kind coalescing trace: a held forward pair, a singleton real
+/// transform later paired by the second-level queue, and a target-filling
+/// inverse burst that runs straight through.
+fn mixed_trace() -> Vec<harness::Arrival> {
+    trace_kinds(&[
+        (0, TransformKind::Forward, 64, 1),
+        (10, TransformKind::Forward, 64, 2),
+        (150, TransformKind::RealForward, 128, 3),
+        (300, TransformKind::Inverse, 64, 4),
+        (310, TransformKind::Inverse, 64, 5),
+        (320, TransformKind::Inverse, 64, 6),
+        (330, TransformKind::Inverse, 64, 7),
+        (500, TransformKind::RealForward, 128, 8),
+    ])
+}
+
+fn mixed_driver() -> Driver {
+    let plan = Plan::parse("R4,R4,R4").unwrap();
+    let mut d = Driver::new(
+        &[(64, plan)],
+        policy(4, 100),
+        CoalescePolicy::hold(2, 4, Duration::from_micros(3000)),
+    );
+    d.trace = Some(oracle());
+    d
+}
+
+// ---------------------------------------------------------------- golden
+
+#[test]
+fn golden_event_stream_submit_hold_flush_execute() {
+    let plan = Plan::parse("R4,R4,R4").unwrap();
+    let mut d = Driver::new(
+        &[(64, plan)],
+        policy(8, 100),
+        CoalescePolicy::hold(4, 4, Duration::from_micros(2000)),
+    );
+    let completions = d.run(trace_kinds(&[
+        (0, TransformKind::Forward, 64, 1),
+        (10, TransformKind::Forward, 64, 2),
+        (150, TransformKind::Forward, 64, 3),
+        (160, TransformKind::Forward, 64, 4),
+    ]));
+    assert_eq!(completions.len(), 4);
+    let events = d.events();
+    // The exact stream: two submits, a hold at the first window close,
+    // two more submits, then the target-filling flush executes all four.
+    let got: Vec<(&str, u64)> = events.iter().map(|e| (e.kind.tag(), e.t_ns)).collect();
+    assert_eq!(
+        got,
+        vec![
+            ("submit", 0),
+            ("submit", 10_000),
+            ("coalesce_hold", 100_000),
+            ("submit", 150_000),
+            ("submit", 160_000),
+            ("group_formed", 250_000),
+            ("coalesce_flush", 250_000),
+            ("request_done", 250_000),
+            ("request_done", 250_000),
+            ("request_done", 250_000),
+            ("request_done", 250_000),
+        ]
+    );
+    assert!(events.windows(2).all(|w| w[0].seq < w[1].seq), "seq not a total order");
+    match &events[2].kind {
+        EventKind::CoalesceHold { kind, n, size, held_windows } => {
+            assert_eq!((*kind, *n, *size, *held_windows), (TransformKind::Forward, 64, 2, 1));
+        }
+        other => panic!("expected coalesce_hold, got {other:?}"),
+    }
+    match &events[6].kind {
+        EventKind::CoalesceFlush { size, held_windows, held_age_ns, gained, reason, .. } => {
+            assert_eq!(*size, 4);
+            assert_eq!(*held_windows, 1);
+            assert_eq!(*held_age_ns, 150_000, "held from first window close to flush");
+            assert_eq!(*gained, 2, "two members joined while held");
+            assert_eq!(reason, "Filled");
+        }
+        other => panic!("expected coalesce_flush, got {other:?}"),
+    }
+    // First request's span: 100 us queued (submit → window close), then
+    // 150 us held, executed instantaneously on the virtual clock.
+    match &events[7].kind {
+        EventKind::RequestDone { req, queue_ns, held_ns, exec_ns, total_ns, .. } => {
+            assert_eq!(*req, 0);
+            assert_eq!(*total_ns, 250_000);
+            assert_eq!(*held_ns, 150_000);
+            assert_eq!(*queue_ns, 100_000);
+            assert_eq!(*exec_ns, 0);
+        }
+        other => panic!("expected request_done, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------- (a) span exactness
+
+#[test]
+fn span_decomposition_sums_to_end_to_end_latency() {
+    let mut d = mixed_driver();
+    let completions = d.run(mixed_trace());
+    assert_eq!(completions.len(), 8);
+    let events = d.events();
+    let mut spans: HashMap<u64, u64> = HashMap::new();
+    for e in &events {
+        if let EventKind::RequestDone { req, kind, queue_ns, held_ns, exec_ns, total_ns, stages } =
+            &e.kind
+        {
+            assert_eq!(
+                queue_ns + held_ns + exec_ns,
+                *total_ns,
+                "span decomposition leaks for req {req}"
+            );
+            assert!(!stages.is_empty(), "traced request {req} has no stage times");
+            if kind.is_real() {
+                assert!(
+                    stages.iter().any(|(edge, _, _)| *edge == EdgeType::RU),
+                    "real-kind request {req} missing the RU boundary stage"
+                );
+            }
+            spans.insert(*req, *total_ns);
+        }
+    }
+    assert_eq!(spans.len(), completions.len(), "a completion is missing its span event");
+    for c in &completions {
+        assert_eq!(
+            spans[&(c.seq as u64)],
+            c.latency().as_nanos() as u64,
+            "span total != virtual-clock end-to-end latency for req {}",
+            c.seq
+        );
+    }
+}
+
+// ---------------------------------------- (b) bit-exact attribution
+
+#[test]
+fn attribution_matches_traced_kernel_timings_bit_exactly() {
+    let mut d = mixed_driver();
+    let completions = d.run(mixed_trace());
+    assert_eq!(completions.len(), 8);
+    assert!(!d.samples.is_empty(), "tracing produced no samples");
+    // Replay the driver's sample stream in feed order; the table must
+    // hold exactly these sums, bit for bit.
+    let mut want: HashMap<AttrKey, (f64, u64, u64)> = HashMap::new();
+    for s in &d.samples {
+        let e = want.entry(Attribution::key_of(s)).or_insert((0.0, 0, 0));
+        e.0 += s.ns;
+        e.1 += s.batch.max(1) as u64;
+        e.2 += 1;
+    }
+    let cells = d.obs.attribution().cells();
+    assert_eq!(cells.len(), want.len());
+    for (key, cell) in cells {
+        let (ns, transforms, samples) = want[&key];
+        assert_eq!(
+            cell.observed_ns.to_bits(),
+            ns.to_bits(),
+            "cell {key:?} observed ns not bit-exact"
+        );
+        assert_eq!(cell.transforms, transforms, "cell {key:?} transform count");
+        assert_eq!(cell.samples, samples, "cell {key:?} sample count");
+    }
+    // Distinct kinds were traced into distinct cells.
+    let kinds: std::collections::HashSet<TransformKind> =
+        want.keys().map(|(kind, ..)| *kind).collect();
+    assert!(kinds.contains(&TransformKind::Forward));
+    assert!(kinds.contains(&TransformKind::Inverse));
+    assert!(kinds.contains(&TransformKind::RealForward));
+}
+
+// ------------------------------------------- (c) autotune audit trail
+
+/// Samples for one simulated execution of `plan`, every cell's value
+/// scaled by `factor` (the replanner tests' idiom).
+fn plan_samples(prior: &Wisdom, plan: &Plan, factor: f64) -> Vec<EdgeSample> {
+    let mut ctx = Context::Start;
+    plan.steps()
+        .into_iter()
+        .map(|(e, s)| {
+            let ns = prior
+                .cells
+                .iter()
+                .find(|&&(pe, ps, pc, _)| pe == e && ps == s && pc == ctx)
+                .map(|&(_, _, _, ns)| ns)
+                .expect("cell in prior")
+                * factor;
+            let sample =
+                EdgeSample { edge: e, stage: s, ctx, kind: TransformKind::Forward, batch: 1, ns };
+            ctx = Context::After(e);
+            sample
+        })
+        .collect()
+}
+
+fn wait_for(mut done: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while Instant::now() < deadline {
+        if done() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+#[test]
+fn drift_replan_swap_forms_an_ordered_audit_trail() {
+    let n = 256;
+    let prior = Wisdom::harvest(&mut SimCost::m1(n), "m1");
+    let mut cfg = AutotuneConfig::new(prior.clone());
+    cfg.sample_period = 1;
+    cfg.check_every = 2;
+    cfg.drift_min_samples = 2;
+    cfg.drift_threshold = 0.5;
+    cfg.hysteresis = 0.02;
+    cfg.ewma_alpha = 1.0;
+    cfg.blend_samples = 0.5;
+    let obs = Arc::new(Observer::new(1024));
+    cfg.observer = Some(obs.clone());
+    let initial = run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan;
+    let tuner = Autotuner::start(cfg, initial);
+    let old = tuner.slot().current().plan.clone();
+    // Inflate the active plan's observed costs until the tuner swaps.
+    for _ in 0..200 {
+        tuner.sampler().submit(plan_samples(&prior, &old, 10.0));
+        std::thread::sleep(Duration::from_millis(1));
+        if tuner.status().swaps >= 1 {
+            break;
+        }
+    }
+    assert!(wait_for(|| tuner.status().swaps >= 1), "no swap happened");
+    tuner.stop();
+    let events = obs.events();
+    let drift = events
+        .iter()
+        .find(|e| matches!(e.kind, EventKind::Drift { .. }))
+        .expect("no drift event recorded");
+    let swap = events
+        .iter()
+        .find(|e| matches!(e.kind, EventKind::Swap { .. }))
+        .expect("no swap event recorded");
+    // The search that produced this swap is the closest preceding replan
+    // (the replanner thread records them back to back).
+    let replan = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Replan { .. }) && e.seq < swap.seq)
+        .last()
+        .expect("no replan event before the swap");
+    assert!(drift.seq < replan.seq, "audit trail out of order: replan before drift");
+    if let EventKind::Drift { cells_over, max_rel_dev, .. } = &drift.kind {
+        assert!(*cells_over >= 1);
+        assert!(*max_rel_dev > 0.5, "drift event under the configured threshold");
+    }
+    let (replan_plan, replan_cost) = match &replan.kind {
+        EventKind::Replan { plan, cost_ns, .. } => (plan.clone(), *cost_ns),
+        _ => unreachable!(),
+    };
+    match &swap.kind {
+        EventKind::Swap { version, old_plan, old_cost_ns, new_plan, new_cost_ns } => {
+            assert_eq!(*old_plan, old, "swap's before-plan is not the plan it replaced");
+            assert_ne!(new_plan, old_plan, "swap to an identical plan");
+            assert_eq!(
+                *new_plan, replan_plan,
+                "swap publishes a different plan than its replan found"
+            );
+            assert_eq!(
+                new_cost_ns.to_bits(),
+                replan_cost.to_bits(),
+                "swap's believed cost differs from the replan's"
+            );
+            assert!(
+                new_cost_ns < old_cost_ns,
+                "swap without believed improvement: {new_cost_ns} vs {old_cost_ns}"
+            );
+            assert!(*version >= 2, "first swap must publish version >= 2");
+        }
+        _ => unreachable!(),
+    }
+    let trail = audit_trail(&events);
+    assert!(trail.iter().any(|l| l.starts_with("drift detected")), "trail: {trail:?}");
+    assert!(trail.iter().any(|l| l.starts_with("replanned")), "trail: {trail:?}");
+    assert!(trail.iter().any(|l| l.starts_with("swapped to v")), "trail: {trail:?}");
+}
+
+// ------------------------------------------------ exporter integration
+
+#[test]
+fn harness_stream_round_trips_through_the_exporters() {
+    let mut d = mixed_driver();
+    let completions = d.run(mixed_trace());
+    assert_eq!(completions.len(), 8);
+    let events = d.events();
+    // Event dump: JSON round-trip is lossless.
+    let doc = events_json(&events);
+    let back = events_from_json(&doc).expect("events dump did not validate");
+    assert_eq!(back, events);
+    // Metrics snapshot + attribution validate against their schemas.
+    d.obs.attribution().fill_believed(|_| Some(1.0));
+    let snap = d.metrics.snapshot();
+    let cells = d.obs.attribution().cells();
+    let json = snapshot_json(&snap, &cells, None);
+    schema_check_snapshot(&json).expect("snapshot schema");
+    let prom = prometheus_text(&snap, &cells);
+    schema_check_prometheus(&prom).expect("prometheus schema");
+    assert!(prom.contains("spfft_edge_residual_ns"));
+}
