@@ -12,13 +12,14 @@ fn main() {
     let l = 10;
     let mut bench = Bench::from_env("table1_edges");
     let mut ex = Executor::new();
+    let k = ex.kernels();
     for e in ALL_EDGES {
         // representative placements: first valid stage and terminal stage
         for stage in [0usize, l - e.stages()] {
             let step = ex.compile_edge(n, e, stage);
             let mut buf = SplitComplex::random(n, 3);
             bench.bench(format!("edge/{}@{}", e.name(), stage), move || {
-                spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+                spfft::fft::exec::run_step(k, &step, &mut buf.re, &mut buf.im);
                 black_box(&buf);
             });
             if e.stages() == l {

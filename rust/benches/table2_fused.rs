@@ -19,12 +19,13 @@ fn main() {
 
     let mut bench = Bench::from_env("table2_fused");
     let mut ex = Executor::new();
+    let k = ex.kernels();
     for e in [EdgeType::F8, EdgeType::F16, EdgeType::F32] {
         let stage = l - e.stages();
         let step = ex.compile_edge(n, e, stage);
         let mut buf = SplitComplex::random(n, 5);
         bench.bench(format!("native/fused{}@terminal", e.block_size().unwrap()), move || {
-            spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+            spfft::fft::exec::run_step(k, &step, &mut buf.re, &mut buf.im);
             black_box(&buf);
         });
     }

@@ -18,13 +18,14 @@ fn main() {
 
     let mut bench = Bench::from_env("table4_perpass");
     let mut ex = Executor::new();
+    let k = ex.kernels();
     for stage in 0..l {
         let step = ex.compile_edge(n, EdgeType::R2, stage);
         let mut buf = SplitComplex::random(n, 11);
         bench.bench(
             format!("native/r2-pass{:02}-stride{}", stage + 1, (n >> stage) / 2),
             move || {
-                spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+                spfft::fft::exec::run_step(k, &step, &mut buf.re, &mut buf.im);
                 black_box(&buf);
             },
         );
@@ -33,7 +34,7 @@ fn main() {
         let step = ex.compile_edge(n, e, l - e.stages());
         let mut buf = SplitComplex::random(n, 12);
         bench.bench(format!("native/fused{}", e.block_size().unwrap()), move || {
-            spfft::fft::exec::run_step(&step, &mut buf.re, &mut buf.im);
+            spfft::fft::exec::run_step(k, &step, &mut buf.re, &mut buf.im);
             black_box(&buf);
         });
     }

@@ -189,6 +189,7 @@ mod tests {
                 ctx: cell.2,
                 kind: crate::kind::TransformKind::Forward,
                 batch: 1,
+                isa: crate::isa::Isa::Scalar,
                 ns,
             });
         }
@@ -202,6 +203,7 @@ mod tests {
                 ctx: cell.2,
                 kind: crate::kind::TransformKind::Forward,
                 batch,
+                isa: crate::isa::Isa::Scalar,
                 ns,
             });
         }

@@ -84,6 +84,12 @@ pub struct AutotuneConfig {
     /// folding inverse kinds onto the forward tables (see
     /// [`model::OnlineCost::set_split_kinds`]).
     pub split_kinds: bool,
+    /// Codelet ISA the serving executor dispatches — the slot live
+    /// samples land in and the backend un-pinned planning surfaces
+    /// resolve to (see [`model::OnlineCost::set_exec_isa`]). The
+    /// service layer stamps its executor's detected ISA here; the
+    /// default is scalar, the always-available backend.
+    pub exec_isa: crate::isa::Isa,
     /// Offline *batched* priors: per-transform databases harvested over
     /// batches of each listed width (`Wisdom::harvest_batched` over a
     /// provider with a native batched path, or `bin/calibrate
@@ -135,6 +141,7 @@ impl AutotuneConfig {
             prior,
             kind: TransformKind::Forward,
             split_kinds: false,
+            exec_isa: crate::isa::Isa::Scalar,
             batched_priors: Vec::new(),
             sample_period: 64,
             drift_threshold: 0.25,
@@ -160,6 +167,7 @@ impl fmt::Debug for AutotuneConfig {
             .field("source", &self.prior.source)
             .field("kind", &self.kind)
             .field("split_kinds", &self.split_kinds)
+            .field("exec_isa", &self.exec_isa)
             .field(
                 "batched_priors",
                 &self.batched_priors.iter().map(|(b, _)| *b).collect::<Vec<_>>(),

@@ -23,13 +23,15 @@ use std::collections::HashMap;
 
 use crate::cost::{CostModel, PlanningSurface, Wisdom};
 use crate::edge::{Context, EdgeType};
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 
 use super::sampler::EdgeSample;
 
-/// A cell key: (edge, stage, predecessor context). Observations carry a
-/// third axis — the transform kind — so the full observation key is
-/// (kind, cell, batch class); see [`OnlineCost::observe`].
+/// A cell key: (edge, stage, predecessor context). Observations carry
+/// further axes — the transform kind and the codelet ISA — so the full
+/// observation key is (kind, cell, batch class, isa); see
+/// [`OnlineCost::observe`].
 pub type Cell = (EdgeType, usize, Context);
 
 // The batch-class bucketing lives in `crate::cost` now (one axis, one
@@ -70,8 +72,17 @@ pub struct OnlineCost {
     /// the unbatched prior — the pre-batched-model behavior. Kind-less:
     /// kinds share the batched c2c surface.
     class_priors: HashMap<(Cell, usize), f64>,
-    /// (cell, batch class, kind slot) → live estimate.
-    obs: HashMap<(Cell, usize, TransformKind), CellEstimate>,
+    /// Instruction set the serving executor dispatches (what backend
+    /// produced — and will keep producing — the live samples). Planning
+    /// queries whose surface leaves the ISA unpinned resolve to this, so
+    /// the search tunes the code the host actually runs. Defaults to
+    /// scalar; the coordinator stamps the executor's detected ISA.
+    exec_isa: Isa,
+    /// (cell, batch class, kind slot, isa) → live estimate. Samples from
+    /// different codelet backends never fold together: a NEON fused pass
+    /// and its scalar fallback are different machine code with different
+    /// costs, and blending them would corrupt both surfaces.
+    obs: HashMap<(Cell, usize, TransformKind, Isa), CellEstimate>,
 }
 
 impl OnlineCost {
@@ -91,6 +102,7 @@ impl OnlineCost {
             focus: 0,
             focus_kind: TransformKind::Forward,
             split_kinds: false,
+            exec_isa: Isa::Scalar,
             prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
             class_priors: HashMap::new(),
             obs: HashMap::new(),
@@ -118,6 +130,19 @@ impl OnlineCost {
     /// Whether the calibration split is on.
     pub fn split_kinds(&self) -> bool {
         self.split_kinds
+    }
+
+    /// ISA unpinned planning surfaces (and the legacy `edge_ns` path)
+    /// resolve to.
+    pub fn exec_isa(&self) -> Isa {
+        self.exec_isa
+    }
+
+    /// Point unpinned queries at the executor's dispatched ISA. Set
+    /// this from [`crate::fft::exec::Executor::isa`] so the model reads
+    /// the observation slot the serving path writes.
+    pub fn set_exec_isa(&mut self, isa: Isa) {
+        self.exec_isa = isa;
     }
 
     /// Install a per-class prior: the offline per-transform estimate for
@@ -187,6 +212,7 @@ impl OnlineCost {
             (sample.edge, sample.stage, sample.ctx),
             batch_class(sample.batch),
             self.kind_slot(sample.kind),
+            sample.isa,
         );
         match self.obs.get_mut(&key) {
             Some(est) => {
@@ -199,8 +225,25 @@ impl OnlineCost {
         }
     }
 
-    /// Seed a (kind, cell, class) live estimate directly (wisdom v2
-    /// restore). The kind folds through the same slot as live samples.
+    /// Seed a (kind, cell, class, isa) live estimate directly (wisdom v2
+    /// restore). The kind folds through the same slot as live samples;
+    /// the ISA is stored verbatim — backends never fold.
+    pub fn seed_kind_isa_at(
+        &mut self,
+        cell: Cell,
+        class: usize,
+        kind: TransformKind,
+        isa: Isa,
+        mean: f64,
+        count: u64,
+    ) {
+        if mean.is_finite() && mean > 0.0 && count > 0 && class < BATCH_CLASSES {
+            let slot = self.kind_slot(kind);
+            self.obs.insert((cell, class, slot, isa), CellEstimate { mean, count });
+        }
+    }
+
+    /// Seed a (kind, cell, class) live estimate at the exec ISA.
     pub fn seed_kind_at(
         &mut self,
         cell: Cell,
@@ -209,10 +252,7 @@ impl OnlineCost {
         mean: f64,
         count: u64,
     ) {
-        if mean.is_finite() && mean > 0.0 && count > 0 && class < BATCH_CLASSES {
-            let slot = self.kind_slot(kind);
-            self.obs.insert((cell, class, slot), CellEstimate { mean, count });
-        }
+        self.seed_kind_isa_at(cell, class, kind, self.exec_isa, mean, count);
     }
 
     /// Seed a forward (cell, class) live estimate.
@@ -253,8 +293,23 @@ impl OnlineCost {
     /// installed; the prior itself is kind-less — inverse reuses the
     /// forward tables until live splits say otherwise).
     pub fn estimate_kind_at(&self, cell: Cell, class: usize, kind: TransformKind) -> f64 {
+        self.estimate_kind_isa_at(cell, class, kind, self.exec_isa)
+    }
+
+    /// The blended per-transform estimate for `cell` at a batch class,
+    /// kind, and codelet ISA — the fully-keyed read. The prior is
+    /// ISA-less (it describes whatever backend the harvesting provider
+    /// dispatched), so unobserved (class, kind, isa) slots all answer
+    /// from the same prior surface.
+    pub fn estimate_kind_isa_at(
+        &self,
+        cell: Cell,
+        class: usize,
+        kind: TransformKind,
+        isa: Isa,
+    ) -> f64 {
         let prior = self.prior_at(cell, class);
-        let obs = self.obs.get(&(cell, class, self.kind_slot(kind))).copied();
+        let obs = self.obs.get(&(cell, class, self.kind_slot(kind), isa)).copied();
         match (prior, obs) {
             (Some(p), Some(o)) => {
                 let c = o.count as f64 / (o.count as f64 + self.blend_samples);
@@ -287,7 +342,19 @@ impl OnlineCost {
         class: usize,
         kind: TransformKind,
     ) -> Option<CellEstimate> {
-        self.obs.get(&(cell, class, self.kind_slot(kind))).copied()
+        self.observation_kind_isa_at(cell, class, kind, self.exec_isa)
+    }
+
+    /// Raw live estimate at a (batch class, kind, isa); `None` until
+    /// that exact backend has been sampled there.
+    pub fn observation_kind_isa_at(
+        &self,
+        cell: Cell,
+        class: usize,
+        kind: TransformKind,
+        isa: Isa,
+    ) -> Option<CellEstimate> {
+        self.obs.get(&(cell, class, self.kind_slot(kind), isa)).copied()
     }
 
     /// Raw forward live estimate at a batch class.
@@ -301,36 +368,40 @@ impl OnlineCost {
     }
 
     /// All (cell, batch class) pairs with live observations *at the
-    /// focus kind's slot*, sorted — the drift detector's view: detection
-    /// measures movement of the workload the active plan serves.
+    /// focus kind's slot and the exec ISA*, sorted — the drift
+    /// detector's view: detection measures movement of the workload the
+    /// active plan serves, on the backend it actually dispatches.
     pub fn observed_cells(&self) -> Vec<((Cell, usize), CellEstimate)> {
         let slot = self.kind_slot(self.focus_kind);
+        let isa = self.exec_isa;
         let mut v: Vec<((Cell, usize), CellEstimate)> = self
             .obs
             .iter()
-            .filter(|((_, _, k), _)| *k == slot)
-            .map(|((cell, class, _), v)| ((*cell, *class), *v))
+            .filter(|((_, _, k, i), _)| *k == slot && *i == isa)
+            .map(|((cell, class, _, _), v)| ((*cell, *class), *v))
             .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
 
-    /// Every prior cell with its prior value and per-(class, kind) live
-    /// estimates (sorted by class then kind index), sorted — the wisdom
-    /// v2 export view.
+    /// Every prior cell with its prior value and per-(class, kind, isa)
+    /// live estimates (sorted by class, kind index, isa index), sorted —
+    /// the wisdom v2 export view.
     #[allow(clippy::type_complexity)]
-    pub fn export_cells(&self) -> Vec<(Cell, f64, Vec<(usize, TransformKind, CellEstimate)>)> {
-        let mut v: Vec<(Cell, f64, Vec<(usize, TransformKind, CellEstimate)>)> = self
+    pub fn export_cells(
+        &self,
+    ) -> Vec<(Cell, f64, Vec<(usize, TransformKind, Isa, CellEstimate)>)> {
+        let mut v: Vec<(Cell, f64, Vec<(usize, TransformKind, Isa, CellEstimate)>)> = self
             .prior
             .iter()
             .map(|(cell, &p)| {
-                let mut per: Vec<(usize, TransformKind, CellEstimate)> = self
+                let mut per: Vec<(usize, TransformKind, Isa, CellEstimate)> = self
                     .obs
                     .iter()
-                    .filter(|((c, _, _), _)| c == cell)
-                    .map(|((_, class, kind), e)| (*class, *kind, *e))
+                    .filter(|((c, _, _, _), _)| c == cell)
+                    .map(|((_, class, kind, isa), e)| (*class, *kind, *isa, *e))
                     .collect();
-                per.sort_by_key(|&(c, k, _)| (c, k.index()));
+                per.sort_by_key(|&(c, k, i, _)| (c, k.index(), i.index()));
                 (*cell, p, per)
             })
             .collect();
@@ -394,21 +465,26 @@ impl CostModel for OnlineCost {
         ctx: Context,
         surface: PlanningSurface,
     ) -> f64 {
+        let isa = surface.isa.unwrap_or(self.exec_isa);
         if edge == EdgeType::RU {
+            // RU runs scalar permutation code in every backend, but its
+            // samples are still keyed by the plan's dispatching ISA —
+            // read the same slot the traced path writes.
             let cell = (EdgeType::RU, stage, ctx);
             if self
-                .observation_kind_at(cell, surface.batch_class, surface.kind)
+                .observation_kind_isa_at(cell, surface.batch_class, surface.kind, isa)
                 .is_some()
             {
-                return self.estimate_kind_at(cell, surface.batch_class, surface.kind);
+                return self.estimate_kind_isa_at(cell, surface.batch_class, surface.kind, isa);
             }
-            return self.estimate_kind_at(
+            return self.estimate_kind_isa_at(
                 (EdgeType::R2, 0, ctx),
                 surface.batch_class,
                 surface.kind,
+                isa,
             );
         }
-        self.estimate_kind_at((edge, stage, ctx), surface.batch_class, surface.kind)
+        self.estimate_kind_isa_at((edge, stage, ctx), surface.batch_class, surface.kind, isa)
     }
 }
 
@@ -425,15 +501,19 @@ mod tests {
     }
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa: Isa::Scalar, ns }
     }
 
     fn sample_b(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, isa: Isa::Scalar, ns }
     }
 
     fn sample_k(edge: EdgeType, stage: usize, ctx: Context, kind: TransformKind, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind, batch: 1, ns }
+        EdgeSample { edge, stage, ctx, kind, batch: 1, isa: Isa::Scalar, ns }
+    }
+
+    fn sample_i(edge: EdgeType, stage: usize, ctx: Context, isa: Isa, ns: f64) -> EdgeSample {
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa, ns }
     }
 
     #[test]
@@ -701,6 +781,47 @@ mod tests {
             model.surface_edge_ns(EdgeType::RU, 8, ctx, b16),
             model.estimate_kind_at((EdgeType::R2, 0, ctx), b16.batch_class, b16.kind)
         );
+    }
+
+    #[test]
+    fn isa_axis_keeps_backends_apart() {
+        let mut model = m1_model(256);
+        let cell = (EdgeType::R4, 0, Context::Start);
+        let prior = model.estimate(cell);
+        for _ in 0..100 {
+            model.observe(&sample_i(cell.0, cell.1, cell.2, Isa::Neon, prior * 3.0));
+        }
+        // the scalar (default exec) slot is untouched...
+        assert_eq!(model.observation(cell), None);
+        assert_eq!(model.estimate(cell), prior);
+        // ...while the NEON slot learned the backend's cost
+        let neon = model
+            .observation_kind_isa_at(cell, 0, TransformKind::Forward, Isa::Neon)
+            .unwrap();
+        assert_eq!(neon.count, 100);
+        // a surface pinned to NEON reads that slot
+        let pinned = PlanningSurface::forward().with_isa(Isa::Neon);
+        let est = model.surface_edge_ns(cell.0, cell.1, cell.2, pinned);
+        assert!(est > prior * 2.0, "pinned surface ignored NEON samples: {est}");
+        // an unpinned surface resolves to the exec ISA (scalar → prior)...
+        assert_eq!(
+            model.surface_edge_ns(cell.0, cell.1, cell.2, PlanningSurface::forward()),
+            prior
+        );
+        // ...until the coordinator stamps the dispatched backend
+        model.set_exec_isa(Isa::Neon);
+        assert_eq!(model.exec_isa(), Isa::Neon);
+        let resolved = model.surface_edge_ns(cell.0, cell.1, cell.2, PlanningSurface::forward());
+        assert!(resolved > prior * 2.0, "unpinned surface ignored exec isa: {resolved}");
+        // drift's view follows the exec ISA
+        assert_eq!(model.observed_cells().len(), 1);
+        model.set_exec_isa(Isa::Scalar);
+        assert!(model.observed_cells().is_empty());
+        // the export view carries the backend verbatim
+        let exported = model.export_cells();
+        let (_, _, per) = exported.iter().find(|(c, _, _)| *c == cell).unwrap();
+        assert_eq!(per.len(), 1);
+        assert_eq!(per[0].2, Isa::Neon);
     }
 
     #[test]

@@ -112,6 +112,9 @@ impl Autotuner {
             OnlineCost::from_wisdom(&config.prior, config.ewma_alpha, config.blend_samples);
         model.set_split_kinds(config.split_kinds);
         model.set_focus_kind(config.kind);
+        // Live samples land in the dispatching backend's slot; point the
+        // model's unpinned reads (and drift's view) at the same slot.
+        model.set_exec_isa(config.exec_isa);
         // Install offline batched priors first: planning at a batched
         // class starts from the amortized surface the batched kernels
         // actually run ("the same cost surface", DESIGN.md §batch).
@@ -419,6 +422,7 @@ mod tests {
                     ctx,
                     kind: crate::kind::TransformKind::Forward,
                     batch: 1,
+                    isa: crate::isa::Isa::Scalar,
                     ns,
                 };
                 ctx = Context::After(e);

@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::edge::{Context, EdgeType};
 use crate::fft::{CompiledPlan, SplitComplex};
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 
 /// One observed edge execution in its live context.
@@ -31,6 +32,12 @@ pub struct EdgeSample {
     /// Transforms executed together in this step (1 = unbatched). `ns`
     /// covers the whole batch; consumers normalize per transform.
     pub batch: usize,
+    /// Codelet backend the traced plan dispatched to
+    /// ([`CompiledPlan::isa`]) — the online model keys observations by
+    /// it, so estimates learned on one backend never price another's
+    /// surface (a scalar-forced canary and the native fleet coexist in
+    /// one store).
+    pub isa: Isa,
     /// Observed time in nanoseconds (for the whole batch).
     pub ns: f64,
 }
@@ -136,13 +143,14 @@ pub fn trace_request(
     out: &mut Vec<EdgeSample>,
 ) -> SplitComplex {
     let kind = cp.kind;
+    let isa = cp.isa();
     let mut ctx = Context::Start;
     cp.run_on_traced(input, &mut |edge, stage, measured_ns| {
         let ns = match mode {
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx),
         };
-        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, isa, ns });
         ctx = Context::After(edge);
     })
 }
@@ -162,13 +170,14 @@ pub fn trace_batch(
 ) {
     let b = buf.batch();
     let kind = cp.kind;
+    let isa = cp.isa();
     let mut ctx = Context::Start;
     cp.run_batch_traced(buf, &mut |edge, stage, measured_ns| {
         let ns = match mode {
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx) * b as f64,
         };
-        out.push(EdgeSample { edge, stage, ctx, kind, batch: b, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: b, isa, ns });
         ctx = Context::After(edge);
     });
 }
@@ -225,6 +234,8 @@ mod tests {
         assert!(samples.iter().all(|s| s.ns >= 0.0));
         assert!(samples.iter().all(|s| s.batch == 1));
         assert!(samples.iter().all(|s| s.kind == TransformKind::Forward));
+        // samples carry the backend the plan actually dispatched to
+        assert!(samples.iter().all(|s| s.isa == cp.isa()));
     }
 
     #[test]

@@ -28,10 +28,15 @@
 //! for the same (edge, stage, ctx). `kind` is the transform kind the
 //! observation was traced under (non-forward observations exist only
 //! when the calibration split is on — folded samples persist as
-//! forward). Records without a `batch` field (files written before the
-//! batched execution engine) default to 1, records without a `kind`
-//! field (files written before the kind axis) load as **forward-only**,
-//! and [`WisdomV2::load`] also accepts v1 files, promoting each v1
+//! forward). `isa` is the codelet backend the observation was traced
+//! under ([`crate::isa::Isa::name`]); observations from different
+//! backends never fold, so each keeps its own record. Records without a
+//! `batch` field (files written before the batched execution engine)
+//! default to 1, records without a `kind` field (files written before
+//! the kind axis) load as **forward-only**, records without an `isa`
+//! field (files written before the SIMD codelet backends) load as
+//! **scalar** — the backend every pre-SIMD build dispatched — and
+//! [`WisdomV2::load`] also accepts v1 files, promoting each v1
 //! cell to a prior with zero live samples — upgrades are transparent.
 
 use std::collections::BTreeMap;
@@ -41,6 +46,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cost::{CostModel, Wisdom};
 use crate::edge::{Context, EdgeType};
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 use crate::util::json::{self, Json};
 
@@ -60,6 +66,10 @@ pub struct CellRecord {
     /// Representative batch size of the observation's batch class
     /// (1 = unbatched; the prior's own regime).
     pub batch: usize,
+    /// Codelet backend the observation was traced under. Files written
+    /// before the SIMD backends carry no `"isa"` field and load as
+    /// scalar (mirroring the `"kind"` migration).
+    pub isa: Isa,
     /// Offline prior (per-transform ns, batch-agnostic).
     pub prior_ns: f64,
     /// Live per-transform EWMA (ns); meaningful only when `count > 0`.
@@ -87,21 +97,23 @@ impl WisdomV2 {
     /// save → load is lossless.
     pub fn from_model(model: &OnlineCost, source: &str) -> WisdomV2 {
         let mut cells = Vec::new();
+        let exec_isa = model.exec_isa();
         for ((edge, stage, ctx), prior_ns, per) in model.export_cells() {
             let cell = (edge, stage, ctx);
-            let class0_fwd = per
+            let canonical = per
                 .iter()
-                .find(|&&(c, k, _)| c == 0 && k == TransformKind::Forward)
-                .map(|&(_, _, e)| e);
+                .find(|&&(c, k, i, _)| c == 0 && k == TransformKind::Forward && i == exec_isa)
+                .map(|&(_, _, _, e)| e);
             cells.push(CellRecord {
                 edge,
                 stage,
                 ctx,
                 kind: TransformKind::Forward,
                 batch: 1,
+                isa: exec_isa,
                 prior_ns,
-                obs_ns: class0_fwd.map(|o| o.mean).unwrap_or(0.0),
-                count: class0_fwd.map(|o| o.count).unwrap_or(0),
+                obs_ns: canonical.map(|o| o.mean).unwrap_or(0.0),
+                count: canonical.map(|o| o.count).unwrap_or(0),
             });
             for class in model.prior_classes(cell) {
                 cells.push(CellRecord {
@@ -110,14 +122,17 @@ impl WisdomV2 {
                     ctx,
                     kind: TransformKind::Forward,
                     batch: crate::autotune::model::class_batch(class),
+                    // pure priors are ISA-less surfaces; stamp the exec
+                    // backend so a reload of this exact model is lossless
+                    isa: exec_isa,
                     prior_ns: model.prior_at(cell, class).unwrap_or(prior_ns),
                     obs_ns: 0.0,
                     count: 0,
                 });
             }
-            for (class, kind, est) in per
+            for (class, kind, isa, est) in per
                 .into_iter()
-                .filter(|&(c, k, _)| !(c == 0 && k == TransformKind::Forward))
+                .filter(|&(c, k, i, _)| !(c == 0 && k == TransformKind::Forward && i == exec_isa))
             {
                 cells.push(CellRecord {
                     edge,
@@ -125,6 +140,7 @@ impl WisdomV2 {
                     ctx,
                     kind,
                     batch: crate::autotune::model::class_batch(class),
+                    isa,
                     // the class's own (possibly batched) prior, so the
                     // record blends the same way after a reload
                     prior_ns: model.prior_at(cell, class).unwrap_or(prior_ns),
@@ -167,6 +183,7 @@ impl WisdomV2 {
                 ctx,
                 kind: TransformKind::Forward,
                 batch,
+                isa: Isa::Scalar,
                 prior_ns: ns,
                 obs_ns: 0.0,
                 count: 0,
@@ -189,6 +206,7 @@ impl WisdomV2 {
                     ctx,
                     kind: TransformKind::Forward,
                     batch: 1,
+                    isa: Isa::Scalar,
                     prior_ns: ns,
                     obs_ns: 0.0,
                     count: 0,
@@ -223,7 +241,14 @@ impl WisdomV2 {
             // models therefore restore forward records only; the split
             // observations wait for a `--split-kinds` restart.
             if c.count > 0 && (model.split_kinds() || c.kind == TransformKind::Forward) {
-                model.seed_kind_at((c.edge, c.stage, c.ctx), class, c.kind, c.obs_ns, c.count);
+                model.seed_kind_isa_at(
+                    (c.edge, c.stage, c.ctx),
+                    class,
+                    c.kind,
+                    c.isa,
+                    c.obs_ns,
+                    c.count,
+                );
             }
         }
     }
@@ -269,6 +294,7 @@ impl WisdomV2 {
                 o.insert("ctx".into(), Json::Num(c.ctx.index() as f64));
                 o.insert("kind".into(), Json::Str(c.kind.name().into()));
                 o.insert("batch".into(), Json::Num(c.batch as f64));
+                o.insert("isa".into(), Json::Str(c.isa.name().into()));
                 o.insert("prior_ns".into(), Json::Num(c.prior_ns));
                 o.insert("obs_ns".into(), Json::Num(c.obs_ns));
                 o.insert("count".into(), Json::Num(c.count as f64));
@@ -324,6 +350,15 @@ impl WisdomV2 {
                     .and_then(TransformKind::parse)
                     .ok_or_else(|| anyhow!("wisdom2: bad kind {:?}", c.get("kind")))?,
             };
+            // Absent in pre-SIMD-backend files: every observation in
+            // those came from the scalar kernels.
+            let isa = match c.get("isa") {
+                Json::Null => Isa::Scalar,
+                v => v
+                    .as_str()
+                    .and_then(Isa::parse)
+                    .ok_or_else(|| anyhow!("wisdom2: bad isa {:?}", c.get("isa")))?,
+            };
             let prior_ns = c.get("prior_ns").as_f64().ok_or_else(|| anyhow!("wisdom2: bad prior_ns"))?;
             if !prior_ns.is_finite() || prior_ns <= 0.0 {
                 bail!("wisdom2: non-positive prior for {edge}@{stage}");
@@ -333,7 +368,7 @@ impl WisdomV2 {
             if count > 0 && (!obs_ns.is_finite() || obs_ns <= 0.0) {
                 bail!("wisdom2: non-positive observation for {edge}@{stage}");
             }
-            cells.push(CellRecord { edge, stage, ctx, kind, batch, prior_ns, obs_ns, count });
+            cells.push(CellRecord { edge, stage, ctx, kind, batch, isa, prior_ns, obs_ns, count });
         }
         if cells.is_empty() {
             bail!("wisdom2: empty cell set");
@@ -369,6 +404,7 @@ mod tests {
                     ctx,
                     kind: TransformKind::Forward,
                     batch: 1,
+                    isa: Isa::Scalar,
                     ns: ns * 2.0,
                 });
             }
@@ -385,6 +421,7 @@ mod tests {
         assert_eq!(back.cells.iter().filter(|c| c.count > 0).count(), 5);
         assert!(back.cells.iter().all(|c| c.batch == 1));
         assert!(back.cells.iter().all(|c| c.kind == TransformKind::Forward));
+        assert!(back.cells.iter().all(|c| c.isa == Isa::Scalar));
     }
 
     #[test]
@@ -400,6 +437,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Forward,
                 batch: 16,
+                isa: Isa::Scalar,
                 ns: 16.0 * ns * 0.5,
             });
         }
@@ -472,6 +510,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Forward,
                 batch: 1,
+                isa: Isa::Scalar,
                 ns,
             });
         }
@@ -508,6 +547,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Forward,
                 batch: 16,
+                isa: Isa::Scalar,
                 prior_ns: base, // legacy files carry the class-0 prior here
                 obs_ns: base * 0.5,
                 count: 12,
@@ -565,6 +605,58 @@ mod tests {
     }
 
     #[test]
+    fn records_without_isa_field_default_to_scalar() {
+        // Files written before the SIMD codelet backends have no "isa"
+        // key: every observation in them came from the scalar kernels.
+        let w2 = WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":1,"prior_ns":5.0,"obs_ns":6.0,"count":3}]}"#,
+        )
+        .unwrap();
+        assert_eq!(w2.cells[0].isa, Isa::Scalar);
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x",
+                "cells":[{"edge":"R2","stage":0,"ctx":0,"isa":"sse2","prior_ns":5.0}]}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn non_scalar_observations_roundtrip_and_reseed_at_their_isa() {
+        // A model serving through a SIMD backend keys its live estimates
+        // by that ISA; the shutdown save must carry the backend and the
+        // reload must land the estimate back in the same slot.
+        let w = Wisdom::harvest(&mut SimCost::m1(256), "m1");
+        let mut model = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        model.set_exec_isa(Isa::Neon);
+        let (e, s, ctx, ns) = w.cells[0];
+        for _ in 0..8 {
+            model.observe(&EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Forward,
+                batch: 1,
+                isa: Isa::Neon,
+                ns: ns * 2.0,
+            });
+        }
+        let w2 = WisdomV2::from_model(&model, "m1");
+        let rec = w2.cells.iter().find(|c| c.count > 0).expect("observation record");
+        assert_eq!((rec.isa, rec.count), (Isa::Neon, 8));
+        let back = WisdomV2::from_json(&w2.to_json()).unwrap();
+        assert_eq!(back, w2);
+        let mut fresh = OnlineCost::from_wisdom(&w, 0.5, 4.0);
+        back.seed_model(&mut fresh);
+        assert_eq!(
+            fresh.observation_kind_isa_at((e, s, ctx), 0, TransformKind::Forward, Isa::Neon),
+            model.observation_kind_isa_at((e, s, ctx), 0, TransformKind::Forward, Isa::Neon)
+        );
+        // the scalar slot stays clean — backends never fold
+        assert_eq!(fresh.observation((e, s, ctx)), None);
+    }
+
+    #[test]
     fn split_kind_observations_roundtrip_and_reseed_at_their_kind() {
         // With the calibration split on, inverse observations persist
         // as "kind":"inverse" records and reseed the inverse slot.
@@ -579,6 +671,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Inverse,
                 batch: 1,
+                isa: Isa::Scalar,
                 ns: ns * 2.0,
             });
         }
@@ -616,6 +709,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Forward,
                 batch: 1,
+                isa: Isa::Scalar,
                 ns,
             });
             split.observe(&EdgeSample {
@@ -624,6 +718,7 @@ mod tests {
                 ctx,
                 kind: TransformKind::Inverse,
                 batch: 1,
+                isa: Isa::Scalar,
                 ns: ns * 9.0,
             });
         }
@@ -654,6 +749,7 @@ mod tests {
             ctx: crate::edge::Context::After(crate::edge::EdgeType::RU),
             kind: TransformKind::RealInverse,
             batch: 1,
+            isa: Isa::Neon,
             prior_ns: 10.0,
             obs_ns: 12.0,
             count: 4,

@@ -150,6 +150,10 @@ impl FftService {
                 if at.observer.is_none() {
                     at.observer = config.observer.clone();
                 }
+                // Workers dispatch whatever backend their executors
+                // detect; point the online model's ISA slot at the same
+                // backend so the traced samples land where planning reads.
+                at.exec_isa = Executor::new().isa();
                 Some(Arc::new(Autotuner::start(at, initial)))
             }
         };

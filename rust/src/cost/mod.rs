@@ -27,6 +27,7 @@
 use std::collections::HashMap;
 
 use crate::edge::{Context, EdgeType};
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 use crate::plan::Plan;
 
@@ -67,11 +68,21 @@ pub fn class_batch(class: usize) -> usize {
 /// * `k` — context order of the expanded graph (1 = the paper's model,
 ///   2 = §5.1). A strategy carrying its own order
 ///   (`Strategy::DijkstraContextAware { k }`) overrides this default.
+/// * `isa` — the codelet backend the plan will dispatch to, or `None`
+///   for the provider's native ISA (the backing tables' regime: the
+///   simulated machine's own vector unit, the host backend
+///   [`NativeCost`] timed). A pinned ISA reprices c2c edges through
+///   [`CostModel::isa_edge_mult`] and masks edges the register file
+///   can't hold ([`Isa::supports`]: no F32 on AVX2's 16-register file —
+///   the constraint becomes graph structure, see
+///   [`crate::graph::PlanningGraph`]). The RU boundary pass stays
+///   scalar in every backend, so its price is ISA-invariant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanningSurface {
     pub kind: TransformKind,
     pub batch_class: usize,
     pub k: usize,
+    pub isa: Option<Isa>,
 }
 
 impl Default for PlanningSurface {
@@ -81,9 +92,10 @@ impl Default for PlanningSurface {
 }
 
 impl PlanningSurface {
-    /// The historical implicit surface: unbatched forward c2c, k = 1.
+    /// The historical implicit surface: unbatched forward c2c, k = 1,
+    /// priced for the provider's native ISA.
     pub fn forward() -> PlanningSurface {
-        PlanningSurface { kind: TransformKind::Forward, batch_class: 0, k: 1 }
+        PlanningSurface { kind: TransformKind::Forward, batch_class: 0, k: 1, isa: None }
     }
 
     /// Unbatched surface for a kind (real kinds: the caller's cost model
@@ -105,6 +117,12 @@ impl PlanningSurface {
     pub fn with_batch_class(self, class: usize) -> PlanningSurface {
         assert!(class < BATCH_CLASSES, "batch class {class} out of range");
         PlanningSurface { batch_class: class, ..self }
+    }
+
+    /// Pin the surface to `isa`'s codelet backend (plans priced and
+    /// masked for that vector unit instead of the provider's native one).
+    pub fn with_isa(self, isa: Isa) -> PlanningSurface {
+        PlanningSurface { isa: Some(isa), ..self }
     }
 
     /// Representative batch width of the surface's class (1 = unbatched).
@@ -266,6 +284,21 @@ pub trait CostModel {
         b.max(1) as f64 * self.edge_ns(edge, stage, ctx)
     }
 
+    /// Relative price of running `edge`'s kernel on `isa` instead of the
+    /// provider's native ISA (1.0 = same price). Applied by the default
+    /// [`CostModel::surface_edge_ns`] to c2c edges of ISA-pinned
+    /// surfaces; RU never routes here (the boundary pass is scalar in
+    /// every backend). Providers whose tables already describe a
+    /// specific vector unit override: [`SimCost`] answers from the
+    /// machine's per-ISA calibration
+    /// ([`crate::sim::Machine::isa_mult`]), so scalar surfaces pay the
+    /// vector-collapse factor and fused blocks lose their register-file
+    /// advantage where the ISA can't hold them.
+    fn isa_edge_mult(&mut self, edge: EdgeType, isa: Isa) -> f64 {
+        let _ = (edge, isa);
+        1.0
+    }
+
     /// Per-transform weight of `edge` at `stage` in `ctx` on a
     /// [`PlanningSurface`] — the one query every planner walk makes. The
     /// default composes the per-axis methods:
@@ -278,11 +311,14 @@ pub trait CostModel {
     /// * batched classes answer
     ///   `edge_ns_batched(·, batch_width) / batch_width` — kinds share
     ///   the batched c2c surface (the kernels are literally shared);
-    /// * the unbatched class answers [`CostModel::edge_ns_kind`].
+    /// * the unbatched class answers [`CostModel::edge_ns_kind`];
+    /// * an ISA-pinned surface scales the composed c2c weight by
+    ///   [`CostModel::isa_edge_mult`] (RU is ISA-invariant: the boundary
+    ///   pass is scalar in every backend).
     ///
     /// Providers with a genuinely multi-axis store override this in one
     /// place (the autotuner's `OnlineCost` answers from its
-    /// per-(kind, cell, batch-class) live estimates).
+    /// per-(kind, cell, batch-class, isa) live estimates).
     fn surface_edge_ns(
         &mut self,
         edge: EdgeType,
@@ -297,11 +333,16 @@ pub trait CostModel {
             }
             return self.unpack_ns(ctx);
         }
-        if surface.batch_class > 0 {
+        let base = if surface.batch_class > 0 {
             let b = surface.batch_width();
-            return self.edge_ns_batched(edge, stage, ctx, b) / b as f64;
+            self.edge_ns_batched(edge, stage, ctx, b) / b as f64
+        } else {
+            self.edge_ns_kind(edge, stage, ctx, surface.kind)
+        };
+        match surface.isa {
+            Some(isa) => base * self.isa_edge_mult(edge, isa),
+            None => base,
         }
-        self.edge_ns_kind(edge, stage, ctx, surface.kind)
     }
 
     /// Steady-state time of a full plan: every edge costed in its true
@@ -357,6 +398,10 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
         (**self).edge_ns_batched(edge, stage, ctx, b)
     }
 
+    fn isa_edge_mult(&mut self, edge: EdgeType, isa: Isa) -> f64 {
+        (**self).isa_edge_mult(edge, isa)
+    }
+
     fn surface_edge_ns(
         &mut self,
         edge: EdgeType,
@@ -404,6 +449,17 @@ impl CostModel for SimCost {
 
     fn edge_ns(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
         self.machine.edge_ns(self.n, edge, stage, ctx)
+    }
+
+    /// Per-ISA calibration (see [`crate::sim::Machine::isa_mult`]): the
+    /// base tables describe the machine's native vector unit; pinning a
+    /// surface to another backend scales each c2c edge by the machine's
+    /// relative-throughput factor for that ISA, with an extra fused
+    /// multiplier (fused blocks live or die by the register file, so
+    /// they degrade hardest away from the native ISA — on the scalar
+    /// backend they lose their whole advantage).
+    fn isa_edge_mult(&mut self, edge: EdgeType, isa: Isa) -> f64 {
+        self.machine.isa_mult(edge, isa)
     }
 
     /// Native batched model (see [`crate::sim::Machine::edge_ns_batched`]):
@@ -769,6 +825,49 @@ mod tests {
         assert_eq!(m.unpack_ns_batched(ctx, 16), want);
         // batched unpack queries stay outside the §2.5 unbatched budget
         assert_eq!(m.measurements(), 0);
+    }
+
+    #[test]
+    fn unpinned_surface_isa_is_native_passthrough() {
+        // `isa: None` — the historical surfaces — must price exactly as
+        // before the axis existed (this is what keeps every golden plan
+        // stable).
+        let mut plain = SimCost::m1(1024);
+        let mut cost = SimCost::m1(1024);
+        let fwd = PlanningSurface::forward();
+        assert_eq!(fwd.isa, None);
+        assert_eq!(
+            fwd.edge_ns(&mut cost, EdgeType::F8, 7, Start),
+            plain.edge_ns(EdgeType::F8, 7, Start)
+        );
+        // pinning the machine's own native ISA is also a passthrough
+        let native = fwd.with_isa(crate::sim::Machine::m1().params.isa);
+        assert_eq!(
+            native.edge_ns(&mut cost, EdgeType::F8, 7, Start),
+            plain.edge_ns(EdgeType::F8, 7, Start)
+        );
+    }
+
+    #[test]
+    fn pinned_isa_scales_c2c_edges_but_never_ru() {
+        let mut plain = SimCost::m1(512);
+        let mut cost = SimCost::m1(512);
+        let scalar = PlanningSurface::for_kind(TransformKind::RealForward).with_isa(Isa::Scalar);
+        // c2c edges pay the scalar collapse: radix > 1×, fused even more
+        let r4 = plain.edge_ns(EdgeType::R4, 0, Start);
+        let f8 = plain.edge_ns(EdgeType::F8, 6, Start);
+        let r4_s = scalar.edge_ns(&mut cost, EdgeType::R4, 0, Start);
+        let f8_s = scalar.edge_ns(&mut cost, EdgeType::F8, 6, Start);
+        assert!(r4_s > r4, "{r4_s} vs {r4}");
+        assert!(f8_s / f8 > r4_s / r4, "fused degrades harder than radix off-ISA");
+        // the RU boundary pass is scalar in every backend: ISA-invariant
+        let ru = plain.unpack_ns(Context::After(EdgeType::F8));
+        assert_eq!(scalar.edge_ns(&mut cost, EdgeType::RU, 9, Context::After(EdgeType::F8)), ru);
+        // batched classes compose the same multiplier
+        let b8 = PlanningSurface::forward().with_batch(8).with_isa(Isa::Scalar);
+        let whole = plain.edge_ns_batched(EdgeType::R4, 0, Start, 8);
+        let want = whole / 8.0 * crate::sim::Machine::m1().isa_mult(EdgeType::R4, Isa::Scalar);
+        assert!((b8.edge_ns(&mut cost, EdgeType::R4, 0, Start) - want).abs() < 1e-12);
     }
 
     #[test]

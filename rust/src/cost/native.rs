@@ -61,6 +61,13 @@ impl NativeCost {
         NativeCost::new(n, MeasureSpec::QUICK)
     }
 
+    /// The ISA whose codelets this provider times — the executor's
+    /// detected table, so measured weights describe exactly what serving
+    /// dispatches (scalar when `SPFFT_FORCE_SCALAR` is set).
+    pub fn isa(&self) -> crate::isa::Isa {
+        self.ex.isa()
+    }
+
     fn step(&mut self, edge: EdgeType, stage: usize) -> CompiledStep {
         if let Some(s) = self.steps.get(&(edge, stage)) {
             return s.clone();
@@ -131,6 +138,7 @@ impl NativeCost {
         let n = self.n;
         let timed = self.step(edge, stage);
         let tw = real::real_twiddles(self.ex.twiddle_cache(), n);
+        let k = self.ex.kernels();
         self.ensure_ru_buf();
         let buf = &self.buf_ru;
         let mut pre_fn = || {
@@ -141,7 +149,7 @@ impl NativeCost {
         let mut timed_fn = || {
             let mut guard = buf.borrow_mut();
             let b = guard.as_mut().unwrap();
-            run_step(&timed, &mut b.re[..n], &mut b.im[..n]);
+            run_step(k, &timed, &mut b.re[..n], &mut b.im[..n]);
         };
         measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
     }
@@ -153,6 +161,7 @@ impl NativeCost {
         let n = self.n;
         let timed = self.step(edge, stage);
         let tw = real::real_twiddles(self.ex.twiddle_cache(), n);
+        let k = self.ex.kernels();
         self.ensure_batch_buf_ru(b);
         let buf = std::cell::RefCell::new(self.bufs_ru_b.borrow_mut().remove(&b).unwrap());
         let lanes = buf.borrow().lanes();
@@ -164,7 +173,7 @@ impl NativeCost {
         let mut timed_fn = || {
             let mut buf = buf.borrow_mut();
             let buf = &mut *buf;
-            run_step_b(&timed, &mut buf.re[..n * lanes], &mut buf.im[..n * lanes], lanes);
+            run_step_b(k, &timed, &mut buf.re[..n * lanes], &mut buf.im[..n * lanes], lanes);
         };
         let ns = measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns;
         self.bufs_ru_b.borrow_mut().insert(b, buf.into_inner());
@@ -195,11 +204,12 @@ impl CostModel for NativeCost {
         // paper's in-place benchmark loops); FFT passes are numerically
         // stable at these sizes so timing is unaffected. The RefCell lets
         // the prefix and timed closures share the buffer sequentially.
+        let k = self.ex.kernels();
         let buf = &self.buf;
         let mut timed_fn = || {
             let mut b = buf.borrow_mut();
             let b = &mut *b;
-            run_step(&timed, &mut b.re, &mut b.im);
+            run_step(k, &timed, &mut b.re, &mut b.im);
         };
         match prefix {
             None => measure(self.spec, None, &mut timed_fn).ns,
@@ -207,7 +217,7 @@ impl CostModel for NativeCost {
                 let mut pre_fn = || {
                     let mut b = buf.borrow_mut();
                     let b = &mut *b;
-                    run_step(&pre, &mut b.re, &mut b.im);
+                    run_step(k, &pre, &mut b.re, &mut b.im);
                 };
                 measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
             }
@@ -239,6 +249,7 @@ impl CostModel for NativeCost {
                 *guard = Some(SplitComplex::random(2 * h, 0x2F00D));
             }
         }
+        let k = self.ex.kernels();
         let buf = &self.buf_ru;
         let mut timed_fn = || {
             let mut guard = buf.borrow_mut();
@@ -251,7 +262,7 @@ impl CostModel for NativeCost {
                 let mut pre_fn = || {
                     let mut guard = buf.borrow_mut();
                     let b = guard.as_mut().unwrap();
-                    run_step(&pre, &mut b.re[..h], &mut b.im[..h]);
+                    run_step(k, &pre, &mut b.re[..h], &mut b.im[..h]);
                 };
                 measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
             }
@@ -277,12 +288,13 @@ impl CostModel for NativeCost {
         // each timed iteration pays one RefCell borrow — the same
         // per-iteration overhead as the scalar path (a per-trial map
         // lookup would skew cheap-edge batched measurements upward).
+        let k = self.ex.kernels();
         let buf = std::cell::RefCell::new(self.bufs_b.borrow_mut().remove(&b).unwrap());
         let lanes = buf.borrow().lanes();
         let mut timed_fn = || {
             let mut buf = buf.borrow_mut();
             let buf = &mut *buf;
-            run_step_b(&timed, &mut buf.re, &mut buf.im, lanes);
+            run_step_b(k, &timed, &mut buf.re, &mut buf.im, lanes);
         };
         let ns = match prefix {
             None => measure(self.spec, None, &mut timed_fn).ns,
@@ -290,7 +302,7 @@ impl CostModel for NativeCost {
                 let mut pre_fn = || {
                     let mut buf = buf.borrow_mut();
                     let buf = &mut *buf;
-                    run_step_b(&pre, &mut buf.re, &mut buf.im, lanes);
+                    run_step_b(k, &pre, &mut buf.re, &mut buf.im, lanes);
                 };
                 measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
             }
@@ -318,6 +330,7 @@ impl CostModel for NativeCost {
             }
             _ => None,
         };
+        let k = self.ex.kernels();
         self.ensure_batch_buf_ru(b);
         let buf = std::cell::RefCell::new(self.bufs_ru_b.borrow_mut().remove(&b).unwrap());
         let lanes = buf.borrow().lanes();
@@ -332,7 +345,7 @@ impl CostModel for NativeCost {
                 let mut pre_fn = || {
                     let mut buf = buf.borrow_mut();
                     let buf = &mut *buf;
-                    run_step_b(&pre, &mut buf.re[..h * lanes], &mut buf.im[..h * lanes], lanes);
+                    run_step_b(k, &pre, &mut buf.re[..h * lanes], &mut buf.im[..h * lanes], lanes);
                 };
                 measure(self.spec, Some(&mut pre_fn), &mut timed_fn).ns
             }

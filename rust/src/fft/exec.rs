@@ -23,12 +23,13 @@
 use std::sync::Arc;
 
 use super::batch::BatchBuffer;
-use super::fused::{fused16, fused16_b, fused32, fused32_b, fused8, fused8_b, fused_twiddles};
-use super::passes::{radix2, radix2_b, radix4, radix4_b, radix8, radix8_b};
+use super::fused::fused_twiddles;
 use super::real;
+use super::simd::{self, Kernels};
 use super::twiddle::{TwiddleCache, TwiddleVec};
 use super::{log2i, SplitComplex};
 use crate::edge::EdgeType;
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 use crate::plan::Plan;
 
@@ -53,6 +54,10 @@ pub struct CompiledPlan {
     /// Scale folded into the final pass (1/n_c2c for inverse kinds).
     scale: f32,
     steps: Vec<CompiledStep>,
+    /// Codelet table resolved once at compile time — every c2c step of
+    /// every run dispatches through these fn pointers. Boundary passes
+    /// (RU, pack/unpack, bitrev) stay scalar; they are permutation-bound.
+    kernels: &'static Kernels,
 }
 
 /// Compile a single edge at (n, stage) — shared by plan compilation and
@@ -93,33 +98,35 @@ pub fn compile_step(
     CompiledStep { edge, stage, tw }
 }
 
-/// Run one compiled c2c step in place. RU steps are boundary passes run
-/// by the kind dispatch in [`CompiledPlan::run`], never through here.
-pub fn run_step(step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
+/// Run one compiled c2c step in place through `k`'s codelets. RU steps
+/// are boundary passes run by the kind dispatch in [`CompiledPlan::run`],
+/// never through here.
+pub fn run_step(k: &Kernels, step: &CompiledStep, re: &mut [f32], im: &mut [f32]) {
     match step.edge {
-        EdgeType::R2 => radix2(re, im, step.stage, &step.tw[0]),
-        EdgeType::R4 => radix4(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
-        EdgeType::R8 => radix8(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
-        EdgeType::F8 => fused8(re, im, step.stage, &step.tw),
-        EdgeType::F16 => fused16(re, im, step.stage, &step.tw),
-        EdgeType::F32 => fused32(re, im, step.stage, &step.tw),
+        EdgeType::R2 => (k.radix2)(re, im, step.stage, &step.tw[0]),
+        EdgeType::R4 => (k.radix4)(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
+        EdgeType::R8 => (k.radix8)(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2]),
+        EdgeType::F8 => (k.fused8)(re, im, step.stage, &step.tw),
+        EdgeType::F16 => (k.fused16)(re, im, step.stage, &step.tw),
+        EdgeType::F32 => (k.fused32)(re, im, step.stage, &step.tw),
         EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
     }
 }
 
-/// Run one compiled c2c step over a lane-blocked batch buffer in place.
-pub fn run_step_b(step: &CompiledStep, re: &mut [f32], im: &mut [f32], lanes: usize) {
+/// Run one compiled c2c step over a lane-blocked batch buffer in place
+/// through `k`'s codelets.
+pub fn run_step_b(k: &Kernels, step: &CompiledStep, re: &mut [f32], im: &mut [f32], lanes: usize) {
     match step.edge {
-        EdgeType::R2 => radix2_b(re, im, step.stage, &step.tw[0], lanes),
+        EdgeType::R2 => (k.radix2_b)(re, im, step.stage, &step.tw[0], lanes),
         EdgeType::R4 => {
-            radix4_b(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
+            (k.radix4_b)(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
         }
         EdgeType::R8 => {
-            radix8_b(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
+            (k.radix8_b)(re, im, step.stage, &step.tw[0], &step.tw[1], &step.tw[2], lanes)
         }
-        EdgeType::F8 => fused8_b(re, im, step.stage, &step.tw, lanes),
-        EdgeType::F16 => fused16_b(re, im, step.stage, &step.tw, lanes),
-        EdgeType::F32 => fused32_b(re, im, step.stage, &step.tw, lanes),
+        EdgeType::F8 => (k.fused8_b)(re, im, step.stage, &step.tw, lanes),
+        EdgeType::F16 => (k.fused16_b)(re, im, step.stage, &step.tw, lanes),
+        EdgeType::F32 => (k.fused32_b)(re, im, step.stage, &step.tw, lanes),
         EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
     }
 }
@@ -136,6 +143,17 @@ impl CompiledPlan {
         self.kind.complex_len(self.n)
     }
 
+    /// The ISA whose codelets this plan dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.kernels.isa
+    }
+
+    /// The resolved codelet table (for per-edge measurement paths that
+    /// must time exactly what this plan runs).
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
+    }
+
     /// Execute in place (bitrev applied last if compiled with it; kind
     /// boundary passes around the c2c core as documented on [`Executor::compile_kind`]).
     pub fn run(&self, re: &mut [f32], im: &mut [f32]) {
@@ -144,7 +162,7 @@ impl CompiledPlan {
         match self.kind {
             TransformKind::Forward => {
                 for step in &self.steps {
-                    run_step(step, re, im);
+                    run_step(self.kernels, step, re, im);
                 }
                 if self.bitrev {
                     super::bitrev::bit_reverse_permute(re, im);
@@ -153,7 +171,7 @@ impl CompiledPlan {
             TransformKind::Inverse => {
                 real::negate(im);
                 for step in &self.steps {
-                    run_step(step, re, im);
+                    run_step(self.kernels, step, re, im);
                 }
                 if self.bitrev {
                     super::bitrev::bit_reverse_permute(re, im);
@@ -165,7 +183,7 @@ impl CompiledPlan {
                 real::pack_even_odd(re, im, h);
                 let last = self.steps.len() - 1;
                 for step in &self.steps[..last] {
-                    run_step(step, &mut re[..h], &mut im[..h]);
+                    run_step(self.kernels, step, &mut re[..h], &mut im[..h]);
                 }
                 super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
                 real::unpack_r2c(re, im, &self.steps[last].tw[0]);
@@ -174,7 +192,7 @@ impl CompiledPlan {
                 let h = self.cn();
                 real::pack_c2r(re, im, &self.steps[0].tw[0]);
                 for step in &self.steps[1..] {
-                    run_step(step, &mut re[..h], &mut im[..h]);
+                    run_step(self.kernels, step, &mut re[..h], &mut im[..h]);
                 }
                 super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
                 real::interleave_scale(re, im, self.scale);
@@ -211,7 +229,7 @@ impl CompiledPlan {
                 }
                 for step in &self.steps {
                     let t0 = std::time::Instant::now();
-                    run_step(step, re, im);
+                    run_step(self.kernels, step, re, im);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 if self.bitrev {
@@ -227,7 +245,7 @@ impl CompiledPlan {
                 let last = self.steps.len() - 1;
                 for step in &self.steps[..last] {
                     let t0 = std::time::Instant::now();
-                    run_step(step, &mut re[..h], &mut im[..h]);
+                    run_step(self.kernels, step, &mut re[..h], &mut im[..h]);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
@@ -244,7 +262,7 @@ impl CompiledPlan {
                 on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
                 for step in &self.steps[1..] {
                     let t0 = std::time::Instant::now();
-                    run_step(step, &mut re[..h], &mut im[..h]);
+                    run_step(self.kernels, step, &mut re[..h], &mut im[..h]);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 super::bitrev::bit_reverse_permute(&mut re[..h], &mut im[..h]);
@@ -267,7 +285,7 @@ impl CompiledPlan {
         match self.kind {
             TransformKind::Forward => {
                 for step in &self.steps {
-                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                    run_step_b(self.kernels, step, &mut buf.re, &mut buf.im, lanes);
                 }
                 if self.bitrev {
                     super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
@@ -276,7 +294,7 @@ impl CompiledPlan {
             TransformKind::Inverse => {
                 real::negate(&mut buf.im);
                 for step in &self.steps {
-                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                    run_step_b(self.kernels, step, &mut buf.re, &mut buf.im, lanes);
                 }
                 if self.bitrev {
                     super::bitrev::bit_reverse_permute_b(&mut buf.re, &mut buf.im, lanes);
@@ -288,7 +306,7 @@ impl CompiledPlan {
                 real::pack_even_odd_b(&mut buf.re, &mut buf.im, self.cn(), lanes);
                 let last = self.steps.len() - 1;
                 for step in &self.steps[..last] {
-                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    run_step_b(self.kernels, step, &mut buf.re[..half], &mut buf.im[..half], lanes);
                 }
                 super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
                 real::unpack_r2c_b(&mut buf.re, &mut buf.im, &self.steps[last].tw[0], lanes);
@@ -297,7 +315,7 @@ impl CompiledPlan {
                 let half = self.cn() * lanes;
                 real::pack_c2r_b(&mut buf.re, &mut buf.im, &self.steps[0].tw[0], lanes);
                 for step in &self.steps[1..] {
-                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    run_step_b(self.kernels, step, &mut buf.re[..half], &mut buf.im[..half], lanes);
                 }
                 super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
                 real::interleave_scale_b(&mut buf.re, &mut buf.im, self.scale, lanes);
@@ -323,7 +341,7 @@ impl CompiledPlan {
                 }
                 for step in &self.steps {
                     let t0 = std::time::Instant::now();
-                    run_step_b(step, &mut buf.re, &mut buf.im, lanes);
+                    run_step_b(self.kernels, step, &mut buf.re, &mut buf.im, lanes);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 if self.bitrev {
@@ -339,7 +357,7 @@ impl CompiledPlan {
                 let last = self.steps.len() - 1;
                 for step in &self.steps[..last] {
                     let t0 = std::time::Instant::now();
-                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    run_step_b(self.kernels, step, &mut buf.re[..half], &mut buf.im[..half], lanes);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
@@ -356,7 +374,7 @@ impl CompiledPlan {
                 on_step(ru.edge, ru.stage, t0.elapsed().as_nanos() as f64);
                 for step in &self.steps[1..] {
                     let t0 = std::time::Instant::now();
-                    run_step_b(step, &mut buf.re[..half], &mut buf.im[..half], lanes);
+                    run_step_b(self.kernels, step, &mut buf.re[..half], &mut buf.im[..half], lanes);
                     on_step(step.edge, step.stage, t0.elapsed().as_nanos() as f64);
                 }
                 super::bitrev::bit_reverse_permute_b(&mut buf.re[..half], &mut buf.im[..half], lanes);
@@ -377,15 +395,42 @@ impl CompiledPlan {
     }
 }
 
-/// Executor: owns the twiddle cache, compiles plans and single edges.
-#[derive(Debug, Default)]
+/// Executor: owns the twiddle cache and the codelet table, compiles
+/// plans and single edges. The table is resolved once at construction
+/// ([`simd::detect`]: best backend for the host, or scalar when
+/// `SPFFT_FORCE_SCALAR` is set) and stamped into every [`CompiledPlan`].
+#[derive(Debug)]
 pub struct Executor {
     cache: TwiddleCache,
+    kernels: &'static Kernels,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Executor {
     pub fn new() -> Self {
-        Self::default()
+        Self { cache: TwiddleCache::default(), kernels: simd::detect() }
+    }
+
+    /// Executor pinned to `isa`'s codelets, falling back to scalar when
+    /// that backend isn't available on this host — the parity-test and
+    /// `--isa` override path ([`simd::for_isa`]).
+    pub fn with_isa(isa: Isa) -> Self {
+        Self { cache: TwiddleCache::default(), kernels: simd::for_isa(isa) }
+    }
+
+    /// The ISA every plan compiled by this executor dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.kernels.isa
+    }
+
+    /// The resolved codelet table.
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
     }
 
     /// Compile `plan` for forward n-point transforms (the historical
@@ -432,7 +477,7 @@ impl Executor {
             _ => {}
         }
         let scale = if kind.is_inverse() { 1.0 / cn as f32 } else { 1.0 };
-        CompiledPlan { n, kind, plan: plan.clone(), bitrev, scale, steps }
+        CompiledPlan { n, kind, plan: plan.clone(), bitrev, scale, steps, kernels: self.kernels }
     }
 
     /// Compile a single edge (for per-edge measurement).
@@ -770,6 +815,44 @@ mod tests {
         let cp = ex.compile(&Plan::parse("R4,R4,R2,F8").unwrap(), 256, true);
         let mut buf = crate::fft::BatchBuffer::new(128, 4);
         cp.run_batch(&mut buf);
+    }
+
+    #[test]
+    fn executor_stamps_its_isa_into_plans() {
+        let mut ex = Executor::with_isa(crate::isa::Isa::Scalar);
+        assert_eq!(ex.isa(), crate::isa::Isa::Scalar);
+        let cp = ex.compile(&Plan::parse("R4,R4,R2,F8").unwrap(), 256, true);
+        assert_eq!(cp.isa(), crate::isa::Isa::Scalar);
+        // the default executor carries whatever the host detects
+        assert_eq!(Executor::new().isa(), simd::detect().isa);
+    }
+
+    #[test]
+    fn detected_backend_matches_forced_scalar_bitwise() {
+        // End-to-end dispatch parity on this host: whatever backend
+        // detect() resolves, whole-plan outputs are bit-identical to the
+        // scalar table, for every kind and for batched execution.
+        let n = 256;
+        let mut native = Executor::new();
+        let mut scalar = Executor::with_isa(crate::isa::Isa::Scalar);
+        let c2c = Plan::parse("R4,R4,R2,F8").unwrap();
+        let half = Plan::parse("R4,R2,R2,F8").unwrap(); // 7 levels for h = 128
+        for kind in crate::kind::ALL_KINDS {
+            let plan = if kind.is_real() { &half } else { &c2c };
+            let np = native.compile_kind(plan, n, true, kind);
+            let sp = scalar.compile_kind(plan, n, true, kind);
+            let input = SplitComplex::random(n, 1000 + kind.index() as u64);
+            assert_eq!(np.run_on(&input), sp.run_on(&input), "{kind}");
+            let inputs: Vec<SplitComplex> =
+                (0..5).map(|i| SplitComplex::random(n, 2000 + i)).collect();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            let mut nb = crate::fft::BatchBuffer::new(n, 5);
+            nb.gather(&refs);
+            let mut sb = nb.clone();
+            np.run_batch(&mut nb);
+            sp.run_batch(&mut sb);
+            assert_eq!(nb, sb, "{kind}: batched");
+        }
     }
 
     #[test]

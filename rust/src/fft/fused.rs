@@ -32,7 +32,7 @@ fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
 /// Tile width: groups processed together so the butterfly arithmetic
 /// vectorizes across them (the scalar-code analogue of the paper's
 /// process-4-butterflies-per-NEON-instruction structure).
-const TILE: usize = 8;
+pub(crate) const TILE: usize = 8;
 
 /// Generic fused block over B complex locals. `wt[r]` must be the
 /// combined sub-stage table from [`fused_twiddles`]: entry `k*e + j` is
@@ -83,9 +83,10 @@ fn fused_generic<const B: usize>(
     }
 }
 
-/// One group, scalar (remainder path).
+/// One group, scalar (remainder path; also the tail of the SIMD
+/// codelets in [`super::simd`], so every remainder is *the* scalar code).
 #[inline(always)]
-fn fused_group_scalar<const B: usize>(
+pub(crate) fn fused_group_scalar<const B: usize>(
     re: &mut [f32],
     im: &mut [f32],
     base: usize,

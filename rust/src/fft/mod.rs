@@ -15,6 +15,9 @@
 //!   split-unpack (the RU step), inverse boundary conjugation, and the
 //!   folded final-pass scales — the c2c core is kind-agnostic;
 //! * [`bitrev`] — bit-reversal permutation;
+//! * [`simd`] — explicit SIMD codelet backends (NEON / AVX2 / portable)
+//!   of every kernel above, bit-identical to the scalar forms, selected
+//!   once per compiled plan through a [`simd::Kernels`] vtable;
 //! * [`exec`] — the plan executor (compiled plans over a twiddle cache),
 //!   parameterized by [`crate::kind::TransformKind`];
 //! * [`reference`] — O(n²) f64 DFT used as ground truth in tests.
@@ -31,6 +34,7 @@ pub mod fused;
 pub mod passes;
 pub mod real;
 pub mod reference;
+pub mod simd;
 pub mod twiddle;
 
 pub use batch::{BatchBuffer, BatchBufferPool, LANE};

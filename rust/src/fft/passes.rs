@@ -14,7 +14,7 @@ use super::twiddle::TwiddleVec;
 pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
 
 #[inline(always)]
-fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+pub(crate) fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
     (ar * br - ai * bi, ar * bi + ai * br)
 }
 
@@ -105,7 +105,7 @@ pub fn radix4(
 
 /// Multiply by W_8^k using only 1/√2 scaling + add/sub (paper trick).
 #[inline(always)]
-fn w8_rotate(xr: f32, xi: f32, k: usize) -> (f32, f32) {
+pub(crate) fn w8_rotate(xr: f32, xi: f32, k: usize) -> (f32, f32) {
     match k {
         0 => (xr, xi),
         1 => ((xr + xi) * INV_SQRT2, (xi - xr) * INV_SQRT2), // (1-j)/√2
@@ -372,7 +372,7 @@ pub fn radix8_b(
 
 /// Split a block of length 8·e into eight e-length mutable slices.
 #[inline(always)]
-fn split8(block: &mut [f32], e: usize) -> [&mut [f32]; 8] {
+pub(crate) fn split8(block: &mut [f32], e: usize) -> [&mut [f32]; 8] {
     let (s0, rest) = block.split_at_mut(e);
     let (s1, rest) = rest.split_at_mut(e);
     let (s2, rest) = rest.split_at_mut(e);

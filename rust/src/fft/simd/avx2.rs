@@ -1,0 +1,193 @@
+//! x86-64 AVX2 codelet backend: 8-lane f32 over the 16×256-bit vector
+//! file. Twice NEON's lane width, half its register count — which is
+//! exactly why [`crate::isa::Isa::supports`] masks the F32 fused block
+//! here (paper Table 1: "impossible on AVX2's 16-register file"); this
+//! table still carries `fused32` entries for parity testing, but no
+//! AVX2 planning surface will ever schedule them.
+//!
+//! AVX2 is *not* baseline x86-64, so every kernel body compiles inside
+//! a `#[target_feature(enable = "avx2")]` wrapper (the generic bodies
+//! and [`Vf32`] methods are `#[inline(always)]`, so they inherit the
+//! feature), and the table is only handed out after
+//! `is_x86_feature_detected!("avx2")` (see `for_isa` in the parent
+//! module) — the safe wrappers rely on that gate.
+
+#![allow(unused_unsafe)]
+
+use std::sync::Arc;
+
+use core::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    _mm256_sub_ps, _mm256_xor_ps,
+};
+
+use super::super::twiddle::TwiddleVec;
+use super::generic::{self, Vf32};
+use super::Kernels;
+use crate::isa::Isa;
+
+/// One AVX2 ymm register of 8 f32 lanes.
+#[derive(Clone, Copy)]
+struct V8(__m256);
+
+impl Vf32 for V8 {
+    const LANES: usize = 8;
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= 8);
+        // Safety: length checked; unaligned load of 8 f32.
+        V8(unsafe { _mm256_loadu_ps(src.as_ptr()) })
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 8);
+        // Safety: length checked; unaligned store of 8 f32.
+        unsafe { _mm256_storeu_ps(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        V8(unsafe { _mm256_set1_ps(x) })
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        V8(unsafe { _mm256_add_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        V8(unsafe { _mm256_sub_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        // Plain multiply, never FMA: bit-parity with the scalar kernels
+        // (which round after every op) is the contract.
+        V8(unsafe { _mm256_mul_ps(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn neg(self) -> Self {
+        // Sign-bit flip — the exact IEEE negation the scalar `-x` does.
+        V8(unsafe { _mm256_xor_ps(self.0, _mm256_set1_ps(-0.0)) })
+    }
+}
+
+/// Declare a `#[target_feature(enable = "avx2")]` body plus the safe
+/// vtable entry that calls it (safety: the table is gated on runtime
+/// AVX2 detection in `for_isa`).
+macro_rules! avx2_kernel {
+    ($name:ident, $tf:ident, ($($arg:ident: $ty:ty),*), $body:expr) => {
+        #[target_feature(enable = "avx2")]
+        unsafe fn $tf($($arg: $ty),*) {
+            $body
+        }
+
+        fn $name($($arg: $ty),*) {
+            unsafe { $tf($($arg),*) }
+        }
+    };
+}
+
+avx2_kernel!(
+    radix2,
+    radix2_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec),
+    generic::radix2_v::<V8>(re, im, stage, w1)
+);
+
+avx2_kernel!(
+    radix4,
+    radix4_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w3: &TwiddleVec),
+    generic::radix4_v::<V8>(re, im, stage, w1, w2, w3)
+);
+
+avx2_kernel!(
+    radix8,
+    radix8_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w4: &TwiddleVec),
+    generic::radix8_v::<V8>(re, im, stage, w1, w2, w4)
+);
+
+avx2_kernel!(
+    fused8,
+    fused8_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]),
+    generic::fused_v::<V8, 8>(re, im, stage, wt)
+);
+
+avx2_kernel!(
+    fused16,
+    fused16_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]),
+    generic::fused_v::<V8, 16>(re, im, stage, wt)
+);
+
+avx2_kernel!(
+    fused32,
+    fused32_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]),
+    generic::fused_v::<V8, 32>(re, im, stage, wt)
+);
+
+avx2_kernel!(
+    radix2_b,
+    radix2_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, lanes: usize),
+    generic::radix2_b_v::<V8>(re, im, stage, w1, lanes)
+);
+
+avx2_kernel!(
+    radix4_b,
+    radix4_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w3: &TwiddleVec, lanes: usize),
+    generic::radix4_b_v::<V8>(re, im, stage, w1, w2, w3, lanes)
+);
+
+avx2_kernel!(
+    radix8_b,
+    radix8_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w4: &TwiddleVec, lanes: usize),
+    generic::radix8_b_v::<V8>(re, im, stage, w1, w2, w4, lanes)
+);
+
+avx2_kernel!(
+    fused8_b,
+    fused8_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize),
+    generic::fused_b_v::<V8, 8>(re, im, stage, wt, lanes)
+);
+
+avx2_kernel!(
+    fused16_b,
+    fused16_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize),
+    generic::fused_b_v::<V8, 16>(re, im, stage, wt, lanes)
+);
+
+avx2_kernel!(
+    fused32_b,
+    fused32_b_tf,
+    (re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize),
+    generic::fused_b_v::<V8, 32>(re, im, stage, wt, lanes)
+);
+
+pub(super) static KERNELS: Kernels = Kernels {
+    isa: Isa::Avx2,
+    radix2,
+    radix4,
+    radix8,
+    fused8,
+    fused16,
+    fused32,
+    radix2_b,
+    radix4_b,
+    radix8_b,
+    fused8_b,
+    fused16_b,
+    fused32_b,
+};

@@ -1,0 +1,932 @@
+//! ISA-generic SIMD codelet bodies over the [`Vf32`] lane abstraction.
+//!
+//! Every body here mirrors its scalar counterpart in
+//! [`crate::fft::passes`] / [`crate::fft::fused`] **operation for
+//! operation**: the same loads, the same add/sub/mul order, complex
+//! multiplies as separate mul + sub / mul + add (never FMA), and scalar
+//! remainder tails that call the *actual* scalar helpers. Because every
+//! lane op is a correctly-rounded IEEE-754 f32 operation, the vector
+//! forms are **bit-identical** to the scalar kernels on every input —
+//! the dispatch-parity property the executor tests pin
+//! (`tests/simd_parity.rs`).
+//!
+//! Backends (`neon`, `avx2`, `portable`) only implement [`Vf32`] — a
+//! load/store/splat/add/sub/mul/neg lane set — and instantiate these
+//! bodies, the codelet-generator discipline of FFTW (PAPERS.md,
+//! *Implementing FFTs in Practice*): one algebra source, many
+//! instruction sets. `#[inline(always)]` throughout so the bodies
+//! compile *inside* `#[target_feature]` wrappers and inherit the
+//! feature.
+
+use std::sync::Arc;
+
+use super::super::batch::LANE as BL;
+use super::super::fused::{fused_group_scalar, TILE};
+use super::super::passes::{cmul, split8, w8_rotate, INV_SQRT2};
+use super::super::twiddle::TwiddleVec;
+
+/// A small fixed-width f32 vector: the whole surface a backend must
+/// provide. `load`/`store` touch the first `LANES` elements of the
+/// slice (callers guarantee length by construction; implementations
+/// `debug_assert` it).
+pub trait Vf32: Copy {
+    /// f32 lanes per vector register.
+    const LANES: usize;
+    /// Load `LANES` floats from the head of `src`.
+    fn load(src: &[f32]) -> Self;
+    /// Store `LANES` floats to the head of `dst`.
+    fn store(self, dst: &mut [f32]);
+    /// Broadcast one float to all lanes.
+    fn splat(x: f32) -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn neg(self) -> Self;
+}
+
+/// Software vector: plain f32 lane arithmetic at an arbitrary width.
+/// Exists so the generic bodies are exercised (and their bit-identity
+/// pinned) on *every* host, including ones with no SIMD backend
+/// compiled in; also documents exactly what a hardware lane must
+/// compute.
+#[derive(Clone, Copy)]
+pub struct Soft<const L: usize>([f32; L]);
+
+impl<const L: usize> Vf32 for Soft<L> {
+    const LANES: usize = L;
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= L);
+        let mut v = [0f32; L];
+        v.copy_from_slice(&src[..L]);
+        Soft(v)
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= L);
+        dst[..L].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        Soft([x; L])
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(o.0) {
+            *a += b;
+        }
+        Soft(v)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(o.0) {
+            *a -= b;
+        }
+        Soft(v)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(o.0) {
+            *a *= b;
+        }
+        Soft(v)
+    }
+
+    #[inline(always)]
+    fn neg(self) -> Self {
+        let mut v = self.0;
+        for a in v.iter_mut() {
+            *a = -*a;
+        }
+        Soft(v)
+    }
+}
+
+/// Vector complex multiply, same operation order as [`cmul`]:
+/// `(ar·br − ai·bi, ar·bi + ai·br)` as two muls + sub, two muls + add.
+#[inline(always)]
+fn vcmul<V: Vf32>(ar: V, ai: V, br: V, bi: V) -> (V, V) {
+    (ar.mul(br).sub(ai.mul(bi)), ar.mul(bi).add(ai.mul(br)))
+}
+
+/// Vector [`w8_rotate`]: multiply by W_8^k via 1/√2 scaling + add/sub,
+/// exactly the scalar expression per lane (negation before the scale,
+/// matching `-(xr + xi) * INV_SQRT2`).
+#[inline(always)]
+fn vw8_rotate<V: Vf32>(xr: V, xi: V, k: usize) -> (V, V) {
+    let s = V::splat(INV_SQRT2);
+    match k {
+        0 => (xr, xi),
+        1 => (xr.add(xi).mul(s), xi.sub(xr).mul(s)),
+        2 => (xi, xr.neg()),
+        3 => (xi.sub(xr).mul(s), xr.add(xi).neg().mul(s)),
+        _ => unreachable!(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Radix passes (vector over the twiddle index j; scalar tail).
+// ---------------------------------------------------------------------
+
+/// [`crate::fft::passes::radix2`], vectorized across j.
+#[inline(always)]
+pub fn radix2_v<V: Vf32>(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 2, "R2 at stage {stage} invalid for n={n}");
+    let half = m / 2;
+    debug_assert_eq!(w1.len(), half);
+    let (w1r, w1i) = (&w1.re[..half], &w1.im[..half]);
+    let mut base = 0;
+    while base < n {
+        let (top, bot) = re[base..base + m].split_at_mut(half);
+        let (topi, boti) = im[base..base + m].split_at_mut(half);
+        let mut j = 0;
+        while j + V::LANES <= half {
+            let (tr, ti) = (V::load(&top[j..]), V::load(&topi[j..]));
+            let (br, bi) = (V::load(&bot[j..]), V::load(&boti[j..]));
+            let (sr, si) = (tr.add(br), ti.add(bi));
+            let (pr, pi) = vcmul(tr.sub(br), ti.sub(bi), V::load(&w1r[j..]), V::load(&w1i[j..]));
+            sr.store(&mut top[j..]);
+            si.store(&mut topi[j..]);
+            pr.store(&mut bot[j..]);
+            pi.store(&mut boti[j..]);
+            j += V::LANES;
+        }
+        while j < half {
+            let (tr, ti) = (top[j], topi[j]);
+            let (br, bi) = (bot[j], boti[j]);
+            let (sr, si) = (tr + br, ti + bi);
+            let (pr, pi) = cmul(tr - br, ti - bi, w1r[j], w1i[j]);
+            top[j] = sr;
+            topi[j] = si;
+            bot[j] = pr;
+            boti[j] = pi;
+            j += 1;
+        }
+        base += m;
+    }
+}
+
+/// [`crate::fft::passes::radix4`], vectorized across j.
+#[inline(always)]
+pub fn radix4_v<V: Vf32>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 4, "R4 at stage {stage} invalid for n={n}");
+    let q = m / 4;
+    debug_assert_eq!(w1.len(), q);
+    let (w1r, w1i) = (&w1.re[..q], &w1.im[..q]);
+    let (w2r, w2i) = (&w2.re[..q], &w2.im[..q]);
+    let (w3r, w3i) = (&w3.re[..q], &w3.im[..q]);
+    let mut base = 0;
+    while base < n {
+        let (q0r, rest) = re[base..base + m].split_at_mut(q);
+        let (q1r, rest) = rest.split_at_mut(q);
+        let (q2r, q3r) = rest.split_at_mut(q);
+        let (q0i, rest) = im[base..base + m].split_at_mut(q);
+        let (q1i, rest) = rest.split_at_mut(q);
+        let (q2i, q3i) = rest.split_at_mut(q);
+        let mut j = 0;
+        while j + V::LANES <= q {
+            let (ar, ai) = (V::load(&q0r[j..]), V::load(&q0i[j..]));
+            let (br, bi) = (V::load(&q1r[j..]), V::load(&q1i[j..]));
+            let (cr, ci) = (V::load(&q2r[j..]), V::load(&q2i[j..]));
+            let (dr, di) = (V::load(&q3r[j..]), V::load(&q3i[j..]));
+            let (t0r, t0i) = (ar.add(cr), ai.add(ci));
+            let (t1r, t1i) = (ar.sub(cr), ai.sub(ci));
+            let (t2r, t2i) = (br.add(dr), bi.add(di));
+            // t3 = -j*(b - d): swap + negate (W_4^1 trick)
+            let (t3r, t3i) = (bi.sub(di), br.sub(dr).neg());
+            t0r.add(t2r).store(&mut q0r[j..]);
+            t0i.add(t2i).store(&mut q0i[j..]);
+            let (y1r, y1i) = vcmul(
+                t0r.sub(t2r),
+                t0i.sub(t2i),
+                V::load(&w2r[j..]),
+                V::load(&w2i[j..]),
+            );
+            y1r.store(&mut q1r[j..]);
+            y1i.store(&mut q1i[j..]);
+            let (y2r, y2i) = vcmul(
+                t1r.add(t3r),
+                t1i.add(t3i),
+                V::load(&w1r[j..]),
+                V::load(&w1i[j..]),
+            );
+            y2r.store(&mut q2r[j..]);
+            y2i.store(&mut q2i[j..]);
+            let (y3r, y3i) = vcmul(
+                t1r.sub(t3r),
+                t1i.sub(t3i),
+                V::load(&w3r[j..]),
+                V::load(&w3i[j..]),
+            );
+            y3r.store(&mut q3r[j..]);
+            y3i.store(&mut q3i[j..]);
+            j += V::LANES;
+        }
+        while j < q {
+            let (ar, ai) = (q0r[j], q0i[j]);
+            let (br, bi) = (q1r[j], q1i[j]);
+            let (cr, ci) = (q2r[j], q2i[j]);
+            let (dr, di) = (q3r[j], q3i[j]);
+            let (t0r, t0i) = (ar + cr, ai + ci);
+            let (t1r, t1i) = (ar - cr, ai - ci);
+            let (t2r, t2i) = (br + dr, bi + di);
+            let (t3r, t3i) = (bi - di, -(br - dr));
+            q0r[j] = t0r + t2r;
+            q0i[j] = t0i + t2i;
+            let (y1r, y1i) = cmul(t0r - t2r, t0i - t2i, w2r[j], w2i[j]);
+            q1r[j] = y1r;
+            q1i[j] = y1i;
+            let (y2r, y2i) = cmul(t1r + t3r, t1i + t3i, w1r[j], w1i[j]);
+            q2r[j] = y2r;
+            q2i[j] = y2i;
+            let (y3r, y3i) = cmul(t1r - t3r, t1i - t3i, w3r[j], w3i[j]);
+            q3r[j] = y3r;
+            q3i[j] = y3i;
+            j += 1;
+        }
+        base += m;
+    }
+}
+
+/// [`crate::fft::passes::radix8`], vectorized across j. The 8-complex
+/// working set (16 data vectors plus twiddles and temporaries) is
+/// exactly the register-pressure story of the paper's finding 2.
+#[inline(always)]
+pub fn radix8_v<V: Vf32>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+) {
+    let n = re.len();
+    let m = n >> stage;
+    debug_assert!(m >= 8, "R8 at stage {stage} invalid for n={n}");
+    let e = m / 8;
+    debug_assert_eq!(w1.len(), e);
+    let (w1r, w1i) = (&w1.re[..e], &w1.im[..e]);
+    let (w2r, w2i) = (&w2.re[..e], &w2.im[..e]);
+    let (w4r, w4i) = (&w4.re[..e], &w4.im[..e]);
+    let mut base = 0;
+    while base < n {
+        let mut rs: [&mut [f32]; 8] = split8(&mut re[base..base + m], e);
+        let mut is_: [&mut [f32]; 8] = split8(&mut im[base..base + m], e);
+        let mut j = 0;
+        while j + V::LANES <= e {
+            let mut xr = [V::splat(0.0); 8];
+            let mut xi = [V::splat(0.0); 8];
+            for k in 0..8 {
+                xr[k] = V::load(&rs[k][j..]);
+                xi[k] = V::load(&is_[k][j..]);
+            }
+            let (w1rv, w1iv) = (V::load(&w1r[j..]), V::load(&w1i[j..]));
+            let (w2rv, w2iv) = (V::load(&w2r[j..]), V::load(&w2i[j..]));
+            let (w4rv, w4iv) = (V::load(&w4r[j..]), V::load(&w4i[j..]));
+            // Stage A: pairs (k, k+4); twiddle W_m^j * W_8^k.
+            let mut yr = [V::splat(0.0); 8];
+            let mut yi = [V::splat(0.0); 8];
+            for k in 0..4 {
+                yr[k] = xr[k].add(xr[k + 4]);
+                yi[k] = xi[k].add(xi[k + 4]);
+                let (pr, pi) = vcmul(xr[k].sub(xr[k + 4]), xi[k].sub(xi[k + 4]), w1rv, w1iv);
+                let (rr, ri) = vw8_rotate(pr, pi, k);
+                yr[k + 4] = rr;
+                yi[k + 4] = ri;
+            }
+            // Stage B: pairs (k, k+2) within halves.
+            let mut zr = [V::splat(0.0); 8];
+            let mut zi = [V::splat(0.0); 8];
+            for half in [0usize, 4] {
+                for k in 0..2 {
+                    let a = half + k;
+                    let b = half + k + 2;
+                    zr[a] = yr[a].add(yr[b]);
+                    zi[a] = yi[a].add(yi[b]);
+                    let (mut pr, mut pi) =
+                        vcmul(yr[a].sub(yr[b]), yi[a].sub(yi[b]), w2rv, w2iv);
+                    if k == 1 {
+                        // W_4^1 = -j: swap + negate
+                        let t = pr;
+                        pr = pi;
+                        pi = t.neg();
+                    }
+                    zr[b] = pr;
+                    zi[b] = pi;
+                }
+            }
+            // Stage C: adjacent pairs; twiddle W_m^{4j}.
+            for k in [0usize, 2, 4, 6] {
+                zr[k].add(zr[k + 1]).store(&mut rs[k][j..]);
+                zi[k].add(zi[k + 1]).store(&mut is_[k][j..]);
+                let (pr, pi) = vcmul(zr[k].sub(zr[k + 1]), zi[k].sub(zi[k + 1]), w4rv, w4iv);
+                pr.store(&mut rs[k + 1][j..]);
+                pi.store(&mut is_[k + 1][j..]);
+            }
+            j += V::LANES;
+        }
+        while j < e {
+            radix8_group_scalar(&mut rs, &mut is_, j, w1r[j], w1i[j], w2r[j], w2i[j], w4r[j], w4i[j]);
+            j += 1;
+        }
+        base += m;
+    }
+}
+
+/// One radix-8 group, scalar — the identical inner body of
+/// [`crate::fft::passes::radix8`] (and its tail here).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn radix8_group_scalar(
+    rs: &mut [&mut [f32]; 8],
+    is_: &mut [&mut [f32]; 8],
+    j: usize,
+    w1r: f32,
+    w1i: f32,
+    w2r: f32,
+    w2i: f32,
+    w4r: f32,
+    w4i: f32,
+) {
+    let mut xr = [0f32; 8];
+    let mut xi = [0f32; 8];
+    for k in 0..8 {
+        xr[k] = rs[k][j];
+        xi[k] = is_[k][j];
+    }
+    let mut yr = [0f32; 8];
+    let mut yi = [0f32; 8];
+    for k in 0..4 {
+        yr[k] = xr[k] + xr[k + 4];
+        yi[k] = xi[k] + xi[k + 4];
+        let (dr, di) = (xr[k] - xr[k + 4], xi[k] - xi[k + 4]);
+        let (pr, pi) = cmul(dr, di, w1r, w1i);
+        let (rr, ri) = w8_rotate(pr, pi, k);
+        yr[k + 4] = rr;
+        yi[k + 4] = ri;
+    }
+    let mut zr = [0f32; 8];
+    let mut zi = [0f32; 8];
+    for half in [0usize, 4] {
+        for k in 0..2 {
+            let a = half + k;
+            let b = half + k + 2;
+            zr[a] = yr[a] + yr[b];
+            zi[a] = yi[a] + yi[b];
+            let (dr, di) = (yr[a] - yr[b], yi[a] - yi[b]);
+            let (mut pr, mut pi) = cmul(dr, di, w2r, w2i);
+            if k == 1 {
+                let t = pr;
+                pr = pi;
+                pi = -t;
+            }
+            zr[b] = pr;
+            zi[b] = pi;
+        }
+    }
+    for k in [0usize, 2, 4, 6] {
+        let (ar, ai) = (zr[k], zi[k]);
+        let (br, bi) = (zr[k + 1], zi[k + 1]);
+        rs[k][j] = ar + br;
+        is_[k][j] = ai + bi;
+        let (pr, pi) = cmul(ar - br, ai - bi, w4r, w4i);
+        rs[k + 1][j] = pr;
+        is_[k + 1][j] = pi;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched radix passes (vector over the batch lanes of each element;
+// twiddle broadcast once per j — the whole point of lane blocking).
+// ---------------------------------------------------------------------
+
+/// [`crate::fft::passes::radix2_b`], vectorized across batch lanes.
+#[inline(always)]
+pub fn radix2_b_v<V: Vf32>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 2, "R2 at stage {stage} invalid for n={n}");
+    let half = m / 2;
+    debug_assert_eq!(w1.len(), half);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let (top, bot) = re[s..s + m * lanes].split_at_mut(half * lanes);
+        let (topi, boti) = im[s..s + m * lanes].split_at_mut(half * lanes);
+        for j in 0..half {
+            let (wr, wi) = (w1.re[j], w1.im[j]);
+            let (wrv, wiv) = (V::splat(wr), V::splat(wi));
+            let row = j * lanes;
+            let end = row + lanes;
+            let mut l = row;
+            while l + V::LANES <= end {
+                let (tr, ti) = (V::load(&top[l..]), V::load(&topi[l..]));
+                let (br, bi) = (V::load(&bot[l..]), V::load(&boti[l..]));
+                tr.add(br).store(&mut top[l..]);
+                ti.add(bi).store(&mut topi[l..]);
+                let (pr, pi) = vcmul(tr.sub(br), ti.sub(bi), wrv, wiv);
+                pr.store(&mut bot[l..]);
+                pi.store(&mut boti[l..]);
+                l += V::LANES;
+            }
+            while l < end {
+                let (tr, ti) = (top[l], topi[l]);
+                let (br, bi) = (bot[l], boti[l]);
+                top[l] = tr + br;
+                topi[l] = ti + bi;
+                let (pr, pi) = cmul(tr - br, ti - bi, wr, wi);
+                bot[l] = pr;
+                boti[l] = pi;
+                l += 1;
+            }
+        }
+        base += m;
+    }
+}
+
+/// [`crate::fft::passes::radix4_b`], vectorized across batch lanes.
+#[inline(always)]
+pub fn radix4_b_v<V: Vf32>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 4, "R4 at stage {stage} invalid for n={n}");
+    let q = m / 4;
+    debug_assert_eq!(w1.len(), q);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let (q0r, rest) = re[s..s + m * lanes].split_at_mut(q * lanes);
+        let (q1r, rest) = rest.split_at_mut(q * lanes);
+        let (q2r, q3r) = rest.split_at_mut(q * lanes);
+        let (q0i, rest) = im[s..s + m * lanes].split_at_mut(q * lanes);
+        let (q1i, rest) = rest.split_at_mut(q * lanes);
+        let (q2i, q3i) = rest.split_at_mut(q * lanes);
+        for j in 0..q {
+            let (w1r, w1i) = (w1.re[j], w1.im[j]);
+            let (w2r, w2i) = (w2.re[j], w2.im[j]);
+            let (w3r, w3i) = (w3.re[j], w3.im[j]);
+            let (w1rv, w1iv) = (V::splat(w1r), V::splat(w1i));
+            let (w2rv, w2iv) = (V::splat(w2r), V::splat(w2i));
+            let (w3rv, w3iv) = (V::splat(w3r), V::splat(w3i));
+            let row = j * lanes;
+            let end = row + lanes;
+            let mut l = row;
+            while l + V::LANES <= end {
+                let (ar, ai) = (V::load(&q0r[l..]), V::load(&q0i[l..]));
+                let (br, bi) = (V::load(&q1r[l..]), V::load(&q1i[l..]));
+                let (cr, ci) = (V::load(&q2r[l..]), V::load(&q2i[l..]));
+                let (dr, di) = (V::load(&q3r[l..]), V::load(&q3i[l..]));
+                let (t0r, t0i) = (ar.add(cr), ai.add(ci));
+                let (t1r, t1i) = (ar.sub(cr), ai.sub(ci));
+                let (t2r, t2i) = (br.add(dr), bi.add(di));
+                let (t3r, t3i) = (bi.sub(di), br.sub(dr).neg());
+                t0r.add(t2r).store(&mut q0r[l..]);
+                t0i.add(t2i).store(&mut q0i[l..]);
+                let (y1r, y1i) = vcmul(t0r.sub(t2r), t0i.sub(t2i), w2rv, w2iv);
+                y1r.store(&mut q1r[l..]);
+                y1i.store(&mut q1i[l..]);
+                let (y2r, y2i) = vcmul(t1r.add(t3r), t1i.add(t3i), w1rv, w1iv);
+                y2r.store(&mut q2r[l..]);
+                y2i.store(&mut q2i[l..]);
+                let (y3r, y3i) = vcmul(t1r.sub(t3r), t1i.sub(t3i), w3rv, w3iv);
+                y3r.store(&mut q3r[l..]);
+                y3i.store(&mut q3i[l..]);
+                l += V::LANES;
+            }
+            while l < end {
+                let (ar, ai) = (q0r[l], q0i[l]);
+                let (br, bi) = (q1r[l], q1i[l]);
+                let (cr, ci) = (q2r[l], q2i[l]);
+                let (dr, di) = (q3r[l], q3i[l]);
+                let (t0r, t0i) = (ar + cr, ai + ci);
+                let (t1r, t1i) = (ar - cr, ai - ci);
+                let (t2r, t2i) = (br + dr, bi + di);
+                let (t3r, t3i) = (bi - di, -(br - dr));
+                q0r[l] = t0r + t2r;
+                q0i[l] = t0i + t2i;
+                let (y1r, y1i) = cmul(t0r - t2r, t0i - t2i, w2r, w2i);
+                q1r[l] = y1r;
+                q1i[l] = y1i;
+                let (y2r, y2i) = cmul(t1r + t3r, t1i + t3i, w1r, w1i);
+                q2r[l] = y2r;
+                q2i[l] = y2i;
+                let (y3r, y3i) = cmul(t1r - t3r, t1i - t3i, w3r, w3i);
+                q3r[l] = y3r;
+                q3i[l] = y3i;
+                l += 1;
+            }
+        }
+        base += m;
+    }
+}
+
+/// [`crate::fft::passes::radix8_b`], vectorized across batch lanes.
+#[inline(always)]
+pub fn radix8_b_v<V: Vf32>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    debug_assert!(m >= 8, "R8 at stage {stage} invalid for n={n}");
+    let e = m / 8;
+    debug_assert_eq!(w1.len(), e);
+    let mut base = 0;
+    while base < n {
+        let s = base * lanes;
+        let mut rs: [&mut [f32]; 8] = split8(&mut re[s..s + m * lanes], e * lanes);
+        let mut is_: [&mut [f32]; 8] = split8(&mut im[s..s + m * lanes], e * lanes);
+        for j in 0..e {
+            let (w1r, w1i) = (w1.re[j], w1.im[j]);
+            let (w2r, w2i) = (w2.re[j], w2.im[j]);
+            let (w4r, w4i) = (w4.re[j], w4.im[j]);
+            let (w1rv, w1iv) = (V::splat(w1r), V::splat(w1i));
+            let (w2rv, w2iv) = (V::splat(w2r), V::splat(w2i));
+            let (w4rv, w4iv) = (V::splat(w4r), V::splat(w4i));
+            let row = j * lanes;
+            let end = row + lanes;
+            let mut l = row;
+            while l + V::LANES <= end {
+                let mut xr = [V::splat(0.0); 8];
+                let mut xi = [V::splat(0.0); 8];
+                for k in 0..8 {
+                    xr[k] = V::load(&rs[k][l..]);
+                    xi[k] = V::load(&is_[k][l..]);
+                }
+                let mut yr = [V::splat(0.0); 8];
+                let mut yi = [V::splat(0.0); 8];
+                for k in 0..4 {
+                    yr[k] = xr[k].add(xr[k + 4]);
+                    yi[k] = xi[k].add(xi[k + 4]);
+                    let (pr, pi) =
+                        vcmul(xr[k].sub(xr[k + 4]), xi[k].sub(xi[k + 4]), w1rv, w1iv);
+                    let (rr, ri) = vw8_rotate(pr, pi, k);
+                    yr[k + 4] = rr;
+                    yi[k + 4] = ri;
+                }
+                let mut zr = [V::splat(0.0); 8];
+                let mut zi = [V::splat(0.0); 8];
+                for half in [0usize, 4] {
+                    for k in 0..2 {
+                        let a = half + k;
+                        let b = half + k + 2;
+                        zr[a] = yr[a].add(yr[b]);
+                        zi[a] = yi[a].add(yi[b]);
+                        let (mut pr, mut pi) =
+                            vcmul(yr[a].sub(yr[b]), yi[a].sub(yi[b]), w2rv, w2iv);
+                        if k == 1 {
+                            let t = pr;
+                            pr = pi;
+                            pi = t.neg();
+                        }
+                        zr[b] = pr;
+                        zi[b] = pi;
+                    }
+                }
+                for k in [0usize, 2, 4, 6] {
+                    zr[k].add(zr[k + 1]).store(&mut rs[k][l..]);
+                    zi[k].add(zi[k + 1]).store(&mut is_[k][l..]);
+                    let (pr, pi) =
+                        vcmul(zr[k].sub(zr[k + 1]), zi[k].sub(zi[k + 1]), w4rv, w4iv);
+                    pr.store(&mut rs[k + 1][l..]);
+                    pi.store(&mut is_[k + 1][l..]);
+                }
+                l += V::LANES;
+            }
+            while l < end {
+                radix8_group_scalar(&mut rs, &mut is_, l, w1r, w1i, w2r, w2i, w4r, w4i);
+                l += 1;
+            }
+        }
+        base += m;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused register blocks (vector over the tile rows; scalar remainder
+// groups call fused::fused_group_scalar — the actual scalar code).
+// ---------------------------------------------------------------------
+
+/// Disjoint mutable refs to rows a < b of a tile.
+#[inline(always)]
+fn row_pair<const W: usize, const B: usize>(
+    x: &mut [[f32; W]; B],
+    a: usize,
+    b: usize,
+) -> (&mut [f32; W], &mut [f32; W]) {
+    debug_assert!(a < b);
+    let (lo, hi) = x.split_at_mut(b);
+    (&mut lo[a], &mut hi[0])
+}
+
+/// One butterfly over W-wide tile rows with a per-column twiddle slice.
+#[inline(always)]
+fn rows_butterfly_tw<V: Vf32, const W: usize>(
+    ra: &mut [f32; W],
+    ia: &mut [f32; W],
+    rb: &mut [f32; W],
+    ib: &mut [f32; W],
+    wr: &[f32],
+    wi: &[f32],
+) {
+    let mut t = 0;
+    while t + V::LANES <= W {
+        let (ar, ai) = (V::load(&ra[t..]), V::load(&ia[t..]));
+        let (br, bi) = (V::load(&rb[t..]), V::load(&ib[t..]));
+        let (sr, si) = (ar.add(br), ai.add(bi));
+        let (pr, pi) = vcmul(ar.sub(br), ai.sub(bi), V::load(&wr[t..]), V::load(&wi[t..]));
+        sr.store(&mut ra[t..]);
+        si.store(&mut ia[t..]);
+        pr.store(&mut rb[t..]);
+        pi.store(&mut ib[t..]);
+        t += V::LANES;
+    }
+    while t < W {
+        let (tr, ti) = (ra[t] + rb[t], ia[t] + ib[t]);
+        let (dr, di) = (ra[t] - rb[t], ia[t] - ib[t]);
+        let (pr, pi) = cmul(dr, di, wr[t], wi[t]);
+        ra[t] = tr;
+        ia[t] = ti;
+        rb[t] = pr;
+        ib[t] = pi;
+        t += 1;
+    }
+}
+
+/// One butterfly over W-wide tile rows with a broadcast twiddle.
+#[inline(always)]
+fn rows_butterfly_tw_const<V: Vf32, const W: usize>(
+    ra: &mut [f32; W],
+    ia: &mut [f32; W],
+    rb: &mut [f32; W],
+    ib: &mut [f32; W],
+    wr: f32,
+    wi: f32,
+) {
+    let (wrv, wiv) = (V::splat(wr), V::splat(wi));
+    let mut t = 0;
+    while t + V::LANES <= W {
+        let (ar, ai) = (V::load(&ra[t..]), V::load(&ia[t..]));
+        let (br, bi) = (V::load(&rb[t..]), V::load(&ib[t..]));
+        let (sr, si) = (ar.add(br), ai.add(bi));
+        let (pr, pi) = vcmul(ar.sub(br), ai.sub(bi), wrv, wiv);
+        sr.store(&mut ra[t..]);
+        si.store(&mut ia[t..]);
+        pr.store(&mut rb[t..]);
+        pi.store(&mut ib[t..]);
+        t += V::LANES;
+    }
+    while t < W {
+        let (tr, ti) = (ra[t] + rb[t], ia[t] + ib[t]);
+        let (dr, di) = (ra[t] - rb[t], ia[t] - ib[t]);
+        let (pr, pi) = cmul(dr, di, wr, wi);
+        ra[t] = tr;
+        ia[t] = ti;
+        rb[t] = pr;
+        ib[t] = pi;
+        t += 1;
+    }
+}
+
+/// [`crate::fft::fused`]'s `fused_generic`, with the tile butterflies
+/// vectorized ([`TILE`] = 8 columns, so NEON runs 2 vectors per row and
+/// AVX2 runs 1).
+#[inline(always)]
+pub fn fused_v<V: Vf32, const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let n = re.len();
+    let m = n >> stage;
+    let lb = B.trailing_zeros() as usize;
+    debug_assert!(m >= B, "F{B} at stage {stage} invalid for n={n}");
+    debug_assert_eq!(wt.len(), lb);
+    let e = m / B;
+    if e == 1 {
+        let mut base = 0;
+        while base + TILE * B <= n {
+            fused_tile_terminal_v::<V, B>(re, im, base, wt);
+            base += TILE * B;
+        }
+        while base < n {
+            fused_group_scalar::<B>(re, im, base, 0, 1, wt);
+            base += B;
+        }
+        return;
+    }
+    let mut base = 0;
+    while base < n {
+        let mut j = 0;
+        while j + TILE <= e {
+            fused_tile_mid_v::<V, B>(re, im, base, j, e, wt);
+            j += TILE;
+        }
+        while j < e {
+            fused_group_scalar::<B>(re, im, base, j, e, wt);
+            j += 1;
+        }
+        base += m;
+    }
+}
+
+/// TILE consecutive-j groups of one block, butterflies vectorized.
+#[inline(always)]
+fn fused_tile_mid_v<V: Vf32, const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    base: usize,
+    j0: usize,
+    e: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [[0f32; TILE]; B];
+    let mut xi = [[0f32; TILE]; B];
+    for k in 0..B {
+        let s = base + j0 + k * e;
+        xr[k].copy_from_slice(&re[s..s + TILE]);
+        xi[k].copy_from_slice(&im[s..s + TILE]);
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let wrow = k * e + j0;
+                let (a, b) = (off + k, off + k + half);
+                let (ra, rb) = row_pair(&mut xr, a, b);
+                let (ia, ib) = row_pair(&mut xi, a, b);
+                rows_butterfly_tw::<V, TILE>(
+                    ra,
+                    ia,
+                    rb,
+                    ib,
+                    &w.re[wrow..wrow + TILE],
+                    &w.im[wrow..wrow + TILE],
+                );
+            }
+        }
+    }
+    for k in 0..B {
+        let s = base + j0 + k * e;
+        re[s..s + TILE].copy_from_slice(&xr[k]);
+        im[s..s + TILE].copy_from_slice(&xi[k]);
+    }
+}
+
+/// TILE consecutive terminal blocks (in-register transpose layout),
+/// butterflies vectorized with constant twiddles.
+#[inline(always)]
+fn fused_tile_terminal_v<V: Vf32, const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    base: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [[0f32; TILE]; B];
+    let mut xi = [[0f32; TILE]; B];
+    for t in 0..TILE {
+        for k in 0..B {
+            xr[k][t] = re[base + t * B + k];
+            xi[k][t] = im[base + t * B + k];
+        }
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let (wr, wi) = (w.re[k], w.im[k]); // e == 1: one entry per k
+                let (a, b) = (off + k, off + k + half);
+                let (ra, rb) = row_pair(&mut xr, a, b);
+                let (ia, ib) = row_pair(&mut xi, a, b);
+                rows_butterfly_tw_const::<V, TILE>(ra, ia, rb, ib, wr, wi);
+            }
+        }
+    }
+    for t in 0..TILE {
+        for k in 0..B {
+            re[base + t * B + k] = xr[k][t];
+            im[base + t * B + k] = xi[k][t];
+        }
+    }
+}
+
+/// [`crate::fft::fused`]'s `fused_generic_b`, with the per-group
+/// [`BL`]-wide lane chunk butterflies vectorized. (With `BL` = 4, an
+/// 8-lane ISA's vector loop never fires and the scalar tail handles the
+/// whole chunk — correct, just unamortized; lane-blocked buffers are
+/// sized for the 4-lane native target.)
+#[inline(always)]
+pub fn fused_b_v<V: Vf32, const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    wt: &[Arc<TwiddleVec>],
+    lanes: usize,
+) {
+    debug_assert!(lanes >= 1 && lanes % BL == 0 && re.len() % lanes == 0);
+    let n = re.len() / lanes;
+    let m = n >> stage;
+    let lb = B.trailing_zeros() as usize;
+    debug_assert!(m >= B, "F{B} at stage {stage} invalid for n={n}");
+    debug_assert_eq!(wt.len(), lb);
+    let e = m / B;
+    let estride = e * lanes;
+    let mut base = 0;
+    while base < n {
+        for j in 0..e {
+            let flat = (base + j) * lanes;
+            let mut c = 0;
+            while c < lanes {
+                fused_lane_tile_v::<V, B>(re, im, flat + c, estride, j, e, wt);
+                c += BL;
+            }
+        }
+        base += m;
+    }
+}
+
+/// One [`BL`]-wide lane chunk of one fused group, vectorized.
+#[inline(always)]
+fn fused_lane_tile_v<V: Vf32, const B: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    flat0: usize,
+    estride: usize,
+    j: usize,
+    e: usize,
+    wt: &[Arc<TwiddleVec>],
+) {
+    let mut xr = [[0f32; BL]; B];
+    let mut xi = [[0f32; BL]; B];
+    for k in 0..B {
+        let s = flat0 + k * estride;
+        xr[k].copy_from_slice(&re[s..s + BL]);
+        xi[k].copy_from_slice(&im[s..s + BL]);
+    }
+    for (r, w) in wt.iter().enumerate() {
+        let lanes = B >> r;
+        let half = lanes / 2;
+        for g in 0..(B / lanes) {
+            let off = g * lanes;
+            for k in 0..half {
+                let (wr, wi) = (w.re[k * e + j], w.im[k * e + j]);
+                let (a, b) = (off + k, off + k + half);
+                let (ra, rb) = row_pair(&mut xr, a, b);
+                let (ia, ib) = row_pair(&mut xi, a, b);
+                rows_butterfly_tw_const::<V, BL>(ra, ia, rb, ib, wr, wi);
+            }
+        }
+    }
+    for k in 0..B {
+        let s = flat0 + k * estride;
+        re[s..s + BL].copy_from_slice(&xr[k]);
+        im[s..s + BL].copy_from_slice(&xi[k]);
+    }
+}

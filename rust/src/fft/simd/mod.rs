@@ -1,0 +1,365 @@
+//! Explicit SIMD codelet backends behind one [`Kernels`] vtable.
+//!
+//! The paper's kernels are hand-scheduled NEON; this crate's scalar
+//! kernels ([`super::passes`], [`super::fused`]) reproduce the algebra
+//! but leave the instruction mix to the autovectorizer. This module
+//! closes that gap the way FFTW's codelet generator does (PAPERS.md,
+//! *Implementing FFTs in Practice*): one algebra source
+//! ([`generic`], parameterized over a [`generic::Vf32`] lane set), many
+//! instruction-set instantiations —
+//!
+//! | ISA        | lanes | gate                                         |
+//! |------------|-------|----------------------------------------------|
+//! | `scalar`   | 1     | always available (this is the fallback)      |
+//! | `portable` | 8     | `portable-simd` cargo feature (nightly)      |
+//! | `neon`     | 4     | `target_arch = "aarch64"` (baseline)         |
+//! | `avx2`     | 8     | `target_arch = "x86_64"` + runtime detection |
+//!
+//! A [`Kernels`] table is selected **once per compiled plan**
+//! ([`super::exec::Executor`] resolves [`crate::isa::Isa::detect`] at
+//! construction), so every dispatched edge — and therefore everything
+//! [`crate::cost::NativeCost`] measures and every
+//! [`crate::autotune::EdgeSample`] — carries the ISA that actually ran.
+//! All backends are **bit-identical** to the scalar kernels (same
+//! operation order, no FMA, scalar tails reuse the scalar code); parity
+//! is pinned across every variant in `tests/simd_parity.rs`, which is
+//! what makes `SPFFT_FORCE_SCALAR=1` a behavior-preserving switch.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::isa::Isa;
+
+use super::twiddle::TwiddleVec;
+use super::{fused, passes};
+
+pub mod generic;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(feature = "portable-simd")]
+mod portable;
+
+/// Unbatched radix-2 kernel (`w1`).
+pub type RadixFn = fn(&mut [f32], &mut [f32], usize, &TwiddleVec);
+/// Unbatched radix-4/8 kernel (three twiddle vectors).
+pub type Radix3Fn = fn(&mut [f32], &mut [f32], usize, &TwiddleVec, &TwiddleVec, &TwiddleVec);
+/// Unbatched fused-block kernel (per-sub-stage combined tables).
+pub type FusedFn = fn(&mut [f32], &mut [f32], usize, &[Arc<TwiddleVec>]);
+/// Lane-blocked radix-2 kernel (trailing `lanes`).
+pub type RadixBFn = fn(&mut [f32], &mut [f32], usize, &TwiddleVec, usize);
+/// Lane-blocked radix-4/8 kernel.
+pub type Radix3BFn =
+    fn(&mut [f32], &mut [f32], usize, &TwiddleVec, &TwiddleVec, &TwiddleVec, usize);
+/// Lane-blocked fused-block kernel.
+pub type FusedBFn = fn(&mut [f32], &mut [f32], usize, &[Arc<TwiddleVec>], usize);
+
+/// One ISA's complete kernel set: every edge type of Table 1 plus the
+/// `_b` lane-blocked batched forms. Plans hold a `&'static Kernels` and
+/// dispatch through it, so backend selection is one pointer indirection
+/// at plan-compile time, zero on the request path.
+pub struct Kernels {
+    /// Which ISA these kernels execute (the tag recorded into
+    /// [`crate::autotune::EdgeSample`] / wisdom).
+    pub isa: Isa,
+    pub radix2: RadixFn,
+    pub radix4: Radix3Fn,
+    pub radix8: Radix3Fn,
+    pub fused8: FusedFn,
+    pub fused16: FusedFn,
+    pub fused32: FusedFn,
+    pub radix2_b: RadixBFn,
+    pub radix4_b: Radix3BFn,
+    pub radix8_b: Radix3BFn,
+    pub fused8_b: FusedBFn,
+    pub fused16_b: FusedBFn,
+    pub fused32_b: FusedBFn,
+}
+
+impl fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Kernels({})", self.isa)
+    }
+}
+
+/// The always-available scalar table: the existing kernels, untouched.
+/// This is the parity baseline every SIMD backend is pinned against.
+pub static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    radix2: passes::radix2,
+    radix4: passes::radix4,
+    radix8: passes::radix8,
+    fused8: fused::fused8,
+    fused16: fused::fused16,
+    fused32: fused::fused32,
+    radix2_b: passes::radix2_b,
+    radix4_b: passes::radix4_b,
+    radix8_b: passes::radix8_b,
+    fused8_b: fused::fused8_b,
+    fused16_b: fused::fused16_b,
+    fused32_b: fused::fused32_b,
+};
+
+#[cfg(target_arch = "aarch64")]
+fn neon_kernels() -> Option<&'static Kernels> {
+    Some(&neon::KERNELS)
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_kernels() -> Option<&'static Kernels> {
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_kernels() -> Option<&'static Kernels> {
+    // Runtime gate: the avx2 table's safe wrappers are only sound on a
+    // host that actually has AVX2.
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(&avx2::KERNELS)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_kernels() -> Option<&'static Kernels> {
+    None
+}
+
+#[cfg(feature = "portable-simd")]
+fn portable_kernels() -> Option<&'static Kernels> {
+    Some(&portable::KERNELS)
+}
+
+#[cfg(not(feature = "portable-simd"))]
+fn portable_kernels() -> Option<&'static Kernels> {
+    None
+}
+
+/// The kernel table for an ISA, falling back to [`SCALAR`] when the
+/// backend is not compiled in (or, for AVX2, not present on this host).
+/// Callers must treat the returned table's `isa` tag — not the
+/// requested one — as what will execute.
+pub fn for_isa(isa: Isa) -> &'static Kernels {
+    match isa {
+        Isa::Scalar => &SCALAR,
+        Isa::Portable => portable_kernels().unwrap_or(&SCALAR),
+        Isa::Neon => neon_kernels().unwrap_or(&SCALAR),
+        Isa::Avx2 => avx2_kernels().unwrap_or(&SCALAR),
+    }
+}
+
+/// The table [`crate::isa::Isa::detect`] resolves to on this host
+/// (honors `SPFFT_FORCE_SCALAR`).
+pub fn detect() -> &'static Kernels {
+    for_isa(Isa::detect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::generic::{self, Soft};
+    use super::*;
+    use crate::fft::{fused::fused_twiddles, BatchBuffer, SplitComplex, TwiddleCache};
+    use crate::isa::ALL_ISAS;
+
+    /// Run every kernel of `k` and of [`SCALAR`] on identical inputs
+    /// and assert exact equality — the dispatch-parity contract.
+    fn assert_table_parity(k: &Kernels, n: usize, seed: u64) {
+        let mut cache = TwiddleCache::new();
+        let input = SplitComplex::random(n, seed);
+        let pair = |name: &str, stage: usize, got: SplitComplex, want: SplitComplex| {
+            assert_eq!(got, want, "{name} stage {stage} isa {} n {n}", k.isa);
+        };
+        // Radix passes at stage 0 and a mid stage.
+        for stage in [0usize, 2] {
+            let m = n >> stage;
+            let w1 = cache.vector(m, m / 2, 1);
+            let mut got = input.clone();
+            let mut want = input.clone();
+            (k.radix2)(&mut got.re, &mut got.im, stage, &w1);
+            (SCALAR.radix2)(&mut want.re, &mut want.im, stage, &w1);
+            pair("R2", stage, got, want);
+
+            let (w1, w2, w3) =
+                (cache.vector(m, m / 4, 1), cache.vector(m, m / 4, 2), cache.vector(m, m / 4, 3));
+            let mut got = input.clone();
+            let mut want = input.clone();
+            (k.radix4)(&mut got.re, &mut got.im, stage, &w1, &w2, &w3);
+            (SCALAR.radix4)(&mut want.re, &mut want.im, stage, &w1, &w2, &w3);
+            pair("R4", stage, got, want);
+
+            let (w1, w2, w4) =
+                (cache.vector(m, m / 8, 1), cache.vector(m, m / 8, 2), cache.vector(m, m / 8, 4));
+            let mut got = input.clone();
+            let mut want = input.clone();
+            (k.radix8)(&mut got.re, &mut got.im, stage, &w1, &w2, &w4);
+            (SCALAR.radix8)(&mut want.re, &mut want.im, stage, &w1, &w2, &w4);
+            pair("R8", stage, got, want);
+        }
+        // Fused blocks at stage 0 (mid path) and the terminal stage.
+        for (b, f, sf) in [
+            (8usize, k.fused8, SCALAR.fused8),
+            (16, k.fused16, SCALAR.fused16),
+            (32, k.fused32, SCALAR.fused32),
+        ] {
+            let lb = b.trailing_zeros() as usize;
+            for stage in [0usize, crate::fft::log2i(n) - lb] {
+                let wt = fused_twiddles(&mut cache, n, stage, b);
+                let mut got = input.clone();
+                let mut want = input.clone();
+                f(&mut got.re, &mut got.im, stage, &wt);
+                sf(&mut want.re, &mut want.im, stage, &wt);
+                pair(&format!("F{b}"), stage, got, want);
+            }
+        }
+        // Batched forms, per-lane vs the scalar batched kernels.
+        let batch = 3;
+        let inputs: Vec<SplitComplex> =
+            (0..batch).map(|i| SplitComplex::random(n, seed + 10 + i as u64)).collect();
+        let refs: Vec<&SplitComplex> = inputs.iter().collect();
+        let stage = 1;
+        let m = n >> stage;
+        let mut fresh = || {
+            let mut buf = BatchBuffer::new(n, batch);
+            buf.gather(&refs);
+            buf
+        };
+        let check = |name: &str, got: &BatchBuffer, want: &BatchBuffer| {
+            for l in 0..batch {
+                assert_eq!(
+                    got.scatter_lane(l),
+                    want.scatter_lane(l),
+                    "{name} lane {l} isa {} n {n}",
+                    k.isa
+                );
+            }
+        };
+        {
+            let w1 = cache.vector(m, m / 2, 1);
+            let (mut got, mut want) = (fresh(), fresh());
+            let l = got.lanes();
+            (k.radix2_b)(&mut got.re, &mut got.im, stage, &w1, l);
+            (SCALAR.radix2_b)(&mut want.re, &mut want.im, stage, &w1, l);
+            check("R2b", &got, &want);
+        }
+        {
+            let (w1, w2, w3) =
+                (cache.vector(m, m / 4, 1), cache.vector(m, m / 4, 2), cache.vector(m, m / 4, 3));
+            let (mut got, mut want) = (fresh(), fresh());
+            let l = got.lanes();
+            (k.radix4_b)(&mut got.re, &mut got.im, stage, &w1, &w2, &w3, l);
+            (SCALAR.radix4_b)(&mut want.re, &mut want.im, stage, &w1, &w2, &w3, l);
+            check("R4b", &got, &want);
+        }
+        {
+            let (w1, w2, w4) =
+                (cache.vector(m, m / 8, 1), cache.vector(m, m / 8, 2), cache.vector(m, m / 8, 4));
+            let (mut got, mut want) = (fresh(), fresh());
+            let l = got.lanes();
+            (k.radix8_b)(&mut got.re, &mut got.im, stage, &w1, &w2, &w4, l);
+            (SCALAR.radix8_b)(&mut want.re, &mut want.im, stage, &w1, &w2, &w4, l);
+            check("R8b", &got, &want);
+        }
+        for (b, f, sf) in [
+            (8usize, k.fused8_b, SCALAR.fused8_b),
+            (16, k.fused16_b, SCALAR.fused16_b),
+            (32, k.fused32_b, SCALAR.fused32_b),
+        ] {
+            if n >> stage < b {
+                continue;
+            }
+            let wt = fused_twiddles(&mut cache, n, stage, b);
+            let (mut got, mut want) = (fresh(), fresh());
+            let l = got.lanes();
+            f(&mut got.re, &mut got.im, stage, &wt, l);
+            sf(&mut want.re, &mut want.im, stage, &wt, l);
+            check(&format!("F{b}b"), &got, &want);
+        }
+    }
+
+    /// A software-vector table over the generic bodies, so the generic
+    /// codelets are parity-pinned on every host (no SIMD needed).
+    fn soft_table<const L: usize>() -> Kernels {
+        fn k<const L: usize>() -> Kernels {
+            Kernels {
+                isa: Isa::Portable, // tag irrelevant for parity
+                radix2: |re, im, s, w1| generic::radix2_v::<Soft<L>>(re, im, s, w1),
+                radix4: |re, im, s, w1, w2, w3| generic::radix4_v::<Soft<L>>(re, im, s, w1, w2, w3),
+                radix8: |re, im, s, w1, w2, w4| generic::radix8_v::<Soft<L>>(re, im, s, w1, w2, w4),
+                fused8: |re, im, s, wt| generic::fused_v::<Soft<L>, 8>(re, im, s, wt),
+                fused16: |re, im, s, wt| generic::fused_v::<Soft<L>, 16>(re, im, s, wt),
+                fused32: |re, im, s, wt| generic::fused_v::<Soft<L>, 32>(re, im, s, wt),
+                radix2_b: |re, im, s, w1, l| generic::radix2_b_v::<Soft<L>>(re, im, s, w1, l),
+                radix4_b: |re, im, s, w1, w2, w3, l| {
+                    generic::radix4_b_v::<Soft<L>>(re, im, s, w1, w2, w3, l)
+                },
+                radix8_b: |re, im, s, w1, w2, w4, l| {
+                    generic::radix8_b_v::<Soft<L>>(re, im, s, w1, w2, w4, l)
+                },
+                fused8_b: |re, im, s, wt, l| generic::fused_b_v::<Soft<L>, 8>(re, im, s, wt, l),
+                fused16_b: |re, im, s, wt, l| generic::fused_b_v::<Soft<L>, 16>(re, im, s, wt, l),
+                fused32_b: |re, im, s, wt, l| generic::fused_b_v::<Soft<L>, 32>(re, im, s, wt, l),
+            }
+        }
+        k::<L>()
+    }
+
+    #[test]
+    fn generic_bodies_are_bit_identical_to_scalar_4_lane() {
+        for n in [64usize, 256] {
+            assert_table_parity(&soft_table::<4>(), n, 900 + n as u64);
+        }
+    }
+
+    #[test]
+    fn generic_bodies_are_bit_identical_to_scalar_8_lane() {
+        for n in [64usize, 256] {
+            assert_table_parity(&soft_table::<8>(), n, 1300 + n as u64);
+        }
+    }
+
+    #[test]
+    fn generic_bodies_are_bit_identical_at_odd_widths() {
+        // Width 3 never divides anything evenly — the scalar tails do
+        // most of the work, pinning the vector/tail seam.
+        for n in [64usize, 128] {
+            assert_table_parity(&soft_table::<3>(), n, 1700 + n as u64);
+        }
+    }
+
+    #[test]
+    fn host_backend_is_bit_identical_to_scalar() {
+        // On aarch64 this exercises NEON; on x86-64 with AVX2, the
+        // target_feature wrappers; elsewhere it degenerates to
+        // scalar-vs-scalar (trivially true, still a dispatch check).
+        for isa in ALL_ISAS {
+            let k = for_isa(isa);
+            assert_table_parity(k, 256, 77 + isa.index() as u64);
+        }
+    }
+
+    #[test]
+    fn for_isa_falls_back_to_scalar_only_when_unavailable() {
+        assert_eq!(for_isa(Isa::Scalar).isa, Isa::Scalar);
+        for isa in ALL_ISAS {
+            let got = for_isa(isa).isa;
+            assert!(got == isa || got == Isa::Scalar, "{isa} resolved to {got}");
+        }
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(for_isa(Isa::Neon).isa, Isa::Neon);
+    }
+
+    #[test]
+    fn detect_honors_force_scalar_env() {
+        // Serialized within this test: set, check, restore.
+        let prev = std::env::var("SPFFT_FORCE_SCALAR").ok();
+        std::env::set_var("SPFFT_FORCE_SCALAR", "1");
+        assert_eq!(detect().isa, Isa::Scalar);
+        match prev {
+            Some(v) => std::env::set_var("SPFFT_FORCE_SCALAR", v),
+            None => std::env::remove_var("SPFFT_FORCE_SCALAR"),
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! AArch64 NEON codelet backend: 4-lane f32 over the 32×128-bit vector
+//! file — the paper's native target. NEON is baseline on aarch64, so no
+//! runtime feature detection or `#[target_feature]` wrappers are needed;
+//! the generic bodies instantiate directly.
+
+// Intrinsic safety varies by toolchain (pre-1.87 all of core::arch is
+// `unsafe fn`, newer compilers make the value ops safe when the feature
+// is statically enabled); keep the unsafe blocks and silence the lint
+// where they became redundant.
+#![allow(unused_unsafe)]
+
+use std::sync::Arc;
+
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vnegq_f32, vst1q_f32, vsubq_f32,
+};
+
+use super::super::twiddle::TwiddleVec;
+use super::generic::{self, Vf32};
+use super::Kernels;
+use crate::isa::Isa;
+
+/// One NEON q-register of 4 f32 lanes.
+#[derive(Clone, Copy)]
+struct V4(float32x4_t);
+
+impl Vf32 for V4 {
+    const LANES: usize = 4;
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= 4);
+        // Safety: length checked; vld1q_f32 reads 4 f32 from the pointer.
+        V4(unsafe { vld1q_f32(src.as_ptr()) })
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 4);
+        // Safety: length checked; vst1q_f32 writes 4 f32 to the pointer.
+        unsafe { vst1q_f32(dst.as_mut_ptr(), self.0) }
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        V4(unsafe { vdupq_n_f32(x) })
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        V4(unsafe { vaddq_f32(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        V4(unsafe { vsubq_f32(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        // Plain multiply, never vfmaq: the scalar kernels round after
+        // every op, and bit-parity with them is the contract.
+        V4(unsafe { vmulq_f32(self.0, o.0) })
+    }
+
+    #[inline(always)]
+    fn neg(self) -> Self {
+        V4(unsafe { vnegq_f32(self.0) })
+    }
+}
+
+fn radix2(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec) {
+    generic::radix2_v::<V4>(re, im, stage, w1)
+}
+
+fn radix4(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w3: &TwiddleVec) {
+    generic::radix4_v::<V4>(re, im, stage, w1, w2, w3)
+}
+
+fn radix8(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w4: &TwiddleVec) {
+    generic::radix8_v::<V4>(re, im, stage, w1, w2, w4)
+}
+
+fn fused8(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<V4, 8>(re, im, stage, wt)
+}
+
+fn fused16(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<V4, 16>(re, im, stage, wt)
+}
+
+fn fused32(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<V4, 32>(re, im, stage, wt)
+}
+
+fn radix2_b(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, lanes: usize) {
+    generic::radix2_b_v::<V4>(re, im, stage, w1, lanes)
+}
+
+fn radix4_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+    lanes: usize,
+) {
+    generic::radix4_b_v::<V4>(re, im, stage, w1, w2, w3, lanes)
+}
+
+fn radix8_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+    lanes: usize,
+) {
+    generic::radix8_b_v::<V4>(re, im, stage, w1, w2, w4, lanes)
+}
+
+fn fused8_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<V4, 8>(re, im, stage, wt, lanes)
+}
+
+fn fused16_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<V4, 16>(re, im, stage, wt, lanes)
+}
+
+fn fused32_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<V4, 32>(re, im, stage, wt, lanes)
+}
+
+pub(super) static KERNELS: Kernels = Kernels {
+    isa: Isa::Neon,
+    radix2,
+    radix4,
+    radix8,
+    fused8,
+    fused16,
+    fused32,
+    radix2_b,
+    radix4_b,
+    radix8_b,
+    fused8_b,
+    fused16_b,
+    fused32_b,
+};

@@ -1,0 +1,141 @@
+//! Portable `std::simd` codelet backend: 8-lane f32, compiled for
+//! whatever the target baseline supports (the compiler legalizes wider
+//! ops). Nightly-only (`portable_simd` language feature), so the whole
+//! backend sits behind the off-by-default `portable-simd` cargo
+//! feature; without it, [`crate::isa::Isa::Portable`] resolves to the
+//! scalar table.
+
+use std::simd::f32x8;
+use std::sync::Arc;
+
+use super::super::twiddle::TwiddleVec;
+use super::generic::{self, Vf32};
+use super::Kernels;
+use crate::isa::Isa;
+
+/// One portable 8-lane f32 vector.
+#[derive(Clone, Copy)]
+struct VP(f32x8);
+
+impl Vf32 for VP {
+    const LANES: usize = 8;
+
+    #[inline(always)]
+    fn load(src: &[f32]) -> Self {
+        debug_assert!(src.len() >= 8);
+        VP(f32x8::from_slice(&src[..8]))
+    }
+
+    #[inline(always)]
+    fn store(self, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 8);
+        self.0.copy_to_slice(&mut dst[..8]);
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        VP(f32x8::splat(x))
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        VP(self.0 + o.0)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        VP(self.0 - o.0)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        // Plain lane multiply (std::simd never contracts to FMA), so
+        // bit-parity with the scalar kernels holds.
+        VP(self.0 * o.0)
+    }
+
+    #[inline(always)]
+    fn neg(self) -> Self {
+        VP(-self.0)
+    }
+}
+
+fn radix2(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec) {
+    generic::radix2_v::<VP>(re, im, stage, w1)
+}
+
+fn radix4(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w3: &TwiddleVec) {
+    generic::radix4_v::<VP>(re, im, stage, w1, w2, w3)
+}
+
+fn radix8(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, w2: &TwiddleVec, w4: &TwiddleVec) {
+    generic::radix8_v::<VP>(re, im, stage, w1, w2, w4)
+}
+
+fn fused8(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<VP, 8>(re, im, stage, wt)
+}
+
+fn fused16(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<VP, 16>(re, im, stage, wt)
+}
+
+fn fused32(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>]) {
+    generic::fused_v::<VP, 32>(re, im, stage, wt)
+}
+
+fn radix2_b(re: &mut [f32], im: &mut [f32], stage: usize, w1: &TwiddleVec, lanes: usize) {
+    generic::radix2_b_v::<VP>(re, im, stage, w1, lanes)
+}
+
+fn radix4_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w3: &TwiddleVec,
+    lanes: usize,
+) {
+    generic::radix4_b_v::<VP>(re, im, stage, w1, w2, w3, lanes)
+}
+
+fn radix8_b(
+    re: &mut [f32],
+    im: &mut [f32],
+    stage: usize,
+    w1: &TwiddleVec,
+    w2: &TwiddleVec,
+    w4: &TwiddleVec,
+    lanes: usize,
+) {
+    generic::radix8_b_v::<VP>(re, im, stage, w1, w2, w4, lanes)
+}
+
+fn fused8_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<VP, 8>(re, im, stage, wt, lanes)
+}
+
+fn fused16_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<VP, 16>(re, im, stage, wt, lanes)
+}
+
+fn fused32_b(re: &mut [f32], im: &mut [f32], stage: usize, wt: &[Arc<TwiddleVec>], lanes: usize) {
+    generic::fused_b_v::<VP, 32>(re, im, stage, wt, lanes)
+}
+
+pub(super) static KERNELS: Kernels = Kernels {
+    isa: Isa::Portable,
+    radix2,
+    radix4,
+    radix8,
+    fused8,
+    fused16,
+    fused32,
+    radix2_b,
+    radix4_b,
+    radix8_b,
+    fused8_b,
+    fused16_b,
+    fused32_b,
+};

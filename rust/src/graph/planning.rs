@@ -69,10 +69,17 @@ pub struct PlanningGraph {
 impl PlanningGraph {
     /// Build the graph for `l` decomposition stages over `catalog`.
     /// The catalog is sorted and deduplicated so walk order (and thus
-    /// tie-breaking) is canonical regardless of provider order.
+    /// tie-breaking) is canonical regardless of provider order. An
+    /// ISA-pinned surface first masks edges that ISA's register file
+    /// cannot hold ([`crate::isa::Isa::supports`]: no F32 on AVX2's 16
+    /// registers — paper Table 1's "impossible on AVX2" as graph
+    /// structure, so no walk can ever schedule the edge).
     pub fn new(l: usize, surface: PlanningSurface, catalog: Vec<EdgeType>) -> PlanningGraph {
         assert!(surface.k >= 1, "context order must be >= 1");
         let mut edges = catalog;
+        if let Some(isa) = surface.isa {
+            edges.retain(|&e| isa.supports(e));
+        }
         edges.sort();
         edges.dedup();
         assert!(
@@ -541,5 +548,33 @@ mod tests {
     #[should_panic(expected = "boundary edge")]
     fn ru_is_rejected_from_the_catalog() {
         PlanningGraph::new(4, PlanningSurface::forward(), vec![EdgeType::R2, EdgeType::RU]);
+    }
+
+    #[test]
+    fn avx2_surface_masks_f32_from_the_catalog() {
+        use crate::isa::Isa;
+        let full: Vec<EdgeType> = crate::edge::ALL_EDGES
+            .iter()
+            .copied()
+            .filter(|e| *e != EdgeType::RU)
+            .collect();
+        // AVX2's 16-register file cannot hold FFT-32: the edge is graph
+        // structure, absent before any walk runs.
+        let avx2 = PlanningGraph::new(
+            10,
+            PlanningSurface::forward().with_isa(Isa::Avx2),
+            full.clone(),
+        );
+        assert!(!avx2.catalog().contains(&EdgeType::F32));
+        assert_eq!(avx2.catalog().len(), full.len() - 1);
+        // every other backend — and the unpinned surface — keeps it
+        for isa in [Isa::Scalar, Isa::Portable, Isa::Neon] {
+            let g = PlanningGraph::new(10, PlanningSurface::forward().with_isa(isa), full.clone());
+            assert!(g.catalog().contains(&EdgeType::F32), "{isa}");
+        }
+        let unpinned = PlanningGraph::new(10, PlanningSurface::forward(), full.clone());
+        assert!(unpinned.catalog().contains(&EdgeType::F32));
+        // node space shrinks with the catalog: base 6, not 7
+        assert_eq!(avx2.node_count(), 11 * 6);
     }
 }

@@ -46,12 +46,17 @@
 //!   --metrics-out` and `spfft obs`;
 //! * [`report`] — regenerates every table and figure of the paper.
 
+// The `std::simd` portable codelet backend is nightly-only; the feature
+// gate keeps stable builds unchanged (fft::simd falls back to scalar).
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 pub mod autotune;
 pub mod coordinator;
 pub mod cost;
 pub mod edge;
 pub mod fft;
 pub mod graph;
+pub mod isa;
 pub mod kind;
 pub mod obs;
 pub mod plan;

@@ -103,6 +103,27 @@ fn parse_kind(s: &str) -> Result<TransformKind, CliError> {
     })
 }
 
+/// Parse the optional `--isa` surface pin. Empty means "don't pin": the
+/// surface keeps its native passthrough and the cost model prices edges
+/// backend-neutrally, exactly as before the ISA axis existed.
+fn parse_isa(args: &Args) -> Result<Option<spfft::isa::Isa>, CliError> {
+    match args.get("isa") {
+        "" => Ok(None),
+        s => spfft::isa::Isa::parse(s).map(Some).ok_or_else(|| {
+            CliError(format!("--isa must be {}, got '{s}'", spfft::isa::Isa::valid_names()))
+        }),
+    }
+}
+
+/// `--isa` option shared by the planning-surface subcommands.
+fn isa_opt(cmd: Command) -> Command {
+    cmd.opt(
+        "isa",
+        "",
+        "pin the planning surface's codelet backend (scalar|portable|neon|avx2; empty = native)",
+    )
+}
+
 fn make_cost(args: &Args) -> Result<AnyCost, CliError> {
     make_cost_n(args, args.get_usize("n")?)
 }
@@ -144,7 +165,7 @@ fn parse_or_help(cmd: &Command, argv: &[String]) -> Result<Option<Args>, CliErro
 }
 
 fn cmd_search(argv: &[String]) -> Result<(), CliError> {
-    let cmd = common(Command::new("search", "run the searches and baselines"))
+    let cmd = isa_opt(common(Command::new("search", "run the searches and baselines")))
         .opt("k", "1", "context order for the context-aware search")
         .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
         .flag("all", "also rank every valid plan (exhaustive dump)");
@@ -152,12 +173,17 @@ fn cmd_search(argv: &[String]) -> Result<(), CliError> {
     let n = args.get_usize("n")?;
     let k = args.get_usize("k")?;
     let kind = parse_kind(args.get("kind"))?;
+    let isa = parse_isa(&args)?;
     let cn = kind.complex_len(n);
-    let surface = PlanningSurface::for_kind(kind);
+    let mut surface = PlanningSurface::for_kind(kind);
+    if let Some(isa) = isa {
+        surface = surface.with_isa(isa);
+    }
     let mut cost = make_cost_n(&args, cn)?;
     let mut cost = cost.as_dyn();
     println!(
-        "n = {n}, kind = {kind} (c2c n = {cn}), cost = {}/{}",
+        "n = {n}, kind = {kind} (c2c n = {cn}), isa = {}, cost = {}/{}",
+        isa.map(|i| i.name()).unwrap_or("native"),
         args.get("cost"),
         args.get("machine")
     );
@@ -202,10 +228,10 @@ fn tune_strategies(k: usize) -> Vec<Strategy> {
 }
 
 fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
-    let cmd = common(Command::new(
+    let cmd = isa_opt(common(Command::new(
         "tune",
         "per-strategy believed-vs-true cost table on a planning surface",
-    ))
+    )))
     .opt("k", "1", "context order for the context-aware search")
     .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
     .opt("batch", "1", "batch width the surface prices (per-transform amortized weights)")
@@ -218,8 +244,12 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
     if kind.is_real() && n < 4 {
         return Err(CliError(format!("real kinds need --n >= 4, got {n}")));
     }
+    let isa = parse_isa(&args)?;
     let cn = kind.complex_len(n);
-    let surface = PlanningSurface::for_kind(kind).with_batch(args.get_usize("batch")?.max(1));
+    let mut surface = PlanningSurface::for_kind(kind).with_batch(args.get_usize("batch")?.max(1));
+    if let Some(isa) = isa {
+        surface = surface.with_isa(isa);
+    }
     let strategies = match args.get("strategy") {
         "all" => tune_strategies(k),
         "cf" => vec![Strategy::DijkstraContextFree],
@@ -247,6 +277,10 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
         root.insert("machine".to_string(), Json::Str(args.get("machine").into()));
         root.insert("cost".to_string(), Json::Str(args.get("cost").into()));
         root.insert("batch".to_string(), Json::Num(surface.batch_width() as f64));
+        root.insert(
+            "isa".to_string(),
+            Json::Str(isa.map(|i| i.name()).unwrap_or("native").into()),
+        );
         let rows: Vec<Json> = outcomes
             .iter()
             .map(|o| {
@@ -263,8 +297,9 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
         println!("{}", spfft::util::json::to_string(&Json::Obj(root)));
     } else {
         println!(
-            "n = {n}, kind = {kind} (c2c n = {cn}), batch = {}, cost = {}/{}",
+            "n = {n}, kind = {kind} (c2c n = {cn}), batch = {}, isa = {}, cost = {}/{}",
             surface.batch_width(),
+            isa.map(|i| i.name()).unwrap_or("native"),
             args.get("cost"),
             args.get("machine")
         );
@@ -421,8 +456,12 @@ fn synthetic_input(n: usize, kind: TransformKind, seed: u64) -> SplitComplex {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
-    let cmd = common(Command::new("serve", "run the batched FFT service on a synthetic workload"))
-        .opt("requests", "2000", "number of requests")
+    let cmd = isa_opt(common(Command::new(
+        "serve",
+        "run the batched FFT service on a synthetic workload",
+    )))
+    .flag("force-scalar", "force the scalar codelet backend (sets SPFFT_FORCE_SCALAR; parity/debug)")
+    .opt("requests", "2000", "number of requests")
         .opt("backend", "native", "execution backend (native|pjrt)")
         .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
         .opt("batch", "16", "max batch size")
@@ -445,22 +484,29 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         return Err(CliError(format!("real kinds need --n >= 4, got {n}")));
     }
     let requests = args.get_usize("requests")?;
+    // The force switch must be set before any Executor detects its
+    // backend (workers detect at service start).
+    if args.flag("force-scalar") {
+        std::env::set_var("SPFFT_FORCE_SCALAR", "1");
+    }
+    let isa = parse_isa(&args)?;
     // Real kinds plan (and configure the service with) the half-size
     // c2c surface; the request buffers stay n long.
     let cn = kind.complex_len(n);
     let mut cost = make_cost_n(&args, cn)?;
     // Real kinds search the boundary (RU-aware) expanded graph: the
     // walk itself trades a faster c2c tail against a cheaper unpack.
-    let ca = plan_surface(
-        &mut cost.as_dyn(),
-        &Strategy::DijkstraContextAware { k: 1 },
-        PlanningSurface::for_kind(kind),
-    );
+    let mut surface = PlanningSurface::for_kind(kind);
+    if let Some(isa) = isa {
+        surface = surface.with_isa(isa);
+    }
+    let ca = plan_surface(&mut cost.as_dyn(), &Strategy::DijkstraContextAware { k: 1 }, surface);
     println!(
         "planned {} for {kind} n={n} (c2c n={cn}; {:.1} GFLOPS predicted over the c2c core)",
         ca.plan,
         gflops(cn, ca.true_ns)
     );
+    println!("codelet backend: {} (dispatch-detected)", spfft::isa::Isa::detect());
     let backend = match args.get("backend") {
         "native" => spfft::coordinator::Backend::Native,
         "pjrt" => spfft::coordinator::Backend::Pjrt { artifacts_dir: args.get("artifacts").into() },
@@ -586,7 +632,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         }
         if !prom_out.is_empty() {
             fill_believed_from(obs, cost.as_dyn());
-            let text = spfft::obs::prometheus_text(&snap, &obs.attribution().cells());
+            let text = spfft::obs::prometheus_text(
+                &snap,
+                &obs.attribution().cells(),
+                &obs.recorder().stats(),
+            );
             spfft::obs::schema_check_prometheus(&text).map_err(CliError)?;
             std::fs::write(&prom_out, text)
                 .map_err(|e| CliError(format!("writing {prom_out}: {e}")))?;
@@ -625,16 +675,16 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
 }
 
 /// Price every attribution cell's believed cost from the serving cost
-/// model: the cell's own (kind, batch-class) planning surface answers,
-/// so residuals compare observed ns against exactly the weights the
-/// planner searched under.
+/// model: the cell's own (kind, batch-class, isa) planning surface
+/// answers, so residuals compare observed ns against exactly the
+/// weights the planner searched under for that backend.
 fn fill_believed_from(obs: &spfft::obs::Observer, cost: &mut dyn CostModel) {
-    obs.attribution().fill_believed(|(kind, class, stage, edge, ctx)| {
+    obs.attribution().fill_believed(|(kind, isa, class, stage, edge, ctx)| {
         Some(cost.surface_edge_ns(
             edge,
             stage,
             ctx,
-            PlanningSurface::for_kind(kind).with_batch_class(class),
+            PlanningSurface::for_kind(kind).with_batch_class(class).with_isa(isa),
         ))
     });
 }
@@ -649,7 +699,8 @@ fn write_metrics_snapshot(
     cost: &mut dyn CostModel,
 ) -> Result<(), CliError> {
     fill_believed_from(obs, cost);
-    let doc = spfft::obs::snapshot_json(snap, &obs.attribution().cells(), status);
+    let doc =
+        spfft::obs::snapshot_json(snap, &obs.attribution().cells(), &obs.recorder().stats(), status);
     spfft::obs::schema_check_snapshot(&doc).map_err(CliError)?;
     std::fs::write(path, spfft::util::json::to_string(&doc))
         .map_err(|e| CliError(format!("writing {path}: {e}")))

@@ -1,6 +1,6 @@
 //! The live per-edge attribution table: observed nanoseconds per
-//! `(kind, batch class, stage, edge, context)` cell, next to the cost
-//! model's believed value for the same cell.
+//! `(kind, isa, batch class, stage, edge, context)` cell, next to the
+//! cost model's believed value for the same cell.
 //!
 //! This is the observability face of the paper's central object — the
 //! contextual cost table. The autotuner already *learns* from traced
@@ -17,10 +17,14 @@ use std::sync::Mutex;
 use crate::autotune::EdgeSample;
 use crate::cost::batch_class;
 use crate::edge::{Context, EdgeType};
+use crate::isa::Isa;
 use crate::kind::TransformKind;
 
-/// Attribution cell key: (kind, batch class, stage, edge, context).
-pub type AttrKey = (TransformKind, usize, usize, EdgeType, Context);
+/// Attribution cell key: (kind, isa, batch class, stage, edge, context).
+/// The ISA is the codelet backend that executed the sampled pass
+/// ([`EdgeSample::isa`]) — a scalar-forced replay and a native run
+/// account into different cells, so residuals never mix backends.
+pub type AttrKey = (TransformKind, Isa, usize, usize, EdgeType, Context);
 
 /// One attribution cell.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -68,7 +72,14 @@ impl Attribution {
 
     /// The cell key a sample lands in.
     pub fn key_of(sample: &EdgeSample) -> AttrKey {
-        (sample.kind, batch_class(sample.batch.max(1)), sample.stage, sample.edge, sample.ctx)
+        (
+            sample.kind,
+            sample.isa,
+            batch_class(sample.batch.max(1)),
+            sample.stage,
+            sample.edge,
+            sample.ctx,
+        )
     }
 
     /// Fold one sample into its cell.
@@ -100,13 +111,14 @@ impl Attribution {
         }
     }
 
-    /// Snapshot of every cell, sorted by (kind, class, stage, edge, ctx)
-    /// index order — stable across runs for golden tests and exporters.
+    /// Snapshot of every cell, sorted by (kind, isa, class, stage, edge,
+    /// ctx) index order — stable across runs for golden tests and
+    /// exporters.
     pub fn cells(&self) -> Vec<(AttrKey, AttrCell)> {
         let mut out: Vec<(AttrKey, AttrCell)> =
             self.cells.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect();
-        out.sort_by_key(|((kind, class, stage, edge, ctx), _)| {
-            (kind.index(), *class, *stage, edge.index(), ctx.index())
+        out.sort_by_key(|((kind, isa, class, stage, edge, ctx), _)| {
+            (kind.index(), isa.index(), *class, *stage, edge.index(), ctx.index())
         });
         out
     }
@@ -126,7 +138,7 @@ mod tests {
     use super::*;
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, isa: Isa::Scalar, ns }
     }
 
     #[test]
@@ -139,7 +151,7 @@ mod tests {
         let cells = a.cells();
         assert_eq!(cells.len(), 1);
         let (key, cell) = cells[0];
-        assert_eq!(key, (TransformKind::Forward, 0, 0, EdgeType::R4, Context::Start));
+        assert_eq!(key, (TransformKind::Forward, Isa::Scalar, 0, 0, EdgeType::R4, Context::Start));
         // bit-exact: the cell is the plain left-to-right sum
         let want = values.iter().fold(0.0f64, |acc, &v| acc + v);
         assert_eq!(cell.observed_ns.to_bits(), want.to_bits());
@@ -153,25 +165,31 @@ mod tests {
         // 16-wide batch: class 4, whole-batch 1600 ns → 100 ns/transform
         a.observe(&sample(EdgeType::F8, 5, Context::After(EdgeType::R4), 16, 1600.0));
         let (key, cell) = a.cells()[0];
-        assert_eq!(key.1, 4);
+        assert_eq!(key.2, 4);
         assert_eq!(cell.transforms, 16);
         assert_eq!(cell.observed_per_transform(), 100.0);
     }
 
     #[test]
-    fn distinct_contexts_and_kinds_are_distinct_cells() {
+    fn distinct_contexts_kinds_and_isas_are_distinct_cells() {
         let a = Attribution::new();
         a.observe(&sample(EdgeType::R2, 0, Context::Start, 1, 5.0));
         a.observe(&sample(EdgeType::R2, 0, Context::After(EdgeType::R2), 1, 3.0));
         let mut inv = sample(EdgeType::R2, 0, Context::Start, 1, 4.0);
         inv.kind = TransformKind::Inverse;
         a.observe(&inv);
-        assert_eq!(a.len(), 3);
-        // sorted: forward cells first (kind index), then by ctx index
+        // same cell coordinates as the first sample, different backend
+        let mut neon = sample(EdgeType::R2, 0, Context::Start, 1, 2.0);
+        neon.isa = Isa::Neon;
+        a.observe(&neon);
+        assert_eq!(a.len(), 4);
+        // sorted: forward cells first (kind index), scalar before neon
+        // (isa index), then by ctx index
         let cells = a.cells();
-        assert_eq!(cells[0].0 .4, Context::Start);
-        assert_eq!(cells[1].0 .4, Context::After(EdgeType::R2));
-        assert_eq!(cells[2].0 .0, TransformKind::Inverse);
+        assert_eq!(cells[0].0 .5, Context::Start);
+        assert_eq!(cells[1].0 .5, Context::After(EdgeType::R2));
+        assert_eq!(cells[2].0 .1, Isa::Neon);
+        assert_eq!(cells[3].0 .0, TransformKind::Inverse);
     }
 
     #[test]
@@ -179,7 +197,7 @@ mod tests {
         let a = Attribution::new();
         a.observe(&sample(EdgeType::R4, 2, Context::Start, 1, 120.0));
         assert_eq!(a.cells()[0].1.residual_ns(), None);
-        a.fill_believed(|(_, _, _, edge, _)| (edge == EdgeType::R4).then_some(100.0));
+        a.fill_believed(|(_, _, _, _, edge, _)| (edge == EdgeType::R4).then_some(100.0));
         let cell = a.cells()[0].1;
         assert!(cell.has_believed);
         assert_eq!(cell.residual_ns(), Some(20.0));
@@ -192,7 +210,7 @@ mod tests {
         s.kind = TransformKind::RealForward;
         a.observe(&s);
         let (key, _) = a.cells()[0];
-        assert_eq!(key.3, EdgeType::RU);
+        assert_eq!(key.4, EdgeType::RU);
         assert_eq!(key.0, TransformKind::RealForward);
     }
 }

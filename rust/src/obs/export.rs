@@ -12,12 +12,13 @@ use std::collections::BTreeMap;
 use crate::autotune::AutotuneStatus;
 use crate::coordinator::MetricsSnapshot;
 use crate::edge::{Context, EdgeType};
+use crate::isa::Isa;
 use crate::kind::{TransformKind, ALL_KINDS};
 use crate::plan::Plan;
 use crate::util::json::{self, Json};
 
 use super::attribution::{AttrCell, AttrKey};
-use super::recorder::{Event, EventKind};
+use super::recorder::{Event, EventKind, RecorderStats};
 
 /// Prometheus-safe context label: `start`, `after_R2`, ... `after_RU`.
 pub fn ctx_label(ctx: Context) -> String {
@@ -56,9 +57,10 @@ fn attribution_json(cells: &[(AttrKey, AttrCell)]) -> Json {
     Json::Arr(
         cells
             .iter()
-            .map(|((kind, class, stage, edge, ctx), cell)| {
+            .map(|((kind, isa, class, stage, edge, ctx), cell)| {
                 obj(vec![
                     ("kind", s(kind.name())),
+                    ("isa", s(isa.name())),
                     ("class", num(*class as f64)),
                     ("stage", num(*stage as f64)),
                     ("edge", s(edge.name())),
@@ -96,12 +98,13 @@ fn autotune_json(status: &AutotuneStatus) -> Json {
     ])
 }
 
-/// Render one metrics snapshot (plus the attribution table and, when
-/// autotuning, the tuner status) as the versioned JSON document `spfft
-/// serve --metrics-out` writes.
+/// Render one metrics snapshot (plus the attribution table, the
+/// flight-recorder counters, and, when autotuning, the tuner status) as
+/// the versioned JSON document `spfft serve --metrics-out` writes.
 pub fn snapshot_json(
     snap: &MetricsSnapshot,
     attribution: &[(AttrKey, AttrCell)],
+    recorder: &RecorderStats,
     autotune: Option<&AutotuneStatus>,
 ) -> Json {
     let by_kind = Json::Obj(
@@ -150,6 +153,14 @@ pub fn snapshot_json(
             ]),
         ),
         ("busy_ns", num(snap.busy.as_nanos() as f64)),
+        (
+            "recorder",
+            obj(vec![
+                ("capacity", num(recorder.capacity as f64)),
+                ("recorded", num(recorder.recorded as f64)),
+                ("dropped", num(recorder.dropped as f64)),
+            ]),
+        ),
         ("attribution", attribution_json(attribution)),
         ("autotune", autotune.map(autotune_json).unwrap_or(Json::Null)),
     ])
@@ -202,6 +213,11 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
     if doc.get("group_size_hist").as_arr().is_none() {
         return Err("group_size_hist missing or not an array".to_string());
     }
+    for field in ["capacity", "recorded", "dropped"] {
+        if doc.get("recorder").get(field).as_f64().is_none() {
+            return Err(format!("recorder.{field} missing or not a number"));
+        }
+    }
     let cells = doc
         .get("attribution")
         .as_arr()
@@ -213,6 +229,11 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
             .ok_or_else(|| format!("attribution[{i}].kind missing"))?;
         if TransformKind::parse(kind).is_none() {
             return Err(format!("attribution[{i}].kind \"{kind}\" unknown"));
+        }
+        let isa =
+            cell.get("isa").as_str().ok_or_else(|| format!("attribution[{i}].isa missing"))?;
+        if Isa::parse(isa).is_none() {
+            return Err(format!("attribution[{i}].isa \"{isa}\" unknown"));
         }
         let edge =
             cell.get("edge").as_str().ok_or_else(|| format!("attribution[{i}].edge missing"))?;
@@ -272,9 +293,13 @@ fn prom_head(out: &mut String, name: &str, kind: &str, help: &str) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
 }
 
-/// Render a [`MetricsSnapshot`] plus the attribution table in the
-/// Prometheus text exposition format.
-pub fn prometheus_text(snap: &MetricsSnapshot, attribution: &[(AttrKey, AttrCell)]) -> String {
+/// Render a [`MetricsSnapshot`], the attribution table, and the
+/// flight-recorder counters in the Prometheus text exposition format.
+pub fn prometheus_text(
+    snap: &MetricsSnapshot,
+    attribution: &[(AttrKey, AttrCell)],
+    recorder: &RecorderStats,
+) -> String {
     let mut out = String::new();
     prom_head(&mut out, "spfft_submitted_total", "counter", "Requests accepted into the queue");
     prom_line(&mut out, "spfft_submitted_total", &[], snap.submitted as f64);
@@ -317,16 +342,33 @@ pub fn prometheus_text(snap: &MetricsSnapshot, attribution: &[(AttrKey, AttrCell
     prom_line(&mut out, "spfft_held_age_ns", &[("stat", "max".into())], snap.max_held_age.as_nanos() as f64);
     prom_head(&mut out, "spfft_busy_ns_total", "counter", "Total worker busy time (ns)");
     prom_line(&mut out, "spfft_busy_ns_total", &[], snap.busy.as_nanos() as f64);
+    prom_head(
+        &mut out,
+        "spfft_recorder_events_total",
+        "counter",
+        "Flight-recorder events ever recorded (including overwritten)",
+    );
+    prom_line(&mut out, "spfft_recorder_events_total", &[], recorder.recorded as f64);
+    prom_head(
+        &mut out,
+        "spfft_recorder_dropped_total",
+        "counter",
+        "Flight-recorder events lost to ring overwrite",
+    );
+    prom_line(&mut out, "spfft_recorder_dropped_total", &[], recorder.dropped as f64);
+    prom_head(&mut out, "spfft_recorder_capacity", "gauge", "Flight-recorder ring capacity");
+    prom_line(&mut out, "spfft_recorder_capacity", &[], recorder.capacity as f64);
 
     prom_head(
         &mut out,
         "spfft_edge_observed_ns_total",
         "counter",
-        "Observed whole-batch ns per (kind, class, stage, edge, ctx) attribution cell",
+        "Observed whole-batch ns per (kind, isa, class, stage, edge, ctx) attribution cell",
     );
-    let cell_labels = |(kind, class, stage, edge, ctx): &AttrKey| {
+    let cell_labels = |(kind, isa, class, stage, edge, ctx): &AttrKey| {
         vec![
             ("kind", kind.name().to_string()),
+            ("isa", isa.name().to_string()),
             ("class", class.to_string()),
             ("stage", stage.to_string()),
             ("edge", edge.name().to_string()),
@@ -371,9 +413,10 @@ pub fn prometheus_text(snap: &MetricsSnapshot, attribution: &[(AttrKey, AttrCell
     out
 }
 
-/// Validate Prometheus text output: the core metric families must be
-/// present, every sample line must parse as `name[{labels}] value`, and
-/// every attribution sample must carry the full five-label cell key.
+/// Validate Prometheus text output: the core metric families (including
+/// the flight-recorder counters) must be present, every sample line must
+/// parse as `name[{labels}] value`, and every attribution sample must
+/// carry the full six-label cell key.
 pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
     let required = [
         "spfft_submitted_total",
@@ -382,6 +425,8 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
         "spfft_batches_total",
         "spfft_groups_total",
         "spfft_latency_ns",
+        "spfft_recorder_events_total",
+        "spfft_recorder_dropped_total",
     ];
     for name in required {
         if !text.lines().any(|l| !l.starts_with('#') && l.starts_with(name)) {
@@ -408,7 +453,7 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
             return err("unterminated label set");
         }
         if name == "spfft_edge_observed_ns_total" {
-            for label in ["kind=", "class=", "stage=", "edge=", "ctx="] {
+            for label in ["kind=", "isa=", "class=", "stage=", "edge=", "ctx="] {
                 if !name_labels.contains(label) {
                     return err(&format!("attribution sample missing {label} label"));
                 }
@@ -826,7 +871,7 @@ mod tests {
     fn sample_cells() -> Vec<(AttrKey, AttrCell)> {
         vec![
             (
-                (TransformKind::Forward, 0, 0, EdgeType::R4, Context::Start),
+                (TransformKind::Forward, Isa::Scalar, 0, 0, EdgeType::R4, Context::Start),
                 AttrCell {
                     observed_ns: 120.0,
                     transforms: 2,
@@ -836,15 +881,26 @@ mod tests {
                 },
             ),
             (
-                (TransformKind::RealForward, 2, 0, EdgeType::RU, Context::After(EdgeType::F8)),
+                (
+                    TransformKind::RealForward,
+                    Isa::Neon,
+                    2,
+                    0,
+                    EdgeType::RU,
+                    Context::After(EdgeType::F8),
+                ),
                 AttrCell { observed_ns: 30.0, transforms: 4, samples: 1, ..Default::default() },
             ),
         ]
     }
 
+    fn sample_recorder() -> RecorderStats {
+        RecorderStats { capacity: 64, recorded: 100, dropped: 36 }
+    }
+
     #[test]
     fn snapshot_json_round_trips_through_parse_and_validates() {
-        let doc = snapshot_json(&sample_snapshot(), &sample_cells(), None);
+        let doc = snapshot_json(&sample_snapshot(), &sample_cells(), &sample_recorder(), None);
         let text = json::to_string(&doc);
         let parsed = json::parse(&text).unwrap();
         schema_check_snapshot(&parsed).unwrap();
@@ -853,18 +909,23 @@ mod tests {
             parsed.get("counters").get("completed_by_kind").get("inverse").as_usize(),
             Some(2)
         );
+        assert_eq!(parsed.get("recorder").get("capacity").as_usize(), Some(64));
+        assert_eq!(parsed.get("recorder").get("recorded").as_usize(), Some(100));
+        assert_eq!(parsed.get("recorder").get("dropped").as_usize(), Some(36));
         let cells = parsed.get("attribution").as_arr().unwrap();
         assert_eq!(cells.len(), 2);
         assert_eq!(cells[0].get("edge").as_str(), Some("R4"));
+        assert_eq!(cells[0].get("isa").as_str(), Some("scalar"));
         assert_eq!(cells[0].get("believed_ns").as_f64(), Some(55.0));
         assert_eq!(cells[0].get("residual_ns").as_f64(), Some(5.0));
         assert_eq!(cells[1].get("ctx").as_str(), Some("after_F8"));
+        assert_eq!(cells[1].get("isa").as_str(), Some("neon"));
         assert!(matches!(cells[1].get("believed_ns"), Json::Null));
     }
 
     #[test]
     fn schema_check_rejects_missing_fields() {
-        let doc = snapshot_json(&sample_snapshot(), &[], None);
+        let doc = snapshot_json(&sample_snapshot(), &[], &sample_recorder(), None);
         let mut text = json::to_string(&doc);
         schema_check_snapshot(&json::parse(&text).unwrap()).unwrap();
         // rename a counter: must fail
@@ -872,24 +933,50 @@ mod tests {
         let err = schema_check_snapshot(&json::parse(&text).unwrap()).unwrap_err();
         assert!(err.contains("submitted"), "unhelpful error: {err}");
         // wrong schema tag: must fail
-        let bad = json::parse(&json::to_string(&snapshot_json(&sample_snapshot(), &[], None))
-            .replace("spfft.metrics.v1", "spfft.metrics.v0"))
+        let bad = json::parse(
+            &json::to_string(&snapshot_json(&sample_snapshot(), &[], &sample_recorder(), None))
+                .replace("spfft.metrics.v1", "spfft.metrics.v0"),
+        )
         .unwrap();
         assert!(schema_check_snapshot(&bad).is_err());
     }
 
     #[test]
+    fn recorder_counters_are_gated_by_the_schema_checks() {
+        // JSON: renaming the drop counter is a hard error
+        let doc = snapshot_json(&sample_snapshot(), &sample_cells(), &sample_recorder(), None);
+        let text = json::to_string(&doc);
+        let renamed = text.replace("\"dropped\"", "\"lost\"");
+        let err = schema_check_snapshot(&json::parse(&renamed).unwrap()).unwrap_err();
+        assert!(err.contains("recorder.dropped"), "unhelpful error: {err}");
+        // Prometheus: stripping the drop-counter family is a hard error
+        let prom = prometheus_text(&sample_snapshot(), &sample_cells(), &sample_recorder());
+        assert!(prom.contains("spfft_recorder_events_total 100"));
+        assert!(prom.contains("spfft_recorder_dropped_total 36"));
+        assert!(prom.contains("spfft_recorder_capacity 64"));
+        let stripped: String = prom
+            .lines()
+            .filter(|l| !l.contains("spfft_recorder_dropped_total"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = schema_check_prometheus(&stripped).unwrap_err();
+        assert!(err.contains("spfft_recorder_dropped_total"), "unhelpful error: {err}");
+    }
+
+    #[test]
     fn prometheus_text_validates_and_carries_cell_labels() {
-        let text = prometheus_text(&sample_snapshot(), &sample_cells());
+        let text = prometheus_text(&sample_snapshot(), &sample_cells(), &sample_recorder());
         schema_check_prometheus(&text).unwrap();
         assert!(text.contains("spfft_submitted_total 10"));
         assert!(text.contains("spfft_completed_total{kind=\"forward\"} 4"));
         assert!(text.contains(
-            "spfft_edge_observed_ns_total{kind=\"forward\",class=\"0\",stage=\"0\",\
-             edge=\"R4\",ctx=\"start\"} 120"
+            "spfft_edge_observed_ns_total{kind=\"forward\",isa=\"scalar\",class=\"0\",\
+             stage=\"0\",edge=\"R4\",ctx=\"start\"} 120"
         ));
         assert!(text.contains("spfft_edge_residual_ns"));
-        // the believed-less RU cell exports observed but not believed
+        // the believed-less RU cell exports observed but not believed,
+        // and carries its own backend label
+        assert!(text.contains("isa=\"neon\""));
         assert!(text.contains("edge=\"RU\",ctx=\"after_F8\"} 30"));
         assert!(!text.contains("spfft_edge_believed_ns{kind=\"real\""));
     }
@@ -897,12 +984,12 @@ mod tests {
     #[test]
     fn prometheus_check_catches_malformed_lines() {
         assert!(schema_check_prometheus("garbage").is_err());
-        let mut text = prometheus_text(&sample_snapshot(), &sample_cells());
+        let mut text = prometheus_text(&sample_snapshot(), &sample_cells(), &sample_recorder());
         schema_check_prometheus(&text).unwrap();
         text.push_str("spfft_bad_line_no_value\n");
         assert!(schema_check_prometheus(&text).is_err());
-        let stripped = prometheus_text(&sample_snapshot(), &sample_cells())
-            .replace("kind=\"forward\",class=\"0\",", "");
+        let stripped = prometheus_text(&sample_snapshot(), &sample_cells(), &sample_recorder())
+            .replace("kind=\"forward\",isa=\"scalar\",", "");
         assert!(schema_check_prometheus(&stripped).is_err(), "missing cell labels not caught");
     }
 

@@ -8,7 +8,7 @@
 //!   latency span) and the autotuner's decision trail (drift → replan →
 //!   swap, with before/after plans and the costs the decision believed);
 //! * the **attribution table** ([`Attribution`]) — observed nanoseconds
-//!   per `(kind, batch class, stage, edge, context)` cell, accumulated
+//!   per `(kind, isa, batch class, stage, edge, context)` cell, accumulated
 //!   from the same traced samples the autotuner learns from, exposing
 //!   the residual against the cost model's believed `surface_edge_ns`;
 //! * the **exporters** ([`export`]) — versioned JSON snapshots
@@ -32,7 +32,7 @@ pub use export::{
     audit_trail, ctx_from_label, ctx_label, events_from_json, events_json, prometheus_text,
     render_events, schema_check_prometheus, schema_check_snapshot, snapshot_json,
 };
-pub use recorder::{Event, EventKind, FlightRecorder, StageTime};
+pub use recorder::{Event, EventKind, FlightRecorder, RecorderStats, StageTime};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -160,6 +160,7 @@ mod tests {
                 ctx: Context::Start,
                 kind: TransformKind::Forward,
                 batch: 4,
+                isa: crate::isa::Isa::Scalar,
                 ns: 400.0,
             },
             EdgeSample {
@@ -168,6 +169,7 @@ mod tests {
                 ctx: Context::After(EdgeType::R4),
                 kind: TransformKind::Forward,
                 batch: 4,
+                isa: crate::isa::Isa::Scalar,
                 ns: 900.0,
             },
         ]);

@@ -127,6 +127,19 @@ pub struct Event {
     pub kind: EventKind,
 }
 
+/// Counter snapshot of a [`FlightRecorder`], as the exporters render it
+/// (`recorder` object in `spfft.metrics.v1`, `spfft_recorder_*`
+/// Prometheus families).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecorderStats {
+    /// Ring capacity (events the recorder can hold).
+    pub capacity: usize,
+    /// Events ever recorded, including overwritten ones.
+    pub recorded: u64,
+    /// Events lost to ring overwrite (`recorded - capacity`, floored).
+    pub dropped: u64,
+}
+
 /// Fixed-capacity multi-writer event ring.
 #[derive(Debug)]
 pub struct FlightRecorder {
@@ -151,6 +164,23 @@ impl FlightRecorder {
     /// overwritten).
     pub fn recorded(&self) -> u64 {
         self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Events the bounded ring has overwritten (flight-recorder drops).
+    /// The ring always holds the newest `capacity()` events, so this is
+    /// exactly `recorded - capacity`, floored at zero.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.capacity() as u64)
+    }
+
+    /// One consistent counter snapshot for the exporters.
+    pub fn stats(&self) -> RecorderStats {
+        let recorded = self.recorded();
+        RecorderStats {
+            capacity: self.capacity(),
+            recorded,
+            dropped: recorded.saturating_sub(self.capacity() as u64),
+        }
     }
 
     /// Append an event; returns its sequence number. Lock scope is one
@@ -212,6 +242,23 @@ mod tests {
         let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![6, 7, 8, 9]);
         assert_eq!(r.recorded(), 10);
+    }
+
+    #[test]
+    fn dropped_counts_ring_overwrites() {
+        let r = FlightRecorder::new(4);
+        assert_eq!(r.dropped(), 0);
+        for i in 0..4 {
+            r.record(i, submit(i));
+        }
+        // exactly full: nothing lost yet
+        assert_eq!(r.dropped(), 0);
+        for i in 4..10 {
+            r.record(i, submit(i));
+        }
+        assert_eq!(r.dropped(), 6);
+        let stats = r.stats();
+        assert_eq!(stats, RecorderStats { capacity: 4, recorded: 10, dropped: 6 });
     }
 
     #[test]

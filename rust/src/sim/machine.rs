@@ -59,6 +59,22 @@ impl Machine {
         ALL_EDGES.iter().copied().filter(|e| self.edge_available(*e)).collect()
     }
 
+    /// Relative price of running `edge`'s kernel through `isa`'s codelet
+    /// backend instead of this machine's native vector unit (1.0 for the
+    /// native ISA). Fused edges compose the extra `isa_fused_mult`
+    /// degradation — in-register blocks lose their advantage away from
+    /// the ISA they were scheduled for. The RU boundary pass is scalar
+    /// in every backend and never routes here.
+    pub fn isa_mult(&self, edge: EdgeType, isa: crate::isa::Isa) -> f64 {
+        let i = isa.index();
+        let base = self.params.isa_mult[i];
+        if edge.is_fused() {
+            base * self.params.isa_fused_mult[i]
+        } else {
+            base
+        }
+    }
+
     /// Simulated time of `edge` at `stage` for an n-point FFT, conditioned
     /// on the predecessor context — one cell of the measurement database.
     pub fn edge_ns(&self, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {

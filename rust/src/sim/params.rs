@@ -7,6 +7,7 @@
 //! R4,R8,R8,R4 with no fused blocks (finding 5).
 
 use crate::edge::EdgeType;
+use crate::isa::{Isa, NUM_ISAS};
 
 /// Per-radix butterfly issue costs, in cycles per vector group (one group =
 /// `lanes` butterflies issued through the FMA pipes).
@@ -143,6 +144,23 @@ pub struct MachineParams {
     /// across-the-board residency bonus, between the affinity bonuses
     /// and neutral.
     pub after_boundary_mem: f64,
+    /// The machine's native vector unit: the ISA the calibrated tables
+    /// above describe (M1 = NEON, Haswell = AVX2). Surfaces pinned to
+    /// other backends reprice through `isa_mult` / `isa_fused_mult`.
+    pub isa: Isa,
+    /// Relative throughput of each codelet backend on this machine,
+    /// indexed by [`Isa::index`] — the multiplier on a c2c edge's native
+    /// price when a surface pins that ISA. The native entry is 1.0;
+    /// scalar pays the full vector collapse (≈ lane count, softened by
+    /// superscalar issue); non-native vector backends pay a modest
+    /// legalization tax.
+    pub isa_mult: [f64; NUM_ISAS],
+    /// Extra multiplier on *fused* edges per backend (composed with
+    /// `isa_mult`). Fused register blocks live or die by in-register
+    /// residency, so they degrade hardest away from the native ISA —
+    /// on the scalar backend an F-block is just its unfused passes with
+    /// worse scheduling, which prices fused edges out of scalar plans.
+    pub isa_fused_mult: [f64; NUM_ISAS],
 }
 
 impl MachineParams {
@@ -186,6 +204,14 @@ impl MachineParams {
             // The RU walk re-touches the whole buffer: everything is
             // L1-resident for the next pass, with no stride alignment.
             after_boundary_mem: 0.90,
+            // Calibrated for 128-bit NEON; indexed [scalar, portable,
+            // neon, avx2]. Scalar collapses the 4-lane groups (softened
+            // by Firestorm's 8-wide scalar issue); portable std::simd
+            // legalizes to NEON with a small codegen tax; AVX2 codelets
+            // would run emulated/translated here — priced, not free.
+            isa: Isa::Neon,
+            isa_mult: [3.0, 1.15, 1.0, 1.25],
+            isa_fused_mult: [2.0, 1.1, 1.0, 1.3],
         }
     }
 
@@ -238,6 +264,14 @@ impl MachineParams {
             // Weak context effects on the 2015-era Haswell model.
             unpack_after_fused: 0.9,
             after_boundary_mem: 0.98,
+            // Calibrated for 256-bit AVX2; indexed [scalar, portable,
+            // neon, avx2]. Scalar collapses the 8-lane groups (Haswell's
+            // 4-wide issue softens less than Firestorm's); portable
+            // legalizes to AVX2 cheaply; NEON codelets would run through
+            // 128-bit SSE-width translation — a small tax.
+            isa: Isa::Avx2,
+            isa_mult: [3.2, 1.2, 1.1, 1.0],
+            isa_fused_mult: [2.0, 1.15, 1.05, 1.0],
         }
     }
 
@@ -356,6 +390,29 @@ mod tests {
             assert!(m.unpack_after_fused > 0.0 && m.unpack_after_fused < 1.0);
             assert!(m.after_boundary_mem > 0.0 && m.after_boundary_mem <= 1.0);
         }
+    }
+
+    #[test]
+    fn isa_calibration_is_sane() {
+        // Native ISA multiplies by exactly 1.0 (pinning it must be a
+        // passthrough); every other backend costs more; scalar costs the
+        // most and additionally loses the fused-block advantage.
+        for m in [MachineParams::m1(), MachineParams::haswell()] {
+            let native = m.isa.index();
+            assert_eq!(m.isa_mult[native], 1.0, "{}", m.name);
+            assert_eq!(m.isa_fused_mult[native], 1.0, "{}", m.name);
+            for isa in crate::isa::ALL_ISAS {
+                let i = isa.index();
+                if i != native {
+                    assert!(m.isa_mult[i] > 1.0, "{} on {}", isa, m.name);
+                    assert!(m.isa_fused_mult[i] >= 1.0, "{} on {}", isa, m.name);
+                }
+                let scalar = Isa::Scalar.index();
+                assert!(m.isa_mult[scalar] >= m.isa_mult[i], "scalar slowest on {}", m.name);
+            }
+        }
+        assert_eq!(MachineParams::m1().isa, Isa::Neon);
+        assert_eq!(MachineParams::haswell().isa, Isa::Avx2);
     }
 
     #[test]

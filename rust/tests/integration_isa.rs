@@ -1,0 +1,182 @@
+//! ISA as a planning axis, end to end: register-file constraints become
+//! graph structure (no F32 edges on AVX2-pinned surfaces — paper
+//! Table 1's "impossible on AVX2" as edge availability), the five
+//! strategies produce ISA-dependent plans on the pinned m1 / haswell
+//! sim tables, pinning a machine's *native* ISA is a bit-exact
+//! passthrough, and wisdom-v2 files written before the ISA axis (no
+//! `"isa"` field anywhere) load as scalar observations.
+
+use spfft::autotune::{OnlineCost, WisdomV2};
+use spfft::cost::{PlanningSurface, SimCost, Wisdom};
+use spfft::edge::EdgeType;
+use spfft::graph::PlanningGraph;
+use spfft::isa::Isa;
+use spfft::kind::TransformKind;
+use spfft::plan::Plan;
+use spfft::planner::{plan_surface, Strategy};
+
+/// Checked-in fixture written before the SIMD backends: live counts
+/// present, batched and inverse records present, no `"isa"` fields.
+const LEGACY_NOISA: &str = include_str!("data/wisdom2_legacy_noisa.json");
+
+fn five() -> Vec<Strategy> {
+    vec![
+        Strategy::DijkstraContextFree,
+        Strategy::DijkstraContextAware { k: 1 },
+        Strategy::FftwDp,
+        Strategy::SpiralBeam { width: 3 },
+        Strategy::Exhaustive,
+    ]
+}
+
+fn has_f32(plan: &Plan) -> bool {
+    plan.edges().contains(&EdgeType::F32)
+}
+
+#[test]
+fn avx2_pinned_surfaces_mask_f32_from_the_planning_graph() {
+    let mut cost = SimCost::m1(1024);
+    let native = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward());
+    assert!(native.catalog().contains(&EdgeType::F32));
+    // 32-register backends keep the machine's full catalog
+    for isa in [Isa::Scalar, Isa::Portable, Isa::Neon] {
+        let g = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward().with_isa(isa));
+        assert_eq!(g.catalog(), native.catalog(), "{isa}");
+    }
+    // AVX2's 16-register file cannot hold the F32 working set: the edge
+    // is absent from the graph, so no walk can ever schedule it
+    let avx2 = PlanningGraph::for_cost(&mut cost, PlanningSurface::forward().with_isa(Isa::Avx2));
+    assert!(!avx2.catalog().contains(&EdgeType::F32));
+    let want: Vec<EdgeType> =
+        native.catalog().iter().copied().filter(|&e| e != EdgeType::F32).collect();
+    assert_eq!(avx2.catalog(), &want[..], "only F32 is masked");
+    // real-kind surfaces mask identically (RU is the structural
+    // boundary edge, never a catalog entry, on every backend)
+    let mut half = SimCost::m1(512);
+    let real = PlanningGraph::for_cost(
+        &mut half,
+        PlanningSurface::for_kind(TransformKind::RealForward).with_isa(Isa::Avx2),
+    );
+    assert!(!real.catalog().contains(&EdgeType::F32));
+    assert!(!real.catalog().contains(&EdgeType::RU));
+    // haswell's own tables never offered F32 (it *is* the 16-register
+    // machine), so pinning its native ISA cannot change the catalog
+    let mut hw = SimCost::haswell(1024);
+    let hw_native = PlanningGraph::for_cost(&mut hw, PlanningSurface::forward());
+    assert!(!hw_native.catalog().contains(&EdgeType::F32));
+    let hw_avx2 = PlanningGraph::for_cost(&mut hw, PlanningSurface::forward().with_isa(Isa::Avx2));
+    assert_eq!(hw_avx2.catalog(), hw_native.catalog());
+}
+
+#[test]
+fn strategies_plan_isa_dependently_on_the_pinned_sim_tables() {
+    // m1 @ 1024 (native NEON). Two ISA effects hold for every strategy
+    // by construction: pinning the native ISA multiplies every weight
+    // by exactly 1.0 (bit-exact passthrough — this is what keeps the
+    // golden plans stable), and an AVX2 pin removes F32 from the
+    // reachable plan space, rerouting any strategy whose native
+    // optimum schedules it.
+    for strat in five() {
+        let native = plan_surface(&mut SimCost::m1(1024), &strat, PlanningSurface::forward());
+        let neon = plan_surface(
+            &mut SimCost::m1(1024),
+            &strat,
+            PlanningSurface::forward().with_isa(Isa::Neon),
+        );
+        assert_eq!(neon.plan, native.plan, "{}: native pin is a passthrough", strat.name());
+        assert_eq!(neon.true_ns, native.true_ns, "{}", strat.name());
+
+        let avx2 = plan_surface(
+            &mut SimCost::m1(1024),
+            &strat,
+            PlanningSurface::forward().with_isa(Isa::Avx2),
+        );
+        assert!(!has_f32(&avx2.plan), "{}: F32 unreachable on AVX2", strat.name());
+        if has_f32(&native.plan) {
+            assert_ne!(avx2.plan, native.plan, "{}: the mask must reroute", strat.name());
+        }
+    }
+    // ... and the F32 dependence is real, not vacuous: the golden
+    // context-free and FFTW-DP optima on m1 both schedule F32
+    // (F8->R4->F32, see tests/data/tune_golden_m1_1024_forward.json)
+    let mut cost = SimCost::m1(1024);
+    let cf = plan_surface(&mut cost, &Strategy::DijkstraContextFree, PlanningSurface::forward());
+    assert!(has_f32(&cf.plan), "golden m1 context-free plan uses F32, got [{}]", cf.plan);
+    let dp = plan_surface(&mut cost, &Strategy::FftwDp, PlanningSurface::forward());
+    assert!(has_f32(&dp.plan), "golden m1 fftw-dp plan uses F32, got [{}]", dp.plan);
+}
+
+#[test]
+fn pinned_backend_costs_order_by_the_machines_isa_calibration() {
+    // For the exact searches the optimum's true cost orders by the
+    // machine's relative-throughput calibration: every weight on a
+    // slower backend's surface pointwise-dominates the faster one's
+    // (and AVX2 additionally searches a smaller catalog), so the
+    // optima order structurally — no dependence on which plan wins.
+    for strat in [Strategy::DijkstraContextAware { k: 1 }, Strategy::Exhaustive] {
+        // m1: native NEON < portable (legalization tax) < AVX2
+        // (translation tax + masked F32) < scalar (vector collapse)
+        let t = |isa: Isa| {
+            plan_surface(&mut SimCost::m1(1024), &strat, PlanningSurface::forward().with_isa(isa))
+                .true_ns
+        };
+        let (s, p, v, a) = (t(Isa::Scalar), t(Isa::Portable), t(Isa::Neon), t(Isa::Avx2));
+        assert!(
+            v < p && p < a && a < s,
+            "m1 {}: want neon {v} < portable {p} < avx2 {a} < scalar {s}",
+            strat.name()
+        );
+        // haswell: native AVX2 < NEON (128-bit translation) < portable
+        // < scalar
+        let t = |isa: Isa| {
+            plan_surface(
+                &mut SimCost::haswell(1024),
+                &strat,
+                PlanningSurface::forward().with_isa(isa),
+            )
+            .true_ns
+        };
+        let (s, p, v, a) = (t(Isa::Scalar), t(Isa::Portable), t(Isa::Neon), t(Isa::Avx2));
+        assert!(
+            a < v && v < p && p < s,
+            "haswell {}: want avx2 {a} < neon {v} < portable {p} < scalar {s}",
+            strat.name()
+        );
+    }
+}
+
+#[test]
+fn legacy_wisdom_without_isa_loads_as_scalar() {
+    // Acceptance fixture: wisdom v2 files written before the ISA axis
+    // parse, default every record to the scalar backend, and seed only
+    // scalar observation slots — mirroring the "kind" migration
+    // (`legacy_wisdom_without_kind_loads_forward_only`).
+    let w2 = WisdomV2::from_json(LEGACY_NOISA).expect("legacy fixture must parse");
+    assert_eq!(w2.n, 256);
+    assert_eq!(w2.cells.len(), 4);
+    assert!(w2.cells.iter().all(|c| c.isa == Isa::Scalar), "legacy records default to scalar");
+    // re-serialization writes the explicit modern field and round-trips
+    let text = w2.to_json();
+    assert!(text.contains("\"isa\":\"scalar\""));
+    assert_eq!(WisdomV2::from_json(&text).unwrap(), w2);
+    // seeding a split-kind model restores counts at the scalar slot and
+    // leaves every other backend's slot empty
+    let prior = Wisdom {
+        n: 256,
+        source: "sim:m1".into(),
+        cells: w2.cells.iter().map(|c| (c.edge, c.stage, c.ctx, c.prior_ns)).collect(),
+    };
+    let mut model = OnlineCost::from_wisdom(&prior, 0.5, 4.0);
+    model.set_split_kinds(true);
+    w2.seed_model(&mut model);
+    let cell = (w2.cells[0].edge, w2.cells[0].stage, w2.cells[0].ctx);
+    let obs = |m: &OnlineCost, isa| {
+        m.observation_kind_isa_at(cell, 0, TransformKind::Forward, isa).map(|o| o.count)
+    };
+    assert_eq!(obs(&model, Isa::Scalar), Some(12));
+    for isa in [Isa::Portable, Isa::Neon, Isa::Avx2] {
+        assert_eq!(obs(&model, isa), None, "{isa}: no legacy data");
+    }
+    // the no-isa batched-prior record still lands as a class prior
+    assert_eq!(model.prior_at(cell, spfft::autotune::batch_class(16)), Some(420.0));
+}

@@ -233,8 +233,15 @@ fn plan_samples(prior: &Wisdom, plan: &Plan, factor: f64) -> Vec<EdgeSample> {
                 .map(|&(_, _, _, ns)| ns)
                 .expect("cell in prior")
                 * factor;
-            let sample =
-                EdgeSample { edge: e, stage: s, ctx, kind: TransformKind::Forward, batch: 1, ns };
+            let sample = EdgeSample {
+                edge: e,
+                stage: s,
+                ctx,
+                kind: TransformKind::Forward,
+                batch: 1,
+                isa: spfft::isa::Isa::Scalar,
+                ns,
+            };
             ctx = Context::After(e);
             sample
         })
@@ -347,9 +354,15 @@ fn harness_stream_round_trips_through_the_exporters() {
     d.obs.attribution().fill_believed(|_| Some(1.0));
     let snap = d.metrics.snapshot();
     let cells = d.obs.attribution().cells();
-    let json = snapshot_json(&snap, &cells, None);
+    let recorder = d.obs.recorder().stats();
+    let json = snapshot_json(&snap, &cells, &recorder, None);
     schema_check_snapshot(&json).expect("snapshot schema");
-    let prom = prometheus_text(&snap, &cells);
+    let prom = prometheus_text(&snap, &cells, &recorder);
     schema_check_prometheus(&prom).expect("prometheus schema");
     assert!(prom.contains("spfft_edge_residual_ns"));
+    // the flight-recorder counters ride along in both exports
+    assert!(json.get("recorder").get("recorded").as_f64().unwrap() >= events.len() as f64);
+    assert!(prom.contains("spfft_recorder_dropped_total 0"));
+    // every exported cell carries the dispatching backend's label
+    assert!(prom.contains("isa=\"scalar\""));
 }
