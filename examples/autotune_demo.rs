@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
+        shed_deadline: None,
         observer: None,
     })?;
 

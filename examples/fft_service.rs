@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })?;
 

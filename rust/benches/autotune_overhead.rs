@@ -136,6 +136,7 @@ fn trajectory_section(quick: bool) -> Trajectory {
         coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
+        shed_deadline: None,
         observer: None,
     })
     .expect("service");

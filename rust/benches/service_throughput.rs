@@ -30,6 +30,7 @@ fn main() {
             coalesce: Default::default(),
             queue_depth: 512,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         })
         .expect("service");

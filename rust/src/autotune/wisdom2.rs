@@ -323,6 +323,14 @@ impl WisdomV2 {
             .ok_or_else(|| anyhow!("wisdom2: missing source"))?
             .to_string();
         let mut cells = Vec::new();
+        // Edge records must be unique per (cell, kind, batch class, isa,
+        // record role): the loader used to fold duplicates last-wins,
+        // which silently dropped whichever estimate serialized first — a
+        // hand-edited or badly merged file lost data with no diagnostic.
+        // The prior/observation split (`count == 0` vs `> 0`) stays a
+        // legitimate pair: `from_model` emits both for a class that has
+        // an installed prior *and* live samples.
+        let mut seen = std::collections::HashSet::new();
         for c in root.get("cells").as_arr().ok_or_else(|| anyhow!("wisdom2: missing cells"))? {
             let edge = c
                 .get("edge")
@@ -367,6 +375,19 @@ impl WisdomV2 {
             let count = c.get("count").as_usize().unwrap_or(0) as u64;
             if count > 0 && (!obs_ns.is_finite() || obs_ns <= 0.0) {
                 bail!("wisdom2: non-positive observation for {edge}@{stage}");
+            }
+            let class = crate::autotune::model::batch_class(batch);
+            if !seen.insert((edge, stage, ctx.index(), kind, class, isa, count > 0)) {
+                bail!(
+                    "wisdom2: duplicate {} record for {edge}@{stage} (ctx {}, kind {}, \
+                     batch class {}, isa {}) — records collide after batch-class \
+                     canonicalization and last-wins merging would silently drop data",
+                    if count > 0 { "observation" } else { "prior" },
+                    ctx.index(),
+                    kind.name(),
+                    crate::autotune::model::class_batch(class),
+                    isa.name(),
+                );
             }
             cells.push(CellRecord { edge, stage, ctx, kind, batch, isa, prior_ns, obs_ns, count });
         }
@@ -795,6 +816,61 @@ mod tests {
                 "cells":[{"edge":"R2","stage":0,"ctx":0,"prior_ns":5.0,"obs_ns":-1.0,"count":3}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn duplicate_edge_records_are_a_load_error_not_last_wins() {
+        // Two observation records for the same (cell, kind, batch class,
+        // isa) — the loader must refuse instead of keeping whichever
+        // came last.
+        let err = WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x","cells":[
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":1,"isa":"scalar","prior_ns":5.0,"obs_ns":6.0,"count":3},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":1,"isa":"scalar","prior_ns":5.0,"obs_ns":9.0,"count":8}]}"#,
+        )
+        .expect_err("duplicate observation records must not load");
+        let msg = format!("{err}");
+        assert!(msg.contains("duplicate observation record"), "unhelpful error: {msg}");
+        assert!(msg.contains("R2@0"), "error must name the cell: {msg}");
+
+        // records whose batch sizes canonicalize to the same class
+        // collide too (b=3 and b=4 are both class 2)
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x","cells":[
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":3,"isa":"scalar","prior_ns":5.0,"obs_ns":6.0,"count":3},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":4,"isa":"scalar","prior_ns":5.0,"obs_ns":7.0,"count":2}]}"#,
+        )
+        .is_err());
+
+        // duplicate pure-prior records collide as well
+        assert!(WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x","cells":[
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":16,"isa":"scalar","prior_ns":5.0},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":16,"isa":"scalar","prior_ns":7.0}]}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn prior_plus_observation_pair_for_one_cell_still_loads() {
+        // The legitimate pair `from_model` emits — a pure class prior
+        // (count 0) next to an observation at the same class — must not
+        // trip the duplicate check; neither must records differing only
+        // in kind, isa, or batch class.
+        let w2 = WisdomV2::from_json(
+            r#"{"format":"spfft-wisdom-v2","n":8,"source":"x","cells":[
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":16,"isa":"scalar","prior_ns":5.0},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":16,"isa":"scalar","prior_ns":5.0,"obs_ns":6.0,"count":3},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"inverse","batch":16,"isa":"scalar","prior_ns":5.0,"obs_ns":6.5,"count":2},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":16,"isa":"neon","prior_ns":5.0,"obs_ns":4.0,"count":1},
+                {"edge":"R2","stage":0,"ctx":0,"kind":"forward","batch":1,"isa":"scalar","prior_ns":5.0,"obs_ns":5.5,"count":9}]}"#,
+        )
+        .expect("distinct roles and axes must coexist");
+        assert_eq!(w2.cells.len(), 5);
+        // ... and every database `from_model` writes stays loadable
+        let (model, _) = model_with_samples(256);
+        let saved = WisdomV2::from_model(&model, "m1");
+        assert_eq!(WisdomV2::from_json(&saved.to_json()).unwrap(), saved);
     }
 
     #[test]

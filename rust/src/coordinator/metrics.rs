@@ -32,6 +32,18 @@ pub struct Metrics {
     /// sums to `completed`.
     completed_by_kind: [AtomicU64; KINDS],
     failed: AtomicU64,
+    /// Typed rejection splits. Every rejection also counts into `failed`
+    /// (the aggregate operators alarm on); these counters say *why* —
+    /// bounded queue at capacity, service stopped/stopping, size/kind
+    /// validation, or load shedding (admitted too late to meet its
+    /// deadline budget). Before the split, only queue-full rejections
+    /// reached `failed` at all: disconnected-channel and validation
+    /// bails returned errors without counting, undercounting exactly
+    /// the rejections operators care about under overload.
+    rejected_full: AtomicU64,
+    rejected_stopped: AtomicU64,
+    rejected_invalid: AtomicU64,
+    rejected_shed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     /// Jointly-executed groups (same-n runs through one batched kernel
@@ -68,6 +80,17 @@ pub struct MetricsSnapshot {
     /// forward, inverse, real, real-inverse); sums to `completed`.
     pub completed_by_kind: [u64; KINDS],
     pub failed: u64,
+    /// Submissions rejected because the bounded queue was at capacity.
+    pub rejected_full: u64,
+    /// Submissions rejected because the service stopped (or was
+    /// stopping) — the path that used to error without counting.
+    pub rejected_stopped: u64,
+    /// Submissions rejected by size/kind validation.
+    pub rejected_invalid: u64,
+    /// Requests shed by admission control: pulled with less remaining
+    /// deadline budget than one flush window of slack, so holding them
+    /// could only produce a deadline violation.
+    pub rejected_shed: u64,
     pub batches: u64,
     /// Mean requests per executed batch.
     pub mean_batch_size: f64,
@@ -132,6 +155,33 @@ impl Metrics {
 
     pub fn on_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission bounced off the full bounded queue (backpressure).
+    /// Counts into `failed` too: the typed counters decompose the
+    /// aggregate, they do not replace it.
+    pub fn on_rejected_full(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission raced (or followed) shutdown.
+    pub fn on_rejected_stopped(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_stopped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission failed size/kind validation.
+    pub fn on_rejected_invalid(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed by admission control instead of held past its
+    /// deadline budget.
+    pub fn on_rejected_shed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.rejected_shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn on_batch(&self, size: usize, busy: Duration) {
@@ -229,6 +279,10 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             completed_by_kind,
             failed: self.failed.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_stopped: self.rejected_stopped.load(Ordering::Relaxed),
+            rejected_invalid: self.rejected_invalid.load(Ordering::Relaxed),
+            rejected_shed: self.rejected_shed.load(Ordering::Relaxed),
             batches,
             mean_batch_size: if batches == 0 { 0.0 } else { breq as f64 / batches as f64 },
             groups,
@@ -264,6 +318,89 @@ impl MetricsSnapshot {
             return 0.0;
         }
         self.completed as f64 / wall.as_secs_f64()
+    }
+
+    /// All typed rejections (the decomposed slice of `failed`).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_full + self.rejected_stopped + self.rejected_invalid + self.rejected_shed
+    }
+
+    /// Fleet view across shards: counters and histograms sum, rates and
+    /// means recompute from the summed numerators/denominators, and
+    /// order statistics (latency percentiles, maxima) take the
+    /// elementwise maximum — a conservative upper bound, since the true
+    /// fleet percentile cannot exceed the worst shard's (the exact
+    /// per-shard values are exported alongside the aggregate).
+    pub fn aggregate(shards: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot {
+            submitted: 0,
+            completed: 0,
+            completed_by_kind: [0; KINDS],
+            failed: 0,
+            rejected_full: 0,
+            rejected_stopped: 0,
+            rejected_invalid: 0,
+            rejected_shed: 0,
+            batches: 0,
+            mean_batch_size: 0.0,
+            groups: 0,
+            mean_group_size: 0.0,
+            group_size_hist: [0; GROUP_BUCKETS],
+            coalesced_flushes: 0,
+            coalesce_hits: 0,
+            coalesce_hit_rate: 0.0,
+            singleton_pairings: 0,
+            mean_held_age: Duration::ZERO,
+            max_held_age: Duration::ZERO,
+            busy: Duration::ZERO,
+            latency_p50: Duration::ZERO,
+            latency_p95: Duration::ZERO,
+            latency_p99: Duration::ZERO,
+            latency_max: Duration::ZERO,
+        };
+        let mut batched_requests = 0f64;
+        let mut grouped_requests = 0f64;
+        let mut held_age_total = Duration::ZERO;
+        for s in shards {
+            out.submitted += s.submitted;
+            out.completed += s.completed;
+            for (slot, v) in out.completed_by_kind.iter_mut().zip(&s.completed_by_kind) {
+                *slot += v;
+            }
+            out.failed += s.failed;
+            out.rejected_full += s.rejected_full;
+            out.rejected_stopped += s.rejected_stopped;
+            out.rejected_invalid += s.rejected_invalid;
+            out.rejected_shed += s.rejected_shed;
+            out.batches += s.batches;
+            batched_requests += s.mean_batch_size * s.batches as f64;
+            out.groups += s.groups;
+            grouped_requests += s.mean_group_size * s.groups as f64;
+            for (slot, v) in out.group_size_hist.iter_mut().zip(&s.group_size_hist) {
+                *slot += v;
+            }
+            out.coalesced_flushes += s.coalesced_flushes;
+            out.coalesce_hits += s.coalesce_hits;
+            out.singleton_pairings += s.singleton_pairings;
+            held_age_total += s.mean_held_age * s.coalesced_flushes as u32;
+            out.max_held_age = out.max_held_age.max(s.max_held_age);
+            out.busy += s.busy;
+            out.latency_p50 = out.latency_p50.max(s.latency_p50);
+            out.latency_p95 = out.latency_p95.max(s.latency_p95);
+            out.latency_p99 = out.latency_p99.max(s.latency_p99);
+            out.latency_max = out.latency_max.max(s.latency_max);
+        }
+        if out.batches > 0 {
+            out.mean_batch_size = batched_requests / out.batches as f64;
+        }
+        if out.groups > 0 {
+            out.mean_group_size = grouped_requests / out.groups as f64;
+        }
+        if out.coalesced_flushes > 0 {
+            out.coalesce_hit_rate = out.coalesce_hits as f64 / out.coalesced_flushes as f64;
+            out.mean_held_age = held_age_total / out.coalesced_flushes as u32;
+        }
+        out
     }
 }
 
@@ -332,6 +469,74 @@ mod tests {
         assert_eq!(s.singleton_pairings, 1);
         assert_eq!(s.mean_held_age, Duration::from_micros(400));
         assert_eq!(s.max_held_age, Duration::from_micros(600));
+    }
+
+    #[test]
+    fn typed_rejections_decompose_failed() {
+        // Every typed rejection counts into `failed` too (the aggregate
+        // dashboards alarm on), and the split accounts for each reason
+        // exactly — including the stopped/invalid paths that once
+        // errored without counting.
+        let m = Metrics::new();
+        m.on_rejected_full();
+        m.on_rejected_full();
+        m.on_rejected_stopped();
+        m.on_rejected_invalid();
+        m.on_rejected_shed();
+        m.on_rejected_shed();
+        m.on_rejected_shed();
+        m.on_failure(); // an execution failure, not a rejection
+        let s = m.snapshot();
+        assert_eq!(s.rejected_full, 2);
+        assert_eq!(s.rejected_stopped, 1);
+        assert_eq!(s.rejected_invalid, 1);
+        assert_eq!(s.rejected_shed, 3);
+        assert_eq!(s.rejected_total(), 7);
+        assert_eq!(s.failed, 8);
+        assert!(s.rejected_total() <= s.failed);
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_bounds_order_statistics() {
+        let m1 = Metrics::new();
+        m1.on_submit();
+        m1.on_complete_kind(TransformKind::Forward, Duration::from_nanos(200));
+        m1.on_batch(4, Duration::from_micros(2));
+        m1.on_group(4);
+        m1.on_coalesce_flush(Duration::from_micros(100), true, false);
+        m1.on_rejected_full();
+        let m2 = Metrics::new();
+        m2.on_submit();
+        m2.on_submit();
+        m2.on_complete_kind(TransformKind::Inverse, Duration::from_nanos(800));
+        m2.on_batch(2, Duration::from_micros(1));
+        m2.on_group(2);
+        m2.on_coalesce_flush(Duration::from_micros(300), false, false);
+        m2.on_rejected_shed();
+        let (s1, s2) = (m1.snapshot(), m2.snapshot());
+        let agg = MetricsSnapshot::aggregate(&[s1.clone(), s2.clone()]);
+        assert_eq!(agg.submitted, 3);
+        assert_eq!(agg.completed, 2);
+        assert_eq!(agg.completed_by_kind, [1, 1, 0, 0]);
+        assert_eq!(agg.failed, 2);
+        assert_eq!(agg.rejected_full, 1);
+        assert_eq!(agg.rejected_shed, 1);
+        assert_eq!(agg.batches, 2);
+        assert!((agg.mean_batch_size - 3.0).abs() < 1e-9);
+        assert_eq!(agg.groups, 2);
+        assert!((agg.mean_group_size - 3.0).abs() < 1e-9);
+        assert_eq!(agg.group_size_hist.iter().sum::<u64>(), 2);
+        assert_eq!(agg.coalesced_flushes, 2);
+        assert_eq!(agg.coalesce_hits, 1);
+        assert!((agg.coalesce_hit_rate - 0.5).abs() < 1e-9);
+        assert_eq!(agg.mean_held_age, Duration::from_micros(200));
+        assert_eq!(agg.max_held_age, Duration::from_micros(300));
+        assert_eq!(agg.busy, Duration::from_micros(3));
+        // order statistics: elementwise max over shards
+        assert_eq!(agg.latency_max, s1.latency_max.max(s2.latency_max));
+        assert!(agg.latency_p50 >= s1.latency_p50.max(s2.latency_p50));
+        // empty fleet aggregates to the zero snapshot
+        assert_eq!(MetricsSnapshot::aggregate(&[]).completed, 0);
     }
 
     #[test]

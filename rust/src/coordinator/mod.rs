@@ -23,12 +23,17 @@
 //!   *across* pulls and pair leftover singletons (deadline-bounded
 //!   cross-batch coalescing, DESIGN.md §coalesce);
 //! * [`service`] — the request loop, worker pool, and typed handles;
-//!   wires in [`crate::autotune`] when `ServiceConfig::autotune` is set.
+//!   wires in [`crate::autotune`] when `ServiceConfig::autotune` is set;
+//! * [`shard`] — the scale-out tier: a key-affine [`ShardRouter`] over
+//!   per-shard worker pools sharing one [`PlanCache`]/autotuner, with
+//!   typed admission control ([`Rejected`]) and load shedding
+//!   (DESIGN.md §shard).
 
 pub mod batcher;
 pub mod metrics;
 pub mod plancache;
 pub mod service;
+pub mod shard;
 
 pub use batcher::{
     collect_batch, collect_batch_until, group_by_key, BatchPolicy, Batcher, CoalescePolicy,
@@ -36,4 +41,5 @@ pub use batcher::{
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plancache::PlanCache;
-pub use service::{Backend, FftService, ServiceConfig};
+pub use service::{Backend, FftService, Rejected, ServiceConfig};
+pub use shard::{ShardRouter, ShardedService};

@@ -82,6 +82,15 @@ pub struct ServiceConfig {
     /// Online autotuning for the size matching `autotune.prior.n`
     /// (native backend only); `None` serves the startup plans forever.
     pub autotune: Option<AutotuneConfig>,
+    /// Backpressure-aware deadline budget for load shedding. When set,
+    /// a request a worker pulls with less remaining budget than one
+    /// flush window of slack (`shed_deadline - batch.max_wait`) is shed
+    /// with [`Rejected::Overloaded`] instead of held: under overload it
+    /// could only have completed past its deadline, and shedding it
+    /// early both tells the client the truth and stops the queue from
+    /// serving work nobody is still waiting for. `None` (the default)
+    /// never sheds — identical behavior to the pre-shedding service.
+    pub shed_deadline: Option<Duration>,
     /// Structured observability: when set, every layer records typed
     /// events into this observer's flight recorder (submit, coalesce
     /// hold/flush, group formation, per-request latency spans) and
@@ -92,6 +101,56 @@ pub struct ServiceConfig {
     /// costs nothing on the request path.
     pub observer: Option<Arc<Observer>>,
 }
+
+/// Typed submission rejection. These replace the old string bails so
+/// callers — and the shard router's admission control — can branch on
+/// the reason, and so every rejection path counts into exactly one of
+/// the typed `rejected_*` metrics (the disconnected-channel and
+/// validation paths used to error without counting at all).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded queue is at capacity (backpressure) — retry later.
+    QueueFull,
+    /// Admission control shed the request: its remaining deadline
+    /// budget was below one flush window of slack, so it could not
+    /// have been served in time.
+    Overloaded,
+    /// The service is shutting down (or its workers already exited).
+    ShuttingDown,
+    /// The request failed size/kind validation.
+    Invalid(String),
+}
+
+impl Rejected {
+    /// Stable reason tag used by the flight recorder and the metrics
+    /// split (`queue_full`, `shed`, `shutting_down`, `invalid`).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Rejected::QueueFull => "queue_full",
+            Rejected::Overloaded => "shed",
+            Rejected::ShuttingDown => "shutting_down",
+            Rejected::Invalid(_) => "invalid",
+        }
+    }
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull => write!(f, "queue full (backpressure)"),
+            Rejected::Overloaded => {
+                write!(f, "overloaded: shed (deadline budget below one flush window)")
+            }
+            Rejected::ShuttingDown => write!(f, "service is shutting down"),
+            Rejected::Invalid(why) => f.write_str(why),
+        }
+    }
+}
+
+// With this impl the vendored anyhow stub's blanket
+// `From<E: std::error::Error>` converts `Rejected` for the stringly
+// `submit_kind` API, while `try_submit_kind` keeps the typed value.
+impl std::error::Error for Rejected {}
 
 struct Request {
     /// Submit-order id correlating `Submit` and `RequestDone` events
@@ -112,6 +171,10 @@ pub struct FftService {
     accepting: Arc<AtomicBool>,
     sizes: Vec<usize>,
     autotuner: Option<Arc<Autotuner>>,
+    /// Whether shutdown stops the autotuner. False when the tuner is
+    /// shared across shards ([`FftService::start_with`]): the sharing
+    /// owner stops it once, after every sharer has drained.
+    owns_tuner: bool,
     observer: Option<Arc<Observer>>,
     next_request: AtomicU64,
 }
@@ -120,6 +183,20 @@ impl FftService {
     /// Start workers (and the autotuner, when configured) and return the
     /// handle.
     pub fn start(config: ServiceConfig) -> Result<FftService> {
+        Self::start_with(config, None)
+    }
+
+    /// Like [`FftService::start`], but with an optional pre-built shared
+    /// autotuner: the sharded service passes one `Arc<Autotuner>` to
+    /// every shard so all shards sample into — and hot-swap from — the
+    /// same online model, the serving analogue of FFTW's shared wisdom.
+    /// A shared tuner is *not* stopped by this service's shutdown; its
+    /// owner stops it after every sharer has drained. `config.autotune`
+    /// must be `None` when a shared tuner is given.
+    pub fn start_with(
+        config: ServiceConfig,
+        shared_tuner: Option<Arc<Autotuner>>,
+    ) -> Result<FftService> {
         if config.plans.is_empty() {
             bail!("service needs at least one (n, plan)");
         }
@@ -129,9 +206,18 @@ impl FftService {
                 bail!("plan {plan} invalid for n={n}");
             }
         }
-        let autotuner = match &config.autotune {
-            None => None,
-            Some(at) => {
+        let (autotuner, owns_tuner) = match (&shared_tuner, &config.autotune) {
+            (Some(_), Some(_)) => {
+                bail!("pass the tuner either shared or via config.autotune, not both")
+            }
+            (Some(t), None) => {
+                if !matches!(config.backend, Backend::Native) {
+                    bail!("autotune requires the native backend");
+                }
+                (Some(t.clone()), false)
+            }
+            (None, None) => (None, true),
+            (None, Some(at)) => {
                 if !matches!(config.backend, Backend::Native) {
                     bail!("autotune requires the native backend");
                 }
@@ -154,7 +240,7 @@ impl FftService {
                 // detect; point the online model's ISA slot at the same
                 // backend so the traced samples land where planning reads.
                 at.exec_isa = Executor::new().isa();
-                Some(Arc::new(Autotuner::start(at, initial)))
+                (Some(Arc::new(Autotuner::start(at, initial))), true)
             }
         };
         let metrics = Arc::new(Metrics::new());
@@ -201,27 +287,52 @@ impl FftService {
         input: SplitComplex,
         kind: TransformKind,
     ) -> Result<Receiver<Result<SplitComplex>>> {
-        if !self.accepting.load(Ordering::Relaxed) {
-            bail!("service is shutting down");
-        }
+        self.try_submit_kind(input, kind).map_err(anyhow::Error::from)
+    }
+
+    /// Typed-rejection submit: like [`FftService::submit_kind`] but the
+    /// error tells the caller *why* admission failed, so the shard
+    /// router (and load-aware clients) can branch on it. Every rejection
+    /// path counts into exactly one `rejected_*` metric and records a
+    /// `Rejected` flight-recorder event.
+    ///
+    /// This is also where the shutdown race is fixed: the old path
+    /// checked `accepting` and then `unwrap()`ed `tx`, so a submit
+    /// concurrent with shutdown taking `tx` panicked. Both the missing
+    /// sender and a disconnected channel now return
+    /// [`Rejected::ShuttingDown`].
+    pub fn try_submit_kind(
+        &self,
+        input: SplitComplex,
+        kind: TransformKind,
+    ) -> std::result::Result<Receiver<Result<SplitComplex>>, Rejected> {
         let n = input.len();
+        if !self.accepting.load(Ordering::Relaxed) {
+            return Err(self.reject(kind, n, Rejected::ShuttingDown));
+        }
         let accepted = if kind.is_real() {
             n >= 4 && n % 2 == 0 && self.sizes.contains(&(n / 2))
         } else {
             self.sizes.contains(&n)
         };
         if !accepted {
-            bail!(
+            let why = format!(
                 "unsupported {kind} FFT size {n} (configured c2c sizes: {:?}; \
                  real kinds serve 2x a configured size)",
                 self.sizes
             );
+            return Err(self.reject(kind, n, Rejected::Invalid(why)));
         }
         let (reply_tx, reply_rx) = sync_channel(1);
         let id = self.next_request.fetch_add(1, Ordering::Relaxed);
         let enqueued = Instant::now();
         let req = Request { id, n, kind, input, enqueued, reply: reply_tx };
-        match self.tx.as_ref().unwrap().try_send(req) {
+        // Total match on the sender — no `unwrap()` left to race a
+        // concurrent shutdown's `tx.take()`.
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(self.reject(kind, n, Rejected::ShuttingDown));
+        };
+        match tx.try_send(req) {
             Ok(()) => {
                 self.metrics.on_submit();
                 if let Some(obs) = &self.observer {
@@ -229,12 +340,25 @@ impl FftService {
                 }
                 Ok(reply_rx)
             }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.on_failure();
-                bail!("queue full (backpressure)")
+            Err(TrySendError::Full(_)) => Err(self.reject(kind, n, Rejected::QueueFull)),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(self.reject(kind, n, Rejected::ShuttingDown))
             }
-            Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
         }
+    }
+
+    /// Count + record one rejection, then hand the typed error back.
+    fn reject(&self, kind: TransformKind, n: usize, why: Rejected) -> Rejected {
+        match &why {
+            Rejected::QueueFull => self.metrics.on_rejected_full(),
+            Rejected::Overloaded => self.metrics.on_rejected_shed(),
+            Rejected::ShuttingDown => self.metrics.on_rejected_stopped(),
+            Rejected::Invalid(_) => self.metrics.on_rejected_invalid(),
+        }
+        if let Some(obs) = &self.observer {
+            obs.record(EventKind::Rejected { kind, n, reason: why.reason().to_string() });
+        }
+        why
     }
 
     /// Convenience: submit a forward transform and wait.
@@ -263,16 +387,30 @@ impl FftService {
         self.autotuner.as_ref().map(|t| t.status())
     }
 
-    /// Stop accepting, drain, and join workers (then the autotuner, so
-    /// its learned wisdom persists after the last sample).
+    /// Stop accepting new submissions without draining. Subsequent
+    /// submits get [`Rejected::ShuttingDown`]; already-queued work still
+    /// completes when [`FftService::shutdown`] runs. The sharded service
+    /// fences every shard with this before draining any of them, so a
+    /// client can never land work on shard B after shard A reported
+    /// drained; it also lets tests pin the submit/shutdown interleave
+    /// deterministically.
+    pub fn begin_shutdown(&self) {
+        self.accepting.store(false, Ordering::Relaxed);
+    }
+
+    /// Stop accepting, drain, and join workers (then the autotuner —
+    /// unless it is shared, see [`FftService::start_with`] — so its
+    /// learned wisdom persists after the last sample).
     pub fn shutdown(mut self) -> super::metrics::MetricsSnapshot {
         self.accepting.store(false, Ordering::Relaxed);
         drop(self.tx.take()); // close the queue; workers drain and exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        if let Some(t) = &self.autotuner {
-            t.stop();
+        if self.owns_tuner {
+            if let Some(t) = &self.autotuner {
+                t.stop();
+            }
         }
         self.metrics.snapshot()
     }
@@ -285,8 +423,10 @@ impl Drop for FftService {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        if let Some(t) = &self.autotuner {
-            t.stop();
+        if self.owns_tuner {
+            if let Some(t) = &self.autotuner {
+                t.stop();
+            }
         }
     }
 }
@@ -653,6 +793,40 @@ fn worker_loop(
             backend.refresh(t);
         }
         let t0 = Instant::now();
+        // Load shedding at pull time: a request whose remaining deadline
+        // budget is below one flush window of slack could only complete
+        // late — the coalescer may legitimately hold it for up to
+        // `max_wait` more, so admitting it would manufacture a deadline
+        // violation. Shed it with the typed rejection instead of holding.
+        // (`shed_deadline: None` skips the partition entirely — identical
+        // behavior to the pre-shedding service.)
+        let batch = match config.shed_deadline {
+            None => batch,
+            Some(budget) => {
+                let slack = budget.saturating_sub(config.batch.max_wait);
+                let now = Instant::now();
+                let (keep, shed): (Vec<Request>, Vec<Request>) = batch
+                    .into_iter()
+                    .partition(|r| now.saturating_duration_since(r.enqueued) <= slack);
+                for req in shed {
+                    metrics.on_rejected_shed();
+                    if let Some(o) = &obs {
+                        o.record_at(
+                            now,
+                            EventKind::Rejected {
+                                kind: req.kind,
+                                n: req.n,
+                                reason: Rejected::Overloaded.reason().to_string(),
+                            },
+                        );
+                    }
+                    let _ = req.reply.send(Err(anyhow::Error::from(Rejected::Overloaded)));
+                }
+                keep
+            }
+        };
+        // Admitted size only: shed requests never reach a group, so they
+        // must not inflate the mean batch size.
         let size = batch.len();
         // Same-n requests execute jointly; group order preserves arrival,
         // and under-filled groups may coalesce across pulls (an empty
@@ -701,6 +875,7 @@ mod tests {
             workers,
             queue_depth: 64,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         })
         .unwrap()
@@ -734,6 +909,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         });
         assert!(bad.is_err());
@@ -750,6 +926,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
+            shed_deadline: None,
             observer: None,
         });
         assert!(bad.is_err());
@@ -766,6 +943,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 4,
             autotune: Some(AutotuneConfig::new(prior)),
+            shed_deadline: None,
             observer: None,
         });
         assert!(bad.is_err());
@@ -785,6 +963,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 64,
             autotune: Some(at),
+            shed_deadline: None,
             observer: None,
         })
         .unwrap();
@@ -844,6 +1023,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 128,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         })
         .unwrap();
@@ -922,6 +1102,7 @@ mod tests {
             workers: 1,
             queue_depth: 64,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         })
         .unwrap();
@@ -951,6 +1132,7 @@ mod tests {
             coalesce: Default::default(),
             queue_depth: 1,
             autotune: None,
+            shed_deadline: None,
             observer: None,
         })
         .unwrap();
@@ -981,5 +1163,143 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn submit_after_begin_shutdown_is_typed_not_panic() {
+        // Deterministic submit/stop interleave: accept one request, fence
+        // with begin_shutdown, then submit again — the second submit must
+        // return the typed shutdown rejection (the old path panicked on
+        // `tx.as_ref().unwrap()` when it lost the race to `tx.take()`).
+        let svc = native_service(256, "R4,R4,R2,F8", 1);
+        let rx = svc.try_submit_kind(SplitComplex::random(256, 1), TransformKind::Forward);
+        assert!(rx.is_ok());
+        svc.begin_shutdown();
+        let err = svc
+            .try_submit_kind(SplitComplex::random(256, 2), TransformKind::Forward)
+            .unwrap_err();
+        assert_eq!(err, Rejected::ShuttingDown);
+        // stringly API keeps the same message for existing callers
+        let err2 = svc.submit(SplitComplex::random(256, 3)).unwrap_err();
+        assert_eq!(err2.to_string(), "service is shutting down");
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.rejected_stopped, 2);
+        assert_eq!(snap.failed, 2);
+        assert!(rx.unwrap().recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn concurrent_submits_race_shutdown_without_panicking() {
+        // Hammer submits from two threads while the main thread shuts the
+        // service down mid-stream: every submit must resolve to Ok or a
+        // typed rejection — never a panic — and the counters must account
+        // for every attempt exactly.
+        let svc = Arc::new(native_service(256, "R4,R4,R2,F8", 2));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0u64;
+                let mut rejected = 0u64;
+                let mut replies = Vec::new();
+                for i in 0..300u64 {
+                    if stop.load(Ordering::Relaxed) && i > 50 {
+                        break;
+                    }
+                    match svc
+                        .try_submit_kind(SplitComplex::random(256, t * 1000 + i), TransformKind::Forward)
+                    {
+                        Ok(rx) => {
+                            ok += 1;
+                            replies.push(rx);
+                        }
+                        Err(Rejected::ShuttingDown) | Err(Rejected::QueueFull) => rejected += 1,
+                        Err(other) => panic!("unexpected rejection: {other:?}"),
+                    }
+                }
+                for rx in replies {
+                    let _ = rx.recv();
+                }
+                (ok, rejected)
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        svc.begin_shutdown();
+        stop.store(true, Ordering::Relaxed);
+        let mut ok = 0u64;
+        let mut rejected = 0u64;
+        for h in handles {
+            let (o, r) = h.join().expect("submitter thread panicked");
+            ok += o;
+            rejected += r;
+        }
+        let svc = Arc::try_unwrap(svc).ok().expect("submitters still hold the service");
+        let snap = svc.shutdown();
+        assert_eq!(snap.submitted, ok);
+        assert_eq!(snap.completed, ok);
+        assert_eq!(snap.rejected_full + snap.rejected_stopped, rejected);
+        assert_eq!(snap.failed, rejected);
+    }
+
+    #[test]
+    fn typed_rejections_count_into_split_metrics() {
+        // Validation and backpressure rejections each land in their own
+        // counter — and in `failed` — so operators can tell overload from
+        // client error (the old path only counted queue-full).
+        let svc = native_service(256, "R4,R4,R2,F8", 1);
+        let err = svc
+            .try_submit_kind(SplitComplex::random(128, 1), TransformKind::Forward)
+            .unwrap_err();
+        assert!(matches!(err, Rejected::Invalid(_)));
+        assert!(err.to_string().contains("unsupported"));
+        let snap = svc.shutdown();
+        assert_eq!(snap.rejected_invalid, 1);
+        assert_eq!(snap.rejected_full, 0);
+        assert_eq!(snap.failed, 1);
+    }
+
+    #[test]
+    fn shed_deadline_sheds_stale_requests_with_typed_error() {
+        // One worker pinned behind a long first batch window; the shed
+        // budget is tiny, so requests that sat in the queue past it must
+        // come back Overloaded while fresh ones still complete. Exact
+        // shed timing is pinned on the virtual-clock harness; this
+        // exercises the live partition path end to end.
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(256, Plan::parse("R4,R4,R2,F8").unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_micros(100) },
+            coalesce: Default::default(),
+            workers: 1,
+            queue_depth: 64,
+            autotune: None,
+            shed_deadline: Some(std::time::Duration::from_micros(100)),
+            observer: None,
+        })
+        .unwrap();
+        // slack = shed_deadline - max_wait = 0: anything that waits at
+        // all is shed, so burst enough to leave stragglers in the queue.
+        let rxs: Vec<_> = (0..32)
+            .map(|i| svc.submit(SplitComplex::random(256, i)).unwrap())
+            .collect();
+        let mut completed = 0u64;
+        let mut shed = 0u64;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(_) => completed += 1,
+                Err(e) => {
+                    assert!(e.to_string().contains("overloaded"), "unexpected error: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        let snap = svc.shutdown();
+        assert_eq!(completed + shed, 32);
+        assert_eq!(snap.completed, completed);
+        assert_eq!(snap.rejected_shed, shed);
+        assert_eq!(snap.failed, shed);
     }
 }

@@ -1,0 +1,347 @@
+//! Sharded serving: a key-affine router over per-shard worker pools.
+//!
+//! The single-process [`FftService`] coalesces per worker, so a held
+//! singleton can never pair with same-`(kind, n)` traffic another
+//! worker pulls. Sharding fixes that *by construction* instead of by
+//! work stealing: the [`ShardRouter`] hashes the `(kind, n)` grouping
+//! key — the exact key the coalescer groups on — so every request for
+//! one key lands on one shard, where one coalesce tier sees all of that
+//! key's traffic. Held singletons and under-filled groups meet their
+//! partners regardless of which client or thread submitted them,
+//! because "which shard accepted them" is a pure function of the key
+//! (DESIGN.md §shard explains why affinity is keyed rather than
+//! stolen).
+//!
+//! All shards share one [`Autotuner`] and one [`PlanCache`]: planning
+//! knowledge is global even though execution is sharded — FFTW's wisdom
+//! lesson applied to a serving topology. Admission control stays
+//! per-shard (each shard has its own bounded queue), and every
+//! rejection is typed ([`Rejected`]) and counted, so the per-shard
+//! metrics decompose overload cleanly.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::autotune::Autotuner;
+use crate::fft::{Executor, SplitComplex};
+use crate::kind::TransformKind;
+use crate::obs::Observer;
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::plancache::PlanCache;
+use super::service::{FftService, Rejected, ServiceConfig};
+
+/// Routes submissions to shards by `(kind, n)` affinity.
+///
+/// The hash is FNV-1a over the kind index and size — stable across
+/// processes and runs, so a deployment's key→shard map is reproducible
+/// (the deterministic harness and the ops runbook both rely on that).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRouter {
+    shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize) -> ShardRouter {
+        ShardRouter { shards: shards.max(1) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard serving `(kind, n)`. Pure and total: the same key
+    /// always routes to the same shard, and every key routes somewhere.
+    pub fn route(&self, kind: TransformKind, n: usize) -> usize {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for word in [kind.index() as u64, n as u64] {
+            for byte in word.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        (h % self.shards as u64) as usize
+    }
+}
+
+/// A fleet of [`FftService`] shards behind one key-affine router,
+/// sharing one [`PlanCache`] and (when autotuning) one [`Autotuner`].
+///
+/// `shards == 1` is exactly one [`FftService`] behind a router that
+/// always answers 0 — behaviorally identical to the single-process
+/// service.
+pub struct ShardedService {
+    shards: Vec<FftService>,
+    router: ShardRouter,
+    /// The shared tuner, stopped here — once — after every shard drains.
+    tuner: Option<Arc<Autotuner>>,
+    cache: Arc<PlanCache>,
+}
+
+impl ShardedService {
+    /// Start `shards` identical shards from one config. Each shard gets
+    /// its own worker pool and bounded queue (`config.workers` /
+    /// `config.queue_depth` apply *per shard*); `config.autotune` (when
+    /// set) is hoisted into a single shared tuner publishing into the
+    /// shared plan cache.
+    pub fn start(config: ServiceConfig, shards: usize) -> Result<ShardedService> {
+        let shards = shards.max(1);
+        let cache = Arc::new(PlanCache::new());
+        let tuner = match &config.autotune {
+            None => None,
+            Some(at) => {
+                if !matches!(config.backend, super::service::Backend::Native) {
+                    bail!("autotune requires the native backend");
+                }
+                let initial = config
+                    .plans
+                    .iter()
+                    .find(|(n, _)| *n == at.prior.n)
+                    .map(|(_, p)| p.clone())
+                    .ok_or_else(|| {
+                        anyhow!("autotune prior is for n={}, which has no configured plan", at.prior.n)
+                    })?;
+                let mut at = at.clone();
+                if at.observer.is_none() {
+                    at.observer = config.observer.clone();
+                }
+                if at.cache.is_none() {
+                    at.cache = Some(cache.clone());
+                }
+                at.exec_isa = Executor::new().isa();
+                Some(Arc::new(Autotuner::start(at, initial)))
+            }
+        };
+        let mut shard_config = config;
+        // The tuner is shared; shards must not each try to own one.
+        shard_config.autotune = None;
+        let mut fleet = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            fleet.push(FftService::start_with(shard_config.clone(), tuner.clone())?);
+        }
+        Ok(ShardedService { shards: fleet, router: ShardRouter::new(shards), tuner, cache })
+    }
+
+    pub fn router(&self) -> ShardRouter {
+        self.router
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shared plan cache the tuner publishes hot swaps into.
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        self.cache.clone()
+    }
+
+    /// Per-shard live metrics handles (index = shard id).
+    pub fn shard_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.metrics()).collect()
+    }
+
+    /// Per-shard snapshots (index = shard id).
+    pub fn snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|s| s.metrics().snapshot()).collect()
+    }
+
+    /// Fleet-wide aggregate of the per-shard snapshots.
+    pub fn aggregate(&self) -> MetricsSnapshot {
+        MetricsSnapshot::aggregate(&self.snapshots())
+    }
+
+    /// The observer of shard 0 (all shards share the config's observer).
+    pub fn observer(&self) -> Option<&Arc<Observer>> {
+        self.shards.first().and_then(|s| s.observer())
+    }
+
+    /// Autotuning status of the shared tuner, when configured.
+    pub fn autotune_status(&self) -> Option<crate::autotune::AutotuneStatus> {
+        self.tuner.as_ref().map(|t| t.status())
+    }
+
+    /// Typed-rejection submit: route by the `(kind, n)` affinity key,
+    /// then admit on that shard's bounded queue.
+    pub fn try_submit_kind(
+        &self,
+        input: SplitComplex,
+        kind: TransformKind,
+    ) -> std::result::Result<std::sync::mpsc::Receiver<Result<SplitComplex>>, Rejected> {
+        let shard = self.router.route(kind, input.len());
+        self.shards[shard].try_submit_kind(input, kind)
+    }
+
+    /// Stringly submit for parity with [`FftService::submit_kind`].
+    pub fn submit_kind(
+        &self,
+        input: SplitComplex,
+        kind: TransformKind,
+    ) -> Result<std::sync::mpsc::Receiver<Result<SplitComplex>>> {
+        self.try_submit_kind(input, kind).map_err(anyhow::Error::from)
+    }
+
+    /// Convenience: submit a `kind` transform and wait.
+    pub fn transform_kind(&self, input: SplitComplex, kind: TransformKind) -> Result<SplitComplex> {
+        self.submit_kind(input, kind)?
+            .recv()
+            .map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    /// Fence every shard *before* draining any: after this returns, no
+    /// shard accepts new work, so a client can never land a request on
+    /// shard B while shard A is already reporting itself drained.
+    pub fn begin_shutdown(&self) {
+        for s in &self.shards {
+            s.begin_shutdown();
+        }
+    }
+
+    /// Fence all shards, drain and join each, then stop the shared
+    /// tuner (after the last sample can possibly arrive). Returns the
+    /// per-shard snapshots (index = shard id).
+    pub fn shutdown(mut self) -> Vec<MetricsSnapshot> {
+        self.begin_shutdown();
+        let snaps: Vec<MetricsSnapshot> = self.shards.drain(..).map(|s| s.shutdown()).collect();
+        if let Some(t) = &self.tuner {
+            t.stop();
+        }
+        snaps
+    }
+}
+
+impl Drop for ShardedService {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            s.begin_shutdown();
+        }
+        // Each FftService's Drop drains and joins; a shared tuner is
+        // not stopped by shard drops (owns_tuner = false), so stop it
+        // here after the fleet is gone.
+        self.shards.drain(..).for_each(drop);
+        if let Some(t) = &self.tuner {
+            t.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::service::Backend;
+    use crate::fft::reference::fft_ref;
+    use crate::plan::Plan;
+
+    fn config(n: usize, plan: &str) -> ServiceConfig {
+        ServiceConfig {
+            plans: vec![(n, Plan::parse(plan).unwrap())],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(100) },
+            coalesce: Default::default(),
+            workers: 1,
+            queue_depth: 64,
+            autotune: None,
+            shed_deadline: None,
+            observer: None,
+        }
+    }
+
+    #[test]
+    fn router_is_deterministic_total_and_key_affine() {
+        let r = ShardRouter::new(4);
+        for kind in crate::kind::ALL_KINDS {
+            for n in [64usize, 128, 256, 512, 1024, 2048] {
+                let shard = r.route(kind, n);
+                assert!(shard < 4);
+                // same key → same shard, always
+                assert_eq!(shard, r.route(kind, n));
+                assert_eq!(shard, ShardRouter::new(4).route(kind, n));
+            }
+        }
+        // one shard: everything routes to 0 (and 0 shards clamps to 1)
+        let one = ShardRouter::new(1);
+        assert_eq!(one.route(TransformKind::Forward, 256), 0);
+        assert_eq!(ShardRouter::new(0).shards(), 1);
+        // keys actually spread: not every key on one shard
+        let shards: std::collections::HashSet<usize> = crate::kind::ALL_KINDS
+            .into_iter()
+            .flat_map(|k| [64usize, 128, 256, 512, 1024].map(|n| r.route(k, n)))
+            .collect();
+        assert!(shards.len() > 1, "router collapsed every key onto one shard");
+    }
+
+    #[test]
+    fn sharded_service_serves_every_kind_correctly() {
+        let n = 128;
+        let svc = ShardedService::start(config(n, "R4,R2,F16"), 3).unwrap();
+        let input = SplitComplex::random(n, 5);
+        let fwd = svc.transform_kind(input.clone(), TransformKind::Forward).unwrap();
+        let want = fft_ref(&input);
+        assert!(fwd.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        let back = svc.transform_kind(fwd, TransformKind::Inverse).unwrap();
+        assert!(back.max_abs_diff(&input) / input.max_abs().max(1.0) < 1e-4);
+        let mut real = SplitComplex::random(2 * n, 6);
+        real.im.iter_mut().for_each(|v| *v = 0.0);
+        let spectrum = svc.transform_kind(real.clone(), TransformKind::RealForward).unwrap();
+        let want_r = fft_ref(&real);
+        assert!(spectrum.max_abs_diff(&want_r) / want_r.max_abs().max(1.0) < 1e-4);
+        // each key's completions landed on exactly the routed shard
+        let router = svc.router();
+        let snaps = svc.shutdown();
+        let total = MetricsSnapshot::aggregate(&snaps);
+        assert_eq!(total.completed, 3);
+        assert_eq!(total.failed, 0);
+        for (kind, n) in [
+            (TransformKind::Forward, n),
+            (TransformKind::Inverse, n),
+            (TransformKind::RealForward, 2 * n),
+        ] {
+            let shard = router.route(kind, n);
+            assert!(
+                snaps[shard].completed_by_kind[kind.index()] >= 1,
+                "{kind} n={n} did not complete on its routed shard {shard}"
+            );
+        }
+    }
+
+    #[test]
+    fn begin_shutdown_fences_every_shard() {
+        let svc = ShardedService::start(config(256, "R4,R4,R2,F8"), 2).unwrap();
+        let rx = svc.try_submit_kind(SplitComplex::random(256, 1), TransformKind::Forward);
+        assert!(rx.is_ok());
+        svc.begin_shutdown();
+        // both c2c kinds route (possibly) to different shards; all fenced
+        for kind in [TransformKind::Forward, TransformKind::Inverse] {
+            let err = svc.try_submit_kind(SplitComplex::random(256, 2), kind).unwrap_err();
+            assert_eq!(err, Rejected::ShuttingDown);
+        }
+        let snaps = svc.shutdown();
+        let total = MetricsSnapshot::aggregate(&snaps);
+        assert_eq!(total.completed, 1);
+        assert_eq!(total.rejected_stopped, 2);
+        assert!(rx.unwrap().recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn shared_tuner_serves_all_shards_and_stops_once() {
+        let n = 256;
+        let prior = crate::cost::Wisdom::harvest(&mut crate::cost::SimCost::m1(n), "m1");
+        let mut at = crate::autotune::AutotuneConfig::new(prior);
+        at.sample_period = 1;
+        let mut cfg = config(n, "R4,R4,R2,F8");
+        cfg.autotune = Some(at);
+        let svc = ShardedService::start(cfg, 2).unwrap();
+        assert!(svc.autotune_status().is_some());
+        for i in 0..8u64 {
+            let input = SplitComplex::random(n, i);
+            let got = svc.transform_kind(input.clone(), TransformKind::Forward).unwrap();
+            let want = fft_ref(&input);
+            assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 1e-4);
+        }
+        let snaps = svc.shutdown();
+        assert_eq!(MetricsSnapshot::aggregate(&snaps).completed, 8);
+    }
+}

@@ -455,6 +455,64 @@ fn synthetic_input(n: usize, kind: TransformKind, seed: u64) -> SplitComplex {
     v
 }
 
+/// The two serve topologies behind one loop: `--shards 1` is the plain
+/// single-process service (bit-identical to earlier releases), more
+/// shards run the key-affine [`spfft::coordinator::ShardedService`].
+enum Serving {
+    Single(spfft::coordinator::FftService),
+    Sharded(spfft::coordinator::ShardedService),
+}
+
+impl Serving {
+    fn submit_kind(
+        &self,
+        input: SplitComplex,
+        kind: TransformKind,
+    ) -> anyhow::Result<std::sync::mpsc::Receiver<anyhow::Result<SplitComplex>>> {
+        match self {
+            Serving::Single(s) => s.submit_kind(input, kind),
+            Serving::Sharded(s) => s.submit_kind(input, kind),
+        }
+    }
+
+    /// Fleet-level snapshot (the aggregate, for sharded serving).
+    fn snapshot(&self) -> spfft::coordinator::MetricsSnapshot {
+        match self {
+            Serving::Single(s) => s.metrics().snapshot(),
+            Serving::Sharded(s) => s.aggregate(),
+        }
+    }
+
+    /// Per-shard snapshots; `None` for the single-process topology (its
+    /// exports must stay byte-compatible with earlier releases).
+    fn shard_snapshots(&self) -> Option<Vec<spfft::coordinator::MetricsSnapshot>> {
+        match self {
+            Serving::Single(_) => None,
+            Serving::Sharded(s) => Some(s.snapshots()),
+        }
+    }
+
+    fn autotune_status(&self) -> Option<spfft::autotune::AutotuneStatus> {
+        match self {
+            Serving::Single(s) => s.autotune_status(),
+            Serving::Sharded(s) => s.autotune_status(),
+        }
+    }
+
+    fn shutdown(
+        self,
+    ) -> (spfft::coordinator::MetricsSnapshot, Option<Vec<spfft::coordinator::MetricsSnapshot>>)
+    {
+        match self {
+            Serving::Single(s) => (s.shutdown(), None),
+            Serving::Sharded(s) => {
+                let snaps = s.shutdown();
+                (spfft::coordinator::MetricsSnapshot::aggregate(&snaps), Some(snaps))
+            }
+        }
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     let cmd = isa_opt(common(Command::new(
         "serve",
@@ -465,7 +523,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("backend", "native", "execution backend (native|pjrt)")
         .opt("artifacts", "artifacts", "artifacts dir for --backend pjrt")
         .opt("batch", "16", "max batch size")
-        .opt("workers", "1", "worker threads")
+        .opt("workers", "1", "worker threads (per shard)")
+        .opt("shards", "1", "shard count: requests route by (kind, n) affinity; each shard has its own worker pool and queue")
+        .opt("max-queue", "1024", "bounded queue depth per shard; submits beyond it are rejected (backpressure)")
+        .opt("shed-deadline-us", "0", "deadline budget in microseconds: pulled requests with less remaining budget than one flush window are shed (0 = never shed)")
         .opt("kind", "forward", "transform kind of the workload (forward|inverse|real|real-inverse)")
         .opt("coalesce", "0", "hold under-filled same-(kind, n) groups across up to this many pull windows (0 = off)")
         .opt("coalesce-deadline-us", "5000", "per-request latency budget while coalescing, in microseconds")
@@ -564,7 +625,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     } else {
         Default::default()
     };
-    let svc = spfft::coordinator::FftService::start(spfft::coordinator::ServiceConfig {
+    let shards = args.get_usize("shards")?.max(1);
+    let shed_us = args.get_usize("shed-deadline-us")?;
+    let config = spfft::coordinator::ServiceConfig {
         plans: vec![(cn, ca.plan.clone())],
         backend,
         batch: spfft::coordinator::BatchPolicy {
@@ -573,12 +636,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         },
         workers: args.get_usize("workers")?,
         coalesce,
-        queue_depth: 1024,
+        queue_depth: args.get_usize("max-queue")?.max(1),
         autotune,
+        shed_deadline: (shed_us > 0)
+            .then(|| std::time::Duration::from_micros(shed_us as u64)),
         observer: observer.clone(),
-    })
-    .map_err(|e| CliError(format!("service: {e}")))?;
-    let live_metrics = svc.metrics();
+    };
+    // --shards 1 runs the plain single-process service (identical
+    // behavior and exports to every earlier release); more shards run
+    // the key-affine router over per-shard pools.
+    let svc = if shards == 1 {
+        Serving::Single(
+            spfft::coordinator::FftService::start(config)
+                .map_err(|e| CliError(format!("service: {e}")))?,
+        )
+    } else {
+        Serving::Sharded(
+            spfft::coordinator::ShardedService::start(config, shards)
+                .map_err(|e| CliError(format!("service: {e}")))?,
+        )
+    };
     let snap_every =
         std::time::Duration::from_millis(args.get_usize("metrics-every-ms")?.max(1) as u64);
     let mut last_snap = std::time::Instant::now();
@@ -600,7 +677,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
                 last_snap = std::time::Instant::now();
                 write_metrics_snapshot(
                     &metrics_out,
-                    &live_metrics.snapshot(),
+                    &svc.snapshot(),
+                    svc.shard_snapshots().as_deref(),
                     obs,
                     svc.autotune_status().as_ref(),
                     cost.as_dyn(),
@@ -624,19 +702,33 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
             status.swaps,
         );
     }
-    let snap = svc.shutdown();
+    let (snap, shard_snaps) = svc.shutdown();
     if let Some(obs) = &observer {
         if !metrics_out.is_empty() {
-            write_metrics_snapshot(&metrics_out, &snap, obs, status.as_ref(), cost.as_dyn())?;
+            write_metrics_snapshot(
+                &metrics_out,
+                &snap,
+                shard_snaps.as_deref(),
+                obs,
+                status.as_ref(),
+                cost.as_dyn(),
+            )?;
             println!("metrics snapshot: {metrics_out}");
         }
         if !prom_out.is_empty() {
             fill_believed_from(obs, cost.as_dyn());
-            let text = spfft::obs::prometheus_text(
-                &snap,
-                &obs.attribution().cells(),
-                &obs.recorder().stats(),
-            );
+            let text = match &shard_snaps {
+                Some(shards) => spfft::obs::prometheus_text_sharded(
+                    shards,
+                    &obs.attribution().cells(),
+                    &obs.recorder().stats(),
+                ),
+                None => spfft::obs::prometheus_text(
+                    &snap,
+                    &obs.attribution().cells(),
+                    &obs.recorder().stats(),
+                ),
+            };
             spfft::obs::schema_check_prometheus(&text).map_err(CliError)?;
             std::fs::write(&prom_out, text)
                 .map_err(|e| CliError(format!("writing {prom_out}: {e}")))?;
@@ -671,6 +763,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
             snap.max_held_age,
         );
     }
+    if snap.rejected_total() > 0 {
+        println!(
+            "rejected: {} (queue_full {}, shed {}, shutting_down {}, invalid {})",
+            snap.rejected_total(),
+            snap.rejected_full,
+            snap.rejected_shed,
+            snap.rejected_stopped,
+            snap.rejected_invalid,
+        );
+    }
+    if let Some(shards) = &shard_snaps {
+        for (i, s) in shards.iter().enumerate() {
+            println!(
+                "  shard {i}: {} completed, {} rejected, coalesce hit rate {:.0}%",
+                s.completed,
+                s.rejected_total(),
+                100.0 * s.coalesce_hit_rate,
+            );
+        }
+    }
     Ok(())
 }
 
@@ -694,13 +806,26 @@ fn fill_believed_from(obs: &spfft::obs::Observer, cost: &mut dyn CostModel) {
 fn write_metrics_snapshot(
     path: &str,
     snap: &spfft::coordinator::MetricsSnapshot,
+    shards: Option<&[spfft::coordinator::MetricsSnapshot]>,
     obs: &spfft::obs::Observer,
     status: Option<&spfft::autotune::AutotuneStatus>,
     cost: &mut dyn CostModel,
 ) -> Result<(), CliError> {
     fill_believed_from(obs, cost);
-    let doc =
-        spfft::obs::snapshot_json(snap, &obs.attribution().cells(), &obs.recorder().stats(), status);
+    let doc = match shards {
+        Some(shards) => spfft::obs::snapshot_json_sharded(
+            shards,
+            &obs.attribution().cells(),
+            &obs.recorder().stats(),
+            status,
+        ),
+        None => spfft::obs::snapshot_json(
+            snap,
+            &obs.attribution().cells(),
+            &obs.recorder().stats(),
+            status,
+        ),
+    };
     spfft::obs::schema_check_snapshot(&doc).map_err(CliError)?;
     std::fs::write(path, spfft::util::json::to_string(&doc))
         .map_err(|e| CliError(format!("writing {path}: {e}")))

@@ -122,6 +122,10 @@ pub fn snapshot_json(
                 ("completed", num(snap.completed as f64)),
                 ("completed_by_kind", by_kind),
                 ("failed", num(snap.failed as f64)),
+                ("rejected_full", num(snap.rejected_full as f64)),
+                ("rejected_stopped", num(snap.rejected_stopped as f64)),
+                ("rejected_invalid", num(snap.rejected_invalid as f64)),
+                ("rejected_shed", num(snap.rejected_shed as f64)),
                 ("batches", num(snap.batches as f64)),
                 ("mean_batch_size", num(snap.mean_batch_size)),
                 ("groups", num(snap.groups as f64)),
@@ -166,6 +170,59 @@ pub fn snapshot_json(
     ])
 }
 
+/// One shard's counter block for the `shards` array of a sharded
+/// `spfft.metrics.v1` document.
+fn shard_json(shard: usize, snap: &MetricsSnapshot) -> Json {
+    obj(vec![
+        ("shard", num(shard as f64)),
+        ("submitted", num(snap.submitted as f64)),
+        ("completed", num(snap.completed as f64)),
+        ("failed", num(snap.failed as f64)),
+        ("rejected_full", num(snap.rejected_full as f64)),
+        ("rejected_stopped", num(snap.rejected_stopped as f64)),
+        ("rejected_invalid", num(snap.rejected_invalid as f64)),
+        ("rejected_shed", num(snap.rejected_shed as f64)),
+        ("batches", num(snap.batches as f64)),
+        ("groups", num(snap.groups as f64)),
+        ("coalesced_flushes", num(snap.coalesced_flushes as f64)),
+        ("coalesce_hits", num(snap.coalesce_hits as f64)),
+        ("coalesce_hit_rate", num(snap.coalesce_hit_rate)),
+        ("singleton_pairings", num(snap.singleton_pairings as f64)),
+        (
+            "latency_ns",
+            obj(vec![
+                ("p50", num(snap.latency_p50.as_nanos() as f64)),
+                ("p95", num(snap.latency_p95.as_nanos() as f64)),
+                ("p99", num(snap.latency_p99.as_nanos() as f64)),
+                ("max", num(snap.latency_max.as_nanos() as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Sharded variant of [`snapshot_json`]: the top-level counters are the
+/// fleet aggregate ([`MetricsSnapshot::aggregate`] — counters sum,
+/// order statistics are conservative elementwise maxima) and a `shards`
+/// array carries each shard's own counter block, indexed by shard id.
+/// Still `spfft.metrics.v1`: single-shard consumers read the aggregate
+/// exactly as before, the `shards` key is additive.
+pub fn snapshot_json_sharded(
+    shards: &[MetricsSnapshot],
+    attribution: &[(AttrKey, AttrCell)],
+    recorder: &RecorderStats,
+    autotune: Option<&AutotuneStatus>,
+) -> Json {
+    let total = MetricsSnapshot::aggregate(shards);
+    let mut doc = snapshot_json(&total, attribution, recorder, autotune);
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "shards".to_string(),
+            Json::Arr(shards.iter().enumerate().map(|(i, s)| shard_json(i, s)).collect()),
+        );
+    }
+    doc
+}
+
 /// Validate a `spfft.metrics.v1` document: schema tag, every counter and
 /// latency field present, every attribution cell fully keyed. Renaming
 /// or dropping a field is a hard error.
@@ -181,6 +238,10 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
         "submitted",
         "completed",
         "failed",
+        "rejected_full",
+        "rejected_stopped",
+        "rejected_invalid",
+        "rejected_shed",
         "batches",
         "mean_batch_size",
         "groups",
@@ -251,6 +312,33 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
             }
         }
     }
+    // `shards` is optional (single-shard docs omit it) but, when
+    // present, every entry must carry its id and the full rejection
+    // decomposition — the per-shard labels CI's export gate asserts.
+    match doc.get("shards") {
+        Json::Null => {}
+        shards => {
+            let arr = shards.as_arr().ok_or("shards present but not an array")?;
+            for (i, shard) in arr.iter().enumerate() {
+                for field in [
+                    "shard",
+                    "submitted",
+                    "completed",
+                    "failed",
+                    "rejected_full",
+                    "rejected_stopped",
+                    "rejected_invalid",
+                    "rejected_shed",
+                    "coalesce_hits",
+                    "coalesce_hit_rate",
+                ] {
+                    if shard.get(field).as_f64().is_none() {
+                        return Err(format!("shards[{i}].{field} missing or not a number"));
+                    }
+                }
+            }
+        }
+    }
     // autotune is nullable but, when present, must carry its core fields
     let at = doc.get("autotune");
     if !matches!(at, Json::Null) {
@@ -314,6 +402,20 @@ pub fn prometheus_text(
     }
     prom_head(&mut out, "spfft_failed_total", "counter", "Requests failed or rejected");
     prom_line(&mut out, "spfft_failed_total", &[], snap.failed as f64);
+    prom_head(
+        &mut out,
+        "spfft_rejected_total",
+        "counter",
+        "Rejections by reason (queue_full, shutting_down, invalid, shed)",
+    );
+    for (reason, count) in [
+        ("queue_full", snap.rejected_full),
+        ("shutting_down", snap.rejected_stopped),
+        ("invalid", snap.rejected_invalid),
+        ("shed", snap.rejected_shed),
+    ] {
+        prom_line(&mut out, "spfft_rejected_total", &[("reason", reason.to_string())], count as f64);
+    }
     prom_head(&mut out, "spfft_batches_total", "counter", "Batches pulled by workers");
     prom_line(&mut out, "spfft_batches_total", &[], snap.batches as f64);
     prom_head(&mut out, "spfft_groups_total", "counter", "Same-(kind, n) groups executed");
@@ -413,15 +515,105 @@ pub fn prometheus_text(
     out
 }
 
+/// Sharded variant of [`prometheus_text`]: fleet-aggregate families
+/// exactly as the single-shard exposition renders them, plus per-shard
+/// `spfft_shard_*` families labeled `shard="i"` so overload and
+/// coalescing are attributable to the shard that saw them.
+pub fn prometheus_text_sharded(
+    shards: &[MetricsSnapshot],
+    attribution: &[(AttrKey, AttrCell)],
+    recorder: &RecorderStats,
+) -> String {
+    let total = MetricsSnapshot::aggregate(shards);
+    let mut out = prometheus_text(&total, attribution, recorder);
+    prom_head(&mut out, "spfft_shard_submitted_total", "counter", "Requests accepted, per shard");
+    for (i, s) in shards.iter().enumerate() {
+        prom_line(
+            &mut out,
+            "spfft_shard_submitted_total",
+            &[("shard", i.to_string())],
+            s.submitted as f64,
+        );
+    }
+    prom_head(&mut out, "spfft_shard_completed_total", "counter", "Requests completed, per shard");
+    for (i, s) in shards.iter().enumerate() {
+        prom_line(
+            &mut out,
+            "spfft_shard_completed_total",
+            &[("shard", i.to_string())],
+            s.completed as f64,
+        );
+    }
+    prom_head(
+        &mut out,
+        "spfft_shard_rejected_total",
+        "counter",
+        "Rejections by reason, per shard",
+    );
+    for (i, s) in shards.iter().enumerate() {
+        for (reason, count) in [
+            ("queue_full", s.rejected_full),
+            ("shutting_down", s.rejected_stopped),
+            ("invalid", s.rejected_invalid),
+            ("shed", s.rejected_shed),
+        ] {
+            prom_line(
+                &mut out,
+                "spfft_shard_rejected_total",
+                &[("shard", i.to_string()), ("reason", reason.to_string())],
+                count as f64,
+            );
+        }
+    }
+    prom_head(
+        &mut out,
+        "spfft_shard_coalesce_hits_total",
+        "counter",
+        "Held groups that gained members, per shard",
+    );
+    for (i, s) in shards.iter().enumerate() {
+        prom_line(
+            &mut out,
+            "spfft_shard_coalesce_hits_total",
+            &[("shard", i.to_string())],
+            s.coalesce_hits as f64,
+        );
+    }
+    prom_head(
+        &mut out,
+        "spfft_shard_latency_ns",
+        "gauge",
+        "Request latency percentiles per shard (ns)",
+    );
+    for (i, s) in shards.iter().enumerate() {
+        for (q, d) in [
+            ("p50", s.latency_p50),
+            ("p95", s.latency_p95),
+            ("p99", s.latency_p99),
+            ("max", s.latency_max),
+        ] {
+            prom_line(
+                &mut out,
+                "spfft_shard_latency_ns",
+                &[("shard", i.to_string()), ("quantile", q.to_string())],
+                d.as_nanos() as f64,
+            );
+        }
+    }
+    out
+}
+
 /// Validate Prometheus text output: the core metric families (including
-/// the flight-recorder counters) must be present, every sample line must
-/// parse as `name[{labels}] value`, and every attribution sample must
-/// carry the full six-label cell key.
+/// the flight-recorder counters and the rejection decomposition) must be
+/// present, every sample line must parse as `name[{labels}] value`,
+/// every attribution sample must carry the full six-label cell key, and
+/// every `spfft_shard_*` sample must carry its `shard` label.
 pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
     let required = [
         "spfft_submitted_total",
         "spfft_completed_total",
         "spfft_failed_total",
+        "spfft_rejected_total",
         "spfft_batches_total",
         "spfft_groups_total",
         "spfft_latency_ns",
@@ -459,6 +651,12 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
                 }
             }
         }
+        if name.starts_with("spfft_shard_") && !name_labels.contains("shard=") {
+            return err("per-shard sample missing shard= label");
+        }
+        if name == "spfft_rejected_total" && !name_labels.contains("reason=") {
+            return err("rejection sample missing reason= label");
+        }
     }
     Ok(())
 }
@@ -493,6 +691,11 @@ fn event_json(e: &Event) -> Json {
             pairs.push(("req", num(*req as f64)));
             pairs.push(("kind", s(kind.name())));
             pairs.push(("n", num(*n as f64)));
+        }
+        EventKind::Rejected { kind, n, reason } => {
+            pairs.push(("kind", s(kind.name())));
+            pairs.push(("n", num(*n as f64)));
+            pairs.push(("reason", s(reason.clone())));
         }
         EventKind::CoalesceHold { kind, n, size, held_windows } => {
             pairs.push(("kind", s(kind.name())));
@@ -648,6 +851,15 @@ pub fn events_from_json(doc: &Json) -> Result<Vec<Event>, String> {
                 kind: get_kind(v, &at)?,
                 n: get_usize(v, "n", &at)?,
             },
+            "rejected" => EventKind::Rejected {
+                kind: get_kind(v, &at)?,
+                n: get_usize(v, "n", &at)?,
+                reason: v
+                    .get("reason")
+                    .as_str()
+                    .ok_or_else(|| format!("{at}: reason missing"))?
+                    .to_string(),
+            },
             "coalesce_hold" => EventKind::CoalesceHold {
                 kind: get_kind(v, &at)?,
                 n: get_usize(v, "n", &at)?,
@@ -753,6 +965,7 @@ pub fn render_events(events: &[Event]) -> String {
         let t_us = e.t_ns as f64 / 1000.0;
         let detail = match &e.kind {
             EventKind::Submit { req, kind, n } => format!("req #{req} {kind} n={n}"),
+            EventKind::Rejected { kind, n, reason } => format!("{kind} n={n} rejected: {reason}"),
             EventKind::CoalesceHold { kind, n, size, held_windows } => {
                 format!("{kind} n={n} size={size} held for window {held_windows}")
             }
@@ -849,6 +1062,10 @@ mod tests {
             completed: 9,
             completed_by_kind: [4, 2, 2, 1],
             failed: 1,
+            rejected_full: 1,
+            rejected_stopped: 0,
+            rejected_invalid: 0,
+            rejected_shed: 0,
             batches: 3,
             mean_batch_size: 3.0,
             groups: 4,
@@ -994,6 +1211,76 @@ mod tests {
     }
 
     #[test]
+    fn rejected_counters_export_and_are_gated() {
+        // JSON: the rejection decomposition is present and schema-gated
+        let doc = snapshot_json(&sample_snapshot(), &[], &sample_recorder(), None);
+        let text = json::to_string(&doc);
+        let parsed = json::parse(&text).unwrap();
+        schema_check_snapshot(&parsed).unwrap();
+        assert_eq!(parsed.get("counters").get("rejected_full").as_usize(), Some(1));
+        assert_eq!(parsed.get("counters").get("rejected_shed").as_usize(), Some(0));
+        let renamed = text.replace("\"rejected_shed\"", "\"rejected_other\"");
+        let err = schema_check_snapshot(&json::parse(&renamed).unwrap()).unwrap_err();
+        assert!(err.contains("rejected_shed"), "unhelpful error: {err}");
+        // Prometheus: every reason gets a labeled sample, and both the
+        // family and its reason label are schema-gated
+        let prom = prometheus_text(&sample_snapshot(), &[], &sample_recorder());
+        schema_check_prometheus(&prom).unwrap();
+        assert!(prom.contains("spfft_rejected_total{reason=\"queue_full\"} 1"));
+        assert!(prom.contains("spfft_rejected_total{reason=\"shed\"} 0"));
+        let stripped: String = prom
+            .lines()
+            .filter(|l| !l.contains("spfft_rejected_total"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(schema_check_prometheus(&stripped).is_err());
+        let unlabeled = prom.replace(
+            "spfft_rejected_total{reason=\"queue_full\"}",
+            "spfft_rejected_total",
+        );
+        let err = schema_check_prometheus(&unlabeled).unwrap_err();
+        assert!(err.contains("reason="), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn sharded_exports_carry_per_shard_labels_and_validate() {
+        let mut shard1 = sample_snapshot();
+        shard1.submitted = 7;
+        shard1.completed = 5;
+        shard1.rejected_shed = 2;
+        shard1.coalesce_hits = 3;
+        let shards = vec![sample_snapshot(), shard1];
+        // JSON: aggregate counters on top, per-shard blocks in `shards`
+        let doc = snapshot_json_sharded(&shards, &sample_cells(), &sample_recorder(), None);
+        let text = json::to_string(&doc);
+        let parsed = json::parse(&text).unwrap();
+        schema_check_snapshot(&parsed).unwrap();
+        assert_eq!(parsed.get("counters").get("submitted").as_usize(), Some(17));
+        assert_eq!(parsed.get("counters").get("rejected_shed").as_usize(), Some(2));
+        let arr = parsed.get("shards").as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("shard").as_usize(), Some(0));
+        assert_eq!(arr[1].get("shard").as_usize(), Some(1));
+        assert_eq!(arr[1].get("rejected_shed").as_usize(), Some(2));
+        assert_eq!(arr[1].get("coalesce_hits").as_usize(), Some(3));
+        // dropping a per-shard rejection counter is a hard error
+        let broken = text.replace("\"rejected_stopped\"", "\"rejected_gone\"");
+        assert!(schema_check_snapshot(&json::parse(&broken).unwrap()).is_err());
+        // Prometheus: aggregate families plus shard-labeled families
+        let prom = prometheus_text_sharded(&shards, &sample_cells(), &sample_recorder());
+        schema_check_prometheus(&prom).unwrap();
+        assert!(prom.contains("spfft_submitted_total 17"));
+        assert!(prom.contains("spfft_shard_submitted_total{shard=\"0\"} 10"));
+        assert!(prom.contains("spfft_shard_submitted_total{shard=\"1\"} 7"));
+        assert!(prom.contains("spfft_shard_rejected_total{shard=\"1\",reason=\"shed\"} 2"));
+        assert!(prom.contains("spfft_shard_coalesce_hits_total{shard=\"1\"} 3"));
+        // a shard sample without its shard label is a hard error
+        let unlabeled = prom.replace("spfft_shard_submitted_total{shard=\"0\"}", "spfft_shard_submitted_total");
+        let err = schema_check_prometheus(&unlabeled).unwrap_err();
+        assert!(err.contains("shard="), "unhelpful error: {err}");
+    }
+
+    #[test]
     fn event_stream_round_trips_every_variant() {
         let plan = Plan::parse("R4,R4,R2,F8").unwrap();
         let plan2 = Plan::parse("R8,F8,R2,R2").unwrap();
@@ -1011,6 +1298,15 @@ mod tests {
                     n: 256,
                     size: 2,
                     held_windows: 1,
+                },
+            },
+            Event {
+                seq: 9,
+                t_ns: 850,
+                kind: EventKind::Rejected {
+                    kind: TransformKind::Forward,
+                    n: 256,
+                    reason: "queue_full".to_string(),
                 },
             },
             Event {

@@ -30,7 +30,8 @@ pub mod recorder;
 pub use attribution::{AttrCell, AttrKey, Attribution};
 pub use export::{
     audit_trail, ctx_from_label, ctx_label, events_from_json, events_json, prometheus_text,
-    render_events, schema_check_prometheus, schema_check_snapshot, snapshot_json,
+    prometheus_text_sharded, render_events, schema_check_prometheus, schema_check_snapshot,
+    snapshot_json, snapshot_json_sharded,
 };
 pub use recorder::{Event, EventKind, FlightRecorder, RecorderStats, StageTime};
 

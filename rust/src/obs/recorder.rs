@@ -32,6 +32,11 @@ pub type StageTime = (EdgeType, usize, f64);
 pub enum EventKind {
     /// A request entered the service queue.
     Submit { req: u64, kind: TransformKind, n: usize },
+    /// A submission was rejected (admission control) or an admitted
+    /// request was shed at pull time. `reason` is the stable
+    /// `Rejected::reason()` tag: `queue_full`, `shed`, `shutting_down`,
+    /// or `invalid`.
+    Rejected { kind: TransformKind, n: usize, reason: String },
     /// The coalescer decided to hold an under-filled group open for
     /// (at least) one more pull window.
     CoalesceHold { kind: TransformKind, n: usize, size: usize, held_windows: u32 },
@@ -105,6 +110,7 @@ impl EventKind {
     pub fn tag(&self) -> &'static str {
         match self {
             EventKind::Submit { .. } => "submit",
+            EventKind::Rejected { .. } => "rejected",
             EventKind::CoalesceHold { .. } => "coalesce_hold",
             EventKind::GroupFormed { .. } => "group_formed",
             EventKind::CoalesceFlush { .. } => "coalesce_flush",

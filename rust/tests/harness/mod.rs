@@ -29,7 +29,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use spfft::autotune::{trace_batch, trace_request, EdgeSample, SampleMode};
-use spfft::coordinator::{BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics};
+use spfft::coordinator::{
+    BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics, MetricsSnapshot, Rejected,
+    ShardRouter,
+};
 use spfft::fft::{BatchBufferPool, CompiledPlan, Executor, SplitComplex};
 use spfft::kind::TransformKind;
 use spfft::obs::{Event, EventKind, Observer, StageTime};
@@ -165,6 +168,19 @@ impl Completion {
     }
 }
 
+/// One request shed by pull-time admission control (provenance for
+/// exact shed-accounting assertions).
+#[derive(Debug, Clone, Copy)]
+pub struct Shed {
+    pub n: usize,
+    pub kind: TransformKind,
+    pub seed: u64,
+    pub seq: usize,
+    /// Virtual offsets of enqueue and the shedding pull.
+    pub enqueued_at: Duration,
+    pub shed_at: Duration,
+}
+
 /// Drives the production batching + grouping + coalescing + execution
 /// pipeline over a scripted trace on a virtual clock.
 pub struct Driver {
@@ -187,7 +203,21 @@ pub struct Driver {
     pool: BatchBufferPool,
     /// Pulled batch sizes, in pull order (empty wake-ups excluded) —
     /// the deterministic equivalent of the service's batch accounting.
+    /// Counts pulled requests *before* shedding; `Metrics::on_batch`
+    /// sees admitted sizes only, exactly like the worker loop.
     pub pulls: Vec<usize>,
+    /// Backpressure-aware shed budget, mirroring
+    /// `ServiceConfig::shed_deadline`: a pulled request whose age
+    /// exceeds `budget - max_wait` is shed instead of admitted. `None`
+    /// (the default) never sheds — the pre-shedding pipeline exactly.
+    pub shed_deadline: Option<Duration>,
+    /// Virtual execution cost charged per executed group. `ZERO` (the
+    /// default) keeps execution instantaneous; a positive cost makes
+    /// the single virtual worker fall behind a fast trace, building the
+    /// genuine queueing delay that overload/shedding tests need.
+    pub exec_time: Duration,
+    /// Every shed request, in shed order.
+    pub shed: Vec<Shed>,
 }
 
 impl Driver {
@@ -219,6 +249,9 @@ impl Driver {
             compiled,
             pool: BatchBufferPool::new(),
             pulls: Vec::new(),
+            shed_deadline: None,
+            exec_time: Duration::ZERO,
+            shed: Vec::new(),
         }
     }
 
@@ -250,7 +283,8 @@ impl Driver {
                         let now = self.clock.now();
                         let ready =
                             self.coalesce.admit(Vec::new(), now, |r| (r.kind, r.n), |r| r.enqueued);
-                        self.execute(ready, &mut completions);
+                        let groups = self.execute(ready, &mut completions);
+                        self.clock.advance(self.exec_time * groups as u32);
                         continue;
                     }
                 }
@@ -263,7 +297,8 @@ impl Driver {
                     let now = self.clock.now();
                     let ready =
                         self.coalesce.admit(Vec::new(), now, |r| (r.kind, r.n), |r| r.enqueued);
-                    self.execute(ready, &mut completions);
+                    let groups = self.execute(ready, &mut completions);
+                    self.clock.advance(self.exec_time * groups as u32);
                     continue;
                 }
             }
@@ -303,7 +338,44 @@ impl Driver {
             self.clock.set_instant(close_at);
             self.pulls.push(batch.len());
             let now = self.clock.now();
-            self.metrics.on_batch(batch.len(), Duration::ZERO);
+            // Pull-time admission control, mirroring the worker loop: a
+            // request with less remaining deadline budget than one flush
+            // window of slack is shed with the typed rejection, never
+            // admitted to the coalescer.
+            let batch = match self.shed_deadline {
+                None => batch,
+                Some(budget) => {
+                    let slack = budget.saturating_sub(self.policy.max_wait);
+                    let (keep, shed): (Vec<TraceReq>, Vec<TraceReq>) = batch
+                        .into_iter()
+                        .partition(|r| now.saturating_duration_since(r.enqueued) <= slack);
+                    for req in shed {
+                        self.metrics.on_rejected_shed();
+                        self.obs.record_at(
+                            now,
+                            EventKind::Rejected {
+                                kind: req.kind,
+                                n: req.n,
+                                reason: Rejected::Overloaded.reason().to_string(),
+                            },
+                        );
+                        self.shed.push(Shed {
+                            n: req.n,
+                            kind: req.kind,
+                            seed: req.seed,
+                            seq: req.seq,
+                            enqueued_at: self.clock.offset_of(req.enqueued),
+                            shed_at: self.clock.elapsed(),
+                        });
+                    }
+                    keep
+                }
+            };
+            // Admitted size only: shed requests never reach a group and
+            // must not inflate the mean batch size.
+            if !batch.is_empty() {
+                self.metrics.on_batch(batch.len(), Duration::ZERO);
+            }
             let ready = self.coalesce.admit_with(
                 batch,
                 now,
@@ -316,7 +388,8 @@ impl Driver {
                     );
                 },
             );
-            self.execute(ready, &mut completions);
+            let groups = self.execute(ready, &mut completions);
+            self.clock.advance(self.exec_time * groups as u32);
         }
         // Shutdown drain (channel closed in the real worker loop).
         let now = self.clock.now();
@@ -327,12 +400,14 @@ impl Driver {
 
     /// Execute ready groups exactly like `WorkerBackend::execute_group`'s
     /// native path: singletons scalar, groups of >= 2 through a pooled
-    /// lane-blocked batch buffer.
+    /// lane-blocked batch buffer. Returns the number of groups executed
+    /// (the caller charges `exec_time` per group).
     fn execute(
         &mut self,
         ready: Vec<spfft::coordinator::ReadyGroup<(TransformKind, usize), TraceReq>>,
         completions: &mut Vec<Completion>,
-    ) {
+    ) -> usize {
+        let executed = ready.len();
         let now_off = self.clock.elapsed();
         let now = self.clock.now();
         for group in ready {
@@ -436,5 +511,117 @@ impl Driver {
                 });
             }
         }
+        executed
+    }
+}
+
+/// How a [`ShardedDriver`] assigns arrivals to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Key-affine routing through the production [`ShardRouter`]: all
+    /// traffic for one `(kind, n)` lands on one shard's coalescer.
+    Affine,
+    /// Arrival-order round-robin — the "per-worker coalescing" baseline
+    /// the shared tier replaces, where same-key partners scatter across
+    /// shards and never meet.
+    RoundRobin,
+}
+
+/// Drives N independent per-shard [`Driver`]s over one scripted trace,
+/// split by the production router (or round-robin, for baselines). Each
+/// shard owns its virtual clock; completions and shed records report
+/// virtual *offsets*, so merged results compare across shards directly.
+pub struct ShardedDriver {
+    pub router: ShardRouter,
+    pub mode: RouteMode,
+    pub shards: Vec<Driver>,
+}
+
+impl ShardedDriver {
+    pub fn new(
+        shards: usize,
+        plans: &[(usize, Plan)],
+        policy: BatchPolicy,
+        coalesce: CoalescePolicy,
+        mode: RouteMode,
+    ) -> ShardedDriver {
+        let shards = shards.max(1);
+        ShardedDriver {
+            router: ShardRouter::new(shards),
+            mode,
+            shards: (0..shards).map(|_| Driver::new(plans, policy, coalesce)).collect(),
+        }
+    }
+
+    /// Set the shed budget on every shard (builder-style).
+    pub fn with_shed_deadline(mut self, budget: Duration) -> ShardedDriver {
+        for s in &mut self.shards {
+            s.shed_deadline = Some(budget);
+        }
+        self
+    }
+
+    /// Set the per-group virtual execution cost on every shard.
+    pub fn with_exec_time(mut self, cost: Duration) -> ShardedDriver {
+        for s in &mut self.shards {
+            s.exec_time = cost;
+        }
+        self
+    }
+
+    /// The shard an arrival lands on under this drive mode. `idx` is
+    /// the arrival's position in the submitted trace (round-robin key).
+    pub fn route(&self, idx: usize, a: &Arrival) -> usize {
+        match self.mode {
+            RouteMode::Affine => self.router.route(a.kind, a.n),
+            RouteMode::RoundRobin => idx % self.shards.len(),
+        }
+    }
+
+    /// Split the trace across shards, run every shard to completion,
+    /// and merge completions tagged with their shard index, stably
+    /// ordered by virtual completion offset (ties keep each shard's
+    /// execution order, shards in index order — so one affine shard
+    /// reproduces the plain driver's completion order exactly).
+    ///
+    /// `seq` in the returned completions (and in [`Driver::shed`]) is
+    /// the *global* arrival index in the submitted trace, so FIFO and
+    /// conservation assertions work across the whole fleet.
+    pub fn run(&mut self, mut arrivals: Vec<Arrival>) -> Vec<(usize, Completion)> {
+        arrivals.sort_by_key(|a| a.at);
+        let mut per: Vec<Vec<Arrival>> = self.shards.iter().map(|_| Vec::new()).collect();
+        let mut seq_maps: Vec<Vec<usize>> = self.shards.iter().map(|_| Vec::new()).collect();
+        for (idx, a) in arrivals.into_iter().enumerate() {
+            let s = self.route(idx, &a);
+            per[s].push(a);
+            seq_maps[s].push(idx);
+        }
+        let mut merged = Vec::new();
+        for (s, (driver, trace)) in self.shards.iter_mut().zip(per).enumerate() {
+            for mut c in driver.run(trace) {
+                c.seq = seq_maps[s][c.seq]; // local arrival index -> global
+                merged.push((s, c));
+            }
+            for shed in &mut driver.shed {
+                shed.seq = seq_maps[s][shed.seq];
+            }
+        }
+        merged.sort_by_key(|(_, c)| c.completed_at); // stable: ties keep shard order
+        merged
+    }
+
+    /// Per-shard metrics snapshots, shard order.
+    pub fn snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|d| d.metrics.snapshot()).collect()
+    }
+
+    /// The fleet-level aggregate snapshot.
+    pub fn aggregate(&self) -> MetricsSnapshot {
+        MetricsSnapshot::aggregate(&self.snapshots())
+    }
+
+    /// Every shed request across all shards (global seqs after `run`).
+    pub fn all_shed(&self) -> Vec<Shed> {
+        self.shards.iter().flat_map(|d| d.shed.iter().copied()).collect()
     }
 }

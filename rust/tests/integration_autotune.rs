@@ -103,6 +103,7 @@ fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
         coalesce: Default::default(),
         queue_depth: 128,
         autotune: Some(at),
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -216,6 +217,7 @@ fn learned_wisdom_survives_restart_and_preplans_the_drifted_optimum() {
         coalesce: Default::default(),
         queue_depth: 64,
         autotune: Some(at),
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();

@@ -36,6 +36,7 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
         coalesce: Default::default(),
         queue_depth: 256,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -160,6 +161,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -176,6 +178,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         coalesce: Default::default(),
         queue_depth: 64,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();

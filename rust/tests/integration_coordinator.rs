@@ -40,6 +40,7 @@ fn native_service_end_to_end_with_planner() {
         coalesce: Default::default(),
         queue_depth: 128,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -84,6 +85,7 @@ fn pjrt_service_end_to_end() {
         coalesce: Default::default(),
         queue_depth: 32,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -255,6 +257,7 @@ fn failure_injection_worker_rejects_bad_size_gracefully() {
         coalesce: Default::default(),
         queue_depth: 16,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();

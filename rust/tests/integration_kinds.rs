@@ -25,6 +25,10 @@ use spfft::planner::{plan as run_plan, Strategy};
 /// records present, no `"kind"` fields anywhere.
 const LEGACY_NOKIND: &str = include_str!("data/wisdom2_legacy_nokind.json");
 
+/// Checked-in fixture with two observation records that collide after
+/// batch-class canonicalization (b=3 and b=4 are both class 2).
+const DUP_RECORDS: &str = include_str!("data/wisdom2_dup_records.json");
+
 fn planned(n: usize) -> Plan {
     let mut cost = SimCost::m1(n);
     run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 }).plan
@@ -159,6 +163,7 @@ fn coalescing_service_serves_mixed_kind_traffic_correctly() {
         workers: 1,
         queue_depth: 128,
         autotune: None,
+        shed_deadline: None,
         observer: None,
     })
     .unwrap();
@@ -217,6 +222,18 @@ fn coalescing_service_serves_mixed_kind_traffic_correctly() {
     assert_eq!(snap.failed, 0);
     assert_eq!(snap.completed_by_kind, [9, 9, 9, 9]);
     assert_eq!(snap.completed_by_kind.iter().sum::<u64>(), snap.completed);
+}
+
+#[test]
+fn duplicate_edge_records_fail_to_load_with_a_named_cell() {
+    // Acceptance fixture for the duplicate-record bugfix: `from_json`
+    // used to fold colliding records last-wins, silently dropping the
+    // earlier estimate. Loading must now be an error that names the
+    // colliding cell.
+    let err = WisdomV2::from_json(DUP_RECORDS).expect_err("duplicate records must not load");
+    let msg = format!("{err}");
+    assert!(msg.contains("duplicate observation record"), "unhelpful error: {msg}");
+    assert!(msg.contains("R4@0"), "error must name the colliding cell: {msg}");
 }
 
 #[test]

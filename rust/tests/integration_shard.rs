@@ -1,0 +1,313 @@
+//! Integration: sharded serving with the shared, key-affine coalesce
+//! tier — all timing-sensitive behavior driven through the
+//! deterministic multi-shard harness (zero sleeps, zero wall-clock
+//! dependence).
+//!
+//! The acceptance traces of the sharding work live here:
+//!   * cross-shard coalescing — a singleton stream that key-affine
+//!     routing concentrates on one shard's coalescer pairs across
+//!     pulls, while the per-worker round-robin baseline scatters the
+//!     partners so every one flushes alone: the affine hit rate is
+//!     *strictly* higher on the same trace;
+//!   * overload shedding — under a burst the single virtual worker
+//!     cannot keep up with, pull-time admission control sheds every
+//!     stale request with the typed rejection while every *admitted*
+//!     request still completes inside its deadline budget, and the
+//!     `rejected_shed` counter accounts for every shed request exactly;
+//!   * `--shards 1` equivalence — one affine shard replays any trace
+//!     bit-identically to the plain single-driver pipeline.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{trace, trace_kinds, Driver, RouteMode, ShardedDriver};
+use spfft::coordinator::{BatchPolicy, CoalescePolicy, ShardRouter};
+use spfft::cost::SimCost;
+use spfft::kind::TransformKind;
+use spfft::plan::Plan;
+use spfft::planner::{plan as run_plan, Strategy};
+
+fn planned(n: usize) -> Plan {
+    let mut cost = SimCost::m1(n);
+    run_plan(&mut cost, &Strategy::DijkstraContextAware { k: 1 }).plan
+}
+
+#[test]
+fn affine_routing_coalesces_across_shards_strictly_better_than_round_robin() {
+    // Eight lonely same-(kind, n) requests, 3 ms apart, deadline 5 ms:
+    // consecutive arrivals can pair, arrivals two slots apart cannot.
+    // Key-affine routing sends all eight to one shard's coalescer, so
+    // they pair 0&1, 2&3, 4&5, 6&7. The round-robin (per-worker)
+    // baseline alternates them between two shards, stretching each
+    // shard's inter-arrival gap to 6 ms — past the deadline — so every
+    // request flushes alone. Same trace, strictly higher hit rate.
+    let n = 64;
+    let plans = [(n, planned(n))];
+    let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) };
+    let coalesce = CoalescePolicy::hold(4, 4, Duration::from_millis(5));
+    let arrivals: Vec<(u64, usize, u64)> =
+        (0..8u64).map(|i| (i * 3000, n, i + 1)).collect();
+
+    let mut affine = ShardedDriver::new(2, &plans, policy, coalesce, RouteMode::Affine);
+    let affine_done = affine.run(trace(&arrivals));
+    let mut baseline = ShardedDriver::new(2, &plans, policy, coalesce, RouteMode::RoundRobin);
+    let baseline_done = baseline.run(trace(&arrivals));
+
+    assert_eq!(affine_done.len(), 8);
+    assert_eq!(baseline_done.len(), 8);
+    // Affine: every request executed in a pair formed across pulls on
+    // the single shard that owns the (Forward, 64) key.
+    let home = affine.router.route(TransformKind::Forward, n);
+    for (shard, c) in &affine_done {
+        assert_eq!(*shard, home, "affine traffic left its home shard");
+        assert_eq!(c.group_size, 2, "seq {} ran alone under affine routing", c.seq);
+        assert!(c.paired_singletons);
+        assert!(c.latency() <= Duration::from_millis(5));
+    }
+    // Baseline: partners scattered — every request flushed alone at its
+    // deadline, still inside the budget (shedding is a separate knob).
+    for (_, c) in &baseline_done {
+        assert_eq!(c.group_size, 1, "seq {} paired despite round-robin scatter", c.seq);
+        assert!(c.latency() <= Duration::from_millis(5));
+    }
+
+    let a = affine.aggregate();
+    let b = baseline.aggregate();
+    assert_eq!(a.completed, 8);
+    assert_eq!(b.completed, 8);
+    assert_eq!(a.singleton_pairings, 4);
+    assert_eq!(b.singleton_pairings, 0);
+    assert!(
+        a.coalesce_hits > b.coalesce_hits,
+        "affine hits {} must strictly beat baseline hits {}",
+        a.coalesce_hits,
+        b.coalesce_hits
+    );
+    assert!(
+        a.coalesce_hit_rate > b.coalesce_hit_rate,
+        "affine hit rate {} must strictly beat baseline {}",
+        a.coalesce_hit_rate,
+        b.coalesce_hit_rate
+    );
+}
+
+#[test]
+fn mixed_kind_traffic_stays_kind_pure_and_fifo_across_three_shards() {
+    // Every transform kind over one configured size, interleaved, on
+    // three shards: each (kind, n) key's traffic lands wholly on its
+    // routed shard, completes FIFO within the key, and the fleet
+    // aggregate conserves every request.
+    let n = 64;
+    let plans = [(n, planned(n))];
+    let mut sharded = ShardedDriver::new(
+        3,
+        &plans,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        CoalescePolicy::hold(3, 4, Duration::from_millis(5)),
+        RouteMode::Affine,
+    );
+    use TransformKind::*;
+    let specs: Vec<(u64, TransformKind, usize, u64)> = (0..24u64)
+        .map(|i| {
+            let kind = [Forward, Inverse, RealForward, RealInverse][(i % 4) as usize];
+            let sz = if kind.is_real() { 2 * n } else { n };
+            (i * 400, kind, sz, i + 1)
+        })
+        .collect();
+    let completions = sharded.run(trace_kinds(&specs));
+    assert_eq!(completions.len(), 24);
+    let router = sharded.router;
+    let mut last: std::collections::HashMap<(TransformKind, usize), usize> =
+        std::collections::HashMap::new();
+    for (shard, c) in &completions {
+        assert_eq!(*shard, router.route(c.kind, c.n), "completion escaped its key's shard");
+        if let Some(&prev) = last.get(&(c.kind, c.n)) {
+            assert!(c.seq > prev, "({}, {}): FIFO broken", c.kind, c.n);
+        }
+        last.insert((c.kind, c.n), c.seq);
+        assert!(c.latency() <= Duration::from_millis(5));
+    }
+    let agg = sharded.aggregate();
+    assert_eq!(agg.completed, 24);
+    assert_eq!(agg.completed_by_kind, [6, 6, 6, 6]);
+    assert_eq!(agg.rejected_total(), 0);
+    // per-shard snapshots decompose the aggregate exactly
+    let per: u64 = sharded.snapshots().iter().map(|s| s.completed).sum();
+    assert_eq!(per, 24);
+}
+
+#[test]
+fn overload_sheds_stale_requests_and_admitted_work_meets_its_deadline() {
+    // A burst of 32 requests hits a worker that needs 500 us per group
+    // with a 1 ms shed budget (slack = budget - window = 900 us). The
+    // worker serves two pulls of four before the backlog's age crosses
+    // the slack; everything it pulls after that is shed at admission.
+    // The contract under test: *zero* admitted requests complete past
+    // their budget, and completions + sheds account for every arrival
+    // with the shed counter matching exactly.
+    let n = 64;
+    let budget = Duration::from_millis(1);
+    let mut driver = Driver::new(
+        &[(n, planned(n))],
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+        CoalescePolicy::default(),
+    );
+    driver.shed_deadline = Some(budget);
+    driver.exec_time = Duration::from_micros(500);
+    let arrivals: Vec<(u64, usize, u64)> = (0..32u64).map(|i| (i, n, i + 1)).collect();
+    let completions = driver.run(trace(&arrivals));
+
+    assert!(!completions.is_empty(), "overload must not shed everything");
+    assert!(!driver.shed.is_empty(), "trace failed to overload the worker");
+    // conservation: every arrival either completed or was shed, once
+    assert_eq!(completions.len() + driver.shed.len(), 32);
+    let mut seen: Vec<usize> = completions
+        .iter()
+        .map(|c| c.seq)
+        .chain(driver.shed.iter().map(|s| s.seq))
+        .collect();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..32).collect::<Vec<_>>());
+    // zero admitted-request deadline violations
+    for c in &completions {
+        assert!(
+            c.latency() <= budget,
+            "admitted seq {} completed at {:?}, past its {:?} budget",
+            c.seq,
+            c.latency(),
+            budget
+        );
+    }
+    // every shed request was genuinely unserviceable: older at shed
+    // time than the slack the budget reserves for one flush window
+    let slack = budget - Duration::from_micros(100);
+    for s in &driver.shed {
+        assert!(s.shed_at - s.enqueued_at > slack, "seq {} shed while still viable", s.seq);
+    }
+    // the typed counter accounts for every shed request exactly
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.completed, completions.len() as u64);
+    assert_eq!(snap.rejected_shed, driver.shed.len() as u64);
+    assert_eq!(snap.failed, driver.shed.len() as u64);
+    assert_eq!(snap.rejected_full + snap.rejected_stopped + snap.rejected_invalid, 0);
+}
+
+#[test]
+fn sharded_overload_sheds_per_shard_and_aggregate_accounts_exactly() {
+    // The same overload contract holds per shard and in the aggregate:
+    // two keys, each hammering its home shard beyond capacity.
+    let n = 64;
+    let budget = Duration::from_millis(1);
+    let plans = [(n, planned(n))];
+    let mut sharded = ShardedDriver::new(
+        2,
+        &plans,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) },
+        CoalescePolicy::default(),
+        RouteMode::Affine,
+    )
+    .with_shed_deadline(budget)
+    .with_exec_time(Duration::from_micros(500));
+    use TransformKind::*;
+    let specs: Vec<(u64, TransformKind, usize, u64)> = (0..48u64)
+        .map(|i| (i, if i % 2 == 0 { Forward } else { Inverse }, n, i + 1))
+        .collect();
+    let completions = sharded.run(trace_kinds(&specs));
+    let shed = sharded.all_shed();
+    assert_eq!(completions.len() + shed.len(), 48);
+    assert!(!shed.is_empty(), "trace failed to overload the shards");
+    for (_, c) in &completions {
+        assert!(c.latency() <= budget, "admitted seq {} violated its deadline", c.seq);
+    }
+    let agg = sharded.aggregate();
+    assert_eq!(agg.completed, completions.len() as u64);
+    assert_eq!(agg.rejected_shed, shed.len() as u64);
+    assert_eq!(agg.rejected_total(), shed.len() as u64);
+}
+
+#[test]
+fn one_affine_shard_is_bit_identical_to_the_plain_driver() {
+    // `--shards 1` must change nothing: a single-shard affine fleet
+    // replays the mixed-kind acceptance trace of the kinds work with
+    // completions bit-identical to the plain single-driver pipeline.
+    let n = 64;
+    let plans = [(n, planned(n))];
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) };
+    let coalesce = CoalescePolicy::hold(3, 4, Duration::from_millis(5));
+    use TransformKind::*;
+    let specs: Vec<(u64, TransformKind, usize, u64)> = vec![
+        (0, Forward, 64, 1),
+        (10, Inverse, 64, 2),
+        (20, RealForward, 128, 3),
+        (30, Forward, 64, 4),
+        (40, RealInverse, 128, 5),
+        (300, Inverse, 64, 6),
+        (310, RealForward, 128, 7),
+        (320, Forward, 64, 8),
+        (700, Inverse, 64, 9),
+        (710, RealInverse, 128, 10),
+        (6000, Forward, 64, 11),
+    ];
+
+    let mut plain = Driver::new(&plans, policy, coalesce);
+    let want = plain.run(trace_kinds(&specs));
+    let mut sharded = ShardedDriver::new(1, &plans, policy, coalesce, RouteMode::Affine);
+    let got = sharded.run(trace_kinds(&specs));
+
+    assert_eq!(got.len(), want.len());
+    for ((shard, g), w) in got.iter().zip(&want) {
+        assert_eq!(*shard, 0);
+        assert_eq!(g.seq, w.seq);
+        assert_eq!((g.kind, g.n, g.seed), (w.kind, w.n, w.seed));
+        assert_eq!(g.enqueued_at, w.enqueued_at);
+        assert_eq!(g.completed_at, w.completed_at, "seq {} timing diverged", g.seq);
+        assert_eq!(g.group_size, w.group_size);
+        assert_eq!(g.held_windows, w.held_windows);
+        assert_eq!(g.reason, w.reason);
+        assert_eq!(g.paired_singletons, w.paired_singletons);
+        assert_eq!(g.out, w.out, "seq {} output diverged", g.seq);
+    }
+    let a = sharded.aggregate();
+    let p = plain.metrics.snapshot();
+    assert_eq!(a.completed, p.completed);
+    assert_eq!(a.batches, p.batches);
+    assert_eq!(a.groups, p.groups);
+    assert_eq!(a.coalesce_hits, p.coalesce_hits);
+    assert_eq!(a.singleton_pairings, p.singleton_pairings);
+}
+
+#[test]
+fn router_affinity_is_total_deterministic_and_covers_shards_eventually() {
+    // Routing is a pure function of (kind, n): stable across calls and
+    // router instances, always in range, and key-affine by definition.
+    for shards in 1..=8usize {
+        let r = ShardRouter::new(shards);
+        let r2 = ShardRouter::new(shards);
+        for kind in harness_all_kinds() {
+            for n in [16usize, 64, 256, 1024, 4096] {
+                let s = r.route(kind, n);
+                assert!(s < shards);
+                assert_eq!(s, r.route(kind, n), "routing not stable");
+                assert_eq!(s, r2.route(kind, n), "routing not instance-independent");
+            }
+        }
+    }
+    // with enough distinct keys, a multi-shard router uses >1 shard
+    let r = ShardRouter::new(4);
+    let mut used = std::collections::HashSet::new();
+    for kind in harness_all_kinds() {
+        for n in (4..14).map(|p| 1usize << p) {
+            used.insert(r.route(kind, n));
+        }
+    }
+    assert!(used.len() > 1, "router degenerated to one shard");
+}
+
+/// All four transform kinds (test-local helper; the library's
+/// `ALL_KINDS` constant is what the router itself iterates).
+fn harness_all_kinds() -> [TransformKind; 4] {
+    use TransformKind::*;
+    [Forward, Inverse, RealForward, RealInverse]
+}

@@ -694,6 +694,124 @@ fn prop_coalescing_invariants_hold_over_the_widened_kind_n_key() {
 }
 
 #[test]
+fn prop_shard_routing_preserves_coalesce_invariants() {
+    // The sharded tier's core obligation: splitting one arrival stream
+    // across N key-affine shards (arbitrary shard counts, arbitrary
+    // interleavings, arbitrary policies) preserves every coalescing
+    // invariant — routing is deterministic and total, a key's traffic
+    // never splits across shards, per-(kind, n) FIFO and the deadline
+    // bound (one window of slack) hold on every shard, every request
+    // flushes exactly once fleet-wide, and grouped execution stays
+    // bit-identical to sequential runs.
+    use spfft::coordinator::ShardRouter;
+    use spfft::kind::{TransformKind, ALL_KINDS};
+    let mut ex = Executor::new();
+    check("shard-coalesce-invariants", Config { cases: 24, ..Default::default() }, |rng| {
+        use std::time::Duration;
+        let shards = rng.range(1, 6);
+        let router = ShardRouter::new(shards);
+        let window = Duration::from_micros(rng.range(50, 400) as u64);
+        let policy = spfft::coordinator::CoalescePolicy {
+            max_hold_windows: rng.range(1, 5) as u32,
+            target_group: rng.range(2, 8),
+            min_backlog: rng.range(0, 4),
+            deadline: window * rng.range(2, 30) as u32,
+        };
+        // one plan of l levels serves all four kinds (c2c at 2^l, real
+        // at 2^(l+1)) — the same surface the service exposes
+        let l = rng.range(3, 7);
+        let plan = random_plan(rng, l);
+        let compiled: Vec<((TransformKind, usize), spfft::fft::CompiledPlan)> = ALL_KINDS
+            .iter()
+            .map(|&kind| {
+                let n = if kind.is_real() { 1usize << (l + 1) } else { 1usize << l };
+                ((kind, n), ex.compile_kind(&plan, n, true, kind))
+            })
+            .collect();
+        let count = rng.range(2, 60);
+        let mut t = 0u64;
+        let arrivals: Vec<((TransformKind, usize), usize, Duration)> = (0..count)
+            .map(|seq| {
+                t += rng.range(0, 350) as u64;
+                let kind = ALL_KINDS[rng.range(0, 4)];
+                let n = if kind.is_real() { 1usize << (l + 1) } else { 1usize << l };
+                ((kind, n), seq, Duration::from_micros(t))
+            })
+            .collect();
+        let inputs: Vec<SplitComplex> = arrivals
+            .iter()
+            .map(|&((kind, n), _, _)| {
+                let mut v = SplitComplex::random(n, rng.next_u64());
+                if kind == TransformKind::RealForward {
+                    v.im.iter_mut().for_each(|x| *x = 0.0);
+                }
+                v
+            })
+            .collect();
+        // key-affine split, preserving arrival order within each shard
+        let mut per: Vec<Vec<((TransformKind, usize), usize, Duration)>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for &a in &arrivals {
+            let s = router.route(a.0 .0, a.0 .1);
+            prop_assert!(s < shards, "route {s} out of range for {shards} shards");
+            prop_assert!(s == router.route(a.0 .0, a.0 .1), "routing not deterministic");
+            per[s].push(a);
+        }
+        let mut seen = vec![false; count];
+        for (shard, shard_arrivals) in per.into_iter().enumerate() {
+            if shard_arrivals.is_empty() {
+                continue;
+            }
+            let flushed = run_coalesce_sim(rng, policy, window, shard_arrivals);
+            let mut last_seq: std::collections::HashMap<(TransformKind, usize), usize> =
+                std::collections::HashMap::new();
+            for (at, g) in &flushed {
+                // bit-identical grouped execution on whatever groups
+                // this shard's coalescer formed
+                if g.items.len() >= 2 {
+                    let cp = compiled
+                        .iter()
+                        .find(|(key, _)| *key == g.key)
+                        .map(|(_, cp)| cp)
+                        .expect("group under unknown key");
+                    let group_inputs: Vec<&SplitComplex> =
+                        g.items.iter().map(|&(_, seq, _)| &inputs[seq]).collect();
+                    let mut buf = spfft::fft::BatchBuffer::new(g.key.1, group_inputs.len());
+                    buf.gather(&group_inputs);
+                    cp.run_batch(&mut buf);
+                    for (lane, &(_, seq, _)) in g.items.iter().enumerate() {
+                        prop_assert!(
+                            buf.scatter_lane(lane) == cp.run_on(&inputs[seq]),
+                            "shard {shard}: grouped lane {lane} (seq {seq}) diverges"
+                        );
+                    }
+                }
+                for &(key, seq, _) in &g.items {
+                    prop_assert!(key == g.key, "seq {seq} grouped under foreign key");
+                    prop_assert!(
+                        router.route(key.0, key.1) == shard,
+                        "seq {seq} escaped its key's shard"
+                    );
+                    prop_assert!(!seen[seq], "seq {seq} flushed twice across shards");
+                    seen[seq] = true;
+                    if let Some(&prev) = last_seq.get(&key) {
+                        prop_assert!(seq > prev, "shard {shard} key {key:?}: FIFO broken");
+                    }
+                    last_seq.insert(key, seq);
+                    let enq_off = arrivals[seq].2;
+                    prop_assert!(
+                        *at <= enq_off + policy.deadline,
+                        "seq {seq} held past deadline under sharded routing"
+                    );
+                }
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s), "requests lost across the fleet");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_batcher_conserves_items_in_order() {
     use spfft::coordinator::{BatchPolicy, Batcher};
     check("batcher-conservation", Config { cases: 24, ..Default::default() }, |rng| {
