@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         autotune: Some(at),
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })?;
 
     // Phase 1: calm traffic.

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })?;
 
     // 3. Mixed workload: random sizes, occasional validation.

@@ -138,6 +138,7 @@ fn trajectory_section(quick: bool) -> Trajectory {
         autotune: Some(at),
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .expect("service");
 

@@ -1,0 +1,180 @@
+//! Bench: price the panel marshal (the gather → scatter round trip).
+//!
+//! For n ∈ {64, 256, 1024} and B ∈ {2, 4, 16, 64}: measure
+//!
+//! * the marshal alone — `gather` into a pooled lane panel plus the
+//!   allocation-free `scatter_lane_into` back into each request's own
+//!   buffer, no execution (this is the data movement the cost model's
+//!   `marshal_ns` prices and `ExecMode` decisions charge to the panel);
+//! * the full panel path (marshal + `run_batch`) per transform;
+//! * the zero-copy scalar-sequential path (`run` in place per request);
+//!
+//! then report the panel-vs-sequential crossover batch per n next to
+//! the m1 simulator's predicted decision, and write
+//! `BENCH_marshal.json`. A small transform's marshal can exceed its
+//! entire arithmetic — the measured reason the mode decision is priced
+//! per (kind, n, B) instead of hard-wired at "2 or more".
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use spfft::cost::{exec_mode_for, CostModel, ExecMode, SimCost};
+use spfft::fft::{BatchBufferPool, Executor, SplitComplex};
+use spfft::kind::TransformKind;
+use spfft::planner::{plan as run_plan, Strategy};
+use spfft::util::bench::{black_box, fmt_ns};
+use spfft::util::json::{to_string as json_to_string, Json};
+use spfft::util::stats::median;
+
+const SIZES: [usize; 3] = [64, 256, 1024];
+const BATCHES: [usize; 4] = [2, 4, 16, 64];
+
+/// Median ns of `reps` timed executions of `f`.
+fn median_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    median(&samples)
+}
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("SPFFT_BENCH_QUICK").is_ok();
+    println!("== bench suite: marshal{} ==", if quick { " (quick)" } else { "" });
+
+    let reps = if quick { 15 } else { 51 };
+    let inner = if quick { 8 } else { 32 };
+    let mut pool = BatchBufferPool::new();
+    let mut jrows: Vec<Json> = Vec::new();
+    let mut crossovers: Vec<(usize, Option<usize>)> = Vec::new();
+
+    for &n in &SIZES {
+        let plan = run_plan(&mut SimCost::m1(n), &Strategy::DijkstraContextAware { k: 1 }).plan;
+        let mut ex = Executor::new();
+        let cp = ex.compile(&plan, n, true);
+        println!("n = {n}: plan {plan}");
+        let mut crossover: Option<usize> = None;
+
+        for &b in &BATCHES {
+            let inputs: Vec<SplitComplex> =
+                (0..b).map(|i| SplitComplex::random(n, 3 + i as u64)).collect();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            let mut outs = inputs.clone();
+
+            // Marshal alone: the round trip the panel pays and the
+            // scalar path never does.
+            let marshal_ns = median_ns(reps, || {
+                for _ in 0..inner {
+                    let mut buf = pool.acquire(n, b);
+                    buf.gather(&refs);
+                    for (lane, out) in outs.iter_mut().enumerate() {
+                        buf.scatter_lane_into(lane, out);
+                    }
+                    black_box(&outs);
+                    pool.release(buf);
+                }
+            }) / (inner * b) as f64;
+
+            // Full panel path, exactly the worker hot path.
+            let panel_ns = median_ns(reps, || {
+                for _ in 0..inner {
+                    let mut buf = pool.acquire(n, b);
+                    buf.gather(&refs);
+                    cp.run_batch(&mut buf);
+                    for (lane, out) in outs.iter_mut().enumerate() {
+                        buf.scatter_lane_into(lane, out);
+                    }
+                    black_box(&outs);
+                    pool.release(buf);
+                }
+            }) / (inner * b) as f64;
+
+            // Zero-copy scalar-sequential: in place, no staging at all.
+            let mut bufs = inputs.clone();
+            let scalar_ns = median_ns(reps, || {
+                for _ in 0..inner {
+                    for s in bufs.iter_mut() {
+                        cp.run(&mut s.re, &mut s.im);
+                    }
+                    black_box(&bufs);
+                }
+            }) / (inner * b) as f64;
+
+            let mut model = SimCost::m1(n);
+            let predicted = exec_mode_for(&mut model, TransformKind::Forward, &plan, b);
+            let predicted_marshal_ns = model.marshal_ns(b) / b as f64;
+            let panel_wins = panel_ns < scalar_ns;
+            if panel_wins && crossover.is_none() {
+                crossover = Some(b);
+            }
+            println!(
+                "  B={b:<3} marshal {:>9}/tx (m1 predicts {:>9}/tx)   panel {:>9}/tx   scalar {:>9}/tx   {} (m1 says {})",
+                fmt_ns(marshal_ns),
+                fmt_ns(predicted_marshal_ns),
+                fmt_ns(panel_ns),
+                fmt_ns(scalar_ns),
+                if panel_wins { "panel wins" } else { "scalar wins" },
+                predicted.label(),
+            );
+
+            let mut o = BTreeMap::new();
+            o.insert("n".into(), Json::Num(n as f64));
+            o.insert("b".into(), Json::Num(b as f64));
+            o.insert("marshal_ns_per_transform".into(), Json::Num(marshal_ns));
+            o.insert("predicted_marshal_ns_per_transform".into(), Json::Num(predicted_marshal_ns));
+            o.insert("panel_ns_per_transform".into(), Json::Num(panel_ns));
+            o.insert("scalar_ns_per_transform".into(), Json::Num(scalar_ns));
+            o.insert("panel_wins".into(), Json::Bool(panel_wins));
+            o.insert(
+                "m1_decision".into(),
+                Json::Str(
+                    match predicted {
+                        ExecMode::Panel => "panel",
+                        ExecMode::ScalarSequential => "scalar",
+                    }
+                    .into(),
+                ),
+            );
+            jrows.push(Json::Obj(o));
+        }
+        println!(
+            "  crossover: {}",
+            match crossover {
+                Some(b) => format!("panel from B={b}"),
+                None => "scalar at every measured B".to_string(),
+            }
+        );
+        crossovers.push((n, crossover));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("marshal".into()));
+    // Distinguishes a real run from the hand-authored schema example
+    // committed from a toolchain-less container — tooling should gate on
+    // this, not on the free-text provenance.
+    root.insert("measured".to_string(), Json::Bool(true));
+    root.insert("rows".to_string(), Json::Arr(jrows));
+    root.insert(
+        "crossover".to_string(),
+        Json::Arr(
+            crossovers
+                .iter()
+                .map(|(n, c)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("n".into(), Json::Num(*n as f64));
+                    o.insert(
+                        "panel_wins_from_b".into(),
+                        c.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let out = json_to_string(&Json::Obj(root));
+    std::fs::write("BENCH_marshal.json", &out).expect("writing BENCH_marshal.json");
+    println!("wrote BENCH_marshal.json");
+}

@@ -32,6 +32,7 @@ fn main() {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .expect("service");
         let t0 = Instant::now();

@@ -171,7 +171,7 @@ impl DriftDetector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::autotune::sampler::EdgeSample;
+    use crate::autotune::sampler::{EdgeSample, SampleSpan};
     use crate::cost::SimCost;
 
     fn setup(n: usize) -> (OnlineCost, DriftDetector, Wisdom) {
@@ -190,6 +190,7 @@ mod tests {
                 kind: crate::kind::TransformKind::Forward,
                 batch: 1,
                 isa: crate::isa::Isa::Scalar,
+                span: SampleSpan::Edge,
                 ns,
             });
         }
@@ -204,6 +205,7 @@ mod tests {
                 kind: crate::kind::TransformKind::Forward,
                 batch,
                 isa: crate::isa::Isa::Scalar,
+                span: SampleSpan::Edge,
                 ns,
             });
         }

@@ -51,8 +51,11 @@ pub mod wisdom2;
 
 pub use drift::{DriftDetector, DriftReport};
 pub use model::{batch_class, class_batch, CellEstimate, OnlineCost, BATCH_CLASSES};
-pub use replanner::{Autotuner, AutotuneStatus};
-pub use sampler::{trace_batch, trace_request, EdgeSample, SampleMode, TraceSampler};
+pub use replanner::{Autotuner, AutotuneStatus, ModeTable};
+pub use sampler::{
+    trace_batch, trace_request, trace_request_inplace, EdgeSample, SampleMode, SampleSpan,
+    TraceSampler,
+};
 pub use swap::{PlanSlot, VersionedPlan};
 pub use wisdom2::WisdomV2;
 
@@ -97,6 +100,14 @@ pub struct AutotuneConfig {
     /// so a re-plan at a batched regime starts from the amortized cost
     /// surface instead of the unbatched prior. Each must share `prior.n`.
     pub batched_priors: Vec<(usize, Wisdom)>,
+    /// Offline marshal (panel transpose) priors: `(batch class,
+    /// per-transform ns)` pairs, one direction of the gather/scatter
+    /// round trip — typically `SimCost::marshal_ns(class_batch(c)) /
+    /// class_batch(c)` from the same simulator the prior was harvested
+    /// on. Seeds the online model's per-class marshal store so the
+    /// published [`ModeTable`] starts on the calibrated flip point;
+    /// live `SampleSpan::Marshal` samples then move it at runtime.
+    pub marshal_priors: Vec<(usize, f64)>,
     /// Sample one request in `sample_period` (1 = every request).
     pub sample_period: u64,
     /// Relative deviation |observed − reference| / reference that marks a
@@ -143,6 +154,7 @@ impl AutotuneConfig {
             split_kinds: false,
             exec_isa: crate::isa::Isa::Scalar,
             batched_priors: Vec::new(),
+            marshal_priors: Vec::new(),
             sample_period: 64,
             drift_threshold: 0.25,
             drift_min_samples: 8,
@@ -171,6 +183,10 @@ impl fmt::Debug for AutotuneConfig {
             .field(
                 "batched_priors",
                 &self.batched_priors.iter().map(|(b, _)| *b).collect::<Vec<_>>(),
+            )
+            .field(
+                "marshal_priors",
+                &self.marshal_priors.iter().map(|(c, _)| *c).collect::<Vec<_>>(),
             )
             .field("sample_period", &self.sample_period)
             .field("drift_threshold", &self.drift_threshold)

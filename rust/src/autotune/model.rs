@@ -26,7 +26,7 @@ use crate::edge::{Context, EdgeType};
 use crate::isa::Isa;
 use crate::kind::TransformKind;
 
-use super::sampler::EdgeSample;
+use super::sampler::{EdgeSample, SampleSpan};
 
 /// A cell key: (edge, stage, predecessor context). Observations carry
 /// further axes — the transform kind and the codelet ISA — so the full
@@ -83,6 +83,15 @@ pub struct OnlineCost {
     /// and its scalar fallback are different machine code with different
     /// costs, and blending them would corrupt both surfaces.
     obs: HashMap<(Cell, usize, TransformKind, Isa), CellEstimate>,
+    /// Per-batch-class offline prior for the panel transpose (gather or
+    /// scatter, one direction), normalized **per transform** — seeded
+    /// from the simulator's `marshal_ns` so execution-mode decisions
+    /// start from the calibrated surface before any wall samples land.
+    marshal_prior: HashMap<usize, f64>,
+    /// Per-batch-class live marshal estimates (per-transform EWMA). The
+    /// transpose is kind-, plan-, and ISA-agnostic data movement, so a
+    /// single class axis suffices.
+    marshal_obs: HashMap<usize, CellEstimate>,
 }
 
 impl OnlineCost {
@@ -106,6 +115,8 @@ impl OnlineCost {
             prior: prior.cells.iter().map(|&(e, s, ctx, ns)| ((e, s, ctx), ns)).collect(),
             class_priors: HashMap::new(),
             obs: HashMap::new(),
+            marshal_prior: HashMap::new(),
+            marshal_obs: HashMap::new(),
         }
     }
 
@@ -198,9 +209,27 @@ impl OnlineCost {
         None
     }
 
+    /// Install the offline per-transform marshal prior for a batch
+    /// class (one direction of the panel transpose). Until live marshal
+    /// samples arrive at that class, [`CostModel::marshal_ns`] answers
+    /// from this instead of the cold strided-R2 proxy.
+    pub fn set_marshal_prior(&mut self, class: usize, ns_per_tx: f64) {
+        if ns_per_tx.is_finite() && ns_per_tx > 0.0 && class < BATCH_CLASSES {
+            self.marshal_prior.insert(class, ns_per_tx);
+        }
+    }
+
+    /// Raw live marshal estimate (per transform) at a batch class;
+    /// `None` until a marshal-span sample has landed there.
+    pub fn marshal_observation_at(&self, class: usize) -> Option<CellEstimate> {
+        self.marshal_obs.get(&class).copied()
+    }
+
     /// Fold one live sample into its (kind, cell, batch class),
     /// normalized per transform (inverse kinds fold onto the forward
-    /// slot unless the calibration split is on). Non-finite or
+    /// slot unless the calibration split is on). Marshal-span samples
+    /// route to the per-class transpose store and never touch edge
+    /// cells — data movement is not an algorithm edge. Non-finite or
     /// non-positive values (timer glitches) and zero batch sizes are
     /// discarded.
     pub fn observe(&mut self, sample: &EdgeSample) {
@@ -208,6 +237,19 @@ impl OnlineCost {
             return;
         }
         let per_tx = sample.ns / sample.batch as f64;
+        if sample.span == SampleSpan::Marshal {
+            let class = batch_class(sample.batch);
+            match self.marshal_obs.get_mut(&class) {
+                Some(est) => {
+                    est.mean = self.alpha * per_tx + (1.0 - self.alpha) * est.mean;
+                    est.count += 1;
+                }
+                None => {
+                    self.marshal_obs.insert(class, CellEstimate { mean: per_tx, count: 1 });
+                }
+            }
+            return;
+        }
         let key = (
             (sample.edge, sample.stage, sample.ctx),
             batch_class(sample.batch),
@@ -448,6 +490,29 @@ impl CostModel for OnlineCost {
         b as f64 * self.estimate_kind_at((edge, stage, ctx), batch_class(b), self.focus_kind)
     }
 
+    /// Whole-batch panel transpose estimate (one direction): the live
+    /// per-transform EWMA at `b`'s batch class blended over the
+    /// installed offline prior, scaled back to the whole batch. With
+    /// neither, the trait's cold strided-R2 proxy answers.
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        let b = b.max(1);
+        let class = batch_class(b);
+        let prior = self.marshal_prior.get(&class).copied();
+        let obs = self.marshal_obs.get(&class).copied();
+        let per_tx = match (prior, obs) {
+            (Some(p), Some(o)) => {
+                let c = o.count as f64 / (o.count as f64 + self.blend_samples);
+                p * (1.0 - c) + o.mean * c
+            }
+            (Some(p), None) => p,
+            (None, Some(o)) => o.mean,
+            (None, None) => {
+                return b as f64 * self.edge_ns(EdgeType::R2, 0, Context::Start);
+            }
+        };
+        b as f64 * per_tx
+    }
+
     /// Surface queries answer from the per-(kind, cell, batch-class)
     /// store *directly* — no adapter stacking, no focus indirection: the
     /// re-planner names the regime it searches (the modal batch class,
@@ -501,19 +566,19 @@ mod tests {
     }
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa: Isa::Scalar, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa: Isa::Scalar, span: SampleSpan::Edge, ns }
     }
 
     fn sample_b(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, isa: Isa::Scalar, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, isa: Isa::Scalar, span: SampleSpan::Edge, ns }
     }
 
     fn sample_k(edge: EdgeType, stage: usize, ctx: Context, kind: TransformKind, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind, batch: 1, isa: Isa::Scalar, ns }
+        EdgeSample { edge, stage, ctx, kind, batch: 1, isa: Isa::Scalar, span: SampleSpan::Edge, ns }
     }
 
     fn sample_i(edge: EdgeType, stage: usize, ctx: Context, isa: Isa, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa, ns }
+        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch: 1, isa, span: SampleSpan::Edge, ns }
     }
 
     #[test]
@@ -822,6 +887,48 @@ mod tests {
         let (_, _, per) = exported.iter().find(|(c, _, _)| *c == cell).unwrap();
         assert_eq!(per.len(), 1);
         assert_eq!(per[0].2, Isa::Neon);
+    }
+
+    #[test]
+    fn marshal_samples_feed_the_transpose_store_not_the_cells() {
+        let mut model = m1_model(256);
+        let proxy = 16.0 * model.edge_ns(EdgeType::R2, 0, Context::Start);
+        // no prior, no samples: the trait's cold strided-R2 proxy
+        assert!((model.marshal_ns(16) - proxy).abs() < 1e-9);
+        // marshal samples land in the transpose store, not any edge cell
+        for _ in 0..200 {
+            model.observe(&EdgeSample::marshal(TransformKind::Forward, 16, Isa::Scalar, 3200.0));
+        }
+        assert_eq!(model.total_samples(), 0, "marshal leaked into edge cells");
+        let est = model.marshal_observation_at(batch_class(16)).unwrap();
+        assert_eq!(est.count, 200);
+        // whole-batch read: 16 x the 200 ns/tx the samples converged to
+        assert!((model.marshal_ns(16) - 3200.0).abs() < 1.0);
+        // other classes still answer from the proxy
+        let proxy2 = 2.0 * model.edge_ns(EdgeType::R2, 0, Context::Start);
+        assert!((model.marshal_ns(2) - proxy2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn marshal_priors_seed_unobserved_classes_and_blend_with_samples() {
+        let mut model = m1_model(256);
+        model.set_marshal_prior(batch_class(16), 50.0); // per transform
+        assert!((model.marshal_ns(16) - 16.0 * 50.0).abs() < 1e-9);
+        // live samples blend over (and eventually dominate) the prior
+        for _ in 0..200 {
+            model.observe(&EdgeSample::marshal(TransformKind::Forward, 16, Isa::Scalar, 16.0 * 150.0));
+        }
+        let est = model.marshal_ns(16);
+        assert!(est > 16.0 * 140.0, "prior dominated 200 samples: {est}");
+        // garbage marshal samples are discarded like garbage edge samples
+        model.observe(&EdgeSample::marshal(TransformKind::Forward, 0, Isa::Scalar, 5.0));
+        model.observe(&EdgeSample::marshal(TransformKind::Forward, 16, Isa::Scalar, f64::NAN));
+        model.observe(&EdgeSample::marshal(TransformKind::Forward, 16, Isa::Scalar, -4.0));
+        assert_eq!(model.marshal_observation_at(batch_class(16)).unwrap().count, 200);
+        // invalid priors are rejected
+        model.set_marshal_prior(BATCH_CLASSES, 10.0);
+        model.set_marshal_prior(2, f64::NAN);
+        assert_eq!(model.marshal_observation_at(2), None);
     }
 
     #[test]

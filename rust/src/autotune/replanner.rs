@@ -23,18 +23,18 @@
 //! On shutdown the learned weights persist as wisdom v2 when
 //! `wisdom_path` is configured.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cost::PlanningSurface;
+use crate::cost::{exec_mode_for, ExecMode, PlanningSurface};
 use crate::graph::PlanningGraph;
 use crate::plan::Plan;
 
 use super::drift::DriftDetector;
 use super::model::{batch_class, class_batch, OnlineCost, BATCH_CLASSES};
-use super::sampler::{EdgeSample, SampleMode, TraceSampler};
+use super::sampler::{EdgeSample, SampleMode, SampleSpan, TraceSampler};
 use super::swap::PlanSlot;
 use super::wisdom2::WisdomV2;
 use super::AutotuneConfig;
@@ -69,6 +69,59 @@ pub struct AutotuneStatus {
     pub kind: crate::kind::TransformKind,
 }
 
+/// Lock-free published execution-mode table: one [`ExecMode`] per batch
+/// class, recomputed by the autotune loop at every drift-check point
+/// from the blended online model — so live marshal (and edge) samples
+/// can move the panel flip point at runtime without a plan swap.
+/// Workers read it when they refresh their plan snapshot, the same
+/// cadence plan swaps propagate at.
+pub struct ModeTable {
+    /// 0 = scalar-sequential, 1 = panel.
+    modes: [AtomicU8; BATCH_CLASSES],
+}
+
+impl ModeTable {
+    /// All-scalar table (the safe startup default: scalar is never
+    /// wrong, only sometimes slower).
+    fn new() -> ModeTable {
+        ModeTable { modes: std::array::from_fn(|_| AtomicU8::new(0)) }
+    }
+
+    fn set(&self, class: usize, mode: ExecMode) {
+        let v = match mode {
+            ExecMode::ScalarSequential => 0,
+            ExecMode::Panel => 1,
+        };
+        self.modes[class.min(BATCH_CLASSES - 1)].store(v, Ordering::Relaxed);
+    }
+
+    /// Published mode for a batch class.
+    pub fn get(&self, class: usize) -> ExecMode {
+        match self.modes[class.min(BATCH_CLASSES - 1)].load(Ordering::Relaxed) {
+            1 => ExecMode::Panel,
+            _ => ExecMode::ScalarSequential,
+        }
+    }
+
+    /// The whole table as plain values (metrics / status surfaces).
+    pub fn snapshot(&self) -> [ExecMode; BATCH_CLASSES] {
+        std::array::from_fn(|c| self.get(c))
+    }
+}
+
+/// Re-price the panel-vs-scalar decision for every batch class under
+/// the model's current blended estimates and publish the result.
+fn publish_modes(
+    table: &ModeTable,
+    model: &mut OnlineCost,
+    kind: crate::kind::TransformKind,
+    plan: &Plan,
+) {
+    for class in 0..BATCH_CLASSES {
+        table.set(class, exec_mode_for(model, kind, plan, class_batch(class)));
+    }
+}
+
 #[derive(Default)]
 struct Counters {
     stop: AtomicBool,
@@ -90,6 +143,7 @@ pub struct Autotuner {
     slot: Arc<PlanSlot>,
     sampler: Arc<TraceSampler>,
     mode: SampleMode,
+    modes: Arc<ModeTable>,
     counters: Arc<Counters>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -131,6 +185,12 @@ impl Autotuner {
                 eprintln!("autotune: ignoring batched prior (n={} vs {n})", w.n);
             }
         }
+        // Marshal priors seed the per-class transpose store, so the
+        // first published mode table already sits on the calibrated
+        // panel flip point instead of the cold strided-R2 proxy.
+        for &(class, ns) in &config.marshal_priors {
+            model.set_marshal_prior(class, ns);
+        }
         if let Some(path) = &config.wisdom_path {
             if path.exists() {
                 match WisdomV2::load(path) {
@@ -160,23 +220,26 @@ impl Autotuner {
         );
         let predicted = PlanningSurface::for_kind(config.kind)
             .plan_objective_ns(&mut model, &initial_plan);
-        let slot = Arc::new(PlanSlot::new(initial_plan, predicted));
+        let slot = Arc::new(PlanSlot::new(initial_plan.clone(), predicted));
         let (sampler, rx) = TraceSampler::new(config.sample_period, config.sample_queue_depth);
         let sampler = Arc::new(sampler);
         let counters = Arc::new(Counters::default());
+        let modes = Arc::new(ModeTable::new());
+        publish_modes(&modes, &mut model, config.kind, &initial_plan);
 
         let mode = config.mode.clone();
         let kind = config.kind;
         let handle = {
             let slot = slot.clone();
             let counters = counters.clone();
+            let modes = modes.clone();
             std::thread::Builder::new()
                 .name(format!("spfft-autotune-{n}"))
-                .spawn(move || run_loop(config, l, model, detector, rx, slot, counters))
+                .spawn(move || run_loop(config, l, model, detector, rx, slot, modes, counters))
                 .expect("spawning autotune thread")
         };
 
-        Autotuner { n, kind, slot, sampler, mode, counters, handle: Mutex::new(Some(handle)) }
+        Autotuner { n, kind, slot, sampler, mode, modes, counters, handle: Mutex::new(Some(handle)) }
     }
 
     /// FFT size this autotuner drives.
@@ -202,6 +265,12 @@ impl Autotuner {
     /// How sampled values are produced.
     pub fn mode(&self) -> &SampleMode {
         &self.mode
+    }
+
+    /// The published per-batch-class execution-mode table workers
+    /// consult when refreshing their plan snapshot.
+    pub fn mode_table(&self) -> &Arc<ModeTable> {
+        &self.modes
     }
 
     /// Current status snapshot.
@@ -247,6 +316,7 @@ fn run_loop(
     mut detector: DriftDetector,
     rx: Receiver<Vec<EdgeSample>>,
     slot: Arc<PlanSlot>,
+    modes: Arc<ModeTable>,
     counters: Arc<Counters>,
 ) {
     let n = config.prior.n;
@@ -290,6 +360,10 @@ fn run_loop(
             }
         }
         class_counts = [0u64; BATCH_CLASSES];
+        // Re-publish the execution-mode table at every check point,
+        // before the drift gate: marshal observations can move the
+        // panel flip without any edge-weight drift or regime shift.
+        publish_modes(&modes, &mut model, config.kind, &slot.current().plan);
         let report = detector.check(&model);
         // Re-plan on weight drift OR on a batch-regime shift: when the
         // traffic's modal class moves away from the class the active
@@ -345,6 +419,9 @@ fn run_loop(
             if let Some(cache) = &config.cache {
                 cache.swap(n, "autotune", &config.prior.source, result.plan.clone());
             }
+            // The mode decision is plan-shape-sensitive (fused-terminal
+            // vs radix-tail): re-price it for the plan we just published.
+            publish_modes(&modes, &mut model, config.kind, &result.plan);
             if let Some(obs) = &config.observer {
                 obs.record_now(crate::obs::EventKind::Swap {
                     version,
@@ -423,6 +500,7 @@ mod tests {
                     kind: crate::kind::TransformKind::Forward,
                     batch: 1,
                     isa: crate::isa::Isa::Scalar,
+                    span: SampleSpan::Edge,
                     ns,
                 };
                 ctx = Context::After(e);
@@ -544,6 +622,34 @@ mod tests {
         let status = tuner.status();
         assert_eq!(status.plan_batch, 1);
         assert_eq!(status.swaps, 0);
+        tuner.stop();
+    }
+
+    #[test]
+    fn mode_table_starts_calibrated_and_marshal_samples_move_it() {
+        let n = 256;
+        let mut cfg = tight_config(n);
+        // Amortized batched prior at B=16 plus a near-free transpose:
+        // the first published table already says Panel at class 4.
+        let w16 = Wisdom::harvest_batched(&mut SimCost::m1(n), "m1", 16);
+        cfg.batched_priors = vec![(16, w16)];
+        cfg.marshal_priors = vec![(batch_class(16), 0.001)];
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        assert_eq!(tuner.mode_table().get(0), ExecMode::ScalarSequential, "b=1 is never a panel");
+        assert_eq!(tuner.mode_table().get(batch_class(16)), ExecMode::Panel);
+        // Live marshal samples price the transpose as ruinous: the next
+        // check point must flip the published mode back to scalar —
+        // with zero edge-weight drift and zero plan swaps involved.
+        let expensive =
+            EdgeSample::marshal(crate::kind::TransformKind::Forward, 16, crate::isa::Isa::Scalar, 1e9);
+        for _ in 0..6 {
+            tuner.sampler().submit(vec![expensive]);
+        }
+        assert!(
+            wait_for(|| tuner.mode_table().get(batch_class(16)) == ExecMode::ScalarSequential),
+            "marshal samples never moved the published mode"
+        );
+        assert_eq!(tuner.status().swaps, 0);
         tuner.stop();
     }
 

@@ -18,6 +18,27 @@ use crate::fft::{CompiledPlan, SplitComplex};
 use crate::isa::Isa;
 use crate::kind::TransformKind;
 
+/// Which pipeline span a sample measures.
+///
+/// The flight recorder and online model consume one sample stream, but
+/// not everything on the serving hot path is a plan step: grouped
+/// (panel) execution transposes request buffers in and out of the lane
+/// panels, and that marshal time must be *observed* (so `OnlineCost`
+/// can move the [`crate::cost::ExecMode`] flip at runtime) without
+/// polluting the per-edge catalog cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleSpan {
+    /// One plan step (c2c pass or RU boundary pass) — a catalog cell.
+    Edge,
+    /// The panel marshal round trip (gather + scatter) of one grouped
+    /// execution: `batch` is the group's live size, `ns` covers the
+    /// whole round trip (both directions). The edge/stage/ctx fields
+    /// carry fixed placeholders ([`EdgeSample::marshal`]); consumers
+    /// key marshal samples by batch class alone and must exclude them
+    /// from edge attribution.
+    Marshal,
+}
+
 /// One observed edge execution in its live context.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EdgeSample {
@@ -40,12 +61,34 @@ pub struct EdgeSample {
     pub isa: Isa,
     /// Observed time in nanoseconds (for the whole batch).
     pub ns: f64,
+    /// Which pipeline span this sample measures (plan step vs panel
+    /// marshal). Everything before the marshal span existed is
+    /// [`SampleSpan::Edge`].
+    pub span: SampleSpan,
 }
 
 impl EdgeSample {
     /// Per-transform nanoseconds (`ns` normalized by the batch width).
     pub fn per_transform_ns(&self) -> f64 {
         self.ns / self.batch.max(1) as f64
+    }
+
+    /// A marshal-span sample: the observed gather+scatter round trip of
+    /// one grouped execution of `batch` requests. The edge/stage/ctx
+    /// placeholders are fixed (RU @ 0, `Start`) so marshal samples
+    /// never collide with a live catalog cell on any keyed store that
+    /// forgets to check the span.
+    pub fn marshal(kind: TransformKind, batch: usize, isa: Isa, ns: f64) -> EdgeSample {
+        EdgeSample {
+            edge: EdgeType::RU,
+            stage: 0,
+            ctx: Context::Start,
+            kind,
+            batch,
+            isa,
+            ns,
+            span: SampleSpan::Marshal,
+        }
     }
 }
 
@@ -150,9 +193,33 @@ pub fn trace_request(
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx),
         };
-        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, isa, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, isa, ns, span: SampleSpan::Edge });
         ctx = Context::After(edge);
     })
+}
+
+/// In-place variant of [`trace_request`] for the zero-copy scalar path:
+/// the request's own buffer is transformed where it sits (no clone, no
+/// scratch). Arithmetic and samples are identical to [`trace_request`] —
+/// only the allocation differs.
+pub fn trace_request_inplace(
+    cp: &CompiledPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    mode: &SampleMode,
+    out: &mut Vec<EdgeSample>,
+) {
+    let kind = cp.kind;
+    let isa = cp.isa();
+    let mut ctx = Context::Start;
+    cp.run_traced(re, im, &mut |edge, stage, measured_ns| {
+        let ns = match mode {
+            SampleMode::Wallclock => measured_ns,
+            SampleMode::Oracle(f) => f(edge, stage, ctx),
+        };
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, isa, ns, span: SampleSpan::Edge });
+        ctx = Context::After(edge);
+    });
 }
 
 /// Batched analogue of [`trace_request`]: execute a gathered batch via
@@ -177,7 +244,7 @@ pub fn trace_batch(
             SampleMode::Wallclock => measured_ns,
             SampleMode::Oracle(f) => f(edge, stage, ctx) * b as f64,
         };
-        out.push(EdgeSample { edge, stage, ctx, kind, batch: b, isa, ns });
+        out.push(EdgeSample { edge, stage, ctx, kind, batch: b, isa, ns, span: SampleSpan::Edge });
         ctx = Context::After(edge);
     });
 }
@@ -285,8 +352,17 @@ mod tests {
     }
 
     #[test]
+    fn marshal_samples_carry_the_span_and_fixed_placeholders() {
+        let s = EdgeSample::marshal(TransformKind::Forward, 8, Isa::Scalar, 400.0);
+        assert_eq!(s.span, SampleSpan::Marshal);
+        assert_eq!((s.edge, s.stage, s.ctx), (EdgeType::RU, 0, Context::Start));
+        assert_eq!(s.per_transform_ns(), 50.0);
+    }
+
+    #[test]
     fn trace_batch_oracle_scales_by_batch_size() {
-        let n = 64;
+        let n = 32; // R4,R4,R2 = 5 stages
+
         let mut ex = Executor::new();
         let cp = ex.compile(&Plan::parse("R4,R4,R2").unwrap(), n, true);
         let mode = SampleMode::Oracle(Arc::new(|_, _, _| 10.0));
@@ -301,7 +377,8 @@ mod tests {
 
     #[test]
     fn oracle_mode_reports_oracle_values() {
-        let n = 64;
+        let n = 32; // R4,R4,R2 = 5 stages
+
         let mut ex = Executor::new();
         let cp = ex.compile(&Plan::parse("R4,R4,R2").unwrap(), n, true);
         let mode = SampleMode::Oracle(Arc::new(|e: EdgeType, s: usize, _ctx| {

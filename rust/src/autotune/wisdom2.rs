@@ -411,7 +411,7 @@ impl WisdomV2 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::autotune::sampler::EdgeSample;
+    use crate::autotune::sampler::{EdgeSample, SampleSpan};
     use crate::cost::SimCost;
 
     fn model_with_samples(n: usize) -> (OnlineCost, Wisdom) {
@@ -423,6 +423,7 @@ mod tests {
                     edge: e,
                     stage: s,
                     ctx,
+                    span: SampleSpan::Edge,
                     kind: TransformKind::Forward,
                     batch: 1,
                     isa: Isa::Scalar,
@@ -456,6 +457,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Forward,
                 batch: 16,
                 isa: Isa::Scalar,
@@ -529,6 +531,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Forward,
                 batch: 1,
                 isa: Isa::Scalar,
@@ -656,6 +659,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Forward,
                 batch: 1,
                 isa: Isa::Neon,
@@ -690,6 +694,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Inverse,
                 batch: 1,
                 isa: Isa::Scalar,
@@ -728,6 +733,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Forward,
                 batch: 1,
                 isa: Isa::Scalar,
@@ -737,6 +743,7 @@ mod tests {
                 edge: e,
                 stage: s,
                 ctx,
+                span: SampleSpan::Edge,
                 kind: TransformKind::Inverse,
                 batch: 1,
                 isa: Isa::Scalar,

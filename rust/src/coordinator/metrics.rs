@@ -12,6 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::cost::ExecMode;
 use crate::kind::{TransformKind, KINDS};
 
 /// Number of log2 latency buckets (1 ns .. the 2^30 ns saturation bucket).
@@ -63,6 +64,18 @@ pub struct Metrics {
     /// Summed / maximum wall age of held groups at flush (ns).
     held_age_ns_total: AtomicU64,
     held_age_ns_max: AtomicU64,
+    /// Groups executed through the panel (gather → batched kernel →
+    /// scatter) path vs. scalar-sequential in place. Together they sum
+    /// to `groups` on the native backend; the split is the observable
+    /// trace of the per-(kind, n, B) execution-mode decision.
+    exec_panel_groups: AtomicU64,
+    exec_scalar_groups: AtomicU64,
+    /// Requests carried by each execution path.
+    exec_panel_requests: AtomicU64,
+    exec_scalar_requests: AtomicU64,
+    /// Total wall time spent marshalling (gather + scatter around the
+    /// panel kernels) — the data-movement cost the mode decision prices.
+    marshal_ns_total: AtomicU64,
     busy_ns: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     /// Exact maximum latency seen (ns) — the histogram alone cannot
@@ -116,6 +129,16 @@ pub struct MetricsSnapshot {
     /// Mean / maximum wall age of held groups at flush.
     pub mean_held_age: Duration,
     pub max_held_age: Duration,
+    /// Groups executed on the panel (gather/batched/scatter) path.
+    pub exec_panel_groups: u64,
+    /// Groups executed scalar-sequentially in place (no marshal).
+    pub exec_scalar_groups: u64,
+    /// Requests carried by the panel path.
+    pub exec_panel_requests: u64,
+    /// Requests carried by the scalar-sequential path.
+    pub exec_scalar_requests: u64,
+    /// Total wall time spent marshalling panels (gather + scatter).
+    pub marshal_time: Duration,
     /// Total worker busy time.
     pub busy: Duration,
     pub latency_p50: Duration,
@@ -226,6 +249,31 @@ impl Metrics {
         self.held_age_ns_max.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Record which execution path a native group of `size` requests
+    /// actually took. Every native group reports exactly once, so
+    /// `exec_panel_groups + exec_scalar_groups` equals the native share
+    /// of `groups` and the split is auditable against the mode table.
+    pub fn on_exec_mode(&self, mode: ExecMode, size: usize) {
+        let size = size.max(1) as u64;
+        match mode {
+            ExecMode::Panel => {
+                self.exec_panel_groups.fetch_add(1, Ordering::Relaxed);
+                self.exec_panel_requests.fetch_add(size, Ordering::Relaxed);
+            }
+            ExecMode::ScalarSequential => {
+                self.exec_scalar_groups.fetch_add(1, Ordering::Relaxed);
+                self.exec_scalar_requests.fetch_add(size, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record wall time spent marshalling one panel round trip (the
+    /// gather into lanes plus every scatter back out).
+    pub fn on_marshal(&self, spent: Duration) {
+        let ns = spent.as_nanos().min(u64::MAX as u128) as u64;
+        self.marshal_ns_total.fetch_add(ns, Ordering::Relaxed);
+    }
+
     fn percentile(&self, counts: &[u64; BUCKETS], total: u64, max_ns: u64, p: f64) -> Duration {
         if total == 0 {
             return Duration::ZERO;
@@ -302,6 +350,11 @@ impl Metrics {
                 Duration::from_nanos(held_total_ns / coalesced_flushes)
             },
             max_held_age: Duration::from_nanos(self.held_age_ns_max.load(Ordering::Relaxed)),
+            exec_panel_groups: self.exec_panel_groups.load(Ordering::Relaxed),
+            exec_scalar_groups: self.exec_scalar_groups.load(Ordering::Relaxed),
+            exec_panel_requests: self.exec_panel_requests.load(Ordering::Relaxed),
+            exec_scalar_requests: self.exec_scalar_requests.load(Ordering::Relaxed),
+            marshal_time: Duration::from_nanos(self.marshal_ns_total.load(Ordering::Relaxed)),
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
             latency_p50: self.percentile(&counts, total, max_ns, 0.50),
             latency_p95: self.percentile(&counts, total, max_ns, 0.95),
@@ -352,6 +405,11 @@ impl MetricsSnapshot {
             singleton_pairings: 0,
             mean_held_age: Duration::ZERO,
             max_held_age: Duration::ZERO,
+            exec_panel_groups: 0,
+            exec_scalar_groups: 0,
+            exec_panel_requests: 0,
+            exec_scalar_requests: 0,
+            marshal_time: Duration::ZERO,
             busy: Duration::ZERO,
             latency_p50: Duration::ZERO,
             latency_p95: Duration::ZERO,
@@ -384,6 +442,11 @@ impl MetricsSnapshot {
             out.singleton_pairings += s.singleton_pairings;
             held_age_total += s.mean_held_age * s.coalesced_flushes as u32;
             out.max_held_age = out.max_held_age.max(s.max_held_age);
+            out.exec_panel_groups += s.exec_panel_groups;
+            out.exec_scalar_groups += s.exec_scalar_groups;
+            out.exec_panel_requests += s.exec_panel_requests;
+            out.exec_scalar_requests += s.exec_scalar_requests;
+            out.marshal_time += s.marshal_time;
             out.busy += s.busy;
             out.latency_p50 = out.latency_p50.max(s.latency_p50);
             out.latency_p95 = out.latency_p95.max(s.latency_p95);
@@ -469,6 +532,32 @@ mod tests {
         assert_eq!(s.singleton_pairings, 1);
         assert_eq!(s.mean_held_age, Duration::from_micros(400));
         assert_eq!(s.max_held_age, Duration::from_micros(600));
+    }
+
+    #[test]
+    fn exec_mode_split_and_marshal_time_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.exec_panel_groups, 0);
+        assert_eq!(s.exec_scalar_groups, 0);
+        assert_eq!(s.marshal_time, Duration::ZERO);
+        m.on_exec_mode(ExecMode::Panel, 8);
+        m.on_exec_mode(ExecMode::Panel, 4);
+        m.on_exec_mode(ExecMode::ScalarSequential, 1);
+        m.on_exec_mode(ExecMode::ScalarSequential, 3);
+        m.on_marshal(Duration::from_nanos(700));
+        m.on_marshal(Duration::from_nanos(300));
+        let s = m.snapshot();
+        assert_eq!(s.exec_panel_groups, 2);
+        assert_eq!(s.exec_panel_requests, 12);
+        assert_eq!(s.exec_scalar_groups, 2);
+        assert_eq!(s.exec_scalar_requests, 4);
+        assert_eq!(s.marshal_time, Duration::from_nanos(1000));
+        // the split aggregates across shards like every other counter
+        let agg = MetricsSnapshot::aggregate(&[s.clone(), s.clone()]);
+        assert_eq!(agg.exec_panel_groups, 4);
+        assert_eq!(agg.exec_scalar_requests, 8);
+        assert_eq!(agg.marshal_time, Duration::from_nanos(2000));
     }
 
     #[test]

@@ -41,5 +41,5 @@ pub use batcher::{
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use plancache::PlanCache;
-pub use service::{Backend, FftService, Rejected, ServiceConfig};
+pub use service::{Backend, ExecModePolicy, FftService, Rejected, ServiceConfig};
 pub use shard::{ShardRouter, ShardedService};

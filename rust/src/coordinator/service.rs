@@ -38,7 +38,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::autotune::{trace_batch, trace_request, Autotuner, AutotuneConfig, AutotuneStatus};
+use crate::autotune::{
+    trace_batch, trace_request_inplace, Autotuner, AutotuneConfig, AutotuneStatus, EdgeSample,
+    SampleMode,
+};
+use crate::cost::{
+    batch_class, class_batch, exec_mode_for, CostModel, ExecMode, SimCost, BATCH_CLASSES,
+};
 use crate::fft::{BatchBufferPool, Executor, SplitComplex};
 use crate::kind::TransformKind;
 use crate::obs::{EventKind, Observer, StageTime};
@@ -100,6 +106,47 @@ pub struct ServiceConfig {
     /// → swap audit trail interleaves with the serving events. `None`
     /// costs nothing on the request path.
     pub observer: Option<Arc<Observer>>,
+    /// Execution-mode policy for native same-(kind, n) groups: `Auto`
+    /// (the default) prices the panel round trip against sequential
+    /// in-place execution per batch class and takes the cheaper path;
+    /// the forced modes pin one path for every group.
+    pub exec_mode: ExecModePolicy,
+}
+
+/// How the service picks each native same-(kind, n) group's execution
+/// path. The panel path (gather into a lane-blocked buffer → batched
+/// kernels → scatter each lane back out) amortizes twiddle loads across
+/// the group but pays a two-way transpose; the scalar path runs each
+/// request sequentially in place in its own buffer and moves nothing.
+/// Which one wins depends on (kind, n, B) — the cost model prices both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecModePolicy {
+    /// Price the panel round trip against sequential in-place scalar
+    /// execution per (kind, n, batch class) on the cost model and take
+    /// the cheaper path. With autotuning on, the tuner's live marshal
+    /// and edge samples re-price the decision at runtime.
+    #[default]
+    Auto,
+    /// Always take the panel path for groups of two or more (the
+    /// pre-pricing behavior). Singletons still run scalar: lane padding
+    /// would waste arithmetic with nothing to amortize it against.
+    ForcePanel,
+    /// Always execute scalar-sequentially in place (never marshal).
+    ForceScalar,
+}
+
+impl std::str::FromStr for ExecModePolicy {
+    type Err = String;
+
+    /// CLI spelling: `auto` | `panel` | `scalar`.
+    fn from_str(s: &str) -> std::result::Result<ExecModePolicy, String> {
+        match s {
+            "auto" => Ok(ExecModePolicy::Auto),
+            "panel" => Ok(ExecModePolicy::ForcePanel),
+            "scalar" => Ok(ExecModePolicy::ForceScalar),
+            other => Err(format!("unknown exec mode {other:?} (expected auto|panel|scalar)")),
+        }
+    }
 }
 
 /// Typed submission rejection. These replace the old string bails so
@@ -240,6 +287,18 @@ impl FftService {
                 // detect; point the online model's ISA slot at the same
                 // backend so the traced samples land where planning reads.
                 at.exec_isa = Executor::new().isa();
+                // Seed the tuner's marshal prior from the m1 sim model
+                // when the caller gave none: the published mode table
+                // then starts from the same priced flip point the static
+                // per-entry tables use, and live marshal samples refine
+                // it from there instead of from nothing.
+                if at.marshal_priors.is_empty() {
+                    let mut sim = SimCost::m1(at.prior.n);
+                    for class in 1..BATCH_CLASSES {
+                        let b = class_batch(class);
+                        at.marshal_priors.push((class, sim.marshal_ns(b) / b as f64));
+                    }
+                }
                 (Some(Arc::new(Autotuner::start(at, initial))), true)
             }
         };
@@ -356,7 +415,7 @@ impl FftService {
             Rejected::Invalid(_) => self.metrics.on_rejected_invalid(),
         }
         if let Some(obs) = &self.observer {
-            obs.record(EventKind::Rejected { kind, n, reason: why.reason().to_string() });
+            obs.record_now(EventKind::Rejected { kind, n, reason: why.reason().to_string() });
         }
         why
     }
@@ -432,12 +491,47 @@ impl Drop for FftService {
 }
 
 /// One compiled serving entry: request-buffer size + kind + the
-/// compiled plan + the plan version it compiled under.
+/// compiled plan + the plan version it compiled under + the execution
+/// mode chosen for each batch class of this (n, kind) workload.
 struct CompiledEntry {
     n: usize,
     kind: TransformKind,
     cp: crate::fft::CompiledPlan,
     version: u64,
+    /// Per-batch-class execution path ([`crate::cost::batch_class`]
+    /// indexing). Derived from the policy at build time and refreshed
+    /// alongside plan swaps; under `Auto` with autotuning on, the
+    /// tuned-size c2c entries track the tuner's live mode table.
+    modes: [ExecMode; BATCH_CLASSES],
+}
+
+/// The execution-mode table an entry starts from. Forced policies pin
+/// every class (class 0 — singletons — always runs scalar: a one-lane
+/// panel pads three dead lanes and moves data for nothing). `Auto`
+/// prices each class's panel round trip against sequential scalar
+/// execution on the m1 sim model of the entry's c2c core size
+/// (`model_n`); [`exec_mode_for`] doubles the marshal bytes for real
+/// kinds, whose request buffers are twice the core.
+fn static_mode_table(
+    policy: ExecModePolicy,
+    kind: TransformKind,
+    plan: &Plan,
+    model_n: usize,
+) -> [ExecMode; BATCH_CLASSES] {
+    match policy {
+        ExecModePolicy::ForceScalar => [ExecMode::ScalarSequential; BATCH_CLASSES],
+        ExecModePolicy::ForcePanel => std::array::from_fn(|class| {
+            if class == 0 {
+                ExecMode::ScalarSequential
+            } else {
+                ExecMode::Panel
+            }
+        }),
+        ExecModePolicy::Auto => {
+            let mut model = SimCost::m1(model_n);
+            std::array::from_fn(|class| exec_mode_for(&mut model, kind, plan, class_batch(class)))
+        }
+    }
 }
 
 enum WorkerBackend {
@@ -449,6 +543,10 @@ enum WorkerBackend {
         /// Recycled batch-buffer allocations (worker-owned; the group
         /// hot loop is allocation-free once warm).
         pool: BatchBufferPool,
+        /// The configured execution-mode policy; `refresh` re-derives
+        /// entry mode tables under it when plans swap or the tuner's
+        /// published table moves.
+        policy: ExecModePolicy,
     },
     Pjrt {
         registry: crate::runtime::Registry,
@@ -463,17 +561,38 @@ impl WorkerBackend {
     /// (c2c entries at the tuned n, real entries at 2n — they share the
     /// swapped c2c arrangement).
     fn refresh(&mut self, tuner: &Autotuner) {
-        let WorkerBackend::Native { ex, compiled, .. } = self else { return };
+        let WorkerBackend::Native { ex, compiled, policy, .. } = self else { return };
         let current = tuner.slot().current();
+        // The tuner's mode table can move without a plan swap (live
+        // marshal samples re-price the panel round trip at the drift
+        // cadence), so under `Auto` the tuned-size c2c entries re-read
+        // the published table on every refresh — a handful of relaxed
+        // atomic loads, still between batches only.
+        let tuned_modes =
+            matches!(policy, ExecModePolicy::Auto).then(|| tuner.mode_table().snapshot());
         for entry in compiled.iter_mut() {
             let derived = if entry.kind.is_real() {
                 entry.n == 2 * tuner.n()
             } else {
                 entry.n == tuner.n()
             };
-            if derived && entry.version != current.version {
+            if !derived {
+                continue;
+            }
+            if entry.version != current.version {
                 entry.cp = ex.compile_kind(&current.plan, entry.n, true, entry.kind);
                 entry.version = current.version;
+                // A swapped plan re-prices the panel: its kernel mix
+                // (and therefore the batched amortization) changed.
+                entry.modes = static_mode_table(*policy, entry.kind, &current.plan, tuner.n());
+            }
+            if let Some(modes) = &tuned_modes {
+                // The tuner models the c2c surface; real-kind entries
+                // keep their statically priced table (their doubled
+                // buffers flip at a different point).
+                if !entry.kind.is_real() {
+                    entry.modes = *modes;
+                }
             }
         }
     }
@@ -497,10 +616,10 @@ impl WorkerBackend {
         let exec_start = Instant::now();
         match self {
             WorkerBackend::Native { compiled, pool, .. } => {
-                let Some(cp) = compiled
+                let Some((cp, modes)) = compiled
                     .iter()
                     .find(|e| e.n == n && e.kind == kind)
-                    .map(|e| &e.cp)
+                    .map(|e| (&e.cp, e.modes))
                 else {
                     for req in group {
                         metrics.on_failure();
@@ -514,35 +633,69 @@ impl WorkerBackend {
                 // unless the calibration split is on).
                 let sampling = tuner
                     .filter(|t| n == t.n() && !kind.is_real() && t.sampler().should_sample());
-                if group.len() == 1 {
-                    let req = group.into_iter().next().unwrap();
-                    let mut stages: Vec<StageTime> = Vec::new();
-                    let out = match sampling {
-                        Some(t) => {
-                            let mut samples = Vec::with_capacity(cp.steps().len());
-                            let out = trace_request(cp, &req.input, t.mode(), &mut samples);
-                            if let Some(o) = obs {
-                                o.observe_samples(&samples);
-                                stages = stage_times(&samples);
+                // The planned execution path for this group's batch
+                // class. Singletons always run scalar regardless of
+                // policy — a one-lane panel is pure data movement.
+                let mode = if group.len() < 2 {
+                    ExecMode::ScalarSequential
+                } else {
+                    modes[batch_class(group.len())]
+                };
+                metrics.on_exec_mode(mode, group_size);
+                if mode == ExecMode::ScalarSequential {
+                    // Zero-copy path: each request transforms in place
+                    // in the buffer it arrived in — no gather, no
+                    // scatter, no scratch clone — and the same buffer is
+                    // moved into the reply. At most the first request is
+                    // traced (batch=1 samples belong on the unbatched
+                    // surface).
+                    let mut sampling = sampling;
+                    for mut req in group {
+                        let mut stages: Vec<StageTime> = Vec::new();
+                        match sampling.take() {
+                            Some(t) => {
+                                let mut samples = Vec::with_capacity(cp.steps().len());
+                                trace_request_inplace(
+                                    cp,
+                                    &mut req.input.re,
+                                    &mut req.input.im,
+                                    t.mode(),
+                                    &mut samples,
+                                );
+                                if let Some(o) = obs {
+                                    o.observe_samples(&samples);
+                                    stages = stage_times(&samples);
+                                }
+                                t.sampler().submit(samples);
                             }
-                            t.sampler().submit(samples);
-                            out
+                            None => cp.run(&mut req.input.re, &mut req.input.im),
                         }
-                        None => cp.run_on(&req.input),
-                    };
-                    let now = Instant::now();
-                    metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
-                    if let Some(o) = obs {
-                        record_request_done(
-                            o, &req, group_size, held_age, exec_start, now, stages,
-                        );
+                        let now = Instant::now();
+                        metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
+                        if let Some(o) = obs {
+                            record_request_done(
+                                o, &req, group_size, held_age, exec_start, now, stages,
+                            );
+                        }
+                        let _ = req.reply.send(Ok(req.input));
                     }
-                    let _ = req.reply.send(Ok(out));
                     return;
                 }
+                // Panel path: one timed gather into the pooled
+                // lane-blocked buffer, the batched kernels, then one
+                // timed scatter per lane back into each request's own
+                // buffer — exactly one buffer copy per request end to
+                // end (the old path's per-lane `scatter_lane` allocated
+                // a second). The measured round trip feeds the metrics
+                // and (when sampled) the tuner, so the mode decision
+                // tracks the real transpose.
                 let mut buf = pool.acquire(n, group.len());
-                let inputs: Vec<&SplitComplex> = group.iter().map(|r| &r.input).collect();
-                buf.gather(&inputs);
+                let m0 = Instant::now();
+                {
+                    let inputs: Vec<&SplitComplex> = group.iter().map(|r| &r.input).collect();
+                    buf.gather(&inputs);
+                }
+                let mut marshal = m0.elapsed();
                 let mut stages: Vec<StageTime> = Vec::new();
                 match sampling {
                     Some(t) => {
@@ -556,8 +709,10 @@ impl WorkerBackend {
                     }
                     None => cp.run_batch(&mut buf),
                 }
-                for (lane, req) in group.into_iter().enumerate() {
-                    let out = buf.scatter_lane(lane);
+                for (lane, mut req) in group.into_iter().enumerate() {
+                    let m1 = Instant::now();
+                    buf.scatter_lane_into(lane, &mut req.input);
+                    marshal += m1.elapsed();
                     let now = Instant::now();
                     metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
                     if let Some(o) = obs {
@@ -565,9 +720,22 @@ impl WorkerBackend {
                             o, &req, group_size, held_age, exec_start, now, stages.clone(),
                         );
                     }
-                    let _ = req.reply.send(Ok(out));
+                    let _ = req.reply.send(Ok(req.input));
                 }
                 pool.release(buf);
+                metrics.on_marshal(marshal);
+                if let Some(t) = sampling {
+                    // Oracle-mode runs stay deterministic: only measured
+                    // wall time becomes a marshal observation.
+                    if matches!(t.mode(), SampleMode::Wallclock) {
+                        t.sampler().submit(vec![EdgeSample::marshal(
+                            kind,
+                            group_size,
+                            cp.isa(),
+                            marshal.as_nanos() as f64,
+                        )]);
+                    }
+                }
             }
             WorkerBackend::Pjrt { registry, plans } => {
                 // C2c kinds both run the same AOT forward executables:
@@ -724,12 +892,15 @@ fn worker_loop(
             for (n, p) in &config.plans {
                 // Every configured (n, plan) serves four workloads: the
                 // c2c pair at n and the real pair at 2n (same c2c core).
+                // Each entry is priced for its own (kind, n) workload —
+                // the mode table is per entry, not per plan.
                 for kind in [TransformKind::Forward, TransformKind::Inverse] {
                     compiled.push(CompiledEntry {
                         n: *n,
                         kind,
                         cp: ex.compile_kind(p, *n, true, kind),
                         version: 1,
+                        modes: static_mode_table(config.exec_mode, kind, p, *n),
                     });
                 }
                 for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
@@ -738,10 +909,16 @@ fn worker_loop(
                         kind,
                         cp: ex.compile_kind(p, 2 * *n, true, kind),
                         version: 1,
+                        modes: static_mode_table(config.exec_mode, kind, p, *n),
                     });
                 }
             }
-            WorkerBackend::Native { ex, compiled, pool: BatchBufferPool::new() }
+            WorkerBackend::Native {
+                ex,
+                compiled,
+                pool: BatchBufferPool::new(),
+                policy: config.exec_mode,
+            }
         }
         Backend::Pjrt { artifacts_dir } => match crate::runtime::Registry::load(artifacts_dir) {
             Ok(registry) => WorkerBackend::Pjrt { registry, plans: config.plans.clone() },
@@ -877,6 +1054,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap()
     }
@@ -911,6 +1089,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         });
         assert!(bad.is_err());
     }
@@ -928,6 +1107,7 @@ mod tests {
             autotune: Some(AutotuneConfig::new(prior)),
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         });
         assert!(bad.is_err());
     }
@@ -945,6 +1125,7 @@ mod tests {
             autotune: Some(AutotuneConfig::new(prior)),
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         });
         assert!(bad.is_err());
     }
@@ -965,6 +1146,7 @@ mod tests {
             autotune: Some(at),
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap();
         for i in 0..40u64 {
@@ -1014,7 +1196,8 @@ mod tests {
         let sizes = [64usize, 256];
         let svc = FftService::start(ServiceConfig {
             plans: vec![
-                (64, Plan::parse("R4,R4,R2").unwrap()),
+                // log2(64) = 6 stages: R4(2) + R2(1) + F8(3)
+                (64, Plan::parse("R4,R2,F8").unwrap()),
                 (256, Plan::parse("R4,R4,R2,F8").unwrap()),
             ],
             backend: Backend::Native,
@@ -1025,6 +1208,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap();
         let mut pending = Vec::new();
@@ -1047,6 +1231,85 @@ mod tests {
         // Every completed request went through exactly one group.
         let grouped = (snap.mean_group_size * snap.groups as f64).round() as u64;
         assert_eq!(grouped, snap.completed);
+    }
+
+    #[test]
+    fn forced_exec_modes_agree_bitwise_and_split_the_metrics() {
+        // The mode decision is a pure execution-strategy choice: the
+        // same burst served ForcePanel and ForceScalar must produce
+        // bit-identical replies (the run_batch contract, restated at the
+        // mode-decision layer), and each service's metrics must show
+        // only its forced path — marshal time strictly where panels ran.
+        let n = 256;
+        let mk = |policy| {
+            FftService::start(ServiceConfig {
+                plans: vec![(n, Plan::parse("R4,R4,R2,F8").unwrap())],
+                backend: Backend::Native,
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+                coalesce: Default::default(),
+                workers: 1,
+                queue_depth: 64,
+                autotune: None,
+                shed_deadline: None,
+                observer: None,
+                exec_mode: policy,
+            })
+            .unwrap()
+        };
+        let inputs: Vec<SplitComplex> = (0..24).map(|i| SplitComplex::random(n, i)).collect();
+        let run = |svc: FftService| {
+            let rxs: Vec<_> = inputs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+            let outs: Vec<SplitComplex> =
+                rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+            (outs, svc.shutdown())
+        };
+        let (panel_outs, panel_snap) = run(mk(ExecModePolicy::ForcePanel));
+        let (scalar_outs, scalar_snap) = run(mk(ExecModePolicy::ForceScalar));
+        for (i, (p, s)) in panel_outs.iter().zip(&scalar_outs).enumerate() {
+            assert_eq!(p.re, s.re, "request {i}: panel and scalar replies diverged");
+            assert_eq!(p.im, s.im, "request {i}: panel and scalar replies diverged");
+        }
+        // correctness against the reference, not just mutual agreement
+        let want0 = fft_ref(&inputs[0]);
+        assert!(panel_outs[0].max_abs_diff(&want0) / want0.max_abs().max(1.0) < 1e-4);
+        assert_eq!(scalar_snap.exec_panel_groups, 0);
+        assert_eq!(scalar_snap.exec_panel_requests, 0);
+        assert_eq!(scalar_snap.marshal_time, std::time::Duration::ZERO);
+        assert_eq!(scalar_snap.exec_scalar_groups, scalar_snap.groups);
+        assert_eq!(scalar_snap.exec_scalar_requests, 24);
+        // the burst leaves a deep queue, so at least one pull groups >= 2
+        assert!(panel_snap.exec_panel_groups >= 1, "burst never formed a panel group");
+        assert!(panel_snap.marshal_time > std::time::Duration::ZERO);
+        assert_eq!(panel_snap.exec_panel_groups + panel_snap.exec_scalar_groups, panel_snap.groups);
+        assert_eq!(panel_snap.exec_panel_requests + panel_snap.exec_scalar_requests, 24);
+    }
+
+    #[test]
+    fn static_mode_tables_pin_the_m1_flip() {
+        // The priced decision on the m1 model: a small unfused plan runs
+        // scalar-sequential (per-transform cost is flat, so the panel
+        // only adds the transpose), while the large radix-4 ladder's
+        // batched amortization beats its marshal bill. Forced policies
+        // override both; class 0 is always scalar.
+        let small = Plan::parse("R4,R2,F8").unwrap(); // n=64
+        let large = Plan::parse("R4,R4,R4,R4,R2,R2").unwrap(); // n=1024
+        let auto_small =
+            static_mode_table(ExecModePolicy::Auto, TransformKind::Forward, &small, 64);
+        let auto_large =
+            static_mode_table(ExecModePolicy::Auto, TransformKind::Forward, &large, 1024);
+        assert_eq!(auto_small[batch_class(16)], ExecMode::ScalarSequential);
+        assert_eq!(auto_large[batch_class(16)], ExecMode::Panel);
+        assert_eq!(auto_large[0], ExecMode::ScalarSequential, "class 0 is always scalar");
+        let forced_p =
+            static_mode_table(ExecModePolicy::ForcePanel, TransformKind::Forward, &small, 64);
+        assert_eq!(forced_p[0], ExecMode::ScalarSequential);
+        assert!(forced_p[1..].iter().all(|m| *m == ExecMode::Panel));
+        let forced_s =
+            static_mode_table(ExecModePolicy::ForceScalar, TransformKind::Forward, &large, 1024);
+        assert!(forced_s.iter().all(|m| *m == ExecMode::ScalarSequential));
     }
 
     #[test]
@@ -1104,6 +1367,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap();
         let inputs: Vec<SplitComplex> = (0..8).map(|i| SplitComplex::random(n, i)).collect();
@@ -1134,6 +1398,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap();
         let mut rejected = 0;
@@ -1278,6 +1543,7 @@ mod tests {
             autotune: None,
             shed_deadline: Some(std::time::Duration::from_micros(100)),
             observer: None,
+            exec_mode: Default::default(),
         })
         .unwrap();
         // slack = shed_deadline - max_wait = 0: anything that waits at

@@ -246,6 +246,7 @@ mod tests {
             autotune: None,
             shed_deadline: None,
             observer: None,
+            exec_mode: Default::default(),
         }
     }
 

@@ -53,6 +53,82 @@ pub fn class_batch(class: usize) -> usize {
     1 << class.min(BATCH_CLASSES - 1)
 }
 
+/// How the coordinator executes one same-(kind, n) request group.
+///
+/// Not a hardcoded rule: [`exec_mode_for`] prices both pipelines — the
+/// panel round trip *including both marshal endpoints* against running
+/// the scalar kernels over each request in place — and picks the
+/// cheaper one per (kind, n, B). The paper's thesis applied to the
+/// serving boundary: data movement is a cost like any other, so the
+/// transpose only happens where the model says it pays for itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Run the scalar kernels over each request buffer in place, one
+    /// after another. Zero marshal cost, zero copies — but each
+    /// transform pays per-transform twiddle loads and the SIMD
+    /// collapse of late narrow stages.
+    ScalarSequential,
+    /// Gather the group into a lane-blocked [n][B] panel, run the
+    /// batched kernels once, scatter each lane back. Amortizes
+    /// twiddles and keeps late stages vectorized, but pays the
+    /// gather/scatter transpose at both ends.
+    Panel,
+}
+
+impl ExecMode {
+    /// Stable lowercase label (metrics / exporters / CLI).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::ScalarSequential => "scalar",
+            ExecMode::Panel => "panel",
+        }
+    }
+}
+
+/// Price both execution pipelines for a group of `b` same-(kind, n)
+/// requests under `plan` and return the cheaper [`ExecMode`].
+///
+/// * Scalar-sequential: `b ×` the steady-state per-transform plan time
+///   on the kind's unbatched surface (the requests run back-to-back
+///   through the same kernels, so the steady-state loop is the right
+///   model) — no marshal, no copies.
+/// * Panel: `b ×` the per-transform plan time on the kind's batched
+///   surface at `b`'s class width, **plus both marshal endpoints**
+///   (gather + scatter, [`CostModel::marshal_ns`] each way). Real
+///   kinds marshal the full 2·n()-point request buffers while the
+///   model's n() is the half-size c2c surface, hence the 2× byte
+///   scale on their marshal term.
+///
+/// Singletons (`b < 2`) are always scalar: a one-lane panel is pure
+/// padding waste plus two transposes for nothing.
+///
+/// On the m1 model this flips per *plan shape*, not just size:
+/// fused-terminal plans keep their register-blocked advantage in the
+/// scalar kernels, so the panel's ~10% amortization never repays the
+/// transpose round trip — while radix-tail plans (and fused-less
+/// machines like Haswell) collapse to scalar issue in the narrow late
+/// stages, and the panel wins by integer factors. Both are pinned
+/// fixtures below.
+pub fn exec_mode_for<C: CostModel + ?Sized>(
+    cost: &mut C,
+    kind: TransformKind,
+    plan: &Plan,
+    b: usize,
+) -> ExecMode {
+    if b < 2 {
+        return ExecMode::ScalarSequential;
+    }
+    let scalar_ns = b as f64 * PlanningSurface::for_kind(kind).plan_ns(cost, plan);
+    let byte_scale = if kind.is_real() { 2.0 } else { 1.0 };
+    let panel_ns = b as f64 * PlanningSurface::for_kind(kind).with_batch(b).plan_ns(cost, plan)
+        + 2.0 * byte_scale * cost.marshal_ns(b);
+    if panel_ns < scalar_ns {
+        ExecMode::Panel
+    } else {
+        ExecMode::ScalarSequential
+    }
+}
+
 /// The planning surface: *which workload* a planner walk prices. One
 /// query struct threaded from the strategies through
 /// [`CostModel::surface_edge_ns`], replacing the former
@@ -284,6 +360,22 @@ pub trait CostModel {
         b.max(1) as f64 * self.edge_ns(edge, stage, ctx)
     }
 
+    /// Whole-batch time (ns) of *one direction* of the serving path's
+    /// panel marshal at this model's n(): gathering `b` request
+    /// buffers into a lane-blocked [n][B_padded] panel, or scattering
+    /// the lanes back out. A panel round trip costs two of these;
+    /// [`exec_mode_for`] adds both endpoints when comparing panel
+    /// against scalar-sequential execution. Providers without a native
+    /// transpose model approximate each buffer as a full strided
+    /// round trip with no residual help — the stage-0 R2 pass from
+    /// [`Context::Start`] is the catalog's proxy for that walk.
+    /// [`SimCost`] models it natively (`sim::memory::marshal_ns`:
+    /// fractional-bandwidth strided walk + per-request overhead +
+    /// panel thrash) and [`NativeCost`] times the real gather/scatter.
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        b.max(1) as f64 * self.edge_ns(EdgeType::R2, 0, Context::Start)
+    }
+
     /// Relative price of running `edge`'s kernel on `isa` instead of the
     /// provider's native ISA (1.0 = same price). Applied by the default
     /// [`CostModel::surface_edge_ns`] to c2c edges of ISA-pinned
@@ -398,6 +490,10 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
         (**self).edge_ns_batched(edge, stage, ctx, b)
     }
 
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        (**self).marshal_ns(b)
+    }
+
     fn isa_edge_mult(&mut self, edge: EdgeType, isa: Isa) -> f64 {
         (**self).isa_edge_mult(edge, isa)
     }
@@ -490,6 +586,15 @@ impl CostModel for SimCost {
     fn unpack_ns_batched(&mut self, ctx: Context, b: usize) -> f64 {
         self.machine.unpack_ns_batched(self.n, ctx, b)
     }
+
+    /// Native model of the panel marshal (see
+    /// [`crate::sim::Machine::marshal_ns`]): the transpose runs at a
+    /// calibrated fraction of the streaming bandwidth, pads partial
+    /// lane groups, pays a per-request loop overhead, and thrashes
+    /// with the panel it feeds — not the R2 proxy.
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        self.machine.marshal_ns(self.n, b)
+    }
 }
 
 /// Memoizing wrapper: caches cells, counts distinct measurements.
@@ -504,6 +609,7 @@ pub struct MemoCost<C: CostModel> {
     cache_b: HashMap<(EdgeType, usize, Context, usize), f64>,
     cache_u: HashMap<Context, f64>,
     cache_ub: HashMap<(Context, usize), f64>,
+    cache_m: HashMap<usize, f64>,
 }
 
 impl<C: CostModel> MemoCost<C> {
@@ -514,6 +620,7 @@ impl<C: CostModel> MemoCost<C> {
             cache_b: HashMap::new(),
             cache_u: HashMap::new(),
             cache_ub: HashMap::new(),
+            cache_m: HashMap::new(),
         }
     }
 
@@ -569,6 +676,15 @@ impl<C: CostModel> CostModel for MemoCost<C> {
         }
         let v = self.inner.unpack_ns_batched(ctx, b);
         self.cache_ub.insert((ctx, b), v);
+        v
+    }
+
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        if let Some(&v) = self.cache_m.get(&b) {
+            return v;
+        }
+        let v = self.inner.marshal_ns(b);
+        self.cache_m.insert(b, v);
         v
     }
 }
@@ -868,6 +984,94 @@ mod tests {
         let whole = plain.edge_ns_batched(EdgeType::R4, 0, Start, 8);
         let want = whole / 8.0 * crate::sim::Machine::m1().isa_mult(EdgeType::R4, Isa::Scalar);
         assert!((b8.edge_ns(&mut cost, EdgeType::R4, 0, Start) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_marshal_is_native_and_memo_forwards_it() {
+        let mut c = SimCost::m1(1024);
+        let direct = crate::sim::Machine::m1().marshal_ns(1024, 16);
+        assert_eq!(c.marshal_ns(16), direct);
+        let mut m = MemoCost::new(SimCost::m1(1024));
+        assert_eq!(m.marshal_ns(16), direct);
+        assert_eq!(m.marshal_ns(16), direct);
+        // marshal queries stay outside the §2.5 unbatched budget
+        assert_eq!(m.measurements(), 0);
+    }
+
+    #[test]
+    fn default_marshal_is_the_cold_r2_proxy() {
+        // Providers without a native transpose model (replayed tables)
+        // price each buffer as a cold strided round trip.
+        let mut table = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
+        let one = table.edge_ns(EdgeType::R2, 0, Start);
+        assert_eq!(table.marshal_ns(8), 8.0 * one);
+    }
+
+    #[test]
+    fn exec_mode_singletons_are_always_scalar() {
+        let mut c = SimCost::m1(1024);
+        let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        for kind in [TransformKind::Forward, TransformKind::RealForward] {
+            assert_eq!(exec_mode_for(&mut c, kind, &plan, 0), ExecMode::ScalarSequential);
+            assert_eq!(exec_mode_for(&mut c, kind, &plan, 1), ExecMode::ScalarSequential);
+        }
+    }
+
+    #[test]
+    fn exec_mode_pinned_flip_on_m1() {
+        // The pinned fixture of the mode decision (ISSUE 9 acceptance):
+        // on the m1 model the flip is *plan-shape-aware*, not a size
+        // rule. A small fused-terminal plan keeps its register-blocked
+        // advantage in the scalar kernels — the panel's amortization
+        // never repays the transpose round trip — while a radix-tail
+        // plan at large n collapses to scalar issue in its narrow late
+        // stages and the panel wins by integer factors.
+        let mut small = SimCost::m1(64);
+        let fused_tail = Plan::parse("R4,R2,F8").unwrap();
+        for b in [4, 8, 16] {
+            assert_eq!(
+                exec_mode_for(&mut small, TransformKind::Forward, &fused_tail, b),
+                ExecMode::ScalarSequential,
+                "n=64 fused tail at b={b}"
+            );
+        }
+        let mut large = SimCost::m1(1024);
+        let radix_tail = Plan::parse("R4,R4,R4,R4,R2,R2").unwrap();
+        assert_eq!(
+            exec_mode_for(&mut large, TransformKind::Forward, &radix_tail, 16),
+            ExecMode::Panel,
+            "n=1024 radix tail at b=16"
+        );
+        // and the panel advantage there is decisive, not marginal: the
+        // scalar pipeline pays > 2x the panel pipeline including both
+        // marshal endpoints
+        let b = 16.0;
+        let scalar = b * PlanningSurface::forward().plan_ns(&mut large, &radix_tail);
+        let panel = b * PlanningSurface::forward().with_batch(16).plan_ns(&mut large, &radix_tail)
+            + 2.0 * large.marshal_ns(16);
+        assert!(scalar > 2.0 * panel, "scalar={scalar} panel={panel}");
+    }
+
+    #[test]
+    fn exec_mode_fused_terminal_plans_stay_scalar_even_at_large_n() {
+        // The counter-intuitive half of the story: at n=1024 the m1
+        // optimum is fused-terminal, and even at the capacity-edge
+        // batch the transpose never pays for itself.
+        let mut c = SimCost::m1(1024);
+        let plan = Plan::parse("R4,R2,R4,R4,F8").unwrap();
+        for b in [4, 8, 16] {
+            assert_eq!(
+                exec_mode_for(&mut c, TransformKind::Forward, &plan, b),
+                ExecMode::ScalarSequential,
+                "n=1024 fused tail at b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn exec_mode_labels_are_stable() {
+        assert_eq!(ExecMode::ScalarSequential.label(), "scalar");
+        assert_eq!(ExecMode::Panel.label(), "panel");
     }
 
     #[test]

@@ -311,6 +311,34 @@ impl CostModel for NativeCost {
         ns
     }
 
+    /// Measure the real panel marshal: time one full round trip —
+    /// `BatchBuffer::gather` of `b` request buffers into the lane
+    /// panels plus the allocation-free `scatter_lane_into` of every
+    /// live lane back out — on the same pooled batch buffer the other
+    /// batched measurements use, and report half of it (the trait's
+    /// one-direction convention). Timing the round trip and halving
+    /// keeps the two transpose directions from needing separate
+    /// (asymmetric, harder-to-isolate) protocols while matching
+    /// exactly what the serving path executes per panel.
+    fn marshal_ns(&mut self, b: usize) -> f64 {
+        let b = b.max(1);
+        self.ensure_batch_buf(b);
+        let inputs: Vec<SplitComplex> =
+            (0..b).map(|i| SplitComplex::random(self.n, 0x3F00D + i as u64)).collect();
+        let mut outputs: Vec<SplitComplex> =
+            (0..b).map(|_| SplitComplex::zeros(self.n)).collect();
+        let buf = std::cell::RefCell::new(self.bufs_b.borrow_mut().remove(&b).unwrap());
+        let mut timed_fn = || {
+            let mut buf = buf.borrow_mut();
+            let refs: Vec<&SplitComplex> = inputs.iter().collect();
+            buf.gather(&refs);
+            buf.scatter_into(&mut outputs);
+        };
+        let ns = measure(self.spec, None, &mut timed_fn).ns;
+        self.bufs_b.borrow_mut().insert(b, buf.into_inner());
+        ns / 2.0
+    }
+
     /// Measure the *batched* boundary pass: time `unpack_r2c_b` over a
     /// lane-blocked 2n panel of `b` real transforms (predecessor c2c
     /// pass executed batched and untimed over the first-half rows, per
@@ -444,6 +472,19 @@ mod tests {
             .with_batch(8);
         let t = c.surface_edge_ns(EdgeType::RU, 7, After(EdgeType::R4), s);
         assert!(t > 0.0 && t.is_finite());
+    }
+
+    #[test]
+    fn marshal_is_measured_and_positive() {
+        let mut c = NativeCost::quick(128);
+        let one_dir = c.marshal_ns(8);
+        assert!(one_dir > 0.0 && one_dir < 1e8, "{one_dir}");
+        // more buffers move more bytes — whole-batch cost grows with b
+        let bigger = c.marshal_ns(16);
+        assert!(bigger > 0.0 && bigger.is_finite());
+        // the batch buffer went back to the pool for reuse
+        let again = c.marshal_ns(8);
+        assert!(again > 0.0);
     }
 
     #[test]

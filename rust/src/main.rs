@@ -537,7 +537,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         .opt("metrics-every-ms", "500", "snapshot period for --metrics-out, in milliseconds")
         .opt("prom-out", "", "write a final Prometheus text exposition here")
         .opt("obs-out", "", "write the flight-recorder dump (spfft.events.v1 JSON) here at shutdown")
-        .opt("obs-capacity", "4096", "flight-recorder ring capacity, in events");
+        .opt("obs-capacity", "4096", "flight-recorder ring capacity, in events")
+        .opt("exec-mode", "auto", "per-group execution mode: auto (cost-model decides per (kind, n, B)), panel (always lane-blocked for groups of >= 2), scalar (always sequential in place)");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
     let kind = parse_kind(args.get("kind"))?;
@@ -627,6 +628,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     };
     let shards = args.get_usize("shards")?.max(1);
     let shed_us = args.get_usize("shed-deadline-us")?;
+    let exec_mode: spfft::coordinator::ExecModePolicy =
+        args.get("exec-mode").parse().map_err(CliError)?;
     let config = spfft::coordinator::ServiceConfig {
         plans: vec![(cn, ca.plan.clone())],
         backend,
@@ -641,6 +644,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         shed_deadline: (shed_us > 0)
             .then(|| std::time::Duration::from_micros(shed_us as u64)),
         observer: observer.clone(),
+        exec_mode,
     };
     // --shards 1 runs the plain single-process service (identical
     // behavior and exports to every earlier release); more shards run

@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::autotune::EdgeSample;
+use crate::autotune::{EdgeSample, SampleSpan};
 use crate::cost::batch_class;
 use crate::edge::{Context, EdgeType};
 use crate::isa::Isa;
@@ -82,8 +82,14 @@ impl Attribution {
         )
     }
 
-    /// Fold one sample into its cell.
+    /// Fold one sample into its cell. Marshal-span samples are data
+    /// movement, not catalog cells — their edge/stage/ctx fields are
+    /// placeholders, so folding them would invent a bogus RU@0 row.
+    /// The metrics layer accounts marshal time separately.
     pub fn observe(&self, sample: &EdgeSample) {
+        if sample.span != SampleSpan::Edge {
+            return;
+        }
         let mut cells = self.cells.lock().unwrap();
         let cell = cells.entry(Self::key_of(sample)).or_default();
         cell.observed_ns += sample.ns;
@@ -138,7 +144,23 @@ mod tests {
     use super::*;
 
     fn sample(edge: EdgeType, stage: usize, ctx: Context, batch: usize, ns: f64) -> EdgeSample {
-        EdgeSample { edge, stage, ctx, kind: TransformKind::Forward, batch, isa: Isa::Scalar, ns }
+        EdgeSample {
+            edge,
+            stage,
+            ctx,
+            kind: TransformKind::Forward,
+            batch,
+            isa: Isa::Scalar,
+            span: SampleSpan::Edge,
+            ns,
+        }
+    }
+
+    #[test]
+    fn marshal_spans_never_become_cells() {
+        let a = Attribution::new();
+        a.observe(&EdgeSample::marshal(TransformKind::Forward, 16, Isa::Scalar, 800.0));
+        assert!(a.is_empty());
     }
 
     #[test]

@@ -134,6 +134,10 @@ pub fn snapshot_json(
                 ("coalesce_hits", num(snap.coalesce_hits as f64)),
                 ("coalesce_hit_rate", num(snap.coalesce_hit_rate)),
                 ("singleton_pairings", num(snap.singleton_pairings as f64)),
+                ("exec_panel_groups", num(snap.exec_panel_groups as f64)),
+                ("exec_scalar_groups", num(snap.exec_scalar_groups as f64)),
+                ("exec_panel_requests", num(snap.exec_panel_requests as f64)),
+                ("exec_scalar_requests", num(snap.exec_scalar_requests as f64)),
             ]),
         ),
         (
@@ -157,6 +161,7 @@ pub fn snapshot_json(
             ]),
         ),
         ("busy_ns", num(snap.busy.as_nanos() as f64)),
+        ("marshal_ns_total", num(snap.marshal_time.as_nanos() as f64)),
         (
             "recorder",
             obj(vec![
@@ -188,6 +193,9 @@ fn shard_json(shard: usize, snap: &MetricsSnapshot) -> Json {
         ("coalesce_hits", num(snap.coalesce_hits as f64)),
         ("coalesce_hit_rate", num(snap.coalesce_hit_rate)),
         ("singleton_pairings", num(snap.singleton_pairings as f64)),
+        ("exec_panel_groups", num(snap.exec_panel_groups as f64)),
+        ("exec_scalar_groups", num(snap.exec_scalar_groups as f64)),
+        ("marshal_ns_total", num(snap.marshal_time.as_nanos() as f64)),
         (
             "latency_ns",
             obj(vec![
@@ -250,10 +258,17 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
         "coalesce_hits",
         "coalesce_hit_rate",
         "singleton_pairings",
+        "exec_panel_groups",
+        "exec_scalar_groups",
+        "exec_panel_requests",
+        "exec_scalar_requests",
     ] {
         if counters.get(field).as_f64().is_none() {
             return Err(format!("counters.{field} missing or not a number"));
         }
+    }
+    if doc.get("marshal_ns_total").as_f64().is_none() {
+        return Err("marshal_ns_total missing or not a number".to_string());
     }
     let by_kind = counters.get("completed_by_kind");
     for kind in ALL_KINDS {
@@ -331,6 +346,9 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
                     "rejected_shed",
                     "coalesce_hits",
                     "coalesce_hit_rate",
+                    "exec_panel_groups",
+                    "exec_scalar_groups",
+                    "marshal_ns_total",
                 ] {
                     if shard.get(field).as_f64().is_none() {
                         return Err(format!("shards[{i}].{field} missing or not a number"));
@@ -430,6 +448,33 @@ pub fn prometheus_text(
     prom_line(&mut out, "spfft_coalesce_hits_total", &[], snap.coalesce_hits as f64);
     prom_head(&mut out, "spfft_singleton_pairings_total", "counter", "Singletons paired across pulls");
     prom_line(&mut out, "spfft_singleton_pairings_total", &[], snap.singleton_pairings as f64);
+    prom_head(
+        &mut out,
+        "spfft_exec_groups_total",
+        "counter",
+        "Native groups executed, by execution mode (panel = lane-blocked batch, scalar = sequential in place)",
+    );
+    for (mode, count) in [("panel", snap.exec_panel_groups), ("scalar", snap.exec_scalar_groups)] {
+        prom_line(&mut out, "spfft_exec_groups_total", &[("mode", mode.to_string())], count as f64);
+    }
+    prom_head(
+        &mut out,
+        "spfft_exec_requests_total",
+        "counter",
+        "Requests executed through native groups, by execution mode",
+    );
+    for (mode, count) in
+        [("panel", snap.exec_panel_requests), ("scalar", snap.exec_scalar_requests)]
+    {
+        prom_line(&mut out, "spfft_exec_requests_total", &[("mode", mode.to_string())], count as f64);
+    }
+    prom_head(
+        &mut out,
+        "spfft_marshal_ns_total",
+        "counter",
+        "Time spent marshalling panels (gather + scatter round trip, ns)",
+    );
+    prom_line(&mut out, "spfft_marshal_ns_total", &[], snap.marshal_time.as_nanos() as f64);
     prom_head(&mut out, "spfft_latency_ns", "gauge", "Request latency percentiles (ns)");
     for (q, d) in [
         ("p50", snap.latency_p50),
@@ -581,6 +626,36 @@ pub fn prometheus_text_sharded(
     }
     prom_head(
         &mut out,
+        "spfft_shard_exec_groups_total",
+        "counter",
+        "Native groups executed by execution mode, per shard",
+    );
+    for (i, s) in shards.iter().enumerate() {
+        for (mode, count) in [("panel", s.exec_panel_groups), ("scalar", s.exec_scalar_groups)] {
+            prom_line(
+                &mut out,
+                "spfft_shard_exec_groups_total",
+                &[("shard", i.to_string()), ("mode", mode.to_string())],
+                count as f64,
+            );
+        }
+    }
+    prom_head(
+        &mut out,
+        "spfft_shard_marshal_ns_total",
+        "counter",
+        "Panel marshal time per shard (ns)",
+    );
+    for (i, s) in shards.iter().enumerate() {
+        prom_line(
+            &mut out,
+            "spfft_shard_marshal_ns_total",
+            &[("shard", i.to_string())],
+            s.marshal_time.as_nanos() as f64,
+        );
+    }
+    prom_head(
+        &mut out,
         "spfft_shard_latency_ns",
         "gauge",
         "Request latency percentiles per shard (ns)",
@@ -616,6 +691,9 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
         "spfft_rejected_total",
         "spfft_batches_total",
         "spfft_groups_total",
+        "spfft_exec_groups_total",
+        "spfft_exec_requests_total",
+        "spfft_marshal_ns_total",
         "spfft_latency_ns",
         "spfft_recorder_events_total",
         "spfft_recorder_dropped_total",
@@ -656,6 +734,11 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
         }
         if name == "spfft_rejected_total" && !name_labels.contains("reason=") {
             return err("rejection sample missing reason= label");
+        }
+        if (name == "spfft_exec_groups_total" || name == "spfft_exec_requests_total")
+            && !name_labels.contains("mode=")
+        {
+            return err("execution-mode sample missing mode= label");
         }
     }
     Ok(())
@@ -1077,6 +1160,11 @@ mod tests {
             singleton_pairings: 1,
             mean_held_age: Duration::from_micros(300),
             max_held_age: Duration::from_micros(500),
+            exec_panel_groups: 3,
+            exec_scalar_groups: 1,
+            exec_panel_requests: 7,
+            exec_scalar_requests: 2,
+            marshal_time: Duration::from_micros(120),
             busy: Duration::from_micros(900),
             latency_p50: Duration::from_micros(10),
             latency_p95: Duration::from_micros(40),
@@ -1243,6 +1331,46 @@ mod tests {
     }
 
     #[test]
+    fn exec_mode_and_marshal_export_and_are_gated() {
+        // JSON: the exec-mode split and the marshal counter are present
+        // and schema-gated
+        let doc = snapshot_json(&sample_snapshot(), &[], &sample_recorder(), None);
+        let text = json::to_string(&doc);
+        let parsed = json::parse(&text).unwrap();
+        schema_check_snapshot(&parsed).unwrap();
+        assert_eq!(parsed.get("counters").get("exec_panel_groups").as_usize(), Some(3));
+        assert_eq!(parsed.get("counters").get("exec_scalar_groups").as_usize(), Some(1));
+        assert_eq!(parsed.get("counters").get("exec_panel_requests").as_usize(), Some(7));
+        assert_eq!(parsed.get("counters").get("exec_scalar_requests").as_usize(), Some(2));
+        assert_eq!(parsed.get("marshal_ns_total").as_usize(), Some(120_000));
+        let renamed = text.replace("\"exec_panel_groups\"", "\"panel_groups\"");
+        let err = schema_check_snapshot(&json::parse(&renamed).unwrap()).unwrap_err();
+        assert!(err.contains("exec_panel_groups"), "unhelpful error: {err}");
+        let renamed = text.replace("\"marshal_ns_total\"", "\"marshal_ns\"");
+        let err = schema_check_snapshot(&json::parse(&renamed).unwrap()).unwrap_err();
+        assert!(err.contains("marshal_ns_total"), "unhelpful error: {err}");
+        // Prometheus: mode-labeled families plus the marshal counter,
+        // all schema-gated
+        let prom = prometheus_text(&sample_snapshot(), &[], &sample_recorder());
+        schema_check_prometheus(&prom).unwrap();
+        assert!(prom.contains("spfft_exec_groups_total{mode=\"panel\"} 3"));
+        assert!(prom.contains("spfft_exec_groups_total{mode=\"scalar\"} 1"));
+        assert!(prom.contains("spfft_exec_requests_total{mode=\"panel\"} 7"));
+        assert!(prom.contains("spfft_exec_requests_total{mode=\"scalar\"} 2"));
+        assert!(prom.contains("spfft_marshal_ns_total 120000"));
+        let stripped: String = prom
+            .lines()
+            .filter(|l| !l.contains("spfft_marshal_ns_total"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(schema_check_prometheus(&stripped).is_err());
+        let unlabeled =
+            prom.replace("spfft_exec_groups_total{mode=\"panel\"}", "spfft_exec_groups_total");
+        let err = schema_check_prometheus(&unlabeled).unwrap_err();
+        assert!(err.contains("mode="), "unhelpful error: {err}");
+    }
+
+    #[test]
     fn sharded_exports_carry_per_shard_labels_and_validate() {
         let mut shard1 = sample_snapshot();
         shard1.submitted = 7;
@@ -1263,6 +1391,8 @@ mod tests {
         assert_eq!(arr[1].get("shard").as_usize(), Some(1));
         assert_eq!(arr[1].get("rejected_shed").as_usize(), Some(2));
         assert_eq!(arr[1].get("coalesce_hits").as_usize(), Some(3));
+        assert_eq!(arr[1].get("exec_panel_groups").as_usize(), Some(3));
+        assert_eq!(arr[1].get("marshal_ns_total").as_usize(), Some(120_000));
         // dropping a per-shard rejection counter is a hard error
         let broken = text.replace("\"rejected_stopped\"", "\"rejected_gone\"");
         assert!(schema_check_snapshot(&json::parse(&broken).unwrap()).is_err());
@@ -1274,6 +1404,8 @@ mod tests {
         assert!(prom.contains("spfft_shard_submitted_total{shard=\"1\"} 7"));
         assert!(prom.contains("spfft_shard_rejected_total{shard=\"1\",reason=\"shed\"} 2"));
         assert!(prom.contains("spfft_shard_coalesce_hits_total{shard=\"1\"} 3"));
+        assert!(prom.contains("spfft_shard_exec_groups_total{shard=\"0\",mode=\"panel\"} 3"));
+        assert!(prom.contains("spfft_shard_marshal_ns_total{shard=\"1\"} 120000"));
         // a shard sample without its shard label is a hard error
         let unlabeled = prom.replace("spfft_shard_submitted_total{shard=\"0\"}", "spfft_shard_submitted_total");
         let err = schema_check_prometheus(&unlabeled).unwrap_err();

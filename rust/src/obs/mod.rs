@@ -162,6 +162,7 @@ mod tests {
                 kind: TransformKind::Forward,
                 batch: 4,
                 isa: crate::isa::Isa::Scalar,
+                span: crate::autotune::SampleSpan::Edge,
                 ns: 400.0,
             },
             EdgeSample {
@@ -171,8 +172,12 @@ mod tests {
                 kind: TransformKind::Forward,
                 batch: 4,
                 isa: crate::isa::Isa::Scalar,
+                span: crate::autotune::SampleSpan::Edge,
                 ns: 900.0,
             },
+            // marshal spans are data movement, not catalog cells — the
+            // attribution table must not grow a bogus RU@0 row
+            EdgeSample::marshal(TransformKind::Forward, 4, crate::isa::Isa::Scalar, 555.0),
         ]);
         assert_eq!(obs.attribution().len(), 2);
         let cells = obs.attribution().cells();

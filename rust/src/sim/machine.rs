@@ -194,6 +194,17 @@ impl Machine {
         b as f64 * (mem_cyc * ctx_mult_b * thrash + compute_cyc) * p.ns_per_cyc()
     }
 
+    /// Simulated whole-batch time of *one direction* of the serving
+    /// path's panel marshal — the gather transpose of `b` request
+    /// buffers into an [n][B_padded] lane-blocked panel, or the
+    /// scatter back out (see [`super::memory::marshal_ns`]). A panel
+    /// round trip costs two of these; `cost::exec_mode_for` adds both
+    /// endpoints when comparing panel against scalar-sequential
+    /// execution.
+    pub fn marshal_ns(&self, n: usize, b: usize) -> f64 {
+        super::memory::marshal_ns(&self.params, n, b)
+    }
+
     /// Steady-state time of a full plan: every edge is costed in its true
     /// context; the first edge's context is the *last* edge of the plan
     /// (benchmark loops run the arrangement back-to-back, so in steady

@@ -201,6 +201,33 @@ pub fn mem_ns_batched(
         * thrash_factor(p, n, bp)
 }
 
+/// Whole-batch cost (ns) of *one direction* of the panel marshal: the
+/// gather transpose of `b` request buffers into an [n][B_padded]
+/// lane-blocked panel, or the scatter back out. This is the serving
+/// path's data-movement tax that no edge cost sees — the paper's thesis
+/// applied to the marshalling boundary: price it like every other step
+/// and let the planner decide whether the panel round trip pays for
+/// itself (`cost::exec_mode_for`).
+///
+/// The model: each live buffer moves read+write (16·n bytes per
+/// transform); the padding lanes are zero-filled write-only
+/// (8·n·(B_padded−B) bytes); the whole walk runs at
+/// `marshal_bw_frac` of the streaming bandwidth (one side of the
+/// transpose is always lane-strided — it cannot stream); each request
+/// pays a fixed loop overhead; and the resident panel pays the same
+/// cache-thrash bound as the batched passes it feeds.
+pub fn marshal_ns(p: &MachineParams, n: usize, b: usize) -> f64 {
+    if b == 0 {
+        return 0.0;
+    }
+    let bp = p.padded_batch(b);
+    let live_bytes = round_trip_bytes(n) * b as f64;
+    let pad_bytes = (8 * n * (bp - b)) as f64;
+    let cyc = (live_bytes + pad_bytes) / (p.l1_bw_bytes_cyc * p.marshal_bw_frac)
+        + b as f64 * p.marshal_overhead_cyc;
+    cyc * p.ns_per_cyc() * thrash_factor(p, n, bp)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +367,48 @@ mod tests {
         let b2 = mem_ns_batched(&p, 1024, EdgeType::R4, 0, Start, 2);
         let b4 = mem_ns_batched(&p, 1024, EdgeType::R4, 0, Start, 4);
         assert!((b2 - 2.0 * b4).abs() < 1e-9, "b2={b2} b4={b4}");
+    }
+
+    #[test]
+    fn marshal_prices_live_bytes_pad_lanes_and_overhead() {
+        let p = m1();
+        // Full lane group, within capacity: pure formula, thrash = 1.
+        let b = 4;
+        let n = 256;
+        let want = ((16 * n * b) as f64 / (p.l1_bw_bytes_cyc * p.marshal_bw_frac)
+            + b as f64 * p.marshal_overhead_cyc)
+            * p.ns_per_cyc();
+        assert_eq!(marshal_ns(&p, n, b), want);
+        // Padding lanes add write-only (half-rate) bytes: B=2 pads to 4,
+        // costing 2 live round trips + 2 pad writes — strictly between
+        // 2 and 4 live round trips' worth of traffic.
+        let b2 = marshal_ns(&p, n, 2);
+        let per_live = (16 * n) as f64 / (p.l1_bw_bytes_cyc * p.marshal_bw_frac) * p.ns_per_cyc();
+        let ovh2 = 2.0 * p.marshal_overhead_cyc * p.ns_per_cyc();
+        assert!((b2 - (2.0 * per_live + 2.0 * per_live / 2.0 + ovh2)).abs() < 1e-9);
+        assert_eq!(marshal_ns(&p, n, 0), 0.0);
+    }
+
+    #[test]
+    fn marshal_is_much_slower_than_the_streaming_round_trip() {
+        // The transpose cannot stream: per byte it runs at
+        // marshal_bw_frac of the bandwidth every edge's round trip gets.
+        let p = m1();
+        let stream_ns = round_trip_bytes(1024) / p.l1_bw_bytes_cyc * p.ns_per_cyc();
+        let marshal_per_tx = marshal_ns(&p, 1024, 16) / 16.0;
+        assert!(marshal_per_tx > 2.0 * stream_ns, "{marshal_per_tx} vs {stream_ns}");
+    }
+
+    #[test]
+    fn marshal_pays_the_same_thrash_bound_as_the_panel_it_feeds() {
+        let p = m1();
+        // n=1024, 16 lanes: exactly at capacity — no thrash.
+        let per_at_cap = marshal_ns(&p, 1024, 16) / 16.0;
+        // 32 lanes: the panel overflows; per-request marshal cost grows.
+        let per_over = marshal_ns(&p, 1024, 32) / 32.0;
+        assert!(per_over > per_at_cap, "{per_over} vs {per_at_cap}");
+        let ratio = marshal_ns(&p, 1024, 32) / (2.0 * marshal_ns(&p, 1024, 16));
+        assert!((ratio - thrash_factor(&p, 1024, 32)).abs() < 1e-9);
     }
 
     #[test]

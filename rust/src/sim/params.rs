@@ -144,6 +144,18 @@ pub struct MachineParams {
     /// across-the-board residency bonus, between the affinity bonuses
     /// and neutral.
     pub after_boundary_mem: f64,
+    /// Effective fraction of `l1_bw_bytes_cyc` the gather/scatter panel
+    /// transpose sustains. The marshal walk is the pathological L1
+    /// pattern: each request buffer streams sequentially but writes
+    /// (gather) or reads (scatter) lane-strided panel columns —
+    /// store-port bound, no line-filling on the strided side, so it
+    /// runs well below the streaming round-trip bandwidth every edge
+    /// pays. See `memory::marshal_ns`.
+    pub marshal_bw_frac: f64,
+    /// Fixed per-request overhead of the marshal loop, in cycles (lane
+    /// indexing, bounds checks, loop setup per gathered/scattered
+    /// buffer).
+    pub marshal_overhead_cyc: f64,
     /// The machine's native vector unit: the ISA the calibrated tables
     /// above describe (M1 = NEON, Haswell = AVX2). Surfaces pinned to
     /// other backends reprice through `isa_mult` / `isa_fused_mult`.
@@ -204,6 +216,10 @@ impl MachineParams {
             // The RU walk re-touches the whole buffer: everything is
             // L1-resident for the next pass, with no stride alignment.
             after_boundary_mem: 0.90,
+            // Firestorm's store pipes keep the lane-strided transpose
+            // at ~1/3 of the streaming round-trip bandwidth.
+            marshal_bw_frac: 0.35,
+            marshal_overhead_cyc: 12.0,
             // Calibrated for 128-bit NEON; indexed [scalar, portable,
             // neon, avx2]. Scalar collapses the 4-lane groups (softened
             // by Firestorm's 8-wide scalar issue); portable std::simd
@@ -264,6 +280,10 @@ impl MachineParams {
             // Weak context effects on the 2015-era Haswell model.
             unpack_after_fused: 0.9,
             after_boundary_mem: 0.98,
+            // Haswell's single store port makes the strided transpose
+            // side even slower relative to its streaming bandwidth.
+            marshal_bw_frac: 0.25,
+            marshal_overhead_cyc: 20.0,
             // Calibrated for 256-bit AVX2; indexed [scalar, portable,
             // neon, avx2]. Scalar collapses the 8-lane groups (Haswell's
             // 4-wide issue softens less than Firestorm's); portable
@@ -389,6 +409,8 @@ mod tests {
             assert!(m.batch_thrash > 0.0);
             assert!(m.unpack_after_fused > 0.0 && m.unpack_after_fused < 1.0);
             assert!(m.after_boundary_mem > 0.0 && m.after_boundary_mem <= 1.0);
+            assert!(m.marshal_bw_frac > 0.0 && m.marshal_bw_frac <= 1.0);
+            assert!(m.marshal_overhead_cyc >= 0.0);
         }
     }
 

@@ -28,11 +28,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use spfft::autotune::{trace_batch, trace_request, EdgeSample, SampleMode};
+use spfft::autotune::{trace_batch, trace_request_inplace, EdgeSample, SampleMode};
 use spfft::coordinator::{
-    BatchPolicy, CoalescePolicy, CoalesceState, FlushReason, Metrics, MetricsSnapshot, Rejected,
-    ShardRouter,
+    BatchPolicy, CoalescePolicy, CoalesceState, ExecModePolicy, FlushReason, Metrics,
+    MetricsSnapshot, Rejected, ShardRouter,
 };
+use spfft::cost::{batch_class, class_batch, exec_mode_for, ExecMode, SimCost, BATCH_CLASSES};
 use spfft::fft::{BatchBufferPool, CompiledPlan, Executor, SplitComplex};
 use spfft::kind::TransformKind;
 use spfft::obs::{Event, EventKind, Observer, StageTime};
@@ -197,9 +198,18 @@ pub struct Driver {
     /// Every traced edge sample, in feed order (the exact order the
     /// attribution table saw them — bit-exact comparison material).
     pub samples: Vec<EdgeSample>,
+    /// Execution-mode policy, mirroring `ServiceConfig::exec_mode`.
+    /// Defaults to `ForcePanel` — the pre-pricing behavior (groups of
+    /// >= 2 panel, singletons scalar) — so golden traces and attribution
+    /// fixtures that predate the mode decision stay byte-stable; tests
+    /// exercising the priced decision set `Auto` explicitly.
+    pub exec_mode: ExecModePolicy,
     coalesce: CoalesceState<(TransformKind, usize), TraceReq>,
     ex: Executor,
     compiled: Vec<((TransformKind, usize), CompiledPlan)>,
+    /// Per-entry Auto mode tables, priced on the m1 sim model exactly
+    /// like the service's `static_mode_table` (keyed like `compiled`).
+    modes: Vec<((TransformKind, usize), [ExecMode; BATCH_CLASSES])>,
     pool: BatchBufferPool,
     /// Pulled batch sizes, in pull order (empty wake-ups excluded) —
     /// the deterministic equivalent of the service's batch accounting.
@@ -216,6 +226,16 @@ pub struct Driver {
     /// the single virtual worker fall behind a fast trace, building the
     /// genuine queueing delay that overload/shedding tests need.
     pub exec_time: Duration,
+    /// Per-request staging-buffer copies, the zero-copy audit counter:
+    /// the panel gather charges one copy per request (the request's
+    /// data moves into the pooled lane panel); the scatter-back is
+    /// `scatter_lane_into` the request's *own* buffer (no allocation,
+    /// no new buffer), and scalar execution runs in place — both charge
+    /// zero. Before the zero-copy pipeline the panel path also
+    /// allocated a fresh output per request (`scatter_lane`), i.e. two
+    /// buffer copies per request; a panel request now costs exactly one
+    /// and a scalar request exactly zero.
+    pub buffer_copies: u64,
     /// Every shed request, in shed order.
     pub shed: Vec<Shed>,
 }
@@ -226,12 +246,22 @@ impl Driver {
     pub fn new(plans: &[(usize, Plan)], policy: BatchPolicy, coalesce: CoalescePolicy) -> Driver {
         let mut ex = Executor::new();
         let mut compiled = Vec::new();
+        let mut modes = Vec::new();
         for (n, p) in plans {
+            // Price the Auto tables on the m1 sim model of the shared
+            // c2c core, exactly like the service's `static_mode_table`.
+            let mut model = SimCost::m1(*n);
             for kind in [TransformKind::Forward, TransformKind::Inverse] {
                 compiled.push(((kind, *n), ex.compile_kind(p, *n, true, kind)));
+                let table: [ExecMode; BATCH_CLASSES] =
+                    std::array::from_fn(|class| exec_mode_for(&mut model, kind, p, class_batch(class)));
+                modes.push(((kind, *n), table));
             }
             for kind in [TransformKind::RealForward, TransformKind::RealInverse] {
                 compiled.push(((kind, 2 * *n), ex.compile_kind(p, 2 * *n, true, kind)));
+                let table: [ExecMode; BATCH_CLASSES] =
+                    std::array::from_fn(|class| exec_mode_for(&mut model, kind, p, class_batch(class)));
+                modes.push(((kind, 2 * *n), table));
             }
         }
         let clock = VirtualClock::new();
@@ -244,13 +274,16 @@ impl Driver {
             obs,
             trace: None,
             samples: Vec::new(),
+            exec_mode: ExecModePolicy::ForcePanel,
             coalesce: CoalesceState::new(coalesce, policy.max_wait),
             ex,
             compiled,
+            modes,
             pool: BatchBufferPool::new(),
             pulls: Vec::new(),
             shed_deadline: None,
             exec_time: Duration::ZERO,
+            buffer_copies: 0,
             shed: Vec::new(),
         }
     }
@@ -260,6 +293,12 @@ impl Driver {
     /// virtual clock's base).
     pub fn events(&self) -> Vec<Event> {
         self.obs.events()
+    }
+
+    /// Panel-pool reuse counters `(hits, misses)` — the warm-pool audit
+    /// for zero-allocation assertions.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        (self.pool.hits(), self.pool.misses())
     }
 
     /// Run the whole trace to completion (including the final drain of
@@ -399,9 +438,12 @@ impl Driver {
     }
 
     /// Execute ready groups exactly like `WorkerBackend::execute_group`'s
-    /// native path: singletons scalar, groups of >= 2 through a pooled
-    /// lane-blocked batch buffer. Returns the number of groups executed
-    /// (the caller charges `exec_time` per group).
+    /// native path: singletons scalar in place, larger groups per the
+    /// [`Driver::exec_mode`] decision — `Panel` through a pooled
+    /// lane-blocked batch buffer with an allocation-free scatter-back,
+    /// `ScalarSequential` in place on each request's own buffer.
+    /// Returns the number of groups executed (the caller charges
+    /// `exec_time` per group).
     fn execute(
         &mut self,
         ready: Vec<spfft::coordinator::ReadyGroup<(TransformKind, usize), TraceReq>>,
@@ -450,31 +492,73 @@ impl Driver {
                 .map(|(_, cp)| cp)
                 .unwrap_or_else(|| panic!("no plan for {kind} n={n}"));
             let size = group.items.len();
-            let mut traced: Vec<EdgeSample> = Vec::new();
-            let outs: Vec<SplitComplex> = if size == 1 {
-                match &self.trace {
-                    Some(mode) => vec![trace_request(cp, &group.items[0].input, mode, &mut traced)],
-                    None => vec![cp.run_on(&group.items[0].input)],
-                }
+            // The execution-mode decision, mirroring the service: a
+            // singleton is always scalar; larger groups consult the
+            // policy (Auto prices the m1 table computed at compile).
+            let mode = if size < 2 {
+                ExecMode::ScalarSequential
             } else {
-                let mut buf = self.pool.acquire(n, size);
-                let inputs: Vec<&SplitComplex> = group.items.iter().map(|r| &r.input).collect();
-                buf.gather(&inputs);
-                match &self.trace {
-                    Some(mode) => trace_batch(cp, &mut buf, mode, &mut traced),
-                    None => cp.run_batch(&mut buf),
+                match self.exec_mode {
+                    ExecModePolicy::ForceScalar => ExecMode::ScalarSequential,
+                    ExecModePolicy::ForcePanel => ExecMode::Panel,
+                    ExecModePolicy::Auto => self
+                        .modes
+                        .iter()
+                        .find(|(key, _)| *key == group.key)
+                        .map(|(_, m)| m[batch_class(size)])
+                        .unwrap_or(ExecMode::Panel),
                 }
-                let outs = (0..size).map(|lane| buf.scatter_lane(lane)).collect();
-                self.pool.release(buf);
-                outs
             };
+            self.metrics.on_exec_mode(mode, size);
+            let mut items = group.items;
+            let mut traced: Vec<EdgeSample> = Vec::new();
+            match mode {
+                ExecMode::ScalarSequential => {
+                    // In place on each request's own buffer: zero copies.
+                    // Like the service's scalar path, only the first
+                    // request of a sampled group is traced (batch = 1).
+                    let mut first = true;
+                    for req in items.iter_mut() {
+                        match (&self.trace, first) {
+                            (Some(mode), true) => trace_request_inplace(
+                                cp,
+                                &mut req.input.re,
+                                &mut req.input.im,
+                                mode,
+                                &mut traced,
+                            ),
+                            _ => cp.run(&mut req.input.re, &mut req.input.im),
+                        }
+                        first = false;
+                    }
+                }
+                ExecMode::Panel => {
+                    let mut buf = self.pool.acquire(n, size);
+                    {
+                        let inputs: Vec<&SplitComplex> = items.iter().map(|r| &r.input).collect();
+                        buf.gather(&inputs);
+                    }
+                    // One staging copy per request: into the lane panel.
+                    self.buffer_copies += size as u64;
+                    match &self.trace {
+                        Some(mode) => trace_batch(cp, &mut buf, mode, &mut traced),
+                        None => cp.run_batch(&mut buf),
+                    }
+                    // Allocation-free scatter-back into each request's
+                    // own buffer (the zero-copy write-back).
+                    for (lane, req) in items.iter_mut().enumerate() {
+                        buf.scatter_lane_into(lane, &mut req.input);
+                    }
+                    self.pool.release(buf);
+                }
+            }
             let stages: Vec<StageTime> =
                 traced.iter().map(|s| (s.edge, s.stage, s.per_transform_ns())).collect();
             if !traced.is_empty() {
                 self.obs.observe_samples(&traced);
                 self.samples.extend(traced.iter().copied());
             }
-            for (req, out) in group.items.into_iter().zip(outs) {
+            for req in items {
                 let enq_off = self.clock.offset_of(req.enqueued);
                 let latency = now_off.saturating_sub(enq_off);
                 self.metrics.on_complete_kind(req.kind, latency);
@@ -507,7 +591,7 @@ impl Driver {
                     held_windows: group.held_windows,
                     reason: group.reason,
                     paired_singletons: group.paired_singletons,
-                    out,
+                    out: req.input,
                 });
             }
         }

@@ -105,6 +105,7 @@ fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
         autotune: Some(at),
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
 
@@ -219,6 +220,7 @@ fn learned_wisdom_survives_restart_and_preplans_the_drifted_optimum() {
         autotune: Some(at),
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     for i in 0..300u64 {

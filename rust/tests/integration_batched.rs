@@ -38,6 +38,7 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
 
@@ -163,6 +164,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     let rxs: Vec<_> = inputs.iter().map(|x| batched.submit(x.clone()).unwrap()).collect();
@@ -180,6 +182,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     for (input, want_eq) in inputs.iter().zip(&got_batched) {

@@ -42,6 +42,7 @@ fn native_service_end_to_end_with_planner() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     // mixed workload, validate every response
@@ -87,6 +88,7 @@ fn pjrt_service_end_to_end() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     for i in 0..8u64 {
@@ -259,6 +261,7 @@ fn failure_injection_worker_rejects_bad_size_gracefully() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     assert!(svc.submit(SplitComplex::random(64, 0)).is_err());

@@ -1,0 +1,165 @@
+//! Integration: the per-group execution-mode decision.
+//!
+//! The mode decision (scalar-sequential vs lane-blocked panel) is a
+//! pure scheduling choice — it must never change results. These tests
+//! pin that property bit-exactly for every transform kind across batch
+//! sizes on and off the lane boundary, pin the priced m1 flip point
+//! end-to-end on the deterministic harness (small transforms run
+//! scalar, large ones panel, under the same `Auto` policy), and audit
+//! the zero-copy pipeline: a panel request costs exactly one staging
+//! copy (into the pooled lane panel; the scatter-back is in place), a
+//! scalar request costs zero, and a warm pool serves repeat panels
+//! without allocating.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::time::Duration;
+
+use harness::{trace, trace_kinds, Driver};
+use spfft::coordinator::{BatchPolicy, CoalescePolicy, ExecModePolicy};
+use spfft::fft::{Executor, SplitComplex};
+use spfft::kind::{TransformKind, ALL_KINDS};
+use spfft::plan::Plan;
+
+fn policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_millis(2) }
+}
+
+/// log2(64) = 6 stages: R4(2) + R2(1) + F8(3).
+fn small_plan() -> Plan {
+    Plan::parse("R4,R2,F8").unwrap()
+}
+
+/// log2(1024) = 10 stages, unfused: panel amortization dominates.
+fn large_plan() -> Plan {
+    Plan::parse("R4,R4,R4,R4,R2,R2").unwrap()
+}
+
+#[test]
+fn exec_mode_never_changes_results_for_any_kind_or_batch_size() {
+    let plans = [(64usize, small_plan())];
+    // Batch sizes on and off the lane boundary (the panel pads to the
+    // lane width, so odd sizes exercise the padded lanes).
+    for &b in &[1usize, 2, 3, 5, 8] {
+        for kind in ALL_KINDS {
+            // Real kinds ride the half-size c2c core: the harness serves
+            // them at 2n for each configured (n, plan).
+            let n = if kind.is_real() { 128 } else { 64 };
+            let arrivals: Vec<(u64, TransformKind, usize, u64)> =
+                (0..b as u64).map(|i| (0, kind, n, 1000 * b as u64 + i)).collect();
+
+            let mut panel = Driver::new(&plans, policy(8), CoalescePolicy::default());
+            panel.exec_mode = ExecModePolicy::ForcePanel;
+            let mut got_panel = panel.run(trace_kinds(&arrivals));
+            got_panel.sort_by_key(|c| c.seq);
+
+            let mut scalar = Driver::new(&plans, policy(8), CoalescePolicy::default());
+            scalar.exec_mode = ExecModePolicy::ForceScalar;
+            let mut got_scalar = scalar.run(trace_kinds(&arrivals));
+            got_scalar.sort_by_key(|c| c.seq);
+
+            assert_eq!(got_panel.len(), b);
+            assert_eq!(got_scalar.len(), b);
+            let mut ex = Executor::new();
+            let cp = ex.compile_kind(&small_plan(), n, true, kind);
+            for (p, s) in got_panel.iter().zip(&got_scalar) {
+                // The mode decision is bit-invisible: panel and scalar
+                // agree exactly, and both equal the direct API.
+                assert_eq!(p.out.re, s.out.re, "{kind} b={b} re drift across modes");
+                assert_eq!(p.out.im, s.out.im, "{kind} b={b} im drift across modes");
+                let want = cp.run_on(&SplitComplex::random(n, p.seed));
+                assert_eq!(p.out.re, want.re, "{kind} b={b} re drift vs direct API");
+                assert_eq!(p.out.im, want.im, "{kind} b={b} im drift vs direct API");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_mode_pins_the_m1_flip_point_end_to_end() {
+    // The priced decision on the m1 model: a 16-wide group of n=64
+    // transforms is cheaper sequential (the panel round trip outweighs
+    // the amortization), the same group shape at n=1024 is cheaper as a
+    // panel. Same policy, same batch size — only the transform changed.
+    let mut small = Driver::new(&[(64, small_plan())], policy(16), CoalescePolicy::default());
+    small.exec_mode = ExecModePolicy::Auto;
+    let specs: Vec<(u64, usize, u64)> = (0..16).map(|i| (0, 64, i)).collect();
+    let done = small.run(trace(&specs));
+    assert_eq!(done.len(), 16);
+    let snap = small.metrics.snapshot();
+    assert_eq!(snap.exec_scalar_groups, 1, "n=64 x16 must run scalar-sequential on m1");
+    assert_eq!(snap.exec_panel_groups, 0);
+    assert_eq!(snap.exec_scalar_requests, 16);
+    assert_eq!(small.buffer_copies, 0, "scalar execution is in place: zero staging copies");
+
+    let mut large = Driver::new(&[(1024, large_plan())], policy(16), CoalescePolicy::default());
+    large.exec_mode = ExecModePolicy::Auto;
+    let specs: Vec<(u64, usize, u64)> = (0..16).map(|i| (0, 1024, i)).collect();
+    let done = large.run(trace(&specs));
+    assert_eq!(done.len(), 16);
+    let snap = large.metrics.snapshot();
+    assert_eq!(snap.exec_panel_groups, 1, "n=1024 x16 must run as a panel on m1");
+    assert_eq!(snap.exec_scalar_groups, 0);
+    assert_eq!(snap.exec_panel_requests, 16);
+    assert_eq!(large.buffer_copies, 16, "exactly one staging copy per panel request");
+}
+
+#[test]
+fn panel_path_is_single_copy_per_request_with_a_warm_pool() {
+    // Two pulls of 8 same-key requests, both forced through the panel:
+    // the first acquires a fresh panel (pool miss), the second reuses
+    // it (pool hit, zero allocation), and every request costs exactly
+    // one staging copy end-to-end — the scatter-back lands in the
+    // request's own buffer.
+    let mut driver = Driver::new(&[(64, small_plan())], policy(8), CoalescePolicy::default());
+    driver.exec_mode = ExecModePolicy::ForcePanel;
+    let mut specs: Vec<(u64, usize, u64)> = (0..8).map(|i| (0, 64, i)).collect();
+    specs.extend((0..8).map(|i| (10_000, 64, 100 + i)));
+    let done = driver.run(trace(&specs));
+    assert_eq!(done.len(), 16);
+    assert_eq!(driver.buffer_copies, 16, "one copy per request, down from two");
+    let (hits, misses) = driver.pool_stats();
+    assert_eq!(misses, 1, "first panel allocates");
+    assert_eq!(hits, 1, "repeat panel reuses the pooled buffer");
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.exec_panel_groups, 2);
+    assert_eq!(snap.exec_panel_requests, 16);
+
+    // The identical trace forced scalar: zero copies, pool never touched.
+    let mut scalar = Driver::new(&[(64, small_plan())], policy(8), CoalescePolicy::default());
+    scalar.exec_mode = ExecModePolicy::ForceScalar;
+    let scalar_done = scalar.run(trace(&specs));
+    assert_eq!(scalar.buffer_copies, 0);
+    assert_eq!(scalar.pool_stats(), (0, 0));
+    // And bit-identical outputs, request for request.
+    let mut a: Vec<_> = done.iter().map(|c| (c.seq, &c.out)).collect();
+    let mut b: Vec<_> = scalar_done.iter().map(|c| (c.seq, &c.out)).collect();
+    a.sort_by_key(|(seq, _)| *seq);
+    b.sort_by_key(|(seq, _)| *seq);
+    for ((sa, oa), (sb, ob)) in a.iter().zip(&b) {
+        assert_eq!(sa, sb);
+        assert_eq!(oa.re, ob.re);
+        assert_eq!(oa.im, ob.im);
+    }
+}
+
+#[test]
+fn singletons_stay_scalar_and_the_split_accounts_every_group() {
+    // A group of 4 plus a later singleton under ForcePanel: the group
+    // panels, the singleton (nothing to amortize) runs scalar in place.
+    let mut driver = Driver::new(&[(64, small_plan())], policy(4), CoalescePolicy::default());
+    driver.exec_mode = ExecModePolicy::ForcePanel;
+    let mut specs: Vec<(u64, usize, u64)> = (0..4).map(|i| (0, 64, i)).collect();
+    specs.push((10_000, 64, 99));
+    let done = driver.run(trace(&specs));
+    assert_eq!(done.len(), 5);
+    let snap = driver.metrics.snapshot();
+    assert_eq!(snap.exec_panel_groups, 1);
+    assert_eq!(snap.exec_panel_requests, 4);
+    assert_eq!(snap.exec_scalar_groups, 1);
+    assert_eq!(snap.exec_scalar_requests, 1);
+    // Panel + scalar groups partition the executed groups exactly.
+    assert_eq!(snap.exec_panel_groups + snap.exec_scalar_groups, snap.groups);
+    assert_eq!(driver.buffer_copies, 4, "only the panel group stages copies");
+}

@@ -165,6 +165,7 @@ fn coalescing_service_serves_mixed_kind_traffic_correctly() {
         autotune: None,
         shed_deadline: None,
         observer: None,
+        exec_mode: Default::default(),
     })
     .unwrap();
     use TransformKind::*;

@@ -240,6 +240,7 @@ fn plan_samples(prior: &Wisdom, plan: &Plan, factor: f64) -> Vec<EdgeSample> {
                 kind: TransformKind::Forward,
                 batch: 1,
                 isa: spfft::isa::Isa::Scalar,
+                span: spfft::autotune::SampleSpan::Edge,
                 ns,
             };
             ctx = Context::After(e);
