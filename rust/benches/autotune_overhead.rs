@@ -139,6 +139,7 @@ fn trajectory_section(quick: bool) -> Trajectory {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .expect("service");
 

@@ -33,6 +33,7 @@ fn main() {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .expect("service");
         let t0 = Instant::now();

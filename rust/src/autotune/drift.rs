@@ -24,6 +24,15 @@
 //! Detection uses the raw live means (fast to react); the re-planner's
 //! search uses the prior-damped blend (slow to overreact) — the classic
 //! fast-detector/slow-actor split.
+//!
+//! A second, slower trigger rides on the same comparison: the *residual
+//! streak*. A cell whose deviation stays past the (lower) streak
+//! threshold for K consecutive checks fires a drift event even though no
+//! single check ever crossed the main threshold — the signature of slow
+//! co-tenant pressure, where the EWMA tracks a persistent few-percent
+//! residual that per-window detection keeps reading as noise. Streaks
+//! reset whenever the cell drops back under the streak threshold, and on
+//! rebase (the movement was accepted as the new operating point).
 
 use std::collections::HashMap;
 
@@ -44,6 +53,12 @@ pub struct DriftReport {
     pub max_rel_dev: f64,
     /// The cell behind `max_rel_dev`.
     pub worst: Option<(EdgeType, usize, Context)>,
+    /// The residual-streak trigger fired: some cell stayed past the
+    /// streak threshold for the configured number of consecutive checks
+    /// (possibly without ever crossing the main threshold).
+    pub streak_fired: bool,
+    /// The cell behind `streak_fired` (the longest-running streak).
+    pub streak_cell: Option<(EdgeType, usize, Context)>,
 }
 
 impl DriftReport {
@@ -53,8 +68,14 @@ impl DriftReport {
             Some((e, s, ctx)) => format!(", worst {e}@{s} in {ctx}"),
             None => String::new(),
         };
+        let streak = match &self.streak_cell {
+            Some((e, s, ctx)) if self.streak_fired => {
+                format!(", residual streak on {e}@{s} in {ctx}")
+            }
+            _ => String::new(),
+        };
         format!(
-            "{}: {}/{} cells over, max dev {:.1}%{worst}",
+            "{}: {}/{} cells over, max dev {:.1}%{worst}{streak}",
             if self.drifted { "drifted" } else { "stable" },
             self.cells_over,
             self.cells_checked,
@@ -76,6 +97,15 @@ pub struct DriftDetector {
     threshold: f64,
     min_samples: u64,
     min_cells: usize,
+    /// Residual-streak trigger: deviation a cell must sustain to extend
+    /// its streak (normally well under `threshold`).
+    streak_threshold: f64,
+    /// Consecutive checks past `streak_threshold` that fire the streak
+    /// trigger (0 = disabled).
+    streak_windows: u32,
+    /// Live streak counters per (cell, class); a check under the streak
+    /// threshold resets the cell's counter.
+    streaks: HashMap<(Cell, usize), u32>,
 }
 
 impl DriftDetector {
@@ -91,7 +121,20 @@ impl DriftDetector {
             threshold,
             min_samples: min_samples.max(1),
             min_cells: min_cells.max(1),
+            streak_threshold: threshold,
+            streak_windows: 0,
+            streaks: HashMap::new(),
         }
+    }
+
+    /// Enable the residual-streak trigger: a cell sustaining a deviation
+    /// past `threshold` for `windows` consecutive checks flags drift even
+    /// when per-window detection stays quiet. `windows = 0` disables.
+    pub fn with_streak(mut self, threshold: f64, windows: u32) -> DriftDetector {
+        assert!(windows == 0 || threshold > 0.0, "streak threshold must be positive");
+        self.streak_threshold = threshold;
+        self.streak_windows = windows;
+        self
     }
 
     /// Reference = the offline prior (the initial plan's search weights),
@@ -113,14 +156,19 @@ impl DriftDetector {
     /// Compare live per-transform means against the reference. A class
     /// without its own reference falls back to the class-0 (unbatched)
     /// reference, so newly-batched traffic is judged against the prior.
-    pub fn check(&self, model: &OnlineCost) -> DriftReport {
+    /// Mutates only the residual-streak counters.
+    pub fn check(&mut self, model: &OnlineCost) -> DriftReport {
         let mut report = DriftReport {
             drifted: false,
             cells_checked: 0,
             cells_over: 0,
             max_rel_dev: 0.0,
             worst: None,
+            streak_fired: false,
+            streak_cell: None,
         };
+        let mut streaks = HashMap::new();
+        let mut longest = 0u32;
         for ((cell, class), est) in model.observed_cells() {
             if est.count < self.min_samples {
                 continue;
@@ -141,8 +189,29 @@ impl DriftDetector {
             if rel > self.threshold {
                 report.cells_over += 1;
             }
+            // Streak bookkeeping: cells past the streak threshold extend
+            // their counter; everything else resets by omission (the new
+            // map only keeps cells that sustained the residual).
+            if self.streak_windows > 0 && rel > self.streak_threshold {
+                let run = self.streaks.get(&(cell, class)).copied().unwrap_or(0) + 1;
+                streaks.insert((cell, class), run);
+                if run >= self.streak_windows && run > longest {
+                    longest = run;
+                    report.streak_fired = true;
+                    report.streak_cell = Some(cell);
+                }
+            }
         }
-        report.drifted = report.cells_over >= self.min_cells;
+        if self.streak_windows > 0 {
+            self.streaks = streaks;
+            if report.streak_fired {
+                // The trigger hands off to the re-planner; start the next
+                // streak from zero instead of re-firing every check while
+                // the search and rebase are still in flight.
+                self.streaks.clear();
+            }
+        }
+        report.drifted = report.cells_over >= self.min_cells || report.streak_fired;
         report
     }
 
@@ -160,6 +229,9 @@ impl DriftDetector {
                 .entry((cell, class))
                 .or_insert_with(|| model.estimate_at(cell, class));
         }
+        // The rebased weights are the new operating point; sustained
+        // residuals against the *old* reference are no longer movement.
+        self.streaks.clear();
     }
 
     /// The reference weight for a (cell, class) (tests / introspection).
@@ -213,7 +285,7 @@ mod tests {
 
     #[test]
     fn no_observations_no_drift() {
-        let (model, det, _) = setup(256);
+        let (model, mut det, _) = setup(256);
         let r = det.check(&model);
         assert!(!r.drifted);
         assert_eq!(r.cells_checked, 0);
@@ -221,7 +293,7 @@ mod tests {
 
     #[test]
     fn on_reference_observations_do_not_drift() {
-        let (mut model, det, w) = setup(256);
+        let (mut model, mut det, w) = setup(256);
         for &(e, s, ctx, ns) in w.cells.iter().take(10) {
             feed(&mut model, (e, s, ctx), ns, 5);
         }
@@ -232,7 +304,7 @@ mod tests {
 
     #[test]
     fn inflated_cell_trips_after_min_samples() {
-        let (mut model, det, w) = setup(256);
+        let (mut model, mut det, w) = setup(256);
         let (e, s, ctx, ns) = w.cells[0];
         feed(&mut model, (e, s, ctx), ns * 3.0, 2);
         assert!(!det.check(&model).drifted, "tripped below min_samples");
@@ -249,7 +321,7 @@ mod tests {
         // Heavily-batched traffic whose per-transform cost halves (real
         // amortization) must read as drift against the unbatched prior —
         // that is the trigger for re-planning at the new batch regime.
-        let (mut model, det, w) = setup(256);
+        let (mut model, mut det, w) = setup(256);
         let (e, s, ctx, ns) = w.cells[0];
         feed_b(&mut model, (e, s, ctx), 16, 16.0 * ns * 0.5, 10);
         let r = det.check(&model);
@@ -281,5 +353,64 @@ mod tests {
         // reference is now the blended estimate; the live mean sits within
         // threshold of it (blend weight 20/24 leaves a small gap)
         assert!(!r.drifted, "still drifted after rebase: dev {}", r.max_rel_dev);
+    }
+
+    #[test]
+    fn persistent_sub_threshold_residual_fires_via_streak() {
+        // 15% deviation: under the 25% main threshold (never a drifted
+        // cell), over the 10% streak threshold. Three consecutive checks
+        // must fire the streak trigger; the first two stay quiet.
+        let (mut model, det, w) = setup(256);
+        let mut det = det.with_streak(0.1, 3);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed(&mut model, (e, s, ctx), ns * 1.15, 5);
+        for window in 1..=2 {
+            let r = det.check(&model);
+            assert!(!r.drifted, "fired after only {window} window(s)");
+            assert_eq!(r.cells_over, 0, "15% must stay under the main threshold");
+        }
+        let r = det.check(&model);
+        assert!(r.drifted, "streak of 3 did not fire");
+        assert!(r.streak_fired);
+        assert_eq!(r.cells_over, 0, "main trigger must stay quiet");
+        assert_eq!(r.streak_cell, Some((e, s, ctx)));
+        // Firing hands off to the re-planner: the counter restarts, so
+        // the very next check is quiet again.
+        assert!(!det.check(&model).drifted);
+    }
+
+    #[test]
+    fn recovering_cell_resets_its_streak() {
+        let (mut model, det, w) = setup(256);
+        let mut det = det.with_streak(0.1, 3);
+        let (e, s, ctx, ns) = w.cells[0];
+        // alpha 0.5: two windows over, then the cell recovers to the
+        // reference before the streak completes
+        feed(&mut model, (e, s, ctx), ns * 1.2, 4);
+        assert!(!det.check(&model).drifted);
+        assert!(!det.check(&model).drifted);
+        feed(&mut model, (e, s, ctx), ns, 40); // EWMA back onto reference
+        assert!(!det.check(&model).drifted, "recovered cell still counted");
+        // the streak restarted from zero: two more deviating windows
+        // must not fire
+        feed(&mut model, (e, s, ctx), ns * 1.2, 10);
+        assert!(!det.check(&model).drifted);
+        assert!(!det.check(&model).drifted);
+        let r = det.check(&model);
+        assert!(r.streak_fired, "restarted streak never completed");
+    }
+
+    #[test]
+    fn rebase_clears_streaks() {
+        let (mut model, det, w) = setup(256);
+        let mut det = det.with_streak(0.1, 3);
+        let (e, s, ctx, ns) = w.cells[0];
+        feed(&mut model, (e, s, ctx), ns * 1.15, 5);
+        assert!(!det.check(&model).drifted);
+        assert!(!det.check(&model).drifted);
+        det.rebase(&model); // movement accepted as the operating point
+        // the old two-window run is gone AND the reference moved: quiet
+        let r = det.check(&model);
+        assert!(!r.drifted, "streak survived rebase: {}", r.summary());
     }
 }

@@ -53,8 +53,8 @@ pub use drift::{DriftDetector, DriftReport};
 pub use model::{batch_class, class_batch, CellEstimate, OnlineCost, BATCH_CLASSES};
 pub use replanner::{Autotuner, AutotuneStatus, ModeTable};
 pub use sampler::{
-    trace_batch, trace_request, trace_request_inplace, EdgeSample, SampleMode, SampleSpan,
-    TraceSampler,
+    trace_batch, trace_exec_inplace, trace_request, trace_request_inplace, EdgeSample, SampleMode,
+    SampleSpan, TraceSampler,
 };
 pub use swap::{PlanSlot, VersionedPlan};
 pub use wisdom2::WisdomV2;
@@ -119,6 +119,14 @@ pub struct AutotuneConfig {
     pub drift_min_cells: usize,
     /// Sampled requests between drift checks.
     pub check_every: u64,
+    /// Residual-streak trigger: relative deviation a cell must *sustain*
+    /// across consecutive drift checks to count toward a streak. Lower
+    /// than `drift_threshold` by design — the streak catches persistent
+    /// few-percent residuals the per-window check reads as noise.
+    pub streak_threshold: f64,
+    /// Consecutive drift checks past `streak_threshold` that fire a
+    /// drift event on their own (0 disables the streak trigger).
+    pub streak_windows: u32,
     /// Required predicted improvement before a hot swap ((old − new)/old).
     pub hysteresis: f64,
     /// EWMA smoothing factor for live cell estimates (0 < α ≤ 1).
@@ -160,6 +168,8 @@ impl AutotuneConfig {
             drift_min_samples: 8,
             drift_min_cells: 1,
             check_every: 16,
+            streak_threshold: 0.1,
+            streak_windows: 4,
             hysteresis: 0.05,
             ewma_alpha: 0.2,
             blend_samples: 8.0,
@@ -193,6 +203,8 @@ impl fmt::Debug for AutotuneConfig {
             .field("drift_min_samples", &self.drift_min_samples)
             .field("drift_min_cells", &self.drift_min_cells)
             .field("check_every", &self.check_every)
+            .field("streak_threshold", &self.streak_threshold)
+            .field("streak_windows", &self.streak_windows)
             .field("hysteresis", &self.hysteresis)
             .field("ewma_alpha", &self.ewma_alpha)
             .field("blend_samples", &self.blend_samples)

@@ -92,6 +92,22 @@ pub struct OnlineCost {
     /// transpose is kind-, plan-, and ISA-agnostic data movement, so a
     /// single class axis suffices.
     marshal_obs: HashMap<usize, CellEstimate>,
+    /// Offline prior for one blocked-execution transpose walk over a
+    /// rows×cols matrix — seeded from the simulator's `transpose_ns` so
+    /// flat-vs-blocked decisions start calibrated. Keyed by shape: the
+    /// blocked candidates for one n differ only in (p, q).
+    transpose_prior: HashMap<(usize, usize), f64>,
+    /// Live EWMA of traced blocked-boundary transpose samples (gather,
+    /// scatter, and final walks each count as one transpose of the
+    /// active (p, q) — the same three-walk convention the planner
+    /// prices). Fed by [`OnlineCost::observe_transpose`]; like the
+    /// marshal store this is plan-, kind-, and ISA-agnostic movement.
+    transpose_obs: HashMap<(usize, usize), CellEstimate>,
+    /// Offline prior for the inter-block twiddle pass over an nn-point
+    /// matrix (nn = p·q of the blocked candidate).
+    blocktw_prior: HashMap<usize, f64>,
+    /// Live EWMA of traced block-twiddle samples, keyed the same way.
+    blocktw_obs: HashMap<usize, CellEstimate>,
 }
 
 impl OnlineCost {
@@ -117,6 +133,28 @@ impl OnlineCost {
             obs: HashMap::new(),
             marshal_prior: HashMap::new(),
             marshal_obs: HashMap::new(),
+            transpose_prior: HashMap::new(),
+            transpose_obs: HashMap::new(),
+            blocktw_prior: HashMap::new(),
+            blocktw_obs: HashMap::new(),
+        }
+    }
+
+    /// One EWMA fold into a keyed estimate store.
+    fn fold<K: std::hash::Hash + Eq>(
+        store: &mut HashMap<K, CellEstimate>,
+        key: K,
+        alpha: f64,
+        value: f64,
+    ) {
+        match store.get_mut(&key) {
+            Some(est) => {
+                est.mean = alpha * value + (1.0 - alpha) * est.mean;
+                est.count += 1;
+            }
+            None => {
+                store.insert(key, CellEstimate { mean: value, count: 1 });
+            }
         }
     }
 
@@ -225,6 +263,64 @@ impl OnlineCost {
         self.marshal_obs.get(&class).copied()
     }
 
+    /// Install the offline prior for one blocked transpose walk over a
+    /// rows×cols matrix (whole-pass ns, e.g. the simulator's
+    /// `transpose_ns`).
+    pub fn set_transpose_prior(&mut self, rows: usize, cols: usize, ns: f64) {
+        if ns.is_finite() && ns > 0.0 {
+            self.transpose_prior.insert((rows, cols), ns);
+        }
+    }
+
+    /// Install the offline prior for the inter-block twiddle pass over
+    /// an nn-point matrix.
+    pub fn set_block_twiddle_prior(&mut self, nn: usize, ns: f64) {
+        if ns.is_finite() && ns > 0.0 {
+            self.blocktw_prior.insert(nn, ns);
+        }
+    }
+
+    /// Fold one traced blocked-transpose sample (the gather, scatter,
+    /// or final walk of a rows×cols blocked run — each is one transpose
+    /// under the planner's three-walk pricing). Garbage discarded as in
+    /// [`OnlineCost::observe`].
+    pub fn observe_transpose(&mut self, rows: usize, cols: usize, ns: f64) {
+        if ns.is_finite() && ns > 0.0 {
+            Self::fold(&mut self.transpose_obs, (rows, cols), self.alpha, ns);
+        }
+    }
+
+    /// Fold one traced block-twiddle sample over an nn-point matrix.
+    pub fn observe_block_twiddle(&mut self, nn: usize, ns: f64) {
+        if ns.is_finite() && ns > 0.0 {
+            Self::fold(&mut self.blocktw_obs, nn, self.alpha, ns);
+        }
+    }
+
+    /// Raw live transpose estimate for a shape; `None` until sampled.
+    pub fn transpose_observation(&self, rows: usize, cols: usize) -> Option<CellEstimate> {
+        self.transpose_obs.get(&(rows, cols)).copied()
+    }
+
+    /// Raw live block-twiddle estimate for a size; `None` until sampled.
+    pub fn block_twiddle_observation(&self, nn: usize) -> Option<CellEstimate> {
+        self.blocktw_obs.get(&nn).copied()
+    }
+
+    /// Confidence blend of an optional prior and optional live estimate;
+    /// `None` when neither exists (caller falls back to its proxy).
+    fn blend(&self, prior: Option<f64>, obs: Option<CellEstimate>) -> Option<f64> {
+        match (prior, obs) {
+            (Some(p), Some(o)) => {
+                let c = o.count as f64 / (o.count as f64 + self.blend_samples);
+                Some(p * (1.0 - c) + o.mean * c)
+            }
+            (Some(p), None) => Some(p),
+            (None, Some(o)) => Some(o.mean),
+            (None, None) => None,
+        }
+    }
+
     /// Fold one live sample into its (kind, cell, batch class),
     /// normalized per transform (inverse kinds fold onto the forward
     /// slot unless the calibration split is on). Marshal-span samples
@@ -248,6 +344,14 @@ impl OnlineCost {
                     self.marshal_obs.insert(class, CellEstimate { mean: per_tx, count: 1 });
                 }
             }
+            return;
+        }
+        if sample.edge.is_boundary() && sample.edge != EdgeType::RU {
+            // Blocked-boundary samples (TR/BT) carry a matrix shape the
+            // generic sample has no field for; the coordinator routes
+            // them through `observe_transpose` / `observe_block_twiddle`
+            // with the active plan's (p, q). A shapeless one reaching
+            // here would fold walks of different sizes into one cell.
             return;
         }
         let key = (
@@ -511,6 +615,34 @@ impl CostModel for OnlineCost {
             }
         };
         b as f64 * per_tx
+    }
+
+    /// Whole-pass blocked-transpose estimate for a rows×cols matrix:
+    /// live EWMA blended over the installed offline prior; with
+    /// neither, the trait's cold strided-R2 proxy.
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        let prior = self.transpose_prior.get(&(rows, cols)).copied();
+        let obs = self.transpose_obs.get(&(rows, cols)).copied();
+        match self.blend(prior, obs) {
+            Some(ns) => ns,
+            None => {
+                let trips = (rows * cols) as f64 / self.n as f64;
+                trips * self.edge_ns(EdgeType::R2, 0, Context::Start)
+            }
+        }
+    }
+
+    /// Whole-pass inter-block twiddle estimate, same blend discipline.
+    fn block_twiddle_ns(&mut self, nn: usize) -> f64 {
+        let prior = self.blocktw_prior.get(&nn).copied();
+        let obs = self.blocktw_obs.get(&nn).copied();
+        match self.blend(prior, obs) {
+            Some(ns) => ns,
+            None => {
+                let trips = nn as f64 / self.n as f64;
+                trips * self.edge_ns(EdgeType::R2, 0, Context::Start)
+            }
+        }
     }
 
     /// Surface queries answer from the per-(kind, cell, batch-class)
@@ -929,6 +1061,39 @@ mod tests {
         model.set_marshal_prior(BATCH_CLASSES, 10.0);
         model.set_marshal_prior(2, f64::NAN);
         assert_eq!(model.marshal_observation_at(2), None);
+    }
+
+    #[test]
+    fn blocked_boundary_stores_blend_and_generic_samples_are_rejected() {
+        let mut model = m1_model(1 << 12);
+        // no prior, no samples: the cold strided-R2 proxy, scaled by trips
+        let one_pass = model.edge_ns(EdgeType::R2, 0, Context::Start);
+        assert!((model.transpose_ns(64, 64) - one_pass).abs() < 1e-9);
+        assert!((model.block_twiddle_ns(1 << 12) - one_pass).abs() < 1e-9);
+        // priors answer unobserved shapes
+        model.set_transpose_prior(64, 64, 500.0);
+        model.set_block_twiddle_prior(1 << 12, 900.0);
+        assert_eq!(model.transpose_ns(64, 64), 500.0);
+        assert_eq!(model.block_twiddle_ns(1 << 12), 900.0);
+        // other shapes still proxy
+        assert!((model.transpose_ns(32, 128) - one_pass).abs() < 1e-9);
+        // live samples blend over and eventually dominate the prior
+        for _ in 0..200 {
+            model.observe_transpose(64, 64, 1500.0);
+            model.observe_block_twiddle(1 << 12, 2700.0);
+        }
+        assert!(model.transpose_ns(64, 64) > 1400.0);
+        assert!(model.block_twiddle_ns(1 << 12) > 2500.0);
+        assert_eq!(model.transpose_observation(64, 64).unwrap().count, 200);
+        assert_eq!(model.block_twiddle_observation(1 << 12).unwrap().count, 200);
+        // garbage is discarded
+        model.observe_transpose(64, 64, f64::NAN);
+        model.observe_block_twiddle(1 << 12, -3.0);
+        assert_eq!(model.transpose_observation(64, 64).unwrap().count, 200);
+        // a shapeless TR/BT edge-span sample never pollutes edge cells
+        model.observe(&sample(EdgeType::Transpose, 0, Context::Start, 100.0));
+        model.observe(&sample(EdgeType::BlockTwiddle, 0, Context::Start, 100.0));
+        assert_eq!(model.total_samples(), 0);
     }
 
     #[test]

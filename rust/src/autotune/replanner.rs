@@ -217,7 +217,8 @@ impl Autotuner {
             config.drift_threshold,
             config.drift_min_samples,
             config.drift_min_cells,
-        );
+        )
+        .with_streak(config.streak_threshold, config.streak_windows);
         let predicted = PlanningSurface::for_kind(config.kind)
             .plan_objective_ns(&mut model, &initial_plan);
         let slot = Arc::new(PlanSlot::new(initial_plan.clone(), predicted));
@@ -339,6 +340,23 @@ fn run_loop(
         counters.batches.fetch_add(1, Ordering::Relaxed);
         counters.samples.fetch_add(batch.len() as u64, Ordering::Relaxed);
         for sample in &batch {
+            // Boundary samples from traced blocked executions carry the
+            // active (p, q) shape in their span; route them to the
+            // shape-keyed stores — the generic observe path discards
+            // shapeless TR/BT samples by design. They don't vote on the
+            // batch regime: blocked runs are unbatched.
+            if let SampleSpan::Boundary { rows, cols } = sample.span {
+                match sample.edge {
+                    crate::edge::EdgeType::Transpose => {
+                        model.observe_transpose(rows, cols, sample.ns)
+                    }
+                    crate::edge::EdgeType::BlockTwiddle => {
+                        model.observe_block_twiddle(rows * cols, sample.ns)
+                    }
+                    _ => {}
+                }
+                continue;
+            }
             // Weight by transforms, not sampled executions: 30 groups of
             // 16 outvote 60 singletons, matching how the traffic is
             // actually served.
@@ -417,7 +435,16 @@ fn run_loop(
                 .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             counters.swaps.fetch_add(1, Ordering::Relaxed);
             if let Some(cache) = &config.cache {
-                cache.swap(n, "autotune", &config.prior.source, result.plan.clone());
+                // The tuner re-searches the flat surface (its samples come
+                // from the in-cache serving path); a blocked decision for a
+                // spilled size is re-made by `plan_exec` on top of whatever
+                // flat arrangement this publishes.
+                cache.swap(
+                    n,
+                    "autotune",
+                    &config.prior.source,
+                    crate::plan::ExecPlan::Flat(result.plan.clone()),
+                );
             }
             // The mode decision is plan-shape-sensitive (fused-terminal
             // vs radix-tail): re-price it for the plan we just published.
@@ -622,6 +649,33 @@ mod tests {
         let status = tuner.status();
         assert_eq!(status.plan_batch, 1);
         assert_eq!(status.swaps, 0);
+        tuner.stop();
+    }
+
+    #[test]
+    fn sub_threshold_residual_streak_fires_a_drift_event() {
+        // Every sampled cell runs a steady 15% hot: under the 50% main
+        // threshold (no check ever flags a drifted cell), over the 5%
+        // streak threshold. Two consecutive quiet-but-residual checks
+        // must fire a drift event through the streak trigger.
+        let n = 256;
+        let mut cfg = tight_config(n);
+        cfg.streak_threshold = 0.05;
+        cfg.streak_windows = 2;
+        let prior = cfg.prior.clone();
+        let tuner = Autotuner::start(cfg, initial_plan(n));
+        let plan = tuner.slot().current().plan.clone();
+        for _ in 0..50 {
+            tuner.sampler().submit(plan_samples(&prior, &plan, 1.15));
+            std::thread::sleep(Duration::from_millis(1));
+            if tuner.status().drift_events >= 1 {
+                break;
+            }
+        }
+        assert!(
+            wait_for(|| tuner.status().drift_events >= 1),
+            "persistent 15% residual never fired the streak trigger"
+        );
         tuner.stop();
     }
 

@@ -37,6 +37,15 @@ pub enum SampleSpan {
     /// key marshal samples by batch class alone and must exclude them
     /// from edge attribution.
     Marshal,
+    /// One boundary pass of a blocked (four-step) execution: a transpose
+    /// walk or the inter-block twiddle multiply over the `rows × cols`
+    /// sub-FFT grid. These carry their shape because the online model
+    /// keys boundary observations by it (`observe_transpose` /
+    /// `observe_block_twiddle`) — a shapeless TR/BT sample through the
+    /// generic `observe` path is discarded. They *do* land in edge
+    /// attribution (stage 0 of the boundary edge), so operators see
+    /// where a blocked execution's time actually goes.
+    Boundary { rows: usize, cols: usize },
 }
 
 /// One observed edge execution in its live context.
@@ -88,6 +97,31 @@ impl EdgeSample {
             isa,
             ns,
             span: SampleSpan::Marshal,
+        }
+    }
+
+    /// A boundary-pass sample from a traced blocked execution: `edge` is
+    /// [`EdgeType::Transpose`] or [`EdgeType::BlockTwiddle`], and the
+    /// `rows × cols` shape of the active (p, q) split rides in the span
+    /// so the replanner can route it to the shape-keyed boundary stores.
+    pub fn boundary(
+        edge: EdgeType,
+        rows: usize,
+        cols: usize,
+        kind: TransformKind,
+        isa: Isa,
+        ns: f64,
+    ) -> EdgeSample {
+        debug_assert!(edge.is_boundary() && edge != EdgeType::RU);
+        EdgeSample {
+            edge,
+            stage: 0,
+            ctx: Context::Start,
+            kind,
+            batch: 1,
+            isa,
+            ns,
+            span: SampleSpan::Boundary { rows, cols },
         }
     }
 }
@@ -220,6 +254,39 @@ pub fn trace_request_inplace(
         out.push(EdgeSample { edge, stage, ctx, kind, batch: 1, isa, ns, span: SampleSpan::Edge });
         ctx = Context::After(edge);
     });
+}
+
+/// Trace one in-place execution of a [`crate::fft::CompiledExec`]. Flat
+/// entries delegate to [`trace_request_inplace`] (one sample per plan
+/// step). Blocked entries run the four-step path and collect its four
+/// boundary-pass samples — column gather (TR), panel scatter (TR), block
+/// twiddle (BT), final transpose (TR) — shaped by the active (p, q)
+/// split. Sub-FFT interiors are not sampled: they are ordinary compiled
+/// plans at sub-transform sizes, outside the serving size's attribution
+/// grid. Oracle mode substitutes boundary values like edge values
+/// (`f(edge, 0, Start)`), keeping simulator-driven tests deterministic.
+pub fn trace_exec_inplace(
+    ce: &mut crate::fft::CompiledExec,
+    re: &mut [f32],
+    im: &mut [f32],
+    mode: &SampleMode,
+    out: &mut Vec<EdgeSample>,
+) {
+    match ce {
+        crate::fft::CompiledExec::Flat(cp) => trace_request_inplace(cp, re, im, mode, out),
+        crate::fft::CompiledExec::Blocked(four) => {
+            let kind = four.kind();
+            let isa = four.isa();
+            let (p, q) = four.factors();
+            four.run_traced(re, im, &mut |edge, _stage, measured_ns| {
+                let ns = match mode {
+                    SampleMode::Wallclock => measured_ns,
+                    SampleMode::Oracle(f) => f(edge, 0, Context::Start),
+                };
+                out.push(EdgeSample::boundary(edge, p, q, kind, isa, ns));
+            });
+        }
+    }
 }
 
 /// Batched analogue of [`trace_request`]: execute a gathered batch via

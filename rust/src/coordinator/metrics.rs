@@ -82,6 +82,13 @@ pub struct Metrics {
     /// recover it (upper edges overstate; the saturation bucket is
     /// unbounded).
     max_latency_ns: AtomicU64,
+    /// Global twiddle intern-store counters captured at construction
+    /// ([`crate::fft::twiddle::global_stats`] is process-global and
+    /// monotonic); snapshots report the deltas, i.e. interning activity
+    /// over this sink's lifetime. `Metrics::default()` keeps a zero
+    /// baseline and therefore reports process-lifetime totals.
+    twiddle_hits_base: u64,
+    twiddle_misses_base: u64,
 }
 
 /// Point-in-time snapshot with derived statistics.
@@ -139,6 +146,16 @@ pub struct MetricsSnapshot {
     pub exec_scalar_requests: u64,
     /// Total wall time spent marshalling panels (gather + scatter).
     pub marshal_time: Duration,
+    /// Twiddle-table intern lookups answered by an already-built table
+    /// since this sink was created — the constructions the process-global
+    /// sharing avoided (shards, hot-swap replacement executors, and the
+    /// four-step column/row sub-plans all resolve to one store).
+    pub twiddle_hits: u64,
+    /// First-time twiddle-table constructions over the same window.
+    pub twiddle_misses: u64,
+    /// `twiddle_hits / (twiddle_hits + twiddle_misses)` (0 when the
+    /// window saw no lookups).
+    pub twiddle_hit_rate: f64,
     /// Total worker busy time.
     pub busy: Duration,
     pub latency_p50: Duration,
@@ -149,7 +166,8 @@ pub struct MetricsSnapshot {
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let (twiddle_hits_base, twiddle_misses_base) = crate::fft::twiddle::global_stats();
+        Metrics { twiddle_hits_base, twiddle_misses_base, ..Self::default() }
     }
 
     pub fn on_submit(&self) {
@@ -315,6 +333,9 @@ impl Metrics {
         for (slot, b) in group_size_hist.iter_mut().zip(&self.group_buckets) {
             *slot = b.load(Ordering::Relaxed);
         }
+        let (twiddle_hits_now, twiddle_misses_now) = crate::fft::twiddle::global_stats();
+        let twiddle_hits = twiddle_hits_now.saturating_sub(self.twiddle_hits_base);
+        let twiddle_misses = twiddle_misses_now.saturating_sub(self.twiddle_misses_base);
         let coalesced_flushes = self.coalesced_flushes.load(Ordering::Relaxed);
         let coalesce_hits = self.coalesce_hits.load(Ordering::Relaxed);
         let held_total_ns = self.held_age_ns_total.load(Ordering::Relaxed);
@@ -355,6 +376,13 @@ impl Metrics {
             exec_panel_requests: self.exec_panel_requests.load(Ordering::Relaxed),
             exec_scalar_requests: self.exec_scalar_requests.load(Ordering::Relaxed),
             marshal_time: Duration::from_nanos(self.marshal_ns_total.load(Ordering::Relaxed)),
+            twiddle_hits,
+            twiddle_misses,
+            twiddle_hit_rate: if twiddle_hits + twiddle_misses == 0 {
+                0.0
+            } else {
+                twiddle_hits as f64 / (twiddle_hits + twiddle_misses) as f64
+            },
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
             latency_p50: self.percentile(&counts, total, max_ns, 0.50),
             latency_p95: self.percentile(&counts, total, max_ns, 0.95),
@@ -410,6 +438,9 @@ impl MetricsSnapshot {
             exec_panel_requests: 0,
             exec_scalar_requests: 0,
             marshal_time: Duration::ZERO,
+            twiddle_hits: 0,
+            twiddle_misses: 0,
+            twiddle_hit_rate: 0.0,
             busy: Duration::ZERO,
             latency_p50: Duration::ZERO,
             latency_p95: Duration::ZERO,
@@ -447,6 +478,12 @@ impl MetricsSnapshot {
             out.exec_panel_requests += s.exec_panel_requests;
             out.exec_scalar_requests += s.exec_scalar_requests;
             out.marshal_time += s.marshal_time;
+            // The twiddle intern store is process-global: every shard
+            // observes the same counters, so the fleet view takes the
+            // maximum (summing would multiply shared work by the shard
+            // count and misreport how much construction was avoided).
+            out.twiddle_hits = out.twiddle_hits.max(s.twiddle_hits);
+            out.twiddle_misses = out.twiddle_misses.max(s.twiddle_misses);
             out.busy += s.busy;
             out.latency_p50 = out.latency_p50.max(s.latency_p50);
             out.latency_p95 = out.latency_p95.max(s.latency_p95);
@@ -462,6 +499,10 @@ impl MetricsSnapshot {
         if out.coalesced_flushes > 0 {
             out.coalesce_hit_rate = out.coalesce_hits as f64 / out.coalesced_flushes as f64;
             out.mean_held_age = held_age_total / out.coalesced_flushes as u32;
+        }
+        let twiddle_total = out.twiddle_hits + out.twiddle_misses;
+        if twiddle_total > 0 {
+            out.twiddle_hit_rate = out.twiddle_hits as f64 / twiddle_total as f64;
         }
         out
     }
@@ -725,6 +766,31 @@ mod tests {
         }
         let s = m.snapshot();
         assert!((s.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn twiddle_intern_counters_report_deltas_since_construction() {
+        // The sink snapshots the process-global intern counters at
+        // construction and reports deltas. Other tests in this process
+        // intern concurrently, so assert floors and monotonicity, not
+        // exact counts — and use a key no kernel test would request.
+        let m = Metrics::new();
+        let before = m.snapshot();
+        let mut c = crate::fft::twiddle::TwiddleCache::new();
+        c.vector(1 << 19, 3, 13); // first-time construction: a miss
+        c.vector(1 << 19, 3, 13); // repeat lookup: a hit
+        let s = m.snapshot();
+        assert!(s.twiddle_misses >= 1, "construction not counted: {}", s.twiddle_misses);
+        assert!(s.twiddle_hits >= 1, "reuse not counted: {}", s.twiddle_hits);
+        assert!(s.twiddle_hits >= before.twiddle_hits);
+        assert!(s.twiddle_misses >= before.twiddle_misses);
+        assert!(s.twiddle_hit_rate > 0.0 && s.twiddle_hit_rate <= 1.0);
+        // Shards share one global store: the fleet view is the max of
+        // the per-shard deltas, never the sum.
+        let agg = MetricsSnapshot::aggregate(&[s.clone(), s.clone()]);
+        assert_eq!(agg.twiddle_hits, s.twiddle_hits);
+        assert_eq!(agg.twiddle_misses, s.twiddle_misses);
+        assert!((agg.twiddle_hit_rate - s.twiddle_hit_rate).abs() < 1e-9);
     }
 
     #[test]

@@ -4,16 +4,23 @@
 //! re-plan per request. Keys carry the cost-source label so plans from
 //! different machines/providers don't cross-contaminate.
 //!
+//! Values are [`ExecPlan`]s, not bare stage lists: the planner's output
+//! for a size is an *execution decision* — flat (one in-cache pass) or
+//! blocked (four-step around the cache boundary) — and a hot swap may
+//! change the mode, not just the arrangement. Callers that only deal in
+//! flat plans wrap with [`ExecPlan::Flat`] on the way in and match (or
+//! [`ExecPlan::as_flat`]) on the way out.
+//!
 //! Entries are **versioned**: the online autotuner publishes re-planned
 //! arrangements through [`PlanCache::swap`], which atomically replaces
 //! the entry and bumps its version. Readers holding a previously fetched
-//! `Plan` are unaffected (plans are owned clones); the version lets
+//! `ExecPlan` are unaffected (plans are owned clones); the version lets
 //! observers detect publication without comparing plan contents.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::plan::Plan;
+use crate::plan::ExecPlan;
 
 /// Cache key: FFT size + strategy name + cost-source label.
 pub type PlanKey = (usize, String, String);
@@ -21,7 +28,7 @@ pub type PlanKey = (usize, String, String);
 /// Thread-safe, versioned plan cache.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    map: Mutex<HashMap<PlanKey, (Plan, u64)>>,
+    map: Mutex<HashMap<PlanKey, (ExecPlan, u64)>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
 }
@@ -31,14 +38,14 @@ impl PlanCache {
         Self::default()
     }
 
-    /// Get or compute the plan for a key.
+    /// Get or compute the execution decision for a key.
     pub fn get_or_plan(
         &self,
         n: usize,
         strategy: &str,
         source: &str,
-        compute: impl FnOnce() -> Plan,
-    ) -> Plan {
+        compute: impl FnOnce() -> ExecPlan,
+    ) -> ExecPlan {
         let key = (n, strategy.to_string(), source.to_string());
         if let Some((p, _)) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -56,8 +63,8 @@ impl PlanCache {
         cached.clone()
     }
 
-    /// Insert a pre-computed plan (bumps the version when overwriting).
-    pub fn insert(&self, n: usize, strategy: &str, source: &str, plan: Plan) {
+    /// Insert a pre-computed decision (bumps the version when overwriting).
+    pub fn insert(&self, n: usize, strategy: &str, source: &str, plan: ExecPlan) {
         self.swap(n, strategy, source, plan);
     }
 
@@ -65,8 +72,10 @@ impl PlanCache {
     /// (1 when the key is fresh). This is the autotuner's hot-swap entry
     /// point: the replacement happens under one lock acquisition, so a
     /// concurrent reader sees either the old or the new plan, never a
-    /// torn mix.
-    pub fn swap(&self, n: usize, strategy: &str, source: &str, plan: Plan) -> u64 {
+    /// torn mix. A swap may flip the execution mode (flat ↔ blocked) as
+    /// well as the arrangement — readers recompile from whatever variant
+    /// they fetch.
+    pub fn swap(&self, n: usize, strategy: &str, source: &str, plan: ExecPlan) -> u64 {
         let key = (n, strategy.to_string(), source.to_string());
         let mut map = self.map.lock().unwrap();
         let version = map.get(&key).map(|(_, v)| *v).unwrap_or(0) + 1;
@@ -74,8 +83,8 @@ impl PlanCache {
         version
     }
 
-    /// Current plan for a key, if cached.
-    pub fn get(&self, n: usize, strategy: &str, source: &str) -> Option<Plan> {
+    /// Current decision for a key, if cached.
+    pub fn get(&self, n: usize, strategy: &str, source: &str) -> Option<ExecPlan> {
         let key = (n, strategy.to_string(), source.to_string());
         self.map.lock().unwrap().get(&key).map(|(p, _)| p.clone())
     }
@@ -108,13 +117,17 @@ mod tests {
     use super::*;
     use crate::plan::Plan;
 
+    fn flat(s: &str) -> ExecPlan {
+        ExecPlan::Flat(Plan::parse(s).unwrap())
+    }
+
     #[test]
     fn caches_by_key() {
         let cache = PlanCache::new();
         let mut calls = 0;
         let p1 = cache.get_or_plan(1024, "ca", "m1", || {
             calls += 1;
-            Plan::parse("R4,R2,R4,R4,F8").unwrap()
+            flat("R4,R2,R4,R4,F8")
         });
         let p2 = cache.get_or_plan(1024, "ca", "m1", || {
             calls += 1;
@@ -129,12 +142,12 @@ mod tests {
     #[test]
     fn distinct_keys_do_not_collide() {
         let cache = PlanCache::new();
-        cache.insert(1024, "ca", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
-        cache.insert(1024, "ca", "haswell", Plan::parse("R4,R8,R8,R4").unwrap());
-        cache.insert(256, "ca", "m1", Plan::parse("R4,R4,R2,F8").unwrap());
+        cache.insert(1024, "ca", "m1", flat("R4,R2,R4,R4,F8"));
+        cache.insert(1024, "ca", "haswell", flat("R4,R8,R8,R4"));
+        cache.insert(256, "ca", "m1", flat("R4,R4,R2,F8"));
         assert_eq!(cache.len(), 3);
         let p = cache.get_or_plan(1024, "ca", "haswell", || unreachable!());
-        assert_eq!(p, Plan::parse("R4,R8,R8,R4").unwrap());
+        assert_eq!(p, flat("R4,R8,R8,R4"));
     }
 
     #[test]
@@ -145,11 +158,12 @@ mod tests {
         for _ in 0..4 {
             let c = cache.clone();
             handles.push(std::thread::spawn(move || {
-                c.get_or_plan(64, "cf", "m1", || Plan::parse("R2,R2,R2,R2,R2,R2").unwrap())
+                c.get_or_plan(64, "cf", "m1", || flat("R2,R2,R2,R2,R2,R2"))
             }));
         }
         for h in handles {
-            assert_eq!(h.join().unwrap().total_stages(), 6);
+            let plan = h.join().unwrap();
+            assert_eq!(plan.as_flat().unwrap().total_stages(), 6);
         }
         assert_eq!(cache.len(), 1);
     }
@@ -158,23 +172,43 @@ mod tests {
     fn swap_bumps_versions_and_replaces_the_plan() {
         let cache = PlanCache::new();
         assert_eq!(cache.version(1024, "autotune", "m1"), None);
-        let v1 = cache.swap(1024, "autotune", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        let v1 = cache.swap(1024, "autotune", "m1", flat("R4,R2,R4,R4,F8"));
         assert_eq!(v1, 1);
-        let v2 = cache.swap(1024, "autotune", "m1", Plan::parse("R4,R4,R4,F16").unwrap());
+        let v2 = cache.swap(1024, "autotune", "m1", flat("R4,R4,R4,F16"));
         assert_eq!(v2, 2);
         assert_eq!(cache.version(1024, "autotune", "m1"), Some(2));
-        assert_eq!(cache.get(1024, "autotune", "m1"), Plan::parse("R4,R4,R4,F16"));
+        assert_eq!(cache.get(1024, "autotune", "m1"), Some(flat("R4,R4,R4,F16")));
         // unrelated keys keep their own version streams
-        cache.insert(256, "ca", "m1", Plan::parse("R4,R4,R2,F8").unwrap());
+        cache.insert(256, "ca", "m1", flat("R4,R4,R2,F8"));
         assert_eq!(cache.version(256, "ca", "m1"), Some(1));
     }
 
     #[test]
     fn swapped_key_still_hits_through_get_or_plan() {
         let cache = PlanCache::new();
-        cache.swap(1024, "ca", "m1", Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        cache.swap(1024, "ca", "m1", flat("R4,R2,R4,R4,F8"));
         let p = cache.get_or_plan(1024, "ca", "m1", || unreachable!());
-        assert_eq!(p, Plan::parse("R4,R2,R4,R4,F8").unwrap());
+        assert_eq!(p, flat("R4,R2,R4,R4,F8"));
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn blocked_decisions_cache_and_swap_like_flat_ones() {
+        // A hot swap may change the execution mode, not just the stage
+        // order: flat → blocked must round-trip through the same key.
+        let cache = PlanCache::new();
+        cache.insert(1 << 16, "ca", "m1", flat("R4,R4,R4,R4,R4,R4,R4,R4"));
+        let blocked = ExecPlan::Blocked {
+            p: 256,
+            q: 256,
+            col: Plan::parse("R4,R4,R4,R4").unwrap(),
+            row: Plan::parse("R4,R4,R4,R4").unwrap(),
+        };
+        let v = cache.swap(1 << 16, "ca", "m1", blocked.clone());
+        assert_eq!(v, 2);
+        let got = cache.get_or_plan(1 << 16, "ca", "m1", || unreachable!());
+        assert!(got.is_blocked());
+        assert_eq!(got, blocked);
+        assert_eq!(got.as_flat(), None);
     }
 }

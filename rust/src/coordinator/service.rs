@@ -39,16 +39,18 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::autotune::{
-    trace_batch, trace_request_inplace, Autotuner, AutotuneConfig, AutotuneStatus, EdgeSample,
+    trace_batch, trace_exec_inplace, Autotuner, AutotuneConfig, AutotuneStatus, EdgeSample,
     SampleMode,
 };
 use crate::cost::{
-    batch_class, class_batch, exec_mode_for, CostModel, ExecMode, SimCost, BATCH_CLASSES,
+    batch_class, class_batch, exec_mode_for, CostModel, ExecMode, PlanningSurface, SimCost,
+    BATCH_CLASSES,
 };
-use crate::fft::{BatchBufferPool, Executor, SplitComplex};
+use crate::fft::{BatchBufferPool, CompiledExec, Executor, SplitComplex};
 use crate::kind::TransformKind;
 use crate::obs::{EventKind, Observer, StageTime};
-use crate::plan::Plan;
+use crate::plan::{ExecPlan, Plan};
+use crate::planner::{plan_exec, Strategy};
 
 use super::batcher::{collect_batch_until, BatchPolicy, CoalescePolicy, CoalesceState, ReadyGroup};
 use super::metrics::Metrics;
@@ -111,6 +113,15 @@ pub struct ServiceConfig {
     /// in-place execution per batch class and takes the cheaper path;
     /// the forced modes pin one path for every group.
     pub exec_mode: ExecModePolicy,
+    /// Largest FFT size served by one in-cache (flat) pass. When set,
+    /// configured c2c sizes above it — and the real kinds at twice them,
+    /// whose c2c core is the same spilled size — are re-planned through
+    /// [`crate::planner::plan_exec`] at worker startup and may execute
+    /// through the blocked four-step path (cache-resident sub-FFTs
+    /// around priced transpose / block-twiddle boundary passes). `None`
+    /// (the default) serves every size flat — identical behavior to the
+    /// pre-blocking service.
+    pub max_resident_n: Option<usize>,
 }
 
 /// How the service picks each native same-(kind, n) group's execution
@@ -491,12 +502,13 @@ impl Drop for FftService {
 }
 
 /// One compiled serving entry: request-buffer size + kind + the
-/// compiled plan + the plan version it compiled under + the execution
-/// mode chosen for each batch class of this (n, kind) workload.
+/// compiled execution (flat plan or blocked four-step) + the plan
+/// version it compiled under + the execution mode chosen for each batch
+/// class of this (n, kind) workload.
 struct CompiledEntry {
     n: usize,
     kind: TransformKind,
-    cp: crate::fft::CompiledPlan,
+    exec: CompiledExec,
     version: u64,
     /// Per-batch-class execution path ([`crate::cost::batch_class`]
     /// indexing). Derived from the policy at build time and refreshed
@@ -531,6 +543,34 @@ fn static_mode_table(
             let mut model = SimCost::m1(model_n);
             std::array::from_fn(|class| exec_mode_for(&mut model, kind, plan, class_batch(class)))
         }
+    }
+}
+
+/// The execution decision for one configured `(n, plan)` entry. Within
+/// the resident cap (or without one) the configured flat plan serves
+/// as-is. Above the cap, [`plan_exec`] prices flat against every
+/// admissible (p, q) four-step split on the m1 sim model; only a blocked
+/// winner replaces the configured arrangement — when flat still wins
+/// (no split fits the cap), the operator's plan stands.
+fn exec_decision(n: usize, plan: &Plan, max_resident_n: Option<usize>) -> ExecPlan {
+    let Some(limit) = max_resident_n else {
+        return ExecPlan::Flat(plan.clone());
+    };
+    if n <= limit {
+        return ExecPlan::Flat(plan.clone());
+    }
+    let mut make = SimCost::m1;
+    let outcome = plan_exec(
+        &mut make,
+        n,
+        &Strategy::DijkstraContextAware { k: 1 },
+        PlanningSurface::forward(),
+        Some(limit),
+    );
+    if outcome.exec.is_blocked() {
+        outcome.exec
+    } else {
+        ExecPlan::Flat(plan.clone())
     }
 }
 
@@ -579,8 +619,23 @@ impl WorkerBackend {
             if !derived {
                 continue;
             }
+            if entry.exec.is_blocked() {
+                // Blocked entries sit outside the tuner's flat surface:
+                // their sub-plans are cache-resident sub-sizes, not the
+                // tuned n, so a swapped flat arrangement cannot improve
+                // them. Their traced boundary samples still feed the
+                // online model's shape-keyed stores; the blocked
+                // decision itself is re-made by `plan_exec`, not by a
+                // flat hot swap.
+                continue;
+            }
             if entry.version != current.version {
-                entry.cp = ex.compile_kind(&current.plan, entry.n, true, entry.kind);
+                entry.exec = CompiledExec::Flat(ex.compile_kind(
+                    &current.plan,
+                    entry.n,
+                    true,
+                    entry.kind,
+                ));
                 entry.version = current.version;
                 // A swapped plan re-prices the panel: its kernel mix
                 // (and therefore the batched amortization) changed.
@@ -616,10 +671,7 @@ impl WorkerBackend {
         let exec_start = Instant::now();
         match self {
             WorkerBackend::Native { compiled, pool, .. } => {
-                let Some((cp, modes)) = compiled
-                    .iter()
-                    .find(|e| e.n == n && e.kind == kind)
-                    .map(|e| (&e.cp, e.modes))
+                let Some(entry) = compiled.iter_mut().find(|e| e.n == n && e.kind == kind)
                 else {
                     for req in group {
                         metrics.on_failure();
@@ -635,11 +687,15 @@ impl WorkerBackend {
                     .filter(|t| n == t.n() && !kind.is_real() && t.sampler().should_sample());
                 // The planned execution path for this group's batch
                 // class. Singletons always run scalar regardless of
-                // policy — a one-lane panel is pure data movement.
-                let mode = if group.len() < 2 {
+                // policy — a one-lane panel is pure data movement. A
+                // blocked entry always runs scalar-sequential: its
+                // four-step scratch (panel + p·q work buffer) is
+                // per-transform, and the blocked sizes it exists for are
+                // exactly the ones whose lane panels would spill.
+                let mode = if group.len() < 2 || entry.exec.is_blocked() {
                     ExecMode::ScalarSequential
                 } else {
-                    modes[batch_class(group.len())]
+                    entry.modes[batch_class(group.len())]
                 };
                 metrics.on_exec_mode(mode, group_size);
                 if mode == ExecMode::ScalarSequential {
@@ -654,9 +710,9 @@ impl WorkerBackend {
                         let mut stages: Vec<StageTime> = Vec::new();
                         match sampling.take() {
                             Some(t) => {
-                                let mut samples = Vec::with_capacity(cp.steps().len());
-                                trace_request_inplace(
-                                    cp,
+                                let mut samples = Vec::new();
+                                trace_exec_inplace(
+                                    &mut entry.exec,
                                     &mut req.input.re,
                                     &mut req.input.im,
                                     t.mode(),
@@ -668,7 +724,7 @@ impl WorkerBackend {
                                 }
                                 t.sampler().submit(samples);
                             }
-                            None => cp.run(&mut req.input.re, &mut req.input.im),
+                            None => entry.exec.run(&mut req.input.re, &mut req.input.im),
                         }
                         let now = Instant::now();
                         metrics.on_complete_kind(kind, now.saturating_duration_since(req.enqueued));
@@ -681,6 +737,11 @@ impl WorkerBackend {
                     }
                     return;
                 }
+                // Only flat entries reach the panel path (blocked
+                // entries forced scalar above).
+                let CompiledExec::Flat(cp) = &entry.exec else {
+                    unreachable!("blocked entries are forced scalar-sequential")
+                };
                 // Panel path: one timed gather into the pooled
                 // lane-blocked buffer, the batched kernels, then one
                 // timed scatter per lane back into each request's own
@@ -893,12 +954,16 @@ fn worker_loop(
                 // Every configured (n, plan) serves four workloads: the
                 // c2c pair at n and the real pair at 2n (same c2c core).
                 // Each entry is priced for its own (kind, n) workload —
-                // the mode table is per entry, not per plan.
+                // the mode table is per entry, not per plan. One
+                // execution decision per configured size: the real kinds
+                // at 2n share the c2c core's (p, q) split, so a size
+                // that blocks, blocks for all four kinds.
+                let decision = exec_decision(*n, p, config.max_resident_n);
                 for kind in [TransformKind::Forward, TransformKind::Inverse] {
                     compiled.push(CompiledEntry {
                         n: *n,
                         kind,
-                        cp: ex.compile_kind(p, *n, true, kind),
+                        exec: CompiledExec::compile(&mut ex, &decision, *n, kind),
                         version: 1,
                         modes: static_mode_table(config.exec_mode, kind, p, *n),
                     });
@@ -907,7 +972,7 @@ fn worker_loop(
                     compiled.push(CompiledEntry {
                         n: 2 * *n,
                         kind,
-                        cp: ex.compile_kind(p, 2 * *n, true, kind),
+                        exec: CompiledExec::compile(&mut ex, &decision, 2 * *n, kind),
                         version: 1,
                         modes: static_mode_table(config.exec_mode, kind, p, *n),
                     });
@@ -1055,6 +1120,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap()
     }
@@ -1069,6 +1135,66 @@ mod tests {
         let snap = svc.shutdown();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn exec_decision_respects_the_resident_cap() {
+        let plan = Plan::parse("R4,R4,R2,F8").unwrap();
+        // no cap → configured flat plan, regardless of n
+        assert!(matches!(exec_decision(256, &plan, None), ExecPlan::Flat(ref p) if *p == plan));
+        // resident n under the cap → still the configured flat plan
+        assert!(
+            matches!(exec_decision(256, &plan, Some(4096)), ExecPlan::Flat(ref p) if *p == plan)
+        );
+        // spilled n → a four-step split whose factors both fit the cap
+        let big = crate::fft::fourstep::radix_mix_plan(16);
+        match exec_decision(1 << 16, &big, Some(4096)) {
+            ExecPlan::Blocked { p, q, .. } => {
+                assert_eq!(p * q, 1 << 16);
+                assert!(p <= 4096 && q <= 4096, "{p}x{q} ignores the cap");
+            }
+            flat => panic!("spilled size stayed flat: {flat}"),
+        }
+    }
+
+    #[test]
+    fn resident_cap_serves_spilled_sizes_through_the_four_step_path() {
+        // n above the cap: the service must swap in a blocked entry and
+        // serve it scalar-sequentially (even under ForcePanel — the
+        // four-step path owns its own data movement), still matching the
+        // reference transform.
+        let n = 1 << 16;
+        let cap = 4096;
+        let plan = crate::fft::fourstep::radix_mix_plan(16);
+        assert!(exec_decision(n, &plan, Some(cap)).is_blocked());
+        let svc = FftService::start(ServiceConfig {
+            plans: vec![(n, plan)],
+            backend: Backend::Native,
+            batch: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_micros(100) },
+            coalesce: Default::default(),
+            workers: 1,
+            queue_depth: 64,
+            autotune: None,
+            shed_deadline: None,
+            observer: None,
+            exec_mode: ExecModePolicy::ForcePanel,
+            max_resident_n: Some(cap),
+        })
+        .unwrap();
+        let inputs: Vec<SplitComplex> =
+            (0..4u64).map(|i| SplitComplex::random(n, 0xB10C + i)).collect();
+        let rxs: Vec<_> = inputs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (rx, input) in rxs.into_iter().zip(&inputs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = fft_ref(input);
+            assert!(got.max_abs_diff(&want) / want.max_abs().max(1.0) < 2e-4);
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.failed, 0);
+        // blocked entries never take the panel path
+        assert_eq!(snap.exec_panel_groups, 0);
+        assert!(snap.exec_scalar_groups >= 1);
     }
 
     #[test]
@@ -1090,6 +1216,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         });
         assert!(bad.is_err());
     }
@@ -1108,6 +1235,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         });
         assert!(bad.is_err());
     }
@@ -1126,6 +1254,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         });
         assert!(bad.is_err());
     }
@@ -1147,6 +1276,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap();
         for i in 0..40u64 {
@@ -1209,6 +1339,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap();
         let mut pending = Vec::new();
@@ -1256,6 +1387,7 @@ mod tests {
                 shed_deadline: None,
                 observer: None,
                 exec_mode: policy,
+                max_resident_n: None,
             })
             .unwrap()
         };
@@ -1368,6 +1500,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap();
         let inputs: Vec<SplitComplex> = (0..8).map(|i| SplitComplex::random(n, i)).collect();
@@ -1399,6 +1532,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap();
         let mut rejected = 0;
@@ -1544,6 +1678,7 @@ mod tests {
             shed_deadline: Some(std::time::Duration::from_micros(100)),
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         })
         .unwrap();
         // slack = shed_deadline - max_wait = 0: anything that waits at

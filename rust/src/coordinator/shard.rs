@@ -247,6 +247,7 @@ mod tests {
             shed_deadline: None,
             observer: None,
             exec_mode: Default::default(),
+            max_resident_n: None,
         }
     }
 

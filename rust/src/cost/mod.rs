@@ -129,6 +129,48 @@ pub fn exec_mode_for<C: CostModel + ?Sized>(
     }
 }
 
+/// Which side of the machine's residency boundary a surface's working
+/// set lives on — the cache-tier boundary state of the blocked-execution
+/// decision. Like the RU boundary, the tier is *state the search carries*,
+/// not an edge in the decomposition catalog: it is constant across a flat
+/// chain (every pass of a flat plan walks the same buffer), and only the
+/// four-step boundary passes ([`EdgeType::Transpose`] /
+/// [`EdgeType::BlockTwiddle`]) move a transform between tiers — sub-FFTs
+/// of a blocked plan price on `Resident` surfaces while the flat
+/// alternative at the same n prices on `Spilled`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CacheTier {
+    /// The `8·n`-byte split-complex working set fits the residency
+    /// boundary: every pass streams from cache, and the pre-tier cost
+    /// model applies unchanged (bit-identically — see
+    /// [`CostModel::surface_edge_ns`]).
+    Resident,
+    /// The working set exceeds the boundary: every pass's streaming
+    /// traffic moves at DRAM speed, scaling the memory component of each
+    /// edge by [`CostModel::spilled_factor`].
+    Spilled,
+}
+
+impl CacheTier {
+    /// Stable lowercase label (metrics / exporters / CLI).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CacheTier::Resident => "resident",
+            CacheTier::Spilled => "spilled",
+        }
+    }
+
+    /// The tier of an n-point transform under `limit` =
+    /// [`CostModel::resident_limit_n`].
+    pub fn for_n(n: usize, limit: usize) -> CacheTier {
+        if n <= limit {
+            CacheTier::Resident
+        } else {
+            CacheTier::Spilled
+        }
+    }
+}
+
 /// The planning surface: *which workload* a planner walk prices. One
 /// query struct threaded from the strategies through
 /// [`CostModel::surface_edge_ns`], replacing the former
@@ -153,12 +195,20 @@ pub fn exec_mode_for<C: CostModel + ?Sized>(
 ///   the constraint becomes graph structure, see
 ///   [`crate::graph::PlanningGraph`]). The RU boundary pass stays
 ///   scalar in every backend, so its price is ISA-invariant.
+/// * `tier` — which side of the residency boundary the working set
+///   lives on ([`CacheTier`]). `Resident` (the default, and the only
+///   tier that existed before blocked execution) prices exactly as the
+///   pre-tier model; `Spilled` scales every edge's price by
+///   [`CostModel::spilled_factor`] — the cost surface the flat
+///   alternative pays at sizes past [`CostModel::resident_limit_n`],
+///   which is what the four-step decomposition exists to avoid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanningSurface {
     pub kind: TransformKind,
     pub batch_class: usize,
     pub k: usize,
     pub isa: Option<Isa>,
+    pub tier: CacheTier,
 }
 
 impl Default for PlanningSurface {
@@ -171,7 +221,13 @@ impl PlanningSurface {
     /// The historical implicit surface: unbatched forward c2c, k = 1,
     /// priced for the provider's native ISA.
     pub fn forward() -> PlanningSurface {
-        PlanningSurface { kind: TransformKind::Forward, batch_class: 0, k: 1, isa: None }
+        PlanningSurface {
+            kind: TransformKind::Forward,
+            batch_class: 0,
+            k: 1,
+            isa: None,
+            tier: CacheTier::Resident,
+        }
     }
 
     /// Unbatched surface for a kind (real kinds: the caller's cost model
@@ -199,6 +255,12 @@ impl PlanningSurface {
     /// masked for that vector unit instead of the provider's native one).
     pub fn with_isa(self, isa: Isa) -> PlanningSurface {
         PlanningSurface { isa: Some(isa), ..self }
+    }
+
+    /// Place the surface's working set on `tier` of the residency
+    /// boundary (see [`CacheTier`]).
+    pub fn with_tier(self, tier: CacheTier) -> PlanningSurface {
+        PlanningSurface { tier, ..self }
     }
 
     /// Representative batch width of the surface's class (1 = unbatched).
@@ -376,6 +438,56 @@ pub trait CostModel {
         b.max(1) as f64 * self.edge_ns(EdgeType::R2, 0, Context::Start)
     }
 
+    /// Whole-walk time (ns) of one four-step tile walk over a
+    /// `rows x cols` split-complex matrix of `rows · cols` points: the
+    /// strided column gather into a cache-resident panel, the scatter
+    /// back, or the final transpose to natural order (all three move the
+    /// same bytes the same way — [`EdgeType::Transpose`] prices each).
+    /// Like [`CostModel::marshal_ns`], providers without a native
+    /// transpose model approximate the walk as cold strided round
+    /// trips — `rows·cols / n()` stage-0 R2 passes from
+    /// [`Context::Start`] — while [`SimCost`] models it natively
+    /// (`sim::memory::transpose_ns`: row-length-strided walk at a
+    /// calibrated bandwidth fraction, DRAM multiplier once the matrix
+    /// spills) and [`NativeCost`] times the real tiled walk.
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        let trips = (rows * cols) as f64 / self.n() as f64;
+        trips * self.edge_ns(EdgeType::R2, 0, Context::Start)
+    }
+
+    /// Whole-buffer time (ns) of the four-step inter-block twiddle
+    /// multiply over `n` points ([`EdgeType::BlockTwiddle`]): one
+    /// streaming pass with a complex multiply per point. The default is
+    /// the same cold-R2 proxy scaled to the buffer; [`SimCost`] models
+    /// it natively and [`NativeCost`] times the real pass.
+    fn block_twiddle_ns(&mut self, n: usize) -> f64 {
+        let trips = n as f64 / self.n() as f64;
+        trips * self.edge_ns(EdgeType::R2, 0, Context::Start)
+    }
+
+    /// Multiplicative penalty on an edge's price when the surface's
+    /// working set lives on [`CacheTier::Spilled`]: streaming traffic
+    /// moves at DRAM speed instead of cache speed. Applied by the
+    /// default [`CostModel::surface_edge_ns`] on spilled surfaces only —
+    /// resident surfaces never call this, keeping their pricing
+    /// bit-identical to the pre-tier model. The default is a flat
+    /// conservative factor; [`SimCost`] computes the exact
+    /// memory-component-only scaling per cell
+    /// ([`crate::sim::Machine::edge_spill_factor`]).
+    fn spilled_factor(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        let _ = (edge, stage, ctx);
+        4.0
+    }
+
+    /// Largest transform size whose working set still fits the modeled
+    /// residency boundary — the flat-execution ceiling the blocked
+    /// planner's (p, q) candidates respect per sub-transform. The
+    /// default matches a 256 KiB boundary at 8 bytes per point;
+    /// [`SimCost`] answers from its machine's `l2_bytes`.
+    fn resident_limit_n(&self) -> usize {
+        32768
+    }
+
     /// Relative price of running `edge`'s kernel on `isa` instead of the
     /// provider's native ISA (1.0 = same price). Applied by the default
     /// [`CostModel::surface_edge_ns`] to c2c edges of ISA-pinned
@@ -406,7 +518,12 @@ pub trait CostModel {
     /// * the unbatched class answers [`CostModel::edge_ns_kind`];
     /// * an ISA-pinned surface scales the composed c2c weight by
     ///   [`CostModel::isa_edge_mult`] (RU is ISA-invariant: the boundary
-    ///   pass is scalar in every backend).
+    ///   pass is scalar in every backend);
+    /// * a [`CacheTier::Spilled`] surface scales the composed weight by
+    ///   [`CostModel::spilled_factor`] — every pass of a flat plan past
+    ///   the residency boundary streams from DRAM. Resident surfaces
+    ///   take the untouched pre-tier path (bit-identical pricing, which
+    ///   is what keeps every cache-resident golden stable).
     ///
     /// Providers with a genuinely multi-axis store override this in one
     /// place (the autotuner's `OnlineCost` answers from its
@@ -418,22 +535,28 @@ pub trait CostModel {
         ctx: Context,
         surface: PlanningSurface,
     ) -> f64 {
-        if edge == EdgeType::RU {
+        let base = if edge == EdgeType::RU {
             if surface.batch_class > 0 {
                 let b = surface.batch_width();
-                return self.unpack_ns_batched(ctx, b) / b as f64;
+                self.unpack_ns_batched(ctx, b) / b as f64
+            } else {
+                self.unpack_ns(ctx)
             }
-            return self.unpack_ns(ctx);
-        }
-        let base = if surface.batch_class > 0 {
-            let b = surface.batch_width();
-            self.edge_ns_batched(edge, stage, ctx, b) / b as f64
         } else {
-            self.edge_ns_kind(edge, stage, ctx, surface.kind)
+            let base = if surface.batch_class > 0 {
+                let b = surface.batch_width();
+                self.edge_ns_batched(edge, stage, ctx, b) / b as f64
+            } else {
+                self.edge_ns_kind(edge, stage, ctx, surface.kind)
+            };
+            match surface.isa {
+                Some(isa) => base * self.isa_edge_mult(edge, isa),
+                None => base,
+            }
         };
-        match surface.isa {
-            Some(isa) => base * self.isa_edge_mult(edge, isa),
-            None => base,
+        match surface.tier {
+            CacheTier::Resident => base,
+            CacheTier::Spilled => base * self.spilled_factor(edge, stage, ctx),
         }
     }
 
@@ -492,6 +615,22 @@ impl<C: CostModel + ?Sized> CostModel for &mut C {
 
     fn marshal_ns(&mut self, b: usize) -> f64 {
         (**self).marshal_ns(b)
+    }
+
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        (**self).transpose_ns(rows, cols)
+    }
+
+    fn block_twiddle_ns(&mut self, n: usize) -> f64 {
+        (**self).block_twiddle_ns(n)
+    }
+
+    fn spilled_factor(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        (**self).spilled_factor(edge, stage, ctx)
+    }
+
+    fn resident_limit_n(&self) -> usize {
+        (**self).resident_limit_n()
     }
 
     fn isa_edge_mult(&mut self, edge: EdgeType, isa: Isa) -> f64 {
@@ -595,6 +734,40 @@ impl CostModel for SimCost {
     fn marshal_ns(&mut self, b: usize) -> f64 {
         self.machine.marshal_ns(self.n, b)
     }
+
+    /// Native model of the four-step tile walk (see
+    /// [`crate::sim::Machine::transpose_ns`]): row-length-strided at
+    /// `transpose_bw_frac` of the streaming bandwidth, with the DRAM
+    /// multiplier once the matrix spills the residency boundary.
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        self.machine.transpose_ns(rows, cols)
+    }
+
+    /// Native model of the inter-block twiddle pass (see
+    /// [`crate::sim::Machine::block_twiddle_ns`]).
+    fn block_twiddle_ns(&mut self, n: usize) -> f64 {
+        self.machine.block_twiddle_ns(n)
+    }
+
+    /// Exact memory-component-only spill scaling (see
+    /// [`crate::sim::Machine::edge_spill_factor`]) instead of the flat
+    /// conservative default: compute and register pressure do not slow
+    /// down when the buffer moves to DRAM, only the streaming traffic
+    /// does. The RU boundary pass has no per-cell compute/memory split
+    /// in the machine's edge tables; its walk is roughly a stage-0 R2
+    /// pass, whose factor is the catalog's proxy.
+    fn spilled_factor(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        if edge == EdgeType::RU {
+            return self.machine.edge_spill_factor(self.n, EdgeType::R2, 0, ctx);
+        }
+        self.machine.edge_spill_factor(self.n, edge, stage, ctx)
+    }
+
+    /// The machine's actual residency ceiling (largest n with
+    /// `8·n <= l2_bytes`), not the trait's fixed default.
+    fn resident_limit_n(&self) -> usize {
+        self.machine.resident_limit_n()
+    }
 }
 
 /// Memoizing wrapper: caches cells, counts distinct measurements.
@@ -610,6 +783,8 @@ pub struct MemoCost<C: CostModel> {
     cache_u: HashMap<Context, f64>,
     cache_ub: HashMap<(Context, usize), f64>,
     cache_m: HashMap<usize, f64>,
+    cache_t: HashMap<(usize, usize), f64>,
+    cache_bt: HashMap<usize, f64>,
 }
 
 impl<C: CostModel> MemoCost<C> {
@@ -621,6 +796,8 @@ impl<C: CostModel> MemoCost<C> {
             cache_u: HashMap::new(),
             cache_ub: HashMap::new(),
             cache_m: HashMap::new(),
+            cache_t: HashMap::new(),
+            cache_bt: HashMap::new(),
         }
     }
 
@@ -686,6 +863,32 @@ impl<C: CostModel> CostModel for MemoCost<C> {
         let v = self.inner.marshal_ns(b);
         self.cache_m.insert(b, v);
         v
+    }
+
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        if let Some(&v) = self.cache_t.get(&(rows, cols)) {
+            return v;
+        }
+        let v = self.inner.transpose_ns(rows, cols);
+        self.cache_t.insert((rows, cols), v);
+        v
+    }
+
+    fn block_twiddle_ns(&mut self, n: usize) -> f64 {
+        if let Some(&v) = self.cache_bt.get(&n) {
+            return v;
+        }
+        let v = self.inner.block_twiddle_ns(n);
+        self.cache_bt.insert(n, v);
+        v
+    }
+
+    fn spilled_factor(&mut self, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        self.inner.spilled_factor(edge, stage, ctx)
+    }
+
+    fn resident_limit_n(&self) -> usize {
+        self.inner.resident_limit_n()
     }
 }
 
@@ -1072,6 +1275,98 @@ mod tests {
     fn exec_mode_labels_are_stable() {
         assert_eq!(ExecMode::ScalarSequential.label(), "scalar");
         assert_eq!(ExecMode::Panel.label(), "panel");
+    }
+
+    #[test]
+    fn resident_tier_is_the_default_and_prices_bit_identically() {
+        // The tier axis must be invisible until a surface opts into
+        // Spilled: forward() is Resident, and an explicit Resident tier
+        // is exactly the historical price (==, not approximately) —
+        // this is what keeps every cache-resident golden stable.
+        let mut plain = SimCost::m1(1024);
+        let mut cost = SimCost::m1(1024);
+        let fwd = PlanningSurface::forward();
+        assert_eq!(fwd.tier, CacheTier::Resident);
+        let explicit = fwd.with_tier(CacheTier::Resident);
+        for e in [EdgeType::R2, EdgeType::R4, EdgeType::F8] {
+            let s = if e.is_fused() { 7 } else { 0 };
+            let want = plain.edge_ns(e, s, Start);
+            assert_eq!(fwd.edge_ns(&mut cost, e, s, Start), want);
+            assert_eq!(explicit.edge_ns(&mut cost, e, s, Start), want);
+        }
+        // real-kind RU pricing equally untouched
+        let mut rc = SimCost::m1(512);
+        let rf = PlanningSurface::for_kind(TransformKind::RealForward);
+        let ru = SimCost::m1(512).unpack_ns(Context::After(EdgeType::F8));
+        assert_eq!(rf.edge_ns(&mut rc, EdgeType::RU, 9, Context::After(EdgeType::F8)), ru);
+    }
+
+    #[test]
+    fn spilled_tier_scales_every_edge_by_the_memory_only_factor() {
+        let n = 1 << 18;
+        let mut plain = SimCost::m1(n);
+        let mut cost = SimCost::m1(n);
+        let spilled = PlanningSurface::forward().with_tier(CacheTier::Spilled);
+        let machine = crate::sim::Machine::m1();
+        for e in [EdgeType::R2, EdgeType::R4] {
+            let ctx = Context::After(EdgeType::R4);
+            let base = plain.edge_ns(e, 0, ctx);
+            let got = spilled.edge_ns(&mut cost, e, 0, ctx);
+            let want = base * machine.edge_spill_factor(n, e, 0, ctx);
+            assert!((got - want).abs() < 1e-9, "{e}: {got} vs {want}");
+            assert!(got > base, "{e} must cost more spilled");
+            // memory-only scaling: below the raw DRAM multiplier
+            assert!(got < base / machine.params.dram_bw_frac, "{e}");
+        }
+        // the RU boundary pass spills too, via its R2 proxy factor
+        let rf = PlanningSurface::for_kind(TransformKind::RealForward)
+            .with_tier(CacheTier::Spilled);
+        let ctx = Context::After(EdgeType::R2);
+        let ru_resident = plain.unpack_ns(ctx);
+        let ru_spilled = rf.edge_ns(&mut cost, EdgeType::RU, 18, ctx);
+        assert!(ru_spilled > ru_resident);
+    }
+
+    #[test]
+    fn tier_for_n_and_resident_limits() {
+        assert_eq!(CacheTier::for_n(1024, 32768), CacheTier::Resident);
+        assert_eq!(CacheTier::for_n(32768, 32768), CacheTier::Resident);
+        assert_eq!(CacheTier::for_n(65536, 32768), CacheTier::Spilled);
+        assert_eq!(CacheTier::Resident.label(), "resident");
+        assert_eq!(CacheTier::Spilled.label(), "spilled");
+        // SimCost answers from its machine; tables keep the default
+        let sim = SimCost::m1(1024);
+        assert_eq!(sim.resident_limit_n(), 1 << 15);
+        let table = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
+        assert_eq!(table.resident_limit_n(), 32768);
+        // a default-provider spilled edge pays the flat factor
+        let mut t = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
+        let base = t.edge_ns(EdgeType::R4, 0, Start);
+        let sp = PlanningSurface::forward().with_tier(CacheTier::Spilled);
+        assert_eq!(sp.edge_ns(&mut t, EdgeType::R4, 0, Start), 4.0 * base);
+    }
+
+    #[test]
+    fn sim_transpose_and_block_twiddle_are_native_and_memo_forwards() {
+        let mut c = SimCost::m1(1 << 16);
+        let machine = crate::sim::Machine::m1();
+        assert_eq!(c.transpose_ns(256, 256), machine.transpose_ns(256, 256));
+        assert_eq!(c.block_twiddle_ns(1 << 16), machine.block_twiddle_ns(1 << 16));
+        let mut m = MemoCost::new(SimCost::m1(1 << 16));
+        assert_eq!(m.transpose_ns(256, 256), machine.transpose_ns(256, 256));
+        assert_eq!(m.transpose_ns(256, 256), machine.transpose_ns(256, 256));
+        assert_eq!(m.block_twiddle_ns(1 << 16), machine.block_twiddle_ns(1 << 16));
+        // boundary-pass queries stay outside the §2.5 unbatched budget
+        assert_eq!(m.measurements(), 0);
+    }
+
+    #[test]
+    fn default_transpose_is_the_cold_r2_proxy() {
+        let mut table = Wisdom::harvest(&mut SimCost::m1(1024), "m1").to_cost();
+        let one = table.edge_ns(EdgeType::R2, 0, Start);
+        // a 64x64 matrix is 4 model-sized buffers' worth of round trips
+        assert_eq!(table.transpose_ns(64, 64), 4.0 * one);
+        assert_eq!(table.block_twiddle_ns(4096), 4.0 * one);
     }
 
     #[test]

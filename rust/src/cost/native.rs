@@ -339,6 +339,40 @@ impl CostModel for NativeCost {
         ns / 2.0
     }
 
+    /// Measure the blocked-execution transpose: time the exact tiled
+    /// walk ([`crate::fft::fourstep::tiled_transpose`]) the four-step
+    /// executor runs over a rows×cols matrix. Fresh buffers per call —
+    /// transpose sizes are the blocked candidate's p·q, not this
+    /// provider's n, so the shared pooled buffers don't apply.
+    fn transpose_ns(&mut self, rows: usize, cols: usize) -> f64 {
+        let src = SplitComplex::random(rows * cols, 0x4F00D);
+        let dst = std::cell::RefCell::new(SplitComplex::zeros(rows * cols));
+        let mut timed_fn = || {
+            let mut d = dst.borrow_mut();
+            crate::fft::fourstep::tiled_transpose(&src.re, &src.im, &mut d.re, &mut d.im, rows, cols);
+        };
+        measure(self.spec, None, &mut timed_fn).ns
+    }
+
+    /// Measure the blocked-execution inter-block twiddle: the exact
+    /// [`crate::fft::fourstep::apply_block_twiddle`] walk over an
+    /// nn-point matrix at the balanced split (the same W tables the
+    /// executor interns, so the bytes touched match serving).
+    fn block_twiddle_ns(&mut self, nn: usize) -> f64 {
+        let l = crate::fft::log2i(nn);
+        let q = 1usize << (l / 2);
+        let p = nn / q;
+        let blocktw: Vec<_> =
+            (0..p).map(|k1| self.ex.twiddle_cache().vector(nn, q, k1)).collect();
+        let buf = std::cell::RefCell::new(SplitComplex::random(nn, 0x5F00D));
+        let mut timed_fn = || {
+            let mut b = buf.borrow_mut();
+            let b = &mut *b;
+            crate::fft::fourstep::apply_block_twiddle(&mut b.re, &mut b.im, q, &blocktw);
+        };
+        measure(self.spec, None, &mut timed_fn).ns
+    }
+
     /// Measure the *batched* boundary pass: time `unpack_r2c_b` over a
     /// lane-blocked 2n panel of `b` real transforms (predecessor c2c
     /// pass executed batched and untimed over the first-half rows, per
@@ -485,6 +519,15 @@ mod tests {
         // the batch buffer went back to the pool for reuse
         let again = c.marshal_ns(8);
         assert!(again > 0.0);
+    }
+
+    #[test]
+    fn blocked_boundary_passes_are_measured() {
+        let mut c = NativeCost::quick(4096);
+        let tr = c.transpose_ns(64, 64);
+        assert!(tr > 0.0 && tr < 1e8, "{tr}");
+        let bt = c.block_twiddle_ns(4096);
+        assert!(bt > 0.0 && bt < 1e8, "{bt}");
     }
 
     #[test]

@@ -41,6 +41,22 @@ pub enum EdgeType {
     /// first-class `CompiledStep` that shows up in traces and gets an
     /// `EdgeSample`.
     RU,
+    /// Tiled matrix transpose of the four-step (blocked) decomposition:
+    /// the strided walk that moves a p x q block matrix between
+    /// column-major and row-major order (the column-tile gather/scatter
+    /// and the final reorder to natural output order). Like [`EdgeType::RU`]
+    /// it advances no DIF stages and never appears inside a
+    /// [`crate::plan::Plan`]; it is the *memory-tier* boundary edge of
+    /// blocked execution, priced by `CostModel::transpose_ns` (the way
+    /// `marshal_ns` prices the serving-path panel transpose) and emitted
+    /// as a first-class `EdgeSample` by traced blocked runs.
+    Transpose,
+    /// The inter-block twiddle multiply of the four-step decomposition:
+    /// one streaming pass over the whole buffer applying W_n^{j2·k1}
+    /// between the column and row sub-FFTs. A zero-stage boundary edge
+    /// like [`EdgeType::RU`] / [`EdgeType::Transpose`]; priced by
+    /// `CostModel::block_twiddle_ns` and sampled in traced blocked runs.
+    BlockTwiddle,
 }
 
 /// All *decomposition-graph* edge types in catalog order (matches `T` in
@@ -67,13 +83,21 @@ impl EdgeType {
             EdgeType::R8 | EdgeType::F8 => 3,
             EdgeType::F16 => 4,
             EdgeType::F32 => 5,
-            EdgeType::RU => 0,
+            EdgeType::RU | EdgeType::Transpose | EdgeType::BlockTwiddle => 0,
         }
     }
 
     /// Whether this edge is a fused register block.
     pub fn is_fused(self) -> bool {
         matches!(self, EdgeType::F8 | EdgeType::F16 | EdgeType::F32)
+    }
+
+    /// Whether this edge is a boundary pass (zero stage advance, outside
+    /// the decomposition-graph catalog, never inside a plan): the real
+    /// split/unpack walk or one of the blocked-execution data-movement
+    /// edges.
+    pub fn is_boundary(self) -> bool {
+        matches!(self, EdgeType::RU | EdgeType::Transpose | EdgeType::BlockTwiddle)
     }
 
     /// Block size B of a fused edge (number of points kept in registers).
@@ -86,10 +110,10 @@ impl EdgeType {
     /// butterflies). Split-complex: B points = 2*B/4 vectors.
     pub fn neon_data_regs(self) -> usize {
         match self {
-            EdgeType::R2 | EdgeType::R4 | EdgeType::R8 | EdgeType::RU => 0,
             EdgeType::F8 => 4,
             EdgeType::F16 => 8,
             EdgeType::F32 => 16,
+            _ => 0,
         }
     }
 
@@ -103,6 +127,8 @@ impl EdgeType {
             EdgeType::F16 => "In-register; NEON 4x4 transpose",
             EdgeType::F32 => "In-register; novel (needs 32 regs)",
             EdgeType::RU => "Real split/unpack; predecessor decides cost",
+            EdgeType::Transpose => "Blocked tiled transpose; strided walk",
+            EdgeType::BlockTwiddle => "Four-step twiddle; streaming pass",
         }
     }
 
@@ -117,19 +143,25 @@ impl EdgeType {
             EdgeType::F16 => "F16",
             EdgeType::F32 => "F32",
             EdgeType::RU => "RU",
+            EdgeType::Transpose => "TR",
+            EdgeType::BlockTwiddle => "BT",
         }
     }
 
     /// Parse a canonical name.
     pub fn parse(s: &str) -> Option<EdgeType> {
-        if s == "RU" {
-            return Some(EdgeType::RU);
+        match s {
+            "RU" => return Some(EdgeType::RU),
+            "TR" => return Some(EdgeType::Transpose),
+            "BT" => return Some(EdgeType::BlockTwiddle),
+            _ => {}
         }
         ALL_EDGES.iter().copied().find(|e| e.name() == s)
     }
 
-    /// Compact index in [0, 7) — used to index context tables. The
-    /// graph-catalog edges occupy [0, 6); RU sits past them at 6.
+    /// Compact index in [0, 9) — used to index context tables. The
+    /// graph-catalog edges occupy [0, 6); the boundary edges sit past
+    /// them: RU at 6, then the blocked-execution edges at 7 and 8.
     pub fn index(self) -> usize {
         match self {
             EdgeType::R2 => 0,
@@ -139,13 +171,18 @@ impl EdgeType {
             EdgeType::F16 => 4,
             EdgeType::F32 => 5,
             EdgeType::RU => 6,
+            EdgeType::Transpose => 7,
+            EdgeType::BlockTwiddle => 8,
         }
     }
 
     /// Inverse of [`EdgeType::index`].
     pub fn from_index(i: usize) -> Option<EdgeType> {
-        if i == 6 {
-            return Some(EdgeType::RU);
+        match i {
+            6 => return Some(EdgeType::RU),
+            7 => return Some(EdgeType::Transpose),
+            8 => return Some(EdgeType::BlockTwiddle),
+            _ => {}
         }
         ALL_EDGES.get(i).copied()
     }
@@ -180,11 +217,17 @@ pub const NUM_CONTEXTS: usize = 7;
 
 /// Catalog contexts plus the after-RU boundary context (|T| + 1 = 8):
 /// the full measured cell space since the boundary context became a
-/// calibrated cell.
+/// calibrated cell. The blocked-execution boundary contexts
+/// (`After(Transpose)` at index 8, `After(BlockTwiddle)` at index 9)
+/// exist past this — they appear in traces and attribution cells but
+/// are *not* measured wisdom cells (blocked boundary edges are priced
+/// analytically via `transpose_ns`/`block_twiddle_ns`, never harvested),
+/// so the persisted cell space is unchanged.
 pub const NUM_CONTEXTS_WITH_BOUNDARY: usize = 8;
 
 impl Context {
-    /// Compact index: 0 = start, 1.. = edge index + 1 (7 = after-RU).
+    /// Compact index: 0 = start, 1.. = edge index + 1 (7 = after-RU,
+    /// 8/9 = after the blocked-execution boundary edges).
     pub fn index(self) -> usize {
         match self {
             Context::Start => 0,
@@ -258,6 +301,8 @@ mod tests {
             assert_eq!(EdgeType::parse(e.name()), Some(e));
         }
         assert_eq!(EdgeType::parse("RU"), Some(EdgeType::RU));
+        assert_eq!(EdgeType::parse("TR"), Some(EdgeType::Transpose));
+        assert_eq!(EdgeType::parse("BT"), Some(EdgeType::BlockTwiddle));
         assert_eq!(EdgeType::parse("R16"), None);
         assert_eq!(EdgeType::parse(""), None);
     }
@@ -270,15 +315,26 @@ mod tests {
         }
         assert_eq!(EdgeType::from_index(6), Some(EdgeType::RU));
         assert_eq!(EdgeType::RU.index(), 6);
-        assert_eq!(EdgeType::from_index(7), None);
+        assert_eq!(EdgeType::from_index(7), Some(EdgeType::Transpose));
+        assert_eq!(EdgeType::Transpose.index(), 7);
+        assert_eq!(EdgeType::from_index(8), Some(EdgeType::BlockTwiddle));
+        assert_eq!(EdgeType::BlockTwiddle.index(), 8);
+        assert_eq!(EdgeType::from_index(9), None);
     }
 
     #[test]
-    fn ru_is_not_a_graph_edge() {
-        assert!(!ALL_EDGES.contains(&EdgeType::RU));
-        assert_eq!(EdgeType::RU.stages(), 0);
-        assert!(!EdgeType::RU.is_fused());
-        assert_eq!(EdgeType::RU.block_size(), None);
+    fn boundary_edges_are_not_graph_edges() {
+        for e in [EdgeType::RU, EdgeType::Transpose, EdgeType::BlockTwiddle] {
+            assert!(!ALL_EDGES.contains(&e));
+            assert!(e.is_boundary());
+            assert_eq!(e.stages(), 0);
+            assert!(!e.is_fused());
+            assert_eq!(e.block_size(), None);
+            assert_eq!(e.neon_data_regs(), 0);
+        }
+        for e in ALL_EDGES {
+            assert!(!e.is_boundary());
+        }
     }
 
     #[test]
@@ -290,8 +346,7 @@ mod tests {
             assert_eq!(Context::from_index(i), Some(*c));
         }
         // after-RU sits past the graph catalog at index 7 — a measured
-        // boundary cell, excluded from the graph-history contexts;
-        // nothing exists beyond it.
+        // boundary cell, excluded from the graph-history contexts.
         assert_eq!(Context::from_index(7), Some(Context::After(EdgeType::RU)));
         assert_eq!(Context::After(EdgeType::RU).index(), 7);
         assert!(!Context::all().any(|c| c == Context::After(EdgeType::RU)));
@@ -299,13 +354,23 @@ mod tests {
         assert_eq!(full.len(), NUM_CONTEXTS_WITH_BOUNDARY);
         assert_eq!(full[..NUM_CONTEXTS], Context::all().collect::<Vec<_>>()[..]);
         assert_eq!(*full.last().unwrap(), Context::After(EdgeType::RU));
-        assert_eq!(Context::from_index(8), None);
+        // the blocked-execution boundary contexts exist past the measured
+        // cell space (traces/attribution only, never wisdom cells)
+        assert_eq!(Context::from_index(8), Some(Context::After(EdgeType::Transpose)));
+        assert_eq!(Context::from_index(9), Some(Context::After(EdgeType::BlockTwiddle)));
+        assert_eq!(Context::After(EdgeType::Transpose).index(), 8);
+        assert_eq!(Context::After(EdgeType::BlockTwiddle).index(), 9);
+        assert!(!Context::all_with_boundary().any(|c| c == Context::After(EdgeType::Transpose)));
+        assert_eq!(Context::from_index(10), None);
     }
 
     #[test]
     fn display_names() {
         assert_eq!(EdgeType::F16.to_string(), "F16");
+        assert_eq!(EdgeType::Transpose.to_string(), "TR");
+        assert_eq!(EdgeType::BlockTwiddle.to_string(), "BT");
         assert_eq!(Context::Start.to_string(), "start");
         assert_eq!(Context::After(EdgeType::R4).to_string(), "after-R4");
+        assert_eq!(Context::After(EdgeType::Transpose).to_string(), "after-TR");
     }
 }

@@ -93,7 +93,7 @@ pub fn compile_step(
         EdgeType::F8 => fused_twiddles(cache, n, stage, 8),
         EdgeType::F16 => fused_twiddles(cache, n, stage, 16),
         EdgeType::F32 => fused_twiddles(cache, n, stage, 32),
-        EdgeType::RU => unreachable!(),
+        EdgeType::RU | EdgeType::Transpose | EdgeType::BlockTwiddle => unreachable!(),
     };
     CompiledStep { edge, stage, tw }
 }
@@ -109,7 +109,7 @@ pub fn run_step(k: &Kernels, step: &CompiledStep, re: &mut [f32], im: &mut [f32]
         EdgeType::F8 => (k.fused8)(re, im, step.stage, &step.tw),
         EdgeType::F16 => (k.fused16)(re, im, step.stage, &step.tw),
         EdgeType::F32 => (k.fused32)(re, im, step.stage, &step.tw),
-        EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
+        _ => panic!("{} is a boundary pass; never run as a c2c step", step.edge),
     }
 }
 
@@ -127,7 +127,7 @@ pub fn run_step_b(k: &Kernels, step: &CompiledStep, re: &mut [f32], im: &mut [f3
         EdgeType::F8 => (k.fused8_b)(re, im, step.stage, &step.tw, lanes),
         EdgeType::F16 => (k.fused16_b)(re, im, step.stage, &step.tw, lanes),
         EdgeType::F32 => (k.fused32_b)(re, im, step.stage, &step.tw, lanes),
-        EdgeType::RU => panic!("RU is a boundary pass; executed by the kind dispatch"),
+        _ => panic!("{} is a boundary pass; never run as a c2c step", step.edge),
     }
 }
 

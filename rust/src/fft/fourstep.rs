@@ -1,0 +1,646 @@
+//! Four-step (blocked) execution for transforms too large for cache.
+//!
+//! A flat arrangement walks the whole 8n-byte working set once per
+//! pass; past the L2 capacity every one of those walks streams from
+//! DRAM and the per-pass round trip the paper prices as the dominant
+//! cost (§2, Table 1) inflates by the DRAM:L1 bandwidth ratio. The
+//! classic answer (Bailey's four-step / six-step; FFTW's rec-vrank
+//! plans) is to factor n = p·q and do two passes of *cache-resident*
+//! sub-FFTs with a twiddle multiply and a transpose between them. This
+//! module is that execution path; the *decision* to use it — and the
+//! choice of (p, q) — belongs to the planner, which prices the
+//! boundary passes ([`crate::edge::EdgeType::Transpose`],
+//! [`crate::edge::EdgeType::BlockTwiddle`]) against the spilled-tier
+//! flat cost ([`crate::cost::CacheTier`]).
+//!
+//! ## Decomposition (decimation in time over columns)
+//!
+//! Write the input index j = j2 + q·j1 (j1 ∈ [0,p), j2 ∈ [0,q)) and
+//! the output index k = k1 + p·k2 (k1 ∈ [0,p), k2 ∈ [0,q)). Then
+//!
+//! ```text
+//! X[k1 + p·k2] = Σ_{j2} W_n^{j2·k1} · ( Σ_{j1} x[j2 + q·j1] W_p^{j1·k1} ) · W_q^{j2·k2}
+//! ```
+//!
+//! which executes as four steps:
+//!
+//! 1. **Columns** — q FFTs of length p over the stride-q columns
+//!    (inner sum). Column j2's natural-order result C_j2[k1] lands in
+//!    a scratch matrix at slot `q·k1 + j2`: the gather/scatter around
+//!    the sub-FFT *is* the first transpose, priced as a `TR` boundary
+//!    edge. Columns run 16 at a time through the lane-blocked panel
+//!    machinery ([`BatchBuffer`], the `_b` kernels): 16 consecutive
+//!    columns form contiguous 16-float runs in the source rows, so the
+//!    gather is unit-stride memcpy per row and the sub-FFT amortizes
+//!    every twiddle load over the panel.
+//! 2. **Block twiddle** — slot `q·k1 + j2` scales by W_n^{j2·k1}
+//!    (`BT` boundary edge). Row k1 = 0 is the identity and is skipped.
+//! 3. **Rows** — p FFTs of length q, each over a *contiguous*
+//!    cache-resident row of the scratch matrix, in place. These run
+//!    the scalar single-transform path: contiguity is the point, and
+//!    the per-row working set (8q bytes) fits L1/L2 by construction.
+//! 4. **Transpose out** — `out[k1 + p·k2] = buf[q·k1 + k2]`, tiled
+//!    32×32 (the second `TR` boundary edge).
+//!
+//! Both sub-plans compile `bitrev = true` (the index algebra above
+//! needs natural-order sub-results), so blocked output is always in
+//! natural order.
+//!
+//! ## Kinds
+//!
+//! Only a *forward* c2c core exists; the other three kinds wrap it
+//! with the same boundary passes [`CompiledPlan`] uses: inverse =
+//! conjugate + 1/n scale, real kinds = pack/unpack around a
+//! half-length core. The wrappers operate on the full request buffer;
+//! the core runs at `kind.complex_len(n)`.
+//!
+//! ## Numerics
+//!
+//! Blocked and flat execution agree to within f32 rounding, **not**
+//! bit-for-bit: the four-step factorization applies the same DFT
+//! algebra in a different association order, so individual lanes
+//! differ in the last ulps. Bit-identity to the flat path is *not*
+//! part of the contract (the tests pin a relative-error bound against
+//! the f64 reference instead); what is contractual is that the
+//! planner's flat-vs-blocked choice never changes results beyond that
+//! bound.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::edge::EdgeType;
+use crate::kind::TransformKind;
+use crate::plan::{ExecPlan, Plan};
+
+use super::batch::BatchBuffer;
+use super::exec::{CompiledPlan, Executor};
+use super::real;
+use super::twiddle::TwiddleVec;
+use super::{log2i, SplitComplex};
+
+/// Columns per panel group: 16 consecutive columns gathered into one
+/// lane-blocked [`BatchBuffer`] so the column sub-FFTs run batched.
+/// 16 f32 = one cache line on both modeled machines, so every gather
+/// row is a full-line unit-stride copy.
+pub const PANEL_COLS: usize = 16;
+
+/// Smallest admissible factor: both p and q must hold a full panel
+/// group (and a 16-wide transpose tile edge).
+pub const MIN_FACTOR: usize = PANEL_COLS;
+
+/// Transpose tile edge for the final out-of-place transpose.
+const TILE: usize = 32;
+
+/// The final-transpose walk: `dst[k1 + p·k2] = src[q·k1 + k2]`, tiled
+/// [`TILE`]×[`TILE`]. Standalone so the native cost provider times
+/// exactly the walk the executor runs.
+pub fn tiled_transpose(
+    src_re: &[f32],
+    src_im: &[f32],
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    p: usize,
+    q: usize,
+) {
+    debug_assert_eq!(src_re.len(), p * q);
+    debug_assert_eq!(dst_re.len(), p * q);
+    for k10 in (0..p).step_by(TILE) {
+        for k20 in (0..q).step_by(TILE) {
+            for k1 in k10..(k10 + TILE).min(p) {
+                let src = k1 * q;
+                for k2 in k20..(k20 + TILE).min(q) {
+                    dst_re[k1 + p * k2] = src_re[src + k2];
+                    dst_im[k1 + p * k2] = src_im[src + k2];
+                }
+            }
+        }
+    }
+}
+
+/// The block-twiddle walk: slot `q·k1 + j2` of the p×q matrix scales
+/// by `blocktw[k1][j2]`. Row 0 must be the identity row and is
+/// skipped. Standalone for the same reason as [`tiled_transpose`].
+pub fn apply_block_twiddle(re: &mut [f32], im: &mut [f32], q: usize, blocktw: &[Arc<TwiddleVec>]) {
+    let p = blocktw.len();
+    debug_assert_eq!(re.len(), p * q);
+    for k1 in 1..p {
+        let tw = &blocktw[k1];
+        let row_r = &mut re[k1 * q..(k1 + 1) * q];
+        let row_i = &mut im[k1 * q..(k1 + 1) * q];
+        for j2 in 0..q {
+            let (br, bi) = (row_r[j2], row_i[j2]);
+            let (tr, ti) = (tw.re[j2], tw.im[j2]);
+            row_r[j2] = br * tr - bi * ti;
+            row_i[j2] = br * ti + bi * tr;
+        }
+    }
+}
+
+/// Wall-clock nanoseconds of the four boundary passes of one run —
+/// what the traced path reports to the autotuner (the sub-FFT
+/// interiors are ordinary [`CompiledPlan`] work at sub-transform
+/// sizes and are *not* sampled: attribution cells have no n axis).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoundaryTimings {
+    /// Column gathers into the panel (first half of transpose #1).
+    pub gather_ns: f64,
+    /// Panel scatters into the scratch matrix (second half).
+    pub scatter_ns: f64,
+    /// The inter-block twiddle multiply.
+    pub twiddle_ns: f64,
+    /// The final tiled transpose.
+    pub transpose_ns: f64,
+}
+
+/// A four-step blocked execution compiled for a fixed n and kind:
+/// column/row sub-plans compiled through the per-ISA codelet tables,
+/// interned block-twiddle rows, and persistent scratch (panel + p×q
+/// matrix) so steady-state runs are allocation-free.
+#[derive(Debug)]
+pub struct CompiledFourStep {
+    /// Request-buffer length (for real kinds the core runs at n/2).
+    n: usize,
+    kind: TransformKind,
+    p: usize,
+    q: usize,
+    /// Column sub-FFT: forward, length p, natural order.
+    col: CompiledPlan,
+    /// Row sub-FFT: forward, length q, natural order.
+    row: CompiledPlan,
+    /// Row k1's block twiddles W_cn^{k1·j2}, j2 ∈ [0,q). Entry 0 is
+    /// the identity row (kept for uniform indexing; skipped at run
+    /// time). Interned process-wide like every other twiddle table.
+    blocktw: Vec<Arc<TwiddleVec>>,
+    /// Real-kind unpack/pack twiddles (None for c2c kinds).
+    ru_tw: Option<Arc<TwiddleVec>>,
+    /// Scale folded into the inverse-kind epilogue (1/cn).
+    scale: f32,
+    exec_plan: ExecPlan,
+    /// Lane-blocked panel for one column group (p points × 16 lanes).
+    panel: BatchBuffer,
+    /// The p×q scratch matrix, row-major with stride q.
+    buf_re: Vec<f32>,
+    buf_im: Vec<f32>,
+}
+
+/// Compile the four-step execution n = p·q (factors of the *c2c*
+/// length — for real kinds p·q = n/2). Both factors must be powers of
+/// two ≥ [`MIN_FACTOR`]; `col` must be a valid arrangement for
+/// log2(p) and `row` for log2(q).
+pub fn compile_four_step(
+    ex: &mut Executor,
+    n: usize,
+    kind: TransformKind,
+    p: usize,
+    q: usize,
+    col: &Plan,
+    row: &Plan,
+) -> CompiledFourStep {
+    let cn = kind.complex_len(n);
+    let (lp, lq) = (log2i(p), log2i(q));
+    assert_eq!(p * q, cn, "factors {p}x{q} do not cover c2c length {cn}");
+    assert!(p >= MIN_FACTOR && q >= MIN_FACTOR, "factors {p}x{q} below minimum {MIN_FACTOR}");
+    assert!(col.is_valid_for(lp), "column plan {col} invalid for p={p}");
+    assert!(row.is_valid_for(lq), "row plan {row} invalid for q={q}");
+    let compiled_col = ex.compile(col, p, true);
+    let compiled_row = ex.compile(row, q, true);
+    let blocktw = (0..p).map(|k1| ex.twiddle_cache().vector(cn, q, k1)).collect();
+    let ru_tw = kind.is_real().then(|| real::real_twiddles(ex.twiddle_cache(), cn));
+    let scale = if kind.is_inverse() { 1.0 / cn as f32 } else { 1.0 };
+    CompiledFourStep {
+        n,
+        kind,
+        p,
+        q,
+        col: compiled_col,
+        row: compiled_row,
+        blocktw,
+        ru_tw,
+        scale,
+        exec_plan: ExecPlan::Blocked { p, q, col: col.clone(), row: row.clone() },
+        panel: BatchBuffer::new(p, PANEL_COLS),
+        buf_re: vec![0.0; cn],
+        buf_im: vec![0.0; cn],
+    }
+}
+
+impl CompiledFourStep {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kind(&self) -> TransformKind {
+        self.kind
+    }
+
+    pub fn factors(&self) -> (usize, usize) {
+        (self.p, self.q)
+    }
+
+    pub fn exec_plan(&self) -> &ExecPlan {
+        &self.exec_plan
+    }
+
+    /// The ISA whose codelets the sub-FFTs dispatch to.
+    pub fn isa(&self) -> crate::isa::Isa {
+        self.col.isa()
+    }
+
+    /// The forward c2c core over `cn = p·q` points, in place, natural
+    /// order out. Returns the boundary-pass timings.
+    fn core(&mut self, re: &mut [f32], im: &mut [f32]) -> BoundaryTimings {
+        let (p, q) = (self.p, self.q);
+        let lanes = self.panel.lanes();
+        debug_assert_eq!(lanes, PANEL_COLS);
+        let mut t = BoundaryTimings::default();
+
+        // Step 1: column sub-FFTs, one 16-column panel group at a time.
+        for c0 in (0..q).step_by(PANEL_COLS) {
+            let t0 = Instant::now();
+            for i in 0..p {
+                let src = i * q + c0;
+                let dst = i * lanes;
+                self.panel.re[dst..dst + PANEL_COLS].copy_from_slice(&re[src..src + PANEL_COLS]);
+                self.panel.im[dst..dst + PANEL_COLS].copy_from_slice(&im[src..src + PANEL_COLS]);
+            }
+            t.gather_ns += t0.elapsed().as_secs_f64() * 1e9;
+
+            // lane l holds column j2 = c0 + l; forward + bitrev →
+            // natural-order C_{j2}[k1] in panel row k1
+            self.col.run_batch(&mut self.panel);
+
+            let t0 = Instant::now();
+            for k1 in 0..p {
+                let src = k1 * lanes;
+                let dst = k1 * q + c0;
+                self.buf_re[dst..dst + PANEL_COLS]
+                    .copy_from_slice(&self.panel.re[src..src + PANEL_COLS]);
+                self.buf_im[dst..dst + PANEL_COLS]
+                    .copy_from_slice(&self.panel.im[src..src + PANEL_COLS]);
+            }
+            t.scatter_ns += t0.elapsed().as_secs_f64() * 1e9;
+        }
+
+        // Step 2: block twiddle — slot q·k1 + j2 scales by W_cn^{k1·j2}.
+        let t0 = Instant::now();
+        apply_block_twiddle(&mut self.buf_re, &mut self.buf_im, q, &self.blocktw);
+        t.twiddle_ns = t0.elapsed().as_secs_f64() * 1e9;
+
+        // Step 3: row sub-FFTs over contiguous cache-resident rows, in
+        // place. Scalar single-transform path by design: each row is
+        // one unit-stride 8q-byte working set — the locality the
+        // decomposition exists to create — and lane-blocking rows
+        // would re-interleave them.
+        for k1 in 0..p {
+            self.row
+                .run(&mut self.buf_re[k1 * q..(k1 + 1) * q], &mut self.buf_im[k1 * q..(k1 + 1) * q]);
+        }
+
+        // Step 4: out[k1 + p·k2] = buf[q·k1 + k2], tiled.
+        let t0 = Instant::now();
+        tiled_transpose(&self.buf_re, &self.buf_im, re, im, p, q);
+        t.transpose_ns = t0.elapsed().as_secs_f64() * 1e9;
+        t
+    }
+
+    /// Kind dispatch around the forward core — the same wrappers as
+    /// [`CompiledPlan::run`] (negate/conj-scale for inverse,
+    /// pack/unpack at half length for the real kinds).
+    fn dispatch(&mut self, re: &mut [f32], im: &mut [f32]) -> BoundaryTimings {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        let h = self.p * self.q;
+        match self.kind {
+            TransformKind::Forward => self.core(re, im),
+            TransformKind::Inverse => {
+                real::negate(im);
+                let t = self.core(re, im);
+                real::conj_scale(re, im, self.scale);
+                t
+            }
+            TransformKind::RealForward => {
+                real::pack_even_odd(re, im, h);
+                let t = self.core(&mut re[..h], &mut im[..h]);
+                real::unpack_r2c(re, im, self.ru_tw.as_ref().unwrap());
+                t
+            }
+            TransformKind::RealInverse => {
+                real::pack_c2r(re, im, self.ru_tw.as_ref().unwrap());
+                let t = self.core(&mut re[..h], &mut im[..h]);
+                real::interleave_scale(re, im, self.scale);
+                t
+            }
+        }
+    }
+
+    /// Execute in place (natural order out; kind boundary passes as on
+    /// the flat path). `&mut self`: runs reuse the compiled scratch.
+    pub fn run(&mut self, re: &mut [f32], im: &mut [f32]) {
+        self.dispatch(re, im);
+    }
+
+    /// Execute reporting the four boundary-pass wall-clock samples to
+    /// `on_step(edge, stage, ns)` in execution order: column gather
+    /// (TR), panel scatter (TR), block twiddle (BT), final transpose
+    /// (TR). Sub-FFT interiors are not sampled — they are ordinary
+    /// compiled plans at sub-transform sizes, outside the attribution
+    /// grid of the serving size. Arithmetic is identical to
+    /// [`CompiledFourStep::run`].
+    pub fn run_traced(
+        &mut self,
+        re: &mut [f32],
+        im: &mut [f32],
+        on_step: &mut dyn FnMut(EdgeType, usize, f64),
+    ) {
+        let t = self.dispatch(re, im);
+        on_step(EdgeType::Transpose, 0, t.gather_ns);
+        on_step(EdgeType::Transpose, 0, t.scatter_ns);
+        on_step(EdgeType::BlockTwiddle, 0, t.twiddle_ns);
+        on_step(EdgeType::Transpose, 0, t.transpose_ns);
+    }
+
+    /// Convenience: run on a copy.
+    pub fn run_on(&mut self, input: &SplitComplex) -> SplitComplex {
+        let mut out = input.clone();
+        self.run(&mut out.re, &mut out.im);
+        out
+    }
+}
+
+/// A compiled [`ExecPlan`]: the single dispatch point callers hold so
+/// flat and blocked entries flow through one type (the plan cache, the
+/// service's compiled entries, the hot-swap path).
+#[derive(Debug)]
+pub enum CompiledExec {
+    Flat(CompiledPlan),
+    Blocked(Box<CompiledFourStep>),
+}
+
+impl CompiledExec {
+    /// Compile an execution decision for (n, kind). Flat plans compile
+    /// with bitrev so both variants produce natural order.
+    pub fn compile(
+        ex: &mut Executor,
+        plan: &ExecPlan,
+        n: usize,
+        kind: TransformKind,
+    ) -> CompiledExec {
+        match plan {
+            ExecPlan::Flat(p) => CompiledExec::Flat(ex.compile_kind(p, n, true, kind)),
+            ExecPlan::Blocked { p, q, col, row } => {
+                CompiledExec::Blocked(Box::new(compile_four_step(ex, n, kind, *p, *q, col, row)))
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            CompiledExec::Flat(c) => c.n,
+            CompiledExec::Blocked(c) => c.n(),
+        }
+    }
+
+    pub fn kind(&self) -> TransformKind {
+        match self {
+            CompiledExec::Flat(c) => c.kind,
+            CompiledExec::Blocked(c) => c.kind(),
+        }
+    }
+
+    pub fn is_blocked(&self) -> bool {
+        matches!(self, CompiledExec::Blocked(_))
+    }
+
+    /// The execution decision this was compiled from.
+    pub fn exec_plan(&self) -> ExecPlan {
+        match self {
+            CompiledExec::Flat(c) => ExecPlan::Flat(c.plan.clone()),
+            CompiledExec::Blocked(c) => c.exec_plan().clone(),
+        }
+    }
+
+    pub fn isa(&self) -> crate::isa::Isa {
+        match self {
+            CompiledExec::Flat(c) => c.isa(),
+            CompiledExec::Blocked(c) => c.isa(),
+        }
+    }
+
+    /// Execute in place (natural order for both variants).
+    pub fn run(&mut self, re: &mut [f32], im: &mut [f32]) {
+        match self {
+            CompiledExec::Flat(c) => c.run(re, im),
+            CompiledExec::Blocked(c) => c.run(re, im),
+        }
+    }
+
+    /// Execute with per-boundary/step sampling: flat entries report
+    /// every c2c step as usual; blocked entries report the four
+    /// boundary passes.
+    pub fn run_traced(
+        &mut self,
+        re: &mut [f32],
+        im: &mut [f32],
+        on_step: &mut dyn FnMut(EdgeType, usize, f64),
+    ) {
+        match self {
+            CompiledExec::Flat(c) => c.run_traced(re, im, on_step),
+            CompiledExec::Blocked(c) => c.run_traced(re, im, on_step),
+        }
+    }
+}
+
+/// A serviceable all-R4 (plus trailing R2 when l is odd) arrangement
+/// for a 2^l sub-transform — the fallback sub-plan when the caller has
+/// no planned arrangement for a factor (tests, benches, cold paths).
+pub fn radix_mix_plan(l: usize) -> Plan {
+    let mut edges = vec![EdgeType::R4; l / 2];
+    if l % 2 == 1 {
+        edges.push(EdgeType::R2);
+    }
+    Plan::new(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference::fft_ref;
+    use super::*;
+
+    fn rel_err(got: &SplitComplex, want: &SplitComplex) -> f32 {
+        got.max_abs_diff(want) / want.max_abs().max(1.0)
+    }
+
+    fn blocked(n: usize, kind: TransformKind, p: usize, q: usize) -> CompiledFourStep {
+        let mut ex = Executor::new();
+        let cp = radix_mix_plan(log2i(p));
+        let rp = radix_mix_plan(log2i(q));
+        compile_four_step(&mut ex, n, kind, p, q, &cp, &rp)
+    }
+
+    #[test]
+    fn forward_matches_reference() {
+        // square and both rectangular splits of n = 2^12
+        for (p, q) in [(64, 64), (16, 256), (256, 16), (32, 128)] {
+            let n = p * q;
+            let mut fs = blocked(n, TransformKind::Forward, p, q);
+            let input = SplitComplex::random(n, 0xF5 + p as u64);
+            let want = fft_ref(&input);
+            let got = fs.run_on(&input);
+            let err = rel_err(&got, &want);
+            assert!(err < 1e-4, "{p}x{q}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn all_kinds_agree_with_the_flat_path_within_rounding() {
+        // Bit-identity to flat is NOT the contract (different
+        // association order); agreement within f32 rounding is.
+        let n = 1 << 12;
+        let mut ex = Executor::new();
+        let flat_plan = radix_mix_plan(log2i(n));
+        let flat_half = radix_mix_plan(log2i(n / 2));
+        for kind in [
+            TransformKind::Forward,
+            TransformKind::Inverse,
+            TransformKind::RealForward,
+            TransformKind::RealInverse,
+        ] {
+            let plan = if kind.is_real() { &flat_half } else { &flat_plan };
+            let flat = ex.compile_kind(plan, n, true, kind);
+            let (p, q) = (64, kind.complex_len(n) / 64);
+            let mut fs = blocked(n, kind, p, q);
+            let input = match kind {
+                // c2r consumes an r2c spectrum; feed it a valid one
+                TransformKind::RealInverse => {
+                    let sig = SplitComplex::random(n, 0xC2);
+                    let mut spec = sig.clone();
+                    ex.compile_kind(&flat_half, n, true, TransformKind::RealForward)
+                        .run(&mut spec.re, &mut spec.im);
+                    spec
+                }
+                _ => SplitComplex::random(n, 0xA7 + kind as u64),
+            };
+            let want = flat.run_on(&input);
+            let got = fs.run_on(&input);
+            let err = rel_err(&got, &want);
+            assert!(err < 1e-4, "{kind:?}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips_through_forward() {
+        let n = 1 << 12;
+        let input = SplitComplex::random(n, 0x1D);
+        let mut fwd = blocked(n, TransformKind::Forward, 64, 64);
+        let mut inv = blocked(n, TransformKind::Inverse, 32, 128);
+        let back = inv.run_on(&fwd.run_on(&input));
+        let err = rel_err(&back, &input);
+        assert!(err < 1e-4, "roundtrip rel err {err}");
+    }
+
+    #[test]
+    fn real_kinds_roundtrip() {
+        let n = 1 << 13; // h = 2^12 = 64x64
+        let input = SplitComplex::random(n, 0x5E);
+        let mut r2c = blocked(n, TransformKind::RealForward, 64, 64);
+        let mut c2r = blocked(n, TransformKind::RealInverse, 64, 64);
+        // real transform: imaginary input part is ignored by contract
+        let mut real_in = input.clone();
+        real_in.im.iter_mut().for_each(|x| *x = 0.0);
+        let back = c2r.run_on(&r2c.run_on(&real_in));
+        let err = rel_err(&back, &real_in);
+        assert!(err < 1e-4, "r2c->c2r rel err {err}");
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_emits_four_boundary_samples() {
+        let n = 1 << 12;
+        let input = SplitComplex::random(n, 0x77);
+        let mut fs = blocked(n, TransformKind::Forward, 64, 64);
+        let plain = fs.run_on(&input);
+        let mut samples = Vec::new();
+        let mut traced = input.clone();
+        fs.run_traced(&mut traced.re, &mut traced.im, &mut |e, s, ns| {
+            samples.push((e, s));
+            assert!(ns >= 0.0);
+        });
+        assert_eq!(plain.re, traced.re, "tracing must not change arithmetic");
+        assert_eq!(plain.im, traced.im);
+        assert_eq!(
+            samples,
+            vec![
+                (EdgeType::Transpose, 0),
+                (EdgeType::Transpose, 0),
+                (EdgeType::BlockTwiddle, 0),
+                (EdgeType::Transpose, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn compiled_exec_dispatches_both_variants() {
+        let n = 1 << 12;
+        let mut ex = Executor::new();
+        let input = SplitComplex::random(n, 0x3C);
+        let want = fft_ref(&input);
+
+        let flat_decision = ExecPlan::Flat(radix_mix_plan(log2i(n)));
+        let mut flat = CompiledExec::compile(&mut ex, &flat_decision, n, TransformKind::Forward);
+        assert!(!flat.is_blocked());
+        assert_eq!(flat.exec_plan(), flat_decision);
+        let mut a = input.clone();
+        flat.run(&mut a.re, &mut a.im);
+        assert!(rel_err(&a, &want) < 1e-4);
+
+        let blocked_decision = ExecPlan::Blocked {
+            p: 64,
+            q: 64,
+            col: radix_mix_plan(6),
+            row: radix_mix_plan(6),
+        };
+        let mut blk = CompiledExec::compile(&mut ex, &blocked_decision, n, TransformKind::Forward);
+        assert!(blk.is_blocked());
+        assert_eq!(blk.exec_plan(), blocked_decision);
+        assert_eq!(blk.n(), n);
+        let mut b = input.clone();
+        blk.run(&mut b.re, &mut b.im);
+        assert!(rel_err(&b, &want) < 1e-4);
+
+        // both natural order → they agree with each other too
+        assert!(a.max_abs_diff(&b) / want.max_abs().max(1.0) < 1e-4);
+    }
+
+    #[test]
+    fn sub_plan_twiddles_intern_across_executors() {
+        // Two executors compiling the same blocked decision (a shard
+        // and its hot-swap replacement) share the block-twiddle rows
+        // through the global intern store.
+        let a = blocked(1 << 12, TransformKind::Forward, 64, 64);
+        let b = blocked(1 << 12, TransformKind::Forward, 64, 64);
+        for k1 in 0..64 {
+            assert!(Arc::ptr_eq(&a.blocktw[k1], &b.blocktw[k1]));
+        }
+    }
+
+    #[test]
+    fn tiled_transpose_is_a_transpose() {
+        // rectangular, tile-remainder shape on both axes
+        let (p, q) = (48, 80);
+        let src = SplitComplex::random(p * q, 0xEE);
+        let mut dst = SplitComplex::zeros(p * q);
+        tiled_transpose(&src.re, &src.im, &mut dst.re, &mut dst.im, p, q);
+        for k1 in 0..p {
+            for k2 in 0..q {
+                assert_eq!(dst.re[k1 + p * k2], src.re[q * k1 + k2]);
+                assert_eq!(dst.im[k1 + p * k2], src.im[q * k1 + k2]);
+            }
+        }
+    }
+
+    #[test]
+    fn radix_mix_plan_is_valid_for_every_l() {
+        for l in 1..=20 {
+            assert!(radix_mix_plan(l).is_valid_for(l));
+        }
+    }
+}

@@ -20,6 +20,9 @@
 //!   once per compiled plan through a [`simd::Kernels`] vtable;
 //! * [`exec`] — the plan executor (compiled plans over a twiddle cache),
 //!   parameterized by [`crate::kind::TransformKind`];
+//! * [`fourstep`] — cache-blocked four-step execution for large n:
+//!   n = p·q cache-resident sub-FFTs around the priced transpose and
+//!   block-twiddle boundary passes;
 //! * [`reference`] — O(n²) f64 DFT used as ground truth in tests.
 //!
 //! Three roles in the system: correctness cross-check for the PJRT
@@ -30,6 +33,7 @@
 pub mod batch;
 pub mod bitrev;
 pub mod exec;
+pub mod fourstep;
 pub mod fused;
 pub mod passes;
 pub mod real;
@@ -40,6 +44,7 @@ pub mod twiddle;
 pub use batch::{BatchBuffer, BatchBufferPool, LANE};
 pub use bitrev::{bit_reverse_indices, bit_reverse_permute};
 pub use exec::{CompiledPlan, Executor};
+pub use fourstep::{compile_four_step, CompiledExec, CompiledFourStep};
 pub use twiddle::TwiddleCache;
 
 /// Split-complex buffer: separate re/im arrays (paper §3.1: enables

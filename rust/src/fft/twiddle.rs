@@ -5,9 +5,20 @@
 //! All passes of all plans share one [`TwiddleCache`] — the paper's "same
 //! twiddle table" discipline (§4.1) — so arrangement comparisons measure
 //! instruction scheduling, not table-construction differences.
+//!
+//! Behind every [`TwiddleCache`] sits one **process-global intern
+//! store**: identical tables requested by different executors — the
+//! service's shards, a hot-swapped replacement plan, the four-step
+//! column/row sub-plans, every kind sharing the forward tables — resolve
+//! to the *same* `Arc<TwiddleVec>`, not per-executor copies. A cache is
+//! a thin per-executor memo over that store (lock-free on repeat
+//! lookups); the store counts interning hits and misses
+//! ([`global_stats`]) so the serving metrics can report how much table
+//! construction the sharing avoided.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// One twiddle vector: split re/im, unit stride.
 #[derive(Debug)]
@@ -37,8 +48,47 @@ impl TwiddleVec {
     }
 }
 
-/// Process-wide twiddle cache keyed by (m, count, k), plus combined
-/// fused-block sub-stage tables keyed by (m, e, lanes, step).
+/// The process-global intern store: one table per distinct key,
+/// whichever executor asks first. Both key spaces live behind one lock;
+/// lookups only reach it on a per-executor memo miss.
+#[derive(Debug, Default)]
+struct InternStore {
+    map: HashMap<(usize, usize, usize), Arc<TwiddleVec>>,
+    fused: HashMap<(usize, usize, usize, usize), Arc<TwiddleVec>>,
+}
+
+fn intern_store() -> &'static Mutex<InternStore> {
+    static STORE: OnceLock<Mutex<InternStore>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(InternStore::default()))
+}
+
+/// Interning hits: lookups answered by an already-constructed table
+/// (per-executor memo hits included — every one of these is a table the
+/// sharing did not rebuild).
+static INTERN_HITS: AtomicU64 = AtomicU64::new(0);
+/// Interning misses: tables computed for the first time process-wide.
+static INTERN_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative (hits, misses) of the global twiddle intern store. Hits
+/// count every lookup that reused an existing table; misses count
+/// first-time constructions. Monotonic over the process lifetime —
+/// consumers (the serving metrics) report deltas.
+pub fn global_stats() -> (u64, u64) {
+    (INTERN_HITS.load(Ordering::Relaxed), INTERN_MISSES.load(Ordering::Relaxed))
+}
+
+/// Number of distinct tables interned process-wide.
+pub fn global_entries() -> usize {
+    let s = intern_store().lock().unwrap();
+    s.map.len() + s.fused.len()
+}
+
+/// Per-executor view of the twiddle tables, keyed by (m, count, k), plus
+/// combined fused-block sub-stage tables keyed by (m, e, lanes, step).
+/// A local memo over the process-global intern store: repeat lookups
+/// stay lock-free, and distinct caches (shards, hot-swap replacement
+/// executors, four-step sub-plan compilers) share the underlying
+/// `Arc<TwiddleVec>` allocations.
 #[derive(Debug, Default)]
 pub struct TwiddleCache {
     map: HashMap<(usize, usize, usize), Arc<TwiddleVec>>,
@@ -50,35 +100,68 @@ impl TwiddleCache {
         Self::default()
     }
 
-    /// W_m^{k·j} for j in [0, count). Cached.
+    /// W_m^{k·j} for j in [0, count). Cached; interned process-wide.
     pub fn vector(&mut self, m: usize, count: usize, k: usize) -> Arc<TwiddleVec> {
-        self.map
-            .entry((m, count, k))
-            .or_insert_with(|| Arc::new(TwiddleVec::compute(m, count, k)))
-            .clone()
+        if let Some(v) = self.map.get(&(m, count, k)) {
+            INTERN_HITS.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        let v = {
+            let mut store = intern_store().lock().unwrap();
+            match store.map.get(&(m, count, k)) {
+                Some(v) => {
+                    INTERN_HITS.fetch_add(1, Ordering::Relaxed);
+                    v.clone()
+                }
+                None => {
+                    INTERN_MISSES.fetch_add(1, Ordering::Relaxed);
+                    let v = Arc::new(TwiddleVec::compute(m, count, k));
+                    store.map.insert((m, count, k), v.clone());
+                    v
+                }
+            }
+        };
+        self.map.insert((m, count, k), v.clone());
+        v
     }
 
     /// Combined fused-block sub-stage table: entry `k*e + j` is
     /// W_m^{step·j} · W_lanes^{k} for k ∈ [0, lanes/2), j ∈ [0, e).
-    /// Cached under a disjoint key space (lanes ≥ 2 disambiguates).
+    /// Cached under a disjoint key space (lanes ≥ 2 disambiguates);
+    /// interned process-wide like [`TwiddleCache::vector`].
     pub fn fused_table(&mut self, m: usize, e: usize, lanes: usize, step: usize) -> Arc<TwiddleVec> {
-        self.fused
-            .entry((m, e, lanes, step))
-            .or_insert_with(|| {
-                let half = lanes / 2;
-                let mut re = Vec::with_capacity(half * e);
-                let mut im = Vec::with_capacity(half * e);
-                for k in 0..half {
-                    for j in 0..e {
-                        let ang = -2.0 * std::f64::consts::PI
-                            * ((step * j) as f64 / m as f64 + k as f64 / lanes as f64);
-                        re.push(ang.cos() as f32);
-                        im.push(ang.sin() as f32);
-                    }
+        if let Some(v) = self.fused.get(&(m, e, lanes, step)) {
+            INTERN_HITS.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        let v = {
+            let mut store = intern_store().lock().unwrap();
+            match store.fused.get(&(m, e, lanes, step)) {
+                Some(v) => {
+                    INTERN_HITS.fetch_add(1, Ordering::Relaxed);
+                    v.clone()
                 }
-                Arc::new(TwiddleVec { re, im })
-            })
-            .clone()
+                None => {
+                    INTERN_MISSES.fetch_add(1, Ordering::Relaxed);
+                    let half = lanes / 2;
+                    let mut re = Vec::with_capacity(half * e);
+                    let mut im = Vec::with_capacity(half * e);
+                    for k in 0..half {
+                        for j in 0..e {
+                            let ang = -2.0 * std::f64::consts::PI
+                                * ((step * j) as f64 / m as f64 + k as f64 / lanes as f64);
+                            re.push(ang.cos() as f32);
+                            im.push(ang.sin() as f32);
+                        }
+                    }
+                    let v = Arc::new(TwiddleVec { re, im });
+                    store.fused.insert((m, e, lanes, step), v.clone());
+                    v
+                }
+            }
+        };
+        self.fused.insert((m, e, lanes, step), v.clone());
+        v
     }
 
     /// Number of distinct cached vectors (for tests / memory accounting).
@@ -141,5 +224,34 @@ mod tests {
         c.vector(64, 32, 3);
         assert_eq!(c.entries(), 2);
         assert_eq!(c.total_elems(), 2 * 32 * 2);
+    }
+
+    #[test]
+    fn separate_caches_intern_to_the_same_table() {
+        // The global intern store: two independent caches (two shards,
+        // or a hot-swap replacement executor) resolve the same key to
+        // the same allocation, and the reuse is counted.
+        let (h0, m0) = global_stats();
+        let mut c1 = TwiddleCache::new();
+        let mut c2 = TwiddleCache::new();
+        // a key unlikely to collide with other tests' sizes
+        let a = c1.vector(1 << 14, 3, 5);
+        let b = c2.vector(1 << 14, 3, 5);
+        assert!(Arc::ptr_eq(&a, &b));
+        let f1 = c1.fused_table(1 << 14, 3, 4, 5);
+        let f2 = c2.fused_table(1 << 14, 3, 4, 5);
+        assert!(Arc::ptr_eq(&f1, &f2));
+        let (h1, m1) = global_stats();
+        // c2's lookups were interning hits; at most the two first-time
+        // constructions were misses (other tests may add their own)
+        assert!(h1 >= h0 + 2, "hits {h0} -> {h1}");
+        assert!(m1 >= m0, "misses are monotonic");
+        assert!(global_entries() >= 2);
+        // local memo hits count too (repeat lookup, no lock); other
+        // tests run concurrently, so assert the floor, not equality
+        let (h2, _) = global_stats();
+        c1.vector(1 << 14, 3, 5);
+        let (h3, _) = global_stats();
+        assert!(h3 >= h2 + 1);
     }
 }

@@ -23,6 +23,8 @@ fn color(e: EdgeType) -> &'static str {
         EdgeType::F8 | EdgeType::F16 | EdgeType::F32 => "green",
         // the boundary edge of real-kind expanded graphs
         EdgeType::RU => "purple",
+        // blocked-execution boundary edges (never drawn in-graph)
+        EdgeType::Transpose | EdgeType::BlockTwiddle => "gray",
     }
 }
 

@@ -36,6 +36,16 @@ use crate::edge::EdgeType;
 /// plan R4 -> F8 -> F32 uses a mid-path F8). This catalog also matches
 /// the paper's §2.5 measurement budget (~30 context-free cells).
 pub fn edge_allowed(edge: EdgeType, stage: usize, l: usize) -> bool {
+    // Boundary passes (RU, TR, BT) are not decomposition steps: they
+    // advance zero stages (an RU/TR/BT "edge" re-walks the data between
+    // FFT passes), so admitting one here would let enumeration loop
+    // forever at a fixed stage. The planning graph inserts RU
+    // structurally on real-kind surfaces, and the four-step boundary
+    // edges are priced by `plan_exec` outside the per-stage graph —
+    // none of them is ever a positional choice.
+    if edge.is_boundary() {
+        return false;
+    }
     if stage + edge.stages() > l {
         return false;
     }

@@ -156,6 +156,75 @@ fn common(cmd: Command) -> Command {
         .flag("quick", "fast measurement protocol for --cost native")
 }
 
+/// `--max-resident-n` option shared by search/tune/serve: the operator's
+/// cache-capacity override for the flat-vs-blocked execution decision.
+fn max_resident_opt(cmd: Command) -> Command {
+    cmd.opt(
+        "max-resident-n",
+        "0",
+        "largest cache-resident transform size: larger sizes compare flat vs four-step blocked execution (0 = off)",
+    )
+}
+
+/// Parse `--max-resident-n` (0 = feature off).
+fn parse_max_resident(args: &Args) -> Result<Option<usize>, CliError> {
+    let v = args.get_usize("max-resident-n")?;
+    if v == 0 {
+        return Ok(None);
+    }
+    if !v.is_power_of_two() || v < 4 {
+        return Err(CliError(format!(
+            "--max-resident-n must be 0 or a power of two >= 4, got {v}"
+        )));
+    }
+    Ok(Some(v))
+}
+
+/// Run the execution-mode search (`plan_exec`) under the CLI-selected
+/// cost family. `plan_exec` prices sub-transforms at their own sizes, so
+/// it needs a size-parameterized model *factory* — this is where the
+/// `--cost` switch turns into one.
+fn plan_exec_cli(
+    args: &Args,
+    n: usize,
+    strategy: &Strategy,
+    surface: PlanningSurface,
+    limit: usize,
+) -> Result<spfft::planner::ExecOutcome, CliError> {
+    match args.get("cost") {
+        "sim" => {
+            let machine = spfft::sim::Machine::by_name(args.get("machine"))
+                .ok_or_else(|| CliError(format!("unknown machine '{}'", args.get("machine"))))?;
+            let mut make = |m: usize| SimCost::new(machine.clone(), m);
+            Ok(spfft::planner::plan_exec(&mut make, n, strategy, surface, Some(limit)))
+        }
+        "native" => {
+            let quick = args.flag("quick");
+            let mut make =
+                |m: usize| if quick { NativeCost::quick(m) } else { NativeCost::paper(m) };
+            Ok(spfft::planner::plan_exec(&mut make, n, strategy, surface, Some(limit)))
+        }
+        other => Err(CliError(format!("--cost must be sim|native, got '{other}'"))),
+    }
+}
+
+/// One-line human rendering of an execution decision (search/tune).
+fn exec_decision_line(limit: usize, out: &spfft::planner::ExecOutcome) -> String {
+    match &out.exec {
+        spfft::plan::ExecPlan::Flat(p) => format!(
+            "exec (resident cap {limit}): flat {p}  believed {:.1} ns",
+            out.believed_ns
+        ),
+        blocked @ spfft::plan::ExecPlan::Blocked { .. } => format!(
+            "exec (resident cap {limit}): {blocked}  believed {:.1} ns  (flat {} {:.1} ns, {:.2}x)",
+            out.believed_ns,
+            out.flat_plan,
+            out.flat_ns,
+            out.flat_ns / out.believed_ns
+        ),
+    }
+}
+
 fn parse_or_help(cmd: &Command, argv: &[String]) -> Result<Option<Args>, CliError> {
     if argv.iter().any(|a| a == "--help" || a == "-h") {
         eprintln!("{}", cmd.usage());
@@ -165,10 +234,13 @@ fn parse_or_help(cmd: &Command, argv: &[String]) -> Result<Option<Args>, CliErro
 }
 
 fn cmd_search(argv: &[String]) -> Result<(), CliError> {
-    let cmd = isa_opt(common(Command::new("search", "run the searches and baselines")))
-        .opt("k", "1", "context order for the context-aware search")
-        .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
-        .flag("all", "also rank every valid plan (exhaustive dump)");
+    let cmd = max_resident_opt(isa_opt(common(Command::new(
+        "search",
+        "run the searches and baselines",
+    ))))
+    .opt("k", "1", "context order for the context-aware search")
+    .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
+    .flag("all", "also rank every valid plan (exhaustive dump)");
     let Some(args) = parse_or_help(&cmd, argv)? else { return Ok(()) };
     let n = args.get_usize("n")?;
     let k = args.get_usize("k")?;
@@ -213,6 +285,16 @@ fn cmd_search(argv: &[String]) -> Result<(), CliError> {
             println!("  {:<40} {:>9.1} ns {:>6.1} GF", p.to_string(), t, gflops(cn, t));
         }
     }
+    if let Some(limit) = parse_max_resident(&args)? {
+        let out = plan_exec_cli(
+            &args,
+            cn,
+            &Strategy::DijkstraContextAware { k },
+            surface,
+            limit,
+        )?;
+        println!("  {}", exec_decision_line(limit, &out));
+    }
     Ok(())
 }
 
@@ -228,10 +310,10 @@ fn tune_strategies(k: usize) -> Vec<Strategy> {
 }
 
 fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
-    let cmd = isa_opt(common(Command::new(
+    let cmd = max_resident_opt(isa_opt(common(Command::new(
         "tune",
         "per-strategy believed-vs-true cost table on a planning surface",
-    )))
+    ))))
     .opt("k", "1", "context order for the context-aware search")
     .opt("kind", "forward", "planning surface kind (real kinds plan the n/2 c2c surface + RU edge)")
     .opt("batch", "1", "batch width the surface prices (per-transform amortized weights)")
@@ -269,6 +351,16 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
         .iter()
         .map(|s| plan_surface(&mut cost, s, surface))
         .collect();
+    // The execution-mode decision is reported *in addition to* the
+    // per-strategy table, and only when the operator asked for it — the
+    // default output (the CI golden-gate format) stays byte-stable.
+    let exec = match parse_max_resident(&args)? {
+        Some(limit) => Some((
+            limit,
+            plan_exec_cli(&args, cn, &Strategy::DijkstraContextAware { k }, surface, limit)?,
+        )),
+        None => None,
+    };
     if args.flag("json") {
         let mut root = std::collections::BTreeMap::new();
         root.insert("n".to_string(), Json::Num(n as f64));
@@ -294,6 +386,18 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
             })
             .collect();
         root.insert("strategies".to_string(), Json::Arr(rows));
+        if let Some((limit, out)) = &exec {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert("max_resident_n".to_string(), Json::Num(*limit as f64));
+            e.insert("mode".to_string(), Json::Str(
+                if out.exec.is_blocked() { "blocked" } else { "flat" }.into(),
+            ));
+            e.insert("exec".to_string(), Json::Str(out.exec.to_string()));
+            e.insert("believed_ns".to_string(), Json::Num(out.believed_ns));
+            e.insert("flat_plan".to_string(), Json::Str(out.flat_plan.to_string()));
+            e.insert("flat_ns".to_string(), Json::Num(out.flat_ns));
+            root.insert("exec_decision".to_string(), Json::Obj(e));
+        }
         println!("{}", spfft::util::json::to_string(&Json::Obj(root)));
     } else {
         println!(
@@ -312,6 +416,9 @@ fn cmd_tune(argv: &[String]) -> Result<(), CliError> {
                 o.true_ns,
                 o.cells
             );
+        }
+        if let Some((limit, out)) = &exec {
+            println!("  {}", exec_decision_line(*limit, out));
         }
     }
     Ok(())
@@ -514,10 +621,10 @@ impl Serving {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
-    let cmd = isa_opt(common(Command::new(
+    let cmd = max_resident_opt(isa_opt(common(Command::new(
         "serve",
         "run the batched FFT service on a synthetic workload",
-    )))
+    ))))
     .flag("force-scalar", "force the scalar codelet backend (sets SPFFT_FORCE_SCALAR; parity/debug)")
     .opt("requests", "2000", "number of requests")
         .opt("backend", "native", "execution backend (native|pjrt)")
@@ -630,6 +737,34 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
     let shed_us = args.get_usize("shed-deadline-us")?;
     let exec_mode: spfft::coordinator::ExecModePolicy =
         args.get("exec-mode").parse().map_err(CliError)?;
+    let max_resident_n = parse_max_resident(&args)?;
+    if let Some(limit) = max_resident_n {
+        if cn > limit {
+            println!(
+                "resident cap {limit}: c2c n={cn} spills; workers re-decide flat vs blocked at startup"
+            );
+        }
+    }
+    // Mirror of the workers' startup execution decision (same model
+    // family, strategy, and cap), so believed values for traced TR/BT
+    // samples price at the split actually being served.
+    let blocked_shape = max_resident_n.and_then(|limit| {
+        if cn <= limit {
+            return None;
+        }
+        let mut make = SimCost::m1;
+        let out = spfft::planner::plan_exec(
+            &mut make,
+            cn,
+            &Strategy::DijkstraContextAware { k: 1 },
+            PlanningSurface::forward(),
+            Some(limit),
+        );
+        match out.exec {
+            spfft::plan::ExecPlan::Blocked { p, q, .. } => Some((p, q)),
+            spfft::plan::ExecPlan::Flat(_) => None,
+        }
+    });
     let config = spfft::coordinator::ServiceConfig {
         plans: vec![(cn, ca.plan.clone())],
         backend,
@@ -645,6 +780,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
             .then(|| std::time::Duration::from_micros(shed_us as u64)),
         observer: observer.clone(),
         exec_mode,
+        max_resident_n,
     };
     // --shards 1 runs the plain single-process service (identical
     // behavior and exports to every earlier release); more shards run
@@ -686,6 +822,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
                     obs,
                     svc.autotune_status().as_ref(),
                     cost.as_dyn(),
+                    blocked_shape,
                 )?;
             }
         }
@@ -716,11 +853,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
                 obs,
                 status.as_ref(),
                 cost.as_dyn(),
+                blocked_shape,
             )?;
             println!("metrics snapshot: {metrics_out}");
         }
         if !prom_out.is_empty() {
-            fill_believed_from(obs, cost.as_dyn());
+            fill_believed_from(obs, cost.as_dyn(), blocked_shape);
             let text = match &shard_snaps {
                 Some(shards) => spfft::obs::prometheus_text_sharded(
                     shards,
@@ -757,6 +895,15 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
         snap.latency_p95,
         snap.latency_p99,
     );
+    if snap.twiddle_hits + snap.twiddle_misses > 0 {
+        println!(
+            "twiddle interning: {} reused / {} built ({:.0}% reuse), {} distinct tables",
+            snap.twiddle_hits,
+            snap.twiddle_misses,
+            100.0 * snap.twiddle_hit_rate,
+            spfft::fft::twiddle::global_entries(),
+        );
+    }
     if coalesce_windows > 0 {
         println!(
             "coalesce: {} held flushes, hit rate {:.0}%, {} singleton pairings, mean held age {:?} (max {:?})",
@@ -793,15 +940,27 @@ fn cmd_serve(argv: &[String]) -> Result<(), CliError> {
 /// Price every attribution cell's believed cost from the serving cost
 /// model: the cell's own (kind, batch-class, isa) planning surface
 /// answers, so residuals compare observed ns against exactly the
-/// weights the planner searched under for that backend.
-fn fill_believed_from(obs: &spfft::obs::Observer, cost: &mut dyn CostModel) {
-    obs.attribution().fill_believed(|(kind, isa, class, stage, edge, ctx)| {
-        Some(cost.surface_edge_ns(
+/// weights the planner searched under for that backend. The blocked
+/// boundary edges (TR/BT) are shape-keyed, not surface-keyed — their
+/// cells price through the dedicated model answers at the served split
+/// when one is known (`blocked = Some((p, q))`), and keep an unset
+/// believed value otherwise.
+fn fill_believed_from(
+    obs: &spfft::obs::Observer,
+    cost: &mut dyn CostModel,
+    blocked: Option<(usize, usize)>,
+) {
+    obs.attribution().fill_believed(|(kind, isa, class, stage, edge, ctx)| match edge {
+        spfft::edge::EdgeType::Transpose => blocked.map(|(p, q)| cost.transpose_ns(p, q)),
+        spfft::edge::EdgeType::BlockTwiddle => {
+            blocked.map(|(p, q)| cost.block_twiddle_ns(p * q))
+        }
+        _ => Some(cost.surface_edge_ns(
             edge,
             stage,
             ctx,
             PlanningSurface::for_kind(kind).with_batch_class(class).with_isa(isa),
-        ))
+        )),
     });
 }
 
@@ -814,8 +973,9 @@ fn write_metrics_snapshot(
     obs: &spfft::obs::Observer,
     status: Option<&spfft::autotune::AutotuneStatus>,
     cost: &mut dyn CostModel,
+    blocked: Option<(usize, usize)>,
 ) -> Result<(), CliError> {
-    fill_believed_from(obs, cost);
+    fill_believed_from(obs, cost, blocked);
     let doc = match shards {
         Some(shards) => spfft::obs::snapshot_json_sharded(
             shards,

@@ -85,9 +85,12 @@ impl Attribution {
     /// Fold one sample into its cell. Marshal-span samples are data
     /// movement, not catalog cells — their edge/stage/ctx fields are
     /// placeholders, so folding them would invent a bogus RU@0 row.
-    /// The metrics layer accounts marshal time separately.
+    /// The metrics layer accounts marshal time separately. Boundary-span
+    /// samples (the TR/BT passes of a traced blocked execution) *are*
+    /// cells: their edge field is real, and attribution is exactly where
+    /// an operator looks to see a blocked size's transpose bill.
     pub fn observe(&self, sample: &EdgeSample) {
-        if sample.span != SampleSpan::Edge {
+        if sample.span == SampleSpan::Marshal {
             return;
         }
         let mut cells = self.cells.lock().unwrap();
@@ -223,6 +226,40 @@ mod tests {
         let cell = a.cells()[0].1;
         assert!(cell.has_believed);
         assert_eq!(cell.residual_ns(), Some(20.0));
+    }
+
+    #[test]
+    fn blocked_boundary_samples_become_cells_with_their_edges() {
+        // A traced blocked run emits three TR walks + one BT multiply;
+        // they must land on their own edges (not vanish like marshal
+        // spans) so the attribution table shows the transpose bill.
+        let a = Attribution::new();
+        for ns in [100.0, 110.0, 105.0] {
+            a.observe(&EdgeSample::boundary(
+                EdgeType::Transpose,
+                256,
+                256,
+                TransformKind::Forward,
+                Isa::Scalar,
+                ns,
+            ));
+        }
+        a.observe(&EdgeSample::boundary(
+            EdgeType::BlockTwiddle,
+            256,
+            256,
+            TransformKind::Forward,
+            Isa::Scalar,
+            400.0,
+        ));
+        assert_eq!(a.len(), 2);
+        let cells = a.cells();
+        let tr = cells.iter().find(|(k, _)| k.4 == EdgeType::Transpose).unwrap();
+        let bt = cells.iter().find(|(k, _)| k.4 == EdgeType::BlockTwiddle).unwrap();
+        assert_eq!(tr.1.samples, 3);
+        assert_eq!(tr.1.observed_ns, 315.0);
+        assert_eq!(bt.1.samples, 1);
+        assert_eq!(bt.1.observed_ns, 400.0);
     }
 
     #[test]

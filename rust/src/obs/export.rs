@@ -138,6 +138,9 @@ pub fn snapshot_json(
                 ("exec_scalar_groups", num(snap.exec_scalar_groups as f64)),
                 ("exec_panel_requests", num(snap.exec_panel_requests as f64)),
                 ("exec_scalar_requests", num(snap.exec_scalar_requests as f64)),
+                ("twiddle_hits", num(snap.twiddle_hits as f64)),
+                ("twiddle_misses", num(snap.twiddle_misses as f64)),
+                ("twiddle_hit_rate", num(snap.twiddle_hit_rate)),
             ]),
         ),
         (
@@ -262,6 +265,9 @@ pub fn schema_check_snapshot(doc: &Json) -> Result<(), String> {
         "exec_scalar_groups",
         "exec_panel_requests",
         "exec_scalar_requests",
+        "twiddle_hits",
+        "twiddle_misses",
+        "twiddle_hit_rate",
     ] {
         if counters.get(field).as_f64().is_none() {
             return Err(format!("counters.{field} missing or not a number"));
@@ -475,6 +481,20 @@ pub fn prometheus_text(
         "Time spent marshalling panels (gather + scatter round trip, ns)",
     );
     prom_line(&mut out, "spfft_marshal_ns_total", &[], snap.marshal_time.as_nanos() as f64);
+    prom_head(
+        &mut out,
+        "spfft_twiddle_intern_total",
+        "counter",
+        "Twiddle-table intern lookups since service start, by outcome (hit = table reused, miss = first-time construction)",
+    );
+    for (outcome, count) in [("hit", snap.twiddle_hits), ("miss", snap.twiddle_misses)] {
+        prom_line(
+            &mut out,
+            "spfft_twiddle_intern_total",
+            &[("outcome", outcome.to_string())],
+            count as f64,
+        );
+    }
     prom_head(&mut out, "spfft_latency_ns", "gauge", "Request latency percentiles (ns)");
     for (q, d) in [
         ("p50", snap.latency_p50),
@@ -694,6 +714,7 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
         "spfft_exec_groups_total",
         "spfft_exec_requests_total",
         "spfft_marshal_ns_total",
+        "spfft_twiddle_intern_total",
         "spfft_latency_ns",
         "spfft_recorder_events_total",
         "spfft_recorder_dropped_total",
@@ -739,6 +760,9 @@ pub fn schema_check_prometheus(text: &str) -> Result<(), String> {
             && !name_labels.contains("mode=")
         {
             return err("execution-mode sample missing mode= label");
+        }
+        if name == "spfft_twiddle_intern_total" && !name_labels.contains("outcome=") {
+            return err("twiddle intern sample missing outcome= label");
         }
     }
     Ok(())
@@ -1165,6 +1189,9 @@ mod tests {
             exec_panel_requests: 7,
             exec_scalar_requests: 2,
             marshal_time: Duration::from_micros(120),
+            twiddle_hits: 6,
+            twiddle_misses: 2,
+            twiddle_hit_rate: 0.75,
             busy: Duration::from_micros(900),
             latency_p50: Duration::from_micros(10),
             latency_p95: Duration::from_micros(40),
@@ -1210,6 +1237,9 @@ mod tests {
         let parsed = json::parse(&text).unwrap();
         schema_check_snapshot(&parsed).unwrap();
         assert_eq!(parsed.get("counters").get("submitted").as_usize(), Some(10));
+        assert_eq!(parsed.get("counters").get("twiddle_hits").as_usize(), Some(6));
+        assert_eq!(parsed.get("counters").get("twiddle_misses").as_usize(), Some(2));
+        assert_eq!(parsed.get("counters").get("twiddle_hit_rate").as_f64(), Some(0.75));
         assert_eq!(
             parsed.get("counters").get("completed_by_kind").get("inverse").as_usize(),
             Some(2)
@@ -1358,6 +1388,8 @@ mod tests {
         assert!(prom.contains("spfft_exec_requests_total{mode=\"panel\"} 7"));
         assert!(prom.contains("spfft_exec_requests_total{mode=\"scalar\"} 2"));
         assert!(prom.contains("spfft_marshal_ns_total 120000"));
+        assert!(prom.contains("spfft_twiddle_intern_total{outcome=\"hit\"} 6"));
+        assert!(prom.contains("spfft_twiddle_intern_total{outcome=\"miss\"} 2"));
         let stripped: String = prom
             .lines()
             .filter(|l| !l.contains("spfft_marshal_ns_total"))

@@ -37,7 +37,7 @@ impl Plan {
                 continue;
             }
             let e = EdgeType::parse(tok)?;
-            if e == EdgeType::RU {
+            if e.is_boundary() {
                 return None;
             }
             edges.push(e);
@@ -94,6 +94,64 @@ impl fmt::Display for Plan {
 impl FromIterator<EdgeType> for Plan {
     fn from_iter<I: IntoIterator<Item = EdgeType>>(iter: I) -> Self {
         Plan::new(iter.into_iter().collect())
+    }
+}
+
+/// How a transform of one size actually executes: a single flat
+/// arrangement, or the four-step blocked decomposition n = p·q with a
+/// flat sub-arrangement per factor. The planner compares flat against
+/// every admissible (p, q) split and returns whichever it believes
+/// cheaper; this enum is that decision, and it is what the plan cache
+/// stores and the service hot-swaps.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ExecPlan {
+    /// One in-cache arrangement over the whole transform.
+    Flat(Plan),
+    /// Four-step blocked execution: q column FFTs of length p (plan
+    /// `col`), the inter-block twiddle, p row FFTs of length q (plan
+    /// `row`), and the final transpose. `col` must be valid for
+    /// log2(p), `row` for log2(q).
+    Blocked { p: usize, q: usize, col: Plan, row: Plan },
+}
+
+impl ExecPlan {
+    pub fn is_blocked(&self) -> bool {
+        matches!(self, ExecPlan::Blocked { .. })
+    }
+
+    /// The flat arrangement, if this is one.
+    pub fn as_flat(&self) -> Option<&Plan> {
+        match self {
+            ExecPlan::Flat(p) => Some(p),
+            ExecPlan::Blocked { .. } => None,
+        }
+    }
+
+    /// True iff the execution covers a 2^l-point c2c transform: a flat
+    /// plan valid for l, or factors multiplying to 2^l with each
+    /// sub-plan valid for its factor.
+    pub fn is_valid_for(&self, l: usize) -> bool {
+        match self {
+            ExecPlan::Flat(p) => p.is_valid_for(l),
+            ExecPlan::Blocked { p, q, col, row } => {
+                p.is_power_of_two()
+                    && q.is_power_of_two()
+                    && p.trailing_zeros() as usize + q.trailing_zeros() as usize == l
+                    && col.is_valid_for(p.trailing_zeros() as usize)
+                    && row.is_valid_for(q.trailing_zeros() as usize)
+            }
+        }
+    }
+}
+
+impl fmt::Display for ExecPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecPlan::Flat(p) => write!(f, "{p}"),
+            ExecPlan::Blocked { p, q, col, row } => {
+                write!(f, "blocked[{p}x{q}; col={col}; row={row}]")
+            }
+        }
     }
 }
 
@@ -155,6 +213,9 @@ mod tests {
         assert!(Plan::parse("RU").is_none());
         assert!(Plan::parse("RU,R2,R2,R2,R2,R2,R2,R2,R2,R2,R2").is_none());
         assert!(Plan::parse("R4,RU,F8").is_none());
+        // the blocked-execution boundary edges are equally structural
+        assert!(Plan::parse("TR").is_none());
+        assert!(Plan::parse("R4,BT,F8").is_none());
     }
 
     #[test]
@@ -175,6 +236,33 @@ mod tests {
         let p = Plan::parse("R4,R2,R4,R4,F8").unwrap();
         assert_eq!(p.stages(), vec![0, 2, 3, 5, 7]);
         assert_eq!(p.steps(), vec![(R4, 0), (R2, 2), (R4, 3), (R4, 5), (F8, 7)]);
+    }
+
+    #[test]
+    fn exec_plan_validity_and_display() {
+        let flat = ExecPlan::Flat(Plan::parse("R4,R4,R2").unwrap());
+        assert!(flat.is_valid_for(5));
+        assert!(!flat.is_valid_for(6));
+        assert!(!flat.is_blocked());
+        let blocked = ExecPlan::Blocked {
+            p: 64,
+            q: 64,
+            col: Plan::parse("R4,R4,R4").unwrap(),
+            row: Plan::parse("R8,R8").unwrap(),
+        };
+        assert!(blocked.is_valid_for(12));
+        assert!(!blocked.is_valid_for(11));
+        assert!(blocked.is_blocked());
+        assert!(blocked.as_flat().is_none());
+        assert_eq!(blocked.to_string(), "blocked[64x64; col=R4->R4->R4; row=R8->R8]");
+        // sub-plan mismatched to its factor is invalid even if the total matches
+        let bad = ExecPlan::Blocked {
+            p: 64,
+            q: 64,
+            col: Plan::parse("R4,R4").unwrap(),
+            row: Plan::parse("R8,R8,R8,R2,R2").unwrap(),
+        };
+        assert!(!bad.is_valid_for(12));
     }
 
     #[test]

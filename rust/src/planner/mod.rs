@@ -22,10 +22,12 @@
 
 pub mod baselines;
 
-use crate::cost::{CostModel, PlanningSurface};
+use crate::cost::{CacheTier, CostModel, PlanningSurface};
+use crate::edge::Context;
+use crate::fft::fourstep::{MIN_FACTOR, PANEL_COLS};
 use crate::graph::enumerate::enumerate_plans;
 use crate::graph::planning::PlanningGraph;
-use crate::plan::Plan;
+use crate::plan::{ExecPlan, Plan};
 
 pub use baselines::{beam_search, exhaustive_best, fftw_dp};
 
@@ -109,6 +111,116 @@ pub fn plan_surface<C: CostModel>(
         believed_ns: result.cost_ns,
         true_ns,
         cells: result.cells,
+    }
+}
+
+/// Outcome of an execution-mode search: flat vs every admissible
+/// four-step (p, q) split, priced on the same surface.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub strategy: String,
+    /// The winning execution decision.
+    pub exec: ExecPlan,
+    /// Believed steady-state cost of the winner (ns).
+    pub believed_ns: f64,
+    /// Believed cost of the flat candidate — the crossover datum: for a
+    /// blocked winner, `flat_ns / believed_ns` is the modeled speedup.
+    pub flat_ns: f64,
+    /// The flat arrangement the search found (the winner itself when
+    /// `exec` is flat; the losing candidate otherwise).
+    pub flat_plan: Plan,
+    /// Distinct weight cells queried across every candidate search.
+    pub cells: usize,
+}
+
+/// Plan the *execution mode* for an n-point c2c transform: compare the
+/// flat arrangement (priced at its true cache tier — spilled edges pay
+/// the model's DRAM factor) against every four-step split n = p·q with
+/// both factors cache-resident, priced as
+///
+/// ```text
+/// q · col(p, batched@16, resident) + p · row(q, unbatched, resident)
+///   + block_twiddle(n) + 3 · transpose(p, q)   [gather + scatter + final]
+/// ```
+///
+/// `make` builds a cost model for each sub-size the search prices (the
+/// same provider family at p, q, and n — e.g. `|m| SimCost::m1(m)`).
+/// `max_resident_n` overrides the model's own resident limit (the
+/// `--max-resident-n` operator knob); candidates keep both factors
+/// within it. While the transform is resident, flat wins by
+/// construction — the blocked path exists to avoid spilled passes, not
+/// to beat in-cache execution — so the comparison only runs on the
+/// spilled tier. [`Strategy::Fixed`] names one flat arrangement and
+/// never blocks. Splits that cannot keep both factors resident (the
+/// would-be recursive regime) fall back to flat.
+pub fn plan_exec<C: CostModel, F: FnMut(usize) -> C>(
+    make: &mut F,
+    n: usize,
+    strategy: &Strategy,
+    surface: PlanningSurface,
+    max_resident_n: Option<usize>,
+) -> ExecOutcome {
+    let mut top = make(n);
+    let limit = max_resident_n.unwrap_or_else(|| top.resident_limit_n());
+    let tier = CacheTier::for_n(n, limit);
+    let flat = plan_surface(&mut top, strategy, surface.with_tier(tier));
+    let mut cells = flat.cells;
+    let flat_outcome = |cells| ExecOutcome {
+        strategy: flat.strategy.clone(),
+        exec: ExecPlan::Flat(flat.plan.clone()),
+        believed_ns: flat.true_ns,
+        flat_ns: flat.true_ns,
+        flat_plan: flat.plan.clone(),
+        cells,
+    };
+    if tier == CacheTier::Resident || matches!(strategy, Strategy::Fixed(_)) {
+        return flat_outcome(cells);
+    }
+    let l = crate::fft::log2i(n);
+    let lmin = crate::fft::log2i(MIN_FACTOR);
+    if l < 2 * lmin {
+        return flat_outcome(cells);
+    }
+    let mut best: Option<(f64, ExecPlan)> = None;
+    for lp in lmin..=(l - lmin) {
+        let (p, q) = (1usize << lp, 1usize << (l - lp));
+        if p > limit || q > limit {
+            continue;
+        }
+        // Sub-FFTs are always forward c2c (the kind wrappers sit outside
+        // the four-step core); they inherit the surface's ISA pin and
+        // run on the resident tier by construction. Columns execute
+        // through the 16-lane panel path — price them at that class.
+        let mut sub = PlanningSurface::forward();
+        if let Some(isa) = surface.isa {
+            sub = sub.with_isa(isa);
+        }
+        let mut col_model = make(p);
+        let col = plan_surface(&mut col_model, strategy, sub.with_batch(PANEL_COLS));
+        let mut row_model = make(q);
+        let row = plan_surface(&mut row_model, strategy, sub);
+        cells += col.cells + row.cells;
+        let mut boundary = top.block_twiddle_ns(n) + 3.0 * top.transpose_ns(p, q);
+        if surface.kind.is_real() {
+            // blocked real runs still pay the split/unpack boundary
+            // pass the flat real objective prices via the RU edge
+            boundary += top.unpack_ns(Context::Start);
+        }
+        let ns = q as f64 * col.true_ns + p as f64 * row.true_ns + boundary;
+        if best.as_ref().map_or(true, |(b, _)| ns < *b) {
+            best = Some((ns, ExecPlan::Blocked { p, q, col: col.plan, row: row.plan }));
+        }
+    }
+    match best {
+        Some((ns, exec)) if ns < flat.true_ns => ExecOutcome {
+            strategy: flat.strategy.clone(),
+            exec,
+            believed_ns: ns,
+            flat_ns: flat.true_ns,
+            flat_plan: flat.plan.clone(),
+            cells,
+        },
+        _ => flat_outcome(cells),
     }
 }
 
@@ -201,6 +313,104 @@ mod tests {
         let beam = plan(&mut cost, &Strategy::SpiralBeam { width: 4096 });
         let ex = plan(&mut cost, &Strategy::Exhaustive);
         assert!((beam.true_ns - ex.true_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exec_search_stays_flat_while_resident() {
+        // n = 2^12 (32 KiB working set) fits the modeled L2: the flat
+        // arrangement must win without the blocked path even running.
+        let ca = Strategy::DijkstraContextAware { k: 1 };
+        let out = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 12,
+            &ca,
+            PlanningSurface::forward(),
+            None,
+        );
+        assert!(!out.exec.is_blocked(), "resident n chose {}", out.exec);
+        assert_eq!(out.believed_ns, out.flat_ns);
+        // the flat plan matches a plain surface search at the same size
+        let direct = plan_surface(
+            &mut SimCost::m1(1 << 12),
+            &ca,
+            PlanningSurface::forward(),
+        );
+        assert_eq!(out.flat_plan, direct.plan);
+    }
+
+    #[test]
+    fn exec_search_blocks_once_spilled() {
+        // n = 2^16 (512 KiB working set) spills the modeled L2: the
+        // four-step split must beat the DRAM-priced flat chain, with
+        // both factors cache-resident.
+        let ca = Strategy::DijkstraContextAware { k: 1 };
+        let out = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 16,
+            &ca,
+            PlanningSurface::forward(),
+            None,
+        );
+        let ExecPlan::Blocked { p, q, ref col, ref row } = out.exec else {
+            panic!("spilled n stayed flat: {}", out.exec);
+        };
+        assert_eq!(p * q, 1 << 16);
+        let limit = SimCost::m1(1 << 16).resident_limit_n();
+        assert!(p >= 16 && q >= 16 && p <= limit && q <= limit, "{p}x{q}");
+        assert!(col.is_valid_for(crate::fft::log2i(p)));
+        assert!(row.is_valid_for(crate::fft::log2i(q)));
+        assert!(out.believed_ns < out.flat_ns);
+    }
+
+    #[test]
+    fn blocked_beats_flat_by_the_required_margin_at_2_18() {
+        // Acceptance fixture: at n = 2^18 on the m1 model, the blocked
+        // believed cost beats the spilled flat chain by >= 1.5x.
+        let out = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 18,
+            &Strategy::DijkstraContextAware { k: 1 },
+            PlanningSurface::forward(),
+            None,
+        );
+        assert!(out.exec.is_blocked());
+        let speedup = out.flat_ns / out.believed_ns;
+        assert!(speedup >= 1.5, "modeled speedup {speedup:.3} < 1.5 ({})", out.exec);
+    }
+
+    #[test]
+    fn max_resident_override_forces_the_spilled_comparison() {
+        // An operator cap below n makes a normally-resident size plan
+        // as spilled — and the candidate factors respect the cap.
+        let ca = Strategy::DijkstraContextAware { k: 1 };
+        let out = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 12,
+            &ca,
+            PlanningSurface::forward(),
+            Some(256),
+        );
+        if let ExecPlan::Blocked { p, q, .. } = out.exec {
+            assert!(p <= 256 && q <= 256, "{p}x{q} ignores the cap");
+        }
+        // a cap that admits no resident split falls back to flat
+        let none = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 12,
+            &ca,
+            PlanningSurface::forward(),
+            Some(32),
+        );
+        assert!(!none.exec.is_blocked());
+        // fixed strategies never block, spilled or not
+        let fixed = plan_exec(
+            &mut |m| SimCost::m1(m),
+            1 << 12,
+            &Strategy::Fixed(Plan::parse("R4,R4,R4,R4,R4,R2,R2").unwrap()),
+            PlanningSurface::forward(),
+            Some(1024),
+        );
+        assert!(!fixed.exec.is_blocked());
     }
 
     #[test]

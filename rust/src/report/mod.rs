@@ -26,8 +26,10 @@ pub fn table1() -> String {
             EdgeType::F8 => "Fused-8 block",
             EdgeType::F16 => "Fused-16 block",
             EdgeType::F32 => "Fused-32 block",
-            // not in ALL_EDGES (boundary pass, not a graph edge)
+            // not in ALL_EDGES (boundary passes, not graph edges)
             EdgeType::RU => "Real split/unpack",
+            EdgeType::Transpose => "Blocked transpose",
+            EdgeType::BlockTwiddle => "Four-step twiddle",
         };
         s.push_str(&format!(
             "| {:<14} | {:<6} | {:<9} | {} |\n",

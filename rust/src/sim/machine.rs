@@ -205,6 +205,58 @@ impl Machine {
         super::memory::marshal_ns(&self.params, n, b)
     }
 
+    /// Whether an n-point transform's working set exceeds this machine's
+    /// residency boundary (see [`super::memory::spilled`]). The largest
+    /// resident n is the flat-execution ceiling the planner's blocked
+    /// candidates must respect per sub-transform.
+    pub fn spilled(&self, n: usize) -> bool {
+        super::memory::spilled(&self.params, n)
+    }
+
+    /// Largest power-of-two transform size still within the residency
+    /// boundary — the default flat-execution ceiling.
+    pub fn resident_limit_n(&self) -> usize {
+        let mut n = 1usize;
+        while !self.spilled(n * 2) {
+            n *= 2;
+        }
+        n
+    }
+
+    /// Simulated time of one four-step tile walk over a `rows x cols`
+    /// split-complex matrix (column gather, scatter-back, or the final
+    /// transpose to natural order) — see [`super::memory::transpose_ns`].
+    pub fn transpose_ns(&self, rows: usize, cols: usize) -> f64 {
+        super::memory::transpose_ns(&self.params, rows, cols)
+    }
+
+    /// Simulated time of the four-step inter-block twiddle multiply over
+    /// the whole n-point buffer — see [`super::memory::block_twiddle_ns`].
+    pub fn block_twiddle_ns(&self, n: usize) -> f64 {
+        super::memory::block_twiddle_ns(&self.params, n)
+    }
+
+    /// Multiplicative penalty on `edge_ns(n, edge, stage, ctx)` when the
+    /// n-point buffer has spilled the residency boundary: only the
+    /// memory component moves to DRAM speed (compute and register
+    /// pressure are bandwidth-independent), so the factor is
+    /// `(compute + pressure + mem·K) / (compute + pressure + mem)` with
+    /// `K = 1/dram_bw_frac`. Unity while resident — the resident tier
+    /// prices bit-identically to the pre-tier model.
+    pub fn edge_spill_factor(&self, n: usize, edge: EdgeType, stage: usize, ctx: Context) -> f64 {
+        if !self.spilled(n) {
+            return 1.0;
+        }
+        let p = &self.params;
+        let pmult = match ctx {
+            Context::Start => p.pressure_start_mult,
+            Context::After(_) => 1.0,
+        };
+        let compute = base_compute_ns(p, n, edge, stage) + pressure_ns(p, n, edge, stage) * pmult;
+        let mem = mem_ns(p, n, edge, stage, ctx);
+        (compute + mem * super::memory::spill_mult(p)) / (compute + mem)
+    }
+
     /// Steady-state time of a full plan: every edge is costed in its true
     /// context; the first edge's context is the *last* edge of the plan
     /// (benchmark loops run the arrangement back-to-back, so in steady
@@ -391,6 +443,48 @@ mod tests {
         let per_tx_32 = m.unpack_ns_batched(1024, Start, 32) / 32.0;
         let per_tx_8 = m.unpack_ns_batched(1024, Start, 8) / 8.0;
         assert!(per_tx_32 > per_tx_8, "{per_tx_32} vs {per_tx_8}");
+    }
+
+    #[test]
+    fn resident_limit_matches_the_spill_predicate() {
+        // 256 KiB boundary, 8·n resident bytes: 2^15 is the largest
+        // resident power of two on both machines.
+        for m in [Machine::m1(), Machine::haswell()] {
+            let lim = m.resident_limit_n();
+            assert_eq!(lim, 1 << 15, "{}", m.name());
+            assert!(!m.spilled(lim));
+            assert!(m.spilled(lim * 2));
+        }
+    }
+
+    #[test]
+    fn spill_factor_is_unity_while_resident() {
+        // The resident tier must price bit-identically to the pre-tier
+        // model: the factor is exactly 1.0, not approximately.
+        let m = Machine::m1();
+        for e in [EdgeType::R2, EdgeType::R4, EdgeType::F8] {
+            for ctx in [Start, After(EdgeType::R4)] {
+                assert_eq!(m.edge_spill_factor(1024, e, 0, ctx), 1.0, "{e} {ctx}");
+            }
+        }
+    }
+
+    #[test]
+    fn spill_factor_scales_only_the_memory_component() {
+        let m = Machine::m1();
+        let n = 1 << 18;
+        let f = m.edge_spill_factor(n, EdgeType::R2, 0, After(EdgeType::R4));
+        // strictly above 1 but strictly below the raw DRAM multiplier:
+        // compute does not slow down.
+        assert!(f > 1.0, "{f}");
+        assert!(f < 1.0 / m.params.dram_bw_frac, "{f}");
+        // exact: edge_ns with the mem term re-priced at DRAM speed
+        let p = &m.params;
+        let compute = crate::sim::compute::base_compute_ns(p, n, EdgeType::R2, 0)
+            + crate::sim::compute::pressure_ns(p, n, EdgeType::R2, 0);
+        let mem = crate::sim::memory::mem_ns(p, n, EdgeType::R2, 0, After(EdgeType::R4));
+        let want = (compute + mem / p.dram_bw_frac) / (compute + mem);
+        assert!((f - want).abs() < 1e-12);
     }
 
     #[test]

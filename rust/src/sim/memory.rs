@@ -228,6 +228,52 @@ pub fn marshal_ns(p: &MachineParams, n: usize, b: usize) -> f64 {
     cyc * p.ns_per_cyc() * thrash_factor(p, n, bp)
 }
 
+/// Whether an n-point split-complex transform's streaming working set
+/// exceeds the residency boundary: `8 · n` resident bytes (two f32
+/// arrays) against [`MachineParams::l2_bytes`], strict — a buffer that
+/// exactly fills the cache still streams from it. Everything the
+/// cache-tier boundary state prices follows from this one predicate.
+pub fn spilled(p: &MachineParams, n: usize) -> bool {
+    (8 * n) as f64 > p.l2_bytes
+}
+
+/// Multiplier on streaming-memory time once a working set spills: the
+/// same bytes move at `dram_bw_frac` of the L1 round-trip bandwidth,
+/// so time divides by that fraction.
+pub fn spill_mult(p: &MachineParams) -> f64 {
+    1.0 / p.dram_bw_frac
+}
+
+/// Cost (ns) of one four-step tile walk over a `rows x cols`
+/// split-complex matrix: the gather of strided columns into a resident
+/// panel, the scatter back, or the final transpose to natural order —
+/// all three walks move the same `16 · rows · cols` bytes with one side
+/// strided by a full row length, sustaining `transpose_bw_frac` of the
+/// streaming bandwidth. When the matrix itself spills the residency
+/// boundary (it always does on the sizes four-step exists for — that is
+/// *why* the transform went blocked), the strided side streams from
+/// DRAM: the walk additionally divides by `dram_bw_frac`.
+pub fn transpose_ns(p: &MachineParams, rows: usize, cols: usize) -> f64 {
+    let n = rows * cols;
+    let cyc = round_trip_bytes(n) / (p.l1_bw_bytes_cyc * p.transpose_bw_frac);
+    let spill = if spilled(p, n) { spill_mult(p) } else { 1.0 };
+    cyc * p.ns_per_cyc() * spill
+}
+
+/// Cost (ns) of the four-step inter-block twiddle multiply over the
+/// whole n-point buffer: one streaming round trip (`16 · n` bytes, unit
+/// stride — this pass *does* stream, unlike the tile walks) plus one
+/// complex multiply per point issued through the FMA pipes at the
+/// radix-2 group rate. The memory side pays the spill multiplier when
+/// the buffer exceeds the residency boundary; the compute side is
+/// bandwidth-independent.
+pub fn block_twiddle_ns(p: &MachineParams, n: usize) -> f64 {
+    let mem_cyc = round_trip_bytes(n) / p.l1_bw_bytes_cyc;
+    let spill = if spilled(p, n) { spill_mult(p) } else { 1.0 };
+    let compute_cyc = (n as f64 / p.lanes as f64) * p.bf.r2;
+    (mem_cyc * spill + compute_cyc) * p.ns_per_cyc()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,6 +455,60 @@ mod tests {
         assert!(per_over > per_at_cap, "{per_over} vs {per_at_cap}");
         let ratio = marshal_ns(&p, 1024, 32) / (2.0 * marshal_ns(&p, 1024, 16));
         assert!((ratio - thrash_factor(&p, 1024, 32)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spill_boundary_is_strict_at_l2_capacity() {
+        // 8·n bytes resident: n = 2^15 exactly fills the 256 KiB
+        // boundary (still resident); n = 2^16 spills.
+        let p = m1();
+        assert!(!spilled(&p, 1 << 15));
+        assert!(spilled(&p, 1 << 16));
+        assert!(!spilled(&p, 1024));
+        assert!(spill_mult(&p) > 1.0);
+    }
+
+    #[test]
+    fn transpose_walk_is_slower_than_the_marshal_walk() {
+        // Per byte the row-strided tile walk sustains less bandwidth
+        // than the lane-strided marshal walk — on a resident matrix the
+        // only difference is the bandwidth fraction (marshal also pays
+        // per-request overhead, widening the gap).
+        let p = m1();
+        let tr = transpose_ns(&p, 64, 16); // 1024 points, resident
+        let per_byte_marshal = marshal_ns(&p, 1024, 4) / 4.0 / round_trip_bytes(1024);
+        let per_byte_tr = tr / round_trip_bytes(1024);
+        assert!(per_byte_tr > per_byte_marshal, "{per_byte_tr} vs {per_byte_marshal}");
+        // exact resident formula
+        let want = round_trip_bytes(1024) / (p.l1_bw_bytes_cyc * p.transpose_bw_frac) * p.ns_per_cyc();
+        assert_eq!(tr, want);
+    }
+
+    #[test]
+    fn spilled_transpose_pays_the_dram_multiplier() {
+        let p = m1();
+        // 2^18 points spill; same-shape resident matrix for the ratio.
+        let spilled_ns = transpose_ns(&p, 512, 512); // 2^18
+        let resident_ns = transpose_ns(&p, 128, 128); // 2^14, resident
+        let scale = (512.0 * 512.0) / (128.0 * 128.0);
+        let ratio = spilled_ns / (resident_ns * scale);
+        assert!((ratio - spill_mult(&p)).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn block_twiddle_streams_plus_computes() {
+        let p = m1();
+        let n = 1024; // resident
+        let want = (round_trip_bytes(n) / p.l1_bw_bytes_cyc
+            + (n as f64 / p.lanes as f64) * p.bf.r2)
+            * p.ns_per_cyc();
+        assert_eq!(block_twiddle_ns(&p, n), want);
+        // spilled: only the memory term scales by the DRAM multiplier
+        let n_big = 1 << 18;
+        let want_big = (round_trip_bytes(n_big) / p.l1_bw_bytes_cyc * spill_mult(&p)
+            + (n_big as f64 / p.lanes as f64) * p.bf.r2)
+            * p.ns_per_cyc();
+        assert_eq!(block_twiddle_ns(&p, n_big), want_big);
     }
 
     #[test]

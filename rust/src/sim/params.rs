@@ -156,6 +156,26 @@ pub struct MachineParams {
     /// indexing, bounds checks, loop setup per gathered/scattered
     /// buffer).
     pub marshal_overhead_cyc: f64,
+    /// Last-level-cache capacity the model treats as the residency
+    /// boundary, in bytes. A transform whose split-complex working set
+    /// (`16 · n` bytes round trip over an `8 · n`-byte buffer ×2 for
+    /// src+dst streams) exceeds this spills: every pass streams from
+    /// DRAM instead of cache, and the four-step blocked decomposition
+    /// becomes the cheaper execution shape. The boundary is deliberately
+    /// the *private* L2 slice, not the shared SLC — the planner should
+    /// go blocked before the transform starts competing for shared
+    /// capacity.
+    pub l2_bytes: f64,
+    /// Effective fraction of `l1_bw_bytes_cyc` the four-step tiled
+    /// transpose sustains. One side of every tile walk is strided by a
+    /// full row length — worse than the marshal walk's lane stride, so
+    /// this sits below `marshal_bw_frac`.
+    pub transpose_bw_frac: f64,
+    /// Sustained DRAM streaming bandwidth as a fraction of
+    /// `l1_bw_bytes_cyc`. The spilled-tier multiplier divides memory
+    /// components by this fraction: a pass whose working set exceeds
+    /// `l2_bytes` pays its streaming traffic at DRAM speed.
+    pub dram_bw_frac: f64,
     /// The machine's native vector unit: the ISA the calibrated tables
     /// above describe (M1 = NEON, Haswell = AVX2). Surfaces pinned to
     /// other backends reprice through `isa_mult` / `isa_fused_mult`.
@@ -220,6 +240,15 @@ impl MachineParams {
             // at ~1/3 of the streaming round-trip bandwidth.
             marshal_bw_frac: 0.35,
             marshal_overhead_cyc: 12.0,
+            // Firestorm p-core: 256 KiB of effectively-private capacity
+            // before a streaming transform spills to the fabric.
+            l2_bytes: 262144.0,
+            // Row-length strides defeat the line-fill buffers harder
+            // than the marshal walk's lane strides.
+            transpose_bw_frac: 0.25,
+            // Unified-memory DRAM streams at roughly a fifth of the
+            // L1 round-trip bandwidth.
+            dram_bw_frac: 0.22,
             // Calibrated for 128-bit NEON; indexed [scalar, portable,
             // neon, avx2]. Scalar collapses the 4-lane groups (softened
             // by Firestorm's 8-wide scalar issue); portable std::simd
@@ -284,6 +313,13 @@ impl MachineParams {
             // side even slower relative to its streaming bandwidth.
             marshal_bw_frac: 0.25,
             marshal_overhead_cyc: 20.0,
+            // Haswell private L2: 256 KiB per core.
+            l2_bytes: 262144.0,
+            // The single store port drags the row-strided transpose
+            // side further below streaming bandwidth than on the M1.
+            transpose_bw_frac: 0.18,
+            // DDR3-era DRAM relative to Haswell's 64 B/cyc L1.
+            dram_bw_frac: 0.15,
             // Calibrated for 256-bit AVX2; indexed [scalar, portable,
             // neon, avx2]. Scalar collapses the 8-lane groups (Haswell's
             // 4-wide issue softens less than Firestorm's); portable
@@ -411,6 +447,10 @@ mod tests {
             assert!(m.after_boundary_mem > 0.0 && m.after_boundary_mem <= 1.0);
             assert!(m.marshal_bw_frac > 0.0 && m.marshal_bw_frac <= 1.0);
             assert!(m.marshal_overhead_cyc >= 0.0);
+            assert!(m.l2_bytes >= m.batch_cap_bytes);
+            // the transpose walk is strictly worse than the marshal walk
+            assert!(m.transpose_bw_frac > 0.0 && m.transpose_bw_frac < m.marshal_bw_frac);
+            assert!(m.dram_bw_frac > 0.0 && m.dram_bw_frac < 1.0);
         }
     }
 

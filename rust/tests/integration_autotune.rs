@@ -106,6 +106,7 @@ fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
 
@@ -166,7 +167,10 @@ fn drift_is_detected_replanned_and_hot_swapped_without_failures() {
     assert_eq!(status.active_plan, expected);
     assert!(status.plan_version >= 2);
     // the hot swap also published into the plan cache, versioned
-    assert_eq!(cache.get(n, "autotune", "sim:m1"), Some(expected.clone()));
+    assert_eq!(
+        cache.get(n, "autotune", "sim:m1"),
+        Some(spfft::plan::ExecPlan::Flat(expected.clone()))
+    );
     assert!(cache.version(n, "autotune", "sim:m1").unwrap_or(0) >= 1);
 
     let snap = svc.shutdown();
@@ -221,6 +225,7 @@ fn learned_wisdom_survives_restart_and_preplans_the_drifted_optimum() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     for i in 0..300u64 {

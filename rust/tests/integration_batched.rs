@@ -39,6 +39,7 @@ fn mixed_n_stream_is_grouped_and_answered_correctly() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
 
@@ -165,6 +166,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     let rxs: Vec<_> = inputs.iter().map(|x| batched.submit(x.clone()).unwrap()).collect();
@@ -183,6 +185,7 @@ fn batched_service_replies_match_sequential_service_bitwise() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     for (input, want_eq) in inputs.iter().zip(&got_batched) {

@@ -30,7 +30,11 @@ fn native_service_end_to_end_with_planner() {
     let cache = PlanCache::new();
     let plans: Vec<(usize, Plan)> = sizes
         .iter()
-        .map(|&n| (n, cache.get_or_plan(n, "ca", "m1", || planned(n))))
+        .map(|&n| {
+            let exec =
+                cache.get_or_plan(n, "ca", "m1", || spfft::plan::ExecPlan::Flat(planned(n)));
+            (n, exec.as_flat().expect("resident sizes plan flat").clone())
+        })
         .collect();
     let svc = FftService::start(ServiceConfig {
         plans,
@@ -43,6 +47,7 @@ fn native_service_end_to_end_with_planner() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     // mixed workload, validate every response
@@ -89,6 +94,7 @@ fn pjrt_service_end_to_end() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     for i in 0..8u64 {
@@ -262,6 +268,7 @@ fn failure_injection_worker_rejects_bad_size_gracefully() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     assert!(svc.submit(SplitComplex::random(64, 0)).is_err());
@@ -279,10 +286,11 @@ fn plan_cache_survives_concurrent_planning() {
     for _ in 0..4 {
         let c = cache.clone();
         handles.push(std::thread::spawn(move || {
-            c.get_or_plan(1024, "ca", "m1", || planned(1024))
+            c.get_or_plan(1024, "ca", "m1", || spfft::plan::ExecPlan::Flat(planned(1024)))
         }));
     }
-    let plans: Vec<Plan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let plans: Vec<spfft::plan::ExecPlan> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
     for p in &plans {
         assert_eq!(*p, plans[0]);
     }

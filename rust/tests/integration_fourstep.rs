@@ -1,0 +1,193 @@
+//! Integration: four-step blocked execution accuracy (satellite of the
+//! cache-blocked large-n PR).
+//!
+//! The numerical contract of `ExecPlan::Blocked` is **rel-error against
+//! the reference operator within a pinned bound** — NOT bit-identity to
+//! the flat arrangement. The blocked path reassociates the butterfly
+//! sums (column FFTs, then a separate twiddle multiply, then row FFTs),
+//! so individual f32 roundings land differently than in a single flat
+//! sweep; both are equally valid evaluations of the same operator. The
+//! bounds pinned here (`REL_BOUND_4K` / `REL_BOUND_64K`) are the
+//! acceptance thresholds: loosening them is a contract change.
+
+use spfft::cost::{PlanningSurface, SimCost};
+use spfft::fft::fourstep::radix_mix_plan;
+use spfft::fft::reference::fft_ref;
+use spfft::fft::{CompiledExec, Executor, SplitComplex};
+use spfft::kind::TransformKind;
+use spfft::plan::ExecPlan;
+use spfft::planner::{plan_exec, Strategy};
+
+/// Pinned accuracy bounds vs the f64 reference (and vs the flat f32
+/// arrangement, whose own error sits well inside these).
+const REL_BOUND_4K: f64 = 1e-4;
+const REL_BOUND_64K: f64 = 2e-4;
+
+fn rel_err(got: &SplitComplex, want: &SplitComplex) -> f64 {
+    (got.max_abs_diff(want) / want.max_abs().max(1.0)) as f64
+}
+
+/// The request-side input for a kind: real kinds get the input contract
+/// applied (r2c: zero imaginary; c2r: Hermitian spectrum) so the
+/// expected output is well-defined for every kind.
+fn kind_input(kind: TransformKind, n: usize, seed: u64) -> SplitComplex {
+    use TransformKind::*;
+    let mut input = SplitComplex::random(n, seed);
+    match kind {
+        RealForward => input.im.iter_mut().for_each(|v| *v = 0.0),
+        RealInverse => {
+            let h = n / 2;
+            input.im[0] = 0.0;
+            input.im[h] = 0.0;
+            for k in 1..h {
+                input.re[n - k] = input.re[k];
+                input.im[n - k] = -input.im[k];
+            }
+        }
+        Forward | Inverse => {}
+    }
+    input
+}
+
+/// A blocked decision with a balanced split of the kind's c2c length.
+fn blocked_plan(cn: usize) -> ExecPlan {
+    let l = spfft::fft::log2i(cn);
+    let (lp, lq) = (l / 2, l - l / 2);
+    ExecPlan::Blocked {
+        p: 1 << lp,
+        q: 1 << lq,
+        col: radix_mix_plan(lp),
+        row: radix_mix_plan(lq),
+    }
+}
+
+/// Blocked vs flat vs reference for every kind at one c2c length.
+fn check_all_kinds(cn: usize, bound: f64) {
+    use TransformKind::*;
+    let mut ex = Executor::new();
+    let flat_plan = radix_mix_plan(spfft::fft::log2i(cn));
+    for kind in [Forward, Inverse, RealForward, RealInverse] {
+        let n = if kind.is_real() { 2 * cn } else { cn };
+        let mut blocked = CompiledExec::compile(&mut ex, &blocked_plan(cn), n, kind);
+        assert!(blocked.is_blocked());
+        let mut flat =
+            CompiledExec::compile(&mut ex, &ExecPlan::Flat(flat_plan.clone()), n, kind);
+        let input = kind_input(kind, n, 0xF0C5 + cn as u64);
+        let got = {
+            let mut out = input.clone();
+            blocked.run(&mut out.re, &mut out.im);
+            out
+        };
+        let flat_out = {
+            let mut out = input.clone();
+            flat.run(&mut out.re, &mut out.im);
+            out
+        };
+        let rel_flat = rel_err(&got, &flat_out);
+        assert!(rel_flat < bound, "{kind} cn={cn}: blocked vs flat rel err {rel_flat}");
+        // forward kinds also check against the f64 reference operator
+        if matches!(kind, Forward | RealForward) {
+            let rel = rel_err(&got, &fft_ref(&input));
+            assert!(rel < bound, "{kind} cn={cn}: blocked vs reference rel err {rel}");
+        }
+    }
+    // inverse kinds: round trips through the blocked path recover the input
+    let x = SplitComplex::random(cn, 0x1D0 + cn as u64);
+    let mut fwd = CompiledExec::compile(&mut ex, &blocked_plan(cn), cn, Forward);
+    let mut inv = CompiledExec::compile(&mut ex, &blocked_plan(cn), cn, Inverse);
+    let back = {
+        let mut out = x.clone();
+        fwd.run(&mut out.re, &mut out.im);
+        inv.run(&mut out.re, &mut out.im);
+        out
+    };
+    assert!(rel_err(&back, &x) < bound, "c2c round trip drifted at cn={cn}");
+    let mut real = SplitComplex::random(2 * cn, 0x1D1 + cn as u64);
+    real.im.iter_mut().for_each(|v| *v = 0.0);
+    let mut rfwd = CompiledExec::compile(&mut ex, &blocked_plan(cn), 2 * cn, RealForward);
+    let mut rinv = CompiledExec::compile(&mut ex, &blocked_plan(cn), 2 * cn, RealInverse);
+    let rback = {
+        let mut out = real.clone();
+        rfwd.run(&mut out.re, &mut out.im);
+        rinv.run(&mut out.re, &mut out.im);
+        out
+    };
+    assert!(rel_err(&rback, &real) < bound, "real round trip drifted at cn={cn}");
+}
+
+#[test]
+fn four_step_matches_reference_for_every_kind_at_4k() {
+    check_all_kinds(1 << 12, REL_BOUND_4K);
+}
+
+#[test]
+fn four_step_matches_reference_for_every_kind_at_64k() {
+    check_all_kinds(1 << 16, REL_BOUND_64K);
+}
+
+#[test]
+fn four_step_scratch_reuse_is_clean_across_a_batch_of_requests() {
+    // The compiled four-step keeps persistent scratch (the 16-lane
+    // panel and the p×q matrix). A batch of distinct requests run
+    // back-to-back through one compiled instance must each match a
+    // fresh lone run — state leaking between runs would corrupt later
+    // requests in a served group.
+    let cn = 1 << 12;
+    let mut ex = Executor::new();
+    let mut blocked = CompiledExec::compile(&mut ex, &blocked_plan(cn), cn, TransformKind::Forward);
+    let inputs: Vec<SplitComplex> =
+        (0..8u64).map(|i| SplitComplex::random(cn, 0xBA7C + i)).collect();
+    let batch_outs: Vec<SplitComplex> = inputs
+        .iter()
+        .map(|x| {
+            let mut out = x.clone();
+            blocked.run(&mut out.re, &mut out.im);
+            out
+        })
+        .collect();
+    for (x, got) in inputs.iter().zip(&batch_outs) {
+        // a fresh compile sees the same input in untouched scratch;
+        // identical arithmetic must give the identical f32 stream
+        let mut lone =
+            CompiledExec::compile(&mut ex, &blocked_plan(cn), cn, TransformKind::Forward);
+        let mut want = x.clone();
+        lone.run(&mut want.re, &mut want.im);
+        assert_eq!(*got, want, "scratch reuse changed a result");
+        assert!(rel_err(got, &fft_ref(x)) < REL_BOUND_4K);
+    }
+}
+
+#[test]
+fn planner_exec_choice_never_changes_the_result_beyond_the_bound() {
+    // Property over the decision axis: whatever `plan_exec` picks —
+    // flat at resident sizes, blocked above a cap, flat fallback when
+    // no split fits — compiling and running its choice stays within the
+    // pinned bound of the reference. The planner may only trade speed,
+    // never accuracy.
+    let mut ex = Executor::new();
+    for &(n, cap) in &[
+        (1 << 12, None),
+        (1 << 12, Some(32usize)), // cap admits no split: flat fallback at a spilled size
+        (1 << 14, Some(1 << 10)),
+        (1 << 16, None),
+        (1 << 16, Some(1 << 12)),
+    ] {
+        let out = plan_exec(
+            &mut |m| SimCost::m1(m),
+            n,
+            &Strategy::DijkstraContextAware { k: 1 },
+            PlanningSurface::forward(),
+            cap,
+        );
+        if let (Some(limit), ExecPlan::Blocked { p, q, .. }) = (cap, &out.exec) {
+            assert!(*p <= limit && *q <= limit, "n={n}: {p}x{q} ignores cap {limit}");
+        }
+        let mut compiled = CompiledExec::compile(&mut ex, &out.exec, n, TransformKind::Forward);
+        let input = SplitComplex::random(n, 0xBEEF ^ n as u64);
+        let mut got = input.clone();
+        compiled.run(&mut got.re, &mut got.im);
+        let bound = if n >= 1 << 16 { REL_BOUND_64K } else { REL_BOUND_4K };
+        let rel = rel_err(&got, &fft_ref(&input));
+        assert!(rel < bound, "n={n} cap={cap:?} exec={}: rel err {rel}", out.exec);
+    }
+}

@@ -166,6 +166,7 @@ fn coalescing_service_serves_mixed_kind_traffic_correctly() {
         shed_deadline: None,
         observer: None,
         exec_mode: Default::default(),
+        max_resident_n: None,
     })
     .unwrap();
     use TransformKind::*;

@@ -366,4 +366,76 @@ fn harness_stream_round_trips_through_the_exporters() {
     assert!(prom.contains("spfft_recorder_dropped_total 0"));
     // every exported cell carries the dispatching backend's label
     assert!(prom.contains("isa=\"scalar\""));
+    // the twiddle interning counters ride along too (the harness built
+    // at least one table, so the window is non-empty)
+    assert!(json.get("counters").get("twiddle_misses").as_f64().is_some());
+    assert!(prom.contains("spfft_twiddle_intern_total{outcome=\"hit\"}"));
+    assert!(prom.contains("spfft_twiddle_intern_total{outcome=\"miss\"}"));
+}
+
+// ------------------------------ blocked boundary edges in the exports
+
+#[test]
+fn boundary_edges_flow_through_attribution_and_both_exporters() {
+    // A traced four-step execution reports its transpose walks and its
+    // block-twiddle pass as TR/BT boundary samples. They must survive as
+    // first-class attribution cells (unlike marshal spans, which price
+    // into the mode decision and are excluded from the table), and both
+    // exporters must carry — and validate — the boundary edge labels.
+    let mut d = mixed_driver();
+    let completions = d.run(mixed_trace());
+    assert_eq!(completions.len(), 8);
+    let isa = spfft::isa::Isa::Scalar;
+    d.obs.observe_samples(&[
+        EdgeSample::boundary(EdgeType::Transpose, 256, 256, TransformKind::Forward, isa, 4200.0),
+        EdgeSample::boundary(EdgeType::Transpose, 256, 256, TransformKind::Forward, isa, 4300.0),
+        EdgeSample::boundary(EdgeType::BlockTwiddle, 256, 256, TransformKind::Forward, isa, 9000.0),
+    ]);
+    let cells = d.obs.attribution().cells();
+    let tr = cells
+        .iter()
+        .find(|((.., e, _), _)| *e == EdgeType::Transpose)
+        .expect("TR samples produced no attribution cell");
+    assert_eq!(tr.1.samples, 2);
+    assert_eq!(tr.1.observed_ns.to_bits(), (4200.0f64 + 4300.0).to_bits());
+    let bt = cells
+        .iter()
+        .find(|((.., e, _), _)| *e == EdgeType::BlockTwiddle)
+        .expect("BT sample produced no attribution cell");
+    assert_eq!(bt.1.samples, 1);
+    // Boundary cells price shape-keyed, the way the serving exporter
+    // does at the served (p, q) split; everything else keeps its
+    // surface-keyed believed value.
+    use spfft::cost::CostModel;
+    let mut cost = SimCost::m1(1 << 16);
+    d.obs.attribution().fill_believed(|(.., edge, _)| match edge {
+        EdgeType::Transpose => Some(cost.transpose_ns(256, 256)),
+        EdgeType::BlockTwiddle => Some(cost.block_twiddle_ns(1 << 16)),
+        _ => Some(1.0),
+    });
+    let cells = d.obs.attribution().cells();
+    let snap = d.metrics.snapshot();
+    let recorder = d.obs.recorder().stats();
+    let json = snapshot_json(&snap, &cells, &recorder, None);
+    schema_check_snapshot(&json).expect("snapshot schema rejects TR/BT cells");
+    let edges: Vec<&str> = json
+        .get("attribution")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|c| c.get("edge").as_str())
+        .collect();
+    assert!(edges.contains(&"TR"), "JSON export lost the TR cell: {edges:?}");
+    assert!(edges.contains(&"BT"), "JSON export lost the BT cell: {edges:?}");
+    let prom = prometheus_text(&snap, &cells, &recorder);
+    schema_check_prometheus(&prom).expect("prometheus schema rejects TR/BT cells");
+    assert!(prom.contains("edge=\"TR\""), "prometheus export lost the TR label");
+    assert!(prom.contains("edge=\"BT\""), "prometheus export lost the BT label");
+    // and the shape-priced believed/residual gauges exist for them
+    assert!(prom
+        .lines()
+        .any(|l| l.starts_with("spfft_edge_believed_ns") && l.contains("edge=\"TR\"")));
+    assert!(prom
+        .lines()
+        .any(|l| l.starts_with("spfft_edge_residual_ns") && l.contains("edge=\"BT\"")));
 }
